@@ -1,0 +1,115 @@
+//! The paper's motivating application (§5): macroscopic urban traffic
+//! assignment uses reductions "in the computation of shortest paths
+//! and in the golden ratio method". This example runs golden-section
+//! line search (Kiefer [18]) to find the optimal flow split between
+//! two routes, where each objective evaluation is a *large reduction*:
+//! the total system travel time over every network link.
+//!
+//! The per-link travel time is the classic BPR function
+//! `t(v) = t0 * (1 + 0.15 (v/c)^4)`; the objective is
+//! `Σ_links v_l * t_l(v_l)` — an elementwise map feeding a sum
+//! reduction, exactly the dot-reduce composition the L2 graph
+//! `dot_reduce` compiles (examples use the host library so the example
+//! runs without artifacts; swap in `Runtime::dot` for the PJRT path).
+//!
+//! Run: `cargo run --release --example golden_section`
+
+use parred::reduce::{threaded, Op};
+use parred::util::rng::Rng;
+
+/// A synthetic road network: per-link free-flow times and capacities,
+/// plus each link's sensitivity to the two routes (route-incidence).
+struct Network {
+    t0: Vec<f32>,
+    cap: Vec<f32>,
+    on_route_a: Vec<f32>, // 1.0 if link carries route-A flow
+}
+
+impl Network {
+    fn synth(links: usize, seed: u64) -> Network {
+        let mut rng = Rng::new(seed);
+        Network {
+            t0: (0..links).map(|_| rng.f32_in(0.5, 5.0)).collect(),
+            cap: (0..links).map(|_| rng.f32_in(500.0, 2000.0)).collect(),
+            on_route_a: (0..links).map(|_| (rng.below(2) == 0) as u32 as f32).collect(),
+        }
+    }
+
+    /// Total system travel time when fraction `x` of demand uses
+    /// route A. One evaluation = one big reduction over all links.
+    fn objective(&self, x: f32, demand: f32) -> f64 {
+        let costs: Vec<f32> = self
+            .t0
+            .iter()
+            .zip(&self.cap)
+            .zip(&self.on_route_a)
+            .map(|((&t0, &cap), &a)| {
+                let v = demand * (a * x + (1.0 - a) * (1.0 - x));
+                let ratio = v / cap;
+                // v * t0 * (1 + 0.15 (v/c)^4)  (BPR)
+                v * t0 * (1.0 + 0.15 * ratio * ratio * ratio * ratio)
+            })
+            .collect();
+        threaded::reduce(&costs, Op::Sum, 8) as f64
+    }
+}
+
+/// Golden-section search on [lo, hi] for a unimodal objective.
+fn golden_section(
+    mut lo: f64,
+    mut hi: f64,
+    tol: f64,
+    mut f: impl FnMut(f64) -> f64,
+) -> (f64, f64, usize) {
+    let phi = (5f64.sqrt() - 1.0) / 2.0; // 0.618...
+    let mut evals = 0;
+    let mut c = hi - phi * (hi - lo);
+    let mut d = lo + phi * (hi - lo);
+    let mut fc = f(c);
+    let mut fd = f(d);
+    evals += 2;
+    while (hi - lo) > tol {
+        if fc < fd {
+            hi = d;
+            d = c;
+            fd = fc;
+            c = hi - phi * (hi - lo);
+            fc = f(c);
+        } else {
+            lo = c;
+            c = d;
+            fc = fd;
+            d = lo + phi * (hi - lo);
+            fd = f(d);
+        }
+        evals += 1;
+    }
+    let x = (lo + hi) / 2.0;
+    let fx = f(x);
+    (x, fx, evals + 1)
+}
+
+fn main() {
+    let links = 2_000_000; // a metropolitan-scale network
+    let demand = 1000.0;
+    let net = Network::synth(links, 7);
+
+    let t0 = std::time::Instant::now();
+    let (x, fx, evals) = golden_section(0.0, 1.0, 1e-4, |x| net.objective(x as f32, demand));
+    let dt = t0.elapsed();
+
+    println!("network links: {links}");
+    println!("optimal route-A share: {x:.5}");
+    println!("total system travel time: {fx:.1}");
+    println!(
+        "golden-section evals: {evals} ({} links reduced total) in {:.2?}",
+        evals * links,
+        dt
+    );
+
+    // Sanity: the optimum beats both extremes (unimodality).
+    let f0 = net.objective(0.0, demand);
+    let f1 = net.objective(1.0, demand);
+    assert!(fx <= f0 && fx <= f1, "optimum must beat the extremes");
+    println!("verified: f(x*) <= f(0) and f(x*) <= f(1) ✔");
+}

@@ -1,0 +1,56 @@
+//! Quickstart: reduce a vector three ways — host library, the PJRT
+//! path (Pallas-kernel artifact), and the GPU simulator — and check
+//! they agree.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use parred::gpusim::{CombOp, DeviceConfig, Gpu};
+use parred::kernels::drivers;
+use parred::reduce::{scalar, threaded, Op};
+use parred::runtime::literal::HostVec;
+use parred::runtime::Runtime;
+use parred::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let n = 1 << 20;
+    let mut rng = Rng::new(42);
+    let data = rng.f32_vec(n, -1.0, 1.0);
+
+    // 1. Host library: sequential oracle and the threaded two-stage.
+    let oracle = scalar::reduce(&data, Op::Sum);
+    let fast = threaded::reduce(&data, Op::Sum, 8);
+    println!("host  : oracle={oracle:.4}  threaded={fast:.4}");
+    assert!((oracle - fast).abs() <= 1e-2 * oracle.abs().max(1.0));
+
+    // 2. PJRT path: the AOT-compiled Pallas kernel (two-stage, F=8,
+    //    algebraic masking) executing through the xla crate.
+    match Runtime::load("artifacts") {
+        Ok(rt) => {
+            let meta = rt
+                .catalog()
+                .find_full(Op::Sum, parred::reduce::op::Dtype::F32, n)
+                .expect("artifact for n=2^20 (run `make artifacts`)")
+                .clone();
+            let got = rt.reduce_full(&meta, &HostVec::F32(data.clone()))?;
+            println!("pjrt  : {} via {}", got, meta.name);
+            assert!((got.as_f64() - oracle as f64).abs() <= 1e-2 * (oracle.abs() as f64).max(1.0));
+        }
+        Err(e) => println!("pjrt  : skipped ({e})"),
+    }
+
+    // 3. Simulator: the paper's kernel on the modeled AMD device.
+    let data64: Vec<f64> = data.iter().map(|&x| x as f64).collect();
+    let mut gpu = Gpu::new(DeviceConfig::amd_gcn());
+    let out = drivers::jradi_reduce(&mut gpu, &data64, CombOp::Add, 8, 256)?;
+    println!(
+        "gpusim: {:.4} in {:.4} ms modeled ({:.1} GB/s, {:.1}% of peak)",
+        out.value,
+        out.run.total_time_ms(),
+        out.run.bandwidth_gbps(),
+        out.run.bandwidth_pct(gpu.cfg()),
+    );
+    assert!((out.value - oracle as f64).abs() <= 1e-2 * (oracle.abs() as f64).max(1.0));
+
+    println!("all three paths agree ✔");
+    Ok(())
+}

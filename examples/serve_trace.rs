@@ -1,0 +1,44 @@
+//! END-TO-END DRIVER (DESIGN.md §5, row "E2E"): the full three-layer
+//! stack on a real serving workload.
+//!
+//! A synthetic request trace (exponential arrivals, mixed sum/max
+//! f32 reductions) is replayed against the L3 coordinator, which
+//! routes, dynamically batches and executes every request on the PJRT
+//! CPU client running the AOT-compiled Pallas kernels. Every response
+//! is verified against a host oracle; the report shows latency
+//! percentiles, throughput and batching efficiency — recorded in
+//! EXPERIMENTS.md.
+//!
+//! Requires `make artifacts`. Run:
+//!   cargo run --release --example serve_trace [requests] [payload_n]
+
+use std::time::Duration;
+
+use parred::coordinator::service::{run_trace, ServiceConfig, TraceConfig};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let requests = args.first().and_then(|a| a.parse().ok()).unwrap_or(400);
+    let payload_n = args.get(1).and_then(|a| a.parse().ok()).unwrap_or(65_536);
+
+    let cfg = ServiceConfig {
+        artifacts_dir: "artifacts".into(),
+        batch_window: Duration::from_micros(200),
+        max_queue: 10_000,
+        workers: 0,
+        warmup: true,
+    };
+    let trace = TraceConfig { requests, payload_n, seed: 42, mean_gap_us: 50.0 };
+
+    eprintln!("starting service (loads + pre-compiles rows artifacts)...");
+    let report = run_trace(cfg.clone(), trace.clone())?;
+    println!("{report}");
+
+    // A second, tighter-window run shows the batching/latency
+    // trade-off the coordinator exposes.
+    let cfg2 = ServiceConfig { batch_window: Duration::from_micros(20), ..cfg };
+    let report2 = run_trace(cfg2, trace)?;
+    println!("--- window=20µs (less batching, lower queueing delay) ---");
+    println!("{report2}");
+    Ok(())
+}

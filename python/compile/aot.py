@@ -1,0 +1,164 @@
+"""AOT compile path: lower the variant catalog to HLO text artifacts.
+
+Interchange format is HLO *text*, NOT a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (what the rust `xla` crate links) rejects; the text parser
+reassigns ids and round-trips cleanly (/opt/xla-example/README.md).
+
+Run once via ``make artifacts``; emits:
+
+    artifacts/<name>.hlo.txt     one module per catalog variant
+    artifacts/manifest.json      what the rust runtime routes against
+
+Python never runs after this point.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import reduce_pallas as rp
+
+# The paper's evaluation sizes: 5,533,214 elements (Table 2/3, Figs
+# 3-4) and 2^22 = 4,194,304 (Harris' Table 1 workload).
+N_PAPER = 5_533_214
+N_HARRIS = 1 << 22
+
+DTYPES = {"f32": jnp.float32, "i32": jnp.int32}
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def catalog() -> list[dict]:
+    """Every artifact the runtime can serve. Keep in sync with
+    rust/src/runtime/artifact.rs expectations."""
+    entries: list[dict] = []
+
+    # Serving artifacts use the CPU-PJRT geometry profile (see
+    # reduce_pallas.CPU_BLK/CPU_GRID and EXPERIMENTS.md §Perf).
+    def full(op, dt, n, f=8):
+        entries.append(dict(kind="full", op=op, dtype=dt, n=n, f=f,
+                            blk=rp.CPU_BLK, grid=rp.CPU_GRID))
+
+    def rows(op, dt, b, n, f=8):
+        entries.append(dict(kind="rows", op=op, dtype=dt, n=n, b=b, f=f,
+                            blk=8192))
+
+    # Scalar reductions: op x dtype grid over serving sizes.
+    for n in (1024, 65_536, 1_048_576, N_HARRIS, N_PAPER):
+        for op in ("sum", "max"):
+            for dt in ("f32", "i32"):
+                full(op, dt, n)
+    for op in ("min", "prod"):
+        for dt in ("f32", "i32"):
+            full(op, dt, 65_536)
+
+    # The paper's unroll-factor sweep at N=5,533,214 (Table 2 / Figs
+    # 3-4 measured on the real XLA-CPU path, complementing gpusim).
+    for f in (1, 2, 3, 4, 5, 6, 7, 8, 16):
+        if f != 8:  # f=8 already present above
+            full("sum", "f32", N_PAPER, f=f)
+
+    # Batched row-reduction variants for the dynamic batcher.
+    for b in (4, 8, 16):
+        rows("sum", "f32", b, 65_536)
+    rows("sum", "i32", 8, 65_536)
+    rows("max", "f32", 8, 65_536)
+
+    # Composite graphs for the examples.
+    entries.append(dict(kind="dot", op="sum", dtype="f32", n=1_048_576, f=8))
+    entries.append(dict(kind="meanvar", op="sum", dtype="f32", n=1_048_576, f=8))
+    return entries
+
+
+def entry_name(e: dict) -> str:
+    if e["kind"] == "rows":
+        return f"rows_{e['op']}_{e['dtype']}_b{e['b']}_n{e['n']}_f{e['f']}"
+    return f"{e['kind']}_{e['op']}_{e['dtype']}_n{e['n']}_f{e['f']}"
+
+
+def lower_entry(e: dict):
+    dt = DTYPES[e["dtype"]]
+    blk = e.get("blk", rp.DEFAULT_BLK)
+    grid = e.get("grid", rp.DEFAULT_GRID)
+    if e["kind"] == "full":
+        fn = model.full_reduce(e["op"], f=e["f"], blk=blk, grid=grid)
+        specs = [model.spec((e["n"],), dt)]
+    elif e["kind"] == "rows":
+        fn = model.rows_reduce(e["op"], f=e["f"], blk=blk)
+        specs = [model.spec((e["b"], e["n"]), dt)]
+    elif e["kind"] == "dot":
+        fn = model.dot_reduce(f=e["f"])
+        specs = [model.spec((e["n"],), dt), model.spec((e["n"],), dt)]
+    elif e["kind"] == "meanvar":
+        fn = model.mean_var(f=e["f"])
+        specs = [model.spec((e["n"],), dt)]
+    else:
+        raise ValueError(f"unknown kind {e['kind']!r}")
+    return model.lower(fn, *specs), specs
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts/manifest.json",
+                    help="manifest path; artifacts go next to it")
+    ap.add_argument("--only", default=None,
+                    help="substring filter on entry names (debugging)")
+    args = ap.parse_args()
+
+    out_dir = os.path.dirname(os.path.abspath(args.out)) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = []
+    t_all = time.time()
+    for e in catalog():
+        name = entry_name(e)
+        if args.only and args.only not in name:
+            continue
+        t0 = time.time()
+        lowered, specs = lower_entry(e)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as fh:
+            fh.write(text)
+
+        plan = rp.make_plan(
+            e["n"], e["op"], f=e["f"], blk=e.get("blk", rp.DEFAULT_BLK),
+            grid=1 if e["kind"] == "rows" else e.get("grid", rp.DEFAULT_GRID))
+        e_clean = {k: v for k, v in e.items() if k not in ("blk", "grid")}
+        meta = dict(
+            name=name, file=fname, **e_clean,
+            inputs=[dict(shape=list(s.shape), dtype=e["dtype"]) for s in specs],
+            outputs=2 if e["kind"] == "meanvar" else 1,
+            blk=plan.blk, grid=plan.grid, chunks=plan.chunks,
+            padded_n=plan.padded_n,
+            vmem_bytes=rp.vmem_footprint_bytes(plan, DTYPES[e["dtype"]]),
+        )
+        manifest.append(meta)
+        print(f"  {name:44s} {len(text)//1024:6d} KiB  "
+              f"{time.time()-t0:5.1f}s", file=sys.stderr)
+
+    with open(args.out, "w") as fh:
+        json.dump(dict(version=1, artifacts=manifest), fh, indent=1)
+    print(f"wrote {len(manifest)} artifacts + manifest in "
+          f"{time.time()-t_all:.1f}s -> {out_dir}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

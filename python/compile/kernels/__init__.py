@@ -1,0 +1,4 @@
+# L1: Pallas kernels for the paper's compute hot-spot (generic
+# two-stage reduction with unroll factor F + algebraic masking), plus
+# the pure-jnp oracles they are validated against.
+from . import ref, reduce_pallas  # noqa: F401

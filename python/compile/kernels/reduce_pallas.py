@@ -1,0 +1,286 @@
+"""Layer-1: the paper's generic reduction as a Pallas kernel (TPU-shaped).
+
+This is the Pallas adaptation of Jradi et al.'s approach (paper §3):
+
+* **Persistent work-groups** — the 1-D pallas grid plays the role of the
+  persistent work-group set: we launch a *fixed* number of grid steps
+  ``G`` (not one per element) and each step sequentially accumulates
+  ``C`` chunks of its contiguous tile, exactly like the paper's
+  work-items grid-striding global memory. On TPU, contiguous tiles are
+  the coalesced access pattern (DESIGN.md §Hardware-Adaptation).
+* **Loop unrolling with factor F** — each chunk is an ``(F, BLK)`` tile;
+  the F rows are combined with a *statically unrolled* pairwise tree
+  (a python loop at trace time == manual unrolling in the paper), so
+  every trip through the sequential loop consumes ``F*BLK`` elements.
+* **Algebraic masking** — ragged tails are handled without branches:
+  the lane mask ``(idx < n)`` is expanded to 0/1 and *multiplied* into
+  the data (``mask*x + (1-mask)*identity``), the paper's
+  ``(i_n < iLength) * aVector[i_n]`` trick verbatim. For min/max the
+  identity is ±inf so multiplication is ill-defined; there we use a
+  lane-wise select, which on the TPU VPU is the branch-free ``vsel``.
+* **Barrier-free tree** — the final ``BLK -> 1`` combine is a fully
+  unrolled halving tree over a vector register; there is no shared
+  memory and no barrier, mirroring the paper's claim of eliminating
+  *all* synchronization from the in-block tree.
+* **Two stages** — stage 1 produces ``G`` partials, stage 2 reduces
+  them to a scalar: Catanzaro's two-stage structure (paper §2.3).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute
+Mosaic custom-calls; interpret mode lowers to plain HLO which the rust
+runtime compiles and runs (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Default geometry. BLK is the vector-register width we tree-reduce
+# over (128 = TPU lane count); G is the "global size" analogue (number
+# of persistent work-groups).
+DEFAULT_BLK = 128
+DEFAULT_GRID = 64
+
+# CPU-PJRT profile (§Perf, EXPERIMENTS.md): the interpret/CPU backend
+# executes the pallas grid as a *sequential* loop with block copies, so
+# grid parallelism is pure overhead there; one persistent work-group
+# with a wide tile minimizes schedule overhead (316 ms -> 19 ms at
+# N=5,533,214). On a real TPU, GRID should instead match the core
+# count — the AOT catalog bakes the profile per artifact.
+CPU_BLK = 65_536
+CPU_GRID = 1
+
+_COMBINE = {
+    "sum": lambda a, b: a + b,
+    "prod": lambda a, b: a * b,
+    "max": jnp.maximum,
+    "min": jnp.minimum,
+}
+
+# Ops whose identity is finite in every dtype we support -> can use the
+# paper's multiplicative mask. min/max over floats have ±inf identities.
+_ALGEBRAIC_MASK_OPS = ("sum", "prod")
+
+
+@dataclass(frozen=True)
+class Plan:
+    """Static launch geometry for one compiled variant."""
+
+    n: int          # logical element count (pre-padding)
+    op: str         # combiner name (key into _COMBINE)
+    blk: int        # vector width of the in-register tree
+    f: int          # unroll factor (rows per chunk)
+    grid: int       # number of persistent grid steps (G)
+    chunks: int     # sequential trips per grid step (C)
+
+    @property
+    def tile(self) -> int:
+        """Elements owned by one grid step."""
+        return self.chunks * self.f * self.blk
+
+    @property
+    def padded_n(self) -> int:
+        return self.tile * self.grid
+
+
+def make_plan(n: int, op: str = "sum", *, blk: int = DEFAULT_BLK,
+              f: int = 8, grid: int = DEFAULT_GRID) -> Plan:
+    """Choose geometry for reducing ``n`` elements.
+
+    Shrinks ``grid`` (and then ``f``) for small inputs so we never pad
+    more than one tile's worth per grid step beyond what is needed.
+    """
+    if n <= 0:
+        raise ValueError(f"n must be positive, got {n}")
+    if op not in _COMBINE:
+        raise ValueError(f"unknown op {op!r}; valid: {sorted(_COMBINE)}")
+    if blk & (blk - 1):
+        raise ValueError(f"blk must be a power of two, got {blk}")
+    if f < 1:
+        raise ValueError(f"unroll factor must be >= 1, got {f}")
+    # Small inputs: drop the grid, then the tile width, then the
+    # unroll factor, until each step has work.
+    while grid > 1 and n <= (grid // 2) * f * blk:
+        grid //= 2
+    while blk > 128 and n <= grid * f * (blk // 2):
+        blk //= 2
+    while f > 1 and n <= grid * (f // 2) * blk:
+        f //= 2
+    chunks = max(1, -(-n // (grid * f * blk)))  # ceil-div
+    return Plan(n=n, op=op, blk=blk, f=f, grid=grid, chunks=chunks)
+
+
+def _mask_combine(x, idx, n, op, dtype):
+    """Paper §3: branch-free tail handling.
+
+    For sum/prod: ``mask*x + (1-mask)*identity`` (Listing 4/5 verbatim).
+    For min/max: lane select against the identity (branch-free on VPU).
+    """
+    ident = ref.identity_for(op, dtype)
+    if op in _ALGEBRAIC_MASK_OPS:
+        mask = (idx < n).astype(dtype)
+        return mask * x + (1 - mask) * ident
+    return jnp.where(idx < n, x, ident)
+
+
+def _tree_over_rows(tile, op):
+    """Unrolled pairwise tree combining an (R, BLK) tile into (BLK,).
+
+    R need not be a power of two: odd rows are carried to the next
+    level (the compiler-added 'remainder' code of paper §2.4).
+    """
+    comb = _COMBINE[op]
+    rows = [tile[i] for i in range(tile.shape[0])]
+    while len(rows) > 1:
+        nxt = [comb(rows[i], rows[i + 1]) for i in range(0, len(rows) - 1, 2)]
+        if len(rows) % 2:
+            nxt.append(rows[-1])
+        rows = nxt
+    return rows[0]
+
+
+def _tree_halving(vec, op):
+    """Fully unrolled halving tree: (BLK,) -> scalar, no barriers.
+
+    This is Listing 6's ``for (iPos = iLocalSize/2; ...)`` with the
+    branchless step — realized as static slicing since a vector
+    register has no lanes to diverge.
+    """
+    comb = _COMBINE[op]
+    width = vec.shape[0]
+    while width > 1:
+        width //= 2
+        vec = comb(vec[:width], vec[width:2 * width])
+    return vec[0]
+
+
+def _stage1_kernel(x_ref, o_ref, *, plan: Plan):
+    """One persistent work-group: accumulate C chunks, emit one partial."""
+    g = pl.program_id(0)
+    dtype = x_ref.dtype
+    comb = _COMBINE[plan.op]
+    fb = plan.f * plan.blk
+    base = g * plan.tile
+    lane = lax.iota(jnp.int32, fb)
+
+    acc = None
+    for c in range(plan.chunks):  # sequential persistent-thread loop
+        chunk = x_ref[pl.ds(c * fb, fb)]
+        idx = base + c * fb + lane
+        chunk = _mask_combine(chunk, idx, plan.n, plan.op, dtype)
+        row = _tree_over_rows(chunk.reshape(plan.f, plan.blk), plan.op)
+        acc = row if acc is None else comb(acc, row)
+
+    o_ref[0] = _tree_halving(acc, plan.op)
+
+
+def _stage2_kernel(p_ref, o_ref, *, op: str, g: int):
+    """Final combine of the G partials (Catanzaro stage 2)."""
+    partials = p_ref[...]
+    # Pad virtually to a power of two with a row-tree (handles any G).
+    rows = partials.reshape(g, 1)
+    o_ref[0] = _tree_over_rows(rows, op)[0]
+
+
+def reduce_pallas(x, op: str = "sum", *, f: int = 8,
+                  blk: int = DEFAULT_BLK, grid: int = DEFAULT_GRID,
+                  plan: Plan | None = None):
+    """Two-stage generic reduction of a 1-D array. Returns a scalar.
+
+    The public L1 entrypoint: traced from L2 (model.py) and lowered
+    into the same HLO module.
+    """
+    x = jnp.asarray(x)
+    if x.ndim != 1:
+        raise ValueError(f"expected 1-D input, got shape {x.shape}")
+    if plan is None:
+        plan = make_plan(x.shape[0], op, blk=blk, f=f, grid=grid)
+    if plan.n != x.shape[0]:
+        raise ValueError(f"plan.n={plan.n} != len(x)={x.shape[0]}")
+
+    # Zero-pad to the static launch geometry. The pad VALUE is
+    # irrelevant: the in-kernel algebraic mask forces lanes >= n to the
+    # op identity (that is the point of the paper's trick).
+    pad = plan.padded_n - plan.n
+    if pad:
+        x = jnp.pad(x, (0, pad))
+
+    partials = pl.pallas_call(
+        functools.partial(_stage1_kernel, plan=plan),
+        out_shape=jax.ShapeDtypeStruct((plan.grid,), x.dtype),
+        grid=(plan.grid,),
+        in_specs=[pl.BlockSpec((plan.tile,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        interpret=True,
+    )(x)
+
+    out = pl.pallas_call(
+        functools.partial(_stage2_kernel, op=plan.op, g=plan.grid),
+        out_shape=jax.ShapeDtypeStruct((1,), x.dtype),
+        interpret=True,
+    )(partials)
+    return out[0]
+
+
+def _rows_kernel(x_ref, o_ref, *, plan: Plan, b: int):
+    """Row-reduction kernel: a single grid step reduces every row.
+
+    §Perf: one whole-batch step instead of one grid step per row — the
+    interpret/CPU backend pays ~0.6 ms of block-copy/schedule overhead
+    per grid step, which dominated small batches.
+    """
+    dtype = x_ref.dtype
+    comb = _COMBINE[plan.op]
+    fb = plan.f * plan.blk
+    lane = lax.iota(jnp.int32, fb)
+    for r in range(b):  # statically unrolled over batch rows
+        acc = None
+        for c in range(plan.chunks):
+            chunk = x_ref[r, pl.ds(c * fb, fb)]
+            idx = c * fb + lane
+            chunk = _mask_combine(chunk, idx, plan.n, plan.op, dtype)
+            row = _tree_over_rows(chunk.reshape(plan.f, plan.blk), plan.op)
+            acc = row if acc is None else comb(acc, row)
+        o_ref[r] = _tree_halving(acc, plan.op)
+
+
+def reduce_rows_pallas(x, op: str = "sum", *, f: int = 8,
+                       blk: int = DEFAULT_BLK):
+    """Batched variant: reduce each row of a (B, N) array -> (B,).
+
+    This is what the L3 dynamic batcher executes: same-variant requests
+    are stacked into a batch and reduced in one PJRT execute.
+    """
+    x = jnp.asarray(x)
+    if x.ndim != 2:
+        raise ValueError(f"expected 2-D input, got shape {x.shape}")
+    b, n = x.shape
+    plan = make_plan(n, op, blk=blk, f=f, grid=1)
+    pad = plan.padded_n - n
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+
+    out = pl.pallas_call(
+        functools.partial(_rows_kernel, plan=plan, b=b),
+        out_shape=jax.ShapeDtypeStruct((b,), x.dtype),
+        interpret=True,
+    )(x)
+    return out
+
+
+def vmem_footprint_bytes(plan: Plan, dtype=jnp.float32) -> int:
+    """Estimated stage-1 VMEM residency per grid step (DESIGN.md §Perf).
+
+    One (tile,) input block + the (F, BLK) working tile + the (BLK,)
+    accumulator. Used by aot.py to emit the perf metadata the paper
+    reports as bandwidth-% (we report VMEM fit + bytes moved instead).
+    """
+    esize = jnp.dtype(dtype).itemsize
+    return (plan.tile + plan.f * plan.blk + plan.blk) * esize

@@ -1,0 +1,66 @@
+"""Pure-jnp reference oracles for the reduction kernels.
+
+These are the CORE correctness signal: every Pallas kernel variant must
+match the corresponding oracle (pytest + hypothesis sweep in
+python/tests/). Kept deliberately naive — one jnp call per op — so a bug
+in the kernel cannot be mirrored here.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+# Combiner catalog: name -> (jnp reducer, identity-element factory).
+# Identities follow the paper's §1.1 operator set {+, ×, max, min, ...}.
+OPS = {
+    "sum": (jnp.sum, lambda dt: jnp.zeros((), dt)),
+    "prod": (jnp.prod, lambda dt: jnp.ones((), dt)),
+    "max": (jnp.max, lambda dt: jnp.asarray(_min_value(dt), dt)),
+    "min": (jnp.min, lambda dt: jnp.asarray(_max_value(dt), dt)),
+}
+
+
+def _min_value(dt):
+    dt = jnp.dtype(dt)
+    if jnp.issubdtype(dt, jnp.floating):
+        return -jnp.inf
+    return np.iinfo(dt).min
+
+
+def _max_value(dt):
+    dt = jnp.dtype(dt)
+    if jnp.issubdtype(dt, jnp.floating):
+        return jnp.inf
+    return np.iinfo(dt).max
+
+
+def identity_for(op: str, dtype):
+    """Identity element of combiner `op` at `dtype` (paper §1.1 fn. 2)."""
+    return OPS[op][1](dtype)
+
+
+def reduce_ref(x, op: str = "sum"):
+    """Oracle: reduce the full array with combiner `op`."""
+    return OPS[op][0](x)
+
+
+def reduce_rows_ref(x, op: str = "sum"):
+    """Oracle for the batched variant: reduce each row of a (B, N) array."""
+    return OPS[op][0](x, axis=-1)
+
+
+def kahan_sum_ref(x) -> float:
+    """Compensated (Kahan) summation.
+
+    Used to bound the accumulated error of the f32 kernels — the paper's
+    fn. 4 points to Kahan [17] as the mitigation for float non-associativity.
+    """
+    s = 0.0
+    c = 0.0
+    for v in np.asarray(x, dtype=np.float64).ravel():
+        y = float(v) - c
+        t = s + y
+        c = (t - s) - y
+        s = t
+    return s

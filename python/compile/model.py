@@ -1,0 +1,85 @@
+"""Layer-2: JAX compute graphs around the Pallas reduction kernels.
+
+Each function here is jitted + lowered ONCE by aot.py into a single
+HLO module (kernel padding, stage 1, stage 2 all fuse into one
+artifact). Python never runs on the request path: the rust runtime
+loads the HLO text and executes it via PJRT.
+
+Functions return 1-tuples (or n-tuples) because the AOT bridge lowers
+with ``return_tuple=True`` and the rust side unwraps tuples
+(see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import reduce_pallas as rp
+
+
+def full_reduce(op: str, f: int = 8, blk: int = rp.DEFAULT_BLK,
+                grid: int = rp.DEFAULT_GRID):
+    """Graph: (n,) -> scalar reduction with combiner ``op``."""
+
+    def fn(x):
+        return (rp.reduce_pallas(x, op, f=f, blk=blk, grid=grid),)
+
+    fn.__name__ = f"full_reduce_{op}_f{f}"
+    return fn
+
+
+def rows_reduce(op: str, f: int = 8, blk: int = rp.DEFAULT_BLK):
+    """Graph: (b, n) -> (b,) row-wise reduction (dynamic-batcher shape)."""
+
+    def fn(x):
+        return (rp.reduce_rows_pallas(x, op, f=f, blk=blk),)
+
+    fn.__name__ = f"rows_reduce_{op}_f{f}"
+    return fn
+
+
+def dot_reduce(f: int = 8, blk: int = rp.DEFAULT_BLK,
+               grid: int = rp.DEFAULT_GRID):
+    """Graph: dot(x, y) as elementwise-mul fused into the reduction.
+
+    Exercises kernel composition at L2 — the multiply fuses into the
+    same HLO module as the two reduction stages (used by the
+    golden-section example where the objective is a weighted sum).
+    """
+
+    def fn(x, y):
+        return (rp.reduce_pallas(x * y, "sum", f=f, blk=blk, grid=grid),)
+
+    fn.__name__ = f"dot_reduce_f{f}"
+    return fn
+
+
+def mean_var(f: int = 8, blk: int = rp.DEFAULT_BLK,
+             grid: int = rp.DEFAULT_GRID):
+    """Graph: (n,) -> (mean, var) via two fused reductions.
+
+    The streaming-stats path consumes this: two kernel launches in one
+    module, sharing the input buffer (no duplicate HBM reads at the XLA
+    level — checked in the §Perf pass).
+    """
+
+    def fn(x):
+        n = x.shape[0]
+        s = rp.reduce_pallas(x, "sum", f=f, blk=blk, grid=grid)
+        s2 = rp.reduce_pallas(x * x, "sum", f=f, blk=blk, grid=grid)
+        mean = s / n
+        var = s2 / n - mean * mean
+        return (mean, var)
+
+    fn.__name__ = f"mean_var_f{f}"
+    return fn
+
+
+def lower(fn, *specs):
+    """jit + lower a graph for the given ShapeDtypeStructs."""
+    return jax.jit(fn).lower(*specs)
+
+
+def spec(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))

@@ -1,0 +1,57 @@
+"""Property-based sweep of the Pallas kernels (hypothesis).
+
+Shapes, dtypes, ops, unroll factors and data are all drawn randomly;
+the kernel must always agree with the pure-jnp oracle.
+"""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels import reduce_pallas as rp
+
+OPS = st.sampled_from(["sum", "max", "min"])
+SMALL_N = st.integers(min_value=1, max_value=3000)
+UNROLL = st.sampled_from([1, 2, 3, 4, 8])
+
+
+@settings(max_examples=40, deadline=None)
+@given(n=SMALL_N, op=OPS, f=UNROLL, seed=st.integers(0, 2**31 - 1))
+def test_f32_reduce_any_shape(n, op, f, seed):
+    x = np.random.default_rng(seed).normal(size=n).astype(np.float32)
+    got = np.asarray(rp.reduce_pallas(x, op, f=f))
+    want = np.asarray(ref.reduce_ref(x, op))
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=1e-4)
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=SMALL_N, op=OPS, f=UNROLL, seed=st.integers(0, 2**31 - 1))
+def test_i32_reduce_exact(n, op, f, seed):
+    x = np.random.default_rng(seed).integers(-10_000, 10_000, size=n)
+    x = x.astype(np.int32)
+    got = np.asarray(rp.reduce_pallas(x, op, f=f))
+    want = np.asarray(ref.reduce_ref(x, op))
+    assert np.array_equal(got, want)
+
+
+@settings(max_examples=20, deadline=None)
+@given(b=st.integers(1, 8), n=st.integers(1, 1500), op=OPS,
+       seed=st.integers(0, 2**31 - 1))
+def test_rows_any_shape(b, n, op, seed):
+    x = np.random.default_rng(seed).normal(size=(b, n)).astype(np.float32)
+    got = np.asarray(rp.reduce_rows_pallas(x, op))
+    want = np.asarray(ref.reduce_rows_ref(x, op))
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=SMALL_N, seed=st.integers(0, 2**31 - 1))
+def test_permutation_invariance(n, seed):
+    """Paper §1.1: associativity+commutativity — order must not matter
+    (up to f32 rounding)."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=n).astype(np.float32)
+    perm = rng.permutation(n)
+    a = float(rp.reduce_pallas(x, "sum"))
+    b = float(rp.reduce_pallas(x[perm], "sum"))
+    assert abs(a - b) <= 1e-3 * max(1.0, abs(a))

@@ -1,0 +1,75 @@
+"""L2 graph tests: composition, shapes, and AOT lowering round-trips."""
+
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.kernels import ref
+
+
+def test_dot_reduce_matches_numpy():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=4096).astype(np.float32)
+    y = rng.normal(size=4096).astype(np.float32)
+    (got,) = jax.jit(model.dot_reduce())(x, y)
+    np.testing.assert_allclose(float(got), float(np.dot(x, y)), rtol=1e-4)
+
+
+def test_mean_var_matches_numpy():
+    rng = np.random.default_rng(1)
+    x = rng.normal(loc=2.0, scale=3.0, size=100_000).astype(np.float32)
+    mean, var = jax.jit(model.mean_var())(x)
+    np.testing.assert_allclose(float(mean), x.mean(), rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(float(var), x.var(), rtol=1e-2)
+
+
+def test_full_reduce_graph_all_ops():
+    rng = np.random.default_rng(2)
+    x = rng.normal(size=10_000).astype(np.float32)
+    for op in ("sum", "max", "min"):
+        (got,) = jax.jit(model.full_reduce(op))(x)
+        np.testing.assert_allclose(
+            float(got), float(np.asarray(ref.reduce_ref(x, op))),
+            rtol=3e-5, atol=1e-4)
+
+
+def test_lowering_emits_hlo_text():
+    fn = model.full_reduce("sum")
+    lowered = model.lower(fn, model.spec((2048,), np.float32))
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "f32[2048]" in text
+
+
+def test_catalog_names_unique_and_complete():
+    entries = aot.catalog()
+    names = [aot.entry_name(e) for e in entries]
+    assert len(names) == len(set(names)), "duplicate artifact names"
+    # The paper's headline workloads must be present.
+    assert any(e["n"] == aot.N_PAPER for e in entries)
+    assert any(e["n"] == aot.N_HARRIS for e in entries)
+    # The F sweep for Table 2 / Figs 3-4.
+    fs = {e["f"] for e in entries
+          if e["kind"] == "full" and e["n"] == aot.N_PAPER
+          and e["op"] == "sum" and e["dtype"] == "f32"}
+    assert fs == {1, 2, 3, 4, 5, 6, 7, 8, 16}
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__),
+                                    "..", "..", "artifacts", "manifest.json")),
+    reason="artifacts not built yet (run `make artifacts`)")
+def test_manifest_consistent_with_files():
+    root = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    with open(os.path.join(root, "manifest.json")) as fh:
+        man = json.load(fh)
+    assert man["version"] == 1
+    for a in man["artifacts"]:
+        path = os.path.join(root, a["file"])
+        assert os.path.exists(path), f"missing artifact file {a['file']}"
+        with open(path) as fh:
+            assert fh.read(9) == "HloModule"

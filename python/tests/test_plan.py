@@ -1,0 +1,40 @@
+"""Launch-geometry (Plan) invariants."""
+
+import numpy as np
+import pytest
+
+from compile.kernels import reduce_pallas as rp
+
+
+@pytest.mark.parametrize("n", [1, 5, 127, 128, 129, 10_000, 5_533_214])
+@pytest.mark.parametrize("f", [1, 3, 8, 16])
+def test_plan_covers_input(n, f):
+    p = rp.make_plan(n, "sum", f=f)
+    assert p.padded_n >= n, "plan must cover every element"
+    assert p.grid * p.tile == p.padded_n
+    assert p.chunks >= 1 and p.grid >= 1 and p.f >= 1
+
+
+@pytest.mark.parametrize("n", [1, 100, 65_536])
+def test_plan_padding_bounded(n):
+    """No more than one chunk of waste per grid step."""
+    p = rp.make_plan(n, "sum")
+    assert p.padded_n - n < p.grid * p.f * p.blk + p.f * p.blk
+
+
+def test_plan_shrinks_for_small_inputs():
+    p = rp.make_plan(100, "sum")
+    assert p.grid == 1 and p.f == 1 and p.chunks == 1
+
+
+def test_plan_paper_size():
+    """The paper's N: geometry stays at the configured defaults."""
+    p = rp.make_plan(5_533_214, "sum", f=8)
+    assert p.grid == rp.DEFAULT_GRID and p.f == 8
+    assert p.padded_n >= 5_533_214
+
+
+def test_vmem_footprint_monotone_in_f():
+    ns = [rp.vmem_footprint_bytes(rp.make_plan(5_533_214, "sum", f=f))
+          for f in (1, 2, 4, 8)]
+    assert ns == sorted(ns), "VMEM estimate should grow with F"

@@ -1,0 +1,13 @@
+//! `cargo bench --bench ablations` — the design-choice ablations
+//! DESIGN.md §5 lists (tree style, persistence, shuffle, host unroll).
+
+use parred::harness::ablations;
+
+fn main() {
+    let fast = std::env::var("PARRED_BENCH_FAST").as_deref() == Ok("1");
+    let n = if fast { 1 << 19 } else { 1 << 21 };
+    println!("{}", ablations::tree_style(n, 256, 42).expect("tree").markdown());
+    println!("{}", ablations::persistence(n, 256, 42).expect("persistence").markdown());
+    println!("{}", ablations::shuffle(n, 256, 42).expect("shuffle").markdown());
+    println!("{}", ablations::host_unroll(if fast { 1 << 20 } else { 1 << 23 }, 42).markdown());
+}

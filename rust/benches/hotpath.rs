@@ -1,0 +1,125 @@
+//! `cargo bench --bench hotpath` — wall-clock microbenches of every
+//! hot path on the request route (the §Perf pass instrumentation):
+//! host reduction library, literal marshalling, router/batcher units,
+//! the simulator interpreter, and (if artifacts exist) PJRT execute.
+
+use std::time::{Duration, Instant};
+
+use parred::coordinator::batcher::Batcher;
+use parred::coordinator::Router;
+use parred::gpusim::{CombOp, DeviceConfig, Gpu};
+use parred::kernels::drivers;
+use parred::reduce::plan::ShapeKey;
+use parred::reduce::{kahan, scalar, simd, threaded, Op};
+use parred::runtime::literal::HostVec;
+use parred::runtime::{Catalog, Runtime};
+use parred::util::bench::Bench;
+use parred::util::json::Json;
+use parred::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::from_env();
+    let mut rng = Rng::new(7);
+    let n = 1 << 22;
+    let data_f = rng.f32_vec(n, -1.0, 1.0);
+    let data_i = rng.i32_vec(n, -100, 100);
+    let bytes = Some(4 * n as u64);
+
+    // --- host reduction library ---
+    b.run("host/scalar_sum_f32_4M", bytes, || scalar::reduce(&data_f, Op::Sum));
+    b.run("host/simd_sum_f32_4M", bytes, || simd::reduce(&data_f, Op::Sum));
+    b.run("host/simd_sum_i32_4M", bytes, || simd::reduce(&data_i, Op::Sum));
+    b.run("host/simd_max_f32_4M", bytes, || simd::reduce(&data_f, Op::Max));
+    b.run("host/kahan_sum_f32_4M", bytes, || kahan::sum_f32(&data_f));
+    for t in [2usize, 4, 8] {
+        b.run(&format!("host/threaded{t}_sum_f32_4M"), bytes, || {
+            threaded::reduce(&data_f, Op::Sum, t)
+        });
+    }
+
+    // --- literal marshalling (PJRT boundary) ---
+    let small = HostVec::F32(rng.f32_vec(65_536, -1.0, 1.0));
+    b.run("literal/to_literal_64k_f32", Some(4 * 65_536), || small.to_literal());
+
+    // --- coordinator units ---
+    let catalog = Catalog::load(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")).ok();
+    if let Some(cat) = catalog.clone() {
+        let router = Router::new(cat);
+        let key = ShapeKey { op: Op::Sum, dtype: parred::reduce::op::Dtype::F32, n: 65_536 };
+        b.run("coordinator/route_lookup", None, || router.route(key));
+    }
+    b.run("coordinator/batcher_push_flush_64", None, || {
+        let mut batcher = Batcher::new(Duration::from_millis(0));
+        let t = Instant::now();
+        for id in 0..64u64 {
+            let (tx, rx) = std::sync::mpsc::channel();
+            std::mem::forget(rx);
+            batcher.push(parred::coordinator::Request {
+                id,
+                op: Op::Sum,
+                payload: HostVec::F32(vec![0.0; 8]),
+                t_enqueue: t,
+                reply: tx,
+            });
+        }
+        batcher.flush_ready(t + Duration::from_millis(1), |_| vec![4, 8, 16]).len()
+    });
+
+    // --- manifest parsing ---
+    let manifest = std::fs::read_to_string(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/manifest.json")).ok();
+    if let Some(text) = manifest {
+        b.run("json/parse_manifest", Some(text.len() as u64), || Json::parse(&text).unwrap());
+    }
+
+    // --- simulator interpreter throughput ---
+    let sim_data: Vec<f64> = (0..1_000_000).map(|i| (i % 97) as f64).collect();
+    b.run("gpusim/jradi_f8_1M_amd", Some(8 * 1_000_000), || {
+        let mut gpu = Gpu::new(DeviceConfig::amd_gcn());
+        drivers::jradi_reduce(&mut gpu, &sim_data, CombOp::Add, 8, 256).unwrap().value
+    });
+    b.run("gpusim/harris_k3_1M_g80", Some(8 * 1_000_000), || {
+        let mut gpu = Gpu::new(DeviceConfig::g80());
+        drivers::harris_reduce(&mut gpu, 3, &sim_data, CombOp::Add, 128).unwrap().value
+    });
+
+    // --- PJRT execute (warm) ---
+    if let Ok(rt) = Runtime::load(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")) {
+        if let Some(meta) = rt.catalog().find_full(Op::Sum, parred::reduce::op::Dtype::F32, 65_536)
+        {
+            let meta = meta.clone();
+            let payload = HostVec::F32(rng.f32_vec(65_536, -1.0, 1.0));
+            rt.reduce_full(&meta, &payload).unwrap(); // compile once
+            b.run("pjrt/full_sum_f32_64k_warm", Some(4 * 65_536), || {
+                rt.reduce_full(&meta, &payload).unwrap()
+            });
+        }
+        if let Some(meta) = rt.catalog().find_rows(
+            Op::Sum,
+            parred::reduce::op::Dtype::F32,
+            8,
+            65_536,
+        ) {
+            let meta = meta.clone();
+            let payload = HostVec::F32(rng.f32_vec(8 * 65_536, -1.0, 1.0));
+            rt.reduce_rows(&meta, &payload).unwrap();
+            b.run("pjrt/rows8_sum_f32_64k_warm", Some(4 * 8 * 65_536), || {
+                rt.reduce_rows(&meta, &payload).unwrap()
+            });
+        }
+        if let Some(meta) = rt
+            .catalog()
+            .find_full(Op::Sum, parred::reduce::op::Dtype::F32, parred::N_PAPER)
+        {
+            let meta = meta.clone();
+            let payload = HostVec::F32(rng.f32_vec(parred::N_PAPER, -1.0, 1.0));
+            rt.reduce_full(&meta, &payload).unwrap();
+            b.run("pjrt/full_sum_f32_paperN_warm", Some(4 * parred::N_PAPER as u64), || {
+                rt.reduce_full(&meta, &payload).unwrap()
+            });
+        }
+    } else {
+        eprintln!("(PJRT benches skipped: artifacts not built)");
+    }
+
+    println!("{}", b.report());
+}

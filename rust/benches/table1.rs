@@ -1,0 +1,24 @@
+//! `cargo bench --bench table1` — regenerates paper Table 1 (Harris'
+//! seven-kernel ladder, 2^22 ints, modeled G80) and times the
+//! simulator itself.
+
+use parred::harness::table1;
+use parred::util::bench::fmt_time;
+use std::time::Instant;
+
+fn main() {
+    let fast = std::env::var("PARRED_BENCH_FAST").as_deref() == Ok("1");
+    let n = if fast { 1 << 18 } else { parred::N_HARRIS };
+    let t0 = Instant::now();
+    let rows = table1::run(n, 128, 42).expect("table1 run");
+    let wall = t0.elapsed();
+    println!("{}", table1::table(&rows).markdown());
+    println!(
+        "simulator wall time: {} for {} kernels x {n} elements",
+        fmt_time(wall.as_secs_f64()),
+        rows.len()
+    );
+    let cum = rows[0].time_s / rows[6].time_s;
+    println!("cumulative modeled speedup K1->K7: {cum:.1}x (paper: 30.0x)");
+    assert!(cum > 4.0, "ladder collapsed");
+}

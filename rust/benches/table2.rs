@@ -1,0 +1,16 @@
+//! `cargo bench --bench table2` — regenerates paper Table 2 and
+//! Figures 3–4 (unroll-factor sweep vs Catanzaro, modeled AMD GCN).
+
+use parred::harness::table2;
+
+fn main() {
+    let fast = std::env::var("PARRED_BENCH_FAST").as_deref() == Ok("1");
+    let n = if fast { 1 << 20 } else { parred::N_PAPER };
+    let rows = table2::run(n, 256, 42).expect("table2 run");
+    println!("{}", table2::table(&rows).markdown());
+    println!("{}", table2::figure3(&rows).render());
+    println!("{}", table2::figure4(&rows).render());
+    let s8 = rows.iter().find(|r| r.f == 8).unwrap().speedup;
+    println!("modeled F=8 speedup: {s8:.2}x (paper: 2.79x)");
+    assert!(s8 > 1.5, "unrolling speedup collapsed");
+}

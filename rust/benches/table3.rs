@@ -1,0 +1,16 @@
+//! `cargo bench --bench table3` — regenerates paper Table 3 (new
+//! approach F=8 vs Harris K7, modeled Tesla C2075).
+
+use parred::harness::table3;
+
+fn main() {
+    let fast = std::env::var("PARRED_BENCH_FAST").as_deref() == Ok("1");
+    let n = if fast { 1 << 21 } else { parred::N_PAPER };
+    let row = table3::run(n, 256, 8, 42).expect("table3 run");
+    println!("{}", table3::table(&row).markdown());
+    println!(
+        "modeled parity: {:.1}% of K7 (paper: 99.4%; 100% = equal)",
+        row.pct
+    );
+    assert!(row.pct > 50.0 && row.pct < 200.0, "parity claim broken");
+}

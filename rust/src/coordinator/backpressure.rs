@@ -1,0 +1,153 @@
+//! Admission control: bound the in-flight queue so a burst degrades
+//! into explicit rejections instead of unbounded memory growth.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Shared admission gate between the service front-end and the
+/// executor (which releases slots as it completes work).
+#[derive(Debug, Clone)]
+pub struct Gate {
+    inner: Arc<GateInner>,
+}
+
+#[derive(Debug)]
+struct GateInner {
+    in_flight: AtomicUsize,
+    limit: usize,
+    rejected: AtomicUsize,
+    admitted: AtomicUsize,
+}
+
+/// RAII permit: releases its slot on drop.
+pub struct Permit {
+    inner: Arc<GateInner>,
+}
+
+impl Gate {
+    pub fn new(limit: usize) -> Self {
+        Gate {
+            inner: Arc::new(GateInner {
+                in_flight: AtomicUsize::new(0),
+                limit: limit.max(1),
+                rejected: AtomicUsize::new(0),
+                admitted: AtomicUsize::new(0),
+            }),
+        }
+    }
+
+    /// Try to admit one request.
+    pub fn try_acquire(&self) -> Option<Permit> {
+        let mut cur = self.inner.in_flight.load(Ordering::Relaxed);
+        loop {
+            if cur >= self.inner.limit {
+                self.inner.rejected.fetch_add(1, Ordering::Relaxed);
+                return None;
+            }
+            match self.inner.in_flight.compare_exchange_weak(
+                cur,
+                cur + 1,
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => {
+                    self.inner.admitted.fetch_add(1, Ordering::Relaxed);
+                    return Some(Permit { inner: self.inner.clone() });
+                }
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.inner.in_flight.load(Ordering::Relaxed)
+    }
+
+    pub fn rejected(&self) -> usize {
+        self.inner.rejected.load(Ordering::Relaxed)
+    }
+
+    pub fn admitted(&self) -> usize {
+        self.inner.admitted.load(Ordering::Relaxed)
+    }
+
+    pub fn limit(&self) -> usize {
+        self.inner.limit
+    }
+}
+
+impl Permit {
+    /// Transfer slot ownership to the executor: the slot stays held
+    /// until a matching [`Gate::release_transferred`].
+    pub fn transfer(self) {
+        // Skip Permit::drop (keep the slot held) but still release the
+        // Arc handle so the gate itself is not leaked.
+        let inner = unsafe { std::ptr::read(&self.inner) };
+        std::mem::forget(self);
+        drop(inner);
+    }
+}
+
+impl Drop for Permit {
+    fn drop(&mut self) {
+        self.inner.in_flight.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+impl Gate {
+    /// Release a slot whose `Permit` was [`Permit::transfer`]red.
+    /// Every call must pair with exactly one transferred permit.
+    pub fn release_transferred(&self) {
+        let prev = self.inner.in_flight.fetch_sub(1, Ordering::AcqRel);
+        debug_assert!(prev > 0, "release without a transferred permit");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admits_up_to_limit() {
+        let g = Gate::new(2);
+        let p1 = g.try_acquire().unwrap();
+        let _p2 = g.try_acquire().unwrap();
+        assert!(g.try_acquire().is_none());
+        assert_eq!(g.in_flight(), 2);
+        assert_eq!(g.rejected(), 1);
+        drop(p1);
+        assert!(g.try_acquire().is_some());
+        assert_eq!(g.admitted(), 3);
+    }
+
+    #[test]
+    fn zero_limit_clamps_to_one() {
+        let g = Gate::new(0);
+        assert_eq!(g.limit(), 1);
+        let _p = g.try_acquire().unwrap();
+        assert!(g.try_acquire().is_none());
+    }
+
+    #[test]
+    fn concurrent_acquire_release() {
+        let g = Gate::new(8);
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let g = g.clone();
+                std::thread::spawn(move || {
+                    let mut got = 0;
+                    for _ in 0..1000 {
+                        if let Some(p) = g.try_acquire() {
+                            got += 1;
+                            drop(p);
+                        }
+                    }
+                    got
+                })
+            })
+            .collect();
+        let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert!(total > 0);
+        assert_eq!(g.in_flight(), 0, "all permits released");
+    }
+}

@@ -1,0 +1,222 @@
+//! Dynamic batching: same-shape requests are held briefly and stacked
+//! into one `rows` execute — the serving-side analogue of the paper's
+//! "give each execution step more work" principle.
+//!
+//! Policy (per shape key):
+//! * flush immediately once the queue reaches the largest usable
+//!   `rows` batch size;
+//! * otherwise flush when the oldest queued request has waited longer
+//!   than the window, at the largest size that fits (padding up to the
+//!   smallest artifact size with identity rows when below it).
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use crate::reduce::plan::ShapeKey;
+
+use super::request::Request;
+use super::router::Router;
+
+/// A flushed batch ready for execution.
+#[derive(Debug)]
+pub struct FlushedBatch {
+    pub key: ShapeKey,
+    pub requests: Vec<Request>,
+    /// Rows-artifact size to execute with (>= requests.len()); the
+    /// difference is identity padding.
+    pub exec_rows: usize,
+}
+
+/// Per-key FIFO queues with deadline-based flushing.
+pub struct Batcher {
+    window: Duration,
+    queues: HashMap<ShapeKey, Vec<Request>>,
+}
+
+impl Batcher {
+    pub fn new(window: Duration) -> Self {
+        Batcher { window, queues: HashMap::new() }
+    }
+
+    pub fn window(&self) -> Duration {
+        self.window
+    }
+
+    /// Queue depth across all keys.
+    pub fn queued(&self) -> usize {
+        self.queues.values().map(|q| q.len()).sum()
+    }
+
+    /// Enqueue a batchable request under its key.
+    pub fn push(&mut self, req: Request) {
+        self.queues.entry(req.shape_key()).or_default().push(req);
+    }
+
+    /// Collect batches that are ready at time `now`, given the row
+    /// sizes the router found for each key. FIFO order within a key is
+    /// preserved (oldest requests flush first).
+    pub fn flush_ready(
+        &mut self,
+        now: Instant,
+        sizes_of: impl Fn(&ShapeKey) -> Vec<usize>,
+    ) -> Vec<FlushedBatch> {
+        let mut out = Vec::new();
+        for (key, queue) in self.queues.iter_mut() {
+            let sizes = sizes_of(key);
+            if sizes.is_empty() {
+                continue; // not a batchable key (shouldn't normally be queued)
+            }
+            loop {
+                // Size-triggered flush: the largest artifact we can fill.
+                if let Some(b) = Router::best_batch(&sizes, queue.len()) {
+                    if queue.len() >= *sizes.last().unwrap() || b == *sizes.last().unwrap() {
+                        let batch: Vec<Request> = queue.drain(..b).collect();
+                        out.push(FlushedBatch { key: *key, requests: batch, exec_rows: b });
+                        continue;
+                    }
+                }
+                // Deadline-triggered flush.
+                let expired = queue
+                    .first()
+                    .is_some_and(|r| now.duration_since(r.t_enqueue) >= self.window);
+                if expired {
+                    let take = Router::best_batch(&sizes, queue.len())
+                        .unwrap_or_else(|| queue.len().min(*sizes.first().unwrap()));
+                    let exec = if take >= *sizes.first().unwrap() {
+                        take
+                    } else {
+                        // Pad up to the smallest artifact.
+                        *sizes.first().unwrap()
+                    };
+                    let take = take.min(queue.len());
+                    let batch: Vec<Request> = queue.drain(..take).collect();
+                    out.push(FlushedBatch { key: *key, requests: batch, exec_rows: exec });
+                    continue;
+                }
+                break;
+            }
+        }
+        self.queues.retain(|_, q| !q.is_empty());
+        out
+    }
+
+    /// Deadline of the oldest queued request (for the service loop's
+    /// recv timeout), if any.
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.queues
+            .values()
+            .filter_map(|q| q.first())
+            .map(|r| r.t_enqueue + self.window)
+            .min()
+    }
+
+    /// Drain everything unconditionally (shutdown path).
+    pub fn drain_all(&mut self) -> Vec<Request> {
+        let mut out = Vec::new();
+        for (_, mut q) in self.queues.drain() {
+            out.append(&mut q);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::reduce::op::Op;
+    use crate::runtime::literal::HostVec;
+
+    fn req(id: u64, n: usize, t: Instant) -> Request {
+        let (tx, _rx) = std::sync::mpsc::channel();
+        // Leak the receiver end: these tests never reply.
+        std::mem::forget(_rx);
+        Request { id, op: Op::Sum, payload: HostVec::F32(vec![1.0; n]), t_enqueue: t, reply: tx }
+    }
+
+    fn sizes(_: &ShapeKey) -> Vec<usize> {
+        vec![4, 8, 16]
+    }
+
+    #[test]
+    fn size_triggered_flush_at_max() {
+        let mut b = Batcher::new(Duration::from_millis(10));
+        let t = Instant::now();
+        for i in 0..16 {
+            b.push(req(i, 100, t));
+        }
+        let flushed = b.flush_ready(t, sizes);
+        assert_eq!(flushed.len(), 1);
+        assert_eq!(flushed[0].requests.len(), 16);
+        assert_eq!(flushed[0].exec_rows, 16);
+        assert_eq!(b.queued(), 0);
+    }
+
+    #[test]
+    fn below_max_waits_for_window() {
+        let mut b = Batcher::new(Duration::from_millis(10));
+        let t = Instant::now();
+        for i in 0..6 {
+            b.push(req(i, 100, t));
+        }
+        // Not yet expired: nothing flushes (6 < max 16).
+        assert!(b.flush_ready(t, sizes).is_empty());
+        assert_eq!(b.queued(), 6);
+        // After the window: flush 4 (largest fitting), then remainder
+        // padded to the smallest artifact.
+        let later = t + Duration::from_millis(11);
+        let flushed = b.flush_ready(later, sizes);
+        assert_eq!(flushed.len(), 2);
+        assert_eq!(flushed[0].requests.len(), 4);
+        assert_eq!(flushed[0].exec_rows, 4);
+        assert_eq!(flushed[1].requests.len(), 2);
+        assert_eq!(flushed[1].exec_rows, 4, "padded to smallest artifact");
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mut b = Batcher::new(Duration::from_millis(0));
+        let t = Instant::now();
+        for i in 0..5 {
+            b.push(req(i, 100, t));
+        }
+        let flushed = b.flush_ready(t + Duration::from_millis(1), sizes);
+        let ids: Vec<u64> = flushed.iter().flat_map(|f| f.requests.iter().map(|r| r.id)).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn distinct_keys_batch_separately() {
+        let mut b = Batcher::new(Duration::from_millis(0));
+        let t = Instant::now();
+        for i in 0..4 {
+            b.push(req(i, 100, t));
+            b.push(req(100 + i, 200, t));
+        }
+        let flushed = b.flush_ready(t + Duration::from_millis(1), sizes);
+        assert_eq!(flushed.len(), 2);
+        for f in &flushed {
+            assert_eq!(f.requests.len(), 4);
+            assert!(f.requests.windows(2).all(|w| w[0].payload.len() == w[1].payload.len()));
+        }
+    }
+
+    #[test]
+    fn next_deadline_is_oldest_plus_window() {
+        let mut b = Batcher::new(Duration::from_millis(10));
+        let t = Instant::now();
+        b.push(req(0, 100, t));
+        b.push(req(1, 100, t + Duration::from_millis(5)));
+        assert_eq!(b.next_deadline(), Some(t + Duration::from_millis(10)));
+    }
+
+    #[test]
+    fn drain_all_empties() {
+        let mut b = Batcher::new(Duration::from_millis(10));
+        let t = Instant::now();
+        for i in 0..3 {
+            b.push(req(i, 100, t));
+        }
+        assert_eq!(b.drain_all().len(), 3);
+        assert_eq!(b.queued(), 0);
+    }
+}

@@ -1,0 +1,145 @@
+//! Service metrics: per-path latency histograms, batch-size
+//! distribution, throughput accounting.
+
+use std::time::Instant;
+
+use crate::util::stats::Histogram;
+
+use super::request::ExecPath;
+
+/// Aggregated serving metrics (owned by the executor thread; snapshot
+/// rendered into the trace report).
+#[derive(Debug)]
+pub struct Metrics {
+    pub started: Instant,
+    pub completed: u64,
+    pub failed: u64,
+    pub lat_full: Histogram,
+    pub lat_batched: Histogram,
+    pub lat_host: Histogram,
+    /// Rows executed vs rows carrying real requests (padding waste).
+    pub rows_executed: u64,
+    pub rows_useful: u64,
+    pub batches: u64,
+    pub elements_reduced: u64,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics {
+            started: Instant::now(),
+            completed: 0,
+            failed: 0,
+            lat_full: Histogram::new(),
+            lat_batched: Histogram::new(),
+            lat_host: Histogram::new(),
+            rows_executed: 0,
+            rows_useful: 0,
+            batches: 0,
+            elements_reduced: 0,
+        }
+    }
+}
+
+impl Metrics {
+    pub fn record(&mut self, path: ExecPath, latency_s: f64, ok: bool, elements: usize) {
+        if ok {
+            self.completed += 1;
+        } else {
+            self.failed += 1;
+        }
+        self.elements_reduced += elements as u64;
+        match path {
+            ExecPath::PjrtFull => self.lat_full.record(latency_s),
+            ExecPath::PjrtBatched { .. } => self.lat_batched.record(latency_s),
+            ExecPath::Host => self.lat_host.record(latency_s),
+        }
+    }
+
+    pub fn record_batch(&mut self, exec_rows: usize, useful: usize) {
+        self.batches += 1;
+        self.rows_executed += exec_rows as u64;
+        self.rows_useful += useful as u64;
+    }
+
+    pub fn throughput_rps(&self) -> f64 {
+        let dt = self.started.elapsed().as_secs_f64().max(1e-9);
+        self.completed as f64 / dt
+    }
+
+    /// Average rows per executed batch.
+    pub fn avg_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.rows_useful as f64 / self.batches as f64
+        }
+    }
+
+    /// Fraction of executed rows that carried a real request.
+    pub fn batch_efficiency(&self) -> f64 {
+        if self.rows_executed == 0 {
+            1.0
+        } else {
+            self.rows_useful as f64 / self.rows_executed as f64
+        }
+    }
+
+    pub fn report(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "completed={} failed={} throughput={:.0} req/s elements={}\n",
+            self.completed,
+            self.failed,
+            self.throughput_rps(),
+            self.elements_reduced
+        ));
+        s.push_str(&format!(
+            "batches={} avg_batch={:.2} batch_efficiency={:.0}%\n",
+            self.batches,
+            self.avg_batch(),
+            100.0 * self.batch_efficiency()
+        ));
+        s.push_str(&format!("latency (pjrt full):    {}\n", self.lat_full.summary()));
+        s.push_str(&format!("latency (pjrt batched): {}\n", self.lat_batched.summary()));
+        s.push_str(&format!("latency (host):         {}\n", self.lat_host.summary()));
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_by_path() {
+        let mut m = Metrics::default();
+        m.record(ExecPath::PjrtFull, 1e-3, true, 100);
+        m.record(ExecPath::PjrtBatched { batch: 8 }, 2e-3, true, 100);
+        m.record(ExecPath::Host, 5e-4, false, 100);
+        assert_eq!(m.completed, 2);
+        assert_eq!(m.failed, 1);
+        assert_eq!(m.lat_full.count(), 1);
+        assert_eq!(m.lat_batched.count(), 1);
+        assert_eq!(m.lat_host.count(), 1);
+        assert_eq!(m.elements_reduced, 300);
+    }
+
+    #[test]
+    fn batch_efficiency() {
+        let mut m = Metrics::default();
+        m.record_batch(8, 6);
+        m.record_batch(4, 4);
+        assert_eq!(m.batches, 2);
+        assert!((m.avg_batch() - 5.0).abs() < 1e-9);
+        assert!((m.batch_efficiency() - 10.0 / 12.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn report_renders() {
+        let m = Metrics::default();
+        let r = m.report();
+        assert!(r.contains("throughput"));
+        assert!(r.contains("latency"));
+    }
+}

@@ -1,0 +1,20 @@
+//! Layer-3 coordinator: the serving layer over the PJRT runtime.
+//!
+//! vLLM-router-shaped: requests enter via [`service::Service`], are
+//! admission-controlled ([`backpressure`]), routed against the
+//! artifact catalog ([`router`]), dynamically batched into `rows`
+//! artifacts ([`batcher`]) and executed on the single-threaded PJRT
+//! executor, with latency/throughput metrics ([`metrics`]). Requests
+//! with no matching artifact fall back to the host reduction library
+//! ([`crate::reduce`]) — the service is total over request shapes.
+
+pub mod backpressure;
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+pub mod router;
+pub mod service;
+
+pub use request::{ExecPath, Request, Response};
+pub use router::{Route, Router};
+pub use service::{Service, ServiceConfig};

@@ -1,0 +1,74 @@
+//! Request/response types of the serving layer.
+
+use std::time::Instant;
+
+use crate::reduce::op::{Dtype, Op};
+use crate::reduce::plan::ShapeKey;
+use crate::runtime::literal::{HostScalar, HostVec};
+
+/// Monotonically increasing request identifier.
+pub type RequestId = u64;
+
+/// A reduction request entering the coordinator.
+#[derive(Debug)]
+pub struct Request {
+    pub id: RequestId,
+    pub op: Op,
+    pub payload: HostVec,
+    /// Enqueue timestamp (latency accounting).
+    pub t_enqueue: Instant,
+    /// Where to deliver the response.
+    pub reply: std::sync::mpsc::Sender<Response>,
+}
+
+impl Request {
+    pub fn dtype(&self) -> Dtype {
+        self.payload.dtype()
+    }
+
+    pub fn shape_key(&self) -> ShapeKey {
+        ShapeKey { op: self.op, dtype: self.dtype(), n: self.payload.len() }
+    }
+}
+
+/// How a request was executed (for metrics and tests).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecPath {
+    /// Dedicated `full` artifact on PJRT.
+    PjrtFull,
+    /// Stacked into a `rows` artifact with `batch` rows.
+    PjrtBatched { batch: usize },
+    /// Host (threaded/sequential) fallback.
+    Host,
+}
+
+/// The coordinator's answer.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: RequestId,
+    pub value: Result<HostScalar, String>,
+    pub path: ExecPath,
+    /// Queue + execute latency, seconds.
+    pub latency_s: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_key_reflects_payload() {
+        let (tx, _rx) = std::sync::mpsc::channel();
+        let r = Request {
+            id: 1,
+            op: Op::Sum,
+            payload: HostVec::F32(vec![0.0; 10]),
+            t_enqueue: Instant::now(),
+            reply: tx,
+        };
+        let k = r.shape_key();
+        assert_eq!(k.n, 10);
+        assert_eq!(k.dtype, Dtype::F32);
+        assert_eq!(k.op, Op::Sum);
+    }
+}

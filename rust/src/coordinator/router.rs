@@ -1,0 +1,114 @@
+//! Routing: decide how a request shape executes, against the artifact
+//! catalog (vLLM-router-style: exact-variant match, batchable pool, or
+//! fallback).
+
+use crate::reduce::plan::ShapeKey;
+use crate::runtime::Catalog;
+
+/// The routing decision for one shape.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Route {
+    /// Batch with same-key requests into `rows` artifacts; the sizes
+    /// are the available row counts (ascending).
+    Batched { sizes: Vec<usize> },
+    /// Dedicated full artifact (exact n).
+    Full { artifact: String },
+    /// No artifact: host library execution.
+    Host,
+}
+
+/// Stateless router over the catalog.
+#[derive(Debug, Clone)]
+pub struct Router {
+    catalog: Catalog,
+}
+
+impl Router {
+    pub fn new(catalog: Catalog) -> Self {
+        Router { catalog }
+    }
+
+    pub fn catalog(&self) -> &Catalog {
+        &self.catalog
+    }
+
+    /// Total function: every shape gets a route (Host at worst).
+    pub fn route(&self, key: ShapeKey) -> Route {
+        let sizes = self.catalog.rows_batch_sizes(key.op, key.dtype, key.n);
+        if !sizes.is_empty() {
+            return Route::Batched { sizes };
+        }
+        if let Some(meta) = self.catalog.find_full(key.op, key.dtype, key.n) {
+            return Route::Full { artifact: meta.name.clone() };
+        }
+        Route::Host
+    }
+
+    /// The largest batch size <= `queued`, if any (the batcher flushes
+    /// at this size without waiting for the window).
+    pub fn best_batch(sizes: &[usize], queued: usize) -> Option<usize> {
+        sizes.iter().rev().find(|&&b| b <= queued).copied()
+    }
+
+    /// The smallest available batch size (used at window expiry: pad
+    /// up to this with identity rows).
+    pub fn min_batch(sizes: &[usize]) -> Option<usize> {
+        sizes.first().copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::reduce::op::{Dtype, Op};
+    use crate::runtime::artifact::{test_meta, Kind};
+    use std::path::PathBuf;
+
+    fn router() -> Router {
+        Router::new(Catalog::from_entries(
+            PathBuf::from("/tmp"),
+            vec![
+                test_meta("full_a", Kind::Full, Op::Sum, 1024, None, 8),
+                test_meta("rows_b4", Kind::Rows, Op::Sum, 512, Some(4), 8),
+                test_meta("rows_b8", Kind::Rows, Op::Sum, 512, Some(8), 8),
+            ],
+        ))
+    }
+
+    fn key(op: Op, n: usize) -> ShapeKey {
+        ShapeKey { op, dtype: Dtype::F32, n }
+    }
+
+    #[test]
+    fn exact_full_match() {
+        assert_eq!(
+            router().route(key(Op::Sum, 1024)),
+            Route::Full { artifact: "full_a".into() }
+        );
+    }
+
+    #[test]
+    fn batched_preferred_when_rows_exist() {
+        assert_eq!(
+            router().route(key(Op::Sum, 512)),
+            Route::Batched { sizes: vec![4, 8] }
+        );
+    }
+
+    #[test]
+    fn host_fallback_is_total() {
+        assert_eq!(router().route(key(Op::Sum, 999)), Route::Host);
+        assert_eq!(router().route(key(Op::Prod, 1024)), Route::Host);
+    }
+
+    #[test]
+    fn batch_size_selection() {
+        let sizes = vec![4usize, 8, 16];
+        assert_eq!(Router::best_batch(&sizes, 3), None);
+        assert_eq!(Router::best_batch(&sizes, 4), Some(4));
+        assert_eq!(Router::best_batch(&sizes, 11), Some(8));
+        assert_eq!(Router::best_batch(&sizes, 99), Some(16));
+        assert_eq!(Router::min_batch(&sizes), Some(4));
+        assert_eq!(Router::min_batch(&[]), None);
+    }
+}

@@ -1,0 +1,433 @@
+//! The serving engine: a dedicated executor thread owns the PJRT
+//! runtime (it is `Rc`-based and not `Send`) and drains an mpsc queue
+//! fed by any number of client threads; requests are routed
+//! ([`super::router`]), dynamically batched ([`super::batcher`]) and
+//! executed, with admission control ([`super::backpressure`]) and
+//! latency metrics ([`super::metrics`]).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::reduce::op::{Dtype, Element, Op};
+use crate::reduce::plan::Planner;
+use crate::runtime::literal::{HostScalar, HostVec};
+use crate::runtime::Runtime;
+use crate::util::rng::Rng;
+use crate::util::stats::Histogram;
+
+use super::backpressure::Gate;
+use super::batcher::{Batcher, FlushedBatch};
+use super::metrics::Metrics;
+use super::request::{ExecPath, Request, Response};
+use super::router::{Route, Router};
+
+/// Service configuration.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    pub artifacts_dir: String,
+    /// Dynamic-batching window.
+    pub batch_window: Duration,
+    /// Admission-control limit on in-flight requests.
+    pub max_queue: usize,
+    /// Host-fallback worker threads (0 = available parallelism).
+    pub workers: usize,
+    /// Pre-compile all batchable (rows) artifacts at startup so the
+    /// first batches don't pay XLA compile time.
+    pub warmup: bool,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            artifacts_dir: "artifacts".into(),
+            batch_window: Duration::from_micros(200),
+            max_queue: 10_000,
+            workers: 0,
+            warmup: true,
+        }
+    }
+}
+
+enum Msg {
+    Req(Request),
+    Shutdown,
+}
+
+/// Handle to a running service (share across threads via `Arc`).
+pub struct Service {
+    tx: Sender<Msg>,
+    gate: Gate,
+    next_id: AtomicU64,
+    handle: Option<std::thread::JoinHandle<Metrics>>,
+}
+
+impl Service {
+    /// Spawn the executor thread and wait for the runtime to load.
+    pub fn start(cfg: ServiceConfig) -> Result<Service> {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<String, String>>();
+        let gate = Gate::new(cfg.max_queue);
+        let gate2 = gate.clone();
+        let cfg2 = cfg.clone();
+        let handle = std::thread::Builder::new()
+            .name("parred-executor".into())
+            .spawn(move || executor_loop(cfg2, gate2, rx, ready_tx))
+            .context("spawning executor thread")?;
+        match ready_rx.recv() {
+            Ok(Ok(_platform)) => {}
+            Ok(Err(e)) => {
+                let _ = handle.join();
+                return Err(anyhow!("executor failed to start: {e}"));
+            }
+            Err(_) => return Err(anyhow!("executor thread died during startup")),
+        }
+        Ok(Service { tx, gate, next_id: AtomicU64::new(1), handle: Some(handle) })
+    }
+
+    /// Submit a reduction. Returns the response channel, or an error
+    /// when the service is overloaded (backpressure) or stopped.
+    ///
+    /// The admission slot is held until the executor responds (it
+    /// releases the gate after delivering each response).
+    pub fn submit(&self, op: Op, payload: HostVec) -> Result<Receiver<Response>> {
+        let permit = self
+            .gate
+            .try_acquire()
+            .ok_or_else(|| anyhow!("overloaded: {} requests in flight", self.gate.in_flight()))?;
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let req = Request {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            op,
+            payload,
+            t_enqueue: Instant::now(),
+            reply: reply_tx,
+        };
+        self.tx.send(Msg::Req(req)).map_err(|_| anyhow!("service stopped"))?;
+        // Ownership of the slot transfers to the executor, which
+        // releases it via `Gate::release_transferred` in `respond`.
+        permit.transfer();
+        Ok(reply_rx)
+    }
+
+    /// Current in-flight count (admission gate view).
+    pub fn in_flight(&self) -> usize {
+        self.gate.in_flight()
+    }
+
+    pub fn rejected(&self) -> usize {
+        self.gate.rejected()
+    }
+
+    /// Stop the service and return final metrics.
+    pub fn shutdown(mut self) -> Metrics {
+        let _ = self.tx.send(Msg::Shutdown);
+        self.handle
+            .take()
+            .expect("shutdown called once")
+            .join()
+            .expect("executor panicked")
+    }
+}
+
+impl Drop for Service {
+    fn drop(&mut self) {
+        if let Some(h) = self.handle.take() {
+            let _ = self.tx.send(Msg::Shutdown);
+            let _ = h.join();
+        }
+    }
+}
+
+fn executor_loop(
+    cfg: ServiceConfig,
+    gate: Gate,
+    rx: Receiver<Msg>,
+    ready: Sender<Result<String, String>>,
+) -> Metrics {
+    let mut metrics = Metrics::default();
+    let runtime = match Runtime::load(&cfg.artifacts_dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            let _ = ready.send(Err(format!("{e:#}")));
+            return metrics;
+        }
+    };
+    if cfg.warmup {
+        // Compile every rows artifact up front: dynamic batching must
+        // not pay XLA compile time on the request path.
+        let names: Vec<String> = runtime
+            .catalog()
+            .iter()
+            .filter(|a| a.kind == crate::runtime::Kind::Rows)
+            .map(|a| a.name.clone())
+            .collect();
+        if let Err(e) = runtime.warmup(names.iter().map(|s| s.as_str())) {
+            let _ = ready.send(Err(format!("warmup failed: {e:#}")));
+            return metrics;
+        }
+    }
+    let _ = ready.send(Ok(runtime.platform()));
+    metrics.started = Instant::now(); // exclude load+warmup from throughput
+    let router = Router::new(runtime.catalog().clone());
+    let mut batcher = Batcher::new(cfg.batch_window);
+    let planner = Planner {
+        workers: if cfg.workers == 0 {
+            std::thread::available_parallelism().map_or(4, |n| n.get())
+        } else {
+            cfg.workers
+        },
+        ..Planner::default()
+    };
+
+    let handle_req = |req: Request, batcher: &mut Batcher, metrics: &mut Metrics| {
+        match router.route(req.shape_key()) {
+            Route::Batched { .. } => batcher.push(req),
+            Route::Full { artifact } => exec_full(&runtime, &gate, &artifact, req, metrics),
+            Route::Host => exec_host(&planner, &gate, req, metrics),
+        }
+    };
+
+    let mut running = true;
+    while running {
+        // Wait for work, but never past the oldest batch deadline.
+        let timeout = batcher
+            .next_deadline()
+            .map(|d| d.saturating_duration_since(Instant::now()))
+            .unwrap_or(Duration::from_millis(50));
+        match rx.recv_timeout(timeout) {
+            Ok(Msg::Req(req)) => {
+                handle_req(req, &mut batcher, &mut metrics);
+                // Opportunistically drain queued messages before
+                // flushing, so bursts batch well.
+                while let Ok(msg) = rx.try_recv() {
+                    match msg {
+                        Msg::Req(req) => handle_req(req, &mut batcher, &mut metrics),
+                        Msg::Shutdown => {
+                            running = false;
+                            break;
+                        }
+                    }
+                }
+            }
+            Ok(Msg::Shutdown) => running = false,
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => running = false,
+        }
+        let now = Instant::now();
+        for batch in
+            batcher.flush_ready(now, |k| router.catalog().rows_batch_sizes(k.op, k.dtype, k.n))
+        {
+            exec_batch(&runtime, &gate, &router, batch, &mut metrics);
+        }
+    }
+
+    // Drain: everything still queued executes unbatched.
+    for req in batcher.drain_all() {
+        match router.route(req.shape_key()) {
+            Route::Full { artifact } => exec_full(&runtime, &gate, &artifact, req, &mut metrics),
+            _ => exec_host(&planner, &gate, req, &mut metrics),
+        }
+    }
+    metrics
+}
+
+fn respond(
+    gate: &Gate,
+    req: Request,
+    value: Result<HostScalar, String>,
+    path: ExecPath,
+    metrics: &mut Metrics,
+) {
+    let latency = req.t_enqueue.elapsed().as_secs_f64();
+    let ok = value.is_ok();
+    let elements = req.payload.len();
+    let _ = req.reply.send(Response { id: req.id, value, path, latency_s: latency });
+    gate.release_transferred();
+    metrics.record(path, latency, ok, elements);
+}
+
+fn exec_full(runtime: &Runtime, gate: &Gate, artifact: &str, req: Request, metrics: &mut Metrics) {
+    let result = runtime
+        .catalog()
+        .get(artifact)
+        .cloned()
+        .ok_or_else(|| anyhow!("artifact vanished"))
+        .and_then(|meta| runtime.reduce_full(&meta, &req.payload));
+    respond(gate, req, result.map_err(|e| format!("{e:#}")), ExecPath::PjrtFull, metrics);
+}
+
+fn exec_host(planner: &Planner, gate: &Gate, req: Request, metrics: &mut Metrics) {
+    let value = match &req.payload {
+        HostVec::F32(v) => HostScalar::F32(planner.run_f32(v, req.op)),
+        HostVec::I32(v) => HostScalar::I32(planner.run_i32(v, req.op)),
+    };
+    respond(gate, req, Ok(value), ExecPath::Host, metrics);
+}
+
+fn identity_payload(op: Op, dtype: Dtype, n: usize) -> HostVec {
+    match dtype {
+        Dtype::F32 => HostVec::F32(vec![<f32 as Element>::identity(op); n]),
+        Dtype::I32 => HostVec::I32(vec![<i32 as Element>::identity(op); n]),
+    }
+}
+
+fn exec_batch(
+    runtime: &Runtime,
+    gate: &Gate,
+    router: &Router,
+    batch: FlushedBatch,
+    metrics: &mut Metrics,
+) {
+    let key = batch.key;
+    let exec_rows = batch.exec_rows;
+    let useful = batch.requests.len();
+    debug_assert!(useful <= exec_rows);
+
+    let Some(meta) = router.catalog().find_rows(key.op, key.dtype, exec_rows, key.n).cloned()
+    else {
+        for req in batch.requests {
+            respond(
+                gate,
+                req,
+                Err(format!("no rows artifact for {key} x{exec_rows}")),
+                ExecPath::PjrtBatched { batch: exec_rows },
+                metrics,
+            );
+        }
+        return;
+    };
+
+    // Stack payloads (+ identity padding up to exec_rows).
+    let mut stacked = identity_payload(key.op, key.dtype, 0);
+    for req in &batch.requests {
+        let _ = stacked.extend(&req.payload);
+    }
+    for _ in useful..exec_rows {
+        let _ = stacked.extend(&identity_payload(key.op, key.dtype, key.n));
+    }
+
+    metrics.record_batch(exec_rows, useful);
+    match runtime.reduce_rows(&meta, &stacked) {
+        Ok(values) => {
+            let path = ExecPath::PjrtBatched { batch: exec_rows };
+            for (i, req) in batch.requests.into_iter().enumerate() {
+                let value = match (&values, key.dtype) {
+                    (HostVec::F32(v), Dtype::F32) => Ok(HostScalar::F32(v[i])),
+                    (HostVec::I32(v), Dtype::I32) => Ok(HostScalar::I32(v[i])),
+                    _ => Err("dtype mismatch in batch result".into()),
+                };
+                respond(gate, req, value, path, metrics);
+            }
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            for req in batch.requests {
+                respond(
+                    gate,
+                    req,
+                    Err(msg.clone()),
+                    ExecPath::PjrtBatched { batch: exec_rows },
+                    metrics,
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------
+// Trace driver: the end-to-end serving experiment (examples/ and the
+// `parred serve` subcommand).
+// ---------------------------------------------------------------
+
+/// Synthetic request-trace configuration.
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    pub requests: usize,
+    pub payload_n: usize,
+    pub seed: u64,
+    /// Mean inter-arrival gap (exponential), microseconds.
+    pub mean_gap_us: f64,
+}
+
+/// Run a synthetic trace against a fresh service; every response is
+/// verified against a host oracle. Returns the formatted report.
+pub fn run_trace(cfg: ServiceConfig, trace: TraceConfig) -> Result<String> {
+    let svc = Service::start(cfg.clone())?;
+    let mut rng = Rng::new(trace.seed);
+    let t0 = Instant::now();
+    let mut pending = Vec::with_capacity(trace.requests);
+    let mut expected = Vec::with_capacity(trace.requests);
+
+    for i in 0..trace.requests {
+        // 80% sum, 20% max — both have rows artifacts at 65536.
+        let op = if rng.below(5) == 0 { Op::Max } else { Op::Sum };
+        let data = rng.f32_vec(trace.payload_n, -1.0, 1.0);
+        let want: f64 = match op {
+            Op::Sum => data.iter().map(|&x| x as f64).sum(),
+            Op::Max => data.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64,
+            _ => unreachable!(),
+        };
+        expected.push((i, op, want));
+        pending.push(svc.submit(op, HostVec::F32(data))?);
+        let gap = rng.exponential(trace.mean_gap_us) as u64;
+        if gap > 0 && i + 1 < trace.requests {
+            std::thread::sleep(Duration::from_micros(gap.min(5_000)));
+        }
+    }
+
+    // Await all responses and validate numerics end-to-end.
+    let mut client_lat = Histogram::new();
+    let mut batched = 0usize;
+    for (rx, (i, op, want)) in pending.into_iter().zip(expected) {
+        let resp = rx
+            .recv_timeout(Duration::from_secs(60))
+            .map_err(|_| anyhow!("request {i} timed out"))?;
+        let got = resp.value.map_err(|e| anyhow!("request {i} failed: {e}"))?;
+        let tol = 1e-3 * (want.abs().max(1.0));
+        anyhow::ensure!(
+            (got.as_f64() - want).abs() <= tol,
+            "request {i} ({op}): got {got} want {want}"
+        );
+        client_lat.record(resp.latency_s);
+        if matches!(resp.path, ExecPath::PjrtBatched { .. }) {
+            batched += 1;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    let metrics = svc.shutdown();
+    let mut report = String::new();
+    report.push_str(&format!(
+        "=== serve trace: {} requests x {} f32, window {:?} ===\n",
+        trace.requests, trace.payload_n, cfg.batch_window
+    ));
+    report.push_str(&format!(
+        "wall={:.3}s  client throughput={:.0} req/s  batched={}/{}\n",
+        wall,
+        trace.requests as f64 / wall,
+        batched,
+        trace.requests
+    ));
+    report.push_str(&format!("client latency: {}\n", client_lat.summary()));
+    report.push_str(&metrics.report());
+    report.push_str("all responses numerically verified against host oracle\n");
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_payloads() {
+        let p = identity_payload(Op::Sum, Dtype::F32, 3);
+        assert_eq!(p, HostVec::F32(vec![0.0; 3]));
+        let p = identity_payload(Op::Min, Dtype::I32, 2);
+        assert_eq!(p, HostVec::I32(vec![i32::MAX; 2]));
+        let p = identity_payload(Op::Max, Dtype::F32, 1);
+        assert_eq!(p, HostVec::F32(vec![f32::NEG_INFINITY]));
+    }
+}

@@ -1,0 +1,86 @@
+//! Global-memory coalescing model.
+//!
+//! A warp's global access is decomposed into aligned segments of
+//! `coalesce_segment_bytes`; each distinct segment touched by an
+//! active lane becomes one DRAM transaction. Fully-coalesced
+//! (sequential-addressing) warps touch `warp_size * 4 / segment`
+//! segments; strided or scattered patterns touch up to one segment
+//! per lane — this is where Catanzaro's interleaved persistent loop
+//! and Harris' "sequential addressing" win their bandwidth.
+
+/// Count the distinct aligned segments touched by element-index
+/// addresses (4-byte elements).
+pub fn transactions(addrs: &[u64], segment_bytes: u32) -> u32 {
+    if addrs.is_empty() {
+        return 0;
+    }
+    let elems_per_seg = (segment_bytes / 4).max(1) as u64;
+    // Warp sizes are <= 64: a tiny sort dominates a HashSet here.
+    let mut segs: [u64; 64] = [u64::MAX; 64];
+    let mut n = 0usize;
+    'outer: for &a in addrs.iter().take(64) {
+        let s = a / elems_per_seg;
+        for &e in &segs[..n] {
+            if e == s {
+                continue 'outer;
+            }
+        }
+        segs[n] = s;
+        n += 1;
+    }
+    n as u32
+}
+
+/// Bytes moved by those transactions.
+pub fn bytes(addrs: &[u64], segment_bytes: u32) -> u64 {
+    transactions(addrs, segment_bytes) as u64 * segment_bytes as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn coalesced_warp_is_minimal() {
+        // 32 lanes, sequential 4-byte elements, 64-byte segments:
+        // 32*4/64 = 2 transactions.
+        let addrs: Vec<u64> = (0..32).collect();
+        assert_eq!(transactions(&addrs, 64), 2);
+        assert_eq!(bytes(&addrs, 64), 128);
+    }
+
+    #[test]
+    fn strided_warp_explodes() {
+        // Stride 32 elements = 128 bytes: every lane its own segment.
+        let addrs: Vec<u64> = (0..32).map(|i| i * 32).collect();
+        assert_eq!(transactions(&addrs, 64), 32);
+    }
+
+    #[test]
+    fn same_address_broadcast() {
+        let addrs = vec![100u64; 32];
+        assert_eq!(transactions(&addrs, 64), 1);
+    }
+
+    #[test]
+    fn alignment_matters() {
+        // 16 sequential elements starting at a segment boundary: 1
+        // transaction; straddling it: 2.
+        let aligned: Vec<u64> = (0..16).collect();
+        let straddle: Vec<u64> = (8..24).collect();
+        assert_eq!(transactions(&aligned, 64), 1);
+        assert_eq!(transactions(&straddle, 64), 2);
+    }
+
+    #[test]
+    fn empty() {
+        assert_eq!(transactions(&[], 64), 0);
+        assert_eq!(bytes(&[], 64), 0);
+    }
+
+    #[test]
+    fn wavefront64() {
+        let addrs: Vec<u64> = (0..64).collect();
+        assert_eq!(transactions(&addrs, 64), 4);
+    }
+}

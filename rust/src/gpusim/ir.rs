@@ -1,0 +1,238 @@
+//! The kernel IR: a minimal SIMT instruction set sufficient to express
+//! every reduction kernel in the paper's lineage (Harris K1–K7,
+//! Catanzaro two-stage, Luitjens shuffle, and the paper's unrolled
+//! branch-free approach).
+//!
+//! Registers are per-thread `f64` slots; integer instructions operate
+//! on the truncated integer value (exact for |v| < 2^53, far beyond
+//! any index or i32 payload in use). This single register file keeps
+//! the interpreter simple while remaining numerically exact for i32
+//! data and faithful-to-f32 for float data (combines are done in f64
+//! and rounded by the harness when comparing to f32 oracles).
+
+/// Register index (per-thread register file).
+pub type Reg = u8;
+
+/// Number of registers in each thread's file.
+pub const NREGS: usize = 32;
+
+/// Right-hand operand: register or immediate.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Rval {
+    R(Reg),
+    Imm(f64),
+}
+
+/// Special (read-only) per-thread values.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Sreg {
+    /// Thread index within the block (`get_local_id`).
+    Tid,
+    /// Block index within the grid (`get_group_id`).
+    Bid,
+    /// Threads per block (`get_local_size`).
+    BlockDim,
+    /// Blocks in the grid (`get_num_groups`).
+    GridDim,
+    /// `Bid * BlockDim + Tid` (`get_global_id`).
+    GlobalId,
+    /// `BlockDim * GridDim` (`get_global_size`) — the paper's GS.
+    GlobalSize,
+    /// Lane within the warp (`Tid % warp_size`).
+    Lane,
+}
+
+/// Combiner selector baked into `Comb` instructions by the builder.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CombOp {
+    Add,
+    Mul,
+    Max,
+    Min,
+}
+
+impl CombOp {
+    #[inline]
+    pub fn apply(self, a: f64, b: f64) -> f64 {
+        match self {
+            CombOp::Add => a + b,
+            CombOp::Mul => a * b,
+            CombOp::Max => a.max(b),
+            CombOp::Min => a.min(b),
+        }
+    }
+
+    pub fn identity(self) -> f64 {
+        match self {
+            CombOp::Add => 0.0,
+            CombOp::Mul => 1.0,
+            CombOp::Max => f64::NEG_INFINITY,
+            CombOp::Min => f64::INFINITY,
+        }
+    }
+}
+
+impl From<crate::reduce::Op> for CombOp {
+    fn from(op: crate::reduce::Op) -> Self {
+        match op {
+            crate::reduce::Op::Sum => CombOp::Add,
+            crate::reduce::Op::Prod => CombOp::Mul,
+            crate::reduce::Op::Max => CombOp::Max,
+            crate::reduce::Op::Min => CombOp::Min,
+        }
+    }
+}
+
+/// One SIMT instruction. `dst` always first.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Instr {
+    /// `dst = src`.
+    Mov(Reg, Rval),
+    /// `dst = sreg`.
+    Special(Reg, Sreg),
+    /// Integer/float add, sub, mul (1 issue).
+    Add(Reg, Reg, Rval),
+    Sub(Reg, Reg, Rval),
+    Mul(Reg, Reg, Rval),
+    /// Integer divide / remainder — expensive (see
+    /// `DeviceConfig::mod_extra_cycles`); Harris K1 pays this.
+    Div(Reg, Reg, Rval),
+    Rem(Reg, Reg, Rval),
+    /// Integer shifts (`>>`/`<<` on the truncated value).
+    Shr(Reg, Reg, Rval),
+    Shl(Reg, Reg, Rval),
+    /// Bitwise and (used for power-of-two modulo in tuned kernels).
+    And(Reg, Reg, Rval),
+    /// Comparisons producing 0/1 — the paper's algebraic expressions.
+    SetLt(Reg, Reg, Rval),
+    SetGe(Reg, Reg, Rval),
+    SetEq(Reg, Reg, Rval),
+    /// Combiner op baked by the builder (sum/prod/min/max).
+    Comb(CombOp, Reg, Reg, Rval),
+    /// Global memory: `dst = buf[addr]` / `buf[addr] = src`.
+    /// Address is an element index taken from a register.
+    LdG(Reg, u8, Reg),
+    StG(u8, Reg, Reg),
+    /// Shared (local) memory: `dst = smem[addr]` / `smem[addr] = src`.
+    LdS(Reg, Reg),
+    StS(Reg, Reg),
+    /// Warp shuffle-down (Luitjens): `dst = lane[lane_id + delta].src`,
+    /// own value if out of range. No smem, no barrier.
+    ShflDown(Reg, Reg, u32),
+    /// Block-wide barrier (`__syncthreads` / CLK_LOCAL_MEM_FENCE).
+    Bar,
+    /// Branches: conditional on a register being zero / non-zero.
+    BraZ(Reg, usize),
+    BraNZ(Reg, usize),
+    Jmp(usize),
+    /// Thread completes.
+    Halt,
+}
+
+/// A complete device program.
+#[derive(Debug, Clone)]
+pub struct Program {
+    pub name: String,
+    pub code: Vec<Instr>,
+    /// Shared-memory words required per block.
+    pub smem_words: u32,
+    /// Execute the whole block in instruction lockstep (one scheduling
+    /// group spanning all warps). This models the machine the paper's
+    /// barrier-free tree (§3, Listing 6) implicitly assumes — "all
+    /// work-items are always in the same step of computation". Issue,
+    /// conflict and coalescing costs are still charged per hardware
+    /// warp (see `warp::issue`), so lockstep changes *scheduling*
+    /// semantics, not the cost model. DESIGN.md §Soundness discusses
+    /// why the paper needs this assumption.
+    pub lockstep_block: bool,
+}
+
+impl Program {
+    /// Validate static properties: jump targets in range, registers in
+    /// range, a Halt reachable at the end.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        use anyhow::bail;
+        let n = self.code.len();
+        if n == 0 {
+            bail!("empty program {}", self.name);
+        }
+        let check_target = |pc: usize, t: usize| -> anyhow::Result<()> {
+            if t > n {
+                bail!("{}: jump target {t} out of range at pc {pc}", self.name);
+            }
+            Ok(())
+        };
+        for (pc, ins) in self.code.iter().enumerate() {
+            match ins {
+                Instr::BraZ(_, t) | Instr::BraNZ(_, t) | Instr::Jmp(t) => check_target(pc, *t)?,
+                _ => {}
+            }
+        }
+        if !self.code.iter().any(|i| matches!(i, Instr::Halt)) {
+            bail!("{}: no Halt instruction", self.name);
+        }
+        Ok(())
+    }
+
+    /// Static instruction count (code size; the space side of the
+    /// unrolling space-time tradeoff, paper §2.4).
+    pub fn len(&self) -> usize {
+        self.code.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.code.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comb_ops() {
+        assert_eq!(CombOp::Add.apply(2.0, 3.0), 5.0);
+        assert_eq!(CombOp::Mul.apply(2.0, 3.0), 6.0);
+        assert_eq!(CombOp::Max.apply(2.0, 3.0), 3.0);
+        assert_eq!(CombOp::Min.apply(2.0, 3.0), 2.0);
+        for op in [CombOp::Add, CombOp::Mul, CombOp::Max, CombOp::Min] {
+            assert_eq!(op.apply(op.identity(), 7.5), 7.5);
+        }
+    }
+
+    #[test]
+    fn from_reduce_op() {
+        assert_eq!(CombOp::from(crate::reduce::Op::Sum), CombOp::Add);
+        assert_eq!(CombOp::from(crate::reduce::Op::Min), CombOp::Min);
+    }
+
+    #[test]
+    fn validation_catches_bad_programs() {
+        let empty = Program { name: "e".into(), code: vec![], smem_words: 0, lockstep_block: false };
+        assert!(empty.validate().is_err());
+
+        let no_halt = Program {
+            name: "nh".into(),
+            code: vec![Instr::Mov(0, Rval::Imm(1.0))],
+            smem_words: 0,
+            lockstep_block: false,
+        };
+        assert!(no_halt.validate().is_err());
+
+        let bad_jump = Program {
+            name: "bj".into(),
+            code: vec![Instr::Jmp(99), Instr::Halt],
+            smem_words: 0,
+            lockstep_block: false,
+        };
+        assert!(bad_jump.validate().is_err());
+
+        let ok = Program {
+            name: "ok".into(),
+            code: vec![Instr::Mov(0, Rval::Imm(1.0)), Instr::Halt],
+            smem_words: 0,
+            lockstep_block: false,
+        };
+        assert!(ok.validate().is_ok());
+    }
+}

@@ -1,0 +1,346 @@
+//! Device models: the machine parameters the paper's evaluation
+//! depends on, for the three GPUs it references.
+//!
+//! The simulator is *transaction-level*, not cycle-accurate: it counts
+//! warp instruction issues, shared-memory bank conflicts, DRAM
+//! transactions (coalescing-aware) and barriers, then converts them to
+//! time through these parameters. That is exactly the level at which
+//! Harris' Table 1 reasons ("memory bandwidth usage", "divergent
+//! warps", "bank conflicts"), so the paper's effects emerge from the
+//! model rather than being hard-coded.
+
+/// Static description of a simulated GPU.
+#[derive(Debug, Clone)]
+pub struct DeviceConfig {
+    pub name: &'static str,
+    /// Streaming multiprocessors (compute units on AMD).
+    pub num_sms: u32,
+    /// Threads per warp (NVidia) / wavefront (AMD).
+    pub warp_size: u32,
+    /// Max resident warps per SM (occupancy ceiling).
+    pub max_warps_per_sm: u32,
+    /// Max threads per block / work-group.
+    pub max_block_threads: u32,
+    /// Shared-memory banks (conflict granularity).
+    pub smem_banks: u32,
+    /// Shared memory per block, in 4-byte words.
+    pub smem_words_per_block: u32,
+    /// Issue cost of one warp instruction, in core cycles
+    /// (warp_size / ALU lanes per SM: G80 = 32/8 = 4).
+    pub issue_cycles: u32,
+    /// Extra cycles for integer `%` and `/` (multi-instruction
+    /// sequences on real hardware; K1's divergence fix uses them).
+    pub mod_extra_cycles: u32,
+    /// Cycles charged per barrier release per warp.
+    pub barrier_cycles: u32,
+    /// Core (shader) clock, GHz.
+    pub core_clock_ghz: f64,
+    /// Peak DRAM bandwidth, GB/s.
+    pub mem_bandwidth_gbps: f64,
+    /// DRAM round-trip latency in core cycles.
+    pub dram_latency_cycles: u32,
+    /// Coalescing segment size in bytes (memory transaction width).
+    pub coalesce_segment_bytes: u32,
+    /// Fixed kernel-launch overhead, microseconds.
+    pub launch_overhead_us: f64,
+    /// Fraction of peak DRAM bandwidth achievable by real access
+    /// streams (DRAM never sustains 100%; Harris' best kernel reaches
+    /// ~73% of the G80's theoretical peak).
+    pub bw_efficiency: f64,
+    /// Per-load pipelined service time within a dependency region,
+    /// core cycles (the `s` of the chain model `R*L + loads*s`).
+    pub load_service_cycles: u32,
+    /// Waves (warps) per SM that a persistent-threads launch keeps
+    /// resident "without switching" — the paper's GS policy (§2.3).
+    pub persistent_waves_per_sm: u32,
+}
+
+impl DeviceConfig {
+    /// NVidia G80 (GeForce 8800 GTX) — Harris' Table 1 testbed.
+    /// 384-bit @ 900 MHz DDR => 86.4 GB/s (paper §2.1).
+    pub fn g80() -> Self {
+        DeviceConfig {
+            name: "G80",
+            num_sms: 16,
+            warp_size: 32,
+            max_warps_per_sm: 24, // 768 threads
+            max_block_threads: 512,
+            smem_banks: 16,
+            smem_words_per_block: 4096, // 16 KiB
+            issue_cycles: 4,            // 8 SPs per SM
+            mod_extra_cycles: 140,      // integer % is emulated on G80
+            barrier_cycles: 8,
+            core_clock_ghz: 1.35,
+            mem_bandwidth_gbps: 86.4,
+            dram_latency_cycles: 450,
+            coalesce_segment_bytes: 64,
+            launch_overhead_us: 7.0,
+            bw_efficiency: 0.75,
+            load_service_cycles: 200,
+            persistent_waves_per_sm: 8,
+        }
+    }
+
+    /// NVidia Tesla C2075 (Fermi) — the paper's Table 3 testbed.
+    /// 448 cores / 14 SMs, shader 1.15 GHz, 384-bit @ 3.0 GHz
+    /// effective => 144 GB/s.
+    pub fn tesla_c2075() -> Self {
+        DeviceConfig {
+            name: "TeslaC2075",
+            num_sms: 14,
+            warp_size: 32,
+            max_warps_per_sm: 48,
+            max_block_threads: 1024,
+            smem_banks: 32,
+            smem_words_per_block: 12288, // 48 KiB
+            issue_cycles: 1,             // 32 lanes per scheduler pair
+            mod_extra_cycles: 60,
+            barrier_cycles: 4,
+            core_clock_ghz: 1.15,
+            mem_bandwidth_gbps: 144.0,
+            dram_latency_cycles: 550,
+            coalesce_segment_bytes: 128,
+            launch_overhead_us: 5.0,
+            bw_efficiency: 0.80,
+            load_service_cycles: 200,
+            persistent_waves_per_sm: 32,
+        }
+    }
+
+    /// AMD GCN-class OpenCL device — the paper's Table 2 testbed.
+    ///
+    /// The paper never names the card, but Table 2's F=1 row reports
+    /// 88.6 GB/s at 26.63% usage, implying ~332.7 GB/s peak — an
+    /// R9-290-class GCN part (wavefront 64, 32 banks).
+    pub fn amd_gcn() -> Self {
+        DeviceConfig {
+            name: "AMD-GCN",
+            num_sms: 40, // compute units
+            warp_size: 64,
+            max_warps_per_sm: 40,
+            max_block_threads: 256,
+            smem_banks: 32,
+            smem_words_per_block: 16384, // 64 KiB LDS
+            issue_cycles: 1,             // 4x SIMD16 issue in parallel
+            mod_extra_cycles: 40,
+            barrier_cycles: 4,
+            core_clock_ghz: 0.947,
+            mem_bandwidth_gbps: 332.7,
+            dram_latency_cycles: 500,
+            coalesce_segment_bytes: 64,
+            launch_overhead_us: 9.0,
+            bw_efficiency: 0.80,
+            load_service_cycles: 150,
+            persistent_waves_per_sm: 6,
+        }
+    }
+
+    /// All presets (for CLI listing and exhaustive tests).
+    pub fn presets() -> Vec<DeviceConfig> {
+        vec![Self::g80(), Self::tesla_c2075(), Self::amd_gcn()]
+    }
+
+    /// Look up a preset by (case-insensitive) name.
+    pub fn by_name(name: &str) -> Option<DeviceConfig> {
+        Self::presets()
+            .into_iter()
+            .find(|c| c.name.eq_ignore_ascii_case(name))
+    }
+
+    /// Max resident *threads* per SM.
+    pub fn max_threads_per_sm(&self) -> u32 {
+        self.max_warps_per_sm * self.warp_size
+    }
+
+    /// The paper's "GS": total work-items a persistent-threads launch
+    /// keeps resident "without switching" (§2.3) — waves_per_sm warps
+    /// on every SM, rounded down to whole blocks.
+    pub fn global_size(&self, block_threads: u32) -> u32 {
+        let threads = self.num_sms
+            * self.warp_size
+            * self.persistent_waves_per_sm.min(self.max_warps_per_sm);
+        let blocks = (threads / block_threads.max(1)).max(1);
+        blocks * block_threads
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn g80_bandwidth_matches_paper() {
+        // Paper §2.1: 384 * 1800 / 8 = 86.4 GB/s.
+        assert!((DeviceConfig::g80().mem_bandwidth_gbps - 86.4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn amd_peak_consistent_with_table2() {
+        // Table 2 row F=1: 88.61 GB/s == 26.63% of peak.
+        let peak = DeviceConfig::amd_gcn().mem_bandwidth_gbps;
+        let implied = 88.6094002722 / 0.2663;
+        assert!((peak - implied).abs() / implied < 0.01, "{peak} vs {implied}");
+    }
+
+    #[test]
+    fn presets_resolvable_by_name() {
+        for p in DeviceConfig::presets() {
+            assert_eq!(DeviceConfig::by_name(p.name).unwrap().name, p.name);
+            assert_eq!(DeviceConfig::by_name(&p.name.to_lowercase()).unwrap().name, p.name);
+        }
+        assert!(DeviceConfig::by_name("H100").is_none());
+    }
+
+    #[test]
+    fn global_size_is_whole_blocks_of_resident_waves() {
+        let g = DeviceConfig::g80();
+        // 8 waves x 32 lanes x 16 SMs = 4096 threads.
+        assert_eq!(g.global_size(256), 4096);
+        assert_eq!(g.global_size(256) % 256, 0);
+        let a = DeviceConfig::amd_gcn();
+        // 6 waves x 64 lanes x 40 CUs = 15360 threads.
+        assert_eq!(a.global_size(256), 15360);
+    }
+
+    #[test]
+    fn sane_parameters() {
+        for c in DeviceConfig::presets() {
+            assert!(c.warp_size.is_power_of_two());
+            assert!(c.smem_banks.is_power_of_two());
+            assert!(c.mem_bandwidth_gbps > 0.0 && c.core_clock_ghz > 0.0);
+            assert!(c.max_block_threads >= c.warp_size);
+            assert!(c.bw_efficiency > 0.5 && c.bw_efficiency <= 1.0);
+            assert!(c.persistent_waves_per_sm >= 1);
+        }
+    }
+}
+
+impl DeviceConfig {
+    /// Load a custom device model from a JSON file (the `parred sim
+    /// --device-file` path), so users can model their own GPU without
+    /// recompiling. Unknown fields are rejected; missing fields fall
+    /// back to the AMD-GCN preset's values.
+    ///
+    /// ```json
+    /// { "name": "MyGPU", "num_sms": 20, "warp_size": 32,
+    ///   "mem_bandwidth_gbps": 448.0, "core_clock_ghz": 1.5 }
+    /// ```
+    pub fn from_json(text: &str) -> anyhow::Result<DeviceConfig> {
+        use crate::util::json::Json;
+        let doc = Json::parse(text)?;
+        let obj = doc.as_obj()?;
+        let base = DeviceConfig::amd_gcn();
+        let known = [
+            "name", "num_sms", "warp_size", "max_warps_per_sm",
+            "max_block_threads", "smem_banks", "smem_words_per_block",
+            "issue_cycles", "mod_extra_cycles", "barrier_cycles",
+            "core_clock_ghz", "mem_bandwidth_gbps", "dram_latency_cycles",
+            "coalesce_segment_bytes", "launch_overhead_us",
+            "bw_efficiency", "load_service_cycles", "persistent_waves_per_sm",
+        ];
+        for key in obj.keys() {
+            if !known.contains(&key.as_str()) {
+                anyhow::bail!("unknown device field {key:?}");
+            }
+        }
+        let u = |key: &str, dflt: u32| -> anyhow::Result<u32> {
+            Ok(doc.opt_field(key).map(|v| v.as_usize()).transpose()?.map_or(dflt, |v| v as u32))
+        };
+        let f = |key: &str, dflt: f64| -> anyhow::Result<f64> {
+            Ok(doc.opt_field(key).map(|v| v.as_f64()).transpose()?.unwrap_or(dflt))
+        };
+        let name: &'static str = match doc.opt_field("name") {
+            // Leak is fine: device configs are created once per run.
+            Some(v) => Box::leak(v.as_str()?.to_string().into_boxed_str()),
+            None => "custom",
+        };
+        let cfg = DeviceConfig {
+            name,
+            num_sms: u("num_sms", base.num_sms)?,
+            warp_size: u("warp_size", base.warp_size)?,
+            max_warps_per_sm: u("max_warps_per_sm", base.max_warps_per_sm)?,
+            max_block_threads: u("max_block_threads", base.max_block_threads)?,
+            smem_banks: u("smem_banks", base.smem_banks)?,
+            smem_words_per_block: u("smem_words_per_block", base.smem_words_per_block)?,
+            issue_cycles: u("issue_cycles", base.issue_cycles)?,
+            mod_extra_cycles: u("mod_extra_cycles", base.mod_extra_cycles)?,
+            barrier_cycles: u("barrier_cycles", base.barrier_cycles)?,
+            core_clock_ghz: f("core_clock_ghz", base.core_clock_ghz)?,
+            mem_bandwidth_gbps: f("mem_bandwidth_gbps", base.mem_bandwidth_gbps)?,
+            dram_latency_cycles: u("dram_latency_cycles", base.dram_latency_cycles)?,
+            coalesce_segment_bytes: u("coalesce_segment_bytes", base.coalesce_segment_bytes)?,
+            launch_overhead_us: f("launch_overhead_us", base.launch_overhead_us)?,
+            bw_efficiency: f("bw_efficiency", base.bw_efficiency)?,
+            load_service_cycles: u("load_service_cycles", base.load_service_cycles)?,
+            persistent_waves_per_sm: u("persistent_waves_per_sm", base.persistent_waves_per_sm)?,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Sanity-check parameters (shared by presets tests and file loads).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.warp_size.is_power_of_two(), "warp_size must be a power of two");
+        anyhow::ensure!(self.smem_banks.is_power_of_two(), "smem_banks must be a power of two");
+        anyhow::ensure!(self.num_sms >= 1, "need at least one SM");
+        anyhow::ensure!(self.max_block_threads >= self.warp_size, "block must fit a warp");
+        anyhow::ensure!(self.core_clock_ghz > 0.0 && self.mem_bandwidth_gbps > 0.0, "clocks/bandwidth must be positive");
+        anyhow::ensure!(self.bw_efficiency > 0.0 && self.bw_efficiency <= 1.0, "bw_efficiency in (0, 1]");
+        anyhow::ensure!(self.persistent_waves_per_sm >= 1, "need at least one resident wave");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod json_tests {
+    use super::*;
+
+    #[test]
+    fn minimal_override() {
+        let cfg = DeviceConfig::from_json(
+            r#"{"name": "MyGPU", "num_sms": 20, "mem_bandwidth_gbps": 448.0}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.name, "MyGPU");
+        assert_eq!(cfg.num_sms, 20);
+        assert_eq!(cfg.mem_bandwidth_gbps, 448.0);
+        // Unspecified fields inherit the AMD base.
+        assert_eq!(cfg.warp_size, DeviceConfig::amd_gcn().warp_size);
+    }
+
+    #[test]
+    fn unknown_field_rejected() {
+        assert!(DeviceConfig::from_json(r#"{"cuda_cores": 1000}"#).is_err());
+    }
+
+    #[test]
+    fn invalid_values_rejected() {
+        assert!(DeviceConfig::from_json(r#"{"warp_size": 33}"#).is_err());
+        assert!(DeviceConfig::from_json(r#"{"num_sms": 0}"#).is_err());
+        assert!(DeviceConfig::from_json(r#"{"bw_efficiency": 1.5}"#).is_err());
+    }
+
+    #[test]
+    fn presets_pass_validation() {
+        for p in DeviceConfig::presets() {
+            p.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn custom_device_runs_a_kernel() {
+        let cfg = DeviceConfig::from_json(r#"{"name": "Tiny", "num_sms": 2}"#).unwrap();
+        let mut gpu = crate::gpusim::Gpu::new(cfg);
+        let data: Vec<f64> = (0..10_000).map(|i| (i % 13) as f64).collect();
+        let want: f64 = data.iter().sum();
+        let out = crate::kernels::drivers::jradi_reduce(
+            &mut gpu,
+            &data,
+            crate::gpusim::CombOp::Add,
+            8,
+            128,
+        )
+        .unwrap();
+        assert_eq!(out.value, want);
+    }
+}

@@ -1,0 +1,33 @@
+//! `gpusim` — the SIMT GPU simulator substrate.
+//!
+//! The paper's evaluation (Tables 1–3, Figures 3–4) runs on GPU
+//! hardware this environment does not have. Per DESIGN.md §2, this
+//! module is the substitution: a transaction-level SIMT simulator that
+//! models the four mechanisms the paper's results are *caused by* —
+//!
+//! 1. warp-lockstep execution with **thread divergence** (min-PC
+//!    serialization, [`warp`]),
+//! 2. **shared-memory bank conflicts** ([`smem`]),
+//! 3. **DRAM coalescing** and peak-bandwidth rooflines ([`dram`],
+//!    [`timing`]),
+//! 4. **occupancy-bounded latency hiding** and per-launch overhead
+//!    ([`timing`]),
+//!
+//! so the relative standings of the nine kernels (Harris K1–K7,
+//! Catanzaro, and the paper's approach, [`crate::kernels`]) emerge
+//! from the machine model rather than from hard-coded numbers.
+//! Functional semantics are exact and tested against host oracles.
+
+pub mod dram;
+pub mod exec;
+pub mod ir;
+pub mod machine;
+pub mod smem;
+pub mod timing;
+pub mod trace;
+pub mod warp;
+
+pub use exec::{BufId, Gpu, LaunchConfig};
+pub use ir::{CombOp, Instr, Program, Rval, Sreg};
+pub use machine::DeviceConfig;
+pub use trace::{KernelStats, RunStats};

@@ -1,0 +1,82 @@
+//! Shared-memory bank-conflict model.
+//!
+//! Shared memory is divided into `banks` word-interleaved banks; a
+//! warp access is serviced in one pass unless several lanes hit
+//! *different words in the same bank*, in which case the access is
+//! replayed once per extra word (Harris' Kernel 1→2 transition is
+//! exactly about this). Lanes reading the *same* word broadcast.
+
+/// Conflict degree of one warp access: the maximum number of distinct
+/// word addresses mapped to a single bank (>= 1 for any non-empty
+/// access). An access costs `degree` passes.
+pub fn conflict_degree(addrs: &[u32], banks: u32) -> u32 {
+    if addrs.is_empty() {
+        return 1;
+    }
+    debug_assert!(banks.is_power_of_two());
+    // Exact: dedupe words, then count words per bank. Warp sizes are
+    // <= 64, so a stack sort beats any hash table.
+    let mut words: [u32; 64] = [0; 64];
+    let n = addrs.len().min(64);
+    words[..n].copy_from_slice(&addrs[..n]);
+    let words = &mut words[..n];
+    words.sort_unstable();
+    let mut counts = [0u32; 64];
+    let mut prev = u32::MAX;
+    for &w in words.iter() {
+        if w == prev {
+            continue; // same word: broadcast, one pass
+        }
+        prev = w;
+        counts[(w & (banks - 1)) as usize] += 1;
+    }
+    counts.iter().copied().max().unwrap_or(1).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conflict_free_sequential() {
+        // Lane i -> word i: every lane its own bank (16 banks, 16 lanes).
+        let addrs: Vec<u32> = (0..16).collect();
+        assert_eq!(conflict_degree(&addrs, 16), 1);
+    }
+
+    #[test]
+    fn broadcast_same_word() {
+        let addrs = vec![5u32; 32];
+        assert_eq!(conflict_degree(&addrs, 16), 1);
+    }
+
+    #[test]
+    fn stride_two_halves_banks() {
+        // Lane i -> word 2*i on 16 banks: words {0,2,..30} map to banks
+        // {0,2,..14}; two distinct words per bank -> 2-way conflict.
+        let addrs: Vec<u32> = (0..16).map(|i| 2 * i).collect();
+        assert_eq!(conflict_degree(&addrs, 16), 2);
+    }
+
+    #[test]
+    fn stride_equal_banks_fully_serializes() {
+        // Lane i -> word 16*i on 16 banks: all in bank 0 -> 16-way.
+        let addrs: Vec<u32> = (0..16).map(|i| 16 * i).collect();
+        assert_eq!(conflict_degree(&addrs, 16), 16);
+    }
+
+    #[test]
+    fn interleaved_tree_conflicts_match_harris() {
+        // Harris K1/K2 inner loop, offset s: active lane i accesses
+        // words 2*s*i and 2*s*i+s. For s=8, 16 banks: addresses
+        // 0,16,32,... all bank 0 -> heavy conflict.
+        let s = 8u32;
+        let addrs: Vec<u32> = (0..8).flat_map(|i| [2 * s * i, 2 * s * i + s]).collect();
+        assert!(conflict_degree(&addrs, 16) >= 4);
+    }
+
+    #[test]
+    fn empty_is_one() {
+        assert_eq!(conflict_degree(&[], 16), 1);
+    }
+}

@@ -1,0 +1,187 @@
+//! Execution counters and derived per-launch statistics — the
+//! simulator's observables, from which [`super::timing`] derives the
+//! numbers the paper's tables report.
+
+use super::machine::DeviceConfig;
+
+/// Raw event counters accumulated during interpretation.
+#[derive(Debug, Default, Clone)]
+pub struct Counters {
+    /// Warp-granularity instruction issues.
+    pub warp_issues: u64,
+    /// Total issue cycles including conflict/penalty multipliers.
+    pub issue_cycles: u64,
+    /// Issues where the active mask was a strict subset of the warp's
+    /// resident lanes — the divergence the paper eliminates.
+    pub divergent_issues: u64,
+    /// Shared-memory warp accesses and extra conflict passes.
+    pub smem_accesses: u64,
+    pub smem_conflict_extra: u64,
+    /// Global-memory warp instructions, DRAM transactions and bytes.
+    pub gmem_instrs: u64,
+    pub gmem_transactions: u64,
+    pub gmem_bytes: u64,
+    /// Global *load* instructions (stores don't stall the chain).
+    pub gmem_load_instrs: u64,
+    /// Dependency regions containing >= 1 load: one exposed DRAM
+    /// round-trip each. Unrolling (paper §2.4/§3) shrinks this — the
+    /// mechanism behind Table 2's speedups.
+    pub load_regions: u64,
+    /// Barrier release events (block-wide).
+    pub barriers: u64,
+    /// Per-lane executed operations (work metric).
+    pub lane_ops: u64,
+}
+
+impl Counters {
+    pub fn add(&mut self, other: &Counters) {
+        self.warp_issues += other.warp_issues;
+        self.issue_cycles += other.issue_cycles;
+        self.divergent_issues += other.divergent_issues;
+        self.smem_accesses += other.smem_accesses;
+        self.smem_conflict_extra += other.smem_conflict_extra;
+        self.gmem_instrs += other.gmem_instrs;
+        self.gmem_transactions += other.gmem_transactions;
+        self.gmem_bytes += other.gmem_bytes;
+        self.gmem_load_instrs += other.gmem_load_instrs;
+        self.load_regions += other.load_regions;
+        self.barriers += other.barriers;
+        self.lane_ops += other.lane_ops;
+    }
+}
+
+/// Statistics for one kernel launch, after timing derivation.
+#[derive(Debug, Clone)]
+pub struct KernelStats {
+    pub kernel: String,
+    pub device: String,
+    pub grid: u32,
+    pub block: u32,
+    pub counters: Counters,
+    /// Modeled execution time, seconds (includes launch overhead).
+    pub time_s: f64,
+    /// Compute-side time (issue cycles + exposed latency), seconds.
+    pub compute_s: f64,
+    /// Memory-side time (DRAM bytes / peak bandwidth), seconds.
+    pub mem_s: f64,
+    /// Useful-data bandwidth: input bytes / time (what Harris and the
+    /// paper report as "Memory Bandwidth").
+    pub useful_bytes: u64,
+}
+
+impl KernelStats {
+    pub fn time_ms(&self) -> f64 {
+        self.time_s * 1e3
+    }
+
+    /// Achieved bandwidth over *useful* data, GB/s (paper's metric).
+    pub fn bandwidth_gbps(&self) -> f64 {
+        self.useful_bytes as f64 / self.time_s / 1e9
+    }
+
+    /// Bandwidth usage percentage of the device peak (Table 2 col 5).
+    pub fn bandwidth_pct(&self, cfg: &DeviceConfig) -> f64 {
+        100.0 * self.bandwidth_gbps() / cfg.mem_bandwidth_gbps
+    }
+
+    /// Fraction of issues that were divergent.
+    pub fn divergence_ratio(&self) -> f64 {
+        if self.counters.warp_issues == 0 {
+            0.0
+        } else {
+            self.counters.divergent_issues as f64 / self.counters.warp_issues as f64
+        }
+    }
+
+    /// Average smem conflict passes per access (1.0 = conflict-free).
+    pub fn smem_conflict_factor(&self) -> f64 {
+        if self.counters.smem_accesses == 0 {
+            1.0
+        } else {
+            1.0 + self.counters.smem_conflict_extra as f64 / self.counters.smem_accesses as f64
+        }
+    }
+}
+
+/// A sequence of launches making up one logical operation (e.g. the
+/// two stages of a reduction). Times add; counters aggregate.
+#[derive(Debug, Clone, Default)]
+pub struct RunStats {
+    pub launches: Vec<KernelStats>,
+}
+
+impl RunStats {
+    pub fn push(&mut self, s: KernelStats) {
+        self.launches.push(s);
+    }
+
+    pub fn total_time_s(&self) -> f64 {
+        self.launches.iter().map(|l| l.time_s).sum()
+    }
+
+    pub fn total_time_ms(&self) -> f64 {
+        self.total_time_s() * 1e3
+    }
+
+    /// End-to-end useful bandwidth: stage-1 input bytes over total time.
+    pub fn bandwidth_gbps(&self) -> f64 {
+        let useful = self.launches.first().map_or(0, |l| l.useful_bytes);
+        useful as f64 / self.total_time_s() / 1e9
+    }
+
+    pub fn bandwidth_pct(&self, cfg: &DeviceConfig) -> f64 {
+        100.0 * self.bandwidth_gbps() / cfg.mem_bandwidth_gbps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats(time_s: f64, useful: u64) -> KernelStats {
+        KernelStats {
+            kernel: "k".into(),
+            device: "d".into(),
+            grid: 1,
+            block: 1,
+            counters: Counters::default(),
+            time_s,
+            compute_s: time_s,
+            mem_s: 0.0,
+            useful_bytes: useful,
+        }
+    }
+
+    #[test]
+    fn counters_add() {
+        let mut a = Counters { warp_issues: 1, gmem_bytes: 10, ..Default::default() };
+        let b = Counters { warp_issues: 2, gmem_bytes: 5, ..Default::default() };
+        a.add(&b);
+        assert_eq!(a.warp_issues, 3);
+        assert_eq!(a.gmem_bytes, 15);
+    }
+
+    #[test]
+    fn bandwidth_math() {
+        let s = stats(1e-3, 4_000_000); // 4 MB in 1 ms = 4 GB/s
+        assert!((s.bandwidth_gbps() - 4.0).abs() < 1e-9);
+        let cfg = DeviceConfig::g80();
+        assert!((s.bandwidth_pct(&cfg) - 100.0 * 4.0 / 86.4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn run_accumulates_time_uses_first_stage_bytes() {
+        let mut run = RunStats::default();
+        run.push(stats(1e-3, 4_000_000));
+        run.push(stats(1e-3, 100)); // stage 2: tiny
+        assert!((run.total_time_ms() - 2.0).abs() < 1e-12);
+        assert!((run.bandwidth_gbps() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ratios_degenerate_cases() {
+        let s = stats(1.0, 0);
+        assert_eq!(s.divergence_ratio(), 0.0);
+        assert_eq!(s.smem_conflict_factor(), 1.0);
+    }
+}

@@ -1,0 +1,528 @@
+//! Warp-level SIMT interpreter with minimum-PC lockstep execution.
+//!
+//! Each thread carries its own PC; at every step the warp issues the
+//! instruction at the *minimum* PC among runnable lanes, with exactly
+//! those lanes active. Convergent code therefore executes once per
+//! warp; divergent code serializes per distinct PC — reproducing the
+//! thread-divergence cost (paper §2.6) without any reconvergence-stack
+//! bookkeeping, for arbitrary (even unstructured) control flow.
+
+use anyhow::{bail, Result};
+
+use super::ir::{Instr, Program, Rval, Sreg, NREGS};
+use super::machine::DeviceConfig;
+use super::trace::Counters;
+use super::{dram, smem};
+
+/// Per-thread execution state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ThreadState {
+    Ready,
+    AtBarrier,
+    Halted,
+}
+
+/// One thread of a warp.
+#[derive(Debug, Clone)]
+pub struct Thread {
+    pub regs: [f64; NREGS],
+    pub pc: usize,
+    pub state: ThreadState,
+    /// Global thread coordinates (set at block spawn).
+    pub tid: u32,
+}
+
+impl Thread {
+    fn new(tid: u32) -> Self {
+        Thread { regs: [0.0; NREGS], pc: 0, state: ThreadState::Ready, tid }
+    }
+}
+
+/// Why a warp stopped stepping.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WarpYield {
+    /// Every lane halted.
+    AllHalted,
+    /// Every non-halted lane is waiting at a barrier.
+    AtBarrier,
+}
+
+/// Execution context shared by the warps of one block.
+pub struct BlockCtx<'a> {
+    pub cfg: &'a DeviceConfig,
+    pub program: &'a Program,
+    pub buffers: &'a mut [Vec<f64>],
+    pub smem: &'a mut [f64],
+    pub bid: u32,
+    pub block_dim: u32,
+    pub grid_dim: u32,
+    pub counters: &'a mut Counters,
+    /// Safety valve against runaway kernels.
+    pub max_issues: u64,
+}
+
+/// A warp: up to `warp_size` threads in lockstep.
+#[derive(Debug, Clone)]
+pub struct Warp {
+    pub threads: Vec<Thread>,
+    /// Global loads issued since the last dependency-region close
+    /// (backward branch or halt). See `close_region`.
+    region_loads: u64,
+    /// Fast-path flag (§Perf): true while every non-halted lane is
+    /// Ready at the same PC. Convergent kernels then skip the min-PC
+    /// scan and the per-lane pc comparison entirely; mixed-outcome
+    /// branches clear it, barrier releases re-derive it (which is how
+    /// tree kernels reconverge after each `if (tid < s)` level).
+    uniform: bool,
+    // Reused per-issue scratch buffers (§Perf: the interpreter issues
+    // millions of instructions; per-issue allocation dominated the
+    // profile before these).
+    mask_buf: Vec<usize>,
+    chunk_buf: Vec<(usize, usize)>,
+    gaddr_buf: Vec<u64>,
+    saddr_buf: Vec<u32>,
+}
+
+impl Warp {
+    /// Re-initialize this warp for a new block without reallocating
+    /// its thread array or scratch buffers (§Perf: blocks are spawned
+    /// millions of times across a grid).
+    pub fn reset(&mut self, first_tid: u32, lanes: u32) {
+        self.threads.clear();
+        self.threads.extend((0..lanes).map(|l| Thread::new(first_tid + l)));
+        self.region_loads = 0;
+        self.uniform = true;
+    }
+
+    pub fn new(first_tid: u32, lanes: u32) -> Self {
+        Warp {
+            threads: (0..lanes).map(|l| Thread::new(first_tid + l)).collect(),
+            region_loads: 0,
+            uniform: true,
+            mask_buf: Vec::with_capacity(lanes as usize),
+            chunk_buf: Vec::with_capacity(4),
+            gaddr_buf: Vec::with_capacity(lanes as usize),
+            saddr_buf: Vec::with_capacity(lanes as usize),
+        }
+    }
+
+    /// Close a dependency region at a backward branch / halt: each
+    /// hardware warp in this group pays one exposed DRAM round trip if
+    /// the region contained loads (the chain model `R*L + loads*s`,
+    /// timing.rs). Unrolled kernels close 1/F as many regions — the
+    /// paper's Table 2 mechanism.
+    fn close_region(&mut self, ctx: &mut BlockCtx) {
+        if self.region_loads > 0 {
+            let hw_warps = self.threads.len().div_ceil(ctx.cfg.warp_size as usize) as u64;
+            ctx.counters.load_regions += hw_warps;
+            self.region_loads = 0;
+        }
+    }
+
+    fn runnable_min_pc(&self) -> Option<usize> {
+        self.threads
+            .iter()
+            .filter(|t| t.state == ThreadState::Ready)
+            .map(|t| t.pc)
+            .min()
+    }
+
+    pub fn all_halted(&self) -> bool {
+        self.threads.iter().all(|t| t.state == ThreadState::Halted)
+    }
+
+    pub fn release_barrier(&mut self) {
+        for t in &mut self.threads {
+            if t.state == ThreadState::AtBarrier {
+                t.state = ThreadState::Ready;
+            }
+        }
+        // Reconvergence point: if every live lane now sits at one PC,
+        // re-enable the uniform fast path.
+        let mut pc = None;
+        self.uniform = self.threads.iter().all(|t| match t.state {
+            ThreadState::Halted => true,
+            ThreadState::Ready => match pc {
+                None => {
+                    pc = Some(t.pc);
+                    true
+                }
+                Some(p) => t.pc == p,
+            },
+            ThreadState::AtBarrier => false,
+        });
+    }
+
+    /// Step the warp until it halts or every live lane waits at a
+    /// barrier. Returns the yield reason.
+    pub fn run(&mut self, ctx: &mut BlockCtx) -> Result<WarpYield> {
+        loop {
+            let pc = if self.uniform {
+                // Fast path: every live lane shares one PC and state.
+                match self.threads.iter().find(|t| t.state != ThreadState::Halted) {
+                    None => return Ok(WarpYield::AllHalted),
+                    Some(t) if t.state == ThreadState::AtBarrier => {
+                        return Ok(WarpYield::AtBarrier)
+                    }
+                    Some(t) => t.pc,
+                }
+            } else {
+                match self.runnable_min_pc() {
+                    Some(pc) => pc,
+                    None => {
+                        return Ok(if self.all_halted() {
+                            WarpYield::AllHalted
+                        } else {
+                            WarpYield::AtBarrier
+                        })
+                    }
+                }
+            };
+            if pc >= ctx.program.code.len() {
+                bail!("{}: PC {pc} fell off the end of the program", ctx.program.name);
+            }
+            self.issue(pc, ctx)?;
+            if ctx.counters.warp_issues > ctx.max_issues {
+                bail!(
+                    "{}: exceeded {} warp issues — runaway kernel?",
+                    ctx.program.name,
+                    ctx.max_issues
+                );
+            }
+        }
+    }
+
+    /// Issue one instruction for all Ready lanes whose pc == `pc`.
+    fn issue(&mut self, pc: usize, ctx: &mut BlockCtx) -> Result<()> {
+        let instr = ctx.program.code[pc];
+        let mut mask = std::mem::take(&mut self.mask_buf);
+        mask.clear();
+        if self.uniform {
+            // All live lanes participate; no per-lane pc comparison.
+            mask.extend(
+                self.threads
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, t)| t.state != ThreadState::Halted)
+                    .map(|(i, _)| i),
+            );
+        } else {
+            mask.extend(
+                self.threads
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, t)| t.state == ThreadState::Ready && t.pc == pc)
+                    .map(|(i, _)| i),
+            );
+        }
+        debug_assert!(!mask.is_empty());
+        debug_assert!(
+            !self.uniform || mask.iter().all(|&i| self.threads[i].pc == pc),
+            "uniform invariant broken"
+        );
+
+        // Group active lanes by *hardware* warp (tid / warp_size): in
+        // normal mode one group == this Warp; in lockstep-block mode
+        // the block-wide Warp decomposes into its hardware warps so
+        // issue / conflict / coalescing costs stay per-warp.
+        let mut chunks = std::mem::take(&mut self.chunk_buf);
+        self.hw_chunks(&mask, ctx.cfg.warp_size, &mut chunks);
+        let nchunks = chunks.len() as u64;
+        let live = self.threads.iter().filter(|t| t.state != ThreadState::Halted).count();
+        ctx.counters.warp_issues += nchunks;
+        ctx.counters.lane_ops += mask.len() as u64;
+        if mask.len() < live {
+            ctx.counters.divergent_issues += nchunks;
+        }
+        let mut cost = ctx.cfg.issue_cycles as u64 * nchunks;
+
+        macro_rules! rv {
+            ($t:expr, $v:expr) => {
+                match $v {
+                    Rval::R(r) => $t.regs[r as usize],
+                    Rval::Imm(i) => i,
+                }
+            };
+        }
+
+        match instr {
+            Instr::Mov(d, v) => {
+                for &i in &mask {
+                    let t = &mut self.threads[i];
+                    t.regs[d as usize] = rv!(t, v);
+                    t.pc += 1;
+                }
+            }
+            Instr::Special(d, s) => {
+                for &i in &mask {
+                    let t = &mut self.threads[i];
+                    t.regs[d as usize] = match s {
+                        Sreg::Tid => (t.tid % ctx.block_dim) as f64,
+                        Sreg::Bid => ctx.bid as f64,
+                        Sreg::BlockDim => ctx.block_dim as f64,
+                        Sreg::GridDim => ctx.grid_dim as f64,
+                        Sreg::GlobalId => (ctx.bid * ctx.block_dim + t.tid % ctx.block_dim) as f64,
+                        Sreg::GlobalSize => (ctx.block_dim * ctx.grid_dim) as f64,
+                        Sreg::Lane => ((t.tid % ctx.block_dim) % ctx.cfg.warp_size) as f64,
+                    };
+                    t.pc += 1;
+                }
+            }
+            Instr::Add(d, a, v) => self.alu(&mask, d, a, v, |x, y| x + y),
+            Instr::Sub(d, a, v) => self.alu(&mask, d, a, v, |x, y| x - y),
+            Instr::Mul(d, a, v) => self.alu(&mask, d, a, v, |x, y| x * y),
+            Instr::Div(d, a, v) => {
+                cost += ctx.cfg.mod_extra_cycles as u64 * nchunks;
+                self.alu(&mask, d, a, v, |x, y| ((x as i64) / (y as i64).max(1)) as f64)
+            }
+            Instr::Rem(d, a, v) => {
+                cost += ctx.cfg.mod_extra_cycles as u64 * nchunks;
+                self.alu(&mask, d, a, v, |x, y| ((x as i64) % (y as i64).max(1)) as f64)
+            }
+            Instr::Shr(d, a, v) => self.alu(&mask, d, a, v, |x, y| ((x as i64) >> (y as i64 & 63)) as f64),
+            Instr::Shl(d, a, v) => self.alu(&mask, d, a, v, |x, y| ((x as i64) << (y as i64 & 63)) as f64),
+            Instr::And(d, a, v) => self.alu(&mask, d, a, v, |x, y| ((x as i64) & (y as i64)) as f64),
+            Instr::SetLt(d, a, v) => self.alu(&mask, d, a, v, |x, y| (x < y) as u8 as f64),
+            Instr::SetGe(d, a, v) => self.alu(&mask, d, a, v, |x, y| (x >= y) as u8 as f64),
+            Instr::SetEq(d, a, v) => self.alu(&mask, d, a, v, |x, y| (x == y) as u8 as f64),
+            Instr::Comb(op, d, a, v) => self.alu(&mask, d, a, v, |x, y| op.apply(x, y)),
+            Instr::LdG(d, buf, addr) => {
+                let addrs = self.gaddrs(&mask, addr);
+                self.gmem_cost(ctx, &chunks, &addrs, &mut cost);
+                ctx.counters.gmem_load_instrs += chunks.len() as u64;
+                self.region_loads += 1;
+                for (k, &i) in mask.iter().enumerate() {
+                    let t = &mut self.threads[i];
+                    let a = addrs[k] as usize;
+                    let b = buf as usize;
+                    if b >= ctx.buffers.len() || a >= ctx.buffers[b].len() {
+                        bail!(
+                            "{}: LdG out of bounds: buf {b} addr {a} at pc {pc}",
+                            ctx.program.name
+                        );
+                    }
+                    t.regs[d as usize] = ctx.buffers[b][a];
+                    t.pc += 1;
+                }
+                self.gaddr_buf = addrs;
+            }
+            Instr::StG(buf, addr, src) => {
+                let addrs = self.gaddrs(&mask, addr);
+                self.gmem_cost(ctx, &chunks, &addrs, &mut cost);
+                for (k, &i) in mask.iter().enumerate() {
+                    let t = &self.threads[i];
+                    let a = addrs[k] as usize;
+                    let b = buf as usize;
+                    let val = t.regs[src as usize];
+                    if b >= ctx.buffers.len() || a >= ctx.buffers[b].len() {
+                        bail!(
+                            "{}: StG out of bounds: buf {b} addr {a} at pc {pc}",
+                            ctx.program.name
+                        );
+                    }
+                    ctx.buffers[b][a] = val;
+                    self.threads[i].pc += 1;
+                }
+                self.gaddr_buf = addrs;
+            }
+            Instr::LdS(d, addr) => {
+                let addrs = self.saddrs(&mask, addr)?;
+                let passes = self.smem_passes(ctx, &chunks, &addrs);
+                cost = ctx.cfg.issue_cycles as u64 * passes;
+                for (k, &i) in mask.iter().enumerate() {
+                    let t = &mut self.threads[i];
+                    let a = addrs[k] as usize;
+                    if a >= ctx.smem.len() {
+                        bail!("{}: LdS out of bounds: addr {a} at pc {pc}", ctx.program.name);
+                    }
+                    t.regs[d as usize] = ctx.smem[a];
+                    t.pc += 1;
+                }
+                self.saddr_buf = addrs;
+            }
+            Instr::StS(addr, src) => {
+                let addrs = self.saddrs(&mask, addr)?;
+                let passes = self.smem_passes(ctx, &chunks, &addrs);
+                cost = ctx.cfg.issue_cycles as u64 * passes;
+                for (k, &i) in mask.iter().enumerate() {
+                    let val = self.threads[i].regs[src as usize];
+                    let a = addrs[k] as usize;
+                    if a >= ctx.smem.len() {
+                        bail!("{}: StS out of bounds: addr {a} at pc {pc}", ctx.program.name);
+                    }
+                    ctx.smem[a] = val;
+                    self.threads[i].pc += 1;
+                }
+                self.saddr_buf = addrs;
+            }
+            Instr::ShflDown(d, s, delta) => {
+                // Read lane l+delta's `s` register (own value if out of
+                // range) — warp-synchronous by construction.
+                let vals: Vec<f64> = (0..self.threads.len())
+                    .map(|l| {
+                        let src = l + delta as usize;
+                        if src < self.threads.len() {
+                            self.threads[src].regs[s as usize]
+                        } else {
+                            self.threads[l].regs[s as usize]
+                        }
+                    })
+                    .collect();
+                for &i in &mask {
+                    self.threads[i].regs[d as usize] = vals[i];
+                    self.threads[i].pc += 1;
+                }
+            }
+            Instr::Bar => {
+                for &i in &mask {
+                    let t = &mut self.threads[i];
+                    t.state = ThreadState::AtBarrier;
+                    t.pc += 1;
+                }
+            }
+            Instr::BraZ(r, target) => {
+                let mut taken = 0usize;
+                let mut taken_back = false;
+                for &i in &mask {
+                    let t = &mut self.threads[i];
+                    if t.regs[r as usize] == 0.0 {
+                        t.pc = target;
+                        taken += 1;
+                        taken_back |= target <= pc;
+                    } else {
+                        t.pc += 1;
+                    }
+                }
+                if taken != 0 && taken != mask.len() {
+                    self.uniform = false; // lanes split
+                }
+                if taken_back {
+                    self.close_region(ctx);
+                }
+            }
+            Instr::BraNZ(r, target) => {
+                let mut taken = 0usize;
+                let mut taken_back = false;
+                for &i in &mask {
+                    let t = &mut self.threads[i];
+                    if t.regs[r as usize] != 0.0 {
+                        t.pc = target;
+                        taken += 1;
+                        taken_back |= target <= pc;
+                    } else {
+                        t.pc += 1;
+                    }
+                }
+                if taken != 0 && taken != mask.len() {
+                    self.uniform = false;
+                }
+                if taken_back {
+                    self.close_region(ctx);
+                }
+            }
+            Instr::Jmp(target) => {
+                for &i in &mask {
+                    self.threads[i].pc = target;
+                }
+                if target <= pc {
+                    self.close_region(ctx);
+                }
+            }
+            Instr::Halt => {
+                for &i in &mask {
+                    self.threads[i].state = ThreadState::Halted;
+                }
+                self.close_region(ctx);
+            }
+        }
+        ctx.counters.issue_cycles += cost;
+        self.mask_buf = mask;
+        self.chunk_buf = chunks;
+        Ok(())
+    }
+
+    #[inline]
+    fn alu(&mut self, mask: &[usize], d: super::ir::Reg, a: super::ir::Reg, v: Rval, f: impl Fn(f64, f64) -> f64) {
+        for &i in mask {
+            let t = &mut self.threads[i];
+            let x = t.regs[a as usize];
+            let y = match v {
+                Rval::R(r) => t.regs[r as usize],
+                Rval::Imm(imm) => imm,
+            };
+            t.regs[d as usize] = f(x, y);
+            t.pc += 1;
+        }
+    }
+
+    /// Split the (lane-ordered) active mask into index ranges, one per
+    /// hardware warp, into the reused buffer.
+    fn hw_chunks(&self, mask: &[usize], warp_size: u32, out: &mut Vec<(usize, usize)>) {
+        out.clear();
+        // Fast path: a whole single hardware warp (the common case in
+        // non-lockstep mode).
+        if mask.len() <= warp_size as usize {
+            let first = self.threads[mask[0]].tid / warp_size;
+            let last = self.threads[*mask.last().unwrap()].tid / warp_size;
+            if first == last {
+                out.push((0, mask.len()));
+                return;
+            }
+        }
+        let mut start = 0usize;
+        while start < mask.len() {
+            let w = self.threads[mask[start]].tid / warp_size;
+            let mut end = start + 1;
+            while end < mask.len() && self.threads[mask[end]].tid / warp_size == w {
+                end += 1;
+            }
+            out.push((start, end));
+            start = end;
+        }
+    }
+
+    /// Per-hardware-warp bank-conflict passes for a shared access.
+    fn smem_passes(&self, ctx: &mut BlockCtx, chunks: &[(usize, usize)], addrs: &[u32]) -> u64 {
+        let mut passes = 0u64;
+        for &(s, e) in chunks {
+            let d = smem::conflict_degree(&addrs[s..e], ctx.cfg.smem_banks) as u64;
+            ctx.counters.smem_accesses += 1;
+            ctx.counters.smem_conflict_extra += d - 1;
+            passes += d;
+        }
+        passes
+    }
+
+    fn gaddrs(&mut self, mask: &[usize], addr: super::ir::Reg) -> Vec<u64> {
+        let mut buf = std::mem::take(&mut self.gaddr_buf);
+        buf.clear();
+        buf.extend(mask.iter().map(|&i| self.threads[i].regs[addr as usize].max(0.0) as u64));
+        buf
+    }
+
+    fn saddrs(&mut self, mask: &[usize], addr: super::ir::Reg) -> Result<Vec<u32>> {
+        let mut buf = std::mem::take(&mut self.saddr_buf);
+        buf.clear();
+        for &i in mask {
+            let v = self.threads[i].regs[addr as usize];
+            if v < 0.0 {
+                self.saddr_buf = buf;
+                bail!("negative shared-memory address {v}");
+            }
+            buf.push(v as u32);
+        }
+        Ok(buf)
+    }
+
+    fn gmem_cost(&self, ctx: &mut BlockCtx, chunks: &[(usize, usize)], addrs: &[u64], cost: &mut u64) {
+        for &(s, e) in chunks {
+            let txns = dram::transactions(&addrs[s..e], ctx.cfg.coalesce_segment_bytes);
+            ctx.counters.gmem_instrs += 1;
+            ctx.counters.gmem_transactions += txns as u64;
+            ctx.counters.gmem_bytes += txns as u64 * ctx.cfg.coalesce_segment_bytes as u64;
+            // Issue-side cost: one extra cycle per extra transaction
+            // (address divergence serializes in the LD/ST unit).
+            *cost += txns.saturating_sub(1) as u64;
+        }
+    }
+}

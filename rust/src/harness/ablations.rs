@@ -1,0 +1,178 @@
+//! Ablation experiments for the design choices DESIGN.md calls out —
+//! what the paper itself never isolates:
+//!
+//! * **tree style** — Catanzaro's barriered/branchy tree vs the
+//!   paper's branchless barrier-free tree at the same F (isolates the
+//!   Listing 6 intervention from the unrolling).
+//! * **persistence** — resident-wave sweep: how far latency hiding
+//!   carries the F=1 baseline vs F=8 (the §2.5 trade-off).
+//! * **shuffle** — Luitjens' SHFL kernel vs Harris K7 vs jradi on the
+//!   modeled Fermi (the §2.2 digression).
+//! * **host unrolling** — the same unroll-factor story on the CPU
+//!   (reduce::simd::reduce_unroll), as a sanity anchor.
+
+use anyhow::Result;
+
+use super::report::{ms, ratio, Table};
+use crate::gpusim::{CombOp, DeviceConfig, Gpu};
+use crate::kernels::drivers;
+use crate::reduce::{simd, Op};
+use crate::util::bench::Bench;
+use crate::util::rng::Rng;
+
+/// Tree-style ablation: same data, same F, barriered vs branchless.
+pub fn tree_style(n: usize, block: u32, seed: u64) -> Result<Table> {
+    let mut rng = Rng::new(seed);
+    let data: Vec<f64> = (0..n).map(|_| rng.f32_in(-1.0, 1.0) as f64).collect();
+    let mut gpu = Gpu::new(DeviceConfig::amd_gcn());
+
+    // Catanzaro = barriered tree, F=1. jradi F=1 = branchless tree,
+    // same persistent loop: the delta isolates Listing 6.
+    let cat = drivers::catanzaro_reduce(&mut gpu, &data, CombOp::Add, block)?;
+    let jr1 = drivers::jradi_reduce(&mut gpu, &data, CombOp::Add, 1, block)?;
+    let jr8 = drivers::jradi_reduce(&mut gpu, &data, CombOp::Add, 8, block)?;
+
+    let mut t = Table::new(
+        format!("Ablation — tree style & unrolling (AMD GCN, N={n})"),
+        &["variant", "time (ms)", "vs baseline", "barriers", "divergent issues"],
+    );
+    let base = cat.run.total_time_s();
+    for (name, out) in [
+        ("catanzaro (barriered, branchy tree)", &cat),
+        ("jradi F=1 (branchless, no barriers)", &jr1),
+        ("jradi F=8 (+ global-memory unroll)", &jr8),
+    ] {
+        let c: u64 = out.run.launches.iter().map(|l| l.counters.barriers).sum();
+        let d: u64 = out.run.launches.iter().map(|l| l.counters.divergent_issues).sum();
+        t.row(vec![
+            name.into(),
+            ms(out.run.total_time_s()),
+            ratio(base / out.run.total_time_s()),
+            c.to_string(),
+            d.to_string(),
+        ]);
+    }
+    Ok(t)
+}
+
+/// Persistence ablation: resident waves per SM vs time, F in {1, 8}.
+pub fn persistence(n: usize, block: u32, seed: u64) -> Result<Table> {
+    let mut rng = Rng::new(seed);
+    let data: Vec<f64> = (0..n).map(|_| rng.f32_in(-1.0, 1.0) as f64).collect();
+
+    let mut t = Table::new(
+        format!("Ablation — persistent-thread occupancy (AMD GCN, N={n})"),
+        &["waves/SM", "GS (threads)", "F=1 time (ms)", "F=8 time (ms)", "F=8 gain"],
+    );
+    for waves in [2u32, 4, 6, 12, 24] {
+        let cfg = DeviceConfig { persistent_waves_per_sm: waves, ..DeviceConfig::amd_gcn() };
+        let gs = cfg.global_size(block);
+        let mut gpu = Gpu::new(cfg);
+        let t1 = drivers::jradi_reduce(&mut gpu, &data, CombOp::Add, 1, block)?
+            .run
+            .total_time_s();
+        let t8 = drivers::jradi_reduce(&mut gpu, &data, CombOp::Add, 8, block)?
+            .run
+            .total_time_s();
+        t.row(vec![
+            waves.to_string(),
+            gs.to_string(),
+            ms(t1),
+            ms(t8),
+            ratio(t1 / t8),
+        ]);
+    }
+    Ok(t)
+}
+
+/// Shuffle ablation on the modeled Fermi: K7 vs Luitjens vs jradi.
+pub fn shuffle(n: usize, block: u32, seed: u64) -> Result<Table> {
+    let mut rng = Rng::new(seed);
+    let data: Vec<f64> = (0..n).map(|_| rng.f32_in(-1.0, 1.0) as f64).collect();
+    let mut gpu = Gpu::new(DeviceConfig::tesla_c2075());
+
+    let k7 = drivers::harris_reduce(&mut gpu, 7, &data, CombOp::Add, block)?;
+    let lu = drivers::luitjens_reduce(&mut gpu, &data, CombOp::Add, block)?;
+    let jr = drivers::jradi_reduce(&mut gpu, &data, CombOp::Add, 8, block)?;
+
+    let mut t = Table::new(
+        format!("Ablation — shuffle vs shared-memory trees (Tesla C2075, N={n})"),
+        &["variant", "time (ms)", "smem accesses", "barriers"],
+    );
+    for (name, out) in [
+        ("harris K7 (smem tree)", &k7),
+        ("luitjens (SHFL)", &lu),
+        ("jradi F=8 (branchless smem tree)", &jr),
+    ] {
+        let sm: u64 = out.run.launches.iter().map(|l| l.counters.smem_accesses).sum();
+        let b: u64 = out.run.launches.iter().map(|l| l.counters.barriers).sum();
+        t.row(vec![name.into(), ms(out.run.total_time_s()), sm.to_string(), b.to_string()]);
+    }
+    Ok(t)
+}
+
+/// Host-side unrolling: the same F story on this machine's CPU
+/// (measured wall-clock, not modeled).
+pub fn host_unroll(n: usize, seed: u64) -> Table {
+    let mut rng = Rng::new(seed);
+    let data = rng.f32_vec(n, -1.0, 1.0);
+    let mut bench = Bench::from_env();
+    let mut t = Table::new(
+        format!("Ablation — host CPU unroll factor (measured, N={n})"),
+        &["F", "time (ms)", "speedup", "GB/s"],
+    );
+    let mut t1 = 0.0;
+    for f in [1usize, 2, 4, 8, 16] {
+        let s = bench.run(&format!("host_f{f}"), Some(4 * n as u64), || {
+            simd::reduce_unroll(&data, Op::Sum, f)
+        });
+        let med = s.median();
+        if f == 1 {
+            t1 = med;
+        }
+        t.row(vec![
+            f.to_string(),
+            ms(med),
+            ratio(t1 / med),
+            format!("{:.2}", s.gbps().unwrap_or(0.0)),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tree_style_ablation_runs() {
+        let t = tree_style(200_000, 256, 5).unwrap();
+        assert_eq!(t.rows.len(), 3);
+        // Branchless tree must eliminate barriers entirely.
+        assert_eq!(t.rows[1][3], "0");
+        assert_ne!(t.rows[0][3], "0");
+    }
+
+    #[test]
+    fn persistence_ablation_runs() {
+        let t = persistence(200_000, 256, 5).unwrap();
+        assert_eq!(t.rows.len(), 5);
+    }
+
+    #[test]
+    fn shuffle_ablation_runs() {
+        let t = shuffle(200_000, 256, 5).unwrap();
+        assert_eq!(t.rows.len(), 3);
+        // SHFL variant uses far less shared memory than K7.
+        let k7_sm: u64 = t.rows[0][2].parse().unwrap();
+        let lu_sm: u64 = t.rows[1][2].parse().unwrap();
+        assert!(lu_sm < k7_sm / 2, "k7 {k7_sm} vs luitjens {lu_sm}");
+    }
+
+    #[test]
+    fn host_unroll_runs() {
+        std::env::set_var("PARRED_BENCH_FAST", "1");
+        let t = host_unroll(100_000, 5);
+        assert_eq!(t.rows.len(), 5);
+    }
+}

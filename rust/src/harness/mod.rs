@@ -1,0 +1,14 @@
+//! The reproduction harness: regenerates every table and figure of
+//! the paper's evaluation (DESIGN.md §5 maps each to its module), plus
+//! the ablations the paper's design choices imply.
+//!
+//! Consumed by `cargo bench` targets (rust/benches/) and the
+//! `parred tables` CLI subcommand.
+
+pub mod ablations;
+pub mod report;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+
+pub use report::{Chart, Table};

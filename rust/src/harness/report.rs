@@ -1,0 +1,214 @@
+//! Table/figure formatting for the reproduction harness: markdown
+//! tables, ASCII line charts (Figures 3–4), and CSV export.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// A rendered experiment table.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, headers: &[&str]) -> Self {
+        Table {
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "ragged table row");
+        self.rows.push(cells);
+        self
+    }
+
+    /// Render as a GitHub-flavoured markdown table.
+    pub fn markdown(&self) -> String {
+        let ncols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "### {}\n", self.title);
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                let _ = write!(line, " {c:<w$} |", w = w);
+            }
+            line
+        };
+        let _ = writeln!(out, "{}", fmt_row(&self.headers, &widths));
+        let mut sep = String::from("|");
+        for w in &widths {
+            let _ = write!(sep, "{}|", "-".repeat(w + 2));
+        }
+        let _ = writeln!(out, "{sep}");
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", fmt_row(row, &widths));
+        }
+        let _ = writeln!(out);
+        let _ = ncols;
+        out
+    }
+
+    /// CSV rendering (headers + rows).
+    pub fn csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write CSV next to other reports.
+    pub fn save_csv(&self, dir: impl AsRef<Path>, name: &str) -> std::io::Result<()> {
+        std::fs::create_dir_all(dir.as_ref())?;
+        std::fs::write(dir.as_ref().join(name), self.csv())
+    }
+}
+
+/// An ASCII line chart (for Figures 3 and 4): x labels with one or
+/// more named series.
+pub struct Chart {
+    pub title: String,
+    pub x_labels: Vec<String>,
+    pub series: Vec<(String, Vec<f64>)>,
+    pub height: usize,
+}
+
+impl Chart {
+    pub fn new(title: impl Into<String>) -> Self {
+        Chart { title: title.into(), x_labels: Vec::new(), series: Vec::new(), height: 16 }
+    }
+
+    pub fn series(&mut self, name: impl Into<String>, xs: Vec<String>, ys: Vec<f64>) -> &mut Self {
+        assert_eq!(xs.len(), ys.len());
+        if self.x_labels.is_empty() {
+            self.x_labels = xs;
+        }
+        self.series.push((name.into(), ys));
+        self
+    }
+
+    /// Render the chart with axis, points (one glyph per series) and a
+    /// legend.
+    pub fn render(&self) -> String {
+        let glyphs = ['*', 'o', '+', 'x'];
+        let all: Vec<f64> = self.series.iter().flat_map(|(_, ys)| ys.iter().copied()).collect();
+        if all.is_empty() {
+            return format!("{}\n(empty chart)\n", self.title);
+        }
+        let (lo, hi) = all.iter().fold((f64::INFINITY, f64::NEG_INFINITY), |(l, h), &v| {
+            (l.min(v), h.max(v))
+        });
+        let span = (hi - lo).max(1e-12);
+        let h = self.height;
+        let w = self.x_labels.len();
+        let col_w = 7usize;
+        let mut grid = vec![vec![' '; w * col_w]; h];
+        for (si, (_, ys)) in self.series.iter().enumerate() {
+            for (xi, &y) in ys.iter().enumerate() {
+                let row = ((hi - y) / span * (h - 1) as f64).round() as usize;
+                let col = xi * col_w + col_w / 2;
+                grid[row.min(h - 1)][col] = glyphs[si % glyphs.len()];
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "### {}\n```", self.title);
+        for (i, row) in grid.iter().enumerate() {
+            let yval = hi - span * i as f64 / (h - 1) as f64;
+            let line: String = row.iter().collect();
+            let _ = writeln!(out, "{yval:>10.3} |{}", line.trim_end());
+        }
+        let mut xaxis = String::from("           +");
+        xaxis.push_str(&"-".repeat(w * col_w));
+        let _ = writeln!(out, "{xaxis}");
+        let mut labels = String::from("            ");
+        for l in &self.x_labels {
+            let _ = write!(labels, "{l:^col_w$}", col_w = col_w);
+        }
+        let _ = writeln!(out, "{labels}");
+        for (si, (name, _)) in self.series.iter().enumerate() {
+            let _ = writeln!(out, "  {} = {}", glyphs[si % glyphs.len()], name);
+        }
+        let _ = writeln!(out, "```");
+        out
+    }
+}
+
+/// Format milliseconds with enough digits to compare against paper rows.
+pub fn ms(t_s: f64) -> String {
+    format!("{:.4}", t_s * 1e3)
+}
+
+/// Format a ratio like the paper's speedup column.
+pub fn ratio(x: f64) -> String {
+    format!("{x:.3}x")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_table_shape() {
+        let mut t = Table::new("T", &["a", "bb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let md = t.markdown();
+        assert!(md.contains("### T"));
+        assert!(md.contains("| a | bb |"));
+        assert!(md.contains("| 1 | 2  |"));
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged")]
+    fn ragged_rows_panic() {
+        Table::new("T", &["a", "b"]).row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn csv_escapes() {
+        let mut t = Table::new("T", &["a,b", "c"]);
+        t.row(vec!["x\"y".into(), "z".into()]);
+        let csv = t.csv();
+        assert!(csv.starts_with("\"a,b\",c\n"));
+        assert!(csv.contains("\"x\"\"y\",z"));
+    }
+
+    #[test]
+    fn chart_renders_all_points() {
+        let mut c = Chart::new("speedup");
+        c.series(
+            "jradi",
+            vec!["1".into(), "2".into(), "4".into()],
+            vec![1.0, 1.4, 2.0],
+        );
+        let s = c.render();
+        assert!(s.contains("### speedup"));
+        // 3 data points + 1 legend glyph.
+        assert_eq!(s.matches('*').count(), 4, "{s}");
+    }
+
+    #[test]
+    fn formatting_helpers() {
+        assert_eq!(ms(0.0012345), "1.2345");
+        assert_eq!(ratio(2.7911), "2.791x");
+    }
+}

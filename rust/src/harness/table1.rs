@@ -1,0 +1,110 @@
+//! Table 1 regeneration: Harris' seven-kernel ladder on the modeled
+//! G80, 2^22 integer elements (paper §2.1).
+
+use anyhow::Result;
+
+use super::report::{ms, ratio, Table};
+use crate::gpusim::{DeviceConfig, Gpu};
+use crate::kernels::drivers;
+use crate::util::rng::Rng;
+
+/// Paper's measured rows (time ms, bandwidth GB/s) for side-by-side.
+pub const PAPER: [(&str, f64, f64); 7] = [
+    ("Kernel 1: interleaved addressing, divergent branching", 8.054, 2.083),
+    ("Kernel 2: interleaved addressing, bank conflicts", 3.456, 4.854),
+    ("Kernel 3: sequential addressing", 1.722, 9.741),
+    ("Kernel 4: first add during global load", 0.965, 17.377),
+    ("Kernel 5: unroll last warp", 0.536, 31.289),
+    ("Kernel 6: completely unrolled", 0.381, 43.996),
+    ("Kernel 7: multiple elements per thread", 0.268, 62.671),
+];
+
+/// One measured row.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub kernel: u8,
+    pub time_s: f64,
+    pub bandwidth_gbps: f64,
+    pub value: f64,
+}
+
+/// Run the ladder. `n` defaults to the paper's 2^22.
+pub fn run(n: usize, block: u32, seed: u64) -> Result<Vec<Row>> {
+    let mut rng = Rng::new(seed);
+    // Integer payload, as in the paper ("4M integer values").
+    let data: Vec<f64> = (0..n).map(|_| rng.i32_in(-100, 100) as f64).collect();
+    let expect: f64 = data.iter().sum();
+
+    let mut rows = Vec::new();
+    let mut gpu = Gpu::new(DeviceConfig::g80());
+    for k in 1..=7u8 {
+        let out = drivers::harris_reduce(&mut gpu, k, &data, crate::gpusim::CombOp::Add, block)?;
+        anyhow::ensure!(out.value == expect, "K{k} produced {} != {expect}", out.value);
+        rows.push(Row {
+            kernel: k,
+            time_s: out.run.total_time_s(),
+            bandwidth_gbps: out.run.bandwidth_gbps(),
+            value: out.value,
+        });
+    }
+    Ok(rows)
+}
+
+/// Render rows in the paper's format, with the paper's numbers
+/// alongside for comparison.
+pub fn table(rows: &[Row]) -> Table {
+    let mut t = Table::new(
+        "Table 1 — parallel reduction of 2^22 ints (modeled G80) vs Harris' measurements",
+        &[
+            "Kernel",
+            "Time (ms)",
+            "BW (GB/s)",
+            "Step speedup",
+            "Cumulative",
+            "Paper time (ms)",
+            "Paper cumulative",
+        ],
+    );
+    let t1 = rows[0].time_s;
+    let mut prev = t1;
+    for (row, paper) in rows.iter().zip(PAPER.iter()) {
+        t.row(vec![
+            paper.0.to_string(),
+            ms(row.time_s),
+            format!("{:.2}", row.bandwidth_gbps),
+            ratio(prev / row.time_s),
+            ratio(t1 / row.time_s),
+            format!("{:.3}", paper.1),
+            ratio(PAPER[0].1 / paper.1),
+        ]);
+        prev = row.time_s;
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ladder_shape_holds() {
+        // Small n so the test is quick; the shape must still hold:
+        // K1 slowest, K7 fastest, monotone within a tolerance.
+        let rows = run(1 << 18, 128, 7).unwrap();
+        assert_eq!(rows.len(), 7);
+        let times: Vec<f64> = rows.iter().map(|r| r.time_s).collect();
+        assert!(times[6] < times[0] / 4.0, "cumulative speedup too small: {times:?}");
+        // Each step should not regress by more than 20%.
+        for w in times.windows(2) {
+            assert!(w[1] <= w[0] * 1.2, "step regression: {times:?}");
+        }
+    }
+
+    #[test]
+    fn table_renders() {
+        let rows = run(1 << 16, 128, 7).unwrap();
+        let md = table(&rows).markdown();
+        assert!(md.contains("Kernel 7"));
+        assert!(md.contains("Cumulative"));
+    }
+}

@@ -1,0 +1,89 @@
+//! Table 3 regeneration: the paper's CUDA comparison — new approach
+//! (F=8) vs Harris' Kernel 7 on the modeled Tesla C2075,
+//! N = 5,533,214 (paper §4).
+
+use anyhow::Result;
+
+use super::report::{ms, Table};
+use crate::gpusim::{CombOp, DeviceConfig, Gpu};
+use crate::kernels::drivers;
+use crate::util::rng::Rng;
+
+/// Paper: K7 0.17766 ms, new approach 0.17867 ms, 99.4 %.
+pub const PAPER_K7_MS: f64 = 0.17766;
+pub const PAPER_NEW_MS: f64 = 0.17867;
+pub const PAPER_PCT: f64 = 99.4;
+
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub k7_s: f64,
+    pub new_s: f64,
+    /// `100 * T_new / T_k7` (the paper's formula — lower is better
+    /// for the new approach; 100% = parity).
+    pub pct: f64,
+}
+
+pub fn run(n: usize, block: u32, f: u32, seed: u64) -> Result<Row> {
+    let mut rng = Rng::new(seed);
+    let data: Vec<f64> = (0..n).map(|_| rng.f32_in(-1.0, 1.0) as f64).collect();
+
+    let mut gpu = Gpu::new(DeviceConfig::tesla_c2075());
+    let k7 = drivers::harris_reduce(&mut gpu, 7, &data, CombOp::Add, block)?;
+    let new = drivers::jradi_reduce(&mut gpu, &data, CombOp::Add, f, block)?;
+    // Both must agree numerically (f64 exact for identical combine
+    // trees is not guaranteed, but sums of the same multiset in
+    // different orders stay within tight f64 tolerance).
+    let rel = ((k7.value - new.value) / k7.value.max(1.0)).abs();
+    anyhow::ensure!(rel < 1e-9, "K7 {} vs new {}", k7.value, new.value);
+
+    let k7_s = k7.run.total_time_s();
+    let new_s = new.run.total_time_s();
+    Ok(Row { k7_s, new_s, pct: 100.0 * new_s / k7_s })
+}
+
+pub fn table(row: &Row) -> Table {
+    let mut t = Table::new(
+        "Table 3 — new approach (F=8) vs Harris K7 (modeled Tesla C2075), N=5,533,214",
+        &["", "Time K7 (ms)", "Time new (ms)", "% of performance"],
+    );
+    t.row(vec![
+        "modeled".into(),
+        ms(row.k7_s),
+        ms(row.new_s),
+        format!("{:.1}", row.pct),
+    ]);
+    t.row(vec![
+        "paper".into(),
+        format!("{PAPER_K7_MS}"),
+        format!("{PAPER_NEW_MS}"),
+        format!("{PAPER_PCT}"),
+    ]);
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn near_parity_on_fermi() {
+        let row = run(1 << 22, 256, 8, 11).unwrap();
+        // The paper's claim: the generic approach performs within a
+        // few percent of Harris' fully tuned K7 (99.4%). Allow a
+        // modeling band of 70%..140% at this sub-paper scale (the
+        // paper-scale run in the bench harness lands tighter).
+        assert!(
+            row.pct > 70.0 && row.pct < 140.0,
+            "parity broken: {:.1}% (k7 {:.3}ms new {:.3}ms)",
+            row.pct,
+            row.k7_s * 1e3,
+            row.new_s * 1e3
+        );
+    }
+
+    #[test]
+    fn renders() {
+        let row = Row { k7_s: 1.8e-4, new_s: 1.8e-4, pct: 100.0 };
+        assert!(table(&row).markdown().contains("% of performance"));
+    }
+}

@@ -1,0 +1,224 @@
+//! A tiny assembler over the gpusim IR: label-based branches, emit
+//! helpers, and static validation at `finish()`. All nine device
+//! kernels are written against this API.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use crate::gpusim::ir::{CombOp, Instr, Program, Reg, Rval, Sreg};
+
+/// Program assembler with symbolic labels.
+pub struct Asm {
+    name: String,
+    code: Vec<Instr>,
+    smem_words: u32,
+    lockstep_block: bool,
+    labels: HashMap<String, usize>,
+    fixups: Vec<(usize, String)>,
+}
+
+impl Asm {
+    pub fn new(name: impl Into<String>) -> Self {
+        Asm {
+            name: name.into(),
+            code: Vec::new(),
+            smem_words: 0,
+            lockstep_block: false,
+            labels: HashMap::new(),
+            fixups: Vec::new(),
+        }
+    }
+
+    /// Declare shared-memory requirement (words).
+    pub fn smem(&mut self, words: u32) -> &mut Self {
+        self.smem_words = words;
+        self
+    }
+
+    /// Whole-block lockstep scheduling (see `Program::lockstep_block`).
+    pub fn lockstep(&mut self) -> &mut Self {
+        self.lockstep_block = true;
+        self
+    }
+
+    /// Bind `label` to the next instruction.
+    pub fn label(&mut self, label: &str) -> &mut Self {
+        let prev = self.labels.insert(label.to_string(), self.code.len());
+        assert!(prev.is_none(), "label {label:?} bound twice");
+        self
+    }
+
+    fn push(&mut self, i: Instr) -> &mut Self {
+        self.code.push(i);
+        self
+    }
+
+    // ---- emit helpers (thin, names mirror the IR) ----
+    pub fn mov(&mut self, d: Reg, v: Rval) -> &mut Self {
+        self.push(Instr::Mov(d, v))
+    }
+    pub fn special(&mut self, d: Reg, s: Sreg) -> &mut Self {
+        self.push(Instr::Special(d, s))
+    }
+    pub fn add(&mut self, d: Reg, a: Reg, v: Rval) -> &mut Self {
+        self.push(Instr::Add(d, a, v))
+    }
+    pub fn sub(&mut self, d: Reg, a: Reg, v: Rval) -> &mut Self {
+        self.push(Instr::Sub(d, a, v))
+    }
+    pub fn mul(&mut self, d: Reg, a: Reg, v: Rval) -> &mut Self {
+        self.push(Instr::Mul(d, a, v))
+    }
+    pub fn div(&mut self, d: Reg, a: Reg, v: Rval) -> &mut Self {
+        self.push(Instr::Div(d, a, v))
+    }
+    pub fn rem(&mut self, d: Reg, a: Reg, v: Rval) -> &mut Self {
+        self.push(Instr::Rem(d, a, v))
+    }
+    pub fn shr(&mut self, d: Reg, a: Reg, v: Rval) -> &mut Self {
+        self.push(Instr::Shr(d, a, v))
+    }
+    pub fn shl(&mut self, d: Reg, a: Reg, v: Rval) -> &mut Self {
+        self.push(Instr::Shl(d, a, v))
+    }
+    pub fn and_(&mut self, d: Reg, a: Reg, v: Rval) -> &mut Self {
+        self.push(Instr::And(d, a, v))
+    }
+    pub fn set_lt(&mut self, d: Reg, a: Reg, v: Rval) -> &mut Self {
+        self.push(Instr::SetLt(d, a, v))
+    }
+    pub fn set_ge(&mut self, d: Reg, a: Reg, v: Rval) -> &mut Self {
+        self.push(Instr::SetGe(d, a, v))
+    }
+    pub fn set_eq(&mut self, d: Reg, a: Reg, v: Rval) -> &mut Self {
+        self.push(Instr::SetEq(d, a, v))
+    }
+    pub fn comb(&mut self, op: CombOp, d: Reg, a: Reg, v: Rval) -> &mut Self {
+        self.push(Instr::Comb(op, d, a, v))
+    }
+    pub fn ldg(&mut self, d: Reg, buf: u8, addr: Reg) -> &mut Self {
+        self.push(Instr::LdG(d, buf, addr))
+    }
+    pub fn stg(&mut self, buf: u8, addr: Reg, src: Reg) -> &mut Self {
+        self.push(Instr::StG(buf, addr, src))
+    }
+    pub fn lds(&mut self, d: Reg, addr: Reg) -> &mut Self {
+        self.push(Instr::LdS(d, addr))
+    }
+    pub fn sts(&mut self, addr: Reg, src: Reg) -> &mut Self {
+        self.push(Instr::StS(addr, src))
+    }
+    pub fn shfl_down(&mut self, d: Reg, s: Reg, delta: u32) -> &mut Self {
+        self.push(Instr::ShflDown(d, s, delta))
+    }
+    pub fn bar(&mut self) -> &mut Self {
+        self.push(Instr::Bar)
+    }
+    pub fn halt(&mut self) -> &mut Self {
+        self.push(Instr::Halt)
+    }
+
+    // ---- label-target branches (fixed up at finish) ----
+    pub fn braz(&mut self, r: Reg, label: &str) -> &mut Self {
+        self.fixups.push((self.code.len(), label.to_string()));
+        self.push(Instr::BraZ(r, usize::MAX))
+    }
+    pub fn branz(&mut self, r: Reg, label: &str) -> &mut Self {
+        self.fixups.push((self.code.len(), label.to_string()));
+        self.push(Instr::BraNZ(r, usize::MAX))
+    }
+    pub fn jmp(&mut self, label: &str) -> &mut Self {
+        self.fixups.push((self.code.len(), label.to_string()));
+        self.push(Instr::Jmp(usize::MAX))
+    }
+
+    /// Resolve labels and validate.
+    pub fn finish(&mut self) -> Result<Program> {
+        let mut code = std::mem::take(&mut self.code);
+        for (pc, label) in self.fixups.drain(..) {
+            let Some(&target) = self.labels.get(&label) else {
+                bail!("{}: undefined label {label:?}", self.name);
+            };
+            code[pc] = match code[pc] {
+                Instr::BraZ(r, _) => Instr::BraZ(r, target),
+                Instr::BraNZ(r, _) => Instr::BraNZ(r, target),
+                Instr::Jmp(_) => Instr::Jmp(target),
+                other => bail!("{}: fixup on non-branch {other:?}", self.name),
+            };
+        }
+        let prog = Program {
+            name: self.name.clone(),
+            code,
+            smem_words: self.smem_words,
+            lockstep_block: self.lockstep_block,
+        };
+        prog.validate()?;
+        Ok(prog)
+    }
+}
+
+/// Immediate operand shorthand.
+pub fn imm(v: f64) -> Rval {
+    Rval::Imm(v)
+}
+
+/// Register operand shorthand.
+pub fn r(reg: Reg) -> Rval {
+    Rval::R(reg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::{DeviceConfig, Gpu, LaunchConfig};
+
+    #[test]
+    fn forward_and_backward_labels() {
+        // Count down from 5: out[gid] = number of loop iterations.
+        let mut a = Asm::new("loop5");
+        a.special(0, Sreg::GlobalId)
+            .mov(1, imm(5.0))
+            .mov(2, imm(0.0))
+            .label("top")
+            .branz(1, "body")
+            .jmp("end")
+            .label("body")
+            .sub(1, 1, imm(1.0))
+            .add(2, 2, imm(1.0))
+            .jmp("top")
+            .label("end")
+            .stg(0, 0, 2)
+            .halt();
+        let p = a.finish().unwrap();
+        let mut gpu = Gpu::new(DeviceConfig::g80());
+        let out = gpu.alloc(32);
+        gpu.launch(&p, LaunchConfig { grid: 1, block: 32 }).unwrap();
+        assert!(gpu.read(out).iter().all(|&v| v == 5.0));
+    }
+
+    #[test]
+    fn undefined_label_is_error() {
+        let mut a = Asm::new("bad");
+        a.jmp("nowhere").halt();
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn duplicate_label_panics() {
+        let result = std::panic::catch_unwind(|| {
+            let mut a = Asm::new("dup");
+            a.label("x").label("x");
+        });
+        assert!(result.is_err());
+    }
+
+    #[test]
+    fn lockstep_and_smem_flags() {
+        let mut a = Asm::new("flags");
+        a.smem(64).lockstep().halt();
+        let p = a.finish().unwrap();
+        assert_eq!(p.smem_words, 64);
+        assert!(p.lockstep_block);
+    }
+}

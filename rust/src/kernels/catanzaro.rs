@@ -1,0 +1,141 @@
+//! Catanzaro's two-stage parallel reduction (paper §2.3, Listing 1) —
+//! the baseline the paper improves on.
+//!
+//! Stage 1: `GS` persistent work-items grid-stride the input, each
+//! accumulating privately; each work-group then tree-reduces its
+//! accumulators in local memory *with a barrier per level* and writes
+//! `buf1[bid]`. Stage 2 is the same kernel run with one work-group
+//! over the stage-1 partials.
+
+use anyhow::{bail, Result};
+
+use super::builder::{imm, r, Asm};
+use super::harris::finite_identity;
+use crate::gpusim::ir::{CombOp, Program, Sreg};
+
+const TID: u8 = 0;
+const GIDX: u8 = 1;
+const ACC: u8 = 2;
+const S: u8 = 3;
+const GS: u8 = 4;
+const T0: u8 = 5;
+const T1: u8 = 6;
+const T2: u8 = 7;
+
+/// Build the Catanzaro kernel for `n` input elements (guarded
+/// persistent loop — any `n` works, exactly as Listing 1).
+pub fn kernel(op: CombOp, block: u32, n: u64) -> Result<Program> {
+    if !block.is_power_of_two() || block < 2 {
+        bail!("catanzaro kernel needs a power-of-two block >= 2, got {block}");
+    }
+    let mut a = Asm::new(format!("catanzaro_{op:?}_b{block}"));
+    a.smem(block);
+    let ident = finite_identity(op);
+
+    // -- Step 1: private sequential reduction, interleaved (stride GS).
+    a.special(TID, Sreg::Tid)
+        .special(GIDX, Sreg::GlobalId)
+        .special(GS, Sreg::GlobalSize)
+        .mov(ACC, imm(ident));
+    a.label("loop");
+    // while (global_index < length)
+    a.set_lt(T0, GIDX, imm(n as f64))
+        .braz(T0, "steptwo")
+        .ldg(T1, 0, GIDX)
+        .comb(op, ACC, ACC, r(T1))
+        .add(GIDX, GIDX, r(GS))
+        .jmp("loop");
+
+    // -- Step 2: park the accumulator in local memory.
+    a.label("steptwo");
+    a.sts(TID, ACC).bar();
+
+    // -- Step 3: barriered tree (lines 18–24 of Listing 1).
+    a.mov(S, imm((block / 2) as f64));
+    a.label("tree");
+    a.set_lt(T0, TID, r(S))
+        .braz(T0, "skip")
+        .add(T1, TID, r(S))
+        .lds(T2, T1)
+        .lds(ACC, TID)
+        .comb(op, ACC, ACC, r(T2))
+        .sts(TID, ACC)
+        .label("skip")
+        .bar()
+        .shr(S, S, imm(1.0))
+        .branz(S, "tree");
+
+    // -- Epilogue: work-item 0 writes the group's partial.
+    a.set_eq(T0, TID, imm(0.0))
+        .braz(T0, "end")
+        .lds(T1, TID)
+        .special(T2, Sreg::Bid)
+        .stg(1, T2, T1)
+        .label("end")
+        .halt();
+    a.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::{DeviceConfig, Gpu, LaunchConfig};
+
+    #[test]
+    fn two_stage_sums_exactly() {
+        let n = 10_000usize;
+        let data: Vec<f64> = (0..n).map(|i| (i % 101) as f64).collect();
+        let want: f64 = data.iter().sum();
+
+        let mut gpu = Gpu::new(DeviceConfig::amd_gcn());
+        let block = 256u32;
+        let grid = 8u32;
+        let _in = gpu.alloc_from(&data);
+        let parts = gpu.alloc(grid as usize);
+
+        let k1 = kernel(CombOp::Add, block, n as u64).unwrap();
+        gpu.launch(&k1, LaunchConfig { grid, block }).unwrap();
+        let partials = gpu.read(parts).to_vec();
+        assert_eq!(partials.iter().sum::<f64>(), want, "stage-1 partials");
+
+        // Stage 2: 1 work-group over the partials (padded to block).
+        let mut padded = partials.clone();
+        padded.resize(block as usize, 0.0);
+        gpu.reset();
+        let _p = gpu.alloc_from(&padded);
+        let out = gpu.alloc(1);
+        let k2 = kernel(CombOp::Add, block, block as u64).unwrap();
+        gpu.launch(&k2, LaunchConfig { grid: 1, block }).unwrap();
+        assert_eq!(gpu.read(out)[0], want);
+    }
+
+    #[test]
+    fn barriers_present_each_level() {
+        let mut gpu = Gpu::new(DeviceConfig::g80());
+        let data: Vec<f64> = (0..1024).map(|i| i as f64).collect();
+        let _in = gpu.alloc_from(&data);
+        let _out = gpu.alloc(4);
+        let k = kernel(CombOp::Add, 256, 1024).unwrap();
+        let stats = gpu.launch(&k, LaunchConfig { grid: 4, block: 256 }).unwrap();
+        // 1 post-store barrier + log2(256) = 8 tree barriers.
+        assert!(stats.counters.barriers >= 9, "got {}", stats.counters.barriers);
+    }
+
+    #[test]
+    fn min_reduction_matches() {
+        let data: Vec<f64> = (0..5000).map(|i| ((i * 37) % 1000) as f64 - 500.0).collect();
+        let want = data.iter().cloned().fold(f64::INFINITY, f64::min);
+        let mut gpu = Gpu::new(DeviceConfig::tesla_c2075());
+        let _in = gpu.alloc_from(&data);
+        let parts = gpu.alloc(4);
+        let k = kernel(CombOp::Min, 128, 5000).unwrap();
+        gpu.launch(&k, LaunchConfig { grid: 4, block: 128 }).unwrap();
+        let got = gpu.read(parts).iter().cloned().fold(f64::INFINITY, f64::min);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn rejects_bad_block() {
+        assert!(kernel(CombOp::Add, 100, 10).is_err());
+    }
+}

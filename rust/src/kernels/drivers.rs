@@ -1,0 +1,237 @@
+//! Host-side drivers: allocate device buffers, chain kernel launches
+//! until a single value remains, and aggregate the per-launch stats.
+//!
+//! These are the simulator analogue of the host code in Harris' and
+//! Catanzaro's samples, and what the benchmark harness calls.
+
+use anyhow::Result;
+
+use super::harris::{self, finite_identity};
+use super::{catanzaro, jradi, luitjens};
+use crate::gpusim::ir::CombOp;
+use crate::gpusim::trace::RunStats;
+use crate::gpusim::{Gpu, LaunchConfig};
+
+/// Result of a full device-side reduction.
+#[derive(Debug, Clone)]
+pub struct Outcome {
+    pub value: f64,
+    pub run: RunStats,
+}
+
+/// Pad `data` with the op identity up to a multiple of `multiple`.
+fn padded(data: &[f64], multiple: usize, ident: f64) -> Vec<f64> {
+    let n = data.len().next_multiple_of(multiple.max(1));
+    let mut v = Vec::with_capacity(n);
+    v.extend_from_slice(data);
+    v.resize(n, ident);
+    v
+}
+
+/// Harris kernel `k` (1–7), launched repeatedly until one value
+/// remains. `block` must be a power of two >= 64.
+pub fn harris_reduce(gpu: &mut Gpu, k: u8, data: &[f64], op: CombOp, block: u32) -> Result<Outcome> {
+    let ident = finite_identity(op);
+    let ws = gpu.cfg().warp_size;
+    let mut run = RunStats::default();
+
+    let mut cur: Vec<f64>;
+    if k == 7 {
+        // K7: one persistent launch over the whole input, sized by the
+        // device's resident-wave GS policy (same as the two-stage
+        // kernels — "multiple elements per thread" is a persistent
+        // style).
+        let grid = (gpu.cfg().global_size(block) / block).max(1);
+        let per_launch = (2 * block * grid) as usize;
+        let padded_in = padded(data, per_launch, ident);
+        gpu.reset();
+        let _in = gpu.alloc_from(&padded_in);
+        let parts = gpu.alloc(grid as usize);
+        let prog = harris::build(7, op, block, ws, padded_in.len() as u64)?;
+        run.push(gpu.launch(&prog, LaunchConfig { grid, block })?);
+        cur = gpu.read(parts).to_vec();
+        // ...then fall through to K6 launches on the partials.
+    } else {
+        cur = data.to_vec();
+    }
+
+    let fold_k = if k == 7 { 6 } else { k };
+    let per_block = harris::elems_per_block(fold_k, block) as usize;
+    while cur.len() > 1 {
+        let padded_in = padded(&cur, per_block, ident);
+        let grid = (padded_in.len() / per_block) as u32;
+        gpu.reset();
+        let _in = gpu.alloc_from(&padded_in);
+        let parts = gpu.alloc(grid as usize);
+        let prog = harris::build(fold_k, op, block, ws, padded_in.len() as u64)?;
+        run.push(gpu.launch(&prog, LaunchConfig { grid, block })?);
+        cur = gpu.read(parts).to_vec();
+    }
+    Ok(Outcome { value: cur[0], run })
+}
+
+/// Persistent-kernel grid: enough work-groups to fill the device once
+/// (the paper's GS), but never more than one block per `min_elems`
+/// elements.
+fn persistent_grid(gpu: &Gpu, n: usize, block: u32, min_elems_per_block: u32) -> u32 {
+    let gs_blocks = gpu.cfg().global_size(block) / block;
+    let need = (n as u64).div_ceil(min_elems_per_block as u64) as u32;
+    gs_blocks.min(need).max(1)
+}
+
+/// Catanzaro's two-stage reduction (the baseline of Table 2).
+pub fn catanzaro_reduce(gpu: &mut Gpu, data: &[f64], op: CombOp, block: u32) -> Result<Outcome> {
+    let n = data.len();
+    let grid = persistent_grid(gpu, n, block, block);
+    let mut run = RunStats::default();
+
+    gpu.reset();
+    let _in = gpu.alloc_from(data);
+    let parts = gpu.alloc(grid as usize);
+    let k1 = catanzaro::kernel(op, block, n as u64)?;
+    run.push(gpu.launch(&k1, LaunchConfig { grid, block })?);
+    let partials = gpu.read(parts).to_vec();
+
+    // Stage 2: one work-group over the partials.
+    gpu.reset();
+    let _p = gpu.alloc_from(&partials);
+    let out = gpu.alloc(1);
+    let k2 = catanzaro::kernel(op, block, partials.len() as u64)?;
+    run.push(gpu.launch(&k2, LaunchConfig { grid: 1, block })?);
+    let value = gpu.read(out)[0];
+    Ok(Outcome { value, run })
+}
+
+/// The paper's approach with unroll factor `f` (Table 2 / Figs 3–4).
+pub fn jradi_reduce(gpu: &mut Gpu, data: &[f64], op: CombOp, f: u32, block: u32) -> Result<Outcome> {
+    let n = data.len();
+    let grid = persistent_grid(gpu, n, block, block);
+    let mut run = RunStats::default();
+
+    gpu.reset();
+    let _in = gpu.alloc_from(data);
+    let parts = gpu.alloc(grid as usize);
+    let k1 = jradi::kernel(op, block, n as u64, f)?;
+    run.push(gpu.launch(&k1, LaunchConfig { grid, block })?);
+    let partials = gpu.read(parts).to_vec();
+
+    gpu.reset();
+    let _p = gpu.alloc_from(&partials);
+    let out = gpu.alloc(1);
+    let k2 = jradi::kernel(op, block, partials.len() as u64, f.min(4))?;
+    run.push(gpu.launch(&k2, LaunchConfig { grid: 1, block })?);
+    let value = gpu.read(out)[0];
+    Ok(Outcome { value, run })
+}
+
+/// Luitjens' shuffle reduction (extension kernel, ablation bench).
+pub fn luitjens_reduce(gpu: &mut Gpu, data: &[f64], op: CombOp, block: u32) -> Result<Outcome> {
+    let ws = gpu.cfg().warp_size;
+    let n = data.len();
+    let grid = persistent_grid(gpu, n, block, block);
+    let mut run = RunStats::default();
+
+    gpu.reset();
+    let _in = gpu.alloc_from(data);
+    let parts = gpu.alloc(grid as usize);
+    let k1 = luitjens::kernel(op, block, ws, n as u64)?;
+    run.push(gpu.launch(&k1, LaunchConfig { grid, block })?);
+    let partials = gpu.read(parts).to_vec();
+
+    gpu.reset();
+    let _p = gpu.alloc_from(&partials);
+    let out = gpu.alloc(1);
+    let k2 = luitjens::kernel(op, block, ws, partials.len() as u64)?;
+    run.push(gpu.launch(&k2, LaunchConfig { grid: 1, block })?);
+    let value = gpu.read(out)[0];
+    Ok(Outcome { value, run })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::DeviceConfig;
+
+    fn data(n: usize) -> Vec<f64> {
+        (0..n).map(|i| ((i * 2_654_435_761) % 2001) as f64 - 1000.0).collect()
+    }
+
+    fn oracle(d: &[f64], op: CombOp) -> f64 {
+        d.iter().fold(op.identity(), |a, &b| op.apply(a, b))
+    }
+
+    #[test]
+    fn all_harris_kernels_reduce_exactly() {
+        let d = data(100_000);
+        let want = oracle(&d, CombOp::Add);
+        let mut gpu = Gpu::new(DeviceConfig::g80());
+        for k in 1..=7u8 {
+            let out = harris_reduce(&mut gpu, k, &d, CombOp::Add, 128).unwrap();
+            assert_eq!(out.value, want, "K{k}");
+            assert!(out.run.total_time_s() > 0.0);
+        }
+    }
+
+    #[test]
+    fn harris_ladder_is_monotone_fastest_last() {
+        // The qualitative Table 1 claim: K7 beats K1 by a wide margin.
+        let d = data(1 << 18);
+        let mut gpu = Gpu::new(DeviceConfig::g80());
+        let t1 = harris_reduce(&mut gpu, 1, &d, CombOp::Add, 128).unwrap().run.total_time_s();
+        let t7 = harris_reduce(&mut gpu, 7, &d, CombOp::Add, 128).unwrap().run.total_time_s();
+        assert!(t7 * 4.0 < t1, "K7 ({t7:.2e}s) should be >4x faster than K1 ({t1:.2e}s)");
+    }
+
+    #[test]
+    fn catanzaro_and_jradi_agree_with_oracle() {
+        let d = data(777_777);
+        let mut gpu = Gpu::new(DeviceConfig::amd_gcn());
+        let want = oracle(&d, CombOp::Add);
+        assert_eq!(catanzaro_reduce(&mut gpu, &d, CombOp::Add, 256).unwrap().value, want);
+        for f in [1, 3, 8] {
+            assert_eq!(jradi_reduce(&mut gpu, &d, CombOp::Add, f, 256).unwrap().value, want, "F={f}");
+        }
+    }
+
+    #[test]
+    fn jradi_beats_catanzaro_at_f8() {
+        // The paper's headline: unrolled+branchless beats the baseline.
+        let d = data(1 << 20);
+        let mut gpu = Gpu::new(DeviceConfig::amd_gcn());
+        let tc = catanzaro_reduce(&mut gpu, &d, CombOp::Add, 256).unwrap().run.total_time_s();
+        let tj = jradi_reduce(&mut gpu, &d, CombOp::Add, 8, 256).unwrap().run.total_time_s();
+        assert!(tj < tc, "jradi F=8 ({tj:.3e}s) should beat catanzaro ({tc:.3e}s)");
+    }
+
+    #[test]
+    fn luitjens_reduces_exactly() {
+        let d = data(50_000);
+        let mut gpu = Gpu::new(DeviceConfig::tesla_c2075());
+        let want = oracle(&d, CombOp::Add);
+        assert_eq!(luitjens_reduce(&mut gpu, &d, CombOp::Add, 256).unwrap().value, want);
+    }
+
+    #[test]
+    fn min_max_prod_all_drivers() {
+        let d: Vec<f64> = data(10_000).iter().map(|x| 1.0 + x.abs() / 1e7).collect();
+        let mut gpu = Gpu::new(DeviceConfig::amd_gcn());
+        for op in [CombOp::Max, CombOp::Min, CombOp::Mul] {
+            let want = oracle(&d, op);
+            let got = jradi_reduce(&mut gpu, &d, op, 8, 128).unwrap().value;
+            let rel = ((got - want) / want).abs();
+            assert!(rel < 1e-12, "{op:?}: {got} vs {want}");
+            let got_c = catanzaro_reduce(&mut gpu, &d, op, 128).unwrap().value;
+            let rel_c = ((got_c - want) / want).abs();
+            assert!(rel_c < 1e-12, "cat {op:?}: {got_c} vs {want}");
+        }
+    }
+
+    #[test]
+    fn single_element_input() {
+        let mut gpu = Gpu::new(DeviceConfig::g80());
+        let out = harris_reduce(&mut gpu, 3, &[42.0], CombOp::Add, 128).unwrap();
+        assert_eq!(out.value, 42.0);
+        let mut gpu2 = Gpu::new(DeviceConfig::amd_gcn());
+        assert_eq!(jradi_reduce(&mut gpu2, &[7.0], CombOp::Add, 8, 64).unwrap().value, 7.0);
+    }
+}

@@ -1,0 +1,337 @@
+//! Harris' seven CUDA reduction kernels (paper §2.1, Table 1),
+//! re-expressed in the gpusim IR. Each kernel reduces its block's
+//! slice of `buf0` into `buf1[bid]`; the host driver in
+//! [`super::drivers`] chains launches until one value remains.
+//!
+//! The performance ladder the paper reports emerges from the machine
+//! model:
+//! * K1 — interleaved addressing, `%` operator, divergent branch.
+//! * K2 — interleaved addressing via index mapping: divergence gone,
+//!   strided shared-memory access -> bank conflicts.
+//! * K3 — sequential addressing: conflict-free.
+//! * K4 — first combine during global load (halves the grid).
+//! * K5 — unrolls the last warp (no barrier/branch inside a warp).
+//! * K6 — fully unrolled tree (loop overhead gone).
+//! * K7 — multiple elements per thread (algorithm cascading /
+//!   grid-stride), amortizing the tree over many loads.
+
+use anyhow::{bail, Result};
+
+use super::builder::{imm, r, Asm};
+use crate::gpusim::ir::{CombOp, Program, Sreg};
+
+// Register conventions (shared by all kernels in this module):
+// r0 = tid, r1 = global index i, r2 = value/acc, r3..r9 = temps.
+const TID: u8 = 0;
+const GIDX: u8 = 1;
+const ACC: u8 = 2;
+const S: u8 = 3;
+const T0: u8 = 4;
+const T1: u8 = 5;
+const T2: u8 = 6;
+const T3: u8 = 7;
+
+/// Finite identity for masked/padded lanes (f32-safe for min/max —
+/// ±FLT_MAX instead of ±inf so the algebraic mask never forms 0·inf).
+pub fn finite_identity(op: CombOp) -> f64 {
+    match op {
+        CombOp::Add => 0.0,
+        CombOp::Mul => 1.0,
+        CombOp::Max => -(f32::MAX as f64),
+        CombOp::Min => f32::MAX as f64,
+    }
+}
+
+fn check_block(block: u32) -> Result<()> {
+    if !block.is_power_of_two() || block < 64 {
+        bail!("harris kernels need a power-of-two block >= 64, got {block}");
+    }
+    Ok(())
+}
+
+/// Epilogue: thread 0 writes `smem[0]` to `buf1[bid]`.
+fn write_out(a: &mut Asm) {
+    a.set_eq(T0, TID, imm(0.0))
+        .braz(T0, "end")
+        .lds(T1, TID) // tid == 0 here, so this reads smem[0]
+        .special(T2, Sreg::Bid)
+        .stg(1, T2, T1)
+        .label("end")
+        .halt();
+}
+
+/// K1: `smem[tid] = g[i]` then interleaved tree with `%` and a
+/// divergent branch (Listing "reduce0" in Harris).
+pub fn k1(op: CombOp, block: u32) -> Result<Program> {
+    check_block(block)?;
+    let mut a = Asm::new(format!("harris_k1_{op:?}_b{block}"));
+    a.smem(block);
+    a.special(TID, Sreg::Tid)
+        .special(GIDX, Sreg::GlobalId)
+        .ldg(ACC, 0, GIDX)
+        .sts(TID, ACC)
+        .bar()
+        .mov(S, imm(1.0));
+    a.label("tree");
+    // if (tid % (2*s) == 0) smem[tid] = comb(smem[tid], smem[tid+s])
+    a.mul(T0, S, imm(2.0))
+        .rem(T1, TID, r(T0)) // expensive % — K1's first sin
+        .branz(T1, "skip") // divergent: active lanes are scattered
+        .add(T2, TID, r(S))
+        .lds(T3, T2)
+        .lds(ACC, TID)
+        .comb(op, ACC, ACC, r(T3))
+        .sts(TID, ACC)
+        .label("skip")
+        .bar()
+        .mul(S, S, imm(2.0))
+        .set_lt(T0, S, imm(block as f64))
+        .branz(T0, "tree");
+    write_out(&mut a);
+    a.finish()
+}
+
+/// K2: same interleaved tree, but `index = 2*s*tid` keeps active
+/// threads contiguous (no divergence) — at the cost of strided
+/// shared-memory addressing: bank conflicts.
+pub fn k2(op: CombOp, block: u32) -> Result<Program> {
+    check_block(block)?;
+    let mut a = Asm::new(format!("harris_k2_{op:?}_b{block}"));
+    a.smem(block);
+    a.special(TID, Sreg::Tid)
+        .special(GIDX, Sreg::GlobalId)
+        .ldg(ACC, 0, GIDX)
+        .sts(TID, ACC)
+        .bar()
+        .mov(S, imm(1.0));
+    a.label("tree");
+    // index = 2*s*tid; if (index < block) smem[index] ⊗= smem[index+s]
+    a.mul(T0, S, imm(2.0))
+        .mul(T0, T0, r(TID)) // strided smem index
+        .set_lt(T1, T0, imm(block as f64))
+        .braz(T1, "skip")
+        .add(T2, T0, r(S))
+        .lds(T3, T2) // conflicting banks for s >= banks/2
+        .lds(ACC, T0)
+        .comb(op, ACC, ACC, r(T3))
+        .sts(T0, ACC)
+        .label("skip")
+        .bar()
+        .mul(S, S, imm(2.0))
+        .set_lt(T0, S, imm(block as f64))
+        .branz(T0, "tree");
+    write_out(&mut a);
+    a.finish()
+}
+
+/// Shared sequential-addressing tree loop (K3/K4): barrier per level,
+/// `if (tid < s)` guard.
+fn tree_sequential(a: &mut Asm, op: CombOp, block: u32) {
+    a.mov(S, imm((block / 2) as f64));
+    a.label("tree");
+    a.set_lt(T0, TID, r(S))
+        .braz(T0, "skip")
+        .add(T1, TID, r(S))
+        .lds(T2, T1)
+        .lds(ACC, TID)
+        .comb(op, ACC, ACC, r(T2))
+        .sts(TID, ACC)
+        .label("skip")
+        .bar()
+        .shr(S, S, imm(1.0))
+        .branz(S, "tree");
+}
+
+/// Warp-synchronous unrolled tail (K5/K6): levels `ws .. 1` without
+/// barriers, guarded by a single `tid < ws` branch.
+fn tree_warp_unrolled(a: &mut Asm, op: CombOp, ws: u32) {
+    a.set_lt(T0, TID, imm(ws as f64)).braz(T0, "wdone");
+    let mut s = ws;
+    while s >= 1 {
+        a.add(T1, TID, imm(s as f64)).lds(T2, T1).lds(ACC, TID).comb(op, ACC, ACC, r(T2)).sts(TID, ACC);
+        s /= 2;
+    }
+    a.label("wdone");
+}
+
+/// K3: sequential addressing — conflict-free, still one idle half.
+pub fn k3(op: CombOp, block: u32) -> Result<Program> {
+    check_block(block)?;
+    let mut a = Asm::new(format!("harris_k3_{op:?}_b{block}"));
+    a.smem(block);
+    a.special(TID, Sreg::Tid)
+        .special(GIDX, Sreg::GlobalId)
+        .ldg(ACC, 0, GIDX)
+        .sts(TID, ACC)
+        .bar();
+    tree_sequential(&mut a, op, block);
+    write_out(&mut a);
+    a.finish()
+}
+
+/// Prologue for K4–K6: `i = bid*(2*block) + tid`, first combine during
+/// the global load (`g[i] ⊗ g[i+block]`), grid halved by the host.
+fn load_two(a: &mut Asm, op: CombOp, block: u32) {
+    a.special(TID, Sreg::Tid)
+        .special(T0, Sreg::Bid)
+        .mul(GIDX, T0, imm(2.0 * block as f64))
+        .add(GIDX, GIDX, r(TID))
+        .ldg(ACC, 0, GIDX)
+        .add(T1, GIDX, imm(block as f64))
+        .ldg(T2, 0, T1)
+        .comb(op, ACC, ACC, r(T2))
+        .sts(TID, ACC)
+        .bar();
+}
+
+/// K4: first combine during global load.
+pub fn k4(op: CombOp, block: u32) -> Result<Program> {
+    check_block(block)?;
+    let mut a = Asm::new(format!("harris_k4_{op:?}_b{block}"));
+    a.smem(block);
+    load_two(&mut a, op, block);
+    tree_sequential(&mut a, op, block);
+    write_out(&mut a);
+    a.finish()
+}
+
+/// K5: K4 + unrolled, barrier-free last warp. `ws` is the device warp
+/// size (32 on the G80; Harris' "last 6 iterations").
+pub fn k5(op: CombOp, block: u32, ws: u32) -> Result<Program> {
+    check_block(block)?;
+    if ws >= block {
+        bail!("k5 needs block > warp size");
+    }
+    let mut a = Asm::new(format!("harris_k5_{op:?}_b{block}"));
+    a.smem(block);
+    load_two(&mut a, op, block);
+    // Looped levels while s > ws (condition checked before the body so
+    // block == 2*ws does not double-combine the s == ws level) …
+    a.mov(S, imm((block / 2) as f64));
+    a.label("tree");
+    a.set_ge(T0, S, imm(ws as f64 + 1.0))
+        .braz(T0, "warptail")
+        .set_lt(T0, TID, r(S))
+        .braz(T0, "skip")
+        .add(T1, TID, r(S))
+        .lds(T2, T1)
+        .lds(ACC, TID)
+        .comb(op, ACC, ACC, r(T2))
+        .sts(TID, ACC)
+        .label("skip")
+        .bar()
+        .shr(S, S, imm(1.0))
+        .jmp("tree");
+    a.label("warptail");
+    // … then the warp-synchronous unrolled tail (s = ws … 1).
+    tree_warp_unrolled(&mut a, op, ws);
+    write_out(&mut a);
+    a.finish()
+}
+
+/// K6: completely unrolled tree — per-level immediates, no loop
+/// control instructions at all.
+pub fn k6(op: CombOp, block: u32, ws: u32) -> Result<Program> {
+    check_block(block)?;
+    if ws >= block {
+        bail!("k6 needs block > warp size");
+    }
+    let mut a = Asm::new(format!("harris_k6_{op:?}_b{block}"));
+    a.smem(block);
+    load_two(&mut a, op, block);
+    let mut s = block / 2;
+    let mut level = 0;
+    while s > ws {
+        let skip = format!("skip{level}");
+        a.set_lt(T0, TID, imm(s as f64))
+            .braz(T0, &skip)
+            .add(T1, TID, imm(s as f64))
+            .lds(T2, T1)
+            .lds(ACC, TID)
+            .comb(op, ACC, ACC, r(T2))
+            .sts(TID, ACC)
+            .label(&skip)
+            .bar();
+        s /= 2;
+        level += 1;
+    }
+    tree_warp_unrolled(&mut a, op, ws);
+    write_out(&mut a);
+    a.finish()
+}
+
+/// K7: multiple elements per thread — persistent grid-stride loop
+/// combining two elements per trip, then the K6 tree. `n` must be
+/// padded by the host to a multiple of `2 * block * grid`.
+pub fn k7(op: CombOp, block: u32, ws: u32, n: u64) -> Result<Program> {
+    check_block(block)?;
+    if ws >= block {
+        bail!("k7 needs block > warp size");
+    }
+    let mut a = Asm::new(format!("harris_k7_{op:?}_b{block}"));
+    a.smem(block);
+    let ident = finite_identity(op);
+    // i = bid*(2*block) + tid; stride = 2*GlobalSize
+    a.special(TID, Sreg::Tid)
+        .special(T0, Sreg::Bid)
+        .mul(GIDX, T0, imm(2.0 * block as f64))
+        .add(GIDX, GIDX, r(TID))
+        .special(T3, Sreg::GlobalSize)
+        .mul(T3, T3, imm(2.0))
+        .mov(ACC, imm(ident));
+    a.label("loop");
+    a.set_lt(T0, GIDX, imm(n as f64))
+        .braz(T0, "loaded")
+        .ldg(T1, 0, GIDX)
+        .comb(op, ACC, ACC, r(T1))
+        .add(T2, GIDX, imm(block as f64))
+        .ldg(T1, 0, T2)
+        .comb(op, ACC, ACC, r(T1))
+        .add(GIDX, GIDX, r(T3))
+        .jmp("loop");
+    a.label("loaded");
+    a.sts(TID, ACC).bar();
+    // Fully unrolled tree (as K6).
+    let mut s = block / 2;
+    let mut level = 0;
+    while s > ws {
+        let skip = format!("skip{level}");
+        a.set_lt(T0, TID, imm(s as f64))
+            .braz(T0, &skip)
+            .add(T1, TID, imm(s as f64))
+            .lds(T2, T1)
+            .lds(ACC, TID)
+            .comb(op, ACC, ACC, r(T2))
+            .sts(TID, ACC)
+            .label(&skip)
+            .bar();
+        s /= 2;
+        level += 1;
+    }
+    tree_warp_unrolled(&mut a, op, ws);
+    write_out(&mut a);
+    a.finish()
+}
+
+/// Build kernel version `k` (1–7). `n` is only used by K7.
+pub fn build(k: u8, op: CombOp, block: u32, ws: u32, n: u64) -> Result<Program> {
+    match k {
+        1 => k1(op, block),
+        2 => k2(op, block),
+        3 => k3(op, block),
+        4 => k4(op, block),
+        5 => k5(op, block, ws),
+        6 => k6(op, block, ws),
+        7 => k7(op, block, ws, n),
+        _ => bail!("harris kernel version must be 1..=7, got {k}"),
+    }
+}
+
+/// Elements consumed per block per launch for version `k`.
+pub fn elems_per_block(k: u8, block: u32) -> u32 {
+    if k >= 4 {
+        2 * block
+    } else {
+        block
+    }
+}

@@ -1,0 +1,199 @@
+//! The paper's approach (§3): Catanzaro's two-stage structure with
+//! three interventions —
+//!
+//! 1. **Loop unrolling in global memory** (Listing 4): each persistent
+//!    work-item consumes `F` strided elements per loop trip, each
+//!    guarded by the **algebraic mask** `(i_k < n)` so no `if` is
+//!    emitted: `idx = flag * i_k` (reads element 0 when out of range)
+//!    and `v' = flag*(v - ident) + ident` (contributes the identity).
+//! 2. **Persistent threads** (§2.5): the launch uses the device's GS;
+//!    the grid-stride loop runs until the data is exhausted.
+//! 3. **Branch-free, barrier-free tree** (Listing 6):
+//!    `scratch[tid] ⊗= flag * scratch[tid + flag*iPos]` keeps every
+//!    work-item on the same instruction; the kernel is built with
+//!    `lockstep_block` — the whole-group-in-lockstep machine the
+//!    paper's correctness argument assumes (DESIGN.md §Soundness).
+
+use anyhow::{bail, Result};
+
+use super::builder::{imm, r, Asm};
+use super::harris::finite_identity;
+use crate::gpusim::ir::{CombOp, Program, Sreg};
+
+const TID: u8 = 0;
+const I0: u8 = 1; // leading global index of the trip
+const ACC: u8 = 2;
+const IPOS: u8 = 3;
+const GS: u8 = 4;
+const FGS: u8 = 5; // F * GS (trip stride)
+const IK: u8 = 6; // per-load strided index
+const FLAG: u8 = 7;
+const NFLAG: u8 = 12; // complementary flag — Listing 5's (a >= b) term
+const IDX: u8 = 8;
+const V: u8 = 9;
+const T0: u8 = 10;
+const T1: u8 = 11;
+
+/// Build the paper's kernel for `n` elements with unroll factor `f`.
+///
+/// Emits `f` statically-replicated masked loads per trip — *manual*
+/// unrolling, which the paper found consistently beat `#pragma unroll`.
+pub fn kernel(op: CombOp, block: u32, n: u64, f: u32) -> Result<Program> {
+    if !block.is_power_of_two() || block < 2 {
+        bail!("jradi kernel needs a power-of-two block >= 2, got {block}");
+    }
+    if f == 0 || f > 64 {
+        bail!("unroll factor must be in 1..=64, got {f}");
+    }
+    let mut a = Asm::new(format!("jradi_{op:?}_b{block}_f{f}"));
+    a.smem(block).lockstep();
+    let ident = finite_identity(op);
+
+    // -- Step 1 (Listing 4): persistent loop, F masked loads per trip.
+    a.special(TID, Sreg::Tid)
+        .special(I0, Sreg::GlobalId)
+        .special(GS, Sreg::GlobalSize)
+        .mul(FGS, GS, imm(f as f64))
+        .mov(ACC, imm(ident));
+    a.label("loop");
+    // for (i0 = GID; i0 < length; i0 += F*GS)
+    a.set_lt(T0, I0, imm(n as f64)).braz(T0, "tree_entry");
+    a.mov(IK, r(I0));
+    for k in 0..f {
+        // flag = (i_k < n); idx = flag * i_k  — branch-free guard.
+        // v' = flag*v + (1-flag)*ident is Listing 5's mutually-
+        // exclusive pair ((a<b)*a + (a>=b)*b): no absorption, finite
+        // identities for min/max (harris::finite_identity).
+        a.set_lt(FLAG, IK, imm(n as f64))
+            .set_ge(NFLAG, IK, imm(n as f64))
+            .mul(IDX, FLAG, r(IK))
+            .ldg(V, 0, IDX)
+            .mul(V, V, r(FLAG))
+            .mul(T0, NFLAG, imm(ident))
+            .add(V, V, r(T0))
+            .comb(op, ACC, ACC, r(V));
+        if k + 1 < f {
+            a.add(IK, IK, r(GS));
+        }
+    }
+    a.add(I0, I0, r(FGS)).jmp("loop");
+
+    // -- Step 2: accumulator to local memory. No barrier: the whole
+    //    group executes in lockstep (see module docs).
+    a.label("tree_entry");
+    a.sts(TID, ACC);
+
+    // -- Step 3 (Listing 6): branch-free, barrier-free halving tree.
+    a.mov(IPOS, imm((block / 2) as f64));
+    a.label("tree");
+    // bFlag = iLI < iPos
+    a.set_lt(FLAG, TID, r(IPOS))
+        .set_ge(NFLAG, TID, r(IPOS))
+        // addr = iLI + bFlag*iPos
+        .mul(T0, FLAG, r(IPOS))
+        .add(T0, T0, r(TID))
+        .lds(V, T0)
+        // masked combine: v' = flag*v + (1-flag)*ident (Listing 5)
+        .mul(V, V, r(FLAG))
+        .mul(T0, NFLAG, imm(ident))
+        .add(V, V, r(T0))
+        .lds(T1, TID)
+        .comb(op, T1, T1, r(V))
+        .sts(TID, T1)
+        // iPos >>= 1
+        .shr(IPOS, IPOS, imm(1.0))
+        .branz(IPOS, "tree");
+
+    // -- Epilogue: work-item 0 writes the group partial.
+    a.set_eq(T0, TID, imm(0.0))
+        .braz(T0, "end")
+        .lds(T1, TID)
+        .special(T0, Sreg::Bid)
+        .stg(1, T0, T1)
+        .label("end")
+        .halt();
+    a.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::trace::KernelStats;
+    use crate::gpusim::{DeviceConfig, Gpu, LaunchConfig};
+
+    fn run(op: CombOp, n: usize, f: u32, block: u32, grid: u32) -> (Vec<f64>, KernelStats) {
+        let data: Vec<f64> = (0..n).map(|i| ((i * 37) % 2001) as f64 - 1000.0).collect();
+        let mut gpu = Gpu::new(DeviceConfig::amd_gcn());
+        let _in = gpu.alloc_from(&data);
+        let parts = gpu.alloc(grid as usize);
+        let k = kernel(op, block, n as u64, f).unwrap();
+        let stats = gpu.launch(&k, LaunchConfig { grid, block }).unwrap();
+        (gpu.read(parts).to_vec(), stats)
+    }
+
+    fn oracle(op: CombOp, n: usize) -> f64 {
+        let data = (0..n).map(|i| ((i * 37) % 2001) as f64 - 1000.0);
+        data.fold(op.identity(), |a, b| op.apply(a, b))
+    }
+
+    #[test]
+    fn sums_exactly_across_f() {
+        for f in [1, 2, 3, 4, 5, 8, 16] {
+            let n = 100_003;
+            let (parts, _) = run(CombOp::Add, n, f, 256, 8);
+            let got: f64 = parts.iter().sum();
+            assert_eq!(got, oracle(CombOp::Add, n), "F={f}");
+        }
+    }
+
+    #[test]
+    fn ragged_tails_masked_not_branched() {
+        // n chosen so the final trip has every masking case.
+        for n in [1usize, 2, 255, 256, 257, 4095, 4097] {
+            let (parts, _) = run(CombOp::Add, n, 4, 64, 4);
+            let got: f64 = parts.iter().sum();
+            assert_eq!(got, oracle(CombOp::Add, n), "n={n}");
+        }
+    }
+
+    #[test]
+    fn min_max_with_finite_identity() {
+        let n = 9999;
+        let (parts, _) = run(CombOp::Max, n, 8, 128, 4);
+        let got = parts.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        assert_eq!(got, oracle(CombOp::Max, n), "max");
+        let (parts, _) = run(CombOp::Min, n, 8, 128, 4);
+        let got = parts.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert_eq!(got, oracle(CombOp::Min, n), "min");
+    }
+
+    #[test]
+    fn tree_is_barrier_free_and_convergent() {
+        let (_, stats) = run(CombOp::Add, 50_000, 8, 256, 8);
+        assert_eq!(stats.counters.barriers, 0, "paper claims zero barriers");
+        // The only divergence allowed is the persistent-loop exit and
+        // the single-writer epilogue — the tree itself is convergent.
+        let ratio = stats.divergence_ratio();
+        assert!(ratio < 0.12, "divergence ratio {ratio} too high");
+    }
+
+    #[test]
+    fn higher_f_fewer_issues() {
+        let (_, s1) = run(CombOp::Add, 1_000_000, 1, 256, 8);
+        let (_, s8) = run(CombOp::Add, 1_000_000, 8, 256, 8);
+        // Loop-control overhead amortizes: fewer warp issues at F=8.
+        assert!(
+            s8.counters.warp_issues < s1.counters.warp_issues,
+            "F=8 {} !< F=1 {}",
+            s8.counters.warp_issues,
+            s1.counters.warp_issues
+        );
+    }
+
+    #[test]
+    fn rejects_bad_args() {
+        assert!(kernel(CombOp::Add, 100, 10, 8).is_err());
+        assert!(kernel(CombOp::Add, 128, 10, 0).is_err());
+        assert!(kernel(CombOp::Add, 128, 10, 65).is_err());
+    }
+}

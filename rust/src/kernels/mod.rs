@@ -1,0 +1,21 @@
+//! The nine device kernels of the paper's lineage, written in the
+//! gpusim IR, plus host-side drivers that chain launches into full
+//! reductions.
+//!
+//! | kernel | module | paper section |
+//! |---|---|---|
+//! | Harris K1–K7 | [`harris`] | §2.1, Table 1 |
+//! | Catanzaro two-stage | [`catanzaro`] | §2.3, Listing 1 |
+//! | Jradi et al. (this paper), unroll factor F | [`jradi`] | §3, Listings 4–6 |
+//! | Luitjens shuffle (extension) | [`luitjens`] | §2.2 |
+
+pub mod builder;
+pub mod catanzaro;
+pub mod drivers;
+pub mod harris;
+pub mod jradi;
+pub mod luitjens;
+
+pub use drivers::{
+    catanzaro_reduce, harris_reduce, jradi_reduce, luitjens_reduce, Outcome,
+};

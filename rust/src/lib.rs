@@ -1,0 +1,55 @@
+//! # parred — A Fast and Generic Parallel Reduction System
+//!
+//! Production-quality reproduction of *"A Fast and Generic GPU-Based
+//! Parallel Reduction Implementation"* (Jradi, do Nascimento, Martins;
+//! 2017) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 1** (build-time Python): the paper's generic two-stage
+//!   reduction as a Pallas kernel — persistent work-groups, unroll
+//!   factor `F`, algebraic (branch-free) tail masking, barrier-free
+//!   in-register trees (`python/compile/kernels/reduce_pallas.py`).
+//! * **Layer 2** (build-time Python): JAX graphs composing the kernel
+//!   (scalar, batched-rows, dot, mean/var), AOT-lowered to HLO text in
+//!   `artifacts/` (`python/compile/{model,aot}.py`).
+//! * **Layer 3** (this crate): the runtime. [`runtime`] loads and
+//!   executes the AOT artifacts via PJRT; [`coordinator`] serves
+//!   reduction requests with routing, dynamic batching and
+//!   backpressure; [`gpusim`] is the SIMT GPU simulator substrate that
+//!   regenerates the paper's evaluation (Tables 1–3, Figures 3–4) on a
+//!   modeled G80 / Tesla C2075 / AMD-class device; [`kernels`] holds
+//!   the nine device kernels (Harris K1–K7, Catanzaro two-stage, the
+//!   paper's approach) written in the simulator's kernel IR;
+//!   [`reduce`] is the host-side reduction library and CPU baselines;
+//!   [`harness`] regenerates every table and figure.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use parred::reduce::{self, Op};
+//!
+//! let data: Vec<f32> = (0..1_000_000).map(|i| i as f32).collect();
+//! let total = reduce::scalar::reduce(&data, Op::Sum);
+//! let fast = reduce::threaded::reduce(&data, Op::Sum, 8);
+//! assert!((total - fast).abs() / total < 1e-3);
+//! ```
+//!
+//! See `examples/` for the end-to-end drivers (PJRT serving path,
+//! golden-section search, counting sort) and `DESIGN.md` for the
+//! paper-to-module map.
+
+pub mod coordinator;
+pub mod gpusim;
+pub mod harness;
+pub mod kernels;
+pub mod reduce;
+pub mod runtime;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// The paper's Table 2/3 workload size: 5,533,214 elements.
+pub const N_PAPER: usize = 5_533_214;
+
+/// Harris' Table 1 workload size: 2^22 = 4,194,304 elements.
+pub const N_HARRIS: usize = 1 << 22;

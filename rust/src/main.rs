@@ -1,0 +1,269 @@
+//! `parred` — CLI for the parallel-reduction reproduction.
+//!
+//! Subcommands:
+//!   info                         device presets + artifact catalog
+//!   tables [--table N] [--figure N] [--ablations] [--out DIR]
+//!                                regenerate the paper's evaluation
+//!   sim --kernel <k1..k7|catanzaro|jradi|luitjens> [--device D]
+//!       [--n N] [--f F] [--block B] [--op OP]
+//!                                run one kernel on the simulator
+//!   reduce --n N [--op OP] [--dtype f32|i32] [--backend host|pjrt]
+//!                                reduce a generated workload
+//!   serve [--requests N] [--batch-window-us U] [--payload N]
+//!                                end-to-end serving driver (PJRT)
+//!
+//! Options use `--key value` or `--key=value`; see util::cli.
+
+use anyhow::{anyhow, bail, Result};
+
+use parred::gpusim::{CombOp, DeviceConfig, Gpu};
+use parred::harness::{ablations, table1, table2, table3};
+use parred::kernels::drivers;
+use parred::reduce::op::{Dtype, Op};
+use parred::util::cli::Args;
+use parred::util::rng::Rng;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(argv: &[String]) -> Result<()> {
+    let allowed = [
+        "table", "figure", "ablations", "out", "n", "block", "f", "op", "dtype", "device",
+        "kernel", "backend", "seed", "requests", "batch-window-us", "payload", "workers",
+        "device-file",
+        "artifacts", "fast", "help",
+    ];
+    let args = Args::parse(argv, &allowed)?;
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "info" => info(&args),
+        "tables" => tables(&args),
+        "sim" => sim(&args),
+        "reduce" => reduce(&args),
+        "serve" | "bench-e2e" => serve(&args),
+        "help" | _ => {
+            println!("{}", HELP);
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "\
+parred — a fast and generic parallel reduction system (paper reproduction)
+
+USAGE: parred <info|tables|sim|reduce|serve> [options]
+
+  info                      list devices, artifacts, platform
+  tables [--table 1|2|3] [--figure 3|4] [--ablations] [--out DIR]
+                            regenerate the paper's tables/figures
+  sim --kernel k1..k7|catanzaro|jradi|luitjens [--device G80|TeslaC2075|AMD-GCN]
+      [--device-file my_gpu.json] [--n 5533214] [--f 8] [--block 256] [--op sum]
+  reduce --n N [--op sum] [--dtype f32] [--backend host|pjrt] [--artifacts DIR]
+  serve [--requests 200] [--batch-window-us 200] [--payload 65536]
+        [--artifacts DIR] end-to-end serving driver";
+
+fn info(args: &Args) -> Result<()> {
+    println!("devices:");
+    for d in DeviceConfig::presets() {
+        println!(
+            "  {:<12} SMs={:<3} warp={} peak={:.1} GB/s clock={:.2} GHz GS(256)={}",
+            d.name, d.num_sms, d.warp_size, d.mem_bandwidth_gbps, d.core_clock_ghz,
+            d.global_size(256),
+        );
+    }
+    let dir = args.get_or("artifacts", "artifacts");
+    match parred::runtime::Catalog::load(dir) {
+        Ok(cat) => {
+            println!("artifacts: {} in {dir}", cat.len());
+            let mut names: Vec<&str> = cat.iter().map(|a| a.name.as_str()).collect();
+            names.sort_unstable();
+            for n in names {
+                println!("  {n}");
+            }
+        }
+        Err(e) => println!("artifacts: unavailable ({e})"),
+    }
+    Ok(())
+}
+
+fn tables(args: &Args) -> Result<()> {
+    let n = args.get_usize("n", parred::N_PAPER)?;
+    let n1 = args.get_usize("n", parred::N_HARRIS)?;
+    let block = args.get_usize("block", 256)? as u32;
+    let seed = args.get_usize("seed", 42)? as u64;
+    let out = args.get("out");
+    let which_table = args.get("table");
+    let which_figure = args.get("figure");
+    let run_all = which_table.is_none() && which_figure.is_none() && !args.flag("ablations");
+
+    let mut emitted = Vec::new();
+    if run_all || which_table == Some("1") {
+        let rows = table1::run(n1, 128, seed)?;
+        emitted.push(("table1.csv", table1::table(&rows)));
+    }
+    if run_all || which_table == Some("2") || which_figure.is_some() {
+        let rows = table2::run(n, block, seed)?;
+        if run_all || which_table == Some("2") {
+            emitted.push(("table2.csv", table2::table(&rows)));
+        }
+        if run_all || which_figure == Some("3") {
+            println!("{}", table2::figure3(&rows).render());
+        }
+        if run_all || which_figure == Some("4") {
+            println!("{}", table2::figure4(&rows).render());
+        }
+    }
+    if run_all || which_table == Some("3") {
+        let row = table3::run(n, block, 8, seed)?;
+        emitted.push(("table3.csv", table3::table(&row)));
+    }
+    if run_all || args.flag("ablations") {
+        emitted.push(("ablation_tree.csv", ablations::tree_style(n.min(1 << 21), block, seed)?));
+        emitted.push(("ablation_persistence.csv", ablations::persistence(n.min(1 << 21), block, seed)?));
+        emitted.push(("ablation_shuffle.csv", ablations::shuffle(n.min(1 << 21), block, seed)?));
+        emitted.push(("ablation_host_unroll.csv", ablations::host_unroll(n.min(1 << 22), seed)));
+    }
+    for (name, t) in &emitted {
+        println!("{}", t.markdown());
+        if let Some(dir) = out {
+            t.save_csv(dir, name)?;
+            println!("(saved {dir}/{name})");
+        }
+    }
+    Ok(())
+}
+
+fn parse_op(args: &Args) -> Result<Op> {
+    args.get_or("op", "sum").parse().map_err(|e: String| anyhow!(e))
+}
+
+fn sim(args: &Args) -> Result<()> {
+    let kernel = args.get("kernel").ok_or_else(|| anyhow!("--kernel required"))?;
+    let cfg = if let Some(path) = args.get("device-file") {
+        DeviceConfig::from_json(&std::fs::read_to_string(path)?)?
+    } else {
+        let device = args.get_or("device", "AMD-GCN");
+        DeviceConfig::by_name(device)
+            .ok_or_else(|| anyhow!("unknown device {device:?} (try: G80, TeslaC2075, AMD-GCN)"))?
+    };
+    let n = args.get_usize("n", parred::N_PAPER)?;
+    let f = args.get_usize("f", 8)? as u32;
+    let block = args.get_usize("block", 256)?.min(cfg.max_block_threads as usize) as u32;
+    let op: Op = parse_op(args)?;
+    let cop = CombOp::from(op);
+    let seed = args.get_usize("seed", 42)? as u64;
+
+    let mut rng = Rng::new(seed);
+    let data: Vec<f64> = (0..n).map(|_| rng.i32_in(-100, 100) as f64).collect();
+    let mut gpu = Gpu::new(cfg.clone());
+    let out = match kernel {
+        "catanzaro" => drivers::catanzaro_reduce(&mut gpu, &data, cop, block)?,
+        "jradi" => drivers::jradi_reduce(&mut gpu, &data, cop, f, block)?,
+        "luitjens" => drivers::luitjens_reduce(&mut gpu, &data, cop, block)?,
+        k if k.starts_with('k') => {
+            let v: u8 = k[1..].parse().map_err(|_| anyhow!("bad kernel {k:?}"))?;
+            drivers::harris_reduce(&mut gpu, v, &data, cop, block)?
+        }
+        k => bail!("unknown kernel {k:?}"),
+    };
+    println!("kernel={kernel} device={} n={n} block={block} f={f} op={op}", cfg.name);
+    println!("value = {}", out.value);
+    println!(
+        "time = {:.4} ms   bandwidth = {:.2} GB/s ({:.1}% of peak)   launches = {}",
+        out.run.total_time_ms(),
+        out.run.bandwidth_gbps(),
+        out.run.bandwidth_pct(&cfg),
+        out.run.launches.len()
+    );
+    for l in &out.run.launches {
+        println!(
+            "  {:<28} grid={:<5} time={:.4} ms  issues={}  div={:.1}%  smemx{:.2}  dram={} MB  regions={}",
+            l.kernel,
+            l.grid,
+            l.time_ms(),
+            l.counters.warp_issues,
+            100.0 * l.divergence_ratio(),
+            l.smem_conflict_factor(),
+            l.counters.gmem_bytes / 1_000_000,
+            l.counters.load_regions,
+        );
+    }
+    Ok(())
+}
+
+fn reduce(args: &Args) -> Result<()> {
+    let n = args.get_usize("n", 1 << 20)?;
+    let op: Op = parse_op(args)?;
+    let dtype = Dtype::parse(args.get_or("dtype", "f32")).ok_or_else(|| anyhow!("bad dtype"))?;
+    let backend = args.get_or("backend", "host");
+    let seed = args.get_usize("seed", 42)? as u64;
+    let mut rng = Rng::new(seed);
+
+    match (backend, dtype) {
+        ("host", Dtype::F32) => {
+            let data = rng.f32_vec(n, -1.0, 1.0);
+            let planner = parred::reduce::plan::Planner::default();
+            let t0 = std::time::Instant::now();
+            let v = planner.run_f32(&data, op);
+            println!("host {op} over {n} f32: {v}  ({:.3} ms)", t0.elapsed().as_secs_f64() * 1e3);
+        }
+        ("host", Dtype::I32) => {
+            let data = rng.i32_vec(n, -100, 100);
+            let planner = parred::reduce::plan::Planner::default();
+            let t0 = std::time::Instant::now();
+            let v = planner.run_i32(&data, op);
+            println!("host {op} over {n} i32: {v}  ({:.3} ms)", t0.elapsed().as_secs_f64() * 1e3);
+        }
+        ("pjrt", _) => {
+            let dir = args.get_or("artifacts", "artifacts");
+            let rt = parred::runtime::Runtime::load(dir)?;
+            let meta = rt
+                .catalog()
+                .find_full(op, dtype, n)
+                .ok_or_else(|| anyhow!("no artifact for {op}/{dtype}/n={n}; see `parred info`"))?
+                .clone();
+            let payload = match dtype {
+                Dtype::F32 => parred::runtime::literal::HostVec::F32(rng.f32_vec(n, -1.0, 1.0)),
+                Dtype::I32 => parred::runtime::literal::HostVec::I32(rng.i32_vec(n, -100, 100)),
+            };
+            let t0 = std::time::Instant::now();
+            let v = rt.reduce_full(&meta, &payload)?;
+            let t1 = std::time::Instant::now();
+            let v2 = rt.reduce_full(&meta, &payload)?;
+            println!(
+                "pjrt {op} over {n} {dtype} via {}: {v} (compile+run {:.3} ms, warm {:.3} ms) [{v2}]",
+                meta.name,
+                (t1 - t0).as_secs_f64() * 1e3,
+                t1.elapsed().as_secs_f64() * 1e3
+            );
+        }
+        (b, _) => bail!("unknown backend {b:?} (host|pjrt)"),
+    }
+    Ok(())
+}
+
+fn serve(args: &Args) -> Result<()> {
+    use parred::coordinator::service::{ServiceConfig, TraceConfig};
+    let dir = args.get_or("artifacts", "artifacts").to_string();
+    let cfg = ServiceConfig {
+        artifacts_dir: dir,
+        batch_window: std::time::Duration::from_micros(args.get_usize("batch-window-us", 200)? as u64),
+        max_queue: 10_000,
+        workers: args.get_usize("workers", 0)?,
+        warmup: !args.flag("fast"),
+    };
+    let trace = TraceConfig {
+        requests: args.get_usize("requests", 200)?,
+        payload_n: args.get_usize("payload", 65_536)?,
+        seed: args.get_usize("seed", 42)? as u64,
+        mean_gap_us: 50.0,
+    };
+    let report = parred::coordinator::service::run_trace(cfg, trace)?;
+    println!("{report}");
+    Ok(())
+}

@@ -1,0 +1,81 @@
+//! Kahan (compensated) summation — the paper's fn. 4 cites Kahan [17]
+//! as the mitigation for float non-associativity when the reduction
+//! order changes under parallelism.
+
+/// Kahan-compensated sum of `data`.
+pub fn sum_f32(data: &[f32]) -> f32 {
+    let mut s = 0.0f32;
+    let mut c = 0.0f32;
+    for &v in data {
+        let y = v - c;
+        let t = s + y;
+        c = (t - s) - y;
+        s = t;
+    }
+    s
+}
+
+/// Kahan-compensated sum in f64 (the "exact" reference for error
+/// bounds in tests and benches).
+pub fn sum_f64(data: &[f32]) -> f64 {
+    let mut s = 0.0f64;
+    let mut c = 0.0f64;
+    for &v in data {
+        let y = v as f64 - c;
+        let t = s + y;
+        c = (t - s) - y;
+        s = t;
+    }
+    s
+}
+
+/// Neumaier's improvement: also compensates when the addend is larger
+/// than the running sum (robust to adversarial orderings).
+pub fn sum_neumaier_f32(data: &[f32]) -> f32 {
+    let mut s = 0.0f32;
+    let mut c = 0.0f32;
+    for &v in data {
+        let t = s + v;
+        if s.abs() >= v.abs() {
+            c += (s - t) + v;
+        } else {
+            c += (v - t) + s;
+        }
+        s = t;
+    }
+    s + c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kahan_beats_naive_on_absorption() {
+        // fn. 3 of the paper: 1.5 + 4^50 - 4^50 in f32.
+        let big = 4.0f32.powi(30);
+        let data = vec![1.5f32, big, -big];
+        let naive: f32 = data.iter().sum();
+        // Naive absorbs the 1.5 entirely.
+        assert_eq!(naive, 0.0);
+        assert_eq!(sum_neumaier_f32(&data), 1.5);
+    }
+
+    #[test]
+    fn kahan_matches_f64_reference() {
+        let data: Vec<f32> = (0..100_000)
+            .map(|i| ((i * 2_654_435_761u64 % 1000) as f32 - 500.0) * 1e-3)
+            .collect();
+        let exact = sum_f64(&data);
+        let kahan = sum_f32(&data) as f64;
+        let naive: f64 = data.iter().map(|&v| v as f32).sum::<f32>() as f64;
+        assert!((kahan - exact).abs() <= (naive - exact).abs() + 1e-3);
+    }
+
+    #[test]
+    fn empty_and_single() {
+        assert_eq!(sum_f32(&[]), 0.0);
+        assert_eq!(sum_f32(&[2.5]), 2.5);
+        assert_eq!(sum_neumaier_f32(&[]), 0.0);
+    }
+}

@@ -1,0 +1,28 @@
+//! Host-side reduction library and CPU baselines.
+//!
+//! This module is the crate's *algorithmic* core on the host: the
+//! combiner catalog ([`Op`]), a sequential oracle ([`scalar`]),
+//! compensated summation ([`kahan`]), a two-stage multithreaded
+//! reduction mirroring the paper's structure on CPU cores
+//! ([`threaded`]), an unrolled/auto-vectorizable hot loop ([`simd`])
+//! and a size-based strategy planner ([`plan`]).
+//!
+//! These serve three roles:
+//! 1. baselines for the benchmark harness (the paper compares GPU
+//!    kernels against each other; we additionally pin the host
+//!    roofline),
+//! 2. oracles for the simulator and PJRT integration tests,
+//! 3. the fallback execution path of the [`crate::coordinator`] when a
+//!    request has no matching AOT artifact.
+
+pub mod kahan;
+pub mod op;
+pub mod plan;
+pub mod scalar;
+pub mod simd;
+pub mod threaded;
+
+pub use op::{Element, Op};
+
+/// Convenience re-export: sequential reduction (the semantic oracle).
+pub use scalar::reduce as reduce_scalar;

@@ -1,0 +1,249 @@
+//! The combiner catalog (paper §1.1).
+//!
+//! A reduction combines elements with an associative (and here also
+//! commutative) operator `⊗ ∈ {+, ×, max, min}` whose identity element
+//! seeds accumulators and pads ragged tiles — exactly the role the
+//! identity plays in the Pallas kernel's algebraic mask.
+
+/// Associative + commutative combiners supported across all layers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Op {
+    /// Addition; identity 0.
+    Sum,
+    /// Multiplication; identity 1.
+    Prod,
+    /// Maximum; identity -inf / INT_MIN.
+    Max,
+    /// Minimum; identity +inf / INT_MAX.
+    Min,
+}
+
+impl Op {
+    /// All ops, for exhaustive tests and catalogs.
+    pub const ALL: [Op; 4] = [Op::Sum, Op::Prod, Op::Max, Op::Min];
+
+    /// The manifest / CLI name of the op.
+    pub fn name(self) -> &'static str {
+        match self {
+            Op::Sum => "sum",
+            Op::Prod => "prod",
+            Op::Max => "max",
+            Op::Min => "min",
+        }
+    }
+
+    /// Parse the manifest / CLI name.
+    pub fn parse(s: &str) -> Option<Op> {
+        match s {
+            "sum" => Some(Op::Sum),
+            "prod" => Some(Op::Prod),
+            "max" => Some(Op::Max),
+            "min" => Some(Op::Min),
+            _ => None,
+        }
+    }
+}
+
+impl std::str::FromStr for Op {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Op::parse(s).ok_or_else(|| format!("unknown op {s:?} (sum|prod|max|min)"))
+    }
+}
+
+impl std::fmt::Display for Op {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Element types reducible by every backend in this crate.
+///
+/// `combine` must be associative; `identity` must satisfy
+/// `combine(identity(op), x) == x` — property-tested in
+/// `rust/tests/proptests.rs`.
+pub trait Element: Copy + PartialEq + std::fmt::Debug + Send + Sync + 'static {
+    fn identity(op: Op) -> Self;
+    fn combine(op: Op, a: Self, b: Self) -> Self;
+    /// Lossless embedding into f64 (used by the simulator's registers).
+    fn to_f64(self) -> f64;
+    fn from_f64(v: f64) -> Self;
+}
+
+impl Element for f32 {
+    #[inline(always)]
+    fn identity(op: Op) -> Self {
+        match op {
+            Op::Sum => 0.0,
+            Op::Prod => 1.0,
+            Op::Max => f32::NEG_INFINITY,
+            Op::Min => f32::INFINITY,
+        }
+    }
+    #[inline(always)]
+    fn combine(op: Op, a: Self, b: Self) -> Self {
+        match op {
+            Op::Sum => a + b,
+            Op::Prod => a * b,
+            Op::Max => a.max(b),
+            Op::Min => a.min(b),
+        }
+    }
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+    #[inline(always)]
+    fn from_f64(v: f64) -> Self {
+        v as f32
+    }
+}
+
+impl Element for f64 {
+    #[inline(always)]
+    fn identity(op: Op) -> Self {
+        match op {
+            Op::Sum => 0.0,
+            Op::Prod => 1.0,
+            Op::Max => f64::NEG_INFINITY,
+            Op::Min => f64::INFINITY,
+        }
+    }
+    #[inline(always)]
+    fn combine(op: Op, a: Self, b: Self) -> Self {
+        match op {
+            Op::Sum => a + b,
+            Op::Prod => a * b,
+            Op::Max => a.max(b),
+            Op::Min => a.min(b),
+        }
+    }
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self
+    }
+    #[inline(always)]
+    fn from_f64(v: f64) -> Self {
+        v
+    }
+}
+
+impl Element for i32 {
+    #[inline(always)]
+    fn identity(op: Op) -> Self {
+        match op {
+            Op::Sum => 0,
+            Op::Prod => 1,
+            Op::Max => i32::MIN,
+            Op::Min => i32::MAX,
+        }
+    }
+    #[inline(always)]
+    fn combine(op: Op, a: Self, b: Self) -> Self {
+        match op {
+            // Wrapping: GPU integer adds wrap; keeps sim == oracle even
+            // in overflow corner cases fed by property tests.
+            Op::Sum => a.wrapping_add(b),
+            Op::Prod => a.wrapping_mul(b),
+            Op::Max => a.max(b),
+            Op::Min => a.min(b),
+        }
+    }
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+    #[inline(always)]
+    fn from_f64(v: f64) -> Self {
+        v as i32
+    }
+}
+
+/// Element dtypes as named in the artifact manifest.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    pub fn name(self) -> &'static str {
+        match self {
+            Dtype::F32 => "f32",
+            Dtype::I32 => "i32",
+        }
+    }
+    pub fn parse(s: &str) -> Option<Dtype> {
+        match s {
+            "f32" => Some(Dtype::F32),
+            "i32" => Some(Dtype::I32),
+            _ => None,
+        }
+    }
+    pub fn size_bytes(self) -> usize {
+        4
+    }
+}
+
+impl std::fmt::Display for Dtype {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_is_neutral_f32() {
+        for op in Op::ALL {
+            let id = <f32 as Element>::identity(op);
+            for x in [-3.5f32, 0.0, 7.25] {
+                assert_eq!(f32::combine(op, id, x), x, "{op} identity");
+                assert_eq!(f32::combine(op, x, id), x, "{op} identity comm");
+            }
+        }
+    }
+
+    #[test]
+    fn identity_is_neutral_i32() {
+        for op in Op::ALL {
+            let id = <i32 as Element>::identity(op);
+            for x in [-3i32, 0, 7] {
+                assert_eq!(i32::combine(op, id, x), x, "{op} identity");
+            }
+        }
+    }
+
+    #[test]
+    fn names_round_trip() {
+        for op in Op::ALL {
+            assert_eq!(Op::parse(op.name()), Some(op));
+        }
+        assert_eq!(Op::parse("median"), None);
+        for dt in [Dtype::F32, Dtype::I32] {
+            assert_eq!(Dtype::parse(dt.name()), Some(dt));
+        }
+    }
+
+    #[test]
+    fn combine_matches_std() {
+        assert_eq!(i32::combine(Op::Max, 3, -5), 3);
+        assert_eq!(i32::combine(Op::Min, 3, -5), -5);
+        assert_eq!(f32::combine(Op::Sum, 1.5, 2.5), 4.0);
+        assert_eq!(f32::combine(Op::Prod, 3.0, 2.0), 6.0);
+    }
+
+    #[test]
+    fn wrapping_sum_i32() {
+        assert_eq!(i32::combine(Op::Sum, i32::MAX, 1), i32::MIN);
+    }
+
+    #[test]
+    fn f64_embedding_lossless_for_i32() {
+        for x in [i32::MIN, -1, 0, 1, i32::MAX] {
+            assert_eq!(i32::from_f64(x.to_f64()), x);
+        }
+    }
+}

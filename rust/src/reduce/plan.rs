@@ -1,0 +1,141 @@
+//! Size-based execution planning: which backend should run a request.
+//!
+//! The coordinator consults this to route a reduction to (a) the
+//! sequential loop, (b) the threaded two-stage, or (c) a PJRT artifact
+//! — mirroring Catanzaro's observation that small inputs want the
+//! simple path while large inputs amortize launch overhead.
+
+use super::op::{Dtype, Op};
+
+/// Execution strategies available on this host.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    /// Sequential unrolled loop — tiny inputs; launch cost dominates.
+    Sequential,
+    /// Two-stage threaded reduction with the given worker count.
+    Threaded(usize),
+    /// Dispatch to a compiled PJRT artifact (exact-size match needed).
+    Artifact,
+}
+
+/// Thresholds, tuned by the `hotpath` bench (§Perf).
+#[derive(Debug, Clone)]
+pub struct Planner {
+    /// Below this, stay sequential.
+    pub seq_cutoff: usize,
+    /// Below this, threads don't pay for themselves.
+    pub thread_cutoff: usize,
+    /// Available worker threads.
+    pub workers: usize,
+    /// Whether a PJRT runtime is attached.
+    pub artifacts_available: bool,
+}
+
+impl Default for Planner {
+    fn default() -> Self {
+        Planner {
+            seq_cutoff: 4096,
+            thread_cutoff: 262_144,
+            workers: std::thread::available_parallelism().map_or(4, |n| n.get()),
+            artifacts_available: false,
+        }
+    }
+}
+
+impl Planner {
+    /// Choose a strategy for reducing `n` elements.
+    ///
+    /// Exact-size artifact matches are preferred for large inputs when
+    /// a runtime is attached (`artifact_sizes` comes from the
+    /// manifest); otherwise fall through to host execution.
+    pub fn choose(&self, n: usize, has_exact_artifact: bool) -> Strategy {
+        if self.artifacts_available && has_exact_artifact && n >= self.thread_cutoff {
+            return Strategy::Artifact;
+        }
+        if n < self.seq_cutoff {
+            return Strategy::Sequential;
+        }
+        if n < self.thread_cutoff {
+            return Strategy::Threaded(2.min(self.workers.max(1)));
+        }
+        Strategy::Threaded(self.workers.max(1))
+    }
+
+    /// Host fallback execution for any (op, dtype)-erased request.
+    pub fn run_f32(&self, data: &[f32], op: Op) -> f32 {
+        match self.choose(data.len(), false) {
+            Strategy::Sequential => super::simd::reduce(data, op),
+            Strategy::Threaded(t) => super::threaded::reduce(data, op, t),
+            Strategy::Artifact => unreachable!("choose(false) never picks Artifact"),
+        }
+    }
+
+    /// Host fallback for i32 payloads.
+    pub fn run_i32(&self, data: &[i32], op: Op) -> i32 {
+        match self.choose(data.len(), false) {
+            Strategy::Sequential => super::simd::reduce(data, op),
+            Strategy::Threaded(t) => super::threaded::reduce(data, op, t),
+            Strategy::Artifact => unreachable!("choose(false) never picks Artifact"),
+        }
+    }
+}
+
+/// A fully-specified reduction request shape (what the router keys on).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ShapeKey {
+    pub op: Op,
+    pub dtype: Dtype,
+    pub n: usize,
+}
+
+impl std::fmt::Display for ShapeKey {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}/{}/n={}", self.op, self.dtype, self.n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_stays_sequential() {
+        let p = Planner::default();
+        assert_eq!(p.choose(10, false), Strategy::Sequential);
+        assert_eq!(p.choose(4095, true), Strategy::Sequential);
+    }
+
+    #[test]
+    fn medium_gets_few_threads() {
+        let p = Planner::default();
+        match p.choose(100_000, false) {
+            Strategy::Threaded(t) => assert!(t >= 1 && t <= 2),
+            s => panic!("expected threaded, got {s:?}"),
+        }
+    }
+
+    #[test]
+    fn large_uses_all_workers() {
+        let p = Planner { workers: 8, ..Planner::default() };
+        assert_eq!(p.choose(10_000_000, false), Strategy::Threaded(8));
+    }
+
+    #[test]
+    fn artifact_preferred_when_available() {
+        let p = Planner { artifacts_available: true, ..Planner::default() };
+        assert_eq!(p.choose(5_533_214, true), Strategy::Artifact);
+        // ...but only with an exact compiled size.
+        assert!(matches!(p.choose(5_533_215, false), Strategy::Threaded(_)));
+    }
+
+    #[test]
+    fn run_matches_oracle() {
+        let p = Planner::default();
+        let d: Vec<f32> = (0..500_000).map(|i| (i % 97) as f32).collect();
+        let want: f64 = d.iter().map(|&x| x as f64).sum();
+        assert!((p.run_f32(&d, Op::Sum) as f64 - want).abs() / want < 1e-3);
+        let di: Vec<i32> = (0..500_000).map(|i| (i % 97) as i32).collect();
+        let wanti: i32 = di.iter().sum();
+        assert_eq!(p.run_i32(&di, Op::Sum), wanti);
+    }
+}

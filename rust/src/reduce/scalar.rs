@@ -1,0 +1,115 @@
+//! Sequential reduction — Algorithm 1 of the paper, and the semantic
+//! oracle every other backend (threaded, simd, gpusim, PJRT) is tested
+//! against.
+
+use super::op::{Element, Op};
+
+/// Reduce `data` with `op`, left-to-right (Algorithm 1).
+///
+/// Returns the identity element for empty input (the mathematical
+/// convention; paper §1.1 fn. 2).
+pub fn reduce<T: Element>(data: &[T], op: Op) -> T {
+    let mut acc = T::identity(op);
+    for &x in data {
+        acc = T::combine(op, acc, x);
+    }
+    acc
+}
+
+/// Pairwise (tree-ordered) sequential reduction.
+///
+/// Matches the combine *order* of the GPU/Pallas trees, so float
+/// results agree with the parallel backends much more tightly than the
+/// left-to-right loop does. Used as the float oracle in tolerance
+/// tests.
+pub fn reduce_pairwise<T: Element>(data: &[T], op: Op) -> T {
+    match data.len() {
+        0 => T::identity(op),
+        1 => data[0],
+        n => {
+            let mid = n / 2;
+            let a = reduce_pairwise(&data[..mid], op);
+            let b = reduce_pairwise(&data[mid..], op);
+            T::combine(op, a, b)
+        }
+    }
+}
+
+/// Index of the maximum element (first occurrence); `None` when empty.
+///
+/// Arg-reductions are a common downstream need (paper cites golden
+/// section / Fibonacci methods) and exercise the combiner framework
+/// beyond plain folds.
+pub fn argmax<T: Element + PartialOrd>(data: &[T]) -> Option<usize> {
+    let mut best: Option<usize> = None;
+    for (i, x) in data.iter().enumerate() {
+        match best {
+            None => best = Some(i),
+            Some(b) if x > &data[b] => best = Some(i),
+            _ => {}
+        }
+    }
+    best
+}
+
+/// Index of the minimum element (first occurrence); `None` when empty.
+pub fn argmin<T: Element + PartialOrd>(data: &[T]) -> Option<usize> {
+    let mut best: Option<usize> = None;
+    for (i, x) in data.iter().enumerate() {
+        match best {
+            None => best = Some(i),
+            Some(b) if x < &data[b] => best = Some(i),
+            _ => {}
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_is_identity() {
+        assert_eq!(reduce::<i32>(&[], Op::Sum), 0);
+        assert_eq!(reduce::<i32>(&[], Op::Prod), 1);
+        assert_eq!(reduce::<f32>(&[], Op::Max), f32::NEG_INFINITY);
+        assert_eq!(reduce_pairwise::<i32>(&[], Op::Min), i32::MAX);
+    }
+
+    #[test]
+    fn sums_and_products() {
+        assert_eq!(reduce(&[1, 2, 3, 4], Op::Sum), 10);
+        assert_eq!(reduce(&[1, 2, 3, 4], Op::Prod), 24);
+        assert_eq!(reduce(&[1.0f32, 2.0, 3.0], Op::Sum), 6.0);
+    }
+
+    #[test]
+    fn min_max() {
+        assert_eq!(reduce(&[5, -2, 9, 0], Op::Max), 9);
+        assert_eq!(reduce(&[5, -2, 9, 0], Op::Min), -2);
+    }
+
+    #[test]
+    fn pairwise_equals_sequential_for_ints() {
+        let data: Vec<i32> = (0..10_001).map(|i| (i * 37) % 101 - 50).collect();
+        for op in Op::ALL {
+            assert_eq!(reduce(&data, op), reduce_pairwise(&data, op), "{op}");
+        }
+    }
+
+    #[test]
+    fn argminmax() {
+        let v = [3.0f32, -1.0, 7.0, 7.0, -1.0];
+        assert_eq!(argmax(&v), Some(2));
+        assert_eq!(argmin(&v), Some(1));
+        assert_eq!(argmax::<f32>(&[]), None);
+    }
+
+    #[test]
+    fn single_element() {
+        for op in Op::ALL {
+            assert_eq!(reduce(&[42i32], op), 42);
+        }
+    }
+}

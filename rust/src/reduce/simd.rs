@@ -1,0 +1,99 @@
+//! Unrolled, auto-vectorizable sequential hot loop.
+//!
+//! This is the paper's *loop unrolling* technique (§2.4) applied to
+//! the host CPU: `LANES` independent accumulators break the loop-carried
+//! dependence chain so LLVM can keep `LANES` vector registers in
+//! flight — the same reasoning the paper applies to GPU work-items.
+//! Used as the single-core roofline baseline in the benches.
+
+use super::op::{Element, Op};
+
+/// Number of independent accumulators (the host "unroll factor F").
+pub const LANES: usize = 8;
+
+/// Reduce with `LANES` independent accumulators, then tree-combine.
+pub fn reduce<T: Element>(data: &[T], op: Op) -> T {
+    let mut acc = [T::identity(op); LANES];
+    let chunks = data.chunks_exact(LANES);
+    let tail = chunks.remainder();
+    for chunk in chunks {
+        // Fully unrolled: fixed trip count of LANES.
+        for (a, &x) in acc.iter_mut().zip(chunk) {
+            *a = T::combine(op, *a, x);
+        }
+    }
+    let mut total = T::identity(op);
+    for a in acc {
+        total = T::combine(op, total, a);
+    }
+    for &x in tail {
+        total = T::combine(op, total, x);
+    }
+    total
+}
+
+/// Reduce with a caller-chosen unroll factor (1..=16); used by the
+/// ablation bench to show the host-side analogue of paper Table 2.
+pub fn reduce_unroll<T: Element>(data: &[T], op: Op, f: usize) -> T {
+    let f = f.clamp(1, 16);
+    let mut acc = vec![T::identity(op); f];
+    let chunks = data.chunks_exact(f);
+    let tail = chunks.remainder();
+    for chunk in chunks {
+        for (a, &x) in acc.iter_mut().zip(chunk) {
+            *a = T::combine(op, *a, x);
+        }
+    }
+    let mut total = T::identity(op);
+    for a in acc {
+        total = T::combine(op, total, a);
+    }
+    for &x in tail {
+        total = T::combine(op, total, x);
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::reduce::scalar;
+
+    fn data_i32(n: usize) -> Vec<i32> {
+        (0..n).map(|i| ((i * 2_654_435_761) % 2001) as i32 - 1000).collect()
+    }
+
+    #[test]
+    fn matches_scalar_i32_all_ops() {
+        for n in [0, 1, 7, 8, 9, 1000, 12_345] {
+            let d = data_i32(n);
+            for op in [Op::Sum, Op::Max, Op::Min] {
+                assert_eq!(reduce(&d, op), scalar::reduce(&d, op), "n={n} {op}");
+            }
+        }
+    }
+
+    #[test]
+    fn matches_scalar_f32_sum_tolerance() {
+        let d: Vec<f32> = data_i32(100_003).iter().map(|&x| x as f32 * 1e-2).collect();
+        let a = reduce(&d, Op::Sum);
+        let b = scalar::reduce(&d, Op::Sum);
+        assert!((a - b).abs() <= 1e-2 * b.abs().max(1.0), "{a} vs {b}");
+    }
+
+    #[test]
+    fn unroll_factors_agree() {
+        let d = data_i32(10_007);
+        let want = scalar::reduce(&d, Op::Sum);
+        for f in [1, 2, 3, 4, 5, 6, 7, 8, 16] {
+            assert_eq!(reduce_unroll(&d, Op::Sum, f), want, "f={f}");
+        }
+    }
+
+    #[test]
+    fn clamps_silly_factors() {
+        let d = data_i32(100);
+        assert_eq!(reduce_unroll(&d, Op::Sum, 0), scalar::reduce(&d, Op::Sum));
+        assert_eq!(reduce_unroll(&d, Op::Sum, 999), scalar::reduce(&d, Op::Sum));
+    }
+}

@@ -1,0 +1,98 @@
+//! Two-stage multithreaded reduction — Catanzaro's structure (paper
+//! §2.3) mapped to CPU cores: stage 1 gives each "work-group" (thread)
+//! a contiguous chunk it reduces privately (with the unrolled hot loop
+//! from [`super::simd`]); stage 2 combines the per-thread partials.
+
+use super::op::{Element, Op};
+use super::simd;
+
+/// Reduce `data` across `threads` OS threads (two-stage).
+///
+/// `threads == 0` or `1`, or small inputs, fall back to the unrolled
+/// sequential loop — the planner's job, inlined here for safety.
+pub fn reduce<T: Element>(data: &[T], op: Op, threads: usize) -> T {
+    let threads = threads.max(1);
+    if threads == 1 || data.len() < 4096 {
+        return simd::reduce(data, op);
+    }
+    let chunk = data.len().div_ceil(threads);
+    // Stage 1: private per-thread reductions over contiguous chunks.
+    let partials: Vec<T> = std::thread::scope(|s| {
+        let handles: Vec<_> = data
+            .chunks(chunk)
+            .map(|c| s.spawn(move || simd::reduce(c, op)))
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+    });
+    // Stage 2: combine the |threads| partials.
+    simd::reduce(&partials, op)
+}
+
+/// Row-wise reduction of a `rows x cols` matrix (flat, row-major):
+/// the host analogue of the batched PJRT artifact.
+pub fn reduce_rows<T: Element>(data: &[T], cols: usize, op: Op, threads: usize) -> Vec<T> {
+    assert!(cols > 0, "cols must be positive");
+    assert_eq!(data.len() % cols, 0, "data not a whole number of rows");
+    let rows: Vec<&[T]> = data.chunks(cols).collect();
+    if threads <= 1 || rows.len() == 1 {
+        return rows.iter().map(|r| simd::reduce(r, op)).collect();
+    }
+    std::thread::scope(|s| {
+        let per = rows.len().div_ceil(threads);
+        let handles: Vec<_> = rows
+            .chunks(per)
+            .map(|group| s.spawn(move || group.iter().map(|r| simd::reduce(r, op)).collect::<Vec<_>>()))
+            .collect();
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("worker panicked"))
+            .collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::reduce::scalar;
+
+    fn data(n: usize) -> Vec<i32> {
+        (0..n).map(|i| ((i * 2_654_435_761) % 999) as i32 - 499).collect()
+    }
+
+    #[test]
+    fn matches_scalar_across_thread_counts() {
+        let d = data(1_000_003);
+        let want = scalar::reduce(&d, Op::Sum);
+        for t in [0, 1, 2, 3, 4, 8, 16] {
+            assert_eq!(reduce(&d, Op::Sum, t), want, "threads={t}");
+        }
+    }
+
+    #[test]
+    fn all_ops() {
+        let d = data(50_000);
+        for op in [Op::Sum, Op::Max, Op::Min] {
+            assert_eq!(reduce(&d, op, 4), scalar::reduce(&d, op), "{op}");
+        }
+    }
+
+    #[test]
+    fn tiny_input_falls_back() {
+        let d = data(10);
+        assert_eq!(reduce(&d, Op::Sum, 8), scalar::reduce(&d, Op::Sum));
+    }
+
+    #[test]
+    fn rows_match_scalar() {
+        let d = data(8 * 1000);
+        let got = reduce_rows(&d, 1000, Op::Max, 4);
+        let want: Vec<i32> = d.chunks(1000).map(|r| scalar::reduce(r, Op::Max)).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    #[should_panic(expected = "whole number of rows")]
+    fn rows_reject_ragged() {
+        reduce_rows(&data(10), 3, Op::Sum, 1);
+    }
+}

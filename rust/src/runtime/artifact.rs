@@ -1,0 +1,323 @@
+//! The artifact catalog: `artifacts/manifest.json` parsed into typed
+//! metadata the router can key on. (Parsed with the in-crate JSON
+//! parser, [`crate::util::json`] — offline build, no serde.)
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::reduce::op::{Dtype, Op};
+use crate::util::json::Json;
+
+/// Kinds of compiled graphs (mirror `aot.catalog()` in Python).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Kind {
+    /// `(n,) -> scalar` reduction.
+    Full,
+    /// `(b, n) -> (b,)` batched row reduction.
+    Rows,
+    /// `(n,), (n,) -> scalar` fused dot-reduce.
+    Dot,
+    /// `(n,) -> (mean, var)`.
+    Meanvar,
+}
+
+impl Kind {
+    pub fn parse(s: &str) -> Option<Kind> {
+        match s {
+            "full" => Some(Kind::Full),
+            "rows" => Some(Kind::Rows),
+            "dot" => Some(Kind::Dot),
+            "meanvar" => Some(Kind::Meanvar),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Kind::Full => "full",
+            Kind::Rows => "rows",
+            Kind::Dot => "dot",
+            Kind::Meanvar => "meanvar",
+        }
+    }
+}
+
+/// Declared input of an artifact.
+#[derive(Debug, Clone)]
+pub struct InputMeta {
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+/// One entry of `manifest.json`.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub kind: Kind,
+    pub op: Op,
+    pub dtype: Dtype,
+    pub n: usize,
+    pub b: Option<usize>,
+    pub f: usize,
+    pub inputs: Vec<InputMeta>,
+    pub outputs: usize,
+    pub blk: usize,
+    pub grid: usize,
+    pub chunks: usize,
+    pub padded_n: usize,
+    pub vmem_bytes: usize,
+}
+
+impl ArtifactMeta {
+    /// Total input elements this artifact consumes per execute.
+    pub fn input_elems(&self) -> usize {
+        self.inputs.iter().map(|i| i.shape.iter().product::<usize>()).sum()
+    }
+
+    fn from_json(v: &Json) -> Result<ArtifactMeta> {
+        let kind_s = v.field("kind")?.as_str()?;
+        let op_s = v.field("op")?.as_str()?;
+        let dt_s = v.field("dtype")?.as_str()?;
+        let inputs = v
+            .field("inputs")?
+            .as_arr()?
+            .iter()
+            .map(|i| -> Result<InputMeta> {
+                let shape = i
+                    .field("shape")?
+                    .as_arr()?
+                    .iter()
+                    .map(|d| d.as_usize())
+                    .collect::<Result<Vec<_>>>()?;
+                let dtype = Dtype::parse(i.field("dtype")?.as_str()?)
+                    .ok_or_else(|| anyhow!("bad input dtype"))?;
+                Ok(InputMeta { shape, dtype })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ArtifactMeta {
+            name: v.field("name")?.as_str()?.to_string(),
+            file: v.field("file")?.as_str()?.to_string(),
+            kind: Kind::parse(kind_s).ok_or_else(|| anyhow!("bad kind {kind_s:?}"))?,
+            op: Op::parse(op_s).ok_or_else(|| anyhow!("bad op {op_s:?}"))?,
+            dtype: Dtype::parse(dt_s).ok_or_else(|| anyhow!("bad dtype {dt_s:?}"))?,
+            n: v.field("n")?.as_usize()?,
+            b: v.opt_field("b").map(|b| b.as_usize()).transpose()?,
+            f: v.field("f")?.as_usize()?,
+            inputs,
+            outputs: v.field("outputs")?.as_usize()?,
+            blk: v.field("blk")?.as_usize()?,
+            grid: v.field("grid")?.as_usize()?,
+            chunks: v.field("chunks")?.as_usize()?,
+            padded_n: v.field("padded_n")?.as_usize()?,
+            vmem_bytes: v.field("vmem_bytes")?.as_usize()?,
+        })
+    }
+}
+
+/// The loaded catalog, indexed for the router.
+#[derive(Debug, Clone)]
+pub struct Catalog {
+    root: PathBuf,
+    by_name: HashMap<String, ArtifactMeta>,
+}
+
+impl Catalog {
+    /// Load `manifest.json` from `dir` and index it.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let root = dir.as_ref().to_path_buf();
+        let path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let doc = Json::parse(&text).context("parsing manifest.json")?;
+        if doc.field("version")?.as_usize()? != 1 {
+            bail!("unsupported manifest version");
+        }
+        let mut by_name = HashMap::new();
+        for v in doc.field("artifacts")?.as_arr()? {
+            let a = ArtifactMeta::from_json(v)?;
+            if by_name.insert(a.name.clone(), a).is_some() {
+                bail!("duplicate artifact name in manifest");
+            }
+        }
+        Ok(Catalog { root, by_name })
+    }
+
+    /// Construct an in-memory catalog (tests).
+    pub fn from_entries(root: PathBuf, entries: Vec<ArtifactMeta>) -> Self {
+        let by_name = entries.into_iter().map(|a| (a.name.clone(), a)).collect();
+        Catalog { root, by_name }
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    pub fn len(&self) -> usize {
+        self.by_name.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_name.is_empty()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.by_name.get(name)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &ArtifactMeta> {
+        self.by_name.values()
+    }
+
+    /// Absolute path of an artifact's HLO text.
+    pub fn path_of(&self, meta: &ArtifactMeta) -> PathBuf {
+        self.root.join(&meta.file)
+    }
+
+    /// Exact-match lookup for a scalar reduction `(op, dtype, n)`.
+    /// Prefers the paper's chosen F=8 when several F variants exist.
+    pub fn find_full(&self, op: Op, dtype: Dtype, n: usize) -> Option<&ArtifactMeta> {
+        let mut best: Option<&ArtifactMeta> = None;
+        for a in self.by_name.values() {
+            if a.kind == Kind::Full && a.op == op && a.dtype == dtype && a.n == n {
+                match best {
+                    Some(b) if (b.f as i64 - 8).abs() <= (a.f as i64 - 8).abs() => {}
+                    _ => best = Some(a),
+                }
+            }
+        }
+        best
+    }
+
+    /// Exact-match lookup for a batched row reduction.
+    pub fn find_rows(&self, op: Op, dtype: Dtype, b: usize, n: usize) -> Option<&ArtifactMeta> {
+        self.by_name.values().find(|a| {
+            a.kind == Kind::Rows && a.op == op && a.dtype == dtype && a.b == Some(b) && a.n == n
+        })
+    }
+
+    /// All batch sizes available for `(op, dtype, n)` rows artifacts,
+    /// ascending — the batcher picks the largest that fits.
+    pub fn rows_batch_sizes(&self, op: Op, dtype: Dtype, n: usize) -> Vec<usize> {
+        let mut sizes: Vec<usize> = self
+            .by_name
+            .values()
+            .filter(|a| a.kind == Kind::Rows && a.op == op && a.dtype == dtype && a.n == n)
+            .filter_map(|a| a.b)
+            .collect();
+        sizes.sort_unstable();
+        sizes.dedup();
+        sizes
+    }
+}
+
+#[cfg(test)]
+pub(crate) fn test_meta(
+    name: &str,
+    kind: Kind,
+    op: Op,
+    n: usize,
+    b: Option<usize>,
+    f: usize,
+) -> ArtifactMeta {
+    ArtifactMeta {
+        name: name.into(),
+        file: format!("{name}.hlo.txt"),
+        kind,
+        op,
+        dtype: Dtype::F32,
+        n,
+        b,
+        f,
+        inputs: vec![InputMeta {
+            shape: match b {
+                Some(b) => vec![b, n],
+                None => vec![n],
+            },
+            dtype: Dtype::F32,
+        }],
+        outputs: 1,
+        blk: 128,
+        grid: 64,
+        chunks: 1,
+        padded_n: n.next_multiple_of(128),
+        vmem_bytes: 1024,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn catalog() -> Catalog {
+        Catalog::from_entries(
+            PathBuf::from("/tmp"),
+            vec![
+                test_meta("full_sum_n100_f8", Kind::Full, Op::Sum, 100, None, 8),
+                test_meta("full_sum_n100_f1", Kind::Full, Op::Sum, 100, None, 1),
+                test_meta("rows_sum_b4_n50", Kind::Rows, Op::Sum, 50, Some(4), 8),
+                test_meta("rows_sum_b16_n50", Kind::Rows, Op::Sum, 50, Some(16), 8),
+                test_meta("rows_sum_b8_n50", Kind::Rows, Op::Sum, 50, Some(8), 8),
+            ],
+        )
+    }
+
+    #[test]
+    fn find_full_prefers_f8() {
+        let c = catalog();
+        assert_eq!(c.find_full(Op::Sum, Dtype::F32, 100).unwrap().f, 8);
+        assert!(c.find_full(Op::Sum, Dtype::F32, 101).is_none());
+        assert!(c.find_full(Op::Max, Dtype::F32, 100).is_none());
+    }
+
+    #[test]
+    fn rows_lookup_and_sizes() {
+        let c = catalog();
+        assert!(c.find_rows(Op::Sum, Dtype::F32, 8, 50).is_some());
+        assert!(c.find_rows(Op::Sum, Dtype::F32, 3, 50).is_none());
+        assert_eq!(c.rows_batch_sizes(Op::Sum, Dtype::F32, 50), vec![4, 8, 16]);
+    }
+
+    #[test]
+    fn input_elems() {
+        let c = catalog();
+        assert_eq!(c.get("rows_sum_b4_n50").unwrap().input_elems(), 200);
+    }
+
+    #[test]
+    fn meta_json_round_trip() {
+        let text = r#"{
+            "name": "full_sum_f32_n1024_f8", "file": "x.hlo.txt",
+            "kind": "full", "op": "sum", "dtype": "f32",
+            "n": 1024, "f": 8,
+            "inputs": [{"shape": [1024], "dtype": "f32"}],
+            "outputs": 1, "blk": 128, "grid": 1, "chunks": 1,
+            "padded_n": 1024, "vmem_bytes": 5632
+        }"#;
+        let meta = ArtifactMeta::from_json(&Json::parse(text).unwrap()).unwrap();
+        assert_eq!(meta.kind, Kind::Full);
+        assert_eq!(meta.op, Op::Sum);
+        assert_eq!(meta.b, None);
+        assert_eq!(meta.input_elems(), 1024);
+    }
+
+    #[test]
+    fn kind_names_round_trip() {
+        for k in [Kind::Full, Kind::Rows, Kind::Dot, Kind::Meanvar] {
+            assert_eq!(Kind::parse(k.name()), Some(k));
+        }
+        assert_eq!(Kind::parse("bogus"), None);
+    }
+
+    #[test]
+    fn real_manifest_parses_if_present() {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        if std::path::Path::new(dir).join("manifest.json").exists() {
+            let c = Catalog::load(dir).expect("manifest should parse");
+            assert!(c.len() >= 30, "expected full catalog, got {}", c.len());
+            assert!(c.find_full(Op::Sum, Dtype::F32, crate::N_PAPER).is_some());
+        }
+    }
+}

@@ -1,0 +1,193 @@
+//! The PJRT executor: compile-on-first-use cache over the artifact
+//! catalog, plus typed execute entry points.
+//!
+//! One compiled executable per model variant, compiled lazily and then
+//! reused for every request (`make artifacts` is the only place
+//! Python runs; this is the only place XLA compiles).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::artifact::{ArtifactMeta, Catalog, Kind};
+use super::literal::{literal_to_host, literal_to_scalar, HostScalar, HostVec};
+
+/// Compile/execute statistics (surfaced by the CLI and metrics).
+#[derive(Debug, Default, Clone)]
+pub struct RuntimeStats {
+    pub compiles: u64,
+    pub compile_ms_total: f64,
+    pub executes: u64,
+    pub execute_ms_total: f64,
+    pub cache_hits: u64,
+}
+
+/// The single-threaded PJRT runtime (not `Send`; see module docs).
+pub struct Runtime {
+    client: PjRtClient,
+    catalog: Catalog,
+    cache: RefCell<HashMap<String, Rc<PjRtLoadedExecutable>>>,
+    stats: RefCell<RuntimeStats>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and load the catalog from `dir`.
+    pub fn load(dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let catalog = Catalog::load(dir)?;
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            catalog,
+            cache: RefCell::new(HashMap::new()),
+            stats: RefCell::new(RuntimeStats::default()),
+        })
+    }
+
+    pub fn catalog(&self) -> &Catalog {
+        &self.catalog
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn stats(&self) -> RuntimeStats {
+        self.stats.borrow().clone()
+    }
+
+    /// Get (compiling if needed) the executable for `name`.
+    pub fn executable(&self, name: &str) -> Result<Rc<PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            self.stats.borrow_mut().cache_hits += 1;
+            return Ok(exe.clone());
+        }
+        let meta = self
+            .catalog
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))?;
+        let path = self.catalog.path_of(meta);
+        let t0 = Instant::now();
+        let proto = HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("XLA compile of {name}"))?,
+        );
+        {
+            let mut st = self.stats.borrow_mut();
+            st.compiles += 1;
+            st.compile_ms_total += t0.elapsed().as_secs_f64() * 1e3;
+        }
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Pre-compile a set of artifacts (warmup at service start).
+    pub fn warmup<'a>(&self, names: impl IntoIterator<Item = &'a str>) -> Result<usize> {
+        let mut n = 0;
+        for name in names {
+            self.executable(name)?;
+            n += 1;
+        }
+        Ok(n)
+    }
+
+    /// Raw execute: literals in, tuple elements out.
+    pub fn execute_raw(&self, name: &str, inputs: &[Literal]) -> Result<Vec<Literal>> {
+        let exe = self.executable(name)?;
+        let t0 = Instant::now();
+        let result = exe.execute::<Literal>(inputs)?[0][0].to_literal_sync()?;
+        {
+            let mut st = self.stats.borrow_mut();
+            st.executes += 1;
+            st.execute_ms_total += t0.elapsed().as_secs_f64() * 1e3;
+        }
+        // aot.py lowers with return_tuple=True: outputs are tupled.
+        Ok(result.to_tuple()?)
+    }
+
+    /// Execute a `Kind::Full` artifact: one vector in, scalar out.
+    pub fn reduce_full(&self, meta: &ArtifactMeta, data: &HostVec) -> Result<HostScalar> {
+        if meta.kind != Kind::Full {
+            bail!("{} is not a full-reduce artifact", meta.name);
+        }
+        self.check_payload(meta, data, meta.n)?;
+        let outs = self.execute_raw(&meta.name, &[data.to_literal()])?;
+        literal_to_scalar(&outs[0], meta.dtype)
+    }
+
+    /// Execute a `Kind::Rows` artifact: `(b, n)` in, `(b,)` out.
+    pub fn reduce_rows(&self, meta: &ArtifactMeta, data: &HostVec) -> Result<HostVec> {
+        if meta.kind != Kind::Rows {
+            bail!("{} is not a rows artifact", meta.name);
+        }
+        let b = meta.b.ok_or_else(|| anyhow!("rows artifact missing b"))?;
+        self.check_payload(meta, data, b * meta.n)?;
+        let lit = data.to_literal_2d(b, meta.n)?;
+        let outs = self.execute_raw(&meta.name, &[lit])?;
+        literal_to_host(&outs[0], meta.dtype)
+    }
+
+    /// Execute the fused dot-reduce artifact.
+    pub fn dot(&self, meta: &ArtifactMeta, x: &HostVec, y: &HostVec) -> Result<HostScalar> {
+        if meta.kind != Kind::Dot {
+            bail!("{} is not a dot artifact", meta.name);
+        }
+        self.check_payload(meta, x, meta.n)?;
+        self.check_payload(meta, y, meta.n)?;
+        let outs = self.execute_raw(&meta.name, &[x.to_literal(), y.to_literal()])?;
+        literal_to_scalar(&outs[0], meta.dtype)
+    }
+
+    /// Execute the mean/var artifact: `(n,) -> (mean, var)`.
+    pub fn mean_var(&self, meta: &ArtifactMeta, x: &HostVec) -> Result<(f32, f32)> {
+        if meta.kind != Kind::Meanvar {
+            bail!("{} is not a meanvar artifact", meta.name);
+        }
+        self.check_payload(meta, x, meta.n)?;
+        let outs = self.execute_raw(&meta.name, &[x.to_literal()])?;
+        if outs.len() != 2 {
+            bail!("meanvar artifact returned {} outputs, expected 2", outs.len());
+        }
+        Ok((
+            outs[0].get_first_element::<f32>()?,
+            outs[1].get_first_element::<f32>()?,
+        ))
+    }
+
+    fn check_payload(&self, meta: &ArtifactMeta, data: &HostVec, want: usize) -> Result<()> {
+        if data.dtype() != meta.dtype {
+            bail!(
+                "dtype mismatch for {}: payload {} vs artifact {}",
+                meta.name,
+                data.dtype(),
+                meta.dtype
+            );
+        }
+        if data.len() != want {
+            bail!(
+                "size mismatch for {}: payload {} elements vs expected {}",
+                meta.name,
+                data.len(),
+                want
+            );
+        }
+        Ok(())
+    }
+}
+
+impl std::fmt::Debug for Runtime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Runtime")
+            .field("platform", &self.platform())
+            .field("artifacts", &self.catalog.len())
+            .field("compiled", &self.cache.borrow().len())
+            .finish()
+    }
+}

@@ -1,0 +1,146 @@
+//! Host slice ⇄ `xla::Literal` conversion helpers.
+//!
+//! Kept separate so the hot path's marshalling cost is visible to the
+//! `hotpath` bench and can be optimized in isolation (§Perf).
+
+use anyhow::{bail, Result};
+use xla::Literal;
+
+use crate::reduce::op::Dtype;
+
+/// Payloads accepted by the serving layer.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostVec {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl HostVec {
+    pub fn len(&self) -> usize {
+        match self {
+            HostVec::F32(v) => v.len(),
+            HostVec::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            HostVec::F32(_) => Dtype::F32,
+            HostVec::I32(_) => Dtype::I32,
+        }
+    }
+
+    /// Rank-1 literal of the payload.
+    pub fn to_literal(&self) -> Literal {
+        match self {
+            HostVec::F32(v) => Literal::vec1(v),
+            HostVec::I32(v) => Literal::vec1(v),
+        }
+    }
+
+    /// Rank-2 `(rows, cols)` literal; `self.len()` must equal
+    /// `rows * cols`.
+    pub fn to_literal_2d(&self, rows: usize, cols: usize) -> Result<Literal> {
+        if rows * cols != self.len() {
+            bail!("shape ({rows},{cols}) incompatible with {} elements", self.len());
+        }
+        Ok(self.to_literal().reshape(&[rows as i64, cols as i64])?)
+    }
+
+    /// Append another payload of the same dtype (used when the batcher
+    /// stacks requests into a rows tensor).
+    pub fn extend(&mut self, other: &HostVec) -> Result<()> {
+        match (self, other) {
+            (HostVec::F32(a), HostVec::F32(b)) => a.extend_from_slice(b),
+            (HostVec::I32(a), HostVec::I32(b)) => a.extend_from_slice(b),
+            _ => bail!("dtype mismatch in batch assembly"),
+        }
+        Ok(())
+    }
+}
+
+/// Scalar results coming back from artifacts.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum HostScalar {
+    F32(f32),
+    I32(i32),
+}
+
+impl HostScalar {
+    pub fn as_f64(self) -> f64 {
+        match self {
+            HostScalar::F32(v) => v as f64,
+            HostScalar::I32(v) => v as f64,
+        }
+    }
+}
+
+impl std::fmt::Display for HostScalar {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            HostScalar::F32(v) => write!(f, "{v}"),
+            HostScalar::I32(v) => write!(f, "{v}"),
+        }
+    }
+}
+
+/// Extract every element of a literal as `HostVec` of the given dtype.
+pub fn literal_to_host(lit: &Literal, dtype: Dtype) -> Result<HostVec> {
+    Ok(match dtype {
+        Dtype::F32 => HostVec::F32(lit.to_vec::<f32>()?),
+        Dtype::I32 => HostVec::I32(lit.to_vec::<i32>()?),
+    })
+}
+
+/// Extract a rank-0/rank-1-singleton literal as a scalar.
+pub fn literal_to_scalar(lit: &Literal, dtype: Dtype) -> Result<HostScalar> {
+    Ok(match dtype {
+        Dtype::F32 => HostScalar::F32(lit.get_first_element::<f32>()?),
+        Dtype::I32 => HostScalar::I32(lit.get_first_element::<i32>()?),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_f32() {
+        let v = HostVec::F32(vec![1.0, 2.0, 3.0]);
+        let lit = v.to_literal();
+        assert_eq!(literal_to_host(&lit, Dtype::F32).unwrap(), v);
+    }
+
+    #[test]
+    fn round_trip_i32() {
+        let v = HostVec::I32(vec![-7, 0, 9]);
+        let lit = v.to_literal();
+        assert_eq!(literal_to_host(&lit, Dtype::I32).unwrap(), v);
+    }
+
+    #[test]
+    fn reshape_2d() {
+        let v = HostVec::F32((0..6).map(|i| i as f32).collect());
+        let lit = v.to_literal_2d(2, 3).unwrap();
+        assert_eq!(lit.element_count(), 6);
+        assert!(v.to_literal_2d(4, 2).is_err());
+    }
+
+    #[test]
+    fn extend_checks_dtype() {
+        let mut a = HostVec::F32(vec![1.0]);
+        assert!(a.extend(&HostVec::F32(vec![2.0])).is_ok());
+        assert_eq!(a.len(), 2);
+        assert!(a.extend(&HostVec::I32(vec![3])).is_err());
+    }
+
+    #[test]
+    fn scalar_display() {
+        assert_eq!(HostScalar::F32(1.5).to_string(), "1.5");
+        assert_eq!(HostScalar::I32(-3).as_f64(), -3.0);
+    }
+}

@@ -1,0 +1,20 @@
+//! PJRT runtime: load AOT artifacts (HLO text emitted by
+//! `python/compile/aot.py`) and execute them on the CPU PJRT client.
+//!
+//! Python is build-time only — this module is the *entire* request
+//! path. The interchange format is HLO **text**, not serialized
+//! `HloModuleProto`: jax ≥ 0.5 emits 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids
+//! (see /opt/xla-example/README.md).
+//!
+//! Thread-safety note: the `xla` crate's `PjRtClient` is `Rc`-based
+//! and **not `Send`**. [`Runtime`] must therefore live on one thread;
+//! the coordinator owns it on a dedicated executor thread and feeds it
+//! over channels ([`crate::coordinator::service`]).
+
+pub mod artifact;
+pub mod executor;
+pub mod literal;
+
+pub use artifact::{ArtifactMeta, Catalog, Kind};
+pub use executor::Runtime;

@@ -1,0 +1,186 @@
+//! Measurement harness for the `cargo bench` targets (offline
+//! stand-in for criterion): warmup, fixed-count sampling, median/MAD
+//! statistics, throughput derivation, and paper-table formatting.
+
+use std::time::Instant;
+
+/// One benchmark measurement series.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub name: String,
+    /// Seconds per iteration, sorted ascending.
+    pub secs: Vec<f64>,
+    /// Bytes processed per iteration (for GB/s derivation).
+    pub bytes: Option<u64>,
+}
+
+impl Sample {
+    pub fn median(&self) -> f64 {
+        percentile(&self.secs, 50.0)
+    }
+
+    pub fn p10(&self) -> f64 {
+        percentile(&self.secs, 10.0)
+    }
+
+    pub fn p90(&self) -> f64 {
+        percentile(&self.secs, 90.0)
+    }
+
+    /// Median absolute deviation (robust spread).
+    pub fn mad(&self) -> f64 {
+        let m = self.median();
+        let mut devs: Vec<f64> = self.secs.iter().map(|s| (s - m).abs()).collect();
+        devs.sort_by(|a, b| a.total_cmp(b));
+        percentile(&devs, 50.0)
+    }
+
+    /// GB/s at the median, when `bytes` is known.
+    pub fn gbps(&self) -> Option<f64> {
+        self.bytes.map(|b| b as f64 / self.median() / 1e9)
+    }
+}
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let idx = (p / 100.0 * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Harness configuration.
+#[derive(Debug, Clone)]
+pub struct Bench {
+    pub warmup_iters: usize,
+    pub sample_iters: usize,
+    results: Vec<Sample>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { warmup_iters: 3, sample_iters: 15, results: Vec::new() }
+    }
+}
+
+impl Bench {
+    pub fn new(warmup_iters: usize, sample_iters: usize) -> Self {
+        Bench { warmup_iters, sample_iters, results: Vec::new() }
+    }
+
+    /// Honour `PARRED_BENCH_FAST=1` (CI smoke mode: 1 warmup, 3 samples).
+    pub fn from_env() -> Self {
+        if std::env::var("PARRED_BENCH_FAST").as_deref() == Ok("1") {
+            Bench::new(1, 3)
+        } else {
+            Bench::default()
+        }
+    }
+
+    /// Measure `f` and record it under `name`. `bytes` enables GB/s.
+    /// The closure's return value is black-boxed to keep the work live.
+    pub fn run<R>(&mut self, name: &str, bytes: Option<u64>, mut f: impl FnMut() -> R) -> &Sample {
+        for _ in 0..self.warmup_iters {
+            black_box(f());
+        }
+        let mut secs = Vec::with_capacity(self.sample_iters);
+        for _ in 0..self.sample_iters {
+            let t0 = Instant::now();
+            black_box(f());
+            secs.push(t0.elapsed().as_secs_f64());
+        }
+        secs.sort_by(|a, b| a.total_cmp(b));
+        self.results.push(Sample { name: name.to_string(), secs, bytes });
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[Sample] {
+        &self.results
+    }
+
+    /// criterion-like one-line summary for every recorded sample.
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        for s in &self.results {
+            let med = s.median();
+            out.push_str(&format!(
+                "{:<44} {:>12}  [{} .. {}]",
+                s.name,
+                fmt_time(med),
+                fmt_time(s.p10()),
+                fmt_time(s.p90()),
+            ));
+            if let Some(g) = s.gbps() {
+                out.push_str(&format!("  {g:8.2} GB/s"));
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Opaque value sink (std::hint::black_box re-export for stable rustc).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Human-friendly time formatting.
+pub fn fmt_time(secs: f64) -> String {
+    if secs.is_nan() {
+        "n/a".into()
+    } else if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.3} ms", secs * 1e3)
+    } else {
+        format!("{secs:.3} s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn medians_and_percentiles() {
+        let s = Sample {
+            name: "x".into(),
+            secs: vec![1.0, 2.0, 3.0, 4.0, 5.0],
+            bytes: Some(3_000_000_000),
+        };
+        assert_eq!(s.median(), 3.0);
+        assert_eq!(s.p10(), 1.0);
+        assert_eq!(s.p90(), 5.0);
+        assert!((s.gbps().unwrap() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mad_of_constant_is_zero() {
+        let s = Sample { name: "x".into(), secs: vec![2.0; 9], bytes: None };
+        assert_eq!(s.mad(), 0.0);
+    }
+
+    #[test]
+    fn run_records_samples() {
+        let mut b = Bench::new(1, 5);
+        let mut count = 0u64;
+        b.run("inc", None, || {
+            count += 1;
+            count
+        });
+        assert_eq!(b.results().len(), 1);
+        assert_eq!(b.results()[0].secs.len(), 5);
+        assert_eq!(count, 6); // 1 warmup + 5 samples
+        assert!(b.report().contains("inc"));
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert!(fmt_time(2.5e-9).contains("ns"));
+        assert!(fmt_time(2.5e-6).contains("µs"));
+        assert!(fmt_time(2.5e-3).contains("ms"));
+        assert!(fmt_time(2.5).contains("s"));
+    }
+}

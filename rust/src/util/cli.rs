@@ -1,0 +1,123 @@
+//! Tiny declarative CLI argument parser for the `parred` binary
+//! (offline stand-in for clap): `--key value`, `--key=value`, and
+//! boolean `--flag` forms, with typed getters and unknown-flag
+//! rejection.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed arguments: positionals plus `--key value` options.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw argv (no program name). `allowed` lists the accepted
+    /// option/flag names (without `--`); anything else errors.
+    pub fn parse(argv: &[String], allowed: &[&str]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                let (key, inline) = match name.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (name.to_string(), None),
+                };
+                if !allowed.contains(&key.as_str()) {
+                    bail!("unknown option --{key} (expected one of: {})",
+                          allowed.iter().map(|a| format!("--{a}")).collect::<Vec<_>>().join(", "));
+                }
+                if let Some(v) = inline {
+                    out.options.insert(key, v);
+                } else if it.peek().is_some_and(|n| !n.starts_with("--")) {
+                    out.options.insert(key, it.next().unwrap().clone());
+                } else {
+                    out.flags.push(key);
+                }
+            } else {
+                out.positional.push(arg.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .replace('_', "")
+                .parse()
+                .map_err(|e| anyhow!("--{name} expects an integer, got {v:?}: {e}")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow!("--{name} expects a number, got {v:?}: {e}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = Args::parse(&argv(&["serve", "--port", "8080", "--verbose"]),
+                            &["port", "verbose"]).unwrap();
+        assert_eq!(a.positional, vec!["serve"]);
+        assert_eq!(a.get("port"), Some("8080"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = Args::parse(&argv(&["--n=5_533_214"]), &["n"]).unwrap();
+        assert_eq!(a.get_usize("n", 0).unwrap(), 5_533_214);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(Args::parse(&argv(&["--bogus", "1"]), &["n"]).is_err());
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = Args::parse(&argv(&["--x", "2.5"]), &["x", "y"]).unwrap();
+        assert_eq!(a.get_f64("x", 0.0).unwrap(), 2.5);
+        assert_eq!(a.get_f64("y", 7.0).unwrap(), 7.0);
+        assert_eq!(a.get_or("y", "d"), "d");
+        assert!(Args::parse(&argv(&["--x", "abc"]), &["x"]).unwrap().get_usize("x", 0).is_err());
+    }
+
+    #[test]
+    fn flag_followed_by_positional() {
+        let a = Args::parse(&argv(&["--fast", "run"]), &["fast"]).unwrap();
+        // "run" is consumed as the value of --fast (documented behaviour:
+        // put flags last or use --fast=1).
+        assert_eq!(a.get("fast"), Some("run"));
+    }
+}

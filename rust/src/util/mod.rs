@@ -1,0 +1,25 @@
+//! In-crate substrates for an offline build environment.
+//!
+//! Only `xla` and `anyhow` are available as external dependencies, so
+//! the pieces a framework would normally pull from crates.io are
+//! implemented here, each with its own test suite:
+//!
+//! * [`json`] — a strict, allocation-friendly JSON parser (for the
+//!   artifact manifest and config files).
+//! * [`rng`] — a small, fast, seedable PRNG (workload generation,
+//!   property tests; `Date/random`-free determinism).
+//! * [`prop`] — a miniature property-testing harness (randomized case
+//!   generation with seed reporting on failure).
+//! * [`bench`] — a measurement harness with warmup, repetition,
+//!   median/MAD statistics and throughput reporting (the crate's
+//!   `cargo bench` targets are built on this).
+//! * [`cli`] — a tiny declarative argument parser for the `parred`
+//!   binary.
+//! * [`stats`] — streaming histograms/percentiles for service metrics.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

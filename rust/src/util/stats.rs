@@ -1,0 +1,181 @@
+//! Streaming service metrics: counters and log-bucketed latency
+//! histograms with percentile queries. Used by the coordinator's
+//! metrics endpoint and the end-to-end serving bench.
+
+/// Log-bucketed histogram covering 100 ns .. ~100 s.
+///
+/// Buckets grow geometrically (x1.3), giving <15% relative error on
+/// percentile queries — plenty for latency reporting.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    buckets: Vec<u64>,
+    count: u64,
+    sum_secs: f64,
+    min: f64,
+    max: f64,
+}
+
+const BASE: f64 = 1e-7; // 100 ns
+const GROWTH: f64 = 1.3;
+const NBUCKETS: usize = 80;
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            buckets: vec![0; NBUCKETS],
+            count: 0,
+            sum_secs: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    fn bucket_of(secs: f64) -> usize {
+        if secs <= BASE {
+            return 0;
+        }
+        let idx = (secs / BASE).log(GROWTH).floor() as usize;
+        idx.min(NBUCKETS - 1)
+    }
+
+    /// Lower edge of bucket `i`.
+    fn edge(i: usize) -> f64 {
+        BASE * GROWTH.powi(i as i32)
+    }
+
+    pub fn record(&mut self, secs: f64) {
+        self.buckets[Self::bucket_of(secs)] += 1;
+        self.count += 1;
+        self.sum_secs += secs;
+        self.min = self.min.min(secs);
+        self.max = self.max.max(secs);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.sum_secs / self.count as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Approximate percentile (`p` in 0..=100).
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        let target = (p / 100.0 * self.count as f64).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target.max(1) {
+                return Self::edge(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Merge another histogram into this one.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_secs += other.sum_secs;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// One-line summary: `n=.. mean=.. p50=.. p95=.. p99=.. max=..`.
+    pub fn summary(&self) -> String {
+        use super::bench::fmt_time;
+        if self.count == 0 {
+            return "n=0".into();
+        }
+        format!(
+            "n={} mean={} p50={} p95={} p99={} max={}",
+            self.count,
+            fmt_time(self.mean()),
+            fmt_time(self.percentile(50.0)),
+            fmt_time(self.percentile(95.0)),
+            fmt_time(self.percentile(99.0)),
+            fmt_time(self.max)
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert!(h.mean().is_nan());
+        assert!(h.percentile(50.0).is_nan());
+        assert_eq!(h.summary(), "n=0");
+    }
+
+    #[test]
+    fn single_value() {
+        let mut h = Histogram::new();
+        h.record(1e-3);
+        assert_eq!(h.count(), 1);
+        assert!((h.mean() - 1e-3).abs() < 1e-12);
+        let p50 = h.percentile(50.0);
+        assert!((p50 - 1e-3).abs() / 1e-3 < 0.35, "p50={p50}");
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let mut h = Histogram::new();
+        for i in 1..=1000 {
+            h.record(i as f64 * 1e-6);
+        }
+        let p50 = h.percentile(50.0);
+        let p95 = h.percentile(95.0);
+        let p99 = h.percentile(99.0);
+        assert!(p50 <= p95 && p95 <= p99, "{p50} {p95} {p99}");
+        assert!((p50 - 500e-6).abs() / 500e-6 < 0.35, "p50={p50}");
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        a.record(1e-4);
+        b.record(1e-2);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.max(), 1e-2);
+        assert_eq!(a.min(), 1e-4);
+    }
+
+    #[test]
+    fn extremes_clamped() {
+        let mut h = Histogram::new();
+        h.record(1e-12); // below first bucket
+        h.record(1e6); // above last bucket
+        assert_eq!(h.count(), 2);
+        assert!(h.percentile(100.0) >= h.percentile(1.0));
+    }
+}

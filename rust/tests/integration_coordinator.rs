@@ -1,0 +1,167 @@
+//! Coordinator end-to-end over the real PJRT runtime: routing,
+//! dynamic batching, host fallback, backpressure, numerics.
+//! Skips when artifacts are not built.
+
+use std::time::Duration;
+
+use parred::coordinator::service::{run_trace, Service, ServiceConfig, TraceConfig};
+use parred::coordinator::ExecPath;
+use parred::reduce::Op;
+use parred::runtime::literal::{HostScalar, HostVec};
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}
+
+fn config() -> ServiceConfig {
+    ServiceConfig {
+        artifacts_dir: artifacts_dir().to_string_lossy().into_owned(),
+        batch_window: Duration::from_micros(300),
+        max_queue: 1000,
+        workers: 2,
+        warmup: false, // tests tolerate first-call compile latency
+    }
+}
+
+fn pseudo(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = parred::util::rng::Rng::new(seed);
+    rng.f32_vec(n, -1.0, 1.0)
+}
+
+#[test]
+fn batched_path_round_trip() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let svc = Service::start(config()).unwrap();
+    // 8 same-shape requests: should stack into one rows artifact.
+    let payloads: Vec<Vec<f32>> = (0..8).map(|i| pseudo(65_536, i)).collect();
+    let rxs: Vec<_> = payloads
+        .iter()
+        .map(|p| svc.submit(Op::Sum, HostVec::F32(p.clone())).unwrap())
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+        let HostScalar::F32(v) = resp.value.unwrap() else { panic!("dtype") };
+        let want: f64 = payloads[i].iter().map(|&x| x as f64).sum();
+        assert!((v as f64 - want).abs() < 0.5, "req {i}: {v} vs {want}");
+        assert!(
+            matches!(resp.path, ExecPath::PjrtBatched { .. }),
+            "expected batched path, got {:?}",
+            resp.path
+        );
+    }
+    let m = svc.shutdown();
+    assert_eq!(m.completed, 8);
+    assert!(m.batches >= 1);
+}
+
+#[test]
+fn full_artifact_path() {
+    if !have_artifacts() {
+        return;
+    }
+    let svc = Service::start(config()).unwrap();
+    // n = 1024 has a full artifact but no rows artifact.
+    let data = pseudo(1024, 3);
+    let rx = svc.submit(Op::Sum, HostVec::F32(data.clone())).unwrap();
+    let resp = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+    assert_eq!(resp.path, ExecPath::PjrtFull);
+    let HostScalar::F32(v) = resp.value.unwrap() else { panic!("dtype") };
+    let want: f64 = data.iter().map(|&x| x as f64).sum();
+    assert!((v as f64 - want).abs() < 1e-2);
+    svc.shutdown();
+}
+
+#[test]
+fn host_fallback_for_odd_sizes() {
+    if !have_artifacts() {
+        return;
+    }
+    let svc = Service::start(config()).unwrap();
+    let data = pseudo(12_345, 4); // no artifact for this n
+    let rx = svc.submit(Op::Min, HostVec::F32(data.clone())).unwrap();
+    let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+    assert_eq!(resp.path, ExecPath::Host);
+    let HostScalar::F32(v) = resp.value.unwrap() else { panic!("dtype") };
+    let want = data.iter().cloned().fold(f32::INFINITY, f32::min);
+    assert_eq!(v, want);
+    svc.shutdown();
+}
+
+#[test]
+fn i32_batched_is_exact() {
+    if !have_artifacts() {
+        return;
+    }
+    let svc = Service::start(config()).unwrap();
+    let mut rng = parred::util::rng::Rng::new(9);
+    let payloads: Vec<Vec<i32>> = (0..8).map(|_| rng.i32_vec(65_536, -100, 100)).collect();
+    let rxs: Vec<_> = payloads
+        .iter()
+        .map(|p| svc.submit(Op::Sum, HostVec::I32(p.clone())).unwrap())
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+        let HostScalar::I32(v) = resp.value.unwrap() else { panic!("dtype") };
+        let want: i32 = payloads[i].iter().sum();
+        assert_eq!(v, want, "req {i}");
+    }
+    svc.shutdown();
+}
+
+#[test]
+fn backpressure_rejects_when_full() {
+    if !have_artifacts() {
+        return;
+    }
+    let cfg = ServiceConfig { max_queue: 4, ..config() };
+    let svc = Service::start(cfg).unwrap();
+    let mut ok = 0;
+    let mut rejected = 0;
+    let mut rxs = Vec::new();
+    for i in 0..32 {
+        match svc.submit(Op::Sum, HostVec::F32(pseudo(65_536, i))) {
+            Ok(rx) => {
+                ok += 1;
+                rxs.push(rx);
+            }
+            Err(_) => rejected += 1,
+        }
+    }
+    assert!(ok >= 4, "gate must admit up to its limit");
+    assert!(rejected > 0, "gate must reject past its limit");
+    for rx in rxs {
+        let _ = rx.recv_timeout(Duration::from_secs(120));
+    }
+    svc.shutdown();
+}
+
+#[test]
+fn trace_driver_verifies_all() {
+    if !have_artifacts() {
+        return;
+    }
+    let cfg = ServiceConfig { warmup: true, ..config() };
+    let report = run_trace(
+        cfg,
+        TraceConfig { requests: 40, payload_n: 65_536, seed: 5, mean_gap_us: 20.0 },
+    )
+    .unwrap();
+    assert!(report.contains("numerically verified"), "{report}");
+    assert!(report.contains("completed=40"), "{report}");
+}
+
+#[test]
+fn startup_fails_cleanly_without_artifacts() {
+    let cfg = ServiceConfig {
+        artifacts_dir: "/nonexistent/path".into(),
+        ..config()
+    };
+    assert!(Service::start(cfg).is_err());
+}

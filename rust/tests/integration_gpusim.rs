@@ -1,0 +1,110 @@
+//! Cross-module integration over the simulator: full table harness
+//! runs at reduced scale, cross-device consistency, and agreement
+//! with host oracles + the PJRT path where available.
+
+use parred::gpusim::{CombOp, DeviceConfig, Gpu};
+use parred::harness::{table1, table2, table3};
+use parred::kernels::drivers;
+use parred::reduce::{scalar, Op};
+use parred::util::rng::Rng;
+
+#[test]
+fn table1_ladder_regenerates() {
+    let rows = table1::run(1 << 19, 128, 42).unwrap();
+    let t = table1::table(&rows);
+    assert_eq!(t.rows.len(), 7);
+    // Qualitative Table 1: each optimization helps; the ladder ends
+    // at least 5x up at this reduced scale.
+    let times: Vec<f64> = rows.iter().map(|r| r.time_s).collect();
+    assert!(times[6] * 5.0 < times[0], "{times:?}");
+    // Kernel 2 beats kernel 1 (divergence + % removal)...
+    assert!(times[1] < times[0]);
+    // ...and kernel 3 beats kernel 2 (bank conflicts removed).
+    assert!(times[2] < times[1]);
+}
+
+#[test]
+fn table2_sweep_regenerates() {
+    let rows = table2::run(1 << 20, 256, 42).unwrap();
+    let s8 = rows.iter().find(|r| r.f == 8).unwrap();
+    assert!(s8.speedup > 1.7, "F=8 speedup {}", s8.speedup);
+    // Bandwidth % column is consistent with the time column.
+    for r in &rows {
+        assert!(r.bandwidth_pct > 0.0 && r.bandwidth_pct <= 100.0);
+    }
+    // Figures render from the same rows.
+    assert!(table2::figure3(&rows).render().contains("modeled"));
+    assert!(table2::figure4(&rows).render().contains("paper"));
+}
+
+#[test]
+fn table3_parity_regenerates() {
+    let row = table3::run(1 << 21, 256, 8, 42).unwrap();
+    assert!(row.pct > 60.0 && row.pct < 150.0, "{row:?}");
+}
+
+#[test]
+fn same_kernel_all_devices_same_value() {
+    let mut rng = Rng::new(1);
+    let data: Vec<f64> = (0..100_000).map(|_| rng.i32_in(-50, 50) as f64).collect();
+    let want: f64 = data.iter().sum();
+    for cfg in DeviceConfig::presets() {
+        let block = 128.min(cfg.max_block_threads);
+        let mut gpu = Gpu::new(cfg.clone());
+        let out = drivers::jradi_reduce(&mut gpu, &data, CombOp::Add, 8, block).unwrap();
+        assert_eq!(out.value, want, "{}", cfg.name);
+    }
+}
+
+#[test]
+fn simulator_agrees_with_host_library() {
+    let mut rng = Rng::new(2);
+    let ints: Vec<i32> = rng.i32_vec(250_000, -1000, 1000);
+    let data: Vec<f64> = ints.iter().map(|&x| x as f64).collect();
+    let mut gpu = Gpu::new(DeviceConfig::amd_gcn());
+    for (op, cop) in [
+        (Op::Sum, CombOp::Add),
+        (Op::Max, CombOp::Max),
+        (Op::Min, CombOp::Min),
+    ] {
+        let sim = drivers::catanzaro_reduce(&mut gpu, &data, cop, 256).unwrap().value;
+        let host = scalar::reduce(&ints, op) as f64;
+        assert_eq!(sim, host, "{op}");
+    }
+}
+
+#[test]
+fn stats_are_internally_consistent() {
+    let mut rng = Rng::new(3);
+    let data: Vec<f64> = (0..500_000).map(|_| rng.f32_in(-1.0, 1.0) as f64).collect();
+    let mut gpu = Gpu::new(DeviceConfig::amd_gcn());
+    let out = drivers::jradi_reduce(&mut gpu, &data, CombOp::Add, 8, 256).unwrap();
+    for l in &out.run.launches {
+        let c = &l.counters;
+        assert!(c.issue_cycles >= c.warp_issues, "issue cycles < issues");
+        assert!(c.gmem_transactions >= c.gmem_instrs, "txns < instrs");
+        assert!(c.gmem_load_instrs <= c.gmem_instrs);
+        assert!(c.lane_ops >= c.warp_issues);
+        assert!(l.time_s >= l.compute_s.max(l.mem_s));
+        assert!(c.load_regions > 0, "persistent loop must close regions");
+    }
+}
+
+#[test]
+fn unroll_reduces_regions_by_factor() {
+    let mut rng = Rng::new(4);
+    let data: Vec<f64> = (0..1_000_000).map(|_| rng.f32_in(-1.0, 1.0) as f64).collect();
+    let mut gpu = Gpu::new(DeviceConfig::amd_gcn());
+    let r1 = drivers::jradi_reduce(&mut gpu, &data, CombOp::Add, 1, 256).unwrap();
+    let r8 = drivers::jradi_reduce(&mut gpu, &data, CombOp::Add, 8, 256).unwrap();
+    let regions = |o: &parred::kernels::Outcome| -> u64 {
+        o.run.launches[0].counters.load_regions
+    };
+    let ratio = regions(&r1) as f64 / regions(&r8) as f64;
+    assert!(
+        (ratio - 8.0).abs() < 1.5,
+        "regions should shrink ~8x: {} vs {}",
+        regions(&r1),
+        regions(&r8)
+    );
+}

@@ -1,0 +1,157 @@
+//! PJRT integration: artifacts load, compile, execute, and the
+//! numerics match the host oracles. Requires `make artifacts`.
+
+use parred::reduce::op::{Dtype, Op};
+use parred::reduce::{kahan, scalar};
+use parred::runtime::literal::{HostScalar, HostVec};
+use parred::runtime::Runtime;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn runtime_or_skip() -> Option<Runtime> {
+    if !artifacts_dir().join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::load(artifacts_dir()).expect("runtime should load"))
+}
+
+fn pseudo_f32(n: usize, scale: f32) -> Vec<f32> {
+    (0..n)
+        .map(|i| (((i.wrapping_mul(2_654_435_761)) % 2001) as f32 - 1000.0) * scale)
+        .collect()
+}
+
+fn pseudo_i32(n: usize) -> Vec<i32> {
+    (0..n).map(|i| ((i.wrapping_mul(2_654_435_761)) % 201) as i32 - 100).collect()
+}
+
+#[test]
+fn full_sum_f32_small_matches_oracle() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let meta = rt.catalog().find_full(Op::Sum, Dtype::F32, 1024).expect("artifact");
+    let data = pseudo_f32(1024, 1e-2);
+    let got = rt.reduce_full(meta, &HostVec::F32(data.clone())).unwrap();
+    let want = kahan::sum_f64(&data);
+    let HostScalar::F32(v) = got else { panic!("dtype") };
+    assert!((v as f64 - want).abs() < 1e-2, "{v} vs {want}");
+}
+
+#[test]
+fn full_sum_i32_is_exact() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let meta = rt.catalog().find_full(Op::Sum, Dtype::I32, 65_536).expect("artifact");
+    let data = pseudo_i32(65_536);
+    let got = rt.reduce_full(meta, &HostVec::I32(data.clone())).unwrap();
+    let want = scalar::reduce(&data, Op::Sum);
+    let HostScalar::I32(v) = got else { panic!("dtype") };
+    assert_eq!(v, want);
+}
+
+#[test]
+fn all_ops_at_65536() {
+    let Some(rt) = runtime_or_skip() else { return };
+    for op in [Op::Sum, Op::Max, Op::Min, Op::Prod] {
+        let Some(meta) = rt.catalog().find_full(op, Dtype::F32, 65_536) else {
+            continue;
+        };
+        let data = if op == Op::Prod {
+            pseudo_f32(65_536, 1e-7).iter().map(|x| 1.0 + x).collect::<Vec<_>>()
+        } else {
+            pseudo_f32(65_536, 1e-2)
+        };
+        let got = rt.reduce_full(meta, &HostVec::F32(data.clone())).unwrap();
+        let want = scalar::reduce_pairwise(&data, op);
+        let HostScalar::F32(v) = got else { panic!("dtype") };
+        assert!(
+            (v - want).abs() <= 1e-3 * want.abs().max(1.0),
+            "{op}: {v} vs {want}"
+        );
+    }
+}
+
+#[test]
+fn paper_size_f_sweep_all_agree() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let n = parred::N_PAPER;
+    let data = pseudo_f32(n, 1e-3);
+    let want = kahan::sum_f64(&data);
+    let mut tested = 0;
+    for f in [1usize, 4, 8, 16] {
+        let name = format!("full_sum_f32_n{n}_f{f}");
+        let Some(meta) = rt.catalog().get(&name) else { continue };
+        let meta = meta.clone();
+        let got = rt.reduce_full(&meta, &HostVec::F32(data.clone())).unwrap();
+        let HostScalar::F32(v) = got else { panic!("dtype") };
+        assert!(
+            (v as f64 - want).abs() <= 1e-4 * want.abs().max(1.0) + 0.5,
+            "F={f}: {v} vs {want}"
+        );
+        tested += 1;
+    }
+    assert!(tested >= 3, "expected several F variants compiled");
+}
+
+#[test]
+fn rows_artifact_matches_per_row_oracle() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let meta = rt.catalog().find_rows(Op::Sum, Dtype::F32, 8, 65_536).expect("artifact").clone();
+    let data = pseudo_f32(8 * 65_536, 1e-3);
+    let got = rt.reduce_rows(&meta, &HostVec::F32(data.clone())).unwrap();
+    let HostVec::F32(got) = got else { panic!("dtype") };
+    assert_eq!(got.len(), 8);
+    for (r, g) in got.iter().enumerate() {
+        let want = kahan::sum_f64(&data[r * 65_536..(r + 1) * 65_536]);
+        assert!((*g as f64 - want).abs() < 0.5, "row {r}: {g} vs {want}");
+    }
+}
+
+#[test]
+fn dot_artifact() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let meta = rt.catalog().get("dot_sum_f32_n1048576_f8").expect("artifact").clone();
+    let x = pseudo_f32(1 << 20, 1e-3);
+    let y = pseudo_f32(1 << 20, 1e-3);
+    let got = rt.dot(&meta, &HostVec::F32(x.clone()), &HostVec::F32(y.clone())).unwrap();
+    let want: f64 = x.iter().zip(&y).map(|(a, b)| (*a as f64) * (*b as f64)).sum();
+    assert!((got.as_f64() - want).abs() <= 1e-4 * want.abs().max(1.0) + 0.1);
+}
+
+#[test]
+fn meanvar_artifact() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let meta = rt.catalog().get("meanvar_sum_f32_n1048576_f8").expect("artifact").clone();
+    let x = pseudo_f32(1 << 20, 1e-3);
+    let (mean, var) = rt.mean_var(&meta, &HostVec::F32(x.clone())).unwrap();
+    let m: f64 = x.iter().map(|&v| v as f64).sum::<f64>() / x.len() as f64;
+    let v: f64 = x.iter().map(|&v| (v as f64 - m).powi(2)).sum::<f64>() / x.len() as f64;
+    assert!((mean as f64 - m).abs() < 1e-3, "{mean} vs {m}");
+    assert!((var as f64 - v).abs() / v < 1e-2, "{var} vs {v}");
+}
+
+#[test]
+fn executable_cache_hits() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let meta = rt.catalog().find_full(Op::Sum, Dtype::F32, 1024).unwrap().clone();
+    let data = HostVec::F32(pseudo_f32(1024, 1e-2));
+    rt.reduce_full(&meta, &data).unwrap();
+    rt.reduce_full(&meta, &data).unwrap();
+    let st = rt.stats();
+    assert_eq!(st.compiles, 1, "second call must hit the compile cache");
+    assert!(st.cache_hits >= 1);
+    assert_eq!(st.executes, 2);
+}
+
+#[test]
+fn payload_validation_errors() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let meta = rt.catalog().find_full(Op::Sum, Dtype::F32, 1024).unwrap().clone();
+    // Wrong size.
+    assert!(rt.reduce_full(&meta, &HostVec::F32(vec![0.0; 100])).is_err());
+    // Wrong dtype.
+    assert!(rt.reduce_full(&meta, &HostVec::I32(vec![0; 1024])).is_err());
+    // Wrong kind.
+    assert!(rt.reduce_rows(&meta, &HostVec::F32(vec![0.0; 1024])).is_err());
+}

@@ -1,0 +1,256 @@
+//! Property-based invariants (in-crate harness: util::prop) across the
+//! host library, the simulator kernels, and the coordinator units.
+
+use parred::gpusim::{CombOp, DeviceConfig, Gpu};
+use parred::kernels::drivers;
+use parred::reduce::{kahan, scalar, simd, threaded, Element, Op};
+use parred::util::prop::{check, sizes_nonzero};
+use parred::util::rng::Rng;
+
+const CASES: usize = 48;
+
+#[test]
+fn prop_simd_equals_scalar_i32() {
+    check(
+        "simd == scalar (i32, all ops)",
+        CASES,
+        |rng| {
+            let n = sizes_nonzero(rng, 50_000);
+            (rng.i32_vec(n, -10_000, 10_000), rng.range(1, 16))
+        },
+        |(data, f)| {
+            for op in [Op::Sum, Op::Max, Op::Min] {
+                if simd::reduce_unroll(data, op, *f) != scalar::reduce(data, op) {
+                    return Err(format!("mismatch for {op} f={f}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_threaded_equals_scalar_any_workers() {
+    check(
+        "threaded == scalar",
+        CASES,
+        |rng| {
+            let n = sizes_nonzero(rng, 200_000);
+            (rng.i32_vec(n, -1000, 1000), rng.range(1, 12))
+        },
+        |(data, t)| {
+            for op in [Op::Sum, Op::Max, Op::Min] {
+                if threaded::reduce(data, op, *t) != scalar::reduce(data, op) {
+                    return Err(format!("mismatch for {op} threads={t}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_identity_neutrality() {
+    check(
+        "combine(identity, x) == x",
+        CASES,
+        |rng| (rng.i32_in(i32::MIN / 2, i32::MAX / 2), rng.f32_in(-1e20, 1e20)),
+        |(i, f)| {
+            for op in Op::ALL {
+                if i32::combine(op, i32::identity(op), *i) != *i {
+                    return Err(format!("i32 identity broken for {op}"));
+                }
+                if f32::combine(op, f32::identity(op), *f) != *f {
+                    return Err(format!("f32 identity broken for {op}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sim_jradi_equals_scalar_any_geometry() {
+    check(
+        "gpusim jradi == scalar for arbitrary (n, f, block, device)",
+        24,
+        |rng| {
+            let n = sizes_nonzero(rng, 30_000);
+            let f = rng.range(1, 16) as u32;
+            let block = 1u32 << rng.range(6, 8); // 64..256
+            let dev = rng.range(0, 2);
+            (rng.i32_vec(n, -500, 500), f, block, dev)
+        },
+        |(ints, f, block, dev)| {
+            let data: Vec<f64> = ints.iter().map(|&x| x as f64).collect();
+            let cfg = DeviceConfig::presets()[*dev].clone();
+            let block = (*block).min(cfg.max_block_threads);
+            let mut gpu = Gpu::new(cfg);
+            let out = drivers::jradi_reduce(&mut gpu, &data, CombOp::Add, *f, block)
+                .map_err(|e| format!("{e:#}"))?;
+            let want = scalar::reduce(ints, Op::Sum) as f64;
+            if out.value != want {
+                return Err(format!("{} != {want}", out.value));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sim_harris_equals_scalar() {
+    check(
+        "gpusim harris K1..K7 == scalar",
+        14,
+        |rng| {
+            let n = sizes_nonzero(rng, 20_000);
+            let k = rng.range(1, 7) as u8;
+            (rng.i32_vec(n, -500, 500), k)
+        },
+        |(ints, k)| {
+            let data: Vec<f64> = ints.iter().map(|&x| x as f64).collect();
+            let mut gpu = Gpu::new(DeviceConfig::g80());
+            let out = drivers::harris_reduce(&mut gpu, *k, &data, CombOp::Add, 128)
+                .map_err(|e| format!("{e:#}"))?;
+            let want = scalar::reduce(ints, Op::Sum) as f64;
+            if out.value != want {
+                return Err(format!("K{k}: {} != {want}", out.value));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_permutation_invariance_i32() {
+    check(
+        "sum is permutation-invariant (paper §1.1)",
+        CASES,
+        |rng| {
+            let n = sizes_nonzero(rng, 10_000);
+            let v = rng.i32_vec(n, -1000, 1000);
+            let mut p = v.clone();
+            rng.shuffle(&mut p);
+            (v, p)
+        },
+        |(v, p)| {
+            if scalar::reduce(v, Op::Sum) != scalar::reduce(p, Op::Sum) {
+                return Err("permutation changed the sum".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_kahan_at_least_as_accurate() {
+    check(
+        "kahan error <= naive error (f32)",
+        CASES,
+        |rng| {
+            let n = sizes_nonzero(rng, 20_000);
+            let scale = 10f32.powi(rng.range(0, 6) as i32);
+            rng.f32_vec(n, -scale, scale)
+        },
+        |data| {
+            let exact = kahan::sum_f64(data);
+            let naive: f32 = data.iter().sum();
+            let kah = kahan::sum_f32(data);
+            let err_naive = (naive as f64 - exact).abs();
+            let err_kahan = (kah as f64 - exact).abs();
+            if err_kahan > err_naive * 1.5 + 1e-3 {
+                return Err(format!("kahan {err_kahan} worse than naive {err_naive}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_batcher_never_reorders_within_key() {
+    use parred::coordinator::batcher::Batcher;
+    use parred::reduce::Op;
+    use parred::runtime::literal::HostVec;
+    use std::time::{Duration, Instant};
+
+    check(
+        "batcher preserves FIFO per key",
+        32,
+        |rng| {
+            let count = rng.range(1, 40);
+            let keys = rng.range(1, 3);
+            (count, keys, rng.next_u64())
+        },
+        |&(count, keys, seed)| {
+            let mut rng = Rng::new(seed);
+            let mut b = Batcher::new(Duration::from_millis(0));
+            let t = Instant::now();
+            for id in 0..count as u64 {
+                let n = 100 * (1 + rng.range(0, keys - 1).min(keys));
+                let (tx, rx) = std::sync::mpsc::channel();
+                std::mem::forget(rx);
+                b.push(parred::coordinator::Request {
+                    id,
+                    op: Op::Sum,
+                    payload: HostVec::F32(vec![0.0; n]),
+                    t_enqueue: t,
+                    reply: tx,
+                });
+            }
+            let flushed = b.flush_ready(t + Duration::from_millis(1), |_| vec![4, 8, 16]);
+            // Within each key, ids must be strictly increasing.
+            use std::collections::HashMap;
+            let mut last: HashMap<usize, u64> = HashMap::new();
+            for fb in &flushed {
+                for r in &fb.requests {
+                    let key = r.payload.len();
+                    if let Some(&prev) = last.get(&key) {
+                        if r.id <= prev {
+                            return Err(format!("reorder within key {key}: {prev} -> {}", r.id));
+                        }
+                    }
+                    last.insert(key, r.id);
+                }
+                if fb.requests.len() > fb.exec_rows {
+                    return Err("batch larger than exec rows".into());
+                }
+            }
+            let total: usize = flushed.iter().map(|f| f.requests.len()).sum();
+            if total + b.queued() != count {
+                return Err("requests lost or duplicated".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_gate_never_exceeds_limit() {
+    use parred::coordinator::backpressure::Gate;
+    check(
+        "gate in_flight <= limit under arbitrary acquire/release",
+        32,
+        |rng| {
+            let limit = rng.range(1, 16);
+            let ops: Vec<bool> = (0..rng.range(1, 200)).map(|_| rng.below(2) == 0).collect();
+            (limit, ops)
+        },
+        |(limit, ops)| {
+            let g = Gate::new(*limit);
+            let mut permits = Vec::new();
+            for &acquire in ops {
+                if acquire {
+                    if let Some(p) = g.try_acquire() {
+                        permits.push(p);
+                    }
+                } else {
+                    permits.pop();
+                }
+                if g.in_flight() > g.limit() {
+                    return Err(format!("in_flight {} > limit {}", g.in_flight(), g.limit()));
+                }
+            }
+            Ok(())
+        },
+    );
+}
