@@ -14,7 +14,7 @@
 
 use std::time::Duration;
 
-use parred::coordinator::service::{run_trace, ServiceConfig, TraceConfig};
+use parred::coordinator::service::{run_trace, PoolServeConfig, ServiceConfig, TraceConfig};
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -27,6 +27,7 @@ fn main() -> anyhow::Result<()> {
         max_queue: 10_000,
         workers: 0,
         warmup: true,
+        pool: None,
     };
     let trace = TraceConfig { requests, payload_n, seed: 42, mean_gap_us: 50.0 };
 
@@ -36,9 +37,26 @@ fn main() -> anyhow::Result<()> {
 
     // A second, tighter-window run shows the batching/latency
     // trade-off the coordinator exposes.
-    let cfg2 = ServiceConfig { batch_window: Duration::from_micros(20), ..cfg };
+    let cfg2 = ServiceConfig { batch_window: Duration::from_micros(20), ..cfg.clone() };
     let report2 = run_trace(cfg2, trace)?;
     println!("--- window=20µs (less batching, lower queueing delay) ---");
     println!("{report2}");
+
+    // Pool scenario: payloads past the pool cutoff have no compiled
+    // artifact, so the router shards them across a fleet of simulated
+    // devices (Route::Sharded) instead of the host fallback. The
+    // report's `pool:` line shows the shard/steal counters.
+    let cfg3 = ServiceConfig {
+        pool: Some(PoolServeConfig {
+            devices: vec!["TeslaC2075".into(), "TeslaC2075".into(), "G80".into()],
+            cutoff: 1 << 19,
+            tasks_per_device: 2,
+        }),
+        ..cfg
+    };
+    let trace3 = TraceConfig { requests: 8, payload_n: 1 << 20, seed: 7, mean_gap_us: 200.0 };
+    let report3 = run_trace(cfg3, trace3)?;
+    println!("--- pool: 2xTeslaC2075 + 1xG80, sharded routing at 1M f32 ---");
+    println!("{report3}");
     Ok(())
 }

@@ -1,0 +1,77 @@
+//! `cargo bench --bench pool` — device-count scaling of the
+//! multi-device execution pool at the paper's workload size
+//! (`N_PAPER` = 5,533,214), plus a heterogeneous-fleet row and a
+//! work-stealing demonstration under a deliberately uneven plan.
+
+use parred::gpusim::ir::CombOp;
+use parred::gpusim::DeviceConfig;
+use parred::harness::pool_scaling;
+use parred::pool::{DevicePool, PoolConfig, ShardPlan};
+use parred::util::bench::fmt_time;
+use parred::util::rng::Rng;
+
+fn main() {
+    let fast = std::env::var("PARRED_BENCH_FAST").as_deref() == Ok("1");
+    let n = if fast { 1 << 20 } else { parred::N_PAPER };
+
+    // --- homogeneous scaling sweep (1/2/4/8 x C2075) ---
+    let t0 = std::time::Instant::now();
+    let rows = pool_scaling::run(n, 256, 42).expect("pool scaling run");
+    println!("{}", pool_scaling::table(n, &rows).markdown());
+    println!(
+        "host wall time for the sweep: {} ({} fleet sizes x {n} elements)",
+        fmt_time(t0.elapsed().as_secs_f64()),
+        rows.len()
+    );
+    let r4 = rows.iter().find(|r| r.devices == 4).expect("4-device row");
+    let r1 = rows.iter().find(|r| r.devices == 1).expect("1-device row");
+    println!(
+        "4-device modeled speedup over 1 device: {:.2}x ({} -> {})",
+        r1.modeled_s / r4.modeled_s,
+        fmt_time(r1.modeled_s),
+        fmt_time(r4.modeled_s),
+    );
+    assert!(
+        r4.modeled_s < r1.modeled_s,
+        "4-device pool must beat the single device: {} !< {}",
+        r4.modeled_s,
+        r1.modeled_s
+    );
+
+    // --- heterogeneous fleet: 2 x C2075 + 1 x G80 ---
+    let mut rng = Rng::new(43);
+    let data: Vec<f64> = (0..n).map(|_| rng.i32_in(-100, 100) as f64).collect();
+    let want: f64 = data.iter().sum();
+    let hetero = DevicePool::new(PoolConfig {
+        devices: vec![
+            DeviceConfig::tesla_c2075(),
+            DeviceConfig::tesla_c2075(),
+            DeviceConfig::g80(),
+        ],
+        ..PoolConfig::default()
+    })
+    .expect("hetero pool");
+    let out = hetero.reduce(&data, CombOp::Add).expect("hetero reduce");
+    assert_eq!(out.value, want, "heterogeneous pool must stay exact");
+    println!(
+        "hetero 2xC2075+1xG80: modeled {}  shards={}  busy per worker: {:?}",
+        fmt_time(out.modeled_wall_s),
+        out.shards,
+        out.per_worker_busy_s.iter().map(|s| fmt_time(*s)).collect::<Vec<_>>(),
+    );
+
+    // --- work stealing under an uneven plan (everything queued on
+    //     worker 0; the rest of the fleet steals from the back) ---
+    let skew_pool = DevicePool::new(PoolConfig::homogeneous(DeviceConfig::tesla_c2075(), 4))
+        .expect("skew pool");
+    let plan = ShardPlan::single_queue(data.len(), 16, 0);
+    let out = skew_pool.reduce_with_plan(&data, CombOp::Add, &plan).expect("skew reduce");
+    assert_eq!(out.value, want);
+    println!(
+        "uneven plan (16 chunks on one queue): steals={} of {} shards, modeled {}",
+        out.steals,
+        out.shards,
+        fmt_time(out.modeled_wall_s),
+    );
+    assert!(out.steals > 0, "uneven plan should trigger work stealing");
+}

@@ -16,12 +16,20 @@ pub struct Metrics {
     pub failed: u64,
     pub lat_full: Histogram,
     pub lat_batched: Histogram,
+    pub lat_sharded: Histogram,
     pub lat_host: Histogram,
     /// Rows executed vs rows carrying real requests (padding waste).
     pub rows_executed: u64,
     pub rows_useful: u64,
     pub batches: u64,
     pub elements_reduced: u64,
+    /// Requests served by the device pool, and the pool's lifetime
+    /// queue counters (snapshotted at shutdown from
+    /// [`crate::pool::DevicePool::counters`]).
+    pub sharded_requests: u64,
+    pub pool_tasks: u64,
+    pub pool_steals: u64,
+    pub pool_peak_depth: u64,
 }
 
 impl Default for Metrics {
@@ -32,11 +40,16 @@ impl Default for Metrics {
             failed: 0,
             lat_full: Histogram::new(),
             lat_batched: Histogram::new(),
+            lat_sharded: Histogram::new(),
             lat_host: Histogram::new(),
             rows_executed: 0,
             rows_useful: 0,
             batches: 0,
             elements_reduced: 0,
+            sharded_requests: 0,
+            pool_tasks: 0,
+            pool_steals: 0,
+            pool_peak_depth: 0,
         }
     }
 }
@@ -52,6 +65,10 @@ impl Metrics {
         match path {
             ExecPath::PjrtFull => self.lat_full.record(latency_s),
             ExecPath::PjrtBatched { .. } => self.lat_batched.record(latency_s),
+            ExecPath::Sharded { .. } => {
+                self.sharded_requests += 1;
+                self.lat_sharded.record(latency_s);
+            }
             ExecPath::Host => self.lat_host.record(latency_s),
         }
     }
@@ -60,6 +77,13 @@ impl Metrics {
         self.batches += 1;
         self.rows_executed += exec_rows as u64;
         self.rows_useful += useful as u64;
+    }
+
+    /// Snapshot the device pool's queue counters into the report.
+    pub fn record_pool(&mut self, tasks: u64, steals: u64, peak_depth: u64) {
+        self.pool_tasks = tasks;
+        self.pool_steals = steals;
+        self.pool_peak_depth = peak_depth;
     }
 
     pub fn throughput_rps(&self) -> f64 {
@@ -100,8 +124,15 @@ impl Metrics {
             self.avg_batch(),
             100.0 * self.batch_efficiency()
         ));
+        if self.sharded_requests > 0 || self.pool_tasks > 0 {
+            s.push_str(&format!(
+                "pool: sharded_requests={} tasks={} steals={} peak_depth={}\n",
+                self.sharded_requests, self.pool_tasks, self.pool_steals, self.pool_peak_depth
+            ));
+        }
         s.push_str(&format!("latency (pjrt full):    {}\n", self.lat_full.summary()));
         s.push_str(&format!("latency (pjrt batched): {}\n", self.lat_batched.summary()));
+        s.push_str(&format!("latency (sharded):      {}\n", self.lat_sharded.summary()));
         s.push_str(&format!("latency (host):         {}\n", self.lat_host.summary()));
         s
     }
@@ -116,13 +147,28 @@ mod tests {
         let mut m = Metrics::default();
         m.record(ExecPath::PjrtFull, 1e-3, true, 100);
         m.record(ExecPath::PjrtBatched { batch: 8 }, 2e-3, true, 100);
+        m.record(ExecPath::Sharded { devices: 4 }, 3e-3, true, 100);
         m.record(ExecPath::Host, 5e-4, false, 100);
-        assert_eq!(m.completed, 2);
+        assert_eq!(m.completed, 3);
         assert_eq!(m.failed, 1);
         assert_eq!(m.lat_full.count(), 1);
         assert_eq!(m.lat_batched.count(), 1);
+        assert_eq!(m.lat_sharded.count(), 1);
         assert_eq!(m.lat_host.count(), 1);
-        assert_eq!(m.elements_reduced, 300);
+        assert_eq!(m.sharded_requests, 1);
+        assert_eq!(m.elements_reduced, 400);
+    }
+
+    #[test]
+    fn pool_counters_snapshot_and_report() {
+        let mut m = Metrics::default();
+        m.record_pool(12, 3, 9);
+        assert_eq!(m.pool_tasks, 12);
+        assert_eq!(m.pool_steals, 3);
+        assert_eq!(m.pool_peak_depth, 9);
+        let r = m.report();
+        assert!(r.contains("steals=3"), "{r}");
+        assert!(r.contains("peak_depth=9"), "{r}");
     }
 
     #[test]

@@ -5,8 +5,11 @@
 //! artifact catalog ([`router`]), dynamically batched into `rows`
 //! artifacts ([`batcher`]) and executed on the single-threaded PJRT
 //! executor, with latency/throughput metrics ([`metrics`]). Requests
-//! with no matching artifact fall back to the host reduction library
-//! ([`crate::reduce`]) — the service is total over request shapes.
+//! with no matching artifact fall back to the multi-device execution
+//! pool ([`crate::pool`], `Route::Sharded`, for payloads past the
+//! pool cutoff when a fleet is attached) or to the host reduction
+//! library ([`crate::reduce`]) — the service is total over request
+//! shapes.
 
 pub mod backpressure;
 pub mod batcher;
@@ -16,5 +19,5 @@ pub mod router;
 pub mod service;
 
 pub use request::{ExecPath, Request, Response};
-pub use router::{Route, Router};
-pub use service::{Service, ServiceConfig};
+pub use router::{PoolRoute, Route, Router};
+pub use service::{PoolServeConfig, Service, ServiceConfig};

@@ -38,6 +38,9 @@ pub enum ExecPath {
     PjrtFull,
     /// Stacked into a `rows` artifact with `batch` rows.
     PjrtBatched { batch: usize },
+    /// Sharded across the `devices`-wide execution pool
+    /// ([`crate::pool::DevicePool`]).
+    Sharded { devices: usize },
     /// Host (threaded/sequential) fallback.
     Host,
 }

@@ -13,19 +13,38 @@ pub enum Route {
     Batched { sizes: Vec<usize> },
     /// Dedicated full artifact (exact n).
     Full { artifact: String },
+    /// Shard across the multi-device execution pool
+    /// ([`crate::pool::DevicePool`]).
+    Sharded { devices: usize },
     /// No artifact: host library execution.
     Host,
 }
 
-/// Stateless router over the catalog.
+/// Pool attachment: how many devices, and the minimum payload that
+/// amortizes the per-shard launch overhead (see
+/// [`crate::reduce::plan::Planner::pool_cutoff`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolRoute {
+    pub devices: usize,
+    pub cutoff: usize,
+}
+
+/// Stateless router over the catalog (and the optional device pool).
 #[derive(Debug, Clone)]
 pub struct Router {
     catalog: Catalog,
+    pool: Option<PoolRoute>,
 }
 
 impl Router {
     pub fn new(catalog: Catalog) -> Self {
-        Router { catalog }
+        Router { catalog, pool: None }
+    }
+
+    /// Router for a service with an attached device pool: shapes with
+    /// no artifact and at least `cutoff` elements route to the fleet.
+    pub fn with_pool(catalog: Catalog, pool: PoolRoute) -> Self {
+        Router { catalog, pool: Some(pool) }
     }
 
     pub fn catalog(&self) -> &Catalog {
@@ -33,6 +52,8 @@ impl Router {
     }
 
     /// Total function: every shape gets a route (Host at worst).
+    /// Compiled artifacts are preferred over the modeled fleet; the
+    /// fleet is preferred over the host library for large payloads.
     pub fn route(&self, key: ShapeKey) -> Route {
         let sizes = self.catalog.rows_batch_sizes(key.op, key.dtype, key.n);
         if !sizes.is_empty() {
@@ -40,6 +61,11 @@ impl Router {
         }
         if let Some(meta) = self.catalog.find_full(key.op, key.dtype, key.n) {
             return Route::Full { artifact: meta.name.clone() };
+        }
+        if let Some(p) = self.pool {
+            if p.devices > 0 && key.n >= p.cutoff {
+                return Route::Sharded { devices: p.devices };
+            }
         }
         Route::Host
     }
@@ -99,6 +125,29 @@ mod tests {
     fn host_fallback_is_total() {
         assert_eq!(router().route(key(Op::Sum, 999)), Route::Host);
         assert_eq!(router().route(key(Op::Prod, 1024)), Route::Host);
+    }
+
+    #[test]
+    fn sharded_route_above_pool_cutoff() {
+        let r = Router::with_pool(
+            router().catalog().clone(),
+            PoolRoute { devices: 4, cutoff: 1 << 20 },
+        );
+        // Large artifact-less shape: fleet.
+        assert_eq!(r.route(key(Op::Sum, 1 << 21)), Route::Sharded { devices: 4 });
+        // Below the cutoff: host, as before.
+        assert_eq!(r.route(key(Op::Sum, 999)), Route::Host);
+        // Artifacts still win over the pool.
+        assert_eq!(r.route(key(Op::Sum, 1024)), Route::Full { artifact: "full_a".into() });
+        assert_eq!(
+            r.route(key(Op::Sum, 512)),
+            Route::Batched { sizes: vec![4, 8] }
+        );
+    }
+
+    #[test]
+    fn no_pool_means_no_sharded_routes() {
+        assert_eq!(router().route(key(Op::Sum, 1 << 24)), Route::Host);
     }
 
     #[test]

@@ -11,6 +11,8 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context, Result};
 
+use crate::gpusim::DeviceConfig;
+use crate::pool::{DevicePool, PoolConfig};
 use crate::reduce::op::{Dtype, Element, Op};
 use crate::reduce::plan::Planner;
 use crate::runtime::literal::{HostScalar, HostVec};
@@ -22,7 +24,29 @@ use super::backpressure::Gate;
 use super::batcher::{Batcher, FlushedBatch};
 use super::metrics::Metrics;
 use super::request::{ExecPath, Request, Response};
-use super::router::{Route, Router};
+use super::router::{PoolRoute, Route, Router};
+
+/// Multi-device pool attachment for the serving path.
+#[derive(Debug, Clone)]
+pub struct PoolServeConfig {
+    /// Device preset names (heterogeneous allowed, e.g.
+    /// `["TeslaC2075", "TeslaC2075", "G80"]`).
+    pub devices: Vec<String>,
+    /// Minimum payload elements for `Route::Sharded`.
+    pub cutoff: usize,
+    /// Shard granularity per device (work-stealing slack).
+    pub tasks_per_device: usize,
+}
+
+impl Default for PoolServeConfig {
+    fn default() -> Self {
+        PoolServeConfig {
+            devices: vec!["TeslaC2075".into(); 4],
+            cutoff: 1 << 20,
+            tasks_per_device: 2,
+        }
+    }
+}
 
 /// Service configuration.
 #[derive(Debug, Clone)]
@@ -37,6 +61,10 @@ pub struct ServiceConfig {
     /// Pre-compile all batchable (rows) artifacts at startup so the
     /// first batches don't pay XLA compile time.
     pub warmup: bool,
+    /// Optional multi-device execution pool: artifact-less payloads of
+    /// at least `cutoff` elements route to the fleet instead of the
+    /// host library.
+    pub pool: Option<PoolServeConfig>,
 }
 
 impl Default for ServiceConfig {
@@ -47,6 +75,7 @@ impl Default for ServiceConfig {
             max_queue: 10_000,
             workers: 0,
             warmup: true,
+            pool: None,
         }
     }
 }
@@ -169,9 +198,27 @@ fn executor_loop(
             return metrics;
         }
     }
+    // Device pool: built before `ready` so a bad pool config fails
+    // startup loudly rather than failing requests later.
+    let pool = match &cfg.pool {
+        Some(pc) => match build_pool(pc) {
+            Ok(p) => Some(p),
+            Err(e) => {
+                let _ = ready.send(Err(format!("building device pool: {e:#}")));
+                return metrics;
+            }
+        },
+        None => None,
+    };
     let _ = ready.send(Ok(runtime.platform()));
     metrics.started = Instant::now(); // exclude load+warmup from throughput
-    let router = Router::new(runtime.catalog().clone());
+    let router = match (&pool, &cfg.pool) {
+        (Some(p), Some(pc)) => Router::with_pool(
+            runtime.catalog().clone(),
+            PoolRoute { devices: p.num_devices(), cutoff: pc.cutoff },
+        ),
+        _ => Router::new(runtime.catalog().clone()),
+    };
     let mut batcher = Batcher::new(cfg.batch_window);
     let planner = Planner {
         workers: if cfg.workers == 0 {
@@ -179,6 +226,8 @@ fn executor_loop(
         } else {
             cfg.workers
         },
+        pool_devices: pool.as_ref().map_or(0, |p| p.num_devices()),
+        pool_cutoff: cfg.pool.as_ref().map_or(1 << 21, |pc| pc.cutoff),
         ..Planner::default()
     };
 
@@ -186,6 +235,10 @@ fn executor_loop(
         match router.route(req.shape_key()) {
             Route::Batched { .. } => batcher.push(req),
             Route::Full { artifact } => exec_full(&runtime, &gate, &artifact, req, metrics),
+            Route::Sharded { .. } => match &pool {
+                Some(p) => exec_sharded(p, &gate, req, metrics),
+                None => exec_host(&planner, &gate, req, metrics),
+            },
             Route::Host => exec_host(&planner, &gate, req, metrics),
         }
     };
@@ -228,10 +281,33 @@ fn executor_loop(
     for req in batcher.drain_all() {
         match router.route(req.shape_key()) {
             Route::Full { artifact } => exec_full(&runtime, &gate, &artifact, req, &mut metrics),
+            Route::Sharded { .. } if pool.is_some() => {
+                exec_sharded(pool.as_ref().expect("checked"), &gate, req, &mut metrics)
+            }
             _ => exec_host(&planner, &gate, req, &mut metrics),
         }
     }
+    if let Some(p) = &pool {
+        let c = p.counters();
+        metrics.record_pool(c.tasks_executed, c.steals, c.peak_depth);
+    }
     metrics
+}
+
+/// Resolve preset names and spawn the fleet.
+fn build_pool(pc: &PoolServeConfig) -> Result<DevicePool> {
+    let mut devices = Vec::with_capacity(pc.devices.len());
+    for name in &pc.devices {
+        devices.push(
+            DeviceConfig::by_name(name)
+                .ok_or_else(|| anyhow!("unknown pool device {name:?} (see `parred info`)"))?,
+        );
+    }
+    DevicePool::new(PoolConfig {
+        devices,
+        tasks_per_device: pc.tasks_per_device.max(1),
+        ..PoolConfig::default()
+    })
 }
 
 fn respond(
@@ -265,6 +341,22 @@ fn exec_host(planner: &Planner, gate: &Gate, req: Request, metrics: &mut Metrics
         HostVec::I32(v) => HostScalar::I32(planner.run_i32(v, req.op)),
     };
     respond(gate, req, Ok(value), ExecPath::Host, metrics);
+}
+
+/// Shard a large artifact-less reduction across the device fleet.
+fn exec_sharded(pool: &DevicePool, gate: &Gate, req: Request, metrics: &mut Metrics) {
+    let devices = pool.num_devices();
+    let value = match &req.payload {
+        HostVec::F32(v) => pool.reduce_elems(v, req.op).map(|(x, _)| HostScalar::F32(x)),
+        HostVec::I32(v) => pool.reduce_elems(v, req.op).map(|(x, _)| HostScalar::I32(x)),
+    };
+    respond(
+        gate,
+        req,
+        value.map_err(|e| format!("{e:#}")),
+        ExecPath::Sharded { devices },
+        metrics,
+    );
 }
 
 fn identity_payload(op: Op, dtype: Dtype, n: usize) -> HostVec {

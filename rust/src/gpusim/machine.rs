@@ -152,6 +152,19 @@ impl DeviceConfig {
         self.max_warps_per_sm * self.warp_size
     }
 
+    /// Modeled end-to-end reduction throughput, GB/s — the shard
+    /// weight of the device pool ([`crate::pool`]): achievable DRAM
+    /// bandwidth scaled by persistent-launch occupancy (resident waves
+    /// over the occupancy ceiling). Low-occupancy devices run
+    /// latency-bound below their roofline, so they receive
+    /// proportionally smaller shards; any residual error is absorbed
+    /// by the pool's work stealing.
+    pub fn modeled_throughput_gbps(&self) -> f64 {
+        let occupancy = self.persistent_waves_per_sm.min(self.max_warps_per_sm) as f64
+            / self.max_warps_per_sm as f64;
+        self.bw_efficiency * self.mem_bandwidth_gbps * occupancy
+    }
+
     /// The paper's "GS": total work-items a persistent-threads launch
     /// keeps resident "without switching" (§2.3) — waves_per_sm warps
     /// on every SM, rounded down to whole blocks.
@@ -200,6 +213,25 @@ mod tests {
         let a = DeviceConfig::amd_gcn();
         // 6 waves x 64 lanes x 40 CUs = 15360 threads.
         assert_eq!(a.global_size(256), 15360);
+    }
+
+    #[test]
+    fn modeled_throughput_positive_and_occupancy_bounded() {
+        for c in DeviceConfig::presets() {
+            let t = c.modeled_throughput_gbps();
+            assert!(t > 0.0, "{}", c.name);
+            assert!(
+                t <= c.bw_efficiency * c.mem_bandwidth_gbps + 1e-9,
+                "{}: throughput above achievable roofline",
+                c.name
+            );
+        }
+        // Fermi's deep occupancy outweighs the G80's despite the
+        // latter's similar ALU count — the pool's shard weights order.
+        assert!(
+            DeviceConfig::tesla_c2075().modeled_throughput_gbps()
+                > DeviceConfig::g80().modeled_throughput_gbps()
+        );
     }
 
     #[test]

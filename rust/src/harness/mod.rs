@@ -6,6 +6,7 @@
 //! `parred tables` CLI subcommand.
 
 pub mod ablations;
+pub mod pool_scaling;
 pub mod report;
 pub mod table1;
 pub mod table2;

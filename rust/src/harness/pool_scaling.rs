@@ -1,0 +1,118 @@
+//! Device-count scaling of the multi-device execution pool: the
+//! paper's workload (`N_PAPER` elements, the F=8 kernel) sharded over
+//! fleets of 1/2/4/8 modeled Tesla C2075 devices, against the best
+//! single-device run in the same experiment.
+//!
+//! Consumed by `cargo bench --bench pool` and `parred tables --pool`.
+
+use anyhow::Result;
+
+use super::report::{ms, ratio, Table};
+use crate::gpusim::ir::CombOp;
+use crate::gpusim::{DeviceConfig, Gpu};
+use crate::kernels::drivers;
+use crate::pool::{DevicePool, PoolConfig};
+use crate::util::rng::Rng;
+
+/// One fleet size's measurement.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub devices: usize,
+    /// Modeled pool wall-clock (max over devices of busy time).
+    pub modeled_s: f64,
+    /// Speedup over the single-device run of the same experiment.
+    pub speedup: f64,
+    /// Work-steal events during this reduction.
+    pub steals: u64,
+    /// Shards executed.
+    pub shards: usize,
+}
+
+/// The sweep's fleet sizes.
+pub const FLEETS: [usize; 4] = [1, 2, 4, 8];
+
+/// Run the scaling sweep. The integer payload makes every row's value
+/// exactly comparable: each pool result is asserted bit-identical to
+/// the single-device result before timing is reported.
+pub fn run(n: usize, block: u32, seed: u64) -> Result<Vec<Row>> {
+    let mut rng = Rng::new(seed);
+    let data: Vec<f64> = (0..n).map(|_| rng.i32_in(-100, 100) as f64).collect();
+
+    // Single-device reference (same workload, same kernel, F=8).
+    let mut gpu = Gpu::new(DeviceConfig::tesla_c2075());
+    let single = drivers::jradi_reduce(&mut gpu, &data, CombOp::Add, 8, block)?;
+    let t1 = single.run.total_time_s();
+
+    let mut rows = Vec::with_capacity(FLEETS.len());
+    for &k in &FLEETS {
+        let pool = DevicePool::new(PoolConfig {
+            block,
+            ..PoolConfig::homogeneous(DeviceConfig::tesla_c2075(), k)
+        })?;
+        let out = pool.reduce(&data, CombOp::Add)?;
+        anyhow::ensure!(
+            out.value == single.value,
+            "{k}-device pool value {} != single-device {}",
+            out.value,
+            single.value
+        );
+        rows.push(Row {
+            devices: k,
+            modeled_s: out.modeled_wall_s,
+            speedup: t1 / out.modeled_wall_s,
+            steals: out.steals,
+            shards: out.shards,
+        });
+    }
+    Ok(rows)
+}
+
+/// The scaling table.
+pub fn table(n: usize, rows: &[Row]) -> Table {
+    let mut t = Table::new(
+        format!("Pool scaling — paper kernel (F=8) sharded over k x TeslaC2075, N={n}"),
+        &["Devices", "Modeled time (ms)", "Speedup vs 1 device", "Shards", "Steals"],
+    );
+    for r in rows {
+        t.row(vec![
+            r.devices.to_string(),
+            ms(r.modeled_s),
+            ratio(r.speedup),
+            r.shards.to_string(),
+            r.steals.to_string(),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scaling_holds_at_reduced_n() {
+        // Sub-paper scale keeps the suite fast; the full N_PAPER claim
+        // is asserted by rust/tests/integration_pool.rs and the bench.
+        let rows = run(1 << 20, 256, 42).unwrap();
+        assert_eq!(rows.len(), FLEETS.len());
+        let by_k = |k: usize| rows.iter().find(|r| r.devices == k).unwrap();
+        // 4 devices must beat the single-device time outright.
+        assert!(
+            by_k(4).modeled_s < by_k(1).modeled_s,
+            "4-device {} !< 1-device {}",
+            by_k(4).modeled_s,
+            by_k(1).modeled_s
+        );
+        // Larger fleets never slow the modeled wall-clock down much
+        // (launch overhead eventually flattens the curve).
+        assert!(by_k(8).modeled_s <= by_k(2).modeled_s * 1.10);
+    }
+
+    #[test]
+    fn renders() {
+        let rows = run(1 << 18, 256, 7).unwrap();
+        let md = table(1 << 18, &rows).markdown();
+        assert!(md.contains("Devices"), "{md}");
+        assert!(md.contains("Speedup"), "{md}");
+    }
+}

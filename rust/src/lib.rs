@@ -20,7 +20,11 @@
 //!   the nine device kernels (Harris K1–K7, Catanzaro two-stage, the
 //!   paper's approach) written in the simulator's kernel IR;
 //!   [`reduce`] is the host-side reduction library and CPU baselines;
-//!   [`harness`] regenerates every table and figure.
+//!   [`pool`] shards one reduction across a fleet of simulated
+//!   devices behind a work-stealing scheduler and combines partials
+//!   host-side (Kahan-compensated for float sums); [`harness`]
+//!   regenerates every table and figure plus the pool's device-count
+//!   scaling table.
 //!
 //! ## Quickstart
 //!
@@ -41,6 +45,7 @@ pub mod coordinator;
 pub mod gpusim;
 pub mod harness;
 pub mod kernels;
+pub mod pool;
 pub mod reduce;
 pub mod runtime;
 pub mod util;

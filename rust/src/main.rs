@@ -37,6 +37,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "kernel", "backend", "seed", "requests", "batch-window-us", "payload", "workers",
         "device-file",
         "artifacts", "fast", "help",
+        "pool", "pool-devices", "pool-cutoff",
     ];
     let args = Args::parse(argv, &allowed)?;
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
@@ -65,7 +66,12 @@ USAGE: parred <info|tables|sim|reduce|serve> [options]
       [--device-file my_gpu.json] [--n 5533214] [--f 8] [--block 256] [--op sum]
   reduce --n N [--op sum] [--dtype f32] [--backend host|pjrt] [--artifacts DIR]
   serve [--requests 200] [--batch-window-us 200] [--payload 65536]
-        [--artifacts DIR] end-to-end serving driver";
+        [--artifacts DIR] [--pool=1 --pool-devices 4 --pool-cutoff 1048576]
+        end-to-end serving driver (--pool shards large payloads
+        across a fleet of simulated TeslaC2075 devices)
+
+  tables --pool emits the device-count scaling table of the
+  multi-device execution pool (1/2/4/8 x TeslaC2075 at N).";
 
 fn info(args: &Args) -> Result<()> {
     println!("devices:");
@@ -99,7 +105,10 @@ fn tables(args: &Args) -> Result<()> {
     let out = args.get("out");
     let which_table = args.get("table");
     let which_figure = args.get("figure");
-    let run_all = which_table.is_none() && which_figure.is_none() && !args.flag("ablations");
+    let run_all = which_table.is_none()
+        && which_figure.is_none()
+        && !args.flag("ablations")
+        && !args.flag("pool");
 
     let mut emitted = Vec::new();
     if run_all || which_table == Some("1") {
@@ -121,6 +130,10 @@ fn tables(args: &Args) -> Result<()> {
     if run_all || which_table == Some("3") {
         let row = table3::run(n, block, 8, seed)?;
         emitted.push(("table3.csv", table3::table(&row)));
+    }
+    if run_all || args.flag("pool") {
+        let rows = parred::harness::pool_scaling::run(n, block, seed)?;
+        emitted.push(("pool_scaling.csv", parred::harness::pool_scaling::table(n, &rows)));
     }
     if run_all || args.flag("ablations") {
         emitted.push(("ablation_tree.csv", ablations::tree_style(n.min(1 << 21), block, seed)?));
@@ -248,14 +261,30 @@ fn reduce(args: &Args) -> Result<()> {
 }
 
 fn serve(args: &Args) -> Result<()> {
-    use parred::coordinator::service::{ServiceConfig, TraceConfig};
+    use parred::coordinator::service::{PoolServeConfig, ServiceConfig, TraceConfig};
     let dir = args.get_or("artifacts", "artifacts").to_string();
+    // `--pool` as a bare flag or with a truthy value enables the
+    // fleet; `--pool=0|false|no|off` keeps it disabled.
+    let pool_enabled = args.flag("pool")
+        || args
+            .get("pool")
+            .is_some_and(|v| !matches!(v, "0" | "false" | "no" | "off"));
+    let pool = if pool_enabled {
+        Some(PoolServeConfig {
+            devices: vec!["TeslaC2075".into(); args.get_usize("pool-devices", 4)?.max(1)],
+            cutoff: args.get_usize("pool-cutoff", 1 << 20)?,
+            tasks_per_device: 2,
+        })
+    } else {
+        None
+    };
     let cfg = ServiceConfig {
         artifacts_dir: dir,
         batch_window: std::time::Duration::from_micros(args.get_usize("batch-window-us", 200)? as u64),
         max_queue: 10_000,
         workers: args.get_usize("workers", 0)?,
         warmup: !args.flag("fast"),
+        pool,
     };
     let trace = TraceConfig {
         requests: args.get_usize("requests", 200)?,

@@ -1,0 +1,458 @@
+//! `pool` — the multi-device execution pool.
+//!
+//! The paper's persistent-threads kernel saturates *one* device; this
+//! subsystem scales past it by sharding a reduction across a fleet of
+//! simulated GPUs (heterogeneous [`DeviceConfig`]s allowed) and
+//! combining the per-device partials host-side:
+//!
+//! * [`ShardPlan`] ([`plan`]) splits the input proportional to each
+//!   device's modeled throughput (bandwidth × occupancy,
+//!   [`DeviceConfig::modeled_throughput_gbps`]);
+//! * [`DevicePool`] owns one worker thread per device, each driving
+//!   its own [`Gpu`] instance off a per-worker task queue with work
+//!   stealing when a queue runs dry ([`queue`], databend-pipeline
+//!   style) — host time to *simulate* a shard scales with shard size,
+//!   not modeled device speed, so imbalance shows up as real idle
+//!   time and stealing absorbs it;
+//! * every shard runs the paper's kernel
+//!   ([`crate::kernels::drivers::jradi_reduce`], unroll `F`,
+//!   algebraic masking, persistent launch), and partials are combined
+//!   with a host reduce tree — Neumaier/Kahan-compensated for float
+//!   sums ([`crate::reduce::kahan::sum_neumaier_f64`]), since the
+//!   shard split reorders the combine (paper fn. 4);
+//! * modeled wall-clock is the max over workers of their modeled busy
+//!   time: devices run concurrently in the modeled machine even
+//!   though the host simulates them on a thread pool.
+//!
+//! The serving path reaches this through `Route::Sharded`
+//! ([`crate::coordinator::router`]) and `Strategy::Pool`
+//! ([`crate::reduce::plan::Planner`]); pool depth / steal counters
+//! surface in [`crate::coordinator::metrics`]. The device-count
+//! scaling table lives in [`crate::harness::pool_scaling`].
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::gpusim::ir::CombOp;
+use crate::gpusim::{DeviceConfig, Gpu};
+use crate::kernels::drivers;
+use crate::reduce::kahan;
+use crate::reduce::op::{Element, Op};
+
+pub mod plan;
+pub mod queue;
+
+pub use plan::{Shard, ShardPlan};
+pub use queue::StealQueues;
+
+/// Pool construction parameters.
+#[derive(Debug, Clone)]
+pub struct PoolConfig {
+    /// The fleet; heterogeneous mixes are allowed (e.g. 2 × C2075 +
+    /// 1 × G80).
+    pub devices: Vec<DeviceConfig>,
+    /// Per-shard launch block size (clamped per device to its
+    /// `max_block_threads`; must be a power of two).
+    pub block: u32,
+    /// Unroll factor `F` of the paper's kernel.
+    pub unroll: u32,
+    /// Chunks each device's allocation is cut into — more chunks mean
+    /// finer-grained stealing at the cost of extra launch overhead.
+    pub tasks_per_device: usize,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        PoolConfig {
+            devices: vec![DeviceConfig::tesla_c2075(); 4],
+            block: 256,
+            unroll: 8,
+            tasks_per_device: 2,
+        }
+    }
+}
+
+impl PoolConfig {
+    /// `count` identical devices.
+    pub fn homogeneous(device: DeviceConfig, count: usize) -> PoolConfig {
+        PoolConfig { devices: vec![device; count], ..PoolConfig::default() }
+    }
+}
+
+/// A shard execution request, routed through the steal queues.
+struct Task {
+    id: usize,
+    data: Arc<Vec<f64>>,
+    shard: Shard,
+    op: CombOp,
+    reply: mpsc::Sender<TaskResult>,
+}
+
+/// What a worker reports back per shard.
+struct TaskResult {
+    id: usize,
+    worker: usize,
+    stolen: bool,
+    /// `(partial value, modeled device seconds)` or an error.
+    outcome: std::result::Result<(f64, f64), String>,
+}
+
+/// Result of one pooled reduction.
+#[derive(Debug, Clone)]
+pub struct PoolOutcome {
+    /// The combined value (exact for integer-valued data; compensated
+    /// for float sums).
+    pub value: f64,
+    /// Shards executed.
+    pub shards: usize,
+    /// Shards that ran on a different worker than planned.
+    pub steals: u64,
+    /// Modeled wall-clock: max over devices of modeled busy seconds.
+    pub modeled_wall_s: f64,
+    /// Modeled busy seconds per worker (by device index).
+    pub per_worker_busy_s: Vec<f64>,
+}
+
+/// Lifetime counters of a pool (surfaced via coordinator metrics).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolCounters {
+    pub tasks_executed: u64,
+    pub steals: u64,
+    pub peak_depth: u64,
+}
+
+/// A fleet of simulated GPUs behind work-stealing worker threads.
+pub struct DevicePool {
+    cfg: PoolConfig,
+    queues: Arc<StealQueues<Task>>,
+    workers_dead: Arc<AtomicBool>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl DevicePool {
+    /// Validate the config and spawn one worker thread per device.
+    pub fn new(cfg: PoolConfig) -> Result<DevicePool> {
+        if cfg.devices.is_empty() {
+            bail!("device pool needs at least one device");
+        }
+        if !cfg.block.is_power_of_two() || cfg.block < 2 {
+            bail!("pool block must be a power of two >= 2, got {}", cfg.block);
+        }
+        if cfg.unroll == 0 || cfg.unroll > 64 {
+            bail!("pool unroll factor must be in 1..=64, got {}", cfg.unroll);
+        }
+        for d in &cfg.devices {
+            d.validate()?;
+        }
+        let queues: Arc<StealQueues<Task>> = StealQueues::new(cfg.devices.len());
+        let workers_dead = Arc::new(AtomicBool::new(false));
+        let mut handles = Vec::with_capacity(cfg.devices.len());
+        for (i, dev) in cfg.devices.iter().enumerate() {
+            let queues = queues.clone();
+            let dead = workers_dead.clone();
+            let dev = dev.clone();
+            let block = cfg.block.min(dev.max_block_threads);
+            let unroll = cfg.unroll;
+            let handle = std::thread::Builder::new()
+                .name(format!("parred-pool-{i}-{}", dev.name))
+                .spawn(move || {
+                    // Drop guard: the flag flips even if the worker
+                    // unwinds, so a stuck `reduce` reports accurately.
+                    struct DeadFlag(Arc<AtomicBool>);
+                    impl Drop for DeadFlag {
+                        fn drop(&mut self) {
+                            self.0.store(true, Ordering::Relaxed);
+                        }
+                    }
+                    let _guard = DeadFlag(dead);
+                    worker_loop(i, dev, block, unroll, queues);
+                })
+                .with_context(|| format!("spawning pool worker {i}"))?;
+            handles.push(handle);
+        }
+        Ok(DevicePool { cfg, queues, workers_dead, handles })
+    }
+
+    pub fn num_devices(&self) -> usize {
+        self.cfg.devices.len()
+    }
+
+    pub fn devices(&self) -> &[DeviceConfig] {
+        &self.cfg.devices
+    }
+
+    /// Lifetime queue counters (tasks executed, steals, peak depth).
+    pub fn counters(&self) -> PoolCounters {
+        PoolCounters {
+            tasks_executed: self.queues.executed(),
+            steals: self.queues.steals(),
+            peak_depth: self.queues.peak_depth(),
+        }
+    }
+
+    /// The throughput-proportional plan for `n` elements.
+    pub fn plan(&self, n: usize) -> ShardPlan {
+        ShardPlan::proportional(&self.cfg.devices, n, self.cfg.tasks_per_device)
+    }
+
+    /// Reduce `data` across the fleet with the proportional plan.
+    pub fn reduce(&self, data: &[f64], op: CombOp) -> Result<PoolOutcome> {
+        let plan = self.plan(data.len());
+        self.reduce_shared(Arc::new(data.to_vec()), op, &plan)
+    }
+
+    /// Reduce under an explicit shard plan (tests and the steal demo
+    /// use [`ShardPlan::single_queue`] here).
+    pub fn reduce_with_plan(&self, data: &[f64], op: CombOp, plan: &ShardPlan) -> Result<PoolOutcome> {
+        self.reduce_shared(Arc::new(data.to_vec()), op, plan)
+    }
+
+    /// Shared-ownership entry point (no payload copy): workers slice
+    /// the `Arc`'d buffer directly, so the plan must tile `[0, len)`
+    /// contiguously with non-empty shards — validated here because
+    /// arbitrary plans can arrive from callers.
+    pub fn reduce_shared(
+        &self,
+        payload: Arc<Vec<f64>>,
+        op: CombOp,
+        plan: &ShardPlan,
+    ) -> Result<PoolOutcome> {
+        let n = payload.len();
+        let mut cursor = 0usize;
+        for s in &plan.shards {
+            if s.start != cursor || s.end <= s.start || s.end > n {
+                bail!(
+                    "shard plan must tile [0, {n}) contiguously with non-empty shards; \
+                     found {s:?} at offset {cursor}"
+                );
+            }
+            cursor = s.end;
+        }
+        if cursor != n {
+            bail!("shard plan covers {cursor} of {n} elements");
+        }
+        let workers = self.num_devices();
+        if n == 0 {
+            return Ok(PoolOutcome {
+                value: op.identity(),
+                shards: 0,
+                steals: 0,
+                modeled_wall_s: 0.0,
+                per_worker_busy_s: vec![0.0; workers],
+            });
+        }
+
+        let (tx, rx) = mpsc::channel::<TaskResult>();
+        self.queues.push_all(plan.shards.iter().enumerate().map(|(id, &shard)| {
+            let task =
+                Task { id, data: payload.clone(), shard, op, reply: tx.clone() };
+            (shard.device, task)
+        }));
+        drop(tx);
+
+        let mut partials = vec![op.identity(); plan.shards.len()];
+        let mut busy = vec![0.0f64; workers];
+        let mut steals = 0u64;
+        for _ in 0..plan.shards.len() {
+            let r = rx.recv_timeout(Duration::from_secs(300)).map_err(|_| {
+                anyhow!(
+                    "device pool did not respond (workers dead: {})",
+                    self.workers_dead.load(Ordering::Relaxed)
+                )
+            })?;
+            match r.outcome {
+                Ok((value, modeled_s)) => {
+                    partials[r.id] = value;
+                    busy[r.worker] += modeled_s;
+                    steals += r.stolen as u64;
+                }
+                Err(e) => bail!("shard {} failed on worker {}: {e}", r.id, r.worker),
+            }
+        }
+
+        Ok(PoolOutcome {
+            value: combine(op, &partials),
+            shards: plan.shards.len(),
+            steals,
+            modeled_wall_s: busy.iter().cloned().fold(0.0, f64::max),
+            per_worker_busy_s: busy,
+        })
+    }
+
+    /// Typed entry point for the serving path: embeds the payload into
+    /// the simulator's f64 domain (lossless for f32/i32), reduces, and
+    /// maps the value back. The embedded vector is handed to the pool
+    /// by ownership — no second copy on the request path.
+    pub fn reduce_elems<T: Element>(&self, data: &[T], op: Op) -> Result<(T, PoolOutcome)> {
+        let embedded: Vec<f64> = data.iter().map(|&x| x.to_f64()).collect();
+        let plan = self.plan(embedded.len());
+        let out = self.reduce_shared(Arc::new(embedded), CombOp::from(op), &plan)?;
+        Ok((T::from_f64(out.value), out))
+    }
+}
+
+impl Drop for DevicePool {
+    fn drop(&mut self) {
+        self.queues.shutdown();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Combine shard partials host-side, in shard order (deterministic
+/// regardless of which worker executed what).
+fn combine(op: CombOp, partials: &[f64]) -> f64 {
+    match op {
+        CombOp::Add => kahan::sum_neumaier_f64(partials),
+        _ => partials.iter().fold(op.identity(), |a, &b| op.apply(a, b)),
+    }
+}
+
+/// Worker main: owns this device's `Gpu`, drains its queue (stealing
+/// when dry), runs the paper's kernel per shard, reports partials.
+fn worker_loop(me: usize, dev: DeviceConfig, block: u32, unroll: u32, queues: Arc<StealQueues<Task>>) {
+    let mut gpu = Gpu::new(dev);
+    while let Some((task, stolen)) = queues.pop(me) {
+        let slice = &task.data[task.shard.start..task.shard.end];
+        let outcome = drivers::jradi_reduce(&mut gpu, slice, task.op, unroll, block)
+            .map(|o| (o.value, o.run.total_time_s()))
+            .map_err(|e| format!("{e:#}"));
+        let _ = task.reply.send(TaskResult { id: task.id, worker: me, stolen, outcome });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::reduce::scalar;
+    use crate::util::rng::Rng;
+
+    fn ints(n: usize, seed: u64) -> Vec<i32> {
+        Rng::new(seed).i32_vec(n, -500, 500)
+    }
+
+    #[test]
+    fn matches_scalar_for_all_ops_heterogeneous() {
+        let pool = DevicePool::new(PoolConfig {
+            devices: vec![
+                DeviceConfig::tesla_c2075(),
+                DeviceConfig::g80(),
+                DeviceConfig::amd_gcn(),
+            ],
+            ..PoolConfig::default()
+        })
+        .unwrap();
+        let data = ints(100_003, 7);
+        for op in [Op::Sum, Op::Min, Op::Max] {
+            let (got, out) = pool.reduce_elems(&data, op).unwrap();
+            assert_eq!(got, scalar::reduce(&data, op), "{op}");
+            assert!(out.modeled_wall_s > 0.0);
+            assert!(out.shards >= 3, "{op}: {} shards", out.shards);
+        }
+    }
+
+    #[test]
+    fn empty_input_yields_identity() {
+        let pool = DevicePool::new(PoolConfig::homogeneous(DeviceConfig::tesla_c2075(), 2))
+            .unwrap();
+        let (got, out) = pool.reduce_elems::<i32>(&[], Op::Min).unwrap();
+        assert_eq!(got, i32::MAX);
+        assert_eq!(out.shards, 0);
+        let (gotf, _) = pool.reduce_elems::<f32>(&[], Op::Sum).unwrap();
+        assert_eq!(gotf, 0.0);
+    }
+
+    #[test]
+    fn n_smaller_than_fleet() {
+        let pool = DevicePool::new(PoolConfig::homogeneous(DeviceConfig::tesla_c2075(), 4))
+            .unwrap();
+        for n in [1usize, 2, 3] {
+            let data = ints(n, n as u64);
+            let (got, out) = pool.reduce_elems(&data, Op::Sum).unwrap();
+            assert_eq!(got, scalar::reduce(&data, Op::Sum), "n={n}");
+            assert!(out.shards <= n);
+        }
+    }
+
+    #[test]
+    fn uneven_plan_triggers_steals() {
+        let pool = DevicePool::new(PoolConfig::homogeneous(DeviceConfig::tesla_c2075(), 4))
+            .unwrap();
+        let data: Vec<f64> = ints(200_000, 11).iter().map(|&x| x as f64).collect();
+        // All 16 chunks queued on device 0: the other three workers
+        // must steal to participate.
+        let plan = ShardPlan::single_queue(data.len(), 16, 0);
+        let out = pool.reduce_with_plan(&data, CombOp::Add, &plan).unwrap();
+        let want: f64 = data.iter().sum();
+        assert_eq!(out.value, want);
+        assert!(out.steals > 0, "expected steals under a single-queue plan");
+        assert!(pool.counters().steals >= out.steals);
+        assert!(pool.counters().peak_depth >= 16);
+    }
+
+    #[test]
+    fn float_sum_is_compensated_and_close() {
+        let pool = DevicePool::new(PoolConfig::default()).unwrap();
+        let data = Rng::new(3).f32_vec(300_000, -1.0, 1.0);
+        let (got, _) = pool.reduce_elems(&data, Op::Sum).unwrap();
+        let want = kahan::sum_f64(&data);
+        let rel = (got as f64 - want).abs() / want.abs().max(1.0);
+        assert!(rel < 1e-5, "pool {got} vs kahan {want} (rel {rel:.2e})");
+    }
+
+    #[test]
+    fn pool_faster_than_single_device_modeled() {
+        let n = 1 << 21;
+        let data: Vec<f64> = ints(n, 5).iter().map(|&x| x as f64).collect();
+        let cfg = PoolConfig::homogeneous(DeviceConfig::tesla_c2075(), 4);
+        let (block, unroll) = (cfg.block, cfg.unroll);
+        let pool = DevicePool::new(cfg).unwrap();
+        let out = pool.reduce(&data, CombOp::Add).unwrap();
+
+        let mut gpu = Gpu::new(DeviceConfig::tesla_c2075());
+        let single = drivers::jradi_reduce(&mut gpu, &data, CombOp::Add, unroll, block).unwrap();
+        assert_eq!(out.value, single.value);
+        assert!(
+            out.modeled_wall_s < single.run.total_time_s(),
+            "pool {} s !< single {} s",
+            out.modeled_wall_s,
+            single.run.total_time_s()
+        );
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        assert!(DevicePool::new(PoolConfig { devices: vec![], ..PoolConfig::default() }).is_err());
+        assert!(DevicePool::new(PoolConfig { block: 100, ..PoolConfig::default() }).is_err());
+        assert!(DevicePool::new(PoolConfig { unroll: 0, ..PoolConfig::default() }).is_err());
+    }
+
+    #[test]
+    fn plan_mismatch_rejected() {
+        let pool = DevicePool::new(PoolConfig::homogeneous(DeviceConfig::tesla_c2075(), 2))
+            .unwrap();
+        let plan = ShardPlan::single_queue(10, 2, 0);
+        assert!(pool.reduce_with_plan(&[1.0; 12], CombOp::Add, &plan).is_err());
+
+        // Plans with gaps, overlaps, empty shards or out-of-range ends
+        // are rejected before any task is queued (workers slice the
+        // payload directly — a bad range must not reach them).
+        let shard = |start, end| Shard { device: 0, start, end };
+        for bad in [
+            ShardPlan { shards: vec![shard(0, 5), shard(20, 25), shard(5, 10)] }, // gap
+            ShardPlan { shards: vec![shard(0, 6), shard(4, 10)] },                // overlap
+            ShardPlan { shards: vec![shard(0, 10), shard(10, 10)] },              // empty
+            ShardPlan { shards: vec![shard(0, 11)] },                             // past end
+        ] {
+            assert!(
+                pool.reduce_with_plan(&[1.0; 10], CombOp::Add, &bad).is_err(),
+                "{bad:?} must be rejected"
+            );
+        }
+    }
+}

@@ -1,0 +1,194 @@
+//! Shard planning: split one reduction across the fleet proportional
+//! to each device's modeled throughput (bandwidth × occupancy, see
+//! [`DeviceConfig::modeled_throughput_gbps`]), following the
+//! scheduling/tiling view of reductions on realistic machines
+//! (Prajapati 2016, PAPERS.md).
+//!
+//! A plan assigns contiguous input ranges to *initial* device queues;
+//! the work-stealing pool may execute a shard elsewhere. Results are
+//! combined in shard order, so the reduced value is independent of
+//! which worker ran what.
+
+use crate::gpusim::DeviceConfig;
+
+/// One contiguous input range, initially queued on `device`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Shard {
+    pub device: usize,
+    pub start: usize,
+    pub end: usize,
+}
+
+impl Shard {
+    pub fn len(&self) -> usize {
+        self.end - self.start
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.start == self.end
+    }
+}
+
+/// A full split of `[0, n)` into device shards.
+#[derive(Debug, Clone)]
+pub struct ShardPlan {
+    pub shards: Vec<Shard>,
+}
+
+impl ShardPlan {
+    /// Split `n` elements proportional to the devices' modeled
+    /// throughput, then cut each device's allocation into up to
+    /// `tasks_per_device` chunks so a fast-finishing worker has
+    /// something to steal. Devices whose share rounds to zero get no
+    /// shard (covers `n` smaller than the device count); empty shards
+    /// are never emitted.
+    pub fn proportional(devices: &[DeviceConfig], n: usize, tasks_per_device: usize) -> ShardPlan {
+        assert!(!devices.is_empty(), "shard plan needs at least one device");
+        let tasks_per_device = tasks_per_device.max(1);
+        let weights: Vec<f64> = devices.iter().map(|d| d.modeled_throughput_gbps()).collect();
+        let total_w: f64 = weights.iter().sum();
+
+        // Largest-remainder apportionment of n over the weights.
+        let ideal: Vec<f64> = weights.iter().map(|w| n as f64 * w / total_w).collect();
+        let mut alloc: Vec<usize> = ideal.iter().map(|x| x.floor() as usize).collect();
+        let assigned: usize = alloc.iter().sum();
+        let mut order: Vec<usize> = (0..devices.len()).collect();
+        order.sort_by(|&a, &b| {
+            (ideal[b] - ideal[b].floor())
+                .total_cmp(&(ideal[a] - ideal[a].floor()))
+                .then(a.cmp(&b))
+        });
+        for &d in order.iter().cycle().take(n.saturating_sub(assigned)) {
+            alloc[d] += 1;
+        }
+
+        let mut shards = Vec::new();
+        let mut start = 0usize;
+        for (device, &a) in alloc.iter().enumerate() {
+            if a == 0 {
+                continue;
+            }
+            let chunk = a.div_ceil(tasks_per_device);
+            let mut off = 0usize;
+            while off < a {
+                let len = chunk.min(a - off);
+                shards.push(Shard { device, start: start + off, end: start + off + len });
+                off += len;
+            }
+            start += a;
+        }
+        debug_assert_eq!(start, n, "plan must cover the input exactly");
+        ShardPlan { shards }
+    }
+
+    /// Deliberately uneven placement: `chunks` equal-ish shards, all
+    /// queued on one device. Exercises (and demonstrates) work
+    /// stealing — the other workers drain this queue from the back.
+    pub fn single_queue(n: usize, chunks: usize, device: usize) -> ShardPlan {
+        let chunks = chunks.max(1);
+        let chunk = n.div_ceil(chunks).max(1);
+        let mut shards = Vec::new();
+        let mut start = 0usize;
+        while start < n {
+            let end = (start + chunk).min(n);
+            shards.push(Shard { device, start, end });
+            start = end;
+        }
+        ShardPlan { shards }
+    }
+
+    /// Total elements covered.
+    pub fn total(&self) -> usize {
+        self.shards.iter().map(|s| s.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fleet() -> Vec<DeviceConfig> {
+        vec![
+            DeviceConfig::tesla_c2075(),
+            DeviceConfig::tesla_c2075(),
+            DeviceConfig::g80(),
+        ]
+    }
+
+    fn covers_exactly(plan: &ShardPlan, n: usize) {
+        let mut cursor = 0usize;
+        for s in &plan.shards {
+            assert_eq!(s.start, cursor, "shards must tile contiguously");
+            assert!(s.len() >= 1, "no empty shards");
+            cursor = s.end;
+        }
+        assert_eq!(cursor, n);
+    }
+
+    #[test]
+    fn proportional_covers_and_weights() {
+        let devs = fleet();
+        let n = 1_000_000;
+        let plan = ShardPlan::proportional(&devs, n, 1);
+        covers_exactly(&plan, n);
+        assert_eq!(plan.shards.len(), 3);
+        // Each C2075 models higher throughput than the G80, so its
+        // shard is strictly larger.
+        let by_dev: Vec<usize> = (0..3)
+            .map(|d| plan.shards.iter().filter(|s| s.device == d).map(Shard::len).sum())
+            .collect();
+        assert!(by_dev[0] > by_dev[2], "{by_dev:?}");
+        assert!(by_dev[1] > by_dev[2], "{by_dev:?}");
+    }
+
+    #[test]
+    fn chunking_splits_each_device_allocation() {
+        let devs = fleet();
+        let plan = ShardPlan::proportional(&devs, 999_983, 4);
+        covers_exactly(&plan, 999_983);
+        for d in 0..3 {
+            let chunks = plan.shards.iter().filter(|s| s.device == d).count();
+            assert!((1..=4).contains(&chunks), "device {d}: {chunks} chunks");
+        }
+    }
+
+    #[test]
+    fn n_smaller_than_device_count() {
+        let devs = fleet();
+        for n in [0usize, 1, 2] {
+            let plan = ShardPlan::proportional(&devs, n, 2);
+            covers_exactly(&plan, n);
+            assert!(plan.shards.len() <= n.max(1));
+        }
+        assert!(ShardPlan::proportional(&fleet(), 0, 2).shards.is_empty());
+    }
+
+    #[test]
+    fn tiny_and_boundary_sizes_are_exact() {
+        let devs = fleet();
+        for n in [1usize, 2, 3, 7, 255, 256, 257, 65_537] {
+            for tasks in [1usize, 2, 3] {
+                let plan = ShardPlan::proportional(&devs, n, tasks);
+                covers_exactly(&plan, n);
+            }
+        }
+    }
+
+    #[test]
+    fn single_queue_is_uneven_by_construction() {
+        let plan = ShardPlan::single_queue(1000, 8, 0);
+        covers_exactly(&plan, 1000);
+        assert_eq!(plan.shards.len(), 8);
+        assert!(plan.shards.iter().all(|s| s.device == 0));
+    }
+
+    #[test]
+    fn homogeneous_fleet_splits_evenly() {
+        let devs = vec![DeviceConfig::tesla_c2075(); 4];
+        let plan = ShardPlan::proportional(&devs, 4096, 1);
+        covers_exactly(&plan, 4096);
+        for s in &plan.shards {
+            assert_eq!(s.len(), 1024);
+        }
+    }
+}

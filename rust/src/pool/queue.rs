@@ -1,0 +1,197 @@
+//! Per-worker task queues with work stealing (databend-pipeline
+//! style): every worker owns a deque it pops from the front; a worker
+//! whose queue runs dry steals from the *back* of the deepest other
+//! queue, so contiguous shard ranges tend to stay with their planned
+//! device and only the tail of an imbalance migrates.
+//!
+//! All deques sit behind one mutex + condvar. Pool tasks are
+//! coarse-grained (each simulates a multi-launch device reduction, ms
+//! of host work), so queue contention is nil and the single lock keeps
+//! the blocking/steal/shutdown protocol obviously deadlock-free.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// The shared queue set of a device pool.
+#[derive(Debug)]
+pub struct StealQueues<T> {
+    inner: Mutex<Vec<VecDeque<T>>>,
+    available: Condvar,
+    shutdown: AtomicBool,
+    steals: AtomicU64,
+    executed: AtomicU64,
+    peak_depth: AtomicU64,
+}
+
+impl<T> StealQueues<T> {
+    /// One deque per worker.
+    pub fn new(workers: usize) -> Arc<StealQueues<T>> {
+        assert!(workers >= 1, "need at least one worker queue");
+        Arc::new(StealQueues {
+            inner: Mutex::new((0..workers).map(|_| VecDeque::new()).collect()),
+            available: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            steals: AtomicU64::new(0),
+            executed: AtomicU64::new(0),
+            peak_depth: AtomicU64::new(0),
+        })
+    }
+
+    pub fn workers(&self) -> usize {
+        self.inner.lock().expect("pool queues poisoned").len()
+    }
+
+    /// Enqueue one item on `worker`'s queue (clamped to range).
+    pub fn push(&self, worker: usize, item: T) {
+        {
+            let mut qs = self.inner.lock().expect("pool queues poisoned");
+            let w = worker.min(qs.len() - 1);
+            qs[w].push_back(item);
+            let depth: usize = qs.iter().map(|q| q.len()).sum();
+            self.peak_depth.fetch_max(depth as u64, Ordering::Relaxed);
+        }
+        self.available.notify_one();
+    }
+
+    /// Enqueue a batch under one lock acquisition, then wake everyone
+    /// (shard submission: every worker should start pulling).
+    pub fn push_all(&self, items: impl IntoIterator<Item = (usize, T)>) {
+        {
+            let mut qs = self.inner.lock().expect("pool queues poisoned");
+            let workers = qs.len();
+            for (worker, item) in items {
+                qs[worker.min(workers - 1)].push_back(item);
+            }
+            let depth: usize = qs.iter().map(|q| q.len()).sum();
+            self.peak_depth.fetch_max(depth as u64, Ordering::Relaxed);
+        }
+        self.available.notify_all();
+    }
+
+    /// Dequeue for `worker`: own queue first, then steal from the
+    /// deepest non-empty other queue. Blocks while everything is empty;
+    /// returns `None` only after [`shutdown`](Self::shutdown) with all
+    /// queues drained. The flag reports whether the item was stolen.
+    pub fn pop(&self, worker: usize) -> Option<(T, bool)> {
+        let mut qs = self.inner.lock().expect("pool queues poisoned");
+        loop {
+            if let Some(item) = qs[worker].pop_front() {
+                self.executed.fetch_add(1, Ordering::Relaxed);
+                return Some((item, false));
+            }
+            let victim = (0..qs.len())
+                .filter(|&i| i != worker)
+                .max_by_key(|&i| qs[i].len())
+                .filter(|&i| !qs[i].is_empty());
+            if let Some(v) = victim {
+                let item = qs[v].pop_back().expect("victim checked non-empty");
+                self.steals.fetch_add(1, Ordering::Relaxed);
+                self.executed.fetch_add(1, Ordering::Relaxed);
+                return Some((item, true));
+            }
+            if self.shutdown.load(Ordering::Relaxed) {
+                return None;
+            }
+            qs = self.available.wait(qs).expect("pool queues poisoned");
+        }
+    }
+
+    /// Ask workers to exit once their queues drain.
+    pub fn shutdown(&self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        self.available.notify_all();
+    }
+
+    /// Lifetime count of cross-queue steals.
+    pub fn steals(&self) -> u64 {
+        self.steals.load(Ordering::Relaxed)
+    }
+
+    /// Lifetime count of dequeued (executed) tasks.
+    pub fn executed(&self) -> u64 {
+        self.executed.load(Ordering::Relaxed)
+    }
+
+    /// High-water mark of total queued tasks.
+    pub fn peak_depth(&self) -> u64 {
+        self.peak_depth.load(Ordering::Relaxed)
+    }
+
+    /// Currently queued tasks across all workers.
+    pub fn depth(&self) -> usize {
+        self.inner.lock().expect("pool queues poisoned").iter().map(|q| q.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_on_own_queue() {
+        let q = StealQueues::new(2);
+        q.push(0, 1);
+        q.push(0, 2);
+        assert_eq!(q.pop(0), Some((1, false)));
+        assert_eq!(q.pop(0), Some((2, false)));
+        assert_eq!(q.executed(), 2);
+        assert_eq!(q.steals(), 0);
+    }
+
+    #[test]
+    fn dry_worker_steals_from_the_back() {
+        let q = StealQueues::new(3);
+        q.push_all([(0, 10), (0, 11), (0, 12)]);
+        // Worker 2's queue is empty: it steals the *back* of queue 0.
+        assert_eq!(q.pop(2), Some((12, true)));
+        assert_eq!(q.steals(), 1);
+        // Worker 0 still sees its front in order.
+        assert_eq!(q.pop(0), Some((10, false)));
+        assert_eq!(q.depth(), 1);
+    }
+
+    #[test]
+    fn steal_prefers_deepest_victim() {
+        let q = StealQueues::new(3);
+        q.push_all([(0, 1), (1, 2), (1, 3), (1, 4)]);
+        assert_eq!(q.pop(2), Some((4, true)), "deepest queue is 1");
+    }
+
+    #[test]
+    fn shutdown_drains_then_returns_none() {
+        let q = StealQueues::new(1);
+        q.push(0, 7);
+        q.shutdown();
+        assert_eq!(q.pop(0), Some((7, false)), "queued work survives shutdown");
+        assert_eq!(q.pop(0), None);
+    }
+
+    #[test]
+    fn peak_depth_tracks_high_water() {
+        let q = StealQueues::new(2);
+        q.push_all((0..5).map(|i| (i % 2, i)));
+        assert_eq!(q.peak_depth(), 5);
+        let _ = q.pop(0);
+        let _ = q.pop(1);
+        assert_eq!(q.peak_depth(), 5, "peak is a high-water mark");
+        assert_eq!(q.depth(), 3);
+    }
+
+    #[test]
+    fn out_of_range_worker_index_clamps() {
+        let q = StealQueues::new(2);
+        q.push(99, 42);
+        assert_eq!(q.pop(1), Some((42, false)));
+    }
+
+    #[test]
+    fn blocking_pop_wakes_on_push() {
+        let q: Arc<StealQueues<i32>> = StealQueues::new(2);
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.pop(1));
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.push(1, 5);
+        assert_eq!(h.join().unwrap(), Some((5, false)));
+    }
+}

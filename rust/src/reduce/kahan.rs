@@ -46,6 +46,25 @@ pub fn sum_neumaier_f32(data: &[f32]) -> f32 {
     s + c
 }
 
+/// Neumaier-compensated sum of f64 terms — the host-side combine of
+/// the device pool's per-shard partials ([`crate::pool`]): the shard
+/// split changes the combine order, and fn. 4 of the paper prescribes
+/// compensated summation exactly when parallelism reorders float adds.
+pub fn sum_neumaier_f64(data: &[f64]) -> f64 {
+    let mut s = 0.0f64;
+    let mut c = 0.0f64;
+    for &v in data {
+        let t = s + v;
+        if s.abs() >= v.abs() {
+            c += (s - t) + v;
+        } else {
+            c += (v - t) + s;
+        }
+        s = t;
+    }
+    s + c
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -77,5 +96,17 @@ mod tests {
         assert_eq!(sum_f32(&[]), 0.0);
         assert_eq!(sum_f32(&[2.5]), 2.5);
         assert_eq!(sum_neumaier_f32(&[]), 0.0);
+        assert_eq!(sum_neumaier_f64(&[]), 0.0);
+        assert_eq!(sum_neumaier_f64(&[2.5]), 2.5);
+    }
+
+    #[test]
+    fn neumaier_f64_recovers_cancelled_partials() {
+        // Partial-combine shape: a huge pair cancels around small terms.
+        let big = 2.0f64.powi(100);
+        let data = [1.0, big, 3.0, -big, 2.0];
+        assert_eq!(sum_neumaier_f64(&data), 6.0);
+        let naive: f64 = data.iter().sum();
+        assert_ne!(naive, 6.0, "naive f64 absorbs the small terms");
     }
 }

@@ -16,9 +16,13 @@ pub enum Strategy {
     Threaded(usize),
     /// Dispatch to a compiled PJRT artifact (exact-size match needed).
     Artifact,
+    /// Shard across the multi-device execution pool
+    /// ([`crate::pool::DevicePool`]) — inputs large enough that the
+    /// per-shard launch overhead amortizes.
+    Pool,
 }
 
-/// Thresholds, tuned by the `hotpath` bench (§Perf).
+/// Thresholds, tuned by the `hotpath` and `pool` benches (§Perf).
 #[derive(Debug, Clone)]
 pub struct Planner {
     /// Below this, stay sequential.
@@ -29,6 +33,13 @@ pub struct Planner {
     pub workers: usize,
     /// Whether a PJRT runtime is attached.
     pub artifacts_available: bool,
+    /// Devices in the attached execution pool (0 = no pool).
+    pub pool_devices: usize,
+    /// Below this, sharding across the pool doesn't amortize its
+    /// per-shard kernel-launch overhead (`pool` bench: the 4-device
+    /// crossover sits well under 2^21 at paper-scale bandwidths; the
+    /// cutoff keeps a safety margin over the measured knee).
+    pub pool_cutoff: usize,
 }
 
 impl Default for Planner {
@@ -38,6 +49,8 @@ impl Default for Planner {
             thread_cutoff: 262_144,
             workers: std::thread::available_parallelism().map_or(4, |n| n.get()),
             artifacts_available: false,
+            pool_devices: 0,
+            pool_cutoff: 1 << 21,
         }
     }
 }
@@ -52,6 +65,9 @@ impl Planner {
         if self.artifacts_available && has_exact_artifact && n >= self.thread_cutoff {
             return Strategy::Artifact;
         }
+        if self.pool_devices > 0 && n >= self.pool_cutoff {
+            return Strategy::Pool;
+        }
         if n < self.seq_cutoff {
             return Strategy::Sequential;
         }
@@ -62,11 +78,16 @@ impl Planner {
     }
 
     /// Host fallback execution for any (op, dtype)-erased request.
+    ///
+    /// `Artifact`/`Pool` strategies are owned by the coordinator (it
+    /// holds the runtime and the device pool); when the host library
+    /// is asked directly it degrades to the threaded two-stage.
     pub fn run_f32(&self, data: &[f32], op: Op) -> f32 {
         match self.choose(data.len(), false) {
             Strategy::Sequential => super::simd::reduce(data, op),
             Strategy::Threaded(t) => super::threaded::reduce(data, op, t),
             Strategy::Artifact => unreachable!("choose(false) never picks Artifact"),
+            Strategy::Pool => super::threaded::reduce(data, op, self.workers.max(1)),
         }
     }
 
@@ -76,6 +97,7 @@ impl Planner {
             Strategy::Sequential => super::simd::reduce(data, op),
             Strategy::Threaded(t) => super::threaded::reduce(data, op, t),
             Strategy::Artifact => unreachable!("choose(false) never picks Artifact"),
+            Strategy::Pool => super::threaded::reduce(data, op, self.workers.max(1)),
         }
     }
 }
@@ -118,6 +140,35 @@ mod tests {
     fn large_uses_all_workers() {
         let p = Planner { workers: 8, ..Planner::default() };
         assert_eq!(p.choose(10_000_000, false), Strategy::Threaded(8));
+    }
+
+    #[test]
+    fn pool_chosen_above_cutoff_when_attached() {
+        let p = Planner { pool_devices: 4, ..Planner::default() };
+        assert_eq!(p.choose(1 << 21, false), Strategy::Pool);
+        assert_eq!(p.choose(100_000_000, false), Strategy::Pool);
+        // Below the cutoff the usual ladder applies.
+        assert!(matches!(p.choose((1 << 21) - 1, false), Strategy::Threaded(_)));
+        // Exact artifacts still win (compiled real execution beats the
+        // modeled fleet).
+        let pa = Planner { pool_devices: 4, artifacts_available: true, ..Planner::default() };
+        assert_eq!(pa.choose(5_533_214, true), Strategy::Artifact);
+        assert_eq!(pa.choose(5_533_214, false), Strategy::Pool);
+    }
+
+    #[test]
+    fn default_planner_has_no_pool() {
+        let p = Planner::default();
+        assert_eq!(p.pool_devices, 0);
+        assert!(matches!(p.choose(100_000_000, false), Strategy::Threaded(_)));
+    }
+
+    #[test]
+    fn pool_strategy_run_degrades_to_threaded() {
+        let p = Planner { pool_devices: 2, pool_cutoff: 1024, workers: 4, ..Planner::default() };
+        let d: Vec<i32> = (0..5000).map(|i| (i % 23) as i32 - 11).collect();
+        assert_eq!(p.choose(d.len(), false), Strategy::Pool);
+        assert_eq!(p.run_i32(&d, Op::Sum), d.iter().sum::<i32>());
     }
 
     #[test]

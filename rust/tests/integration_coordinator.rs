@@ -24,6 +24,7 @@ fn config() -> ServiceConfig {
         max_queue: 1000,
         workers: 2,
         warmup: false, // tests tolerate first-call compile latency
+        pool: None,
     }
 }
 
@@ -164,4 +165,51 @@ fn startup_fails_cleanly_without_artifacts() {
         ..config()
     };
     assert!(Service::start(cfg).is_err());
+}
+
+#[test]
+fn startup_fails_cleanly_with_bad_pool_device() {
+    if !have_artifacts() {
+        return;
+    }
+    let cfg = ServiceConfig {
+        pool: Some(parred::coordinator::PoolServeConfig {
+            devices: vec!["NoSuchGPU".into()],
+            cutoff: 1 << 20,
+            tasks_per_device: 2,
+        }),
+        ..config()
+    };
+    assert!(Service::start(cfg).is_err());
+}
+
+#[test]
+fn sharded_path_round_trip() {
+    if !have_artifacts() {
+        return;
+    }
+    let cfg = ServiceConfig {
+        pool: Some(parred::coordinator::PoolServeConfig {
+            devices: vec!["TeslaC2075".into(); 4],
+            cutoff: 1 << 19,
+            tasks_per_device: 2,
+        }),
+        ..config()
+    };
+    let svc = Service::start(cfg).unwrap();
+    // 2^20 f32: above the pool cutoff, no artifact at this n.
+    let data = pseudo(1 << 20, 12);
+    let rx = svc.submit(Op::Sum, HostVec::F32(data.clone())).unwrap();
+    let resp = rx.recv_timeout(Duration::from_secs(300)).unwrap();
+    assert!(
+        matches!(resp.path, ExecPath::Sharded { devices: 4 }),
+        "expected sharded path, got {:?}",
+        resp.path
+    );
+    let HostScalar::F32(v) = resp.value.unwrap() else { panic!("dtype") };
+    let want: f64 = data.iter().map(|&x| x as f64).sum();
+    assert!((v as f64 - want).abs() <= 1e-3 * want.abs().max(1.0), "{v} vs {want}");
+    let m = svc.shutdown();
+    assert_eq!(m.sharded_requests, 1);
+    assert!(m.pool_tasks >= 4, "pool executed {} tasks", m.pool_tasks);
 }

@@ -1,0 +1,98 @@
+//! Multi-device execution pool, end to end: the acceptance claims of
+//! the subsystem at the paper's workload size.
+//!
+//! * A 4-device pool reduces `N_PAPER` elements with a modeled
+//!   wall-clock strictly better than the best single-device time in
+//!   the same run.
+//! * Results are bit-identical to the scalar baseline for integer
+//!   payloads and within 1e-5 relative error for float sums.
+//! * Work-steal counters are nonzero under an uneven shard split.
+
+use parred::gpusim::ir::CombOp;
+use parred::gpusim::{DeviceConfig, Gpu};
+use parred::kernels::drivers;
+use parred::pool::{DevicePool, PoolConfig, ShardPlan};
+use parred::reduce::{kahan, scalar, Op};
+use parred::util::rng::Rng;
+
+#[test]
+fn four_device_pool_beats_best_single_device_at_paper_n() {
+    let n = parred::N_PAPER;
+    let ints = Rng::new(42).i32_vec(n, -100, 100);
+    let data: Vec<f64> = ints.iter().map(|&x| x as f64).collect();
+
+    // Best single device of the pool's (homogeneous) device type,
+    // same run, same kernel parameters.
+    let cfg = PoolConfig::homogeneous(DeviceConfig::tesla_c2075(), 4);
+    let mut gpu = Gpu::new(DeviceConfig::tesla_c2075());
+    let single = drivers::jradi_reduce(&mut gpu, &data, CombOp::Add, cfg.unroll, cfg.block)
+        .expect("single-device run");
+    let best_single = single.run.total_time_s();
+
+    let pool = DevicePool::new(cfg).expect("pool");
+    let out = pool.reduce(&data, CombOp::Add).expect("pool reduce");
+
+    // Bit-identical integer result across single device, pool, and
+    // the scalar host baseline.
+    assert_eq!(out.value, single.value);
+    assert_eq!(out.value, scalar::reduce(&ints, Op::Sum) as f64);
+
+    assert!(
+        out.modeled_wall_s < best_single,
+        "4-device pool modeled {} s must beat best single device {} s",
+        out.modeled_wall_s,
+        best_single
+    );
+    // Real scaling, not a rounding artifact: at least 2x at this size.
+    assert!(
+        out.modeled_wall_s * 2.0 < best_single,
+        "expected >= 2x scaling: pool {} s vs single {} s",
+        out.modeled_wall_s,
+        best_single
+    );
+}
+
+#[test]
+fn float_sum_within_1e5_relative_of_scalar_baseline() {
+    let data = Rng::new(9).f32_vec(1 << 20, -1.0, 1.0);
+    let pool = DevicePool::new(PoolConfig {
+        devices: vec![
+            DeviceConfig::tesla_c2075(),
+            DeviceConfig::tesla_c2075(),
+            DeviceConfig::g80(),
+            DeviceConfig::amd_gcn(),
+        ],
+        ..PoolConfig::default()
+    })
+    .expect("pool");
+    let (got, _) = pool.reduce_elems(&data, Op::Sum).expect("reduce");
+    let exact = kahan::sum_f64(&data);
+    let rel = (got as f64 - exact).abs() / exact.abs().max(1.0);
+    assert!(rel < 1e-5, "pool {got} vs exact {exact} (rel {rel:.2e})");
+}
+
+#[test]
+fn integer_min_max_bit_identical_across_fleets() {
+    let ints = Rng::new(4).i32_vec(777_777, -10_000, 10_000);
+    for fleet in [1usize, 3, 5] {
+        let pool = DevicePool::new(PoolConfig::homogeneous(DeviceConfig::tesla_c2075(), fleet))
+            .expect("pool");
+        for op in [Op::Sum, Op::Min, Op::Max] {
+            let (got, _) = pool.reduce_elems(&ints, op).expect("reduce");
+            assert_eq!(got, scalar::reduce(&ints, op), "fleet={fleet} {op}");
+        }
+    }
+}
+
+#[test]
+fn steal_counters_nonzero_under_uneven_split() {
+    let pool = DevicePool::new(PoolConfig::homogeneous(DeviceConfig::tesla_c2075(), 4))
+        .expect("pool");
+    let data: Vec<f64> = Rng::new(5).i32_vec(400_000, -100, 100).iter().map(|&x| x as f64).collect();
+    let plan = ShardPlan::single_queue(data.len(), 16, 0);
+    let out = pool.reduce_with_plan(&data, CombOp::Add, &plan).expect("reduce");
+    assert_eq!(out.value, data.iter().sum::<f64>());
+    assert!(out.steals > 0, "uneven split must trigger steals");
+    assert!(pool.counters().steals > 0, "lifetime steal counter must be nonzero");
+    assert!(pool.counters().tasks_executed >= 16);
+}

@@ -167,6 +167,73 @@ fn prop_kahan_at_least_as_accurate() {
 }
 
 #[test]
+fn prop_pool_equals_scalar_any_fleet_and_split() {
+    use parred::pool::{DevicePool, PoolConfig};
+
+    check(
+        "device pool == scalar for arbitrary (n, fleet, granularity)",
+        16,
+        |rng| {
+            let n = parred::util::prop::sizes(rng, 30_000); // zero allowed
+            let fleet: Vec<usize> = (0..rng.range(1, 5)).map(|_| rng.range(0, 2)).collect();
+            let tasks = rng.range(1, 4);
+            (rng.i32_vec(n, -500, 500), fleet, tasks)
+        },
+        |(ints, fleet, tasks)| {
+            let devices: Vec<DeviceConfig> =
+                fleet.iter().map(|&d| DeviceConfig::presets()[d].clone()).collect();
+            let pool = DevicePool::new(PoolConfig {
+                devices,
+                tasks_per_device: *tasks,
+                ..PoolConfig::default()
+            })
+            .map_err(|e| format!("{e:#}"))?;
+            for op in [Op::Sum, Op::Min, Op::Max] {
+                let (got, _) = pool.reduce_elems(ints, op).map_err(|e| format!("{e:#}"))?;
+                let want = scalar::reduce(ints, op);
+                if got != want {
+                    return Err(format!("{op}: pool {got} != scalar {want}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_pool_uneven_splits_stay_exact() {
+    use parred::pool::{DevicePool, PoolConfig, ShardPlan};
+
+    check(
+        "device pool under single-queue (uneven) plans == scalar",
+        10,
+        |rng| {
+            let n = parred::util::prop::sizes_nonzero(rng, 30_000);
+            let chunks = rng.range(1, 12);
+            let workers = rng.range(1, 4);
+            (rng.i32_vec(n, -500, 500), chunks, workers)
+        },
+        |(ints, chunks, workers)| {
+            let pool = DevicePool::new(PoolConfig::homogeneous(
+                DeviceConfig::tesla_c2075(),
+                *workers,
+            ))
+            .map_err(|e| format!("{e:#}"))?;
+            let data: Vec<f64> = ints.iter().map(|&x| x as f64).collect();
+            let plan = ShardPlan::single_queue(data.len(), *chunks, 0);
+            let out = pool
+                .reduce_with_plan(&data, CombOp::Add, &plan)
+                .map_err(|e| format!("{e:#}"))?;
+            let want = scalar::reduce(ints, Op::Sum) as f64;
+            if out.value != want {
+                return Err(format!("pool {} != scalar {want}", out.value));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_batcher_never_reorders_within_key() {
     use parred::coordinator::batcher::Batcher;
     use parred::reduce::Op;

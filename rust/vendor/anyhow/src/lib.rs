@@ -1,0 +1,230 @@
+//! Vendored offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no network access, so the crate is
+//! re-implemented here with exactly the API surface this workspace
+//! uses: [`Error`], [`Result`], the [`anyhow!`], [`bail!`] and
+//! [`ensure!`] macros, and the [`Context`] extension trait for
+//! `Result`. Semantics mirror upstream anyhow where they matter:
+//!
+//! * `{e}` (Display) prints the outermost context only;
+//! * `{e:#}` (alternate) prints the full chain, outermost first,
+//!   joined by `": "`;
+//! * `?` converts any `E: std::error::Error + Send + Sync + 'static`
+//!   into [`Error`] (possible because [`Error`] itself deliberately
+//!   does *not* implement `std::error::Error`, as upstream).
+
+use std::fmt;
+
+/// A context-carrying error. `chain[0]` is the root cause; later
+/// entries are contexts added via [`Context`], innermost first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from any displayable message (the `anyhow!` macro).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Attach an outer context layer.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.push(context.to_string());
+        self
+    }
+
+    /// The root cause message (innermost).
+    pub fn root_cause(&self) -> &str {
+        self.chain.first().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{e:#}`: outermost context first, down to the root cause.
+            let mut first = true;
+            for part in self.chain.iter().rev() {
+                if !first {
+                    f.write_str(": ")?;
+                }
+                f.write_str(part)?;
+                first = false;
+            }
+            Ok(())
+        } else {
+            f.write_str(self.chain.last().map(|s| s.as_str()).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.last().map(|s| s.as_str()).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            f.write_str("\n\nCaused by:")?;
+            for part in self.chain.iter().rev().skip(1) {
+                write!(f, "\n    {part}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// `?` conversion from standard errors. Sound because `Error` does not
+// implement `std::error::Error`, so this cannot overlap the reflexive
+// `From<Error> for Error`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        // Preserve source chains as context layers.
+        let mut chain = Vec::new();
+        let mut cur: Option<&(dyn std::error::Error + 'static)> = e.source();
+        chain.push(e.to_string());
+        while let Some(c) = cur {
+            chain.insert(0, c.to_string());
+            cur = c.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `anyhow::Result<T>` — the crate-wide result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+mod private {
+    /// Sealed conversion used by [`super::Context`]: implemented for
+    /// [`super::Error`] itself and for standard errors.
+    pub trait IntoError {
+        fn into_error(self) -> super::Error;
+    }
+
+    impl IntoError for super::Error {
+        fn into_error(self) -> super::Error {
+            self
+        }
+    }
+
+    impl<E: std::error::Error + Send + Sync + 'static> IntoError for E {
+        fn into_error(self) -> super::Error {
+            super::Error::from(self)
+        }
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// results whose error converts into [`Error`].
+pub trait Context<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T>;
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: private::IntoError> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into_error().context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into_error().context(f()))
+    }
+}
+
+/// Construct an [`Error`] from a message, a format string, or any
+/// displayable expression.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Early-return with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Assert a condition, early-returning an error when it fails.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!(
+                "condition failed: {}", stringify!($cond)
+            ));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn display_outermost_alternate_chain() {
+        let e = Error::msg("root").context("middle").context("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: middle: root");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = f().unwrap_err();
+        assert!(format!("{e}").contains("missing file"));
+    }
+
+    #[test]
+    fn context_on_io_and_anyhow_results() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading config").unwrap_err();
+        assert_eq!(format!("{e}"), "reading config");
+        assert!(format!("{e:#}").contains("missing file"));
+
+        let r2: Result<()> = Err(anyhow!("inner {}", 7));
+        let e2 = r2.with_context(|| format!("outer {}", 8)).unwrap_err();
+        assert_eq!(format!("{e2:#}"), "outer 8: inner 7");
+    }
+
+    #[test]
+    fn macros_build_and_bail() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x >= 0, "negative input {x}");
+            if x > 100 {
+                bail!("too large: {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(5).unwrap(), 5);
+        assert!(format!("{}", f(-1).unwrap_err()).contains("negative"));
+        assert!(format!("{}", f(101).unwrap_err()).contains("too large"));
+        let from_string = anyhow!(String::from("owned message"));
+        assert_eq!(format!("{from_string}"), "owned message");
+    }
+}

@@ -1,0 +1,267 @@
+//! Vendored offline stub of the `xla` crate (xla-rs).
+//!
+//! The real crate binds the native `xla_extension` PJRT runtime, which
+//! is unavailable in this offline build environment. The workspace
+//! gates every PJRT code path behind the artifact catalog (`artifacts/
+//! manifest.json`, produced by `make artifacts`), so a build without
+//! the native runtime only needs:
+//!
+//! * a working host [`Literal`] (shape + typed data), because the
+//!   marshalling layer and its unit tests exercise it directly;
+//! * the PJRT entry points ([`PjRtClient`], [`HloModuleProto`],
+//!   [`XlaComputation`]) present at the type level, with `compile`
+//!   returning a clean "PJRT unavailable" error.
+//!
+//! [`PjRtLoadedExecutable`] and [`PjRtBuffer`] are uninhabited: the
+//! stub can never produce one, so their methods are statically
+//! unreachable — execution paths are impossible, not just failing.
+//!
+//! Like the real `xla::PjRtClient`, the stub client is `!Send` (the
+//! coordinator relies on owning it from a single executor thread).
+
+use std::fmt;
+use std::marker::PhantomData;
+use std::path::Path;
+use std::rc::Rc;
+
+/// Error type mirroring `xla::Error` (a displayable message).
+#[derive(Debug)]
+pub struct Error(String);
+
+impl Error {
+    pub fn new(msg: impl Into<String>) -> Error {
+        Error(msg.into())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Typed element storage. Public only so [`NativeType`] can name it;
+/// not part of the mirrored API surface.
+#[doc(hidden)]
+#[derive(Debug, Clone, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    F64(Vec<f64>),
+    I32(Vec<i32>),
+    I64(Vec<i64>),
+}
+
+impl Data {
+    fn len(&self) -> usize {
+        match self {
+            Data::F32(v) => v.len(),
+            Data::F64(v) => v.len(),
+            Data::I32(v) => v.len(),
+            Data::I64(v) => v.len(),
+        }
+    }
+}
+
+/// Element types a [`Literal`] can hold (the subset this workspace
+/// marshals: f32/f64/i32/i64).
+pub trait NativeType: Copy {
+    #[doc(hidden)]
+    fn wrap(v: &[Self]) -> Data;
+    #[doc(hidden)]
+    fn unwrap(d: &Data) -> Result<Vec<Self>>;
+}
+
+macro_rules! native {
+    ($t:ty, $variant:ident) => {
+        impl NativeType for $t {
+            fn wrap(v: &[Self]) -> Data {
+                Data::$variant(v.to_vec())
+            }
+            fn unwrap(d: &Data) -> Result<Vec<Self>> {
+                match d {
+                    Data::$variant(v) => Ok(v.clone()),
+                    other => Err(Error::new(format!(
+                        "literal element type mismatch: asked for {}, literal holds {:?}",
+                        stringify!($t),
+                        std::mem::discriminant(other)
+                    ))),
+                }
+            }
+        }
+    };
+}
+
+native!(f32, F32);
+native!(f64, F64);
+native!(i32, I32);
+native!(i64, I64);
+
+/// A host tensor: dimensions plus typed element data.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    dims: Vec<i64>,
+    data: Data,
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal { dims: vec![v.len() as i64], data: T::wrap(v) }
+    }
+
+    /// Total number of elements.
+    pub fn element_count(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Same data under new dimensions; the element count must match.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want < 0 || want as usize != self.element_count() {
+            return Err(Error::new(format!(
+                "reshape to {:?} incompatible with {} elements",
+                dims,
+                self.element_count()
+            )));
+        }
+        Ok(Literal { dims: dims.to_vec(), data: self.data.clone() })
+    }
+
+    /// Copy the elements out as `T`.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.data)
+    }
+
+    /// First element (rank-0 results and scalar reads).
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        T::unwrap(&self.data)?
+            .first()
+            .copied()
+            .ok_or_else(|| Error::new("get_first_element on an empty literal"))
+    }
+
+    /// Decompose a tuple literal. The stub cannot build tuples (they
+    /// only come back from PJRT execution), so this is unreachable in
+    /// practice and conservatively errors.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error::new("stub xla: tuple literals only exist on the PJRT path"))
+    }
+}
+
+impl AsRef<Literal> for Literal {
+    fn as_ref(&self) -> &Literal {
+        self
+    }
+}
+
+/// Parsed HLO module (stub: the text is retained but never compiled).
+pub struct HloModuleProto {
+    #[allow(dead_code)]
+    text: String,
+}
+
+impl HloModuleProto {
+    /// Read an HLO text file. I/O errors surface; parsing is deferred
+    /// to `compile`, which the stub reports as unavailable.
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| Error::new(format!("reading {}: {e}", path.as_ref().display())))?;
+        Ok(HloModuleProto { text })
+    }
+}
+
+/// A computation wrapping an HLO module.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// PJRT client handle. `!Send`, as the real `Rc`-based client.
+pub struct PjRtClient {
+    _not_send: PhantomData<Rc<()>>,
+}
+
+impl PjRtClient {
+    /// The stub client constructs fine (so catalog errors surface
+    /// first, exactly as with the real crate); only `compile` fails.
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { _not_send: PhantomData })
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub-cpu (vendored xla, PJRT unavailable)".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::new(
+            "PJRT unavailable: this build uses the vendored offline xla stub; \
+             install the native xla_extension runtime to execute AOT artifacts",
+        ))
+    }
+}
+
+/// Uninhabited: the stub never produces an executable.
+pub enum PjRtLoadedExecutable {}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: AsRef<Literal>>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        match *self {}
+    }
+}
+
+/// Uninhabited: device buffers only exist after execution.
+pub enum PjRtBuffer {}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        match *self {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vec1_round_trips_all_types() {
+        let f = Literal::vec1(&[1.0f32, 2.0, 3.0]);
+        assert_eq!(f.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0]);
+        assert_eq!(f.element_count(), 3);
+        assert_eq!(f.get_first_element::<f32>().unwrap(), 1.0);
+
+        let i = Literal::vec1(&[-7i32, 9]);
+        assert_eq!(i.to_vec::<i32>().unwrap(), vec![-7, 9]);
+        assert!(i.to_vec::<f32>().is_err(), "dtype mismatch must error");
+    }
+
+    #[test]
+    fn reshape_checks_element_count() {
+        let l = Literal::vec1(&[0i32; 6]);
+        assert!(l.reshape(&[2, 3]).is_ok());
+        assert!(l.reshape(&[4, 2]).is_err());
+    }
+
+    #[test]
+    fn compile_reports_unavailable() {
+        let client = PjRtClient::cpu().unwrap();
+        let proto = HloModuleProto { text: String::new() };
+        let comp = XlaComputation::from_proto(&proto);
+        let err = client.compile(&comp).unwrap_err();
+        assert!(err.to_string().contains("PJRT unavailable"));
+    }
+
+    #[test]
+    fn empty_literal_first_element_errors() {
+        let l = Literal::vec1::<f32>(&[]);
+        assert!(l.get_first_element::<f32>().is_err());
+    }
+}
