@@ -2,7 +2,14 @@
 //! hot path on the request route (the §Perf pass instrumentation):
 //! host reduction library, literal marshalling, router/batcher units,
 //! the simulator interpreter, and (if artifacts exist) PJRT execute.
+//!
+//! Also sweeps the persistent-threads host runtime against the legacy
+//! spawn-per-call baseline over `2^12..2^24` elements and records the
+//! numbers (ns/elem, effective GB/s, speedup) machine-readably in
+//! `BENCH_hotpath.json` (path override: `PARRED_BENCH_JSON`) so CI
+//! can track the perf trajectory across PRs.
 
+use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
 use parred::coordinator::batcher::Batcher;
@@ -32,9 +39,77 @@ fn main() {
     b.run("host/simd_max_f32_4M", bytes, || simd::reduce(&data_f, Op::Max));
     b.run("host/kahan_sum_f32_4M", bytes, || kahan::sum_f32(&data_f));
     for t in [2usize, 4, 8] {
-        b.run(&format!("host/threaded{t}_sum_f32_4M"), bytes, || {
+        b.run(&format!("host/persistent{t}_sum_f32_4M"), bytes, || {
             threaded::reduce(&data_f, Op::Sum, t)
         });
+        b.run(&format!("host/spawn{t}_sum_f32_4M"), bytes, || {
+            threaded::spawn_reduce(&data_f, Op::Sum, t)
+        });
+    }
+
+    // --- persistent runtime vs spawn-per-call sweep (2^12..2^24) ---
+    // The acceptance numbers of the persistent-threads PR: integer
+    // results must be bit-identical across backends, and the
+    // persistent pool must dominate the spawn baseline at the old
+    // thread_cutoff knee (2^18) without ever losing at 2^24.
+    let workers = std::thread::available_parallelism().map_or(4, |x| x.get());
+    let sweep_f = rng.f32_vec(1 << 24, -1.0, 1.0);
+    let sweep_i = rng.i32_vec(1 << 24, -100, 100);
+    let mut sweep: Vec<Json> = Vec::new();
+    for p in [12usize, 15, 18, 21, 24] {
+        let n = 1usize << p;
+        let df = &sweep_f[..n];
+        let di = &sweep_i[..n];
+        let want_i = scalar::reduce(di, Op::Sum);
+        assert_eq!(threaded::reduce(di, Op::Sum, workers), want_i, "persistent i32 2^{p}");
+        assert_eq!(threaded::spawn_reduce(di, Op::Sum, workers), want_i, "spawn i32 2^{p}");
+        let bytes = Some(4 * n as u64);
+        let s = b.run(&format!("sweep/simd_sum_f32_2p{p}"), bytes, || simd::reduce(df, Op::Sum));
+        let (m_simd, g_simd) = (s.median(), s.gbps());
+        let s = b.run(&format!("sweep/spawn{workers}_sum_f32_2p{p}"), bytes, || {
+            threaded::spawn_reduce(df, Op::Sum, workers)
+        });
+        let (m_spawn, g_spawn) = (s.median(), s.gbps());
+        let s = b.run(&format!("sweep/persistent{workers}_sum_f32_2p{p}"), bytes, || {
+            threaded::reduce(df, Op::Sum, workers)
+        });
+        let (m_pers, g_pers) = (s.median(), s.gbps());
+        for (backend, m, g) in [
+            ("simd", m_simd, g_simd),
+            ("spawn", m_spawn, g_spawn),
+            ("persistent", m_pers, g_pers),
+        ] {
+            let mut e = BTreeMap::new();
+            e.insert("backend".to_string(), Json::Str(backend.to_string()));
+            e.insert("n".to_string(), Json::Num(n as f64));
+            e.insert("log2_n".to_string(), Json::Num(p as f64));
+            e.insert("median_s".to_string(), Json::Num(m));
+            e.insert("ns_per_elem".to_string(), Json::Num(m * 1e9 / n as f64));
+            if let Some(g) = g {
+                e.insert("gbps".to_string(), Json::Num(g));
+            }
+            if backend == "persistent" {
+                e.insert("speedup_vs_spawn".to_string(), Json::Num(m_spawn / m));
+            }
+            sweep.push(Json::Obj(e));
+        }
+        println!(
+            "sweep 2^{p}: persistent {:.2}x vs spawn ({} workers, i32 bit-identical)",
+            m_spawn / m_pers,
+            workers
+        );
+    }
+    {
+        let mut root = BTreeMap::new();
+        root.insert("bench".to_string(), Json::Str("hotpath".to_string()));
+        root.insert("workers".to_string(), Json::Num(workers as f64));
+        root.insert("sweep".to_string(), Json::Arr(sweep));
+        let path = std::env::var("PARRED_BENCH_JSON")
+            .unwrap_or_else(|_| "BENCH_hotpath.json".to_string());
+        match std::fs::write(&path, format!("{}\n", Json::Obj(root))) {
+            Ok(()) => eprintln!("(wrote {path})"),
+            Err(e) => eprintln!("(could not write {path}: {e})"),
+        }
     }
 
     // --- literal marshalling (PJRT boundary) ---

@@ -8,6 +8,13 @@
 //! * otherwise flush when the oldest queued request has waited longer
 //!   than the window, at the largest size that fits (padding up to the
 //!   smallest artifact size with identity rows when below it).
+//!
+//! Keys with **no** rows artifact can still batch: same-key host
+//! requests fuse into one `reduce_rows` pass over the persistent
+//! worker pool (RedFuser-style cascaded-reduction fusion; see
+//! PAPERS.md). Fused batches flush at the window deadline or as soon
+//! as `host_fuse_max` rows queue up, whichever comes first, and carry
+//! no padding (`exec_rows == requests.len()`).
 
 use std::collections::HashMap;
 use std::time::{Duration, Instant};
@@ -23,19 +30,35 @@ pub struct FlushedBatch {
     pub key: ShapeKey,
     pub requests: Vec<Request>,
     /// Rows-artifact size to execute with (>= requests.len()); the
-    /// difference is identity padding.
+    /// difference is identity padding. For fused host batches this is
+    /// exactly `requests.len()` (no padding).
     pub exec_rows: usize,
+    /// True when the key has no rows artifact and the batch must run
+    /// as one fused `reduce_rows` pass on the persistent host pool.
+    pub fused_host: bool,
 }
 
 /// Per-key FIFO queues with deadline-based flushing.
 pub struct Batcher {
     window: Duration,
+    /// Largest fused host batch (0 disables host fusion: artifact-less
+    /// keys are then never flushed here and must not be queued).
+    host_fuse_max: usize,
     queues: HashMap<ShapeKey, Vec<Request>>,
 }
 
+/// Default cap on fused host batches: big enough to saturate the
+/// worker pool, small enough to bound the stacked payload copy.
+pub const HOST_FUSE_MAX_DEFAULT: usize = 64;
+
 impl Batcher {
     pub fn new(window: Duration) -> Self {
-        Batcher { window, queues: HashMap::new() }
+        Batcher { window, host_fuse_max: HOST_FUSE_MAX_DEFAULT, queues: HashMap::new() }
+    }
+
+    /// Override the fused-host batch cap (0 disables host fusion).
+    pub fn with_host_fuse(window: Duration, host_fuse_max: usize) -> Self {
+        Batcher { window, host_fuse_max, queues: HashMap::new() }
     }
 
     pub fn window(&self) -> Duration {
@@ -64,14 +87,43 @@ impl Batcher {
         for (key, queue) in self.queues.iter_mut() {
             let sizes = sizes_of(key);
             if sizes.is_empty() {
-                continue; // not a batchable key (shouldn't normally be queued)
+                // No rows artifact: fuse same-key host requests into
+                // one persistent-pool `reduce_rows` pass.
+                if self.host_fuse_max == 0 {
+                    continue; // fusion disabled (shouldn't normally be queued)
+                }
+                loop {
+                    let expired = queue
+                        .first()
+                        .is_some_and(|r| now.duration_since(r.t_enqueue) >= self.window);
+                    // `expired` implies a non-empty queue (it comes
+                    // from queue.first()).
+                    if queue.len() >= self.host_fuse_max || expired {
+                        let take = queue.len().min(self.host_fuse_max);
+                        let batch: Vec<Request> = queue.drain(..take).collect();
+                        out.push(FlushedBatch {
+                            key: *key,
+                            requests: batch,
+                            exec_rows: take,
+                            fused_host: true,
+                        });
+                    } else {
+                        break;
+                    }
+                }
+                continue;
             }
             loop {
                 // Size-triggered flush: the largest artifact we can fill.
                 if let Some(b) = Router::best_batch(&sizes, queue.len()) {
                     if queue.len() >= *sizes.last().unwrap() || b == *sizes.last().unwrap() {
                         let batch: Vec<Request> = queue.drain(..b).collect();
-                        out.push(FlushedBatch { key: *key, requests: batch, exec_rows: b });
+                        out.push(FlushedBatch {
+                            key: *key,
+                            requests: batch,
+                            exec_rows: b,
+                            fused_host: false,
+                        });
                         continue;
                     }
                 }
@@ -90,7 +142,12 @@ impl Batcher {
                     };
                     let take = take.min(queue.len());
                     let batch: Vec<Request> = queue.drain(..take).collect();
-                    out.push(FlushedBatch { key: *key, requests: batch, exec_rows: exec });
+                    out.push(FlushedBatch {
+                        key: *key,
+                        requests: batch,
+                        exec_rows: exec,
+                        fused_host: false,
+                    });
                     continue;
                 }
                 break;
@@ -207,6 +264,46 @@ mod tests {
         b.push(req(0, 100, t));
         b.push(req(1, 100, t + Duration::from_millis(5)));
         assert_eq!(b.next_deadline(), Some(t + Duration::from_millis(10)));
+    }
+
+    #[test]
+    fn host_fusion_flushes_at_window() {
+        let mut b = Batcher::new(Duration::from_millis(10));
+        let t = Instant::now();
+        for i in 0..5 {
+            b.push(req(i, 12_345, t)); // a key with no rows artifact
+        }
+        // No artifact sizes: nothing flushes before the window.
+        assert!(b.flush_ready(t, |_| vec![]).is_empty());
+        assert_eq!(b.queued(), 5);
+        let flushed = b.flush_ready(t + Duration::from_millis(11), |_| vec![]);
+        assert_eq!(flushed.len(), 1);
+        assert!(flushed[0].fused_host);
+        assert_eq!(flushed[0].requests.len(), 5);
+        assert_eq!(flushed[0].exec_rows, 5, "fused batches carry no padding");
+        assert_eq!(b.queued(), 0);
+    }
+
+    #[test]
+    fn host_fusion_flushes_at_cap_without_waiting() {
+        let mut b = Batcher::with_host_fuse(Duration::from_secs(60), 4);
+        let t = Instant::now();
+        for i in 0..9 {
+            b.push(req(i, 12_345, t));
+        }
+        let flushed = b.flush_ready(t, |_| vec![]);
+        assert_eq!(flushed.len(), 2, "two full fused batches, remainder waits");
+        assert!(flushed.iter().all(|f| f.fused_host && f.requests.len() == 4));
+        assert_eq!(b.queued(), 1);
+    }
+
+    #[test]
+    fn host_fusion_disabled_keeps_queueing() {
+        let mut b = Batcher::with_host_fuse(Duration::from_millis(0), 0);
+        let t = Instant::now();
+        b.push(req(0, 12_345, t));
+        assert!(b.flush_ready(t + Duration::from_millis(1), |_| vec![]).is_empty());
+        assert_eq!(b.queued(), 1);
     }
 
     #[test]

@@ -18,11 +18,16 @@ pub struct Metrics {
     pub lat_batched: Histogram,
     pub lat_sharded: Histogram,
     pub lat_host: Histogram,
+    pub lat_host_fused: Histogram,
     /// Rows executed vs rows carrying real requests (padding waste).
     pub rows_executed: u64,
     pub rows_useful: u64,
     pub batches: u64,
     pub elements_reduced: u64,
+    /// Fused host batches (RedFuser-style persistent-pool rows
+    /// passes) and the rows they carried.
+    pub fused_batches: u64,
+    pub fused_rows: u64,
     /// Requests served by the device pool, and the pool's lifetime
     /// queue counters (snapshotted at shutdown from
     /// [`crate::pool::DevicePool::counters`]).
@@ -30,6 +35,15 @@ pub struct Metrics {
     pub pool_tasks: u64,
     pub pool_steals: u64,
     pub pool_peak_depth: u64,
+    /// Persistent host worker-pool counters (snapshotted at shutdown
+    /// from [`crate::reduce::persistent::global_counters`]): worker
+    /// count, jobs, chunks executed, and peak per-job chunk depth.
+    /// `jobs`/`chunks` are deltas over this service's lifetime (the
+    /// pool is process-wide); `workers`/`peak_chunks` are pool-wide.
+    pub host_pool_workers: u64,
+    pub host_pool_jobs: u64,
+    pub host_pool_chunks: u64,
+    pub host_pool_peak_chunks: u64,
 }
 
 impl Default for Metrics {
@@ -42,14 +56,21 @@ impl Default for Metrics {
             lat_batched: Histogram::new(),
             lat_sharded: Histogram::new(),
             lat_host: Histogram::new(),
+            lat_host_fused: Histogram::new(),
             rows_executed: 0,
             rows_useful: 0,
             batches: 0,
             elements_reduced: 0,
+            fused_batches: 0,
+            fused_rows: 0,
             sharded_requests: 0,
             pool_tasks: 0,
             pool_steals: 0,
             pool_peak_depth: 0,
+            host_pool_workers: 0,
+            host_pool_jobs: 0,
+            host_pool_chunks: 0,
+            host_pool_peak_chunks: 0,
         }
     }
 }
@@ -69,6 +90,7 @@ impl Metrics {
                 self.sharded_requests += 1;
                 self.lat_sharded.record(latency_s);
             }
+            ExecPath::HostFused { .. } => self.lat_host_fused.record(latency_s),
             ExecPath::Host => self.lat_host.record(latency_s),
         }
     }
@@ -79,11 +101,25 @@ impl Metrics {
         self.rows_useful += useful as u64;
     }
 
+    /// Account one fused host batch of `rows` real requests.
+    pub fn record_fused(&mut self, rows: usize) {
+        self.fused_batches += 1;
+        self.fused_rows += rows as u64;
+    }
+
     /// Snapshot the device pool's queue counters into the report.
     pub fn record_pool(&mut self, tasks: u64, steals: u64, peak_depth: u64) {
         self.pool_tasks = tasks;
         self.pool_steals = steals;
         self.pool_peak_depth = peak_depth;
+    }
+
+    /// Snapshot the persistent host pool's counters into the report.
+    pub fn record_host_pool(&mut self, c: crate::reduce::persistent::PersistentCounters) {
+        self.host_pool_workers = c.workers;
+        self.host_pool_jobs = c.jobs;
+        self.host_pool_chunks = c.chunks;
+        self.host_pool_peak_chunks = c.peak_chunks;
     }
 
     pub fn throughput_rps(&self) -> f64 {
@@ -124,15 +160,33 @@ impl Metrics {
             self.avg_batch(),
             100.0 * self.batch_efficiency()
         ));
+        if self.fused_batches > 0 {
+            s.push_str(&format!(
+                "host fusion: batches={} rows={} avg={:.2}\n",
+                self.fused_batches,
+                self.fused_rows,
+                self.fused_rows as f64 / self.fused_batches as f64
+            ));
+        }
         if self.sharded_requests > 0 || self.pool_tasks > 0 {
             s.push_str(&format!(
                 "pool: sharded_requests={} tasks={} steals={} peak_depth={}\n",
                 self.sharded_requests, self.pool_tasks, self.pool_steals, self.pool_peak_depth
             ));
         }
+        if self.host_pool_jobs > 0 {
+            s.push_str(&format!(
+                "host pool: workers={} jobs={} chunks={} peak_chunks={}\n",
+                self.host_pool_workers,
+                self.host_pool_jobs,
+                self.host_pool_chunks,
+                self.host_pool_peak_chunks
+            ));
+        }
         s.push_str(&format!("latency (pjrt full):    {}\n", self.lat_full.summary()));
         s.push_str(&format!("latency (pjrt batched): {}\n", self.lat_batched.summary()));
         s.push_str(&format!("latency (sharded):      {}\n", self.lat_sharded.summary()));
+        s.push_str(&format!("latency (host fused):   {}\n", self.lat_host_fused.summary()));
         s.push_str(&format!("latency (host):         {}\n", self.lat_host.summary()));
         s
     }
@@ -148,15 +202,35 @@ mod tests {
         m.record(ExecPath::PjrtFull, 1e-3, true, 100);
         m.record(ExecPath::PjrtBatched { batch: 8 }, 2e-3, true, 100);
         m.record(ExecPath::Sharded { devices: 4 }, 3e-3, true, 100);
+        m.record(ExecPath::HostFused { batch: 6 }, 4e-4, true, 100);
         m.record(ExecPath::Host, 5e-4, false, 100);
-        assert_eq!(m.completed, 3);
+        assert_eq!(m.completed, 4);
         assert_eq!(m.failed, 1);
         assert_eq!(m.lat_full.count(), 1);
         assert_eq!(m.lat_batched.count(), 1);
         assert_eq!(m.lat_sharded.count(), 1);
+        assert_eq!(m.lat_host_fused.count(), 1);
         assert_eq!(m.lat_host.count(), 1);
         assert_eq!(m.sharded_requests, 1);
-        assert_eq!(m.elements_reduced, 400);
+        assert_eq!(m.elements_reduced, 500);
+    }
+
+    #[test]
+    fn fused_and_host_pool_counters_render() {
+        let mut m = Metrics::default();
+        m.record_fused(6);
+        m.record_fused(2);
+        m.record_host_pool(crate::reduce::persistent::PersistentCounters {
+            workers: 7,
+            jobs: 11,
+            chunks: 42,
+            peak_chunks: 14,
+        });
+        assert_eq!(m.fused_batches, 2);
+        assert_eq!(m.fused_rows, 8);
+        let r = m.report();
+        assert!(r.contains("host fusion: batches=2 rows=8"), "{r}");
+        assert!(r.contains("host pool: workers=7 jobs=11 chunks=42 peak_chunks=14"), "{r}");
     }
 
     #[test]

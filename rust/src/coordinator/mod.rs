@@ -7,9 +7,10 @@
 //! executor, with latency/throughput metrics ([`metrics`]). Requests
 //! with no matching artifact fall back to the multi-device execution
 //! pool ([`crate::pool`], `Route::Sharded`, for payloads past the
-//! pool cutoff when a fleet is attached) or to the host reduction
-//! library ([`crate::reduce`]) — the service is total over request
-//! shapes.
+//! pool cutoff when a fleet is attached), to a fused host batch
+//! (same-key requests stacked into one persistent-pool `reduce_rows`
+//! pass, `ExecPath::HostFused`) or to the host reduction library
+//! ([`crate::reduce`]) — the service is total over request shapes.
 
 pub mod backpressure;
 pub mod batcher;

@@ -41,6 +41,9 @@ pub enum ExecPath {
     /// Sharded across the `devices`-wide execution pool
     /// ([`crate::pool::DevicePool`]).
     Sharded { devices: usize },
+    /// Same-key host requests fused into one `reduce_rows` pass over
+    /// the persistent worker pool (`batch` rows; RedFuser-style).
+    HostFused { batch: usize },
     /// Host (threaded/sequential) fallback.
     Host,
 }

@@ -15,6 +15,7 @@ use crate::gpusim::DeviceConfig;
 use crate::pool::{DevicePool, PoolConfig};
 use crate::reduce::op::{Dtype, Element, Op};
 use crate::reduce::plan::Planner;
+use crate::reduce::{persistent, threaded};
 use crate::runtime::literal::{HostScalar, HostVec};
 use crate::runtime::Runtime;
 use crate::util::rng::Rng;
@@ -25,6 +26,64 @@ use super::batcher::{Batcher, FlushedBatch};
 use super::metrics::Metrics;
 use super::request::{ExecPath, Request, Response};
 use super::router::{PoolRoute, Route, Router};
+
+/// Largest per-request payload (elements) eligible for RedFuser-style
+/// host fusion. Fusion pays when individual requests are too small to
+/// use the pool's full width on their own (below the planner's
+/// full-width knee) — there the one fused pass replaces many
+/// underutilized per-request jobs. Past the knee each request already
+/// saturates the pool, so the O(bytes) stacking copy would roughly
+/// double memory traffic for microseconds of saved dispatch; those
+/// run directly instead.
+const HOST_FUSE_MAX_N: usize = 32_768;
+
+/// Resolve one device preset name (shared by the CLI fleet-spec
+/// parser and pool construction so the lookup and its error text
+/// cannot drift apart).
+fn resolve_device(name: &str) -> Result<DeviceConfig> {
+    DeviceConfig::by_name(name)
+        .ok_or_else(|| anyhow!("unknown pool device {name:?} (see `parred info`)"))
+}
+
+/// Parse a `--pool-devices` fleet spec into preset device names.
+///
+/// Accepted forms:
+/// * `"4"` — that many `TeslaC2075` (backwards compatible count);
+/// * `"G80,TeslaC2075"` — heterogeneous comma-separated preset list;
+/// * `"TeslaC2075*3,G80"` — preset name with a `*count` multiplier.
+pub fn parse_fleet_spec(spec: &str) -> Result<Vec<String>> {
+    let spec = spec.trim();
+    if spec.is_empty() {
+        return Err(anyhow!("empty --pool-devices spec"));
+    }
+    if spec.chars().all(|c| c.is_ascii_digit()) {
+        let count: usize = spec.parse().context("parsing --pool-devices count")?;
+        if count == 0 {
+            return Err(anyhow!("--pool-devices count must be >= 1"));
+        }
+        return Ok(vec!["TeslaC2075".into(); count]);
+    }
+    let mut out = Vec::new();
+    for part in spec.split(',') {
+        let part = part.trim();
+        let (name, count) = match part.split_once('*') {
+            Some((n, k)) => {
+                let count: usize = k
+                    .trim()
+                    .parse()
+                    .map_err(|e| anyhow!("bad device multiplier in {part:?}: {e}"))?;
+                (n.trim(), count)
+            }
+            None => (part, 1),
+        };
+        let dev = resolve_device(name)?;
+        if count == 0 {
+            return Err(anyhow!("device multiplier must be >= 1 in {part:?}"));
+        }
+        out.extend(std::iter::repeat(dev.name.to_string()).take(count));
+    }
+    Ok(out)
+}
 
 /// Multi-device pool attachment for the serving path.
 #[derive(Debug, Clone)]
@@ -212,6 +271,10 @@ fn executor_loop(
     };
     let _ = ready.send(Ok(runtime.platform()));
     metrics.started = Instant::now(); // exclude load+warmup from throughput
+    // The persistent host pool is process-wide; snapshot its counters
+    // now so the shutdown report attributes only this service's work
+    // (the device-pool counters above are per-instance already).
+    let host_pool_start = persistent::global_counters().unwrap_or_default();
     let router = match (&pool, &cfg.pool) {
         (Some(p), Some(pc)) => Router::with_pool(
             runtime.catalog().clone(),
@@ -239,7 +302,18 @@ fn executor_loop(
                 Some(p) => exec_sharded(p, &gate, req, metrics),
                 None => exec_host(&planner, &gate, req, metrics),
             },
-            Route::Host => exec_host(&planner, &gate, req, metrics),
+            // Artifact-less keys still batch: same-key requests fuse
+            // into one persistent-pool rows pass at flush time
+            // (RedFuser-style). Oversized or empty payloads run
+            // directly — stacking them doesn't pay.
+            Route::Host => {
+                let n = req.payload.len();
+                if n > 0 && n <= HOST_FUSE_MAX_N {
+                    batcher.push(req)
+                } else {
+                    exec_host(&planner, &gate, req, metrics)
+                }
+            }
         }
     };
 
@@ -273,7 +347,11 @@ fn executor_loop(
         for batch in
             batcher.flush_ready(now, |k| router.catalog().rows_batch_sizes(k.op, k.dtype, k.n))
         {
-            exec_batch(&runtime, &gate, &router, batch, &mut metrics);
+            if batch.fused_host {
+                exec_host_fused(&planner, &gate, batch, &mut metrics);
+            } else {
+                exec_batch(&runtime, &gate, &router, batch, &mut metrics);
+            }
         }
     }
 
@@ -291,6 +369,14 @@ fn executor_loop(
         let c = p.counters();
         metrics.record_pool(c.tasks_executed, c.steals, c.peak_depth);
     }
+    if let Some(c) = persistent::global_counters() {
+        metrics.record_host_pool(crate::reduce::persistent::PersistentCounters {
+            workers: c.workers,
+            jobs: c.jobs - host_pool_start.jobs,
+            chunks: c.chunks - host_pool_start.chunks,
+            peak_chunks: c.peak_chunks,
+        });
+    }
     metrics
 }
 
@@ -298,10 +384,7 @@ fn executor_loop(
 fn build_pool(pc: &PoolServeConfig) -> Result<DevicePool> {
     let mut devices = Vec::with_capacity(pc.devices.len());
     for name in &pc.devices {
-        devices.push(
-            DeviceConfig::by_name(name)
-                .ok_or_else(|| anyhow!("unknown pool device {name:?} (see `parred info`)"))?,
-        );
+        devices.push(resolve_device(name)?);
     }
     DevicePool::new(PoolConfig {
         devices,
@@ -341,6 +424,51 @@ fn exec_host(planner: &Planner, gate: &Gate, req: Request, metrics: &mut Metrics
         HostVec::I32(v) => HostScalar::I32(planner.run_i32(v, req.op)),
     };
     respond(gate, req, Ok(value), ExecPath::Host, metrics);
+}
+
+/// Execute a fused host batch: same-key requests stacked row-major and
+/// reduced in **one** `reduce_rows` pass over the persistent worker
+/// pool (RedFuser-style cascaded-reduction fusion).
+fn exec_host_fused(planner: &Planner, gate: &Gate, batch: FlushedBatch, metrics: &mut Metrics) {
+    let key = batch.key;
+    let rows = batch.requests.len();
+    if rows == 1 {
+        // A fused batch of one is just a host request; don't claim
+        // fusion in the metrics or the response path.
+        let req = batch.requests.into_iter().next().expect("one request");
+        return exec_host(planner, gate, req, metrics);
+    }
+    metrics.record_fused(rows);
+    let path = ExecPath::HostFused { batch: rows };
+    let width = planner.workers.max(1);
+    match key.dtype {
+        Dtype::F32 => {
+            let mut stacked: Vec<f32> = Vec::with_capacity(rows * key.n);
+            for req in &batch.requests {
+                let HostVec::F32(v) = &req.payload else {
+                    unreachable!("shape key guarantees f32 payloads")
+                };
+                stacked.extend_from_slice(v);
+            }
+            let values = threaded::reduce_rows(&stacked, key.n, key.op, width);
+            for (req, v) in batch.requests.into_iter().zip(values) {
+                respond(gate, req, Ok(HostScalar::F32(v)), path, metrics);
+            }
+        }
+        Dtype::I32 => {
+            let mut stacked: Vec<i32> = Vec::with_capacity(rows * key.n);
+            for req in &batch.requests {
+                let HostVec::I32(v) = &req.payload else {
+                    unreachable!("shape key guarantees i32 payloads")
+                };
+                stacked.extend_from_slice(v);
+            }
+            let values = threaded::reduce_rows(&stacked, key.n, key.op, width);
+            for (req, v) in batch.requests.into_iter().zip(values) {
+                respond(gate, req, Ok(HostScalar::I32(v)), path, metrics);
+            }
+        }
+    }
 }
 
 /// Shard a large artifact-less reduction across the device fleet.
@@ -512,6 +640,43 @@ pub fn run_trace(cfg: ServiceConfig, trace: TraceConfig) -> Result<String> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn fleet_spec_count_form() {
+        assert_eq!(parse_fleet_spec("4").unwrap(), vec!["TeslaC2075"; 4]);
+        assert!(parse_fleet_spec("0").is_err());
+        assert!(parse_fleet_spec("").is_err());
+    }
+
+    #[test]
+    fn fleet_spec_heterogeneous_names() {
+        let fleet = parse_fleet_spec("G80,TeslaC2075,AMD-GCN").unwrap();
+        assert_eq!(fleet, vec!["G80", "TeslaC2075", "AMD-GCN"]);
+        // Case-insensitive resolution canonicalizes the preset name.
+        let fleet = parse_fleet_spec("g80").unwrap();
+        assert_eq!(fleet, vec!["G80"]);
+        assert!(parse_fleet_spec("H100").is_err());
+    }
+
+    #[test]
+    fn fleet_spec_multipliers() {
+        let fleet = parse_fleet_spec("TeslaC2075*3, G80").unwrap();
+        assert_eq!(fleet, vec!["TeslaC2075", "TeslaC2075", "TeslaC2075", "G80"]);
+        assert!(parse_fleet_spec("G80*0").is_err());
+        assert!(parse_fleet_spec("G80*x").is_err());
+    }
+
+    #[test]
+    fn fleet_specs_build_valid_pool_configs() {
+        let pc = PoolServeConfig {
+            devices: parse_fleet_spec("TeslaC2075*2,G80").unwrap(),
+            cutoff: 1 << 20,
+            tasks_per_device: 2,
+        };
+        let pool = build_pool(&pc).unwrap();
+        assert_eq!(pool.num_devices(), 3);
+        assert_eq!(pool.devices()[2].name, "G80");
+    }
 
     #[test]
     fn identity_payloads() {

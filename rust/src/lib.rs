@@ -19,7 +19,10 @@
 //!   modeled G80 / Tesla C2075 / AMD-class device; [`kernels`] holds
 //!   the nine device kernels (Harris K1–K7, Catanzaro two-stage, the
 //!   paper's approach) written in the simulator's kernel IR;
-//!   [`reduce`] is the host-side reduction library and CPU baselines;
+//!   [`reduce`] is the host-side reduction library and CPU baselines,
+//!   built around a spawn-once persistent-threads runtime
+//!   ([`reduce::persistent`], the paper's §2.5 on CPU cores) with
+//!   op-monomorphized hot loops ([`reduce::combiner`]);
 //!   [`pool`] shards one reduction across a fleet of simulated
 //!   devices behind a work-stealing scheduler and combines partials
 //!   host-side (Kahan-compensated for float sums); [`harness`]

@@ -38,8 +38,16 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "device-file",
         "artifacts", "fast", "help",
         "pool", "pool-devices", "pool-cutoff",
+        "host-workers",
     ];
     let args = Args::parse(argv, &allowed)?;
+    // Size the process-wide persistent host runtime before anything
+    // touches it (spawn-once: later reconfiguration is a no-op).
+    // `--host-workers 0` is meaningful: it requests the inline,
+    // zero-background-worker runtime.
+    if args.get("host-workers").is_some() {
+        parred::reduce::persistent::configure_global_workers(args.get_usize("host-workers", 0)?);
+    }
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "info" => info(&args),
@@ -66,9 +74,17 @@ USAGE: parred <info|tables|sim|reduce|serve> [options]
       [--device-file my_gpu.json] [--n 5533214] [--f 8] [--block 256] [--op sum]
   reduce --n N [--op sum] [--dtype f32] [--backend host|pjrt] [--artifacts DIR]
   serve [--requests 200] [--batch-window-us 200] [--payload 65536]
-        [--artifacts DIR] [--pool=1 --pool-devices 4 --pool-cutoff 1048576]
+        [--artifacts DIR] [--pool=1 --pool-devices SPEC --pool-cutoff 1048576]
         end-to-end serving driver (--pool shards large payloads
-        across a fleet of simulated TeslaC2075 devices)
+        across a fleet of simulated devices)
+
+  --host-workers N sizes the process-wide persistent host runtime
+  (spawn-once worker pool; default: cores - 1; 0 = run inline with
+  no background workers). Applies to every subcommand that reduces
+  on the host.
+
+  --pool-devices accepts a count (`4` = 4x TeslaC2075) or a
+  heterogeneous fleet spec: `G80,TeslaC2075` / `TeslaC2075*3,G80`.
 
   tables --pool emits the device-count scaling table of the
   multi-device execution pool (1/2/4/8 x TeslaC2075 at N).";
@@ -261,7 +277,9 @@ fn reduce(args: &Args) -> Result<()> {
 }
 
 fn serve(args: &Args) -> Result<()> {
-    use parred::coordinator::service::{PoolServeConfig, ServiceConfig, TraceConfig};
+    use parred::coordinator::service::{
+        parse_fleet_spec, PoolServeConfig, ServiceConfig, TraceConfig,
+    };
     let dir = args.get_or("artifacts", "artifacts").to_string();
     // `--pool` as a bare flag or with a truthy value enables the
     // fleet; `--pool=0|false|no|off` keeps it disabled.
@@ -270,8 +288,10 @@ fn serve(args: &Args) -> Result<()> {
             .get("pool")
             .is_some_and(|v| !matches!(v, "0" | "false" | "no" | "off"));
     let pool = if pool_enabled {
+        // Count form (`4`) or heterogeneous spec (`G80,TeslaC2075*2`).
+        let devices = parse_fleet_spec(args.get_or("pool-devices", "4"))?;
         Some(PoolServeConfig {
-            devices: vec!["TeslaC2075".into(); args.get_usize("pool-devices", 4)?.max(1)],
+            devices,
             cutoff: args.get_usize("pool-cutoff", 1 << 20)?,
             tasks_per_device: 2,
         })

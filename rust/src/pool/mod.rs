@@ -29,6 +29,12 @@
 //! ([`crate::reduce::plan::Planner`]); pool depth / steal counters
 //! surface in [`crate::coordinator::metrics`]. The device-count
 //! scaling table lives in [`crate::harness::pool_scaling`].
+//!
+//! Host-side work on this path is spawn-free: the f64 embedding in
+//! [`DevicePool::reduce_elems`] runs on the persistent host runtime
+//! ([`crate::reduce::persistent`]); the per-shard partial combine
+//! stays serial by design — it is O(shards), and shard order must be
+//! preserved for deterministic (compensated) float sums.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
@@ -287,8 +293,12 @@ impl DevicePool {
     /// the simulator's f64 domain (lossless for f32/i32), reduces, and
     /// maps the value back. The embedded vector is handed to the pool
     /// by ownership — no second copy on the request path.
+    ///
+    /// The embedding — the host-side hot loop of this path — runs as
+    /// one chunk-claiming pass over the persistent host runtime
+    /// ([`crate::reduce::persistent`]) instead of a serial copy.
     pub fn reduce_elems<T: Element>(&self, data: &[T], op: Op) -> Result<(T, PoolOutcome)> {
-        let embedded: Vec<f64> = data.iter().map(|&x| x.to_f64()).collect();
+        let embedded: Vec<f64> = crate::reduce::persistent::global().map_f64(data);
         let plan = self.plan(embedded.len());
         let out = self.reduce_shared(Arc::new(embedded), CombOp::from(op), &plan)?;
         Ok((T::from_f64(out.value), out))

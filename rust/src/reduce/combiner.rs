@@ -1,0 +1,149 @@
+//! Op-monomorphized combiners: compile-time [`Op`] selection.
+//!
+//! [`Element::combine`] takes the operator as a *runtime* value, so a
+//! naive hot loop re-dispatches `match op` on every element — which
+//! blocks clean vectorization of min/max and pessimizes sum/prod on
+//! conservative optimizers. A [`Combiner`] carries the operator as an
+//! associated **constant** instead: `C::combine(a, b)` inlines
+//! `T::combine(C::OP, a, b)` where `C::OP` is known at
+//! monomorphization time, so the per-element `match` constant-folds
+//! away and the inner loop of [`super::simd`] compiles to straight
+//! vector code per (op, dtype) pair.
+//!
+//! The dynamic [`Op`] API everywhere else in the crate is preserved:
+//! [`dispatch_op!`](crate::dispatch_op) performs the *single* runtime
+//! `match` at the call boundary and hands the matching combiner type
+//! to a generic body.
+
+use super::op::{Element, Op};
+
+/// A reduction operator fixed at compile time.
+///
+/// Implementors are zero-sized tags; all behaviour routes through
+/// [`Element`] with the constant operator, so every `T: Element`
+/// automatically works with every combiner.
+pub trait Combiner: Copy + Send + Sync + 'static {
+    /// The operator this combiner monomorphizes.
+    const OP: Op;
+
+    /// Identity element of `OP` for `T` (constant-folded).
+    #[inline(always)]
+    fn identity<T: Element>() -> T {
+        T::identity(Self::OP)
+    }
+
+    /// Combine two elements; the `match` inside [`Element::combine`]
+    /// resolves at compile time because `Self::OP` is a constant.
+    #[inline(always)]
+    fn combine<T: Element>(a: T, b: T) -> T {
+        T::combine(Self::OP, a, b)
+    }
+}
+
+/// `+` — identity 0.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SumC;
+
+/// `×` — identity 1.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ProdC;
+
+/// `max` — identity −inf / `INT_MIN`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MaxC;
+
+/// `min` — identity +inf / `INT_MAX`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MinC;
+
+impl Combiner for SumC {
+    const OP: Op = Op::Sum;
+}
+impl Combiner for ProdC {
+    const OP: Op = Op::Prod;
+}
+impl Combiner for MaxC {
+    const OP: Op = Op::Max;
+}
+impl Combiner for MinC {
+    const OP: Op = Op::Min;
+}
+
+/// Dispatch a runtime [`Op`] to the matching [`Combiner`] type.
+///
+/// `dispatch_op!(op, C => expr)` expands to one `match` whose arms
+/// bind the type alias `C` to the combiner for that arm and evaluate
+/// `expr` — the one place the runtime operator is inspected.
+///
+/// ```
+/// use parred::dispatch_op;
+/// use parred::reduce::{combiner::Combiner, Element, Op};
+///
+/// fn fold<T: Element>(data: &[T], op: Op) -> T {
+///     dispatch_op!(op, C => {
+///         let mut acc = C::identity::<T>();
+///         for &x in data {
+///             acc = C::combine(acc, x); // no per-element match
+///         }
+///         acc
+///     })
+/// }
+/// assert_eq!(fold(&[1i32, 2, 3], Op::Sum), 6);
+/// assert_eq!(fold(&[1i32, 2, 3], Op::Max), 3);
+/// ```
+#[macro_export]
+macro_rules! dispatch_op {
+    ($op:expr, $C:ident => $body:expr) => {
+        match $op {
+            $crate::reduce::op::Op::Sum => {
+                type $C = $crate::reduce::combiner::SumC;
+                $body
+            }
+            $crate::reduce::op::Op::Prod => {
+                type $C = $crate::reduce::combiner::ProdC;
+                $body
+            }
+            $crate::reduce::op::Op::Max => {
+                type $C = $crate::reduce::combiner::MaxC;
+                $body
+            }
+            $crate::reduce::op::Op::Min => {
+                type $C = $crate::reduce::combiner::MinC;
+                $body
+            }
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constants_match_ops() {
+        assert_eq!(SumC::OP, Op::Sum);
+        assert_eq!(ProdC::OP, Op::Prod);
+        assert_eq!(MaxC::OP, Op::Max);
+        assert_eq!(MinC::OP, Op::Min);
+    }
+
+    #[test]
+    fn combine_and_identity_agree_with_element() {
+        for x in [-3.5f32, 0.0, 7.25] {
+            assert_eq!(SumC::combine(SumC::identity::<f32>(), x), x);
+            assert_eq!(ProdC::combine(ProdC::identity::<f32>(), x), x);
+            assert_eq!(MaxC::combine(MaxC::identity::<f32>(), x), x);
+            assert_eq!(MinC::combine(MinC::identity::<f32>(), x), x);
+        }
+        assert_eq!(SumC::combine(2i32, 3), 5);
+        assert_eq!(MinC::combine(2i32, 3), 2);
+    }
+
+    #[test]
+    fn dispatch_covers_all_ops() {
+        for op in Op::ALL {
+            let got: Op = dispatch_op!(op, C => C::OP);
+            assert_eq!(got, op);
+        }
+    }
+}

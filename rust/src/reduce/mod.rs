@@ -1,11 +1,13 @@
 //! Host-side reduction library and CPU baselines.
 //!
 //! This module is the crate's *algorithmic* core on the host: the
-//! combiner catalog ([`Op`]), a sequential oracle ([`scalar`]),
-//! compensated summation ([`kahan`]), a two-stage multithreaded
-//! reduction mirroring the paper's structure on CPU cores
-//! ([`threaded`]), an unrolled/auto-vectorizable hot loop ([`simd`])
-//! and a size-based strategy planner ([`plan`]).
+//! combiner catalog ([`Op`]) with its op-monomorphized compile-time
+//! twin ([`combiner`]), a sequential oracle ([`scalar`]),
+//! compensated summation ([`kahan`]), a spawn-once persistent-threads
+//! runtime mirroring the paper's §2.5 on CPU cores ([`persistent`],
+//! fronted by the [`threaded`] compatibility shims), an
+//! unrolled/auto-vectorizable hot loop ([`simd`]) and a size-based
+//! strategy planner ([`plan`]).
 //!
 //! These serve three roles:
 //! 1. baselines for the benchmark harness (the paper compares GPU
@@ -15,8 +17,10 @@
 //! 3. the fallback execution path of the [`crate::coordinator`] when a
 //!    request has no matching AOT artifact.
 
+pub mod combiner;
 pub mod kahan;
 pub mod op;
+pub mod persistent;
 pub mod plan;
 pub mod scalar;
 pub mod simd;

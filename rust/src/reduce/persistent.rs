@@ -1,0 +1,645 @@
+//! Persistent-threads host runtime (paper §2.5 mapped to CPU cores).
+//!
+//! The paper's core speedup comes from *persistent threads*: launch
+//! enough work-groups to fill the machine **once**, then keep them
+//! fed, instead of paying launch overhead per pass. The host serving
+//! path used to do the opposite — [`super::threaded`] called
+//! `std::thread::spawn` on every request. This module is the fix:
+//!
+//! * [`PersistentPool`] spawns its workers once; between jobs they
+//!   park on a condvar (no busy-wait, no OS thread churn);
+//! * work distribution is **atomic chunk claiming**: a job is split
+//!   into chunks and every participant (the submitting thread
+//!   included) claims chunk indices off a shared atomic cursor until
+//!   the job is drained — the CPU analogue of the paper's persistent
+//!   work-group loop, and self-balancing the way the device pool's
+//!   work stealing is;
+//! * chunking is scheduling-aware (after Prajapati, *Scheduling and
+//!   Tiling Reductions on Realistic Machines*): chunk count is the
+//!   requested width × a small oversubscription factor, floored so no
+//!   chunk drops below [`MIN_CHUNK_ELEMS`] — fine enough to absorb
+//!   imbalance, coarse enough that the claim traffic stays noise;
+//! * the hot loop per chunk is the op-monomorphized
+//!   [`super::simd::reduce`] (see [`super::combiner`]), so no
+//!   per-element dispatch survives anywhere on the path;
+//! * shutdown is graceful: dropping the pool parks no new jobs, wakes
+//!   every worker and joins them.
+//!
+//! A process-wide instance lives behind [`global()`] (sized by
+//! [`configure_global_workers`] / `parred --host-workers` before
+//! first use); [`super::threaded`] and the coordinator's fused host
+//! batches run on it.
+//!
+//! # Safety model
+//!
+//! Jobs borrow caller data (`&[T]`) but workers are `'static`, so the
+//! job closure crosses the pool as a type-erased raw pointer. The
+//! invariant making that sound: [`PersistentPool::run`] does not
+//! return until every chunk has completed, and a worker only
+//! dereferences the closure after claiming a chunk index `< chunks` —
+//! once all chunks are complete the cursor can only yield exhausted
+//! indices, so a late-waking worker never touches the (by then
+//! possibly dangling) pointer. Panics inside a chunk closure are
+//! caught on whichever thread ran the chunk (the chunk still counts
+//! as completed, so the invariant holds), recorded on the job, and
+//! re-raised on the submitting thread after the job drains — workers
+//! survive, later jobs run normally, and the spawn-path behaviour
+//! (panics propagate to the caller) is preserved.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock, PoisonError};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::op::{Element, Op};
+use super::simd;
+
+/// Below this many elements per chunk, claim overhead stops
+/// amortizing; the chunker never cuts finer (tuned with
+/// `benches/hotpath.rs`, same order as the planner's `seq_cutoff`).
+pub const MIN_CHUNK_ELEMS: usize = 8192;
+
+/// Chunks per participant: slack for load balancing without
+/// meaningful claim traffic.
+const OVERSUB: usize = 2;
+
+/// Inputs smaller than this skip the pool entirely (the wake-up
+/// round-trip costs a few microseconds — more than the reduction).
+/// [`crate::reduce::plan::Planner`]'s `seq_cutoff` defaults to this
+/// value so the planner's ladder matches what actually executes.
+pub const SEQ_FALLBACK: usize = 2 * MIN_CHUNK_ELEMS;
+
+/// Poison-tolerant lock: a panic in one chunk closure must not wedge
+/// the pool for every later job (panics are reported separately).
+fn lock_ignore_poison<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// One in-flight job: a type-erased chunk function plus the claiming
+/// cursor, completion count and participation tickets.
+struct Job {
+    chunks: usize,
+    cursor: AtomicUsize,
+    completed: AtomicUsize,
+    /// Background workers allowed to claim chunks (the submitter is
+    /// always the final participant, so total width = this + 1).
+    max_workers: usize,
+    /// Participation tickets handed to workers (first `max_workers`
+    /// arrivals work, the rest go back to sleep).
+    worker_slots: AtomicUsize,
+    /// Set when any chunk closure panicked; re-raised by the
+    /// submitter once the job has drained.
+    panicked: AtomicBool,
+    /// Type-erased `&(dyn Fn(usize) + Sync)` whose real lifetime is
+    /// the `run` call; see the module-level safety model.
+    func: *const (dyn Fn(usize) + Sync),
+    done_lock: Mutex<()>,
+    done_cv: Condvar,
+}
+
+impl Job {
+    /// Run chunk `i`, counting it completed even on panic so the
+    /// submitter's completion wait can never wedge.
+    fn run_chunk(&self, i: usize, shared: &Shared) {
+        // SAFETY: a claimed index < chunks implies the submitter is
+        // still blocked in `run`, so the borrow behind `func` is live.
+        let f = unsafe { &*self.func };
+        if catch_unwind(AssertUnwindSafe(|| f(i))).is_err() {
+            self.panicked.store(true, Ordering::Relaxed);
+        }
+        shared.chunks_run.fetch_add(1, Ordering::Relaxed);
+        if self.completed.fetch_add(1, Ordering::AcqRel) + 1 == self.chunks {
+            let _g = lock_ignore_poison(&self.done_lock);
+            self.done_cv.notify_all();
+        }
+    }
+}
+
+// SAFETY: `func` is only dereferenced under the module's safety
+// invariant (chunk index < chunks implies the borrow is still live);
+// all other fields are Sync primitives.
+unsafe impl Send for Job {}
+unsafe impl Sync for Job {}
+
+/// Pool state shared with the workers.
+struct Shared {
+    /// (epoch, current job): bumping the epoch is the wake signal.
+    slot: Mutex<(u64, Option<Arc<Job>>)>,
+    go: Condvar,
+    shutdown: AtomicBool,
+    // Lifetime counters (surfaced via coordinator metrics).
+    jobs: AtomicU64,
+    chunks_run: AtomicU64,
+    peak_chunks: AtomicU64,
+}
+
+/// Counters snapshot (see [`PersistentPool::counters`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PersistentCounters {
+    /// Background worker threads (parallel width is `workers + 1`:
+    /// the submitting thread claims chunks too).
+    pub workers: u64,
+    /// Jobs submitted over the pool's lifetime.
+    pub jobs: u64,
+    /// Chunks executed over the pool's lifetime.
+    pub chunks: u64,
+    /// Largest single-job chunk count seen (work-queue depth peak).
+    pub peak_chunks: u64,
+}
+
+/// A spawn-once worker pool executing chunk-claiming jobs.
+pub struct PersistentPool {
+    shared: Arc<Shared>,
+    /// Serializes job submission (one job in flight per pool).
+    submit: Mutex<()>,
+    workers: usize,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl PersistentPool {
+    /// Spawn `workers` background threads (0 is allowed: every job
+    /// then runs inline on the submitting thread).
+    pub fn new(workers: usize) -> PersistentPool {
+        let shared = Arc::new(Shared {
+            slot: Mutex::new((0, None)),
+            go: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            jobs: AtomicU64::new(0),
+            chunks_run: AtomicU64::new(0),
+            peak_chunks: AtomicU64::new(0),
+        });
+        let handles = (0..workers)
+            .map(|i| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("parred-host-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawning persistent host worker")
+            })
+            .collect();
+        PersistentPool { shared, submit: Mutex::new(()), workers, handles }
+    }
+
+    /// Background worker threads (see [`Self::width`]).
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Maximum parallel width: workers plus the submitting thread.
+    pub fn width(&self) -> usize {
+        self.workers + 1
+    }
+
+    /// Lifetime counters.
+    pub fn counters(&self) -> PersistentCounters {
+        PersistentCounters {
+            workers: self.workers as u64,
+            jobs: self.shared.jobs.load(Ordering::Relaxed),
+            chunks: self.shared.chunks_run.load(Ordering::Relaxed),
+            peak_chunks: self.shared.peak_chunks.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Run `f(chunk_index)` for every index in `0..chunks` across the
+    /// pool at full width, blocking until all chunks completed. The
+    /// submitting thread participates in chunk claiming, so this works
+    /// (serially) even on a pool with zero workers.
+    ///
+    /// Panics if any chunk closure panicked (after the job drained —
+    /// the pool itself stays usable).
+    pub fn run(&self, chunks: usize, f: &(dyn Fn(usize) + Sync)) {
+        self.run_width(chunks, self.width(), f);
+    }
+
+    /// Like [`Self::run`], but with at most `width` concurrent
+    /// participants (submitter + up to `width - 1` workers): workers
+    /// beyond the width find no participation ticket and go back to
+    /// sleep, so a caller-configured width is a real bound even
+    /// though chunking oversubscribes for balance.
+    pub fn run_width(&self, chunks: usize, width: usize, f: &(dyn Fn(usize) + Sync)) {
+        if chunks == 0 {
+            return;
+        }
+        let max_workers = width.clamp(1, self.width()) - 1;
+        let _guard = lock_ignore_poison(&self.submit);
+        // SAFETY: erases the borrow's lifetime; `run_width` blocks
+        // until every chunk completes, after which no worker can claim
+        // an index that would dereference `func` (module safety model).
+        let func: *const (dyn Fn(usize) + Sync) =
+            unsafe { std::mem::transmute::<&(dyn Fn(usize) + Sync), _>(f) };
+        let job = Arc::new(Job {
+            chunks,
+            cursor: AtomicUsize::new(0),
+            completed: AtomicUsize::new(0),
+            max_workers,
+            worker_slots: AtomicUsize::new(0),
+            panicked: AtomicBool::new(false),
+            func,
+            done_lock: Mutex::new(()),
+            done_cv: Condvar::new(),
+        });
+        self.shared.jobs.fetch_add(1, Ordering::Relaxed);
+        self.shared.peak_chunks.fetch_max(chunks as u64, Ordering::Relaxed);
+        if self.workers > 0 && max_workers > 0 {
+            let mut slot = lock_ignore_poison(&self.shared.slot);
+            slot.0 = slot.0.wrapping_add(1);
+            slot.1 = Some(job.clone());
+            drop(slot);
+            self.shared.go.notify_all();
+        }
+        // The submitter claims chunks like any worker.
+        loop {
+            let i = job.cursor.fetch_add(1, Ordering::Relaxed);
+            if i >= chunks {
+                break;
+            }
+            job.run_chunk(i, &self.shared);
+        }
+        // Wait for straggler workers still finishing claimed chunks.
+        // The timeout is belt-and-braces against a lost wakeup; the
+        // loop re-checks the atomic either way.
+        let mut done = lock_ignore_poison(&job.done_lock);
+        while job.completed.load(Ordering::Acquire) < chunks {
+            let (g, _) = job
+                .done_cv
+                .wait_timeout(done, Duration::from_millis(10))
+                .unwrap_or_else(PoisonError::into_inner);
+            done = g;
+        }
+        drop(done);
+        if job.panicked.load(Ordering::Relaxed) {
+            panic!("persistent-pool job: a chunk closure panicked");
+        }
+    }
+
+    /// Scheduling-aware chunk count for `n` elements at `width`
+    /// parallel participants.
+    fn chunk_count(n: usize, width: usize) -> usize {
+        let max_by_size = n.div_ceil(MIN_CHUNK_ELEMS).max(1);
+        (width * OVERSUB).clamp(1, max_by_size)
+    }
+
+    /// Reduce `data` at the pool's full width.
+    pub fn reduce<T: Element>(&self, data: &[T], op: Op) -> T {
+        self.reduce_width(data, op, self.width())
+    }
+
+    /// Reduce `data` with at most `width` parallel participants.
+    ///
+    /// Deterministic for a given `(n, width)`: chunk boundaries are
+    /// fixed and partials combine in chunk order, so integer results
+    /// are bit-identical to [`super::scalar::reduce`] and float
+    /// results are independent of worker scheduling.
+    pub fn reduce_width<T: Element>(&self, data: &[T], op: Op, width: usize) -> T {
+        let width = width.clamp(1, self.width());
+        if width == 1 || data.len() < SEQ_FALLBACK {
+            return simd::reduce(data, op);
+        }
+        let chunks = Self::chunk_count(data.len(), width);
+        if chunks == 1 {
+            return simd::reduce(data, op);
+        }
+        let chunk_len = data.len().div_ceil(chunks);
+        let partials: Vec<Mutex<T>> =
+            (0..chunks).map(|_| Mutex::new(T::identity(op))).collect();
+        self.run_width(chunks, width, &|i| {
+            let start = (i * chunk_len).min(data.len());
+            let end = (start + chunk_len).min(data.len());
+            let v = simd::reduce(&data[start..end], op);
+            *lock_ignore_poison(&partials[i]) = v;
+        });
+        let vals: Vec<T> = partials.iter().map(|m| *lock_ignore_poison(m)).collect();
+        simd::reduce(&vals, op)
+    }
+
+    /// Row-wise reduction of a `rows × cols` matrix (flat, row-major)
+    /// at the pool's full width — the fused batched pass the
+    /// coordinator's RedFuser-style batcher executes.
+    pub fn reduce_rows<T: Element>(&self, data: &[T], cols: usize, op: Op) -> Vec<T> {
+        self.reduce_rows_width(data, cols, op, self.width())
+    }
+
+    /// Row-wise reduction with at most `width` parallel participants.
+    /// Chunks are contiguous row groups; output order is row order.
+    pub fn reduce_rows_width<T: Element>(
+        &self,
+        data: &[T],
+        cols: usize,
+        op: Op,
+        width: usize,
+    ) -> Vec<T> {
+        assert!(cols > 0, "cols must be positive");
+        assert_eq!(data.len() % cols, 0, "data not a whole number of rows");
+        let rows = data.len() / cols;
+        let width = width.clamp(1, self.width());
+        if rows == 0 {
+            return Vec::new();
+        }
+        if width == 1 || rows == 1 || data.len() < SEQ_FALLBACK {
+            return data.chunks(cols).map(|r| simd::reduce(r, op)).collect();
+        }
+        let groups = Self::chunk_count(data.len(), width).min(rows);
+        let per = rows.div_ceil(groups);
+        let out: Vec<Mutex<Vec<T>>> = (0..groups).map(|_| Mutex::new(Vec::new())).collect();
+        self.run_width(groups, width, &|g| {
+            let r0 = (g * per).min(rows);
+            let r1 = ((g + 1) * per).min(rows);
+            let mut vals = Vec::with_capacity(r1 - r0);
+            for r in r0..r1 {
+                vals.push(simd::reduce(&data[r * cols..(r + 1) * cols], op));
+            }
+            *lock_ignore_poison(&out[g]) = vals;
+        });
+        let mut result = Vec::with_capacity(rows);
+        for m in &out {
+            result.append(&mut lock_ignore_poison(m));
+        }
+        result
+    }
+
+    /// Parallel lossless embedding into the simulator's f64 domain
+    /// (the host-side cost of handing a payload to the device pool).
+    pub fn map_f64<T: Element>(&self, data: &[T]) -> Vec<f64> {
+        let n = data.len();
+        if self.workers == 0 || n < SEQ_FALLBACK {
+            return data.iter().map(|&x| x.to_f64()).collect();
+        }
+        let chunks = Self::chunk_count(n, self.width());
+        let chunk_len = n.div_ceil(chunks);
+        let mut out = vec![0.0f64; n];
+        let dst = SendPtr(out.as_mut_ptr());
+        self.run(chunks, &|i| {
+            let start = (i * chunk_len).min(n);
+            let end = (start + chunk_len).min(n);
+            // SAFETY: chunk ranges are disjoint and in-bounds; `out`
+            // outlives `run`, which blocks until every chunk is done.
+            unsafe {
+                let base = dst.0.add(start);
+                for (j, &x) in data[start..end].iter().enumerate() {
+                    *base.add(j) = x.to_f64();
+                }
+            }
+        });
+        out
+    }
+}
+
+impl Drop for PersistentPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Relaxed);
+        {
+            // Take the slot lock so parked workers observe the flag.
+            let _slot = lock_ignore_poison(&self.shared.slot);
+        }
+        self.shared.go.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Raw-pointer wrapper so a chunk closure can write disjoint output
+/// ranges without a lock.
+struct SendPtr(*mut f64);
+// SAFETY: only used for writes to provably disjoint ranges.
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+fn worker_loop(shared: &Shared) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut slot = lock_ignore_poison(&shared.slot);
+            loop {
+                if shared.shutdown.load(Ordering::Relaxed) {
+                    return;
+                }
+                if slot.0 != seen {
+                    seen = slot.0;
+                    break slot.1.clone();
+                }
+                slot = shared.go.wait(slot).unwrap_or_else(PoisonError::into_inner);
+            }
+        };
+        let Some(job) = job else { continue };
+        // Honor the job's width: only the first `max_workers` arrivals
+        // get a participation ticket; the rest go back to sleep.
+        if job.worker_slots.fetch_add(1, Ordering::Relaxed) >= job.max_workers {
+            continue;
+        }
+        loop {
+            let i = job.cursor.fetch_add(1, Ordering::Relaxed);
+            if i >= job.chunks {
+                break;
+            }
+            job.run_chunk(i, shared);
+        }
+    }
+}
+
+// ---------------------------------------------------------------
+// Process-wide runtime.
+// ---------------------------------------------------------------
+
+static GLOBAL: OnceLock<PersistentPool> = OnceLock::new();
+/// Requested size + 1; 0 means "not configured" (so an explicit
+/// request for zero background workers is distinguishable).
+static REQUESTED_WORKERS: AtomicUsize = AtomicUsize::new(0);
+
+/// Default background worker count: one per available core, minus the
+/// submitting thread, capped so tiny machines still get one worker.
+fn default_workers() -> usize {
+    let cores = std::thread::available_parallelism().map_or(4, |n| n.get());
+    cores.saturating_sub(1).max(1)
+}
+
+/// Size the process-wide pool (`parred --host-workers N`; `N == 0`
+/// requests the inline, zero-background-worker runtime). Must be
+/// called before the first [`global()`] use; afterwards it has no
+/// effect (the pool is spawn-once by design) and returns `false`.
+pub fn configure_global_workers(workers: usize) -> bool {
+    REQUESTED_WORKERS.store(workers + 1, Ordering::Relaxed);
+    GLOBAL.get().is_none()
+}
+
+/// The process-wide persistent pool (spawned on first use).
+pub fn global() -> &'static PersistentPool {
+    GLOBAL.get_or_init(|| {
+        let requested = REQUESTED_WORKERS.load(Ordering::Relaxed);
+        PersistentPool::new(match requested {
+            0 => default_workers(),
+            n => n - 1,
+        })
+    })
+}
+
+/// Counters of the global pool without forcing it to spawn.
+pub fn global_counters() -> Option<PersistentCounters> {
+    GLOBAL.get().map(|p| p.counters())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::reduce::scalar;
+
+    fn data(n: usize) -> Vec<i32> {
+        (0..n).map(|i| ((i * 2_654_435_761) % 999) as i32 - 499).collect()
+    }
+
+    #[test]
+    fn matches_scalar_across_worker_counts() {
+        let d = data(100_003);
+        for workers in [0usize, 1, 2, 3, 7] {
+            let pool = PersistentPool::new(workers);
+            for op in Op::ALL {
+                assert_eq!(pool.reduce(&d, op), scalar::reduce(&d, op), "w={workers} {op}");
+            }
+        }
+    }
+
+    #[test]
+    fn width_caps_and_tiny_inputs() {
+        let pool = PersistentPool::new(3);
+        for n in [0usize, 1, 2, 7, 8, 100, 4095] {
+            let d = data(n);
+            // widths beyond the pool and below 1 both clamp.
+            for width in [0usize, 1, 2, 99] {
+                assert_eq!(
+                    pool.reduce_width(&d, Op::Sum, width),
+                    scalar::reduce(&d, Op::Sum),
+                    "n={n} width={width}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn workers_exceed_chunks() {
+        // 16 workers, input small enough for very few chunks: late
+        // workers must park without corrupting anything.
+        let pool = PersistentPool::new(16);
+        let d = data(20_000);
+        for _ in 0..10 {
+            assert_eq!(pool.reduce(&d, Op::Sum), scalar::reduce(&d, Op::Sum));
+        }
+    }
+
+    #[test]
+    fn rows_match_scalar_and_preserve_order() {
+        let pool = PersistentPool::new(4);
+        let d = data(64 * 1024);
+        let got = pool.reduce_rows(&d, 1024, Op::Max);
+        let want: Vec<i32> = d.chunks(1024).map(|r| scalar::reduce(r, Op::Max)).collect();
+        assert_eq!(got, want);
+        // Wide-row case: rows < width.
+        let got = pool.reduce_rows(&d, 32 * 1024, Op::Sum);
+        let want: Vec<i32> = d.chunks(32 * 1024).map(|r| scalar::reduce(r, Op::Sum)).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    #[should_panic(expected = "whole number of rows")]
+    fn rows_reject_ragged() {
+        PersistentPool::new(1).reduce_rows(&data(10), 3, Op::Sum);
+    }
+
+    #[test]
+    fn map_f64_is_lossless_and_ordered() {
+        let pool = PersistentPool::new(3);
+        for n in [0usize, 5, 16_384, 50_001] {
+            let d = data(n);
+            let got = pool.map_f64(&d);
+            assert_eq!(got.len(), n);
+            for (i, (&x, &y)) in d.iter().zip(&got).enumerate() {
+                assert_eq!(y, x as f64, "index {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn counters_advance() {
+        let pool = PersistentPool::new(2);
+        let before = pool.counters();
+        assert_eq!(before.workers, 2);
+        let d = data(200_000);
+        pool.reduce(&d, Op::Sum);
+        let after = pool.counters();
+        assert_eq!(after.jobs, before.jobs + 1);
+        assert!(after.chunks > before.chunks);
+        assert!(after.peak_chunks >= 2);
+    }
+
+    #[test]
+    fn run_executes_every_chunk_exactly_once() {
+        let pool = PersistentPool::new(3);
+        let hits: Vec<AtomicUsize> = (0..37).map(|_| AtomicUsize::new(0)).collect();
+        pool.run(37, &|i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "chunk {i}");
+        }
+    }
+
+    #[test]
+    fn panicking_chunk_propagates_without_wedging_the_pool() {
+        let pool = PersistentPool::new(2);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(8, &|i| {
+                if i == 3 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(result.is_err(), "chunk panic must propagate to the submitter");
+        // The pool (workers included) must still be fully usable.
+        let d = data(100_000);
+        for _ in 0..3 {
+            assert_eq!(pool.reduce(&d, Op::Sum), scalar::reduce(&d, Op::Sum));
+        }
+    }
+
+    #[test]
+    fn run_width_one_stays_on_submitter() {
+        let pool = PersistentPool::new(4);
+        let me = std::thread::current().id();
+        let seen = Mutex::new(Vec::new());
+        pool.run_width(8, 1, &|_| {
+            lock_ignore_poison(&seen).push(std::thread::current().id());
+        });
+        let seen = seen.into_inner().unwrap();
+        assert_eq!(seen.len(), 8);
+        assert!(seen.iter().all(|&id| id == me), "width 1 must not wake workers");
+    }
+
+    #[test]
+    fn run_width_bounds_participants() {
+        let pool = PersistentPool::new(8);
+        let seen = Mutex::new(std::collections::HashSet::new());
+        pool.run_width(32, 2, &|_| {
+            lock_ignore_poison(&seen).insert(std::thread::current().id());
+            std::thread::yield_now();
+        });
+        let distinct = seen.into_inner().unwrap().len();
+        assert!(distinct <= 2, "width 2 ran on {distinct} threads");
+    }
+
+    #[test]
+    fn sequential_global_configuration_is_sticky_after_init() {
+        // Whatever the configured size, the global pool reduces
+        // correctly and configure after init reports false.
+        let d = data(50_000);
+        assert_eq!(global().reduce(&d, Op::Sum), scalar::reduce(&d, Op::Sum));
+        assert!(!configure_global_workers(2), "global already initialized");
+    }
+
+    #[test]
+    fn graceful_shutdown_joins_workers() {
+        let pool = PersistentPool::new(4);
+        let d = data(300_000);
+        let _ = pool.reduce(&d, Op::Sum);
+        drop(pool); // must not hang or panic
+    }
+}

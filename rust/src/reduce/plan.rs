@@ -23,11 +23,24 @@ pub enum Strategy {
 }
 
 /// Thresholds, tuned by the `hotpath` and `pool` benches (§Perf).
+///
+/// The threaded path runs on the spawn-once persistent runtime
+/// ([`crate::reduce::persistent`]) since the persistent-threads PR:
+/// with per-call spawn overhead gone, the knee where full-width
+/// threading pays moved from the old `2^18` down to `~2^15`
+/// (re-tune from `benches/hotpath.rs`, which sweeps both paths over
+/// `2^12..2^24` and records the crossover in `BENCH_hotpath.json`).
 #[derive(Debug, Clone)]
 pub struct Planner {
-    /// Below this, stay sequential.
+    /// Below this, stay sequential — a pool wake-up costs a few
+    /// microseconds, more than the whole reduction down here.
+    /// Defaults to [`crate::reduce::persistent::SEQ_FALLBACK`] (the
+    /// persistent runtime's own sequential floor), so the planner's
+    /// ladder reflects what the runtime actually executes; setting it
+    /// lower has no effect because the runtime enforces its floor.
     pub seq_cutoff: usize,
-    /// Below this, threads don't pay for themselves.
+    /// Below this, full-width fan-out doesn't pay for itself yet; a
+    /// width-2 pass bridges the band above `seq_cutoff`.
     pub thread_cutoff: usize,
     /// Available worker threads.
     pub workers: usize,
@@ -45,8 +58,8 @@ pub struct Planner {
 impl Default for Planner {
     fn default() -> Self {
         Planner {
-            seq_cutoff: 4096,
-            thread_cutoff: 262_144,
+            seq_cutoff: super::persistent::SEQ_FALLBACK,
+            thread_cutoff: 32_768,
             workers: std::thread::available_parallelism().map_or(4, |n| n.get()),
             artifacts_available: false,
             pool_devices: 0,
@@ -125,15 +138,28 @@ mod tests {
         let p = Planner::default();
         assert_eq!(p.choose(10, false), Strategy::Sequential);
         assert_eq!(p.choose(4095, true), Strategy::Sequential);
+        // The default cutoff mirrors the persistent runtime's own
+        // sequential floor, so the ladder matches what executes.
+        assert_eq!(p.seq_cutoff, crate::reduce::persistent::SEQ_FALLBACK);
+        assert_eq!(p.choose(p.seq_cutoff - 1, false), Strategy::Sequential);
     }
 
     #[test]
     fn medium_gets_few_threads() {
         let p = Planner::default();
-        match p.choose(100_000, false) {
+        match p.choose(20_000, false) {
             Strategy::Threaded(t) => assert!(t >= 1 && t <= 2),
             s => panic!("expected threaded, got {s:?}"),
         }
+    }
+
+    #[test]
+    fn persistent_knee_uses_full_width_earlier() {
+        // With the spawn-once runtime the full-width knee sits at
+        // 2^15, far below the old spawn-per-call 2^18 cutoff.
+        let p = Planner { workers: 8, ..Planner::default() };
+        assert_eq!(p.choose(1 << 15, false), Strategy::Threaded(8));
+        assert_eq!(p.choose(100_000, false), Strategy::Threaded(8));
     }
 
     #[test]

@@ -5,51 +5,83 @@
 //! dependence chain so LLVM can keep `LANES` vector registers in
 //! flight — the same reasoning the paper applies to GPU work-items.
 //! Used as the single-core roofline baseline in the benches.
+//!
+//! The hot loops are monomorphized per operator via
+//! [`Combiner`](super::combiner::Combiner): the inner loop carries no
+//! per-element `match` on [`Op`] — the dynamic-op entry points
+//! ([`reduce`], [`reduce_unroll`]) are thin
+//! [`dispatch_op!`](crate::dispatch_op) shims over the `_mono`
+//! variants.
 
+use super::combiner::Combiner;
 use super::op::{Element, Op};
 
 /// Number of independent accumulators (the host "unroll factor F").
 pub const LANES: usize = 8;
 
 /// Reduce with `LANES` independent accumulators, then tree-combine.
+///
+/// Thin dispatch shim over [`reduce_mono`]; the operator `match`
+/// happens once here, not per element.
 pub fn reduce<T: Element>(data: &[T], op: Op) -> T {
-    let mut acc = [T::identity(op); LANES];
+    crate::dispatch_op!(op, C => reduce_mono::<T, C>(data))
+}
+
+/// Op-monomorphized core of [`reduce`]: `C` fixes the operator at
+/// compile time, so the accumulate below is a straight vectorizable
+/// loop for every (op, dtype) pair.
+pub fn reduce_mono<T: Element, C: Combiner>(data: &[T]) -> T {
+    let mut acc = [C::identity::<T>(); LANES];
     let chunks = data.chunks_exact(LANES);
     let tail = chunks.remainder();
     for chunk in chunks {
         // Fully unrolled: fixed trip count of LANES.
         for (a, &x) in acc.iter_mut().zip(chunk) {
-            *a = T::combine(op, *a, x);
+            *a = C::combine(*a, x);
         }
     }
-    let mut total = T::identity(op);
+    let mut total = C::identity::<T>();
     for a in acc {
-        total = T::combine(op, total, a);
+        total = C::combine(total, a);
     }
     for &x in tail {
-        total = T::combine(op, total, x);
+        total = C::combine(total, x);
     }
     total
 }
 
-/// Reduce with a caller-chosen unroll factor (1..=16); used by the
-/// ablation bench to show the host-side analogue of paper Table 2.
-pub fn reduce_unroll<T: Element>(data: &[T], op: Op, f: usize) -> T {
+/// Reduce with a caller-chosen unroll factor; used by the ablation
+/// bench to show the host-side analogue of paper Table 2.
+///
+/// The factor is clamped to `1..=16`; the *effective* factor actually
+/// run is returned alongside the value so the ablation harness can
+/// label its rows with the factor that really executed (the clamp
+/// used to be silent, mislabeling Table-2-style rows).
+pub fn reduce_unroll<T: Element>(data: &[T], op: Op, f: usize) -> (T, usize) {
+    let eff = f.clamp(1, 16);
+    let value = crate::dispatch_op!(op, C => reduce_unroll_mono::<T, C>(data, eff));
+    (value, eff)
+}
+
+/// Op-monomorphized core of [`reduce_unroll`]. `f` must already be a
+/// sane factor (callers go through [`reduce_unroll`], which clamps and
+/// reports); out-of-range values are clamped defensively.
+pub fn reduce_unroll_mono<T: Element, C: Combiner>(data: &[T], f: usize) -> T {
     let f = f.clamp(1, 16);
-    let mut acc = vec![T::identity(op); f];
+    let mut acc = vec![C::identity::<T>(); f];
     let chunks = data.chunks_exact(f);
     let tail = chunks.remainder();
     for chunk in chunks {
         for (a, &x) in acc.iter_mut().zip(chunk) {
-            *a = T::combine(op, *a, x);
+            *a = C::combine(*a, x);
         }
     }
-    let mut total = T::identity(op);
+    let mut total = C::identity::<T>();
     for a in acc {
-        total = T::combine(op, total, a);
+        total = C::combine(total, a);
     }
     for &x in tail {
-        total = T::combine(op, total, x);
+        total = C::combine(total, x);
     }
     total
 }
@@ -57,6 +89,7 @@ pub fn reduce_unroll<T: Element>(data: &[T], op: Op, f: usize) -> T {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::reduce::combiner::{MaxC, SumC};
     use crate::reduce::scalar;
 
     fn data_i32(n: usize) -> Vec<i32> {
@@ -74,6 +107,14 @@ mod tests {
     }
 
     #[test]
+    fn mono_agrees_with_dispatch_shim() {
+        let d = data_i32(10_007);
+        assert_eq!(reduce_mono::<i32, SumC>(&d), reduce(&d, Op::Sum));
+        assert_eq!(reduce_mono::<i32, MaxC>(&d), reduce(&d, Op::Max));
+        assert_eq!(reduce_unroll_mono::<i32, SumC>(&d, 4), reduce_unroll(&d, Op::Sum, 4).0);
+    }
+
+    #[test]
     fn matches_scalar_f32_sum_tolerance() {
         let d: Vec<f32> = data_i32(100_003).iter().map(|&x| x as f32 * 1e-2).collect();
         let a = reduce(&d, Op::Sum);
@@ -86,14 +127,19 @@ mod tests {
         let d = data_i32(10_007);
         let want = scalar::reduce(&d, Op::Sum);
         for f in [1, 2, 3, 4, 5, 6, 7, 8, 16] {
-            assert_eq!(reduce_unroll(&d, Op::Sum, f), want, "f={f}");
+            let (got, eff) = reduce_unroll(&d, Op::Sum, f);
+            assert_eq!(got, want, "f={f}");
+            assert_eq!(eff, f, "in-range factors run as requested");
         }
     }
 
     #[test]
-    fn clamps_silly_factors() {
+    fn clamps_silly_factors_and_reports_effective() {
         let d = data_i32(100);
-        assert_eq!(reduce_unroll(&d, Op::Sum, 0), scalar::reduce(&d, Op::Sum));
-        assert_eq!(reduce_unroll(&d, Op::Sum, 999), scalar::reduce(&d, Op::Sum));
+        let want = scalar::reduce(&d, Op::Sum);
+        let (v0, e0) = reduce_unroll(&d, Op::Sum, 0);
+        assert_eq!((v0, e0), (want, 1), "f=0 clamps to 1");
+        let (v999, e999) = reduce_unroll(&d, Op::Sum, 999);
+        assert_eq!((v999, e999), (want, 16), "f=999 clamps to 16");
     }
 }

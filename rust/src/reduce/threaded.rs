@@ -1,16 +1,42 @@
 //! Two-stage multithreaded reduction — Catanzaro's structure (paper
-//! §2.3) mapped to CPU cores: stage 1 gives each "work-group" (thread)
-//! a contiguous chunk it reduces privately (with the unrolled hot loop
-//! from [`super::simd`]); stage 2 combines the per-thread partials.
+//! §2.3) mapped to CPU cores: stage 1 gives each "work-group" a
+//! contiguous chunk it reduces privately (with the op-monomorphized
+//! unrolled hot loop from [`super::simd`]); stage 2 combines the
+//! per-worker partials.
+//!
+//! Since the persistent-runtime PR these entry points are thin shims
+//! over the process-wide [`super::persistent`] pool (spawn-once,
+//! park/unpark, atomic chunk claiming): the `threads` argument is the
+//! *width* hint, not a spawn count. The old spawn-per-call versions
+//! survive as [`spawn_reduce`]/[`spawn_reduce_rows`] — they are the
+//! baseline `benches/hotpath.rs` uses to quantify what persistence
+//! buys (the paper's §2.5 argument, measured on the host).
 
 use super::op::{Element, Op};
-use super::simd;
+use super::{persistent, simd};
 
-/// Reduce `data` across `threads` OS threads (two-stage).
+/// Reduce `data` with up to `threads` parallel participants of the
+/// persistent runtime (two-stage; no threads are spawned).
 ///
 /// `threads == 0` or `1`, or small inputs, fall back to the unrolled
 /// sequential loop — the planner's job, inlined here for safety.
 pub fn reduce<T: Element>(data: &[T], op: Op, threads: usize) -> T {
+    persistent::global().reduce_width(data, op, threads.max(1))
+}
+
+/// Row-wise reduction of a `rows x cols` matrix (flat, row-major) on
+/// the persistent runtime: the host analogue of the batched PJRT
+/// artifact, and the execution engine of the coordinator's fused
+/// host batches.
+pub fn reduce_rows<T: Element>(data: &[T], cols: usize, op: Op, threads: usize) -> Vec<T> {
+    persistent::global().reduce_rows_width(data, cols, op, threads.max(1))
+}
+
+/// Legacy spawn-per-call two-stage reduction (`std::thread::scope` +
+/// `spawn` on every invocation). Kept **only** as the benchmark
+/// baseline for the persistent runtime; production paths must use
+/// [`reduce`].
+pub fn spawn_reduce<T: Element>(data: &[T], op: Op, threads: usize) -> T {
     let threads = threads.max(1);
     if threads == 1 || data.len() < 4096 {
         return simd::reduce(data, op);
@@ -28,9 +54,9 @@ pub fn reduce<T: Element>(data: &[T], op: Op, threads: usize) -> T {
     simd::reduce(&partials, op)
 }
 
-/// Row-wise reduction of a `rows x cols` matrix (flat, row-major):
-/// the host analogue of the batched PJRT artifact.
-pub fn reduce_rows<T: Element>(data: &[T], cols: usize, op: Op, threads: usize) -> Vec<T> {
+/// Legacy spawn-per-call row reduction; bench baseline only (see
+/// [`spawn_reduce`]).
+pub fn spawn_reduce_rows<T: Element>(data: &[T], cols: usize, op: Op, threads: usize) -> Vec<T> {
     assert!(cols > 0, "cols must be positive");
     assert_eq!(data.len() % cols, 0, "data not a whole number of rows");
     let rows: Vec<&[T]> = data.chunks(cols).collect();
@@ -83,11 +109,20 @@ mod tests {
     }
 
     #[test]
+    fn persistent_agrees_with_spawn_baseline() {
+        let d = data(500_000);
+        for op in [Op::Sum, Op::Max, Op::Min] {
+            assert_eq!(reduce(&d, op, 4), spawn_reduce(&d, op, 4), "{op}");
+        }
+    }
+
+    #[test]
     fn rows_match_scalar() {
         let d = data(8 * 1000);
         let got = reduce_rows(&d, 1000, Op::Max, 4);
         let want: Vec<i32> = d.chunks(1000).map(|r| scalar::reduce(r, Op::Max)).collect();
         assert_eq!(got, want);
+        assert_eq!(spawn_reduce_rows(&d, 1000, Op::Max, 4), want);
     }
 
     #[test]

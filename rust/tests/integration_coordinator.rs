@@ -159,6 +159,55 @@ fn trace_driver_verifies_all() {
 }
 
 #[test]
+fn host_fusion_end_to_end_without_artifacts() {
+    // An empty (but valid) catalog forces every request onto the host
+    // path: same-key bursts must fuse into one persistent-pool rows
+    // pass, singletons must stay on the plain host path.
+    let cfg = ServiceConfig {
+        artifacts_dir: concat!(env!("CARGO_MANIFEST_DIR"), "/tests/fixtures/empty_artifacts")
+            .to_string(),
+        batch_window: Duration::from_millis(50),
+        max_queue: 1000,
+        workers: 4,
+        warmup: false,
+        pool: None,
+    };
+    let svc = Service::start(cfg).unwrap();
+    let payloads: Vec<Vec<f32>> = (0..6).map(|i| pseudo(10_000, 100 + i)).collect();
+    let rxs: Vec<_> = payloads
+        .iter()
+        .map(|p| svc.submit(Op::Sum, HostVec::F32(p.clone())).unwrap())
+        .collect();
+    let mut fused = 0;
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        let HostScalar::F32(v) = resp.value.unwrap() else { panic!("dtype") };
+        let want: f64 = payloads[i].iter().map(|&x| x as f64).sum();
+        assert!(
+            (v as f64 - want).abs() <= 1e-3 * want.abs().max(1.0),
+            "req {i}: {v} vs {want}"
+        );
+        if matches!(resp.path, ExecPath::HostFused { .. }) {
+            fused += 1;
+        }
+    }
+    assert!(fused >= 2, "expected a fused batch, got {fused} fused responses");
+
+    // A lone request (different key) falls back to the host path.
+    let data = pseudo(10_000, 999);
+    let rx = svc.submit(Op::Min, HostVec::F32(data.clone())).unwrap();
+    let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+    assert_eq!(resp.path, ExecPath::Host);
+    let HostScalar::F32(v) = resp.value.unwrap() else { panic!("dtype") };
+    assert_eq!(v, data.iter().cloned().fold(f32::INFINITY, f32::min));
+
+    let m = svc.shutdown();
+    assert!(m.fused_batches >= 1, "metrics must count fused batches");
+    assert!(m.fused_rows >= 2, "fused rows must be counted");
+    assert!(m.host_pool_jobs > 0, "persistent pool counters must be snapshotted");
+}
+
+#[test]
 fn startup_fails_cleanly_without_artifacts() {
     let cfg = ServiceConfig {
         artifacts_dir: "/nonexistent/path".into(),

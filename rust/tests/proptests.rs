@@ -20,8 +20,12 @@ fn prop_simd_equals_scalar_i32() {
         },
         |(data, f)| {
             for op in [Op::Sum, Op::Max, Op::Min] {
-                if simd::reduce_unroll(data, op, *f) != scalar::reduce(data, op) {
+                let (got, eff) = simd::reduce_unroll(data, op, *f);
+                if got != scalar::reduce(data, op) {
                     return Err(format!("mismatch for {op} f={f}"));
+                }
+                if eff != (*f).clamp(1, 16) {
+                    return Err(format!("wrong effective factor {eff} for f={f}"));
                 }
             }
             Ok(())
@@ -42,6 +46,93 @@ fn prop_threaded_equals_scalar_any_workers() {
             for op in [Op::Sum, Op::Max, Op::Min] {
                 if threaded::reduce(data, op, *t) != scalar::reduce(data, op) {
                     return Err(format!("mismatch for {op} threads={t}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_persistent_runtime_matches_oracles() {
+    use parred::reduce::op::Dtype;
+    use parred::reduce::persistent::PersistentPool;
+
+    // Persistent-runtime results must be bit-identical to the scalar
+    // oracle for integer ops and within 1e-5 (pairwise oracle) for
+    // float sums — across random sizes (including n < simd::LANES),
+    // ops, dtypes, worker counts and widths (including workers and
+    // widths far exceeding the chunk count).
+    check(
+        "persistent == scalar (i32) / pairwise (f32 sum)",
+        20,
+        |rng| {
+            let n = parred::util::prop::sizes(rng, 80_000); // zero allowed
+            let workers = rng.range(0, 8);
+            let width = rng.range(1, 24); // often > workers + 1
+            let dtype = if rng.below(2) == 0 { Dtype::I32 } else { Dtype::F32 };
+            (rng.i32_vec(n, -1000, 1000), rng.f32_vec(n, -1.0, 1.0), workers, width, dtype)
+        },
+        |(ints, floats, workers, width, dtype)| {
+            let pool = PersistentPool::new(*workers);
+            match dtype {
+                Dtype::I32 => {
+                    for op in Op::ALL {
+                        let got = pool.reduce_width(ints, op, *width);
+                        let want = scalar::reduce(ints, op);
+                        if got != want {
+                            return Err(format!("{op}: persistent {got} != scalar {want}"));
+                        }
+                    }
+                }
+                Dtype::F32 => {
+                    for op in [Op::Max, Op::Min] {
+                        let got = pool.reduce_width(floats, op, *width);
+                        let want = scalar::reduce(floats, op);
+                        if got != want && !(got.is_nan() && want.is_nan()) {
+                            return Err(format!("{op}: persistent {got} != scalar {want}"));
+                        }
+                    }
+                    let got = pool.reduce_width(floats, Op::Sum, *width) as f64;
+                    let want = scalar::reduce_pairwise(floats, Op::Sum) as f64;
+                    let l1: f64 = floats.iter().map(|&x| x.abs() as f64).sum();
+                    let tol = 1e-5 * l1.max(1.0);
+                    if (got - want).abs() > tol {
+                        return Err(format!(
+                            "sum: persistent {got} vs pairwise {want} (tol {tol:.3e})"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_persistent_rows_match_scalar() {
+    use parred::reduce::persistent::PersistentPool;
+
+    // Fused row reductions (the coordinator's RedFuser pass) preserve
+    // row order and match the scalar oracle per row, including the
+    // rows < width and cols < LANES corners.
+    check(
+        "persistent reduce_rows == per-row scalar",
+        16,
+        |rng| {
+            let rows = parred::util::prop::sizes_nonzero(rng, 64);
+            let cols = parred::util::prop::sizes_nonzero(rng, 3000);
+            let workers = rng.range(0, 6);
+            (rng.i32_vec(rows * cols, -1000, 1000), cols, workers)
+        },
+        |(data, cols, workers)| {
+            let pool = PersistentPool::new(*workers);
+            for op in [Op::Sum, Op::Min, Op::Max] {
+                let got = pool.reduce_rows(data, *cols, op);
+                let want: Vec<i32> =
+                    data.chunks(*cols).map(|r| scalar::reduce(r, op)).collect();
+                if got != want {
+                    return Err(format!("{op}: row mismatch (cols={cols})"));
                 }
             }
             Ok(())
