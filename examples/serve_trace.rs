@@ -27,7 +27,7 @@ fn main() -> anyhow::Result<()> {
         max_queue: 10_000,
         workers: 0,
         warmup: true,
-        pool: None,
+        ..ServiceConfig::default()
     };
     let trace = TraceConfig { requests, payload_n, seed: 42, mean_gap_us: 50.0 };
 
@@ -46,12 +46,15 @@ fn main() -> anyhow::Result<()> {
     // artifact, so the router shards them across a fleet of simulated
     // devices (Route::Sharded) instead of the host fallback. The
     // report's `pool:` line shows the shard/steal counters.
+    // Adaptive mode: observed outcomes refine the scheduler's model
+    // and shard weights while the trace runs.
     let cfg3 = ServiceConfig {
         pool: Some(PoolServeConfig {
             devices: vec!["TeslaC2075".into(), "TeslaC2075".into(), "G80".into()],
-            cutoff: 1 << 19,
-            tasks_per_device: 2,
+            cutoff: Some(1 << 19),
+            ..Default::default()
         }),
+        adaptive: true,
         ..cfg
     };
     let trace3 = TraceConfig { requests: 8, payload_n: 1 << 20, seed: 7, mean_gap_us: 200.0 };

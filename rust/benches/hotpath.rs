@@ -137,7 +137,11 @@ fn main() {
                 reply: tx,
             });
         }
-        batcher.flush_ready(t + Duration::from_millis(1), |_| vec![4, 8, 16]).len()
+        batcher
+            .flush_ready(t + Duration::from_millis(1), |_| {
+                parred::coordinator::batcher::KeyPolicy::Rows(vec![4, 8, 16])
+            })
+            .len()
     });
 
     // --- manifest parsing ---

@@ -1,0 +1,99 @@
+//! `cargo bench --bench sched` — the adaptive scheduler's benches:
+//! the derived crossover cutoffs (how to re-derive what used to be
+//! hardcoded), decide()/plan_shards() hot-path cost, and the
+//! skewed-fleet convergence trajectory of the feedback-driven shard
+//! re-planner. Emits the trajectory machine-readably in
+//! `BENCH_sched.json` (path override: `PARRED_SCHED_JSON`) so CI can
+//! track the adaptive win across PRs alongside `BENCH_hotpath.json`.
+
+use std::collections::BTreeMap;
+
+use parred::harness::sched_adapt;
+use parred::reduce::op::{Dtype, Op};
+use parred::sched::{PoolPrior, SchedConfig, Scheduler};
+use parred::util::bench::Bench;
+use parred::util::json::Json;
+
+fn main() {
+    let fast = std::env::var("PARRED_BENCH_FAST").as_deref() == Ok("1");
+    let n = if fast { 1 << 16 } else { 1 << 20 };
+    let mut b = Bench::from_env();
+
+    // --- derived cutoffs: the numbers the planner/router used to
+    // hardcode, now read off the throughput model. Re-derive here
+    // after retuning either runtime's priors.
+    let fleet = sched_adapt::skewed_fleet();
+    let host = Scheduler::host(8);
+    let pooled = Scheduler::new(SchedConfig {
+        workers: 8,
+        pool: Some(PoolPrior::for_fleet(&fleet, None)),
+        ..SchedConfig::default()
+    });
+    for (label, s) in [("host-only", &host), ("G80+3xC2075", &pooled)] {
+        let c = s.cutoffs(Op::Sum, Dtype::F32);
+        println!(
+            "cutoffs[{label}] seq={} thread={} pool={}",
+            c.seq,
+            c.thread,
+            if c.pool == usize::MAX { "-".to_string() } else { c.pool.to_string() },
+        );
+    }
+
+    // --- hot-path cost of the scheduler itself (it sits on every
+    // request route, so decide/plan must stay in the noise).
+    b.run("sched/decide", None, || pooled.decide(Op::Sum, Dtype::F32, 1 << 20, false));
+    b.run("sched/cutoffs", None, || pooled.cutoffs(Op::Sum, Dtype::F32));
+    b.run("sched/plan_shards_4dev_1M", None, || pooled.plan_shards(&fleet, 1 << 20, 2));
+
+    // --- convergence trajectory on the skewed fleet ---
+    let rows = sched_adapt::run(n, 256, 42).expect("convergence sweep");
+    println!("{}", sched_adapt::table(n, &rows).markdown());
+    let first = &rows[0];
+    let last = &rows[rows.len() - 1];
+    println!(
+        "static wall {:.4} ms -> adaptive wall {:.4} ms ({:.2}x), steal pressure {:.2}% -> {:.2}%",
+        first.modeled_wall_s * 1e3,
+        last.modeled_wall_s * 1e3,
+        first.modeled_wall_s / last.modeled_wall_s.max(1e-12),
+        first.steal_pressure * 100.0,
+        last.steal_pressure * 100.0,
+    );
+    assert!(
+        last.modeled_wall_s <= first.modeled_wall_s * 1.02,
+        "feedback must never lose to the static split: {} -> {}",
+        first.modeled_wall_s,
+        last.modeled_wall_s
+    );
+
+    // --- machine-readable trajectory ---
+    let mut iters = Vec::new();
+    for r in &rows {
+        let mut e = BTreeMap::new();
+        e.insert("iter".to_string(), Json::Num(r.iter as f64));
+        e.insert("modeled_wall_s".to_string(), Json::Num(r.modeled_wall_s));
+        e.insert("imbalance".to_string(), Json::Num(r.imbalance));
+        e.insert("steal_pressure".to_string(), Json::Num(r.steal_pressure));
+        e.insert(
+            "shares".to_string(),
+            Json::Arr(r.shares.iter().map(|&s| Json::Num(s)).collect()),
+        );
+        iters.push(Json::Obj(e));
+    }
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str("sched".to_string()));
+    root.insert("fleet".to_string(), Json::Str("G80,TeslaC2075*3".to_string()));
+    root.insert("n".to_string(), Json::Num(n as f64));
+    root.insert("iterations".to_string(), Json::Arr(iters));
+    root.insert(
+        "adaptive_speedup".to_string(),
+        Json::Num(first.modeled_wall_s / last.modeled_wall_s.max(1e-12)),
+    );
+    let path =
+        std::env::var("PARRED_SCHED_JSON").unwrap_or_else(|_| "BENCH_sched.json".to_string());
+    match std::fs::write(&path, format!("{}\n", Json::Obj(root))) {
+        Ok(()) => eprintln!("(wrote {path})"),
+        Err(e) => eprintln!("(could not write {path}: {e})"),
+    }
+
+    println!("{}", b.report());
+}

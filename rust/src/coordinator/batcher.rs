@@ -2,19 +2,24 @@
 //! into one `rows` execute — the serving-side analogue of the paper's
 //! "give each execution step more work" principle.
 //!
-//! Policy (per shape key):
-//! * flush immediately once the queue reaches the largest usable
-//!   `rows` batch size;
-//! * otherwise flush when the oldest queued request has waited longer
-//!   than the window, at the largest size that fits (padding up to the
-//!   smallest artifact size with identity rows when below it).
+//! Policy (per shape key, chosen by the service through
+//! [`KeyPolicy`]):
+//! * **Rows** — a rows artifact exists: flush immediately once the
+//!   queue reaches the largest usable batch size; otherwise flush when
+//!   the oldest queued request has waited longer than the window, at
+//!   the largest size that fits (padding up to the smallest artifact
+//!   size with identity rows when below it).
+//! * **FuseHost** — no artifact: same-key host requests fuse into one
+//!   `reduce_rows` pass over the persistent worker pool
+//!   (RedFuser-style cascaded-reduction fusion; see PAPERS.md).
+//! * **FusePool** — the scheduler routes the key to the device fleet:
+//!   concurrent same-key requests stack into **one** fleet pass
+//!   ([`crate::pool::DevicePool::reduce_rows_elems`]) — pool-aware
+//!   dynamic batching, the fleet-side mirror of host fusion.
 //!
-//! Keys with **no** rows artifact can still batch: same-key host
-//! requests fuse into one `reduce_rows` pass over the persistent
-//! worker pool (RedFuser-style cascaded-reduction fusion; see
-//! PAPERS.md). Fused batches flush at the window deadline or as soon
-//! as `host_fuse_max` rows queue up, whichever comes first, and carry
-//! no padding (`exec_rows == requests.len()`).
+//! Fused batches (host or pool) flush at the window deadline or as
+//! soon as their cap fills, whichever comes first, and carry no
+//! padding (`exec_rows == requests.len()`).
 
 use std::collections::HashMap;
 use std::time::{Duration, Instant};
@@ -24,26 +29,48 @@ use crate::reduce::plan::ShapeKey;
 use super::request::Request;
 use super::router::Router;
 
+/// How a shape key's queue is allowed to flush.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum KeyPolicy {
+    /// Rows artifacts exist at these sizes (ascending, non-empty).
+    Rows(Vec<usize>),
+    /// Fuse on the persistent host pool.
+    FuseHost,
+    /// Fuse into one device-fleet pass.
+    FusePool,
+}
+
+/// What a flushed batch executes as.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BatchKind {
+    /// Stacked into a rows artifact (identity-padded to `exec_rows`).
+    Rows,
+    /// One persistent-pool `reduce_rows` pass.
+    FusedHost,
+    /// One device-fleet rows pass.
+    FusedPool,
+}
+
 /// A flushed batch ready for execution.
 #[derive(Debug)]
 pub struct FlushedBatch {
     pub key: ShapeKey,
     pub requests: Vec<Request>,
     /// Rows-artifact size to execute with (>= requests.len()); the
-    /// difference is identity padding. For fused host batches this is
+    /// difference is identity padding. For fused batches this is
     /// exactly `requests.len()` (no padding).
     pub exec_rows: usize,
-    /// True when the key has no rows artifact and the batch must run
-    /// as one fused `reduce_rows` pass on the persistent host pool.
-    pub fused_host: bool,
+    pub kind: BatchKind,
 }
 
 /// Per-key FIFO queues with deadline-based flushing.
 pub struct Batcher {
     window: Duration,
-    /// Largest fused host batch (0 disables host fusion: artifact-less
-    /// keys are then never flushed here and must not be queued).
+    /// Largest fused host batch (0 disables host fusion: such keys are
+    /// then never flushed here and must not be queued).
     host_fuse_max: usize,
+    /// Largest fused fleet batch (0 disables pool fusion).
+    pool_fuse_max: usize,
     queues: HashMap<ShapeKey, Vec<Request>>,
 }
 
@@ -51,14 +78,25 @@ pub struct Batcher {
 /// worker pool, small enough to bound the stacked payload copy.
 pub const HOST_FUSE_MAX_DEFAULT: usize = 64;
 
+/// Default cap on fused fleet batches: fleet-bound payloads are large
+/// (at/above the pool crossover), so the stacking copy is the
+/// constraint, not fleet width — a handful of rows already amortizes
+/// the dispatch round-trip.
+pub const POOL_FUSE_MAX_DEFAULT: usize = 8;
+
 impl Batcher {
     pub fn new(window: Duration) -> Self {
-        Batcher { window, host_fuse_max: HOST_FUSE_MAX_DEFAULT, queues: HashMap::new() }
+        Batcher::with_caps(window, HOST_FUSE_MAX_DEFAULT, POOL_FUSE_MAX_DEFAULT)
     }
 
     /// Override the fused-host batch cap (0 disables host fusion).
     pub fn with_host_fuse(window: Duration, host_fuse_max: usize) -> Self {
-        Batcher { window, host_fuse_max, queues: HashMap::new() }
+        Batcher::with_caps(window, host_fuse_max, POOL_FUSE_MAX_DEFAULT)
+    }
+
+    /// Override both fusion caps (0 disables the respective fusion).
+    pub fn with_caps(window: Duration, host_fuse_max: usize, pool_fuse_max: usize) -> Self {
+        Batcher { window, host_fuse_max, pool_fuse_max, queues: HashMap::new() }
     }
 
     pub fn window(&self) -> Duration {
@@ -75,86 +113,118 @@ impl Batcher {
         self.queues.entry(req.shape_key()).or_default().push(req);
     }
 
-    /// Collect batches that are ready at time `now`, given the row
-    /// sizes the router found for each key. FIFO order within a key is
-    /// preserved (oldest requests flush first).
+    /// Collect batches that are ready at time `now`, given each key's
+    /// flush policy. FIFO order within a key is preserved (oldest
+    /// requests flush first).
     pub fn flush_ready(
         &mut self,
         now: Instant,
-        sizes_of: impl Fn(&ShapeKey) -> Vec<usize>,
+        policy_of: impl Fn(&ShapeKey) -> KeyPolicy,
     ) -> Vec<FlushedBatch> {
         let mut out = Vec::new();
         for (key, queue) in self.queues.iter_mut() {
-            let sizes = sizes_of(key);
-            if sizes.is_empty() {
-                // No rows artifact: fuse same-key host requests into
-                // one persistent-pool `reduce_rows` pass.
-                if self.host_fuse_max == 0 {
-                    continue; // fusion disabled (shouldn't normally be queued)
+            match policy_of(key) {
+                KeyPolicy::FuseHost => {
+                    Self::flush_fused(
+                        *key,
+                        queue,
+                        now,
+                        self.window,
+                        self.host_fuse_max,
+                        BatchKind::FusedHost,
+                        &mut out,
+                    );
                 }
-                loop {
-                    let expired = queue
-                        .first()
-                        .is_some_and(|r| now.duration_since(r.t_enqueue) >= self.window);
-                    // `expired` implies a non-empty queue (it comes
-                    // from queue.first()).
-                    if queue.len() >= self.host_fuse_max || expired {
-                        let take = queue.len().min(self.host_fuse_max);
-                        let batch: Vec<Request> = queue.drain(..take).collect();
-                        out.push(FlushedBatch {
-                            key: *key,
-                            requests: batch,
-                            exec_rows: take,
-                            fused_host: true,
-                        });
-                    } else {
+                KeyPolicy::FusePool => {
+                    Self::flush_fused(
+                        *key,
+                        queue,
+                        now,
+                        self.window,
+                        self.pool_fuse_max,
+                        BatchKind::FusedPool,
+                        &mut out,
+                    );
+                }
+                KeyPolicy::Rows(sizes) => {
+                    if sizes.is_empty() {
+                        continue; // defensive: an empty Rows policy never flushes.
+                    }
+                    loop {
+                        // Size-triggered flush: the largest artifact we can fill.
+                        if let Some(b) = Router::best_batch(&sizes, queue.len()) {
+                            if queue.len() >= *sizes.last().unwrap() || b == *sizes.last().unwrap()
+                            {
+                                let batch: Vec<Request> = queue.drain(..b).collect();
+                                out.push(FlushedBatch {
+                                    key: *key,
+                                    requests: batch,
+                                    exec_rows: b,
+                                    kind: BatchKind::Rows,
+                                });
+                                continue;
+                            }
+                        }
+                        // Deadline-triggered flush.
+                        let expired = queue
+                            .first()
+                            .is_some_and(|r| now.duration_since(r.t_enqueue) >= self.window);
+                        if expired {
+                            let take = Router::best_batch(&sizes, queue.len())
+                                .unwrap_or_else(|| queue.len().min(*sizes.first().unwrap()));
+                            let exec = if take >= *sizes.first().unwrap() {
+                                take
+                            } else {
+                                // Pad up to the smallest artifact.
+                                *sizes.first().unwrap()
+                            };
+                            let take = take.min(queue.len());
+                            let batch: Vec<Request> = queue.drain(..take).collect();
+                            out.push(FlushedBatch {
+                                key: *key,
+                                requests: batch,
+                                exec_rows: exec,
+                                kind: BatchKind::Rows,
+                            });
+                            continue;
+                        }
                         break;
                     }
                 }
-                continue;
-            }
-            loop {
-                // Size-triggered flush: the largest artifact we can fill.
-                if let Some(b) = Router::best_batch(&sizes, queue.len()) {
-                    if queue.len() >= *sizes.last().unwrap() || b == *sizes.last().unwrap() {
-                        let batch: Vec<Request> = queue.drain(..b).collect();
-                        out.push(FlushedBatch {
-                            key: *key,
-                            requests: batch,
-                            exec_rows: b,
-                            fused_host: false,
-                        });
-                        continue;
-                    }
-                }
-                // Deadline-triggered flush.
-                let expired = queue
-                    .first()
-                    .is_some_and(|r| now.duration_since(r.t_enqueue) >= self.window);
-                if expired {
-                    let take = Router::best_batch(&sizes, queue.len())
-                        .unwrap_or_else(|| queue.len().min(*sizes.first().unwrap()));
-                    let exec = if take >= *sizes.first().unwrap() {
-                        take
-                    } else {
-                        // Pad up to the smallest artifact.
-                        *sizes.first().unwrap()
-                    };
-                    let take = take.min(queue.len());
-                    let batch: Vec<Request> = queue.drain(..take).collect();
-                    out.push(FlushedBatch {
-                        key: *key,
-                        requests: batch,
-                        exec_rows: exec,
-                        fused_host: false,
-                    });
-                    continue;
-                }
-                break;
             }
         }
         self.queues.retain(|_, q| !q.is_empty());
         out
+    }
+
+    /// Shared flush loop for the two fusion kinds: flush at the cap
+    /// without waiting, or whatever is queued once the window expires.
+    fn flush_fused(
+        key: ShapeKey,
+        queue: &mut Vec<Request>,
+        now: Instant,
+        window: Duration,
+        cap: usize,
+        kind: BatchKind,
+        out: &mut Vec<FlushedBatch>,
+    ) {
+        if cap == 0 {
+            return; // fusion disabled (shouldn't normally be queued).
+        }
+        loop {
+            let expired = queue
+                .first()
+                .is_some_and(|r| now.duration_since(r.t_enqueue) >= window);
+            // `expired` implies a non-empty queue (it comes from
+            // queue.first()).
+            if queue.len() >= cap || expired {
+                let take = queue.len().min(cap);
+                let batch: Vec<Request> = queue.drain(..take).collect();
+                out.push(FlushedBatch { key, requests: batch, exec_rows: take, kind });
+            } else {
+                break;
+            }
+        }
     }
 
     /// Deadline of the oldest queued request (for the service loop's
@@ -190,8 +260,8 @@ mod tests {
         Request { id, op: Op::Sum, payload: HostVec::F32(vec![1.0; n]), t_enqueue: t, reply: tx }
     }
 
-    fn sizes(_: &ShapeKey) -> Vec<usize> {
-        vec![4, 8, 16]
+    fn sizes(_: &ShapeKey) -> KeyPolicy {
+        KeyPolicy::Rows(vec![4, 8, 16])
     }
 
     #[test]
@@ -205,6 +275,7 @@ mod tests {
         assert_eq!(flushed.len(), 1);
         assert_eq!(flushed[0].requests.len(), 16);
         assert_eq!(flushed[0].exec_rows, 16);
+        assert_eq!(flushed[0].kind, BatchKind::Rows);
         assert_eq!(b.queued(), 0);
     }
 
@@ -274,11 +345,11 @@ mod tests {
             b.push(req(i, 12_345, t)); // a key with no rows artifact
         }
         // No artifact sizes: nothing flushes before the window.
-        assert!(b.flush_ready(t, |_| vec![]).is_empty());
+        assert!(b.flush_ready(t, |_| KeyPolicy::FuseHost).is_empty());
         assert_eq!(b.queued(), 5);
-        let flushed = b.flush_ready(t + Duration::from_millis(11), |_| vec![]);
+        let flushed = b.flush_ready(t + Duration::from_millis(11), |_| KeyPolicy::FuseHost);
         assert_eq!(flushed.len(), 1);
-        assert!(flushed[0].fused_host);
+        assert_eq!(flushed[0].kind, BatchKind::FusedHost);
         assert_eq!(flushed[0].requests.len(), 5);
         assert_eq!(flushed[0].exec_rows, 5, "fused batches carry no padding");
         assert_eq!(b.queued(), 0);
@@ -291,9 +362,11 @@ mod tests {
         for i in 0..9 {
             b.push(req(i, 12_345, t));
         }
-        let flushed = b.flush_ready(t, |_| vec![]);
+        let flushed = b.flush_ready(t, |_| KeyPolicy::FuseHost);
         assert_eq!(flushed.len(), 2, "two full fused batches, remainder waits");
-        assert!(flushed.iter().all(|f| f.fused_host && f.requests.len() == 4));
+        assert!(flushed
+            .iter()
+            .all(|f| f.kind == BatchKind::FusedHost && f.requests.len() == 4));
         assert_eq!(b.queued(), 1);
     }
 
@@ -302,7 +375,42 @@ mod tests {
         let mut b = Batcher::with_host_fuse(Duration::from_millis(0), 0);
         let t = Instant::now();
         b.push(req(0, 12_345, t));
-        assert!(b.flush_ready(t + Duration::from_millis(1), |_| vec![]).is_empty());
+        assert!(b
+            .flush_ready(t + Duration::from_millis(1), |_| KeyPolicy::FuseHost)
+            .is_empty());
+        assert_eq!(b.queued(), 1);
+    }
+
+    #[test]
+    fn pool_fusion_flushes_at_window_and_cap() {
+        let mut b = Batcher::with_caps(Duration::from_millis(10), 64, 3);
+        let t = Instant::now();
+        for i in 0..7 {
+            b.push(req(i, 1 << 20, t)); // a fleet-bound key
+        }
+        // Two full fleet batches flush at the cap immediately...
+        let flushed = b.flush_ready(t, |_| KeyPolicy::FusePool);
+        assert_eq!(flushed.len(), 2);
+        assert!(flushed
+            .iter()
+            .all(|f| f.kind == BatchKind::FusedPool && f.requests.len() == 3 && f.exec_rows == 3));
+        assert_eq!(b.queued(), 1);
+        // ...and the remainder waits for the window.
+        assert!(b.flush_ready(t + Duration::from_millis(5), |_| KeyPolicy::FusePool).is_empty());
+        let flushed = b.flush_ready(t + Duration::from_millis(11), |_| KeyPolicy::FusePool);
+        assert_eq!(flushed.len(), 1);
+        assert_eq!(flushed[0].kind, BatchKind::FusedPool);
+        assert_eq!(flushed[0].requests.len(), 1);
+        assert_eq!(b.queued(), 0);
+    }
+
+    #[test]
+    fn empty_rows_policy_is_defensive_no_op() {
+        let mut b = Batcher::new(Duration::from_millis(0));
+        let t = Instant::now();
+        b.push(req(0, 100, t));
+        let flushed = b.flush_ready(t + Duration::from_millis(1), |_| KeyPolicy::Rows(vec![]));
+        assert!(flushed.is_empty());
         assert_eq!(b.queued(), 1);
     }
 

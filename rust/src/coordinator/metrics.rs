@@ -19,6 +19,7 @@ pub struct Metrics {
     pub lat_sharded: Histogram,
     pub lat_host: Histogram,
     pub lat_host_fused: Histogram,
+    pub lat_pool_fused: Histogram,
     /// Rows executed vs rows carrying real requests (padding waste).
     pub rows_executed: u64,
     pub rows_useful: u64,
@@ -28,6 +29,10 @@ pub struct Metrics {
     /// passes) and the rows they carried.
     pub fused_batches: u64,
     pub fused_rows: u64,
+    /// Fused fleet batches (pool-aware dynamic batching: same-key
+    /// sharded requests stacked into one fleet pass) and their rows.
+    pub pool_fused_batches: u64,
+    pub pool_fused_rows: u64,
     /// Requests served by the device pool, and the pool's lifetime
     /// queue counters (snapshotted at shutdown from
     /// [`crate::pool::DevicePool::counters`]).
@@ -57,12 +62,15 @@ impl Default for Metrics {
             lat_sharded: Histogram::new(),
             lat_host: Histogram::new(),
             lat_host_fused: Histogram::new(),
+            lat_pool_fused: Histogram::new(),
             rows_executed: 0,
             rows_useful: 0,
             batches: 0,
             elements_reduced: 0,
             fused_batches: 0,
             fused_rows: 0,
+            pool_fused_batches: 0,
+            pool_fused_rows: 0,
             sharded_requests: 0,
             pool_tasks: 0,
             pool_steals: 0,
@@ -91,6 +99,10 @@ impl Metrics {
                 self.lat_sharded.record(latency_s);
             }
             ExecPath::HostFused { .. } => self.lat_host_fused.record(latency_s),
+            ExecPath::PoolFused { .. } => {
+                self.sharded_requests += 1;
+                self.lat_pool_fused.record(latency_s);
+            }
             ExecPath::Host => self.lat_host.record(latency_s),
         }
     }
@@ -105,6 +117,12 @@ impl Metrics {
     pub fn record_fused(&mut self, rows: usize) {
         self.fused_batches += 1;
         self.fused_rows += rows as u64;
+    }
+
+    /// Account one fused fleet batch of `rows` real requests.
+    pub fn record_pool_fused(&mut self, rows: usize) {
+        self.pool_fused_batches += 1;
+        self.pool_fused_rows += rows as u64;
     }
 
     /// Snapshot the device pool's queue counters into the report.
@@ -168,6 +186,14 @@ impl Metrics {
                 self.fused_rows as f64 / self.fused_batches as f64
             ));
         }
+        if self.pool_fused_batches > 0 {
+            s.push_str(&format!(
+                "pool fusion: batches={} rows={} avg={:.2}\n",
+                self.pool_fused_batches,
+                self.pool_fused_rows,
+                self.pool_fused_rows as f64 / self.pool_fused_batches as f64
+            ));
+        }
         if self.sharded_requests > 0 || self.pool_tasks > 0 {
             s.push_str(&format!(
                 "pool: sharded_requests={} tasks={} steals={} peak_depth={}\n",
@@ -186,6 +212,7 @@ impl Metrics {
         s.push_str(&format!("latency (pjrt full):    {}\n", self.lat_full.summary()));
         s.push_str(&format!("latency (pjrt batched): {}\n", self.lat_batched.summary()));
         s.push_str(&format!("latency (sharded):      {}\n", self.lat_sharded.summary()));
+        s.push_str(&format!("latency (pool fused):   {}\n", self.lat_pool_fused.summary()));
         s.push_str(&format!("latency (host fused):   {}\n", self.lat_host_fused.summary()));
         s.push_str(&format!("latency (host):         {}\n", self.lat_host.summary()));
         s
@@ -203,16 +230,29 @@ mod tests {
         m.record(ExecPath::PjrtBatched { batch: 8 }, 2e-3, true, 100);
         m.record(ExecPath::Sharded { devices: 4 }, 3e-3, true, 100);
         m.record(ExecPath::HostFused { batch: 6 }, 4e-4, true, 100);
+        m.record(ExecPath::PoolFused { batch: 3, devices: 4 }, 6e-4, true, 100);
         m.record(ExecPath::Host, 5e-4, false, 100);
-        assert_eq!(m.completed, 4);
+        assert_eq!(m.completed, 5);
         assert_eq!(m.failed, 1);
         assert_eq!(m.lat_full.count(), 1);
         assert_eq!(m.lat_batched.count(), 1);
         assert_eq!(m.lat_sharded.count(), 1);
         assert_eq!(m.lat_host_fused.count(), 1);
+        assert_eq!(m.lat_pool_fused.count(), 1);
         assert_eq!(m.lat_host.count(), 1);
-        assert_eq!(m.sharded_requests, 1);
-        assert_eq!(m.elements_reduced, 500);
+        assert_eq!(m.sharded_requests, 2, "direct + pool-fused requests both count");
+        assert_eq!(m.elements_reduced, 600);
+    }
+
+    #[test]
+    fn pool_fused_counters_render() {
+        let mut m = Metrics::default();
+        m.record_pool_fused(3);
+        m.record_pool_fused(5);
+        assert_eq!(m.pool_fused_batches, 2);
+        assert_eq!(m.pool_fused_rows, 8);
+        let r = m.report();
+        assert!(r.contains("pool fusion: batches=2 rows=8"), "{r}");
     }
 
     #[test]

@@ -4,13 +4,17 @@
 //! admission-controlled ([`backpressure`]), routed against the
 //! artifact catalog ([`router`]), dynamically batched into `rows`
 //! artifacts ([`batcher`]) and executed on the single-threaded PJRT
-//! executor, with latency/throughput metrics ([`metrics`]). Requests
-//! with no matching artifact fall back to the multi-device execution
-//! pool ([`crate::pool`], `Route::Sharded`, for payloads past the
-//! pool cutoff when a fleet is attached), to a fused host batch
-//! (same-key requests stacked into one persistent-pool `reduce_rows`
-//! pass, `ExecPath::HostFused`) or to the host reduction library
-//! ([`crate::reduce`]) — the service is total over request shapes.
+//! executor, with latency/throughput metrics ([`metrics`]). Placement
+//! for artifact-less shapes is delegated to the service's shared
+//! [`crate::sched::Scheduler`] (the planner and router are thin views
+//! over it): payloads past the derived pool crossover shard across
+//! the multi-device execution pool ([`crate::pool`],
+//! `Route::Sharded`, with concurrent same-key requests stacking into
+//! one fleet pass, `ExecPath::PoolFused`), smaller same-key bursts
+//! fuse into one persistent-pool `reduce_rows` pass
+//! (`ExecPath::HostFused`), and everything else runs on the host
+//! reduction library ([`crate::reduce`]) — the service is total over
+//! request shapes.
 
 pub mod backpressure;
 pub mod batcher;
@@ -20,5 +24,5 @@ pub mod router;
 pub mod service;
 
 pub use request::{ExecPath, Request, Response};
-pub use router::{PoolRoute, Route, Router};
+pub use router::{Route, Router};
 pub use service::{PoolServeConfig, Service, ServiceConfig};

@@ -44,6 +44,10 @@ pub enum ExecPath {
     /// Same-key host requests fused into one `reduce_rows` pass over
     /// the persistent worker pool (`batch` rows; RedFuser-style).
     HostFused { batch: usize },
+    /// Same-key fleet-bound requests fused into one device-fleet rows
+    /// pass (`batch` rows across `devices` devices) — pool-aware
+    /// dynamic batching.
+    PoolFused { batch: usize, devices: usize },
     /// Host (threaded/sequential) fallback.
     Host,
 }

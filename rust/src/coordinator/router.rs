@@ -1,11 +1,23 @@
 //! Routing: decide how a request shape executes, against the artifact
 //! catalog (vLLM-router-style: exact-variant match, batchable pool, or
 //! fallback).
+//!
+//! Since the adaptive-scheduler refactor the router is a thin view
+//! over [`crate::sched::Scheduler`]: catalog lookups (batched rows /
+//! exact full artifacts) are the router's own business, but the
+//! placement ladder — artifact vs fleet vs host, with its crossover
+//! cutoffs — lives in exactly one place,
+//! [`crate::sched::Scheduler::decide`], shared with the planner view
+//! ([`crate::reduce::plan::Planner`]).
+
+use std::sync::Arc;
 
 use crate::reduce::plan::ShapeKey;
 use crate::runtime::Catalog;
+use crate::sched::{Decision, SchedConfig, Scheduler};
 
-/// The routing decision for one shape.
+/// The routing decision for one shape (the router-side projection of
+/// [`crate::sched::Decision`], augmented with catalog artifacts).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum Route {
     /// Batch with same-key requests into `rows` artifacts; the sizes
@@ -20,54 +32,59 @@ pub enum Route {
     Host,
 }
 
-/// Pool attachment: how many devices, and the minimum payload that
-/// amortizes the per-shard launch overhead (see
-/// [`crate::reduce::plan::Planner::pool_cutoff`]).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub struct PoolRoute {
-    pub devices: usize,
-    pub cutoff: usize,
-}
-
-/// Stateless router over the catalog (and the optional device pool).
+/// Router over the catalog, delegating placement to the shared
+/// scheduler.
 #[derive(Debug, Clone)]
 pub struct Router {
     catalog: Catalog,
-    pool: Option<PoolRoute>,
+    sched: Arc<Scheduler>,
 }
 
 impl Router {
+    /// Router with a private host-only scheduler (no pool). Artifact
+    /// routes stay available — a catalog implies a runtime.
     pub fn new(catalog: Catalog) -> Self {
-        Router { catalog, pool: None }
+        Router::with_scheduler(
+            catalog,
+            Arc::new(Scheduler::new(SchedConfig {
+                artifacts_available: true,
+                ..SchedConfig::default()
+            })),
+        )
     }
 
-    /// Router for a service with an attached device pool: shapes with
-    /// no artifact and at least `cutoff` elements route to the fleet.
-    pub fn with_pool(catalog: Catalog, pool: PoolRoute) -> Self {
-        Router { catalog, pool: Some(pool) }
+    /// Router sharing the service's scheduler (the same instance its
+    /// planner uses, so both views decide identically by construction).
+    pub fn with_scheduler(catalog: Catalog, sched: Arc<Scheduler>) -> Self {
+        Router { catalog, sched }
     }
 
     pub fn catalog(&self) -> &Catalog {
         &self.catalog
     }
 
+    pub fn scheduler(&self) -> &Arc<Scheduler> {
+        &self.sched
+    }
+
     /// Total function: every shape gets a route (Host at worst).
-    /// Compiled artifacts are preferred over the modeled fleet; the
-    /// fleet is preferred over the host library for large payloads.
+    /// Batchable rows artifacts are preferred outright (they amortize
+    /// across requests); everything else is the scheduler's single
+    /// ladder — compiled artifacts, then the fleet above its derived
+    /// crossover, then the host library.
     pub fn route(&self, key: ShapeKey) -> Route {
         let sizes = self.catalog.rows_batch_sizes(key.op, key.dtype, key.n);
         if !sizes.is_empty() {
             return Route::Batched { sizes };
         }
-        if let Some(meta) = self.catalog.find_full(key.op, key.dtype, key.n) {
-            return Route::Full { artifact: meta.name.clone() };
+        let full = self.catalog.find_full(key.op, key.dtype, key.n);
+        match self.sched.decide(key.op, key.dtype, key.n, full.is_some()) {
+            Decision::Artifact => Route::Full {
+                artifact: full.expect("Decision::Artifact implies an exact match").name.clone(),
+            },
+            Decision::Sharded { devices } => Route::Sharded { devices },
+            Decision::Sequential | Decision::Threaded { .. } => Route::Host,
         }
-        if let Some(p) = self.pool {
-            if p.devices > 0 && key.n >= p.cutoff {
-                return Route::Sharded { devices: p.devices };
-            }
-        }
-        Route::Host
     }
 
     /// The largest batch size <= `queued`, if any (the batcher flushes
@@ -88,17 +105,38 @@ mod tests {
     use super::*;
     use crate::reduce::op::{Dtype, Op};
     use crate::runtime::artifact::{test_meta, Kind};
+    use crate::sched::PoolPrior;
     use std::path::PathBuf;
 
-    fn router() -> Router {
-        Router::new(Catalog::from_entries(
+    fn catalog() -> Catalog {
+        Catalog::from_entries(
             PathBuf::from("/tmp"),
             vec![
                 test_meta("full_a", Kind::Full, Op::Sum, 1024, None, 8),
                 test_meta("rows_b4", Kind::Rows, Op::Sum, 512, Some(4), 8),
                 test_meta("rows_b8", Kind::Rows, Op::Sum, 512, Some(8), 8),
             ],
-        ))
+        )
+    }
+
+    fn router() -> Router {
+        Router::new(catalog())
+    }
+
+    fn pooled_router(devices: usize, cutoff: Option<usize>) -> Router {
+        Router::with_scheduler(
+            catalog(),
+            Arc::new(Scheduler::new(SchedConfig {
+                artifacts_available: true,
+                pool: Some(PoolPrior {
+                    devices,
+                    bytes_per_s: devices as f64 * 76.8e9,
+                    overhead_s: crate::sched::model::POOL_OVERHEAD_S,
+                    cutoff_override: cutoff,
+                }),
+                ..SchedConfig::default()
+            })),
+        )
     }
 
     fn key(op: Op, n: usize) -> ShapeKey {
@@ -129,10 +167,7 @@ mod tests {
 
     #[test]
     fn sharded_route_above_pool_cutoff() {
-        let r = Router::with_pool(
-            router().catalog().clone(),
-            PoolRoute { devices: 4, cutoff: 1 << 20 },
-        );
+        let r = pooled_router(4, Some(1 << 20));
         // Large artifact-less shape: fleet.
         assert_eq!(r.route(key(Op::Sum, 1 << 21)), Route::Sharded { devices: 4 });
         // Below the cutoff: host, as before.
@@ -146,8 +181,34 @@ mod tests {
     }
 
     #[test]
+    fn sharded_route_at_the_derived_cutoff() {
+        // No pinned cutoff: the knee comes from the throughput model.
+        let r = pooled_router(4, None);
+        let c = r.scheduler().cutoffs(Op::Sum, Dtype::F32);
+        assert!(c.pool < usize::MAX);
+        assert_eq!(r.route(key(Op::Sum, c.pool)), Route::Sharded { devices: 4 });
+        assert_eq!(r.route(key(Op::Sum, c.pool - 1)), Route::Host);
+    }
+
+    #[test]
     fn no_pool_means_no_sharded_routes() {
         assert_eq!(router().route(key(Op::Sum, 1 << 24)), Route::Host);
+    }
+
+    #[test]
+    fn router_is_a_pure_projection_of_the_scheduler() {
+        // The acceptance property of the refactor: for artifact-less
+        // shapes the route is exactly the scheduler's decision.
+        let r = pooled_router(4, None);
+        for n in [1usize, 999, 20_000, 1 << 18, 1 << 20, 1 << 22] {
+            let k = key(Op::Prod, n); // no artifacts exist for Prod
+            let want = match r.scheduler().decide(k.op, k.dtype, k.n, false) {
+                Decision::Sharded { devices } => Route::Sharded { devices },
+                Decision::Artifact => unreachable!("no artifact for prod"),
+                Decision::Sequential | Decision::Threaded { .. } => Route::Host,
+            };
+            assert_eq!(r.route(k), want, "n={n}");
+        }
     }
 
     #[test]

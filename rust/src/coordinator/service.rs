@@ -7,6 +7,7 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context, Result};
@@ -14,18 +15,19 @@ use anyhow::{anyhow, Context, Result};
 use crate::gpusim::DeviceConfig;
 use crate::pool::{DevicePool, PoolConfig};
 use crate::reduce::op::{Dtype, Element, Op};
-use crate::reduce::plan::Planner;
+use crate::reduce::plan::{Planner, ShapeKey};
 use crate::reduce::{persistent, threaded};
 use crate::runtime::literal::{HostScalar, HostVec};
 use crate::runtime::Runtime;
+use crate::sched::{PoolPrior, SchedConfig, Scheduler};
 use crate::util::rng::Rng;
 use crate::util::stats::Histogram;
 
 use super::backpressure::Gate;
-use super::batcher::{Batcher, FlushedBatch};
+use super::batcher::{BatchKind, Batcher, FlushedBatch, KeyPolicy};
 use super::metrics::Metrics;
 use super::request::{ExecPath, Request, Response};
-use super::router::{PoolRoute, Route, Router};
+use super::router::{Route, Router};
 
 /// Largest per-request payload (elements) eligible for RedFuser-style
 /// host fusion. Fusion pays when individual requests are too small to
@@ -37,21 +39,30 @@ use super::router::{PoolRoute, Route, Router};
 /// run directly instead.
 const HOST_FUSE_MAX_N: usize = 32_768;
 
-/// Resolve one device preset name (shared by the CLI fleet-spec
+/// Resolve one device name — custom models (from `--device-file`)
+/// first, then the built-in presets (shared by the CLI fleet-spec
 /// parser and pool construction so the lookup and its error text
 /// cannot drift apart).
-fn resolve_device(name: &str) -> Result<DeviceConfig> {
-    DeviceConfig::by_name(name)
+fn resolve_device(name: &str, custom: &[DeviceConfig]) -> Result<DeviceConfig> {
+    custom
+        .iter()
+        .find(|d| d.name.eq_ignore_ascii_case(name))
+        .cloned()
+        .or_else(|| DeviceConfig::by_name(name))
         .ok_or_else(|| anyhow!("unknown pool device {name:?} (see `parred info`)"))
 }
 
-/// Parse a `--pool-devices` fleet spec into preset device names.
+/// Parse a `--pool-devices` fleet spec into canonical device names.
 ///
 /// Accepted forms:
 /// * `"4"` — that many `TeslaC2075` (backwards compatible count);
 /// * `"G80,TeslaC2075"` — heterogeneous comma-separated preset list;
 /// * `"TeslaC2075*3,G80"` — preset name with a `*count` multiplier.
-pub fn parse_fleet_spec(spec: &str) -> Result<Vec<String>> {
+///
+/// Names resolve against `custom` device models first (loaded from
+/// `--device-file` JSON), then the built-in presets — so a fleet spec
+/// like `"MyGPU*2,TeslaC2075"` composes a custom model with presets.
+pub fn parse_fleet_spec(spec: &str, custom: &[DeviceConfig]) -> Result<Vec<String>> {
     let spec = spec.trim();
     if spec.is_empty() {
         return Err(anyhow!("empty --pool-devices spec"));
@@ -76,7 +87,7 @@ pub fn parse_fleet_spec(spec: &str) -> Result<Vec<String>> {
             }
             None => (part, 1),
         };
-        let dev = resolve_device(name)?;
+        let dev = resolve_device(name, custom)?;
         if count == 0 {
             return Err(anyhow!("device multiplier must be >= 1 in {part:?}"));
         }
@@ -88,11 +99,16 @@ pub fn parse_fleet_spec(spec: &str) -> Result<Vec<String>> {
 /// Multi-device pool attachment for the serving path.
 #[derive(Debug, Clone)]
 pub struct PoolServeConfig {
-    /// Device preset names (heterogeneous allowed, e.g.
-    /// `["TeslaC2075", "TeslaC2075", "G80"]`).
+    /// Device names (heterogeneous allowed, e.g.
+    /// `["TeslaC2075", "TeslaC2075", "G80"]`); resolved against
+    /// `custom` first, then the built-in presets.
     pub devices: Vec<String>,
-    /// Minimum payload elements for `Route::Sharded`.
-    pub cutoff: usize,
+    /// Custom device models (from `--device-file`) that `devices`
+    /// entries and fleet specs may reference by name.
+    pub custom: Vec<DeviceConfig>,
+    /// Minimum payload elements for `Route::Sharded`; `None` lets the
+    /// scheduler derive the crossover from its throughput model.
+    pub cutoff: Option<usize>,
     /// Shard granularity per device (work-stealing slack).
     pub tasks_per_device: usize,
 }
@@ -101,7 +117,8 @@ impl Default for PoolServeConfig {
     fn default() -> Self {
         PoolServeConfig {
             devices: vec!["TeslaC2075".into(); 4],
-            cutoff: 1 << 20,
+            custom: Vec::new(),
+            cutoff: None,
             tasks_per_device: 2,
         }
     }
@@ -120,10 +137,18 @@ pub struct ServiceConfig {
     /// Pre-compile all batchable (rows) artifacts at startup so the
     /// first batches don't pay XLA compile time.
     pub warmup: bool,
-    /// Optional multi-device execution pool: artifact-less payloads of
-    /// at least `cutoff` elements route to the fleet instead of the
-    /// host library.
+    /// Optional multi-device execution pool: artifact-less payloads
+    /// past the pool crossover route to the fleet instead of the host
+    /// library.
     pub pool: Option<PoolServeConfig>,
+    /// Feedback-driven adaptation: fold observed throughput into the
+    /// scheduler's cutoffs and per-worker busy times into the shard
+    /// weights (`parred serve --adaptive`). Off = the scheduler stays
+    /// a deterministic function of its priors.
+    pub adaptive: bool,
+    /// Write the scheduler's model snapshot (JSON: derived cutoffs,
+    /// refined profiles, fleet factors) to this path at shutdown.
+    pub sched_snapshot: Option<String>,
 }
 
 impl Default for ServiceConfig {
@@ -135,6 +160,8 @@ impl Default for ServiceConfig {
             workers: 0,
             warmup: true,
             pool: None,
+            adaptive: false,
+            sched_snapshot: None,
         }
     }
 }
@@ -275,31 +302,37 @@ fn executor_loop(
     // now so the shutdown report attributes only this service's work
     // (the device-pool counters above are per-instance already).
     let host_pool_start = persistent::global_counters().unwrap_or_default();
-    let router = match (&pool, &cfg.pool) {
-        (Some(p), Some(pc)) => Router::with_pool(
-            runtime.catalog().clone(),
-            PoolRoute { devices: p.num_devices(), cutoff: pc.cutoff },
-        ),
-        _ => Router::new(runtime.catalog().clone()),
+    // One scheduler per service: the single place the cutoff ladder
+    // lives. The planner and router below are thin views over it, so
+    // their decisions cannot drift apart.
+    let workers = if cfg.workers == 0 {
+        std::thread::available_parallelism().map_or(4, |n| n.get())
+    } else {
+        cfg.workers
     };
+    let sched = Arc::new(Scheduler::new(SchedConfig {
+        workers,
+        artifacts_available: true,
+        adaptive: cfg.adaptive,
+        pool: pool.as_ref().map(|p| {
+            PoolPrior::for_fleet(p.devices(), cfg.pool.as_ref().and_then(|pc| pc.cutoff))
+        }),
+        ..SchedConfig::default()
+    }));
+    let router = Router::with_scheduler(runtime.catalog().clone(), sched.clone());
     let mut batcher = Batcher::new(cfg.batch_window);
-    let planner = Planner {
-        workers: if cfg.workers == 0 {
-            std::thread::available_parallelism().map_or(4, |n| n.get())
-        } else {
-            cfg.workers
-        },
-        pool_devices: pool.as_ref().map_or(0, |p| p.num_devices()),
-        pool_cutoff: cfg.pool.as_ref().map_or(1 << 21, |pc| pc.cutoff),
-        ..Planner::default()
-    };
+    let planner = Planner::new(sched.clone());
 
     let handle_req = |req: Request, batcher: &mut Batcher, metrics: &mut Metrics| {
         match router.route(req.shape_key()) {
             Route::Batched { .. } => batcher.push(req),
             Route::Full { artifact } => exec_full(&runtime, &gate, &artifact, req, metrics),
+            // Fleet-bound keys batch too: concurrent same-key requests
+            // stack into one fleet rows pass at flush time (pool-aware
+            // dynamic batching). Empty payloads run directly.
             Route::Sharded { .. } => match &pool {
-                Some(p) => exec_sharded(p, &gate, req, metrics),
+                Some(_) if !req.payload.is_empty() => batcher.push(req),
+                Some(p) => exec_sharded(p, &sched, &gate, req, metrics),
                 None => exec_host(&planner, &gate, req, metrics),
             },
             // Artifact-less keys still batch: same-key requests fuse
@@ -314,6 +347,23 @@ fn executor_loop(
                     exec_host(&planner, &gate, req, metrics)
                 }
             }
+        }
+    };
+
+    // Per-key flush policy, projected from the same routing the
+    // enqueue path used: rows artifacts when they exist, fleet fusion
+    // for scheduler-sharded keys, host fusion for the rest.
+    let policy = |k: &ShapeKey| -> KeyPolicy {
+        match router.route(*k) {
+            Route::Batched { sizes } => KeyPolicy::Rows(sizes),
+            // Route::Sharded implies a pool-configured scheduler.
+            Route::Sharded { .. } => KeyPolicy::FusePool,
+            // A key enqueued as fleet-bound stays fleet-bound even if
+            // adaptive cutoffs drifted while it queued: payloads past
+            // the host-fusion bound must never be stacked on the host
+            // (HOST_FUSE_MAX_N exists to bound that copy).
+            _ if pool.is_some() && k.n > HOST_FUSE_MAX_N => KeyPolicy::FusePool,
+            _ => KeyPolicy::FuseHost,
         }
     };
 
@@ -344,13 +394,18 @@ fn executor_loop(
             Err(RecvTimeoutError::Disconnected) => running = false,
         }
         let now = Instant::now();
-        for batch in
-            batcher.flush_ready(now, |k| router.catalog().rows_batch_sizes(k.op, k.dtype, k.n))
-        {
-            if batch.fused_host {
-                exec_host_fused(&planner, &gate, batch, &mut metrics);
-            } else {
-                exec_batch(&runtime, &gate, &router, batch, &mut metrics);
+        for batch in batcher.flush_ready(now, &policy) {
+            match batch.kind {
+                BatchKind::Rows => exec_batch(&runtime, &gate, &router, batch, &mut metrics),
+                BatchKind::FusedHost => exec_host_fused(&planner, &gate, batch, &mut metrics),
+                BatchKind::FusedPool => match &pool {
+                    Some(p) => exec_pool_fused(p, &sched, &gate, batch, &mut metrics),
+                    None => {
+                        for req in batch.requests {
+                            exec_host(&planner, &gate, req, &mut metrics);
+                        }
+                    }
+                },
             }
         }
     }
@@ -359,10 +414,19 @@ fn executor_loop(
     for req in batcher.drain_all() {
         match router.route(req.shape_key()) {
             Route::Full { artifact } => exec_full(&runtime, &gate, &artifact, req, &mut metrics),
-            Route::Sharded { .. } if pool.is_some() => {
-                exec_sharded(pool.as_ref().expect("checked"), &gate, req, &mut metrics)
-            }
+            Route::Sharded { .. } if pool.is_some() => exec_sharded(
+                pool.as_ref().expect("checked"),
+                &sched,
+                &gate,
+                req,
+                &mut metrics,
+            ),
             _ => exec_host(&planner, &gate, req, &mut metrics),
+        }
+    }
+    if let Some(path) = &cfg.sched_snapshot {
+        if let Err(e) = std::fs::write(path, sched.snapshot_json()) {
+            eprintln!("(could not write scheduler snapshot {path}: {e})");
         }
     }
     if let Some(p) = &pool {
@@ -380,11 +444,12 @@ fn executor_loop(
     metrics
 }
 
-/// Resolve preset names and spawn the fleet.
+/// Resolve device names (custom models first, then presets) and spawn
+/// the fleet.
 fn build_pool(pc: &PoolServeConfig) -> Result<DevicePool> {
     let mut devices = Vec::with_capacity(pc.devices.len());
     for name in &pc.devices {
-        devices.push(resolve_device(name)?);
+        devices.push(resolve_device(name, &pc.custom)?);
     }
     DevicePool::new(PoolConfig {
         devices,
@@ -440,7 +505,7 @@ fn exec_host_fused(planner: &Planner, gate: &Gate, batch: FlushedBatch, metrics:
     }
     metrics.record_fused(rows);
     let path = ExecPath::HostFused { batch: rows };
-    let width = planner.workers.max(1);
+    let width = planner.workers();
     match key.dtype {
         Dtype::F32 => {
             let mut stacked: Vec<f32> = Vec::with_capacity(rows * key.n);
@@ -471,13 +536,31 @@ fn exec_host_fused(planner: &Planner, gate: &Gate, batch: FlushedBatch, metrics:
     }
 }
 
-/// Shard a large artifact-less reduction across the device fleet.
-fn exec_sharded(pool: &DevicePool, gate: &Gate, req: Request, metrics: &mut Metrics) {
+/// Shard a large artifact-less reduction across the device fleet,
+/// under the scheduler's (possibly feedback-adjusted) plan, feeding
+/// the outcome back into the model.
+fn exec_sharded(
+    pool: &DevicePool,
+    sched: &Scheduler,
+    gate: &Gate,
+    req: Request,
+    metrics: &mut Metrics,
+) {
     let devices = pool.num_devices();
+    let key = req.shape_key();
+    let plan = sched.plan_shards(pool.devices(), key.n, pool.tasks_per_device());
     let value = match &req.payload {
-        HostVec::F32(v) => pool.reduce_elems(v, req.op).map(|(x, _)| HostScalar::F32(x)),
-        HostVec::I32(v) => pool.reduce_elems(v, req.op).map(|(x, _)| HostScalar::I32(x)),
+        HostVec::F32(v) => {
+            pool.reduce_elems_planned(v, req.op, &plan).map(|(x, o)| (HostScalar::F32(x), o))
+        }
+        HostVec::I32(v) => {
+            pool.reduce_elems_planned(v, req.op, &plan).map(|(x, o)| (HostScalar::I32(x), o))
+        }
     };
+    let value = value.map(|(scalar, out)| {
+        sched.observe_pool(key.op, key.dtype, key.n, &out);
+        scalar
+    });
     respond(
         gate,
         req,
@@ -485,6 +568,78 @@ fn exec_sharded(pool: &DevicePool, gate: &Gate, req: Request, metrics: &mut Metr
         ExecPath::Sharded { devices },
         metrics,
     );
+}
+
+/// Execute a fused fleet batch: same-key sharded requests stacked
+/// row-major and reduced in **one** device-fleet rows pass (pool-aware
+/// dynamic batching — the fleet-side mirror of `exec_host_fused`).
+fn exec_pool_fused(
+    pool: &DevicePool,
+    sched: &Scheduler,
+    gate: &Gate,
+    batch: FlushedBatch,
+    metrics: &mut Metrics,
+) {
+    let key = batch.key;
+    let rows = batch.requests.len();
+    if rows == 1 {
+        // A fused batch of one is just a sharded request; don't claim
+        // fusion in the metrics or the response path.
+        let req = batch.requests.into_iter().next().expect("one request");
+        return exec_sharded(pool, sched, gate, req, metrics);
+    }
+    metrics.record_pool_fused(rows);
+    let devices = pool.num_devices();
+    let path = ExecPath::PoolFused { batch: rows, devices };
+    let base = sched.plan_shards(pool.devices(), key.n, pool.tasks_per_device());
+    match key.dtype {
+        Dtype::F32 => {
+            let mut stacked: Vec<f32> = Vec::with_capacity(rows * key.n);
+            for req in &batch.requests {
+                let HostVec::F32(v) = &req.payload else {
+                    unreachable!("shape key guarantees f32 payloads")
+                };
+                stacked.extend_from_slice(v);
+            }
+            match pool.reduce_rows_elems(&stacked, key.n, key.op, &base) {
+                Ok((values, out)) => {
+                    sched.observe_pool(key.op, key.dtype, rows * key.n, &out);
+                    for (req, v) in batch.requests.into_iter().zip(values) {
+                        respond(gate, req, Ok(HostScalar::F32(v)), path, metrics);
+                    }
+                }
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    for req in batch.requests {
+                        respond(gate, req, Err(msg.clone()), path, metrics);
+                    }
+                }
+            }
+        }
+        Dtype::I32 => {
+            let mut stacked: Vec<i32> = Vec::with_capacity(rows * key.n);
+            for req in &batch.requests {
+                let HostVec::I32(v) = &req.payload else {
+                    unreachable!("shape key guarantees i32 payloads")
+                };
+                stacked.extend_from_slice(v);
+            }
+            match pool.reduce_rows_elems(&stacked, key.n, key.op, &base) {
+                Ok((values, out)) => {
+                    sched.observe_pool(key.op, key.dtype, rows * key.n, &out);
+                    for (req, v) in batch.requests.into_iter().zip(values) {
+                        respond(gate, req, Ok(HostScalar::I32(v)), path, metrics);
+                    }
+                }
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    for req in batch.requests {
+                        respond(gate, req, Err(msg.clone()), path, metrics);
+                    }
+                }
+            }
+        }
+    }
 }
 
 fn identity_payload(op: Op, dtype: Dtype, n: usize) -> HostVec {
@@ -643,35 +798,99 @@ mod tests {
 
     #[test]
     fn fleet_spec_count_form() {
-        assert_eq!(parse_fleet_spec("4").unwrap(), vec!["TeslaC2075"; 4]);
-        assert!(parse_fleet_spec("0").is_err());
-        assert!(parse_fleet_spec("").is_err());
+        assert_eq!(parse_fleet_spec("4", &[]).unwrap(), vec!["TeslaC2075"; 4]);
+        assert!(parse_fleet_spec("0", &[]).is_err());
+        assert!(parse_fleet_spec("", &[]).is_err());
+        assert!(parse_fleet_spec("   ", &[]).is_err());
     }
 
     #[test]
     fn fleet_spec_heterogeneous_names() {
-        let fleet = parse_fleet_spec("G80,TeslaC2075,AMD-GCN").unwrap();
+        let fleet = parse_fleet_spec("G80,TeslaC2075,AMD-GCN", &[]).unwrap();
         assert_eq!(fleet, vec!["G80", "TeslaC2075", "AMD-GCN"]);
         // Case-insensitive resolution canonicalizes the preset name.
-        let fleet = parse_fleet_spec("g80").unwrap();
+        let fleet = parse_fleet_spec("g80", &[]).unwrap();
         assert_eq!(fleet, vec!["G80"]);
-        assert!(parse_fleet_spec("H100").is_err());
+        assert!(parse_fleet_spec("H100", &[]).is_err());
     }
 
     #[test]
     fn fleet_spec_multipliers() {
-        let fleet = parse_fleet_spec("TeslaC2075*3, G80").unwrap();
+        let fleet = parse_fleet_spec("TeslaC2075*3, G80", &[]).unwrap();
         assert_eq!(fleet, vec!["TeslaC2075", "TeslaC2075", "TeslaC2075", "G80"]);
-        assert!(parse_fleet_spec("G80*0").is_err());
-        assert!(parse_fleet_spec("G80*x").is_err());
+        assert!(parse_fleet_spec("G80*0", &[]).is_err());
+        assert!(parse_fleet_spec("G80*x", &[]).is_err());
+    }
+
+    #[test]
+    fn fleet_spec_error_paths_name_the_problem() {
+        // Unknown preset: points at `parred info`.
+        let e = parse_fleet_spec("H100", &[]).unwrap_err().to_string();
+        assert!(e.contains("H100") && e.contains("parred info"), "{e}");
+        // Zero multiplier.
+        let e = parse_fleet_spec("G80*0", &[]).unwrap_err().to_string();
+        assert!(e.contains("multiplier"), "{e}");
+        // Unparseable multiplier.
+        let e = parse_fleet_spec("G80*two", &[]).unwrap_err().to_string();
+        assert!(e.contains("multiplier"), "{e}");
+        // Empty spec.
+        let e = parse_fleet_spec("", &[]).unwrap_err().to_string();
+        assert!(e.contains("empty"), "{e}");
+        // Zero count form.
+        let e = parse_fleet_spec("0", &[]).unwrap_err().to_string();
+        assert!(e.contains(">= 1"), "{e}");
+    }
+
+    fn custom_device() -> DeviceConfig {
+        DeviceConfig::from_json(
+            r#"{"name": "MyGPU", "num_sms": 20, "mem_bandwidth_gbps": 200.0}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn fleet_spec_mixes_device_file_models_with_presets() {
+        // A `--device-file` model is referenced by name inside the
+        // fleet spec, alongside preset names with multipliers.
+        let custom = vec![custom_device()];
+        let fleet = parse_fleet_spec("MyGPU,TeslaC2075*2", &custom).unwrap();
+        assert_eq!(fleet, vec!["MyGPU", "TeslaC2075", "TeslaC2075"]);
+        // Case-insensitive, and multipliers work on custom names too.
+        let fleet = parse_fleet_spec("mygpu*2, g80", &custom).unwrap();
+        assert_eq!(fleet, vec!["MyGPU", "MyGPU", "G80"]);
+        // Without the custom model the name is unknown.
+        assert!(parse_fleet_spec("MyGPU", &[]).is_err());
+    }
+
+    #[test]
+    fn custom_devices_shadow_presets_and_build_pools() {
+        // A custom model may even shadow a preset name; resolution
+        // prefers the custom list.
+        let shadow =
+            DeviceConfig::from_json(r#"{"name": "G80", "num_sms": 99}"#).unwrap();
+        let dev = resolve_device("g80", &[shadow.clone()]).unwrap();
+        assert_eq!(dev.num_sms, 99);
+
+        // Mixed fleets build a working pool end to end.
+        let pc = PoolServeConfig {
+            devices: parse_fleet_spec("MyGPU,TeslaC2075*2", &[custom_device()]).unwrap(),
+            custom: vec![custom_device()],
+            cutoff: Some(1 << 20),
+            tasks_per_device: 2,
+        };
+        let pool = build_pool(&pc).unwrap();
+        assert_eq!(pool.num_devices(), 3);
+        assert_eq!(pool.devices()[0].name, "MyGPU");
+        assert_eq!(pool.devices()[0].num_sms, 20);
+        assert_eq!(pool.devices()[2].name, "TeslaC2075");
     }
 
     #[test]
     fn fleet_specs_build_valid_pool_configs() {
         let pc = PoolServeConfig {
-            devices: parse_fleet_spec("TeslaC2075*2,G80").unwrap(),
-            cutoff: 1 << 20,
-            tasks_per_device: 2,
+            devices: parse_fleet_spec("TeslaC2075*2,G80", &[]).unwrap(),
+            cutoff: Some(1 << 20),
+            ..PoolServeConfig::default()
         };
         let pool = build_pool(&pc).unwrap();
         assert_eq!(pool.num_devices(), 3);

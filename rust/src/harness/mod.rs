@@ -8,6 +8,7 @@
 pub mod ablations;
 pub mod pool_scaling;
 pub mod report;
+pub mod sched_adapt;
 pub mod table1;
 pub mod table2;
 pub mod table3;

@@ -1,0 +1,216 @@
+//! Convergence of the feedback-driven shard re-planner
+//! ([`crate::sched`]): on a skewed heterogeneous fleet, iterate
+//! plan → observe per-device busy time → re-weight, and tabulate how
+//! the modeled wall-clock and imbalance move away from the static
+//! `modeled_throughput_gbps` split (iteration 0).
+//!
+//! Measurement is by deterministic *replay*: each device's shards run
+//! serially on a fresh simulator instance and their modeled seconds
+//! are summed per device — no host threads, no stealing, no timing
+//! jitter — so the table (and the tests/benches built on it) is
+//! exactly reproducible. The live pool reaches the same plans through
+//! [`crate::sched::Scheduler::plan_shards`] with stealing as the
+//! per-request safety net; what feedback removes is the *systematic*
+//! imbalance stealing would otherwise have to absorb every pass.
+//!
+//! Consumed by `cargo bench --bench sched` and `parred tables
+//! --sched`.
+
+use anyhow::Result;
+
+use super::report::Table;
+use crate::gpusim::ir::CombOp;
+use crate::gpusim::{DeviceConfig, Gpu};
+use crate::kernels::drivers;
+use crate::pool::ShardPlan;
+use crate::sched::{PoolPrior, SchedConfig, Scheduler};
+use crate::util::rng::Rng;
+
+/// One feedback iteration's measurement.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub iter: usize,
+    /// Modeled wall-clock of the plan (max per-device busy seconds).
+    pub modeled_wall_s: f64,
+    /// `max/mean - 1` over per-device busy (0 = perfectly balanced).
+    pub imbalance: f64,
+    /// Fraction of planned work stealing would have to relocate to
+    /// balance the fleet: `Σ max(0, busy_i - mean) / Σ busy`.
+    pub steal_pressure: f64,
+    /// Element share per device, in device order.
+    pub shares: Vec<f64>,
+}
+
+/// Feedback iterations the table sweeps (iteration 0 is the static
+/// proportional split: factors are all 1 until feedback arrives).
+pub const ITERS: usize = 8;
+
+/// The ISSUE's skewed fleet: one G80 among Fermis — the static
+/// bandwidth×occupancy proxy and the machine's actual behavior
+/// disagree most across architecture generations.
+pub fn skewed_fleet() -> Vec<DeviceConfig> {
+    vec![
+        DeviceConfig::g80(),
+        DeviceConfig::tesla_c2075(),
+        DeviceConfig::tesla_c2075(),
+        DeviceConfig::tesla_c2075(),
+    ]
+}
+
+/// Deterministically replay `plan` on `devices`: per device, run its
+/// shards serially on a fresh simulator and sum the modeled seconds.
+pub fn replay(
+    devices: &[DeviceConfig],
+    data: &[f64],
+    plan: &ShardPlan,
+    block: u32,
+    unroll: u32,
+) -> Result<Vec<f64>> {
+    let mut gpus: Vec<Gpu> = devices.iter().cloned().map(Gpu::new).collect();
+    let mut busy = vec![0.0f64; devices.len()];
+    for s in &plan.shards {
+        let dev_block = block.min(devices[s.device].max_block_threads);
+        let out = drivers::jradi_reduce(
+            &mut gpus[s.device],
+            &data[s.start..s.end],
+            CombOp::Add,
+            unroll,
+            dev_block,
+        )?;
+        busy[s.device] += out.run.total_time_s();
+    }
+    Ok(busy)
+}
+
+/// Summarize a busy vector into (wall, imbalance, steal pressure).
+pub fn summarize(busy: &[f64]) -> (f64, f64, f64) {
+    let total: f64 = busy.iter().sum();
+    let mean = total / busy.len().max(1) as f64;
+    let wall = busy.iter().cloned().fold(0.0, f64::max);
+    if mean.is_nan() || mean <= 0.0 {
+        return (wall, 0.0, 0.0);
+    }
+    let excess: f64 = busy.iter().map(|b| (b - mean).max(0.0)).sum();
+    (wall, wall / mean - 1.0, excess / total)
+}
+
+/// Run the convergence sweep on `fleet` with `tasks_per_device`
+/// stealing slack.
+pub fn run_fleet(
+    fleet: &[DeviceConfig],
+    n: usize,
+    block: u32,
+    seed: u64,
+    tasks_per_device: usize,
+) -> Result<Vec<Row>> {
+    let mut rng = Rng::new(seed);
+    let data: Vec<f64> = (0..n).map(|_| rng.i32_in(-100, 100) as f64).collect();
+    let sched = Scheduler::new(SchedConfig {
+        adaptive: true,
+        pool: Some(PoolPrior::for_fleet(fleet, None)),
+        ..SchedConfig::default()
+    });
+    let mut rows = Vec::with_capacity(ITERS);
+    for iter in 0..ITERS {
+        let plan = sched.plan_shards(fleet, n, tasks_per_device);
+        let busy = replay(fleet, &data, &plan, block, 8)?;
+        let (wall, imbalance, pressure) = summarize(&busy);
+        let shares: Vec<f64> = (0..fleet.len())
+            .map(|d| {
+                plan.shards.iter().filter(|s| s.device == d).map(|s| s.len()).sum::<usize>()
+                    as f64
+                    / n.max(1) as f64
+            })
+            .collect();
+        rows.push(Row { iter, modeled_wall_s: wall, imbalance, steal_pressure: pressure, shares });
+        sched.observe_busy(&busy);
+    }
+    Ok(rows)
+}
+
+/// The default sweep: the ISSUE's `G80,TeslaC2075*3` fleet.
+pub fn run(n: usize, block: u32, seed: u64) -> Result<Vec<Row>> {
+    run_fleet(&skewed_fleet(), n, block, seed, 2)
+}
+
+/// The convergence table.
+pub fn table(n: usize, rows: &[Row]) -> Table {
+    let mut t = Table::new(
+        format!("Adaptive re-planning — G80 + 3x TeslaC2075, N={n} (iter 0 = static split)"),
+        &["Iter", "Modeled wall (ms)", "Imbalance %", "Steal pressure %", "Shares %"],
+    );
+    for r in rows {
+        t.row(vec![
+            r.iter.to_string(),
+            format!("{:.4}", r.modeled_wall_s * 1e3),
+            format!("{:.2}", r.imbalance * 100.0),
+            format!("{:.2}", r.steal_pressure * 100.0),
+            r.shares.iter().map(|s| format!("{:.1}", s * 100.0)).collect::<Vec<_>>().join("/"),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn replay_is_deterministic_and_covers_the_fleet() {
+        let fleet = skewed_fleet();
+        let data: Vec<f64> = (0..1 << 16).map(|i| (i % 7) as f64).collect();
+        let plan = ShardPlan::proportional(&fleet, data.len(), 2);
+        let a = replay(&fleet, &data, &plan, 256, 8).unwrap();
+        let b = replay(&fleet, &data, &plan, 256, 8).unwrap();
+        assert_eq!(a, b, "replay must be bit-deterministic");
+        assert_eq!(a.len(), fleet.len());
+        assert!(a.iter().all(|&s| s > 0.0), "every device works: {a:?}");
+    }
+
+    #[test]
+    fn feedback_never_worsens_the_static_split() {
+        // On the ISSUE's fleet the proxy may be near-correct or not —
+        // either way the feedback loop must end at or below the static
+        // split's wall and imbalance (up to shard-rounding noise).
+        let rows = run(1 << 18, 256, 42).unwrap();
+        assert_eq!(rows.len(), ITERS);
+        let first = &rows[0];
+        let last = &rows[ITERS - 1];
+        assert!(
+            last.modeled_wall_s <= first.modeled_wall_s * 1.02,
+            "wall {} -> {}",
+            first.modeled_wall_s,
+            last.modeled_wall_s
+        );
+        assert!(
+            last.imbalance <= first.imbalance + 0.02,
+            "imbalance {} -> {}",
+            first.imbalance,
+            last.imbalance
+        );
+        for r in &rows {
+            let total: f64 = r.shares.iter().sum();
+            assert!((total - 1.0).abs() < 1e-9, "shares must tile: {:?}", r.shares);
+        }
+    }
+
+    #[test]
+    fn summarize_flags_imbalance() {
+        let (wall, imb, pressure) = summarize(&[1.0, 1.0, 1.0, 1.0]);
+        assert_eq!(wall, 1.0);
+        assert!(imb.abs() < 1e-12 && pressure.abs() < 1e-12);
+        let (wall, imb, pressure) = summarize(&[3.0, 1.0, 1.0, 1.0]);
+        assert_eq!(wall, 3.0);
+        assert!(imb > 0.9 && pressure > 0.2, "imb {imb} pressure {pressure}");
+        let (_, imb, pressure) = summarize(&[0.0, 0.0]);
+        assert_eq!((imb, pressure), (0.0, 0.0));
+    }
+
+    #[test]
+    fn renders() {
+        let rows = run(1 << 16, 256, 7).unwrap();
+        let md = table(1 << 16, &rows).markdown();
+        assert!(md.contains("Iter"), "{md}");
+        assert!(md.contains("Steal pressure"), "{md}");
+    }
+}

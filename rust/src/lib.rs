@@ -25,9 +25,13 @@
 //!   op-monomorphized hot loops ([`reduce::combiner`]);
 //!   [`pool`] shards one reduction across a fleet of simulated
 //!   devices behind a work-stealing scheduler and combines partials
-//!   host-side (Kahan-compensated for float sums); [`harness`]
-//!   regenerates every table and figure plus the pool's device-count
-//!   scaling table.
+//!   host-side (Kahan-compensated for float sums); [`sched`] is the
+//!   feedback-driven adaptive scheduler — the single cutoff ladder
+//!   behind planning and routing, with EWMA-observed throughput
+//!   deriving the crossovers and per-worker busy times re-weighting
+//!   shard plans; [`harness`] regenerates every table and figure plus
+//!   the pool's device-count scaling and the scheduler's convergence
+//!   tables.
 //!
 //! ## Quickstart
 //!
@@ -51,6 +55,7 @@ pub mod kernels;
 pub mod pool;
 pub mod reduce;
 pub mod runtime;
+pub mod sched;
 pub mod util;
 
 /// Crate-wide result type.

@@ -39,6 +39,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "artifacts", "fast", "help",
         "pool", "pool-devices", "pool-cutoff",
         "host-workers",
+        "sched", "adaptive", "sched-snapshot",
     ];
     let args = Args::parse(argv, &allowed)?;
     // Size the process-wide persistent host runtime before anything
@@ -74,7 +75,8 @@ USAGE: parred <info|tables|sim|reduce|serve> [options]
       [--device-file my_gpu.json] [--n 5533214] [--f 8] [--block 256] [--op sum]
   reduce --n N [--op sum] [--dtype f32] [--backend host|pjrt] [--artifacts DIR]
   serve [--requests 200] [--batch-window-us 200] [--payload 65536]
-        [--artifacts DIR] [--pool=1 --pool-devices SPEC --pool-cutoff 1048576]
+        [--artifacts DIR] [--pool=1 --pool-devices SPEC [--pool-cutoff N]]
+        [--adaptive] [--sched-snapshot PATH]
         end-to-end serving driver (--pool shards large payloads
         across a fleet of simulated devices)
 
@@ -85,9 +87,19 @@ USAGE: parred <info|tables|sim|reduce|serve> [options]
 
   --pool-devices accepts a count (`4` = 4x TeslaC2075) or a
   heterogeneous fleet spec: `G80,TeslaC2075` / `TeslaC2075*3,G80`.
+  With `--device-file my_gpu.json` the custom model is referenced
+  by name inside the spec: `MyGPU*2,TeslaC2075`. Without
+  --pool-cutoff the scheduler derives the host->fleet crossover
+  from its throughput model.
+
+  serve --adaptive folds observed throughput into the scheduler's
+  cutoffs and per-worker busy times into the shard weights;
+  --sched-snapshot PATH dumps the model (JSON) at shutdown.
 
   tables --pool emits the device-count scaling table of the
-  multi-device execution pool (1/2/4/8 x TeslaC2075 at N).";
+  multi-device execution pool (1/2/4/8 x TeslaC2075 at N);
+  tables --sched emits the adaptive re-planner's convergence table
+  (G80 + 3x TeslaC2075, iter 0 = static split).";
 
 fn info(args: &Args) -> Result<()> {
     println!("devices:");
@@ -124,7 +136,8 @@ fn tables(args: &Args) -> Result<()> {
     let run_all = which_table.is_none()
         && which_figure.is_none()
         && !args.flag("ablations")
-        && !args.flag("pool");
+        && !args.flag("pool")
+        && !args.flag("sched");
 
     let mut emitted = Vec::new();
     if run_all || which_table == Some("1") {
@@ -150,6 +163,11 @@ fn tables(args: &Args) -> Result<()> {
     if run_all || args.flag("pool") {
         let rows = parred::harness::pool_scaling::run(n, block, seed)?;
         emitted.push(("pool_scaling.csv", parred::harness::pool_scaling::table(n, &rows)));
+    }
+    if run_all || args.flag("sched") {
+        let ns = n.min(1 << 18);
+        let rows = parred::harness::sched_adapt::run(ns, block, seed)?;
+        emitted.push(("sched_adapt.csv", parred::harness::sched_adapt::table(ns, &rows)));
     }
     if run_all || args.flag("ablations") {
         emitted.push(("ablation_tree.csv", ablations::tree_style(n.min(1 << 21), block, seed)?));
@@ -281,18 +299,34 @@ fn serve(args: &Args) -> Result<()> {
         parse_fleet_spec, PoolServeConfig, ServiceConfig, TraceConfig,
     };
     let dir = args.get_or("artifacts", "artifacts").to_string();
-    // `--pool` as a bare flag or with a truthy value enables the
-    // fleet; `--pool=0|false|no|off` keeps it disabled.
-    let pool_enabled = args.flag("pool")
-        || args
-            .get("pool")
-            .is_some_and(|v| !matches!(v, "0" | "false" | "no" | "off"));
-    let pool = if pool_enabled {
+    // A bare flag or any truthy value enables; `=0|false|no|off`
+    // keeps it disabled.
+    let truthy = |name: &str| {
+        args.flag(name)
+            || args
+                .get(name)
+                .is_some_and(|v| !matches!(v, "0" | "false" | "no" | "off"))
+    };
+    let pool = if truthy("pool") {
+        // Custom device models (from `--device-file` JSON) are
+        // resolvable by name inside the fleet spec, composing with
+        // the presets: `--device-file my_gpu.json --pool-devices
+        // MyGPU*2,TeslaC2075`.
+        let custom = match args.get("device-file") {
+            Some(path) => vec![DeviceConfig::from_json(&std::fs::read_to_string(path)?)?],
+            None => Vec::new(),
+        };
         // Count form (`4`) or heterogeneous spec (`G80,TeslaC2075*2`).
-        let devices = parse_fleet_spec(args.get_or("pool-devices", "4"))?;
+        let devices = parse_fleet_spec(args.get_or("pool-devices", "4"), &custom)?;
         Some(PoolServeConfig {
             devices,
-            cutoff: args.get_usize("pool-cutoff", 1 << 20)?,
+            custom,
+            // Pin the crossover only when asked; otherwise the
+            // scheduler derives it from its throughput model.
+            cutoff: match args.get("pool-cutoff") {
+                Some(_) => Some(args.get_usize("pool-cutoff", 1 << 20)?),
+                None => None,
+            },
             tasks_per_device: 2,
         })
     } else {
@@ -305,6 +339,8 @@ fn serve(args: &Args) -> Result<()> {
         workers: args.get_usize("workers", 0)?,
         warmup: !args.flag("fast"),
         pool,
+        adaptive: truthy("adaptive"),
+        sched_snapshot: args.get("sched-snapshot").map(str::to_string),
     };
     let trace = TraceConfig {
         requests: args.get_usize("requests", 200)?,

@@ -69,6 +69,13 @@ pub struct PoolConfig {
     /// Chunks each device's allocation is cut into — more chunks mean
     /// finer-grained stealing at the cost of extra launch overhead.
     pub tasks_per_device: usize,
+    /// Optional pacing: after finishing a shard, a worker sleeps
+    /// `modeled_seconds × pace` before reporting, so host-time
+    /// concurrency mirrors the modeled fleet and steal dynamics
+    /// reflect modeled imbalance rather than host simulation speed.
+    /// Used by the adaptive-scheduler harness and tests; 0 (the
+    /// default) disables it.
+    pub pace: f64,
 }
 
 impl Default for PoolConfig {
@@ -78,6 +85,7 @@ impl Default for PoolConfig {
             block: 256,
             unroll: 8,
             tasks_per_device: 2,
+            pace: 0.0,
         }
     }
 }
@@ -151,6 +159,9 @@ impl DevicePool {
         if cfg.unroll == 0 || cfg.unroll > 64 {
             bail!("pool unroll factor must be in 1..=64, got {}", cfg.unroll);
         }
+        if !cfg.pace.is_finite() || cfg.pace < 0.0 {
+            bail!("pool pace must be finite and >= 0, got {}", cfg.pace);
+        }
         for d in &cfg.devices {
             d.validate()?;
         }
@@ -163,6 +174,7 @@ impl DevicePool {
             let dev = dev.clone();
             let block = cfg.block.min(dev.max_block_threads);
             let unroll = cfg.unroll;
+            let pace = cfg.pace;
             let handle = std::thread::Builder::new()
                 .name(format!("parred-pool-{i}-{}", dev.name))
                 .spawn(move || {
@@ -175,7 +187,7 @@ impl DevicePool {
                         }
                     }
                     let _guard = DeadFlag(dead);
-                    worker_loop(i, dev, block, unroll, queues);
+                    worker_loop(i, dev, block, unroll, pace, queues);
                 })
                 .with_context(|| format!("spawning pool worker {i}"))?;
             handles.push(handle);
@@ -189,6 +201,12 @@ impl DevicePool {
 
     pub fn devices(&self) -> &[DeviceConfig] {
         &self.cfg.devices
+    }
+
+    /// Shard granularity per device (work-stealing slack); external
+    /// planners ([`crate::sched::Scheduler::plan_shards`]) match it.
+    pub fn tasks_per_device(&self) -> usize {
+        self.cfg.tasks_per_device
     }
 
     /// Lifetime queue counters (tasks executed, steals, peak depth).
@@ -230,10 +248,11 @@ impl DevicePool {
         let n = payload.len();
         let mut cursor = 0usize;
         for s in &plan.shards {
-            if s.start != cursor || s.end <= s.start || s.end > n {
+            if s.start != cursor || s.end <= s.start || s.end > n || s.device >= self.num_devices()
+            {
                 bail!(
-                    "shard plan must tile [0, {n}) contiguously with non-empty shards; \
-                     found {s:?} at offset {cursor}"
+                    "shard plan must tile [0, {n}) contiguously with non-empty shards on \
+                     known devices; found {s:?} at offset {cursor}"
                 );
             }
             cursor = s.end;
@@ -298,10 +317,138 @@ impl DevicePool {
     /// one chunk-claiming pass over the persistent host runtime
     /// ([`crate::reduce::persistent`]) instead of a serial copy.
     pub fn reduce_elems<T: Element>(&self, data: &[T], op: Op) -> Result<(T, PoolOutcome)> {
+        let plan = self.plan(data.len());
+        self.reduce_elems_planned(data, op, &plan)
+    }
+
+    /// Typed entry point under an explicit shard plan — how the
+    /// adaptive scheduler routes requests with feedback-adjusted
+    /// splits ([`crate::sched::Scheduler::plan_shards`]).
+    pub fn reduce_elems_planned<T: Element>(
+        &self,
+        data: &[T],
+        op: Op,
+        plan: &ShardPlan,
+    ) -> Result<(T, PoolOutcome)> {
         let embedded: Vec<f64> = crate::reduce::persistent::global().map_f64(data);
-        let plan = self.plan(embedded.len());
-        let out = self.reduce_shared(Arc::new(embedded), CombOp::from(op), &plan)?;
+        let out = self.reduce_shared(Arc::new(embedded), CombOp::from(op), plan)?;
         Ok((T::from_f64(out.value), out))
+    }
+
+    /// Fused rows pass: reduce every row of a `rows × cols` row-major
+    /// matrix in **one** fleet dispatch (the pool-side analogue of the
+    /// coordinator's RedFuser-style host fusion). `base` is the shard
+    /// plan for a single row (it must tile `[0, cols)`); it is
+    /// replicated across rows, all tasks enter the steal queues as one
+    /// wave (every device stays busy across row boundaries — one
+    /// queue round-trip instead of `rows`), and each row's partials
+    /// are combined in shard order (Neumaier-compensated for float
+    /// sums), so per-row values are deterministic regardless of which
+    /// worker ran what.
+    ///
+    /// Returns the per-row values plus the aggregate outcome; the
+    /// outcome's `value` is the combine over all partials (the grand
+    /// total for sums) and its counters span the whole pass.
+    pub fn reduce_rows_elems<T: Element>(
+        &self,
+        data: &[T],
+        cols: usize,
+        op: Op,
+        base: &ShardPlan,
+    ) -> Result<(Vec<T>, PoolOutcome)> {
+        if cols == 0 {
+            bail!("fused rows pass needs cols >= 1");
+        }
+        if data.len() % cols != 0 {
+            bail!("data is not a whole number of rows ({} % {cols} != 0)", data.len());
+        }
+        let workers = self.num_devices();
+        let mut cursor = 0usize;
+        for s in &base.shards {
+            if s.start != cursor || s.end <= s.start || s.end > cols || s.device >= workers {
+                bail!(
+                    "row plan must tile [0, {cols}) contiguously on known devices; \
+                     found {s:?} at offset {cursor}"
+                );
+            }
+            cursor = s.end;
+        }
+        if cursor != cols {
+            bail!("row plan covers {cursor} of {cols} elements");
+        }
+        let rows = data.len() / cols;
+        if rows == 0 {
+            return Ok((
+                Vec::new(),
+                PoolOutcome {
+                    value: CombOp::from(op).identity(),
+                    shards: 0,
+                    steals: 0,
+                    modeled_wall_s: 0.0,
+                    per_worker_busy_s: vec![0.0; workers],
+                },
+            ));
+        }
+        let cop = CombOp::from(op);
+        let payload: Arc<Vec<f64>> = Arc::new(crate::reduce::persistent::global().map_f64(data));
+        let per_row = base.shards.len();
+        let total = rows * per_row;
+        let (tx, rx) = mpsc::channel::<TaskResult>();
+        let mut tasks = Vec::with_capacity(total);
+        for r in 0..rows {
+            for (i, s) in base.shards.iter().enumerate() {
+                tasks.push((
+                    s.device,
+                    Task {
+                        id: r * per_row + i,
+                        data: payload.clone(),
+                        shard: Shard {
+                            device: s.device,
+                            start: r * cols + s.start,
+                            end: r * cols + s.end,
+                        },
+                        op: cop,
+                        reply: tx.clone(),
+                    },
+                ));
+            }
+        }
+        self.queues.push_all(tasks);
+        drop(tx);
+
+        let mut partials = vec![cop.identity(); total];
+        let mut busy = vec![0.0f64; workers];
+        let mut steals = 0u64;
+        for _ in 0..total {
+            let r = rx.recv_timeout(Duration::from_secs(300)).map_err(|_| {
+                anyhow!(
+                    "device pool did not respond (workers dead: {})",
+                    self.workers_dead.load(Ordering::Relaxed)
+                )
+            })?;
+            match r.outcome {
+                Ok((value, modeled_s)) => {
+                    partials[r.id] = value;
+                    busy[r.worker] += modeled_s;
+                    steals += r.stolen as u64;
+                }
+                Err(e) => bail!("row shard {} failed on worker {}: {e}", r.id, r.worker),
+            }
+        }
+
+        let values: Vec<T> = (0..rows)
+            .map(|r| T::from_f64(combine(cop, &partials[r * per_row..(r + 1) * per_row])))
+            .collect();
+        Ok((
+            values,
+            PoolOutcome {
+                value: combine(cop, &partials),
+                shards: total,
+                steals,
+                modeled_wall_s: busy.iter().cloned().fold(0.0, f64::max),
+                per_worker_busy_s: busy,
+            },
+        ))
     }
 }
 
@@ -325,13 +472,34 @@ fn combine(op: CombOp, partials: &[f64]) -> f64 {
 
 /// Worker main: owns this device's `Gpu`, drains its queue (stealing
 /// when dry), runs the paper's kernel per shard, reports partials.
-fn worker_loop(me: usize, dev: DeviceConfig, block: u32, unroll: u32, queues: Arc<StealQueues<Task>>) {
+/// With pacing on, the worker holds the shard for `modeled × pace`
+/// host seconds before reporting — the host-time image of the modeled
+/// device being busy, which is what makes steal counts meaningful to
+/// the adaptive scheduler's feedback loop.
+fn worker_loop(
+    me: usize,
+    dev: DeviceConfig,
+    block: u32,
+    unroll: u32,
+    pace: f64,
+    queues: Arc<StealQueues<Task>>,
+) {
     let mut gpu = Gpu::new(dev);
     while let Some((task, stolen)) = queues.pop(me) {
         let slice = &task.data[task.shard.start..task.shard.end];
         let outcome = drivers::jradi_reduce(&mut gpu, slice, task.op, unroll, block)
             .map(|o| (o.value, o.run.total_time_s()))
             .map_err(|e| format!("{e:#}"));
+        if pace > 0.0 {
+            if let Ok((_, modeled_s)) = &outcome {
+                // Cap a single paced hold so a pathological plan can
+                // never wedge a worker for minutes.
+                let hold = (modeled_s * pace).min(10.0);
+                if hold > 0.0 {
+                    std::thread::sleep(Duration::from_secs_f64(hold));
+                }
+            }
+        }
         let _ = task.reply.send(TaskResult { id: task.id, worker: me, stolen, outcome });
     }
 }
@@ -440,6 +608,83 @@ mod tests {
         assert!(DevicePool::new(PoolConfig { devices: vec![], ..PoolConfig::default() }).is_err());
         assert!(DevicePool::new(PoolConfig { block: 100, ..PoolConfig::default() }).is_err());
         assert!(DevicePool::new(PoolConfig { unroll: 0, ..PoolConfig::default() }).is_err());
+        assert!(DevicePool::new(PoolConfig { pace: -1.0, ..PoolConfig::default() }).is_err());
+        assert!(DevicePool::new(PoolConfig { pace: f64::NAN, ..PoolConfig::default() }).is_err());
+    }
+
+    #[test]
+    fn planned_reduce_matches_scalar_under_skewed_weights() {
+        let pool = DevicePool::new(PoolConfig::homogeneous(DeviceConfig::tesla_c2075(), 3))
+            .unwrap();
+        let data = ints(70_001, 13);
+        // A deliberately lopsided (but valid) weighted plan.
+        let plan = ShardPlan::proportional_weighted(&[5.0, 1.0, 0.25], data.len(), 2);
+        for op in [Op::Sum, Op::Min, Op::Max] {
+            let (got, out) = pool.reduce_elems_planned(&data, op, &plan).unwrap();
+            assert_eq!(got, scalar::reduce(&data, op), "{op}");
+            assert!(out.shards >= 3);
+        }
+    }
+
+    #[test]
+    fn fused_rows_match_per_row_scalar() {
+        let pool = DevicePool::new(PoolConfig::homogeneous(DeviceConfig::tesla_c2075(), 3))
+            .unwrap();
+        let cols = 4_099;
+        let rows = 5;
+        let data = ints(rows * cols, 17);
+        let base = pool.plan(cols);
+        for op in [Op::Sum, Op::Min, Op::Max] {
+            let (got, out) = pool.reduce_rows_elems(&data, cols, op, &base).unwrap();
+            let want: Vec<i32> = data.chunks(cols).map(|r| scalar::reduce(r, op)).collect();
+            assert_eq!(got, want, "{op}");
+            assert_eq!(out.shards, rows * base.shards.len());
+            assert!(out.modeled_wall_s > 0.0);
+        }
+        // Float rows stay Neumaier-close per row.
+        let fdata = Rng::new(19).f32_vec(rows * cols, -1.0, 1.0);
+        let (got, _) = pool.reduce_rows_elems(&fdata, cols, Op::Sum, &base).unwrap();
+        for (r, v) in got.iter().enumerate() {
+            let want = kahan::sum_f64(&fdata[r * cols..(r + 1) * cols]);
+            let rel = (*v as f64 - want).abs() / want.abs().max(1.0);
+            assert!(rel < 1e-5, "row {r}: {v} vs {want} (rel {rel:.2e})");
+        }
+    }
+
+    #[test]
+    fn fused_rows_reject_bad_shapes_and_plans() {
+        let pool = DevicePool::new(PoolConfig::homogeneous(DeviceConfig::tesla_c2075(), 2))
+            .unwrap();
+        let base = pool.plan(10);
+        let data = ints(25, 3); // not a whole number of 10-wide rows
+        assert!(pool.reduce_rows_elems(&data, 10, Op::Sum, &base).is_err());
+        assert!(pool.reduce_rows_elems(&data[..20], 0, Op::Sum, &base).is_err());
+        // A plan for the wrong row width is rejected up front.
+        let wrong = pool.plan(11);
+        assert!(pool.reduce_rows_elems(&data[..20], 10, Op::Sum, &wrong).is_err());
+        // A plan naming an unknown device is rejected up front.
+        let bad = ShardPlan { shards: vec![Shard { device: 7, start: 0, end: 10 }] };
+        assert!(pool.reduce_rows_elems(&data[..20], 10, Op::Sum, &bad).is_err());
+        // Zero rows is fine and returns no values.
+        let (vals, out) = pool.reduce_rows_elems(&data[..0], 10, Op::Sum, &base).unwrap();
+        assert!(vals.is_empty());
+        assert_eq!(out.shards, 0);
+    }
+
+    #[test]
+    fn paced_pool_stays_exact() {
+        // Pacing changes host-time concurrency only — values and
+        // modeled times must be identical to the unpaced pool.
+        let data: Vec<f64> = ints(20_000, 23).iter().map(|&x| x as f64).collect();
+        let want: f64 = data.iter().sum();
+        let paced = DevicePool::new(PoolConfig {
+            pace: 50.0, // modeled µs-scale shards -> ms-scale holds
+            ..PoolConfig::homogeneous(DeviceConfig::tesla_c2075(), 2)
+        })
+        .unwrap();
+        let out = paced.reduce(&data, CombOp::Add).unwrap();
+        assert_eq!(out.value, want);
+        assert!(out.modeled_wall_s > 0.0);
     }
 
     #[test]

@@ -44,15 +44,34 @@ impl ShardPlan {
     /// are never emitted.
     pub fn proportional(devices: &[DeviceConfig], n: usize, tasks_per_device: usize) -> ShardPlan {
         assert!(!devices.is_empty(), "shard plan needs at least one device");
-        let tasks_per_device = tasks_per_device.max(1);
         let weights: Vec<f64> = devices.iter().map(|d| d.modeled_throughput_gbps()).collect();
-        let total_w: f64 = weights.iter().sum();
+        Self::proportional_weighted(&weights, n, tasks_per_device)
+    }
+
+    /// Split `n` elements proportional to arbitrary per-device
+    /// weights — the entry point of the adaptive scheduler
+    /// ([`crate::sched::Scheduler::plan_shards`]), which scales the
+    /// static modeled throughput by learned busy-time factors.
+    ///
+    /// Weights are sanitized (non-finite or non-positive entries count
+    /// as zero; an all-zero vector degrades to an even split), so the
+    /// plan tiles `[0, n)` exactly under *any* feedback history.
+    pub fn proportional_weighted(weights: &[f64], n: usize, tasks_per_device: usize) -> ShardPlan {
+        assert!(!weights.is_empty(), "shard plan needs at least one device");
+        let tasks_per_device = tasks_per_device.max(1);
+        let mut weights: Vec<f64> =
+            weights.iter().map(|&w| if w.is_finite() && w > 0.0 { w } else { 0.0 }).collect();
+        let mut total_w: f64 = weights.iter().sum();
+        if total_w <= 0.0 {
+            weights.iter_mut().for_each(|w| *w = 1.0);
+            total_w = weights.len() as f64;
+        }
 
         // Largest-remainder apportionment of n over the weights.
         let ideal: Vec<f64> = weights.iter().map(|w| n as f64 * w / total_w).collect();
         let mut alloc: Vec<usize> = ideal.iter().map(|x| x.floor() as usize).collect();
         let assigned: usize = alloc.iter().sum();
-        let mut order: Vec<usize> = (0..devices.len()).collect();
+        let mut order: Vec<usize> = (0..weights.len()).collect();
         order.sort_by(|&a, &b| {
             (ideal[b] - ideal[b].floor())
                 .total_cmp(&(ideal[a] - ideal[a].floor()))
@@ -180,6 +199,43 @@ mod tests {
         covers_exactly(&plan, 1000);
         assert_eq!(plan.shards.len(), 8);
         assert!(plan.shards.iter().all(|s| s.device == 0));
+    }
+
+    #[test]
+    fn weighted_split_follows_weights() {
+        let plan = ShardPlan::proportional_weighted(&[1.0, 3.0], 40_000, 1);
+        covers_exactly(&plan, 40_000);
+        let by_dev: Vec<usize> = (0..2)
+            .map(|d| plan.shards.iter().filter(|s| s.device == d).map(Shard::len).sum())
+            .collect();
+        assert_eq!(by_dev, vec![10_000, 30_000]);
+    }
+
+    #[test]
+    fn degenerate_weights_degrade_to_even_split() {
+        for weights in [
+            vec![0.0, 0.0, 0.0],
+            vec![f64::NAN, -1.0, f64::INFINITY],
+            vec![0.0; 3],
+        ] {
+            let plan = ShardPlan::proportional_weighted(&weights, 3000, 1);
+            covers_exactly(&plan, 3000);
+            for d in 0..3 {
+                let got: usize =
+                    plan.shards.iter().filter(|s| s.device == d).map(Shard::len).sum();
+                assert_eq!(got, 1000, "weights {weights:?} device {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn partially_degenerate_weights_starve_only_the_bad_entries() {
+        let plan = ShardPlan::proportional_weighted(&[f64::NAN, 2.0, 0.0], 10_000, 2);
+        covers_exactly(&plan, 10_000);
+        let by_dev: Vec<usize> = (0..3)
+            .map(|d| plan.shards.iter().filter(|s| s.device == d).map(Shard::len).sum())
+            .collect();
+        assert_eq!(by_dev, vec![0, 10_000, 0]);
     }
 
     #[test]

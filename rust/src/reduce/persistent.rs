@@ -66,8 +66,9 @@ const OVERSUB: usize = 2;
 
 /// Inputs smaller than this skip the pool entirely (the wake-up
 /// round-trip costs a few microseconds — more than the reduction).
-/// [`crate::reduce::plan::Planner`]'s `seq_cutoff` defaults to this
-/// value so the planner's ladder matches what actually executes.
+/// The adaptive scheduler's sequential cutoff is floored at this
+/// value ([`crate::sched::SchedConfig::seq_floor`]) so the planning
+/// ladder matches what actually executes.
 pub const SEQ_FALLBACK: usize = 2 * MIN_CHUNK_ELEMS;
 
 /// Poison-tolerant lock: a panic in one chunk closure must not wedge

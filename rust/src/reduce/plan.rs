@@ -1,13 +1,25 @@
-//! Size-based execution planning: which backend should run a request.
+//! Execution planning: which backend should run a request.
 //!
-//! The coordinator consults this to route a reduction to (a) the
-//! sequential loop, (b) the threaded two-stage, or (c) a PJRT artifact
-//! — mirroring Catanzaro's observation that small inputs want the
-//! simple path while large inputs amortize launch overhead.
+//! Since the adaptive-scheduler refactor the [`Planner`] is a thin
+//! view over [`crate::sched::Scheduler`]: the cutoff ladder
+//! (sequential → narrow threaded → full-width → pool, with compiled
+//! artifacts winning outright) lives in exactly one place —
+//! [`crate::sched::Scheduler::decide`] — and this module only
+//! projects its [`crate::sched::Decision`] onto the host library's
+//! [`Strategy`] and executes it. Cutoffs are derived from the
+//! scheduler's throughput model (priors refined by observed bytes/s
+//! when adaptation is on) instead of the constants that used to be
+//! hardcoded here; see `benches/sched.rs` for how to re-derive them.
 
-use super::op::{Dtype, Op};
+use std::sync::Arc;
+use std::time::Instant;
 
-/// Execution strategies available on this host.
+use crate::sched::{Backend, Decision, Scheduler};
+
+use super::op::{Dtype, Element, Op};
+
+/// Execution strategies available on this host (the planner-side
+/// projection of [`crate::sched::Decision`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Strategy {
     /// Sequential unrolled loop — tiny inputs; launch cost dominates.
@@ -22,96 +34,92 @@ pub enum Strategy {
     Pool,
 }
 
-/// Thresholds, tuned by the `hotpath` and `pool` benches (§Perf).
-///
-/// The threaded path runs on the spawn-once persistent runtime
-/// ([`crate::reduce::persistent`]) since the persistent-threads PR:
-/// with per-call spawn overhead gone, the knee where full-width
-/// threading pays moved from the old `2^18` down to `~2^15`
-/// (re-tune from `benches/hotpath.rs`, which sweeps both paths over
-/// `2^12..2^24` and records the crossover in `BENCH_hotpath.json`).
+/// Thin planning view over the shared scheduler. Cloning shares the
+/// underlying scheduler (and therefore its model and feedback state).
 #[derive(Debug, Clone)]
 pub struct Planner {
-    /// Below this, stay sequential — a pool wake-up costs a few
-    /// microseconds, more than the whole reduction down here.
-    /// Defaults to [`crate::reduce::persistent::SEQ_FALLBACK`] (the
-    /// persistent runtime's own sequential floor), so the planner's
-    /// ladder reflects what the runtime actually executes; setting it
-    /// lower has no effect because the runtime enforces its floor.
-    pub seq_cutoff: usize,
-    /// Below this, full-width fan-out doesn't pay for itself yet; a
-    /// width-2 pass bridges the band above `seq_cutoff`.
-    pub thread_cutoff: usize,
-    /// Available worker threads.
-    pub workers: usize,
-    /// Whether a PJRT runtime is attached.
-    pub artifacts_available: bool,
-    /// Devices in the attached execution pool (0 = no pool).
-    pub pool_devices: usize,
-    /// Below this, sharding across the pool doesn't amortize its
-    /// per-shard kernel-launch overhead (`pool` bench: the 4-device
-    /// crossover sits well under 2^21 at paper-scale bandwidths; the
-    /// cutoff keeps a safety margin over the measured knee).
-    pub pool_cutoff: usize,
+    sched: Arc<Scheduler>,
 }
 
 impl Default for Planner {
+    /// Host-only planner at the machine's available parallelism —
+    /// no pool, no artifacts, adaptation off (deterministic).
     fn default() -> Self {
-        Planner {
-            seq_cutoff: super::persistent::SEQ_FALLBACK,
-            thread_cutoff: 32_768,
-            workers: std::thread::available_parallelism().map_or(4, |n| n.get()),
-            artifacts_available: false,
-            pool_devices: 0,
-            pool_cutoff: 1 << 21,
-        }
+        Planner::new(Arc::new(Scheduler::new(crate::sched::SchedConfig::default())))
     }
 }
 
 impl Planner {
-    /// Choose a strategy for reducing `n` elements.
-    ///
-    /// Exact-size artifact matches are preferred for large inputs when
-    /// a runtime is attached (`artifact_sizes` comes from the
-    /// manifest); otherwise fall through to host execution.
-    pub fn choose(&self, n: usize, has_exact_artifact: bool) -> Strategy {
-        if self.artifacts_available && has_exact_artifact && n >= self.thread_cutoff {
-            return Strategy::Artifact;
-        }
-        if self.pool_devices > 0 && n >= self.pool_cutoff {
-            return Strategy::Pool;
-        }
-        if n < self.seq_cutoff {
-            return Strategy::Sequential;
-        }
-        if n < self.thread_cutoff {
-            return Strategy::Threaded(2.min(self.workers.max(1)));
-        }
-        Strategy::Threaded(self.workers.max(1))
+    /// A planner sharing `sched` (the serving path hands the same
+    /// scheduler to its router, so both views agree by construction).
+    pub fn new(sched: Arc<Scheduler>) -> Planner {
+        Planner { sched }
     }
 
-    /// Host fallback execution for any (op, dtype)-erased request.
-    ///
-    /// `Artifact`/`Pool` strategies are owned by the coordinator (it
-    /// holds the runtime and the device pool); when the host library
-    /// is asked directly it degrades to the threaded two-stage.
-    pub fn run_f32(&self, data: &[f32], op: Op) -> f32 {
-        match self.choose(data.len(), false) {
-            Strategy::Sequential => super::simd::reduce(data, op),
-            Strategy::Threaded(t) => super::threaded::reduce(data, op, t),
-            Strategy::Artifact => unreachable!("choose(false) never picks Artifact"),
-            Strategy::Pool => super::threaded::reduce(data, op, self.workers.max(1)),
+    /// Host-only planner at an explicit width.
+    pub fn host(workers: usize) -> Planner {
+        Planner::new(Arc::new(Scheduler::host(workers)))
+    }
+
+    /// The shared scheduler behind this view.
+    pub fn scheduler(&self) -> &Arc<Scheduler> {
+        &self.sched
+    }
+
+    /// Host worker threads the full-width rung uses.
+    pub fn workers(&self) -> usize {
+        self.sched.workers()
+    }
+
+    /// Choose a strategy for reducing `n` elements, on the dominant
+    /// sum/f32 profile (the op-agnostic legacy entry point; use
+    /// [`Planner::choose_for`] when the shape is known).
+    pub fn choose(&self, n: usize, has_exact_artifact: bool) -> Strategy {
+        self.choose_for(Op::Sum, Dtype::F32, n, has_exact_artifact)
+    }
+
+    /// Choose a strategy for a fully-specified shape. Pure projection
+    /// of [`Scheduler::decide`] — no cutoff logic lives here.
+    pub fn choose_for(&self, op: Op, dtype: Dtype, n: usize, has_exact_artifact: bool) -> Strategy {
+        match self.sched.decide(op, dtype, n, has_exact_artifact) {
+            Decision::Sequential => Strategy::Sequential,
+            Decision::Threaded { workers } => Strategy::Threaded(workers),
+            Decision::Artifact => Strategy::Artifact,
+            Decision::Sharded { .. } => Strategy::Pool,
         }
+    }
+
+    /// Host execution for any dtype the library reduces, with the
+    /// observed throughput fed back to the scheduler (a no-op unless
+    /// the scheduler is adaptive). `Artifact`/`Pool` strategies are
+    /// owned by the coordinator (it holds the runtime and the device
+    /// pool); when the host library is asked directly they degrade to
+    /// the threaded two-stage.
+    fn run_observed<T: Element>(&self, data: &[T], op: Op, dtype: Dtype) -> T {
+        let t0 = Instant::now();
+        let (value, backend) = match self.choose_for(op, dtype, data.len(), false) {
+            Strategy::Sequential => (super::simd::reduce(data, op), Backend::Sequential),
+            Strategy::Threaded(t) => (
+                super::threaded::reduce(data, op, t),
+                if t <= 2 { Backend::ThreadedNarrow } else { Backend::ThreadedFull },
+            ),
+            Strategy::Artifact => unreachable!("choose_for(.., false) never picks Artifact"),
+            Strategy::Pool => {
+                (super::threaded::reduce(data, op, self.workers()), Backend::ThreadedFull)
+            }
+        };
+        self.sched.observe(backend, op, dtype, data.len(), t0.elapsed().as_secs_f64());
+        value
+    }
+
+    /// Host fallback execution for f32 payloads.
+    pub fn run_f32(&self, data: &[f32], op: Op) -> f32 {
+        self.run_observed(data, op, Dtype::F32)
     }
 
     /// Host fallback for i32 payloads.
     pub fn run_i32(&self, data: &[i32], op: Op) -> i32 {
-        match self.choose(data.len(), false) {
-            Strategy::Sequential => super::simd::reduce(data, op),
-            Strategy::Threaded(t) => super::threaded::reduce(data, op, t),
-            Strategy::Artifact => unreachable!("choose(false) never picks Artifact"),
-            Strategy::Pool => super::threaded::reduce(data, op, self.workers.max(1)),
-        }
+        self.run_observed(data, op, Dtype::I32)
     }
 }
 
@@ -132,16 +140,39 @@ impl std::fmt::Display for ShapeKey {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sched::{PoolPrior, SchedConfig};
+
+    fn pooled_planner(workers: usize, devices: usize, cutoff: Option<usize>) -> Planner {
+        Planner::new(Arc::new(Scheduler::new(SchedConfig {
+            workers,
+            pool: Some(PoolPrior {
+                devices,
+                bytes_per_s: devices as f64 * 76.8e9, // TeslaC2075-class fleet
+                overhead_s: crate::sched::model::POOL_OVERHEAD_S,
+                cutoff_override: cutoff,
+            }),
+            ..SchedConfig::default()
+        })))
+    }
+
+    fn artifact_planner() -> Planner {
+        Planner::new(Arc::new(Scheduler::new(SchedConfig {
+            artifacts_available: true,
+            ..SchedConfig::default()
+        })))
+    }
 
     #[test]
     fn tiny_stays_sequential() {
         let p = Planner::default();
         assert_eq!(p.choose(10, false), Strategy::Sequential);
-        assert_eq!(p.choose(4095, true), Strategy::Sequential);
-        // The default cutoff mirrors the persistent runtime's own
-        // sequential floor, so the ladder matches what executes.
-        assert_eq!(p.seq_cutoff, crate::reduce::persistent::SEQ_FALLBACK);
-        assert_eq!(p.choose(p.seq_cutoff - 1, false), Strategy::Sequential);
+        assert_eq!(p.choose(4095, false), Strategy::Sequential);
+        // The derived seq crossover sits below the persistent
+        // runtime's floor, so the floor binds: the ladder matches what
+        // the runtime actually executes.
+        let c = p.scheduler().cutoffs(Op::Sum, Dtype::F32);
+        assert_eq!(c.seq, crate::reduce::persistent::SEQ_FALLBACK);
+        assert_eq!(p.choose(c.seq - 1, false), Strategy::Sequential);
     }
 
     #[test]
@@ -155,43 +186,51 @@ mod tests {
 
     #[test]
     fn persistent_knee_uses_full_width_earlier() {
-        // With the spawn-once runtime the full-width knee sits at
-        // 2^15, far below the old spawn-per-call 2^18 cutoff.
-        let p = Planner { workers: 8, ..Planner::default() };
+        // With the spawn-once runtime the derived full-width knee sits
+        // at/under 2^15, far below the old spawn-per-call 2^18 cutoff.
+        let p = Planner::host(8);
         assert_eq!(p.choose(1 << 15, false), Strategy::Threaded(8));
         assert_eq!(p.choose(100_000, false), Strategy::Threaded(8));
     }
 
     #[test]
     fn large_uses_all_workers() {
-        let p = Planner { workers: 8, ..Planner::default() };
+        let p = Planner::host(8);
         assert_eq!(p.choose(10_000_000, false), Strategy::Threaded(8));
     }
 
     #[test]
     fn pool_chosen_above_cutoff_when_attached() {
-        let p = Planner { pool_devices: 4, ..Planner::default() };
+        let p = pooled_planner(8, 4, Some(1 << 21));
         assert_eq!(p.choose(1 << 21, false), Strategy::Pool);
         assert_eq!(p.choose(100_000_000, false), Strategy::Pool);
         // Below the cutoff the usual ladder applies.
         assert!(matches!(p.choose((1 << 21) - 1, false), Strategy::Threaded(_)));
-        // Exact artifacts still win (compiled real execution beats the
-        // modeled fleet).
-        let pa = Planner { pool_devices: 4, artifacts_available: true, ..Planner::default() };
-        assert_eq!(pa.choose(5_533_214, true), Strategy::Artifact);
-        assert_eq!(pa.choose(5_533_214, false), Strategy::Pool);
+    }
+
+    #[test]
+    fn pool_cutoff_derives_from_the_fleet_model() {
+        let p = pooled_planner(8, 4, None);
+        let c = p.scheduler().cutoffs(Op::Sum, Dtype::F32);
+        assert!(
+            ((1 << 19)..(1 << 21)).contains(&c.pool),
+            "derived pool knee at {} elements",
+            c.pool
+        );
+        assert_eq!(p.choose(1 << 21, false), Strategy::Pool);
+        assert!(matches!(p.choose(1 << 19, false), Strategy::Threaded(_)));
     }
 
     #[test]
     fn default_planner_has_no_pool() {
         let p = Planner::default();
-        assert_eq!(p.pool_devices, 0);
+        assert_eq!(p.scheduler().pool_devices(), 0);
         assert!(matches!(p.choose(100_000_000, false), Strategy::Threaded(_)));
     }
 
     #[test]
     fn pool_strategy_run_degrades_to_threaded() {
-        let p = Planner { pool_devices: 2, pool_cutoff: 1024, workers: 4, ..Planner::default() };
+        let p = pooled_planner(4, 2, Some(1024));
         let d: Vec<i32> = (0..5000).map(|i| (i % 23) as i32 - 11).collect();
         assert_eq!(p.choose(d.len(), false), Strategy::Pool);
         assert_eq!(p.run_i32(&d, Op::Sum), d.iter().sum::<i32>());
@@ -199,10 +238,31 @@ mod tests {
 
     #[test]
     fn artifact_preferred_when_available() {
-        let p = Planner { artifacts_available: true, ..Planner::default() };
+        let p = artifact_planner();
+        // Exact compiled execution beats every modeled/host rung.
         assert_eq!(p.choose(5_533_214, true), Strategy::Artifact);
+        assert_eq!(p.choose(1024, true), Strategy::Artifact);
         // ...but only with an exact compiled size.
         assert!(matches!(p.choose(5_533_215, false), Strategy::Threaded(_)));
+        // ...and only when a runtime is attached at all.
+        assert_ne!(Planner::default().choose(5_533_214, true), Strategy::Artifact);
+    }
+
+    #[test]
+    fn planner_is_a_pure_projection_of_the_scheduler() {
+        // The acceptance property of the refactor: for any shape the
+        // planner's strategy is exactly the scheduler's decision —
+        // there is no second cutoff ladder to drift.
+        let p = pooled_planner(8, 4, None);
+        for n in [0usize, 1, 100, 16_384, 20_000, 1 << 15, 1 << 18, 1 << 20, 1 << 21, 1 << 24] {
+            let want = match p.scheduler().decide(Op::Sum, Dtype::F32, n, false) {
+                Decision::Sequential => Strategy::Sequential,
+                Decision::Threaded { workers } => Strategy::Threaded(workers),
+                Decision::Artifact => Strategy::Artifact,
+                Decision::Sharded { .. } => Strategy::Pool,
+            };
+            assert_eq!(p.choose(n, false), want, "n={n}");
+        }
     }
 
     #[test]
@@ -214,5 +274,20 @@ mod tests {
         let di: Vec<i32> = (0..500_000).map(|i| (i % 97) as i32).collect();
         let wanti: i32 = di.iter().sum();
         assert_eq!(p.run_i32(&di, Op::Sum), wanti);
+    }
+
+    #[test]
+    fn adaptive_planner_records_observations() {
+        let p = Planner::new(Arc::new(Scheduler::new(SchedConfig {
+            adaptive: true,
+            workers: 4,
+            ..SchedConfig::default()
+        })));
+        let d: Vec<i32> = (0..100_000).map(|i| (i % 7) as i32).collect();
+        assert_eq!(p.run_i32(&d, Op::Sum), d.iter().sum::<i32>());
+        // choose_for(100k, i32) is full-width at 4 workers, so that
+        // band's profile must have picked up the observation.
+        let snap = p.scheduler().snapshot_json();
+        assert!(snap.contains(Backend::ThreadedFull.name()), "{snap}");
     }
 }

@@ -1,0 +1,165 @@
+//! Steal-aware fleet feedback: fold observed per-worker busy times
+//! ([`crate::pool::PoolOutcome::per_worker_busy_s`]) into per-device
+//! weight factors, so shard planning converges toward the split the
+//! machine actually sustains instead of the static
+//! `modeled_throughput_gbps` proxy.
+//!
+//! The rule is the multiplicative analogue of the pool's work
+//! stealing: a device that ends an outcome busier than the fleet mean
+//! was given too much work relative to its true speed, so its factor
+//! shrinks by `(mean / busy)^gain`; an under-busy device grows the
+//! same way. The fixed point is equal busy time across workers — the
+//! split that minimizes modeled wall-clock — at which point every
+//! ratio is 1 and the factors stop moving. Stealing still runs
+//! underneath as the per-request safety net; feedback removes the
+//! *systematic* imbalance so stealing only has transients left to
+//! absorb.
+
+/// Per-device multiplicative weight factors, updated from observed
+/// busy times.
+#[derive(Debug, Clone)]
+pub struct FleetFeedback {
+    factors: Vec<f64>,
+    /// Exponent on the `mean/busy` correction (0 = frozen, 1 = jump
+    /// straight to the implied split; 0.5 halves the log-error per
+    /// outcome and is robust to noisy attribution under stealing).
+    gain: f64,
+    outcomes: u64,
+}
+
+/// Factor clamp: one device can be down- or up-weighted at most this
+/// far from its static weight (guards against a single pathological
+/// observation starving a device forever).
+pub const FACTOR_MIN: f64 = 0.02;
+pub const FACTOR_MAX: f64 = 50.0;
+
+impl FleetFeedback {
+    pub fn new(gain: f64) -> FleetFeedback {
+        FleetFeedback { factors: Vec::new(), gain: gain.clamp(0.0, 1.0), outcomes: 0 }
+    }
+
+    fn ensure(&mut self, devices: usize) {
+        if self.factors.len() < devices {
+            self.factors.resize(devices, 1.0);
+        }
+    }
+
+    /// Outcomes folded in so far.
+    pub fn outcomes(&self) -> u64 {
+        self.outcomes
+    }
+
+    /// Current factors for a `devices`-wide fleet (1.0 until feedback
+    /// arrives).
+    pub fn factors(&mut self, devices: usize) -> &[f64] {
+        self.ensure(devices);
+        &self.factors[..devices]
+    }
+
+    /// Base weights scaled by the learned factors.
+    pub fn weights(&mut self, base: &[f64]) -> Vec<f64> {
+        self.ensure(base.len());
+        base.iter().zip(&self.factors).map(|(b, f)| b * f).collect()
+    }
+
+    /// Fold one outcome's per-worker modeled busy seconds in. Workers
+    /// with zero/non-finite busy (no shards ran there) are left
+    /// untouched — no signal, no update.
+    pub fn observe(&mut self, busy: &[f64]) {
+        self.ensure(busy.len());
+        let live: Vec<f64> = busy.iter().copied().filter(|b| b.is_finite() && *b > 0.0).collect();
+        if live.len() < 2 {
+            return; // nothing to balance against.
+        }
+        let mean = live.iter().sum::<f64>() / live.len() as f64;
+        if mean <= 0.0 {
+            return;
+        }
+        for (i, &b) in busy.iter().enumerate() {
+            if b.is_finite() && b > 0.0 {
+                let ratio = (mean / b).powf(self.gain);
+                self.factors[i] = (self.factors[i] * ratio).clamp(FACTOR_MIN, FACTOR_MAX);
+            }
+        }
+        self.outcomes += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Synthetic fleet: busy_i = share_i / speed_i, shares from the
+    /// current weights. The loop must converge to equal busy.
+    fn converge(speeds: &[f64], base: &[f64], iters: usize) -> (Vec<f64>, f64) {
+        let mut fb = FleetFeedback::new(0.5);
+        let mut imbalance = f64::INFINITY;
+        for _ in 0..iters {
+            let w = fb.weights(base);
+            let total: f64 = w.iter().sum();
+            let busy: Vec<f64> =
+                w.iter().zip(speeds).map(|(wi, s)| (wi / total) / s).collect();
+            let mean = busy.iter().sum::<f64>() / busy.len() as f64;
+            let max = busy.iter().cloned().fold(0.0, f64::max);
+            imbalance = max / mean - 1.0;
+            fb.observe(&busy);
+        }
+        (fb.factors(base.len()).to_vec(), imbalance)
+    }
+
+    #[test]
+    fn converges_to_true_speeds() {
+        // Static weights claim 1:1:1:1; the machine is 1:2:4:4.
+        let (factors, imbalance) = converge(&[1.0, 2.0, 4.0, 4.0], &[1.0; 4], 12);
+        assert!(imbalance < 0.02, "imbalance {imbalance}");
+        // Factors order like the true speeds.
+        assert!(factors[0] < factors[1]);
+        assert!(factors[1] < factors[2]);
+        assert!((factors[2] - factors[3]).abs() / factors[2] < 0.05);
+    }
+
+    #[test]
+    fn correct_static_weights_stay_fixed() {
+        // Base already proportional to true speed: busy starts equal,
+        // so factors must not drift.
+        let (factors, imbalance) = converge(&[1.0, 3.0], &[1.0, 3.0], 8);
+        assert!(imbalance < 1e-9, "imbalance {imbalance}");
+        for f in factors {
+            assert!((f - 1.0).abs() < 1e-9, "factor drifted to {f}");
+        }
+    }
+
+    #[test]
+    fn zero_and_nan_busy_are_ignored() {
+        let mut fb = FleetFeedback::new(0.5);
+        fb.observe(&[0.0, f64::NAN, 2.0]);
+        // Fewer than two live entries: no update at all.
+        assert_eq!(fb.outcomes(), 0);
+        assert_eq!(fb.factors(3), &[1.0, 1.0, 1.0]);
+        fb.observe(&[4.0, f64::INFINITY, 2.0]);
+        assert_eq!(fb.outcomes(), 1);
+        let f = fb.factors(3).to_vec();
+        assert!(f[0] < 1.0, "over-busy device must shrink: {f:?}");
+        assert_eq!(f[1], 1.0, "no-signal device must not move: {f:?}");
+        assert!(f[2] > 1.0, "under-busy device must grow: {f:?}");
+    }
+
+    #[test]
+    fn factors_stay_clamped() {
+        let mut fb = FleetFeedback::new(1.0);
+        for _ in 0..64 {
+            fb.observe(&[1e9, 1e-9]);
+        }
+        let f = fb.factors(2).to_vec();
+        assert_eq!(f[0], FACTOR_MIN);
+        assert_eq!(f[1], FACTOR_MAX);
+    }
+
+    #[test]
+    fn single_worker_fleet_never_updates() {
+        let mut fb = FleetFeedback::new(0.5);
+        fb.observe(&[3.0]);
+        assert_eq!(fb.outcomes(), 0);
+        assert_eq!(fb.factors(1), &[1.0]);
+    }
+}

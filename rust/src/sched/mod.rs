@@ -1,0 +1,503 @@
+//! `sched` — the feedback-driven adaptive scheduler.
+//!
+//! The paper's persistent-threads kernel wins because work assignment
+//! adapts to what execution units actually complete, not what a
+//! static model predicts. This subsystem applies the same principle
+//! to the serving stack's *placement* decisions, which used to be
+//! hardcoded cutoffs duplicated across `reduce::plan` and
+//! `coordinator::router`:
+//!
+//! * [`ThroughputModel`] ([`model`]) keeps an EWMA of observed bytes/s
+//!   per `(backend, op, dtype)`, recorded after every execution, and
+//!   derives the sequential→threaded→pool crossover cutoffs from the
+//!   two-parameter cost model `overhead + bytes/throughput` at
+//!   runtime instead of from constants;
+//! * [`Decision`] is the single placement ladder both views map from:
+//!   [`crate::reduce::plan::Planner::choose`] and
+//!   [`crate::coordinator::Router::route`] are thin projections of
+//!   [`Scheduler::decide`] — the cutoff logic exists only here;
+//! * [`FleetFeedback`] ([`feedback`]) folds
+//!   [`crate::pool::PoolOutcome::per_worker_busy_s`] back into
+//!   per-device shard weights (Prajapati's machine-observed
+//!   scheduling view, PAPERS.md), so skewed fleets converge away from
+//!   the static `modeled_throughput_gbps` split — see
+//!   [`crate::harness::sched_adapt`] for the convergence table.
+//!
+//! With `adaptive` off (the default for bare library use) the
+//! scheduler is a pure function of its priors: observations are
+//! dropped and every decision is deterministic. The serving path
+//! turns adaptation on via `parred serve --adaptive`.
+
+use std::sync::Mutex;
+
+use crate::gpusim::DeviceConfig;
+use crate::pool::{PoolOutcome, ShardPlan};
+use crate::reduce::op::{Dtype, Op};
+use crate::util::json::Json;
+
+pub mod feedback;
+pub mod model;
+
+pub use feedback::FleetFeedback;
+pub use model::{Backend, BackendProfile, ThroughputModel};
+
+/// The placement decision — the single ladder `Strategy` (planner
+/// view) and `Route` (router view) project from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Decision {
+    /// Sequential unrolled loop — launch cost dominates down here.
+    Sequential,
+    /// Persistent-runtime reduction at this width.
+    Threaded { workers: usize },
+    /// Dispatch to the exact-size compiled artifact.
+    Artifact,
+    /// Shard across the multi-device execution pool.
+    Sharded { devices: usize },
+}
+
+/// The derived crossover cutoffs (elements) for one `(op, dtype)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Cutoffs {
+    /// Below this: sequential.
+    pub seq: usize,
+    /// Below this (and at/above `seq`): the width-2 bridging band.
+    pub thread: usize,
+    /// At/above this (with a pool attached): shard across the fleet.
+    pub pool: usize,
+}
+
+/// Pool attachment parameters for the scheduler.
+#[derive(Debug, Clone)]
+pub struct PoolPrior {
+    /// Fleet width (what `Decision::Sharded` reports).
+    pub devices: usize,
+    /// Prior fleet throughput, bytes/s (summed modeled device
+    /// throughput; refined by the EWMA once outcomes arrive).
+    pub bytes_per_s: f64,
+    /// Per-pass dispatch overhead prior, seconds.
+    pub overhead_s: f64,
+    /// Pin the pool cutoff instead of deriving it (`--pool-cutoff`).
+    pub cutoff_override: Option<usize>,
+}
+
+impl PoolPrior {
+    /// Prior for a concrete fleet: summed modeled device throughput.
+    pub fn for_fleet(devices: &[DeviceConfig], cutoff_override: Option<usize>) -> PoolPrior {
+        PoolPrior {
+            devices: devices.len(),
+            bytes_per_s: devices.iter().map(|d| d.modeled_throughput_gbps() * 1e9).sum(),
+            overhead_s: model::POOL_OVERHEAD_S,
+            cutoff_override,
+        }
+    }
+}
+
+/// Scheduler configuration.
+#[derive(Debug, Clone)]
+pub struct SchedConfig {
+    /// Host worker threads available to the full-width rung.
+    pub workers: usize,
+    /// Whether a PJRT runtime is attached (gates `Decision::Artifact`).
+    pub artifacts_available: bool,
+    /// The sequential floor: the persistent runtime refuses to fan out
+    /// below this, so the derived seq cutoff never sits under it.
+    pub seq_floor: usize,
+    /// Fold observations into the model / fleet factors. Off = the
+    /// scheduler is a deterministic function of its priors.
+    pub adaptive: bool,
+    /// EWMA weight of a new throughput observation.
+    pub alpha: f64,
+    /// Feedback gain on per-device busy-time corrections.
+    pub gain: f64,
+    /// Attached execution pool, if any.
+    pub pool: Option<PoolPrior>,
+}
+
+impl Default for SchedConfig {
+    fn default() -> Self {
+        SchedConfig {
+            workers: std::thread::available_parallelism().map_or(4, |n| n.get()),
+            artifacts_available: false,
+            seq_floor: crate::reduce::persistent::SEQ_FALLBACK,
+            adaptive: false,
+            alpha: 0.25,
+            gain: 0.5,
+            pool: None,
+        }
+    }
+}
+
+/// The feedback-driven adaptive scheduler: one instance per service
+/// (shared by its planner and router through an `Arc`).
+#[derive(Debug)]
+pub struct Scheduler {
+    cfg: SchedConfig,
+    model: Mutex<ThroughputModel>,
+    fleet: Mutex<FleetFeedback>,
+}
+
+impl Scheduler {
+    pub fn new(cfg: SchedConfig) -> Scheduler {
+        let pool_prior = cfg.pool.as_ref().map(|p| (p.bytes_per_s, p.overhead_s));
+        Scheduler {
+            model: Mutex::new(ThroughputModel::new(cfg.alpha, pool_prior)),
+            fleet: Mutex::new(FleetFeedback::new(cfg.gain)),
+            cfg,
+        }
+    }
+
+    /// Host-only scheduler (no pool, no artifacts) at this width.
+    pub fn host(workers: usize) -> Scheduler {
+        Scheduler::new(SchedConfig { workers, ..SchedConfig::default() })
+    }
+
+    pub fn config(&self) -> &SchedConfig {
+        &self.cfg
+    }
+
+    pub fn workers(&self) -> usize {
+        self.cfg.workers.max(1)
+    }
+
+    pub fn pool_devices(&self) -> usize {
+        self.cfg.pool.as_ref().map_or(0, |p| p.devices)
+    }
+
+    fn model(&self) -> std::sync::MutexGuard<'_, ThroughputModel> {
+        self.model.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
+    fn fleet(&self) -> std::sync::MutexGuard<'_, FleetFeedback> {
+        self.fleet.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
+    /// The crossover cutoffs currently in force for one `(op, dtype)`.
+    pub fn cutoffs(&self, op: Op, dtype: Dtype) -> Cutoffs {
+        let m = self.model();
+        let eb = dtype.size_bytes();
+        let seq = m
+            .crossover(Backend::Sequential, Backend::ThreadedNarrow, op, dtype, eb)
+            .unwrap_or(usize::MAX)
+            .max(self.cfg.seq_floor);
+        let thread = m
+            .crossover(Backend::ThreadedNarrow, Backend::ThreadedFull, op, dtype, eb)
+            .unwrap_or(usize::MAX)
+            .max(seq);
+        let pool = match self.cfg.pool.as_ref().and_then(|p| p.cutoff_override) {
+            Some(c) => c,
+            None => m
+                .crossover(Backend::ThreadedFull, Backend::Pool, op, dtype, eb)
+                .unwrap_or(usize::MAX),
+        };
+        Cutoffs { seq, thread, pool }
+    }
+
+    /// The single placement ladder. Exact-size compiled artifacts win
+    /// outright when a runtime is attached (real compiled execution
+    /// beats both the modeled fleet and the host library); then the
+    /// pool above its crossover; then the sequential / narrow / full
+    /// host bands.
+    pub fn decide(&self, op: Op, dtype: Dtype, n: usize, has_exact_artifact: bool) -> Decision {
+        if self.cfg.artifacts_available && has_exact_artifact {
+            return Decision::Artifact;
+        }
+        let c = self.cutoffs(op, dtype);
+        let devices = self.pool_devices();
+        if devices > 0 && n >= c.pool {
+            return Decision::Sharded { devices };
+        }
+        if n < c.seq {
+            return Decision::Sequential;
+        }
+        let w = self.workers();
+        if n < c.thread {
+            return Decision::Threaded { workers: 2.min(w) };
+        }
+        Decision::Threaded { workers: w }
+    }
+
+    /// Record one observed execution (no-op unless adaptive).
+    pub fn observe(&self, backend: Backend, op: Op, dtype: Dtype, elements: usize, seconds: f64) {
+        if !self.cfg.adaptive || elements == 0 {
+            return;
+        }
+        let bytes = (elements * dtype.size_bytes()) as f64;
+        self.model().record(backend, op, dtype, bytes, seconds);
+    }
+
+    /// Record a fleet outcome: pool throughput EWMA (over *modeled*
+    /// wall seconds) plus per-worker busy-time feedback.
+    pub fn observe_pool(&self, op: Op, dtype: Dtype, elements: usize, outcome: &PoolOutcome) {
+        self.observe(Backend::Pool, op, dtype, elements, outcome.modeled_wall_s);
+        self.observe_busy(&outcome.per_worker_busy_s);
+    }
+
+    /// Fold per-worker busy seconds into the fleet factors (no-op
+    /// unless adaptive).
+    pub fn observe_busy(&self, busy: &[f64]) {
+        if !self.cfg.adaptive {
+            return;
+        }
+        self.fleet().observe(busy);
+    }
+
+    /// Current per-device weight factors (all 1.0 until feedback).
+    pub fn fleet_factors(&self, devices: usize) -> Vec<f64> {
+        self.fleet().factors(devices).to_vec()
+    }
+
+    /// Fleet outcomes folded into the factors so far.
+    pub fn fleet_outcomes(&self) -> u64 {
+        self.fleet().outcomes()
+    }
+
+    /// The steal-aware shard plan: static modeled throughput per
+    /// device, scaled by the learned busy-time factors. With no
+    /// feedback (or adaptive off) this equals
+    /// [`ShardPlan::proportional`] exactly.
+    pub fn plan_shards(
+        &self,
+        devices: &[DeviceConfig],
+        n: usize,
+        tasks_per_device: usize,
+    ) -> ShardPlan {
+        let base: Vec<f64> = devices.iter().map(|d| d.modeled_throughput_gbps()).collect();
+        let weights = self.fleet().weights(&base);
+        ShardPlan::proportional_weighted(&weights, n, tasks_per_device)
+    }
+
+    /// JSON snapshot of the model state (cutoffs, refined profiles,
+    /// fleet factors) — dumped via `parred serve --sched-snapshot`.
+    pub fn snapshot_json(&self) -> String {
+        use std::collections::BTreeMap;
+        let mut root = BTreeMap::new();
+        root.insert("adaptive".to_string(), Json::Bool(self.cfg.adaptive));
+        root.insert("workers".to_string(), Json::Num(self.cfg.workers as f64));
+        root.insert("pool_devices".to_string(), Json::Num(self.pool_devices() as f64));
+
+        let mut cut = BTreeMap::new();
+        for op in Op::ALL {
+            for dtype in [Dtype::F32, Dtype::I32] {
+                let c = self.cutoffs(op, dtype);
+                let mut e = BTreeMap::new();
+                e.insert("seq".to_string(), Json::Num(c.seq.min(1 << 60) as f64));
+                e.insert("thread".to_string(), Json::Num(c.thread.min(1 << 60) as f64));
+                e.insert("pool".to_string(), Json::Num(c.pool.min(1 << 60) as f64));
+                cut.insert(format!("{op}/{dtype}"), Json::Obj(e));
+            }
+        }
+        root.insert("cutoffs".to_string(), Json::Obj(cut));
+
+        let mut profiles = Vec::new();
+        {
+            let m = self.model();
+            for (&(backend, op, dtype), p) in m.observed_keys() {
+                let mut e = BTreeMap::new();
+                e.insert("backend".to_string(), Json::Str(backend.name().to_string()));
+                e.insert("op".to_string(), Json::Str(op.name().to_string()));
+                e.insert("dtype".to_string(), Json::Str(dtype.name().to_string()));
+                e.insert("bytes_per_s".to_string(), Json::Num(p.bytes_per_s));
+                e.insert("overhead_s".to_string(), Json::Num(p.overhead_s));
+                e.insert("observations".to_string(), Json::Num(p.observations as f64));
+                profiles.push(Json::Obj(e));
+            }
+        }
+        root.insert("profiles".to_string(), Json::Arr(profiles));
+
+        let devices = self.pool_devices();
+        let mut fleet = BTreeMap::new();
+        fleet.insert(
+            "factors".to_string(),
+            Json::Arr(self.fleet_factors(devices).into_iter().map(Json::Num).collect()),
+        );
+        fleet.insert("outcomes".to_string(), Json::Num(self.fleet_outcomes() as f64));
+        root.insert("fleet".to_string(), Json::Obj(fleet));
+
+        format!("{}\n", Json::Obj(root))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pooled(adaptive: bool, cutoff_override: Option<usize>) -> Scheduler {
+        Scheduler::new(SchedConfig {
+            workers: 8,
+            adaptive,
+            pool: Some(PoolPrior {
+                devices: 4,
+                bytes_per_s: 4.0 * 76.8e9, // 4x TeslaC2075 modeled
+                overhead_s: model::POOL_OVERHEAD_S,
+                cutoff_override,
+            }),
+            ..SchedConfig::default()
+        })
+    }
+
+    #[test]
+    fn derived_cutoffs_land_on_the_legacy_ladder() {
+        let s = pooled(false, None);
+        let c = s.cutoffs(Op::Sum, Dtype::F32);
+        // The seq crossover derives below the persistent runtime's
+        // floor, so the floor binds — matching the legacy constant.
+        assert_eq!(c.seq, crate::reduce::persistent::SEQ_FALLBACK);
+        // The full-width knee lands in the legacy 2^15 band...
+        assert!(c.thread > c.seq && c.thread <= (1 << 15), "thread knee at {}", c.thread);
+        // ...and the pool crossover near the legacy 2^20 default.
+        assert!(((1 << 19)..(1 << 21)).contains(&c.pool), "pool knee at {}", c.pool);
+    }
+
+    #[test]
+    fn ladder_is_monotonic_and_total() {
+        let s = pooled(false, None);
+        for op in Op::ALL {
+            for dtype in [Dtype::F32, Dtype::I32] {
+                let c = s.cutoffs(op, dtype);
+                assert!(c.seq <= c.thread);
+                let mut last = 0usize;
+                for n in [0, 1, c.seq - 1, c.seq, c.thread - 1, c.thread, c.pool - 1, c.pool] {
+                    assert!(n >= last || n == 0, "sweep must ascend");
+                    last = n;
+                    let _ = s.decide(op, dtype, n, false); // total: never panics
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn decide_walks_the_ladder() {
+        let s = pooled(false, None);
+        let c = s.cutoffs(Op::Sum, Dtype::F32);
+        assert_eq!(s.decide(Op::Sum, Dtype::F32, c.seq - 1, false), Decision::Sequential);
+        assert_eq!(
+            s.decide(Op::Sum, Dtype::F32, c.seq, false),
+            Decision::Threaded { workers: 2 }
+        );
+        assert_eq!(
+            s.decide(Op::Sum, Dtype::F32, c.thread, false),
+            Decision::Threaded { workers: 8 }
+        );
+        assert_eq!(
+            s.decide(Op::Sum, Dtype::F32, c.pool, false),
+            Decision::Sharded { devices: 4 }
+        );
+    }
+
+    #[test]
+    fn artifact_wins_when_attached() {
+        let s = Scheduler::new(SchedConfig {
+            artifacts_available: true,
+            ..SchedConfig::default()
+        });
+        assert_eq!(s.decide(Op::Sum, Dtype::F32, 1024, true), Decision::Artifact);
+        assert_eq!(s.decide(Op::Sum, Dtype::F32, 1 << 24, true), Decision::Artifact);
+        // Without an exact match the ladder applies.
+        assert!(matches!(
+            s.decide(Op::Sum, Dtype::F32, 1 << 24, false),
+            Decision::Threaded { .. }
+        ));
+        // Without a runtime the flag is ignored.
+        let s = Scheduler::host(4);
+        assert_ne!(s.decide(Op::Sum, Dtype::F32, 1 << 24, true), Decision::Artifact);
+    }
+
+    #[test]
+    fn cutoff_override_pins_the_pool_knee() {
+        let s = pooled(false, Some(1 << 21));
+        assert_eq!(s.cutoffs(Op::Sum, Dtype::F32).pool, 1 << 21);
+        assert_eq!(
+            s.decide(Op::Sum, Dtype::F32, 1 << 21, false),
+            Decision::Sharded { devices: 4 }
+        );
+        assert!(matches!(
+            s.decide(Op::Sum, Dtype::F32, (1 << 21) - 1, false),
+            Decision::Threaded { .. }
+        ));
+    }
+
+    #[test]
+    fn no_pool_means_no_sharding() {
+        let s = Scheduler::host(8);
+        assert_eq!(s.cutoffs(Op::Sum, Dtype::F32).pool, usize::MAX);
+        assert!(matches!(
+            s.decide(Op::Sum, Dtype::F32, 1 << 30, false),
+            Decision::Threaded { workers: 8 }
+        ));
+    }
+
+    #[test]
+    fn adaptive_observations_move_the_pool_cutoff() {
+        let s = pooled(true, None);
+        let before = s.cutoffs(Op::Sum, Dtype::F32).pool;
+        // The fleet turns out 8x slower than its prior claims: the
+        // crossover must retreat to larger payloads.
+        let slow_bytes_per_s = 4.0 * 76.8e9 / 8.0;
+        for _ in 0..32 {
+            s.observe(Backend::Pool, Op::Sum, Dtype::F32, 1 << 21, (1 << 23) as f64 / slow_bytes_per_s);
+        }
+        let after = s.cutoffs(Op::Sum, Dtype::F32).pool;
+        assert!(after > before * 2, "pool cutoff {before} -> {after}");
+        // A decision that used to shard now stays on the host.
+        assert!(matches!(s.decide(Op::Sum, Dtype::F32, before, false), Decision::Threaded { .. }));
+        // Other (op, dtype) keys still see the prior-derived knee.
+        assert_eq!(s.cutoffs(Op::Max, Dtype::I32).pool, before);
+    }
+
+    #[test]
+    fn non_adaptive_scheduler_ignores_observations() {
+        let s = pooled(false, None);
+        let before = s.cutoffs(Op::Sum, Dtype::F32);
+        for _ in 0..32 {
+            s.observe(Backend::Pool, Op::Sum, Dtype::F32, 1 << 21, 100.0);
+            s.observe_busy(&[1.0, 5.0, 1.0, 1.0]);
+        }
+        assert_eq!(s.cutoffs(Op::Sum, Dtype::F32), before);
+        assert_eq!(s.fleet_factors(4), vec![1.0; 4]);
+        assert_eq!(s.fleet_outcomes(), 0);
+    }
+
+    #[test]
+    fn plan_shards_without_feedback_is_the_static_split() {
+        use crate::gpusim::DeviceConfig;
+        let s = pooled(true, None);
+        let devices =
+            vec![DeviceConfig::tesla_c2075(), DeviceConfig::tesla_c2075(), DeviceConfig::g80()];
+        let a = s.plan_shards(&devices, 999_983, 3);
+        let b = ShardPlan::proportional(&devices, 999_983, 3);
+        assert_eq!(a.shards, b.shards);
+    }
+
+    #[test]
+    fn busy_feedback_shifts_shares_away_from_the_laggard() {
+        use crate::gpusim::DeviceConfig;
+        let s = pooled(true, None);
+        let devices = vec![DeviceConfig::tesla_c2075(), DeviceConfig::tesla_c2075()];
+        let n = 1 << 20;
+        // Device 0 keeps reporting 3x the busy time of device 1.
+        for _ in 0..6 {
+            s.observe_busy(&[3.0, 1.0]);
+        }
+        let plan = s.plan_shards(&devices, n, 1);
+        let share0: usize =
+            plan.shards.iter().filter(|sh| sh.device == 0).map(|sh| sh.len()).sum();
+        let share1: usize =
+            plan.shards.iter().filter(|sh| sh.device == 1).map(|sh| sh.len()).sum();
+        assert_eq!(share0 + share1, n);
+        assert!(share0 * 2 < share1, "laggard share {share0} vs {share1}");
+    }
+
+    #[test]
+    fn snapshot_is_valid_json() {
+        let s = pooled(true, None);
+        s.observe(Backend::Pool, Op::Sum, Dtype::F32, 1 << 21, 1e-3);
+        s.observe_busy(&[2.0, 1.0, 1.0, 1.0]);
+        let snap = s.snapshot_json();
+        let doc = Json::parse(&snap).expect("snapshot must parse");
+        let obj = doc.as_obj().unwrap();
+        assert!(obj.contains_key("cutoffs"));
+        assert!(obj.contains_key("profiles"));
+        assert!(obj.contains_key("fleet"));
+        assert!(snap.contains("pool"), "{snap}");
+    }
+}

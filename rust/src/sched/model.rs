@@ -1,0 +1,291 @@
+//! Observed-throughput model: an EWMA of bytes/s per
+//! `(backend, op, dtype)`, from which the scheduler derives its
+//! crossover cutoffs at runtime.
+//!
+//! Each backend is modeled as `time(n) = overhead_s + bytes(n) /
+//! bytes_per_s` — the same two-parameter cost shape the paper uses to
+//! argue persistent launches (a fixed per-pass cost amortized over
+//! streamed bytes). The throughput term starts from a prior (tuned
+//! with `benches/sched.rs`, chosen so the cold-start cutoffs land on
+//! the constants the planner/router used to hardcode) and is refined
+//! by an EWMA of what executions actually achieved; the overhead term
+//! stays configured (it is a property of the dispatch path, not of
+//! the payload, and learning it would need per-size sweeps the
+//! serving path cannot afford).
+//!
+//! Host backends observe wall-clock seconds; the [`Backend::Pool`]
+//! backend observes *modeled* device seconds
+//! ([`crate::pool::PoolOutcome::modeled_wall_s`]) — consistent with
+//! the rest of the stack, where modeled time is the fleet's ground
+//! truth and host time merely simulates it.
+
+use std::collections::HashMap;
+
+use crate::reduce::op::{Dtype, Op};
+
+/// Execution backends the model tracks (the rungs of the cutoff
+/// ladder; compiled artifacts are catalog lookups, not modeled).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Backend {
+    /// Unrolled sequential loop (`reduce::simd`).
+    Sequential,
+    /// Width-2 pass on the persistent runtime (bridging band).
+    ThreadedNarrow,
+    /// Full-width persistent-runtime reduction.
+    ThreadedFull,
+    /// Sharded across the multi-device execution pool.
+    Pool,
+}
+
+impl Backend {
+    pub const ALL: [Backend; 4] =
+        [Backend::Sequential, Backend::ThreadedNarrow, Backend::ThreadedFull, Backend::Pool];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Sequential => "sequential",
+            Backend::ThreadedNarrow => "threaded-narrow",
+            Backend::ThreadedFull => "threaded-full",
+            Backend::Pool => "pool",
+        }
+    }
+}
+
+impl std::fmt::Display for Backend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Cost-model state for one `(backend, op, dtype)` key.
+#[derive(Debug, Clone, Copy)]
+pub struct BackendProfile {
+    /// Fixed per-call dispatch cost, seconds (configured, not learned).
+    pub overhead_s: f64,
+    /// EWMA of observed streaming throughput, bytes per second.
+    pub bytes_per_s: f64,
+    /// Observations folded into the EWMA so far.
+    pub observations: u64,
+}
+
+/// Throughput priors, tuned so the derived cold-start cutoffs land on
+/// the legacy hardcoded ladder (re-derive from `benches/sched.rs` and
+/// the `benches/hotpath.rs` sweep after retuning either runtime):
+/// the sequential→narrow crossover sits below the persistent
+/// runtime's own floor (so the floor binds, as before), and the
+/// narrow→full crossover lands at ~2^15 elements — the post-
+/// persistent-threads knee.
+pub const SEQ_BYTES_PER_S: f64 = 9.0e9;
+pub const NARROW_BYTES_PER_S: f64 = 13.5e9;
+pub const FULL_BYTES_PER_S: f64 = 28.0e9;
+pub const NARROW_OVERHEAD_S: f64 = 2.0e-6;
+pub const FULL_OVERHEAD_S: f64 = 6.5e-6;
+/// Per-pass cost of a fleet dispatch (shard launches, queue hops, the
+/// host-side partial combine). With a 4×C2075 fleet prior this puts
+/// the host→pool crossover at ~2^20 elements, matching the serving
+/// default that used to be hardcoded.
+pub const POOL_OVERHEAD_S: f64 = 1.5e-4;
+
+/// EWMA of observed bytes/s per `(backend, op, dtype)`, with
+/// per-backend priors.
+#[derive(Debug)]
+pub struct ThroughputModel {
+    /// EWMA weight of a new observation.
+    alpha: f64,
+    /// `(bytes_per_s, overhead_s)` prior for [`Backend::Pool`] — set
+    /// from the attached fleet's summed modeled throughput; absent
+    /// when no pool is attached (the pool rung then never wins).
+    pool_prior: Option<(f64, f64)>,
+    observed: HashMap<(Backend, Op, Dtype), BackendProfile>,
+}
+
+impl ThroughputModel {
+    pub fn new(alpha: f64, pool_prior: Option<(f64, f64)>) -> ThroughputModel {
+        ThroughputModel {
+            alpha: alpha.clamp(0.01, 1.0),
+            pool_prior,
+            observed: HashMap::new(),
+        }
+    }
+
+    /// The prior profile for a backend (what a key starts from before
+    /// any observation).
+    pub fn prior(&self, backend: Backend) -> BackendProfile {
+        let (overhead_s, bytes_per_s) = match backend {
+            Backend::Sequential => (0.0, SEQ_BYTES_PER_S),
+            Backend::ThreadedNarrow => (NARROW_OVERHEAD_S, NARROW_BYTES_PER_S),
+            Backend::ThreadedFull => (FULL_OVERHEAD_S, FULL_BYTES_PER_S),
+            Backend::Pool => {
+                let (bps, ovh) = self.pool_prior.unwrap_or((0.0, POOL_OVERHEAD_S));
+                (ovh, bps)
+            }
+        };
+        BackendProfile { overhead_s, bytes_per_s, observations: 0 }
+    }
+
+    /// The current profile for a key: the EWMA-refined state if any
+    /// observation landed, the prior otherwise.
+    pub fn profile(&self, backend: Backend, op: Op, dtype: Dtype) -> BackendProfile {
+        self.observed
+            .get(&(backend, op, dtype))
+            .copied()
+            .unwrap_or_else(|| self.prior(backend))
+    }
+
+    /// Fold one observed execution (`bytes` moved in `seconds`) into
+    /// the key's EWMA. Degenerate observations are ignored.
+    pub fn record(&mut self, backend: Backend, op: Op, dtype: Dtype, bytes: f64, seconds: f64) {
+        if !bytes.is_finite() || !seconds.is_finite() || bytes <= 0.0 || seconds <= 0.0 {
+            return;
+        }
+        let obs = bytes / seconds;
+        let alpha = self.alpha;
+        let prior = self.prior(backend);
+        let e = self.observed.entry((backend, op, dtype)).or_insert(prior);
+        e.bytes_per_s = if e.observations == 0 {
+            // Seed from the prior, but let the first observation pull
+            // harder than steady-state alpha would.
+            0.5 * e.bytes_per_s + 0.5 * obs
+        } else {
+            (1.0 - alpha) * e.bytes_per_s + alpha * obs
+        };
+        e.observations += 1;
+    }
+
+    /// The smallest `n` (elements of `elem_bytes` each) at which `to`
+    /// beats `from` under the two-parameter cost model, or `None` when
+    /// `to` never catches up (not faster per byte, or unusable).
+    pub fn crossover(
+        &self,
+        from: Backend,
+        to: Backend,
+        op: Op,
+        dtype: Dtype,
+        elem_bytes: usize,
+    ) -> Option<usize> {
+        let a = self.profile(from, op, dtype);
+        let b = self.profile(to, op, dtype);
+        if a.bytes_per_s <= 0.0 || b.bytes_per_s <= 0.0 {
+            return None;
+        }
+        let inv_diff = 1.0 / a.bytes_per_s - 1.0 / b.bytes_per_s;
+        if inv_diff <= 0.0 {
+            return None; // `to` is not faster per byte: never crosses.
+        }
+        let overhead_gap = b.overhead_s - a.overhead_s;
+        if overhead_gap <= 0.0 {
+            return Some(0); // faster AND cheaper to dispatch.
+        }
+        let bytes = overhead_gap / inv_diff;
+        let n = (bytes / elem_bytes.max(1) as f64).ceil();
+        if n.is_finite() {
+            Some(n as usize)
+        } else {
+            None
+        }
+    }
+
+    /// All refined keys (for the snapshot dump).
+    pub fn observed_keys(
+        &self,
+    ) -> impl Iterator<Item = (&(Backend, Op, Dtype), &BackendProfile)> {
+        self.observed.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> ThroughputModel {
+        ThroughputModel::new(0.25, Some((4.0 * 76.8e9, POOL_OVERHEAD_S)))
+    }
+
+    #[test]
+    fn priors_order_the_ladder() {
+        let m = model();
+        let s = m.prior(Backend::Sequential);
+        let n = m.prior(Backend::ThreadedNarrow);
+        let f = m.prior(Backend::ThreadedFull);
+        let p = m.prior(Backend::Pool);
+        assert!(s.bytes_per_s < n.bytes_per_s);
+        assert!(n.bytes_per_s < f.bytes_per_s);
+        assert!(f.bytes_per_s < p.bytes_per_s);
+        assert!(s.overhead_s < n.overhead_s);
+        assert!(n.overhead_s < f.overhead_s);
+        assert!(f.overhead_s < p.overhead_s);
+    }
+
+    #[test]
+    fn crossover_matches_hand_math() {
+        let m = model();
+        // seq -> narrow: 2µs gap over (1/9 - 1/13.5) ns/byte ≈ 54 kB.
+        let c = m
+            .crossover(Backend::Sequential, Backend::ThreadedNarrow, Op::Sum, Dtype::F32, 4)
+            .unwrap();
+        let want = (NARROW_OVERHEAD_S / (1.0 / SEQ_BYTES_PER_S - 1.0 / NARROW_BYTES_PER_S) / 4.0)
+            .ceil() as usize;
+        assert_eq!(c, want);
+        assert!((10_000..20_000).contains(&c), "seq->narrow at {c}");
+        // narrow -> full lands in the 2^15 band.
+        let c = m
+            .crossover(Backend::ThreadedNarrow, Backend::ThreadedFull, Op::Sum, Dtype::F32, 4)
+            .unwrap();
+        assert!((20_000..40_000).contains(&c), "narrow->full at {c}");
+        // full -> pool (4xC2075 prior) lands near 2^20.
+        let c = m
+            .crossover(Backend::ThreadedFull, Backend::Pool, Op::Sum, Dtype::F32, 4)
+            .unwrap();
+        assert!(((1 << 19)..(1 << 21)).contains(&c), "full->pool at {c}");
+    }
+
+    #[test]
+    fn crossover_degenerate_cases() {
+        let m = ThroughputModel::new(0.25, None);
+        // No pool prior: the pool rung is unusable.
+        assert_eq!(
+            m.crossover(Backend::ThreadedFull, Backend::Pool, Op::Sum, Dtype::F32, 4),
+            None
+        );
+        // A backend never beats itself.
+        assert_eq!(
+            m.crossover(Backend::Sequential, Backend::Sequential, Op::Sum, Dtype::F32, 4),
+            None
+        );
+        // Faster and cheaper: wins from n = 0.
+        let mut m = ThroughputModel::new(1.0, None);
+        // Push the narrow EWMA far above full's prior throughput with
+        // a huge observation; overhead stays at the (higher) prior, so
+        // full->narrow cannot cross but narrow stays reachable.
+        m.record(Backend::ThreadedNarrow, Op::Sum, Dtype::F32, 1e12, 1.0);
+        assert_eq!(
+            m.crossover(Backend::ThreadedFull, Backend::ThreadedNarrow, Op::Sum, Dtype::F32, 4),
+            Some(0)
+        );
+    }
+
+    #[test]
+    fn ewma_moves_toward_observations() {
+        let mut m = model();
+        let before = m.profile(Backend::Pool, Op::Sum, Dtype::F32).bytes_per_s;
+        // Observe a pool that is 10x slower than its prior claims.
+        for _ in 0..16 {
+            m.record(Backend::Pool, Op::Sum, Dtype::F32, before, 10.0);
+        }
+        let after = m.profile(Backend::Pool, Op::Sum, Dtype::F32);
+        assert!(after.bytes_per_s < before / 2.0, "{} !< {}", after.bytes_per_s, before);
+        assert_eq!(after.observations, 16);
+        // Other keys keep the prior.
+        assert_eq!(m.profile(Backend::Pool, Op::Max, Dtype::F32).observations, 0);
+    }
+
+    #[test]
+    fn degenerate_observations_ignored() {
+        let mut m = model();
+        m.record(Backend::Sequential, Op::Sum, Dtype::F32, 0.0, 1.0);
+        m.record(Backend::Sequential, Op::Sum, Dtype::F32, 100.0, 0.0);
+        m.record(Backend::Sequential, Op::Sum, Dtype::F32, f64::NAN, 1.0);
+        m.record(Backend::Sequential, Op::Sum, Dtype::F32, 100.0, f64::INFINITY);
+        assert_eq!(m.profile(Backend::Sequential, Op::Sum, Dtype::F32).observations, 0);
+    }
+}

@@ -24,7 +24,7 @@ fn config() -> ServiceConfig {
         max_queue: 1000,
         workers: 2,
         warmup: false, // tests tolerate first-call compile latency
-        pool: None,
+        ..ServiceConfig::default()
     }
 }
 
@@ -170,7 +170,7 @@ fn host_fusion_end_to_end_without_artifacts() {
         max_queue: 1000,
         workers: 4,
         warmup: false,
-        pool: None,
+        ..ServiceConfig::default()
     };
     let svc = Service::start(cfg).unwrap();
     let payloads: Vec<Vec<f32>> = (0..6).map(|i| pseudo(10_000, 100 + i)).collect();
@@ -224,8 +224,8 @@ fn startup_fails_cleanly_with_bad_pool_device() {
     let cfg = ServiceConfig {
         pool: Some(parred::coordinator::PoolServeConfig {
             devices: vec!["NoSuchGPU".into()],
-            cutoff: 1 << 20,
-            tasks_per_device: 2,
+            cutoff: Some(1 << 20),
+            ..Default::default()
         }),
         ..config()
     };
@@ -240,8 +240,8 @@ fn sharded_path_round_trip() {
     let cfg = ServiceConfig {
         pool: Some(parred::coordinator::PoolServeConfig {
             devices: vec!["TeslaC2075".into(); 4],
-            cutoff: 1 << 19,
-            tasks_per_device: 2,
+            cutoff: Some(1 << 19),
+            ..Default::default()
         }),
         ..config()
     };

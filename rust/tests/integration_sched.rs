@@ -1,0 +1,271 @@
+//! Adaptive-scheduler acceptance: on a skewed heterogeneous fleet,
+//! after a warm-up of observed outcomes the feedback-driven re-planned
+//! split must beat the static proportional split — lower modeled
+//! wall-clock, less imbalance for stealing to absorb, and fewer
+//! actual steals on a paced pool — while float sums stay within 1e-5
+//! of the Neumaier oracle and integer reductions stay bit-identical.
+//!
+//! The skew: one device whose *static* `modeled_throughput_gbps`
+//! proxy (achievable bandwidth × occupancy) looks identical to a
+//! healthy TeslaC2075 but whose actual modeled execution is several
+//! times slower — DRAM round-trips and per-load service are an order
+//! of magnitude costlier (an ECC/remapping-degraded part with its
+//! bandwidth spec intact), so the run is latency-bound while the
+//! proxy only sees the roofline. That is exactly the class of error
+//! Prajapati's machine-observed scheduling view targets. Shards stay
+//! large enough (N/16 per chunk) that the latency chain term scales
+//! with elements, not per-launch constants, so feedback can actually
+//! balance the fleet.
+//!
+//! Warm-up observations come from deterministic replay
+//! ([`parred::harness::sched_adapt::replay`]), so every modeled
+//! assertion here is exactly reproducible; the steal comparison runs
+//! on a real paced pool, where host-time concurrency mirrors modeled
+//! busy time by construction.
+
+use parred::gpusim::ir::CombOp;
+use parred::gpusim::DeviceConfig;
+use parred::harness::sched_adapt::{replay, summarize};
+use parred::pool::{DevicePool, PoolConfig, ShardPlan};
+use parred::reduce::op::Op;
+use parred::reduce::{kahan, scalar};
+use parred::sched::{PoolPrior, SchedConfig, Scheduler};
+use parred::util::rng::Rng;
+
+/// A TeslaC2075 whose static throughput proxy lies: bandwidth,
+/// efficiency and occupancy (the proxy's only inputs) are untouched,
+/// but DRAM latency and per-load service cost are ~10-70x the healthy
+/// part's, so actual modeled execution is latency-bound and several
+/// times slower than the roofline the proxy believes in.
+fn throttled_c2075() -> DeviceConfig {
+    DeviceConfig {
+        name: "TeslaC2075-throttled",
+        dram_latency_cycles: 40_000,
+        load_service_cycles: 2_000,
+        ..DeviceConfig::tesla_c2075()
+    }
+}
+
+fn skewed_fleet() -> Vec<DeviceConfig> {
+    vec![
+        throttled_c2075(),
+        DeviceConfig::tesla_c2075(),
+        DeviceConfig::tesla_c2075(),
+        DeviceConfig::tesla_c2075(),
+    ]
+}
+
+const N: usize = 1 << 21;
+const TASKS: usize = 4;
+const BLOCK: u32 = 256;
+const WARMUP: usize = 6;
+
+fn workload() -> Vec<f64> {
+    let mut rng = Rng::new(42);
+    (0..N).map(|_| rng.i32_in(-100, 100) as f64).collect()
+}
+
+/// Warm the scheduler on deterministic replay outcomes over the
+/// canonical fixture ([`skewed_fleet`] + [`workload`]) and return
+/// (static plan, adaptive plan, static busy, adaptive busy). The
+/// result is cached — replay at `N` is deterministic but not free,
+/// and all the tests below anchor on this one warm-up.
+fn warm_up() -> (ShardPlan, ShardPlan, Vec<f64>, Vec<f64>) {
+    static WARM: std::sync::OnceLock<(ShardPlan, ShardPlan, Vec<f64>, Vec<f64>)> =
+        std::sync::OnceLock::new();
+    WARM.get_or_init(|| warm_up_uncached(&skewed_fleet(), &workload())).clone()
+}
+
+fn warm_up_uncached(
+    fleet: &[DeviceConfig],
+    data: &[f64],
+) -> (ShardPlan, ShardPlan, Vec<f64>, Vec<f64>) {
+    let sched = Scheduler::new(SchedConfig {
+        adaptive: true,
+        pool: Some(PoolPrior::for_fleet(fleet, None)),
+        ..SchedConfig::default()
+    });
+    // Iteration 0 is the static proportional split (factors are 1).
+    let static_plan = sched.plan_shards(fleet, data.len(), TASKS);
+    let static_busy = replay(fleet, data, &static_plan, BLOCK, 8).expect("static replay");
+    assert_eq!(
+        static_plan.shards,
+        ShardPlan::proportional(fleet, data.len(), TASKS).shards,
+        "before feedback the scheduler's plan IS the static split"
+    );
+    let mut busy = static_busy.clone();
+    for _ in 0..WARMUP {
+        sched.observe_busy(&busy);
+        let plan = sched.plan_shards(fleet, data.len(), TASKS);
+        busy = replay(fleet, data, &plan, BLOCK, 8).expect("warmup replay");
+    }
+    let adaptive_plan = sched.plan_shards(fleet, data.len(), TASKS);
+    let adaptive_busy = replay(fleet, data, &adaptive_plan, BLOCK, 8).expect("adaptive replay");
+    (static_plan, adaptive_plan, static_busy, adaptive_busy)
+}
+
+#[test]
+fn adaptive_replan_beats_static_split_on_skewed_fleet() {
+    let (_, adaptive_plan, static_busy, adaptive_busy) = warm_up();
+
+    let (wall_s, imb_s, pressure_s) = summarize(&static_busy);
+    let (wall_a, imb_a, pressure_a) = summarize(&adaptive_busy);
+
+    // The throttled device must actually be the static split's
+    // bottleneck (sanity of the scenario itself).
+    assert!(
+        static_busy[0] > 2.0 * static_busy[1],
+        "throttling must bite: {static_busy:?}"
+    );
+    // Lower modeled wall-clock, by a wide margin.
+    assert!(
+        wall_a < 0.7 * wall_s,
+        "adaptive wall {wall_a} !< 0.7 x static wall {wall_s}"
+    );
+    // Less imbalance left for work stealing to absorb.
+    assert!(imb_a < 0.5 * imb_s, "imbalance {imb_s} -> {imb_a}");
+    assert!(
+        pressure_a < 0.5 * pressure_s,
+        "steal pressure {pressure_s} -> {pressure_a}"
+    );
+    // The laggard's share shrank from its static quarter.
+    let lag_share: usize =
+        adaptive_plan.shards.iter().filter(|s| s.device == 0).map(|s| s.len()).sum();
+    assert!(
+        lag_share * 2 < N / 4,
+        "laggard kept {lag_share} of {N} despite feedback"
+    );
+}
+
+#[test]
+fn adaptive_replan_steals_less_on_a_paced_pool() {
+    let fleet = skewed_fleet();
+    let data = workload();
+    let (static_plan, adaptive_plan, static_busy, _) = warm_up();
+    let (wall_s, _, _) = summarize(&static_busy);
+
+    // Pace host execution so a worker holds each shard for
+    // (modeled seconds x pace) — the throttled device's static
+    // allocation then visibly over-runs in host time too, and steal
+    // counts measure plan imbalance instead of host simulator speed.
+    // Scale: the static split's bottleneck device sleeps ~1s total.
+    let pace = 1.0 / wall_s;
+    let pool = DevicePool::new(PoolConfig {
+        devices: fleet.clone(),
+        block: BLOCK,
+        tasks_per_device: TASKS,
+        pace,
+        ..PoolConfig::default()
+    })
+    .expect("paced pool");
+
+    let want: f64 = data.iter().sum();
+    let out_static = pool.reduce_with_plan(&data, CombOp::Add, &static_plan).expect("static run");
+    let out_adaptive =
+        pool.reduce_with_plan(&data, CombOp::Add, &adaptive_plan).expect("adaptive run");
+
+    // Integer-valued f64 payload: both runs are exact.
+    assert_eq!(out_static.value, want);
+    assert_eq!(out_adaptive.value, want);
+
+    // The static split starves three workers while the throttled
+    // device grinds its oversized allocation: they must steal.
+    assert!(
+        out_static.steals >= 2,
+        "static split must force steals, got {}",
+        out_static.steals
+    );
+    // The re-planned split leaves less to steal.
+    assert!(
+        out_adaptive.steals < out_static.steals,
+        "adaptive steals {} !< static steals {}",
+        out_adaptive.steals,
+        out_static.steals
+    );
+}
+
+#[test]
+fn pool_fusion_end_to_end_through_the_service() {
+    use parred::coordinator::service::{PoolServeConfig, Service, ServiceConfig};
+    use parred::coordinator::ExecPath;
+    use parred::runtime::literal::{HostScalar, HostVec};
+    use std::time::Duration;
+
+    // Empty (but valid) catalog + an attached fleet: same-key payloads
+    // past the pool cutoff must stack into one fleet pass
+    // (ExecPath::PoolFused), with adaptation folding the outcomes into
+    // the scheduler as they complete.
+    let n = 1 << 19;
+    let cfg = ServiceConfig {
+        artifacts_dir: concat!(env!("CARGO_MANIFEST_DIR"), "/tests/fixtures/empty_artifacts")
+            .to_string(),
+        batch_window: Duration::from_millis(50),
+        max_queue: 1000,
+        workers: 2,
+        warmup: false,
+        pool: Some(PoolServeConfig {
+            devices: vec!["TeslaC2075".into(); 3],
+            cutoff: Some(n),
+            ..Default::default()
+        }),
+        adaptive: true,
+        sched_snapshot: None,
+    };
+    let svc = Service::start(cfg).unwrap();
+    let payloads: Vec<Vec<f32>> =
+        (0..4u64).map(|i| Rng::new(100 + i).f32_vec(n, -1.0, 1.0)).collect();
+    let rxs: Vec<_> = payloads
+        .iter()
+        .map(|p| svc.submit(Op::Sum, HostVec::F32(p.clone())).unwrap())
+        .collect();
+    let mut fused = 0;
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv_timeout(Duration::from_secs(300)).unwrap();
+        let HostScalar::F32(v) = resp.value.unwrap() else { panic!("dtype") };
+        let oracle = kahan::sum_f64(&payloads[i]);
+        let rel = (v as f64 - oracle).abs() / oracle.abs().max(1.0);
+        assert!(rel < 1e-5, "req {i}: {v} vs Neumaier {oracle} (rel {rel:.2e})");
+        match resp.path {
+            ExecPath::PoolFused { batch, devices } => {
+                fused += 1;
+                assert!(batch >= 2 && devices == 3, "{:?}", resp.path);
+            }
+            ExecPath::Sharded { .. } => {} // a straggler that missed the batch
+            p => panic!("expected a fleet path, got {p:?}"),
+        }
+    }
+    assert!(fused >= 2, "expected fused fleet responses, got {fused}");
+    let m = svc.shutdown();
+    assert!(m.pool_fused_batches >= 1, "metrics must count fused fleet batches");
+    assert!(m.pool_fused_rows >= 2, "fused fleet rows must be counted");
+    assert!(m.pool_tasks > 0, "pool counters snapshotted");
+}
+
+#[test]
+fn adaptive_plans_keep_numerics_exact() {
+    let fleet = skewed_fleet();
+    let (_, adaptive_plan, _, _) = warm_up();
+    let pool = DevicePool::new(PoolConfig {
+        devices: fleet.clone(),
+        block: BLOCK,
+        tasks_per_device: TASKS,
+        ..PoolConfig::default()
+    })
+    .expect("pool");
+
+    // Integer reductions: bit-identical to the scalar oracle.
+    let ints: Vec<i32> = Rng::new(7).i32_vec(N, -500, 500);
+    for op in [Op::Sum, Op::Min, Op::Max] {
+        let (got, _) = pool.reduce_elems_planned(&ints, op, &adaptive_plan).expect("i32 reduce");
+        assert_eq!(got, scalar::reduce(&ints, op), "{op}");
+    }
+
+    // Float sums: within 1e-5 of the Neumaier oracle.
+    let floats: Vec<f32> = Rng::new(9).f32_vec(N, -1.0, 1.0);
+    let (got, out) =
+        pool.reduce_elems_planned(&floats, Op::Sum, &adaptive_plan).expect("f32 reduce");
+    let oracle = kahan::sum_f64(&floats);
+    let rel = (got as f64 - oracle).abs() / oracle.abs().max(1.0);
+    assert!(rel < 1e-5, "pool {got} vs Neumaier {oracle} (rel {rel:.2e})");
+    assert!(out.shards >= fleet.len(), "all devices participate");
+}

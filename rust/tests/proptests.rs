@@ -325,6 +325,72 @@ fn prop_pool_uneven_splits_stay_exact() {
 }
 
 #[test]
+fn prop_replanned_shard_weights_tile_exactly() {
+    use parred::gpusim::DeviceConfig;
+    use parred::sched::{PoolPrior, SchedConfig, Scheduler};
+
+    // The adaptive re-planner must produce a valid shard plan — tiling
+    // [0, n) contiguously with non-empty shards — under *arbitrary*
+    // busy-time feedback histories (including zero, huge, and
+    // non-finite observations) on arbitrary fleets.
+    check(
+        "re-planned shard weights tile [0, n) exactly",
+        32,
+        |rng| {
+            let presets = DeviceConfig::presets();
+            let devices: Vec<DeviceConfig> = (0..rng.range(1, 6))
+                .map(|_| presets[rng.range(0, presets.len() - 1)].clone())
+                .collect();
+            let n = parred::util::prop::sizes(rng, 3_000_000);
+            let tasks = rng.range(1, 5);
+            let rounds: Vec<Vec<f64>> = (0..rng.range(0, 8))
+                .map(|_| {
+                    (0..devices.len())
+                        .map(|_| match rng.below(8) {
+                            0 => 0.0,
+                            1 => f64::NAN,
+                            2 => f64::INFINITY,
+                            3 => 1e-12,
+                            4 => 1e12,
+                            _ => rng.f64() * 10.0,
+                        })
+                        .collect()
+                })
+                .collect();
+            (devices, n, tasks, rounds)
+        },
+        |(devices, n, tasks, rounds)| {
+            let sched = Scheduler::new(SchedConfig {
+                adaptive: true,
+                pool: Some(PoolPrior::for_fleet(devices, None)),
+                ..SchedConfig::default()
+            });
+            for busy in rounds {
+                sched.observe_busy(busy);
+            }
+            let plan = sched.plan_shards(devices, *n, *tasks);
+            let mut cursor = 0usize;
+            for s in &plan.shards {
+                if s.start != cursor {
+                    return Err(format!("gap/overlap at {cursor}: {s:?}"));
+                }
+                if s.is_empty() {
+                    return Err(format!("empty shard {s:?}"));
+                }
+                if s.device >= devices.len() {
+                    return Err(format!("unknown device in {s:?}"));
+                }
+                cursor = s.end;
+            }
+            if cursor != *n {
+                return Err(format!("plan covers {cursor} of {n}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_batcher_never_reorders_within_key() {
     use parred::coordinator::batcher::Batcher;
     use parred::reduce::Op;
@@ -355,7 +421,9 @@ fn prop_batcher_never_reorders_within_key() {
                     reply: tx,
                 });
             }
-            let flushed = b.flush_ready(t + Duration::from_millis(1), |_| vec![4, 8, 16]);
+            let flushed = b.flush_ready(t + Duration::from_millis(1), |_| {
+                parred::coordinator::batcher::KeyPolicy::Rows(vec![4, 8, 16])
+            });
             // Within each key, ids must be strictly increasing.
             use std::collections::HashMap;
             let mut last: HashMap<usize, u64> = HashMap::new();
