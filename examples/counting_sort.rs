@@ -1,23 +1,24 @@
 //! Reduction as a subroutine (paper §1): counting sort — one of the
-//! paper's cited consumers of reductions [6] — implemented with the
-//! host reduction library: `min`/`max` reductions bound the key range,
-//! a histogram is built in parallel (per-thread private histograms
+//! paper's cited consumers of reductions [6] — implemented on the
+//! `Engine` facade: `min`/`max` reductions bound the key range, a
+//! histogram is built in parallel (per-thread private histograms
 //! merged by... a reduction), and the prefix sums place elements.
 //!
 //! Run: `cargo run --release --example counting_sort`
 
-use parred::reduce::{scalar, threaded, Op};
+use parred::reduce::{scalar, Op};
 use parred::util::rng::Rng;
+use parred::Engine;
 
-/// Counting sort over an arbitrary i32 slice using reductions for the
-/// range scan and a two-stage parallel histogram.
-fn counting_sort(data: &[i32], threads: usize) -> Vec<i32> {
+/// Counting sort over an arbitrary i32 slice using engine reductions
+/// for the range scan and a two-stage parallel histogram.
+fn counting_sort(engine: &Engine, data: &[i32], threads: usize) -> anyhow::Result<Vec<i32>> {
     if data.is_empty() {
-        return Vec::new();
+        return Ok(Vec::new());
     }
-    // 1. Range via min/max reductions (two-stage, threaded).
-    let lo = threaded::reduce(data, Op::Min, threads);
-    let hi = threaded::reduce(data, Op::Max, threads);
+    // 1. Range via min/max reductions through the facade.
+    let lo = engine.reduce(data).op(Op::Min).run()?.value;
+    let hi = engine.reduce(data).op(Op::Max).run()?.value;
     let width = (hi - lo) as usize + 1;
 
     // 2. Per-chunk private histograms (stage 1)...
@@ -51,16 +52,17 @@ fn counting_sort(data: &[i32], threads: usize) -> Vec<i32> {
     for (i, &count) in hist.iter().enumerate() {
         out.extend(std::iter::repeat(lo + i as i32).take(count as usize));
     }
-    out
+    Ok(out)
 }
 
-fn main() {
+fn main() -> anyhow::Result<()> {
     let n = 5_000_000;
     let mut rng = Rng::new(11);
     let data = rng.i32_vec(n, -500, 500);
 
+    let engine = Engine::builder().host_workers(8).build()?;
     let t0 = std::time::Instant::now();
-    let sorted = counting_sort(&data, 8);
+    let sorted = counting_sort(&engine, &data, 8)?;
     let dt = t0.elapsed();
 
     // Verify: sortedness, permutation (sum + count preserved).
@@ -80,4 +82,5 @@ fn main() {
         sorted[0],
         sorted[sorted.len() - 1]
     );
+    Ok(())
 }

@@ -14,8 +14,9 @@
 //!
 //! Run: `cargo run --release --example golden_section`
 
-use parred::reduce::{threaded, Op};
+use parred::reduce::Op;
 use parred::util::rng::Rng;
+use parred::Engine;
 
 /// A synthetic road network: per-link free-flow times and capacities,
 /// plus each link's sensitivity to the two routes (route-incidence).
@@ -36,8 +37,9 @@ impl Network {
     }
 
     /// Total system travel time when fraction `x` of demand uses
-    /// route A. One evaluation = one big reduction over all links.
-    fn objective(&self, x: f32, demand: f32) -> f64 {
+    /// route A. One evaluation = one big reduction over all links,
+    /// placed by the engine's scheduler.
+    fn objective(&self, engine: &Engine, x: f32, demand: f32) -> f64 {
         let costs: Vec<f32> = self
             .t0
             .iter()
@@ -50,7 +52,12 @@ impl Network {
                 v * t0 * (1.0 + 0.15 * ratio * ratio * ratio * ratio)
             })
             .collect();
-        threaded::reduce(&costs, Op::Sum, 8) as f64
+        engine
+            .reduce(&costs)
+            .op(Op::Sum)
+            .run()
+            .expect("host reduction cannot fail")
+            .value as f64
     }
 }
 
@@ -93,9 +100,11 @@ fn main() {
     let links = 2_000_000; // a metropolitan-scale network
     let demand = 1000.0;
     let net = Network::synth(links, 7);
+    let engine = Engine::host(8);
 
     let t0 = std::time::Instant::now();
-    let (x, fx, evals) = golden_section(0.0, 1.0, 1e-4, |x| net.objective(x as f32, demand));
+    let (x, fx, evals) =
+        golden_section(0.0, 1.0, 1e-4, |x| net.objective(&engine, x as f32, demand));
     let dt = t0.elapsed();
 
     println!("network links: {links}");
@@ -108,8 +117,8 @@ fn main() {
     );
 
     // Sanity: the optimum beats both extremes (unimodality).
-    let f0 = net.objective(0.0, demand);
-    let f1 = net.objective(1.0, demand);
+    let f0 = net.objective(&engine, 0.0, demand);
+    let f1 = net.objective(&engine, 1.0, demand);
     assert!(fx <= f0 && fx <= f1, "optimum must beat the extremes");
     println!("verified: f(x*) <= f(0) and f(x*) <= f(1) ✔");
 }

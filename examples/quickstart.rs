@@ -1,26 +1,53 @@
-//! Quickstart: reduce a vector three ways — host library, the PJRT
-//! path (Pallas-kernel artifact), and the GPU simulator — and check
-//! they agree.
+//! Quickstart: one `Engine`, every path — the facade places each
+//! request (scalar, rows, ragged segments) on the scheduler's ladder,
+//! then the PJRT artifact path and the GPU simulator check the same
+//! numbers independently.
 //!
 //! Run: `cargo run --release --example quickstart`
 
 use parred::gpusim::{CombOp, DeviceConfig, Gpu};
 use parred::kernels::drivers;
-use parred::reduce::{scalar, threaded, Op};
+use parred::reduce::{scalar, Op};
 use parred::runtime::literal::HostVec;
 use parred::runtime::Runtime;
 use parred::util::rng::Rng;
+use parred::Engine;
 
 fn main() -> anyhow::Result<()> {
     let n = 1 << 20;
     let mut rng = Rng::new(42);
     let data = rng.f32_vec(n, -1.0, 1.0);
 
-    // 1. Host library: sequential oracle and the threaded two-stage.
+    // 1. The engine facade: one front door, scheduler-placed.
+    let engine = Engine::builder().host_workers(8).build()?;
     let oracle = scalar::reduce(&data, Op::Sum);
-    let fast = threaded::reduce(&data, Op::Sum, 8);
-    println!("host  : oracle={oracle:.4}  threaded={fast:.4}");
-    assert!((oracle - fast).abs() <= 1e-2 * oracle.abs().max(1.0));
+    let out = engine.reduce(&data).op(Op::Sum).run()?;
+    println!(
+        "engine: {:.4} via {:?} in {:.3} ms  (oracle {:.4})",
+        out.value,
+        out.path,
+        out.elapsed_s * 1e3,
+        oracle
+    );
+    assert!((oracle - out.value).abs() <= 1e-2 * oracle.abs().max(1.0));
+
+    // ...rows and ragged segments ride the same door.
+    let rows = engine.reduce_rows(&data, 1 << 10).op(Op::Max).run()?;
+    println!("engine: {} row maxima via {:?}", rows.value.len(), rows.path);
+    let offsets = [0usize, 100, 100, 1 << 18, n];
+    let segs = engine.reduce_segments(&data, &offsets).op(Op::Sum).run()?;
+    println!(
+        "engine: {} ragged segment sums via {:?} (empty segment -> identity {})",
+        segs.value.len(),
+        segs.path,
+        segs.value[1]
+    );
+    for (s, w) in offsets.windows(2).enumerate() {
+        let seg = &data[w[0]..w[1]];
+        let want = scalar::reduce(seg, Op::Sum);
+        let l1: f32 = seg.iter().map(|x| x.abs()).sum();
+        assert!((want - segs.value[s]).abs() <= 1e-4 * l1.max(1.0), "segment {s}");
+    }
 
     // 2. PJRT path: the AOT-compiled Pallas kernel (two-stage, F=8,
     //    algebraic masking) executing through the xla crate.
@@ -51,6 +78,6 @@ fn main() -> anyhow::Result<()> {
     );
     assert!((out.value - oracle as f64).abs() <= 1e-2 * (oracle.abs() as f64).max(1.0));
 
-    println!("all three paths agree ✔");
+    println!("all paths agree ✔");
     Ok(())
 }

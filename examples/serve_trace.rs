@@ -15,6 +15,9 @@
 use std::time::Duration;
 
 use parred::coordinator::service::{run_trace, PoolServeConfig, ServiceConfig, TraceConfig};
+use parred::reduce::{kahan, Op};
+use parred::util::rng::Rng;
+use parred::Engine;
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -61,5 +64,38 @@ fn main() -> anyhow::Result<()> {
     let report3 = run_trace(cfg3, trace3)?;
     println!("--- pool: 2xTeslaC2075 + 1xG80, sharded routing at 1M f32 ---");
     println!("{report3}");
+
+    // The same fleet, driven directly through the Engine facade (the
+    // front door the service itself uses): one scalar reduction that
+    // shards, and a segmented workload whose large segment goes to
+    // the fleet while the small ones fuse on the host.
+    let engine = Engine::builder()
+        .host_workers(0)
+        .fleet_spec("TeslaC2075*2,G80")?
+        .pool_cutoff(Some(1 << 19))
+        .adaptive(true)
+        .build()?;
+    let data = Rng::new(13).f32_vec(1 << 20, -1.0, 1.0);
+    let out = engine.reduce(&data).op(Op::Sum).run()?;
+    let oracle = kahan::sum_f64(&data);
+    println!("--- engine facade over the same fleet ---");
+    println!(
+        "engine reduce: {} via {:?} (shards={} steals={} modeled {:.3} ms; Neumaier {:.3})",
+        out.value,
+        out.path,
+        out.shards,
+        out.steals,
+        out.modeled_wall_s * 1e3,
+        oracle
+    );
+    let offsets = [0usize, 1_000, 1_000, 65_536, 1 << 20];
+    let segs = engine.reduce_segments(&data, &offsets).op(Op::Sum).run()?;
+    println!(
+        "engine segments: {} segment sums via {:?} (fleet shards={} steals={})",
+        segs.value.len(),
+        segs.path,
+        segs.shards,
+        segs.steals
+    );
     Ok(())
 }

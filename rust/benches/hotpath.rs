@@ -17,7 +17,7 @@ use parred::coordinator::Router;
 use parred::gpusim::{CombOp, DeviceConfig, Gpu};
 use parred::kernels::drivers;
 use parred::reduce::plan::ShapeKey;
-use parred::reduce::{kahan, scalar, simd, threaded, Op};
+use parred::reduce::{kahan, persistent, scalar, simd, threaded, Op};
 use parred::runtime::literal::HostVec;
 use parred::runtime::{Catalog, Runtime};
 use parred::util::bench::Bench;
@@ -40,7 +40,7 @@ fn main() {
     b.run("host/kahan_sum_f32_4M", bytes, || kahan::sum_f32(&data_f));
     for t in [2usize, 4, 8] {
         b.run(&format!("host/persistent{t}_sum_f32_4M"), bytes, || {
-            threaded::reduce(&data_f, Op::Sum, t)
+            persistent::global().reduce_width(&data_f, Op::Sum, t)
         });
         b.run(&format!("host/spawn{t}_sum_f32_4M"), bytes, || {
             threaded::spawn_reduce(&data_f, Op::Sum, t)
@@ -61,7 +61,11 @@ fn main() {
         let df = &sweep_f[..n];
         let di = &sweep_i[..n];
         let want_i = scalar::reduce(di, Op::Sum);
-        assert_eq!(threaded::reduce(di, Op::Sum, workers), want_i, "persistent i32 2^{p}");
+        assert_eq!(
+            persistent::global().reduce_width(di, Op::Sum, workers),
+            want_i,
+            "persistent i32 2^{p}"
+        );
         assert_eq!(threaded::spawn_reduce(di, Op::Sum, workers), want_i, "spawn i32 2^{p}");
         let bytes = Some(4 * n as u64);
         let s = b.run(&format!("sweep/simd_sum_f32_2p{p}"), bytes, || simd::reduce(df, Op::Sum));
@@ -71,7 +75,7 @@ fn main() {
         });
         let (m_spawn, g_spawn) = (s.median(), s.gbps());
         let s = b.run(&format!("sweep/persistent{workers}_sum_f32_2p{p}"), bytes, || {
-            threaded::reduce(df, Op::Sum, workers)
+            persistent::global().reduce_width(df, Op::Sum, workers)
         });
         let (m_pers, g_pers) = (s.median(), s.gbps());
         for (backend, m, g) in [

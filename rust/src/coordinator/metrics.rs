@@ -103,6 +103,10 @@ impl Metrics {
                 self.sharded_requests += 1;
                 self.lat_pool_fused.record(latency_s);
             }
+            // Segmented runs are an engine-level path (the coordinator
+            // serves scalar requests); bucketed with host latencies if
+            // one ever flows through.
+            ExecPath::Segmented { .. } => self.lat_host.record(latency_s),
             ExecPath::Host => self.lat_host.record(latency_s),
         }
     }

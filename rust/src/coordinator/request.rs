@@ -31,26 +31,12 @@ impl Request {
     }
 }
 
-/// How a request was executed (for metrics and tests).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum ExecPath {
-    /// Dedicated `full` artifact on PJRT.
-    PjrtFull,
-    /// Stacked into a `rows` artifact with `batch` rows.
-    PjrtBatched { batch: usize },
-    /// Sharded across the `devices`-wide execution pool
-    /// ([`crate::pool::DevicePool`]).
-    Sharded { devices: usize },
-    /// Same-key host requests fused into one `reduce_rows` pass over
-    /// the persistent worker pool (`batch` rows; RedFuser-style).
-    HostFused { batch: usize },
-    /// Same-key fleet-bound requests fused into one device-fleet rows
-    /// pass (`batch` rows across `devices` devices) — pool-aware
-    /// dynamic batching.
-    PoolFused { batch: usize, devices: usize },
-    /// Host (threaded/sequential) fallback.
-    Host,
-}
+/// How a request was executed (for metrics and tests). Since the
+/// engine-facade PR this is the engine's own outcome type
+/// ([`crate::engine::ExecPath`]), re-exported unchanged: the
+/// coordinator executes host and fleet paths *through* the engine, so
+/// they share one path vocabulary.
+pub use crate::engine::ExecPath;
 
 /// The coordinator's answer.
 #[derive(Debug, Clone)]

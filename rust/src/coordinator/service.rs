@@ -1,25 +1,31 @@
-//! The serving engine: a dedicated executor thread owns the PJRT
+//! The serving surface: a dedicated executor thread owns the PJRT
 //! runtime (it is `Rc`-based and not `Send`) and drains an mpsc queue
 //! fed by any number of client threads; requests are routed
 //! ([`super::router`]), dynamically batched ([`super::batcher`]) and
 //! executed, with admission control ([`super::backpressure`]) and
 //! latency metrics ([`super::metrics`]).
+//!
+//! Since the engine-facade PR the executor constructs one
+//! [`crate::engine::Engine`] and routes **all** host and fleet
+//! execution through it: direct requests via `engine.reduce(..)`,
+//! fused batches (host- or fleet-side) via `engine.reduce_rows(..)`.
+//! Only artifact dispatch (the PJRT runtime the executor owns) stays
+//! local. The engine's scheduler is shared with the router, so
+//! routing and execution decide from the same ladder by construction.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
-use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context, Result};
 
+use crate::engine::{resolve_device, Engine};
 use crate::gpusim::DeviceConfig;
-use crate::pool::{DevicePool, PoolConfig};
 use crate::reduce::op::{Dtype, Element, Op};
-use crate::reduce::plan::{Planner, ShapeKey};
-use crate::reduce::{persistent, threaded};
+use crate::reduce::persistent;
+use crate::reduce::plan::ShapeKey;
 use crate::runtime::literal::{HostScalar, HostVec};
 use crate::runtime::Runtime;
-use crate::sched::{PoolPrior, SchedConfig, Scheduler};
 use crate::util::rng::Rng;
 use crate::util::stats::Histogram;
 
@@ -28,6 +34,10 @@ use super::batcher::{BatchKind, Batcher, FlushedBatch, KeyPolicy};
 use super::metrics::Metrics;
 use super::request::{ExecPath, Request, Response};
 use super::router::{Route, Router};
+
+/// Fleet-spec parsing lives with the engine now; re-exported so CLI
+/// and existing callers keep their import path.
+pub use crate::engine::parse_fleet_spec;
 
 /// Largest per-request payload (elements) eligible for RedFuser-style
 /// host fusion. Fusion pays when individual requests are too small to
@@ -38,63 +48,6 @@ use super::router::{Route, Router};
 /// double memory traffic for microseconds of saved dispatch; those
 /// run directly instead.
 const HOST_FUSE_MAX_N: usize = 32_768;
-
-/// Resolve one device name — custom models (from `--device-file`)
-/// first, then the built-in presets (shared by the CLI fleet-spec
-/// parser and pool construction so the lookup and its error text
-/// cannot drift apart).
-fn resolve_device(name: &str, custom: &[DeviceConfig]) -> Result<DeviceConfig> {
-    custom
-        .iter()
-        .find(|d| d.name.eq_ignore_ascii_case(name))
-        .cloned()
-        .or_else(|| DeviceConfig::by_name(name))
-        .ok_or_else(|| anyhow!("unknown pool device {name:?} (see `parred info`)"))
-}
-
-/// Parse a `--pool-devices` fleet spec into canonical device names.
-///
-/// Accepted forms:
-/// * `"4"` — that many `TeslaC2075` (backwards compatible count);
-/// * `"G80,TeslaC2075"` — heterogeneous comma-separated preset list;
-/// * `"TeslaC2075*3,G80"` — preset name with a `*count` multiplier.
-///
-/// Names resolve against `custom` device models first (loaded from
-/// `--device-file` JSON), then the built-in presets — so a fleet spec
-/// like `"MyGPU*2,TeslaC2075"` composes a custom model with presets.
-pub fn parse_fleet_spec(spec: &str, custom: &[DeviceConfig]) -> Result<Vec<String>> {
-    let spec = spec.trim();
-    if spec.is_empty() {
-        return Err(anyhow!("empty --pool-devices spec"));
-    }
-    if spec.chars().all(|c| c.is_ascii_digit()) {
-        let count: usize = spec.parse().context("parsing --pool-devices count")?;
-        if count == 0 {
-            return Err(anyhow!("--pool-devices count must be >= 1"));
-        }
-        return Ok(vec!["TeslaC2075".into(); count]);
-    }
-    let mut out = Vec::new();
-    for part in spec.split(',') {
-        let part = part.trim();
-        let (name, count) = match part.split_once('*') {
-            Some((n, k)) => {
-                let count: usize = k
-                    .trim()
-                    .parse()
-                    .map_err(|e| anyhow!("bad device multiplier in {part:?}: {e}"))?;
-                (n.trim(), count)
-            }
-            None => (part, 1),
-        };
-        let dev = resolve_device(name, custom)?;
-        if count == 0 {
-            return Err(anyhow!("device multiplier must be >= 1 in {part:?}"));
-        }
-        out.extend(std::iter::repeat(dev.name.to_string()).take(count));
-    }
-    Ok(out)
-}
 
 /// Multi-device pool attachment for the serving path.
 #[derive(Debug, Clone)]
@@ -146,8 +99,11 @@ pub struct ServiceConfig {
     /// weights (`parred serve --adaptive`). Off = the scheduler stays
     /// a deterministic function of its priors.
     pub adaptive: bool,
-    /// Write the scheduler's model snapshot (JSON: derived cutoffs,
-    /// refined profiles, fleet factors) to this path at shutdown.
+    /// Scheduler model snapshot path: **loaded** at startup when the
+    /// file exists (warm-starting the EWMA throughput model and fleet
+    /// factors from the previous run) and written at shutdown (JSON:
+    /// derived cutoffs, refined profiles, fleet factors) — so derived
+    /// cutoffs survive a restart.
     pub sched_snapshot: Option<String>,
 }
 
@@ -284,44 +240,50 @@ fn executor_loop(
             return metrics;
         }
     }
-    // Device pool: built before `ready` so a bad pool config fails
-    // startup loudly rather than failing requests later.
-    let pool = match &cfg.pool {
-        Some(pc) => match build_pool(pc) {
-            Ok(p) => Some(p),
+    // The engine: one front door for every host/fleet execution. Built
+    // before `ready` so a bad fleet config (or a corrupt scheduler
+    // snapshot) fails startup loudly rather than failing requests
+    // later. The engine owns the device pool and the scheduler; the
+    // router shares that scheduler, so routing and execution decide
+    // from the same ladder.
+    let mut builder = Engine::builder()
+        .host_workers(cfg.workers)
+        .artifacts_available(true)
+        .adaptive(cfg.adaptive);
+    if let Some(pc) = &cfg.pool {
+        let devices = match fleet_devices(pc) {
+            Ok(d) => d,
             Err(e) => {
-                let _ = ready.send(Err(format!("building device pool: {e:#}")));
+                let _ = ready.send(Err(format!("resolving pool devices: {e:#}")));
                 return metrics;
             }
-        },
-        None => None,
+        };
+        builder = builder
+            .fleet(devices)
+            .tasks_per_device(pc.tasks_per_device.max(1))
+            .pool_cutoff(pc.cutoff);
+    }
+    if let Some(path) = &cfg.sched_snapshot {
+        // Warm-start the throughput model from the previous run's
+        // snapshot (skipped when the file does not exist yet).
+        builder = builder.sched_snapshot(path);
+    }
+    let engine = match builder.build() {
+        Ok(e) => e,
+        Err(e) => {
+            let _ = ready.send(Err(format!("building engine: {e:#}")));
+            return metrics;
+        }
     };
     let _ = ready.send(Ok(runtime.platform()));
     metrics.started = Instant::now(); // exclude load+warmup from throughput
     // The persistent host pool is process-wide; snapshot its counters
     // now so the shutdown report attributes only this service's work
-    // (the device-pool counters above are per-instance already).
+    // (the engine's device-pool counters are per-instance already).
     let host_pool_start = persistent::global_counters().unwrap_or_default();
-    // One scheduler per service: the single place the cutoff ladder
-    // lives. The planner and router below are thin views over it, so
-    // their decisions cannot drift apart.
-    let workers = if cfg.workers == 0 {
-        std::thread::available_parallelism().map_or(4, |n| n.get())
-    } else {
-        cfg.workers
-    };
-    let sched = Arc::new(Scheduler::new(SchedConfig {
-        workers,
-        artifacts_available: true,
-        adaptive: cfg.adaptive,
-        pool: pool.as_ref().map(|p| {
-            PoolPrior::for_fleet(p.devices(), cfg.pool.as_ref().and_then(|pc| pc.cutoff))
-        }),
-        ..SchedConfig::default()
-    }));
+    let sched = engine.scheduler().clone();
     let router = Router::with_scheduler(runtime.catalog().clone(), sched.clone());
     let mut batcher = Batcher::new(cfg.batch_window);
-    let planner = Planner::new(sched.clone());
 
     let handle_req = |req: Request, batcher: &mut Batcher, metrics: &mut Metrics| {
         match router.route(req.shape_key()) {
@@ -330,11 +292,13 @@ fn executor_loop(
             // Fleet-bound keys batch too: concurrent same-key requests
             // stack into one fleet rows pass at flush time (pool-aware
             // dynamic batching). Empty payloads run directly.
-            Route::Sharded { .. } => match &pool {
-                Some(_) if !req.payload.is_empty() => batcher.push(req),
-                Some(p) => exec_sharded(p, &sched, &gate, req, metrics),
-                None => exec_host(&planner, &gate, req, metrics),
-            },
+            Route::Sharded { .. } => {
+                if engine.pool().is_some() && !req.payload.is_empty() {
+                    batcher.push(req)
+                } else {
+                    exec_engine(&engine, &gate, req, metrics)
+                }
+            }
             // Artifact-less keys still batch: same-key requests fuse
             // into one persistent-pool rows pass at flush time
             // (RedFuser-style). Oversized or empty payloads run
@@ -344,7 +308,7 @@ fn executor_loop(
                 if n > 0 && n <= HOST_FUSE_MAX_N {
                     batcher.push(req)
                 } else {
-                    exec_host(&planner, &gate, req, metrics)
+                    exec_engine(&engine, &gate, req, metrics)
                 }
             }
         }
@@ -362,7 +326,7 @@ fn executor_loop(
             // adaptive cutoffs drifted while it queued: payloads past
             // the host-fusion bound must never be stacked on the host
             // (HOST_FUSE_MAX_N exists to bound that copy).
-            _ if pool.is_some() && k.n > HOST_FUSE_MAX_N => KeyPolicy::FusePool,
+            _ if engine.pool().is_some() && k.n > HOST_FUSE_MAX_N => KeyPolicy::FusePool,
             _ => KeyPolicy::FuseHost,
         }
     };
@@ -397,15 +361,19 @@ fn executor_loop(
         for batch in batcher.flush_ready(now, &policy) {
             match batch.kind {
                 BatchKind::Rows => exec_batch(&runtime, &gate, &router, batch, &mut metrics),
-                BatchKind::FusedHost => exec_host_fused(&planner, &gate, batch, &mut metrics),
-                BatchKind::FusedPool => match &pool {
-                    Some(p) => exec_pool_fused(p, &sched, &gate, batch, &mut metrics),
-                    None => {
+                // The engine decides host-fused vs fleet-fused from
+                // the same ladder that routed the key; a FusedPool
+                // batch on a pool-less engine degrades per-request.
+                BatchKind::FusedHost => exec_engine_fused(&engine, &gate, batch, &mut metrics),
+                BatchKind::FusedPool => {
+                    if engine.pool().is_some() {
+                        exec_engine_fused(&engine, &gate, batch, &mut metrics)
+                    } else {
                         for req in batch.requests {
-                            exec_host(&planner, &gate, req, &mut metrics);
+                            exec_engine(&engine, &gate, req, &mut metrics);
                         }
                     }
-                },
+                }
             }
         }
     }
@@ -414,14 +382,7 @@ fn executor_loop(
     for req in batcher.drain_all() {
         match router.route(req.shape_key()) {
             Route::Full { artifact } => exec_full(&runtime, &gate, &artifact, req, &mut metrics),
-            Route::Sharded { .. } if pool.is_some() => exec_sharded(
-                pool.as_ref().expect("checked"),
-                &sched,
-                &gate,
-                req,
-                &mut metrics,
-            ),
-            _ => exec_host(&planner, &gate, req, &mut metrics),
+            _ => exec_engine(&engine, &gate, req, &mut metrics),
         }
     }
     if let Some(path) = &cfg.sched_snapshot {
@@ -429,7 +390,7 @@ fn executor_loop(
             eprintln!("(could not write scheduler snapshot {path}: {e})");
         }
     }
-    if let Some(p) = &pool {
+    if let Some(p) = engine.pool() {
         let c = p.counters();
         metrics.record_pool(c.tasks_executed, c.steals, c.peak_depth);
     }
@@ -444,18 +405,10 @@ fn executor_loop(
     metrics
 }
 
-/// Resolve device names (custom models first, then presets) and spawn
-/// the fleet.
-fn build_pool(pc: &PoolServeConfig) -> Result<DevicePool> {
-    let mut devices = Vec::with_capacity(pc.devices.len());
-    for name in &pc.devices {
-        devices.push(resolve_device(name, &pc.custom)?);
-    }
-    DevicePool::new(PoolConfig {
-        devices,
-        tasks_per_device: pc.tasks_per_device.max(1),
-        ..PoolConfig::default()
-    })
+/// Resolve a serve config's device names (custom models first, then
+/// presets) to the fleet the engine will own.
+fn fleet_devices(pc: &PoolServeConfig) -> Result<Vec<DeviceConfig>> {
+    pc.devices.iter().map(|name| resolve_device(name, &pc.custom)).collect()
 }
 
 fn respond(
@@ -483,30 +436,56 @@ fn exec_full(runtime: &Runtime, gate: &Gate, artifact: &str, req: Request, metri
     respond(gate, req, result.map_err(|e| format!("{e:#}")), ExecPath::PjrtFull, metrics);
 }
 
-fn exec_host(planner: &Planner, gate: &Gate, req: Request, metrics: &mut Metrics) {
-    let value = match &req.payload {
-        HostVec::F32(v) => HostScalar::F32(planner.run_f32(v, req.op)),
-        HostVec::I32(v) => HostScalar::I32(planner.run_i32(v, req.op)),
+/// Execute one request through the engine: the scheduler places it
+/// (sequential / persistent host / fleet shard), the engine observes
+/// the outcome, and the response carries the engine's own `ExecPath`.
+fn exec_engine(engine: &Engine, gate: &Gate, req: Request, metrics: &mut Metrics) {
+    let result: Result<(HostScalar, ExecPath)> = match &req.payload {
+        HostVec::F32(v) => engine
+            .reduce(v)
+            .op(req.op)
+            .run()
+            .map(|r| (HostScalar::F32(r.value), r.path)),
+        HostVec::I32(v) => engine
+            .reduce(v)
+            .op(req.op)
+            .run()
+            .map(|r| (HostScalar::I32(r.value), r.path)),
     };
-    respond(gate, req, Ok(value), ExecPath::Host, metrics);
+    match result {
+        Ok((value, path)) => respond(gate, req, Ok(value), path, metrics),
+        // Only fleet paths can fail; label the error with the fleet
+        // width so failures land in the sharded metrics bucket.
+        Err(e) => {
+            let path = match engine.pool() {
+                Some(p) => ExecPath::Sharded { devices: p.num_devices() },
+                None => ExecPath::Host,
+            };
+            respond(gate, req, Err(format!("{e:#}")), path, metrics);
+        }
+    }
 }
 
-/// Execute a fused host batch: same-key requests stacked row-major and
-/// reduced in **one** `reduce_rows` pass over the persistent worker
-/// pool (RedFuser-style cascaded-reduction fusion).
-fn exec_host_fused(planner: &Planner, gate: &Gate, batch: FlushedBatch, metrics: &mut Metrics) {
+/// Execute a fused batch through the engine: same-key requests stacked
+/// row-major and reduced in **one** rows pass — the engine picks the
+/// persistent host runtime (`ExecPath::HostFused`, RedFuser-style) or
+/// one fleet dispatch (`ExecPath::PoolFused`, pool-aware dynamic
+/// batching) from the same ladder that routed the key.
+fn exec_engine_fused(engine: &Engine, gate: &Gate, batch: FlushedBatch, metrics: &mut Metrics) {
     let key = batch.key;
     let rows = batch.requests.len();
     if rows == 1 {
-        // A fused batch of one is just a host request; don't claim
+        // A fused batch of one is just a direct request; don't claim
         // fusion in the metrics or the response path.
         let req = batch.requests.into_iter().next().expect("one request");
-        return exec_host(planner, gate, req, metrics);
+        return exec_engine(engine, gate, req, metrics);
     }
-    metrics.record_fused(rows);
-    let path = ExecPath::HostFused { batch: rows };
-    let width = planner.workers();
-    match key.dtype {
+    // A batch enqueued as fleet-bound stays fleet-bound: pin the pass
+    // to the fleet so adaptive cutoff drift between enqueue and flush
+    // can never run the (arbitrarily large) stacked payload as one
+    // host rows pass — the invariant HOST_FUSE_MAX_N exists to hold.
+    let pin_fleet = batch.kind == BatchKind::FusedPool;
+    let result: Result<(Vec<HostScalar>, ExecPath)> = match key.dtype {
         Dtype::F32 => {
             let mut stacked: Vec<f32> = Vec::with_capacity(rows * key.n);
             for req in &batch.requests {
@@ -515,10 +494,12 @@ fn exec_host_fused(planner: &Planner, gate: &Gate, batch: FlushedBatch, metrics:
                 };
                 stacked.extend_from_slice(v);
             }
-            let values = threaded::reduce_rows(&stacked, key.n, key.op, width);
-            for (req, v) in batch.requests.into_iter().zip(values) {
-                respond(gate, req, Ok(HostScalar::F32(v)), path, metrics);
+            let mut pass = engine.reduce_rows(&stacked, key.n).op(key.op);
+            if pin_fleet {
+                pass = pass.via_fleet();
             }
+            pass.run()
+                .map(|r| (r.value.into_iter().map(HostScalar::F32).collect(), r.path))
         }
         Dtype::I32 => {
             let mut stacked: Vec<i32> = Vec::with_capacity(rows * key.n);
@@ -528,115 +509,37 @@ fn exec_host_fused(planner: &Planner, gate: &Gate, batch: FlushedBatch, metrics:
                 };
                 stacked.extend_from_slice(v);
             }
-            let values = threaded::reduce_rows(&stacked, key.n, key.op, width);
-            for (req, v) in batch.requests.into_iter().zip(values) {
-                respond(gate, req, Ok(HostScalar::I32(v)), path, metrics);
+            let mut pass = engine.reduce_rows(&stacked, key.n).op(key.op);
+            if pin_fleet {
+                pass = pass.via_fleet();
             }
-        }
-    }
-}
-
-/// Shard a large artifact-less reduction across the device fleet,
-/// under the scheduler's (possibly feedback-adjusted) plan, feeding
-/// the outcome back into the model.
-fn exec_sharded(
-    pool: &DevicePool,
-    sched: &Scheduler,
-    gate: &Gate,
-    req: Request,
-    metrics: &mut Metrics,
-) {
-    let devices = pool.num_devices();
-    let key = req.shape_key();
-    let plan = sched.plan_shards(pool.devices(), key.n, pool.tasks_per_device());
-    let value = match &req.payload {
-        HostVec::F32(v) => {
-            pool.reduce_elems_planned(v, req.op, &plan).map(|(x, o)| (HostScalar::F32(x), o))
-        }
-        HostVec::I32(v) => {
-            pool.reduce_elems_planned(v, req.op, &plan).map(|(x, o)| (HostScalar::I32(x), o))
+            pass.run()
+                .map(|r| (r.value.into_iter().map(HostScalar::I32).collect(), r.path))
         }
     };
-    let value = value.map(|(scalar, out)| {
-        sched.observe_pool(key.op, key.dtype, key.n, &out);
-        scalar
-    });
-    respond(
-        gate,
-        req,
-        value.map_err(|e| format!("{e:#}")),
-        ExecPath::Sharded { devices },
-        metrics,
-    );
-}
-
-/// Execute a fused fleet batch: same-key sharded requests stacked
-/// row-major and reduced in **one** device-fleet rows pass (pool-aware
-/// dynamic batching — the fleet-side mirror of `exec_host_fused`).
-fn exec_pool_fused(
-    pool: &DevicePool,
-    sched: &Scheduler,
-    gate: &Gate,
-    batch: FlushedBatch,
-    metrics: &mut Metrics,
-) {
-    let key = batch.key;
-    let rows = batch.requests.len();
-    if rows == 1 {
-        // A fused batch of one is just a sharded request; don't claim
-        // fusion in the metrics or the response path.
-        let req = batch.requests.into_iter().next().expect("one request");
-        return exec_sharded(pool, sched, gate, req, metrics);
-    }
-    metrics.record_pool_fused(rows);
-    let devices = pool.num_devices();
-    let path = ExecPath::PoolFused { batch: rows, devices };
-    let base = sched.plan_shards(pool.devices(), key.n, pool.tasks_per_device());
-    match key.dtype {
-        Dtype::F32 => {
-            let mut stacked: Vec<f32> = Vec::with_capacity(rows * key.n);
-            for req in &batch.requests {
-                let HostVec::F32(v) = &req.payload else {
-                    unreachable!("shape key guarantees f32 payloads")
-                };
-                stacked.extend_from_slice(v);
+    match result {
+        Ok((values, path)) => {
+            match path {
+                ExecPath::PoolFused { .. } => metrics.record_pool_fused(rows),
+                _ => metrics.record_fused(rows),
             }
-            match pool.reduce_rows_elems(&stacked, key.n, key.op, &base) {
-                Ok((values, out)) => {
-                    sched.observe_pool(key.op, key.dtype, rows * key.n, &out);
-                    for (req, v) in batch.requests.into_iter().zip(values) {
-                        respond(gate, req, Ok(HostScalar::F32(v)), path, metrics);
-                    }
-                }
-                Err(e) => {
-                    let msg = format!("{e:#}");
-                    for req in batch.requests {
-                        respond(gate, req, Err(msg.clone()), path, metrics);
-                    }
-                }
+            for (req, v) in batch.requests.into_iter().zip(values) {
+                respond(gate, req, Ok(v), path, metrics);
             }
         }
-        Dtype::I32 => {
-            let mut stacked: Vec<i32> = Vec::with_capacity(rows * key.n);
-            for req in &batch.requests {
-                let HostVec::I32(v) = &req.payload else {
-                    unreachable!("shape key guarantees i32 payloads")
-                };
-                stacked.extend_from_slice(v);
-            }
-            match pool.reduce_rows_elems(&stacked, key.n, key.op, &base) {
-                Ok((values, out)) => {
-                    sched.observe_pool(key.op, key.dtype, rows * key.n, &out);
-                    for (req, v) in batch.requests.into_iter().zip(values) {
-                        respond(gate, req, Ok(HostScalar::I32(v)), path, metrics);
-                    }
-                }
-                Err(e) => {
-                    let msg = format!("{e:#}");
-                    for req in batch.requests {
-                        respond(gate, req, Err(msg.clone()), path, metrics);
-                    }
-                }
+        Err(e) => {
+            // Fused errors can only come from a fleet pass (the host
+            // rows path is infallible for a stacked batch); count the
+            // failed batch so the fused counters stay consistent with
+            // the per-request pool-fused latency histogram.
+            metrics.record_pool_fused(rows);
+            let path = ExecPath::PoolFused {
+                batch: rows,
+                devices: engine.pool().map_or(0, |p| p.num_devices()),
+            };
+            let msg = format!("{e:#}");
+            for req in batch.requests {
+                respond(gate, req, Err(msg.clone()), path, metrics);
             }
         }
     }
@@ -796,51 +699,6 @@ pub fn run_trace(cfg: ServiceConfig, trace: TraceConfig) -> Result<String> {
 mod tests {
     use super::*;
 
-    #[test]
-    fn fleet_spec_count_form() {
-        assert_eq!(parse_fleet_spec("4", &[]).unwrap(), vec!["TeslaC2075"; 4]);
-        assert!(parse_fleet_spec("0", &[]).is_err());
-        assert!(parse_fleet_spec("", &[]).is_err());
-        assert!(parse_fleet_spec("   ", &[]).is_err());
-    }
-
-    #[test]
-    fn fleet_spec_heterogeneous_names() {
-        let fleet = parse_fleet_spec("G80,TeslaC2075,AMD-GCN", &[]).unwrap();
-        assert_eq!(fleet, vec!["G80", "TeslaC2075", "AMD-GCN"]);
-        // Case-insensitive resolution canonicalizes the preset name.
-        let fleet = parse_fleet_spec("g80", &[]).unwrap();
-        assert_eq!(fleet, vec!["G80"]);
-        assert!(parse_fleet_spec("H100", &[]).is_err());
-    }
-
-    #[test]
-    fn fleet_spec_multipliers() {
-        let fleet = parse_fleet_spec("TeslaC2075*3, G80", &[]).unwrap();
-        assert_eq!(fleet, vec!["TeslaC2075", "TeslaC2075", "TeslaC2075", "G80"]);
-        assert!(parse_fleet_spec("G80*0", &[]).is_err());
-        assert!(parse_fleet_spec("G80*x", &[]).is_err());
-    }
-
-    #[test]
-    fn fleet_spec_error_paths_name_the_problem() {
-        // Unknown preset: points at `parred info`.
-        let e = parse_fleet_spec("H100", &[]).unwrap_err().to_string();
-        assert!(e.contains("H100") && e.contains("parred info"), "{e}");
-        // Zero multiplier.
-        let e = parse_fleet_spec("G80*0", &[]).unwrap_err().to_string();
-        assert!(e.contains("multiplier"), "{e}");
-        // Unparseable multiplier.
-        let e = parse_fleet_spec("G80*two", &[]).unwrap_err().to_string();
-        assert!(e.contains("multiplier"), "{e}");
-        // Empty spec.
-        let e = parse_fleet_spec("", &[]).unwrap_err().to_string();
-        assert!(e.contains("empty"), "{e}");
-        // Zero count form.
-        let e = parse_fleet_spec("0", &[]).unwrap_err().to_string();
-        assert!(e.contains(">= 1"), "{e}");
-    }
-
     fn custom_device() -> DeviceConfig {
         DeviceConfig::from_json(
             r#"{"name": "MyGPU", "num_sms": 20, "mem_bandwidth_gbps": 200.0}"#,
@@ -848,53 +706,45 @@ mod tests {
         .unwrap()
     }
 
-    #[test]
-    fn fleet_spec_mixes_device_file_models_with_presets() {
-        // A `--device-file` model is referenced by name inside the
-        // fleet spec, alongside preset names with multipliers.
-        let custom = vec![custom_device()];
-        let fleet = parse_fleet_spec("MyGPU,TeslaC2075*2", &custom).unwrap();
-        assert_eq!(fleet, vec!["MyGPU", "TeslaC2075", "TeslaC2075"]);
-        // Case-insensitive, and multipliers work on custom names too.
-        let fleet = parse_fleet_spec("mygpu*2, g80", &custom).unwrap();
-        assert_eq!(fleet, vec!["MyGPU", "MyGPU", "G80"]);
-        // Without the custom model the name is unknown.
-        assert!(parse_fleet_spec("MyGPU", &[]).is_err());
-    }
+    // Fleet-spec *parsing* is tested where it lives now
+    // (`crate::engine`); these cover the serve-config resolution that
+    // feeds the engine builder.
 
     #[test]
-    fn custom_devices_shadow_presets_and_build_pools() {
-        // A custom model may even shadow a preset name; resolution
-        // prefers the custom list.
-        let shadow =
-            DeviceConfig::from_json(r#"{"name": "G80", "num_sms": 99}"#).unwrap();
-        let dev = resolve_device("g80", &[shadow.clone()]).unwrap();
-        assert_eq!(dev.num_sms, 99);
-
-        // Mixed fleets build a working pool end to end.
+    fn serve_config_resolves_mixed_fleets_for_the_engine() {
         let pc = PoolServeConfig {
             devices: parse_fleet_spec("MyGPU,TeslaC2075*2", &[custom_device()]).unwrap(),
             custom: vec![custom_device()],
             cutoff: Some(1 << 20),
             tasks_per_device: 2,
         };
-        let pool = build_pool(&pc).unwrap();
+        let devices = fleet_devices(&pc).unwrap();
+        assert_eq!(devices.len(), 3);
+        assert_eq!(devices[0].name, "MyGPU");
+        assert_eq!(devices[0].num_sms, 20);
+        assert_eq!(devices[2].name, "TeslaC2075");
+
+        // ...and the engine builds a working pool from them.
+        let engine = Engine::builder()
+            .host_workers(2)
+            .fleet(devices)
+            .pool_cutoff(pc.cutoff)
+            .tasks_per_device(pc.tasks_per_device)
+            .build()
+            .unwrap();
+        let pool = engine.pool().expect("fleet attached");
         assert_eq!(pool.num_devices(), 3);
         assert_eq!(pool.devices()[0].name, "MyGPU");
-        assert_eq!(pool.devices()[0].num_sms, 20);
-        assert_eq!(pool.devices()[2].name, "TeslaC2075");
     }
 
     #[test]
-    fn fleet_specs_build_valid_pool_configs() {
+    fn serve_config_rejects_unknown_devices() {
         let pc = PoolServeConfig {
-            devices: parse_fleet_spec("TeslaC2075*2,G80", &[]).unwrap(),
-            cutoff: Some(1 << 20),
+            devices: vec!["H100".into()],
             ..PoolServeConfig::default()
         };
-        let pool = build_pool(&pc).unwrap();
-        assert_eq!(pool.num_devices(), 3);
-        assert_eq!(pool.devices()[2].name, "G80");
+        let e = fleet_devices(&pc).unwrap_err().to_string();
+        assert!(e.contains("H100") && e.contains("parred info"), "{e}");
     }
 
     #[test]

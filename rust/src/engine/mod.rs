@@ -1,0 +1,474 @@
+//! `engine` — the one front door to every reduction path.
+//!
+//! The paper's selling point is a *generic, simple* reduction API;
+//! this module is that claim made concrete for the whole crate. Before
+//! it, callers picked an entry point by hand — `reduce::scalar`,
+//! `reduce::threaded`, the dtype-specific planner runners, the device
+//! pool's `reduce_elems` — even though [`crate::sched::Scheduler`]
+//! already decides placement better than a caller can. [`Engine`] owns
+//! one scheduler, its [`Planner`](crate::reduce::plan::Planner) view
+//! and an optional [`DevicePool`], and exposes three typed requests:
+//!
+//! * [`Engine::reduce`] — one scalar reduction, placed on the ladder
+//!   (sequential → persistent host runtime → device fleet) by the
+//!   scheduler, returning a uniform [`Reduced`] outcome;
+//! * [`Engine::reduce_rows`] — a `rows × cols` batch reduced in one
+//!   pass (persistent host rows or one fused fleet dispatch);
+//! * [`Engine::reduce_segments`] — **segmented** reduction over
+//!   ragged CSR-style offsets (the cascaded-reduction shape RedFuser
+//!   targets, PAPERS.md): small segments fuse into one persistent
+//!   pass, large ones go full-width or to the fleet, per segment.
+//!
+//! The serving layer ([`crate::coordinator`]) routes its host and
+//! fleet execution through an `Engine`; the legacy entry points
+//! survive only as `#[deprecated]` shims.
+//!
+//! ```no_run
+//! use parred::{Engine, reduce::Op};
+//!
+//! let engine = Engine::builder().host_workers(8).build()?;
+//! let data: Vec<f32> = (0..1_000_000).map(|i| (i % 1000) as f32).collect();
+//! let out = engine.reduce(&data).op(Op::Sum).run()?;
+//! println!("{} via {:?} in {:.3} ms", out.value, out.path, out.elapsed_s * 1e3);
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::gpusim::DeviceConfig;
+use crate::pool::{DevicePool, PoolConfig};
+use crate::reduce::op::TypedElement;
+use crate::reduce::plan::Planner;
+use crate::sched::{PoolPrior, SchedConfig, Scheduler};
+
+pub mod outcome;
+pub mod request;
+
+pub use outcome::{ExecPath, Reduced};
+pub use request::{ReduceBuilder, RowsBuilder, SegmentsBuilder};
+
+/// Resolve one device name — custom models (from `--device-file`)
+/// first, then the built-in presets (shared by the CLI fleet-spec
+/// parser and pool construction so the lookup and its error text
+/// cannot drift apart).
+pub fn resolve_device(name: &str, custom: &[DeviceConfig]) -> Result<DeviceConfig> {
+    custom
+        .iter()
+        .find(|d| d.name.eq_ignore_ascii_case(name))
+        .cloned()
+        .or_else(|| DeviceConfig::by_name(name))
+        .ok_or_else(|| anyhow!("unknown pool device {name:?} (see `parred info`)"))
+}
+
+/// Parse a `--pool-devices` fleet spec into canonical device names.
+///
+/// Accepted forms:
+/// * `"4"` — that many `TeslaC2075` (backwards compatible count);
+/// * `"G80,TeslaC2075"` — heterogeneous comma-separated preset list;
+/// * `"TeslaC2075*3,G80"` — preset name with a `*count` multiplier.
+///
+/// Names resolve against `custom` device models first (loaded from
+/// `--device-file` JSON), then the built-in presets — so a fleet spec
+/// like `"MyGPU*2,TeslaC2075"` composes a custom model with presets.
+pub fn parse_fleet_spec(spec: &str, custom: &[DeviceConfig]) -> Result<Vec<String>> {
+    let spec = spec.trim();
+    if spec.is_empty() {
+        return Err(anyhow!("empty --pool-devices spec"));
+    }
+    if spec.chars().all(|c| c.is_ascii_digit()) {
+        let count: usize = spec.parse().context("parsing --pool-devices count")?;
+        if count == 0 {
+            return Err(anyhow!("--pool-devices count must be >= 1"));
+        }
+        return Ok(vec!["TeslaC2075".into(); count]);
+    }
+    let mut out = Vec::new();
+    for part in spec.split(',') {
+        let part = part.trim();
+        let (name, count) = match part.split_once('*') {
+            Some((n, k)) => {
+                let count: usize = k
+                    .trim()
+                    .parse()
+                    .map_err(|e| anyhow!("bad device multiplier in {part:?}: {e}"))?;
+                (n.trim(), count)
+            }
+            None => (part, 1),
+        };
+        let dev = resolve_device(name, custom)?;
+        if count == 0 {
+            return Err(anyhow!("device multiplier must be >= 1 in {part:?}"));
+        }
+        out.extend(std::iter::repeat(dev.name.to_string()).take(count));
+    }
+    Ok(out)
+}
+
+/// Parse a fleet spec straight to device configs (spec → names →
+/// resolved models) — what [`EngineBuilder::fleet_spec`] and the CLI
+/// use.
+pub fn fleet_from_spec(spec: &str, custom: &[DeviceConfig]) -> Result<Vec<DeviceConfig>> {
+    parse_fleet_spec(spec, custom)?
+        .iter()
+        .map(|name| resolve_device(name, custom))
+        .collect()
+}
+
+/// Builder for [`Engine`] — `Engine::builder().host_workers(8)
+/// .fleet(devices).adaptive(true).build()`.
+#[derive(Debug, Clone, Default)]
+pub struct EngineBuilder {
+    workers: usize,
+    fleet: Vec<DeviceConfig>,
+    tasks_per_device: usize,
+    pool_cutoff: Option<usize>,
+    adaptive: bool,
+    artifacts_available: bool,
+    snapshot: Option<String>,
+}
+
+impl EngineBuilder {
+    /// Host worker threads for the persistent-runtime rung
+    /// (0 = available parallelism, the default).
+    pub fn host_workers(mut self, workers: usize) -> Self {
+        self.workers = workers;
+        self
+    }
+
+    /// Attach a multi-device execution pool over this fleet
+    /// (heterogeneous mixes allowed; empty = no pool, the default).
+    pub fn fleet(mut self, devices: Vec<DeviceConfig>) -> Self {
+        self.fleet = devices;
+        self
+    }
+
+    /// Attach a fleet from a spec string (`"4"`, `"G80,TeslaC2075*2"`;
+    /// see [`parse_fleet_spec`]). Preset names only — resolve custom
+    /// device models with [`fleet_from_spec`] and pass them to
+    /// [`EngineBuilder::fleet`].
+    pub fn fleet_spec(self, spec: &str) -> Result<Self> {
+        Ok(self.fleet(fleet_from_spec(spec, &[])?))
+    }
+
+    /// Shard granularity per device (work-stealing slack; default 2).
+    pub fn tasks_per_device(mut self, tasks: usize) -> Self {
+        self.tasks_per_device = tasks;
+        self
+    }
+
+    /// Pin the host→fleet crossover instead of deriving it from the
+    /// scheduler's throughput model.
+    pub fn pool_cutoff(mut self, cutoff: Option<usize>) -> Self {
+        self.pool_cutoff = cutoff;
+        self
+    }
+
+    /// Feedback-driven adaptation: fold observed throughput into the
+    /// scheduler's cutoffs and per-worker busy times into the shard
+    /// weights. Off (the default) keeps every decision a deterministic
+    /// function of the priors.
+    pub fn adaptive(mut self, adaptive: bool) -> Self {
+        self.adaptive = adaptive;
+        self
+    }
+
+    /// Tell the scheduler a PJRT runtime is attached (gates
+    /// `Decision::Artifact`). Only the serving layer — which owns the
+    /// runtime and executes artifact routes itself — sets this; the
+    /// engine never dispatches artifacts.
+    pub fn artifacts_available(mut self, available: bool) -> Self {
+        self.artifacts_available = available;
+        self
+    }
+
+    /// Warm-start the scheduler's throughput model from a snapshot
+    /// previously dumped by [`Scheduler::snapshot_json`]
+    /// (`parred serve --sched-snapshot PATH`). A missing file is
+    /// skipped silently (first run); an unreadable or malformed one
+    /// fails [`EngineBuilder::build`].
+    pub fn sched_snapshot(mut self, path: impl Into<String>) -> Self {
+        self.snapshot = Some(path.into());
+        self
+    }
+
+    /// Validate the configuration, spawn the fleet (if any) and build
+    /// the engine.
+    pub fn build(self) -> Result<Engine> {
+        let workers = if self.workers == 0 {
+            std::thread::available_parallelism().map_or(4, |n| n.get())
+        } else {
+            self.workers
+        };
+        let pool = if self.fleet.is_empty() {
+            None
+        } else {
+            // 0 = unset: match the stack-wide default of 2
+            // (`PoolConfig`, `PoolServeConfig`) the setter documents.
+            let tasks = if self.tasks_per_device == 0 { 2 } else { self.tasks_per_device };
+            Some(DevicePool::new(PoolConfig {
+                devices: self.fleet,
+                tasks_per_device: tasks,
+                ..PoolConfig::default()
+            })?)
+        };
+        let sched = Arc::new(Scheduler::new(SchedConfig {
+            workers,
+            artifacts_available: self.artifacts_available,
+            adaptive: self.adaptive,
+            pool: pool.as_ref().map(|p| PoolPrior::for_fleet(p.devices(), self.pool_cutoff)),
+            ..SchedConfig::default()
+        }));
+        if let Some(path) = &self.snapshot {
+            if std::path::Path::new(path).exists() {
+                let text = std::fs::read_to_string(path)
+                    .with_context(|| format!("reading scheduler snapshot {path}"))?;
+                sched
+                    .load_snapshot_json(&text)
+                    .with_context(|| format!("loading scheduler snapshot {path}"))?;
+            }
+        }
+        let planner = Planner::new(sched.clone());
+        Ok(Engine { sched, planner, pool })
+    }
+}
+
+/// The unified reduction facade: one scheduler, one planner view, an
+/// optional device fleet — and a typed request builder over all of it.
+/// See the [module docs](self) for the full story.
+pub struct Engine {
+    sched: Arc<Scheduler>,
+    planner: Planner,
+    pool: Option<DevicePool>,
+}
+
+impl Engine {
+    /// Start building an engine.
+    pub fn builder() -> EngineBuilder {
+        EngineBuilder::default()
+    }
+
+    /// A host-only engine at this width (no fleet, no adaptation) —
+    /// the zero-configuration path for library use. `workers == 0`
+    /// means available parallelism.
+    pub fn host(workers: usize) -> Engine {
+        Engine::builder()
+            .host_workers(workers)
+            .build()
+            .expect("host-only engine construction cannot fail")
+    }
+
+    /// The shared scheduler (the serving layer hands it to its router
+    /// so both views decide identically).
+    pub fn scheduler(&self) -> &Arc<Scheduler> {
+        &self.sched
+    }
+
+    /// The planner view over the scheduler.
+    pub fn planner(&self) -> &Planner {
+        &self.planner
+    }
+
+    /// The attached device fleet, if any.
+    pub fn pool(&self) -> Option<&DevicePool> {
+        self.pool.as_ref()
+    }
+
+    /// Host worker threads the full-width rung uses.
+    pub fn workers(&self) -> usize {
+        self.sched.workers()
+    }
+
+    /// One scalar reduction: `engine.reduce(&data).op(Op::Sum).run()`.
+    pub fn reduce<'e, 'd, T: TypedElement>(&'e self, data: &'d [T]) -> ReduceBuilder<'e, 'd, T> {
+        ReduceBuilder::new(self, data)
+    }
+
+    /// Reduce every row of a `rows × cols` row-major matrix in one
+    /// pass: `engine.reduce_rows(&data, cols).run()`.
+    pub fn reduce_rows<'e, 'd, T: TypedElement>(
+        &'e self,
+        data: &'d [T],
+        cols: usize,
+    ) -> RowsBuilder<'e, 'd, T> {
+        RowsBuilder::new(self, data, cols)
+    }
+
+    /// Segmented (ragged) reduction over CSR-style `offsets`
+    /// (`offsets[0] == 0`, monotone, last == `data.len()`; segment `s`
+    /// is `data[offsets[s]..offsets[s + 1]]`, empty segments yield the
+    /// identity): `engine.reduce_segments(&data, &offsets).run()`.
+    pub fn reduce_segments<'e, 'd, T: TypedElement>(
+        &'e self,
+        data: &'d [T],
+        offsets: &'d [usize],
+    ) -> SegmentsBuilder<'e, 'd, T> {
+        SegmentsBuilder::new(self, data, offsets)
+    }
+}
+
+impl std::fmt::Debug for Engine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Engine")
+            .field("workers", &self.workers())
+            .field("pool_devices", &self.sched.pool_devices())
+            .field("adaptive", &self.sched.config().adaptive)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::reduce::op::{Dtype, Op};
+    use crate::sched::Decision;
+
+    #[test]
+    fn fleet_spec_count_form() {
+        assert_eq!(parse_fleet_spec("4", &[]).unwrap(), vec!["TeslaC2075"; 4]);
+        assert!(parse_fleet_spec("0", &[]).is_err());
+        assert!(parse_fleet_spec("", &[]).is_err());
+        assert!(parse_fleet_spec("   ", &[]).is_err());
+    }
+
+    #[test]
+    fn fleet_spec_heterogeneous_names() {
+        let fleet = parse_fleet_spec("G80,TeslaC2075,AMD-GCN", &[]).unwrap();
+        assert_eq!(fleet, vec!["G80", "TeslaC2075", "AMD-GCN"]);
+        // Case-insensitive resolution canonicalizes the preset name.
+        let fleet = parse_fleet_spec("g80", &[]).unwrap();
+        assert_eq!(fleet, vec!["G80"]);
+        assert!(parse_fleet_spec("H100", &[]).is_err());
+    }
+
+    #[test]
+    fn fleet_spec_multipliers() {
+        let fleet = parse_fleet_spec("TeslaC2075*3, G80", &[]).unwrap();
+        assert_eq!(fleet, vec!["TeslaC2075", "TeslaC2075", "TeslaC2075", "G80"]);
+        assert!(parse_fleet_spec("G80*0", &[]).is_err());
+        assert!(parse_fleet_spec("G80*x", &[]).is_err());
+    }
+
+    #[test]
+    fn fleet_spec_error_paths_name_the_problem() {
+        // Unknown preset: points at `parred info`.
+        let e = parse_fleet_spec("H100", &[]).unwrap_err().to_string();
+        assert!(e.contains("H100") && e.contains("parred info"), "{e}");
+        // Zero multiplier.
+        let e = parse_fleet_spec("G80*0", &[]).unwrap_err().to_string();
+        assert!(e.contains("multiplier"), "{e}");
+        // Unparseable multiplier.
+        let e = parse_fleet_spec("G80*two", &[]).unwrap_err().to_string();
+        assert!(e.contains("multiplier"), "{e}");
+        // Empty spec.
+        let e = parse_fleet_spec("", &[]).unwrap_err().to_string();
+        assert!(e.contains("empty"), "{e}");
+        // Zero count form.
+        let e = parse_fleet_spec("0", &[]).unwrap_err().to_string();
+        assert!(e.contains(">= 1"), "{e}");
+    }
+
+    fn custom_device() -> DeviceConfig {
+        DeviceConfig::from_json(
+            r#"{"name": "MyGPU", "num_sms": 20, "mem_bandwidth_gbps": 200.0}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn fleet_spec_mixes_device_file_models_with_presets() {
+        // A `--device-file` model is referenced by name inside the
+        // fleet spec, alongside preset names with multipliers.
+        let custom = vec![custom_device()];
+        let fleet = parse_fleet_spec("MyGPU,TeslaC2075*2", &custom).unwrap();
+        assert_eq!(fleet, vec!["MyGPU", "TeslaC2075", "TeslaC2075"]);
+        // Case-insensitive, and multipliers work on custom names too.
+        let fleet = parse_fleet_spec("mygpu*2, g80", &custom).unwrap();
+        assert_eq!(fleet, vec!["MyGPU", "MyGPU", "G80"]);
+        // Without the custom model the name is unknown.
+        assert!(parse_fleet_spec("MyGPU", &[]).is_err());
+    }
+
+    #[test]
+    fn custom_devices_shadow_presets() {
+        // A custom model may even shadow a preset name; resolution
+        // prefers the custom list.
+        let shadow = DeviceConfig::from_json(r#"{"name": "G80", "num_sms": 99}"#).unwrap();
+        let dev = resolve_device("g80", &[shadow]).unwrap();
+        assert_eq!(dev.num_sms, 99);
+    }
+
+    #[test]
+    fn fleet_from_spec_resolves_models() {
+        let devs = fleet_from_spec("MyGPU,TeslaC2075*2", &[custom_device()]).unwrap();
+        assert_eq!(devs.len(), 3);
+        assert_eq!(devs[0].name, "MyGPU");
+        assert_eq!(devs[0].num_sms, 20);
+        assert_eq!(devs[2].name, "TeslaC2075");
+    }
+
+    #[test]
+    fn builder_defaults_are_host_only() {
+        let e = Engine::builder().host_workers(4).build().unwrap();
+        assert!(e.pool().is_none());
+        assert_eq!(e.workers(), 4);
+        assert!(!e.scheduler().config().adaptive);
+        // No pool: huge inputs stay on the host ladder.
+        assert!(matches!(
+            e.scheduler().decide(Op::Sum, Dtype::F32, 1 << 30, false),
+            Decision::Threaded { workers: 4 }
+        ));
+    }
+
+    #[test]
+    fn builder_attaches_a_fleet_with_derived_cutoff() {
+        let e = Engine::builder()
+            .host_workers(8)
+            .fleet(vec![DeviceConfig::tesla_c2075(); 4])
+            .build()
+            .unwrap();
+        let pool = e.pool().expect("fleet attached");
+        assert_eq!(pool.num_devices(), 4);
+        assert_eq!(pool.tasks_per_device(), 2, "unset tasks_per_device takes the stack default");
+        let c = e.scheduler().cutoffs(Op::Sum, Dtype::F32);
+        assert!(c.pool < usize::MAX, "pool crossover must derive");
+        assert!(matches!(
+            e.scheduler().decide(Op::Sum, Dtype::F32, c.pool, false),
+            Decision::Sharded { devices: 4 }
+        ));
+    }
+
+    #[test]
+    fn builder_fleet_spec_and_cutoff_override() {
+        let e = Engine::builder()
+            .host_workers(4)
+            .fleet_spec("TeslaC2075*2,G80")
+            .unwrap()
+            .pool_cutoff(Some(1 << 21))
+            .tasks_per_device(3)
+            .build()
+            .unwrap();
+        let pool = e.pool().unwrap();
+        assert_eq!(pool.num_devices(), 3);
+        assert_eq!(pool.devices()[2].name, "G80");
+        assert_eq!(pool.tasks_per_device(), 3);
+        assert_eq!(e.scheduler().cutoffs(Op::Sum, Dtype::F32).pool, 1 << 21);
+    }
+
+    #[test]
+    fn builder_rejects_bad_fleet_specs() {
+        assert!(Engine::builder().fleet_spec("H100").is_err());
+        assert!(Engine::builder().fleet_spec("").is_err());
+    }
+
+    #[test]
+    fn missing_snapshot_is_skipped() {
+        let e = Engine::builder()
+            .host_workers(2)
+            .sched_snapshot("/nonexistent/parred_snapshot.json")
+            .build()
+            .unwrap();
+        assert_eq!(e.workers(), 2);
+    }
+}

@@ -1,0 +1,80 @@
+//! The engine's uniform outcome type: every execution path — host
+//! persistent, fused rows, fleet pool, segmented — reports its result
+//! through one [`Reduced`] shape (value + [`ExecPath`] + timing and
+//! steal statistics), so callers never need to know which backend ran.
+//!
+//! [`ExecPath`] lives here (the lowest layer that names every path);
+//! the coordinator re-exports it unchanged for its responses and
+//! metrics.
+
+/// How a reduction was executed (surfaced in [`Reduced`], coordinator
+/// responses and metrics).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecPath {
+    /// Dedicated `full` artifact on PJRT.
+    PjrtFull,
+    /// Stacked into a `rows` artifact with `batch` rows.
+    PjrtBatched { batch: usize },
+    /// Sharded across the `devices`-wide execution pool
+    /// ([`crate::pool::DevicePool`]).
+    Sharded { devices: usize },
+    /// Same-key host requests fused into one `reduce_rows` pass over
+    /// the persistent worker pool (`batch` rows; RedFuser-style).
+    HostFused { batch: usize },
+    /// Same-key fleet-bound requests fused into one device-fleet rows
+    /// pass (`batch` rows across `devices` devices) — pool-aware
+    /// dynamic batching.
+    PoolFused { batch: usize, devices: usize },
+    /// Segmented (ragged) reduction: per-segment planning fused the
+    /// small segments into one persistent pass and sent the large
+    /// ones full-width or to the fleet
+    /// ([`crate::engine::Engine::reduce_segments`]).
+    Segmented { segments: usize },
+    /// Host (threaded/sequential) fallback.
+    Host,
+}
+
+/// One reduction outcome: the value plus where it ran and what it
+/// cost. Fleet statistics (`shards`, `steals`, `modeled_wall_s`) are
+/// zero on host-only paths; for segmented runs they aggregate over
+/// every fleet pass the segment plan dispatched.
+#[derive(Debug, Clone)]
+pub struct Reduced<V> {
+    /// The reduced value (a scalar for [`crate::engine::Engine::reduce`],
+    /// per-row / per-segment vectors for the rows and segments
+    /// entry points).
+    pub value: V,
+    /// Which execution path ran.
+    pub path: ExecPath,
+    /// Host wall-clock of the whole call, seconds.
+    pub elapsed_s: f64,
+    /// Fleet shards executed (0 when no device pool was involved).
+    pub shards: usize,
+    /// Shards that ran on a different worker than planned.
+    pub steals: u64,
+    /// Modeled fleet wall-clock, seconds (summed across passes for
+    /// segmented runs; 0 on host paths).
+    pub modeled_wall_s: f64,
+}
+
+impl<V> Reduced<V> {
+    /// A host-path outcome (no fleet statistics).
+    pub(crate) fn host(value: V, path: ExecPath, elapsed_s: f64) -> Reduced<V> {
+        Reduced { value, path, elapsed_s, shards: 0, steals: 0, modeled_wall_s: 0.0 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_outcome_has_no_fleet_stats() {
+        let r = Reduced::host(42i32, ExecPath::Host, 1e-3);
+        assert_eq!(r.value, 42);
+        assert_eq!(r.path, ExecPath::Host);
+        assert_eq!(r.shards, 0);
+        assert_eq!(r.steals, 0);
+        assert_eq!(r.modeled_wall_s, 0.0);
+    }
+}

@@ -1,0 +1,420 @@
+//! Typed request builders: `engine.reduce(&data).op(Op::Sum).run()`.
+//!
+//! Each builder captures one workload shape (scalar, rows, ragged
+//! segments), lets the caller set the operator, and executes on
+//! whatever path the shared [`Scheduler`](crate::sched::Scheduler)
+//! picks — the caller never names a backend. All three return the
+//! uniform [`Reduced`] outcome.
+
+use std::time::Instant;
+
+use anyhow::bail;
+
+use crate::reduce::op::{Element, Op, TypedElement};
+use crate::reduce::persistent;
+use crate::reduce::simd;
+use crate::sched::{Backend, Decision};
+
+use super::outcome::{ExecPath, Reduced};
+use super::Engine;
+
+/// One scalar reduction request (from [`Engine::reduce`]).
+#[derive(Debug)]
+pub struct ReduceBuilder<'e, 'd, T: TypedElement> {
+    engine: &'e Engine,
+    data: &'d [T],
+    op: Op,
+}
+
+impl<'e, 'd, T: TypedElement> ReduceBuilder<'e, 'd, T> {
+    pub(super) fn new(engine: &'e Engine, data: &'d [T]) -> Self {
+        ReduceBuilder { engine, data, op: Op::Sum }
+    }
+
+    /// The combiner to reduce with (default [`Op::Sum`]).
+    pub fn op(mut self, op: Op) -> Self {
+        self.op = op;
+        self
+    }
+
+    /// Place and execute the reduction. Host paths cannot fail; fleet
+    /// paths surface pool errors (a dead worker) as `Err`.
+    pub fn run(self) -> crate::Result<Reduced<T>> {
+        let ReduceBuilder { engine, data, op } = self;
+        let t0 = Instant::now();
+        let n = data.len();
+        let sched = engine.scheduler();
+        match sched.decide(op, T::DTYPE, n, false) {
+            Decision::Sequential => {
+                let value = simd::reduce(data, op);
+                let dt = t0.elapsed().as_secs_f64();
+                sched.observe(Backend::Sequential, op, T::DTYPE, n, dt);
+                Ok(Reduced::host(value, ExecPath::Host, dt))
+            }
+            Decision::Threaded { workers } => {
+                let value = persistent::global().reduce_width(data, op, workers);
+                let dt = t0.elapsed().as_secs_f64();
+                let backend =
+                    if workers <= 2 { Backend::ThreadedNarrow } else { Backend::ThreadedFull };
+                sched.observe(backend, op, T::DTYPE, n, dt);
+                Ok(Reduced::host(value, ExecPath::Host, dt))
+            }
+            // The engine always calls decide() with
+            // `has_exact_artifact = false`: artifact dispatch belongs
+            // to the serving layer, which owns the PJRT runtime.
+            Decision::Artifact => unreachable!("decide(.., false) never picks Artifact"),
+            Decision::Sharded { .. } => match engine.pool() {
+                Some(pool) => {
+                    let plan = sched.plan_shards(pool.devices(), n, pool.tasks_per_device());
+                    let (value, out) = pool.reduce_elems_planned(data, op, &plan)?;
+                    sched.observe_pool(op, T::DTYPE, n, &out);
+                    Ok(Reduced {
+                        value,
+                        path: ExecPath::Sharded { devices: pool.num_devices() },
+                        elapsed_s: t0.elapsed().as_secs_f64(),
+                        shards: out.shards,
+                        steals: out.steals,
+                        modeled_wall_s: out.modeled_wall_s,
+                    })
+                }
+                // A sharded decision without an attached pool can only
+                // come from a hand-built scheduler; degrade to the
+                // full-width host rung rather than failing.
+                None => {
+                    let value = persistent::global().reduce_width(data, op, engine.workers());
+                    Ok(Reduced::host(value, ExecPath::Host, t0.elapsed().as_secs_f64()))
+                }
+            },
+        }
+    }
+}
+
+/// One rows-batch reduction request (from [`Engine::reduce_rows`]).
+#[derive(Debug)]
+pub struct RowsBuilder<'e, 'd, T: TypedElement> {
+    engine: &'e Engine,
+    data: &'d [T],
+    cols: usize,
+    op: Op,
+    via_fleet: bool,
+}
+
+impl<'e, 'd, T: TypedElement> RowsBuilder<'e, 'd, T> {
+    pub(super) fn new(engine: &'e Engine, data: &'d [T], cols: usize) -> Self {
+        RowsBuilder { engine, data, cols, op: Op::Sum, via_fleet: false }
+    }
+
+    /// The combiner to reduce each row with (default [`Op::Sum`]).
+    pub fn op(mut self, op: Op) -> Self {
+        self.op = op;
+        self
+    }
+
+    /// Pin this pass to the device fleet (when one is attached): run
+    /// one fused fleet dispatch even if the scheduler's *current*
+    /// ladder would place `cols` on the host. The serving layer sets
+    /// this for batches it enqueued as fleet-bound, so adaptive cutoff
+    /// drift between enqueue and flush can never turn an
+    /// arbitrarily-large stacked payload into one host rows pass.
+    /// Ignored without a pool, and for [`Op::Prod`] (products are
+    /// host-only: the fleet's f64 embedding cannot reproduce i32
+    /// wrapping products).
+    pub fn via_fleet(mut self) -> Self {
+        self.via_fleet = true;
+        self
+    }
+
+    /// Reduce every row of the `rows × cols` row-major matrix in one
+    /// pass: a single persistent-runtime rows pass when the per-row
+    /// width sits on the host ladder, one fused fleet dispatch
+    /// ([`ExecPath::PoolFused`]) when it crosses the pool knee.
+    pub fn run(self) -> crate::Result<Reduced<Vec<T>>> {
+        let RowsBuilder { engine, data, cols, op, via_fleet } = self;
+        let t0 = Instant::now();
+        if cols == 0 {
+            bail!("reduce_rows needs cols >= 1");
+        }
+        if data.len() % cols != 0 {
+            bail!("data is not a whole number of rows ({} % {cols} != 0)", data.len());
+        }
+        let rows = data.len() / cols;
+        if rows == 0 {
+            let dt = t0.elapsed().as_secs_f64();
+            return Ok(Reduced::host(Vec::new(), ExecPath::HostFused { batch: 0 }, dt));
+        }
+        let sched = engine.scheduler();
+        let fleet_pinned = via_fleet && op != Op::Prod;
+        let sharded = fleet_pinned
+            || matches!(sched.decide(op, T::DTYPE, cols, false), Decision::Sharded { .. });
+        match (sharded, engine.pool()) {
+            (true, Some(pool)) => {
+                let base = sched.plan_shards(pool.devices(), cols, pool.tasks_per_device());
+                let (values, out) = pool.reduce_rows_elems(data, cols, op, &base)?;
+                sched.observe_pool(op, T::DTYPE, rows * cols, &out);
+                Ok(Reduced {
+                    value: values,
+                    path: ExecPath::PoolFused { batch: rows, devices: pool.num_devices() },
+                    elapsed_s: t0.elapsed().as_secs_f64(),
+                    shards: out.shards,
+                    steals: out.steals,
+                    modeled_wall_s: out.modeled_wall_s,
+                })
+            }
+            _ => {
+                let values =
+                    persistent::global().reduce_rows_width(data, cols, op, engine.workers());
+                let dt = t0.elapsed().as_secs_f64();
+                // Observe only passes that actually fanned out —
+                // mirroring `reduce_rows_width`'s own serial predicate
+                // (width == 1 || rows == 1 || len < SEQ_FALLBACK):
+                // serial or wake-up-dominated passes must not drag the
+                // full-width EWMA toward throughput the backend didn't
+                // produce.
+                if rows > 1 && engine.workers() > 1 && rows * cols >= persistent::SEQ_FALLBACK {
+                    sched.observe(Backend::ThreadedFull, op, T::DTYPE, rows * cols, dt);
+                }
+                Ok(Reduced::host(values, ExecPath::HostFused { batch: rows }, dt))
+            }
+        }
+    }
+}
+
+/// One segmented (ragged) reduction request (from
+/// [`Engine::reduce_segments`]).
+#[derive(Debug)]
+pub struct SegmentsBuilder<'e, 'd, T: TypedElement> {
+    engine: &'e Engine,
+    data: &'d [T],
+    offsets: &'d [usize],
+    op: Op,
+}
+
+impl<'e, 'd, T: TypedElement> SegmentsBuilder<'e, 'd, T> {
+    pub(super) fn new(engine: &'e Engine, data: &'d [T], offsets: &'d [usize]) -> Self {
+        SegmentsBuilder { engine, data, offsets, op: Op::Sum }
+    }
+
+    /// The combiner to reduce each segment with (default [`Op::Sum`]).
+    pub fn op(mut self, op: Op) -> Self {
+        self.op = op;
+        self
+    }
+
+    /// Plan and execute every segment through the scheduler: segments
+    /// below the full-width knee fuse into **one** persistent-runtime
+    /// pass, segments at/above it run full-width, and segments past
+    /// the pool crossover each shard across the fleet (shard-order
+    /// Neumaier combines keep float sums deterministic). Empty
+    /// segments yield the identity element.
+    pub fn run(self) -> crate::Result<Reduced<Vec<T>>> {
+        let SegmentsBuilder { engine, data, offsets, op } = self;
+        let t0 = Instant::now();
+        let Some((&first, _)) = offsets.split_first() else {
+            bail!("offsets must hold at least one boundary (CSR: [0, ..., data.len()])");
+        };
+        if first != 0 {
+            bail!("offsets[0] must be 0, got {first}");
+        }
+        if offsets.windows(2).any(|w| w[1] < w[0]) {
+            bail!("offsets must be monotone non-decreasing");
+        }
+        let last = *offsets.last().expect("offsets checked non-empty");
+        if last != data.len() {
+            bail!("offsets must end at data.len() ({last} != {})", data.len());
+        }
+        let segments = offsets.len() - 1;
+        let sched = engine.scheduler();
+        let cuts = sched.cutoffs(op, T::DTYPE);
+
+        // Per-segment placement, off the same ladder every other
+        // entry point uses.
+        let mut values = vec![T::identity(op); segments];
+        let mut fused_ranges: Vec<(usize, usize)> = Vec::new();
+        let mut fused_idx: Vec<usize> = Vec::new();
+        let mut wide: Vec<usize> = Vec::new();
+        let mut fleet: Vec<usize> = Vec::new();
+        for (s, w) in offsets.windows(2).enumerate() {
+            let (lo, hi) = (w[0], w[1]);
+            let len = hi - lo;
+            if len == 0 {
+                continue; // identity already in place
+            }
+            if engine.pool().is_some() && len >= cuts.pool {
+                fleet.push(s);
+            } else if len >= cuts.thread {
+                wide.push(s);
+            } else {
+                fused_ranges.push((lo, hi));
+                fused_idx.push(s);
+            }
+        }
+
+        // 1. Small segments: ONE fused pass over the persistent
+        //    runtime (the ragged analogue of the RedFuser rows pass).
+        //    Deliberately unobserved: the pass is wake-up/overhead
+        //    dominated by construction (every segment in it sits below
+        //    the full-width knee), so folding it into the full-width
+        //    throughput EWMA would drag the model toward overhead the
+        //    backend didn't cause.
+        if !fused_ranges.is_empty() {
+            let vals = persistent::global().reduce_ranges_width(
+                data,
+                &fused_ranges,
+                op,
+                engine.workers(),
+            );
+            for (&s, v) in fused_idx.iter().zip(vals) {
+                values[s] = v;
+            }
+        }
+        // 2. Large host segments: full-width, one at a time, each
+        //    observed in its own band — the same clean attribution a
+        //    direct `engine.reduce` of that segment would record. A
+        //    width-1 engine runs these serially, so it records nothing
+        //    (serial throughput is not the full-width backend's).
+        for &s in &wide {
+            let slice = &data[offsets[s]..offsets[s + 1]];
+            let seg_t0 = Instant::now();
+            values[s] = persistent::global().reduce_width(slice, op, engine.workers());
+            if engine.workers() > 1 {
+                sched.observe(
+                    Backend::ThreadedFull,
+                    op,
+                    T::DTYPE,
+                    slice.len(),
+                    seg_t0.elapsed().as_secs_f64(),
+                );
+            }
+        }
+        // 3. Fleet segments: each shards across the pool under the
+        //    (possibly feedback-adjusted) plan.
+        let mut shards = 0usize;
+        let mut steals = 0u64;
+        let mut modeled_wall_s = 0.0f64;
+        if let Some(pool) = engine.pool() {
+            for &s in &fleet {
+                let slice = &data[offsets[s]..offsets[s + 1]];
+                let plan = sched.plan_shards(pool.devices(), slice.len(), pool.tasks_per_device());
+                let (v, out) = pool.reduce_elems_planned(slice, op, &plan)?;
+                sched.observe_pool(op, T::DTYPE, slice.len(), &out);
+                values[s] = v;
+                shards += out.shards;
+                steals += out.steals;
+                modeled_wall_s += out.modeled_wall_s;
+            }
+        }
+
+        Ok(Reduced {
+            value: values,
+            path: ExecPath::Segmented { segments },
+            elapsed_s: t0.elapsed().as_secs_f64(),
+            shards,
+            steals,
+            modeled_wall_s,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::reduce::scalar;
+    use crate::util::rng::Rng;
+
+    fn host_engine() -> Engine {
+        Engine::builder().host_workers(4).build().unwrap()
+    }
+
+    #[test]
+    fn scalar_reduce_matches_oracle_across_sizes() {
+        let e = host_engine();
+        for n in [0usize, 1, 100, 20_000, 200_000] {
+            let data = Rng::new(n as u64 + 1).i32_vec(n, -500, 500);
+            for op in Op::ALL {
+                let r = e.reduce(&data).op(op).run().unwrap();
+                assert_eq!(r.value, scalar::reduce(&data, op), "n={n} {op}");
+                assert_eq!(r.path, ExecPath::Host);
+                assert_eq!(r.shards, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn default_op_is_sum() {
+        let e = host_engine();
+        let data = vec![1i32, 2, 3, 4];
+        assert_eq!(e.reduce(&data).run().unwrap().value, 10);
+    }
+
+    #[test]
+    fn rows_match_per_row_oracle_on_host() {
+        let e = host_engine();
+        let (rows, cols) = (7, 1_001);
+        let data = Rng::new(3).i32_vec(rows * cols, -100, 100);
+        let r = e.reduce_rows(&data, cols).op(Op::Max).run().unwrap();
+        let want: Vec<i32> = data.chunks(cols).map(|c| scalar::reduce(c, Op::Max)).collect();
+        assert_eq!(r.value, want);
+        assert_eq!(r.path, ExecPath::HostFused { batch: rows });
+    }
+
+    #[test]
+    fn rows_reject_bad_shapes() {
+        let e = host_engine();
+        let data = vec![1i32; 10];
+        assert!(e.reduce_rows(&data, 0).run().is_err());
+        assert!(e.reduce_rows(&data, 3).run().is_err());
+        let r = e.reduce_rows(&data[..0], 5).run().unwrap();
+        assert!(r.value.is_empty());
+    }
+
+    #[test]
+    fn segments_match_per_segment_oracle() {
+        let e = host_engine();
+        // Ragged mix: empty, single-element, small and knee-crossing
+        // segments in one request.
+        let lens = [0usize, 1, 5, 0, 4_000, 1, 40_000, 123];
+        let mut offsets = vec![0usize];
+        for l in lens {
+            offsets.push(offsets.last().unwrap() + l);
+        }
+        let n = *offsets.last().unwrap();
+        let data = Rng::new(9).i32_vec(n, -500, 500);
+        for op in Op::ALL {
+            let r = e.reduce_segments(&data, &offsets).op(op).run().unwrap();
+            assert_eq!(r.path, ExecPath::Segmented { segments: lens.len() });
+            for (s, w) in offsets.windows(2).enumerate() {
+                let want = scalar::reduce(&data[w[0]..w[1]], op);
+                assert_eq!(r.value[s], want, "segment {s} {op}");
+            }
+        }
+    }
+
+    #[test]
+    fn segments_validate_offsets() {
+        let e = host_engine();
+        let data = vec![1i32; 10];
+        // No boundaries at all.
+        assert!(e.reduce_segments(&data, &[]).run().is_err());
+        // First boundary not zero.
+        assert!(e.reduce_segments(&data, &[1, 10]).run().is_err());
+        // Non-monotone.
+        assert!(e.reduce_segments(&data, &[0, 7, 3, 10]).run().is_err());
+        // Doesn't end at data.len().
+        assert!(e.reduce_segments(&data, &[0, 5]).run().is_err());
+        // Zero segments over empty data is fine.
+        let r = e.reduce_segments(&data[..0], &[0]).run().unwrap();
+        assert!(r.value.is_empty());
+        assert_eq!(r.path, ExecPath::Segmented { segments: 0 });
+    }
+
+    #[test]
+    fn segments_all_empty_yield_identities() {
+        let e = host_engine();
+        let data: [i32; 0] = [];
+        let offsets = [0usize, 0, 0, 0];
+        for op in Op::ALL {
+            let r = e.reduce_segments(&data, &offsets).op(op).run().unwrap();
+            assert_eq!(r.value, vec![i32::identity(op); 3], "{op}");
+        }
+    }
+}

@@ -29,26 +29,49 @@
 //!   feedback-driven adaptive scheduler — the single cutoff ladder
 //!   behind planning and routing, with EWMA-observed throughput
 //!   deriving the crossovers and per-worker busy times re-weighting
-//!   shard plans; [`harness`] regenerates every table and figure plus
-//!   the pool's device-count scaling and the scheduler's convergence
-//!   tables.
+//!   shard plans; [`engine`] is the **one front door** over all of it
+//!   ([`Engine`]): a typed facade placing every request — scalar,
+//!   rows, ragged segments — on the scheduler's ladder; [`harness`]
+//!   regenerates every table and figure plus the pool's device-count
+//!   scaling and the scheduler's convergence tables.
 //!
 //! ## Quickstart
 //!
-//! ```no_run
-//! use parred::reduce::{self, Op};
+//! Build one [`Engine`] and hand it every reduction; it picks the
+//! execution path (sequential, persistent host runtime, device fleet)
+//! and reports it back in a uniform outcome:
 //!
-//! let data: Vec<f32> = (0..1_000_000).map(|i| i as f32).collect();
-//! let total = reduce::scalar::reduce(&data, Op::Sum);
-//! let fast = reduce::threaded::reduce(&data, Op::Sum, 8);
-//! assert!((total - fast).abs() / total < 1e-3);
+//! ```no_run
+//! use parred::{Engine, reduce::Op};
+//!
+//! let engine = Engine::builder().host_workers(8).build()?;
+//!
+//! // One scalar reduction, placed by the scheduler.
+//! let data: Vec<f32> = (0..1_000_000).map(|i| (i % 1000) as f32).collect();
+//! let out = engine.reduce(&data).op(Op::Sum).run()?;
+//! println!("{} via {:?} in {:.3} ms", out.value, out.path, out.elapsed_s * 1e3);
+//!
+//! // A batch of rows, reduced in one pass.
+//! let rows = engine.reduce_rows(&data, 1000).op(Op::Max).run()?;
+//! assert_eq!(rows.value.len(), 1000);
+//!
+//! // Ragged segments (CSR offsets): empty segments yield the identity.
+//! let offsets = [0usize, 10, 10, 1_000_000];
+//! let segs = engine.reduce_segments(&data, &offsets).run()?;
+//! assert_eq!(segs.value.len(), 3);
+//! # Ok::<(), anyhow::Error>(())
 //! ```
 //!
-//! See `examples/` for the end-to-end drivers (PJRT serving path,
-//! golden-section search, counting sort) and `DESIGN.md` for the
-//! paper-to-module map.
+//! Attach a simulated device fleet with
+//! `Engine::builder().fleet_spec("TeslaC2075*4")?` — payloads past the
+//! derived crossover then shard across it — and turn on feedback with
+//! `.adaptive(true)`. See `examples/` for the end-to-end drivers (PJRT
+//! serving path, golden-section search, counting sort) and `DESIGN.md`
+//! (§9) for how the facade maps onto the paper's "generic and simple"
+//! claim.
 
 pub mod coordinator;
+pub mod engine;
 pub mod gpusim;
 pub mod harness;
 pub mod kernels;
@@ -57,6 +80,8 @@ pub mod reduce;
 pub mod runtime;
 pub mod sched;
 pub mod util;
+
+pub use engine::{Engine, EngineBuilder, ExecPath, Reduced};
 
 /// Crate-wide result type.
 pub type Result<T> = anyhow::Result<T>;

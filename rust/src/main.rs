@@ -7,8 +7,10 @@
 //!   sim --kernel <k1..k7|catanzaro|jradi|luitjens> [--device D]
 //!       [--n N] [--f F] [--block B] [--op OP]
 //!                                run one kernel on the simulator
-//!   reduce --n N [--op OP] [--dtype f32|i32] [--backend host|pjrt]
-//!                                reduce a generated workload
+//!   reduce --n N [--op OP] [--dtype f32|i32] [--backend engine|host|pjrt]
+//!       [--pool --pool-devices SPEC] [--segments K]
+//!                                reduce a generated workload through
+//!                                the Engine facade (or raw PJRT)
 //!   serve [--requests N] [--batch-window-us U] [--payload N]
 //!                                end-to-end serving driver (PJRT)
 //!
@@ -40,6 +42,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "pool", "pool-devices", "pool-cutoff",
         "host-workers",
         "sched", "adaptive", "sched-snapshot",
+        "segments",
     ];
     let args = Args::parse(argv, &allowed)?;
     // Size the process-wide persistent host runtime before anything
@@ -73,7 +76,15 @@ USAGE: parred <info|tables|sim|reduce|serve> [options]
                             regenerate the paper's tables/figures
   sim --kernel k1..k7|catanzaro|jradi|luitjens [--device G80|TeslaC2075|AMD-GCN]
       [--device-file my_gpu.json] [--n 5533214] [--f 8] [--block 256] [--op sum]
-  reduce --n N [--op sum] [--dtype f32] [--backend host|pjrt] [--artifacts DIR]
+  reduce --n N [--op sum] [--dtype f32] [--backend engine|host|pjrt]
+         [--pool=1 --pool-devices SPEC [--pool-cutoff N]] [--adaptive]
+         [--segments K] [--artifacts DIR]
+         one reduction through the Engine facade: the scheduler places
+         it (host persistent runtime or device fleet) and the outcome
+         reports value, ExecPath, timing and steal stats. --segments K
+         splits the payload into K ragged segments and reduces each
+         (engine.reduce_segments). --backend pjrt runs the raw
+         compiled-artifact path instead.
   serve [--requests 200] [--batch-window-us 200] [--payload 65536]
         [--artifacts DIR] [--pool=1 --pool-devices SPEC [--pool-cutoff N]]
         [--adaptive] [--sched-snapshot PATH]
@@ -94,7 +105,9 @@ USAGE: parred <info|tables|sim|reduce|serve> [options]
 
   serve --adaptive folds observed throughput into the scheduler's
   cutoffs and per-worker busy times into the shard weights;
-  --sched-snapshot PATH dumps the model (JSON) at shutdown.
+  --sched-snapshot PATH warm-starts the model from PATH at startup
+  (when it exists) and dumps the refined model (JSON) at shutdown,
+  so derived cutoffs survive restarts.
 
   tables --pool emits the device-count scaling table of the
   multi-device execution pool (1/2/4/8 x TeslaC2075 at N);
@@ -189,6 +202,22 @@ fn parse_op(args: &Args) -> Result<Op> {
     args.get_or("op", "sum").parse().map_err(|e: String| anyhow!(e))
 }
 
+/// A bare flag or any truthy value enables; `=0|false|no|off` keeps it
+/// disabled (shared by `reduce` and `serve`).
+fn truthy(args: &Args, name: &str) -> bool {
+    args.flag(name)
+        || args.get(name).is_some_and(|v| !matches!(v, "0" | "false" | "no" | "off"))
+}
+
+/// An optional numeric flag: `None` when absent, so callers can
+/// distinguish "unset" (derive it) from an explicit value.
+fn opt_usize(args: &Args, name: &str, default: usize) -> Result<Option<usize>> {
+    match args.get(name) {
+        Some(_) => Ok(Some(args.get_usize(name, default)?)),
+        None => Ok(None),
+    }
+}
+
 fn sim(args: &Args) -> Result<()> {
     let kernel = args.get("kernel").ok_or_else(|| anyhow!("--kernel required"))?;
     let cfg = if let Some(path) = args.get("device-file") {
@@ -243,28 +272,103 @@ fn sim(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `parred reduce` on the engine facade: generate a payload, hand it
+/// to one [`parred::Engine`], report value + execution path. With
+/// `--segments K` the payload is split into K ragged segments and
+/// reduced through `engine.reduce_segments` instead.
+fn engine_reduce<T>(
+    engine: &parred::Engine,
+    data: Vec<T>,
+    op: Op,
+    rng: &mut Rng,
+    segments: usize,
+) -> Result<()>
+where
+    T: parred::reduce::TypedElement + std::fmt::Display,
+{
+    let n = data.len();
+    let dtype = T::DTYPE;
+    if segments > 0 {
+        // Ragged demo offsets: segments-1 random cuts (duplicates make
+        // empty segments, exercising the identity path).
+        let mut cuts: Vec<usize> =
+            (0..segments.saturating_sub(1)).map(|_| rng.range(0, n)).collect();
+        cuts.sort_unstable();
+        let mut offsets = vec![0usize];
+        offsets.extend(cuts);
+        offsets.push(n);
+        let r = engine.reduce_segments(&data, &offsets).op(op).run()?;
+        println!(
+            "engine {op} over {n} {dtype} in {segments} ragged segments: path={:?} \
+             shards={} steals={} ({:.3} ms)",
+            r.path,
+            r.shards,
+            r.steals,
+            r.elapsed_s * 1e3
+        );
+        for (s, v) in r.value.iter().take(4).enumerate() {
+            let len = offsets[s + 1] - offsets[s];
+            println!("  segment[{s}] ({len} elems) = {v}");
+        }
+        if r.value.len() > 4 {
+            println!("  ... {} more segments", r.value.len() - 4);
+        }
+    } else {
+        let r = engine.reduce(&data).op(op).run()?;
+        println!(
+            "engine {op} over {n} {dtype}: {} via {:?} ({:.3} ms, shards={} steals={})",
+            r.value,
+            r.path,
+            r.elapsed_s * 1e3,
+            r.shards,
+            r.steals
+        );
+    }
+    Ok(())
+}
+
 fn reduce(args: &Args) -> Result<()> {
     let n = args.get_usize("n", 1 << 20)?;
     let op: Op = parse_op(args)?;
     let dtype = Dtype::parse(args.get_or("dtype", "f32")).ok_or_else(|| anyhow!("bad dtype"))?;
-    let backend = args.get_or("backend", "host");
+    let backend = args.get_or("backend", "engine");
     let seed = args.get_usize("seed", 42)? as u64;
     let mut rng = Rng::new(seed);
 
     match (backend, dtype) {
-        ("host", Dtype::F32) => {
-            let data = rng.f32_vec(n, -1.0, 1.0);
-            let planner = parred::reduce::plan::Planner::default();
-            let t0 = std::time::Instant::now();
-            let v = planner.run_f32(&data, op);
-            println!("host {op} over {n} f32: {v}  ({:.3} ms)", t0.elapsed().as_secs_f64() * 1e3);
-        }
-        ("host", Dtype::I32) => {
-            let data = rng.i32_vec(n, -100, 100);
-            let planner = parred::reduce::plan::Planner::default();
-            let t0 = std::time::Instant::now();
-            let v = planner.run_i32(&data, op);
-            println!("host {op} over {n} i32: {v}  ({:.3} ms)", t0.elapsed().as_secs_f64() * 1e3);
+        // "host" stays as an alias for the (pool-less) engine path.
+        ("engine" | "host", _) => {
+            if backend == "host" && truthy(args, "pool") {
+                bail!("--pool requires --backend engine (host is the pool-less alias)");
+            }
+            let mut builder = parred::Engine::builder()
+                .host_workers(args.get_usize("workers", 0)?)
+                .adaptive(truthy(args, "adaptive"));
+            if truthy(args, "pool") {
+                let custom = match args.get("device-file") {
+                    Some(path) => {
+                        vec![DeviceConfig::from_json(&std::fs::read_to_string(path)?)?]
+                    }
+                    None => Vec::new(),
+                };
+                let devices = parred::engine::fleet_from_spec(
+                    args.get_or("pool-devices", "4"),
+                    &custom,
+                )?;
+                builder = builder
+                    .fleet(devices)
+                    .pool_cutoff(opt_usize(args, "pool-cutoff", 1 << 20)?);
+            }
+            let engine = builder.build()?;
+            let segments = args.get_usize("segments", 0)?;
+            match dtype {
+                Dtype::F32 => {
+                    engine_reduce(&engine, rng.f32_vec(n, -1.0, 1.0), op, &mut rng, segments)?
+                }
+                Dtype::I32 => {
+                    engine_reduce(&engine, rng.i32_vec(n, -100, 100), op, &mut rng, segments)?
+                }
+            }
         }
         ("pjrt", _) => {
             let dir = args.get_or("artifacts", "artifacts");
@@ -289,7 +393,7 @@ fn reduce(args: &Args) -> Result<()> {
                 t1.elapsed().as_secs_f64() * 1e3
             );
         }
-        (b, _) => bail!("unknown backend {b:?} (host|pjrt)"),
+        (b, _) => bail!("unknown backend {b:?} (engine|host|pjrt)"),
     }
     Ok(())
 }
@@ -299,15 +403,7 @@ fn serve(args: &Args) -> Result<()> {
         parse_fleet_spec, PoolServeConfig, ServiceConfig, TraceConfig,
     };
     let dir = args.get_or("artifacts", "artifacts").to_string();
-    // A bare flag or any truthy value enables; `=0|false|no|off`
-    // keeps it disabled.
-    let truthy = |name: &str| {
-        args.flag(name)
-            || args
-                .get(name)
-                .is_some_and(|v| !matches!(v, "0" | "false" | "no" | "off"))
-    };
-    let pool = if truthy("pool") {
+    let pool = if truthy(args, "pool") {
         // Custom device models (from `--device-file` JSON) are
         // resolvable by name inside the fleet spec, composing with
         // the presets: `--device-file my_gpu.json --pool-devices
@@ -323,10 +419,7 @@ fn serve(args: &Args) -> Result<()> {
             custom,
             // Pin the crossover only when asked; otherwise the
             // scheduler derives it from its throughput model.
-            cutoff: match args.get("pool-cutoff") {
-                Some(_) => Some(args.get_usize("pool-cutoff", 1 << 20)?),
-                None => None,
-            },
+            cutoff: opt_usize(args, "pool-cutoff", 1 << 20)?,
             tasks_per_device: 2,
         })
     } else {
@@ -339,7 +432,7 @@ fn serve(args: &Args) -> Result<()> {
         workers: args.get_usize("workers", 0)?,
         warmup: !args.flag("fast"),
         pool,
-        adaptive: truthy("adaptive"),
+        adaptive: truthy(args, "adaptive"),
         sched_snapshot: args.get("sched-snapshot").map(str::to_string),
     };
     let trace = TraceConfig {

@@ -31,7 +31,7 @@
 //! scaling table lives in [`crate::harness::pool_scaling`].
 //!
 //! Host-side work on this path is spawn-free: the f64 embedding in
-//! [`DevicePool::reduce_elems`] runs on the persistent host runtime
+//! [`DevicePool::reduce_elems_planned`] runs on the persistent host runtime
 //! ([`crate::reduce::persistent`]); the per-shard partial combine
 //! stays serial by design — it is O(shards), and shard order must be
 //! preserved for deterministic (compensated) float sums.
@@ -308,14 +308,18 @@ impl DevicePool {
         })
     }
 
-    /// Typed entry point for the serving path: embeds the payload into
-    /// the simulator's f64 domain (lossless for f32/i32), reduces, and
-    /// maps the value back. The embedded vector is handed to the pool
-    /// by ownership — no second copy on the request path.
+    /// Typed entry point under the static proportional plan: embeds
+    /// the payload into the simulator's f64 domain (lossless for
+    /// f32/i32), reduces, and maps the value back.
     ///
-    /// The embedding — the host-side hot loop of this path — runs as
-    /// one chunk-claiming pass over the persistent host runtime
-    /// ([`crate::reduce::persistent`]) instead of a serial copy.
+    /// Deprecated as a public entry point: the
+    /// [`crate::engine::Engine`] facade routes through
+    /// [`Self::reduce_elems_planned`] with the scheduler's (possibly
+    /// feedback-adjusted) plan, which this convenience bypasses.
+    #[deprecated(
+        since = "0.3.0",
+        note = "use parred::Engine (engine.reduce(..).run()) or reduce_elems_planned"
+    )]
     pub fn reduce_elems<T: Element>(&self, data: &[T], op: Op) -> Result<(T, PoolOutcome)> {
         let plan = self.plan(data.len());
         self.reduce_elems_planned(data, op, &plan)
@@ -514,6 +518,13 @@ mod tests {
         Rng::new(seed).i32_vec(n, -500, 500)
     }
 
+    /// The old `reduce_elems` convenience (static proportional plan),
+    /// spelled through the non-deprecated planned entry point.
+    fn reduce_static<T: Element>(pool: &DevicePool, data: &[T], op: Op) -> (T, PoolOutcome) {
+        let plan = pool.plan(data.len());
+        pool.reduce_elems_planned(data, op, &plan).expect("pool reduce")
+    }
+
     #[test]
     fn matches_scalar_for_all_ops_heterogeneous() {
         let pool = DevicePool::new(PoolConfig {
@@ -527,7 +538,7 @@ mod tests {
         .unwrap();
         let data = ints(100_003, 7);
         for op in [Op::Sum, Op::Min, Op::Max] {
-            let (got, out) = pool.reduce_elems(&data, op).unwrap();
+            let (got, out) = reduce_static(&pool, &data, op);
             assert_eq!(got, scalar::reduce(&data, op), "{op}");
             assert!(out.modeled_wall_s > 0.0);
             assert!(out.shards >= 3, "{op}: {} shards", out.shards);
@@ -538,10 +549,10 @@ mod tests {
     fn empty_input_yields_identity() {
         let pool = DevicePool::new(PoolConfig::homogeneous(DeviceConfig::tesla_c2075(), 2))
             .unwrap();
-        let (got, out) = pool.reduce_elems::<i32>(&[], Op::Min).unwrap();
+        let (got, out) = reduce_static::<i32>(&pool, &[], Op::Min);
         assert_eq!(got, i32::MAX);
         assert_eq!(out.shards, 0);
-        let (gotf, _) = pool.reduce_elems::<f32>(&[], Op::Sum).unwrap();
+        let (gotf, _) = reduce_static::<f32>(&pool, &[], Op::Sum);
         assert_eq!(gotf, 0.0);
     }
 
@@ -551,7 +562,7 @@ mod tests {
             .unwrap();
         for n in [1usize, 2, 3] {
             let data = ints(n, n as u64);
-            let (got, out) = pool.reduce_elems(&data, Op::Sum).unwrap();
+            let (got, out) = reduce_static(&pool, &data, Op::Sum);
             assert_eq!(got, scalar::reduce(&data, Op::Sum), "n={n}");
             assert!(out.shards <= n);
         }
@@ -577,7 +588,7 @@ mod tests {
     fn float_sum_is_compensated_and_close() {
         let pool = DevicePool::new(PoolConfig::default()).unwrap();
         let data = Rng::new(3).f32_vec(300_000, -1.0, 1.0);
-        let (got, _) = pool.reduce_elems(&data, Op::Sum).unwrap();
+        let (got, _) = reduce_static(&pool, &data, Op::Sum);
         let want = kahan::sum_f64(&data);
         let rel = (got as f64 - want).abs() / want.abs().max(1.0);
         assert!(rel < 1e-5, "pool {got} vs kahan {want} (rel {rel:.2e})");

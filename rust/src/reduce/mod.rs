@@ -26,7 +26,7 @@ pub mod scalar;
 pub mod simd;
 pub mod threaded;
 
-pub use op::{Element, Op};
+pub use op::{Element, Op, TypedElement};
 
 /// Convenience re-export: sequential reduction (the semantic oracle).
 pub use scalar::reduce as reduce_scalar;

@@ -159,6 +159,23 @@ impl Element for i32 {
     }
 }
 
+/// Element types with a manifest [`Dtype`] — the payload types the
+/// serving stack (and the [`crate::engine::Engine`] facade) accepts.
+/// `f64` implements [`Element`] (it is the simulator's register
+/// domain) but has no manifest dtype, so it is not `TypedElement`.
+pub trait TypedElement: Element {
+    /// The manifest dtype of this payload type.
+    const DTYPE: Dtype;
+}
+
+impl TypedElement for f32 {
+    const DTYPE: Dtype = Dtype::F32;
+}
+
+impl TypedElement for i32 {
+    const DTYPE: Dtype = Dtype::I32;
+}
+
 /// Element dtypes as named in the artifact manifest.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Dtype {

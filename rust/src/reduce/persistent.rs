@@ -359,6 +359,69 @@ impl PersistentPool {
         result
     }
 
+    /// Ragged-rows reduction: reduce each `(start, end)` range of
+    /// `data` in **one** chunk-claiming pass — the fused execution
+    /// engine of the [`crate::engine::Engine::reduce_segments`]
+    /// small-segment path (the ragged analogue of [`Self::reduce_rows`]).
+    ///
+    /// Ranges are grouped into contiguous runs of roughly equal
+    /// element counts, each group reduced serially by one claimant, so
+    /// output order is range order and results are deterministic for a
+    /// given `(ranges, width)`. Ranges may overlap or skip parts of
+    /// `data`; each must lie in bounds.
+    pub fn reduce_ranges_width<T: Element>(
+        &self,
+        data: &[T],
+        ranges: &[(usize, usize)],
+        op: Op,
+        width: usize,
+    ) -> Vec<T> {
+        let width = width.clamp(1, self.width());
+        let count = ranges.len();
+        if count == 0 {
+            return Vec::new();
+        }
+        for &(lo, hi) in ranges {
+            assert!(
+                lo <= hi && hi <= data.len(),
+                "range ({lo}, {hi}) out of bounds for {} elements",
+                data.len()
+            );
+        }
+        let total: usize = ranges.iter().map(|&(lo, hi)| hi - lo).sum();
+        if width == 1 || count == 1 || total < SEQ_FALLBACK {
+            return ranges.iter().map(|&(lo, hi)| simd::reduce(&data[lo..hi], op)).collect();
+        }
+        // Group contiguous runs of ranges, greedily balancing element
+        // counts toward total/groups per group.
+        let groups = Self::chunk_count(total, width).min(count);
+        let target = total.div_ceil(groups);
+        let mut bounds = vec![0usize];
+        let mut acc = 0usize;
+        for (i, &(lo, hi)) in ranges.iter().enumerate() {
+            acc += hi - lo;
+            if acc >= target && bounds.len() < groups && i + 1 < count {
+                bounds.push(i + 1);
+                acc = 0;
+            }
+        }
+        bounds.push(count);
+        let ngroups = bounds.len() - 1;
+        let out: Vec<Mutex<Vec<T>>> = (0..ngroups).map(|_| Mutex::new(Vec::new())).collect();
+        self.run_width(ngroups, width, &|g| {
+            let mut vals = Vec::with_capacity(bounds[g + 1] - bounds[g]);
+            for &(lo, hi) in &ranges[bounds[g]..bounds[g + 1]] {
+                vals.push(simd::reduce(&data[lo..hi], op));
+            }
+            *lock_ignore_poison(&out[g]) = vals;
+        });
+        let mut result = Vec::with_capacity(count);
+        for m in &out {
+            result.append(&mut lock_ignore_poison(m));
+        }
+        result
+    }
+
     /// Parallel lossless embedding into the simulator's f64 domain
     /// (the host-side cost of handing a payload to the device pool).
     pub fn map_f64<T: Element>(&self, data: &[T]) -> Vec<f64> {
@@ -544,6 +607,38 @@ mod tests {
     #[should_panic(expected = "whole number of rows")]
     fn rows_reject_ragged() {
         PersistentPool::new(1).reduce_rows(&data(10), 3, Op::Sum);
+    }
+
+    #[test]
+    fn ranges_match_scalar_and_preserve_order() {
+        let pool = PersistentPool::new(3);
+        let d = data(120_000);
+        // Ragged mix: empty, tiny, chunky, and a gap in the data the
+        // ranges never touch.
+        let ranges = [
+            (0usize, 0usize),
+            (0, 1),
+            (5, 4_096),
+            (10_000, 55_000),
+            (55_000, 55_001),
+            (60_000, 120_000),
+        ];
+        for width in [1usize, 2, 4, 16] {
+            for op in Op::ALL {
+                let got = pool.reduce_ranges_width(&d, &ranges, op, width);
+                let want: Vec<i32> =
+                    ranges.iter().map(|&(lo, hi)| scalar::reduce(&d[lo..hi], op)).collect();
+                assert_eq!(got, want, "width={width} {op}");
+            }
+        }
+        // No ranges: no values.
+        assert!(pool.reduce_ranges_width(&d, &[], Op::Sum, 4).is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn ranges_reject_out_of_bounds() {
+        PersistentPool::new(1).reduce_ranges_width(&data(10), &[(5, 11)], Op::Sum, 1);
     }
 
     #[test]

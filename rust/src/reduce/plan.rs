@@ -16,7 +16,7 @@ use std::time::Instant;
 
 use crate::sched::{Backend, Decision, Scheduler};
 
-use super::op::{Dtype, Element, Op};
+use super::op::{Dtype, Op, TypedElement};
 
 /// Execution strategies available on this host (the planner-side
 /// projection of [`crate::sched::Decision`]).
@@ -89,37 +89,41 @@ impl Planner {
         }
     }
 
-    /// Host execution for any dtype the library reduces, with the
-    /// observed throughput fed back to the scheduler (a no-op unless
-    /// the scheduler is adaptive). `Artifact`/`Pool` strategies are
-    /// owned by the coordinator (it holds the runtime and the device
+    /// Host execution for any typed payload, with the observed
+    /// throughput fed back to the scheduler (a no-op unless the
+    /// scheduler is adaptive). `Artifact`/`Pool` strategies are owned
+    /// by the engine/coordinator (they hold the runtime and the device
     /// pool); when the host library is asked directly they degrade to
-    /// the threaded two-stage.
-    fn run_observed<T: Element>(&self, data: &[T], op: Op, dtype: Dtype) -> T {
+    /// the full-width persistent runtime.
+    pub fn run<T: TypedElement>(&self, data: &[T], op: Op) -> T {
+        let dtype = T::DTYPE;
         let t0 = Instant::now();
         let (value, backend) = match self.choose_for(op, dtype, data.len(), false) {
             Strategy::Sequential => (super::simd::reduce(data, op), Backend::Sequential),
             Strategy::Threaded(t) => (
-                super::threaded::reduce(data, op, t),
+                super::persistent::global().reduce_width(data, op, t.max(1)),
                 if t <= 2 { Backend::ThreadedNarrow } else { Backend::ThreadedFull },
             ),
             Strategy::Artifact => unreachable!("choose_for(.., false) never picks Artifact"),
-            Strategy::Pool => {
-                (super::threaded::reduce(data, op, self.workers()), Backend::ThreadedFull)
-            }
+            Strategy::Pool => (
+                super::persistent::global().reduce_width(data, op, self.workers().max(1)),
+                Backend::ThreadedFull,
+            ),
         };
         self.sched.observe(backend, op, dtype, data.len(), t0.elapsed().as_secs_f64());
         value
     }
 
     /// Host fallback execution for f32 payloads.
+    #[deprecated(since = "0.3.0", note = "use parred::Engine (or Planner::run)")]
     pub fn run_f32(&self, data: &[f32], op: Op) -> f32 {
-        self.run_observed(data, op, Dtype::F32)
+        self.run(data, op)
     }
 
     /// Host fallback for i32 payloads.
+    #[deprecated(since = "0.3.0", note = "use parred::Engine (or Planner::run)")]
     pub fn run_i32(&self, data: &[i32], op: Op) -> i32 {
-        self.run_observed(data, op, Dtype::I32)
+        self.run(data, op)
     }
 }
 
@@ -233,7 +237,7 @@ mod tests {
         let p = pooled_planner(4, 2, Some(1024));
         let d: Vec<i32> = (0..5000).map(|i| (i % 23) as i32 - 11).collect();
         assert_eq!(p.choose(d.len(), false), Strategy::Pool);
-        assert_eq!(p.run_i32(&d, Op::Sum), d.iter().sum::<i32>());
+        assert_eq!(p.run(&d, Op::Sum), d.iter().sum::<i32>());
     }
 
     #[test]
@@ -270,10 +274,17 @@ mod tests {
         let p = Planner::default();
         let d: Vec<f32> = (0..500_000).map(|i| (i % 97) as f32).collect();
         let want: f64 = d.iter().map(|&x| x as f64).sum();
-        assert!((p.run_f32(&d, Op::Sum) as f64 - want).abs() / want < 1e-3);
+        assert!((p.run(&d, Op::Sum) as f64 - want).abs() / want < 1e-3);
         let di: Vec<i32> = (0..500_000).map(|i| (i % 97) as i32).collect();
         let wanti: i32 = di.iter().sum();
-        assert_eq!(p.run_i32(&di, Op::Sum), wanti);
+        assert_eq!(p.run(&di, Op::Sum), wanti);
+        // The deprecated dtype-specific shims stay behaviorally
+        // identical while external callers migrate.
+        #[allow(deprecated)]
+        {
+            assert_eq!(p.run_f32(&d, Op::Sum), p.run(&d, Op::Sum));
+            assert_eq!(p.run_i32(&di, Op::Sum), wanti);
+        }
     }
 
     #[test]
@@ -284,7 +295,7 @@ mod tests {
             ..SchedConfig::default()
         })));
         let d: Vec<i32> = (0..100_000).map(|i| (i % 7) as i32).collect();
-        assert_eq!(p.run_i32(&d, Op::Sum), d.iter().sum::<i32>());
+        assert_eq!(p.run(&d, Op::Sum), d.iter().sum::<i32>());
         // choose_for(100k, i32) is full-width at 4 workers, so that
         // band's profile must have picked up the observation.
         let snap = p.scheduler().snapshot_json();

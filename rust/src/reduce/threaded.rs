@@ -7,10 +7,14 @@
 //! Since the persistent-runtime PR these entry points are thin shims
 //! over the process-wide [`super::persistent`] pool (spawn-once,
 //! park/unpark, atomic chunk claiming): the `threads` argument is the
-//! *width* hint, not a spawn count. The old spawn-per-call versions
-//! survive as [`spawn_reduce`]/[`spawn_reduce_rows`] — they are the
-//! baseline `benches/hotpath.rs` uses to quantify what persistence
-//! buys (the paper's §2.5 argument, measured on the host).
+//! *width* hint, not a spawn count. Since the engine-facade PR the
+//! shims are **deprecated** — new code goes through
+//! [`crate::engine::Engine`] (or [`super::persistent::global`]
+//! directly); nothing inside the crate calls them anymore. The old
+//! spawn-per-call versions survive as
+//! [`spawn_reduce`]/[`spawn_reduce_rows`] — they are the baseline
+//! `benches/hotpath.rs` uses to quantify what persistence buys (the
+//! paper's §2.5 argument, measured on the host).
 
 use super::op::{Element, Op};
 use super::{persistent, simd};
@@ -20,14 +24,21 @@ use super::{persistent, simd};
 ///
 /// `threads == 0` or `1`, or small inputs, fall back to the unrolled
 /// sequential loop — the planner's job, inlined here for safety.
+#[deprecated(
+    since = "0.3.0",
+    note = "use parred::Engine (engine.reduce(..).run()) or reduce::persistent::global()"
+)]
 pub fn reduce<T: Element>(data: &[T], op: Op, threads: usize) -> T {
     persistent::global().reduce_width(data, op, threads.max(1))
 }
 
 /// Row-wise reduction of a `rows x cols` matrix (flat, row-major) on
 /// the persistent runtime: the host analogue of the batched PJRT
-/// artifact, and the execution engine of the coordinator's fused
-/// host batches.
+/// artifact.
+#[deprecated(
+    since = "0.3.0",
+    note = "use parred::Engine (engine.reduce_rows(..).run()) or reduce::persistent::global()"
+)]
 pub fn reduce_rows<T: Element>(data: &[T], cols: usize, op: Op, threads: usize) -> Vec<T> {
     persistent::global().reduce_rows_width(data, cols, op, threads.max(1))
 }
@@ -77,6 +88,7 @@ pub fn spawn_reduce_rows<T: Element>(data: &[T], cols: usize, op: Op, threads: u
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // the shims under test are themselves deprecated
 mod tests {
     use super::*;
     use crate::reduce::scalar;

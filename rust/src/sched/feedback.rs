@@ -62,6 +62,18 @@ impl FleetFeedback {
         base.iter().zip(&self.factors).map(|(b, f)| b * f).collect()
     }
 
+    /// Restore factors from a scheduler snapshot (the load path):
+    /// non-finite entries reset to 1.0, the rest clamp to the usual
+    /// bounds, and the snapshot's outcome count carries over so
+    /// reports stay honest about how much history the factors encode.
+    pub fn restore(&mut self, factors: &[f64], outcomes: u64) {
+        self.factors = factors
+            .iter()
+            .map(|&f| if f.is_finite() { f.clamp(FACTOR_MIN, FACTOR_MAX) } else { 1.0 })
+            .collect();
+        self.outcomes = outcomes;
+    }
+
     /// Fold one outcome's per-worker modeled busy seconds in. Workers
     /// with zero/non-finite busy (no shards ran there) are left
     /// untouched — no signal, no update.

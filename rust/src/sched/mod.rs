@@ -183,11 +183,20 @@ impl Scheduler {
             .crossover(Backend::ThreadedNarrow, Backend::ThreadedFull, op, dtype, eb)
             .unwrap_or(usize::MAX)
             .max(seq);
-        let pool = match self.cfg.pool.as_ref().and_then(|p| p.cutoff_override) {
-            Some(c) => c,
-            None => m
-                .crossover(Backend::ThreadedFull, Backend::Pool, op, dtype, eb)
-                .unwrap_or(usize::MAX),
+        // Products never take the fleet rung (even past a pinned
+        // cutoff): the pool computes in the simulator's f64 domain,
+        // which cannot reproduce i32 wrapping products — and float
+        // products of fleet-sized inputs over/underflow anyway. Host
+        // execution is semantically exact for both dtypes.
+        let pool = if op == Op::Prod {
+            usize::MAX
+        } else {
+            match self.cfg.pool.as_ref().and_then(|p| p.cutoff_override) {
+                Some(c) => c,
+                None => m
+                    .crossover(Backend::ThreadedFull, Backend::Pool, op, dtype, eb)
+                    .unwrap_or(usize::MAX),
+            }
         };
         Cutoffs { seq, thread, pool }
     }
@@ -264,6 +273,65 @@ impl Scheduler {
         let base: Vec<f64> = devices.iter().map(|d| d.modeled_throughput_gbps()).collect();
         let weights = self.fleet().weights(&base);
         ShardPlan::proportional_weighted(&weights, n, tasks_per_device)
+    }
+
+    /// Warm-start the model from a snapshot previously produced by
+    /// [`Scheduler::snapshot_json`]: refined `(backend, op, dtype)`
+    /// profiles re-enter the throughput model and fleet factors are
+    /// restored (only when the snapshot's fleet width matches the
+    /// attached fleet — factors are positional), so derived cutoffs
+    /// and shard weights survive a
+    /// restart (`parred serve --sched-snapshot PATH` loads at startup
+    /// and still dumps at shutdown). Returns the number of profiles
+    /// installed. Profiles naming unknown backends/ops/dtypes are
+    /// skipped (forward compatibility); loading works whether or not
+    /// the scheduler is adaptive — this is an explicit API, not an
+    /// observation.
+    pub fn load_snapshot_json(&self, text: &str) -> crate::Result<usize> {
+        let doc = Json::parse(text)?;
+        let mut loaded = 0usize;
+        if let Some(profiles) = doc.opt_field("profiles") {
+            for p in profiles.as_arr()? {
+                let backend = Backend::parse(p.field("backend")?.as_str()?);
+                let op = Op::parse(p.field("op")?.as_str()?);
+                let dtype = crate::reduce::op::Dtype::parse(p.field("dtype")?.as_str()?);
+                let (Some(backend), Some(op), Some(dtype)) = (backend, op, dtype) else {
+                    continue;
+                };
+                let profile = BackendProfile {
+                    bytes_per_s: p.field("bytes_per_s")?.as_f64()?,
+                    overhead_s: p.field("overhead_s")?.as_f64()?,
+                    observations: p.field("observations")?.as_usize()? as u64,
+                };
+                self.model().set_profile(backend, op, dtype, profile);
+                loaded += 1;
+            }
+        }
+        if let Some(fleet) = doc.opt_field("fleet") {
+            if let Some(factors) = fleet.opt_field("factors") {
+                let factors: Vec<f64> = factors
+                    .as_arr()?
+                    .iter()
+                    .map(Json::as_f64)
+                    .collect::<crate::Result<Vec<f64>>>()?;
+                let outcomes = match fleet.opt_field("outcomes") {
+                    Some(j) => j.as_usize()? as u64,
+                    None => 0,
+                };
+                // Factors are positional (device index). Restore them
+                // only when the snapshot's fleet width matches the
+                // attached fleet — a resized fleet would apply learned
+                // down-weights to the wrong devices, and a
+                // non-adaptive restart could never correct them.
+                // (Reordering a same-width fleet is undetectable here;
+                // the profiles above are device-independent and load
+                // regardless.)
+                if factors.len() == self.pool_devices() {
+                    self.fleet().restore(&factors, outcomes);
+                }
+            }
+        }
+        Ok(loaded)
     }
 
     /// JSON snapshot of the model state (cutoffs, refined profiles,
@@ -403,6 +471,25 @@ mod tests {
     }
 
     #[test]
+    fn products_never_shard() {
+        // The fleet's f64 embedding cannot reproduce i32 wrapping
+        // products, so Prod must stay on the host even with a pool
+        // attached and a pinned (tiny) cutoff.
+        for cutoff in [None, Some(1024)] {
+            let s = pooled(false, cutoff);
+            assert_eq!(s.cutoffs(Op::Prod, Dtype::I32).pool, usize::MAX);
+            for n in [1024usize, 1 << 20, 1 << 24] {
+                assert!(
+                    !matches!(s.decide(Op::Prod, Dtype::I32, n, false), Decision::Sharded { .. }),
+                    "prod at n={n} must stay on the host"
+                );
+            }
+            // Other ops still shard as configured.
+            assert!(s.cutoffs(Op::Sum, Dtype::I32).pool < usize::MAX);
+        }
+    }
+
+    #[test]
     fn cutoff_override_pins_the_pool_knee() {
         let s = pooled(false, Some(1 << 21));
         assert_eq!(s.cutoffs(Op::Sum, Dtype::F32).pool, 1 << 21);
@@ -434,7 +521,8 @@ mod tests {
         // crossover must retreat to larger payloads.
         let slow_bytes_per_s = 4.0 * 76.8e9 / 8.0;
         for _ in 0..32 {
-            s.observe(Backend::Pool, Op::Sum, Dtype::F32, 1 << 21, (1 << 23) as f64 / slow_bytes_per_s);
+            let seconds = (1 << 23) as f64 / slow_bytes_per_s;
+            s.observe(Backend::Pool, Op::Sum, Dtype::F32, 1 << 21, seconds);
         }
         let after = s.cutoffs(Op::Sum, Dtype::F32).pool;
         assert!(after > before * 2, "pool cutoff {before} -> {after}");
@@ -485,6 +573,90 @@ mod tests {
             plan.shards.iter().filter(|sh| sh.device == 1).map(|sh| sh.len()).sum();
         assert_eq!(share0 + share1, n);
         assert!(share0 * 2 < share1, "laggard share {share0} vs {share1}");
+    }
+
+    #[test]
+    fn snapshot_load_round_trips_derived_cutoffs() {
+        // Dump → load → decide: everything adaptation learned must
+        // survive a restart. Warm a scheduler until its pool crossover
+        // has visibly moved and its fleet factors are skewed...
+        let warm = pooled(true, None);
+        let cold_cutoffs = warm.cutoffs(Op::Sum, Dtype::F32);
+        let slow_bytes_per_s = 4.0 * 76.8e9 / 8.0;
+        for _ in 0..32 {
+            warm.observe(
+                Backend::Pool,
+                Op::Sum,
+                Dtype::F32,
+                1 << 21,
+                (1 << 23) as f64 / slow_bytes_per_s,
+            );
+            warm.observe_busy(&[3.0, 1.0, 1.0, 1.0]);
+        }
+        let warm_cutoffs = warm.cutoffs(Op::Sum, Dtype::F32);
+        assert_ne!(warm_cutoffs, cold_cutoffs, "warm-up must move the ladder");
+
+        // ...then restart: a fresh scheduler with the same priors
+        // loads the snapshot and must decide identically.
+        let snap = warm.snapshot_json();
+        let fresh = pooled(true, None);
+        assert_eq!(fresh.cutoffs(Op::Sum, Dtype::F32), cold_cutoffs);
+        let loaded = fresh.load_snapshot_json(&snap).expect("snapshot must load");
+        assert!(loaded >= 1, "at least the pool profile must load");
+        assert_eq!(fresh.cutoffs(Op::Sum, Dtype::F32), warm_cutoffs);
+        assert_eq!(fresh.fleet_factors(4), warm.fleet_factors(4));
+        assert_eq!(fresh.fleet_outcomes(), warm.fleet_outcomes());
+        for n in [0usize, 1, 1 << 12, 1 << 15, 1 << 18, 1 << 20, 1 << 22, 1 << 24] {
+            assert_eq!(
+                fresh.decide(Op::Sum, Dtype::F32, n, false),
+                warm.decide(Op::Sum, Dtype::F32, n, false),
+                "n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn snapshot_load_tolerates_foreign_and_partial_entries() {
+        let s = pooled(false, None); // 4-device fleet
+        // Unknown backend / op names are skipped, known ones load, a
+        // missing profiles section is fine, and width-matched fleet
+        // factors restore positionally.
+        let text = r#"{
+            "profiles": [
+                {"backend": "tpu-v9", "op": "sum", "dtype": "f32",
+                 "bytes_per_s": 1e9, "overhead_s": 0.0, "observations": 3},
+                {"backend": "pool", "op": "median", "dtype": "f32",
+                 "bytes_per_s": 1e9, "overhead_s": 0.0, "observations": 3},
+                {"backend": "pool", "op": "sum", "dtype": "f32",
+                 "bytes_per_s": 5e9, "overhead_s": 1.5e-4, "observations": 7}
+            ],
+            "fleet": {"factors": [0.5, 2.0, 1.0, 1.5], "outcomes": 4}
+        }"#;
+        assert_eq!(s.load_snapshot_json(text).unwrap(), 1);
+        assert_eq!(s.fleet_factors(4), vec![0.5, 2.0, 1.0, 1.5]);
+        assert_eq!(s.fleet_outcomes(), 4);
+        assert_eq!(s.load_snapshot_json("{}").unwrap(), 0);
+        assert!(s.load_snapshot_json("not json").is_err());
+    }
+
+    #[test]
+    fn snapshot_factors_from_a_resized_fleet_are_ignored() {
+        // Factors are positional: a snapshot dumped from a 2-device
+        // fleet must not re-weight a 4-device fleet (the learned
+        // down-weight would land on the wrong device and, on a
+        // non-adaptive restart, never correct itself). Profiles still
+        // load — they are device-independent.
+        let s = pooled(false, None); // 4-device fleet
+        let text = r#"{
+            "profiles": [
+                {"backend": "pool", "op": "sum", "dtype": "f32",
+                 "bytes_per_s": 5e9, "overhead_s": 1.5e-4, "observations": 7}
+            ],
+            "fleet": {"factors": [0.02, 9.0], "outcomes": 11}
+        }"#;
+        assert_eq!(s.load_snapshot_json(text).unwrap(), 1);
+        assert_eq!(s.fleet_factors(4), vec![1.0; 4]);
+        assert_eq!(s.fleet_outcomes(), 0);
     }
 
     #[test]

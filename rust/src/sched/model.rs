@@ -49,6 +49,11 @@ impl Backend {
             Backend::Pool => "pool",
         }
     }
+
+    /// Parse a snapshot / report name back to the backend.
+    pub fn parse(s: &str) -> Option<Backend> {
+        Backend::ALL.into_iter().find(|b| b.name() == s)
+    }
 }
 
 impl std::fmt::Display for Backend {
@@ -183,6 +188,22 @@ impl ThroughputModel {
         } else {
             None
         }
+    }
+
+    /// Install a refined profile for a key — the snapshot **load**
+    /// path ([`crate::sched::Scheduler::load_snapshot_json`]), so a
+    /// restarted service warm-starts from what the previous run
+    /// learned instead of from the priors. Degenerate profiles are
+    /// ignored, mirroring [`ThroughputModel::record`].
+    pub fn set_profile(&mut self, backend: Backend, op: Op, dtype: Dtype, p: BackendProfile) {
+        if !p.bytes_per_s.is_finite()
+            || p.bytes_per_s <= 0.0
+            || !p.overhead_s.is_finite()
+            || p.overhead_s < 0.0
+        {
+            return;
+        }
+        self.observed.insert((backend, op, dtype), p);
     }
 
     /// All refined keys (for the snapshot dump).

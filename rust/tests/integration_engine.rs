@@ -1,0 +1,209 @@
+//! Engine-facade acceptance: one front door reaches **every**
+//! execution path, with the numerics the rest of the stack guarantees
+//! — integer results bit-identical to the scalar oracle, float sums
+//! within 1e-5 (relative) of the Neumaier reference — and the
+//! scheduler snapshot round-trips through the builder so derived
+//! cutoffs survive a restart.
+
+use parred::gpusim::DeviceConfig;
+use parred::reduce::op::Dtype;
+use parred::reduce::{kahan, scalar, Op};
+use parred::util::rng::Rng;
+use parred::{Engine, ExecPath};
+
+/// Small pinned pool crossover so modest payloads exercise the fleet.
+const CUTOFF: usize = 1 << 16;
+
+fn pooled_engine() -> Engine {
+    Engine::builder()
+        .host_workers(4)
+        .fleet(vec![DeviceConfig::tesla_c2075(); 3])
+        .pool_cutoff(Some(CUTOFF))
+        .adaptive(true)
+        .build()
+        .expect("pooled engine")
+}
+
+fn rel_err(got: f64, want: f64) -> f64 {
+    (got - want).abs() / want.abs().max(1.0)
+}
+
+#[test]
+fn engine_reaches_every_exec_path() {
+    let e = pooled_engine();
+
+    // Host path: below the pool crossover.
+    let small = Rng::new(1).i32_vec(10_000, -500, 500);
+    let r = e.reduce(&small).op(Op::Sum).run().unwrap();
+    assert_eq!(r.path, ExecPath::Host);
+    assert_eq!(r.value, scalar::reduce(&small, Op::Sum));
+    assert_eq!(r.shards, 0);
+
+    // Sharded path: at/above the crossover, with fleet stats.
+    let big = Rng::new(2).i32_vec(CUTOFF + 17, -500, 500);
+    let r = e.reduce(&big).op(Op::Sum).run().unwrap();
+    assert_eq!(r.path, ExecPath::Sharded { devices: 3 });
+    assert_eq!(r.value, scalar::reduce(&big, Op::Sum));
+    assert!(r.shards >= 3, "all devices participate, got {} shards", r.shards);
+    assert!(r.modeled_wall_s > 0.0);
+
+    // Host-fused rows: per-row width on the host ladder.
+    let (rows, cols) = (6, 4_099);
+    let data = Rng::new(3).i32_vec(rows * cols, -500, 500);
+    let r = e.reduce_rows(&data, cols).op(Op::Min).run().unwrap();
+    assert_eq!(r.path, ExecPath::HostFused { batch: rows });
+    let want: Vec<i32> = data.chunks(cols).map(|c| scalar::reduce(c, Op::Min)).collect();
+    assert_eq!(r.value, want);
+
+    // Pool-fused rows: per-row width past the crossover — ONE fleet
+    // dispatch for all rows.
+    let (rows, cols) = (3, CUTOFF);
+    let data = Rng::new(4).i32_vec(rows * cols, -500, 500);
+    let r = e.reduce_rows(&data, cols).op(Op::Sum).run().unwrap();
+    assert_eq!(r.path, ExecPath::PoolFused { batch: rows, devices: 3 });
+    let want: Vec<i32> = data.chunks(cols).map(|c| scalar::reduce(c, Op::Sum)).collect();
+    assert_eq!(r.value, want);
+    assert!(r.shards >= rows, "each row shards at least once");
+
+    // Segmented: small + wide + fleet segments in one request.
+    let lens = [0usize, 3, 5_000, 40_000, CUTOFF + 1];
+    let mut offsets = vec![0usize];
+    for l in lens {
+        offsets.push(offsets.last().unwrap() + l);
+    }
+    let data = Rng::new(5).i32_vec(*offsets.last().unwrap(), -500, 500);
+    let r = e.reduce_segments(&data, &offsets).op(Op::Sum).run().unwrap();
+    assert_eq!(r.path, ExecPath::Segmented { segments: lens.len() });
+    for (s, w) in offsets.windows(2).enumerate() {
+        assert_eq!(r.value[s], scalar::reduce(&data[w[0]..w[1]], Op::Sum), "segment {s}");
+    }
+    assert!(r.shards >= 3, "the fleet segment sharded, got {}", r.shards);
+}
+
+#[test]
+fn via_fleet_pins_a_rows_pass_to_the_pool() {
+    let e = pooled_engine();
+    let (rows, cols) = (3, 4_099); // host band by size
+    let data = Rng::new(21).i32_vec(rows * cols, -500, 500);
+    let hosted = e.reduce_rows(&data, cols).op(Op::Sum).run().unwrap();
+    assert_eq!(hosted.path, ExecPath::HostFused { batch: rows });
+    // The serving layer's drift guard: a fleet-bound batch stays on
+    // the fleet even though the ladder would place these cols on the
+    // host.
+    let pinned = e.reduce_rows(&data, cols).op(Op::Sum).via_fleet().run().unwrap();
+    assert_eq!(pinned.path, ExecPath::PoolFused { batch: rows, devices: 3 });
+    assert_eq!(pinned.value, hosted.value);
+    // Products ignore the pin: host-only semantics (wrapping i32).
+    let prod = e.reduce_rows(&data, cols).op(Op::Prod).via_fleet().run().unwrap();
+    assert_eq!(prod.path, ExecPath::HostFused { batch: rows });
+    let want: Vec<i32> = data.chunks(cols).map(|c| scalar::reduce(c, Op::Prod)).collect();
+    assert_eq!(prod.value, want);
+}
+
+#[test]
+fn engine_float_sums_stay_within_1e5_of_neumaier() {
+    let e = pooled_engine();
+
+    // Sharded scalar reduction.
+    let data = Rng::new(7).f32_vec(1 << 18, -1.0, 1.0);
+    let r = e.reduce(&data).op(Op::Sum).run().unwrap();
+    assert_eq!(r.path, ExecPath::Sharded { devices: 3 });
+    let want = kahan::sum_f64(&data);
+    assert!(
+        rel_err(r.value as f64, want) < 1e-5,
+        "sharded {} vs Neumaier {want}",
+        r.value
+    );
+
+    // Segmented: per-segment Neumaier comparison across all paths.
+    // Host-fused segments accumulate in f32, so the tolerance is
+    // relative to the segment's L1 mass (the same convention the
+    // persistent-runtime proptests pin).
+    let offsets = [0usize, 1, 1, 10_000, 50_000, 1 << 18];
+    let r = e.reduce_segments(&data, &offsets).op(Op::Sum).run().unwrap();
+    for (s, w) in offsets.windows(2).enumerate() {
+        let seg = &data[w[0]..w[1]];
+        let want = kahan::sum_f64(seg);
+        let l1: f64 = seg.iter().map(|&x| x.abs() as f64).sum();
+        let tol = 1e-5 * l1.max(1.0);
+        assert!(
+            (r.value[s] as f64 - want).abs() <= tol,
+            "segment {s}: {} vs Neumaier {want} (tol {tol:.3e})",
+            r.value[s]
+        );
+    }
+
+    // Float min/max stay exact.
+    for op in [Op::Min, Op::Max] {
+        let r = e.reduce(&data).op(op).run().unwrap();
+        assert_eq!(r.value, scalar::reduce(&data, op), "{op}");
+    }
+}
+
+#[test]
+fn adaptive_engine_feeds_the_scheduler() {
+    let e = pooled_engine();
+    let data = Rng::new(11).f32_vec(CUTOFF + 5, -1.0, 1.0);
+    for _ in 0..3 {
+        let r = e.reduce(&data).op(Op::Sum).run().unwrap();
+        assert_eq!(r.path, ExecPath::Sharded { devices: 3 });
+    }
+    // Pool observations landed in the model...
+    let snap = e.scheduler().snapshot_json();
+    assert!(snap.contains("\"pool\""), "{snap}");
+    // ...and the fleet feedback folded per-worker busy times in.
+    assert!(e.scheduler().fleet_outcomes() > 0);
+}
+
+#[test]
+fn snapshot_round_trips_through_the_builder() {
+    use parred::sched::Backend;
+
+    // Warm an adaptive engine's scheduler: pool observations 8x
+    // slower than the prior move the *derived* pool cutoff — so,
+    // unlike `pooled_engine()`, this engine must not pin it (a pinned
+    // override would mask what the snapshot is supposed to carry).
+    let warm = Engine::builder()
+        .host_workers(4)
+        .fleet(vec![DeviceConfig::tesla_c2075(); 3])
+        .adaptive(true)
+        .build()
+        .expect("warm engine");
+    let sched = warm.scheduler();
+    let slow = 3.0 * 76.8e9 / 8.0;
+    for _ in 0..32 {
+        sched.observe(Backend::Pool, Op::Sum, Dtype::F32, 1 << 20, (4 << 20) as f64 / slow);
+    }
+    let warm_cutoffs = sched.cutoffs(Op::Sum, Dtype::F32);
+
+    // Dump to a temp file; a fresh engine warm-starts from it.
+    let path = std::env::temp_dir().join(format!("parred_snap_{}.json", std::process::id()));
+    std::fs::write(&path, sched.snapshot_json()).expect("write snapshot");
+    let fresh = Engine::builder()
+        .host_workers(4)
+        .fleet(vec![DeviceConfig::tesla_c2075(); 3])
+        .adaptive(true)
+        .sched_snapshot(path.to_string_lossy())
+        .build()
+        .expect("engine with snapshot");
+    assert_eq!(fresh.scheduler().cutoffs(Op::Sum, Dtype::F32), warm_cutoffs);
+    // The restored ladder decides like the warm one at the knee.
+    for n in [1usize << 16, 1 << 20, 1 << 24] {
+        assert_eq!(
+            fresh.scheduler().decide(Op::Sum, Dtype::F32, n, false),
+            sched.decide(Op::Sum, Dtype::F32, n, false),
+            "n={n}"
+        );
+    }
+    let _ = std::fs::remove_file(&path);
+
+    // A corrupt snapshot fails the build loudly.
+    let bad = std::env::temp_dir().join(format!("parred_bad_{}.json", std::process::id()));
+    std::fs::write(&bad, "not json").expect("write bad snapshot");
+    assert!(Engine::builder()
+        .host_workers(2)
+        .sched_snapshot(bad.to_string_lossy())
+        .build()
+        .is_err());
+    let _ = std::fs::remove_file(&bad);
+}

@@ -65,7 +65,8 @@ fn float_sum_within_1e5_relative_of_scalar_baseline() {
         ..PoolConfig::default()
     })
     .expect("pool");
-    let (got, _) = pool.reduce_elems(&data, Op::Sum).expect("reduce");
+    let plan = pool.plan(data.len());
+    let (got, _) = pool.reduce_elems_planned(&data, Op::Sum, &plan).expect("reduce");
     let exact = kahan::sum_f64(&data);
     let rel = (got as f64 - exact).abs() / exact.abs().max(1.0);
     assert!(rel < 1e-5, "pool {got} vs exact {exact} (rel {rel:.2e})");
@@ -78,7 +79,8 @@ fn integer_min_max_bit_identical_across_fleets() {
         let pool = DevicePool::new(PoolConfig::homogeneous(DeviceConfig::tesla_c2075(), fleet))
             .expect("pool");
         for op in [Op::Sum, Op::Min, Op::Max] {
-            let (got, _) = pool.reduce_elems(&ints, op).expect("reduce");
+            let plan = pool.plan(ints.len());
+            let (got, _) = pool.reduce_elems_planned(&ints, op, &plan).expect("reduce");
             assert_eq!(got, scalar::reduce(&ints, op), "fleet={fleet} {op}");
         }
     }

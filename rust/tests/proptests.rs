@@ -34,9 +34,10 @@ fn prop_simd_equals_scalar_i32() {
 }
 
 #[test]
-fn prop_threaded_equals_scalar_any_workers() {
+#[allow(deprecated)] // pins the deprecated shim to the oracle until it is removed
+fn prop_threaded_shim_equals_scalar_any_workers() {
     check(
-        "threaded == scalar",
+        "threaded (deprecated shim) == scalar",
         CASES,
         |rng| {
             let n = sizes_nonzero(rng, 200_000);
@@ -280,7 +281,9 @@ fn prop_pool_equals_scalar_any_fleet_and_split() {
             })
             .map_err(|e| format!("{e:#}"))?;
             for op in [Op::Sum, Op::Min, Op::Max] {
-                let (got, _) = pool.reduce_elems(ints, op).map_err(|e| format!("{e:#}"))?;
+                let plan = pool.plan(ints.len());
+                let (got, _) =
+                    pool.reduce_elems_planned(ints, op, &plan).map_err(|e| format!("{e:#}"))?;
                 let want = scalar::reduce(ints, op);
                 if got != want {
                     return Err(format!("{op}: pool {got} != scalar {want}"));
@@ -384,6 +387,132 @@ fn prop_replanned_shard_weights_tile_exactly() {
             }
             if cursor != *n {
                 return Err(format!("plan covers {cursor} of {n}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_engine_matches_oracles_across_paths() {
+    use parred::Engine;
+
+    // The facade must agree with the oracles whatever path the
+    // scheduler picks: i32 bit-identical to scalar, f32 sums within
+    // 1e-5 of the segment's L1 mass (the persistent-runtime
+    // convention), across host-only and pooled engines with a tiny
+    // pinned crossover so modest inputs exercise the fleet.
+    check(
+        "engine == scalar (i32) / L1-relative (f32 sum) across paths",
+        10,
+        |rng| {
+            let n = parred::util::prop::sizes(rng, 120_000); // zero allowed
+            let workers = rng.range(1, 6);
+            let pooled = rng.below(2) == 0;
+            let devices = rng.range(1, 3);
+            (rng.i32_vec(n, -500, 500), rng.f32_vec(n, -1.0, 1.0), workers, pooled, devices)
+        },
+        |(ints, floats, workers, pooled, devices)| {
+            let mut b = Engine::builder().host_workers(*workers);
+            if *pooled {
+                b = b
+                    .fleet(vec![DeviceConfig::tesla_c2075(); *devices])
+                    .pool_cutoff(Some(16_384));
+            }
+            let engine = b.build().map_err(|e| format!("{e:#}"))?;
+            // Prod is host-only territory: the fleet's f64 embedding
+            // cannot reproduce i32 wrapping products.
+            let ops: &[Op] =
+                if *pooled { &[Op::Sum, Op::Min, Op::Max] } else { &Op::ALL };
+            for &op in ops {
+                let r = engine.reduce(ints).op(op).run().map_err(|e| format!("{e:#}"))?;
+                let want = scalar::reduce(ints, op);
+                if r.value != want {
+                    return Err(format!("{op}: engine {:?} != scalar {want}", r.value));
+                }
+                let sharded = *pooled && ints.len() >= 16_384;
+                if sharded != matches!(r.path, parred::ExecPath::Sharded { .. }) {
+                    return Err(format!("{op}: unexpected path {:?} at n={}", r.path, ints.len()));
+                }
+            }
+            let r = engine.reduce(floats).run().map_err(|e| format!("{e:#}"))?;
+            let want = kahan::sum_f64(floats);
+            let l1: f64 = floats.iter().map(|&x| x.abs() as f64).sum();
+            if (r.value as f64 - want).abs() > 1e-5 * l1.max(1.0) {
+                return Err(format!("f32 sum: engine {} vs Neumaier {want}", r.value));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_engine_segments_match_per_segment_oracle() {
+    use parred::Engine;
+
+    // Segmented reductions against a per-segment scalar oracle, with
+    // boundary-biased ragged shapes: empty segments, single elements,
+    // and segments crossing the (tiny, pinned) fleet knee.
+    check(
+        "engine reduce_segments == per-segment oracle",
+        10,
+        |rng| {
+            let segs = rng.range(0, 12);
+            let lens: Vec<usize> = (0..segs)
+                .map(|_| match rng.below(5) {
+                    0 => 0,
+                    1 => 1,
+                    2 => rng.range(2, 100),
+                    3 => rng.range(100, 8_192),
+                    _ => rng.range(8_192, 40_000),
+                })
+                .collect();
+            let n: usize = lens.iter().sum();
+            let pooled = rng.below(2) == 0;
+            (rng.i32_vec(n, -500, 500), rng.f32_vec(n, -1.0, 1.0), lens, pooled)
+        },
+        |(ints, floats, lens, pooled)| {
+            let mut offsets = vec![0usize];
+            for l in lens {
+                offsets.push(offsets.last().unwrap() + l);
+            }
+            let mut b = Engine::builder().host_workers(4);
+            if *pooled {
+                b = b
+                    .fleet(vec![DeviceConfig::tesla_c2075(); 2])
+                    .pool_cutoff(Some(16_384));
+            }
+            let engine = b.build().map_err(|e| format!("{e:#}"))?;
+            let ops: &[Op] =
+                if *pooled { &[Op::Sum, Op::Min, Op::Max] } else { &Op::ALL };
+            for &op in ops {
+                let r = engine
+                    .reduce_segments(ints, &offsets)
+                    .op(op)
+                    .run()
+                    .map_err(|e| format!("{e:#}"))?;
+                if r.value.len() != lens.len() {
+                    let (got, want) = (r.value.len(), lens.len());
+                    return Err(format!("{op}: {got} values for {want} segments"));
+                }
+                for (s, w) in offsets.windows(2).enumerate() {
+                    let want = scalar::reduce(&ints[w[0]..w[1]], op);
+                    if r.value[s] != want {
+                        return Err(format!("{op}: segment {s} engine {} != {want}", r.value[s]));
+                    }
+                }
+            }
+            let r = engine
+                .reduce_segments(floats, &offsets)
+                .run()
+                .map_err(|e| format!("{e:#}"))?;
+            for (s, w) in offsets.windows(2).enumerate() {
+                let seg = &floats[w[0]..w[1]];
+                let want = kahan::sum_f64(seg);
+                let l1: f64 = seg.iter().map(|&x| x.abs() as f64).sum();
+                if (r.value[s] as f64 - want).abs() > 1e-5 * l1.max(1.0) {
+                    return Err(format!("segment {s}: {} vs Neumaier {want}", r.value[s]));
+                }
             }
             Ok(())
         },
