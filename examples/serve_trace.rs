@@ -67,8 +67,9 @@ fn main() -> anyhow::Result<()> {
 
     // The same fleet, driven directly through the Engine facade (the
     // front door the service itself uses): one scalar reduction that
-    // shards, and a segmented workload whose large segment goes to
-    // the fleet while the small ones fuse on the host.
+    // shards, and a segmented workload whose total sits past the pool
+    // knee — so every segment (empty and tiny ones included) executes
+    // in ONE fleet wave (ExecPath::SegmentedPool).
     let engine = Engine::builder()
         .host_workers(0)
         .fleet_spec("TeslaC2075*2,G80")?

@@ -1,0 +1,152 @@
+//! `cargo bench --bench segmented` — the one-pass segmented fleet
+//! rung vs its host alternatives at the RedFuser workload shape: many
+//! small CSR segments (10k × ~512 elements; `PARRED_BENCH_FAST=1`
+//! shrinks to 2k segments for CI smoke).
+//!
+//! Three strategies over the same ragged workload on a 4×TeslaC2075
+//! model:
+//!
+//! * **per-segment host loop** — one full-width host pass per segment
+//!   (the naive fallback the segmented rung replaces); measured host
+//!   wall plus the scheduler's own modeled cost
+//!   (`segments × full-width overhead + bytes / host throughput`);
+//! * **fused host pass** — every segment in one persistent-runtime
+//!   pass (`ExecPath::Segmented`); measured host wall;
+//! * **one fleet pass** — every segment's pieces in one steal-queue
+//!   wave (`ExecPath::SegmentedPool`); modeled fleet wall.
+//!
+//! The acceptance gate: the fleet pass beats the per-segment host
+//! loop by ≥ 2× modeled wall. Results (plus a keyed group-by run over
+//! the same payload) land machine-readably in `BENCH_segmented.json`
+//! (path override: `PARRED_SEG_JSON`) for the CI artifact.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use parred::gpusim::DeviceConfig;
+use parred::reduce::{persistent, scalar, simd, Op};
+use parred::sched::model;
+use parred::util::bench::fmt_time;
+use parred::util::json::Json;
+use parred::util::rng::Rng;
+use parred::{Engine, ExecPath};
+
+fn main() {
+    let fast = std::env::var("PARRED_BENCH_FAST").as_deref() == Ok("1");
+    let segments = if fast { 2_000 } else { 10_000 };
+    let mut rng = Rng::new(42);
+
+    // Ragged offsets: ~512 elements per segment, jittered, with a few
+    // empties sprinkled in (every 97th segment).
+    let mut offsets = vec![0usize];
+    for s in 0..segments {
+        let len = if s % 97 == 0 { 0 } else { rng.range(256, 768) };
+        offsets.push(offsets.last().unwrap() + len);
+    }
+    let n = *offsets.last().unwrap();
+    let data = rng.i32_vec(n, -500, 500);
+    let oracle: Vec<i32> =
+        offsets.windows(2).map(|w| scalar::reduce(&data[w[0]..w[1]], Op::Sum)).collect();
+
+    let engine = Engine::builder()
+        .host_workers(0)
+        .fleet(vec![DeviceConfig::tesla_c2075(); 4])
+        .build()
+        .expect("pooled engine");
+
+    // --- a) per-segment host loop (the naive fallback) ---
+    let t0 = Instant::now();
+    let loop_vals: Vec<i32> =
+        offsets.windows(2).map(|w| simd::reduce(&data[w[0]..w[1]], Op::Sum)).collect();
+    let host_loop_wall = t0.elapsed().as_secs_f64();
+    assert_eq!(loop_vals, oracle);
+    // The scheduler's modeled cost of that loop: one full-width pass
+    // per segment (cold-start priors; see sched::model).
+    let bytes = 4.0 * n as f64;
+    let host_loop_modeled =
+        segments as f64 * model::FULL_OVERHEAD_S + bytes / model::FULL_BYTES_PER_S;
+
+    // --- b) fused host pass (ExecPath::Segmented's small-segment engine) ---
+    let ranges: Vec<(usize, usize)> = offsets.windows(2).map(|w| (w[0], w[1])).collect();
+    let workers = std::thread::available_parallelism().map_or(4, |x| x.get());
+    let t0 = Instant::now();
+    let fused_vals = persistent::global().reduce_ranges_width(&data, &ranges, Op::Sum, workers);
+    let host_fused_wall = t0.elapsed().as_secs_f64();
+    assert_eq!(fused_vals, oracle);
+
+    // --- c) ONE fleet pass over every segment ---
+    let t0 = Instant::now();
+    let r = engine.reduce_segments(&data, &offsets).op(Op::Sum).run().expect("fleet pass");
+    let fleet_wall = t0.elapsed().as_secs_f64();
+    assert_eq!(
+        r.path,
+        ExecPath::SegmentedPool { segments, devices: 4 },
+        "the scheduler must route this workload to the one-pass fleet rung"
+    );
+    assert_eq!(r.value, oracle, "fleet pass must stay bit-identical to the scalar oracle");
+
+    println!(
+        "segmented workload: {segments} segments, {n} i32 elements ({} non-empty)",
+        offsets.windows(2).filter(|w| w[1] > w[0]).count()
+    );
+    println!(
+        "  per-segment host loop: host {}  (modeled {})",
+        fmt_time(host_loop_wall),
+        fmt_time(host_loop_modeled)
+    );
+    println!("  fused host pass:       host {}", fmt_time(host_fused_wall));
+    println!(
+        "  one fleet pass:        modeled {}  ({} tasks, {} steals; host sim {})",
+        fmt_time(r.modeled_wall_s),
+        r.shards,
+        r.steals,
+        fmt_time(fleet_wall)
+    );
+    let speedup = host_loop_modeled / r.modeled_wall_s;
+    println!(
+        "  fleet pass vs per-segment host loop: {speedup:.2}x modeled ({} -> {})",
+        fmt_time(host_loop_modeled),
+        fmt_time(r.modeled_wall_s)
+    );
+    assert!(
+        speedup >= 2.0,
+        "one fleet pass must beat the per-segment host loop by >= 2x modeled wall, got {speedup:.2}x"
+    );
+
+    // --- keyed group-by over the same payload (10k-ish groups) ---
+    let distinct = (segments / 2).max(1);
+    let keys: Vec<i64> = (0..n).map(|_| rng.range(0, distinct - 1) as i64).collect();
+    let t0 = Instant::now();
+    let k = engine.reduce_by_key(&keys, &data).op(Op::Sum).run().expect("keyed pass");
+    let keyed_wall = t0.elapsed().as_secs_f64();
+    let groups = k.value.len();
+    println!(
+        "  keyed group-by ({distinct} keys -> {groups} groups): path={:?} modeled {} (host {})",
+        k.path,
+        fmt_time(k.modeled_wall_s),
+        fmt_time(keyed_wall)
+    );
+
+    // --- machine-readable trajectory for CI ---
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str("segmented".to_string()));
+    root.insert("segments".to_string(), Json::Num(segments as f64));
+    root.insert("elements".to_string(), Json::Num(n as f64));
+    root.insert("devices".to_string(), Json::Num(4.0));
+    root.insert("host_loop_wall_s".to_string(), Json::Num(host_loop_wall));
+    root.insert("host_loop_modeled_s".to_string(), Json::Num(host_loop_modeled));
+    root.insert("host_fused_wall_s".to_string(), Json::Num(host_fused_wall));
+    root.insert("fleet_modeled_wall_s".to_string(), Json::Num(r.modeled_wall_s));
+    root.insert("fleet_tasks".to_string(), Json::Num(r.shards as f64));
+    root.insert("fleet_steals".to_string(), Json::Num(r.steals as f64));
+    root.insert("fleet_host_sim_wall_s".to_string(), Json::Num(fleet_wall));
+    root.insert("speedup_vs_host_loop_modeled".to_string(), Json::Num(speedup));
+    root.insert("keyed_groups".to_string(), Json::Num(groups as f64));
+    root.insert("keyed_modeled_wall_s".to_string(), Json::Num(k.modeled_wall_s));
+    let path =
+        std::env::var("PARRED_SEG_JSON").unwrap_or_else(|_| "BENCH_segmented.json".to_string());
+    match std::fs::write(&path, format!("{}\n", Json::Obj(root))) {
+        Ok(()) => eprintln!("(wrote {path})"),
+        Err(e) => eprintln!("(could not write {path}: {e})"),
+    }
+}

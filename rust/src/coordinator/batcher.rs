@@ -20,13 +20,22 @@
 //! Fused batches (host or pool) flush at the window deadline or as
 //! soon as their cap fills, whichever comes first, and carry no
 //! padding (`exec_rows == requests.len()`).
+//!
+//! Keyed (group-by) requests have their own queue, [`KeyedBatcher`]:
+//! same-`(op, dtype)` keyed requests fuse into **one** segmented pass
+//! (each request grouped independently, all groups concatenated into
+//! one CSR offsets list), flushing on the same window/cap policy —
+//! by-key fusion, the keyed analogue of [`KeyPolicy::FuseHost`] /
+//! [`KeyPolicy::FusePool`]: whether the fused pass lands on the host
+//! or the fleet is the scheduler's segmented decision at flush time.
 
 use std::collections::HashMap;
 use std::time::{Duration, Instant};
 
+use crate::reduce::op::{Dtype, Op};
 use crate::reduce::plan::ShapeKey;
 
-use super::request::Request;
+use super::request::{KeyedRequest, Request};
 use super::router::Router;
 
 /// How a shape key's queue is allowed to flush.
@@ -247,6 +256,104 @@ impl Batcher {
     }
 }
 
+/// The fusion key of a keyed request: keyed payloads fuse across
+/// requests of the same op and dtype (unlike scalar fusion, payload
+/// length does not matter — groups concatenate into one CSR list).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct KeyedKey {
+    pub op: Op,
+    pub dtype: Dtype,
+}
+
+/// A flushed batch of keyed requests ready for one fused segmented
+/// pass (no padding; a batch of one executes directly).
+#[derive(Debug)]
+pub struct FlushedKeyedBatch {
+    pub key: KeyedKey,
+    pub requests: Vec<KeyedRequest>,
+}
+
+/// Default cap on fused keyed batches: grouping is O(n log n) host
+/// work per request either way, so the cap only bounds the fused
+/// pass's concatenated payload.
+pub const KEYED_FUSE_MAX_DEFAULT: usize = 16;
+
+/// Per-`(op, dtype)` FIFO queues of keyed requests with the same
+/// window/cap flush policy the fused scalar queues use.
+pub struct KeyedBatcher {
+    window: Duration,
+    /// Largest fused keyed batch (0 disables fusion: every flush is a
+    /// batch of one at the window deadline).
+    cap: usize,
+    queues: HashMap<KeyedKey, Vec<KeyedRequest>>,
+}
+
+impl KeyedBatcher {
+    pub fn new(window: Duration) -> Self {
+        KeyedBatcher::with_cap(window, KEYED_FUSE_MAX_DEFAULT)
+    }
+
+    /// Override the fusion cap (0 disables fusion but still flushes
+    /// singletons at the window deadline).
+    pub fn with_cap(window: Duration, cap: usize) -> Self {
+        KeyedBatcher { window, cap, queues: HashMap::new() }
+    }
+
+    /// Queue depth across all keys.
+    pub fn queued(&self) -> usize {
+        self.queues.values().map(|q| q.len()).sum()
+    }
+
+    /// Enqueue a keyed request under its `(op, dtype)` key.
+    pub fn push(&mut self, req: KeyedRequest) {
+        let key = KeyedKey { op: req.op, dtype: req.dtype() };
+        self.queues.entry(key).or_default().push(req);
+    }
+
+    /// Collect batches ready at `now`: a queue flushes as soon as it
+    /// reaches the cap, or whatever is queued once its oldest request
+    /// has waited out the window. FIFO order within a key is
+    /// preserved.
+    pub fn flush_ready(&mut self, now: Instant) -> Vec<FlushedKeyedBatch> {
+        let mut out = Vec::new();
+        let take_cap = self.cap.max(1);
+        for (key, queue) in self.queues.iter_mut() {
+            loop {
+                let expired = queue
+                    .first()
+                    .is_some_and(|r| now.duration_since(r.t_enqueue) >= self.window);
+                if (self.cap > 0 && queue.len() >= self.cap) || expired {
+                    let take = queue.len().min(take_cap);
+                    let batch: Vec<KeyedRequest> = queue.drain(..take).collect();
+                    out.push(FlushedKeyedBatch { key: *key, requests: batch });
+                } else {
+                    break;
+                }
+            }
+        }
+        self.queues.retain(|_, q| !q.is_empty());
+        out
+    }
+
+    /// Deadline of the oldest queued request, if any.
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.queues
+            .values()
+            .filter_map(|q| q.first())
+            .map(|r| r.t_enqueue + self.window)
+            .min()
+    }
+
+    /// Drain everything unconditionally (shutdown path).
+    pub fn drain_all(&mut self) -> Vec<KeyedRequest> {
+        let mut out = Vec::new();
+        for (_, mut q) in self.queues.drain() {
+            out.append(&mut q);
+        }
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -422,6 +529,66 @@ mod tests {
             b.push(req(i, 100, t));
         }
         assert_eq!(b.drain_all().len(), 3);
+        assert_eq!(b.queued(), 0);
+    }
+
+    fn keyed_req(id: u64, op: Op, n: usize, t: Instant) -> super::KeyedRequest {
+        let (tx, _rx) = std::sync::mpsc::channel();
+        std::mem::forget(_rx);
+        super::KeyedRequest {
+            id,
+            op,
+            keys: (0..n as i64).map(|i| i % 3).collect(),
+            values: HostVec::F32(vec![1.0; n]),
+            t_enqueue: t,
+            reply: tx,
+        }
+    }
+
+    #[test]
+    fn keyed_batches_fuse_per_op_dtype_at_window_and_cap() {
+        let mut b = KeyedBatcher::with_cap(Duration::from_millis(10), 3);
+        let t = Instant::now();
+        // Five sum requests and one max: distinct fusion keys.
+        for i in 0..5 {
+            b.push(keyed_req(i, Op::Sum, 100, t));
+        }
+        b.push(keyed_req(9, Op::Max, 100, t));
+        // The sum queue hits the cap immediately; max waits.
+        let flushed = b.flush_ready(t);
+        assert_eq!(flushed.len(), 1);
+        assert_eq!(flushed[0].key, KeyedKey { op: Op::Sum, dtype: Dtype::F32 });
+        assert_eq!(flushed[0].requests.len(), 3);
+        let ids: Vec<u64> = flushed[0].requests.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 2], "FIFO within a key");
+        assert_eq!(b.queued(), 3);
+        // After the window everything flushes, still keyed apart.
+        let flushed = b.flush_ready(t + Duration::from_millis(11));
+        assert_eq!(flushed.len(), 2);
+        assert_eq!(b.queued(), 0);
+    }
+
+    #[test]
+    fn keyed_cap_zero_still_flushes_singletons_at_deadline() {
+        let mut b = KeyedBatcher::with_cap(Duration::from_millis(5), 0);
+        let t = Instant::now();
+        b.push(keyed_req(0, Op::Sum, 10, t));
+        b.push(keyed_req(1, Op::Sum, 10, t));
+        assert!(b.flush_ready(t).is_empty(), "cap 0 never flushes early");
+        let flushed = b.flush_ready(t + Duration::from_millis(6));
+        assert_eq!(flushed.len(), 2, "deadline flushes one request per batch");
+        assert!(flushed.iter().all(|f| f.requests.len() == 1));
+        assert_eq!(b.next_deadline(), None);
+    }
+
+    #[test]
+    fn keyed_drain_and_deadline() {
+        let mut b = KeyedBatcher::new(Duration::from_millis(10));
+        let t = Instant::now();
+        b.push(keyed_req(0, Op::Sum, 10, t));
+        b.push(keyed_req(1, Op::Min, 10, t + Duration::from_millis(2)));
+        assert_eq!(b.next_deadline(), Some(t + Duration::from_millis(10)));
+        assert_eq!(b.drain_all().len(), 2);
         assert_eq!(b.queued(), 0);
     }
 }

@@ -20,6 +20,7 @@ pub struct Metrics {
     pub lat_host: Histogram,
     pub lat_host_fused: Histogram,
     pub lat_pool_fused: Histogram,
+    pub lat_keyed: Histogram,
     /// Rows executed vs rows carrying real requests (padding waste).
     pub rows_executed: u64,
     pub rows_useful: u64,
@@ -33,6 +34,13 @@ pub struct Metrics {
     /// sharded requests stacked into one fleet pass) and their rows.
     pub pool_fused_batches: u64,
     pub pool_fused_rows: u64,
+    /// Keyed (group-by) requests served, and by-key fusion counters:
+    /// same-`(op, dtype)` keyed requests fused into one segmented
+    /// pass, and the groups those batches carried.
+    pub keyed_requests: u64,
+    pub keyed_fused_batches: u64,
+    pub keyed_fused_requests: u64,
+    pub keyed_fused_groups: u64,
     /// Requests served by the device pool, and the pool's lifetime
     /// queue counters (snapshotted at shutdown from
     /// [`crate::pool::DevicePool::counters`]).
@@ -63,6 +71,7 @@ impl Default for Metrics {
             lat_host: Histogram::new(),
             lat_host_fused: Histogram::new(),
             lat_pool_fused: Histogram::new(),
+            lat_keyed: Histogram::new(),
             rows_executed: 0,
             rows_useful: 0,
             batches: 0,
@@ -71,6 +80,10 @@ impl Default for Metrics {
             fused_rows: 0,
             pool_fused_batches: 0,
             pool_fused_rows: 0,
+            keyed_requests: 0,
+            keyed_fused_batches: 0,
+            keyed_fused_requests: 0,
+            keyed_fused_groups: 0,
             sharded_requests: 0,
             pool_tasks: 0,
             pool_steals: 0,
@@ -103,10 +116,17 @@ impl Metrics {
                 self.sharded_requests += 1;
                 self.lat_pool_fused.record(latency_s);
             }
-            // Segmented runs are an engine-level path (the coordinator
-            // serves scalar requests); bucketed with host latencies if
-            // one ever flows through.
+            // Segmented host runs ride the host bucket; the one-pass
+            // fleet rung counts with the other fleet executions.
             ExecPath::Segmented { .. } => self.lat_host.record(latency_s),
+            ExecPath::SegmentedPool { .. } => {
+                self.sharded_requests += 1;
+                self.lat_sharded.record(latency_s);
+            }
+            ExecPath::Keyed { .. } => {
+                self.keyed_requests += 1;
+                self.lat_keyed.record(latency_s);
+            }
             ExecPath::Host => self.lat_host.record(latency_s),
         }
     }
@@ -127,6 +147,15 @@ impl Metrics {
     pub fn record_pool_fused(&mut self, rows: usize) {
         self.pool_fused_batches += 1;
         self.pool_fused_rows += rows as u64;
+    }
+
+    /// Account one fused keyed batch of `requests` requests carrying
+    /// `groups` groups in total.
+    pub fn record_keyed_fused(&mut self, requests: usize, groups: usize) {
+        debug_assert!(requests > 1, "a keyed batch of one is not fusion");
+        self.keyed_fused_batches += 1;
+        self.keyed_fused_requests += requests as u64;
+        self.keyed_fused_groups += groups as u64;
     }
 
     /// Snapshot the device pool's queue counters into the report.
@@ -198,6 +227,15 @@ impl Metrics {
                 self.pool_fused_rows as f64 / self.pool_fused_batches as f64
             ));
         }
+        if self.keyed_requests > 0 || self.keyed_fused_batches > 0 {
+            s.push_str(&format!(
+                "keyed: requests={} fused_batches={} fused_requests={} groups={}\n",
+                self.keyed_requests,
+                self.keyed_fused_batches,
+                self.keyed_fused_requests,
+                self.keyed_fused_groups
+            ));
+        }
         if self.sharded_requests > 0 || self.pool_tasks > 0 {
             s.push_str(&format!(
                 "pool: sharded_requests={} tasks={} steals={} peak_depth={}\n",
@@ -218,6 +256,7 @@ impl Metrics {
         s.push_str(&format!("latency (sharded):      {}\n", self.lat_sharded.summary()));
         s.push_str(&format!("latency (pool fused):   {}\n", self.lat_pool_fused.summary()));
         s.push_str(&format!("latency (host fused):   {}\n", self.lat_host_fused.summary()));
+        s.push_str(&format!("latency (keyed):        {}\n", self.lat_keyed.summary()));
         s.push_str(&format!("latency (host):         {}\n", self.lat_host.summary()));
         s
     }
@@ -235,17 +274,41 @@ mod tests {
         m.record(ExecPath::Sharded { devices: 4 }, 3e-3, true, 100);
         m.record(ExecPath::HostFused { batch: 6 }, 4e-4, true, 100);
         m.record(ExecPath::PoolFused { batch: 3, devices: 4 }, 6e-4, true, 100);
+        m.record(ExecPath::SegmentedPool { segments: 10, devices: 4 }, 7e-4, true, 100);
+        m.record(ExecPath::Keyed { groups: 3 }, 8e-4, true, 100);
         m.record(ExecPath::Host, 5e-4, false, 100);
-        assert_eq!(m.completed, 5);
+        assert_eq!(m.completed, 7);
         assert_eq!(m.failed, 1);
         assert_eq!(m.lat_full.count(), 1);
         assert_eq!(m.lat_batched.count(), 1);
-        assert_eq!(m.lat_sharded.count(), 1);
+        assert_eq!(m.lat_sharded.count(), 2, "sharded + segmented-pool share the fleet bucket");
         assert_eq!(m.lat_host_fused.count(), 1);
         assert_eq!(m.lat_pool_fused.count(), 1);
+        assert_eq!(m.lat_keyed.count(), 1);
         assert_eq!(m.lat_host.count(), 1);
-        assert_eq!(m.sharded_requests, 2, "direct + pool-fused requests both count");
-        assert_eq!(m.elements_reduced, 600);
+        assert_eq!(
+            m.sharded_requests,
+            3,
+            "direct, pool-fused and segmented-pool requests all count"
+        );
+        assert_eq!(m.keyed_requests, 1);
+        assert_eq!(m.elements_reduced, 800);
+    }
+
+    #[test]
+    fn keyed_counters_render() {
+        let mut m = Metrics::default();
+        m.record(ExecPath::Keyed { groups: 4 }, 1e-3, true, 50);
+        m.record_keyed_fused(3, 12);
+        assert_eq!(m.keyed_requests, 1);
+        assert_eq!(m.keyed_fused_batches, 1);
+        assert_eq!(m.keyed_fused_requests, 3);
+        assert_eq!(m.keyed_fused_groups, 12);
+        let r = m.report();
+        assert!(
+            r.contains("keyed: requests=1 fused_batches=1 fused_requests=3 groups=12"),
+            "{r}"
+        );
     }
 
     #[test]

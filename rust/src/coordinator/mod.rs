@@ -14,7 +14,11 @@
 //! fuse into one persistent-pool `reduce_rows` pass
 //! (`ExecPath::HostFused`), and everything else runs on the host
 //! reduction library ([`crate::reduce`]) — the service is total over
-//! request shapes.
+//! request shapes. Keyed (group-by) requests enter via
+//! [`service::Service::submit_by_key`] and fuse per `(op, dtype)`
+//! into one segmented pass ([`batcher::KeyedBatcher`], by-key
+//! fusion), which the scheduler's segmented decision places on the
+//! host or as one fleet wave.
 
 pub mod backpressure;
 pub mod batcher;
@@ -23,6 +27,6 @@ pub mod request;
 pub mod router;
 pub mod service;
 
-pub use request::{ExecPath, Request, Response};
+pub use request::{ExecPath, KeyedRequest, KeyedResponse, Request, Response};
 pub use router::{Route, Router};
 pub use service::{PoolServeConfig, Service, ServiceConfig};

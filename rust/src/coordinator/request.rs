@@ -48,6 +48,41 @@ pub struct Response {
     pub latency_s: f64,
 }
 
+/// A keyed (group-by) reduction request entering the coordinator:
+/// one key per payload element, one reduced value per distinct key
+/// (served through [`crate::engine::Engine::reduce_by_key`]).
+#[derive(Debug)]
+pub struct KeyedRequest {
+    pub id: RequestId,
+    pub op: Op,
+    /// The key column (`keys.len() == values.len()`; validated at
+    /// submit time).
+    pub keys: Vec<i64>,
+    pub values: HostVec,
+    /// Enqueue timestamp (latency accounting).
+    pub t_enqueue: Instant,
+    /// Where to deliver the response.
+    pub reply: std::sync::mpsc::Sender<KeyedResponse>,
+}
+
+impl KeyedRequest {
+    pub fn dtype(&self) -> Dtype {
+        self.values.dtype()
+    }
+}
+
+/// The coordinator's answer to a keyed request.
+#[derive(Debug, Clone)]
+pub struct KeyedResponse {
+    pub id: RequestId,
+    /// One `(key, value)` pair per distinct key, ascending by key —
+    /// or the error.
+    pub groups: Result<Vec<(i64, HostScalar)>, String>,
+    pub path: ExecPath,
+    /// Queue + execute latency, seconds.
+    pub latency_s: f64,
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

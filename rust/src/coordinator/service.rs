@@ -21,7 +21,7 @@ use anyhow::{anyhow, Context, Result};
 
 use crate::engine::{resolve_device, Engine};
 use crate::gpusim::DeviceConfig;
-use crate::reduce::op::{Dtype, Element, Op};
+use crate::reduce::op::{Dtype, Element, Op, TypedElement};
 use crate::reduce::persistent;
 use crate::reduce::plan::ShapeKey;
 use crate::runtime::literal::{HostScalar, HostVec};
@@ -30,9 +30,9 @@ use crate::util::rng::Rng;
 use crate::util::stats::Histogram;
 
 use super::backpressure::Gate;
-use super::batcher::{BatchKind, Batcher, FlushedBatch, KeyPolicy};
+use super::batcher::{BatchKind, Batcher, FlushedBatch, FlushedKeyedBatch, KeyPolicy, KeyedBatcher};
 use super::metrics::Metrics;
-use super::request::{ExecPath, Request, Response};
+use super::request::{ExecPath, KeyedRequest, KeyedResponse, Request, Response};
 use super::router::{Route, Router};
 
 /// Fleet-spec parsing lives with the engine now; re-exported so CLI
@@ -124,6 +124,7 @@ impl Default for ServiceConfig {
 
 enum Msg {
     Req(Request),
+    Keyed(KeyedRequest),
     Shutdown,
 }
 
@@ -179,6 +180,42 @@ impl Service {
         self.tx.send(Msg::Req(req)).map_err(|_| anyhow!("service stopped"))?;
         // Ownership of the slot transfers to the executor, which
         // releases it via `Gate::release_transferred` in `respond`.
+        permit.transfer();
+        Ok(reply_rx)
+    }
+
+    /// Submit a keyed (group-by) reduction: one key per value, one
+    /// reduced value per distinct key. Concurrent same-`(op, dtype)`
+    /// keyed requests fuse into one segmented pass at flush time
+    /// (by-key fusion). Returns the response channel, or an error on
+    /// a key/value length mismatch, overload, or a stopped service.
+    pub fn submit_by_key(
+        &self,
+        op: Op,
+        keys: Vec<i64>,
+        values: HostVec,
+    ) -> Result<Receiver<KeyedResponse>> {
+        if keys.len() != values.len() {
+            return Err(anyhow!(
+                "reduce_by_key needs one key per value ({} keys, {} values)",
+                keys.len(),
+                values.len()
+            ));
+        }
+        let permit = self
+            .gate
+            .try_acquire()
+            .ok_or_else(|| anyhow!("overloaded: {} requests in flight", self.gate.in_flight()))?;
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let req = KeyedRequest {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            op,
+            keys,
+            values,
+            t_enqueue: Instant::now(),
+            reply: reply_tx,
+        };
+        self.tx.send(Msg::Keyed(req)).map_err(|_| anyhow!("service stopped"))?;
         permit.transfer();
         Ok(reply_rx)
     }
@@ -284,6 +321,9 @@ fn executor_loop(
     let sched = engine.scheduler().clone();
     let router = Router::with_scheduler(runtime.catalog().clone(), sched.clone());
     let mut batcher = Batcher::new(cfg.batch_window);
+    // Keyed requests queue separately (by-key fusion: same-(op, dtype)
+    // keyed requests fuse into one segmented pass on the same window).
+    let mut keyed = KeyedBatcher::new(cfg.batch_window);
 
     let handle_req = |req: Request, batcher: &mut Batcher, metrics: &mut Metrics| {
         match router.route(req.shape_key()) {
@@ -333,27 +373,34 @@ fn executor_loop(
 
     let mut running = true;
     while running {
-        // Wait for work, but never past the oldest batch deadline.
-        let timeout = batcher
-            .next_deadline()
+        // Wait for work, but never past the oldest batch deadline
+        // (scalar or keyed queue, whichever expires first).
+        let deadline = match (batcher.next_deadline(), keyed.next_deadline()) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        };
+        let timeout = deadline
             .map(|d| d.saturating_duration_since(Instant::now()))
             .unwrap_or(Duration::from_millis(50));
         match rx.recv_timeout(timeout) {
-            Ok(Msg::Req(req)) => {
-                handle_req(req, &mut batcher, &mut metrics);
-                // Opportunistically drain queued messages before
-                // flushing, so bursts batch well.
-                while let Ok(msg) = rx.try_recv() {
+            Ok(Msg::Shutdown) => running = false,
+            Ok(first) => {
+                // Process the first message, then opportunistically
+                // drain queued ones before flushing, so bursts batch
+                // well.
+                let mut pending = Some(first);
+                while let Some(msg) = pending.take() {
                     match msg {
                         Msg::Req(req) => handle_req(req, &mut batcher, &mut metrics),
+                        Msg::Keyed(req) => keyed.push(req),
                         Msg::Shutdown => {
                             running = false;
                             break;
                         }
                     }
+                    pending = rx.try_recv().ok();
                 }
             }
-            Ok(Msg::Shutdown) => running = false,
             Err(RecvTimeoutError::Timeout) => {}
             Err(RecvTimeoutError::Disconnected) => running = false,
         }
@@ -376,6 +423,9 @@ fn executor_loop(
                 }
             }
         }
+        for batch in keyed.flush_ready(now) {
+            exec_engine_keyed_fused(&engine, &gate, batch, &mut metrics);
+        }
     }
 
     // Drain: everything still queued executes unbatched.
@@ -384,6 +434,9 @@ fn executor_loop(
             Route::Full { artifact } => exec_full(&runtime, &gate, &artifact, req, &mut metrics),
             _ => exec_engine(&engine, &gate, req, &mut metrics),
         }
+    }
+    for req in keyed.drain_all() {
+        exec_engine_keyed(&engine, &gate, req, &mut metrics);
     }
     if let Some(path) = &cfg.sched_snapshot {
         if let Err(e) = std::fs::write(path, sched.snapshot_json()) {
@@ -540,6 +593,169 @@ fn exec_engine_fused(engine: &Engine, gate: &Gate, batch: FlushedBatch, metrics:
             let msg = format!("{e:#}");
             for req in batch.requests {
                 respond(gate, req, Err(msg.clone()), path, metrics);
+            }
+        }
+    }
+}
+
+fn respond_keyed(
+    gate: &Gate,
+    req: KeyedRequest,
+    groups: Result<Vec<(i64, HostScalar)>, String>,
+    path: ExecPath,
+    metrics: &mut Metrics,
+) {
+    let latency = req.t_enqueue.elapsed().as_secs_f64();
+    let ok = groups.is_ok();
+    let elements = req.values.len();
+    let _ = req.reply.send(KeyedResponse { id: req.id, groups, path, latency_s: latency });
+    gate.release_transferred();
+    metrics.record(path, latency, ok, elements);
+}
+
+/// Execute one keyed request through the engine's by-key front door
+/// (grouping + the segmented rung the scheduler picks).
+fn exec_engine_keyed(engine: &Engine, gate: &Gate, req: KeyedRequest, metrics: &mut Metrics) {
+    let result: Result<(Vec<(i64, HostScalar)>, ExecPath)> = match &req.values {
+        HostVec::F32(v) => engine
+            .reduce_by_key(&req.keys, v)
+            .op(req.op)
+            .run()
+            .map(|r| (r.value.into_iter().map(|(k, x)| (k, HostScalar::F32(x))).collect(), r.path)),
+        HostVec::I32(v) => engine
+            .reduce_by_key(&req.keys, v)
+            .op(req.op)
+            .run()
+            .map(|r| (r.value.into_iter().map(|(k, x)| (k, HostScalar::I32(x))).collect(), r.path)),
+    };
+    match result {
+        Ok((groups, path)) => respond_keyed(gate, req, Ok(groups), path, metrics),
+        Err(e) => {
+            let path = ExecPath::Keyed { groups: 0 };
+            respond_keyed(gate, req, Err(format!("{e:#}")), path, metrics);
+        }
+    }
+}
+
+/// Execute a fused keyed batch: every request is grouped
+/// independently (stable sort by key), the grouped buffers
+/// concatenate into **one** CSR offsets list, and a single segmented
+/// pass reduces every group of every request — by-key fusion, with
+/// the scheduler's segmented decision picking host fusion or one
+/// fleet wave for the whole batch. Results are split back per
+/// request; a batch of one executes directly (no fusion claimed).
+fn exec_engine_keyed_fused(
+    engine: &Engine,
+    gate: &Gate,
+    batch: FlushedKeyedBatch,
+    metrics: &mut Metrics,
+) {
+    if batch.requests.len() == 1 {
+        let req = batch.requests.into_iter().next().expect("one request");
+        return exec_engine_keyed(engine, gate, req, metrics);
+    }
+    fn f32_slice(p: &HostVec) -> &[f32] {
+        match p {
+            HostVec::F32(v) => v,
+            HostVec::I32(_) => unreachable!("fusion key guarantees f32 payloads"),
+        }
+    }
+    fn i32_slice(p: &HostVec) -> &[i32] {
+        match p {
+            HostVec::I32(v) => v,
+            HostVec::F32(_) => unreachable!("fusion key guarantees i32 payloads"),
+        }
+    }
+    match batch.key.dtype {
+        Dtype::F32 => exec_keyed_fused_typed(
+            engine,
+            gate,
+            batch.key.op,
+            batch.requests,
+            f32_slice,
+            HostScalar::F32,
+            metrics,
+        ),
+        Dtype::I32 => exec_keyed_fused_typed(
+            engine,
+            gate,
+            batch.key.op,
+            batch.requests,
+            i32_slice,
+            HostScalar::I32,
+            metrics,
+        ),
+    }
+}
+
+fn exec_keyed_fused_typed<T: TypedElement>(
+    engine: &Engine,
+    gate: &Gate,
+    op: Op,
+    requests: Vec<KeyedRequest>,
+    extract: fn(&HostVec) -> &[T],
+    wrap: fn(T) -> HostScalar,
+    metrics: &mut Metrics,
+) {
+    // Group each request independently (groups must never merge
+    // across requests), concatenating into one CSR list. Stable sort
+    // — skipped entirely for already-sorted keys, mirroring the
+    // direct by-key path — so within a group, values keep input
+    // order, matching what `engine.reduce_by_key` computes.
+    let total_n: usize = requests.iter().map(|r| r.keys.len()).sum();
+    let mut data: Vec<T> = Vec::with_capacity(total_n);
+    let mut offsets: Vec<usize> = vec![0];
+    let mut group_keys: Vec<i64> = Vec::new();
+    let mut group_counts: Vec<usize> = Vec::with_capacity(requests.len());
+    for req in &requests {
+        let values = extract(&req.values);
+        let n = req.keys.len();
+        debug_assert_eq!(values.len(), n, "submit_by_key validates lengths");
+        let mut groups = 0usize;
+        if req.keys.windows(2).all(|w| w[0] <= w[1]) {
+            for (r, (&k, &v)) in req.keys.iter().zip(values).enumerate() {
+                if r == 0 || k != req.keys[r - 1] {
+                    offsets.push(*offsets.last().expect("offsets seeded with 0"));
+                    group_keys.push(k);
+                    groups += 1;
+                }
+                data.push(v);
+                *offsets.last_mut().expect("offsets non-empty") += 1;
+            }
+        } else {
+            let mut idx: Vec<usize> = (0..n).collect();
+            idx.sort_by_key(|&i| req.keys[i]);
+            for (r, &i) in idx.iter().enumerate() {
+                if r == 0 || req.keys[i] != req.keys[idx[r - 1]] {
+                    offsets.push(*offsets.last().expect("offsets seeded with 0"));
+                    group_keys.push(req.keys[i]);
+                    groups += 1;
+                }
+                data.push(values[i]);
+                *offsets.last_mut().expect("offsets non-empty") += 1;
+            }
+        }
+        group_counts.push(groups);
+    }
+    metrics.record_keyed_fused(requests.len(), group_keys.len());
+    // ONE segmented pass over every request's groups.
+    match engine.reduce_segments(&data, &offsets).op(op).run() {
+        Ok(r) => {
+            let mut g0 = 0usize;
+            for (req, groups) in requests.into_iter().zip(group_counts) {
+                let pairs: Vec<(i64, HostScalar)> = (g0..g0 + groups)
+                    .map(|gi| (group_keys[gi], wrap(r.value[gi])))
+                    .collect();
+                g0 += groups;
+                respond_keyed(gate, req, Ok(pairs), ExecPath::Keyed { groups }, metrics);
+            }
+        }
+        Err(e) => {
+            // Only a fleet pass can fail; every request in the batch
+            // shares the outcome.
+            let msg = format!("{e:#}");
+            for (req, groups) in requests.into_iter().zip(group_counts) {
+                respond_keyed(gate, req, Err(msg.clone()), ExecPath::Keyed { groups }, metrics);
             }
         }
     }

@@ -16,8 +16,14 @@
 //!   pass (persistent host rows or one fused fleet dispatch);
 //! * [`Engine::reduce_segments`] — **segmented** reduction over
 //!   ragged CSR-style offsets (the cascaded-reduction shape RedFuser
-//!   targets, PAPERS.md): small segments fuse into one persistent
-//!   pass, large ones go full-width or to the fleet, per segment.
+//!   targets, PAPERS.md): past the pool knee, or for numerous small
+//!   segments, **all** segments execute in one fleet pass
+//!   ([`ExecPath::SegmentedPool`]); otherwise small segments fuse
+//!   into one persistent pass and large ones go full-width;
+//! * [`Engine::reduce_by_key`] — **keyed** (group-by) reduction over
+//!   a key column: keys sort/group into CSR offsets and route
+//!   through the same segmented rung, one `(key, value)` pair per
+//!   distinct key.
 //!
 //! The serving layer ([`crate::coordinator`]) routes its host and
 //! fleet execution through an `Engine`; the legacy entry points
@@ -47,7 +53,7 @@ pub mod outcome;
 pub mod request;
 
 pub use outcome::{ExecPath, Reduced};
-pub use request::{ReduceBuilder, RowsBuilder, SegmentsBuilder};
+pub use request::{ByKeyBuilder, ReduceBuilder, RowsBuilder, SegmentsBuilder};
 
 /// Resolve one device name — custom models (from `--device-file`)
 /// first, then the built-in presets (shared by the CLI fleet-spec
@@ -305,6 +311,27 @@ impl Engine {
         offsets: &'d [usize],
     ) -> SegmentsBuilder<'e, 'd, T> {
         SegmentsBuilder::new(self, data, offsets)
+    }
+
+    /// Keyed (group-by) reduction over a key column:
+    /// `engine.reduce_by_key(&keys, &values).op(Op::Sum).run()` yields
+    /// one `(key, value)` pair per distinct key, in ascending key
+    /// order. Keys are stable-sorted and grouped into CSR offsets
+    /// (already-sorted inputs skip the permutation), then the groups
+    /// route through the same segmented rung as
+    /// [`Engine::reduce_segments`] — small groups fuse into one
+    /// persistent host pass, large or numerous groups run as one
+    /// fleet pass.
+    pub fn reduce_by_key<'e, 'd, K, T>(
+        &'e self,
+        keys: &'d [K],
+        values: &'d [T],
+    ) -> ByKeyBuilder<'e, 'd, K, T>
+    where
+        K: Copy + Ord + std::fmt::Debug,
+        T: TypedElement,
+    {
+        ByKeyBuilder::new(self, keys, values)
     }
 }
 

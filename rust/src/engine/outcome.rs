@@ -25,11 +25,23 @@ pub enum ExecPath {
     /// pass (`batch` rows across `devices` devices) — pool-aware
     /// dynamic batching.
     PoolFused { batch: usize, devices: usize },
-    /// Segmented (ragged) reduction: per-segment planning fused the
-    /// small segments into one persistent pass and sent the large
-    /// ones full-width or to the fleet
+    /// Segmented (ragged) reduction on the host ladder: per-segment
+    /// planning fused the small segments into one persistent pass and
+    /// ran the large ones full-width
     /// ([`crate::engine::Engine::reduce_segments`]).
     Segmented { segments: usize },
+    /// Segmented (ragged) reduction executed as **one** fleet pass:
+    /// every segment's pieces entered the steal queues as a single
+    /// wave across `devices` devices, with shard-order Neumaier
+    /// combines per segment
+    /// ([`crate::pool::DevicePool::reduce_segments_elems`]).
+    SegmentedPool { segments: usize, devices: usize },
+    /// Keyed (group-by) reduction: keys sorted/grouped into CSR
+    /// offsets, then routed through the segmented ladder
+    /// ([`crate::engine::Engine::reduce_by_key`]). Fleet statistics on
+    /// the [`Reduced`] outcome tell whether the groups ran as one
+    /// fleet pass or on the host.
+    Keyed { groups: usize },
     /// Host (threaded/sequential) fallback.
     Host,
 }

@@ -13,7 +13,7 @@ use anyhow::bail;
 use crate::reduce::op::{Element, Op, TypedElement};
 use crate::reduce::persistent;
 use crate::reduce::simd;
-use crate::sched::{Backend, Decision};
+use crate::sched::{Backend, Decision, SegmentedDecision};
 
 use super::outcome::{ExecPath, Reduced};
 use super::Engine;
@@ -179,6 +179,136 @@ impl<'e, 'd, T: TypedElement> RowsBuilder<'e, 'd, T> {
     }
 }
 
+/// Fleet statistics of one segmented execution, shared by the
+/// segments and by-key front doors.
+struct SegExec {
+    /// Whether the one-pass fleet rung ran (`ExecPath::SegmentedPool`).
+    fleet: bool,
+    devices: usize,
+    shards: usize,
+    steals: u64,
+    modeled_wall_s: f64,
+}
+
+/// Validate CSR `offsets` and execute every segment on the rung the
+/// scheduler picks: **one** fleet pass
+/// ([`crate::pool::DevicePool::reduce_segments_elems`]) when the
+/// segmented decision (or a `via_fleet` pin) says so, otherwise the
+/// per-segment host ladder (small segments fuse into one persistent
+/// pass, large ones run full-width). Empty segments yield the
+/// identity element.
+fn run_segments_core<T: TypedElement>(
+    engine: &Engine,
+    data: &[T],
+    offsets: &[usize],
+    op: Op,
+    via_fleet: bool,
+) -> crate::Result<(Vec<T>, SegExec)> {
+    crate::pool::validate_csr_offsets(offsets, data.len())?;
+    let segments = offsets.len() - 1;
+    let sched = engine.scheduler();
+    // The pin mirrors RowsBuilder::via_fleet: ignored without a pool,
+    // and for products (host-only semantics).
+    let decision = if via_fleet && engine.pool().is_some() && op != Op::Prod {
+        SegmentedDecision::FleetPass { devices: engine.pool().map_or(0, |p| p.num_devices()) }
+    } else {
+        sched.decide_segments(op, T::DTYPE, data.len(), segments)
+    };
+
+    if let (SegmentedDecision::FleetPass { .. }, Some(pool)) = (decision, engine.pool()) {
+        // One wave: every segment's pieces enter the steal queues
+        // together under the scheduler's (possibly feedback-adjusted)
+        // element-space plan.
+        let plan = sched.plan_shards(pool.devices(), data.len(), pool.tasks_per_device());
+        let (values, out) = pool.reduce_segments_elems(data, offsets, op, &plan)?;
+        // Feed the Pool throughput EWMA only when segment boundaries
+        // kept the wave close to a flat sharded pass (tasks within 2×
+        // the plan's shards): a many-small-segments wave is per-task
+        // launch-overhead dominated by construction, and folding its
+        // bytes/s into the model would drag the derived host→pool
+        // knee away from what *flat* passes actually achieve — the
+        // same skew rule the unobserved fused host arm below applies.
+        // Per-worker busy ratios stay meaningful either way, so the
+        // shard-weight feedback is always recorded.
+        if out.shards <= 2 * plan.shards.len() {
+            sched.observe_pool(op, T::DTYPE, data.len(), &out);
+        } else {
+            sched.observe_busy(&out.per_worker_busy_s);
+        }
+        return Ok((
+            values,
+            SegExec {
+                fleet: true,
+                devices: pool.num_devices(),
+                shards: out.shards,
+                steals: out.steals,
+                modeled_wall_s: out.modeled_wall_s,
+            },
+        ));
+    }
+
+    // Host ladder, per segment. No segment can sit at/past the pool
+    // knee here: with a pool attached the fleet arm above took any
+    // workload whose *total* reaches it, and without one the knee is
+    // infinite.
+    let cuts = sched.cutoffs(op, T::DTYPE);
+    let mut values = vec![T::identity(op); segments];
+    let mut fused_ranges: Vec<(usize, usize)> = Vec::new();
+    let mut fused_idx: Vec<usize> = Vec::new();
+    let mut wide: Vec<usize> = Vec::new();
+    for (s, w) in offsets.windows(2).enumerate() {
+        let (lo, hi) = (w[0], w[1]);
+        if hi - lo == 0 {
+            continue; // identity already in place
+        }
+        if hi - lo >= cuts.thread {
+            wide.push(s);
+        } else {
+            fused_ranges.push((lo, hi));
+            fused_idx.push(s);
+        }
+    }
+
+    // 1. Small segments: ONE fused pass over the persistent runtime
+    //    (the ragged analogue of the RedFuser rows pass). Deliberately
+    //    unobserved: the pass is wake-up/overhead dominated by
+    //    construction (every segment in it sits below the full-width
+    //    knee), so folding it into the full-width throughput EWMA
+    //    would drag the model toward overhead the backend didn't
+    //    cause.
+    if !fused_ranges.is_empty() {
+        let vals =
+            persistent::global().reduce_ranges_width(data, &fused_ranges, op, engine.workers());
+        for (&s, v) in fused_idx.iter().zip(vals) {
+            values[s] = v;
+        }
+    }
+    // 2. Large host segments: full-width, one at a time, each observed
+    //    in its own band — the same clean attribution a direct
+    //    `engine.reduce` of that segment would record. A width-1
+    //    engine runs these serially, so it records nothing (serial
+    //    throughput is not the full-width backend's).
+    for &s in &wide {
+        let slice = &data[offsets[s]..offsets[s + 1]];
+        let seg_t0 = Instant::now();
+        values[s] = persistent::global().reduce_width(slice, op, engine.workers());
+        if engine.workers() > 1 {
+            sched.observe(
+                Backend::ThreadedFull,
+                op,
+                T::DTYPE,
+                slice.len(),
+                seg_t0.elapsed().as_secs_f64(),
+            );
+        }
+    }
+
+    Ok((
+        values,
+        SegExec { fleet: false, devices: 0, shards: 0, steals: 0, modeled_wall_s: 0.0 },
+    ))
+}
+
 /// One segmented (ragged) reduction request (from
 /// [`Engine::reduce_segments`]).
 #[derive(Debug)]
@@ -187,11 +317,12 @@ pub struct SegmentsBuilder<'e, 'd, T: TypedElement> {
     data: &'d [T],
     offsets: &'d [usize],
     op: Op,
+    via_fleet: bool,
 }
 
 impl<'e, 'd, T: TypedElement> SegmentsBuilder<'e, 'd, T> {
     pub(super) fn new(engine: &'e Engine, data: &'d [T], offsets: &'d [usize]) -> Self {
-        SegmentsBuilder { engine, data, offsets, op: Op::Sum }
+        SegmentsBuilder { engine, data, offsets, op: Op::Sum, via_fleet: false }
     }
 
     /// The combiner to reduce each segment with (default [`Op::Sum`]).
@@ -200,117 +331,151 @@ impl<'e, 'd, T: TypedElement> SegmentsBuilder<'e, 'd, T> {
         self
     }
 
-    /// Plan and execute every segment through the scheduler: segments
-    /// below the full-width knee fuse into **one** persistent-runtime
-    /// pass, segments at/above it run full-width, and segments past
-    /// the pool crossover each shard across the fleet (shard-order
-    /// Neumaier combines keep float sums deterministic). Empty
-    /// segments yield the identity element.
+    /// Pin this pass to the one-pass fleet rung (when a pool is
+    /// attached): every segment executes in one fleet wave even if the
+    /// scheduler's segmented decision would keep the workload on the
+    /// host (`reduce --segments K --backend pool`, benches, and the
+    /// conformance suite use this to exercise the rung
+    /// deterministically). Ignored without a pool, and for
+    /// [`Op::Prod`] (products are host-only: the fleet's f64 embedding
+    /// cannot reproduce i32 wrapping products).
+    pub fn via_fleet(mut self) -> Self {
+        self.via_fleet = true;
+        self
+    }
+
+    /// Plan and execute the whole request through the scheduler's
+    /// segmented rung ([`crate::sched::Scheduler::decide_segments`]):
+    /// past the pool knee — or for numerous small segments whose one
+    /// fleet wave undercuts the per-segment host loop — **all**
+    /// segments run in one fleet pass with shard-order Neumaier
+    /// combines per segment ([`ExecPath::SegmentedPool`]); otherwise
+    /// segments below the full-width knee fuse into one
+    /// persistent-runtime pass and the rest run full-width
+    /// ([`ExecPath::Segmented`]). Empty segments yield the identity
+    /// element.
     pub fn run(self) -> crate::Result<Reduced<Vec<T>>> {
-        let SegmentsBuilder { engine, data, offsets, op } = self;
+        let SegmentsBuilder { engine, data, offsets, op, via_fleet } = self;
         let t0 = Instant::now();
-        let Some((&first, _)) = offsets.split_first() else {
-            bail!("offsets must hold at least one boundary (CSR: [0, ..., data.len()])");
-        };
-        if first != 0 {
-            bail!("offsets[0] must be 0, got {first}");
-        }
-        if offsets.windows(2).any(|w| w[1] < w[0]) {
-            bail!("offsets must be monotone non-decreasing");
-        }
-        let last = *offsets.last().expect("offsets checked non-empty");
-        if last != data.len() {
-            bail!("offsets must end at data.len() ({last} != {})", data.len());
-        }
+        let (values, ex) = run_segments_core(engine, data, offsets, op, via_fleet)?;
         let segments = offsets.len() - 1;
-        let sched = engine.scheduler();
-        let cuts = sched.cutoffs(op, T::DTYPE);
-
-        // Per-segment placement, off the same ladder every other
-        // entry point uses.
-        let mut values = vec![T::identity(op); segments];
-        let mut fused_ranges: Vec<(usize, usize)> = Vec::new();
-        let mut fused_idx: Vec<usize> = Vec::new();
-        let mut wide: Vec<usize> = Vec::new();
-        let mut fleet: Vec<usize> = Vec::new();
-        for (s, w) in offsets.windows(2).enumerate() {
-            let (lo, hi) = (w[0], w[1]);
-            let len = hi - lo;
-            if len == 0 {
-                continue; // identity already in place
-            }
-            if engine.pool().is_some() && len >= cuts.pool {
-                fleet.push(s);
-            } else if len >= cuts.thread {
-                wide.push(s);
-            } else {
-                fused_ranges.push((lo, hi));
-                fused_idx.push(s);
-            }
-        }
-
-        // 1. Small segments: ONE fused pass over the persistent
-        //    runtime (the ragged analogue of the RedFuser rows pass).
-        //    Deliberately unobserved: the pass is wake-up/overhead
-        //    dominated by construction (every segment in it sits below
-        //    the full-width knee), so folding it into the full-width
-        //    throughput EWMA would drag the model toward overhead the
-        //    backend didn't cause.
-        if !fused_ranges.is_empty() {
-            let vals = persistent::global().reduce_ranges_width(
-                data,
-                &fused_ranges,
-                op,
-                engine.workers(),
-            );
-            for (&s, v) in fused_idx.iter().zip(vals) {
-                values[s] = v;
-            }
-        }
-        // 2. Large host segments: full-width, one at a time, each
-        //    observed in its own band — the same clean attribution a
-        //    direct `engine.reduce` of that segment would record. A
-        //    width-1 engine runs these serially, so it records nothing
-        //    (serial throughput is not the full-width backend's).
-        for &s in &wide {
-            let slice = &data[offsets[s]..offsets[s + 1]];
-            let seg_t0 = Instant::now();
-            values[s] = persistent::global().reduce_width(slice, op, engine.workers());
-            if engine.workers() > 1 {
-                sched.observe(
-                    Backend::ThreadedFull,
-                    op,
-                    T::DTYPE,
-                    slice.len(),
-                    seg_t0.elapsed().as_secs_f64(),
-                );
-            }
-        }
-        // 3. Fleet segments: each shards across the pool under the
-        //    (possibly feedback-adjusted) plan.
-        let mut shards = 0usize;
-        let mut steals = 0u64;
-        let mut modeled_wall_s = 0.0f64;
-        if let Some(pool) = engine.pool() {
-            for &s in &fleet {
-                let slice = &data[offsets[s]..offsets[s + 1]];
-                let plan = sched.plan_shards(pool.devices(), slice.len(), pool.tasks_per_device());
-                let (v, out) = pool.reduce_elems_planned(slice, op, &plan)?;
-                sched.observe_pool(op, T::DTYPE, slice.len(), &out);
-                values[s] = v;
-                shards += out.shards;
-                steals += out.steals;
-                modeled_wall_s += out.modeled_wall_s;
-            }
-        }
-
+        let path = if ex.fleet {
+            ExecPath::SegmentedPool { segments, devices: ex.devices }
+        } else {
+            ExecPath::Segmented { segments }
+        };
         Ok(Reduced {
             value: values,
-            path: ExecPath::Segmented { segments },
+            path,
             elapsed_s: t0.elapsed().as_secs_f64(),
-            shards,
-            steals,
-            modeled_wall_s,
+            shards: ex.shards,
+            steals: ex.steals,
+            modeled_wall_s: ex.modeled_wall_s,
+        })
+    }
+}
+
+/// One keyed (group-by) reduction request (from
+/// [`Engine::reduce_by_key`]).
+#[derive(Debug)]
+pub struct ByKeyBuilder<'e, 'd, K: Copy + Ord + std::fmt::Debug, T: TypedElement> {
+    engine: &'e Engine,
+    keys: &'d [K],
+    values: &'d [T],
+    op: Op,
+    via_fleet: bool,
+}
+
+impl<'e, 'd, K: Copy + Ord + std::fmt::Debug, T: TypedElement> ByKeyBuilder<'e, 'd, K, T> {
+    pub(super) fn new(engine: &'e Engine, keys: &'d [K], values: &'d [T]) -> Self {
+        ByKeyBuilder { engine, keys, values, op: Op::Sum, via_fleet: false }
+    }
+
+    /// The combiner to reduce each group with (default [`Op::Sum`]).
+    pub fn op(mut self, op: Op) -> Self {
+        self.op = op;
+        self
+    }
+
+    /// Pin the grouped pass to the one-pass fleet rung (see
+    /// [`SegmentsBuilder::via_fleet`]; ignored without a pool and for
+    /// [`Op::Prod`]).
+    pub fn via_fleet(mut self) -> Self {
+        self.via_fleet = true;
+        self
+    }
+
+    /// Group `values` by key and reduce each group: keys are
+    /// stable-sorted (already-sorted inputs skip the permutation
+    /// entirely), grouped into CSR offsets, and routed through the
+    /// same segmented rung [`Engine::reduce_segments`] uses — small
+    /// groups fuse into one persistent host pass, large or numerous
+    /// groups take the one-pass fleet rung. Returns one `(key, value)`
+    /// pair per distinct key, in ascending key order; within a group,
+    /// values combine in input order (stable sort), so results are
+    /// deterministic for unsorted and duplicate-key inputs.
+    pub fn run(self) -> crate::Result<Reduced<Vec<(K, T)>>> {
+        let ByKeyBuilder { engine, keys, values, op, via_fleet } = self;
+        let t0 = Instant::now();
+        if keys.len() != values.len() {
+            bail!(
+                "reduce_by_key needs one key per value ({} keys, {} values)",
+                keys.len(),
+                values.len()
+            );
+        }
+        let n = keys.len();
+        if n == 0 {
+            let dt = t0.elapsed().as_secs_f64();
+            return Ok(Reduced::host(Vec::new(), ExecPath::Keyed { groups: 0 }, dt));
+        }
+        // Grouping contract (mirrored by the serving layer's fused
+        // keyed path, coordinator::service::exec_keyed_fused_typed,
+        // which must stay behaviourally identical — both ends are
+        // pinned to the same oracle by the conformance suite):
+        // ascending distinct keys, stable order within a group.
+        let sorted = keys.windows(2).all(|w| w[0] <= w[1]);
+        let gathered: Vec<T>;
+        let grouped: &[T];
+        let mut group_keys: Vec<K> = Vec::new();
+        let mut offsets: Vec<usize> = vec![0];
+        if sorted {
+            // Fast path: already grouped — reduce in place, no copy.
+            grouped = values;
+            group_keys.push(keys[0]);
+            for i in 1..n {
+                if keys[i] != keys[i - 1] {
+                    offsets.push(i);
+                    group_keys.push(keys[i]);
+                }
+            }
+        } else {
+            // Stable argsort by key, then one parallel gather of the
+            // values into grouped order.
+            let mut idx: Vec<usize> = (0..n).collect();
+            idx.sort_by_key(|&i| keys[i]);
+            gathered = persistent::global().gather(values, &idx);
+            grouped = &gathered;
+            group_keys.push(keys[idx[0]]);
+            for r in 1..n {
+                if keys[idx[r]] != keys[idx[r - 1]] {
+                    offsets.push(r);
+                    group_keys.push(keys[idx[r]]);
+                }
+            }
+        }
+        offsets.push(n);
+
+        let (vals, ex) = run_segments_core(engine, grouped, &offsets, op, via_fleet)?;
+        let groups = group_keys.len();
+        debug_assert_eq!(vals.len(), groups);
+        Ok(Reduced {
+            value: group_keys.into_iter().zip(vals).collect(),
+            path: ExecPath::Keyed { groups },
+            elapsed_s: t0.elapsed().as_secs_f64(),
+            shards: ex.shards,
+            steals: ex.steals,
+            modeled_wall_s: ex.modeled_wall_s,
         })
     }
 }
@@ -416,5 +581,41 @@ mod tests {
             let r = e.reduce_segments(&data, &offsets).op(op).run().unwrap();
             assert_eq!(r.value, vec![i32::identity(op); 3], "{op}");
         }
+    }
+
+    #[test]
+    fn by_key_groups_unsorted_duplicate_keys() {
+        let e = host_engine();
+        let keys = [3i64, 1, 3, 2, 1, 3, 2, 2];
+        let vals = [10i32, 20, 30, 40, 50, 60, 70, 80];
+        let r = e.reduce_by_key(&keys, &vals).op(Op::Sum).run().unwrap();
+        assert_eq!(r.path, ExecPath::Keyed { groups: 3 });
+        assert_eq!(r.value, vec![(1i64, 70), (2, 190), (3, 100)]);
+        assert_eq!(r.shards, 0, "host groups carry no fleet stats");
+        // Min/Max over the same grouping.
+        let r = e.reduce_by_key(&keys, &vals).op(Op::Max).run().unwrap();
+        assert_eq!(r.value, vec![(1i64, 50), (2, 80), (3, 60)]);
+    }
+
+    #[test]
+    fn by_key_sorted_single_key_and_empty() {
+        let e = host_engine();
+        // Sorted keys take the no-copy fast path.
+        let keys = [1i32, 1, 2, 2, 2, 9];
+        let vals = [1i32, 2, 3, 4, 5, 6];
+        let r = e.reduce_by_key(&keys, &vals).run().unwrap();
+        assert_eq!(r.value, vec![(1i32, 3), (2, 12), (9, 6)]);
+        // One key: one group equal to the full reduction.
+        let vals = Rng::new(17).i32_vec(30_000, -500, 500);
+        let keys = vec![7u8; 30_000];
+        let r = e.reduce_by_key(&keys, &vals).op(Op::Min).run().unwrap();
+        assert_eq!(r.value, vec![(7u8, scalar::reduce(&vals, Op::Min))]);
+        assert_eq!(r.path, ExecPath::Keyed { groups: 1 });
+        // Empty input: no groups.
+        let r = e.reduce_by_key::<i64, i32>(&[], &[]).run().unwrap();
+        assert!(r.value.is_empty());
+        assert_eq!(r.path, ExecPath::Keyed { groups: 0 });
+        // Mismatched lengths error, not panic.
+        assert!(e.reduce_by_key(&[1i64, 2], &[1i32]).run().is_err());
     }
 }

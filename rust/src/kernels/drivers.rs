@@ -124,6 +124,34 @@ pub fn jradi_reduce(gpu: &mut Gpu, data: &[f64], op: CombOp, f: u32, block: u32)
     Ok(Outcome { value, run })
 }
 
+/// The paper's kernel as **one** persistent launch with a single
+/// work-group (`grid = 1`): the block's persistent loop strides the
+/// whole input, so its lone partial *is* the reduction and no second
+/// launch is needed. Semantically valid for any `n`; only worth it
+/// when the input is small enough that launch overhead dominates —
+/// the device pool uses it for tiny segment pieces of the segmented
+/// fleet pass, where a second launch would double the dominant cost.
+pub fn jradi_reduce_single(
+    gpu: &mut Gpu,
+    data: &[f64],
+    op: CombOp,
+    f: u32,
+    block: u32,
+) -> Result<Outcome> {
+    let n = data.len();
+    let mut run = RunStats::default();
+    gpu.reset();
+    let _in = gpu.alloc_from(data);
+    let parts = gpu.alloc(1);
+    // Mirror the two-stage driver's partial-fold unroll cap: a single
+    // block over a small input has too few elements per thread for
+    // deep unrolling to pay.
+    let k = jradi::kernel(op, block, n as u64, f.min(4))?;
+    run.push(gpu.launch(&k, LaunchConfig { grid: 1, block })?);
+    let value = gpu.read(parts)[0];
+    Ok(Outcome { value, run })
+}
+
 /// Luitjens' shuffle reduction (extension kernel, ablation bench).
 pub fn luitjens_reduce(gpu: &mut Gpu, data: &[f64], op: CombOp, block: u32) -> Result<Outcome> {
     let ws = gpu.cfg().warp_size;
@@ -201,6 +229,25 @@ mod tests {
         let tc = catanzaro_reduce(&mut gpu, &d, CombOp::Add, 256).unwrap().run.total_time_s();
         let tj = jradi_reduce(&mut gpu, &d, CombOp::Add, 8, 256).unwrap().run.total_time_s();
         assert!(tj < tc, "jradi F=8 ({tj:.3e}s) should beat catanzaro ({tc:.3e}s)");
+    }
+
+    #[test]
+    fn single_launch_jradi_matches_two_stage_and_halves_overhead() {
+        let mut gpu = Gpu::new(DeviceConfig::tesla_c2075());
+        for n in [1usize, 5, 200, 256, 2_000] {
+            let d = data(n);
+            for op in [CombOp::Add, CombOp::Min, CombOp::Max] {
+                let single = jradi_reduce_single(&mut gpu, &d, op, 8, 256).unwrap();
+                let two = jradi_reduce(&mut gpu, &d, op, 8, 256).unwrap();
+                assert_eq!(single.value, two.value, "n={n} {op:?}");
+                assert_eq!(single.run.launches.len(), 1);
+                assert_eq!(two.run.launches.len(), 2);
+                assert!(
+                    single.run.total_time_s() < two.run.total_time_s(),
+                    "n={n}: one launch must model cheaper"
+                );
+            }
+        }
     }
 
     #[test]

@@ -31,7 +31,9 @@
 //!   deriving the crossovers and per-worker busy times re-weighting
 //!   shard plans; [`engine`] is the **one front door** over all of it
 //!   ([`Engine`]): a typed facade placing every request — scalar,
-//!   rows, ragged segments — on the scheduler's ladder; [`harness`]
+//!   rows, ragged segments, keyed group-bys — on the scheduler's
+//!   ladder, segmented workloads past the knee (or numerous small
+//!   segments) executing as **one** fleet pass; [`harness`]
 //!   regenerates every table and figure plus the pool's device-count
 //!   scaling and the scheduler's convergence tables.
 //!
@@ -59,6 +61,13 @@
 //! let offsets = [0usize, 10, 10, 1_000_000];
 //! let segs = engine.reduce_segments(&data, &offsets).run()?;
 //! assert_eq!(segs.value.len(), 3);
+//!
+//! // Group-by over a key column: one (key, value) pair per distinct
+//! // key, ascending — unsorted and duplicate keys welcome.
+//! let keys: Vec<i64> = (0..data.len() as i64).map(|i| i % 4).collect();
+//! let groups = engine.reduce_by_key(&keys, &data).op(Op::Sum).run()?;
+//! assert_eq!(groups.value.len(), 4);
+//! assert_eq!(groups.value[0].0, 0);
 //! # Ok::<(), anyhow::Error>(())
 //! ```
 //!

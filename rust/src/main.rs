@@ -7,8 +7,8 @@
 //!   sim --kernel <k1..k7|catanzaro|jradi|luitjens> [--device D]
 //!       [--n N] [--f F] [--block B] [--op OP]
 //!                                run one kernel on the simulator
-//!   reduce --n N [--op OP] [--dtype f32|i32] [--backend engine|host|pjrt]
-//!       [--pool --pool-devices SPEC] [--segments K]
+//!   reduce --n N [--op OP] [--dtype f32|i32] [--backend engine|host|pool|pjrt]
+//!       [--pool --pool-devices SPEC] [--segments K | --by-key K]
 //!                                reduce a generated workload through
 //!                                the Engine facade (or raw PJRT)
 //!   serve [--requests N] [--batch-window-us U] [--payload N]
@@ -42,7 +42,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "pool", "pool-devices", "pool-cutoff",
         "host-workers",
         "sched", "adaptive", "sched-snapshot",
-        "segments",
+        "segments", "by-key",
     ];
     let args = Args::parse(argv, &allowed)?;
     // Size the process-wide persistent host runtime before anything
@@ -76,14 +76,17 @@ USAGE: parred <info|tables|sim|reduce|serve> [options]
                             regenerate the paper's tables/figures
   sim --kernel k1..k7|catanzaro|jradi|luitjens [--device G80|TeslaC2075|AMD-GCN]
       [--device-file my_gpu.json] [--n 5533214] [--f 8] [--block 256] [--op sum]
-  reduce --n N [--op sum] [--dtype f32] [--backend engine|host|pjrt]
+  reduce --n N [--op sum] [--dtype f32] [--backend engine|host|pool|pjrt]
          [--pool=1 --pool-devices SPEC [--pool-cutoff N]] [--adaptive]
-         [--segments K] [--artifacts DIR]
+         [--segments K | --by-key K] [--artifacts DIR]
          one reduction through the Engine facade: the scheduler places
          it (host persistent runtime or device fleet) and the outcome
          reports value, ExecPath, timing and steal stats. --segments K
          splits the payload into K ragged segments and reduces each
-         (engine.reduce_segments). --backend pjrt runs the raw
+         (engine.reduce_segments); --by-key K draws a key column with K
+         distinct keys and groups by it (engine.reduce_by_key).
+         --backend pool pins the segmented/keyed pass to the one-pass
+         fleet rung (implies a pool); --backend pjrt runs the raw
          compiled-artifact path instead.
   serve [--requests 200] [--batch-window-us 200] [--payload 65536]
         [--artifacts DIR] [--pool=1 --pool-devices SPEC [--pool-cutoff N]]
@@ -275,20 +278,49 @@ fn sim(args: &Args) -> Result<()> {
 /// `parred reduce` on the engine facade: generate a payload, hand it
 /// to one [`parred::Engine`], report value + execution path. With
 /// `--segments K` the payload is split into K ragged segments and
-/// reduced through `engine.reduce_segments` instead.
+/// reduced through `engine.reduce_segments`; with `--by-key K` a key
+/// column with K distinct keys is drawn and the payload grouped
+/// through `engine.reduce_by_key`. `pin_fleet` (from `--backend
+/// pool`) pins segmented/keyed passes to the one-pass fleet rung.
 fn engine_reduce<T>(
     engine: &parred::Engine,
     data: Vec<T>,
     op: Op,
     rng: &mut Rng,
     segments: usize,
+    by_key: usize,
+    pin_fleet: bool,
 ) -> Result<()>
 where
     T: parred::reduce::TypedElement + std::fmt::Display,
 {
     let n = data.len();
     let dtype = T::DTYPE;
-    if segments > 0 {
+    if by_key > 0 {
+        // Group-by demo: a uniform key column with up to K distinct
+        // keys (duplicates guaranteed once n > K).
+        let keys: Vec<i64> = (0..n).map(|_| rng.range(0, by_key - 1) as i64).collect();
+        let mut req = engine.reduce_by_key(&keys, &data).op(op);
+        if pin_fleet {
+            req = req.via_fleet();
+        }
+        let r = req.run()?;
+        println!(
+            "engine {op} over {n} {dtype} grouped by {by_key} keys -> {} groups: \
+             path={:?} shards={} steals={} ({:.3} ms)",
+            r.value.len(),
+            r.path,
+            r.shards,
+            r.steals,
+            r.elapsed_s * 1e3
+        );
+        for (k, v) in r.value.iter().take(4) {
+            println!("  key {k} = {v}");
+        }
+        if r.value.len() > 4 {
+            println!("  ... {} more groups", r.value.len() - 4);
+        }
+    } else if segments > 0 {
         // Ragged demo offsets: segments-1 random cuts (duplicates make
         // empty segments, exercising the identity path).
         let mut cuts: Vec<usize> =
@@ -297,7 +329,11 @@ where
         let mut offsets = vec![0usize];
         offsets.extend(cuts);
         offsets.push(n);
-        let r = engine.reduce_segments(&data, &offsets).op(op).run()?;
+        let mut req = engine.reduce_segments(&data, &offsets).op(op);
+        if pin_fleet {
+            req = req.via_fleet();
+        }
+        let r = req.run()?;
         println!(
             "engine {op} over {n} {dtype} in {segments} ragged segments: path={:?} \
              shards={} steals={} ({:.3} ms)",
@@ -336,15 +372,31 @@ fn reduce(args: &Args) -> Result<()> {
     let mut rng = Rng::new(seed);
 
     match (backend, dtype) {
-        // "host" stays as an alias for the (pool-less) engine path.
-        ("engine" | "host", _) => {
+        // "host" stays as an alias for the (pool-less) engine path;
+        // "pool" is the engine with a fleet, pinning segmented/keyed
+        // passes to the one-pass fleet rung.
+        ("engine" | "host" | "pool", _) => {
             if backend == "host" && truthy(args, "pool") {
                 bail!("--pool requires --backend engine (host is the pool-less alias)");
+            }
+            let pin_fleet = backend == "pool";
+            let use_pool = pin_fleet || truthy(args, "pool");
+            let segments = args.get_usize("segments", 0)?;
+            let by_key = args.get_usize("by-key", 0)?;
+            if segments > 0 && by_key > 0 {
+                bail!("--segments and --by-key are mutually exclusive");
+            }
+            if pin_fleet && segments == 0 && by_key == 0 {
+                bail!(
+                    "--backend pool pins the segmented/keyed fleet rung; \
+                     add --segments K or --by-key K (plain reductions shard \
+                     via --backend engine --pool)"
+                );
             }
             let mut builder = parred::Engine::builder()
                 .host_workers(args.get_usize("workers", 0)?)
                 .adaptive(truthy(args, "adaptive"));
-            if truthy(args, "pool") {
+            if use_pool {
                 let custom = match args.get("device-file") {
                     Some(path) => {
                         vec![DeviceConfig::from_json(&std::fs::read_to_string(path)?)?]
@@ -360,14 +412,25 @@ fn reduce(args: &Args) -> Result<()> {
                     .pool_cutoff(opt_usize(args, "pool-cutoff", 1 << 20)?);
             }
             let engine = builder.build()?;
-            let segments = args.get_usize("segments", 0)?;
             match dtype {
-                Dtype::F32 => {
-                    engine_reduce(&engine, rng.f32_vec(n, -1.0, 1.0), op, &mut rng, segments)?
-                }
-                Dtype::I32 => {
-                    engine_reduce(&engine, rng.i32_vec(n, -100, 100), op, &mut rng, segments)?
-                }
+                Dtype::F32 => engine_reduce(
+                    &engine,
+                    rng.f32_vec(n, -1.0, 1.0),
+                    op,
+                    &mut rng,
+                    segments,
+                    by_key,
+                    pin_fleet,
+                )?,
+                Dtype::I32 => engine_reduce(
+                    &engine,
+                    rng.i32_vec(n, -100, 100),
+                    op,
+                    &mut rng,
+                    segments,
+                    by_key,
+                    pin_fleet,
+                )?,
             }
         }
         ("pjrt", _) => {
@@ -393,7 +456,7 @@ fn reduce(args: &Args) -> Result<()> {
                 t1.elapsed().as_secs_f64() * 1e3
             );
         }
-        (b, _) => bail!("unknown backend {b:?} (engine|host|pjrt)"),
+        (b, _) => bail!("unknown backend {b:?} (engine|host|pool|pjrt)"),
     }
     Ok(())
 }

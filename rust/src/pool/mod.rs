@@ -52,7 +52,7 @@ use crate::reduce::op::{Element, Op};
 pub mod plan;
 pub mod queue;
 
-pub use plan::{Shard, ShardPlan};
+pub use plan::{segment_tasks, validate_csr_offsets, SegTask, Shard, ShardPlan};
 pub use queue::StealQueues;
 
 /// Pool construction parameters.
@@ -454,6 +454,133 @@ impl DevicePool {
             },
         ))
     }
+
+    /// Segmented fleet pass: reduce **every** CSR segment of `data`
+    /// (`offsets[0] == 0`, monotone, last == `data.len()`) in **one**
+    /// dispatch — the ragged analogue of [`Self::reduce_rows_elems`]
+    /// and the execution engine of the engine's
+    /// [`ExecPath::SegmentedPool`](crate::engine::ExecPath) rung.
+    ///
+    /// `plan` is an element-space shard plan over the whole buffer
+    /// (from [`crate::sched::Scheduler::plan_shards`], so device
+    /// shares follow the throughput model plus any busy-time
+    /// feedback); it is intersected with the segment boundaries
+    /// ([`segment_tasks`]) so every task covers one segment's
+    /// elements, and all tasks enter the steal queues as one wave —
+    /// one queue round-trip for 10k segments instead of 10k. Each
+    /// segment's partials are combined in task (element) order,
+    /// Neumaier-compensated for float sums, so per-segment values are
+    /// deterministic regardless of which worker ran what. Empty
+    /// segments yield the identity element.
+    ///
+    /// Returns per-segment values plus the aggregate outcome (its
+    /// `value` is the combine over all partials; counters span the
+    /// whole pass).
+    pub fn reduce_segments_elems<T: Element>(
+        &self,
+        data: &[T],
+        offsets: &[usize],
+        op: Op,
+        plan: &ShardPlan,
+    ) -> Result<(Vec<T>, PoolOutcome)> {
+        let n = data.len();
+        validate_csr_offsets(offsets, n)?;
+        let workers = self.num_devices();
+        let mut cursor = 0usize;
+        for s in &plan.shards {
+            if s.start != cursor || s.end <= s.start || s.end > n || s.device >= workers {
+                bail!(
+                    "segment plan must tile [0, {n}) contiguously with non-empty shards on \
+                     known devices; found {s:?} at offset {cursor}"
+                );
+            }
+            cursor = s.end;
+        }
+        if cursor != n {
+            bail!("segment plan covers {cursor} of {n} elements");
+        }
+
+        let segments = offsets.len() - 1;
+        let mut values = vec![T::identity(op); segments];
+        if n == 0 {
+            return Ok((
+                values,
+                PoolOutcome {
+                    value: CombOp::from(op).identity(),
+                    shards: 0,
+                    steals: 0,
+                    modeled_wall_s: 0.0,
+                    per_worker_busy_s: vec![0.0; workers],
+                },
+            ));
+        }
+        let cop = CombOp::from(op);
+        let tasks = segment_tasks(plan, offsets);
+        let total = tasks.len();
+        let payload: Arc<Vec<f64>> = Arc::new(crate::reduce::persistent::global().map_f64(data));
+        let (tx, rx) = mpsc::channel::<TaskResult>();
+        self.queues.push_all(tasks.iter().enumerate().map(|(id, t)| {
+            (
+                t.device,
+                Task {
+                    id,
+                    data: payload.clone(),
+                    shard: Shard { device: t.device, start: t.start, end: t.end },
+                    op: cop,
+                    reply: tx.clone(),
+                },
+            )
+        }));
+        drop(tx);
+
+        let mut partials = vec![cop.identity(); total];
+        let mut busy = vec![0.0f64; workers];
+        let mut steals = 0u64;
+        for _ in 0..total {
+            let r = rx.recv_timeout(Duration::from_secs(300)).map_err(|_| {
+                anyhow!(
+                    "device pool did not respond (workers dead: {})",
+                    self.workers_dead.load(Ordering::Relaxed)
+                )
+            })?;
+            match r.outcome {
+                Ok((value, modeled_s)) => {
+                    partials[r.id] = value;
+                    busy[r.worker] += modeled_s;
+                    steals += r.stolen as u64;
+                }
+                Err(e) => bail!("segment task {} failed on worker {}: {e}", r.id, r.worker),
+            }
+        }
+
+        // Per-segment combine in task order (tasks are emitted in
+        // element order, so this is position order — deterministic
+        // and, for float sums, Neumaier-compensated).
+        let mut seg_partials: Vec<f64> = Vec::new();
+        let mut t = 0usize;
+        for (s, v) in values.iter_mut().enumerate() {
+            seg_partials.clear();
+            while t < total && tasks[t].segment == s {
+                seg_partials.push(partials[t]);
+                t += 1;
+            }
+            if !seg_partials.is_empty() {
+                *v = T::from_f64(combine(cop, &seg_partials));
+            }
+        }
+        debug_assert_eq!(t, total, "every task must belong to a segment");
+
+        Ok((
+            values,
+            PoolOutcome {
+                value: combine(cop, &partials),
+                shards: total,
+                steals,
+                modeled_wall_s: busy.iter().cloned().fold(0.0, f64::max),
+                per_worker_busy_s: busy,
+            },
+        ))
+    }
 }
 
 impl Drop for DevicePool {
@@ -489,11 +616,23 @@ fn worker_loop(
     queues: Arc<StealQueues<Task>>,
 ) {
     let mut gpu = Gpu::new(dev);
+    // One persistent block (unrolled) covers this many elements in a
+    // single pass; below it the paper kernel's second launch would
+    // only re-pay launch overhead, so tiny shards — the common task
+    // shape of the one-pass segmented rung — take the single-launch
+    // driver instead. Exact for integer-valued payloads; float sums
+    // can differ from the two-stage driver only by association, which
+    // sits inside the compensation tolerance the pool guarantees.
+    let single_launch_max = block as usize * unroll.max(1) as usize;
     while let Some((task, stolen)) = queues.pop(me) {
         let slice = &task.data[task.shard.start..task.shard.end];
-        let outcome = drivers::jradi_reduce(&mut gpu, slice, task.op, unroll, block)
-            .map(|o| (o.value, o.run.total_time_s()))
-            .map_err(|e| format!("{e:#}"));
+        let outcome = if slice.len() <= single_launch_max {
+            drivers::jradi_reduce_single(&mut gpu, slice, task.op, unroll, block)
+        } else {
+            drivers::jradi_reduce(&mut gpu, slice, task.op, unroll, block)
+        }
+        .map(|o| (o.value, o.run.total_time_s()))
+        .map_err(|e| format!("{e:#}"));
         if pace > 0.0 {
             if let Ok((_, modeled_s)) = &outcome {
                 // Cap a single paced hold so a pathological plan can
@@ -679,6 +818,99 @@ mod tests {
         // Zero rows is fine and returns no values.
         let (vals, out) = pool.reduce_rows_elems(&data[..0], 10, Op::Sum, &base).unwrap();
         assert!(vals.is_empty());
+        assert_eq!(out.shards, 0);
+    }
+
+    #[test]
+    fn segmented_pass_matches_per_segment_scalar() {
+        let pool = DevicePool::new(PoolConfig::homogeneous(DeviceConfig::tesla_c2075(), 3))
+            .unwrap();
+        // Ragged mix: empty, single-element, small and shard-crossing
+        // segments in one pass.
+        let lens = [0usize, 1, 700, 0, 40_000, 3, 25_000, 1, 0];
+        let mut offsets = vec![0usize];
+        for l in lens {
+            offsets.push(offsets.last().unwrap() + l);
+        }
+        let n = *offsets.last().unwrap();
+        let data = ints(n, 29);
+        let plan = pool.plan(n);
+        for op in [Op::Sum, Op::Min, Op::Max] {
+            let (got, out) = pool.reduce_segments_elems(&data, &offsets, op, &plan).unwrap();
+            assert_eq!(got.len(), lens.len(), "{op}");
+            for (s, w) in offsets.windows(2).enumerate() {
+                assert_eq!(got[s], scalar::reduce(&data[w[0]..w[1]], op), "segment {s} {op}");
+            }
+            assert!(out.shards >= lens.iter().filter(|&&l| l > 0).count());
+            assert!(out.modeled_wall_s > 0.0);
+        }
+        // Float sums stay Neumaier-close per segment.
+        let fdata = Rng::new(31).f32_vec(n, -1.0, 1.0);
+        let (got, _) = pool.reduce_segments_elems(&fdata, &offsets, Op::Sum, &plan).unwrap();
+        for (s, w) in offsets.windows(2).enumerate() {
+            let want = kahan::sum_f64(&fdata[w[0]..w[1]]);
+            let rel = (got[s] as f64 - want).abs() / want.abs().max(1.0);
+            assert!(rel < 1e-5, "segment {s}: {} vs {want} (rel {rel:.2e})", got[s]);
+        }
+    }
+
+    #[test]
+    fn segmented_pass_one_wave_beats_per_segment_dispatch_modeled() {
+        // The rung's reason to exist: many small segments in ONE wave
+        // spread across the fleet, vs one pool dispatch per segment
+        // (which serializes each tiny segment's launch on the full
+        // dispatch overhead).
+        let pool = DevicePool::new(PoolConfig::homogeneous(DeviceConfig::tesla_c2075(), 4))
+            .unwrap();
+        let segments = 64usize;
+        let seg_len = 512usize;
+        let n = segments * seg_len;
+        let data = ints(n, 37);
+        let offsets: Vec<usize> = (0..=segments).map(|s| s * seg_len).collect();
+        let plan = pool.plan(n);
+        let (vals, one_pass) =
+            pool.reduce_segments_elems(&data, &offsets, Op::Sum, &plan).unwrap();
+        let mut per_segment_wall = 0.0f64;
+        for w in offsets.windows(2) {
+            let seg = &data[w[0]..w[1]];
+            let seg_plan = pool.plan(seg.len());
+            let (v, out) = pool.reduce_elems_planned(seg, Op::Sum, &seg_plan).unwrap();
+            assert_eq!(v, scalar::reduce(seg, Op::Sum));
+            per_segment_wall += out.modeled_wall_s;
+        }
+        for (s, w) in offsets.windows(2).enumerate() {
+            assert_eq!(vals[s], scalar::reduce(&data[w[0]..w[1]], Op::Sum));
+        }
+        assert!(
+            one_pass.modeled_wall_s * 2.0 < per_segment_wall,
+            "one wave {} s !< half of per-segment {} s",
+            one_pass.modeled_wall_s,
+            per_segment_wall
+        );
+    }
+
+    #[test]
+    fn segmented_pass_rejects_bad_offsets_and_plans() {
+        let pool = DevicePool::new(PoolConfig::homogeneous(DeviceConfig::tesla_c2075(), 2))
+            .unwrap();
+        let data = ints(100, 5);
+        let plan = pool.plan(100);
+        // Errors, not panics: no boundaries, first not 0, non-monotone,
+        // exceeding data.len(), stopping short of it.
+        assert!(pool.reduce_segments_elems(&data, &[], Op::Sum, &plan).is_err());
+        assert!(pool.reduce_segments_elems(&data, &[5, 100], Op::Sum, &plan).is_err());
+        assert!(pool.reduce_segments_elems(&data, &[0, 60, 30, 100], Op::Sum, &plan).is_err());
+        assert!(pool.reduce_segments_elems(&data, &[0, 101], Op::Sum, &plan).is_err());
+        assert!(pool.reduce_segments_elems(&data, &[0, 50], Op::Sum, &plan).is_err());
+        // A plan that does not tile the buffer is rejected up front.
+        let wrong = pool.plan(99);
+        assert!(pool.reduce_segments_elems(&data, &[0, 100], Op::Sum, &wrong).is_err());
+        // Empty data with empty segments is fine and yields identities.
+        let empty: [i32; 0] = [];
+        let (vals, out) = pool
+            .reduce_segments_elems(&empty, &[0, 0, 0], Op::Min, &pool.plan(0))
+            .unwrap();
+        assert_eq!(vals, vec![i32::MAX; 2]);
         assert_eq!(out.shards, 0);
     }
 

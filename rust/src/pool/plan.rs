@@ -9,6 +9,8 @@
 //! combined in shard order, so the reduced value is independent of
 //! which worker ran what.
 
+use anyhow::bail;
+
 use crate::gpusim::DeviceConfig;
 
 /// One contiguous input range, initially queued on `device`.
@@ -120,6 +122,81 @@ impl ShardPlan {
     pub fn total(&self) -> usize {
         self.shards.iter().map(|s| s.len()).sum()
     }
+}
+
+/// Validate CSR `offsets` over a buffer of `len` elements:
+/// non-empty, `offsets[0] == 0`, monotone non-decreasing, last ==
+/// `len`. The one validation both segmented surfaces share
+/// ([`crate::pool::DevicePool::reduce_segments_elems`] and the
+/// engine's segmented/keyed front doors) — errors, never panics.
+pub fn validate_csr_offsets(offsets: &[usize], len: usize) -> crate::Result<()> {
+    let Some((&first, _)) = offsets.split_first() else {
+        bail!("offsets must hold at least one boundary (CSR: [0, ..., data.len()])");
+    };
+    if first != 0 {
+        bail!("offsets[0] must be 0, got {first}");
+    }
+    if offsets.windows(2).any(|w| w[1] < w[0]) {
+        bail!("offsets must be monotone non-decreasing");
+    }
+    let last = *offsets.last().expect("offsets checked non-empty");
+    if last != len {
+        bail!("offsets must end at data.len() ({last} != {len})");
+    }
+    Ok(())
+}
+
+/// One contiguous piece of a single CSR segment, initially queued on
+/// `device` — the task unit of the one-pass segmented fleet rung
+/// ([`crate::pool::DevicePool::reduce_segments_elems`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SegTask {
+    pub device: usize,
+    /// Which segment (CSR row) this piece belongs to.
+    pub segment: usize,
+    pub start: usize,
+    pub end: usize,
+}
+
+impl SegTask {
+    pub fn len(&self) -> usize {
+        self.end - self.start
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.start == self.end
+    }
+}
+
+/// Intersect an element-space shard plan with CSR segment boundaries:
+/// each shard is split at every segment boundary it crosses, so every
+/// task covers elements of exactly one segment while device shares
+/// stay proportional to the plan's (throughput-model) weights. Tasks
+/// come out in element order — ascending within each segment — so
+/// per-segment partials combine deterministically in task order.
+/// Empty segments produce no task (the caller seeds identities).
+///
+/// `plan` must tile `[0, offsets.last())` contiguously and `offsets`
+/// must be valid CSR (callers validate; debug-asserted here).
+pub fn segment_tasks(plan: &ShardPlan, offsets: &[usize]) -> Vec<SegTask> {
+    debug_assert!(!offsets.is_empty(), "offsets must hold at least one boundary");
+    let nseg = offsets.len() - 1;
+    let mut out = Vec::with_capacity(nseg + plan.shards.len());
+    let mut seg = 0usize;
+    for sh in &plan.shards {
+        let mut pos = sh.start;
+        while pos < sh.end {
+            // Skip (possibly empty) segments that end at or before pos.
+            while seg < nseg && offsets[seg + 1] <= pos {
+                seg += 1;
+            }
+            debug_assert!(seg < nseg, "plan extends past the last offset");
+            let end = sh.end.min(offsets[seg + 1]);
+            out.push(SegTask { device: sh.device, segment: seg, start: pos, end });
+            pos = end;
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -245,6 +322,92 @@ mod tests {
         covers_exactly(&plan, 4096);
         for s in &plan.shards {
             assert_eq!(s.len(), 1024);
+        }
+    }
+
+    /// Every element of every segment is covered by exactly one task,
+    /// tasks never cross a segment boundary, tasks stay on their
+    /// shard's device, and per-segment tasks come out in ascending
+    /// element order.
+    fn seg_tasks_cover(plan: &ShardPlan, offsets: &[usize]) {
+        let tasks = segment_tasks(plan, offsets);
+        let n = *offsets.last().unwrap();
+        let mut cursor = 0usize;
+        for t in &tasks {
+            assert_eq!(t.start, cursor, "tasks must tile contiguously: {t:?}");
+            assert!(t.len() >= 1, "no empty tasks: {t:?}");
+            assert!(
+                offsets[t.segment] <= t.start && t.end <= offsets[t.segment + 1],
+                "task crosses its segment: {t:?} vs [{}, {})",
+                offsets[t.segment],
+                offsets[t.segment + 1]
+            );
+            cursor = t.end;
+        }
+        assert_eq!(cursor, n, "tasks must cover all {n} elements");
+        // Each task lies inside a plan shard on the same device.
+        for t in &tasks {
+            let sh = plan
+                .shards
+                .iter()
+                .find(|s| s.start <= t.start && t.end <= s.end)
+                .unwrap_or_else(|| panic!("task {t:?} not inside any shard"));
+            assert_eq!(t.device, sh.device);
+        }
+    }
+
+    #[test]
+    fn segment_tasks_split_at_boundaries() {
+        let devs = fleet();
+        // Ragged mix: empty, tiny and large segments.
+        let lens = [0usize, 1, 5, 0, 700, 1, 40_000, 123, 0];
+        let mut offsets = vec![0usize];
+        for l in lens {
+            offsets.push(offsets.last().unwrap() + l);
+        }
+        let n = *offsets.last().unwrap();
+        for tasks_per_device in [1usize, 2, 4] {
+            let plan = ShardPlan::proportional(&devs, n, tasks_per_device);
+            seg_tasks_cover(&plan, &offsets);
+        }
+        // Empty segments yield no task at all.
+        let tasks = segment_tasks(&ShardPlan::proportional(&devs, n, 2), &offsets);
+        assert!(tasks.iter().all(|t| !t.is_empty()));
+        assert!(!tasks.iter().any(|t| t.segment == 0 || t.segment == 3 || t.segment == 8));
+    }
+
+    #[test]
+    fn csr_validation_errors_name_the_problem() {
+        assert!(validate_csr_offsets(&[0, 3, 10], 10).is_ok());
+        assert!(validate_csr_offsets(&[0], 0).is_ok());
+        let e = validate_csr_offsets(&[], 10).unwrap_err().to_string();
+        assert!(e.contains("at least one boundary"), "{e}");
+        let e = validate_csr_offsets(&[1, 10], 10).unwrap_err().to_string();
+        assert!(e.contains("must be 0"), "{e}");
+        let e = validate_csr_offsets(&[0, 7, 3, 10], 10).unwrap_err().to_string();
+        assert!(e.contains("monotone"), "{e}");
+        let e = validate_csr_offsets(&[0, 11], 10).unwrap_err().to_string();
+        assert!(e.contains("end at data.len()"), "{e}");
+        assert!(validate_csr_offsets(&[0, 5], 10).is_err());
+    }
+
+    #[test]
+    fn segment_tasks_degenerate_shapes() {
+        let devs = fleet();
+        // All segments empty over no data: no tasks.
+        assert!(segment_tasks(&ShardPlan::proportional(&devs, 0, 2), &[0, 0, 0]).is_empty());
+        // One segment spanning everything: tasks == shards.
+        let plan = ShardPlan::proportional(&devs, 90_000, 2);
+        let tasks = segment_tasks(&plan, &[0, 90_000]);
+        assert_eq!(tasks.len(), plan.shards.len());
+        assert!(tasks.iter().all(|t| t.segment == 0));
+        // Boundary at every element: one task per element, in order.
+        let plan = ShardPlan::proportional(&devs, 7, 1);
+        let offsets: Vec<usize> = (0..=7).collect();
+        let tasks = segment_tasks(&plan, &offsets);
+        assert_eq!(tasks.len(), 7);
+        for (i, t) in tasks.iter().enumerate() {
+            assert_eq!((t.segment, t.start, t.end), (i, i, i + 1));
         }
     }
 }

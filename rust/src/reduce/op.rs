@@ -155,7 +155,14 @@ impl Element for i32 {
     }
     #[inline(always)]
     fn from_f64(v: f64) -> Self {
-        v as i32
+        // Wrap, don't saturate: the device pool sums i32 payloads in
+        // the simulator's f64 domain (exact below 2^53) and maps the
+        // value back here, so an out-of-range integer sum must wrap
+        // modulo 2^32 exactly like `combine`'s `wrapping_add` — a
+        // bare `v as i32` would saturate at i32::MAX/MIN and diverge
+        // from the scalar oracle. The i64 hop truncates the exact
+        // integer, then the i64→i32 cast wraps.
+        (v as i64) as i32
     }
 }
 
@@ -262,5 +269,15 @@ mod tests {
         for x in [i32::MIN, -1, 0, 1, i32::MAX] {
             assert_eq!(i32::from_f64(x.to_f64()), x);
         }
+    }
+
+    #[test]
+    fn f64_embedding_wraps_out_of_range_sums() {
+        // The pool's exact f64 sum of [i32::MAX, 1] is 2^31; mapping
+        // it back must wrap to i32::MIN exactly like `wrapping_add`,
+        // not saturate at i32::MAX.
+        assert_eq!(i32::from_f64(2_147_483_648.0), i32::MIN);
+        assert_eq!(i32::from_f64(-2_147_483_649.0), i32::MAX);
+        assert_eq!(i32::from_f64(i32::MAX as f64 + 1.0), i32::combine(Op::Sum, i32::MAX, 1));
     }
 }

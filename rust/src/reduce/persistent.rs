@@ -422,6 +422,41 @@ impl PersistentPool {
         result
     }
 
+    /// Parallel gather: `out[j] = data[index[j]]` — the grouping copy
+    /// of the keyed front door
+    /// ([`crate::engine::Engine::reduce_by_key`] permutes values into
+    /// key-sorted order before the segmented pass). Panics if any
+    /// index is out of bounds (the panic propagates to the submitter;
+    /// the pool stays usable).
+    pub fn gather<T: Element>(&self, data: &[T], index: &[usize]) -> Vec<T> {
+        let n = index.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        if self.workers == 0 || n < SEQ_FALLBACK {
+            return index.iter().map(|&i| data[i]).collect();
+        }
+        let chunks = Self::chunk_count(n, self.width());
+        let chunk_len = n.div_ceil(chunks);
+        // Seed with an arbitrary in-bounds element; every slot is
+        // overwritten by exactly one chunk.
+        let mut out = vec![data[index[0]]; n];
+        let dst = SendPtr(out.as_mut_ptr());
+        self.run(chunks, &|c| {
+            let start = (c * chunk_len).min(n);
+            let end = (start + chunk_len).min(n);
+            // SAFETY: chunk ranges are disjoint and in-bounds; `out`
+            // outlives `run`, which blocks until every chunk is done.
+            unsafe {
+                let base = dst.0.add(start);
+                for (j, &i) in index[start..end].iter().enumerate() {
+                    *base.add(j) = data[i];
+                }
+            }
+        });
+        out
+    }
+
     /// Parallel lossless embedding into the simulator's f64 domain
     /// (the host-side cost of handing a payload to the device pool).
     pub fn map_f64<T: Element>(&self, data: &[T]) -> Vec<f64> {
@@ -465,10 +500,10 @@ impl Drop for PersistentPool {
 
 /// Raw-pointer wrapper so a chunk closure can write disjoint output
 /// ranges without a lock.
-struct SendPtr(*mut f64);
+struct SendPtr<T>(*mut T);
 // SAFETY: only used for writes to provably disjoint ranges.
-unsafe impl Send for SendPtr {}
-unsafe impl Sync for SendPtr {}
+unsafe impl<T: Send> Send for SendPtr<T> {}
+unsafe impl<T: Sync> Sync for SendPtr<T> {}
 
 fn worker_loop(shared: &Shared) {
     let mut seen = 0u64;
@@ -639,6 +674,36 @@ mod tests {
     #[should_panic(expected = "out of bounds")]
     fn ranges_reject_out_of_bounds() {
         PersistentPool::new(1).reduce_ranges_width(&data(10), &[(5, 11)], Op::Sum, 1);
+    }
+
+    #[test]
+    fn gather_permutes_and_handles_repeats() {
+        let pool = PersistentPool::new(3);
+        for n in [0usize, 1, 7, 20_000, 50_001] {
+            let d = data(n);
+            // Reverse permutation plus a run of repeated indices.
+            let mut index: Vec<usize> = (0..n).rev().collect();
+            if n > 2 {
+                index.extend([0usize, 0, n / 2]);
+            }
+            let got = pool.gather(&d, &index);
+            assert_eq!(got.len(), index.len());
+            for (j, &i) in index.iter().enumerate() {
+                assert_eq!(got[j], d[i], "slot {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn gather_rejects_out_of_bounds() {
+        let pool = PersistentPool::new(2);
+        let d = data(10);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.gather(&d, &[0, 10])
+        }));
+        assert!(result.is_err(), "out-of-bounds gather must panic");
+        // The pool survives.
+        assert_eq!(pool.reduce(&data(50_000), Op::Sum), scalar::reduce(&data(50_000), Op::Sum));
     }
 
     #[test]

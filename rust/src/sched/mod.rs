@@ -55,6 +55,27 @@ pub enum Decision {
     Sharded { devices: usize },
 }
 
+/// How a segmented (CSR) workload executes — the segmented rung of
+/// the ladder, decided once for the whole request rather than per
+/// segment (see [`Scheduler::decide_segments`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SegmentedDecision {
+    /// Per-segment placement on the host ladder: small segments fuse
+    /// into one persistent pass, large ones run full-width.
+    PerSegment,
+    /// **One** fleet pass over every segment
+    /// ([`crate::pool::DevicePool::reduce_segments_elems`],
+    /// `ExecPath::SegmentedPool`).
+    FleetPass { devices: usize },
+}
+
+/// Below this many segments the one-pass fleet rung is never chosen
+/// on the segment-count arm (the pool-knee arm still applies): with a
+/// handful of segments the host alternative is one fused persistent
+/// pass, which the per-task launch cost of a fleet wave cannot beat
+/// below the knee.
+pub const SEG_FLEET_MIN_SEGMENTS: usize = 1 << 10;
+
 /// The derived crossover cutoffs (elements) for one `(op, dtype)`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Cutoffs {
@@ -223,6 +244,76 @@ impl Scheduler {
             return Decision::Threaded { workers: 2.min(w) };
         }
         Decision::Threaded { workers: w }
+    }
+
+    /// The segmented rung: whether a CSR workload of `total` elements
+    /// in `segments` segments runs as **one** fleet pass or stays on
+    /// the host ladder per segment.
+    ///
+    /// Two arms take the fleet:
+    ///
+    /// * **the pool knee** — `total` at/above the same crossover
+    ///   [`Scheduler::decide`] applies to a flat buffer of that size.
+    ///   This is deliberately the *total*, not any per-segment length:
+    ///   a single segment spanning the whole buffer must take exactly
+    ///   the rung `reduce` on that buffer would (per-segment planning
+    ///   used to skip the pool knee check and could land one rung
+    ///   lower);
+    /// * **numerous segments** — below the knee, a many-small-segments
+    ///   workload (the RedFuser shape) where the modeled cost of one
+    ///   fleet wave (`pool overhead + tasks × SEG_TASK_OVERHEAD_S /
+    ///   devices + bytes / pool throughput`) undercuts the per-segment
+    ///   host loop (`segments × full-width overhead + bytes / host
+    ///   throughput`), gated at [`SEG_FLEET_MIN_SEGMENTS`] so ordinary
+    ///   small batches keep the fused host pass.
+    ///
+    /// The host alternative on the second arm is deliberately the
+    /// per-segment *loop*, not the engine's fused persistent pass —
+    /// which, wall-clock for wall-clock, is cheaper still for
+    /// all-small segments (one overhead instead of thousands). The
+    /// rung's job at that shape is *offload*: moving the
+    /// many-small-reductions workload onto the devices frees the host
+    /// runtime for request handling, and the wave is the cheapest
+    /// device-side execution available today (its per-task launch
+    /// cost is the price of reusing the flat kernel; a segmented
+    /// kernel amortizing launches across segments is the ROADMAP
+    /// follow-up, and `benches/segmented.rs` pins the wave's ≥2×
+    /// modeled win over the loop it replaces).
+    ///
+    /// [`Op::Prod`] never takes the fleet (same pin as
+    /// [`Scheduler::cutoffs`]: the pool's f64 embedding cannot
+    /// reproduce i32 wrapping products).
+    pub fn decide_segments(
+        &self,
+        op: Op,
+        dtype: Dtype,
+        total: usize,
+        segments: usize,
+    ) -> SegmentedDecision {
+        let devices = self.pool_devices();
+        if devices == 0 || op == Op::Prod || total == 0 {
+            return SegmentedDecision::PerSegment;
+        }
+        let c = self.cutoffs(op, dtype);
+        if total >= c.pool {
+            return SegmentedDecision::FleetPass { devices };
+        }
+        if segments >= SEG_FLEET_MIN_SEGMENTS {
+            let bytes = (total * dtype.size_bytes()) as f64;
+            let m = self.model();
+            let full = m.profile(Backend::ThreadedFull, op, dtype);
+            let pool = m.profile(Backend::Pool, op, dtype);
+            if full.bytes_per_s > 0.0 && pool.bytes_per_s > 0.0 {
+                let host_loop_s = segments as f64 * full.overhead_s + bytes / full.bytes_per_s;
+                let fleet_s = pool.overhead_s
+                    + segments as f64 * model::SEG_TASK_OVERHEAD_S / devices as f64
+                    + bytes / pool.bytes_per_s;
+                if fleet_s < host_loop_s {
+                    return SegmentedDecision::FleetPass { devices };
+                }
+            }
+        }
+        SegmentedDecision::PerSegment
     }
 
     /// Record one observed execution (no-op unless adaptive).
@@ -501,6 +592,79 @@ mod tests {
             s.decide(Op::Sum, Dtype::F32, (1 << 21) - 1, false),
             Decision::Threaded { .. }
         ));
+    }
+
+    #[test]
+    fn single_span_segment_decides_like_reduce() {
+        // The fix this PR pins: a single segment spanning the whole
+        // buffer must land on the same rung `decide` gives that
+        // buffer — fleet iff the flat reduction would shard. Swept
+        // across both sides of every knee, with derived and pinned
+        // pool cutoffs.
+        for cutoff in [None, Some(1 << 16)] {
+            let s = pooled(false, cutoff);
+            for op in Op::ALL {
+                for dtype in [Dtype::F32, Dtype::I32] {
+                    let c = s.cutoffs(op, dtype);
+                    let mut ns = vec![1usize, c.seq, c.thread, 1 << 22];
+                    if c.pool < usize::MAX {
+                        ns.extend([c.pool - 1, c.pool, c.pool + 1]);
+                    }
+                    for n in ns {
+                        let flat = s.decide(op, dtype, n, false);
+                        let seg = s.decide_segments(op, dtype, n, 1);
+                        match flat {
+                            Decision::Sharded { devices } => assert_eq!(
+                                seg,
+                                SegmentedDecision::FleetPass { devices },
+                                "{op}/{dtype} n={n}"
+                            ),
+                            _ => assert_eq!(
+                                seg,
+                                SegmentedDecision::PerSegment,
+                                "{op}/{dtype} n={n}"
+                            ),
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn numerous_small_segments_take_the_one_pass_fleet_rung() {
+        let s = pooled(false, None);
+        let c = s.cutoffs(Op::Sum, Dtype::F32);
+        // 10k segments of ~100 elements: total sits below the pool
+        // knee, but one fleet wave undercuts 10k per-segment host
+        // passes in the cost model.
+        let total = 10_000 * 100;
+        assert!(total < c.pool, "workload must sit below the knee for this test");
+        assert_eq!(
+            s.decide_segments(Op::Sum, Dtype::F32, total, 10_000),
+            SegmentedDecision::FleetPass { devices: 4 }
+        );
+        // A handful of segments of the same total stays on the host
+        // ladder (the gate, then the knee, keep it there).
+        assert_eq!(
+            s.decide_segments(Op::Sum, Dtype::F32, total, 8),
+            SegmentedDecision::PerSegment
+        );
+        // Products never take the fleet, knee or not.
+        assert_eq!(
+            s.decide_segments(Op::Prod, Dtype::I32, 1 << 24, 10_000),
+            SegmentedDecision::PerSegment
+        );
+        // No pool, no fleet pass.
+        assert_eq!(
+            Scheduler::host(8).decide_segments(Op::Sum, Dtype::F32, 1 << 24, 10_000),
+            SegmentedDecision::PerSegment
+        );
+        // Degenerate: zero elements, zero segments.
+        assert_eq!(
+            s.decide_segments(Op::Sum, Dtype::F32, 0, 0),
+            SegmentedDecision::PerSegment
+        );
     }
 
     #[test]

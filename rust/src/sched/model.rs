@@ -90,6 +90,13 @@ pub const FULL_OVERHEAD_S: f64 = 6.5e-6;
 /// the host→pool crossover at ~2^20 elements, matching the serving
 /// default that used to be hardcoded.
 pub const POOL_OVERHEAD_S: f64 = 1.5e-4;
+/// Modeled per-task cost of the one-pass segmented fleet rung: each
+/// segment piece is one (mostly single-launch) kernel run, so a pass
+/// over `k` segments pays roughly `k × this / devices` on top of the
+/// dispatch overhead — the term that keeps few-segment workloads off
+/// the fleet below the pool knee. Matches the devices' ~5 µs modeled
+/// launch overhead ([`crate::gpusim::DeviceConfig::launch_overhead_us`]).
+pub const SEG_TASK_OVERHEAD_S: f64 = 5.0e-6;
 
 /// EWMA of observed bytes/s per `(backend, op, dtype)`, with
 /// per-backend priors.

@@ -1,0 +1,321 @@
+//! Differential conformance: **one** generator of (op × dtype × size
+//! × shape) cases driven through **every** ExecPath — sequential,
+//! persistent narrow/full, sharded fleet, segmented host, segmented
+//! one-pass fleet, keyed — and pinned to one scalar oracle: i32
+//! results bit-identical, f32 sums within 1e-5 (relative to each
+//! reduction's L1 mass) of the Neumaier reference. This table-driven
+//! harness is the single place the cross-path numerics contract
+//! lives; per-path suites keep their behavioural tests but defer the
+//! oracle pinning here. A committed regression corpus
+//! (`tests/fixtures/segmented_corpus.json`) replays shrink-friendly
+//! boundary cases through the same rails.
+
+use std::collections::BTreeMap;
+
+use parred::gpusim::DeviceConfig;
+use parred::reduce::{kahan, persistent, scalar, simd, Element, Op};
+use parred::util::json::Json;
+use parred::util::rng::Rng;
+use parred::{Engine, ExecPath};
+
+/// Tiny pinned pool crossover so modest payloads reach the fleet
+/// rungs (and the conformance sweep stays fast).
+const CUTOFF: usize = 1 << 14;
+
+/// The size axis of the case table: boundaries (0/1/2), a sub-lane
+/// width, both sides of the pinned fleet knee, and a comfortably
+/// fleet-sized payload.
+const SIZES: &[usize] = &[0, 1, 2, 7, 255, 4_096, CUTOFF - 1, CUTOFF, 40_000, 1 << 17];
+
+fn host_engine() -> Engine {
+    Engine::builder().host_workers(4).build().expect("host engine")
+}
+
+fn pooled_engine() -> Engine {
+    Engine::builder()
+        .host_workers(4)
+        .fleet(vec![DeviceConfig::tesla_c2075(); 3])
+        .pool_cutoff(Some(CUTOFF))
+        .build()
+        .expect("pooled engine")
+}
+
+/// Deterministic ragged offsets over `n` elements: empties, single
+/// elements and chunky segments mixed (shape axis of the case table).
+fn ragged_offsets(n: usize, seed: u64) -> Vec<usize> {
+    let mut rng = Rng::new(seed);
+    let mut offsets = vec![0usize];
+    while *offsets.last().unwrap() < n {
+        let here = *offsets.last().unwrap();
+        let len = match rng.below(5) {
+            0 => 0,
+            1 => 1,
+            2 => rng.range(2, 64),
+            _ => rng.range(64, 6_000),
+        };
+        offsets.push((here + len).min(n));
+    }
+    offsets
+}
+
+/// The keyed oracle: fold values into a sorted map in input order.
+/// Every supported op is associative and commutative (i32 sums and
+/// products wrap), so fold order cannot change the i32 result.
+fn keyed_oracle_i32(keys: &[i64], vals: &[i32], op: Op) -> Vec<(i64, i32)> {
+    let mut m: BTreeMap<i64, i32> = BTreeMap::new();
+    for (&k, &v) in keys.iter().zip(vals) {
+        m.entry(k).and_modify(|a| *a = i32::combine(op, *a, v)).or_insert(v);
+    }
+    m.into_iter().collect()
+}
+
+fn assert_close(got: f32, want: f64, l1: f64, ctx: &str) {
+    assert!(
+        (got as f64 - want).abs() <= 1e-5 * l1.max(1.0),
+        "{ctx}: got {got}, Neumaier oracle {want} (L1 {l1:.3e})"
+    );
+}
+
+#[test]
+fn scalar_rails_i32_bit_identical_on_every_path() {
+    let host = host_engine();
+    let pooled = pooled_engine();
+    for (ci, &n) in SIZES.iter().enumerate() {
+        let data = Rng::new(1_000 + ci as u64).i32_vec(n, -500, 500);
+        for op in Op::ALL {
+            let ctx = format!("i32 {op} n={n}");
+            let oracle = scalar::reduce(&data, op);
+            // Sequential unrolled loop.
+            assert_eq!(simd::reduce(&data, op), oracle, "{ctx}: simd");
+            // Persistent runtime, narrow band and full width.
+            assert_eq!(persistent::global().reduce_width(&data, op, 2), oracle, "{ctx}: w2");
+            assert_eq!(persistent::global().reduce_width(&data, op, 8), oracle, "{ctx}: w8");
+            // Engine host ladder.
+            let r = host.reduce(&data).op(op).run().unwrap();
+            assert_eq!(r.value, oracle, "{ctx}: engine host");
+            assert_eq!(r.path, ExecPath::Host, "{ctx}");
+            // Engine fleet ladder: shards past the knee — except Prod,
+            // which is pinned to the host (the fleet's f64 embedding
+            // cannot reproduce i32 wrapping products).
+            let r = pooled.reduce(&data).op(op).run().unwrap();
+            assert_eq!(r.value, oracle, "{ctx}: engine pooled");
+            if op == Op::Prod {
+                assert!(
+                    !matches!(r.path, ExecPath::Sharded { .. }),
+                    "{ctx}: Prod must never shard"
+                );
+            } else if n >= CUTOFF {
+                assert_eq!(r.path, ExecPath::Sharded { devices: 3 }, "{ctx}");
+            } else {
+                assert_eq!(r.path, ExecPath::Host, "{ctx}");
+            }
+        }
+    }
+}
+
+#[test]
+fn scalar_rails_f32_within_1e5_of_neumaier() {
+    let host = host_engine();
+    let pooled = pooled_engine();
+    for (ci, &n) in SIZES.iter().enumerate() {
+        let data = Rng::new(2_000 + ci as u64).f32_vec(n, -1.0, 1.0);
+        let want = kahan::sum_f64(&data);
+        let l1: f64 = data.iter().map(|&x| x.abs() as f64).sum();
+        let ctx = format!("f32 sum n={n}");
+        assert_close(simd::reduce(&data, Op::Sum), want, l1, &format!("{ctx}: simd"));
+        assert_close(
+            persistent::global().reduce_width(&data, Op::Sum, 8),
+            want,
+            l1,
+            &format!("{ctx}: w8"),
+        );
+        let r = host.reduce(&data).op(Op::Sum).run().unwrap();
+        assert_close(r.value, want, l1, &format!("{ctx}: engine host"));
+        let r = pooled.reduce(&data).op(Op::Sum).run().unwrap();
+        assert_close(r.value, want, l1, &format!("{ctx}: engine pooled"));
+        // Min/Max have a unique answer: exact on every path.
+        for op in [Op::Min, Op::Max] {
+            let oracle = scalar::reduce(&data, op);
+            assert_eq!(simd::reduce(&data, op), oracle, "{ctx}: simd {op}");
+            let r = pooled.reduce(&data).op(op).run().unwrap();
+            assert_eq!(r.value, oracle, "{ctx}: pooled {op}");
+        }
+    }
+}
+
+#[test]
+fn segmented_rails_i32_bit_identical_host_and_fleet() {
+    let host = host_engine();
+    let pooled = pooled_engine();
+    for (ci, &n) in SIZES.iter().enumerate() {
+        let data = Rng::new(3_000 + ci as u64).i32_vec(n, -500, 500);
+        let offsets = ragged_offsets(n, 4_000 + ci as u64);
+        let segments = offsets.len() - 1;
+        for op in Op::ALL {
+            let ctx = format!("i32 {op} n={n} segments={segments}");
+            let oracle: Vec<i32> =
+                offsets.windows(2).map(|w| scalar::reduce(&data[w[0]..w[1]], op)).collect();
+            // Host rung.
+            let r = host.reduce_segments(&data, &offsets).op(op).run().unwrap();
+            assert_eq!(r.value, oracle, "{ctx}: host rung");
+            assert_eq!(r.path, ExecPath::Segmented { segments }, "{ctx}");
+            // One-pass fleet rung, pinned so every size exercises it
+            // (Prod ignores the pin and stays host — same values).
+            let r = pooled.reduce_segments(&data, &offsets).op(op).via_fleet().run().unwrap();
+            assert_eq!(r.value, oracle, "{ctx}: fleet rung");
+            if op == Op::Prod {
+                assert_eq!(r.path, ExecPath::Segmented { segments }, "{ctx}: Prod pin");
+            } else if n > 0 {
+                assert_eq!(r.path, ExecPath::SegmentedPool { segments, devices: 3 }, "{ctx}");
+            }
+            // Single segment spanning the whole buffer equals the
+            // scalar oracle on both rungs.
+            let span = [0, n];
+            let r = host.reduce_segments(&data, &span).op(op).run().unwrap();
+            assert_eq!(r.value, vec![scalar::reduce(&data, op)], "{ctx}: host span");
+            let r = pooled.reduce_segments(&data, &span).op(op).via_fleet().run().unwrap();
+            assert_eq!(r.value, vec![scalar::reduce(&data, op)], "{ctx}: fleet span");
+        }
+    }
+}
+
+#[test]
+fn segmented_rails_f32_within_1e5_per_segment() {
+    let host = host_engine();
+    let pooled = pooled_engine();
+    for (ci, &n) in SIZES.iter().enumerate() {
+        let data = Rng::new(5_000 + ci as u64).f32_vec(n, -1.0, 1.0);
+        let offsets = ragged_offsets(n, 6_000 + ci as u64);
+        let hosted = host.reduce_segments(&data, &offsets).run().unwrap();
+        let fleet = pooled.reduce_segments(&data, &offsets).via_fleet().run().unwrap();
+        for (s, w) in offsets.windows(2).enumerate() {
+            let seg = &data[w[0]..w[1]];
+            let want = kahan::sum_f64(seg);
+            let l1: f64 = seg.iter().map(|&x| x.abs() as f64).sum();
+            let ctx = format!("f32 sum n={n} segment {s}");
+            assert_close(hosted.value[s], want, l1, &format!("{ctx}: host rung"));
+            assert_close(fleet.value[s], want, l1, &format!("{ctx}: fleet rung"));
+        }
+    }
+}
+
+#[test]
+fn keyed_rails_match_the_grouped_oracle() {
+    let host = host_engine();
+    let pooled = pooled_engine();
+    for (ci, &n) in SIZES.iter().enumerate() {
+        let mut rng = Rng::new(7_000 + ci as u64);
+        let vals = rng.i32_vec(n, -500, 500);
+        // Three key shapes per size: duplicate-heavy unsorted, a
+        // single key, and all-distinct (sorted — the no-copy path).
+        let dup: Vec<i64> = (0..n).map(|_| rng.range(0, 12) as i64 - 6).collect();
+        let single = vec![42i64; n];
+        let distinct: Vec<i64> = (0..n as i64).collect();
+        for (shape, keys) in [("dup", &dup), ("single", &single), ("distinct", &distinct)] {
+            // All-distinct keys at large n mean one fleet task per
+            // element — minutes of simulator time for no extra
+            // numeric coverage; the fleet rung sees that shape at
+            // moderate sizes only.
+            let fleet_too = shape != "distinct" || n <= 4_096;
+            for op in Op::ALL {
+                let ctx = format!("i32 {op} n={n} keys={shape}");
+                let want = keyed_oracle_i32(keys, &vals, op);
+                let r = host.reduce_by_key(keys, &vals).op(op).run().unwrap();
+                assert_eq!(r.value, want, "{ctx}: host");
+                assert_eq!(r.path, ExecPath::Keyed { groups: want.len() }, "{ctx}");
+                if fleet_too {
+                    let r = pooled.reduce_by_key(keys, &vals).op(op).via_fleet().run().unwrap();
+                    assert_eq!(r.value, want, "{ctx}: fleet-pinned");
+                }
+            }
+        }
+        // f32 sums: per-group Neumaier tolerance on the duplicate-key
+        // shape through both engines.
+        let fvals = rng.f32_vec(n, -1.0, 1.0);
+        let hosted = host.reduce_by_key(&dup, &fvals).run().unwrap();
+        let fleet = pooled.reduce_by_key(&dup, &fvals).via_fleet().run().unwrap();
+        assert_eq!(hosted.value.len(), fleet.value.len(), "n={n}");
+        for (gi, (k, got)) in hosted.value.iter().enumerate() {
+            let grouped: Vec<f32> = dup
+                .iter()
+                .zip(&fvals)
+                .filter(|&(kk, _)| kk == k)
+                .map(|(_, &v)| v)
+                .collect();
+            let want = kahan::sum_f64(&grouped);
+            let l1: f64 = grouped.iter().map(|&x| x.abs() as f64).sum();
+            let ctx = format!("f32 sum n={n} group {k}");
+            assert_close(*got, want, l1, &format!("{ctx}: host"));
+            assert_eq!(fleet.value[gi].0, *k, "{ctx}: group order");
+            assert_close(fleet.value[gi].1, want, l1, &format!("{ctx}: fleet"));
+        }
+    }
+}
+
+// ---------------------------------------------------------------
+// Committed regression corpus: shrink-friendly boundary cases
+// replayed through the same rails.
+// ---------------------------------------------------------------
+
+fn corpus() -> Json {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/fixtures/segmented_corpus.json");
+    let text = std::fs::read_to_string(path).expect("reading segmented_corpus.json");
+    Json::parse(&text).expect("parsing segmented_corpus.json")
+}
+
+fn as_i32_vec(j: &Json) -> Vec<i32> {
+    j.as_arr()
+        .expect("corpus array")
+        .iter()
+        .map(|v| v.as_f64().expect("corpus number") as i32)
+        .collect()
+}
+
+fn as_i64_vec(j: &Json) -> Vec<i64> {
+    j.as_arr()
+        .expect("corpus array")
+        .iter()
+        .map(|v| v.as_f64().expect("corpus number") as i64)
+        .collect()
+}
+
+#[test]
+fn corpus_replays_identically_on_every_rung() {
+    let doc = corpus();
+    let host = host_engine();
+    let pooled = pooled_engine();
+
+    for case in doc.field("segments").unwrap().as_arr().unwrap() {
+        let name = case.field("name").unwrap().as_str().unwrap();
+        let op = Op::parse(case.field("op").unwrap().as_str().unwrap())
+            .unwrap_or_else(|| panic!("corpus case {name}: bad op"));
+        let values = as_i32_vec(case.field("values").unwrap());
+        let offsets: Vec<usize> = case
+            .field("offsets")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_usize().expect("corpus offset"))
+            .collect();
+        let oracle: Vec<i32> =
+            offsets.windows(2).map(|w| scalar::reduce(&values[w[0]..w[1]], op)).collect();
+        let r = host.reduce_segments(&values, &offsets).op(op).run().unwrap();
+        assert_eq!(r.value, oracle, "corpus {name}: host rung");
+        let r = pooled.reduce_segments(&values, &offsets).op(op).via_fleet().run().unwrap();
+        assert_eq!(r.value, oracle, "corpus {name}: fleet rung");
+    }
+
+    for case in doc.field("keyed").unwrap().as_arr().unwrap() {
+        let name = case.field("name").unwrap().as_str().unwrap();
+        let op = Op::parse(case.field("op").unwrap().as_str().unwrap())
+            .unwrap_or_else(|| panic!("corpus case {name}: bad op"));
+        let keys = as_i64_vec(case.field("keys").unwrap());
+        let values = as_i32_vec(case.field("values").unwrap());
+        let want = keyed_oracle_i32(&keys, &values, op);
+        let r = host.reduce_by_key(&keys, &values).op(op).run().unwrap();
+        assert_eq!(r.value, want, "corpus {name}: host");
+        let r = pooled.reduce_by_key(&keys, &values).op(op).via_fleet().run().unwrap();
+        assert_eq!(r.value, want, "corpus {name}: fleet-pinned");
+    }
+}

@@ -208,6 +208,70 @@ fn host_fusion_end_to_end_without_artifacts() {
 }
 
 #[test]
+fn keyed_requests_fuse_end_to_end_without_artifacts() {
+    // Keyed (group-by) serving needs no artifacts: a burst of
+    // same-(op, dtype) keyed requests must fuse into one segmented
+    // pass, and every response must match a per-request HashMap
+    // oracle.
+    use std::collections::HashMap;
+    let cfg = ServiceConfig {
+        artifacts_dir: concat!(env!("CARGO_MANIFEST_DIR"), "/tests/fixtures/empty_artifacts")
+            .to_string(),
+        batch_window: Duration::from_millis(50),
+        max_queue: 1000,
+        workers: 4,
+        warmup: false,
+        ..ServiceConfig::default()
+    };
+    let svc = Service::start(cfg).unwrap();
+    let mut rng = parred::util::rng::Rng::new(77);
+    let mut cases = Vec::new();
+    for _ in 0..5 {
+        let n = 4_000;
+        let keys: Vec<i64> = (0..n).map(|_| rng.range(0, 6) as i64).collect();
+        let values: Vec<i32> = rng.i32_vec(n, -500, 500);
+        cases.push((keys, values));
+    }
+    let rxs: Vec<_> = cases
+        .iter()
+        .map(|(k, v)| {
+            svc.submit_by_key(Op::Sum, k.clone(), HostVec::I32(v.clone())).unwrap()
+        })
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        let groups = resp.groups.unwrap();
+        let (keys, values) = &cases[i];
+        let mut want: HashMap<i64, i32> = HashMap::new();
+        for (k, v) in keys.iter().zip(values) {
+            let e = want.entry(*k).or_insert(0);
+            *e = e.wrapping_add(*v);
+        }
+        assert_eq!(groups.len(), want.len(), "request {i}");
+        let mut last_key = i64::MIN;
+        for (k, v) in &groups {
+            assert!(*k > last_key, "request {i}: keys must ascend");
+            last_key = *k;
+            let HostScalar::I32(v) = v else { panic!("dtype") };
+            assert_eq!(*v, want[k], "request {i} group {k}");
+        }
+        assert!(
+            matches!(resp.path, ExecPath::Keyed { .. }),
+            "request {i}: expected the keyed path, got {:?}",
+            resp.path
+        );
+    }
+    // A length mismatch is rejected at submit time.
+    assert!(svc.submit_by_key(Op::Sum, vec![1, 2], HostVec::I32(vec![1])).is_err());
+    let m = svc.shutdown();
+    assert_eq!(m.keyed_requests, 5);
+    assert!(m.keyed_fused_batches >= 1, "a burst must fuse at least once");
+    assert!(m.keyed_fused_groups >= 6, "fused batches carry the groups");
+    let report = m.report();
+    assert!(report.contains("keyed:"), "{report}");
+}
+
+#[test]
 fn startup_fails_cleanly_without_artifacts() {
     let cfg = ServiceConfig {
         artifacts_dir: "/nonexistent/path".into(),

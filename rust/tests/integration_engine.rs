@@ -65,8 +65,9 @@ fn engine_reaches_every_exec_path() {
     assert_eq!(r.value, want);
     assert!(r.shards >= rows, "each row shards at least once");
 
-    // Segmented: small + wide + fleet segments in one request.
-    let lens = [0usize, 3, 5_000, 40_000, CUTOFF + 1];
+    // Segmented, host rung: total below the pool knee — small
+    // segments fuse, the wide one runs full-width.
+    let lens = [0usize, 3, 5_000, 40_000];
     let mut offsets = vec![0usize];
     for l in lens {
         offsets.push(offsets.last().unwrap() + l);
@@ -77,7 +78,39 @@ fn engine_reaches_every_exec_path() {
     for (s, w) in offsets.windows(2).enumerate() {
         assert_eq!(r.value[s], scalar::reduce(&data[w[0]..w[1]], Op::Sum), "segment {s}");
     }
-    assert!(r.shards >= 3, "the fleet segment sharded, got {}", r.shards);
+    assert_eq!(r.shards, 0, "host rung carries no fleet stats");
+
+    // Segmented, one-pass fleet rung: total past the knee — every
+    // segment (empty and tiny ones included) executes in ONE wave.
+    let lens = [0usize, 3, 5_000, 40_000, CUTOFF + 1];
+    let mut offsets = vec![0usize];
+    for l in lens {
+        offsets.push(offsets.last().unwrap() + l);
+    }
+    let data = Rng::new(6).i32_vec(*offsets.last().unwrap(), -500, 500);
+    let r = e.reduce_segments(&data, &offsets).op(Op::Sum).run().unwrap();
+    assert_eq!(r.path, ExecPath::SegmentedPool { segments: lens.len(), devices: 3 });
+    for (s, w) in offsets.windows(2).enumerate() {
+        assert_eq!(r.value[s], scalar::reduce(&data[w[0]..w[1]], Op::Sum), "segment {s}");
+    }
+    assert!(r.shards >= 4, "every non-empty segment contributed a task, got {}", r.shards);
+    assert!(r.modeled_wall_s > 0.0);
+
+    // Keyed: group-by routed through the same ladder.
+    let n = 20_000usize;
+    let vals = Rng::new(7).i32_vec(n, -500, 500);
+    let keys: Vec<i64> = (0..n).map(|i| (i % 5) as i64).collect();
+    let r = e.reduce_by_key(&keys, &vals).op(Op::Sum).run().unwrap();
+    assert_eq!(r.path, ExecPath::Keyed { groups: 5 });
+    for (k, v) in &r.value {
+        let want = vals
+            .iter()
+            .zip(&keys)
+            .filter(|&(_, kk)| kk == k)
+            .map(|(&x, _)| x)
+            .fold(0i32, |a, b| a.wrapping_add(b));
+        assert_eq!(*v, want, "group {k}");
+    }
 }
 
 #[test]
@@ -115,10 +148,11 @@ fn engine_float_sums_stay_within_1e5_of_neumaier() {
         r.value
     );
 
-    // Segmented: per-segment Neumaier comparison across all paths.
-    // Host-fused segments accumulate in f32, so the tolerance is
-    // relative to the segment's L1 mass (the same convention the
-    // persistent-runtime proptests pin).
+    // Segmented: per-segment Neumaier comparison. This total sits
+    // past the knee, so the whole request runs as one fleet pass; the
+    // tolerance stays relative to each segment's L1 mass (the same
+    // convention the persistent-runtime proptests pin, and which the
+    // host rung's f32 accumulation also meets).
     let offsets = [0usize, 1, 1, 10_000, 50_000, 1 << 18];
     let r = e.reduce_segments(&data, &offsets).op(Op::Sum).run().unwrap();
     for (s, w) in offsets.windows(2).enumerate() {
@@ -206,4 +240,164 @@ fn snapshot_round_trips_through_the_builder() {
         .build()
         .is_err());
     let _ = std::fs::remove_file(&bad);
+}
+
+#[test]
+fn snapshot_with_mismatched_fleet_width_keeps_cutoffs_drops_factors() {
+    use parred::sched::Backend;
+
+    // Warm a 2-device adaptive engine until both its pool profile and
+    // its fleet factors moved, then restart into a 4-device engine:
+    // the (device-independent) profiles must re-derive the cutoffs,
+    // while the positional factors are ignored.
+    let warm = Engine::builder()
+        .host_workers(2)
+        .fleet(vec![DeviceConfig::tesla_c2075(); 2])
+        .adaptive(true)
+        .build()
+        .unwrap();
+    let slow = 2.0 * 76.8e9 / 8.0;
+    for _ in 0..32 {
+        warm.scheduler().observe(
+            Backend::Pool,
+            Op::Sum,
+            Dtype::F32,
+            1 << 20,
+            (4 << 20) as f64 / slow,
+        );
+        warm.scheduler().observe_busy(&[3.0, 1.0]);
+    }
+    assert_ne!(warm.scheduler().fleet_factors(2), vec![1.0; 2], "warm-up must skew factors");
+    let path = std::env::temp_dir().join(format!("parred_width_{}.json", std::process::id()));
+    std::fs::write(&path, warm.scheduler().snapshot_json()).unwrap();
+
+    let fresh = Engine::builder()
+        .host_workers(2)
+        .fleet(vec![DeviceConfig::tesla_c2075(); 4])
+        .adaptive(true)
+        .sched_snapshot(path.to_string_lossy())
+        .build()
+        .unwrap();
+    // Factors are positional: a 2-wide snapshot must not re-weight a
+    // 4-wide fleet...
+    assert_eq!(fresh.scheduler().fleet_factors(4), vec![1.0; 4]);
+    assert_eq!(fresh.scheduler().fleet_outcomes(), 0);
+    // ...but the learned pool profile still lands, so the derived
+    // pool cutoff reflects the warm observations (the 4-device prior
+    // alone would derive a different knee).
+    let got = fresh.scheduler().cutoffs(Op::Sum, Dtype::F32);
+    let cold = Engine::builder()
+        .host_workers(2)
+        .fleet(vec![DeviceConfig::tesla_c2075(); 4])
+        .adaptive(true)
+        .build()
+        .unwrap();
+    assert_ne!(got, cold.scheduler().cutoffs(Op::Sum, Dtype::F32), "profiles must load");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn zero_length_inputs_on_every_builder() {
+    let e = pooled_engine();
+    let empty_i: [i32; 0] = [];
+    let empty_f: [f32; 0] = [];
+    for op in Op::ALL {
+        // Scalar: the identity element, on the host path.
+        let r = e.reduce(&empty_i).op(op).run().unwrap();
+        assert_eq!(r.value, <i32 as parred::reduce::Element>::identity(op), "{op}");
+        assert_eq!(r.path, ExecPath::Host);
+        let r = e.reduce(&empty_f).op(op).run().unwrap();
+        assert_eq!(r.value, <f32 as parred::reduce::Element>::identity(op), "{op}");
+        // Rows: zero rows, no values.
+        let r = e.reduce_rows(&empty_i, 7).op(op).run().unwrap();
+        assert!(r.value.is_empty(), "{op}");
+        // Segments: zero segments over no data.
+        let r = e.reduce_segments(&empty_i, &[0]).op(op).run().unwrap();
+        assert!(r.value.is_empty(), "{op}");
+        assert_eq!(r.path, ExecPath::Segmented { segments: 0 });
+        // Keyed: no pairs.
+        let r = e.reduce_by_key::<i64, i32>(&[], &[]).op(op).run().unwrap();
+        assert!(r.value.is_empty(), "{op}");
+        assert_eq!(r.path, ExecPath::Keyed { groups: 0 });
+    }
+}
+
+#[test]
+fn bad_offsets_error_instead_of_panicking() {
+    let e = pooled_engine();
+    let data = Rng::new(13).i32_vec(100, -500, 500);
+    for offsets in [
+        &[][..],                // no boundaries at all
+        &[5, 100][..],          // first not zero
+        &[0, 60, 30, 100][..],  // non-monotone
+        &[0, 101][..],          // exceeds data.len()
+        &[0, 40, 120][..],      // middle past the end
+        &[0, 50][..],           // stops short
+    ] {
+        assert!(
+            e.reduce_segments(&data, offsets).run().is_err(),
+            "offsets {offsets:?} must be rejected"
+        );
+        // The fleet pin goes through the same validation.
+        assert!(
+            e.reduce_segments(&data, offsets).via_fleet().run().is_err(),
+            "offsets {offsets:?} must be rejected on the fleet rung too"
+        );
+    }
+}
+
+#[test]
+fn single_span_segment_takes_the_same_rung_as_reduce() {
+    // The satellite fix: `reduce_segments` with one segment spanning
+    // the whole buffer decides exactly like `reduce` on that buffer —
+    // fleet iff the flat reduction shards.
+    let e = pooled_engine();
+    for n in [10_000usize, CUTOFF - 1, CUTOFF, CUTOFF + 17, 1 << 18] {
+        let data = Rng::new(n as u64).i32_vec(n, -500, 500);
+        let flat = e.reduce(&data).op(Op::Sum).run().unwrap();
+        let seg = e.reduce_segments(&data, &[0, n]).op(Op::Sum).run().unwrap();
+        assert_eq!(seg.value, vec![flat.value], "n={n}");
+        let flat_fleet = matches!(flat.path, ExecPath::Sharded { .. });
+        let seg_fleet = matches!(seg.path, ExecPath::SegmentedPool { .. });
+        assert_eq!(
+            flat_fleet,
+            seg_fleet,
+            "n={n}: reduce took {:?} but reduce_segments took {:?}",
+            flat.path,
+            seg.path
+        );
+    }
+}
+
+#[test]
+fn via_fleet_pins_segments_and_keyed_to_the_pool() {
+    let e = pooled_engine();
+    // Below the knee and far under the segment-count gate: the
+    // scheduler would keep this on the host...
+    let lens = [5usize, 0, 700, 2_000];
+    let mut offsets = vec![0usize];
+    for l in lens {
+        offsets.push(offsets.last().unwrap() + l);
+    }
+    let data = Rng::new(23).i32_vec(*offsets.last().unwrap(), -500, 500);
+    let hosted = e.reduce_segments(&data, &offsets).op(Op::Sum).run().unwrap();
+    assert_eq!(hosted.path, ExecPath::Segmented { segments: lens.len() });
+    // ...but the pin forces one fleet wave, with identical values.
+    let pinned = e.reduce_segments(&data, &offsets).op(Op::Sum).via_fleet().run().unwrap();
+    assert_eq!(pinned.path, ExecPath::SegmentedPool { segments: lens.len(), devices: 3 });
+    assert_eq!(pinned.value, hosted.value);
+    assert!(pinned.shards >= 3);
+    // Products ignore the pin (host-only semantics).
+    let prod = e.reduce_segments(&data, &offsets).op(Op::Prod).via_fleet().run().unwrap();
+    assert_eq!(prod.path, ExecPath::Segmented { segments: lens.len() });
+    for (s, w) in offsets.windows(2).enumerate() {
+        assert_eq!(prod.value[s], scalar::reduce(&data[w[0]..w[1]], Op::Prod), "segment {s}");
+    }
+    // Keyed passes pin the same way, values unchanged.
+    let keys: Vec<i64> = (0..data.len()).map(|i| (i % 7) as i64).collect();
+    let hosted = e.reduce_by_key(&keys, &data).op(Op::Min).run().unwrap();
+    let pinned = e.reduce_by_key(&keys, &data).op(Op::Min).via_fleet().run().unwrap();
+    assert_eq!(hosted.value, pinned.value);
+    assert_eq!(hosted.shards, 0);
+    assert!(pinned.shards > 0, "the pinned keyed pass must run on the fleet");
 }

@@ -580,6 +580,143 @@ fn prop_batcher_never_reorders_within_key() {
 }
 
 #[test]
+fn prop_reduce_by_key_matches_hashmap_oracle() {
+    use parred::Engine;
+    use std::collections::BTreeMap;
+
+    // The by-key front door against a map-fold oracle: unsorted,
+    // duplicate-heavy, single-key and empty inputs, across ops and
+    // host/pooled engines. Every supported op is associative and
+    // commutative (i32 wraps), so the oracle's fold order is
+    // irrelevant — results must be bit-identical.
+    check(
+        "engine reduce_by_key == grouped scalar oracle",
+        12,
+        |rng| {
+            let n = parred::util::prop::sizes(rng, 60_000); // zero allowed
+            let distinct = 1 + rng.range(0, 9);
+            let keys: Vec<i64> = match rng.below(3) {
+                0 => vec![7; n],                                        // one key
+                1 => (0..n).map(|i| (i % distinct) as i64).collect(),   // cyclic (unsorted)
+                _ => (0..n).map(|_| rng.range(0, distinct - 1) as i64 - 3).collect(),
+            };
+            let pooled = rng.below(2) == 0;
+            (keys, rng.i32_vec(n, -1000, 1000), pooled)
+        },
+        |(keys, vals, pooled)| {
+            let mut b = Engine::builder().host_workers(4);
+            if *pooled {
+                b = b
+                    .fleet(vec![DeviceConfig::tesla_c2075(); 2])
+                    .pool_cutoff(Some(16_384));
+            }
+            let engine = b.build().map_err(|e| format!("{e:#}"))?;
+            for op in Op::ALL {
+                let mut want: BTreeMap<i64, i32> = BTreeMap::new();
+                for (&k, &v) in keys.iter().zip(vals) {
+                    want.entry(k).and_modify(|a| *a = i32::combine(op, *a, v)).or_insert(v);
+                }
+                let want: Vec<(i64, i32)> = want.into_iter().collect();
+                let r = engine
+                    .reduce_by_key(keys, vals)
+                    .op(op)
+                    .run()
+                    .map_err(|e| format!("{e:#}"))?;
+                if r.value != want {
+                    return Err(format!(
+                        "{op}: {} groups != oracle {} groups (n={})",
+                        r.value.len(),
+                        want.len(),
+                        vals.len()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_segmented_fleet_rung_matches_per_segment_oracle() {
+    use parred::Engine;
+
+    // The one-pass fleet rung (pinned via_fleet so every generated
+    // shape exercises it) against the per-segment scalar oracle:
+    // empty segments, single elements, boundary-heavy offsets.
+    check(
+        "segmented fleet rung == per-segment oracle",
+        10,
+        |rng| {
+            let segs = rng.range(0, 10);
+            let lens: Vec<usize> = (0..segs)
+                .map(|_| match rng.below(4) {
+                    0 => 0,
+                    1 => 1,
+                    2 => rng.range(2, 300),
+                    _ => rng.range(300, 9_000),
+                })
+                .collect();
+            let n: usize = lens.iter().sum();
+            (rng.i32_vec(n, -500, 500), rng.f32_vec(n, -1.0, 1.0), lens)
+        },
+        |(ints, floats, lens)| {
+            let mut offsets = vec![0usize];
+            for l in lens {
+                offsets.push(offsets.last().unwrap() + l);
+            }
+            let engine = Engine::builder()
+                .host_workers(2)
+                .fleet(vec![DeviceConfig::tesla_c2075(); 2])
+                .build()
+                .map_err(|e| format!("{e:#}"))?;
+            for op in [Op::Sum, Op::Min, Op::Max] {
+                let r = engine
+                    .reduce_segments(ints, &offsets)
+                    .op(op)
+                    .via_fleet()
+                    .run()
+                    .map_err(|e| format!("{e:#}"))?;
+                for (s, w) in offsets.windows(2).enumerate() {
+                    let want = scalar::reduce(&ints[w[0]..w[1]], op);
+                    if r.value[s] != want {
+                        return Err(format!("{op}: segment {s} fleet {} != {want}", r.value[s]));
+                    }
+                }
+                if !ints.is_empty()
+                    && !matches!(r.path, parred::ExecPath::SegmentedPool { .. })
+                {
+                    return Err(format!("{op}: pin ignored, path {:?}", r.path));
+                }
+            }
+            let r = engine
+                .reduce_segments(floats, &offsets)
+                .via_fleet()
+                .run()
+                .map_err(|e| format!("{e:#}"))?;
+            for (s, w) in offsets.windows(2).enumerate() {
+                let seg = &floats[w[0]..w[1]];
+                let want = kahan::sum_f64(seg);
+                let l1: f64 = seg.iter().map(|&x| x.abs() as f64).sum();
+                if (r.value[s] as f64 - want).abs() > 1e-5 * l1.max(1.0) {
+                    return Err(format!("segment {s}: fleet {} vs Neumaier {want}", r.value[s]));
+                }
+            }
+            // Degenerate offsets must error, never panic.
+            if engine.reduce_segments(ints, &[]).run().is_ok() {
+                return Err("empty offsets accepted".into());
+            }
+            if !ints.is_empty() {
+                let bad = [0usize, ints.len() + 1];
+                if engine.reduce_segments(ints, &bad).via_fleet().run().is_ok() {
+                    return Err("offsets past the end accepted".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_gate_never_exceeds_limit() {
     use parred::coordinator::backpressure::Gate;
     check(
