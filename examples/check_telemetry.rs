@@ -1,0 +1,159 @@
+//! CI validator for the telemetry artifacts `parred serve` emits:
+//!
+//! ```text
+//! cargo run --example check_telemetry -- trace.jsonl trace.jsonl.chrome.json metrics.txt
+//! ```
+//!
+//! Checks, exiting nonzero on the first violation:
+//!
+//! * the JSON-lines trace parses line by line, every record carrying
+//!   `id`/`parent`/`name`/`ts_us`/`dur_us`/`tid`, with at least one
+//!   `serve.request` span and every non-zero `parent` resolving to a
+//!   recorded span id;
+//! * the Chrome export parses as one JSON array of complete
+//!   `trace_event` objects (`ph:"X"`), one per JSONL record;
+//! * the metrics exposition has `# TYPE` lines and every sample line
+//!   ends in a finite number, including the request counter.
+
+use std::collections::HashSet;
+use std::process::exit;
+
+use parred::util::json::Json;
+
+fn fail(msg: &str) -> ! {
+    eprintln!("check_telemetry: {msg}");
+    exit(1);
+}
+
+fn check_trace(path: &str) -> usize {
+    let text = std::fs::read_to_string(path)
+        .unwrap_or_else(|e| fail(&format!("cannot read trace {path}: {e}")));
+    let mut ids: HashSet<usize> = HashSet::new();
+    let mut parents: Vec<(usize, usize)> = Vec::new();
+    let mut requests = 0usize;
+    let mut lines = 0usize;
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        lines += 1;
+        let rec = Json::parse(line)
+            .unwrap_or_else(|e| fail(&format!("{path}:{}: bad JSON: {e:#}", i + 1)));
+        let id = rec
+            .field("id")
+            .and_then(Json::as_usize)
+            .unwrap_or_else(|e| fail(&format!("{path}:{}: {e:#}", i + 1)));
+        if id == 0 || !ids.insert(id) {
+            fail(&format!("{path}:{}: span id {id} zero or duplicated", i + 1));
+        }
+        let parent = rec
+            .field("parent")
+            .and_then(Json::as_usize)
+            .unwrap_or_else(|e| fail(&format!("{path}:{}: {e:#}", i + 1)));
+        if parent != 0 {
+            parents.push((i + 1, parent));
+        }
+        let name = rec
+            .field("name")
+            .and_then(Json::as_str)
+            .unwrap_or_else(|e| fail(&format!("{path}:{}: {e:#}", i + 1)));
+        if name == "serve.request" {
+            requests += 1;
+        }
+        for key in ["ts_us", "dur_us", "tid"] {
+            if rec.field(key).and_then(Json::as_f64).is_err() {
+                fail(&format!("{path}:{}: missing numeric {key}", i + 1));
+            }
+        }
+    }
+    if lines == 0 {
+        fail(&format!("{path}: empty trace"));
+    }
+    if requests == 0 {
+        fail(&format!("{path}: no serve.request span recorded"));
+    }
+    for (line, parent) in parents {
+        if !ids.contains(&parent) {
+            fail(&format!("{path}:{line}: parent {parent} not a recorded span"));
+        }
+    }
+    println!("trace ok: {lines} spans, {requests} requests ({path})");
+    lines
+}
+
+fn check_chrome(path: &str, want_events: usize) {
+    let text = std::fs::read_to_string(path)
+        .unwrap_or_else(|e| fail(&format!("cannot read chrome trace {path}: {e}")));
+    let doc =
+        Json::parse(&text).unwrap_or_else(|e| fail(&format!("{path}: bad JSON: {e:#}")));
+    let events = doc.as_arr().unwrap_or_else(|e| fail(&format!("{path}: {e:#}")));
+    if events.len() != want_events {
+        fail(&format!("{path}: {} events, expected {want_events}", events.len()));
+    }
+    for (i, ev) in events.iter().enumerate() {
+        let ph = ev
+            .field("ph")
+            .and_then(Json::as_str)
+            .unwrap_or_else(|e| fail(&format!("{path}[{i}]: {e:#}")));
+        if ph != "X" {
+            fail(&format!("{path}[{i}]: ph {ph:?}, expected complete event \"X\""));
+        }
+        if ev.field("name").and_then(Json::as_str).is_err() {
+            fail(&format!("{path}[{i}]: missing name"));
+        }
+        for key in ["ts", "dur", "pid", "tid"] {
+            if ev.field(key).and_then(Json::as_f64).is_err() {
+                fail(&format!("{path}[{i}]: missing numeric {key}"));
+            }
+        }
+        if ev.field("args").and_then(Json::as_obj).is_err() {
+            fail(&format!("{path}[{i}]: missing args object"));
+        }
+    }
+    println!("chrome ok: {} events ({path})", events.len());
+}
+
+fn check_metrics(path: &str) {
+    let text = std::fs::read_to_string(path)
+        .unwrap_or_else(|e| fail(&format!("cannot read metrics {path}: {e}")));
+    let mut types = 0usize;
+    let mut samples = 0usize;
+    for (i, line) in text.lines().enumerate() {
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('#') {
+            if rest.trim_start().starts_with("TYPE") {
+                types += 1;
+            }
+            continue;
+        }
+        let value = line
+            .rsplit(' ')
+            .next()
+            .and_then(|v| v.parse::<f64>().ok())
+            .unwrap_or_else(|| fail(&format!("{path}:{}: sample without value", i + 1)));
+        if !value.is_finite() {
+            fail(&format!("{path}:{}: non-finite sample {value}", i + 1));
+        }
+        samples += 1;
+    }
+    if types == 0 || samples == 0 {
+        fail(&format!("{path}: no # TYPE lines or no samples"));
+    }
+    if !text.contains("parred_requests_total") {
+        fail(&format!("{path}: missing parred_requests_total"));
+    }
+    println!("metrics ok: {samples} samples, {types} metric types ({path})");
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let [trace, chrome, metrics] = argv.as_slice() else {
+        fail("usage: check_telemetry TRACE.jsonl CHROME.json METRICS.txt");
+    };
+    let events = check_trace(trace);
+    check_chrome(chrome, events);
+    check_metrics(metrics);
+    println!("telemetry artifacts ok");
+}

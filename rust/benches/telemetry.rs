@@ -1,0 +1,145 @@
+//! `cargo bench --bench telemetry` — the observability tax, measured.
+//!
+//! Sweeps the engine hotpath (`engine.reduce`, f32 sum) over
+//! `2^12..2^24` elements three ways: no trace attached, trace attached
+//! but disabled, trace enabled. The headline numbers pin the ISSUE's
+//! overhead budget:
+//!
+//! * **disabled** (<1%): the disabled path is one relaxed atomic load
+//!   per span site, so the direct A/B difference drowns in run-to-run
+//!   noise at any realistic request size. Instead the per-span cost is
+//!   micro-measured (1M inert spans), multiplied by the spans each
+//!   request actually emits (counted from an enabled run), and divided
+//!   by the request's own median wall — a noise-immune upper bound.
+//! * **enabled** (<5%): measured directly as
+//!   `(median_enabled - median_disabled) / median_disabled`, median
+//!   across the sweep.
+//!
+//! Results land machine-readably in `BENCH_telemetry.json` (path
+//! override: `PARRED_TELEMETRY_JSON`) with pass flags, so CI tracks
+//! the tax without a flaky hard assert. `PARRED_BENCH_FAST=1` trims
+//! iterations as everywhere else.
+
+use std::collections::BTreeMap;
+use std::hint::black_box;
+use std::sync::Arc;
+use std::time::Instant;
+
+use parred::reduce::Op;
+use parred::telemetry::Trace;
+use parred::util::bench::Bench;
+use parred::util::json::Json;
+use parred::util::rng::Rng;
+use parred::Engine;
+
+fn median(xs: &mut [f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.sort_by(|a, b| a.total_cmp(b));
+    xs[xs.len() / 2]
+}
+
+fn main() {
+    let mut b = Bench::from_env();
+    let mut rng = Rng::new(7);
+    let data = rng.f32_vec(1 << 24, -1.0, 1.0);
+
+    let trace = Arc::new(Trace::new(false));
+    let engine = Engine::builder().trace(trace.clone()).build().expect("host engine");
+    let bare = Engine::builder().build().expect("host engine");
+
+    // Per-span cost of the disabled path: creating and dropping an
+    // inert span is a branch on one relaxed atomic load, measured over
+    // 1M reps so timer granularity can't bite.
+    let reps = 1_000_000u32;
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        black_box(trace.span("bench.noop"));
+    }
+    let disabled_span_s = t0.elapsed().as_secs_f64() / f64::from(reps);
+    println!("disabled span cost: {:.1} ns", disabled_span_s * 1e9);
+
+    let mut sweep: Vec<Json> = Vec::new();
+    let mut enabled_overheads: Vec<f64> = Vec::new();
+    let mut disabled_overheads: Vec<f64> = Vec::new();
+    for p in [12usize, 15, 18, 21, 24] {
+        let n = 1usize << p;
+        let d = &data[..n];
+        let bytes = Some(4 * n as u64);
+
+        // How many spans does one request at this size emit? Counted,
+        // not assumed: the ladder changes shape across the sweep
+        // (sequential -> threaded).
+        trace.set_enabled(true);
+        engine.reduce(d).op(Op::Sum).run().expect("host reduce");
+        let spans_per_request = trace.drain().len();
+        trace.set_enabled(false);
+
+        let s = b.run(&format!("telemetry/none_sum_f32_2p{p}"), bytes, || {
+            bare.reduce(d).op(Op::Sum).run().unwrap().value
+        });
+        let m_none = s.median();
+        let s = b.run(&format!("telemetry/disabled_sum_f32_2p{p}"), bytes, || {
+            engine.reduce(d).op(Op::Sum).run().unwrap().value
+        });
+        let m_disabled = s.median();
+        trace.set_enabled(true);
+        let s = b.run(&format!("telemetry/enabled_sum_f32_2p{p}"), bytes, || {
+            engine.reduce(d).op(Op::Sum).run().unwrap().value
+        });
+        let m_enabled = s.median();
+        trace.set_enabled(false);
+        trace.drain(); // keep the sink bounded across the sweep
+
+        let enabled_overhead = (m_enabled - m_disabled) / m_disabled;
+        let disabled_overhead = disabled_span_s * spans_per_request as f64 / m_disabled;
+        enabled_overheads.push(enabled_overhead);
+        disabled_overheads.push(disabled_overhead);
+
+        let mut e = BTreeMap::new();
+        e.insert("log2_n".to_string(), Json::Num(p as f64));
+        e.insert("n".to_string(), Json::Num(n as f64));
+        e.insert("spans_per_request".to_string(), Json::Num(spans_per_request as f64));
+        e.insert("median_none_s".to_string(), Json::Num(m_none));
+        e.insert("median_disabled_s".to_string(), Json::Num(m_disabled));
+        e.insert("median_enabled_s".to_string(), Json::Num(m_enabled));
+        e.insert("enabled_overhead".to_string(), Json::Num(enabled_overhead));
+        e.insert("disabled_overhead".to_string(), Json::Num(disabled_overhead));
+        sweep.push(Json::Obj(e));
+        println!(
+            "sweep 2^{p}: {spans_per_request} spans/request, enabled {:+.2}%, \
+             disabled bound {:.4}%",
+            enabled_overhead * 1e2,
+            disabled_overhead * 1e2
+        );
+    }
+
+    let med_enabled = median(&mut enabled_overheads);
+    let med_disabled = median(&mut disabled_overheads);
+    let pass_enabled = med_enabled < 0.05;
+    let pass_disabled = med_disabled < 0.01;
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str("telemetry".to_string()));
+    root.insert("disabled_span_ns".to_string(), Json::Num(disabled_span_s * 1e9));
+    root.insert("median_enabled_overhead".to_string(), Json::Num(med_enabled));
+    root.insert("median_disabled_overhead".to_string(), Json::Num(med_disabled));
+    root.insert("pass_enabled_lt_5pct".to_string(), Json::Bool(pass_enabled));
+    root.insert("pass_disabled_lt_1pct".to_string(), Json::Bool(pass_disabled));
+    root.insert("sweep".to_string(), Json::Arr(sweep));
+    let path = std::env::var("PARRED_TELEMETRY_JSON")
+        .unwrap_or_else(|_| "BENCH_telemetry.json".to_string());
+    match std::fs::write(&path, format!("{}\n", Json::Obj(root))) {
+        Ok(()) => eprintln!("(wrote {path})"),
+        Err(e) => eprintln!("(could not write {path}: {e})"),
+    }
+    println!(
+        "telemetry tax: enabled median {:+.2}% (budget 5%: {}), disabled median {:.4}% \
+         (budget 1%: {})",
+        med_enabled * 1e2,
+        if pass_enabled { "PASS" } else { "FAIL" },
+        med_disabled * 1e2,
+        if pass_disabled { "PASS" } else { "FAIL" },
+    );
+    println!("{}", b.report());
+}

@@ -12,6 +12,10 @@ use super::request::ExecPath;
 #[derive(Debug)]
 pub struct Metrics {
     pub started: Instant,
+    /// When the first request completed (None until then): the
+    /// throughput epoch, so idle time between construction and the
+    /// first request does not dilute req/s.
+    pub first_request: Option<Instant>,
     pub completed: u64,
     pub failed: u64,
     pub lat_full: Histogram,
@@ -21,6 +25,9 @@ pub struct Metrics {
     pub lat_host_fused: Histogram,
     pub lat_pool_fused: Histogram,
     pub lat_keyed: Histogram,
+    /// Segmented host executions (`ExecPath::Segmented`) — split out
+    /// from the plain host bucket so the ragged rung is visible.
+    pub lat_segmented: Histogram,
     /// Rows executed vs rows carrying real requests (padding waste).
     pub rows_executed: u64,
     pub rows_useful: u64,
@@ -63,6 +70,7 @@ impl Default for Metrics {
     fn default() -> Self {
         Metrics {
             started: Instant::now(),
+            first_request: None,
             completed: 0,
             failed: 0,
             lat_full: Histogram::new(),
@@ -72,6 +80,7 @@ impl Default for Metrics {
             lat_host_fused: Histogram::new(),
             lat_pool_fused: Histogram::new(),
             lat_keyed: Histogram::new(),
+            lat_segmented: Histogram::new(),
             rows_executed: 0,
             rows_useful: 0,
             batches: 0,
@@ -98,6 +107,9 @@ impl Default for Metrics {
 
 impl Metrics {
     pub fn record(&mut self, path: ExecPath, latency_s: f64, ok: bool, elements: usize) {
+        if self.first_request.is_none() {
+            self.first_request = Some(Instant::now());
+        }
         if ok {
             self.completed += 1;
         } else {
@@ -116,9 +128,9 @@ impl Metrics {
                 self.sharded_requests += 1;
                 self.lat_pool_fused.record(latency_s);
             }
-            // Segmented host runs ride the host bucket; the one-pass
+            // Segmented host runs get their own bucket; the one-pass
             // fleet rung counts with the other fleet executions.
-            ExecPath::Segmented { .. } => self.lat_host.record(latency_s),
+            ExecPath::Segmented { .. } => self.lat_segmented.record(latency_s),
             ExecPath::SegmentedPool { .. } => {
                 self.sharded_requests += 1;
                 self.lat_sharded.record(latency_s);
@@ -152,7 +164,12 @@ impl Metrics {
     /// Account one fused keyed batch of `requests` requests carrying
     /// `groups` groups in total.
     pub fn record_keyed_fused(&mut self, requests: usize, groups: usize) {
-        debug_assert!(requests > 1, "a keyed batch of one is not fusion");
+        if requests <= 1 {
+            // A keyed "batch" of one means the flush raced the fusion
+            // window — worth counting, not worth crashing a serving
+            // process over.
+            crate::telemetry::warn("keyed-fused-batch-of-one");
+        }
         self.keyed_fused_batches += 1;
         self.keyed_fused_requests += requests as u64;
         self.keyed_fused_groups += groups as u64;
@@ -173,9 +190,19 @@ impl Metrics {
         self.host_pool_peak_chunks = c.peak_chunks;
     }
 
+    /// Completed requests per second, measured from the **first
+    /// request** (not service construction), so idle warm-up time does
+    /// not read as low throughput. 0 before any request finishes.
     pub fn throughput_rps(&self) -> f64 {
-        let dt = self.started.elapsed().as_secs_f64().max(1e-9);
+        let Some(t0) = self.first_request else { return 0.0 };
+        let dt = t0.elapsed().as_secs_f64().max(1e-9);
         self.completed as f64 / dt
+    }
+
+    /// Seconds since this metrics epoch (service construction) —
+    /// separate from the throughput window on purpose.
+    pub fn uptime_s(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
     }
 
     /// Average rows per executed batch.
@@ -257,8 +284,63 @@ impl Metrics {
         s.push_str(&format!("latency (pool fused):   {}\n", self.lat_pool_fused.summary()));
         s.push_str(&format!("latency (host fused):   {}\n", self.lat_host_fused.summary()));
         s.push_str(&format!("latency (keyed):        {}\n", self.lat_keyed.summary()));
+        s.push_str(&format!("latency (segmented):    {}\n", self.lat_segmented.summary()));
         s.push_str(&format!("latency (host):         {}\n", self.lat_host.summary()));
         s
+    }
+
+    /// Sync this snapshot onto the unified telemetry registry.
+    /// Absolute writes throughout, so repeated syncs (the serve loop
+    /// re-exports every tick) are idempotent.
+    pub fn export_to(&self, reg: &crate::telemetry::Registry) {
+        reg.set_counter("parred_requests_total", &[("outcome", "ok")], self.completed);
+        reg.set_counter("parred_requests_total", &[("outcome", "error")], self.failed);
+        reg.set_counter("parred_elements_reduced_total", &[], self.elements_reduced);
+        reg.set_counter("parred_batches_total", &[], self.batches);
+        reg.set_counter("parred_rows_total", &[("kind", "executed")], self.rows_executed);
+        reg.set_counter("parred_rows_total", &[("kind", "useful")], self.rows_useful);
+        reg.set_counter("parred_fused_batches_total", &[("kind", "host")], self.fused_batches);
+        reg.set_counter("parred_fused_rows_total", &[("kind", "host")], self.fused_rows);
+        reg.set_counter(
+            "parred_fused_batches_total",
+            &[("kind", "pool")],
+            self.pool_fused_batches,
+        );
+        reg.set_counter("parred_fused_rows_total", &[("kind", "pool")], self.pool_fused_rows);
+        reg.set_counter(
+            "parred_fused_batches_total",
+            &[("kind", "keyed")],
+            self.keyed_fused_batches,
+        );
+        reg.set_counter(
+            "parred_fused_rows_total",
+            &[("kind", "keyed")],
+            self.keyed_fused_requests,
+        );
+        reg.set_counter("parred_keyed_fused_groups_total", &[], self.keyed_fused_groups);
+        reg.set_counter("parred_keyed_requests_total", &[], self.keyed_requests);
+        reg.set_counter("parred_sharded_requests_total", &[], self.sharded_requests);
+        reg.set_counter("parred_pool_tasks_total", &[], self.pool_tasks);
+        reg.set_counter("parred_pool_steals_total", &[], self.pool_steals);
+        reg.set_gauge("parred_pool_peak_depth", &[], self.pool_peak_depth as f64);
+        reg.set_gauge("parred_host_pool_workers", &[], self.host_pool_workers as f64);
+        reg.set_counter("parred_host_pool_jobs_total", &[], self.host_pool_jobs);
+        reg.set_counter("parred_host_pool_chunks_total", &[], self.host_pool_chunks);
+        reg.set_gauge("parred_host_pool_peak_chunks", &[], self.host_pool_peak_chunks as f64);
+        reg.set_gauge("parred_uptime_seconds", &[], self.uptime_s());
+        reg.set_gauge("parred_throughput_rps", &[], self.throughput_rps());
+        for (path, h) in [
+            ("pjrt_full", &self.lat_full),
+            ("pjrt_batched", &self.lat_batched),
+            ("sharded", &self.lat_sharded),
+            ("pool_fused", &self.lat_pool_fused),
+            ("host_fused", &self.lat_host_fused),
+            ("keyed", &self.lat_keyed),
+            ("segmented", &self.lat_segmented),
+            ("host", &self.lat_host),
+        ] {
+            reg.set_histogram("parred_latency_seconds", &[("path", path)], h.clone());
+        }
     }
 }
 
@@ -275,9 +357,10 @@ mod tests {
         m.record(ExecPath::HostFused { batch: 6 }, 4e-4, true, 100);
         m.record(ExecPath::PoolFused { batch: 3, devices: 4 }, 6e-4, true, 100);
         m.record(ExecPath::SegmentedPool { segments: 10, devices: 4 }, 7e-4, true, 100);
+        m.record(ExecPath::Segmented { segments: 5 }, 9e-4, true, 100);
         m.record(ExecPath::Keyed { groups: 3 }, 8e-4, true, 100);
         m.record(ExecPath::Host, 5e-4, false, 100);
-        assert_eq!(m.completed, 7);
+        assert_eq!(m.completed, 8);
         assert_eq!(m.failed, 1);
         assert_eq!(m.lat_full.count(), 1);
         assert_eq!(m.lat_batched.count(), 1);
@@ -285,14 +368,62 @@ mod tests {
         assert_eq!(m.lat_host_fused.count(), 1);
         assert_eq!(m.lat_pool_fused.count(), 1);
         assert_eq!(m.lat_keyed.count(), 1);
-        assert_eq!(m.lat_host.count(), 1);
+        assert_eq!(m.lat_segmented.count(), 1, "segmented host runs get their own bucket");
+        assert_eq!(m.lat_host.count(), 1, "the host bucket no longer pools segmented runs");
         assert_eq!(
             m.sharded_requests,
             3,
             "direct, pool-fused and segmented-pool requests all count"
         );
         assert_eq!(m.keyed_requests, 1);
-        assert_eq!(m.elements_reduced, 800);
+        assert_eq!(m.elements_reduced, 900);
+    }
+
+    #[test]
+    fn throughput_counts_from_first_request_not_construction() {
+        let mut m = Metrics::default();
+        // Pretend the service has been idle for 100 s before the first
+        // request arrives (skip on hosts whose monotonic clock is too
+        // young to backdate).
+        let Some(past) = Instant::now().checked_sub(std::time::Duration::from_secs(100)) else {
+            return;
+        };
+        m.started = past;
+        assert_eq!(m.throughput_rps(), 0.0, "no requests yet");
+        m.record(ExecPath::Host, 1e-3, true, 10);
+        // One request completed moments ago: far above the ~0.01 req/s
+        // the old construction-epoch accounting would report.
+        assert!(m.throughput_rps() > 1.0, "rps={}", m.throughput_rps());
+        assert!(m.uptime_s() >= 100.0, "uptime={}", m.uptime_s());
+    }
+
+    #[test]
+    fn keyed_batch_of_one_warns_instead_of_asserting() {
+        let mut m = Metrics::default();
+        let before = crate::telemetry::warning_count("keyed-fused-batch-of-one");
+        m.record_keyed_fused(1, 4);
+        assert_eq!(
+            crate::telemetry::warning_count("keyed-fused-batch-of-one"),
+            before + 1
+        );
+        assert_eq!(m.keyed_fused_batches, 1, "the batch still counts");
+        assert_eq!(m.keyed_fused_groups, 4);
+    }
+
+    #[test]
+    fn export_to_registry_is_idempotent() {
+        let mut m = Metrics::default();
+        m.record(ExecPath::Host, 1e-3, true, 10);
+        m.record(ExecPath::Segmented { segments: 2 }, 2e-3, true, 20);
+        let reg = crate::telemetry::Registry::new();
+        m.export_to(&reg);
+        m.export_to(&reg);
+        assert_eq!(reg.counter("parred_requests_total", &[("outcome", "ok")]), 2);
+        assert_eq!(reg.counter("parred_elements_reduced_total", &[]), 30);
+        let h = reg.histogram("parred_latency_seconds", &[("path", "segmented")]).unwrap();
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.percentile(50.0), m.lat_segmented.percentile(50.0));
+        assert!(reg.gauge("parred_uptime_seconds", &[]).unwrap() >= 0.0);
     }
 
     #[test]
@@ -368,5 +499,6 @@ mod tests {
         let r = m.report();
         assert!(r.contains("throughput"));
         assert!(r.contains("latency"));
+        assert!(r.contains("latency (segmented):"), "{r}");
     }
 }

@@ -15,6 +15,7 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context, Result};
@@ -26,6 +27,7 @@ use crate::reduce::persistent;
 use crate::reduce::plan::ShapeKey;
 use crate::runtime::literal::{HostScalar, HostVec};
 use crate::runtime::Runtime;
+use crate::telemetry::{Registry, Trace};
 use crate::util::rng::Rng;
 use crate::util::stats::Histogram;
 
@@ -105,6 +107,15 @@ pub struct ServiceConfig {
     /// derived cutoffs, refined profiles, fleet factors) — so derived
     /// cutoffs survive a restart.
     pub sched_snapshot: Option<String>,
+    /// Span-trace output path. Setting this **enables** request
+    /// tracing; at shutdown the executor writes the span records as
+    /// JSON-lines to this path and as a Chrome `trace_event` array to
+    /// `<path>.chrome.json`.
+    pub trace_out: Option<String>,
+    /// Prometheus-style metrics output path, written on the executor's
+    /// ~1 s sync tick and at shutdown ([`Service::metrics_text`] reads
+    /// the same registry live).
+    pub metrics_out: Option<String>,
 }
 
 impl Default for ServiceConfig {
@@ -118,6 +129,8 @@ impl Default for ServiceConfig {
             pool: None,
             adaptive: false,
             sched_snapshot: None,
+            trace_out: None,
+            metrics_out: None,
         }
     }
 }
@@ -134,6 +147,8 @@ pub struct Service {
     gate: Gate,
     next_id: AtomicU64,
     handle: Option<std::thread::JoinHandle<Metrics>>,
+    trace: Arc<Trace>,
+    registry: Arc<Registry>,
 }
 
 impl Service {
@@ -143,10 +158,16 @@ impl Service {
         let (ready_tx, ready_rx) = mpsc::channel::<Result<String, String>>();
         let gate = Gate::new(cfg.max_queue);
         let gate2 = gate.clone();
+        // Tracing is on iff an output path asked for it; the registry
+        // always syncs (it is just counters).
+        let trace = Arc::new(Trace::new(cfg.trace_out.is_some()));
+        let registry = Arc::new(Registry::new());
+        let trace2 = trace.clone();
+        let registry2 = registry.clone();
         let cfg2 = cfg.clone();
         let handle = std::thread::Builder::new()
             .name("parred-executor".into())
-            .spawn(move || executor_loop(cfg2, gate2, rx, ready_tx))
+            .spawn(move || executor_loop(cfg2, gate2, trace2, registry2, rx, ready_tx))
             .context("spawning executor thread")?;
         match ready_rx.recv() {
             Ok(Ok(_platform)) => {}
@@ -156,7 +177,7 @@ impl Service {
             }
             Err(_) => return Err(anyhow!("executor thread died during startup")),
         }
-        Ok(Service { tx, gate, next_id: AtomicU64::new(1), handle: Some(handle) })
+        Ok(Service { tx, gate, next_id: AtomicU64::new(1), handle: Some(handle), trace, registry })
     }
 
     /// Submit a reduction. Returns the response channel, or an error
@@ -225,6 +246,25 @@ impl Service {
         self.gate.in_flight()
     }
 
+    /// The request span trace (recording iff `trace_out` was set).
+    /// Keep a clone of the `Arc` to inspect spans after `shutdown`.
+    pub fn trace(&self) -> &Arc<Trace> {
+        &self.trace
+    }
+
+    /// The unified metrics registry behind [`Self::metrics_text`].
+    pub fn registry(&self) -> &Arc<Registry> {
+        &self.registry
+    }
+
+    /// Prometheus-style exposition of the unified registry. The
+    /// executor syncs serving metrics, pool counters, persistent-pool
+    /// counters, scheduler-audit rows and warning events onto it about
+    /// once a second (and at shutdown).
+    pub fn metrics_text(&self) -> String {
+        self.registry.prometheus_text()
+    }
+
     pub fn rejected(&self) -> usize {
         self.gate.rejected()
     }
@@ -252,6 +292,8 @@ impl Drop for Service {
 fn executor_loop(
     cfg: ServiceConfig,
     gate: Gate,
+    trace: Arc<Trace>,
+    registry: Arc<Registry>,
     rx: Receiver<Msg>,
     ready: Sender<Result<String, String>>,
 ) -> Metrics {
@@ -286,7 +328,8 @@ fn executor_loop(
     let mut builder = Engine::builder()
         .host_workers(cfg.workers)
         .artifacts_available(true)
-        .adaptive(cfg.adaptive);
+        .adaptive(cfg.adaptive)
+        .trace(trace.clone());
     if let Some(pc) = &cfg.pool {
         let devices = match fleet_devices(pc) {
             Ok(d) => d,
@@ -319,6 +362,53 @@ fn executor_loop(
     // (the engine's device-pool counters are per-instance already).
     let host_pool_start = persistent::global_counters().unwrap_or_default();
     let sched = engine.scheduler().clone();
+    // Sync everything observable onto the unified registry: serving
+    // metrics, live pool + persistent-pool counters, scheduler-audit
+    // rows and counted warning events. Absolute writes, so the ~1 s
+    // tick below re-running it is idempotent.
+    let sync_registry = |metrics: &Metrics, engine: &Engine| {
+        metrics.export_to(&registry);
+        if let Some(p) = engine.pool() {
+            let c = p.counters();
+            registry.set_counter("parred_pool_tasks_total", &[], c.tasks_executed);
+            registry.set_counter("parred_pool_steals_total", &[], c.steals);
+            registry.set_gauge("parred_pool_peak_depth", &[], c.peak_depth as f64);
+        }
+        if let Some(c) = persistent::global_counters() {
+            registry.set_gauge("parred_host_pool_workers", &[], c.workers as f64);
+            registry.set_counter(
+                "parred_host_pool_jobs_total",
+                &[],
+                c.jobs.saturating_sub(host_pool_start.jobs),
+            );
+            registry.set_counter(
+                "parred_host_pool_chunks_total",
+                &[],
+                c.chunks.saturating_sub(host_pool_start.chunks),
+            );
+            registry.set_gauge("parred_host_pool_peak_chunks", &[], c.peak_chunks as f64);
+        }
+        for e in engine.scheduler().audit() {
+            let labels =
+                [("backend", e.backend.name()), ("op", e.op.name()), ("dtype", e.dtype.name())];
+            registry.set_counter("parred_sched_observations_total", &labels, e.observations);
+            registry.set_counter("parred_sched_mispredicts_total", &labels, e.mispredicts);
+            registry.set_gauge("parred_sched_cost_err_p95", &labels, e.err_p95);
+        }
+        for (event, count) in crate::telemetry::warning_counts() {
+            registry.set_counter("parred_warnings_total", &[("event", event)], count);
+        }
+    };
+    let write_metrics = |reason: &str| {
+        if let Some(path) = &cfg.metrics_out {
+            if let Err(e) = std::fs::write(path, registry.prometheus_text()) {
+                eprintln!("(could not write metrics {path} at {reason}: {e})");
+            }
+        }
+    };
+    // Populate the registry before serving so `Service::metrics_text`
+    // never reads an empty store.
+    sync_registry(&metrics, &engine);
     let router = Router::with_scheduler(runtime.catalog().clone(), sched.clone());
     let mut batcher = Batcher::new(cfg.batch_window);
     // Keyed requests queue separately (by-key fusion: same-(op, dtype)
@@ -328,7 +418,7 @@ fn executor_loop(
     let handle_req = |req: Request, batcher: &mut Batcher, metrics: &mut Metrics| {
         match router.route(req.shape_key()) {
             Route::Batched { .. } => batcher.push(req),
-            Route::Full { artifact } => exec_full(&runtime, &gate, &artifact, req, metrics),
+            Route::Full { artifact } => exec_full(&trace, &runtime, &gate, &artifact, req, metrics),
             // Fleet-bound keys batch too: concurrent same-key requests
             // stack into one fleet rows pass at flush time (pool-aware
             // dynamic batching). Empty payloads run directly.
@@ -372,6 +462,7 @@ fn executor_loop(
     };
 
     let mut running = true;
+    let mut last_sync = Instant::now();
     while running {
         // Wait for work, but never past the oldest batch deadline
         // (scalar or keyed queue, whichever expires first).
@@ -407,7 +498,7 @@ fn executor_loop(
         let now = Instant::now();
         for batch in batcher.flush_ready(now, &policy) {
             match batch.kind {
-                BatchKind::Rows => exec_batch(&runtime, &gate, &router, batch, &mut metrics),
+                BatchKind::Rows => exec_batch(&trace, &runtime, &gate, &router, batch, &mut metrics),
                 // The engine decides host-fused vs fleet-fused from
                 // the same ladder that routed the key; a FusedPool
                 // batch on a pool-less engine degrades per-request.
@@ -426,12 +517,22 @@ fn executor_loop(
         for batch in keyed.flush_ready(now) {
             exec_engine_keyed_fused(&engine, &gate, batch, &mut metrics);
         }
+        // The SIGUSR1-equivalent tick: re-sync the registry and rewrite
+        // the metrics file about once a second, so a long-running serve
+        // exposes fresh numbers without waiting for shutdown.
+        if last_sync.elapsed() >= Duration::from_secs(1) {
+            last_sync = Instant::now();
+            sync_registry(&metrics, &engine);
+            write_metrics("tick");
+        }
     }
 
     // Drain: everything still queued executes unbatched.
     for req in batcher.drain_all() {
         match router.route(req.shape_key()) {
-            Route::Full { artifact } => exec_full(&runtime, &gate, &artifact, req, &mut metrics),
+            Route::Full { artifact } => {
+                exec_full(&trace, &runtime, &gate, &artifact, req, &mut metrics)
+            }
             _ => exec_engine(&engine, &gate, req, &mut metrics),
         }
     }
@@ -454,6 +555,18 @@ fn executor_loop(
             chunks: c.chunks - host_pool_start.chunks,
             peak_chunks: c.peak_chunks,
         });
+    }
+    // Final registry sync + telemetry artifacts.
+    sync_registry(&metrics, &engine);
+    write_metrics("shutdown");
+    if let Some(path) = &cfg.trace_out {
+        if let Err(e) = std::fs::write(path, trace.export_jsonl()) {
+            eprintln!("(could not write trace {path}: {e})");
+        }
+        let chrome = format!("{path}.chrome.json");
+        if let Err(e) = std::fs::write(&chrome, trace.export_chrome()) {
+            eprintln!("(could not write trace {chrome}: {e})");
+        }
     }
     metrics
 }
@@ -479,7 +592,21 @@ fn respond(
     metrics.record(path, latency, ok, elements);
 }
 
-fn exec_full(runtime: &Runtime, gate: &Gate, artifact: &str, req: Request, metrics: &mut Metrics) {
+fn exec_full(
+    trace: &Trace,
+    runtime: &Runtime,
+    gate: &Gate,
+    artifact: &str,
+    req: Request,
+    metrics: &mut Metrics,
+) {
+    let mut span = trace.span("serve.request");
+    if span.active() {
+        span.attr_u64("id", req.id);
+        span.attr_str("op", req.op.name());
+        span.attr_u64("n", req.payload.len() as u64);
+        span.attr_str("path", "pjrt_full");
+    }
     let result = runtime
         .catalog()
         .get(artifact)
@@ -493,6 +620,12 @@ fn exec_full(runtime: &Runtime, gate: &Gate, artifact: &str, req: Request, metri
 /// (sequential / persistent host / fleet shard), the engine observes
 /// the outcome, and the response carries the engine's own `ExecPath`.
 fn exec_engine(engine: &Engine, gate: &Gate, req: Request, metrics: &mut Metrics) {
+    let mut span = engine.trace().span("serve.request");
+    if span.active() {
+        span.attr_u64("id", req.id);
+        span.attr_str("op", req.op.name());
+        span.attr_u64("n", req.payload.len() as u64);
+    }
     let result: Result<(HostScalar, ExecPath)> = match &req.payload {
         HostVec::F32(v) => engine
             .reduce(v)
@@ -538,6 +671,11 @@ fn exec_engine_fused(engine: &Engine, gate: &Gate, batch: FlushedBatch, metrics:
     // can never run the (arbitrarily large) stacked payload as one
     // host rows pass — the invariant HOST_FUSE_MAX_N exists to hold.
     let pin_fleet = batch.kind == BatchKind::FusedPool;
+    let mut batch_span = engine.trace().span("serve.batch");
+    if batch_span.active() {
+        batch_span.attr_u64("rows", rows as u64);
+        batch_span.attr_str("kind", if pin_fleet { "pool" } else { "host" });
+    }
     let result: Result<(Vec<HostScalar>, ExecPath)> = match key.dtype {
         Dtype::F32 => {
             let mut stacked: Vec<f32> = Vec::with_capacity(rows * key.n);
@@ -577,6 +715,8 @@ fn exec_engine_fused(engine: &Engine, gate: &Gate, batch: FlushedBatch, metrics:
                 _ => metrics.record_fused(rows),
             }
             for (req, v) in batch.requests.into_iter().zip(values) {
+                let mut rs = engine.trace().span("serve.request");
+                rs.attr_u64("id", req.id);
                 respond(gate, req, Ok(v), path, metrics);
             }
         }
@@ -592,6 +732,8 @@ fn exec_engine_fused(engine: &Engine, gate: &Gate, batch: FlushedBatch, metrics:
             };
             let msg = format!("{e:#}");
             for req in batch.requests {
+                let mut rs = engine.trace().span("serve.request");
+                rs.attr_u64("id", req.id);
                 respond(gate, req, Err(msg.clone()), path, metrics);
             }
         }
@@ -616,6 +758,12 @@ fn respond_keyed(
 /// Execute one keyed request through the engine's by-key front door
 /// (grouping + the segmented rung the scheduler picks).
 fn exec_engine_keyed(engine: &Engine, gate: &Gate, req: KeyedRequest, metrics: &mut Metrics) {
+    let mut span = engine.trace().span("serve.request");
+    if span.active() {
+        span.attr_u64("id", req.id);
+        span.attr_str("op", req.op.name());
+        span.attr_u64("n", req.values.len() as u64);
+    }
     let result: Result<(Vec<(i64, HostScalar)>, ExecPath)> = match &req.values {
         HostVec::F32(v) => engine
             .reduce_by_key(&req.keys, v)
@@ -697,6 +845,8 @@ fn exec_keyed_fused_typed<T: TypedElement>(
     wrap: fn(T) -> HostScalar,
     metrics: &mut Metrics,
 ) {
+    let mut batch_span = engine.trace().span("serve.batch.keyed");
+    batch_span.attr_u64("requests", requests.len() as u64);
     // Group each request independently (groups must never merge
     // across requests), concatenating into one CSR list. Stable sort
     // — skipped entirely for already-sorted keys, mirroring the
@@ -738,11 +888,14 @@ fn exec_keyed_fused_typed<T: TypedElement>(
         group_counts.push(groups);
     }
     metrics.record_keyed_fused(requests.len(), group_keys.len());
+    batch_span.attr_u64("groups", group_keys.len() as u64);
     // ONE segmented pass over every request's groups.
     match engine.reduce_segments(&data, &offsets).op(op).run() {
         Ok(r) => {
             let mut g0 = 0usize;
             for (req, groups) in requests.into_iter().zip(group_counts) {
+                let mut rs = engine.trace().span("serve.request");
+                rs.attr_u64("id", req.id);
                 let pairs: Vec<(i64, HostScalar)> = (g0..g0 + groups)
                     .map(|gi| (group_keys[gi], wrap(r.value[gi])))
                     .collect();
@@ -755,6 +908,8 @@ fn exec_keyed_fused_typed<T: TypedElement>(
             // shares the outcome.
             let msg = format!("{e:#}");
             for (req, groups) in requests.into_iter().zip(group_counts) {
+                let mut rs = engine.trace().span("serve.request");
+                rs.attr_u64("id", req.id);
                 respond_keyed(gate, req, Err(msg.clone()), ExecPath::Keyed { groups }, metrics);
             }
         }
@@ -769,6 +924,7 @@ fn identity_payload(op: Op, dtype: Dtype, n: usize) -> HostVec {
 }
 
 fn exec_batch(
+    trace: &Trace,
     runtime: &Runtime,
     gate: &Gate,
     router: &Router,
@@ -779,6 +935,11 @@ fn exec_batch(
     let exec_rows = batch.exec_rows;
     let useful = batch.requests.len();
     debug_assert!(useful <= exec_rows);
+    let mut batch_span = trace.span("serve.batch");
+    if batch_span.active() {
+        batch_span.attr_u64("rows", exec_rows as u64);
+        batch_span.attr_str("kind", "rows");
+    }
 
     let Some(meta) = router.catalog().find_rows(key.op, key.dtype, exec_rows, key.n).cloned()
     else {
@@ -808,6 +969,8 @@ fn exec_batch(
         Ok(values) => {
             let path = ExecPath::PjrtBatched { batch: exec_rows };
             for (i, req) in batch.requests.into_iter().enumerate() {
+                let mut rs = trace.span("serve.request");
+                rs.attr_u64("id", req.id);
                 let value = match (&values, key.dtype) {
                     (HostVec::F32(v), Dtype::F32) => Ok(HostScalar::F32(v[i])),
                     (HostVec::I32(v), Dtype::I32) => Ok(HostScalar::I32(v[i])),
@@ -819,6 +982,8 @@ fn exec_batch(
         Err(e) => {
             let msg = format!("{e:#}");
             for req in batch.requests {
+                let mut rs = trace.span("serve.request");
+                rs.attr_u64("id", req.id);
                 respond(
                     gate,
                     req,

@@ -48,6 +48,7 @@ use crate::pool::{DevicePool, PoolConfig};
 use crate::reduce::op::TypedElement;
 use crate::reduce::plan::Planner;
 use crate::sched::{PoolPrior, SchedConfig, Scheduler};
+use crate::telemetry::Trace;
 
 pub mod outcome;
 pub mod request;
@@ -133,6 +134,7 @@ pub struct EngineBuilder {
     adaptive: bool,
     artifacts_available: bool,
     snapshot: Option<String>,
+    trace: Option<Arc<Trace>>,
 }
 
 impl EngineBuilder {
@@ -189,6 +191,16 @@ impl EngineBuilder {
         self
     }
 
+    /// Attach a span trace: every request records one span tree —
+    /// engine entry → scheduler decision (with candidate costs) →
+    /// shard plan → per-worker pool tasks → combine — into this
+    /// [`Trace`] while it is enabled. Without an explicit trace the
+    /// engine carries a disabled one (span calls cost one branch).
+    pub fn trace(mut self, trace: Arc<Trace>) -> Self {
+        self.trace = Some(trace);
+        self
+    }
+
     /// Warm-start the scheduler's throughput model from a snapshot
     /// previously dumped by [`Scheduler::snapshot_json`]
     /// (`parred serve --sched-snapshot PATH`). A missing file is
@@ -207,6 +219,7 @@ impl EngineBuilder {
         } else {
             self.workers
         };
+        let trace = self.trace.unwrap_or_default();
         let pool = if self.fleet.is_empty() {
             None
         } else {
@@ -216,6 +229,7 @@ impl EngineBuilder {
             Some(DevicePool::new(PoolConfig {
                 devices: self.fleet,
                 tasks_per_device: tasks,
+                trace: trace.clone(),
                 ..PoolConfig::default()
             })?)
         };
@@ -236,7 +250,7 @@ impl EngineBuilder {
             }
         }
         let planner = Planner::new(sched.clone());
-        Ok(Engine { sched, planner, pool })
+        Ok(Engine { sched, planner, pool, trace })
     }
 }
 
@@ -247,6 +261,7 @@ pub struct Engine {
     sched: Arc<Scheduler>,
     planner: Planner,
     pool: Option<DevicePool>,
+    trace: Arc<Trace>,
 }
 
 impl Engine {
@@ -279,6 +294,13 @@ impl Engine {
     /// The attached device fleet, if any.
     pub fn pool(&self) -> Option<&DevicePool> {
         self.pool.as_ref()
+    }
+
+    /// The span trace this engine (and its pool workers) record into.
+    /// Disabled unless one was attached via [`EngineBuilder::trace`]
+    /// and enabled.
+    pub fn trace(&self) -> &Arc<Trace> {
+        &self.trace
     }
 
     /// Host worker threads the full-width rung uses.

@@ -44,15 +44,40 @@ impl<'e, 'd, T: TypedElement> ReduceBuilder<'e, 'd, T> {
         let t0 = Instant::now();
         let n = data.len();
         let sched = engine.scheduler();
-        match sched.decide(op, T::DTYPE, n, false) {
+        let trace = engine.trace();
+        let mut root = trace.span("engine.reduce");
+        if root.active() {
+            root.attr_str("op", op.name());
+            root.attr_str("dtype", T::DTYPE.name());
+            root.attr_u64("n", n as u64);
+        }
+        let decision = {
+            let mut s = trace.span("sched.decide");
+            let d = sched.decide(op, T::DTYPE, n, false);
+            if s.active() {
+                s.attr_str("decision", format!("{d:?}"));
+                for (b, cost) in sched.candidate_costs(op, T::DTYPE, n) {
+                    s.attr_f64(b.name(), cost);
+                }
+            }
+            d
+        };
+        match decision {
             Decision::Sequential => {
-                let value = simd::reduce(data, op);
+                let value = {
+                    let _e = trace.span("exec.sequential");
+                    simd::reduce(data, op)
+                };
                 let dt = t0.elapsed().as_secs_f64();
                 sched.observe(Backend::Sequential, op, T::DTYPE, n, dt);
                 Ok(Reduced::host(value, ExecPath::Host, dt))
             }
             Decision::Threaded { workers } => {
-                let value = persistent::global().reduce_width(data, op, workers);
+                let value = {
+                    let mut e = trace.span("exec.threaded");
+                    e.attr_u64("workers", workers as u64);
+                    persistent::global().reduce_width(data, op, workers)
+                };
                 let dt = t0.elapsed().as_secs_f64();
                 let backend =
                     if workers <= 2 { Backend::ThreadedNarrow } else { Backend::ThreadedFull };
@@ -65,7 +90,14 @@ impl<'e, 'd, T: TypedElement> ReduceBuilder<'e, 'd, T> {
             Decision::Artifact => unreachable!("decide(.., false) never picks Artifact"),
             Decision::Sharded { .. } => match engine.pool() {
                 Some(pool) => {
-                    let plan = sched.plan_shards(pool.devices(), n, pool.tasks_per_device());
+                    let plan = {
+                        let mut p = trace.span("plan.shards");
+                        let plan =
+                            sched.plan_shards(pool.devices(), n, pool.tasks_per_device());
+                        p.attr_u64("shards", plan.shards.len() as u64);
+                        p.attr_u64("devices", pool.num_devices() as u64);
+                        plan
+                    };
                     let (value, out) = pool.reduce_elems_planned(data, op, &plan)?;
                     sched.observe_pool(op, T::DTYPE, n, &out);
                     Ok(Reduced {
@@ -143,12 +175,36 @@ impl<'e, 'd, T: TypedElement> RowsBuilder<'e, 'd, T> {
             return Ok(Reduced::host(Vec::new(), ExecPath::HostFused { batch: 0 }, dt));
         }
         let sched = engine.scheduler();
+        let trace = engine.trace();
+        let mut root = trace.span("engine.reduce_rows");
+        if root.active() {
+            root.attr_str("op", op.name());
+            root.attr_str("dtype", T::DTYPE.name());
+            root.attr_u64("rows", rows as u64);
+            root.attr_u64("cols", cols as u64);
+        }
         let fleet_pinned = via_fleet && op != Op::Prod;
-        let sharded = fleet_pinned
-            || matches!(sched.decide(op, T::DTYPE, cols, false), Decision::Sharded { .. });
+        let sharded = fleet_pinned || {
+            let mut s = trace.span("sched.decide");
+            let d = sched.decide(op, T::DTYPE, cols, false);
+            if s.active() {
+                s.attr_str("decision", format!("{d:?}"));
+                for (b, cost) in sched.candidate_costs(op, T::DTYPE, cols) {
+                    s.attr_f64(b.name(), cost);
+                }
+            }
+            matches!(d, Decision::Sharded { .. })
+        };
         match (sharded, engine.pool()) {
             (true, Some(pool)) => {
-                let base = sched.plan_shards(pool.devices(), cols, pool.tasks_per_device());
+                let base = {
+                    let mut p = trace.span("plan.shards");
+                    let base =
+                        sched.plan_shards(pool.devices(), cols, pool.tasks_per_device());
+                    p.attr_u64("shards", base.shards.len() as u64);
+                    p.attr_u64("devices", pool.num_devices() as u64);
+                    base
+                };
                 let (values, out) = pool.reduce_rows_elems(data, cols, op, &base)?;
                 sched.observe_pool(op, T::DTYPE, rows * cols, &out);
                 Ok(Reduced {
@@ -161,8 +217,11 @@ impl<'e, 'd, T: TypedElement> RowsBuilder<'e, 'd, T> {
                 })
             }
             _ => {
-                let values =
-                    persistent::global().reduce_rows_width(data, cols, op, engine.workers());
+                let values = {
+                    let mut e = trace.span("exec.rows_host");
+                    e.attr_u64("workers", engine.workers() as u64);
+                    persistent::global().reduce_rows_width(data, cols, op, engine.workers())
+                };
                 let dt = t0.elapsed().as_secs_f64();
                 // Observe only passes that actually fanned out —
                 // mirroring `reduce_rows_width`'s own serial predicate
@@ -207,19 +266,34 @@ fn run_segments_core<T: TypedElement>(
     crate::pool::validate_csr_offsets(offsets, data.len())?;
     let segments = offsets.len() - 1;
     let sched = engine.scheduler();
+    let trace = engine.trace();
     // The pin mirrors RowsBuilder::via_fleet: ignored without a pool,
     // and for products (host-only semantics).
-    let decision = if via_fleet && engine.pool().is_some() && op != Op::Prod {
-        SegmentedDecision::FleetPass { devices: engine.pool().map_or(0, |p| p.num_devices()) }
-    } else {
-        sched.decide_segments(op, T::DTYPE, data.len(), segments)
+    let decision = {
+        let mut s = trace.span("sched.decide_segments");
+        let d = if via_fleet && engine.pool().is_some() && op != Op::Prod {
+            SegmentedDecision::FleetPass { devices: engine.pool().map_or(0, |p| p.num_devices()) }
+        } else {
+            sched.decide_segments(op, T::DTYPE, data.len(), segments)
+        };
+        if s.active() {
+            s.attr_str("decision", format!("{d:?}"));
+            s.attr_u64("segments", segments as u64);
+        }
+        d
     };
 
     if let (SegmentedDecision::FleetPass { .. }, Some(pool)) = (decision, engine.pool()) {
         // One wave: every segment's pieces enter the steal queues
         // together under the scheduler's (possibly feedback-adjusted)
         // element-space plan.
-        let plan = sched.plan_shards(pool.devices(), data.len(), pool.tasks_per_device());
+        let plan = {
+            let mut p = trace.span("plan.shards");
+            let plan = sched.plan_shards(pool.devices(), data.len(), pool.tasks_per_device());
+            p.attr_u64("shards", plan.shards.len() as u64);
+            p.attr_u64("devices", pool.num_devices() as u64);
+            plan
+        };
         let (values, out) = pool.reduce_segments_elems(data, offsets, op, &plan)?;
         // Feed the Pool throughput EWMA only when segment boundaries
         // kept the wave close to a flat sharded pass (tasks within 2×
@@ -251,6 +325,8 @@ fn run_segments_core<T: TypedElement>(
     // knee here: with a pool attached the fleet arm above took any
     // workload whose *total* reaches it, and without one the knee is
     // infinite.
+    let mut exec_span = trace.span("exec.segments_host");
+    exec_span.attr_u64("segments", segments as u64);
     let cuts = sched.cutoffs(op, T::DTYPE);
     let mut values = vec![T::identity(op); segments];
     let mut fused_ranges: Vec<(usize, usize)> = Vec::new();
@@ -357,6 +433,13 @@ impl<'e, 'd, T: TypedElement> SegmentsBuilder<'e, 'd, T> {
     pub fn run(self) -> crate::Result<Reduced<Vec<T>>> {
         let SegmentsBuilder { engine, data, offsets, op, via_fleet } = self;
         let t0 = Instant::now();
+        let mut root = engine.trace().span("engine.reduce_segments");
+        if root.active() {
+            root.attr_str("op", op.name());
+            root.attr_str("dtype", T::DTYPE.name());
+            root.attr_u64("n", data.len() as u64);
+            root.attr_u64("segments", offsets.len().saturating_sub(1) as u64);
+        }
         let (values, ex) = run_segments_core(engine, data, offsets, op, via_fleet)?;
         let segments = offsets.len() - 1;
         let path = if ex.fleet {
@@ -429,6 +512,12 @@ impl<'e, 'd, K: Copy + Ord + std::fmt::Debug, T: TypedElement> ByKeyBuilder<'e, 
             let dt = t0.elapsed().as_secs_f64();
             return Ok(Reduced::host(Vec::new(), ExecPath::Keyed { groups: 0 }, dt));
         }
+        let mut root = engine.trace().span("engine.reduce_by_key");
+        if root.active() {
+            root.attr_str("op", op.name());
+            root.attr_str("dtype", T::DTYPE.name());
+            root.attr_u64("n", n as u64);
+        }
         // Grouping contract (mirrored by the serving layer's fused
         // keyed path, coordinator::service::exec_keyed_fused_typed,
         // which must stay behaviourally identical — both ends are
@@ -469,6 +558,7 @@ impl<'e, 'd, K: Copy + Ord + std::fmt::Debug, T: TypedElement> ByKeyBuilder<'e, 
         let (vals, ex) = run_segments_core(engine, grouped, &offsets, op, via_fleet)?;
         let groups = group_keys.len();
         debug_assert_eq!(vals.len(), groups);
+        root.attr_u64("groups", groups as u64);
         Ok(Reduced {
             value: group_keys.into_iter().zip(vals).collect(),
             path: ExecPath::Keyed { groups },

@@ -33,7 +33,13 @@
 //!   ([`Engine`]): a typed facade placing every request — scalar,
 //!   rows, ragged segments, keyed group-bys — on the scheduler's
 //!   ladder, segmented workloads past the knee (or numerous small
-//!   segments) executing as **one** fleet pass; [`harness`]
+//!   segments) executing as **one** fleet pass; [`telemetry`] is the
+//!   zero-dependency observability layer — span traces threaded from
+//!   engine entry through scheduler decision, shard plan, per-worker
+//!   task and combine (JSON-lines / Chrome `trace_event` export), a
+//!   unified metrics [`telemetry::Registry`] with Prometheus-style
+//!   exposition, and the scheduler's modeled-vs-observed audit trail
+//!   ([`sched::Scheduler::audit`]); [`harness`]
 //!   regenerates every table and figure plus the pool's device-count
 //!   scaling and the scheduler's convergence tables.
 //!
@@ -74,10 +80,28 @@
 //! Attach a simulated device fleet with
 //! `Engine::builder().fleet_spec("TeslaC2075*4")?` — payloads past the
 //! derived crossover then shard across it — and turn on feedback with
-//! `.adaptive(true)`. See `examples/` for the end-to-end drivers (PJRT
-//! serving path, golden-section search, counting sort) and `DESIGN.md`
-//! (§9) for how the facade maps onto the paper's "generic and simple"
-//! claim.
+//! `.adaptive(true)`.
+//!
+//! To see *why* the scheduler placed a request where it did, ask the
+//! CLI to explain the decision path before running it:
+//!
+//! ```text
+//! $ parred reduce --n 1048576 --op sum --explain
+//! decision for sum/f32 n=1048576: Threaded { workers: 7 }
+//!   cutoffs: threaded>=16384 pool>=-
+//!   candidate sequential      modeled 0.812 ms
+//!   candidate threaded-narrow modeled 0.413 ms
+//!   candidate threaded-full   modeled 0.197 ms
+//! ```
+//!
+//! (programmatically: [`sched::Scheduler::explain`]; the same candidate
+//! costs land on the scheduler-decision span of an enabled
+//! [`telemetry::Trace`], and `parred serve --trace-out PATH` exports
+//! one span tree per served request). See `examples/` for the
+//! end-to-end drivers (PJRT serving path, golden-section search,
+//! counting sort) and `DESIGN.md` (§9) for how the facade maps onto
+//! the paper's "generic and simple" claim; §11 maps spans and metrics
+//! onto the paper's pipeline stages.
 
 pub mod coordinator;
 pub mod engine;
@@ -88,6 +112,7 @@ pub mod pool;
 pub mod reduce;
 pub mod runtime;
 pub mod sched;
+pub mod telemetry;
 pub mod util;
 
 pub use engine::{Engine, EngineBuilder, ExecPath, Reduced};

@@ -43,6 +43,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "host-workers",
         "sched", "adaptive", "sched-snapshot",
         "segments", "by-key",
+        "explain", "trace-out", "metrics-out",
     ];
     let args = Args::parse(argv, &allowed)?;
     // Size the process-wide persistent host runtime before anything
@@ -78,7 +79,7 @@ USAGE: parred <info|tables|sim|reduce|serve> [options]
       [--device-file my_gpu.json] [--n 5533214] [--f 8] [--block 256] [--op sum]
   reduce --n N [--op sum] [--dtype f32] [--backend engine|host|pool|pjrt]
          [--pool=1 --pool-devices SPEC [--pool-cutoff N]] [--adaptive]
-         [--segments K | --by-key K] [--artifacts DIR]
+         [--segments K | --by-key K] [--artifacts DIR] [--explain]
          one reduction through the Engine facade: the scheduler places
          it (host persistent runtime or device fleet) and the outcome
          reports value, ExecPath, timing and steal stats. --segments K
@@ -91,8 +92,19 @@ USAGE: parred <info|tables|sim|reduce|serve> [options]
   serve [--requests 200] [--batch-window-us 200] [--payload 65536]
         [--artifacts DIR] [--pool=1 --pool-devices SPEC [--pool-cutoff N]]
         [--adaptive] [--sched-snapshot PATH]
+        [--trace-out PATH] [--metrics-out PATH]
         end-to-end serving driver (--pool shards large payloads
         across a fleet of simulated devices)
+
+  reduce --explain prints the scheduler's decision path before the
+  run: the placement, the cutoffs in force, and the modeled cost of
+  every candidate backend.
+
+  serve --trace-out PATH enables span tracing and writes one span
+  tree per request at shutdown: JSON-lines at PATH plus a Chrome
+  trace_event file at PATH.chrome.json (load via chrome://tracing).
+  serve --metrics-out PATH writes the Prometheus-style metrics
+  exposition about once a second and at shutdown.
 
   --host-workers N sizes the process-wide persistent host runtime
   (spawn-once worker pool; default: cores - 1; 0 = run inline with
@@ -412,6 +424,12 @@ fn reduce(args: &Args) -> Result<()> {
                     .pool_cutoff(opt_usize(args, "pool-cutoff", 1 << 20)?);
             }
             let engine = builder.build()?;
+            // `--explain` prints the scheduler's decision path before
+            // running it: the placement, the cutoffs in force, and the
+            // modeled cost of every candidate backend.
+            if truthy(args, "explain") {
+                print!("{}", engine.scheduler().explain(op, dtype, n));
+            }
             match dtype {
                 Dtype::F32 => engine_reduce(
                     &engine,
@@ -497,6 +515,8 @@ fn serve(args: &Args) -> Result<()> {
         pool,
         adaptive: truthy(args, "adaptive"),
         sched_snapshot: args.get("sched-snapshot").map(str::to_string),
+        trace_out: args.get("trace-out").map(str::to_string),
+        metrics_out: args.get("metrics-out").map(str::to_string),
     };
     let trace = TraceConfig {
         requests: args.get_usize("requests", 200)?,

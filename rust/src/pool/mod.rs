@@ -48,6 +48,7 @@ use crate::gpusim::{DeviceConfig, Gpu};
 use crate::kernels::drivers;
 use crate::reduce::kahan;
 use crate::reduce::op::{Element, Op};
+use crate::telemetry::Trace;
 
 pub mod plan;
 pub mod queue;
@@ -76,6 +77,11 @@ pub struct PoolConfig {
     /// Used by the adaptive-scheduler harness and tests; 0 (the
     /// default) disables it.
     pub pace: f64,
+    /// Span trace the pass/task/combine spans record into. Defaults to
+    /// a disabled trace (inert spans); the engine facade threads its
+    /// own trace through here so per-worker task spans land in the
+    /// same tree as the request that enqueued them.
+    pub trace: Arc<Trace>,
 }
 
 impl Default for PoolConfig {
@@ -86,6 +92,7 @@ impl Default for PoolConfig {
             unroll: 8,
             tasks_per_device: 2,
             pace: 0.0,
+            trace: Arc::default(),
         }
     }
 }
@@ -103,6 +110,10 @@ struct Task {
     data: Arc<Vec<f64>>,
     shard: Shard,
     op: CombOp,
+    /// Span id of the `pool.pass` that enqueued this task (0 when
+    /// tracing is disabled) — the cross-thread parent link for the
+    /// worker's `pool.task` span.
+    parent_span: u64,
     reply: mpsc::Sender<TaskResult>,
 }
 
@@ -175,6 +186,7 @@ impl DevicePool {
             let block = cfg.block.min(dev.max_block_threads);
             let unroll = cfg.unroll;
             let pace = cfg.pace;
+            let trace = cfg.trace.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("parred-pool-{i}-{}", dev.name))
                 .spawn(move || {
@@ -187,7 +199,7 @@ impl DevicePool {
                         }
                     }
                     let _guard = DeadFlag(dead);
-                    worker_loop(i, dev, block, unroll, pace, queues);
+                    worker_loop(i, dev, block, unroll, pace, trace, queues);
                 })
                 .with_context(|| format!("spawning pool worker {i}"))?;
             handles.push(handle);
@@ -271,10 +283,14 @@ impl DevicePool {
             });
         }
 
+        let mut pass = self.cfg.trace.span("pool.pass");
+        pass.attr_u64("tasks", plan.shards.len() as u64);
+        pass.attr_u64("devices", workers as u64);
+        let parent_span = pass.id();
         let (tx, rx) = mpsc::channel::<TaskResult>();
         self.queues.push_all(plan.shards.iter().enumerate().map(|(id, &shard)| {
             let task =
-                Task { id, data: payload.clone(), shard, op, reply: tx.clone() };
+                Task { id, data: payload.clone(), shard, op, parent_span, reply: tx.clone() };
             (shard.device, task)
         }));
         drop(tx);
@@ -298,9 +314,14 @@ impl DevicePool {
                 Err(e) => bail!("shard {} failed on worker {}: {e}", r.id, r.worker),
             }
         }
+        pass.attr_u64("steals", steals);
 
+        let value = {
+            let _combine = self.cfg.trace.span("pool.combine");
+            combine(op, &partials)
+        };
         Ok(PoolOutcome {
-            value: combine(op, &partials),
+            value,
             shards: plan.shards.len(),
             steals,
             modeled_wall_s: busy.iter().cloned().fold(0.0, f64::max),
@@ -397,6 +418,11 @@ impl DevicePool {
         let payload: Arc<Vec<f64>> = Arc::new(crate::reduce::persistent::global().map_f64(data));
         let per_row = base.shards.len();
         let total = rows * per_row;
+        let mut pass = self.cfg.trace.span("pool.pass");
+        pass.attr_u64("tasks", total as u64);
+        pass.attr_u64("devices", workers as u64);
+        pass.attr_u64("rows", rows as u64);
+        let parent_span = pass.id();
         let (tx, rx) = mpsc::channel::<TaskResult>();
         let mut tasks = Vec::with_capacity(total);
         for r in 0..rows {
@@ -412,6 +438,7 @@ impl DevicePool {
                             end: r * cols + s.end,
                         },
                         op: cop,
+                        parent_span,
                         reply: tx.clone(),
                     },
                 ));
@@ -439,7 +466,9 @@ impl DevicePool {
                 Err(e) => bail!("row shard {} failed on worker {}: {e}", r.id, r.worker),
             }
         }
+        pass.attr_u64("steals", steals);
 
+        let _combine_span = self.cfg.trace.span("pool.combine");
         let values: Vec<T> = (0..rows)
             .map(|r| T::from_f64(combine(cop, &partials[r * per_row..(r + 1) * per_row])))
             .collect();
@@ -518,6 +547,11 @@ impl DevicePool {
         let tasks = segment_tasks(plan, offsets);
         let total = tasks.len();
         let payload: Arc<Vec<f64>> = Arc::new(crate::reduce::persistent::global().map_f64(data));
+        let mut pass = self.cfg.trace.span("pool.pass");
+        pass.attr_u64("tasks", total as u64);
+        pass.attr_u64("devices", workers as u64);
+        pass.attr_u64("segments", segments as u64);
+        let parent_span = pass.id();
         let (tx, rx) = mpsc::channel::<TaskResult>();
         self.queues.push_all(tasks.iter().enumerate().map(|(id, t)| {
             (
@@ -527,6 +561,7 @@ impl DevicePool {
                     data: payload.clone(),
                     shard: Shard { device: t.device, start: t.start, end: t.end },
                     op: cop,
+                    parent_span,
                     reply: tx.clone(),
                 },
             )
@@ -552,6 +587,8 @@ impl DevicePool {
                 Err(e) => bail!("segment task {} failed on worker {}: {e}", r.id, r.worker),
             }
         }
+        pass.attr_u64("steals", steals);
+        let _combine_span = self.cfg.trace.span("pool.combine");
 
         // Per-segment combine in task order (tasks are emitted in
         // element order, so this is position order — deterministic
@@ -613,6 +650,7 @@ fn worker_loop(
     block: u32,
     unroll: u32,
     pace: f64,
+    trace: Arc<Trace>,
     queues: Arc<StealQueues<Task>>,
 ) {
     let mut gpu = Gpu::new(dev);
@@ -625,6 +663,12 @@ fn worker_loop(
     // sits inside the compensation tolerance the pool guarantees.
     let single_launch_max = block as usize * unroll.max(1) as usize;
     while let Some((task, stolen)) = queues.pop(me) {
+        let mut span = trace.span_with_parent("pool.task", task.parent_span);
+        span.attr_u64("task", task.id as u64);
+        span.attr_u64("worker", me as u64);
+        span.attr_u64("stolen", stolen as u64);
+        span.attr_u64("lo", task.shard.start as u64);
+        span.attr_u64("hi", task.shard.end as u64);
         let slice = &task.data[task.shard.start..task.shard.end];
         let outcome = if slice.len() <= single_launch_max {
             drivers::jradi_reduce_single(&mut gpu, slice, task.op, unroll, block)
@@ -643,6 +687,9 @@ fn worker_loop(
                 }
             }
         }
+        // Close the span before replying so its record is in the sink
+        // by the time the dispatcher sees the last result.
+        drop(span);
         let _ = task.reply.send(TaskResult { id: task.id, worker: me, stolen, outcome });
     }
 }

@@ -1,0 +1,185 @@
+//! Scheduler decision audit trail: modeled-vs-observed wall clock per
+//! `(backend, op, dtype)`.
+//!
+//! Every observation the scheduler receives — adaptive or not — is
+//! compared against what the cost model *predicted* for that backend
+//! at that size (`overhead_s + bytes / bytes_per_s`, evaluated with
+//! the profile in force at observation time). The relative error
+//! `|observed - modeled| / modeled` lands in a log-bucketed
+//! [`Histogram`]; an observation with relative error above
+//! [`MISPREDICT_REL_ERR`] counts as a mispredict.
+//!
+//! [`crate::sched::Scheduler::audit`] surfaces the trail as
+//! [`AuditEntry`] rows (mispredict rate + error percentiles) — the
+//! measured-execution input ROADMAP's learned-overhead phase 2 needs,
+//! after Prajapati's fit-machine-parameters-from-measurement story.
+
+use std::collections::HashMap;
+
+use crate::reduce::op::{Dtype, Op};
+use crate::util::stats::Histogram;
+
+use super::model::Backend;
+
+/// Relative error above which an observation counts as a mispredict:
+/// the model was off by more than 50% of its own prediction — enough
+/// to flip a near-cutoff decision to the wrong rung.
+pub const MISPREDICT_REL_ERR: f64 = 0.5;
+
+/// Accumulated audit state for one `(backend, op, dtype)` key.
+#[derive(Debug, Clone, Default)]
+struct Cell {
+    err: Histogram,
+    mispredicts: u64,
+    sum_modeled_s: f64,
+    sum_observed_s: f64,
+}
+
+/// The audit accumulator (lives behind a mutex on the scheduler).
+#[derive(Debug, Default)]
+pub struct AuditTrail {
+    cells: HashMap<(Backend, Op, Dtype), Cell>,
+}
+
+impl AuditTrail {
+    /// Fold one execution: `modeled_s` is the cost-model prediction at
+    /// observation time, `observed_s` the wall clock that actually
+    /// happened. Degenerate inputs are ignored.
+    pub fn record(&mut self, backend: Backend, op: Op, dtype: Dtype, modeled_s: f64, observed_s: f64) {
+        if !modeled_s.is_finite() || !observed_s.is_finite() || modeled_s <= 0.0 || observed_s <= 0.0
+        {
+            return;
+        }
+        let rel_err = (observed_s - modeled_s).abs() / modeled_s;
+        let cell = self.cells.entry((backend, op, dtype)).or_default();
+        cell.err.record(rel_err);
+        if rel_err > MISPREDICT_REL_ERR {
+            cell.mispredicts += 1;
+        }
+        cell.sum_modeled_s += modeled_s;
+        cell.sum_observed_s += observed_s;
+    }
+
+    /// Snapshot as report rows, sorted by `(backend, op, dtype)` name.
+    pub fn entries(&self) -> Vec<AuditEntry> {
+        let mut rows: Vec<AuditEntry> = self
+            .cells
+            .iter()
+            .map(|(&(backend, op, dtype), c)| AuditEntry {
+                backend,
+                op,
+                dtype,
+                observations: c.err.count(),
+                mispredicts: c.mispredicts,
+                mispredict_rate: c.mispredicts as f64 / c.err.count().max(1) as f64,
+                err_p50: c.err.percentile(50.0),
+                err_p95: c.err.percentile(95.0),
+                err_p99: c.err.percentile(99.0),
+                mean_modeled_s: c.sum_modeled_s / c.err.count().max(1) as f64,
+                mean_observed_s: c.sum_observed_s / c.err.count().max(1) as f64,
+            })
+            .collect();
+        rows.sort_by_key(|e| (e.backend.name(), e.op.name(), e.dtype.name()));
+        rows
+    }
+}
+
+/// One audit report row: how well the cost model predicted one
+/// `(backend, op, dtype)` key.
+#[derive(Debug, Clone)]
+pub struct AuditEntry {
+    pub backend: Backend,
+    pub op: Op,
+    pub dtype: Dtype,
+    /// Executions folded in.
+    pub observations: u64,
+    /// Observations with relative error > [`MISPREDICT_REL_ERR`].
+    pub mispredicts: u64,
+    /// `mispredicts / observations`.
+    pub mispredict_rate: f64,
+    /// Relative-error percentiles (`|obs - model| / model`).
+    pub err_p50: f64,
+    pub err_p95: f64,
+    pub err_p99: f64,
+    /// Mean predicted wall clock, seconds.
+    pub mean_modeled_s: f64,
+    /// Mean observed wall clock, seconds.
+    pub mean_observed_s: f64,
+}
+
+impl std::fmt::Display for AuditEntry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}/{}/{}: n={} mispredict={:.1}% err p50={:.3} p95={:.3} p99={:.3} \
+             modeled={:.3}ms observed={:.3}ms",
+            self.backend,
+            self.op,
+            self.dtype.name(),
+            self.observations,
+            self.mispredict_rate * 100.0,
+            self.err_p50,
+            self.err_p95,
+            self.err_p99,
+            self.mean_modeled_s * 1e3,
+            self.mean_observed_s * 1e3
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_predictions_never_mispredict() {
+        let mut a = AuditTrail::default();
+        for _ in 0..10 {
+            a.record(Backend::Sequential, Op::Sum, Dtype::F32, 1e-3, 1e-3);
+        }
+        let rows = a.entries();
+        assert_eq!(rows.len(), 1);
+        let e = &rows[0];
+        assert_eq!(e.observations, 10);
+        assert_eq!(e.mispredicts, 0);
+        assert_eq!(e.mispredict_rate, 0.0);
+        // Zero relative error clamps into the first histogram bucket.
+        assert!(e.err_p99 < 1e-6, "p99={}", e.err_p99);
+        assert!((e.mean_modeled_s - 1e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn large_errors_count_as_mispredicts() {
+        let mut a = AuditTrail::default();
+        // 3x slower than modeled: rel err 2.0 > 0.5.
+        a.record(Backend::Pool, Op::Sum, Dtype::F32, 1e-3, 3e-3);
+        // 10% off: not a mispredict.
+        a.record(Backend::Pool, Op::Sum, Dtype::F32, 1e-3, 1.1e-3);
+        let e = &a.entries()[0];
+        assert_eq!(e.observations, 2);
+        assert_eq!(e.mispredicts, 1);
+        assert!((e.mispredict_rate - 0.5).abs() < 1e-12);
+        assert!(e.err_p99 > 1.0, "p99={}", e.err_p99);
+    }
+
+    #[test]
+    fn degenerate_observations_ignored() {
+        let mut a = AuditTrail::default();
+        a.record(Backend::Sequential, Op::Sum, Dtype::F32, 0.0, 1e-3);
+        a.record(Backend::Sequential, Op::Sum, Dtype::F32, 1e-3, 0.0);
+        a.record(Backend::Sequential, Op::Sum, Dtype::F32, f64::NAN, 1e-3);
+        a.record(Backend::Sequential, Op::Sum, Dtype::F32, 1e-3, f64::INFINITY);
+        assert!(a.entries().is_empty());
+    }
+
+    #[test]
+    fn keys_stay_separate_and_sorted() {
+        let mut a = AuditTrail::default();
+        a.record(Backend::ThreadedFull, Op::Max, Dtype::I32, 1e-3, 1e-3);
+        a.record(Backend::Pool, Op::Sum, Dtype::F32, 1e-3, 1e-3);
+        let rows = a.entries();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].backend, Backend::Pool);
+        assert_eq!(rows[1].backend, Backend::ThreadedFull);
+    }
+}

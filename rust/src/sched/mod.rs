@@ -35,9 +35,11 @@ use crate::pool::{PoolOutcome, ShardPlan};
 use crate::reduce::op::{Dtype, Op};
 use crate::util::json::Json;
 
+pub mod audit;
 pub mod feedback;
 pub mod model;
 
+pub use audit::{AuditEntry, AuditTrail, MISPREDICT_REL_ERR};
 pub use feedback::FleetFeedback;
 pub use model::{Backend, BackendProfile, ThroughputModel};
 
@@ -85,6 +87,47 @@ pub struct Cutoffs {
     pub thread: usize,
     /// At/above this (with a pool attached): shard across the fleet.
     pub pool: usize,
+}
+
+/// One explained placement ([`Scheduler::explain`]): the decision,
+/// the cutoff ladder in force, and the modeled cost of every feasible
+/// candidate backend.
+#[derive(Debug, Clone)]
+pub struct Explain {
+    pub op: Op,
+    pub dtype: Dtype,
+    pub n: usize,
+    pub decision: Decision,
+    pub cutoffs: Cutoffs,
+    /// `(backend, modeled seconds)` per feasible rung.
+    pub candidates: Vec<(Backend, f64)>,
+}
+
+impl std::fmt::Display for Explain {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        fn cut(v: usize) -> String {
+            if v == usize::MAX { "-".to_string() } else { v.to_string() }
+        }
+        writeln!(
+            f,
+            "decision for {}/{} n={}: {:?}",
+            self.op,
+            self.dtype.name(),
+            self.n,
+            self.decision
+        )?;
+        writeln!(
+            f,
+            "  cutoffs: seq={} thread={} pool={}",
+            cut(self.cutoffs.seq),
+            cut(self.cutoffs.thread),
+            cut(self.cutoffs.pool)
+        )?;
+        for &(backend, cost_s) in &self.candidates {
+            writeln!(f, "  candidate {backend}: {:.3} ms modeled", cost_s * 1e3)?;
+        }
+        Ok(())
+    }
 }
 
 /// Pool attachment parameters for the scheduler.
@@ -155,6 +198,10 @@ pub struct Scheduler {
     cfg: SchedConfig,
     model: Mutex<ThroughputModel>,
     fleet: Mutex<FleetFeedback>,
+    /// Modeled-vs-observed audit trail. Unlike the model and fleet
+    /// feedback it records unconditionally (adaptive or not): auditing
+    /// the cost model is observation, not adaptation.
+    audit: Mutex<AuditTrail>,
 }
 
 impl Scheduler {
@@ -163,6 +210,7 @@ impl Scheduler {
         Scheduler {
             model: Mutex::new(ThroughputModel::new(cfg.alpha, pool_prior)),
             fleet: Mutex::new(FleetFeedback::new(cfg.gain)),
+            audit: Mutex::new(AuditTrail::default()),
             cfg,
         }
     }
@@ -190,6 +238,10 @@ impl Scheduler {
 
     fn fleet(&self) -> std::sync::MutexGuard<'_, FleetFeedback> {
         self.fleet.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
+    fn audit_trail(&self) -> std::sync::MutexGuard<'_, AuditTrail> {
+        self.audit.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
     }
 
     /// The crossover cutoffs currently in force for one `(op, dtype)`.
@@ -316,13 +368,84 @@ impl Scheduler {
         SegmentedDecision::PerSegment
     }
 
-    /// Record one observed execution (no-op unless adaptive).
+    /// Record one observed execution. The audit trail always records
+    /// (modeled-vs-observed comparison is passive bookkeeping); the
+    /// throughput model only folds the observation in when adaptive.
     pub fn observe(&self, backend: Backend, op: Op, dtype: Dtype, elements: usize, seconds: f64) {
+        if elements > 0 {
+            let bytes = (elements * dtype.size_bytes()) as f64;
+            // Evaluate the prediction with the profile in force *before*
+            // this observation updates it.
+            let modeled_s = {
+                let m = self.model();
+                let p = m.profile(backend, op, dtype);
+                if p.bytes_per_s > 0.0 { p.overhead_s + bytes / p.bytes_per_s } else { 0.0 }
+            };
+            if modeled_s > 0.0 {
+                self.audit_trail().record(backend, op, dtype, modeled_s, seconds);
+            }
+        }
         if !self.cfg.adaptive || elements == 0 {
             return;
         }
         let bytes = (elements * dtype.size_bytes()) as f64;
         self.model().record(backend, op, dtype, bytes, seconds);
+    }
+
+    /// The audit trail so far: mispredict rate and cost-model error
+    /// percentiles per `(backend, op, dtype)` — see [`AuditEntry`].
+    pub fn audit(&self) -> Vec<AuditEntry> {
+        self.audit_trail().entries()
+    }
+
+    /// Human-readable audit report (one [`AuditEntry`] row per line).
+    pub fn audit_report(&self) -> String {
+        let rows = self.audit();
+        if rows.is_empty() {
+            return "scheduler audit: no observations\n".to_string();
+        }
+        let mut out = String::from("=== scheduler audit: modeled vs observed ===\n");
+        for r in rows {
+            out.push_str(&format!("{r}\n"));
+        }
+        out
+    }
+
+    /// Modeled wall clock per feasible candidate backend for an
+    /// `n`-element reduction (the costs [`Scheduler::decide`] weighs).
+    /// Infeasible rungs are omitted: the pool without an attached
+    /// fleet, and the pool for [`Op::Prod`].
+    pub fn candidate_costs(&self, op: Op, dtype: Dtype, n: usize) -> Vec<(Backend, f64)> {
+        let bytes = (n * dtype.size_bytes()) as f64;
+        let m = self.model();
+        Backend::ALL
+            .into_iter()
+            .filter_map(|b| {
+                if b == Backend::Pool && (self.pool_devices() == 0 || op == Op::Prod) {
+                    return None;
+                }
+                let p = m.profile(b, op, dtype);
+                if p.bytes_per_s <= 0.0 {
+                    return None;
+                }
+                Some((b, p.overhead_s + bytes / p.bytes_per_s))
+            })
+            .collect()
+    }
+
+    /// Explain one placement: the decision, the cutoffs in force, and
+    /// the modeled cost of every candidate backend — what `parred
+    /// reduce --explain` prints and what an enabled trace attaches to
+    /// its scheduler-decision span.
+    pub fn explain(&self, op: Op, dtype: Dtype, n: usize) -> Explain {
+        Explain {
+            op,
+            dtype,
+            n,
+            decision: self.decide(op, dtype, n, false),
+            cutoffs: self.cutoffs(op, dtype),
+            candidates: self.candidate_costs(op, dtype, n),
+        }
     }
 
     /// Record a fleet outcome: pool throughput EWMA (over *modeled*
@@ -821,6 +944,86 @@ mod tests {
         assert_eq!(s.load_snapshot_json(text).unwrap(), 1);
         assert_eq!(s.fleet_factors(4), vec![1.0; 4]);
         assert_eq!(s.fleet_outcomes(), 0);
+    }
+
+    #[test]
+    fn audit_records_even_when_non_adaptive() {
+        let s = pooled(false, None);
+        let before = s.cutoffs(Op::Sum, Dtype::F32);
+        // Feed pool observations that are 3x the modeled cost.
+        let prior_bps = 4.0 * 76.8e9;
+        let n = 1 << 21;
+        let modeled = model::POOL_OVERHEAD_S + (n * 4) as f64 / prior_bps;
+        for _ in 0..8 {
+            s.observe(Backend::Pool, Op::Sum, Dtype::F32, n, 3.0 * modeled);
+        }
+        // The model stayed frozen (non-adaptive)...
+        assert_eq!(s.cutoffs(Op::Sum, Dtype::F32), before);
+        // ...but the audit trail saw every execution.
+        let rows = s.audit();
+        assert_eq!(rows.len(), 1);
+        let e = &rows[0];
+        assert_eq!((e.backend, e.op, e.dtype), (Backend::Pool, Op::Sum, Dtype::F32));
+        assert_eq!(e.observations, 8);
+        assert_eq!(e.mispredicts, 8, "3x off must count as mispredicts");
+        assert_eq!(e.mispredict_rate, 1.0);
+        assert!(e.err_p50 > 1.0 && e.err_p50 < 3.0, "rel err ~2.0, got {}", e.err_p50);
+        assert!(s.audit_report().contains("pool/sum/f32"), "{}", s.audit_report());
+    }
+
+    #[test]
+    fn audit_on_adaptive_scheduler_tracks_shrinking_error() {
+        let s = pooled(true, None);
+        let n = 1 << 21;
+        // A fleet exactly 2x slower than its prior: the first
+        // observations mispredict, then the EWMA converges and the
+        // model starts predicting correctly.
+        let true_s = 2.0 * (model::POOL_OVERHEAD_S + (n * 4) as f64 / (4.0 * 76.8e9));
+        for _ in 0..32 {
+            s.observe(Backend::Pool, Op::Sum, Dtype::F32, n, true_s);
+        }
+        let e = &s.audit()[0];
+        assert_eq!(e.observations, 32);
+        assert!(e.mispredicts >= 1, "the cold prior must mispredict at least once");
+        assert!(
+            e.mispredicts < 32,
+            "adaptation must stop the mispredicts ({}/32)",
+            e.mispredicts
+        );
+    }
+
+    #[test]
+    fn audit_ignores_empty_observations() {
+        let s = pooled(false, None);
+        s.observe(Backend::Sequential, Op::Sum, Dtype::F32, 0, 1.0);
+        assert!(s.audit().is_empty());
+        assert!(s.audit_report().contains("no observations"));
+    }
+
+    #[test]
+    fn explain_names_the_chosen_rung_and_costs() {
+        let s = pooled(false, None);
+        let c = s.cutoffs(Op::Sum, Dtype::F32);
+        let ex = s.explain(Op::Sum, Dtype::F32, c.pool);
+        assert_eq!(ex.decision, Decision::Sharded { devices: 4 });
+        assert_eq!(ex.cutoffs, c);
+        // All four rungs are feasible here.
+        assert_eq!(ex.candidates.len(), 4);
+        // The pool's modeled cost must be the cheapest at its own knee
+        // (that is what a crossover means).
+        let cost = |b: Backend| ex.candidates.iter().find(|&&(x, _)| x == b).unwrap().1;
+        assert!(cost(Backend::Pool) <= cost(Backend::ThreadedFull) * 1.01);
+        let text = format!("{ex}");
+        assert!(text.contains("Sharded"), "{text}");
+        assert!(text.contains("candidate pool"), "{text}");
+        assert!(text.contains("cutoffs: seq="), "{text}");
+        // Products drop the pool rung from the candidate list.
+        let ex = s.explain(Op::Prod, Dtype::I32, 1 << 22);
+        assert!(ex.candidates.iter().all(|&(b, _)| b != Backend::Pool));
+        assert!(format!("{ex}").contains("pool=-"), "prod pool cutoff renders as '-'");
+        // Host-only scheduler: no pool candidate either.
+        let ex = Scheduler::host(4).explain(Op::Sum, Dtype::F32, 1 << 22);
+        assert_eq!(ex.candidates.len(), 3);
     }
 
     #[test]

@@ -1,0 +1,70 @@
+//! Crate-wide telemetry: span traces, a unified metrics registry, and
+//! counted warning events — zero-dependency (offline container), built
+//! on `std` atomics and the crate's own [`crate::util::stats`] /
+//! [`crate::util::json`] primitives.
+//!
+//! Three pieces (DESIGN.md §11):
+//!
+//! * [`Trace`] / [`Span`]: one span tree per request — engine entry →
+//!   scheduler decision (with modeled cost per candidate backend) →
+//!   shard plan → per-worker pool tasks → combine. Disabled tracing is
+//!   a branch on an `AtomicBool`; exports are JSON-lines and Chrome
+//!   `trace_event` (see [`Trace::export_chrome`]).
+//! * [`Registry`]: counters / gauges / histograms by name + labels
+//!   (`path`, `op`, `dtype`, `backend`), with Prometheus-style text
+//!   exposition. The coordinator syncs its [`crate::coordinator::Metrics`],
+//!   the device-pool counters and the persistent host-pool counters
+//!   onto it ([`crate::coordinator::Service::metrics_text`]).
+//! * [`warn`]: process-wide counted warning events — conditions worth
+//!   observing that must not panic a serving process (e.g. a keyed
+//!   "batch" of one racing the flush window).
+//!
+//! The scheduler's modeled-vs-observed audit trail
+//! ([`crate::sched::Scheduler::audit`]) builds on the same histogram
+//! primitive and feeds ROADMAP's learned-overhead phase 2.
+
+mod registry;
+mod trace;
+
+pub use registry::Registry;
+pub use trace::{chrome_trace, record_json, Attr, Span, SpanRecord, Trace};
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+/// Process-wide counted warning events (name → occurrences).
+static WARNINGS: Mutex<BTreeMap<&'static str, u64>> = Mutex::new(BTreeMap::new());
+
+/// Count one occurrence of a warning event; returns the new total.
+pub fn warn(event: &'static str) -> u64 {
+    let mut g = WARNINGS.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    let c = g.entry(event).or_insert(0);
+    *c += 1;
+    *c
+}
+
+/// Occurrences of one warning event so far (0 if never raised).
+pub fn warning_count(event: &str) -> u64 {
+    let g = WARNINGS.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    g.get(event).copied().unwrap_or(0)
+}
+
+/// All warning events raised so far, sorted by name.
+pub fn warning_counts() -> Vec<(&'static str, u64)> {
+    let g = WARNINGS.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    g.iter().map(|(&k, &v)| (k, v)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warnings_count_up() {
+        let before = warning_count("telemetry-test-event");
+        warn("telemetry-test-event");
+        warn("telemetry-test-event");
+        assert_eq!(warning_count("telemetry-test-event"), before + 2);
+        assert!(warning_counts().iter().any(|&(k, _)| k == "telemetry-test-event"));
+    }
+}

@@ -1,0 +1,241 @@
+//! Unified metrics registry: counters, gauges and latency histograms
+//! registered by name + label set, with a Prometheus-style text
+//! exposition ([`Registry::prometheus_text`]).
+//!
+//! Histograms wrap [`crate::util::stats::Histogram`] unchanged, so
+//! percentile queries through the registry are bit-identical to the
+//! coordinator's existing latency summaries (pinned by a property
+//! test in `tests/integration_telemetry.rs`).
+//!
+//! The registry supports two write styles:
+//!
+//! * **incremental** ([`Registry::inc`], [`Registry::observe`]) for
+//!   code that owns no other counter state;
+//! * **absolute** ([`Registry::set_counter`], [`Registry::set_gauge`],
+//!   [`Registry::set_histogram`]) for periodic syncs from snapshot
+//!   sources — [`crate::coordinator::Metrics`],
+//!   [`crate::pool::PoolCounters`],
+//!   [`crate::reduce::persistent::PersistentCounters`] — which makes
+//!   the sync idempotent: re-exporting the same snapshot twice leaves
+//!   the registry unchanged.
+
+use std::collections::BTreeMap;
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
+use crate::util::stats::Histogram;
+
+/// `(metric name, sorted label pairs)`.
+type Key = (String, Vec<(String, String)>);
+
+#[derive(Default)]
+struct Inner {
+    counters: BTreeMap<Key, u64>,
+    gauges: BTreeMap<Key, f64>,
+    hists: BTreeMap<Key, Histogram>,
+}
+
+/// A thread-safe metric store; see the module docs.
+#[derive(Default)]
+pub struct Registry {
+    inner: Mutex<Inner>,
+}
+
+impl std::fmt::Debug for Registry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let g = self.lock();
+        f.debug_struct("Registry")
+            .field("counters", &g.counters.len())
+            .field("gauges", &g.gauges.len())
+            .field("histograms", &g.hists.len())
+            .finish()
+    }
+}
+
+fn key(name: &str, labels: &[(&str, &str)]) -> Key {
+    let mut l: Vec<(String, String)> =
+        labels.iter().map(|&(k, v)| (k.to_string(), v.to_string())).collect();
+    l.sort();
+    (name.to_string(), l)
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    fn lock(&self) -> MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Add `delta` to a counter (registered on first touch).
+    pub fn inc(&self, name: &str, labels: &[(&str, &str)], delta: u64) {
+        *self.lock().counters.entry(key(name, labels)).or_insert(0) += delta;
+    }
+
+    /// Set a counter to an absolute value (snapshot sync).
+    pub fn set_counter(&self, name: &str, labels: &[(&str, &str)], value: u64) {
+        self.lock().counters.insert(key(name, labels), value);
+    }
+
+    /// Current counter value (0 if never touched).
+    pub fn counter(&self, name: &str, labels: &[(&str, &str)]) -> u64 {
+        self.lock().counters.get(&key(name, labels)).copied().unwrap_or(0)
+    }
+
+    /// Set a gauge.
+    pub fn set_gauge(&self, name: &str, labels: &[(&str, &str)], value: f64) {
+        self.lock().gauges.insert(key(name, labels), value);
+    }
+
+    /// Current gauge value.
+    pub fn gauge(&self, name: &str, labels: &[(&str, &str)]) -> Option<f64> {
+        self.lock().gauges.get(&key(name, labels)).copied()
+    }
+
+    /// Record one sample into a histogram (registered on first touch).
+    pub fn observe(&self, name: &str, labels: &[(&str, &str)], secs: f64) {
+        self.lock().hists.entry(key(name, labels)).or_default().record(secs);
+    }
+
+    /// Replace a histogram with a snapshot (idempotent sync).
+    pub fn set_histogram(&self, name: &str, labels: &[(&str, &str)], h: Histogram) {
+        self.lock().hists.insert(key(name, labels), h);
+    }
+
+    /// Clone of a histogram, for percentile queries.
+    pub fn histogram(&self, name: &str, labels: &[(&str, &str)]) -> Option<Histogram> {
+        self.lock().hists.get(&key(name, labels)).cloned()
+    }
+
+    /// Prometheus-style text exposition: counters and gauges as-is,
+    /// histograms as quantile summaries (`{quantile="0.5"}` etc. plus
+    /// `_sum` / `_count`).
+    pub fn prometheus_text(&self) -> String {
+        let g = self.lock();
+        let mut out = String::new();
+        let mut last = String::new();
+        for ((name, labels), v) in &g.counters {
+            type_line(&mut out, &mut last, name, "counter");
+            out.push_str(&format!("{name}{} {v}\n", fmt_labels(labels, None)));
+        }
+        last.clear();
+        for ((name, labels), v) in &g.gauges {
+            type_line(&mut out, &mut last, name, "gauge");
+            out.push_str(&format!("{name}{} {v}\n", fmt_labels(labels, None)));
+        }
+        last.clear();
+        for ((name, labels), h) in &g.hists {
+            type_line(&mut out, &mut last, name, "summary");
+            if h.count() > 0 {
+                for q in [50.0, 95.0, 99.0] {
+                    let ql = format!("{}", q / 100.0);
+                    out.push_str(&format!(
+                        "{name}{} {}\n",
+                        fmt_labels(labels, Some(("quantile", &ql))),
+                        h.percentile(q)
+                    ));
+                }
+            }
+            let plain = fmt_labels(labels, None);
+            out.push_str(&format!("{name}_sum{plain} {}\n", h.mean().max(0.0) * h.count() as f64));
+            out.push_str(&format!("{name}_count{plain} {}\n", h.count()));
+        }
+        out
+    }
+}
+
+fn type_line(out: &mut String, last: &mut String, name: &str, kind: &str) {
+    if name != last {
+        out.push_str(&format!("# TYPE {name} {kind}\n"));
+        *last = name.to_string();
+    }
+}
+
+fn fmt_labels(labels: &[(String, String)], extra: Option<(&str, &str)>) -> String {
+    let mut pairs: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", escape_label(v)))
+        .collect();
+    if let Some((k, v)) = extra {
+        pairs.push(format!("{k}=\"{}\"", escape_label(v)));
+    }
+    if pairs.is_empty() {
+        String::new()
+    } else {
+        format!("{{{}}}", pairs.join(","))
+    }
+}
+
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_inc_and_set() {
+        let r = Registry::new();
+        r.inc("parred_requests_total", &[("path", "host")], 2);
+        r.inc("parred_requests_total", &[("path", "host")], 3);
+        assert_eq!(r.counter("parred_requests_total", &[("path", "host")]), 5);
+        // Label order does not matter.
+        r.inc("m", &[("a", "1"), ("b", "2")], 1);
+        assert_eq!(r.counter("m", &[("b", "2"), ("a", "1")]), 1);
+        // Absolute set overrides (idempotent snapshot sync).
+        r.set_counter("parred_requests_total", &[("path", "host")], 7);
+        r.set_counter("parred_requests_total", &[("path", "host")], 7);
+        assert_eq!(r.counter("parred_requests_total", &[("path", "host")]), 7);
+    }
+
+    #[test]
+    fn histograms_match_stats_exactly() {
+        let r = Registry::new();
+        let mut want = Histogram::new();
+        for i in 1..=500 {
+            let s = i as f64 * 3e-6;
+            r.observe("lat", &[("op", "sum")], s);
+            want.record(s);
+        }
+        let got = r.histogram("lat", &[("op", "sum")]).unwrap();
+        assert_eq!(got.count(), want.count());
+        for p in [1.0, 50.0, 95.0, 99.0, 100.0] {
+            assert_eq!(got.percentile(p), want.percentile(p), "p{p}");
+        }
+        assert_eq!(got.mean(), want.mean());
+    }
+
+    #[test]
+    fn exposition_shape() {
+        let r = Registry::new();
+        r.inc("parred_done", &[], 3);
+        r.set_gauge("parred_uptime_seconds", &[], 1.5);
+        r.observe("parred_latency_seconds", &[("path", "host")], 1e-3);
+        let text = r.prometheus_text();
+        assert!(text.contains("# TYPE parred_done counter"), "{text}");
+        assert!(text.contains("parred_done 3"), "{text}");
+        assert!(text.contains("# TYPE parred_uptime_seconds gauge"), "{text}");
+        assert!(text.contains("parred_uptime_seconds 1.5"), "{text}");
+        assert!(text.contains("# TYPE parred_latency_seconds summary"), "{text}");
+        assert!(
+            text.contains("parred_latency_seconds{path=\"host\",quantile=\"0.5\"}"),
+            "{text}"
+        );
+        assert!(text.contains("parred_latency_seconds_count{path=\"host\"} 1"), "{text}");
+        // One TYPE line per metric name even with several label sets.
+        r.observe("parred_latency_seconds", &[("path", "pool")], 2e-3);
+        let text = r.prometheus_text();
+        assert_eq!(text.matches("# TYPE parred_latency_seconds summary").count(), 1);
+    }
+
+    #[test]
+    fn empty_histogram_exposes_zero_count() {
+        let r = Registry::new();
+        r.set_histogram("h", &[], Histogram::new());
+        let text = r.prometheus_text();
+        assert!(text.contains("h_count 0"), "{text}");
+        assert!(text.contains("h_sum 0"), "{text}");
+        assert!(!text.contains("quantile"), "{text}");
+    }
+}

@@ -1,0 +1,430 @@
+//! Request span tracing: a cheap, thread-safe span tree recorder.
+//!
+//! A [`Trace`] owns one monotonic epoch ([`std::time::Instant`]) and a
+//! sink of finished [`SpanRecord`]s. Opening a [`Span`] when the trace
+//! is disabled costs one relaxed atomic load and a branch — no clock
+//! read, no allocation — so instrumented hot paths stay hot (pinned by
+//! `benches/telemetry.rs`). Enabled spans stamp start/end microseconds
+//! against the epoch and push one record into the sink on drop.
+//!
+//! Parenting is automatic within a thread (a thread-local holds the
+//! innermost open span; spans are guards, so nesting is LIFO) and
+//! explicit across threads: a dispatcher passes [`Span::id`] along
+//! with the work and the worker opens its span with
+//! [`Trace::span_with_parent`] — how the device pool ties per-worker
+//! task spans under the pass that enqueued them.
+//!
+//! Finished trees export as JSON-lines ([`Trace::export_jsonl`], one
+//! record per line) and as the Chrome `trace_event` array format
+//! ([`Trace::export_chrome`], loadable in `chrome://tracing` /
+//! Perfetto to eyeball fleet waves on a timeline).
+
+use std::cell::Cell;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, PoisonError};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Poison-tolerant lock: a panicking instrumented thread must not
+/// wedge tracing for the rest of the process.
+fn lock_ignore_poison<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Process-wide span id allocator (ids are unique across every
+/// [`Trace`] instance, so cross-thread parent links cannot collide).
+static NEXT_SPAN_ID: AtomicU64 = AtomicU64::new(1);
+/// Small, stable per-thread ids for the Chrome `tid` field.
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    /// Innermost open span on this thread (0 = none).
+    static CURRENT_SPAN: Cell<u64> = const { Cell::new(0) };
+    /// This thread's display id (0 = not yet assigned).
+    static THREAD_TID: Cell<u64> = const { Cell::new(0) };
+}
+
+fn current_tid() -> u64 {
+    THREAD_TID.with(|t| {
+        let v = t.get();
+        if v != 0 {
+            return v;
+        }
+        let v = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+        t.set(v);
+        v
+    })
+}
+
+/// One span attribute value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Attr {
+    U64(u64),
+    F64(f64),
+    Str(String),
+}
+
+impl Attr {
+    fn to_json(&self) -> Json {
+        match self {
+            Attr::U64(v) => Json::Num(*v as f64),
+            Attr::F64(v) => Json::Num(*v),
+            Attr::Str(s) => Json::Str(s.clone()),
+        }
+    }
+}
+
+/// A finished span: identity, tree position, timing and attributes.
+#[derive(Debug, Clone)]
+pub struct SpanRecord {
+    /// Unique span id (process-wide).
+    pub id: u64,
+    /// Parent span id (0 = a root).
+    pub parent: u64,
+    /// Static span name (e.g. `"sched.decide"`).
+    pub name: &'static str,
+    /// Start, microseconds since the owning trace's epoch.
+    pub ts_us: u64,
+    /// Duration, microseconds.
+    pub dur_us: u64,
+    /// Display id of the thread the span closed on.
+    pub tid: u64,
+    /// Attributes, in insertion order.
+    pub attrs: Vec<(&'static str, Attr)>,
+}
+
+/// A span-tree recorder. Cheap when disabled; see the module docs.
+pub struct Trace {
+    enabled: AtomicBool,
+    epoch: Instant,
+    sink: Mutex<Vec<SpanRecord>>,
+}
+
+impl Default for Trace {
+    /// A disabled trace.
+    fn default() -> Trace {
+        Trace::new(false)
+    }
+}
+
+impl std::fmt::Debug for Trace {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Trace")
+            .field("enabled", &self.enabled())
+            .field("spans", &lock_ignore_poison(&self.sink).len())
+            .finish()
+    }
+}
+
+impl Trace {
+    pub fn new(enabled: bool) -> Trace {
+        Trace { enabled: AtomicBool::new(enabled), epoch: Instant::now(), sink: Mutex::new(Vec::new()) }
+    }
+
+    /// Whether spans are being recorded (one relaxed load).
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Flip recording on or off (spans already open keep their state).
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Open a span parented under this thread's innermost open span
+    /// (a root if none). Inert when the trace is disabled.
+    pub fn span(&self, name: &'static str) -> Span<'_> {
+        if !self.enabled() {
+            return Span::inert(name);
+        }
+        let parent = CURRENT_SPAN.with(Cell::get);
+        self.start(name, parent)
+    }
+
+    /// Open a span under an explicit parent id — the cross-thread
+    /// link (pass 0 for an explicit root that ignores the ambient
+    /// span, e.g. per-request markers inside a fused batch).
+    pub fn span_with_parent(&self, name: &'static str, parent: u64) -> Span<'_> {
+        if !self.enabled() {
+            return Span::inert(name);
+        }
+        self.start(name, parent)
+    }
+
+    fn start(&self, name: &'static str, parent: u64) -> Span<'_> {
+        let id = NEXT_SPAN_ID.fetch_add(1, Ordering::Relaxed);
+        let prev = CURRENT_SPAN.with(|c| {
+            let p = c.get();
+            c.set(id);
+            p
+        });
+        Span { trace: Some(self), id, parent, prev, name, t0_us: self.now_us(), attrs: Vec::new() }
+    }
+
+    /// Take every finished span out of the sink.
+    pub fn drain(&self) -> Vec<SpanRecord> {
+        std::mem::take(&mut *lock_ignore_poison(&self.sink))
+    }
+
+    /// Copy of the finished spans (sink unchanged).
+    pub fn snapshot(&self) -> Vec<SpanRecord> {
+        lock_ignore_poison(&self.sink).clone()
+    }
+
+    /// Finished spans currently in the sink.
+    pub fn len(&self) -> usize {
+        lock_ignore_poison(&self.sink).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// JSON-lines export: one [`SpanRecord`] object per line.
+    pub fn export_jsonl(&self) -> String {
+        let mut out = String::new();
+        for r in self.snapshot() {
+            out.push_str(&record_json(&r).to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Chrome `trace_event` export: a JSON array of complete (`"X"`)
+    /// events, microsecond timestamps — load in `chrome://tracing`.
+    pub fn export_chrome(&self) -> String {
+        chrome_trace(&self.snapshot())
+    }
+}
+
+/// One span record as a JSON object (the JSONL line shape).
+pub fn record_json(r: &SpanRecord) -> Json {
+    let mut args = BTreeMap::new();
+    for (k, v) in &r.attrs {
+        args.insert((*k).to_string(), v.to_json());
+    }
+    let mut o = BTreeMap::new();
+    o.insert("id".to_string(), Json::Num(r.id as f64));
+    o.insert("parent".to_string(), Json::Num(r.parent as f64));
+    o.insert("name".to_string(), Json::Str(r.name.to_string()));
+    o.insert("ts_us".to_string(), Json::Num(r.ts_us as f64));
+    o.insert("dur_us".to_string(), Json::Num(r.dur_us as f64));
+    o.insert("tid".to_string(), Json::Num(r.tid as f64));
+    o.insert("args".to_string(), Json::Obj(args));
+    Json::Obj(o)
+}
+
+/// Records as a Chrome `trace_event` JSON array (complete events).
+pub fn chrome_trace(records: &[SpanRecord]) -> String {
+    let events: Vec<Json> = records
+        .iter()
+        .map(|r| {
+            let mut args = BTreeMap::new();
+            args.insert("id".to_string(), Json::Num(r.id as f64));
+            args.insert("parent".to_string(), Json::Num(r.parent as f64));
+            for (k, v) in &r.attrs {
+                args.insert((*k).to_string(), v.to_json());
+            }
+            let mut e = BTreeMap::new();
+            e.insert("name".to_string(), Json::Str(r.name.to_string()));
+            e.insert("cat".to_string(), Json::Str("parred".to_string()));
+            e.insert("ph".to_string(), Json::Str("X".to_string()));
+            e.insert("ts".to_string(), Json::Num(r.ts_us as f64));
+            e.insert("dur".to_string(), Json::Num(r.dur_us as f64));
+            e.insert("pid".to_string(), Json::Num(1.0));
+            e.insert("tid".to_string(), Json::Num(r.tid as f64));
+            e.insert("args".to_string(), Json::Obj(args));
+            Json::Obj(e)
+        })
+        .collect();
+    format!("{}\n", Json::Arr(events))
+}
+
+/// An open span: a guard that records itself into the owning trace's
+/// sink on drop. Inert (all methods no-ops) when the trace was
+/// disabled at open time.
+pub struct Span<'a> {
+    trace: Option<&'a Trace>,
+    id: u64,
+    parent: u64,
+    /// Thread-local current-span value to restore on drop.
+    prev: u64,
+    name: &'static str,
+    t0_us: u64,
+    attrs: Vec<(&'static str, Attr)>,
+}
+
+impl<'a> Span<'a> {
+    fn inert(name: &'static str) -> Span<'a> {
+        Span { trace: None, id: 0, parent: 0, prev: 0, name, t0_us: 0, attrs: Vec::new() }
+    }
+
+    /// Whether this span records anything. Gate attribute values that
+    /// are costly to build (`format!`, candidate cost sweeps) on this.
+    pub fn active(&self) -> bool {
+        self.trace.is_some()
+    }
+
+    /// The span id for cross-thread parenting (0 when inert).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    pub fn attr_u64(&mut self, key: &'static str, value: u64) {
+        if self.trace.is_some() {
+            self.attrs.push((key, Attr::U64(value)));
+        }
+    }
+
+    pub fn attr_f64(&mut self, key: &'static str, value: f64) {
+        if self.trace.is_some() {
+            self.attrs.push((key, Attr::F64(value)));
+        }
+    }
+
+    pub fn attr_str(&mut self, key: &'static str, value: impl Into<String>) {
+        if self.trace.is_some() {
+            self.attrs.push((key, Attr::Str(value.into())));
+        }
+    }
+}
+
+impl Drop for Span<'_> {
+    fn drop(&mut self) {
+        let Some(trace) = self.trace else { return };
+        CURRENT_SPAN.with(|c| c.set(self.prev));
+        let t1 = trace.now_us();
+        let rec = SpanRecord {
+            id: self.id,
+            parent: self.parent,
+            name: self.name,
+            ts_us: self.t0_us,
+            dur_us: t1.saturating_sub(self.t0_us),
+            tid: current_tid(),
+            attrs: std::mem::take(&mut self.attrs),
+        };
+        lock_ignore_poison(&trace.sink).push(rec);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_spans_record_nothing() {
+        let t = Trace::new(false);
+        {
+            let mut s = t.span("a");
+            assert!(!s.active());
+            assert_eq!(s.id(), 0);
+            s.attr_u64("n", 1); // no-op
+        }
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn nesting_parents_within_a_thread() {
+        let t = Trace::new(true);
+        let (outer_id, inner_id);
+        {
+            let outer = t.span("outer");
+            outer_id = outer.id();
+            {
+                let inner = t.span("inner");
+                inner_id = inner.id();
+                assert_ne!(inner_id, outer_id);
+            }
+            // Sibling after inner closed: parents under outer again.
+            let sib = t.span("sib");
+            assert!(sib.id() > inner_id);
+        }
+        let recs = t.drain();
+        assert_eq!(recs.len(), 3);
+        let by_name = |n: &str| recs.iter().find(|r| r.name == n).unwrap();
+        assert_eq!(by_name("outer").parent, 0);
+        assert_eq!(by_name("inner").parent, outer_id);
+        assert_eq!(by_name("sib").parent, outer_id);
+        assert_eq!(by_name("inner").id, inner_id);
+    }
+
+    #[test]
+    fn explicit_parent_links_across_threads() {
+        let t = std::sync::Arc::new(Trace::new(true));
+        let parent_id = {
+            let parent = t.span("dispatch");
+            let id = parent.id();
+            let t2 = t.clone();
+            std::thread::spawn(move || {
+                let mut s = t2.span_with_parent("task", id);
+                s.attr_u64("worker", 3);
+            })
+            .join()
+            .unwrap();
+            id
+        };
+        let recs = t.drain();
+        let task = recs.iter().find(|r| r.name == "task").unwrap();
+        assert_eq!(task.parent, parent_id);
+        assert_eq!(task.attrs, vec![("worker", Attr::U64(3))]);
+    }
+
+    #[test]
+    fn timestamps_nest_consistently() {
+        let t = Trace::new(true);
+        {
+            let _outer = t.span("outer");
+            let _inner = t.span("inner");
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        let recs = t.drain();
+        let outer = recs.iter().find(|r| r.name == "outer").unwrap();
+        let inner = recs.iter().find(|r| r.name == "inner").unwrap();
+        assert!(outer.ts_us <= inner.ts_us);
+        assert!(inner.ts_us + inner.dur_us <= outer.ts_us + outer.dur_us);
+        assert!(outer.dur_us >= 2_000, "slept 2ms, got {}us", outer.dur_us);
+    }
+
+    #[test]
+    fn exports_parse_as_json() {
+        let t = Trace::new(true);
+        {
+            let mut s = t.span("root");
+            s.attr_str("op", "sum");
+            s.attr_f64("cost", 1.5e-6);
+            let _c = t.span("child");
+        }
+        for line in t.export_jsonl().lines() {
+            let v = Json::parse(line).unwrap();
+            assert!(v.field("id").unwrap().as_f64().unwrap() > 0.0);
+            v.field("args").unwrap().as_obj().unwrap();
+        }
+        let chrome = Json::parse(&t.export_chrome()).unwrap();
+        let events = chrome.as_arr().unwrap();
+        assert_eq!(events.len(), 2);
+        for e in events {
+            assert_eq!(e.field("ph").unwrap().as_str().unwrap(), "X");
+            assert!(e.field("ts").unwrap().as_f64().unwrap() >= 0.0);
+            assert!(e.field("dur").unwrap().as_f64().unwrap() >= 0.0);
+        }
+    }
+
+    #[test]
+    fn enable_toggles_at_runtime() {
+        let t = Trace::new(false);
+        drop(t.span("off"));
+        t.set_enabled(true);
+        drop(t.span("on"));
+        t.set_enabled(false);
+        drop(t.span("off2"));
+        let recs = t.drain();
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].name, "on");
+    }
+}

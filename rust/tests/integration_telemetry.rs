@@ -1,0 +1,307 @@
+//! Telemetry end-to-end: the span tree one engine request records,
+//! the Chrome export's structural invariants, registry-vs-stats
+//! histogram agreement, the scheduler's audit trail, and the serving
+//! layer's `--trace-out` artifacts (one complete span tree per
+//! submitted request, fused keyed batches included). Needs no PJRT
+//! artifacts: everything runs on the host ladder, the simulated
+//! fleet, and the empty-catalog fixture.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::Arc;
+use std::time::Duration;
+
+use parred::coordinator::service::{Service, ServiceConfig};
+use parred::reduce::Op;
+use parred::runtime::literal::HostVec;
+use parred::sched::Backend;
+use parred::telemetry::{Attr, SpanRecord, Trace};
+use parred::util::json::Json;
+use parred::util::rng::Rng;
+use parred::Engine;
+
+fn attr_u64(r: &SpanRecord, key: &str) -> Option<u64> {
+    r.attrs.iter().find_map(|(k, v)| match v {
+        Attr::U64(x) if *k == key => Some(*x),
+        _ => None,
+    })
+}
+
+fn attr_str<'a>(r: &'a SpanRecord, key: &str) -> Option<&'a str> {
+    r.attrs.iter().find_map(|(k, v)| match v {
+        Attr::Str(s) if *k == key => Some(s.as_str()),
+        _ => None,
+    })
+}
+
+/// The ISSUE's acceptance criterion: one `engine.reduce(..).run()`
+/// under an enabled trace yields a span tree containing the scheduler
+/// decision, the shard plan, per-worker tasks and the combine.
+#[test]
+fn fleet_reduce_records_one_complete_span_tree() {
+    let trace = Arc::new(Trace::new(true));
+    let engine = Engine::builder()
+        .fleet_spec("TeslaC2075*4")
+        .unwrap()
+        .pool_cutoff(Some(1 << 16))
+        .trace(trace.clone())
+        .build()
+        .unwrap();
+    let mut rng = Rng::new(11);
+    let data = rng.f32_vec(1 << 18, -1.0, 1.0);
+    let out = engine.reduce(&data).op(Op::Sum).run().unwrap();
+    assert!(matches!(out.path, parred::ExecPath::Sharded { devices: 4 }), "{:?}", out.path);
+
+    let spans = trace.drain();
+    let by_name = |name: &str| -> Vec<&SpanRecord> {
+        spans.iter().filter(|r| r.name == name).collect()
+    };
+    let roots = by_name("engine.reduce");
+    assert_eq!(roots.len(), 1, "one request, one root");
+    let root = roots[0];
+    assert_eq!(root.parent, 0);
+    assert_eq!(attr_u64(root, "n"), Some(1 << 18));
+
+    let decide = by_name("sched.decide");
+    assert_eq!(decide.len(), 1);
+    assert_eq!(decide[0].parent, root.id, "decision hangs off the request root");
+    let d = attr_str(decide[0], "decision").expect("decision attr");
+    assert!(d.contains("Sharded"), "{d}");
+    // Modeled cost per candidate backend rides on the decision span.
+    assert!(
+        decide[0].attrs.iter().any(|(k, v)| *k == "pool" && matches!(v, Attr::F64(_))),
+        "candidate costs missing: {:?}",
+        decide[0].attrs
+    );
+
+    let plan = by_name("plan.shards");
+    assert_eq!(plan.len(), 1);
+    assert_eq!(plan[0].parent, root.id);
+
+    let pass = by_name("pool.pass");
+    assert_eq!(pass.len(), 1);
+    assert_eq!(pass[0].parent, root.id);
+    assert_eq!(attr_u64(pass[0], "devices"), Some(4));
+
+    let tasks = by_name("pool.task");
+    assert!(!tasks.is_empty(), "per-worker task spans must be recorded");
+    assert_eq!(tasks.len(), attr_u64(pass[0], "tasks").unwrap() as usize);
+    let mut covered = 0u64;
+    for t in &tasks {
+        assert_eq!(t.parent, pass[0].id, "tasks parent to the pass across threads");
+        let lo = attr_u64(t, "lo").unwrap();
+        let hi = attr_u64(t, "hi").unwrap();
+        assert!(lo <= hi && hi <= 1 << 18);
+        assert!(attr_u64(t, "worker").unwrap() < 4);
+        covered += hi - lo;
+    }
+    assert_eq!(covered, 1 << 18, "task shards cover the payload exactly");
+
+    let combine = by_name("pool.combine");
+    assert_eq!(combine.len(), 1);
+    assert_eq!(combine[0].parent, pass[0].id);
+}
+
+/// Satellite: the Chrome `trace_event` export parses as JSON and its
+/// ts/dur nest monotonically — every child interval sits inside its
+/// parent's.
+#[test]
+fn chrome_export_parses_and_nests_monotonically() {
+    let trace = Arc::new(Trace::new(true));
+    let engine = Engine::builder()
+        .fleet_spec("TeslaC2075*2")
+        .unwrap()
+        .pool_cutoff(Some(1 << 14))
+        .trace(trace.clone())
+        .build()
+        .unwrap();
+    let mut rng = Rng::new(13);
+    let data = rng.f32_vec(1 << 16, -1.0, 1.0);
+    engine.reduce(&data).op(Op::Sum).run().unwrap();
+    engine.reduce(&data[..100]).op(Op::Max).run().unwrap();
+
+    let n_spans = trace.len();
+    let doc = Json::parse(&trace.export_chrome()).expect("chrome export is JSON");
+    let events = doc.as_arr().unwrap();
+    assert_eq!(events.len(), n_spans);
+
+    // Interval per span id, then check child ⊆ parent for every edge.
+    let mut intervals: HashMap<u64, (u64, u64)> = HashMap::new();
+    let mut edges: Vec<(u64, u64)> = Vec::new();
+    for ev in events {
+        assert_eq!(ev.field("ph").unwrap().as_str().unwrap(), "X");
+        assert_eq!(ev.field("cat").unwrap().as_str().unwrap(), "parred");
+        let ts = ev.field("ts").unwrap().as_usize().unwrap() as u64;
+        let dur = ev.field("dur").unwrap().as_usize().unwrap() as u64;
+        let args = ev.field("args").unwrap();
+        let id = args.field("id").unwrap().as_usize().unwrap() as u64;
+        let parent = args.field("parent").unwrap().as_usize().unwrap() as u64;
+        intervals.insert(id, (ts, ts + dur));
+        if parent != 0 {
+            edges.push((id, parent));
+        }
+    }
+    assert!(!edges.is_empty(), "a fleet request must produce nested spans");
+    for (child, parent) in edges {
+        let (c0, c1) = intervals[&child];
+        let (p0, p1) = intervals[&parent];
+        assert!(
+            p0 <= c0 && c1 <= p1,
+            "span {child} [{c0},{c1}] escapes parent {parent} [{p0},{p1}]"
+        );
+    }
+}
+
+/// Satellite proptest: registry histograms are the same
+/// `util::stats::Histogram` — identical samples must give identical
+/// counts and percentiles.
+#[test]
+fn registry_histogram_percentiles_match_stats() {
+    parred::util::prop::check(
+        "registry_histogram_matches_stats",
+        64,
+        |rng| {
+            let len = 1 + rng.range(0, 199);
+            rng.f32_vec(len, 1e-4, 5.0)
+        },
+        |samples| {
+            let reg = parred::telemetry::Registry::new();
+            let mut h = parred::util::stats::Histogram::default();
+            for &s in samples {
+                let s = f64::from(s);
+                reg.observe("t", &[("op", "sum")], s);
+                h.record(s);
+            }
+            let got = reg.histogram("t", &[("op", "sum")]).expect("recorded");
+            if got.count() != h.count() {
+                return Err(format!("count {} vs {}", got.count(), h.count()));
+            }
+            for p in [1.0, 25.0, 50.0, 90.0, 95.0, 99.0] {
+                let (a, b) = (got.percentile(p), h.percentile(p));
+                if a != b {
+                    return Err(format!("p{p}: {a} vs {b}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The audit criterion: every backend the ladder exercises shows up
+/// in `Scheduler::audit()` with modeled-vs-observed error stats.
+#[test]
+fn audit_reports_every_exercised_backend() {
+    let engine = Engine::builder().host_workers(4).build().unwrap();
+    let mut rng = Rng::new(17);
+    let big = rng.f32_vec(1 << 20, -1.0, 1.0);
+    for _ in 0..3 {
+        engine.reduce(&big[..64]).op(Op::Sum).run().unwrap(); // sequential rung
+        engine.reduce(&big).op(Op::Sum).run().unwrap(); // threaded rung
+    }
+    let audit = engine.scheduler().audit();
+    let backends: HashSet<Backend> = audit.iter().map(|e| e.backend).collect();
+    assert!(backends.contains(&Backend::Sequential), "{audit:?}");
+    assert!(
+        backends.contains(&Backend::ThreadedFull) || backends.contains(&Backend::ThreadedNarrow),
+        "{audit:?}"
+    );
+    for e in &audit {
+        assert!(e.observations >= 3, "{e}");
+        assert!(e.mispredicts <= e.observations, "{e}");
+        assert!((0.0..=1.0).contains(&e.mispredict_rate), "{e}");
+    }
+    let report = engine.scheduler().audit_report();
+    assert!(report.contains("modeled vs observed"), "{report}");
+    assert!(report.contains("sequential"), "{report}");
+}
+
+/// Satellite: end-to-end `serve --trace-out`. Every submitted request
+/// — plain and fused-keyed alike — must come back as one complete
+/// span tree in the JSONL artifact, the Chrome companion must parse,
+/// and the metrics exposition must land on disk.
+#[test]
+fn serve_trace_out_writes_one_span_tree_per_request() {
+    let tmp = std::env::temp_dir();
+    let trace_path = tmp.join(format!("parred_trace_{}.jsonl", std::process::id()));
+    let chrome_path = tmp.join(format!("parred_trace_{}.jsonl.chrome.json", std::process::id()));
+    let metrics_path = tmp.join(format!("parred_metrics_{}.txt", std::process::id()));
+    let cfg = ServiceConfig {
+        artifacts_dir: concat!(env!("CARGO_MANIFEST_DIR"), "/tests/fixtures/empty_artifacts")
+            .to_string(),
+        batch_window: Duration::from_millis(50),
+        max_queue: 1000,
+        workers: 4,
+        warmup: false,
+        trace_out: Some(trace_path.to_string_lossy().into_owned()),
+        metrics_out: Some(metrics_path.to_string_lossy().into_owned()),
+        ..ServiceConfig::default()
+    };
+    let svc = Service::start(cfg).unwrap();
+    assert!(svc.trace().enabled(), "trace_out must enable tracing");
+    let mut rng = Rng::new(21);
+    let mut expect_ids: HashSet<u64> = HashSet::new();
+
+    // Plain requests (host path, possibly host-fused).
+    let plain: Vec<_> = (0..4)
+        .map(|_| svc.submit(Op::Sum, HostVec::F32(rng.f32_vec(10_000, -1.0, 1.0))).unwrap())
+        .collect();
+    // A keyed burst that fuses into one segmented pass.
+    let keyed: Vec<_> = (0..5)
+        .map(|_| {
+            let keys: Vec<i64> = (0..4_000).map(|_| rng.range(0, 6) as i64).collect();
+            svc.submit_by_key(Op::Sum, keys, HostVec::I32(rng.i32_vec(4_000, -500, 500)))
+                .unwrap()
+        })
+        .collect();
+    for rx in plain {
+        let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        resp.value.unwrap();
+        expect_ids.insert(resp.id);
+    }
+    for rx in keyed {
+        let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        resp.groups.unwrap();
+        expect_ids.insert(resp.id);
+    }
+    let live_metrics = svc.metrics_text();
+    assert!(live_metrics.contains("parred_requests_total"), "{live_metrics}");
+    svc.shutdown();
+
+    // One serve.request span per submitted id, every parent resolved.
+    let text = std::fs::read_to_string(&trace_path).unwrap();
+    let mut ids: HashSet<u64> = HashSet::new();
+    let mut parents: Vec<u64> = Vec::new();
+    let mut request_ids: Vec<u64> = Vec::new();
+    let mut keyed_batches = 0usize;
+    for line in text.lines() {
+        let rec = Json::parse(line).expect("JSONL line parses");
+        ids.insert(rec.field("id").unwrap().as_usize().unwrap() as u64);
+        let parent = rec.field("parent").unwrap().as_usize().unwrap() as u64;
+        if parent != 0 {
+            parents.push(parent);
+        }
+        match rec.field("name").unwrap().as_str().unwrap() {
+            "serve.request" => request_ids
+                .push(rec.field("args").unwrap().field("id").unwrap().as_usize().unwrap() as u64),
+            "serve.batch.keyed" => keyed_batches += 1,
+            _ => {}
+        }
+    }
+    let got_ids: HashSet<u64> = request_ids.iter().copied().collect();
+    assert_eq!(got_ids, expect_ids, "one serve.request span per submitted request");
+    assert_eq!(request_ids.len(), expect_ids.len(), "no duplicated request spans");
+    assert!(keyed_batches >= 1, "the keyed burst must record a fused batch span");
+    for p in parents {
+        assert!(ids.contains(&p), "parent {p} missing from the trace");
+    }
+
+    // Companion artifacts: Chrome export parses, metrics landed.
+    let chrome = std::fs::read_to_string(&chrome_path).unwrap();
+    let events = Json::parse(&chrome).unwrap();
+    assert_eq!(events.as_arr().unwrap().len(), text.lines().count());
+    let metrics = std::fs::read_to_string(&metrics_path).unwrap();
+    assert!(metrics.contains("parred_requests_total"), "{metrics}");
+    assert!(metrics.contains("keyed"), "keyed fusion counters must export:\n{metrics}");
+    for p in [&trace_path, &chrome_path, &metrics_path] {
+        let _ = std::fs::remove_file(p);
+    }
+}
