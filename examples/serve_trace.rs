@@ -32,7 +32,7 @@ fn main() -> anyhow::Result<()> {
         warmup: true,
         ..ServiceConfig::default()
     };
-    let trace = TraceConfig { requests, payload_n, seed: 42, mean_gap_us: 50.0 };
+    let trace = TraceConfig { requests, payload_n, seed: 42, mean_gap_us: 50.0, deadline: None };
 
     eprintln!("starting service (loads + pre-compiles rows artifacts)...");
     let report = run_trace(cfg.clone(), trace.clone())?;
@@ -60,7 +60,13 @@ fn main() -> anyhow::Result<()> {
         adaptive: true,
         ..cfg
     };
-    let trace3 = TraceConfig { requests: 8, payload_n: 1 << 20, seed: 7, mean_gap_us: 200.0 };
+    let trace3 = TraceConfig {
+        requests: 8,
+        payload_n: 1 << 20,
+        seed: 7,
+        mean_gap_us: 200.0,
+        deadline: None,
+    };
     let report3 = run_trace(cfg3, trace3)?;
     println!("--- pool: 2xTeslaC2075 + 1xG80, sharded routing at 1M f32 ---");
     println!("{report3}");

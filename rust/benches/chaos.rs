@@ -1,0 +1,55 @@
+//! `cargo bench --bench chaos` — the fault-tolerance experiment: run
+//! the serving stack while the fault plane kills one of four devices
+//! mid-run, and report availability, tail latency and the recovery
+//! event counts. Emits `BENCH_chaos.json` (path override:
+//! `PARRED_CHAOS_JSON`) so CI can track availability-under-faults
+//! across PRs alongside the other BENCH artifacts.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use parred::harness::chaos::{self, ChaosConfig};
+use parred::util::json::Json;
+
+fn main() {
+    let fast = std::env::var("PARRED_BENCH_FAST").as_deref() == Ok("1");
+    let cfg = ChaosConfig {
+        requests: if fast { 80 } else { 200 },
+        chaos: if fast { "die@4#2,seed=7".into() } else { "die@8#2,seed=7".into() },
+        mean_gap_us: if fast { 20.0 } else { 50.0 },
+        deadline: Duration::from_millis(2_000),
+        ..ChaosConfig::default()
+    };
+    let out = chaos::run(&cfg).expect("chaos run");
+    println!("{}", out.report());
+
+    assert!(
+        out.availability >= 0.99,
+        "availability {:.3} under one dead device",
+        out.availability
+    );
+    assert_eq!(out.oracle_failures, 0, "completed responses must match the oracle");
+
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str("chaos".to_string()));
+    root.insert("chaos_spec".to_string(), Json::Str(cfg.chaos.clone()));
+    root.insert("requests".to_string(), Json::Num(out.requests as f64));
+    root.insert("completed".to_string(), Json::Num(out.completed as f64));
+    root.insert("timeouts".to_string(), Json::Num(out.timeouts as f64));
+    root.insert("shed".to_string(), Json::Num(out.shed as f64));
+    root.insert("failed".to_string(), Json::Num(out.failed as f64));
+    root.insert("oracle_failures".to_string(), Json::Num(out.oracle_failures as f64));
+    root.insert("availability".to_string(), Json::Num(out.availability));
+    root.insert("p50_ms".to_string(), Json::Num(out.p50_ms));
+    root.insert("p99_ms".to_string(), Json::Num(out.p99_ms));
+    root.insert("device_deaths".to_string(), Json::Num(out.device_deaths as f64));
+    root.insert("quarantines".to_string(), Json::Num(out.quarantines as f64));
+    root.insert("reexecuted_shards".to_string(), Json::Num(out.task_retries as f64));
+    root.insert("deadline_expiries".to_string(), Json::Num(out.deadline_expiries as f64));
+    let path =
+        std::env::var("PARRED_CHAOS_JSON").unwrap_or_else(|_| "BENCH_chaos.json".to_string());
+    match std::fs::write(&path, format!("{}\n", Json::Obj(root))) {
+        Ok(()) => eprintln!("(wrote {path})"),
+        Err(e) => eprintln!("(could not write {path}: {e})"),
+    }
+}

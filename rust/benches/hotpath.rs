@@ -138,6 +138,7 @@ fn main() {
                 op: Op::Sum,
                 payload: HostVec::F32(vec![0.0; 8]),
                 t_enqueue: t,
+                deadline: None,
                 reply: tx,
             });
         }

@@ -21,6 +21,11 @@
 //! soon as their cap fills, whichever comes first, and carry no
 //! padding (`exec_rows == requests.len()`).
 //!
+//! Flushing is deadline-aware: a queued request with its own
+//! [`Request::deadline`] pulls its queue's flush point forward
+//! ([`Request::flush_by`]), so holding a batch open never blows a
+//! member's deadline — the batch flushes at whatever size it has.
+//!
 //! Keyed (group-by) requests have their own queue, [`KeyedBatcher`]:
 //! same-`(op, dtype)` keyed requests fuse into **one** segmented pass
 //! (each request grouped independently, all groups concatenated into
@@ -174,10 +179,10 @@ impl Batcher {
                                 continue;
                             }
                         }
-                        // Deadline-triggered flush.
-                        let expired = queue
-                            .first()
-                            .is_some_and(|r| now.duration_since(r.t_enqueue) >= self.window);
+                        // Deadline-triggered flush: the window on the
+                        // oldest request, or any member's own request
+                        // deadline, whichever comes first.
+                        let expired = queue.iter().any(|r| now >= r.flush_by(self.window));
                         if expired {
                             let take = Router::best_batch(&sizes, queue.len())
                                 .unwrap_or_else(|| queue.len().min(*sizes.first().unwrap()));
@@ -221,11 +226,10 @@ impl Batcher {
             return; // fusion disabled (shouldn't normally be queued).
         }
         loop {
-            let expired = queue
-                .first()
-                .is_some_and(|r| now.duration_since(r.t_enqueue) >= window);
-            // `expired` implies a non-empty queue (it comes from
-            // queue.first()).
+            // The oldest request's window or any member's own request
+            // deadline, whichever comes first; `expired` implies a
+            // non-empty queue.
+            let expired = queue.iter().any(|r| now >= r.flush_by(window));
             if queue.len() >= cap || expired {
                 let take = queue.len().min(cap);
                 let batch: Vec<Request> = queue.drain(..take).collect();
@@ -236,13 +240,14 @@ impl Batcher {
         }
     }
 
-    /// Deadline of the oldest queued request (for the service loop's
-    /// recv timeout), if any.
+    /// Earliest flush point across every queued request — window of
+    /// the oldest or any member's own deadline — for the service
+    /// loop's recv timeout.
     pub fn next_deadline(&self) -> Option<Instant> {
         self.queues
             .values()
-            .filter_map(|q| q.first())
-            .map(|r| r.t_enqueue + self.window)
+            .flat_map(|q| q.iter())
+            .map(|r| r.flush_by(self.window))
             .min()
     }
 
@@ -319,9 +324,7 @@ impl KeyedBatcher {
         let take_cap = self.cap.max(1);
         for (key, queue) in self.queues.iter_mut() {
             loop {
-                let expired = queue
-                    .first()
-                    .is_some_and(|r| now.duration_since(r.t_enqueue) >= self.window);
+                let expired = queue.iter().any(|r| now >= r.flush_by(self.window));
                 if (self.cap > 0 && queue.len() >= self.cap) || expired {
                     let take = queue.len().min(take_cap);
                     let batch: Vec<KeyedRequest> = queue.drain(..take).collect();
@@ -335,12 +338,13 @@ impl KeyedBatcher {
         out
     }
 
-    /// Deadline of the oldest queued request, if any.
+    /// Earliest flush point across every queued request (window of
+    /// the oldest, pulled in by member deadlines), if any.
     pub fn next_deadline(&self) -> Option<Instant> {
         self.queues
             .values()
-            .filter_map(|q| q.first())
-            .map(|r| r.t_enqueue + self.window)
+            .flat_map(|q| q.iter())
+            .map(|r| r.flush_by(self.window))
             .min()
     }
 
@@ -364,7 +368,14 @@ mod tests {
         let (tx, _rx) = std::sync::mpsc::channel();
         // Leak the receiver end: these tests never reply.
         std::mem::forget(_rx);
-        Request { id, op: Op::Sum, payload: HostVec::F32(vec![1.0; n]), t_enqueue: t, reply: tx }
+        Request {
+            id,
+            op: Op::Sum,
+            payload: HostVec::F32(vec![1.0; n]),
+            t_enqueue: t,
+            deadline: None,
+            reply: tx,
+        }
     }
 
     fn sizes(_: &ShapeKey) -> KeyPolicy {
@@ -512,6 +523,43 @@ mod tests {
     }
 
     #[test]
+    fn member_deadline_flushes_a_fused_batch_early() {
+        // Window 60 s, nowhere near the cap — only the second
+        // request's own deadline can trigger the flush, and it must
+        // take the whole queue (FIFO) with it.
+        let mut b = Batcher::with_host_fuse(Duration::from_secs(60), 64);
+        let t = Instant::now();
+        b.push(req(0, 12_345, t));
+        let mut tight = req(1, 12_345, t);
+        tight.deadline = Some(t + Duration::from_millis(5));
+        b.push(tight);
+        assert!(
+            b.flush_ready(t + Duration::from_millis(4), |_| KeyPolicy::FuseHost).is_empty(),
+            "nothing expires before the member deadline"
+        );
+        assert_eq!(b.next_deadline(), Some(t + Duration::from_millis(5)));
+        let flushed = b.flush_ready(t + Duration::from_millis(5), |_| KeyPolicy::FuseHost);
+        assert_eq!(flushed.len(), 1);
+        assert_eq!(flushed[0].requests.len(), 2, "the deadline flushes the whole queue");
+        assert_eq!(b.queued(), 0);
+    }
+
+    #[test]
+    fn member_deadline_flushes_a_rows_batch_early() {
+        let mut b = Batcher::new(Duration::from_secs(60));
+        let t = Instant::now();
+        let mut tight = req(0, 100, t);
+        tight.deadline = Some(t + Duration::from_millis(2));
+        b.push(tight);
+        b.push(req(1, 100, t));
+        assert!(b.flush_ready(t + Duration::from_millis(1), sizes).is_empty());
+        let flushed = b.flush_ready(t + Duration::from_millis(2), sizes);
+        assert_eq!(flushed.len(), 1);
+        assert_eq!(flushed[0].requests.len(), 2);
+        assert_eq!(flushed[0].exec_rows, 4, "padded to the smallest artifact");
+    }
+
+    #[test]
     fn empty_rows_policy_is_defensive_no_op() {
         let mut b = Batcher::new(Duration::from_millis(0));
         let t = Instant::now();
@@ -541,6 +589,7 @@ mod tests {
             keys: (0..n as i64).map(|i| i % 3).collect(),
             values: HostVec::F32(vec![1.0; n]),
             t_enqueue: t,
+            deadline: None,
             reply: tx,
         }
     }
@@ -579,6 +628,21 @@ mod tests {
         assert_eq!(flushed.len(), 2, "deadline flushes one request per batch");
         assert!(flushed.iter().all(|f| f.requests.len() == 1));
         assert_eq!(b.next_deadline(), None);
+    }
+
+    #[test]
+    fn keyed_member_deadline_flushes_early() {
+        let mut b = KeyedBatcher::with_cap(Duration::from_secs(60), 64);
+        let t = Instant::now();
+        b.push(keyed_req(0, Op::Sum, 10, t));
+        let mut tight = keyed_req(1, Op::Sum, 10, t);
+        tight.deadline = Some(t + Duration::from_millis(3));
+        b.push(tight);
+        assert!(b.flush_ready(t + Duration::from_millis(2)).is_empty());
+        assert_eq!(b.next_deadline(), Some(t + Duration::from_millis(3)));
+        let flushed = b.flush_ready(t + Duration::from_millis(3));
+        assert_eq!(flushed.len(), 1);
+        assert_eq!(flushed[0].requests.len(), 2);
     }
 
     #[test]

@@ -19,6 +19,14 @@
 //! into one segmented pass ([`batcher::KeyedBatcher`], by-key
 //! fusion), which the scheduler's segmented decision places on the
 //! host or as one fleet wave.
+//!
+//! The front door is failure-typed: admission control sheds with
+//! [`request::ServeError::Shed`], a request's
+//! [`request::SubmitOpts::deadline`] expires it with
+//! [`request::ServeError::Timeout`] (batches flush early rather than
+//! blow a member's deadline), and execution failures surface as
+//! [`request::ServeError::Failed`] — faults cost latency or
+//! availability, never a hung client or a wrong answer.
 
 pub mod backpressure;
 pub mod batcher;
@@ -27,6 +35,8 @@ pub mod request;
 pub mod router;
 pub mod service;
 
-pub use request::{ExecPath, KeyedRequest, KeyedResponse, Request, Response};
+pub use request::{
+    ExecPath, KeyedRequest, KeyedResponse, Request, Response, ServeError, SubmitOpts,
+};
 pub use router::{Route, Router};
 pub use service::{PoolServeConfig, Service, ServiceConfig};

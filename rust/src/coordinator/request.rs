@@ -1,6 +1,8 @@
-//! Request/response types of the serving layer.
+//! Request/response types of the serving layer, including the typed
+//! front-door error ([`ServeError`]) and per-request submit options
+//! ([`SubmitOpts`]: deadline + bounded admission retry).
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::reduce::op::{Dtype, Op};
 use crate::reduce::plan::ShapeKey;
@@ -8,6 +10,57 @@ use crate::runtime::literal::{HostScalar, HostVec};
 
 /// Monotonically increasing request identifier.
 pub type RequestId = u64;
+
+/// Why the serving layer refused or failed a request. Typed so
+/// clients can tell load shedding (back off and retry) from a blown
+/// deadline (the work is stale) from an execution failure (the
+/// request itself is the problem).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// Admission control shed the request: the gate was at its limit
+    /// (and stayed there through every configured retry).
+    Shed { in_flight: usize, limit: usize },
+    /// The request's deadline expired before execution finished; the
+    /// payload was not (fully) executed.
+    Timeout { waited_ms: u64 },
+    /// Execution failed (the error text names the failing stage).
+    Failed(String),
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Shed { in_flight, limit } => {
+                write!(f, "overloaded: {in_flight} requests in flight (limit {limit})")
+            }
+            ServeError::Timeout { waited_ms } => {
+                write!(f, "deadline expired after {waited_ms} ms")
+            }
+            ServeError::Failed(msg) => write!(f, "execution failed: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Per-request submit options (the front-door knobs).
+#[derive(Debug, Clone, Default)]
+pub struct SubmitOpts {
+    /// Give up this long after submission: an expired request is
+    /// answered [`ServeError::Timeout`] instead of being (further)
+    /// executed, and batches holding one flush before the expiry.
+    pub deadline: Option<Duration>,
+    /// Extra admission attempts when the gate sheds, with doubling
+    /// backoff (1 ms, 2 ms, ... capped at 32 ms) between attempts.
+    pub retries: u32,
+}
+
+impl SubmitOpts {
+    /// `deadline` alone, the common case.
+    pub fn with_deadline(deadline: Duration) -> SubmitOpts {
+        SubmitOpts { deadline: Some(deadline), retries: 0 }
+    }
+}
 
 /// A reduction request entering the coordinator.
 #[derive(Debug)]
@@ -17,6 +70,9 @@ pub struct Request {
     pub payload: HostVec,
     /// Enqueue timestamp (latency accounting).
     pub t_enqueue: Instant,
+    /// Absolute deadline (from [`SubmitOpts::deadline`]); past it the
+    /// executor answers [`ServeError::Timeout`] without executing.
+    pub deadline: Option<Instant>,
     /// Where to deliver the response.
     pub reply: std::sync::mpsc::Sender<Response>,
 }
@@ -28,6 +84,17 @@ impl Request {
 
     pub fn shape_key(&self) -> ShapeKey {
         ShapeKey { op: self.op, dtype: self.dtype(), n: self.payload.len() }
+    }
+
+    /// When a batch holding this request must flush: the batching
+    /// window from enqueue, pulled earlier by the request's own
+    /// deadline — a fused batch never blows a member's deadline.
+    pub fn flush_by(&self, window: Duration) -> Instant {
+        let by = self.t_enqueue + window;
+        match self.deadline {
+            Some(d) => by.min(d),
+            None => by,
+        }
     }
 }
 
@@ -42,7 +109,7 @@ pub use crate::engine::ExecPath;
 #[derive(Debug, Clone)]
 pub struct Response {
     pub id: RequestId,
-    pub value: Result<HostScalar, String>,
+    pub value: Result<HostScalar, ServeError>,
     pub path: ExecPath,
     /// Queue + execute latency, seconds.
     pub latency_s: f64,
@@ -61,6 +128,8 @@ pub struct KeyedRequest {
     pub values: HostVec,
     /// Enqueue timestamp (latency accounting).
     pub t_enqueue: Instant,
+    /// Absolute deadline (see [`Request::deadline`]).
+    pub deadline: Option<Instant>,
     /// Where to deliver the response.
     pub reply: std::sync::mpsc::Sender<KeyedResponse>,
 }
@@ -68,6 +137,15 @@ pub struct KeyedRequest {
 impl KeyedRequest {
     pub fn dtype(&self) -> Dtype {
         self.values.dtype()
+    }
+
+    /// See [`Request::flush_by`].
+    pub fn flush_by(&self, window: Duration) -> Instant {
+        let by = self.t_enqueue + window;
+        match self.deadline {
+            Some(d) => by.min(d),
+            None => by,
+        }
     }
 }
 
@@ -77,7 +155,7 @@ pub struct KeyedResponse {
     pub id: RequestId,
     /// One `(key, value)` pair per distinct key, ascending by key —
     /// or the error.
-    pub groups: Result<Vec<(i64, HostScalar)>, String>,
+    pub groups: Result<Vec<(i64, HostScalar)>, ServeError>,
     pub path: ExecPath,
     /// Queue + execute latency, seconds.
     pub latency_s: f64,
@@ -95,11 +173,45 @@ mod tests {
             op: Op::Sum,
             payload: HostVec::F32(vec![0.0; 10]),
             t_enqueue: Instant::now(),
+            deadline: None,
             reply: tx,
         };
         let k = r.shape_key();
         assert_eq!(k.n, 10);
         assert_eq!(k.dtype, Dtype::F32);
         assert_eq!(k.op, Op::Sum);
+    }
+
+    #[test]
+    fn flush_by_is_window_pulled_in_by_the_deadline() {
+        let (tx, _rx) = std::sync::mpsc::channel();
+        let t = Instant::now();
+        let mut r = Request {
+            id: 1,
+            op: Op::Sum,
+            payload: HostVec::F32(vec![0.0; 4]),
+            t_enqueue: t,
+            deadline: None,
+            reply: tx,
+        };
+        let window = Duration::from_millis(10);
+        assert_eq!(r.flush_by(window), t + window, "no deadline: the window rules");
+        r.deadline = Some(t + Duration::from_millis(3));
+        assert_eq!(r.flush_by(window), t + Duration::from_millis(3), "tight deadline wins");
+        r.deadline = Some(t + Duration::from_millis(30));
+        assert_eq!(r.flush_by(window), t + window, "loose deadline never delays the flush");
+    }
+
+    #[test]
+    fn serve_error_display_names_the_cause() {
+        let shed = format!("{}", ServeError::Shed { in_flight: 7, limit: 4 });
+        assert!(shed.contains("overloaded") && shed.contains('7') && shed.contains('4'), "{shed}");
+        let timeout = format!("{}", ServeError::Timeout { waited_ms: 250 });
+        assert!(timeout.contains("deadline") && timeout.contains("250"), "{timeout}");
+        let failed = format!("{}", ServeError::Failed("device G80 is dead".into()));
+        assert!(failed.contains("G80"), "{failed}");
+        // `?` must lift it into anyhow (the std::error::Error impl).
+        let e: anyhow::Error = ServeError::Timeout { waited_ms: 1 }.into();
+        assert!(e.to_string().contains("deadline"));
     }
 }

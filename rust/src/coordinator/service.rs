@@ -21,7 +21,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Context, Result};
 
 use crate::engine::{resolve_device, Engine};
-use crate::gpusim::DeviceConfig;
+use crate::gpusim::{DeviceConfig, FaultPlan};
 use crate::reduce::op::{Dtype, Element, Op, TypedElement};
 use crate::reduce::persistent;
 use crate::reduce::plan::ShapeKey;
@@ -34,7 +34,9 @@ use crate::util::stats::Histogram;
 use super::backpressure::Gate;
 use super::batcher::{BatchKind, Batcher, FlushedBatch, FlushedKeyedBatch, KeyPolicy, KeyedBatcher};
 use super::metrics::Metrics;
-use super::request::{ExecPath, KeyedRequest, KeyedResponse, Request, Response};
+use super::request::{
+    ExecPath, KeyedRequest, KeyedResponse, Request, Response, ServeError, SubmitOpts,
+};
 use super::router::{Route, Router};
 
 /// Fleet-spec parsing lives with the engine now; re-exported so CLI
@@ -66,6 +68,10 @@ pub struct PoolServeConfig {
     pub cutoff: Option<usize>,
     /// Shard granularity per device (work-stealing slack).
     pub tasks_per_device: usize,
+    /// Fault injection for the fleet (chaos runs; see
+    /// [`crate::gpusim::fault`]). The default empty plan costs the
+    /// request path nothing.
+    pub fault: FaultPlan,
 }
 
 impl Default for PoolServeConfig {
@@ -75,6 +81,7 @@ impl Default for PoolServeConfig {
             custom: Vec::new(),
             cutoff: None,
             tasks_per_device: 2,
+            fault: FaultPlan::none(),
         }
     }
 }
@@ -180,25 +187,43 @@ impl Service {
         Ok(Service { tx, gate, next_id: AtomicU64::new(1), handle: Some(handle), trace, registry })
     }
 
-    /// Submit a reduction. Returns the response channel, or an error
-    /// when the service is overloaded (backpressure) or stopped.
+    /// Submit a reduction with default options (no deadline, no
+    /// admission retries). Returns the response channel, or a typed
+    /// [`ServeError`] when the gate sheds or the service stopped.
     ///
     /// The admission slot is held until the executor responds (it
     /// releases the gate after delivering each response).
-    pub fn submit(&self, op: Op, payload: HostVec) -> Result<Receiver<Response>> {
-        let permit = self
-            .gate
-            .try_acquire()
-            .ok_or_else(|| anyhow!("overloaded: {} requests in flight", self.gate.in_flight()))?;
+    pub fn submit(&self, op: Op, payload: HostVec) -> Result<Receiver<Response>, ServeError> {
+        self.submit_with(op, payload, SubmitOpts::default())
+    }
+
+    /// Submit a reduction with a deadline and/or bounded admission
+    /// retry ([`SubmitOpts`]). A full gate sheds with
+    /// [`ServeError::Shed`] after the configured retries (doubling
+    /// backoff between attempts); a deadline that expires while
+    /// retrying returns [`ServeError::Timeout`] instead. An admitted
+    /// request whose deadline expires before execution is answered
+    /// `Timeout` on its response channel.
+    pub fn submit_with(
+        &self,
+        op: Op,
+        payload: HostVec,
+        opts: SubmitOpts,
+    ) -> Result<Receiver<Response>, ServeError> {
+        let t_enqueue = Instant::now();
+        let permit = self.admit(t_enqueue, &opts)?;
         let (reply_tx, reply_rx) = mpsc::channel();
         let req = Request {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
             op,
             payload,
-            t_enqueue: Instant::now(),
+            t_enqueue,
+            deadline: opts.deadline.map(|d| t_enqueue + d),
             reply: reply_tx,
         };
-        self.tx.send(Msg::Req(req)).map_err(|_| anyhow!("service stopped"))?;
+        self.tx
+            .send(Msg::Req(req))
+            .map_err(|_| ServeError::Failed("service stopped".into()))?;
         // Ownership of the slot transfers to the executor, which
         // releases it via `Gate::release_transferred` in `respond`.
         permit.transfer();
@@ -208,37 +233,85 @@ impl Service {
     /// Submit a keyed (group-by) reduction: one key per value, one
     /// reduced value per distinct key. Concurrent same-`(op, dtype)`
     /// keyed requests fuse into one segmented pass at flush time
-    /// (by-key fusion). Returns the response channel, or an error on
-    /// a key/value length mismatch, overload, or a stopped service.
+    /// (by-key fusion). Returns the response channel, or a typed
+    /// [`ServeError`] on a key/value length mismatch, shed, or a
+    /// stopped service.
     pub fn submit_by_key(
         &self,
         op: Op,
         keys: Vec<i64>,
         values: HostVec,
-    ) -> Result<Receiver<KeyedResponse>> {
+    ) -> Result<Receiver<KeyedResponse>, ServeError> {
+        self.submit_by_key_with(op, keys, values, SubmitOpts::default())
+    }
+
+    /// [`Self::submit_by_key`] with a deadline and/or bounded
+    /// admission retry (see [`Self::submit_with`]).
+    pub fn submit_by_key_with(
+        &self,
+        op: Op,
+        keys: Vec<i64>,
+        values: HostVec,
+        opts: SubmitOpts,
+    ) -> Result<Receiver<KeyedResponse>, ServeError> {
         if keys.len() != values.len() {
-            return Err(anyhow!(
+            return Err(ServeError::Failed(format!(
                 "reduce_by_key needs one key per value ({} keys, {} values)",
                 keys.len(),
                 values.len()
-            ));
+            )));
         }
-        let permit = self
-            .gate
-            .try_acquire()
-            .ok_or_else(|| anyhow!("overloaded: {} requests in flight", self.gate.in_flight()))?;
+        let t_enqueue = Instant::now();
+        let permit = self.admit(t_enqueue, &opts)?;
         let (reply_tx, reply_rx) = mpsc::channel();
         let req = KeyedRequest {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
             op,
             keys,
             values,
-            t_enqueue: Instant::now(),
+            t_enqueue,
+            deadline: opts.deadline.map(|d| t_enqueue + d),
             reply: reply_tx,
         };
-        self.tx.send(Msg::Keyed(req)).map_err(|_| anyhow!("service stopped"))?;
+        self.tx
+            .send(Msg::Keyed(req))
+            .map_err(|_| ServeError::Failed("service stopped".into()))?;
         permit.transfer();
         Ok(reply_rx)
+    }
+
+    /// Acquire an admission slot, retrying a shedding gate
+    /// `opts.retries` times with doubling backoff (1, 2, 4 ... ms,
+    /// capped at 32 ms). A deadline that expires mid-retry wins over
+    /// the shed: the caller asked for bounded waiting, not bounded
+    /// rejection.
+    fn admit(
+        &self,
+        t_enqueue: Instant,
+        opts: &SubmitOpts,
+    ) -> Result<super::backpressure::Permit, ServeError> {
+        let mut attempt = 0u32;
+        loop {
+            if let Some(p) = self.gate.try_acquire() {
+                return Ok(p);
+            }
+            if opts.deadline.is_some_and(|d| t_enqueue.elapsed() >= d) {
+                crate::telemetry::warn("serve.deadline.expired");
+                return Err(ServeError::Timeout {
+                    waited_ms: t_enqueue.elapsed().as_millis() as u64,
+                });
+            }
+            if attempt >= opts.retries {
+                crate::telemetry::warn("serve.shed");
+                return Err(ServeError::Shed {
+                    in_flight: self.gate.in_flight(),
+                    limit: self.gate.limit(),
+                });
+            }
+            attempt += 1;
+            crate::telemetry::warn("serve.submit.retry");
+            std::thread::sleep(Duration::from_millis(1u64 << (attempt - 1).min(5)));
+        }
     }
 
     /// Current in-flight count (admission gate view).
@@ -340,6 +413,7 @@ fn executor_loop(
         };
         builder = builder
             .fleet(devices)
+            .fleet_fault(pc.fault.clone())
             .tasks_per_device(pc.tasks_per_device.max(1))
             .pool_cutoff(pc.cutoff);
     }
@@ -368,6 +442,10 @@ fn executor_loop(
     // tick below re-running it is idempotent.
     let sync_registry = |metrics: &Metrics, engine: &Engine| {
         metrics.export_to(&registry);
+        registry.set_gauge("parred_gate_in_flight", &[], gate.in_flight() as f64);
+        registry.set_gauge("parred_gate_limit", &[], gate.limit() as f64);
+        registry.set_counter("parred_gate_admitted_total", &[], gate.admitted() as u64);
+        registry.set_counter("parred_gate_rejected_total", &[], gate.rejected() as u64);
         if let Some(p) = engine.pool() {
             let c = p.counters();
             registry.set_counter("parred_pool_tasks_total", &[], c.tasks_executed);
@@ -580,7 +658,7 @@ fn fleet_devices(pc: &PoolServeConfig) -> Result<Vec<DeviceConfig>> {
 fn respond(
     gate: &Gate,
     req: Request,
-    value: Result<HostScalar, String>,
+    value: Result<HostScalar, ServeError>,
     path: ExecPath,
     metrics: &mut Metrics,
 ) {
@@ -592,6 +670,53 @@ fn respond(
     metrics.record(path, latency, ok, elements);
 }
 
+/// Answer `req` with [`ServeError::Timeout`] if its deadline has
+/// passed — the caller is gone, executing would spend a device on an
+/// answer nobody reads. Returns the request when it is still live.
+fn take_live(gate: &Gate, req: Request, now: Instant, metrics: &mut Metrics) -> Option<Request> {
+    match req.deadline {
+        Some(d) if now >= d => {
+            crate::telemetry::warn("serve.deadline.expired");
+            let waited_ms = now.saturating_duration_since(req.t_enqueue).as_millis() as u64;
+            respond(gate, req, Err(ServeError::Timeout { waited_ms }), ExecPath::Host, metrics);
+            None
+        }
+        _ => Some(req),
+    }
+}
+
+/// Drop expired members from a flushed batch (each answered
+/// `Timeout`); the survivors execute. Identity padding (rows batches)
+/// or a shorter stack (fused batches) absorbs the gap.
+fn live_requests(gate: &Gate, reqs: Vec<Request>, metrics: &mut Metrics) -> Vec<Request> {
+    let now = Instant::now();
+    reqs.into_iter().filter_map(|r| take_live(gate, r, now, metrics)).collect()
+}
+
+/// Keyed twin of [`take_live`].
+fn take_live_keyed(
+    gate: &Gate,
+    req: KeyedRequest,
+    now: Instant,
+    metrics: &mut Metrics,
+) -> Option<KeyedRequest> {
+    match req.deadline {
+        Some(d) if now >= d => {
+            crate::telemetry::warn("serve.deadline.expired");
+            let waited_ms = now.saturating_duration_since(req.t_enqueue).as_millis() as u64;
+            respond_keyed(
+                gate,
+                req,
+                Err(ServeError::Timeout { waited_ms }),
+                ExecPath::Keyed { groups: 0 },
+                metrics,
+            );
+            None
+        }
+        _ => Some(req),
+    }
+}
+
 fn exec_full(
     trace: &Trace,
     runtime: &Runtime,
@@ -600,6 +725,7 @@ fn exec_full(
     req: Request,
     metrics: &mut Metrics,
 ) {
+    let Some(req) = take_live(gate, req, Instant::now(), metrics) else { return };
     let mut span = trace.span("serve.request");
     if span.active() {
         span.attr_u64("id", req.id);
@@ -613,13 +739,20 @@ fn exec_full(
         .cloned()
         .ok_or_else(|| anyhow!("artifact vanished"))
         .and_then(|meta| runtime.reduce_full(&meta, &req.payload));
-    respond(gate, req, result.map_err(|e| format!("{e:#}")), ExecPath::PjrtFull, metrics);
+    respond(
+        gate,
+        req,
+        result.map_err(|e| ServeError::Failed(format!("{e:#}"))),
+        ExecPath::PjrtFull,
+        metrics,
+    );
 }
 
 /// Execute one request through the engine: the scheduler places it
 /// (sequential / persistent host / fleet shard), the engine observes
 /// the outcome, and the response carries the engine's own `ExecPath`.
 fn exec_engine(engine: &Engine, gate: &Gate, req: Request, metrics: &mut Metrics) {
+    let Some(req) = take_live(gate, req, Instant::now(), metrics) else { return };
     let mut span = engine.trace().span("serve.request");
     if span.active() {
         span.attr_u64("id", req.id);
@@ -647,7 +780,7 @@ fn exec_engine(engine: &Engine, gate: &Gate, req: Request, metrics: &mut Metrics
                 Some(p) => ExecPath::Sharded { devices: p.num_devices() },
                 None => ExecPath::Host,
             };
-            respond(gate, req, Err(format!("{e:#}")), path, metrics);
+            respond(gate, req, Err(ServeError::Failed(format!("{e:#}"))), path, metrics);
         }
     }
 }
@@ -659,18 +792,25 @@ fn exec_engine(engine: &Engine, gate: &Gate, req: Request, metrics: &mut Metrics
 /// batching) from the same ladder that routed the key.
 fn exec_engine_fused(engine: &Engine, gate: &Gate, batch: FlushedBatch, metrics: &mut Metrics) {
     let key = batch.key;
-    let rows = batch.requests.len();
+    let kind = batch.kind;
+    // Expired members drop out before stacking (each answered
+    // `Timeout`); the fused pass runs over whoever is still live.
+    let requests = live_requests(gate, batch.requests, metrics);
+    let rows = requests.len();
+    if rows == 0 {
+        return;
+    }
     if rows == 1 {
         // A fused batch of one is just a direct request; don't claim
         // fusion in the metrics or the response path.
-        let req = batch.requests.into_iter().next().expect("one request");
+        let req = requests.into_iter().next().expect("one request");
         return exec_engine(engine, gate, req, metrics);
     }
     // A batch enqueued as fleet-bound stays fleet-bound: pin the pass
     // to the fleet so adaptive cutoff drift between enqueue and flush
     // can never run the (arbitrarily large) stacked payload as one
     // host rows pass — the invariant HOST_FUSE_MAX_N exists to hold.
-    let pin_fleet = batch.kind == BatchKind::FusedPool;
+    let pin_fleet = kind == BatchKind::FusedPool;
     let mut batch_span = engine.trace().span("serve.batch");
     if batch_span.active() {
         batch_span.attr_u64("rows", rows as u64);
@@ -679,7 +819,7 @@ fn exec_engine_fused(engine: &Engine, gate: &Gate, batch: FlushedBatch, metrics:
     let result: Result<(Vec<HostScalar>, ExecPath)> = match key.dtype {
         Dtype::F32 => {
             let mut stacked: Vec<f32> = Vec::with_capacity(rows * key.n);
-            for req in &batch.requests {
+            for req in &requests {
                 let HostVec::F32(v) = &req.payload else {
                     unreachable!("shape key guarantees f32 payloads")
                 };
@@ -694,7 +834,7 @@ fn exec_engine_fused(engine: &Engine, gate: &Gate, batch: FlushedBatch, metrics:
         }
         Dtype::I32 => {
             let mut stacked: Vec<i32> = Vec::with_capacity(rows * key.n);
-            for req in &batch.requests {
+            for req in &requests {
                 let HostVec::I32(v) = &req.payload else {
                     unreachable!("shape key guarantees i32 payloads")
                 };
@@ -714,7 +854,7 @@ fn exec_engine_fused(engine: &Engine, gate: &Gate, batch: FlushedBatch, metrics:
                 ExecPath::PoolFused { .. } => metrics.record_pool_fused(rows),
                 _ => metrics.record_fused(rows),
             }
-            for (req, v) in batch.requests.into_iter().zip(values) {
+            for (req, v) in requests.into_iter().zip(values) {
                 let mut rs = engine.trace().span("serve.request");
                 rs.attr_u64("id", req.id);
                 respond(gate, req, Ok(v), path, metrics);
@@ -730,11 +870,11 @@ fn exec_engine_fused(engine: &Engine, gate: &Gate, batch: FlushedBatch, metrics:
                 batch: rows,
                 devices: engine.pool().map_or(0, |p| p.num_devices()),
             };
-            let msg = format!("{e:#}");
-            for req in batch.requests {
+            let err = ServeError::Failed(format!("{e:#}"));
+            for req in requests {
                 let mut rs = engine.trace().span("serve.request");
                 rs.attr_u64("id", req.id);
-                respond(gate, req, Err(msg.clone()), path, metrics);
+                respond(gate, req, Err(err.clone()), path, metrics);
             }
         }
     }
@@ -743,7 +883,7 @@ fn exec_engine_fused(engine: &Engine, gate: &Gate, batch: FlushedBatch, metrics:
 fn respond_keyed(
     gate: &Gate,
     req: KeyedRequest,
-    groups: Result<Vec<(i64, HostScalar)>, String>,
+    groups: Result<Vec<(i64, HostScalar)>, ServeError>,
     path: ExecPath,
     metrics: &mut Metrics,
 ) {
@@ -758,6 +898,7 @@ fn respond_keyed(
 /// Execute one keyed request through the engine's by-key front door
 /// (grouping + the segmented rung the scheduler picks).
 fn exec_engine_keyed(engine: &Engine, gate: &Gate, req: KeyedRequest, metrics: &mut Metrics) {
+    let Some(req) = take_live_keyed(gate, req, Instant::now(), metrics) else { return };
     let mut span = engine.trace().span("serve.request");
     if span.active() {
         span.attr_u64("id", req.id);
@@ -780,7 +921,7 @@ fn exec_engine_keyed(engine: &Engine, gate: &Gate, req: KeyedRequest, metrics: &
         Ok((groups, path)) => respond_keyed(gate, req, Ok(groups), path, metrics),
         Err(e) => {
             let path = ExecPath::Keyed { groups: 0 };
-            respond_keyed(gate, req, Err(format!("{e:#}")), path, metrics);
+            respond_keyed(gate, req, Err(ServeError::Failed(format!("{e:#}"))), path, metrics);
         }
     }
 }
@@ -798,8 +939,19 @@ fn exec_engine_keyed_fused(
     batch: FlushedKeyedBatch,
     metrics: &mut Metrics,
 ) {
-    if batch.requests.len() == 1 {
-        let req = batch.requests.into_iter().next().expect("one request");
+    // Expired members answer `Timeout` here; the segmented pass runs
+    // over the live remainder.
+    let now = Instant::now();
+    let requests: Vec<KeyedRequest> = batch
+        .requests
+        .into_iter()
+        .filter_map(|r| take_live_keyed(gate, r, now, metrics))
+        .collect();
+    if requests.is_empty() {
+        return;
+    }
+    if requests.len() == 1 {
+        let req = requests.into_iter().next().expect("one request");
         return exec_engine_keyed(engine, gate, req, metrics);
     }
     fn f32_slice(p: &HostVec) -> &[f32] {
@@ -819,7 +971,7 @@ fn exec_engine_keyed_fused(
             engine,
             gate,
             batch.key.op,
-            batch.requests,
+            requests,
             f32_slice,
             HostScalar::F32,
             metrics,
@@ -828,7 +980,7 @@ fn exec_engine_keyed_fused(
             engine,
             gate,
             batch.key.op,
-            batch.requests,
+            requests,
             i32_slice,
             HostScalar::I32,
             metrics,
@@ -906,11 +1058,11 @@ fn exec_keyed_fused_typed<T: TypedElement>(
         Err(e) => {
             // Only a fleet pass can fail; every request in the batch
             // shares the outcome.
-            let msg = format!("{e:#}");
+            let err = ServeError::Failed(format!("{e:#}"));
             for (req, groups) in requests.into_iter().zip(group_counts) {
                 let mut rs = engine.trace().span("serve.request");
                 rs.attr_u64("id", req.id);
-                respond_keyed(gate, req, Err(msg.clone()), ExecPath::Keyed { groups }, metrics);
+                respond_keyed(gate, req, Err(err.clone()), ExecPath::Keyed { groups }, metrics);
             }
         }
     }
@@ -933,7 +1085,13 @@ fn exec_batch(
 ) {
     let key = batch.key;
     let exec_rows = batch.exec_rows;
-    let useful = batch.requests.len();
+    // Expired members answer `Timeout` and their rows become identity
+    // padding — the artifact shape (exec_rows) is fixed either way.
+    let requests = live_requests(gate, batch.requests, metrics);
+    if requests.is_empty() {
+        return;
+    }
+    let useful = requests.len();
     debug_assert!(useful <= exec_rows);
     let mut batch_span = trace.span("serve.batch");
     if batch_span.active() {
@@ -943,11 +1101,11 @@ fn exec_batch(
 
     let Some(meta) = router.catalog().find_rows(key.op, key.dtype, exec_rows, key.n).cloned()
     else {
-        for req in batch.requests {
+        for req in requests {
             respond(
                 gate,
                 req,
-                Err(format!("no rows artifact for {key} x{exec_rows}")),
+                Err(ServeError::Failed(format!("no rows artifact for {key} x{exec_rows}"))),
                 ExecPath::PjrtBatched { batch: exec_rows },
                 metrics,
             );
@@ -957,7 +1115,7 @@ fn exec_batch(
 
     // Stack payloads (+ identity padding up to exec_rows).
     let mut stacked = identity_payload(key.op, key.dtype, 0);
-    for req in &batch.requests {
+    for req in &requests {
         let _ = stacked.extend(&req.payload);
     }
     for _ in useful..exec_rows {
@@ -968,26 +1126,26 @@ fn exec_batch(
     match runtime.reduce_rows(&meta, &stacked) {
         Ok(values) => {
             let path = ExecPath::PjrtBatched { batch: exec_rows };
-            for (i, req) in batch.requests.into_iter().enumerate() {
+            for (i, req) in requests.into_iter().enumerate() {
                 let mut rs = trace.span("serve.request");
                 rs.attr_u64("id", req.id);
                 let value = match (&values, key.dtype) {
                     (HostVec::F32(v), Dtype::F32) => Ok(HostScalar::F32(v[i])),
                     (HostVec::I32(v), Dtype::I32) => Ok(HostScalar::I32(v[i])),
-                    _ => Err("dtype mismatch in batch result".into()),
+                    _ => Err(ServeError::Failed("dtype mismatch in batch result".into())),
                 };
                 respond(gate, req, value, path, metrics);
             }
         }
         Err(e) => {
-            let msg = format!("{e:#}");
-            for req in batch.requests {
+            let err = ServeError::Failed(format!("{e:#}"));
+            for req in requests {
                 let mut rs = trace.span("serve.request");
                 rs.attr_u64("id", req.id);
                 respond(
                     gate,
                     req,
-                    Err(msg.clone()),
+                    Err(err.clone()),
                     ExecPath::PjrtBatched { batch: exec_rows },
                     metrics,
                 );
@@ -1009,6 +1167,9 @@ pub struct TraceConfig {
     pub seed: u64,
     /// Mean inter-arrival gap (exponential), microseconds.
     pub mean_gap_us: f64,
+    /// Per-request deadline (`--deadline-ms`): expired requests count
+    /// as timeouts in the report instead of failing the trace.
+    pub deadline: Option<Duration>,
 }
 
 /// Run a synthetic trace against a fresh service; every response is
@@ -1018,7 +1179,8 @@ pub fn run_trace(cfg: ServiceConfig, trace: TraceConfig) -> Result<String> {
     let mut rng = Rng::new(trace.seed);
     let t0 = Instant::now();
     let mut pending = Vec::with_capacity(trace.requests);
-    let mut expected = Vec::with_capacity(trace.requests);
+    let mut shed = 0usize;
+    let opts = SubmitOpts { deadline: trace.deadline, retries: 2 };
 
     for i in 0..trace.requests {
         // 80% sum, 20% max — both have rows artifacts at 65536.
@@ -1029,8 +1191,13 @@ pub fn run_trace(cfg: ServiceConfig, trace: TraceConfig) -> Result<String> {
             Op::Max => data.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64,
             _ => unreachable!(),
         };
-        expected.push((i, op, want));
-        pending.push(svc.submit(op, HostVec::F32(data))?);
+        match svc.submit_with(op, HostVec::F32(data), opts.clone()) {
+            Ok(rx) => pending.push((rx, i, op, want)),
+            // Shed and admission-timeout are load signals, not trace
+            // failures: count them and keep the offered load going.
+            Err(ServeError::Shed { .. }) | Err(ServeError::Timeout { .. }) => shed += 1,
+            Err(e) => return Err(anyhow!("request {i} rejected: {e}")),
+        }
         let gap = rng.exponential(trace.mean_gap_us) as u64;
         if gap > 0 && i + 1 < trace.requests {
             std::thread::sleep(Duration::from_micros(gap.min(5_000)));
@@ -1040,11 +1207,19 @@ pub fn run_trace(cfg: ServiceConfig, trace: TraceConfig) -> Result<String> {
     // Await all responses and validate numerics end-to-end.
     let mut client_lat = Histogram::new();
     let mut batched = 0usize;
-    for (rx, (i, op, want)) in pending.into_iter().zip(expected) {
+    let mut timeouts = 0usize;
+    for (rx, i, op, want) in pending {
         let resp = rx
             .recv_timeout(Duration::from_secs(60))
             .map_err(|_| anyhow!("request {i} timed out"))?;
-        let got = resp.value.map_err(|e| anyhow!("request {i} failed: {e}"))?;
+        let got = match resp.value {
+            Ok(v) => v,
+            Err(ServeError::Timeout { .. }) => {
+                timeouts += 1;
+                continue;
+            }
+            Err(e) => return Err(anyhow!("request {i} failed: {e}")),
+        };
         let tol = 1e-3 * (want.abs().max(1.0));
         anyhow::ensure!(
             (got.as_f64() - want).abs() <= tol,
@@ -1072,7 +1247,12 @@ pub fn run_trace(cfg: ServiceConfig, trace: TraceConfig) -> Result<String> {
     ));
     report.push_str(&format!("client latency: {}\n", client_lat.summary()));
     report.push_str(&metrics.report());
-    report.push_str("all responses numerically verified against host oracle\n");
+    if timeouts + shed > 0 {
+        report.push_str(&format!("deadline timeouts={timeouts}  shed at admission={shed}\n"));
+        report.push_str("all completed responses numerically verified against host oracle\n");
+    } else {
+        report.push_str("all responses numerically verified against host oracle\n");
+    }
     Ok(report)
 }
 
@@ -1098,6 +1278,7 @@ mod tests {
             custom: vec![custom_device()],
             cutoff: Some(1 << 20),
             tasks_per_device: 2,
+            fault: FaultPlan::none(),
         };
         let devices = fleet_devices(&pc).unwrap();
         assert_eq!(devices.len(), 3);

@@ -43,7 +43,7 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::gpusim::DeviceConfig;
+use crate::gpusim::{fault::split_chaos_spec, DeviceConfig, FaultPlan};
 use crate::pool::{DevicePool, PoolConfig};
 use crate::reduce::op::TypedElement;
 use crate::reduce::plan::Planner;
@@ -129,6 +129,7 @@ pub fn fleet_from_spec(spec: &str, custom: &[DeviceConfig]) -> Result<Vec<Device
 pub struct EngineBuilder {
     workers: usize,
     fleet: Vec<DeviceConfig>,
+    fault: FaultPlan,
     tasks_per_device: usize,
     pool_cutoff: Option<usize>,
     adaptive: bool,
@@ -158,6 +159,24 @@ impl EngineBuilder {
     /// [`EngineBuilder::fleet`].
     pub fn fleet_spec(self, spec: &str) -> Result<Self> {
         Ok(self.fleet(fleet_from_spec(spec, &[])?))
+    }
+
+    /// Inject deterministic faults into the fleet: the plan is seeded
+    /// per device index ([`FaultPlan::for_device`]), so every device
+    /// draws an independent, reproducible fault stream. The default
+    /// (an empty plan) injects nothing and costs nothing.
+    pub fn fleet_fault(mut self, plan: FaultPlan) -> Self {
+        self.fault = plan;
+        self
+    }
+
+    /// Attach a fleet *and* a fault plan from one chaos spec —
+    /// `"TeslaC2075*4:die@3,slow=10x@0.01"` is the fleet spec, a
+    /// colon, then fault clauses (see [`FaultPlan::parse`]). A spec
+    /// without a colon is a plain fleet spec with no faults.
+    pub fn chaos_spec(self, spec: &str) -> Result<Self> {
+        let (fleet, plan) = split_chaos_spec(spec)?;
+        Ok(self.fleet(fleet_from_spec(&fleet, &[])?).fleet_fault(plan))
     }
 
     /// Shard granularity per device (work-stealing slack; default 2).
@@ -223,11 +242,17 @@ impl EngineBuilder {
         let pool = if self.fleet.is_empty() {
             None
         } else {
+            let mut fleet = self.fleet;
+            if !self.fault.is_none() {
+                for (i, dev) in fleet.iter_mut().enumerate() {
+                    dev.fault = self.fault.for_device(i);
+                }
+            }
             // 0 = unset: match the stack-wide default of 2
             // (`PoolConfig`, `PoolServeConfig`) the setter documents.
             let tasks = if self.tasks_per_device == 0 { 2 } else { self.tasks_per_device };
             Some(DevicePool::new(PoolConfig {
-                devices: self.fleet,
+                devices: fleet,
                 tasks_per_device: tasks,
                 trace: trace.clone(),
                 ..PoolConfig::default()
@@ -272,12 +297,18 @@ impl Engine {
 
     /// A host-only engine at this width (no fleet, no adaptation) —
     /// the zero-configuration path for library use. `workers == 0`
-    /// means available parallelism.
+    /// means available parallelism. Constructed directly (no fleet to
+    /// spawn, no snapshot to read), so it is genuinely infallible —
+    /// not an `expect` over the fallible builder.
     pub fn host(workers: usize) -> Engine {
-        Engine::builder()
-            .host_workers(workers)
-            .build()
-            .expect("host-only engine construction cannot fail")
+        let workers = if workers == 0 {
+            std::thread::available_parallelism().map_or(4, |n| n.get())
+        } else {
+            workers
+        };
+        let sched = Arc::new(Scheduler::host(workers));
+        let planner = Planner::new(sched.clone());
+        Engine { sched, planner, pool: None, trace: Arc::default() }
     }
 
     /// The shared scheduler (the serving layer hands it to its router
@@ -509,6 +540,26 @@ mod tests {
     fn builder_rejects_bad_fleet_specs() {
         assert!(Engine::builder().fleet_spec("H100").is_err());
         assert!(Engine::builder().fleet_spec("").is_err());
+    }
+
+    #[test]
+    fn chaos_spec_attaches_fleet_and_per_device_faults() {
+        let e = Engine::builder()
+            .host_workers(2)
+            .chaos_spec("TeslaC2075*2:slow=4x@1.0,seed=9")
+            .unwrap()
+            .build()
+            .unwrap();
+        let pool = e.pool().unwrap();
+        assert_eq!(pool.num_devices(), 2);
+        assert!(!pool.devices()[0].fault.is_none());
+        // Per-device seeding: independent reproducible fault streams.
+        assert_ne!(pool.devices()[0].fault.seed, pool.devices()[1].fault.seed);
+        // No colon = plain fleet spec, no faults injected.
+        let e = Engine::builder().chaos_spec("G80").unwrap().build().unwrap();
+        assert!(e.pool().unwrap().devices()[0].fault.is_none());
+        // Bad fault clauses fail loudly.
+        assert!(Engine::builder().chaos_spec("G80:bogus@1").is_err());
     }
 
     #[test]

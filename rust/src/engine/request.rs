@@ -37,8 +37,10 @@ impl<'e, 'd, T: TypedElement> ReduceBuilder<'e, 'd, T> {
         self
     }
 
-    /// Place and execute the reduction. Host paths cannot fail; fleet
-    /// paths surface pool errors (a dead worker) as `Err`.
+    /// Place and execute the reduction. Host paths cannot fail; a
+    /// fleet pass that fails outright (every worker retired mid-wave)
+    /// degrades to the full-width host rung — warned, spanned, and fed
+    /// back to the scheduler's health tracker — rather than erroring.
     pub fn run(self) -> crate::Result<Reduced<T>> {
         let ReduceBuilder { engine, data, op } = self;
         let t0 = Instant::now();
@@ -98,16 +100,31 @@ impl<'e, 'd, T: TypedElement> ReduceBuilder<'e, 'd, T> {
                         p.attr_u64("devices", pool.num_devices() as u64);
                         plan
                     };
-                    let (value, out) = pool.reduce_elems_planned(data, op, &plan)?;
-                    sched.observe_pool(op, T::DTYPE, n, &out);
-                    Ok(Reduced {
-                        value,
-                        path: ExecPath::Sharded { devices: pool.num_devices() },
-                        elapsed_s: t0.elapsed().as_secs_f64(),
-                        shards: out.shards,
-                        steals: out.steals,
-                        modeled_wall_s: out.modeled_wall_s,
-                    })
+                    match pool.reduce_elems_planned(data, op, &plan) {
+                        Ok((value, out)) => {
+                            sched.observe_pool(op, T::DTYPE, n, &out);
+                            Ok(Reduced {
+                                value,
+                                path: ExecPath::Sharded { devices: pool.num_devices() },
+                                elapsed_s: t0.elapsed().as_secs_f64(),
+                                shards: out.shards,
+                                steals: out.steals,
+                                modeled_wall_s: out.modeled_wall_s,
+                            })
+                        }
+                        // Total fleet failure: tell the health tracker
+                        // which workers died, then finish the request
+                        // on the host — availability over placement.
+                        Err(e) => {
+                            crate::telemetry::warn("engine.fleet.fallback");
+                            sched.observe_fleet_liveness(&pool.live_workers());
+                            let mut f = trace.span("exec.fleet_fallback");
+                            f.attr_str("error", e.to_string());
+                            let value =
+                                persistent::global().reduce_width(data, op, engine.workers());
+                            Ok(Reduced::host(value, ExecPath::Host, t0.elapsed().as_secs_f64()))
+                        }
+                    }
                 }
                 // A sharded decision without an attached pool can only
                 // come from a hand-built scheduler; degrade to the
@@ -195,46 +212,51 @@ impl<'e, 'd, T: TypedElement> RowsBuilder<'e, 'd, T> {
             }
             matches!(d, Decision::Sharded { .. })
         };
-        match (sharded, engine.pool()) {
-            (true, Some(pool)) => {
-                let base = {
-                    let mut p = trace.span("plan.shards");
-                    let base =
-                        sched.plan_shards(pool.devices(), cols, pool.tasks_per_device());
-                    p.attr_u64("shards", base.shards.len() as u64);
-                    p.attr_u64("devices", pool.num_devices() as u64);
-                    base
-                };
-                let (values, out) = pool.reduce_rows_elems(data, cols, op, &base)?;
-                sched.observe_pool(op, T::DTYPE, rows * cols, &out);
-                Ok(Reduced {
-                    value: values,
-                    path: ExecPath::PoolFused { batch: rows, devices: pool.num_devices() },
-                    elapsed_s: t0.elapsed().as_secs_f64(),
-                    shards: out.shards,
-                    steals: out.steals,
-                    modeled_wall_s: out.modeled_wall_s,
-                })
-            }
-            _ => {
-                let values = {
-                    let mut e = trace.span("exec.rows_host");
-                    e.attr_u64("workers", engine.workers() as u64);
-                    persistent::global().reduce_rows_width(data, cols, op, engine.workers())
-                };
-                let dt = t0.elapsed().as_secs_f64();
-                // Observe only passes that actually fanned out —
-                // mirroring `reduce_rows_width`'s own serial predicate
-                // (width == 1 || rows == 1 || len < SEQ_FALLBACK):
-                // serial or wake-up-dominated passes must not drag the
-                // full-width EWMA toward throughput the backend didn't
-                // produce.
-                if rows > 1 && engine.workers() > 1 && rows * cols >= persistent::SEQ_FALLBACK {
-                    sched.observe(Backend::ThreadedFull, op, T::DTYPE, rows * cols, dt);
+        if let (true, Some(pool)) = (sharded, engine.pool()) {
+            let base = {
+                let mut p = trace.span("plan.shards");
+                let base = sched.plan_shards(pool.devices(), cols, pool.tasks_per_device());
+                p.attr_u64("shards", base.shards.len() as u64);
+                p.attr_u64("devices", pool.num_devices() as u64);
+                base
+            };
+            match pool.reduce_rows_elems(data, cols, op, &base) {
+                Ok((values, out)) => {
+                    sched.observe_pool(op, T::DTYPE, rows * cols, &out);
+                    return Ok(Reduced {
+                        value: values,
+                        path: ExecPath::PoolFused { batch: rows, devices: pool.num_devices() },
+                        elapsed_s: t0.elapsed().as_secs_f64(),
+                        shards: out.shards,
+                        steals: out.steals,
+                        modeled_wall_s: out.modeled_wall_s,
+                    });
                 }
-                Ok(Reduced::host(values, ExecPath::HostFused { batch: rows }, dt))
+                // Total fleet failure: record the deaths, then fall
+                // through to the host rows pass below.
+                Err(e) => {
+                    crate::telemetry::warn("engine.fleet.fallback");
+                    sched.observe_fleet_liveness(&pool.live_workers());
+                    let mut f = trace.span("exec.fleet_fallback");
+                    f.attr_str("error", e.to_string());
+                }
             }
         }
+        let values = {
+            let mut e = trace.span("exec.rows_host");
+            e.attr_u64("workers", engine.workers() as u64);
+            persistent::global().reduce_rows_width(data, cols, op, engine.workers())
+        };
+        let dt = t0.elapsed().as_secs_f64();
+        // Observe only passes that actually fanned out — mirroring
+        // `reduce_rows_width`'s own serial predicate (width == 1 ||
+        // rows == 1 || len < SEQ_FALLBACK): serial or
+        // wake-up-dominated passes must not drag the full-width EWMA
+        // toward throughput the backend didn't produce.
+        if rows > 1 && engine.workers() > 1 && rows * cols >= persistent::SEQ_FALLBACK {
+            sched.observe(Backend::ThreadedFull, op, T::DTYPE, rows * cols, dt);
+        }
+        Ok(Reduced::host(values, ExecPath::HostFused { batch: rows }, dt))
     }
 }
 
@@ -294,31 +316,48 @@ fn run_segments_core<T: TypedElement>(
             p.attr_u64("devices", pool.num_devices() as u64);
             plan
         };
-        let (values, out) = pool.reduce_segments_elems(data, offsets, op, &plan)?;
-        // Feed the Pool throughput EWMA only when segment boundaries
-        // kept the wave close to a flat sharded pass (tasks within 2×
-        // the plan's shards): a many-small-segments wave is per-task
-        // launch-overhead dominated by construction, and folding its
-        // bytes/s into the model would drag the derived host→pool
-        // knee away from what *flat* passes actually achieve — the
-        // same skew rule the unobserved fused host arm below applies.
-        // Per-worker busy ratios stay meaningful either way, so the
-        // shard-weight feedback is always recorded.
-        if out.shards <= 2 * plan.shards.len() {
-            sched.observe_pool(op, T::DTYPE, data.len(), &out);
-        } else {
-            sched.observe_busy(&out.per_worker_busy_s);
+        match pool.reduce_segments_elems(data, offsets, op, &plan) {
+            Ok((values, out)) => {
+                // Feed the Pool throughput EWMA only when segment
+                // boundaries kept the wave close to a flat sharded pass
+                // (tasks within 2× the plan's shards): a
+                // many-small-segments wave is per-task launch-overhead
+                // dominated by construction, and folding its bytes/s
+                // into the model would drag the derived host→pool knee
+                // away from what *flat* passes actually achieve — the
+                // same skew rule the unobserved fused host arm below
+                // applies. Per-worker busy ratios stay meaningful
+                // either way, so the shard-weight feedback is always
+                // recorded; health evidence rides on observe_pool, so
+                // the launch-overhead arm feeds health explicitly.
+                if out.shards <= 2 * plan.shards.len() {
+                    sched.observe_pool(op, T::DTYPE, data.len(), &out);
+                } else {
+                    sched.observe_busy(&out.per_worker_busy_s);
+                    sched.observe_fleet_liveness(
+                        &out.dead_workers.iter().map(|&d| !d).collect::<Vec<bool>>(),
+                    );
+                }
+                return Ok((
+                    values,
+                    SegExec {
+                        fleet: true,
+                        devices: pool.num_devices(),
+                        shards: out.shards,
+                        steals: out.steals,
+                        modeled_wall_s: out.modeled_wall_s,
+                    },
+                ));
+            }
+            // Total fleet failure: record the deaths and degrade to
+            // the per-segment host ladder below.
+            Err(e) => {
+                crate::telemetry::warn("engine.fleet.fallback");
+                sched.observe_fleet_liveness(&pool.live_workers());
+                let mut f = trace.span("exec.fleet_fallback");
+                f.attr_str("error", e.to_string());
+            }
         }
-        return Ok((
-            values,
-            SegExec {
-                fleet: true,
-                devices: pool.num_devices(),
-                shards: out.shards,
-                steals: out.steals,
-                modeled_wall_s: out.modeled_wall_s,
-            },
-        ));
     }
 
     // Host ladder, per segment. No segment can sit at/past the pool
@@ -671,6 +710,41 @@ mod tests {
             let r = e.reduce_segments(&data, &offsets).op(op).run().unwrap();
             assert_eq!(r.value, vec![i32::identity(op); 3], "{op}");
         }
+    }
+
+    #[test]
+    fn dead_fleet_degrades_to_host_and_updates_health() {
+        use crate::reduce::op::Dtype;
+        let e = Engine::builder()
+            .host_workers(4)
+            .chaos_spec("TeslaC2075*2:die@0")
+            .unwrap()
+            .pool_cutoff(Some(1 << 12))
+            .build()
+            .unwrap();
+        let data = Rng::new(5).i32_vec(1 << 14, -500, 500);
+        // Before any evidence the scheduler still picks the fleet.
+        assert!(matches!(
+            e.scheduler().decide(Op::Sum, Dtype::I32, data.len(), false),
+            Decision::Sharded { .. }
+        ));
+        // Every device dies on its first launch: the pass fails
+        // outright, the engine degrades to the host, and the answer is
+        // still exact.
+        let r = e.reduce(&data).op(Op::Sum).run().unwrap();
+        assert_eq!(r.value, scalar::reduce(&data, Op::Sum));
+        assert_eq!(r.path, ExecPath::Host, "dead fleet must degrade to host");
+        // The health tracker learned; the fleet rung is gone now.
+        assert_eq!(e.scheduler().healthy_devices(), 0);
+        assert!(matches!(
+            e.scheduler().decide(Op::Sum, Dtype::I32, data.len(), false),
+            Decision::Threaded { .. }
+        ));
+        assert_eq!(e.scheduler().fleet_events().len(), 2);
+        // Subsequent requests go straight to the host, no fleet retry.
+        let r = e.reduce(&data).op(Op::Min).run().unwrap();
+        assert_eq!(r.value, scalar::reduce(&data, Op::Min));
+        assert_eq!(r.path, ExecPath::Host);
     }
 
     #[test]

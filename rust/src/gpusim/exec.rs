@@ -3,6 +3,7 @@
 
 use anyhow::{bail, Context, Result};
 
+use super::fault::{FaultError, FaultEvent, FaultInjector};
 use super::ir::Program;
 use super::machine::DeviceConfig;
 use super::timing::{self, BlockRecord};
@@ -29,16 +30,22 @@ pub struct Gpu {
     // Reused across blocks (§Perf): warp states and shared memory.
     warp_pool: Vec<Warp>,
     smem_scratch: Vec<f64>,
+    /// Fault stream seeded from `cfg.fault`; None when the plan is
+    /// empty, so the fault-free hotpath pays one branch per launch.
+    fault: Option<FaultInjector>,
 }
 
 impl Gpu {
     pub fn new(cfg: DeviceConfig) -> Self {
+        let fault =
+            (!cfg.fault.is_none()).then(|| FaultInjector::new(cfg.fault.clone()));
         Gpu {
             cfg,
             buffers: Vec::new(),
             max_issues_per_block: 1 << 34,
             warp_pool: Vec::new(),
             smem_scratch: Vec::new(),
+            fault,
         }
     }
 
@@ -80,6 +87,21 @@ impl Gpu {
     /// Functional semantics are exact (tested against host oracles);
     /// timing is transaction-level modeled (see [`super::timing`]).
     pub fn launch(&mut self, program: &Program, lc: LaunchConfig) -> Result<KernelStats> {
+        // Consult the fault plane first: a dead device rejects even
+        // invalid launches (there is nobody home to validate them).
+        let mut slow_factor = 1.0;
+        if let Some(inj) = self.fault.as_mut() {
+            let device = self.cfg.name;
+            match inj.next_event() {
+                FaultEvent::Ok => {}
+                FaultEvent::Slow(f) => slow_factor = f,
+                FaultEvent::Transient => {
+                    return Err(FaultError::Transient { device }.into());
+                }
+                FaultEvent::Dead => return Err(FaultError::Dead { device }.into()),
+                FaultEvent::Stuck => return Err(FaultError::Stuck { device }.into()),
+            }
+        }
         program.validate()?;
         if lc.block == 0 || lc.grid == 0 {
             bail!("launch with empty grid/block");
@@ -110,7 +132,14 @@ impl Gpu {
         // Useful bytes = stage input: by convention buffer 0 holds the
         // kernel's input data; the harness overrides when needed.
         let useful = self.buffers.first().map_or(0, |b| b.len() as u64 * 4);
-        Ok(timing::derive(&self.cfg, &program.name, lc.grid, lc.block, &records, useful))
+        let mut stats =
+            timing::derive(&self.cfg, &program.name, lc.grid, lc.block, &records, useful);
+        if slow_factor > 1.0 {
+            stats.time_s *= slow_factor;
+            stats.compute_s *= slow_factor;
+            stats.mem_s *= slow_factor;
+        }
+        Ok(stats)
     }
 
     fn run_block(&mut self, program: &Program, lc: LaunchConfig, bid: u32) -> Result<BlockRecord> {
@@ -324,6 +353,39 @@ mod tests {
         let p = doubling_program();
         // 64 threads write indices 0..63 into a 4-element buffer.
         assert!(gpu.launch(&p, LaunchConfig { grid: 1, block: 64 }).is_err());
+    }
+
+    #[test]
+    fn fault_plan_kills_slows_and_passes_launches() {
+        use crate::gpusim::fault::{FaultError, FaultPlan};
+        // Death after 2 launches: the third launch errors with the
+        // typed Dead fault, downcastable through anyhow.
+        let mut cfg = DeviceConfig::g80();
+        cfg.fault = FaultPlan::parse("die@2").unwrap();
+        let mut gpu = Gpu::new(cfg);
+        let _out = gpu.alloc(64);
+        let lc = LaunchConfig { grid: 1, block: 64 };
+        let p = doubling_program();
+        assert!(gpu.launch(&p, lc).is_ok());
+        assert!(gpu.launch(&p, lc).is_ok());
+        let err = gpu.launch(&p, lc).unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<FaultError>(),
+            Some(FaultError::Dead { device: "G80" })
+        ));
+        // Always-slow: results stay exact, modeled time scales.
+        let mut cfg = DeviceConfig::g80();
+        cfg.fault = FaultPlan::parse("slow=10x@1.0").unwrap();
+        let mut slow = Gpu::new(cfg);
+        let mut plain = Gpu::new(DeviceConfig::g80());
+        let _ = slow.alloc(64);
+        let _ = plain.alloc(64);
+        let s = slow.launch(&p, lc).unwrap();
+        let base = plain.launch(&p, lc).unwrap();
+        assert!((s.time_s / base.time_s - 10.0).abs() < 1e-6, "{} vs {}", s.time_s, base.time_s);
+        assert_eq!(slow.read(BufId(0)), plain.read(BufId(0)), "slow faults never corrupt data");
+        // The empty plan attaches no injector at all.
+        assert!(Gpu::new(DeviceConfig::g80()).fault.is_none());
     }
 
     #[test]

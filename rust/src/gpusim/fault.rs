@@ -1,0 +1,450 @@
+//! `fault` — the deterministic fault-injection plane.
+//!
+//! Production fleets have devices that fail, stall and slow down; the
+//! simulator models that the same way it models bank conflicts:
+//! deterministically, from a seed, so every chaos run is replayable.
+//! A [`FaultPlan`] rides on [`super::DeviceConfig`] and seeds one
+//! [`FaultInjector`] per device; [`super::Gpu::launch`] consults the
+//! injector once per launch (a single branch when no plan is attached,
+//! so the fault-free hotpath pays nothing measurable).
+//!
+//! The taxonomy (DESIGN.md §12):
+//!
+//! * **transient launch failure** (`fail@P`) — the launch errors with
+//!   [`FaultError::Transient`]; a retry may succeed. Models ECC
+//!   scrubbing hiccups and driver-level launch rejections.
+//! * **permanent death** (`die@L`) — after `L` launches the device
+//!   returns [`FaultError::Dead`] forever. Models a fallen-off-the-bus
+//!   card; the pool retires the worker and re-plans around it.
+//! * **latency spike** (`slow=Fx@P`) — the launch *succeeds* but its
+//!   modeled time is multiplied by `F`. Models thermal throttling and
+//!   contention; costs latency, never correctness.
+//! * **stuck launch** (`stuck@P`) — the launch stalls for a bounded
+//!   watchdog interval and then errors with [`FaultError::Stuck`]
+//!   (retryable, like a transient, but weighted harder by health
+//!   tracking). Never an unbounded hang: dispatchers must keep their
+//!   receive timeouts.
+//!
+//! Chaos specs bundle a fleet with a plan:
+//! `TeslaC2075*4:die@3,slow=10x@0.01,seed=7` — everything left of the
+//! first `:` is a fleet spec (parsed by the engine), the clauses right
+//! of it parse via [`FaultPlan::parse`].
+
+use anyhow::{bail, Result};
+
+/// Deterministic per-device fault schedule. `FaultPlan::none()` (the
+/// default on every preset) disables the plane entirely.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    /// Base RNG seed; each device derives its own stream via
+    /// [`FaultPlan::for_device`].
+    pub seed: u64,
+    /// Probability a launch fails transiently.
+    pub fail_rate: f64,
+    /// Permanent death after this many launches (None = immortal).
+    pub die_after: Option<u64>,
+    /// Restrict `die_after` to one device index (`die@L#D`); `None`
+    /// kills every device in the fleet at the threshold. Lets a chaos
+    /// run lose exactly one of four devices mid-serve.
+    pub die_device: Option<usize>,
+    /// Probability a launch hits a latency spike.
+    pub slow_rate: f64,
+    /// Modeled-time multiplier applied on a spike.
+    pub slow_factor: f64,
+    /// Probability a launch sticks until the watchdog kills it.
+    pub stuck_rate: f64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan::none()
+    }
+}
+
+impl FaultPlan {
+    /// The empty plan: no faults, no injector, no overhead.
+    pub fn none() -> FaultPlan {
+        FaultPlan {
+            seed: 0,
+            fail_rate: 0.0,
+            die_after: None,
+            die_device: None,
+            slow_rate: 0.0,
+            slow_factor: 1.0,
+            stuck_rate: 0.0,
+        }
+    }
+
+    /// Whether this plan injects anything at all.
+    pub fn is_none(&self) -> bool {
+        self.fail_rate == 0.0
+            && self.die_after.is_none()
+            && self.slow_rate == 0.0
+            && self.stuck_rate == 0.0
+    }
+
+    /// The same plan with a per-device seed, so devices draw
+    /// independent fault streams from one spec. A `die@L#D` death
+    /// targeted at another device is dropped from this device's plan.
+    pub fn for_device(&self, device: usize) -> FaultPlan {
+        let mut plan = self.clone();
+        plan.seed = splitmix64(self.seed ^ (device as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        if self.die_device.is_some_and(|d| d != device) {
+            plan.die_after = None;
+        }
+        plan
+    }
+
+    /// Parse the clause list of a chaos spec: comma-separated
+    /// `fail@P`, `die@L` (optionally `die@L#D` to kill only device
+    /// `D`), `slow=Fx@P`, `stuck@P`, `seed=S`.
+    ///
+    /// ```
+    /// use parred::gpusim::FaultPlan;
+    /// let p = FaultPlan::parse("die@3,slow=10x@0.01,seed=7").unwrap();
+    /// assert_eq!(p.die_after, Some(3));
+    /// assert_eq!(p.slow_factor, 10.0);
+    /// assert_eq!(p.seed, 7);
+    /// ```
+    pub fn parse(clauses: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::none();
+        for clause in clauses.split(',').map(str::trim).filter(|c| !c.is_empty()) {
+            if let Some(rest) = clause.strip_prefix("fail@") {
+                plan.fail_rate = parse_prob(rest, clause)?;
+            } else if let Some(rest) = clause.strip_prefix("die@") {
+                let (launches, device) = match rest.split_once('#') {
+                    Some((l, d)) => (
+                        l,
+                        Some(d.parse::<usize>().map_err(|_| {
+                            anyhow::anyhow!("bad device index in {clause:?}")
+                        })?),
+                    ),
+                    None => (rest, None),
+                };
+                plan.die_after = Some(
+                    launches
+                        .parse::<u64>()
+                        .map_err(|_| anyhow::anyhow!("bad launch count in {clause:?}"))?,
+                );
+                plan.die_device = device;
+            } else if let Some(rest) = clause.strip_prefix("slow=") {
+                let Some((factor, prob)) = rest.split_once("x@") else {
+                    bail!("expected slow=Fx@P, got {clause:?}");
+                };
+                plan.slow_factor = factor
+                    .parse::<f64>()
+                    .map_err(|_| anyhow::anyhow!("bad slow factor in {clause:?}"))?;
+                if !(plan.slow_factor >= 1.0) || !plan.slow_factor.is_finite() {
+                    bail!("slow factor must be a finite value >= 1, got {clause:?}");
+                }
+                plan.slow_rate = parse_prob(prob, clause)?;
+            } else if let Some(rest) = clause.strip_prefix("stuck@") {
+                plan.stuck_rate = parse_prob(rest, clause)?;
+            } else if let Some(rest) = clause.strip_prefix("seed=") {
+                plan.seed = rest
+                    .parse::<u64>()
+                    .map_err(|_| anyhow::anyhow!("bad seed in {clause:?}"))?;
+            } else {
+                bail!(
+                    "unknown fault clause {clause:?} (expected fail@P, die@L, slow=Fx@P, stuck@P or seed=S)"
+                );
+            }
+        }
+        plan.validate()?;
+        Ok(plan)
+    }
+
+    /// Sanity-check rates and factors.
+    pub fn validate(&self) -> Result<()> {
+        for (name, rate) in
+            [("fail", self.fail_rate), ("slow", self.slow_rate), ("stuck", self.stuck_rate)]
+        {
+            anyhow::ensure!(
+                (0.0..=1.0).contains(&rate) && rate.is_finite(),
+                "{name} rate must be a probability in [0, 1], got {rate}"
+            );
+        }
+        anyhow::ensure!(
+            self.slow_factor.is_finite() && self.slow_factor >= 1.0,
+            "slow factor must be >= 1, got {}",
+            self.slow_factor
+        );
+        Ok(())
+    }
+}
+
+/// Split a chaos spec into its fleet half and its parsed plan:
+/// everything left of the first `:` is a fleet spec for the engine,
+/// everything right of it a clause list. `"TeslaC2075*4"` alone is a
+/// fleet with the empty plan.
+pub fn split_chaos_spec(spec: &str) -> Result<(String, FaultPlan)> {
+    match spec.split_once(':') {
+        Some((fleet, clauses)) => Ok((fleet.trim().to_string(), FaultPlan::parse(clauses)?)),
+        None => Ok((spec.trim().to_string(), FaultPlan::none())),
+    }
+}
+
+fn parse_prob(text: &str, clause: &str) -> Result<f64> {
+    let p = text
+        .parse::<f64>()
+        .map_err(|_| anyhow::anyhow!("bad probability in {clause:?}"))?;
+    if !(0.0..=1.0).contains(&p) || !p.is_finite() {
+        bail!("probability out of [0, 1] in {clause:?}");
+    }
+    Ok(p)
+}
+
+/// What the injector decided for one launch.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultEvent {
+    /// Launch proceeds normally.
+    Ok,
+    /// Launch fails transiently (retry may succeed).
+    Transient,
+    /// Device is permanently dead.
+    Dead,
+    /// Launch succeeds with modeled time multiplied by the factor.
+    Slow(f64),
+    /// Launch stalls until the watchdog kills it (retryable).
+    Stuck,
+}
+
+/// Typed launch-failure error, downcastable through `anyhow` so the
+/// pool can tell a dead device from a retryable blip.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultError {
+    /// Retryable launch failure on this device.
+    Transient { device: &'static str },
+    /// The device is gone; retire its worker.
+    Dead { device: &'static str },
+    /// Watchdog killed a stuck launch; retryable but a strong health
+    /// signal.
+    Stuck { device: &'static str },
+}
+
+impl FaultError {
+    /// Whether retrying the same work elsewhere (or even here) can
+    /// succeed.
+    pub fn is_retryable(&self) -> bool {
+        !matches!(self, FaultError::Dead { .. })
+    }
+
+    pub fn device(&self) -> &'static str {
+        match self {
+            FaultError::Transient { device }
+            | FaultError::Dead { device }
+            | FaultError::Stuck { device } => device,
+        }
+    }
+}
+
+impl std::fmt::Display for FaultError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FaultError::Transient { device } => {
+                write!(f, "transient launch failure on {device}")
+            }
+            FaultError::Dead { device } => write!(f, "device {device} is dead"),
+            FaultError::Stuck { device } => {
+                write!(f, "watchdog killed a stuck launch on {device}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for FaultError {}
+
+/// Per-device fault stream: an xorshift64* RNG walked once per launch.
+/// Deterministic — the same plan and device index replay the same
+/// faults in the same order.
+#[derive(Debug, Clone)]
+pub struct FaultInjector {
+    plan: FaultPlan,
+    state: u64,
+    launches: u64,
+    dead: bool,
+}
+
+impl FaultInjector {
+    pub fn new(plan: FaultPlan) -> FaultInjector {
+        // A zero xorshift state never leaves zero.
+        let state = splitmix64(plan.seed).max(1);
+        FaultInjector { plan, state, launches: 0, dead: false }
+    }
+
+    /// Launches observed so far (fault decisions consumed).
+    pub fn launches(&self) -> u64 {
+        self.launches
+    }
+
+    /// Whether the device has died permanently.
+    pub fn is_dead(&self) -> bool {
+        self.dead
+    }
+
+    fn next_u64(&mut self) -> u64 {
+        // xorshift64*: fast, full-period, good enough for fault dice.
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Decide the fate of the next launch. Death is checked first (a
+    /// dead device stays dead), then stuck, transient, slow — each an
+    /// independent draw so rates compose predictably.
+    pub fn next_event(&mut self) -> FaultEvent {
+        self.launches += 1;
+        if self.dead {
+            return FaultEvent::Dead;
+        }
+        if let Some(after) = self.plan.die_after {
+            if self.launches > after {
+                self.dead = true;
+                return FaultEvent::Dead;
+            }
+        }
+        if self.plan.stuck_rate > 0.0 && self.next_f64() < self.plan.stuck_rate {
+            return FaultEvent::Stuck;
+        }
+        if self.plan.fail_rate > 0.0 && self.next_f64() < self.plan.fail_rate {
+            return FaultEvent::Transient;
+        }
+        if self.plan.slow_rate > 0.0 && self.next_f64() < self.plan.slow_rate {
+            return FaultEvent::Slow(self.plan.slow_factor);
+        }
+        FaultEvent::Ok
+    }
+}
+
+fn splitmix64(seed: u64) -> u64 {
+    let mut z = seed.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_plan_is_none_and_valid() {
+        let p = FaultPlan::none();
+        assert!(p.is_none());
+        p.validate().unwrap();
+        assert_eq!(p, FaultPlan::default());
+    }
+
+    #[test]
+    fn parse_full_clause_list() {
+        let p = FaultPlan::parse("fail@0.05,die@3,slow=10x@0.01,stuck@0.001,seed=42").unwrap();
+        assert_eq!(p.fail_rate, 0.05);
+        assert_eq!(p.die_after, Some(3));
+        assert_eq!(p.slow_factor, 10.0);
+        assert_eq!(p.slow_rate, 0.01);
+        assert_eq!(p.stuck_rate, 0.001);
+        assert_eq!(p.seed, 42);
+        assert!(!p.is_none());
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(FaultPlan::parse("explode@0.5").is_err());
+        assert!(FaultPlan::parse("fail@1.5").is_err());
+        assert!(FaultPlan::parse("fail@-0.1").is_err());
+        assert!(FaultPlan::parse("slow=0.5x@0.1").is_err(), "slow factor < 1");
+        assert!(FaultPlan::parse("slow=10@0.1").is_err(), "missing the x");
+        assert!(FaultPlan::parse("die@many").is_err());
+        assert!(FaultPlan::parse("seed=abc").is_err());
+        // Empty clause list parses to the empty plan.
+        assert!(FaultPlan::parse("").unwrap().is_none());
+    }
+
+    #[test]
+    fn chaos_spec_splits_on_first_colon() {
+        let (fleet, plan) = split_chaos_spec("TeslaC2075*4:die@3,slow=10x@0.01").unwrap();
+        assert_eq!(fleet, "TeslaC2075*4");
+        assert_eq!(plan.die_after, Some(3));
+        let (fleet, plan) = split_chaos_spec("G80,TeslaC2075").unwrap();
+        assert_eq!(fleet, "G80,TeslaC2075");
+        assert!(plan.is_none());
+        assert!(split_chaos_spec("4:bogus@1").is_err());
+    }
+
+    #[test]
+    fn targeted_death_only_kills_its_device() {
+        let p = FaultPlan::parse("die@3#2,seed=1").unwrap();
+        assert_eq!(p.die_after, Some(3));
+        assert_eq!(p.die_device, Some(2));
+        // Device 2 dies at the threshold; every other device never
+        // carries the death clause at all.
+        assert_eq!(p.for_device(2).die_after, Some(3));
+        assert_eq!(p.for_device(0).die_after, None);
+        assert_eq!(p.for_device(3).die_after, None);
+        // An untargeted death still kills everyone.
+        let all = FaultPlan::parse("die@3").unwrap();
+        assert_eq!(all.for_device(0).die_after, Some(3));
+        assert_eq!(all.for_device(3).die_after, Some(3));
+        assert!(FaultPlan::parse("die@3#two").is_err());
+    }
+
+    #[test]
+    fn injector_is_deterministic_and_per_device_independent() {
+        let plan = FaultPlan::parse("fail@0.3,seed=9").unwrap();
+        let events = |p: &FaultPlan| {
+            let mut inj = FaultInjector::new(p.clone());
+            (0..64).map(|_| inj.next_event()).collect::<Vec<_>>()
+        };
+        let d0 = plan.for_device(0);
+        assert_eq!(events(&d0), events(&d0), "same seed, same stream");
+        assert_ne!(events(&d0), events(&plan.for_device(1)), "devices draw distinct streams");
+    }
+
+    #[test]
+    fn death_is_permanent_after_the_threshold() {
+        let mut inj = FaultInjector::new(FaultPlan::parse("die@3").unwrap());
+        for _ in 0..3 {
+            assert_eq!(inj.next_event(), FaultEvent::Ok);
+        }
+        for _ in 0..8 {
+            assert_eq!(inj.next_event(), FaultEvent::Dead);
+        }
+        assert!(inj.is_dead());
+    }
+
+    #[test]
+    fn rates_hit_in_expected_proportion() {
+        let mut inj = FaultInjector::new(FaultPlan::parse("fail@0.25,seed=5").unwrap());
+        let trials = 10_000;
+        let fails =
+            (0..trials).filter(|_| inj.next_event() == FaultEvent::Transient).count();
+        let rate = fails as f64 / trials as f64;
+        assert!((rate - 0.25).abs() < 0.03, "observed transient rate {rate}");
+    }
+
+    #[test]
+    fn slow_events_carry_the_factor() {
+        let mut inj = FaultInjector::new(FaultPlan::parse("slow=8x@1.0").unwrap());
+        assert_eq!(inj.next_event(), FaultEvent::Slow(8.0));
+    }
+
+    #[test]
+    fn fault_error_taxonomy() {
+        assert!(FaultError::Transient { device: "G80" }.is_retryable());
+        assert!(FaultError::Stuck { device: "G80" }.is_retryable());
+        assert!(!FaultError::Dead { device: "G80" }.is_retryable());
+        assert_eq!(FaultError::Dead { device: "G80" }.device(), "G80");
+        let msg = format!("{}", FaultError::Stuck { device: "AMD-GCN" });
+        assert!(msg.contains("stuck") && msg.contains("AMD-GCN"), "{msg}");
+        // Downcast through anyhow — the path the pool dispatcher uses.
+        let err: anyhow::Error = FaultError::Dead { device: "G80" }.into();
+        assert_eq!(err.downcast_ref::<FaultError>(), Some(&FaultError::Dead { device: "G80" }));
+    }
+}

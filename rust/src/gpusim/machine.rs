@@ -53,6 +53,9 @@ pub struct DeviceConfig {
     /// Waves (warps) per SM that a persistent-threads launch keeps
     /// resident "without switching" — the paper's GS policy (§2.3).
     pub persistent_waves_per_sm: u32,
+    /// Deterministic fault schedule ([`super::fault`]); the empty plan
+    /// (every preset's default) disables injection entirely.
+    pub fault: super::fault::FaultPlan,
 }
 
 impl DeviceConfig {
@@ -78,6 +81,7 @@ impl DeviceConfig {
             bw_efficiency: 0.75,
             load_service_cycles: 200,
             persistent_waves_per_sm: 8,
+            fault: super::fault::FaultPlan::none(),
         }
     }
 
@@ -104,6 +108,7 @@ impl DeviceConfig {
             bw_efficiency: 0.80,
             load_service_cycles: 200,
             persistent_waves_per_sm: 32,
+            fault: super::fault::FaultPlan::none(),
         }
     }
 
@@ -132,6 +137,7 @@ impl DeviceConfig {
             bw_efficiency: 0.80,
             load_service_cycles: 150,
             persistent_waves_per_sm: 6,
+            fault: super::fault::FaultPlan::none(),
         }
     }
 
@@ -305,6 +311,9 @@ impl DeviceConfig {
             bw_efficiency: f("bw_efficiency", base.bw_efficiency)?,
             load_service_cycles: u("load_service_cycles", base.load_service_cycles)?,
             persistent_waves_per_sm: u("persistent_waves_per_sm", base.persistent_waves_per_sm)?,
+            // Fault schedules come from chaos specs, not device files:
+            // a device model describes hardware, not a test scenario.
+            fault: super::fault::FaultPlan::none(),
         };
         cfg.validate()?;
         Ok(cfg)
@@ -319,6 +328,7 @@ impl DeviceConfig {
         anyhow::ensure!(self.core_clock_ghz > 0.0 && self.mem_bandwidth_gbps > 0.0, "clocks/bandwidth must be positive");
         anyhow::ensure!(self.bw_efficiency > 0.0 && self.bw_efficiency <= 1.0, "bw_efficiency in (0, 1]");
         anyhow::ensure!(self.persistent_waves_per_sm >= 1, "need at least one resident wave");
+        self.fault.validate()?;
         Ok(())
     }
 }

@@ -20,6 +20,7 @@
 
 pub mod dram;
 pub mod exec;
+pub mod fault;
 pub mod ir;
 pub mod machine;
 pub mod smem;
@@ -28,6 +29,7 @@ pub mod trace;
 pub mod warp;
 
 pub use exec::{BufId, Gpu, LaunchConfig};
+pub use fault::{split_chaos_spec, FaultError, FaultEvent, FaultInjector, FaultPlan};
 pub use ir::{CombOp, Instr, Program, Rval, Sreg};
 pub use machine::DeviceConfig;
 pub use trace::{KernelStats, RunStats};

@@ -1,0 +1,247 @@
+//! Closed-loop chaos experiment: drive the serving stack while a
+//! deterministic fault plan ([`crate::gpusim::fault`]) degrades the
+//! fleet — by default killing one of four devices mid-run — and
+//! measure what the front door promises: availability of in-deadline
+//! requests, oracle-correct results, and tail latency under faults.
+//!
+//! Consumed by `cargo bench --bench chaos` (which writes
+//! `BENCH_chaos.json` for CI) and by the fast inline test below.
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::coordinator::service::{PoolServeConfig, Service, ServiceConfig};
+use crate::coordinator::{ServeError, SubmitOpts};
+use crate::gpusim::FaultPlan;
+use crate::reduce::op::Op;
+use crate::runtime::literal::HostVec;
+use crate::util::rng::Rng;
+use crate::util::stats::Histogram;
+
+/// An empty (but valid) artifact catalog: every request routes by the
+/// scheduler's ladder alone, so payloads past the pool cutoff shard
+/// across the (faulty) fleet.
+fn empty_artifacts() -> String {
+    concat!(env!("CARGO_MANIFEST_DIR"), "/tests/fixtures/empty_artifacts").to_string()
+}
+
+/// Process-wide warning counter for `event` (used to delta over a run).
+fn warned(event: &str) -> u64 {
+    crate::telemetry::warning_count(event)
+}
+
+/// Chaos-run configuration.
+#[derive(Debug, Clone)]
+pub struct ChaosConfig {
+    pub requests: usize,
+    /// Payload elements per request; must exceed `cutoff` so the
+    /// fleet (where the faults live) does the work.
+    pub payload_n: usize,
+    /// Pool crossover pin: payloads past this shard across the fleet.
+    pub cutoff: usize,
+    pub seed: u64,
+    /// Fault clause list (`fail@P,die@L#D,slow=Fx@P,stuck@P,seed=S`).
+    /// The default kills device 2 of 4 permanently mid-run.
+    pub chaos: String,
+    /// Per-request deadline; expired requests answer a typed timeout.
+    pub deadline: Duration,
+    /// Mean inter-arrival gap (exponential), microseconds.
+    pub mean_gap_us: f64,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> Self {
+        ChaosConfig {
+            requests: 200,
+            payload_n: 1 << 16,
+            cutoff: 1 << 14,
+            seed: 42,
+            chaos: "die@8#2,seed=7".into(),
+            deadline: Duration::from_millis(2_000),
+            mean_gap_us: 50.0,
+        }
+    }
+}
+
+/// What the run measured. Event counts are deltas over the run (the
+/// process-wide warning counters may carry prior tests' events).
+#[derive(Debug, Clone)]
+pub struct ChaosOutcome {
+    pub requests: usize,
+    /// Responses that arrived in-deadline with an `Ok` value.
+    pub completed: usize,
+    /// Typed deadline expiries (admission or execution side).
+    pub timeouts: usize,
+    /// Shed at admission (gate at its limit through every retry).
+    pub shed: usize,
+    /// `ServeError::Failed` responses (should stay 0: faults retry).
+    pub failed: usize,
+    /// Completed responses whose value missed the host oracle.
+    pub oracle_failures: usize,
+    /// completed / requests.
+    pub availability: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    /// `sched.device.dead` delta: devices the health tracker declared
+    /// permanently gone.
+    pub device_deaths: u64,
+    /// `sched.device.quarantined` delta.
+    pub quarantines: u64,
+    /// `pool.task.retry` delta: shards re-executed on another worker
+    /// after a device fault.
+    pub task_retries: u64,
+    /// `serve.deadline.expired` delta.
+    pub deadline_expiries: u64,
+}
+
+impl ChaosOutcome {
+    /// Human-readable run summary.
+    pub fn report(&self) -> String {
+        format!(
+            "=== chaos: {} requests, availability {:.2}% ===\n\
+             completed={} timeouts={} shed={} failed={} oracle_failures={}\n\
+             latency p50={:.2} ms p99={:.2} ms\n\
+             device_deaths={} quarantines={} task_retries={} deadline_expiries={}\n",
+            self.requests,
+            100.0 * self.availability,
+            self.completed,
+            self.timeouts,
+            self.shed,
+            self.failed,
+            self.oracle_failures,
+            self.p50_ms,
+            self.p99_ms,
+            self.device_deaths,
+            self.quarantines,
+            self.task_retries,
+            self.deadline_expiries,
+        )
+    }
+}
+
+/// Run the closed loop: submit `cfg.requests` reductions with
+/// deadlines against a four-device fleet executing `cfg.chaos`, await
+/// every response, and check each completed value against a host
+/// oracle computed in f64.
+pub fn run(cfg: &ChaosConfig) -> Result<ChaosOutcome> {
+    let deaths0 = warned("sched.device.dead");
+    let quar0 = warned("sched.device.quarantined");
+    let retry0 = warned("pool.task.retry");
+    let expiry0 = warned("serve.deadline.expired");
+
+    let svc = Service::start(ServiceConfig {
+        artifacts_dir: empty_artifacts(),
+        batch_window: Duration::from_micros(200),
+        max_queue: 1_000,
+        workers: 2,
+        warmup: false,
+        pool: Some(PoolServeConfig {
+            cutoff: Some(cfg.cutoff),
+            fault: FaultPlan::parse(&cfg.chaos)?,
+            ..PoolServeConfig::default()
+        }),
+        ..ServiceConfig::default()
+    })?;
+
+    let mut rng = Rng::new(cfg.seed);
+    let opts = SubmitOpts { deadline: Some(cfg.deadline), retries: 2 };
+    let mut pending = Vec::with_capacity(cfg.requests);
+    let mut shed = 0usize;
+    for i in 0..cfg.requests {
+        // 80% sum / 20% max, like the serve trace driver.
+        let op = if rng.below(5) == 0 { Op::Max } else { Op::Sum };
+        let data = rng.f32_vec(cfg.payload_n, -1.0, 1.0);
+        let want: f64 = match op {
+            Op::Sum => data.iter().map(|&x| x as f64).sum(),
+            Op::Max => data.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64,
+            _ => unreachable!(),
+        };
+        match svc.submit_with(op, HostVec::F32(data), opts.clone()) {
+            Ok(rx) => pending.push((rx, want)),
+            Err(ServeError::Shed { .. }) | Err(ServeError::Timeout { .. }) => shed += 1,
+            Err(e) => return Err(e.into()),
+        }
+        let gap = rng.exponential(cfg.mean_gap_us) as u64;
+        if gap > 0 && i + 1 < cfg.requests {
+            std::thread::sleep(Duration::from_micros(gap.min(5_000)));
+        }
+    }
+
+    let mut completed = 0usize;
+    let mut timeouts = 0usize;
+    let mut failed = 0usize;
+    let mut oracle_failures = 0usize;
+    let mut lat = Histogram::new();
+    // The response channel itself is bounded by deadline + execution;
+    // a generous wall here only guards against a hung executor.
+    let wall = cfg.deadline + Duration::from_secs(120);
+    for (rx, want) in pending {
+        match rx.recv_timeout(wall) {
+            Ok(resp) => match resp.value {
+                Ok(got) => {
+                    completed += 1;
+                    lat.record(resp.latency_s);
+                    let tol = 1e-3 * want.abs().max(1.0);
+                    if (got.as_f64() - want).abs() > tol {
+                        oracle_failures += 1;
+                    }
+                }
+                Err(ServeError::Timeout { .. }) => timeouts += 1,
+                Err(ServeError::Shed { .. }) => shed += 1,
+                Err(ServeError::Failed(_)) => failed += 1,
+            },
+            Err(_) => failed += 1,
+        }
+    }
+    // Shut down before reading the deltas: the executor's drain path
+    // can still raise retry/quarantine events.
+    let _ = svc.shutdown();
+
+    Ok(ChaosOutcome {
+        requests: cfg.requests,
+        completed,
+        timeouts,
+        shed,
+        failed,
+        oracle_failures,
+        availability: completed as f64 / cfg.requests.max(1) as f64,
+        p50_ms: lat.percentile(50.0) * 1e3,
+        p99_ms: lat.percentile(99.0) * 1e3,
+        device_deaths: warned("sched.device.dead").saturating_sub(deaths0),
+        quarantines: warned("sched.device.quarantined").saturating_sub(quar0),
+        task_retries: warned("pool.task.retry").saturating_sub(retry0),
+        deadline_expiries: warned("serve.deadline.expired").saturating_sub(expiry0),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The acceptance loop, scaled down to stay fast: one of four
+    /// devices dies mid-run and the serve loop still completes ≥ 99%
+    /// of requests with oracle-correct values.
+    #[test]
+    fn one_dead_device_keeps_availability() {
+        let cfg = ChaosConfig {
+            requests: 60,
+            chaos: "die@4#2,seed=7".into(),
+            mean_gap_us: 20.0,
+            ..ChaosConfig::default()
+        };
+        let out = run(&cfg).unwrap();
+        assert!(
+            out.availability >= 0.99,
+            "availability {:.3} under one dead device\n{}",
+            out.availability,
+            out.report()
+        );
+        assert_eq!(out.oracle_failures, 0, "{}", out.report());
+        assert_eq!(out.failed, 0, "{}", out.report());
+        // The death must be observable: the fleet retried shards off
+        // the dead device and the health tracker recorded its loss.
+        assert!(out.device_deaths >= 1, "{}", out.report());
+        assert!(out.task_retries >= 1, "{}", out.report());
+    }
+}

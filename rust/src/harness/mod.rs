@@ -6,6 +6,7 @@
 //! `parred tables` CLI subcommand.
 
 pub mod ablations;
+pub mod chaos;
 pub mod pool_scaling;
 pub mod report;
 pub mod sched_adapt;

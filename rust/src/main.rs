@@ -44,6 +44,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "sched", "adaptive", "sched-snapshot",
         "segments", "by-key",
         "explain", "trace-out", "metrics-out",
+        "chaos", "deadline-ms",
     ];
     let args = Args::parse(argv, &allowed)?;
     // Size the process-wide persistent host runtime before anything
@@ -93,6 +94,7 @@ USAGE: parred <info|tables|sim|reduce|serve> [options]
         [--artifacts DIR] [--pool=1 --pool-devices SPEC [--pool-cutoff N]]
         [--adaptive] [--sched-snapshot PATH]
         [--trace-out PATH] [--metrics-out PATH]
+        [--chaos SPEC] [--deadline-ms N]
         end-to-end serving driver (--pool shards large payloads
         across a fleet of simulated devices)
 
@@ -117,6 +119,16 @@ USAGE: parred <info|tables|sim|reduce|serve> [options]
   by name inside the spec: `MyGPU*2,TeslaC2075`. Without
   --pool-cutoff the scheduler derives the host->fleet crossover
   from its throughput model.
+
+  serve --chaos injects deterministic device faults into the fleet:
+  either clauses alone (`--pool --chaos \"fail@0.05,slow=10x@0.01\"`)
+  or fleet and clauses in one spec (`--chaos \"4:die@40#2\"` = 4x
+  TeslaC2075, device 2 dies permanently after 40 launches; implies
+  --pool). Clauses: fail@P, die@L[#D], slow=Fx@P, stuck@P, seed=S.
+  --deadline-ms N gives every trace request a deadline: expired
+  requests answer a typed timeout (counted in the report) instead
+  of occupying the fleet, and the admission gate sheds with a typed
+  overload error after bounded retry.
 
   serve --adaptive folds observed throughput into the scheduler's
   cutoffs and per-worker busy times into the shard weights;
@@ -483,8 +495,20 @@ fn serve(args: &Args) -> Result<()> {
     use parred::coordinator::service::{
         parse_fleet_spec, PoolServeConfig, ServiceConfig, TraceConfig,
     };
+    use parred::gpusim::FaultPlan;
     let dir = args.get_or("artifacts", "artifacts").to_string();
-    let pool = if truthy(args, "pool") {
+    // `--chaos "FLEET:CLAUSES"` names the fleet and its fault plan in
+    // one spec (overriding --pool-devices and implying --pool);
+    // `--chaos "CLAUSES"` injects into whatever fleet --pool built.
+    let (chaos_fleet, fault) = match args.get("chaos") {
+        Some(spec) if spec.contains(':') => {
+            let (fleet, plan) = parred::gpusim::split_chaos_spec(spec)?;
+            (Some(fleet), plan)
+        }
+        Some(spec) => (None, FaultPlan::parse(spec)?),
+        None => (None, FaultPlan::none()),
+    };
+    let pool = if truthy(args, "pool") || chaos_fleet.is_some() {
         // Custom device models (from `--device-file` JSON) are
         // resolvable by name inside the fleet spec, composing with
         // the presets: `--device-file my_gpu.json --pool-devices
@@ -494,7 +518,8 @@ fn serve(args: &Args) -> Result<()> {
             None => Vec::new(),
         };
         // Count form (`4`) or heterogeneous spec (`G80,TeslaC2075*2`).
-        let devices = parse_fleet_spec(args.get_or("pool-devices", "4"), &custom)?;
+        let spec = chaos_fleet.as_deref().unwrap_or(args.get_or("pool-devices", "4"));
+        let devices = parse_fleet_spec(spec, &custom)?;
         Some(PoolServeConfig {
             devices,
             custom,
@@ -502,8 +527,12 @@ fn serve(args: &Args) -> Result<()> {
             // scheduler derives it from its throughput model.
             cutoff: opt_usize(args, "pool-cutoff", 1 << 20)?,
             tasks_per_device: 2,
+            fault,
         })
     } else {
+        if !fault.is_none() {
+            bail!("--chaos without a fleet: add --pool, or name one (`--chaos \"4:die@40#2\"`)");
+        }
         None
     };
     let cfg = ServiceConfig {
@@ -523,6 +552,8 @@ fn serve(args: &Args) -> Result<()> {
         payload_n: args.get_usize("payload", 65_536)?,
         seed: args.get_usize("seed", 42)? as u64,
         mean_gap_us: 50.0,
+        deadline: opt_usize(args, "deadline-ms", 250)?
+            .map(|ms| std::time::Duration::from_millis(ms as u64)),
     };
     let report = parred::coordinator::service::run_trace(cfg, trace)?;
     println!("{report}");

@@ -41,10 +41,10 @@ use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::gpusim::ir::CombOp;
-use crate::gpusim::{DeviceConfig, Gpu};
+use crate::gpusim::{DeviceConfig, FaultError, Gpu};
 use crate::kernels::drivers;
 use crate::reduce::kahan;
 use crate::reduce::op::{Element, Op};
@@ -122,8 +122,69 @@ struct TaskResult {
     id: usize,
     worker: usize,
     stolen: bool,
-    /// `(partial value, modeled device seconds)` or an error.
-    outcome: std::result::Result<(f64, f64), String>,
+    /// `(partial value, modeled device seconds)` or a typed failure.
+    outcome: std::result::Result<(f64, f64), TaskFailure>,
+}
+
+/// How one task failed — the dispatcher's retry policy keys off this.
+#[derive(Debug, Clone)]
+enum TaskFailure {
+    /// Worth retrying (on another worker): a transient/stuck fault or
+    /// an isolated worker panic. The work itself is fine.
+    Retryable(String),
+    /// The device died permanently; the worker retired itself. The
+    /// task is still fine — re-enqueue it on a survivor.
+    DeviceDead(String),
+    /// Deterministic execution error (bad program, bad range): a retry
+    /// would fail identically, so the pass fails fast.
+    Fatal(String),
+}
+
+impl TaskFailure {
+    fn reason(&self) -> &str {
+        match self {
+            TaskFailure::Retryable(r) | TaskFailure::DeviceDead(r) | TaskFailure::Fatal(r) => r,
+        }
+    }
+}
+
+/// Attempts per task (first run + retries) before a pass gives up.
+pub const MAX_TASK_ATTEMPTS: u32 = 4;
+
+/// Accumulated state of one wave of tasks (internal).
+struct Wave {
+    partials: Vec<f64>,
+    busy: Vec<f64>,
+    steals: u64,
+    reexecuted: usize,
+    faults: Vec<u64>,
+    dead: Vec<bool>,
+}
+
+impl Wave {
+    fn new(op: CombOp, total: usize, workers: usize) -> Wave {
+        Wave {
+            partials: vec![op.identity(); total],
+            busy: vec![0.0; workers],
+            steals: 0,
+            reexecuted: 0,
+            faults: vec![0; workers],
+            dead: vec![false; workers],
+        }
+    }
+
+    fn into_outcome(self, value: f64, shards: usize) -> PoolOutcome {
+        PoolOutcome {
+            value,
+            shards,
+            steals: self.steals,
+            modeled_wall_s: self.busy.iter().cloned().fold(0.0, f64::max),
+            per_worker_busy_s: self.busy,
+            reexecuted: self.reexecuted,
+            faults_per_worker: self.faults,
+            dead_workers: self.dead,
+        }
+    }
 }
 
 /// Result of one pooled reduction.
@@ -140,6 +201,30 @@ pub struct PoolOutcome {
     pub modeled_wall_s: f64,
     /// Modeled busy seconds per worker (by device index).
     pub per_worker_busy_s: Vec<f64>,
+    /// Shards re-executed after a fault or isolated panic (0 on a
+    /// healthy fleet).
+    pub reexecuted: usize,
+    /// Failures attributed to each worker during this pass — the
+    /// health tracker's input ([`crate::sched::health`]).
+    pub faults_per_worker: Vec<u64>,
+    /// Workers that were dead (retired) by the end of this pass.
+    pub dead_workers: Vec<bool>,
+}
+
+impl PoolOutcome {
+    /// The zero-work outcome for an empty pass.
+    fn empty(op: CombOp, workers: usize) -> PoolOutcome {
+        PoolOutcome {
+            value: op.identity(),
+            shards: 0,
+            steals: 0,
+            modeled_wall_s: 0.0,
+            per_worker_busy_s: vec![0.0; workers],
+            reexecuted: 0,
+            faults_per_worker: vec![0; workers],
+            dead_workers: vec![false; workers],
+        }
+    }
 }
 
 /// Lifetime counters of a pool (surfaced via coordinator metrics).
@@ -155,6 +240,10 @@ pub struct DevicePool {
     cfg: PoolConfig,
     queues: Arc<StealQueues<Task>>,
     workers_dead: Arc<AtomicBool>,
+    /// Per-worker retirement flags: set by a worker when its device
+    /// dies permanently. Retired workers' queues are drained by the
+    /// survivors' stealing.
+    retired: Arc<Vec<AtomicBool>>,
     handles: Vec<JoinHandle<()>>,
 }
 
@@ -178,10 +267,13 @@ impl DevicePool {
         }
         let queues: Arc<StealQueues<Task>> = StealQueues::new(cfg.devices.len());
         let workers_dead = Arc::new(AtomicBool::new(false));
+        let retired: Arc<Vec<AtomicBool>> =
+            Arc::new((0..cfg.devices.len()).map(|_| AtomicBool::new(false)).collect());
         let mut handles = Vec::with_capacity(cfg.devices.len());
         for (i, dev) in cfg.devices.iter().enumerate() {
             let queues = queues.clone();
             let dead = workers_dead.clone();
+            let retired = retired.clone();
             let dev = dev.clone();
             let block = cfg.block.min(dev.max_block_threads);
             let unroll = cfg.unroll;
@@ -199,12 +291,19 @@ impl DevicePool {
                         }
                     }
                     let _guard = DeadFlag(dead);
-                    worker_loop(i, dev, block, unroll, pace, trace, queues);
+                    worker_loop(i, dev, block, unroll, pace, trace, queues, retired);
                 })
                 .with_context(|| format!("spawning pool worker {i}"))?;
             handles.push(handle);
         }
-        Ok(DevicePool { cfg, queues, workers_dead, handles })
+        Ok(DevicePool { cfg, queues, workers_dead, retired, handles })
+    }
+
+    /// Which workers are still serving their device (false = retired
+    /// after permanent device death). Healthy-fleet sizing for the
+    /// engine's degradation decision.
+    pub fn live_workers(&self) -> Vec<bool> {
+        self.retired.iter().map(|r| !r.load(Ordering::Relaxed)).collect()
     }
 
     pub fn num_devices(&self) -> usize {
@@ -274,59 +373,150 @@ impl DevicePool {
         }
         let workers = self.num_devices();
         if n == 0 {
-            return Ok(PoolOutcome {
-                value: op.identity(),
-                shards: 0,
-                steals: 0,
-                modeled_wall_s: 0.0,
-                per_worker_busy_s: vec![0.0; workers],
-            });
+            return Ok(PoolOutcome::empty(op, workers));
         }
 
         let mut pass = self.cfg.trace.span("pool.pass");
         pass.attr_u64("tasks", plan.shards.len() as u64);
         pass.attr_u64("devices", workers as u64);
+        let wave = self.execute_wave(payload, op, &plan.shards, &mut pass)?;
+
+        let value = {
+            let _combine = self.cfg.trace.span("pool.combine");
+            combine(op, &wave.partials)
+        };
+        Ok(wave.into_outcome(value, plan.shards.len()))
+    }
+
+    /// Run one wave of shard tasks through the steal queues, with the
+    /// pool's fault policy: task failures are classified by the worker
+    /// ([`TaskFailure`]); retryable ones (transient faults, watchdog
+    /// kills, isolated panics, work orphaned by a device death) are
+    /// re-enqueued onto surviving workers up to [`MAX_TASK_ATTEMPTS`]
+    /// per task; fatal (deterministic) errors fail the pass fast. A
+    /// pass fails only when a task exhausts its attempts, every worker
+    /// is dead, or the fleet stops responding entirely.
+    fn execute_wave(
+        &self,
+        payload: Arc<Vec<f64>>,
+        op: CombOp,
+        shards: &[Shard],
+        pass: &mut crate::telemetry::Span,
+    ) -> Result<Wave> {
+        let workers = self.num_devices();
+        let total = shards.len();
         let parent_span = pass.id();
         let (tx, rx) = mpsc::channel::<TaskResult>();
-        self.queues.push_all(plan.shards.iter().enumerate().map(|(id, &shard)| {
+        self.queues.push_all(shards.iter().enumerate().map(|(id, &shard)| {
             let task =
                 Task { id, data: payload.clone(), shard, op, parent_span, reply: tx.clone() };
             (shard.device, task)
         }));
-        drop(tx);
+        // Deliberately NOT dropped yet: retries need to re-enqueue
+        // tasks carrying live reply senders.
 
-        let mut partials = vec![op.identity(); plan.shards.len()];
-        let mut busy = vec![0.0f64; workers];
-        let mut steals = 0u64;
-        for _ in 0..plan.shards.len() {
-            let r = rx.recv_timeout(Duration::from_secs(300)).map_err(|_| {
-                anyhow!(
-                    "device pool did not respond (workers dead: {})",
-                    self.workers_dead.load(Ordering::Relaxed)
-                )
-            })?;
+        let mut wave = Wave::new(op, total, workers);
+        let mut attempts = vec![1u32; total];
+        let mut alive = self.live_workers();
+        let mut done = 0usize;
+        let deadline = std::time::Instant::now() + Duration::from_secs(300);
+        while done < total {
+            // Poll in 1 s slices so a fleet that dies mid-pass (work
+            // stranded in retired workers' queues) errors out promptly
+            // instead of waiting out the full pass timeout.
+            let r = loop {
+                match rx.recv_timeout(Duration::from_secs(1)) {
+                    Ok(r) => break r,
+                    Err(mpsc::RecvTimeoutError::Timeout) => {
+                        if self.live_workers().iter().all(|&l| !l) {
+                            bail!(
+                                "all pool workers retired with {} of {total} tasks outstanding",
+                                total - done
+                            );
+                        }
+                        if std::time::Instant::now() >= deadline {
+                            bail!(
+                                "device pool did not respond (workers dead: {})",
+                                self.workers_dead.load(Ordering::Relaxed)
+                            );
+                        }
+                    }
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        bail!(
+                            "device pool reply channel closed with {} of {total} tasks \
+                             outstanding",
+                            total - done
+                        );
+                    }
+                }
+            };
             match r.outcome {
                 Ok((value, modeled_s)) => {
-                    partials[r.id] = value;
-                    busy[r.worker] += modeled_s;
-                    steals += r.stolen as u64;
+                    wave.partials[r.id] = value;
+                    wave.busy[r.worker] += modeled_s;
+                    wave.steals += r.stolen as u64;
+                    done += 1;
                 }
-                Err(e) => bail!("shard {} failed on worker {}: {e}", r.id, r.worker),
+                Err(failure) => {
+                    if r.worker < workers {
+                        wave.faults[r.worker] += 1;
+                    }
+                    if let TaskFailure::DeviceDead(_) = &failure {
+                        if r.worker < workers && alive[r.worker] {
+                            alive[r.worker] = false;
+                            crate::telemetry::warn("pool.worker.dead");
+                        }
+                    }
+                    if let TaskFailure::Fatal(reason) = &failure {
+                        bail!("shard {} failed on worker {}: {reason}", r.id, r.worker);
+                    }
+                    if attempts[r.id] >= MAX_TASK_ATTEMPTS {
+                        bail!(
+                            "shard {} failed after {} attempts (last on worker {}): {}",
+                            r.id,
+                            attempts[r.id],
+                            r.worker,
+                            failure.reason()
+                        );
+                    }
+                    // Prefer a survivor other than the one that just
+                    // failed; same-worker retry only when it is alone.
+                    let Some(target) = alive
+                        .iter()
+                        .enumerate()
+                        .filter_map(|(w, &a)| a.then_some(w))
+                        .min_by_key(|&w| (w == r.worker, w))
+                    else {
+                        bail!(
+                            "no surviving pool workers to retry shard {}: {}",
+                            r.id,
+                            failure.reason()
+                        );
+                    };
+                    attempts[r.id] += 1;
+                    wave.reexecuted += 1;
+                    crate::telemetry::warn("pool.task.retry");
+                    self.queues.push(
+                        target,
+                        Task {
+                            id: r.id,
+                            data: payload.clone(),
+                            shard: shards[r.id],
+                            op,
+                            parent_span,
+                            reply: tx.clone(),
+                        },
+                    );
+                }
             }
         }
-        pass.attr_u64("steals", steals);
-
-        let value = {
-            let _combine = self.cfg.trace.span("pool.combine");
-            combine(op, &partials)
-        };
-        Ok(PoolOutcome {
-            value,
-            shards: plan.shards.len(),
-            steals,
-            modeled_wall_s: busy.iter().cloned().fold(0.0, f64::max),
-            per_worker_busy_s: busy,
-        })
+        drop(tx);
+        pass.attr_u64("steals", wave.steals);
+        if wave.reexecuted > 0 {
+            pass.attr_u64("reexecuted", wave.reexecuted as u64);
+        }
+        wave.dead = alive.iter().map(|&a| !a).collect();
+        Ok(wave)
     }
 
     /// Typed entry point under the static proportional plan: embeds
@@ -403,16 +593,7 @@ impl DevicePool {
         }
         let rows = data.len() / cols;
         if rows == 0 {
-            return Ok((
-                Vec::new(),
-                PoolOutcome {
-                    value: CombOp::from(op).identity(),
-                    shards: 0,
-                    steals: 0,
-                    modeled_wall_s: 0.0,
-                    per_worker_busy_s: vec![0.0; workers],
-                },
-            ));
+            return Ok((Vec::new(), PoolOutcome::empty(CombOp::from(op), workers)));
         }
         let cop = CombOp::from(op);
         let payload: Arc<Vec<f64>> = Arc::new(crate::reduce::persistent::global().map_f64(data));
@@ -422,66 +603,24 @@ impl DevicePool {
         pass.attr_u64("tasks", total as u64);
         pass.attr_u64("devices", workers as u64);
         pass.attr_u64("rows", rows as u64);
-        let parent_span = pass.id();
-        let (tx, rx) = mpsc::channel::<TaskResult>();
-        let mut tasks = Vec::with_capacity(total);
+        let mut shards = Vec::with_capacity(total);
         for r in 0..rows {
-            for (i, s) in base.shards.iter().enumerate() {
-                tasks.push((
-                    s.device,
-                    Task {
-                        id: r * per_row + i,
-                        data: payload.clone(),
-                        shard: Shard {
-                            device: s.device,
-                            start: r * cols + s.start,
-                            end: r * cols + s.end,
-                        },
-                        op: cop,
-                        parent_span,
-                        reply: tx.clone(),
-                    },
-                ));
+            for s in base.shards.iter() {
+                shards.push(Shard {
+                    device: s.device,
+                    start: r * cols + s.start,
+                    end: r * cols + s.end,
+                });
             }
         }
-        self.queues.push_all(tasks);
-        drop(tx);
-
-        let mut partials = vec![cop.identity(); total];
-        let mut busy = vec![0.0f64; workers];
-        let mut steals = 0u64;
-        for _ in 0..total {
-            let r = rx.recv_timeout(Duration::from_secs(300)).map_err(|_| {
-                anyhow!(
-                    "device pool did not respond (workers dead: {})",
-                    self.workers_dead.load(Ordering::Relaxed)
-                )
-            })?;
-            match r.outcome {
-                Ok((value, modeled_s)) => {
-                    partials[r.id] = value;
-                    busy[r.worker] += modeled_s;
-                    steals += r.stolen as u64;
-                }
-                Err(e) => bail!("row shard {} failed on worker {}: {e}", r.id, r.worker),
-            }
-        }
-        pass.attr_u64("steals", steals);
+        let wave = self.execute_wave(payload, cop, &shards, &mut pass)?;
 
         let _combine_span = self.cfg.trace.span("pool.combine");
         let values: Vec<T> = (0..rows)
-            .map(|r| T::from_f64(combine(cop, &partials[r * per_row..(r + 1) * per_row])))
+            .map(|r| T::from_f64(combine(cop, &wave.partials[r * per_row..(r + 1) * per_row])))
             .collect();
-        Ok((
-            values,
-            PoolOutcome {
-                value: combine(cop, &partials),
-                shards: total,
-                steals,
-                modeled_wall_s: busy.iter().cloned().fold(0.0, f64::max),
-                per_worker_busy_s: busy,
-            },
-        ))
+        let value = combine(cop, &wave.partials);
+        Ok((values, wave.into_outcome(value, total)))
     }
 
     /// Segmented fleet pass: reduce **every** CSR segment of `data`
@@ -532,16 +671,7 @@ impl DevicePool {
         let segments = offsets.len() - 1;
         let mut values = vec![T::identity(op); segments];
         if n == 0 {
-            return Ok((
-                values,
-                PoolOutcome {
-                    value: CombOp::from(op).identity(),
-                    shards: 0,
-                    steals: 0,
-                    modeled_wall_s: 0.0,
-                    per_worker_busy_s: vec![0.0; workers],
-                },
-            ));
+            return Ok((values, PoolOutcome::empty(CombOp::from(op), workers)));
         }
         let cop = CombOp::from(op);
         let tasks = segment_tasks(plan, offsets);
@@ -551,43 +681,11 @@ impl DevicePool {
         pass.attr_u64("tasks", total as u64);
         pass.attr_u64("devices", workers as u64);
         pass.attr_u64("segments", segments as u64);
-        let parent_span = pass.id();
-        let (tx, rx) = mpsc::channel::<TaskResult>();
-        self.queues.push_all(tasks.iter().enumerate().map(|(id, t)| {
-            (
-                t.device,
-                Task {
-                    id,
-                    data: payload.clone(),
-                    shard: Shard { device: t.device, start: t.start, end: t.end },
-                    op: cop,
-                    parent_span,
-                    reply: tx.clone(),
-                },
-            )
-        }));
-        drop(tx);
-
-        let mut partials = vec![cop.identity(); total];
-        let mut busy = vec![0.0f64; workers];
-        let mut steals = 0u64;
-        for _ in 0..total {
-            let r = rx.recv_timeout(Duration::from_secs(300)).map_err(|_| {
-                anyhow!(
-                    "device pool did not respond (workers dead: {})",
-                    self.workers_dead.load(Ordering::Relaxed)
-                )
-            })?;
-            match r.outcome {
-                Ok((value, modeled_s)) => {
-                    partials[r.id] = value;
-                    busy[r.worker] += modeled_s;
-                    steals += r.stolen as u64;
-                }
-                Err(e) => bail!("segment task {} failed on worker {}: {e}", r.id, r.worker),
-            }
-        }
-        pass.attr_u64("steals", steals);
+        let shards: Vec<Shard> = tasks
+            .iter()
+            .map(|t| Shard { device: t.device, start: t.start, end: t.end })
+            .collect();
+        let wave = self.execute_wave(payload, cop, &shards, &mut pass)?;
         let _combine_span = self.cfg.trace.span("pool.combine");
 
         // Per-segment combine in task order (tasks are emitted in
@@ -598,7 +696,7 @@ impl DevicePool {
         for (s, v) in values.iter_mut().enumerate() {
             seg_partials.clear();
             while t < total && tasks[t].segment == s {
-                seg_partials.push(partials[t]);
+                seg_partials.push(wave.partials[t]);
                 t += 1;
             }
             if !seg_partials.is_empty() {
@@ -607,16 +705,8 @@ impl DevicePool {
         }
         debug_assert_eq!(t, total, "every task must belong to a segment");
 
-        Ok((
-            values,
-            PoolOutcome {
-                value: combine(cop, &partials),
-                shards: total,
-                steals,
-                modeled_wall_s: busy.iter().cloned().fold(0.0, f64::max),
-                per_worker_busy_s: busy,
-            },
-        ))
+        let value = combine(cop, &wave.partials);
+        Ok((values, wave.into_outcome(value, total)))
     }
 }
 
@@ -644,6 +734,14 @@ fn combine(op: CombOp, partials: &[f64]) -> f64 {
 /// host seconds before reporting — the host-time image of the modeled
 /// device being busy, which is what makes steal counts meaningful to
 /// the adaptive scheduler's feedback loop.
+///
+/// Fault policy: kernel execution runs under `catch_unwind`, so a
+/// panic is reported as a retryable [`TaskFailure`] instead of killing
+/// the worker and wedging the pass. Typed device faults
+/// ([`FaultError`]) classify the failure; on permanent device death
+/// the worker reports, marks itself retired, and exits — its queued
+/// tasks are drained by the survivors' stealing.
+#[allow(clippy::too_many_arguments)]
 fn worker_loop(
     me: usize,
     dev: DeviceConfig,
@@ -652,6 +750,7 @@ fn worker_loop(
     pace: f64,
     trace: Arc<Trace>,
     queues: Arc<StealQueues<Task>>,
+    retired: Arc<Vec<AtomicBool>>,
 ) {
     let mut gpu = Gpu::new(dev);
     // One persistent block (unrolled) covers this many elements in a
@@ -662,6 +761,7 @@ fn worker_loop(
     // can differ from the two-stage driver only by association, which
     // sits inside the compensation tolerance the pool guarantees.
     let single_launch_max = block as usize * unroll.max(1) as usize;
+    let mut consecutive_failures = 0u32;
     while let Some((task, stolen)) = queues.pop(me) {
         let mut span = trace.span_with_parent("pool.task", task.parent_span);
         span.attr_u64("task", task.id as u64);
@@ -670,13 +770,40 @@ fn worker_loop(
         span.attr_u64("lo", task.shard.start as u64);
         span.attr_u64("hi", task.shard.end as u64);
         let slice = &task.data[task.shard.start..task.shard.end];
-        let outcome = if slice.len() <= single_launch_max {
-            drivers::jradi_reduce_single(&mut gpu, slice, task.op, unroll, block)
-        } else {
-            drivers::jradi_reduce(&mut gpu, slice, task.op, unroll, block)
-        }
-        .map(|o| (o.value, o.run.total_time_s()))
-        .map_err(|e| format!("{e:#}"));
+        // Isolate the kernel: a panic inside the simulator must not
+        // unwind through the worker (poisoning queues and wedging the
+        // dispatcher); it becomes a retryable task failure instead.
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            if slice.len() <= single_launch_max {
+                drivers::jradi_reduce_single(&mut gpu, slice, task.op, unroll, block)
+            } else {
+                drivers::jradi_reduce(&mut gpu, slice, task.op, unroll, block)
+            }
+        }));
+        let mut retire = false;
+        let outcome = match caught {
+            Ok(Ok(o)) => Ok((o.value, o.run.total_time_s())),
+            Ok(Err(e)) => Err(match e.downcast_ref::<FaultError>() {
+                Some(FaultError::Dead { .. }) => {
+                    retire = true;
+                    TaskFailure::DeviceDead(format!("{e:#}"))
+                }
+                Some(_) => TaskFailure::Retryable(format!("{e:#}")),
+                // Non-fault launch errors are deterministic (bad
+                // program / range): retrying would fail identically.
+                None => TaskFailure::Fatal(format!("{e:#}")),
+            }),
+            Err(panic) => {
+                let msg = panic
+                    .downcast_ref::<&str>()
+                    .map(|s| (*s).to_string())
+                    .or_else(|| panic.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "non-string panic payload".to_string());
+                crate::telemetry::warn("pool.worker.panic");
+                span.attr_str("panic", &msg);
+                Err(TaskFailure::Retryable(format!("worker panicked: {msg}")))
+            }
+        };
         if pace > 0.0 {
             if let Ok((_, modeled_s)) = &outcome {
                 // Cap a single paced hold so a pathological plan can
@@ -687,10 +814,26 @@ fn worker_loop(
                 }
             }
         }
+        let failed = outcome.is_err();
         // Close the span before replying so its record is in the sink
         // by the time the dispatcher sees the last result.
         drop(span);
         let _ = task.reply.send(TaskResult { id: task.id, worker: me, stolen, outcome });
+        if retire {
+            retired[me].store(true, Ordering::Relaxed);
+            break;
+        }
+        if failed {
+            // Exponential backoff after a failure: a flaky worker
+            // fails fast and would otherwise sit idle stealing back
+            // the very retries its failures produced; the pause gives
+            // healthy workers first claim on them.
+            consecutive_failures += 1;
+            let hold_ms = 1u64 << consecutive_failures.min(5);
+            std::thread::sleep(Duration::from_millis(hold_ms));
+        } else {
+            consecutive_failures = 0;
+        }
     }
 }
 
@@ -975,6 +1118,126 @@ mod tests {
         let out = paced.reduce(&data, CombOp::Add).unwrap();
         assert_eq!(out.value, want);
         assert!(out.modeled_wall_s > 0.0);
+    }
+
+    #[test]
+    fn transient_faults_cost_retries_never_correctness() {
+        use crate::gpusim::FaultPlan;
+        // Device 0 fails half its launches; device 1 is healthy. Every
+        // value must still match the scalar oracle exactly; faults
+        // show up only in the re-execution counters.
+        let mut flaky = DeviceConfig::tesla_c2075();
+        flaky.fault = FaultPlan::parse("fail@0.5,seed=11").unwrap();
+        let pool = DevicePool::new(PoolConfig {
+            devices: vec![flaky, DeviceConfig::tesla_c2075()],
+            tasks_per_device: 8,
+            ..PoolConfig::default()
+        })
+        .unwrap();
+        let data = ints(120_007, 41);
+        for op in [Op::Sum, Op::Min, Op::Max] {
+            let plan = pool.plan(data.len());
+            let (got, out) = pool.reduce_elems_planned(&data, op, &plan).unwrap();
+            assert_eq!(got, scalar::reduce(&data, op), "{op}");
+            assert_eq!(out.faults_per_worker.iter().sum::<u64>() as usize, out.reexecuted);
+            assert_eq!(out.dead_workers, vec![false, false], "transient faults never retire");
+        }
+        assert_eq!(pool.live_workers(), vec![true, true]);
+    }
+
+    #[test]
+    fn dead_device_retires_worker_and_pass_completes() {
+        use crate::gpusim::FaultPlan;
+        // Device 1 dies on its first launch; the pass must complete on
+        // the survivors with the dying device's work re-executed.
+        let mut dying = DeviceConfig::tesla_c2075();
+        dying.fault = FaultPlan::parse("die@0").unwrap();
+        let pool = DevicePool::new(PoolConfig {
+            devices: vec![
+                DeviceConfig::tesla_c2075(),
+                dying,
+                DeviceConfig::tesla_c2075(),
+                DeviceConfig::tesla_c2075(),
+            ],
+            tasks_per_device: 4,
+            ..PoolConfig::default()
+        })
+        .unwrap();
+        let data = ints(200_003, 43);
+        let plan = pool.plan(data.len());
+        let (got, out) = pool.reduce_elems_planned(&data, Op::Sum, &plan).unwrap();
+        assert_eq!(got, scalar::reduce(&data, Op::Sum));
+        assert!(out.reexecuted >= 1, "the dying device's task must be re-executed");
+        assert!(out.dead_workers[1], "worker 1 must be marked dead: {:?}", out.dead_workers);
+        assert_eq!(pool.live_workers(), vec![true, false, true, true]);
+        // The pool keeps serving after the death — later passes just
+        // steal the dead worker's share.
+        let (again, out2) = pool.reduce_elems_planned(&data, Op::Max, &plan).unwrap();
+        assert_eq!(again, scalar::reduce(&data, Op::Max));
+        assert_eq!(out2.reexecuted, 0, "no worker launches on a retired device");
+    }
+
+    #[test]
+    fn all_devices_dead_is_an_error_not_a_hang() {
+        use crate::gpusim::FaultPlan;
+        let mut dying = DeviceConfig::tesla_c2075();
+        dying.fault = FaultPlan::parse("die@0").unwrap();
+        let pool =
+            DevicePool::new(PoolConfig::homogeneous(dying, 2)).unwrap();
+        let data = ints(50_000, 47);
+        let plan = pool.plan(data.len());
+        let err = pool.reduce_elems_planned(&data, Op::Sum, &plan).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("no surviving pool workers") || msg.contains("did not respond"),
+            "{msg}"
+        );
+        assert_eq!(pool.live_workers(), vec![false, false]);
+    }
+
+    #[test]
+    fn slow_device_only_costs_modeled_time() {
+        use crate::gpusim::FaultPlan;
+        let mut slow = DeviceConfig::tesla_c2075();
+        slow.fault = FaultPlan::parse("slow=20x@1.0").unwrap();
+        let pool = DevicePool::new(PoolConfig {
+            devices: vec![slow, DeviceConfig::tesla_c2075()],
+            ..PoolConfig::default()
+        })
+        .unwrap();
+        let data = ints(100_003, 53);
+        let plan = pool.plan(data.len());
+        let (got, out) = pool.reduce_elems_planned(&data, Op::Sum, &plan).unwrap();
+        assert_eq!(got, scalar::reduce(&data, Op::Sum));
+        assert_eq!(out.reexecuted, 0, "slowness is not failure");
+        assert_eq!(out.faults_per_worker, vec![0, 0]);
+    }
+
+    #[test]
+    fn faulty_segmented_and_rows_passes_stay_exact() {
+        use crate::gpusim::FaultPlan;
+        let mut flaky = DeviceConfig::tesla_c2075();
+        flaky.fault = FaultPlan::parse("fail@0.3,seed=3").unwrap();
+        let pool = DevicePool::new(PoolConfig {
+            devices: vec![flaky, DeviceConfig::tesla_c2075(), DeviceConfig::tesla_c2075()],
+            ..PoolConfig::default()
+        })
+        .unwrap();
+        // Rows.
+        let cols = 3_001;
+        let rows = 6;
+        let data = ints(rows * cols, 59);
+        let base = pool.plan(cols);
+        let (got, _) = pool.reduce_rows_elems(&data, cols, Op::Sum, &base).unwrap();
+        let want: Vec<i32> = data.chunks(cols).map(|r| scalar::reduce(r, Op::Sum)).collect();
+        assert_eq!(got, want);
+        // Segments.
+        let offsets = [0usize, 100, 100, 9_000, rows * cols];
+        let plan = pool.plan(rows * cols);
+        let (segs, _) = pool.reduce_segments_elems(&data, &offsets, Op::Min, &plan).unwrap();
+        for (s, w) in offsets.windows(2).enumerate() {
+            assert_eq!(segs[s], scalar::reduce(&data[w[0]..w[1]], Op::Min), "segment {s}");
+        }
     }
 
     #[test]

@@ -35,10 +35,41 @@ struct Cell {
     sum_observed_s: f64,
 }
 
+/// A fleet health event on the audit trail: why shard plans changed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FleetEvent {
+    /// Order the event was recorded in (0-based).
+    pub seq: u64,
+    pub device: usize,
+    pub kind: FleetEventKind,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FleetEventKind {
+    /// Health sank below threshold; withheld from plans, probed.
+    Quarantined,
+    /// Clean probes lifted health back; full participant again.
+    Readmitted,
+    /// Permanent death; worker retired, never readmitted.
+    Died,
+}
+
+impl std::fmt::Display for FleetEvent {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let kind = match self.kind {
+            FleetEventKind::Quarantined => "quarantined",
+            FleetEventKind::Readmitted => "readmitted",
+            FleetEventKind::Died => "died",
+        };
+        write!(f, "#{} device {} {}", self.seq, self.device, kind)
+    }
+}
+
 /// The audit accumulator (lives behind a mutex on the scheduler).
 #[derive(Debug, Default)]
 pub struct AuditTrail {
     cells: HashMap<(Backend, Op, Dtype), Cell>,
+    fleet_events: Vec<FleetEvent>,
 }
 
 impl AuditTrail {
@@ -81,6 +112,17 @@ impl AuditTrail {
             .collect();
         rows.sort_by_key(|e| (e.backend.name(), e.op.name(), e.dtype.name()));
         rows
+    }
+
+    /// Append one fleet health event (quarantine/readmission/death).
+    pub fn record_fleet_event(&mut self, device: usize, kind: FleetEventKind) {
+        let seq = self.fleet_events.len() as u64;
+        self.fleet_events.push(FleetEvent { seq, device, kind });
+    }
+
+    /// The fleet health events recorded so far, in order.
+    pub fn fleet_events(&self) -> Vec<FleetEvent> {
+        self.fleet_events.clone()
     }
 }
 
@@ -170,6 +212,20 @@ mod tests {
         a.record(Backend::Sequential, Op::Sum, Dtype::F32, f64::NAN, 1e-3);
         a.record(Backend::Sequential, Op::Sum, Dtype::F32, 1e-3, f64::INFINITY);
         assert!(a.entries().is_empty());
+    }
+
+    #[test]
+    fn fleet_events_keep_order_and_sequence() {
+        let mut a = AuditTrail::default();
+        a.record_fleet_event(2, FleetEventKind::Quarantined);
+        a.record_fleet_event(1, FleetEventKind::Died);
+        a.record_fleet_event(2, FleetEventKind::Readmitted);
+        let ev = a.fleet_events();
+        assert_eq!(ev.len(), 3);
+        assert_eq!(ev[0], FleetEvent { seq: 0, device: 2, kind: FleetEventKind::Quarantined });
+        assert_eq!(ev[1], FleetEvent { seq: 1, device: 1, kind: FleetEventKind::Died });
+        assert_eq!(ev[2].kind, FleetEventKind::Readmitted);
+        assert_eq!(format!("{}", ev[0]), "#0 device 2 quarantined");
     }
 
     #[test]

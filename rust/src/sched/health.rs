@@ -1,0 +1,329 @@
+//! `health` — per-device health tracking and quarantine.
+//!
+//! The fault plane ([`crate::gpusim::fault`]) makes devices fail; this
+//! module makes the scheduler *react*: every pool pass reports
+//! per-worker fault counts and deaths
+//! ([`crate::pool::PoolOutcome::faults_per_worker`]), which fold into
+//! an EWMA health score per device. Devices whose score sinks below
+//! the quarantine threshold are removed from shard plans (their weight
+//! masks to zero — [`ShardPlan::proportional_weighted`]
+//! (crate::pool::ShardPlan::proportional_weighted) starves zero-weight
+//! entries without disturbing the rest) and periodically probed with a
+//! token shard; a streak of clean probes readmits them. Permanent
+//! death is terminal: the pool retires the worker and the mask stays
+//! zero forever.
+//!
+//! Health tracking is *observation*, not adaptation: like the audit
+//! trail it records unconditionally, because routing work away from a
+//! dead device is a correctness-of-service concern, not a tuning
+//! knob. Transitions surface as counted [`crate::telemetry::warn`]
+//! events, fleet events on the scheduler's audit trail
+//! ([`super::AuditTrail::fleet_events`]), and the quarantine list in
+//! [`super::Scheduler::explain`].
+
+use crate::pool::PoolOutcome;
+
+/// Health-policy parameters.
+#[derive(Debug, Clone)]
+pub struct HealthConfig {
+    /// EWMA weight of one pass observation (success = 1, fault = 0).
+    pub alpha: f64,
+    /// Quarantine a healthy device when its score sinks below this.
+    pub quarantine_below: f64,
+    /// Readmit a quarantined device when probes lift it back above
+    /// this.
+    pub readmit_above: f64,
+    /// Offer a quarantined device a probe shard every this many plans.
+    pub probe_every: u64,
+    /// Relative weight of a probe shard (vs 1.0 for healthy devices).
+    pub probe_weight: f64,
+}
+
+impl Default for HealthConfig {
+    fn default() -> Self {
+        HealthConfig {
+            alpha: 0.35,
+            quarantine_below: 0.5,
+            readmit_above: 0.85,
+            probe_every: 4,
+            probe_weight: 0.05,
+        }
+    }
+}
+
+/// A device's standing with the scheduler.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HealthState {
+    /// Full participant in shard plans.
+    Healthy,
+    /// Removed from plans; probed periodically for readmission.
+    Quarantined,
+    /// Permanently dead (worker retired). Never readmitted.
+    Dead,
+}
+
+/// Snapshot of one device's health (for explain / reports).
+#[derive(Debug, Clone)]
+pub struct DeviceHealth {
+    pub device: usize,
+    pub state: HealthState,
+    /// EWMA success score in [0, 1].
+    pub score: f64,
+    /// Total faults attributed to this device.
+    pub faults: u64,
+}
+
+/// A state transition worth telling the audit trail about.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HealthTransition {
+    Quarantined,
+    Readmitted,
+    Died,
+}
+
+#[derive(Debug, Clone)]
+struct Dev {
+    state: HealthState,
+    score: f64,
+    faults: u64,
+    /// Plans issued while quarantined (probe cadence counter).
+    denied_plans: u64,
+}
+
+impl Default for Dev {
+    fn default() -> Self {
+        Dev { state: HealthState::Healthy, score: 1.0, faults: 0, denied_plans: 0 }
+    }
+}
+
+/// The tracker (lives behind a mutex on the scheduler).
+#[derive(Debug, Default)]
+pub struct HealthTracker {
+    cfg: HealthConfig,
+    devices: Vec<Dev>,
+}
+
+impl HealthTracker {
+    pub fn new(cfg: HealthConfig) -> HealthTracker {
+        HealthTracker { cfg, devices: Vec::new() }
+    }
+
+    fn ensure(&mut self, devices: usize) {
+        if self.devices.len() < devices {
+            self.devices.resize(devices, Dev::default());
+        }
+    }
+
+    /// Fold one pool pass in; returns the state transitions it caused
+    /// (for warn counters and the audit trail's fleet-event log).
+    pub fn observe(&mut self, outcome: &PoolOutcome) -> Vec<(usize, HealthTransition)> {
+        let workers = outcome.per_worker_busy_s.len();
+        self.ensure(workers);
+        let mut transitions = Vec::new();
+        for i in 0..workers {
+            let d = &mut self.devices[i];
+            if d.state == HealthState::Dead {
+                continue;
+            }
+            let faults = outcome.faults_per_worker.get(i).copied().unwrap_or(0);
+            d.faults += faults;
+            if outcome.dead_workers.get(i).copied().unwrap_or(false) {
+                d.state = HealthState::Dead;
+                d.score = 0.0;
+                transitions.push((i, HealthTransition::Died));
+                continue;
+            }
+            // One EWMA step per fault (observation 0), one per clean
+            // busy pass (observation 1); an idle healthy device's
+            // score is left alone — no evidence either way.
+            if faults > 0 {
+                for _ in 0..faults.min(8) {
+                    d.score *= 1.0 - self.cfg.alpha;
+                }
+            } else if outcome.per_worker_busy_s[i] > 0.0 {
+                d.score = d.score * (1.0 - self.cfg.alpha) + self.cfg.alpha;
+            }
+            match d.state {
+                HealthState::Healthy if d.score < self.cfg.quarantine_below => {
+                    d.state = HealthState::Quarantined;
+                    d.denied_plans = 0;
+                    transitions.push((i, HealthTransition::Quarantined));
+                }
+                HealthState::Quarantined if d.score >= self.cfg.readmit_above => {
+                    d.state = HealthState::Healthy;
+                    transitions.push((i, HealthTransition::Readmitted));
+                }
+                _ => {}
+            }
+        }
+        transitions
+    }
+
+    /// Fold a raw liveness snapshot in (for passes that failed outright
+    /// and produced no [`PoolOutcome`]): any worker reported not-alive
+    /// is marked permanently dead. Returns the transitions caused.
+    pub fn note_liveness(&mut self, live: &[bool]) -> Vec<(usize, HealthTransition)> {
+        self.ensure(live.len());
+        let mut transitions = Vec::new();
+        for (i, &alive) in live.iter().enumerate() {
+            let d = &mut self.devices[i];
+            if !alive && d.state != HealthState::Dead {
+                d.state = HealthState::Dead;
+                d.score = 0.0;
+                transitions.push((i, HealthTransition::Died));
+            }
+        }
+        transitions
+    }
+
+    /// Per-device weight multipliers for the next shard plan: healthy
+    /// devices keep their weight, dead devices mask to zero, and
+    /// quarantined devices mask to zero except every
+    /// `probe_every`-th plan, where they get a token probe weight so
+    /// a recovered device can earn its way back in.
+    pub fn plan_mask(&mut self, devices: usize) -> Vec<f64> {
+        self.ensure(devices);
+        (0..devices)
+            .map(|i| {
+                let d = &mut self.devices[i];
+                match d.state {
+                    HealthState::Healthy => 1.0,
+                    HealthState::Dead => 0.0,
+                    HealthState::Quarantined => {
+                        d.denied_plans += 1;
+                        if d.denied_plans % self.cfg.probe_every == 0 {
+                            self.cfg.probe_weight
+                        } else {
+                            0.0
+                        }
+                    }
+                }
+            })
+            .collect()
+    }
+
+    /// Devices currently in full service.
+    pub fn healthy(&self, devices: usize) -> usize {
+        let tracked =
+            self.devices.iter().take(devices).filter(|d| d.state == HealthState::Healthy).count();
+        // Untracked devices (never observed) are presumed healthy.
+        tracked + devices.saturating_sub(self.devices.len())
+    }
+
+    /// Snapshot of every tracked device.
+    pub fn snapshot(&self, devices: usize) -> Vec<DeviceHealth> {
+        (0..devices)
+            .map(|i| match self.devices.get(i) {
+                Some(d) => {
+                    DeviceHealth { device: i, state: d.state, score: d.score, faults: d.faults }
+                }
+                None => {
+                    DeviceHealth { device: i, state: HealthState::Healthy, score: 1.0, faults: 0 }
+                }
+            })
+            .collect()
+    }
+
+    /// Indices currently withheld from plans (quarantined or dead).
+    pub fn masked(&self, devices: usize) -> Vec<usize> {
+        self.devices
+            .iter()
+            .take(devices)
+            .enumerate()
+            .filter(|(_, d)| d.state != HealthState::Healthy)
+            .map(|(i, _)| i)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outcome(busy: Vec<f64>, faults: Vec<u64>, dead: Vec<bool>) -> PoolOutcome {
+        PoolOutcome {
+            value: 0.0,
+            shards: 1,
+            steals: 0,
+            modeled_wall_s: 0.0,
+            per_worker_busy_s: busy,
+            reexecuted: faults.iter().sum::<u64>() as usize,
+            faults_per_worker: faults,
+            dead_workers: dead,
+        }
+    }
+
+    #[test]
+    fn clean_passes_keep_everyone_healthy() {
+        let mut h = HealthTracker::default();
+        for _ in 0..10 {
+            let t = h.observe(&outcome(vec![1.0, 1.0], vec![0, 0], vec![false, false]));
+            assert!(t.is_empty());
+        }
+        assert_eq!(h.healthy(2), 2);
+        assert_eq!(h.plan_mask(2), vec![1.0, 1.0]);
+        assert!(h.masked(2).is_empty());
+    }
+
+    #[test]
+    fn repeated_faults_quarantine_then_probes_readmit() {
+        let mut h = HealthTracker::default();
+        // Device 1 faults twice per pass: 1.0 -> 0.42 after one pass
+        // (two EWMA-zero steps), below the 0.5 threshold.
+        let t = h.observe(&outcome(vec![1.0, 1.0], vec![0, 2], vec![false, false]));
+        assert_eq!(t, vec![(1, HealthTransition::Quarantined)]);
+        assert_eq!(h.healthy(2), 1);
+        assert_eq!(h.masked(2), vec![1]);
+        // Quarantined device gets zero weight except the probe plans.
+        let masks: Vec<Vec<f64>> = (0..4).map(|_| h.plan_mask(2)).collect();
+        assert_eq!(masks[0], vec![1.0, 0.0]);
+        assert_eq!(masks[1], vec![1.0, 0.0]);
+        assert_eq!(masks[2], vec![1.0, 0.0]);
+        assert_eq!(masks[3], vec![1.0, 0.05], "4th plan offers a probe");
+        // Clean probe passes lift the score back above readmission.
+        let mut readmitted = false;
+        for _ in 0..12 {
+            let t = h.observe(&outcome(vec![1.0, 0.5], vec![0, 0], vec![false, false]));
+            if t.contains(&(1, HealthTransition::Readmitted)) {
+                readmitted = true;
+                break;
+            }
+        }
+        assert!(readmitted, "clean probes must readmit");
+        assert_eq!(h.healthy(2), 2);
+        assert_eq!(h.plan_mask(2), vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn death_is_terminal() {
+        let mut h = HealthTracker::default();
+        let t = h.observe(&outcome(vec![1.0, 0.0], vec![0, 1], vec![false, true]));
+        assert_eq!(t, vec![(1, HealthTransition::Died)]);
+        // Clean reports afterwards change nothing; no probes either.
+        for _ in 0..16 {
+            assert!(h.observe(&outcome(vec![1.0, 1.0], vec![0, 0], vec![false, false])).is_empty());
+            assert_eq!(h.plan_mask(2)[1], 0.0);
+        }
+        assert_eq!(h.healthy(2), 1);
+        assert_eq!(h.snapshot(2)[1].state, HealthState::Dead);
+    }
+
+    #[test]
+    fn untracked_devices_presumed_healthy() {
+        let h = HealthTracker::default();
+        assert_eq!(h.healthy(4), 4);
+        let snap = h.snapshot(4);
+        assert_eq!(snap.len(), 4);
+        assert!(snap.iter().all(|d| d.state == HealthState::Healthy && d.score == 1.0));
+    }
+
+    #[test]
+    fn idle_devices_hold_their_score() {
+        let mut h = HealthTracker::default();
+        // Device 1 never participates: its score must not drift.
+        for _ in 0..8 {
+            h.observe(&outcome(vec![1.0, 0.0], vec![0, 0], vec![false, false]));
+        }
+        assert_eq!(h.snapshot(2)[1].score, 1.0);
+    }
+}

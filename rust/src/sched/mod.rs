@@ -37,10 +37,12 @@ use crate::util::json::Json;
 
 pub mod audit;
 pub mod feedback;
+pub mod health;
 pub mod model;
 
-pub use audit::{AuditEntry, AuditTrail, MISPREDICT_REL_ERR};
+pub use audit::{AuditEntry, AuditTrail, FleetEvent, FleetEventKind, MISPREDICT_REL_ERR};
 pub use feedback::FleetFeedback;
+pub use health::{DeviceHealth, HealthConfig, HealthState, HealthTracker, HealthTransition};
 pub use model::{Backend, BackendProfile, ThroughputModel};
 
 /// The placement decision — the single ladder `Strategy` (planner
@@ -101,6 +103,11 @@ pub struct Explain {
     pub cutoffs: Cutoffs,
     /// `(backend, modeled seconds)` per feasible rung.
     pub candidates: Vec<(Backend, f64)>,
+    /// Devices currently withheld from shard plans (quarantined or
+    /// dead); empty for a healthy fleet or a host-only scheduler.
+    pub quarantined: Vec<usize>,
+    /// Devices in full service (equals the fleet width when healthy).
+    pub healthy_devices: usize,
 }
 
 impl std::fmt::Display for Explain {
@@ -125,6 +132,13 @@ impl std::fmt::Display for Explain {
         )?;
         for &(backend, cost_s) in &self.candidates {
             writeln!(f, "  candidate {backend}: {:.3} ms modeled", cost_s * 1e3)?;
+        }
+        if !self.quarantined.is_empty() {
+            writeln!(
+                f,
+                "  fleet health: {} healthy, withheld {:?}",
+                self.healthy_devices, self.quarantined
+            )?;
         }
         Ok(())
     }
@@ -202,6 +216,10 @@ pub struct Scheduler {
     /// feedback it records unconditionally (adaptive or not): auditing
     /// the cost model is observation, not adaptation.
     audit: Mutex<AuditTrail>,
+    /// Per-device health and quarantine. Also unconditional: routing
+    /// work away from a dead device is a correctness-of-service
+    /// concern, not a tuning knob ([`health`]).
+    health: Mutex<HealthTracker>,
 }
 
 impl Scheduler {
@@ -211,6 +229,7 @@ impl Scheduler {
             model: Mutex::new(ThroughputModel::new(cfg.alpha, pool_prior)),
             fleet: Mutex::new(FleetFeedback::new(cfg.gain)),
             audit: Mutex::new(AuditTrail::default()),
+            health: Mutex::new(HealthTracker::default()),
             cfg,
         }
     }
@@ -242,6 +261,26 @@ impl Scheduler {
 
     fn audit_trail(&self) -> std::sync::MutexGuard<'_, AuditTrail> {
         self.audit.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
+    fn health(&self) -> std::sync::MutexGuard<'_, HealthTracker> {
+        self.health.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
+    /// Fleet devices currently in full service (never-observed devices
+    /// are presumed healthy, so this equals [`Scheduler::pool_devices`]
+    /// until faults arrive).
+    pub fn healthy_devices(&self) -> usize {
+        let devices = self.pool_devices();
+        if devices == 0 {
+            return 0;
+        }
+        self.health().healthy(devices)
+    }
+
+    /// Per-device health snapshot (state, EWMA score, fault totals).
+    pub fn device_health(&self) -> Vec<DeviceHealth> {
+        self.health().snapshot(self.pool_devices())
     }
 
     /// The crossover cutoffs currently in force for one `(op, dtype)`.
@@ -285,7 +324,10 @@ impl Scheduler {
         }
         let c = self.cutoffs(op, dtype);
         let devices = self.pool_devices();
-        if devices > 0 && n >= c.pool {
+        // Graceful degradation: when the healthy fleet has shrunk to
+        // nothing (every device dead or quarantined), the fleet rung
+        // disappears from the ladder and the host bands take over.
+        if devices > 0 && n >= c.pool && self.healthy_devices() > 0 {
             return Decision::Sharded { devices };
         }
         if n < c.seq {
@@ -343,7 +385,7 @@ impl Scheduler {
         segments: usize,
     ) -> SegmentedDecision {
         let devices = self.pool_devices();
-        if devices == 0 || op == Op::Prod || total == 0 {
+        if devices == 0 || op == Op::Prod || total == 0 || self.healthy_devices() == 0 {
             return SegmentedDecision::PerSegment;
         }
         let c = self.cutoffs(op, dtype);
@@ -398,15 +440,29 @@ impl Scheduler {
         self.audit_trail().entries()
     }
 
-    /// Human-readable audit report (one [`AuditEntry`] row per line).
+    /// Fleet health events (quarantine/readmission/death) on the audit
+    /// trail, in the order they happened.
+    pub fn fleet_events(&self) -> Vec<FleetEvent> {
+        self.audit_trail().fleet_events()
+    }
+
+    /// Human-readable audit report (one [`AuditEntry`] row per line,
+    /// then any fleet health events).
     pub fn audit_report(&self) -> String {
         let rows = self.audit();
-        if rows.is_empty() {
+        let events = self.fleet_events();
+        if rows.is_empty() && events.is_empty() {
             return "scheduler audit: no observations\n".to_string();
         }
         let mut out = String::from("=== scheduler audit: modeled vs observed ===\n");
         for r in rows {
             out.push_str(&format!("{r}\n"));
+        }
+        if !events.is_empty() {
+            out.push_str("--- fleet health events ---\n");
+            for e in events {
+                out.push_str(&format!("{e}\n"));
+            }
         }
         out
     }
@@ -438,6 +494,7 @@ impl Scheduler {
     /// reduce --explain` prints and what an enabled trace attaches to
     /// its scheduler-decision span.
     pub fn explain(&self, op: Op, dtype: Dtype, n: usize) -> Explain {
+        let devices = self.pool_devices();
         Explain {
             op,
             dtype,
@@ -445,14 +502,52 @@ impl Scheduler {
             decision: self.decide(op, dtype, n, false),
             cutoffs: self.cutoffs(op, dtype),
             candidates: self.candidate_costs(op, dtype, n),
+            quarantined: self.health().masked(devices),
+            healthy_devices: self.healthy_devices(),
         }
     }
 
     /// Record a fleet outcome: pool throughput EWMA (over *modeled*
-    /// wall seconds) plus per-worker busy-time feedback.
+    /// wall seconds), per-worker busy-time feedback, and — always,
+    /// adaptive or not — per-device fault evidence for the health
+    /// tracker. Quarantine/readmission/death transitions surface as
+    /// counted [`crate::telemetry::warn`] events and fleet events on
+    /// the audit trail.
     pub fn observe_pool(&self, op: Op, dtype: Dtype, elements: usize, outcome: &PoolOutcome) {
         self.observe(Backend::Pool, op, dtype, elements, outcome.modeled_wall_s);
         self.observe_busy(&outcome.per_worker_busy_s);
+        let transitions = self.health().observe(outcome);
+        self.report_health_transitions(transitions);
+    }
+
+    /// Record a raw worker-liveness snapshot — the fallback health feed
+    /// for a pass that failed outright (no [`PoolOutcome`] to observe),
+    /// e.g. when every pool worker retired mid-wave. Dead workers are
+    /// marked permanently dead; like [`Scheduler::observe_pool`] this
+    /// records unconditionally.
+    pub fn observe_fleet_liveness(&self, live: &[bool]) {
+        let transitions = self.health().note_liveness(live);
+        self.report_health_transitions(transitions);
+    }
+
+    fn report_health_transitions(&self, transitions: Vec<(usize, HealthTransition)>) {
+        for (device, t) in transitions {
+            let kind = match t {
+                HealthTransition::Quarantined => {
+                    crate::telemetry::warn("sched.device.quarantined");
+                    FleetEventKind::Quarantined
+                }
+                HealthTransition::Readmitted => {
+                    crate::telemetry::warn("sched.device.readmitted");
+                    FleetEventKind::Readmitted
+                }
+                HealthTransition::Died => {
+                    crate::telemetry::warn("sched.device.dead");
+                    FleetEventKind::Died
+                }
+            };
+            self.audit_trail().record_fleet_event(device, kind);
+        }
     }
 
     /// Fold per-worker busy seconds into the fleet factors (no-op
@@ -485,7 +580,20 @@ impl Scheduler {
         tasks_per_device: usize,
     ) -> ShardPlan {
         let base: Vec<f64> = devices.iter().map(|d| d.modeled_throughput_gbps()).collect();
-        let weights = self.fleet().weights(&base);
+        let mut weights = self.fleet().weights(&base);
+        // Health mask: quarantined/dead devices drop to zero weight
+        // (proportional_weighted starves zero-weight entries), except
+        // the periodic probe plan that lets a recovered device earn
+        // readmission. If the whole fleet is masked the caller should
+        // have degraded to the host rung already; fall back to the
+        // unmasked weights rather than hand proportional_weighted an
+        // all-zero vector (which it treats as an even split).
+        let mask = self.health().plan_mask(devices.len());
+        if mask.iter().any(|&m| m > 0.0) {
+            for (w, m) in weights.iter_mut().zip(&mask) {
+                *w *= m;
+            }
+        }
         ShardPlan::proportional_weighted(&weights, n, tasks_per_device)
     }
 
@@ -1024,6 +1132,80 @@ mod tests {
         // Host-only scheduler: no pool candidate either.
         let ex = Scheduler::host(4).explain(Op::Sum, Dtype::F32, 1 << 22);
         assert_eq!(ex.candidates.len(), 3);
+    }
+
+    fn pool_outcome(busy: Vec<f64>, faults: Vec<u64>, dead: Vec<bool>) -> PoolOutcome {
+        PoolOutcome {
+            value: 0.0,
+            shards: 1,
+            steals: 0,
+            modeled_wall_s: 1e-3,
+            per_worker_busy_s: busy,
+            reexecuted: 0,
+            faults_per_worker: faults,
+            dead_workers: dead,
+        }
+    }
+
+    #[test]
+    fn quarantine_masks_plans_and_shows_in_explain() {
+        use crate::gpusim::DeviceConfig;
+        let s = pooled(false, None);
+        // Device 1 faults heavily in one pass: quarantined.
+        s.observe_pool(
+            Op::Sum,
+            Dtype::F32,
+            1 << 21,
+            &pool_outcome(vec![1.0; 4], vec![0, 3, 0, 0], vec![false; 4]),
+        );
+        assert_eq!(s.healthy_devices(), 3);
+        let ex = s.explain(Op::Sum, Dtype::F32, 1 << 22);
+        assert_eq!(ex.quarantined, vec![1]);
+        assert_eq!(ex.healthy_devices, 3);
+        assert!(format!("{ex}").contains("fleet health: 3 healthy, withheld [1]"), "{ex}");
+        // The next (non-probe) shard plan starves the quarantined
+        // device; the fleet rung itself stays available (3 healthy).
+        let devices = vec![DeviceConfig::tesla_c2075(); 4];
+        let plan = s.plan_shards(&devices, 1 << 20, 2);
+        let share1: usize =
+            plan.shards.iter().filter(|sh| sh.device == 1).map(|sh| sh.len()).sum();
+        assert_eq!(share1, 0, "quarantined device must get no elements");
+        assert!(matches!(
+            s.decide(Op::Sum, Dtype::F32, 1 << 22, false),
+            Decision::Sharded { .. }
+        ));
+        // The transition landed on the audit trail.
+        let ev = s.fleet_events();
+        assert_eq!(ev.len(), 1);
+        assert_eq!((ev[0].device, ev[0].kind), (1, FleetEventKind::Quarantined));
+        assert!(s.audit_report().contains("device 1 quarantined"), "{}", s.audit_report());
+    }
+
+    #[test]
+    fn whole_fleet_dead_degrades_decisions_to_host() {
+        let s = pooled(false, None);
+        let c = s.cutoffs(Op::Sum, Dtype::F32);
+        assert!(matches!(s.decide(Op::Sum, Dtype::F32, c.pool, false), Decision::Sharded { .. }));
+        s.observe_pool(
+            Op::Sum,
+            Dtype::F32,
+            1 << 21,
+            &pool_outcome(vec![0.0; 4], vec![1; 4], vec![true; 4]),
+        );
+        assert_eq!(s.healthy_devices(), 0);
+        // The fleet rung vanishes from both ladders.
+        assert!(matches!(
+            s.decide(Op::Sum, Dtype::F32, c.pool, false),
+            Decision::Threaded { .. }
+        ));
+        assert_eq!(
+            s.decide_segments(Op::Sum, Dtype::F32, 1 << 24, 10_000),
+            SegmentedDecision::PerSegment
+        );
+        // Four deaths on the audit trail, in device order.
+        let ev = s.fleet_events();
+        assert_eq!(ev.len(), 4);
+        assert!(ev.iter().all(|e| e.kind == FleetEventKind::Died));
     }
 
     #[test]

@@ -151,7 +151,7 @@ fn trace_driver_verifies_all() {
     let cfg = ServiceConfig { warmup: true, ..config() };
     let report = run_trace(
         cfg,
-        TraceConfig { requests: 40, payload_n: 65_536, seed: 5, mean_gap_us: 20.0 },
+        TraceConfig { requests: 40, payload_n: 65_536, seed: 5, mean_gap_us: 20.0, deadline: None },
     )
     .unwrap();
     assert!(report.contains("numerically verified"), "{report}");

@@ -547,6 +547,7 @@ fn prop_batcher_never_reorders_within_key() {
                     op: Op::Sum,
                     payload: HostVec::F32(vec![0.0; n]),
                     t_enqueue: t,
+                    deadline: None,
                     reply: tx,
                 });
             }
@@ -741,6 +742,78 @@ fn prop_gate_never_exceeds_limit() {
                 if g.in_flight() > g.limit() {
                     return Err(format!("in_flight {} > limit {}", g.in_flight(), g.limit()));
                 }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_faulty_fleet_preserves_correctness() {
+    use parred::gpusim::FaultPlan;
+    use parred::Engine;
+
+    // For ANY seeded fault plan — transient launch failures, a device
+    // dying permanently (targeted or fleet-wide), latency spikes —
+    // every completed reduction must still match the scalar oracle:
+    // bit-identical for i32, within 1e-5 of the Neumaier f64 sum for
+    // f32. Faults may cost retries, quarantines or a host fallback,
+    // never a wrong answer.
+    check(
+        "faulty fleet stays oracle-correct",
+        10,
+        |rng| {
+            let n = 1 << rng.range(14, 16);
+            let mut plan = FaultPlan::none();
+            plan.seed = rng.next_u64();
+            plan.fail_rate = [0.0, 0.02, 0.15][rng.range(0, 2)];
+            if rng.below(2) == 0 {
+                plan.die_after = Some(rng.range(1, 24) as u64);
+                // Usually kill one device; sometimes the whole fleet
+                // (exercising the engine's host fallback).
+                plan.die_device = if rng.below(4) == 0 { None } else { Some(rng.range(0, 3)) };
+            }
+            if rng.below(2) == 0 {
+                plan.slow_rate = 0.05;
+                plan.slow_factor = 4.0;
+            }
+            (rng.i32_vec(n, -1000, 1000), rng.f32_vec(n, -1.0, 1.0), plan)
+        },
+        |(ints, floats, plan)| {
+            let engine = Engine::builder()
+                .host_workers(2)
+                .fleet(vec![DeviceConfig::by_name("TeslaC2075").unwrap(); 4])
+                .fleet_fault(plan.clone())
+                .pool_cutoff(Some(1 << 12))
+                .tasks_per_device(2)
+                .build()
+                .map_err(|e| format!("build: {e:#}"))?;
+            for op in [Op::Sum, Op::Max, Op::Min] {
+                let got = engine
+                    .reduce(ints)
+                    .op(op)
+                    .run()
+                    .map_err(|e| format!("i32 {op} under {plan:?}: {e:#}"))?;
+                let want = scalar::reduce(ints, op);
+                if got.value != want {
+                    return Err(format!(
+                        "i32 {op} under {plan:?}: got {} want {want}",
+                        got.value
+                    ));
+                }
+            }
+            let got = engine
+                .reduce(floats)
+                .op(Op::Sum)
+                .run()
+                .map_err(|e| format!("f32 sum under {plan:?}: {e:#}"))?;
+            let want = kahan::sum_f64(floats);
+            let l1: f64 = floats.iter().map(|&x| x.abs() as f64).sum();
+            if (got.value as f64 - want).abs() > 1e-5 * l1.max(1.0) {
+                return Err(format!(
+                    "f32 sum under {plan:?}: got {} want {want}",
+                    got.value
+                ));
             }
             Ok(())
         },
