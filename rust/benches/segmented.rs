@@ -3,7 +3,7 @@
 //! small CSR segments (10k × ~512 elements; `PARRED_BENCH_FAST=1`
 //! shrinks to 2k segments for CI smoke).
 //!
-//! Three strategies over the same ragged workload on a 4×TeslaC2075
+//! Four strategies over the same ragged workload on a 4×TeslaC2075
 //! model:
 //!
 //! * **per-segment host loop** — one full-width host pass per segment
@@ -11,21 +11,32 @@
 //!   wall plus the scheduler's own modeled cost
 //!   (`segments × full-width overhead + bytes / host throughput`);
 //! * **fused host pass** — every segment in one persistent-runtime
-//!   pass (`ExecPath::Segmented`); measured host wall;
-//! * **one fleet pass** — every segment's pieces in one steal-queue
-//!   wave (`ExecPath::SegmentedPool`); modeled fleet wall.
+//!   pass (`ExecPath::Segmented`); measured host wall plus the
+//!   scheduler's modeled single-pass cost;
+//! * **per-task fleet wave** — one steal-queue task per segment piece
+//!   (`SegMode::Tasks`, PR 5); modeled fleet wall;
+//! * **one-launch fleet kernel** — one persistent launch per device
+//!   run covering every segment in its range (`SegMode::OneLaunch`,
+//!   the `jradi_segmented` kernel); modeled fleet wall.
 //!
-//! The acceptance gate: the fleet pass beats the per-segment host
-//! loop by ≥ 2× modeled wall. Results (plus a keyed group-by run over
-//! the same payload) land machine-readably in `BENCH_segmented.json`
+//! Acceptance gates: the scheduler-routed fleet pass beats the
+//! per-segment host loop by ≥ 2× modeled wall; the one-launch kernel
+//! beats the per-task wave by ≥ 3× modeled wall AND beats the fused
+//! host pass's modeled cost (the host-winning regime); and after the
+//! routed pass the scheduler's segmented decision rests on *learned*
+//! per-task / per-launch overheads (observation counts > 0), not the
+//! configured priors. Results (plus a keyed group-by run over the
+//! same payload) land machine-readably in `BENCH_segmented.json`
 //! (path override: `PARRED_SEG_JSON`) for the CI artifact.
 
 use std::collections::BTreeMap;
 use std::time::Instant;
 
 use parred::gpusim::DeviceConfig;
+use parred::pool::{DevicePool, PoolConfig, SegMode};
+use parred::reduce::op::Dtype;
 use parred::reduce::{persistent, scalar, simd, Op};
-use parred::sched::model;
+use parred::sched::{model, SegmentedDecision};
 use parred::util::bench::fmt_time;
 use parred::util::json::Json;
 use parred::util::rng::Rng;
@@ -85,6 +96,57 @@ fn main() {
     );
     assert_eq!(r.value, oracle, "fleet pass must stay bit-identical to the scalar oracle");
 
+    // The routed pass above fed the scheduler a segmented observation,
+    // so the wave-vs-kernel choice now rests on a *learned* per-unit
+    // overhead, not the configured prior — what `reduce --explain`
+    // surfaces as `seg_overheads`.
+    let seg = engine.scheduler().seg_overheads();
+    assert!(
+        seg.task_obs + seg.launch_obs > 0,
+        "the routed segmented pass must record a learned per-unit overhead"
+    );
+    let decision = engine.scheduler().decide_segments(Op::Sum, Dtype::I32, n, segments);
+    assert!(
+        matches!(decision, SegmentedDecision::FleetKernel { .. }),
+        "learned overheads must keep the many-small-segments shape on the \
+         one-launch kernel rung, got {decision:?}"
+    );
+
+    // --- d) ablation: per-task wave vs one-launch kernel, same plan ---
+    // Driven through the pool directly so each mode is forced (the
+    // engine only runs whichever rung the scheduler picks).
+    let pool =
+        DevicePool::new(PoolConfig::homogeneous(DeviceConfig::tesla_c2075(), 4)).expect("pool");
+    let plan = pool.plan(n);
+    let (wave_vals, wave_out) = pool
+        .reduce_segments_elems_mode(&data, &offsets, Op::Sum, &plan, SegMode::Tasks)
+        .expect("per-task wave");
+    let (one_vals, one_out) = pool
+        .reduce_segments_elems_mode(&data, &offsets, Op::Sum, &plan, SegMode::OneLaunch)
+        .expect("one-launch kernel");
+    assert_eq!(wave_vals, oracle, "per-task wave must match the scalar oracle");
+    assert_eq!(one_vals, oracle, "one-launch kernel must match the scalar oracle");
+    let one_launch_speedup = wave_out.modeled_wall_s / one_out.modeled_wall_s;
+    // The fused host pass's own modeled cost (one full-width pass over
+    // all bytes) — the host-winning regime the kernel must also beat.
+    let host_fused_modeled = model::FULL_OVERHEAD_S + bytes / model::FULL_BYTES_PER_S;
+    assert!(
+        host_fused_modeled < host_loop_modeled,
+        "sanity: at this shape the fused host pass beats the per-segment loop"
+    );
+    assert!(
+        one_launch_speedup >= 3.0,
+        "one-launch kernel must beat the per-task wave by >= 3x modeled wall, \
+         got {one_launch_speedup:.2}x"
+    );
+    assert!(
+        one_out.modeled_wall_s < host_fused_modeled,
+        "one-launch kernel must beat the fused host pass's modeled cost \
+         ({} vs {})",
+        fmt_time(one_out.modeled_wall_s),
+        fmt_time(host_fused_modeled)
+    );
+
     println!(
         "segmented workload: {segments} segments, {n} i32 elements ({} non-empty)",
         offsets.windows(2).filter(|w| w[1] > w[0]).count()
@@ -94,7 +156,11 @@ fn main() {
         fmt_time(host_loop_wall),
         fmt_time(host_loop_modeled)
     );
-    println!("  fused host pass:       host {}", fmt_time(host_fused_wall));
+    println!(
+        "  fused host pass:       host {}  (modeled {})",
+        fmt_time(host_fused_wall),
+        fmt_time(host_fused_modeled)
+    );
     println!(
         "  one fleet pass:        modeled {}  ({} tasks, {} steals; host sim {})",
         fmt_time(r.modeled_wall_s),
@@ -111,6 +177,21 @@ fn main() {
     assert!(
         speedup >= 2.0,
         "one fleet pass must beat the per-segment host loop by >= 2x modeled wall, got {speedup:.2}x"
+    );
+    println!(
+        "  ablation: per-task wave modeled {} ({} tasks) vs one-launch modeled {} ({} launches): \
+         {one_launch_speedup:.2}x",
+        fmt_time(wave_out.modeled_wall_s),
+        wave_out.shards,
+        fmt_time(one_out.modeled_wall_s),
+        one_out.shards
+    );
+    println!(
+        "  learned seg overheads: per-task {} ({} obs), per-launch {} ({} obs) -> {decision:?}",
+        fmt_time(seg.per_task_s),
+        seg.task_obs,
+        fmt_time(seg.per_launch_s),
+        seg.launch_obs
     );
 
     // --- keyed group-by over the same payload (10k-ish groups) ---
@@ -141,6 +222,14 @@ fn main() {
     root.insert("fleet_steals".to_string(), Json::Num(r.steals as f64));
     root.insert("fleet_host_sim_wall_s".to_string(), Json::Num(fleet_wall));
     root.insert("speedup_vs_host_loop_modeled".to_string(), Json::Num(speedup));
+    root.insert("host_fused_modeled_s".to_string(), Json::Num(host_fused_modeled));
+    root.insert("wave_modeled_wall_s".to_string(), Json::Num(wave_out.modeled_wall_s));
+    root.insert("wave_tasks".to_string(), Json::Num(wave_out.shards as f64));
+    root.insert("one_launch_modeled_wall_s".to_string(), Json::Num(one_out.modeled_wall_s));
+    root.insert("one_launch_launches".to_string(), Json::Num(one_out.shards as f64));
+    root.insert("one_launch_speedup_vs_wave".to_string(), Json::Num(one_launch_speedup));
+    root.insert("learned_per_task_s".to_string(), Json::Num(seg.per_task_s));
+    root.insert("learned_per_launch_s".to_string(), Json::Num(seg.per_launch_s));
     root.insert("keyed_groups".to_string(), Json::Num(groups as f64));
     root.insert("keyed_modeled_wall_s".to_string(), Json::Num(k.modeled_wall_s));
     let path =

@@ -149,6 +149,48 @@ impl KeyedRequest {
     }
 }
 
+/// A segmented (ragged) reduction request entering the coordinator:
+/// CSR `offsets` over the payload (`offsets[0] == 0`, monotone, last
+/// == `payload.len()`), one reduced value per segment (served through
+/// [`crate::engine::Engine::reduce_segments`]; empty segments yield
+/// the identity element).
+#[derive(Debug)]
+pub struct SegmentedRequest {
+    pub id: RequestId,
+    pub op: Op,
+    pub payload: HostVec,
+    /// CSR segment boundaries (validated at submit time).
+    pub offsets: Vec<usize>,
+    /// Enqueue timestamp (latency accounting).
+    pub t_enqueue: Instant,
+    /// Absolute deadline (see [`Request::deadline`]).
+    pub deadline: Option<Instant>,
+    /// Where to deliver the response.
+    pub reply: std::sync::mpsc::Sender<SegmentedResponse>,
+}
+
+impl SegmentedRequest {
+    pub fn dtype(&self) -> Dtype {
+        self.payload.dtype()
+    }
+
+    /// Number of segments the CSR offsets describe.
+    pub fn segments(&self) -> usize {
+        self.offsets.len().saturating_sub(1)
+    }
+}
+
+/// The coordinator's answer to a segmented request.
+#[derive(Debug, Clone)]
+pub struct SegmentedResponse {
+    pub id: RequestId,
+    /// One reduced value per segment, in segment order — or the error.
+    pub values: Result<Vec<HostScalar>, ServeError>,
+    pub path: ExecPath,
+    /// Queue + execute latency, seconds.
+    pub latency_s: f64,
+}
+
 /// The coordinator's answer to a keyed request.
 #[derive(Debug, Clone)]
 pub struct KeyedResponse {

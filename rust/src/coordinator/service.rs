@@ -35,7 +35,8 @@ use super::backpressure::Gate;
 use super::batcher::{BatchKind, Batcher, FlushedBatch, FlushedKeyedBatch, KeyPolicy, KeyedBatcher};
 use super::metrics::Metrics;
 use super::request::{
-    ExecPath, KeyedRequest, KeyedResponse, Request, Response, ServeError, SubmitOpts,
+    ExecPath, KeyedRequest, KeyedResponse, Request, Response, SegmentedRequest, SegmentedResponse,
+    ServeError, SubmitOpts,
 };
 use super::router::{Route, Router};
 
@@ -145,6 +146,7 @@ impl Default for ServiceConfig {
 enum Msg {
     Req(Request),
     Keyed(KeyedRequest),
+    Segmented(SegmentedRequest),
     Shutdown,
 }
 
@@ -275,6 +277,54 @@ impl Service {
         };
         self.tx
             .send(Msg::Keyed(req))
+            .map_err(|_| ServeError::Failed("service stopped".into()))?;
+        permit.transfer();
+        Ok(reply_rx)
+    }
+
+    /// Submit a segmented (ragged) reduction: CSR `offsets` over the
+    /// payload, one reduced value per segment. The request executes as
+    /// one pass on whatever segmented rung the scheduler picks (fused
+    /// host, per-task fleet wave, or the one-launch segmented kernel).
+    /// Returns the response channel, or a typed [`ServeError`] on
+    /// malformed offsets, shed, or a stopped service.
+    pub fn submit_segments(
+        &self,
+        op: Op,
+        payload: HostVec,
+        offsets: Vec<usize>,
+    ) -> Result<Receiver<SegmentedResponse>, ServeError> {
+        self.submit_segments_with(op, payload, offsets, SubmitOpts::default())
+    }
+
+    /// [`Self::submit_segments`] with a deadline and/or bounded
+    /// admission retry (see [`Self::submit_with`]).
+    pub fn submit_segments_with(
+        &self,
+        op: Op,
+        payload: HostVec,
+        offsets: Vec<usize>,
+        opts: SubmitOpts,
+    ) -> Result<Receiver<SegmentedResponse>, ServeError> {
+        // Reject malformed CSR at the front door — the executor should
+        // never spend a queue slot discovering a shape error.
+        if let Err(e) = crate::pool::validate_csr_offsets(&offsets, payload.len()) {
+            return Err(ServeError::Failed(format!("{e:#}")));
+        }
+        let t_enqueue = Instant::now();
+        let permit = self.admit(t_enqueue, &opts)?;
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let req = SegmentedRequest {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            op,
+            payload,
+            offsets,
+            t_enqueue,
+            deadline: opts.deadline.map(|d| t_enqueue + d),
+            reply: reply_tx,
+        };
+        self.tx
+            .send(Msg::Segmented(req))
             .map_err(|_| ServeError::Failed("service stopped".into()))?;
         permit.transfer();
         Ok(reply_rx)
@@ -562,6 +612,11 @@ fn executor_loop(
                     match msg {
                         Msg::Req(req) => handle_req(req, &mut batcher, &mut metrics),
                         Msg::Keyed(req) => keyed.push(req),
+                        // Segmented requests are already one fused
+                        // pass by shape; they execute directly.
+                        Msg::Segmented(req) => {
+                            exec_engine_segmented(&engine, &gate, req, &mut metrics)
+                        }
                         Msg::Shutdown => {
                             running = false;
                             break;
@@ -714,6 +769,92 @@ fn take_live_keyed(
             None
         }
         _ => Some(req),
+    }
+}
+
+fn respond_segmented(
+    gate: &Gate,
+    req: SegmentedRequest,
+    values: Result<Vec<HostScalar>, ServeError>,
+    path: ExecPath,
+    metrics: &mut Metrics,
+) {
+    let latency = req.t_enqueue.elapsed().as_secs_f64();
+    let ok = values.is_ok();
+    let elements = req.payload.len();
+    let _ = req.reply.send(SegmentedResponse { id: req.id, values, path, latency_s: latency });
+    gate.release_transferred();
+    metrics.record(path, latency, ok, elements);
+}
+
+/// Segmented twin of [`take_live`].
+fn take_live_segmented(
+    gate: &Gate,
+    req: SegmentedRequest,
+    now: Instant,
+    metrics: &mut Metrics,
+) -> Option<SegmentedRequest> {
+    match req.deadline {
+        Some(d) if now >= d => {
+            crate::telemetry::warn("serve.deadline.expired");
+            let waited_ms = now.saturating_duration_since(req.t_enqueue).as_millis() as u64;
+            let segments = req.segments();
+            respond_segmented(
+                gate,
+                req,
+                Err(ServeError::Timeout { waited_ms }),
+                ExecPath::Segmented { segments },
+                metrics,
+            );
+            None
+        }
+        _ => Some(req),
+    }
+}
+
+/// Execute one segmented request through the engine's segments front
+/// door: the scheduler's three-rung segmented ladder (fused host /
+/// per-task fleet wave / one-launch segmented kernel) places it, and
+/// the response carries the engine's own `ExecPath` — which
+/// [`Metrics::record`] routes into the segmented latency band.
+fn exec_engine_segmented(
+    engine: &Engine,
+    gate: &Gate,
+    req: SegmentedRequest,
+    metrics: &mut Metrics,
+) {
+    let Some(req) = take_live_segmented(gate, req, Instant::now(), metrics) else { return };
+    let mut span = engine.trace().span("serve.request");
+    if span.active() {
+        span.attr_u64("id", req.id);
+        span.attr_str("op", req.op.name());
+        span.attr_u64("n", req.payload.len() as u64);
+        span.attr_u64("segments", req.segments() as u64);
+    }
+    let result: Result<(Vec<HostScalar>, ExecPath)> = match &req.payload {
+        HostVec::F32(v) => engine
+            .reduce_segments(v, &req.offsets)
+            .op(req.op)
+            .run()
+            .map(|r| (r.value.into_iter().map(HostScalar::F32).collect(), r.path)),
+        HostVec::I32(v) => engine
+            .reduce_segments(v, &req.offsets)
+            .op(req.op)
+            .run()
+            .map(|r| (r.value.into_iter().map(HostScalar::I32).collect(), r.path)),
+    };
+    match result {
+        Ok((values, path)) => respond_segmented(gate, req, Ok(values), path, metrics),
+        Err(e) => {
+            let segments = req.segments();
+            respond_segmented(
+                gate,
+                req,
+                Err(ServeError::Failed(format!("{e:#}"))),
+                ExecPath::Segmented { segments },
+                metrics,
+            );
+        }
     }
 }
 
@@ -1000,10 +1141,13 @@ fn exec_keyed_fused_typed<T: TypedElement>(
     let mut batch_span = engine.trace().span("serve.batch.keyed");
     batch_span.attr_u64("requests", requests.len() as u64);
     // Group each request independently (groups must never merge
-    // across requests), concatenating into one CSR list. Stable sort
-    // — skipped entirely for already-sorted keys, mirroring the
-    // direct by-key path — so within a group, values keep input
-    // order, matching what `engine.reduce_by_key` computes.
+    // across requests) through the same shared step the direct by-key
+    // path uses — crate::reduce::group::group_into_csr: sorted keys
+    // skip the permutation, narrow integer ranges radix-bucket,
+    // everything else stable-argsorts; every strategy keeps input
+    // order within a group, so this computes exactly what
+    // `engine.reduce_by_key` would per request. Each request's local
+    // CSR rebases onto the concatenated buffer.
     let total_n: usize = requests.iter().map(|r| r.keys.len()).sum();
     let mut data: Vec<T> = Vec::with_capacity(total_n);
     let mut offsets: Vec<usize> = vec![0];
@@ -1011,33 +1155,16 @@ fn exec_keyed_fused_typed<T: TypedElement>(
     let mut group_counts: Vec<usize> = Vec::with_capacity(requests.len());
     for req in &requests {
         let values = extract(&req.values);
-        let n = req.keys.len();
-        debug_assert_eq!(values.len(), n, "submit_by_key validates lengths");
-        let mut groups = 0usize;
-        if req.keys.windows(2).all(|w| w[0] <= w[1]) {
-            for (r, (&k, &v)) in req.keys.iter().zip(values).enumerate() {
-                if r == 0 || k != req.keys[r - 1] {
-                    offsets.push(*offsets.last().expect("offsets seeded with 0"));
-                    group_keys.push(k);
-                    groups += 1;
-                }
-                data.push(v);
-                *offsets.last_mut().expect("offsets non-empty") += 1;
-            }
-        } else {
-            let mut idx: Vec<usize> = (0..n).collect();
-            idx.sort_by_key(|&i| req.keys[i]);
-            for (r, &i) in idx.iter().enumerate() {
-                if r == 0 || req.keys[i] != req.keys[idx[r - 1]] {
-                    offsets.push(*offsets.last().expect("offsets seeded with 0"));
-                    group_keys.push(req.keys[i]);
-                    groups += 1;
-                }
-                data.push(values[i]);
-                *offsets.last_mut().expect("offsets non-empty") += 1;
-            }
+        debug_assert_eq!(values.len(), req.keys.len(), "submit_by_key validates lengths");
+        let base = data.len();
+        let g = crate::reduce::group::group_into_csr(&req.keys);
+        match &g.perm {
+            Some(perm) => data.extend(perm.iter().map(|&i| values[i])),
+            None => data.extend_from_slice(values),
         }
-        group_counts.push(groups);
+        offsets.extend(g.offsets[1..].iter().map(|&o| base + o));
+        group_counts.push(g.keys.len());
+        group_keys.extend(g.keys);
     }
     metrics.record_keyed_fused(requests.len(), group_keys.len());
     batch_span.attr_u64("groups", group_keys.len() as u64);

@@ -369,19 +369,21 @@ impl Engine {
     /// Keyed (group-by) reduction over a key column:
     /// `engine.reduce_by_key(&keys, &values).op(Op::Sum).run()` yields
     /// one `(key, value)` pair per distinct key, in ascending key
-    /// order. Keys are stable-sorted and grouped into CSR offsets
-    /// (already-sorted inputs skip the permutation), then the groups
-    /// route through the same segmented rung as
-    /// [`Engine::reduce_segments`] — small groups fuse into one
-    /// persistent host pass, large or numerous groups run as one
-    /// fleet pass.
+    /// order. The key column is grouped into CSR offsets by the shared
+    /// [`crate::reduce::group`] step (already-sorted inputs skip the
+    /// permutation, narrow integer key ranges radix-bucket in O(n),
+    /// everything else stable-argsorts), then the groups route through
+    /// the same segmented rung as [`Engine::reduce_segments`] — small
+    /// groups fuse into one persistent host pass, large or numerous
+    /// groups run as one fleet pass. `.run_with_sizes()` additionally
+    /// returns each group's element count.
     pub fn reduce_by_key<'e, 'd, K, T>(
         &'e self,
         keys: &'d [K],
         values: &'d [T],
     ) -> ByKeyBuilder<'e, 'd, K, T>
     where
-        K: Copy + Ord + std::fmt::Debug,
+        K: crate::reduce::group::GroupKey,
         T: TypedElement,
     {
         ByKeyBuilder::new(self, keys, values)

@@ -10,6 +10,8 @@ use std::time::Instant;
 
 use anyhow::bail;
 
+use crate::pool::SegMode;
+use crate::reduce::group::{group_into_csr, GroupKey};
 use crate::reduce::op::{Element, Op, TypedElement};
 use crate::reduce::persistent;
 use crate::reduce::simd;
@@ -273,11 +275,13 @@ struct SegExec {
 
 /// Validate CSR `offsets` and execute every segment on the rung the
 /// scheduler picks: **one** fleet pass
-/// ([`crate::pool::DevicePool::reduce_segments_elems`]) when the
-/// segmented decision (or a `via_fleet` pin) says so, otherwise the
-/// per-segment host ladder (small segments fuse into one persistent
-/// pass, large ones run full-width). Empty segments yield the
-/// identity element.
+/// ([`crate::pool::DevicePool::reduce_segments_elems_mode`]) when the
+/// segmented decision (or a `via_fleet` pin) says so — as a per-task
+/// steal-queue wave ([`SegMode::Tasks`]) or as one persistent
+/// segmented launch per device ([`SegMode::OneLaunch`]), whichever the
+/// learned overheads price cheaper — otherwise the per-segment host
+/// ladder (small segments fuse into one persistent pass, large ones
+/// run full-width). Empty segments yield the identity element.
 fn run_segments_core<T: TypedElement>(
     engine: &Engine,
     data: &[T],
@@ -290,11 +294,20 @@ fn run_segments_core<T: TypedElement>(
     let sched = engine.scheduler();
     let trace = engine.trace();
     // The pin mirrors RowsBuilder::via_fleet: ignored without a pool,
-    // and for products (host-only semantics).
+    // and for products (host-only semantics). A pinned pass still
+    // chooses *which* fleet rung from the learned overheads — the
+    // stream term is identical between the two, so the comparison
+    // reduces to one launch's overhead vs the wave's per-task total.
     let decision = {
         let mut s = trace.span("sched.decide_segments");
         let d = if via_fleet && engine.pool().is_some() && op != Op::Prod {
-            SegmentedDecision::FleetPass { devices: engine.pool().map_or(0, |p| p.num_devices()) }
+            let devices = engine.pool().map_or(1, |p| p.num_devices()).max(1);
+            let seg = sched.seg_overheads();
+            if seg.per_launch_s < segments as f64 * seg.per_task_s / devices as f64 {
+                SegmentedDecision::FleetKernel { devices }
+            } else {
+                SegmentedDecision::FleetPass { devices }
+            }
         } else {
             sched.decide_segments(op, T::DTYPE, data.len(), segments)
         };
@@ -305,7 +318,12 @@ fn run_segments_core<T: TypedElement>(
         d
     };
 
-    if let (SegmentedDecision::FleetPass { .. }, Some(pool)) = (decision, engine.pool()) {
+    let fleet_mode = match decision {
+        SegmentedDecision::FleetPass { .. } => Some(SegMode::Tasks),
+        SegmentedDecision::FleetKernel { .. } => Some(SegMode::OneLaunch),
+        SegmentedDecision::PerSegment => None,
+    };
+    if let (Some(mode), Some(pool)) = (fleet_mode, engine.pool()) {
         // One wave: every segment's pieces enter the steal queues
         // together under the scheduler's (possibly feedback-adjusted)
         // element-space plan.
@@ -316,8 +334,21 @@ fn run_segments_core<T: TypedElement>(
             p.attr_u64("devices", pool.num_devices() as u64);
             plan
         };
-        match pool.reduce_segments_elems(data, offsets, op, &plan) {
+        match pool.reduce_segments_elems_mode(data, offsets, op, &plan, mode) {
             Ok((values, out)) => {
+                // Always teach the rung ladder what the pass cost:
+                // `shards` is steal-queue tasks for the wave and merged
+                // persistent launches for the one-launch kernel, which
+                // is exactly the unit whose overhead the segmented
+                // decision prices.
+                sched.observe_segmented(
+                    op,
+                    T::DTYPE,
+                    data.len(),
+                    out.shards,
+                    mode == SegMode::OneLaunch,
+                    &out,
+                );
                 // Feed the Pool throughput EWMA only when segment
                 // boundaries kept the wave close to a flat sharded pass
                 // (tasks within 2× the plan's shards): a
@@ -500,7 +531,7 @@ impl<'e, 'd, T: TypedElement> SegmentsBuilder<'e, 'd, T> {
 /// One keyed (group-by) reduction request (from
 /// [`Engine::reduce_by_key`]).
 #[derive(Debug)]
-pub struct ByKeyBuilder<'e, 'd, K: Copy + Ord + std::fmt::Debug, T: TypedElement> {
+pub struct ByKeyBuilder<'e, 'd, K: GroupKey, T: TypedElement> {
     engine: &'e Engine,
     keys: &'d [K],
     values: &'d [T],
@@ -508,7 +539,7 @@ pub struct ByKeyBuilder<'e, 'd, K: Copy + Ord + std::fmt::Debug, T: TypedElement
     via_fleet: bool,
 }
 
-impl<'e, 'd, K: Copy + Ord + std::fmt::Debug, T: TypedElement> ByKeyBuilder<'e, 'd, K, T> {
+impl<'e, 'd, K: GroupKey, T: TypedElement> ByKeyBuilder<'e, 'd, K, T> {
     pub(super) fn new(engine: &'e Engine, keys: &'d [K], values: &'d [T]) -> Self {
         ByKeyBuilder { engine, keys, values, op: Op::Sum, via_fleet: false }
     }
@@ -527,16 +558,27 @@ impl<'e, 'd, K: Copy + Ord + std::fmt::Debug, T: TypedElement> ByKeyBuilder<'e, 
         self
     }
 
-    /// Group `values` by key and reduce each group: keys are
-    /// stable-sorted (already-sorted inputs skip the permutation
-    /// entirely), grouped into CSR offsets, and routed through the
-    /// same segmented rung [`Engine::reduce_segments`] uses — small
-    /// groups fuse into one persistent host pass, large or numerous
-    /// groups take the one-pass fleet rung. Returns one `(key, value)`
-    /// pair per distinct key, in ascending key order; within a group,
-    /// values combine in input order (stable sort), so results are
+    /// Group `values` by key and reduce each group: the key column
+    /// runs through the shared grouping step
+    /// ([`crate::reduce::group::group_into_csr`] — already-sorted
+    /// inputs skip the permutation, narrow integer key ranges bucket
+    /// in O(n) via a stable radix scatter, everything else
+    /// stable-argsorts), and the grouped values route through the same
+    /// segmented rung [`Engine::reduce_segments`] uses — small groups
+    /// fuse into one persistent host pass, large or numerous groups
+    /// take a fleet rung. Returns one `(key, value)` pair per distinct
+    /// key, in ascending key order; within a group, values combine in
+    /// input order (every strategy is stable), so results are
     /// deterministic for unsorted and duplicate-key inputs.
     pub fn run(self) -> crate::Result<Reduced<Vec<(K, T)>>> {
+        Ok(self.run_with_sizes()?.0)
+    }
+
+    /// [`ByKeyBuilder::run`], additionally returning each group's
+    /// element count (aligned with the result pairs). The sizes fall
+    /// out of the CSR offsets the grouping already built, so this
+    /// costs nothing beyond one small allocation.
+    pub fn run_with_sizes(self) -> crate::Result<(Reduced<Vec<(K, T)>>, Vec<usize>)> {
         let ByKeyBuilder { engine, keys, values, op, via_fleet } = self;
         let t0 = Instant::now();
         if keys.len() != values.len() {
@@ -549,7 +591,7 @@ impl<'e, 'd, K: Copy + Ord + std::fmt::Debug, T: TypedElement> ByKeyBuilder<'e, 
         let n = keys.len();
         if n == 0 {
             let dt = t0.elapsed().as_secs_f64();
-            return Ok(Reduced::host(Vec::new(), ExecPath::Keyed { groups: 0 }, dt));
+            return Ok((Reduced::host(Vec::new(), ExecPath::Keyed { groups: 0 }, dt), Vec::new()));
         }
         let mut root = engine.trace().span("engine.reduce_by_key");
         if root.active() {
@@ -557,55 +599,40 @@ impl<'e, 'd, K: Copy + Ord + std::fmt::Debug, T: TypedElement> ByKeyBuilder<'e, 
             root.attr_str("dtype", T::DTYPE.name());
             root.attr_u64("n", n as u64);
         }
-        // Grouping contract (mirrored by the serving layer's fused
-        // keyed path, coordinator::service::exec_keyed_fused_typed,
-        // which must stay behaviourally identical — both ends are
-        // pinned to the same oracle by the conformance suite):
-        // ascending distinct keys, stable order within a group.
-        let sorted = keys.windows(2).all(|w| w[0] <= w[1]);
+        // Grouping contract (shared with the serving layer's fused
+        // keyed path, coordinator::service::exec_keyed_fused_typed —
+        // both ends call the same helper and are pinned to the same
+        // oracle by the conformance suite): ascending distinct keys,
+        // stable order within a group.
+        let g = group_into_csr(keys);
+        root.attr_str("grouping", format!("{:?}", g.strategy));
         let gathered: Vec<T>;
-        let grouped: &[T];
-        let mut group_keys: Vec<K> = Vec::new();
-        let mut offsets: Vec<usize> = vec![0];
-        if sorted {
-            // Fast path: already grouped — reduce in place, no copy.
-            grouped = values;
-            group_keys.push(keys[0]);
-            for i in 1..n {
-                if keys[i] != keys[i - 1] {
-                    offsets.push(i);
-                    group_keys.push(keys[i]);
-                }
+        let grouped: &[T] = match &g.perm {
+            // One parallel gather brings the values into grouped order.
+            Some(perm) => {
+                gathered = persistent::global().gather(values, perm);
+                &gathered
             }
-        } else {
-            // Stable argsort by key, then one parallel gather of the
-            // values into grouped order.
-            let mut idx: Vec<usize> = (0..n).collect();
-            idx.sort_by_key(|&i| keys[i]);
-            gathered = persistent::global().gather(values, &idx);
-            grouped = &gathered;
-            group_keys.push(keys[idx[0]]);
-            for r in 1..n {
-                if keys[idx[r]] != keys[idx[r - 1]] {
-                    offsets.push(r);
-                    group_keys.push(keys[idx[r]]);
-                }
-            }
-        }
-        offsets.push(n);
+            // Already grouped — reduce in place, no copy.
+            None => values,
+        };
 
-        let (vals, ex) = run_segments_core(engine, grouped, &offsets, op, via_fleet)?;
-        let groups = group_keys.len();
+        let (vals, ex) = run_segments_core(engine, grouped, &g.offsets, op, via_fleet)?;
+        let groups = g.keys.len();
         debug_assert_eq!(vals.len(), groups);
         root.attr_u64("groups", groups as u64);
-        Ok(Reduced {
-            value: group_keys.into_iter().zip(vals).collect(),
-            path: ExecPath::Keyed { groups },
-            elapsed_s: t0.elapsed().as_secs_f64(),
-            shards: ex.shards,
-            steals: ex.steals,
-            modeled_wall_s: ex.modeled_wall_s,
-        })
+        let sizes: Vec<usize> = g.offsets.windows(2).map(|w| w[1] - w[0]).collect();
+        Ok((
+            Reduced {
+                value: g.keys.into_iter().zip(vals).collect(),
+                path: ExecPath::Keyed { groups },
+                elapsed_s: t0.elapsed().as_secs_f64(),
+                shards: ex.shards,
+                steals: ex.steals,
+                modeled_wall_s: ex.modeled_wall_s,
+            },
+            sizes,
+        ))
     }
 }
 
@@ -781,5 +808,19 @@ mod tests {
         assert_eq!(r.path, ExecPath::Keyed { groups: 0 });
         // Mismatched lengths error, not panic.
         assert!(e.reduce_by_key(&[1i64, 2], &[1i32]).run().is_err());
+    }
+
+    #[test]
+    fn by_key_run_with_sizes_reports_group_counts() {
+        let e = host_engine();
+        let keys = [3i64, 1, 3, 2, 1, 3, 2, 2];
+        let vals = [10i32, 20, 30, 40, 50, 60, 70, 80];
+        let (r, sizes) = e.reduce_by_key(&keys, &vals).op(Op::Sum).run_with_sizes().unwrap();
+        assert_eq!(r.value, vec![(1i64, 70), (2, 190), (3, 100)]);
+        assert_eq!(sizes, vec![2, 3, 3], "sizes align with ascending group keys");
+        // Empty input: empty sizes.
+        let (r, sizes) = e.reduce_by_key::<i32, i32>(&[], &[]).run_with_sizes().unwrap();
+        assert!(r.value.is_empty());
+        assert!(sizes.is_empty());
     }
 }

@@ -4,18 +4,27 @@
 //! These are the simulator analogue of the host code in Harris' and
 //! Catanzaro's samples, and what the benchmark harness calls.
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use super::harris::{self, finite_identity};
-use super::{catanzaro, jradi, luitjens};
+use super::{catanzaro, jradi, jradi_segmented, luitjens};
 use crate::gpusim::ir::CombOp;
 use crate::gpusim::trace::RunStats;
 use crate::gpusim::{Gpu, LaunchConfig};
+use crate::reduce::kahan;
 
 /// Result of a full device-side reduction.
 #[derive(Debug, Clone)]
 pub struct Outcome {
     pub value: f64,
+    pub run: RunStats,
+}
+
+/// Result of a one-launch segmented reduction: one value per CSR
+/// segment, plus the (single-launch) run statistics.
+#[derive(Debug, Clone)]
+pub struct SegmentsOutcome {
+    pub values: Vec<f64>,
     pub run: RunStats,
 }
 
@@ -150,6 +159,91 @@ pub fn jradi_reduce_single(
     run.push(gpu.launch(&k, LaunchConfig { grid: 1, block })?);
     let value = gpu.read(parts)[0];
     Ok(Outcome { value, run })
+}
+
+/// Largest segment index whose start offset is `<= pos` — the host
+/// mirror of the kernel's device-side binary search.
+fn segment_of(offsets: &[usize], pos: usize) -> usize {
+    offsets.partition_point(|&o| o <= pos) - 1
+}
+
+/// One-launch many-segments reduction ([`jradi_segmented`]): a single
+/// persistent launch covers the whole CSR buffer, each block
+/// binary-searching the offsets for its span's segments and writing
+/// `(segment, partial)` pairs; the host folds the pairs per segment in
+/// block order (element order), Neumaier for sums — the shard-order
+/// combine the fleet uses everywhere else.
+///
+/// `offsets` must be a valid CSR list (`offsets[0] == 0`, monotone,
+/// `offsets.last() == data.len()`); callers above the pool validate,
+/// this driver re-checks the cheap invariants.
+pub fn jradi_reduce_segments(
+    gpu: &mut Gpu,
+    data: &[f64],
+    offsets: &[usize],
+    op: CombOp,
+    block: u32,
+) -> Result<SegmentsOutcome> {
+    if offsets.is_empty() || offsets[0] != 0 || *offsets.last().expect("non-empty") != data.len() {
+        bail!("segmented driver needs CSR offsets covering the data");
+    }
+    let n = data.len();
+    let segments = offsets.len() - 1;
+    if segments == 0 {
+        return Ok(SegmentsOutcome { values: Vec::new(), run: RunStats::default() });
+    }
+    if n == 0 {
+        // All segments empty: nothing to launch.
+        let values = vec![op.identity(); segments];
+        return Ok(SegmentsOutcome { values, run: RunStats::default() });
+    }
+    // Persistent grid, then spans re-derived so no block is empty:
+    // epb = ceil(n/grid) and grid = ceil(n/epb) tile [0, n) exactly.
+    let grid = persistent_grid(gpu, n, block, block);
+    let epb = (n as u64).div_ceil(grid as u64);
+    let grid = (n as u64).div_ceil(epb) as u32;
+
+    let mut run = RunStats::default();
+    gpu.reset();
+    let _in = gpu.alloc_from(data);
+    let offs_f: Vec<f64> = offsets.iter().map(|&o| o as f64).collect();
+    let _offs = gpu.alloc_from(&offs_f);
+    // Each block emits at most (its segment count) pairs at disjoint
+    // indices `segment + bid`; `segments + grid` bounds the last one.
+    let parts = gpu.alloc(segments + grid as usize);
+    let segids = gpu.alloc(segments + grid as usize);
+    let prog = jradi_segmented::kernel(op, block, n as u64, segments as u64, epb)?;
+    run.push(gpu.launch(&prog, LaunchConfig { grid, block })?);
+    let parts = gpu.read(parts).to_vec();
+    let segids = gpu.read(segids).to_vec();
+
+    // Fold the pairs per segment, blocks in span order (= element
+    // order). Empty segments never accumulate: ones strictly inside a
+    // span wrote an identity filler (skipped here), ones on a span
+    // boundary wrote nothing.
+    let mut contributions: Vec<Vec<f64>> = vec![Vec::new(); segments];
+    for b in 0..grid as usize {
+        let lo = b * epb as usize;
+        let hi = ((b + 1) * epb as usize).min(n);
+        let (sb, eb) = (segment_of(offsets, lo), segment_of(offsets, hi - 1));
+        for s in sb..=eb {
+            if offsets[s] == offsets[s + 1] {
+                continue;
+            }
+            let w = s + b;
+            debug_assert_eq!(segids[w] as usize, s, "block {b} wrote a misplaced pair");
+            contributions[s].push(parts[w]);
+        }
+    }
+    let values = contributions
+        .iter()
+        .map(|c| match op {
+            _ if c.is_empty() => op.identity(),
+            CombOp::Add => kahan::sum_neumaier_f64(c),
+            _ => c.iter().fold(op.identity(), |a, &b| op.apply(a, b)),
+        })
+        .collect();
+    Ok(SegmentsOutcome { values, run })
 }
 
 /// Luitjens' shuffle reduction (extension kernel, ablation bench).

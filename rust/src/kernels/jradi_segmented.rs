@@ -1,0 +1,289 @@
+//! One-launch many-segments segmented reduction (the paper's
+//! persistent-threads argument applied *across segments*).
+//!
+//! The per-task fleet path (PR 5) pays one steal-queue task — and one
+//! modeled kernel launch — per segment, so for the all-small-segments
+//! regime launch overhead multiplies with the segment count and the
+//! fused host pass wins. This kernel keeps the paper's structure (§2.5
+//! persistent threads, §3 algebraic expressions) but covers the whole
+//! CSR buffer in **one** launch:
+//!
+//! 1. The host tiles the element range evenly: block `b` owns
+//!    `[b*epb, min((b+1)*epb, n))` with `epb = ceil(n/grid)`, so no
+//!    block is empty and spans tile `[0, n)` exactly.
+//! 2. Each block **binary-searches the CSR offsets** (block-uniform,
+//!    branch-free body) for the segments touching its span:
+//!    `s_b = seg(lo)`, `e_b = seg(hi-1)`.
+//! 3. It walks segments `s_b..=e_b`; per segment the intersection with
+//!    the span is loaded with the paper's **algebraic masks** (Listing
+//!    5's `(a<b)*a + (a>=b)*b` — no divergent per-element branch) and
+//!    folded through the branch-free lockstep shared-memory tree
+//!    (Listing 6). Segment boundaries are thus "flushed" by loop
+//!    structure, not by per-element `if`s.
+//! 4. Work-item 0 writes the `(segment, partial)` pair at index
+//!    `segment + b` — blocks never collide because consecutive spans
+//!    share at most one segment (`s_{b+1} >= e_b`), giving
+//!    `e_b + b < s_{b+1} + (b+1)`. The host (or a tiny second launch)
+//!    folds the pairs per segment in block order, which is element
+//!    order.
+//!
+//! Empty segments strictly inside a span contribute an identity
+//! partial (their intersection is empty, so the accumulator never
+//! moves); the driver overwrites those with the true identity
+//! host-side. All control flow is derived from `Bid` — block-uniform —
+//! so the whole-block lockstep machine the paper's tree assumes stays
+//! sound here.
+
+use anyhow::{bail, Result};
+
+use super::builder::{imm, r, Asm};
+use super::harris::finite_identity;
+use crate::gpusim::ir::{CombOp, Program, Reg, Sreg};
+
+const TID: u8 = 0;
+const BID: u8 = 1;
+const LO: u8 = 2; // span start (block-uniform)
+const HI: u8 = 3; // span end (exclusive)
+const SEG: u8 = 4; // current segment
+const EB1: u8 = 5; // last segment + 1 (loop bound)
+const SLO: u8 = 6; // segment ∩ span start
+const SHI: u8 = 7; // segment ∩ span end
+const POS: u8 = 8; // strided trip base
+const IK: u8 = 9; // per-thread element index
+const ACC: u8 = 10;
+const FLAG: u8 = 11;
+const NFLAG: u8 = 12;
+const IDX: u8 = 13;
+const V: u8 = 14;
+const T0: u8 = 15;
+const T1: u8 = 16;
+const IPOS: u8 = 17;
+const BLEN: u8 = 18; // binary search: live range length
+const BH: u8 = 19; // binary search: half
+const PRB: u8 = 20; // binary search: probed offset
+
+/// Emit a block-uniform binary search over buffer 1 (the CSR offsets,
+/// `segments + 1` entries): `dst = ` the largest `s` with
+/// `offsets[s] <= tgt`. Branch-free body (the masked-pair update from
+/// Listing 5), one backward branch on the shrinking range length.
+/// `tgt` must be none of the scratch registers and survives.
+fn emit_seg_search(a: &mut Asm, segments: u64, tgt: Reg, dst: Reg, label: &str) {
+    a.mov(dst, imm(0.0)).mov(BLEN, imm((segments + 1) as f64));
+    a.label(label);
+    a.shr(BH, BLEN, imm(1.0)) // half = len >> 1 (>= 1 while len > 1)
+        .add(T0, dst, r(BH)) // mid = lo + half
+        .ldg(PRB, 1, T0)
+        .set_ge(FLAG, tgt, r(PRB)) // offsets[mid] <= tgt: answer in upper half
+        .set_lt(NFLAG, tgt, r(PRB))
+        .mul(T0, FLAG, r(BH))
+        .add(dst, dst, r(T0)) // lo += flag * half
+        .sub(T0, BLEN, r(BH))
+        .mul(T0, T0, r(FLAG)) // flag * (len - half)
+        .mul(BH, BH, r(NFLAG)) // (1 - flag) * half
+        .add(BLEN, T0, r(BH))
+        .sub(T0, BLEN, imm(1.0))
+        .branz(T0, label); // while len > 1
+}
+
+/// Build the one-launch segmented kernel: `n` data elements (buffer
+/// 0), `segments + 1` CSR offsets (buffer 1), `(partial, segment)`
+/// pairs out (buffers 2 and 3, `>= segments + grid` elements each),
+/// `epb` elements per block.
+pub fn kernel(op: CombOp, block: u32, n: u64, segments: u64, epb: u64) -> Result<Program> {
+    if !block.is_power_of_two() || block < 2 {
+        bail!("segmented kernel needs a power-of-two block >= 2, got {block}");
+    }
+    if n == 0 || segments == 0 {
+        bail!("segmented kernel needs n >= 1 and segments >= 1");
+    }
+    if epb == 0 {
+        bail!("segmented kernel needs at least one element per block");
+    }
+    let mut a = Asm::new(format!("jradi_seg_{op:?}_b{block}"));
+    a.smem(block).lockstep();
+    let ident = finite_identity(op);
+
+    // -- Span: [lo, hi) = [bid*epb, min((bid+1)*epb, n)).
+    a.special(TID, Sreg::Tid)
+        .special(BID, Sreg::Bid)
+        .mul(LO, BID, imm(epb as f64))
+        .add(HI, LO, imm(epb as f64))
+        .set_lt(FLAG, HI, imm(n as f64))
+        .set_ge(NFLAG, HI, imm(n as f64))
+        .mul(HI, HI, r(FLAG))
+        .mul(T0, NFLAG, imm(n as f64))
+        .add(HI, HI, r(T0));
+
+    // -- Segment span: s_b = seg(lo), e_b = seg(hi - 1).
+    emit_seg_search(&mut a, segments, LO, SEG, "bs_lo");
+    a.sub(T1, HI, imm(1.0));
+    emit_seg_search(&mut a, segments, T1, EB1, "bs_hi");
+    a.add(EB1, EB1, imm(1.0)); // loop bound: seg < e_b + 1
+
+    // -- Per-segment loop (all bounds block-uniform).
+    a.label("seg");
+    // slo = max(offsets[seg], lo)
+    a.ldg(T0, 1, SEG)
+        .set_ge(FLAG, T0, r(LO))
+        .set_lt(NFLAG, T0, r(LO))
+        .mul(SLO, T0, r(FLAG))
+        .mul(T0, NFLAG, r(LO))
+        .add(SLO, SLO, r(T0));
+    // shi = min(offsets[seg + 1], hi)
+    a.add(T1, SEG, imm(1.0))
+        .ldg(T0, 1, T1)
+        .set_lt(FLAG, T0, r(HI))
+        .set_ge(NFLAG, T0, r(HI))
+        .mul(SHI, T0, r(FLAG))
+        .mul(T0, NFLAG, r(HI))
+        .add(SHI, SHI, r(T0));
+    a.mov(ACC, imm(ident)).mov(POS, r(SLO));
+
+    // -- Strided masked loads over the intersection (Listing 4 shape,
+    //    upper bound masked algebraically — Listing 5).
+    a.label("elem");
+    a.set_lt(T0, POS, r(SHI)).braz(T0, "elem_done");
+    a.add(IK, POS, r(TID))
+        .set_lt(FLAG, IK, r(SHI))
+        .set_ge(NFLAG, IK, r(SHI))
+        .mul(IDX, FLAG, r(IK))
+        .ldg(V, 0, IDX)
+        .mul(V, V, r(FLAG))
+        .mul(T0, NFLAG, imm(ident))
+        .add(V, V, r(T0))
+        .comb(op, ACC, ACC, r(V))
+        .add(POS, POS, imm(block as f64))
+        .jmp("elem");
+    a.label("elem_done");
+
+    // -- Branch-free, barrier-free lockstep tree (Listing 6).
+    a.sts(TID, ACC).mov(IPOS, imm((block / 2) as f64));
+    a.label("tree");
+    a.set_lt(FLAG, TID, r(IPOS))
+        .set_ge(NFLAG, TID, r(IPOS))
+        .mul(T0, FLAG, r(IPOS))
+        .add(T0, T0, r(TID))
+        .lds(V, T0)
+        .mul(V, V, r(FLAG))
+        .mul(T0, NFLAG, imm(ident))
+        .add(V, V, r(T0))
+        .lds(T1, TID)
+        .comb(op, T1, T1, r(V))
+        .sts(TID, T1)
+        .shr(IPOS, IPOS, imm(1.0))
+        .branz(IPOS, "tree");
+
+    // -- Work-item 0 flushes the (partial, segment) pair at seg + bid.
+    a.set_eq(T0, TID, imm(0.0))
+        .braz(T0, "skip_write")
+        .lds(V, TID)
+        .add(T1, SEG, r(BID))
+        .stg(2, T1, V)
+        .stg(3, T1, SEG)
+        .label("skip_write");
+
+    a.add(SEG, SEG, imm(1.0)).set_lt(T0, SEG, r(EB1)).branz(T0, "seg");
+    a.halt();
+    a.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::drivers::jradi_reduce_segments;
+    use super::*;
+    use crate::gpusim::{DeviceConfig, Gpu};
+
+    fn data(n: usize) -> Vec<f64> {
+        // Integer-valued, so f64 sums are exact under any fold order.
+        (0..n).map(|i| ((i * 2_654_435_761) % 201) as f64 - 100.0).collect()
+    }
+
+    fn oracle(d: &[f64], offsets: &[usize], op: CombOp) -> Vec<f64> {
+        offsets
+            .windows(2)
+            .map(|w| d[w[0]..w[1]].iter().fold(op.identity(), |a, &b| op.apply(a, b)))
+            .collect()
+    }
+
+    fn check(d: &[f64], offsets: &[usize], op: CombOp, block: u32) {
+        let mut gpu = Gpu::new(DeviceConfig::tesla_c2075());
+        let out = jradi_reduce_segments(&mut gpu, d, offsets, op, block).unwrap();
+        assert_eq!(out.values, oracle(d, offsets, op), "op={op:?} block={block}");
+        assert_eq!(out.run.launches.len(), 1, "one launch covers every segment");
+    }
+
+    #[test]
+    fn many_small_segments_single_launch() {
+        let n = 10_000;
+        let d = data(n);
+        let offsets: Vec<usize> = (0..=n).step_by(40).chain((n % 40 != 0).then_some(n)).collect();
+        for op in [CombOp::Add, CombOp::Max, CombOp::Min] {
+            check(&d, &offsets, op, 256);
+        }
+    }
+
+    #[test]
+    fn mixed_segment_sizes() {
+        let d = data(5000);
+        let offsets = vec![0, 1, 3, 1000, 1001, 4000, 4999, 5000];
+        for op in [CombOp::Add, CombOp::Max, CombOp::Min] {
+            for block in [64, 256] {
+                check(&d, &offsets, op, block);
+            }
+        }
+    }
+
+    #[test]
+    fn boundary_at_every_element() {
+        let n = 700;
+        let d = data(n);
+        let offsets: Vec<usize> = (0..=n).collect();
+        check(&d, &offsets, CombOp::Add, 128);
+        check(&d, &offsets, CombOp::Min, 128);
+    }
+
+    #[test]
+    fn empty_segments_get_the_identity() {
+        let d = data(1000);
+        // Empty segments at the front, interior and back.
+        let offsets = vec![0, 0, 300, 300, 300, 900, 1000, 1000];
+        let mut gpu = Gpu::new(DeviceConfig::tesla_c2075());
+        for op in [CombOp::Add, CombOp::Max, CombOp::Min] {
+            let out = jradi_reduce_segments(&mut gpu, &d, &offsets, op, 256).unwrap();
+            assert_eq!(out.values, oracle(&d, &offsets, op), "op={op:?}");
+            assert_eq!(out.values[0], op.identity());
+            assert_eq!(out.values[2], op.identity());
+            assert_eq!(out.values[6], op.identity());
+        }
+    }
+
+    #[test]
+    fn whole_buffer_span_matches_flat_reduce() {
+        let d = data(200_000);
+        let offsets = vec![0, d.len()];
+        check(&d, &offsets, CombOp::Add, 256);
+        check(&d, &offsets, CombOp::Max, 256);
+    }
+
+    #[test]
+    fn product_uses_finite_identity_masks() {
+        // Mostly-ones payload keeps products exactly representable.
+        let mut d = vec![1.0; 3000];
+        for i in (0..3000).step_by(7) {
+            d[i] = 2.0;
+        }
+        for i in (0..3000).step_by(11) {
+            d[i] = 0.5;
+        }
+        let offsets = vec![0, 500, 501, 2999, 3000];
+        check(&d, &offsets, CombOp::Mul, 128);
+    }
+
+    #[test]
+    fn rejects_bad_args() {
+        assert!(kernel(CombOp::Add, 100, 10, 2, 5).is_err()); // non-pow2 block
+        assert!(kernel(CombOp::Add, 128, 0, 1, 5).is_err()); // empty data
+        assert!(kernel(CombOp::Add, 128, 10, 0, 5).is_err()); // no segments
+        assert!(kernel(CombOp::Add, 128, 10, 2, 0).is_err()); // empty blocks
+    }
+}

@@ -7,6 +7,7 @@
 //! | Harris K1–K7 | [`harris`] | §2.1, Table 1 |
 //! | Catanzaro two-stage | [`catanzaro`] | §2.3, Listing 1 |
 //! | Jradi et al. (this paper), unroll factor F | [`jradi`] | §3, Listings 4–6 |
+//! | One-launch segmented (extension) | [`jradi_segmented`] | §2.5 + §3 applied across segments |
 //! | Luitjens shuffle (extension) | [`luitjens`] | §2.2 |
 
 pub mod builder;
@@ -14,8 +15,10 @@ pub mod catanzaro;
 pub mod drivers;
 pub mod harris;
 pub mod jradi;
+pub mod jradi_segmented;
 pub mod luitjens;
 
 pub use drivers::{
-    catanzaro_reduce, harris_reduce, jradi_reduce, luitjens_reduce, Outcome,
+    catanzaro_reduce, harris_reduce, jradi_reduce, jradi_reduce_segments, luitjens_reduce, Outcome,
+    SegmentsOutcome,
 };

@@ -94,9 +94,12 @@ USAGE: parred <info|tables|sim|reduce|serve> [options]
         [--artifacts DIR] [--pool=1 --pool-devices SPEC [--pool-cutoff N]]
         [--adaptive] [--sched-snapshot PATH]
         [--trace-out PATH] [--metrics-out PATH]
-        [--chaos SPEC] [--deadline-ms N]
+        [--chaos SPEC] [--deadline-ms N] [--segments K]
         end-to-end serving driver (--pool shards large payloads
-        across a fleet of simulated devices)
+        across a fleet of simulated devices). --segments K demos the
+        segmented serving surface instead: each request submits a
+        ragged payload through Service::submit_segments and every
+        per-segment value is verified against a host oracle.
 
   reduce --explain prints the scheduler's decision path before the
   run: the placement, the cutoffs in force, and the modeled cost of
@@ -547,6 +550,19 @@ fn serve(args: &Args) -> Result<()> {
         trace_out: args.get("trace-out").map(str::to_string),
         metrics_out: args.get("metrics-out").map(str::to_string),
     };
+    // `serve --segments K` demos the segmented serving surface
+    // instead of the scalar trace.
+    let segments = args.get_usize("segments", 0)?;
+    if segments > 0 {
+        return serve_segments(
+            cfg,
+            args.get_usize("requests", 8)?,
+            args.get_usize("payload", 65_536)?,
+            segments,
+            parse_op(args)?,
+            args.get_usize("seed", 42)? as u64,
+        );
+    }
     let trace = TraceConfig {
         requests: args.get_usize("requests", 200)?,
         payload_n: args.get_usize("payload", 65_536)?,
@@ -557,5 +573,89 @@ fn serve(args: &Args) -> Result<()> {
     };
     let report = parred::coordinator::service::run_trace(cfg, trace)?;
     println!("{report}");
+    Ok(())
+}
+
+/// `parred serve --segments K`: submit segmented (ragged) reductions
+/// through [`parred::coordinator::service::Service::submit_segments`],
+/// verify every per-segment value against a host oracle, and print
+/// the metrics report (the segmented latency band included).
+fn serve_segments(
+    cfg: parred::coordinator::service::ServiceConfig,
+    requests: usize,
+    payload_n: usize,
+    segments: usize,
+    op: Op,
+    seed: u64,
+) -> Result<()> {
+    use parred::coordinator::service::Service;
+    use parred::runtime::literal::HostVec;
+    let svc = Service::start(cfg)?;
+    let mut rng = Rng::new(seed);
+    let mut pending = Vec::with_capacity(requests);
+    for i in 0..requests {
+        let data = rng.f32_vec(payload_n, -1.0, 1.0);
+        // Random cuts; duplicates make empty segments (identity path).
+        let mut cuts: Vec<usize> =
+            (0..segments.saturating_sub(1)).map(|_| rng.range(0, payload_n)).collect();
+        cuts.sort_unstable();
+        let mut offsets = vec![0usize];
+        offsets.extend(cuts);
+        offsets.push(payload_n);
+        // Oracle + tolerance mirror the conformance suite: f64
+        // Neumaier reference for sums, tolerance scaled by the
+        // segment's L1 mass (float sums agree to ~1e-5 of L1 across
+        // paths; min/max/prod match the scalar fold exactly).
+        let want: Vec<(f64, f64)> = offsets
+            .windows(2)
+            .map(|w| {
+                let seg = &data[w[0]..w[1]];
+                let v = match op {
+                    Op::Sum => parred::reduce::kahan::sum_f64(seg),
+                    _ => parred::reduce::reduce_scalar(seg, op) as f64,
+                };
+                let l1: f64 = seg.iter().map(|&x| x.abs() as f64).sum();
+                (v, 1e-4 * l1.max(1.0))
+            })
+            .collect();
+        let rx = svc
+            .submit_segments(op, HostVec::F32(data), offsets)
+            .map_err(|e| anyhow!("submitting segmented request {i}: {e}"))?;
+        pending.push((i, rx, want));
+    }
+    let mut first_path = None;
+    for (i, rx, want) in pending {
+        let resp = rx
+            .recv_timeout(std::time::Duration::from_secs(60))
+            .map_err(|_| anyhow!("segmented request {i} timed out"))?;
+        let values = resp.values.map_err(|e| anyhow!("segmented request {i} failed: {e}"))?;
+        anyhow::ensure!(
+            values.len() == want.len(),
+            "request {i}: {} segment values, wanted {}",
+            values.len(),
+            want.len()
+        );
+        for (s, (v, (w, tol))) in values.iter().zip(&want).enumerate() {
+            let got = v.as_f64();
+            // Exact equality first: empty-segment identities can be
+            // infinite (min/max), where the difference is NaN.
+            anyhow::ensure!(
+                got == *w || (got - w).abs() <= *tol,
+                "request {i} segment {s}: got {v} want {w}"
+            );
+        }
+        if first_path.is_none() {
+            first_path = Some(resp.path);
+        }
+    }
+    println!(
+        "=== serve segments: {requests} requests x {payload_n} f32 in {segments} segments ({op}) ===",
+    );
+    if let Some(p) = first_path {
+        println!("path={p:?}");
+    }
+    let metrics = svc.shutdown();
+    print!("{}", metrics.report());
+    println!("all per-segment values verified against host oracle");
     Ok(())
 }

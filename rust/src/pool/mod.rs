@@ -109,6 +109,7 @@ struct Task {
     id: usize,
     data: Arc<Vec<f64>>,
     shard: Shard,
+    kind: TaskKind,
     op: CombOp,
     /// Span id of the `pool.pass` that enqueued this task (0 when
     /// tracing is disabled) — the cross-thread parent link for the
@@ -117,13 +118,56 @@ struct Task {
     reply: mpsc::Sender<TaskResult>,
 }
 
+/// How a worker executes its shard's slice.
+#[derive(Clone)]
+enum TaskKind {
+    /// Flat reduction of the slice to one scalar (the paper's kernel,
+    /// single- or two-launch by size).
+    Flat,
+    /// One-launch segmented kernel over the slice
+    /// ([`drivers::jradi_reduce_segments`]): `offsets` is the
+    /// slice-local CSR (first 0, last == slice length); the output
+    /// carries one partial per local segment.
+    Segments { offsets: Arc<Vec<usize>> },
+}
+
+/// A task blueprint: where the slice lives and how to reduce it. The
+/// dispatcher clones the kind on retry (cheap — `Arc`'d offsets).
+struct TaskSpec {
+    shard: Shard,
+    kind: TaskKind,
+}
+
+fn flat_specs(shards: impl IntoIterator<Item = Shard>) -> Vec<TaskSpec> {
+    shards.into_iter().map(|shard| TaskSpec { shard, kind: TaskKind::Flat }).collect()
+}
+
+/// What one task produces: a scalar (flat) or one partial per local
+/// segment (one-launch segmented).
+#[derive(Debug, Clone)]
+enum TaskOutput {
+    Scalar(f64),
+    Segments(Vec<f64>),
+}
+
+impl TaskOutput {
+    fn scalar(&self) -> f64 {
+        match self {
+            TaskOutput::Scalar(v) => *v,
+            TaskOutput::Segments(_) => {
+                unreachable!("flat waves only ever carry scalar outputs")
+            }
+        }
+    }
+}
+
 /// What a worker reports back per shard.
 struct TaskResult {
     id: usize,
     worker: usize,
     stolen: bool,
-    /// `(partial value, modeled device seconds)` or a typed failure.
-    outcome: std::result::Result<(f64, f64), TaskFailure>,
+    /// `(task output, modeled device seconds)` or a typed failure.
+    outcome: std::result::Result<(TaskOutput, f64), TaskFailure>,
 }
 
 /// How one task failed — the dispatcher's retry policy keys off this.
@@ -153,7 +197,7 @@ pub const MAX_TASK_ATTEMPTS: u32 = 4;
 
 /// Accumulated state of one wave of tasks (internal).
 struct Wave {
-    partials: Vec<f64>,
+    outputs: Vec<TaskOutput>,
     busy: Vec<f64>,
     steals: u64,
     reexecuted: usize,
@@ -164,13 +208,18 @@ struct Wave {
 impl Wave {
     fn new(op: CombOp, total: usize, workers: usize) -> Wave {
         Wave {
-            partials: vec![op.identity(); total],
+            outputs: (0..total).map(|_| TaskOutput::Scalar(op.identity())).collect(),
             busy: vec![0.0; workers],
             steals: 0,
             reexecuted: 0,
             faults: vec![0; workers],
             dead: vec![false; workers],
         }
+    }
+
+    /// The per-task scalar partials of a flat wave, in task order.
+    fn scalar_partials(&self) -> Vec<f64> {
+        self.outputs.iter().map(TaskOutput::scalar).collect()
     }
 
     fn into_outcome(self, value: f64, shards: usize) -> PoolOutcome {
@@ -233,6 +282,22 @@ pub struct PoolCounters {
     pub tasks_executed: u64,
     pub steals: u64,
     pub peak_depth: u64,
+}
+
+/// How a segmented fleet pass is executed
+/// ([`DevicePool::reduce_segments_elems_mode`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SegMode {
+    /// One steal-queue task per (shard ∩ segment) piece
+    /// ([`segment_tasks`]): fine-grained stealing, but each segment
+    /// pays its own kernel launch — right for few large segments.
+    Tasks,
+    /// One persistent launch per contiguous device run of the plan
+    /// ([`crate::kernels::jradi_segmented`]): each block
+    /// binary-searches the CSR for its span, so launch overhead is
+    /// paid once per device instead of once per segment — right for
+    /// many small segments.
+    OneLaunch,
 }
 
 /// A fleet of simulated GPUs behind work-stealing worker threads.
@@ -379,11 +444,12 @@ impl DevicePool {
         let mut pass = self.cfg.trace.span("pool.pass");
         pass.attr_u64("tasks", plan.shards.len() as u64);
         pass.attr_u64("devices", workers as u64);
-        let wave = self.execute_wave(payload, op, &plan.shards, &mut pass)?;
+        let specs = flat_specs(plan.shards.iter().copied());
+        let wave = self.execute_wave(payload, op, &specs, &mut pass)?;
 
         let value = {
             let _combine = self.cfg.trace.span("pool.combine");
-            combine(op, &wave.partials)
+            combine(op, &wave.scalar_partials())
         };
         Ok(wave.into_outcome(value, plan.shards.len()))
     }
@@ -400,17 +466,24 @@ impl DevicePool {
         &self,
         payload: Arc<Vec<f64>>,
         op: CombOp,
-        shards: &[Shard],
+        tasks: &[TaskSpec],
         pass: &mut crate::telemetry::Span,
     ) -> Result<Wave> {
         let workers = self.num_devices();
-        let total = shards.len();
+        let total = tasks.len();
         let parent_span = pass.id();
         let (tx, rx) = mpsc::channel::<TaskResult>();
-        self.queues.push_all(shards.iter().enumerate().map(|(id, &shard)| {
-            let task =
-                Task { id, data: payload.clone(), shard, op, parent_span, reply: tx.clone() };
-            (shard.device, task)
+        self.queues.push_all(tasks.iter().enumerate().map(|(id, spec)| {
+            let task = Task {
+                id,
+                data: payload.clone(),
+                shard: spec.shard,
+                kind: spec.kind.clone(),
+                op,
+                parent_span,
+                reply: tx.clone(),
+            };
+            (spec.shard.device, task)
         }));
         // Deliberately NOT dropped yet: retries need to re-enqueue
         // tasks carrying live reply senders.
@@ -451,8 +524,8 @@ impl DevicePool {
                 }
             };
             match r.outcome {
-                Ok((value, modeled_s)) => {
-                    wave.partials[r.id] = value;
+                Ok((output, modeled_s)) => {
+                    wave.outputs[r.id] = output;
                     wave.busy[r.worker] += modeled_s;
                     wave.steals += r.stolen as u64;
                     done += 1;
@@ -501,7 +574,8 @@ impl DevicePool {
                         Task {
                             id: r.id,
                             data: payload.clone(),
-                            shard: shards[r.id],
+                            shard: tasks[r.id].shard,
+                            kind: tasks[r.id].kind.clone(),
                             op,
                             parent_span,
                             reply: tx.clone(),
@@ -613,13 +687,15 @@ impl DevicePool {
                 });
             }
         }
-        let wave = self.execute_wave(payload, cop, &shards, &mut pass)?;
+        let specs = flat_specs(shards);
+        let wave = self.execute_wave(payload, cop, &specs, &mut pass)?;
 
         let _combine_span = self.cfg.trace.span("pool.combine");
+        let partials = wave.scalar_partials();
         let values: Vec<T> = (0..rows)
-            .map(|r| T::from_f64(combine(cop, &wave.partials[r * per_row..(r + 1) * per_row])))
+            .map(|r| T::from_f64(combine(cop, &partials[r * per_row..(r + 1) * per_row])))
             .collect();
-        let value = combine(cop, &wave.partials);
+        let value = combine(cop, &partials);
         Ok((values, wave.into_outcome(value, total)))
     }
 
@@ -651,6 +727,25 @@ impl DevicePool {
         op: Op,
         plan: &ShardPlan,
     ) -> Result<(Vec<T>, PoolOutcome)> {
+        self.reduce_segments_elems_mode(data, offsets, op, plan, SegMode::Tasks)
+    }
+
+    /// [`Self::reduce_segments_elems`] with an explicit execution mode
+    /// ([`SegMode`]): per-segment steal-queue tasks, or the one-launch
+    /// segmented kernel (one persistent launch per contiguous device
+    /// run of the plan). Both produce identical values for
+    /// integer-valued payloads; float sums agree within the pool's
+    /// compensation tolerance. The scheduler picks the mode from its
+    /// learned per-task / per-launch overheads
+    /// ([`crate::sched::Scheduler::decide_segments`]).
+    pub fn reduce_segments_elems_mode<T: Element>(
+        &self,
+        data: &[T],
+        offsets: &[usize],
+        op: Op,
+        plan: &ShardPlan,
+        mode: SegMode,
+    ) -> Result<(Vec<T>, PoolOutcome)> {
         let n = data.len();
         validate_csr_offsets(offsets, n)?;
         let workers = self.num_devices();
@@ -669,10 +764,29 @@ impl DevicePool {
         }
 
         let segments = offsets.len() - 1;
-        let mut values = vec![T::identity(op); segments];
+        let values = vec![T::identity(op); segments];
         if n == 0 {
             return Ok((values, PoolOutcome::empty(CombOp::from(op), workers)));
         }
+        match mode {
+            SegMode::Tasks => self.reduce_segments_tasks(data, offsets, op, plan, values),
+            SegMode::OneLaunch => self.reduce_segments_one_launch(data, offsets, op, plan, values),
+        }
+    }
+
+    /// Per-segment steal-queue wave (PR 5): the plan is intersected
+    /// with the segment boundaries ([`segment_tasks`]), one task per
+    /// piece.
+    fn reduce_segments_tasks<T: Element>(
+        &self,
+        data: &[T],
+        offsets: &[usize],
+        op: Op,
+        plan: &ShardPlan,
+        mut values: Vec<T>,
+    ) -> Result<(Vec<T>, PoolOutcome)> {
+        let workers = self.num_devices();
+        let segments = values.len();
         let cop = CombOp::from(op);
         let tasks = segment_tasks(plan, offsets);
         let total = tasks.len();
@@ -681,12 +795,12 @@ impl DevicePool {
         pass.attr_u64("tasks", total as u64);
         pass.attr_u64("devices", workers as u64);
         pass.attr_u64("segments", segments as u64);
-        let shards: Vec<Shard> = tasks
-            .iter()
-            .map(|t| Shard { device: t.device, start: t.start, end: t.end })
-            .collect();
-        let wave = self.execute_wave(payload, cop, &shards, &mut pass)?;
+        let specs = flat_specs(
+            tasks.iter().map(|t| Shard { device: t.device, start: t.start, end: t.end }),
+        );
+        let wave = self.execute_wave(payload, cop, &specs, &mut pass)?;
         let _combine_span = self.cfg.trace.span("pool.combine");
+        let partials = wave.scalar_partials();
 
         // Per-segment combine in task order (tasks are emitted in
         // element order, so this is position order — deterministic
@@ -696,7 +810,7 @@ impl DevicePool {
         for (s, v) in values.iter_mut().enumerate() {
             seg_partials.clear();
             while t < total && tasks[t].segment == s {
-                seg_partials.push(wave.partials[t]);
+                seg_partials.push(partials[t]);
                 t += 1;
             }
             if !seg_partials.is_empty() {
@@ -705,7 +819,98 @@ impl DevicePool {
         }
         debug_assert_eq!(t, total, "every task must belong to a segment");
 
-        let value = combine(cop, &wave.partials);
+        let value = combine(cop, &partials);
+        Ok((values, wave.into_outcome(value, total)))
+    }
+
+    /// One-launch segmented wave: the plan's shards are merged into
+    /// contiguous per-device runs, and each run executes the whole of
+    /// its element range — every segment it touches — in **one**
+    /// persistent launch ([`drivers::jradi_reduce_segments`]). Launch
+    /// overhead is paid per run (≈ per device), not per segment, which
+    /// is what makes the many-small-segments regime competitive with
+    /// the fused host pass. Segments spanning a run boundary combine
+    /// their run partials in run (element) order, Neumaier for sums.
+    fn reduce_segments_one_launch<T: Element>(
+        &self,
+        data: &[T],
+        offsets: &[usize],
+        op: Op,
+        plan: &ShardPlan,
+        mut values: Vec<T>,
+    ) -> Result<(Vec<T>, PoolOutcome)> {
+        let workers = self.num_devices();
+        let segments = values.len();
+        let cop = CombOp::from(op);
+
+        // Merge the plan into contiguous same-device runs: the
+        // fine-grained shards exist for steal slack, but one launch
+        // per run already amortizes dispatch — fewer, larger tasks.
+        let mut runs: Vec<Shard> = Vec::new();
+        for s in &plan.shards {
+            match runs.last_mut() {
+                Some(last) if last.device == s.device && last.end == s.start => last.end = s.end,
+                _ => runs.push(*s),
+            }
+        }
+
+        // Slice-local CSR per run: global offsets clamped to the run
+        // and rebased, so the driver sees a self-contained buffer.
+        let seg_of = |pos: usize| offsets.partition_point(|&o| o <= pos) - 1;
+        let mut specs = Vec::with_capacity(runs.len());
+        let mut bases = Vec::with_capacity(runs.len());
+        for run in &runs {
+            let (sb, eb) = (seg_of(run.start), seg_of(run.end - 1));
+            let local: Vec<usize> = (sb..=eb + 1)
+                .map(|s| offsets[s].clamp(run.start, run.end) - run.start)
+                .collect();
+            bases.push(sb);
+            specs.push(TaskSpec {
+                shard: *run,
+                kind: TaskKind::Segments { offsets: Arc::new(local) },
+            });
+        }
+
+        let payload: Arc<Vec<f64>> = Arc::new(crate::reduce::persistent::global().map_f64(data));
+        let mut pass = self.cfg.trace.span("pool.pass");
+        pass.attr_u64("tasks", specs.len() as u64);
+        pass.attr_u64("devices", workers as u64);
+        pass.attr_u64("segments", segments as u64);
+        pass.attr_str("mode", "one_launch");
+        let total = specs.len();
+        let wave = self.execute_wave(payload, cop, &specs, &mut pass)?;
+        let _combine_span = self.cfg.trace.span("pool.combine");
+
+        // Stitch run partials back onto global segments, runs in
+        // element order. Only boundary segments can receive more than
+        // one partial; empty segments receive none and keep the
+        // identity.
+        let mut contributions: Vec<Vec<f64>> = vec![Vec::new(); segments];
+        for (r, out) in wave.outputs.iter().enumerate() {
+            let TaskOutput::Segments(vals) = out else {
+                unreachable!("one-launch waves only carry segment outputs")
+            };
+            let base = bases[r];
+            let run = &runs[r];
+            for (i, &v) in vals.iter().enumerate() {
+                let s = base + i;
+                // Skip the driver's identity filler for empty local
+                // segments (globally empty or clamped to nothing).
+                if offsets[s].clamp(run.start, run.end) < offsets[s + 1].clamp(run.start, run.end)
+                {
+                    contributions[s].push(v);
+                }
+            }
+        }
+        let mut flat: Vec<f64> = Vec::with_capacity(segments);
+        for (s, c) in contributions.iter().enumerate() {
+            if !c.is_empty() {
+                let v = combine(cop, c);
+                values[s] = T::from_f64(v);
+                flat.push(v);
+            }
+        }
+        let value = combine(cop, &flat);
         Ok((values, wave.into_outcome(value, total)))
     }
 }
@@ -774,15 +979,22 @@ fn worker_loop(
         // unwind through the worker (poisoning queues and wedging the
         // dispatcher); it becomes a retryable task failure instead.
         let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            if slice.len() <= single_launch_max {
-                drivers::jradi_reduce_single(&mut gpu, slice, task.op, unroll, block)
-            } else {
-                drivers::jradi_reduce(&mut gpu, slice, task.op, unroll, block)
+            match &task.kind {
+                TaskKind::Flat => if slice.len() <= single_launch_max {
+                    drivers::jradi_reduce_single(&mut gpu, slice, task.op, unroll, block)
+                } else {
+                    drivers::jradi_reduce(&mut gpu, slice, task.op, unroll, block)
+                }
+                .map(|o| (TaskOutput::Scalar(o.value), o.run.total_time_s())),
+                TaskKind::Segments { offsets } => {
+                    drivers::jradi_reduce_segments(&mut gpu, slice, offsets, task.op, block)
+                        .map(|o| (TaskOutput::Segments(o.values), o.run.total_time_s()))
+                }
             }
         }));
         let mut retire = false;
         let outcome = match caught {
-            Ok(Ok(o)) => Ok((o.value, o.run.total_time_s())),
+            Ok(Ok(out)) => Ok(out),
             Ok(Err(e)) => Err(match e.downcast_ref::<FaultError>() {
                 Some(FaultError::Dead { .. }) => {
                     retire = true;
@@ -1077,6 +1289,94 @@ mod tests {
             one_pass.modeled_wall_s,
             per_segment_wall
         );
+    }
+
+    #[test]
+    fn one_launch_segmented_matches_task_mode_and_scalar() {
+        let pool = DevicePool::new(PoolConfig::homogeneous(DeviceConfig::tesla_c2075(), 3))
+            .unwrap();
+        // Ragged mix: empty, single-element, small, and run-crossing
+        // segments — the combine must stitch boundary segments from
+        // multiple runs and keep identities for the empty ones.
+        let lens = [0usize, 1, 700, 0, 40_000, 3, 25_000, 1, 0];
+        let mut offsets = vec![0usize];
+        for l in lens {
+            offsets.push(offsets.last().unwrap() + l);
+        }
+        let n = *offsets.last().unwrap();
+        let data = ints(n, 29);
+        let plan = pool.plan(n);
+        for op in [Op::Sum, Op::Min, Op::Max] {
+            let (got, out) = pool
+                .reduce_segments_elems_mode(&data, &offsets, op, &plan, SegMode::OneLaunch)
+                .unwrap();
+            let (want, _) = pool
+                .reduce_segments_elems_mode(&data, &offsets, op, &plan, SegMode::Tasks)
+                .unwrap();
+            assert_eq!(got, want, "{op}");
+            for (s, w) in offsets.windows(2).enumerate() {
+                assert_eq!(got[s], scalar::reduce(&data[w[0]..w[1]], op), "segment {s} {op}");
+            }
+            // One task per contiguous device run, not per segment.
+            assert!(out.shards <= pool.num_devices() * pool.tasks_per_device());
+            assert!(out.modeled_wall_s > 0.0);
+        }
+        // Float sums stay Neumaier-close per segment.
+        let fdata = Rng::new(31).f32_vec(n, -1.0, 1.0);
+        let (got, _) = pool
+            .reduce_segments_elems_mode(&fdata, &offsets, Op::Sum, &plan, SegMode::OneLaunch)
+            .unwrap();
+        for (s, w) in offsets.windows(2).enumerate() {
+            let want = kahan::sum_f64(&fdata[w[0]..w[1]]);
+            let rel = (got[s] as f64 - want).abs() / want.abs().max(1.0);
+            assert!(rel < 1e-5, "segment {s}: {} vs {want} (rel {rel:.2e})", got[s]);
+        }
+    }
+
+    #[test]
+    fn one_launch_beats_per_task_wave_on_many_small_segments() {
+        // The tentpole claim: many small segments pay launch overhead
+        // once per device run under OneLaunch, once per segment under
+        // Tasks — the modeled-wall gap must be at least the issue's 3×.
+        let pool = DevicePool::new(PoolConfig::homogeneous(DeviceConfig::tesla_c2075(), 4))
+            .unwrap();
+        let segments = 512usize;
+        let seg_len = 128usize;
+        let n = segments * seg_len;
+        let data = ints(n, 43);
+        let offsets: Vec<usize> = (0..=segments).map(|s| s * seg_len).collect();
+        let plan = pool.plan(n);
+        let (kvals, kernel) = pool
+            .reduce_segments_elems_mode(&data, &offsets, Op::Sum, &plan, SegMode::OneLaunch)
+            .unwrap();
+        let (tvals, tasks) = pool
+            .reduce_segments_elems_mode(&data, &offsets, Op::Sum, &plan, SegMode::Tasks)
+            .unwrap();
+        assert_eq!(kvals, tvals);
+        assert!(
+            kernel.modeled_wall_s * 3.0 <= tasks.modeled_wall_s,
+            "one-launch {} s !<= 1/3 of per-task wave {} s",
+            kernel.modeled_wall_s,
+            tasks.modeled_wall_s
+        );
+    }
+
+    #[test]
+    fn one_launch_boundary_at_every_element() {
+        // Every element its own segment: the worst case for the
+        // per-task wave and the binary search's densest offset buffer.
+        let pool = DevicePool::new(PoolConfig::homogeneous(DeviceConfig::tesla_c2075(), 2))
+            .unwrap();
+        let n = 3000usize;
+        let data = ints(n, 47);
+        let offsets: Vec<usize> = (0..=n).collect();
+        let plan = pool.plan(n);
+        for op in [Op::Sum, Op::Max] {
+            let (got, _) = pool
+                .reduce_segments_elems_mode(&data, &offsets, op, &plan, SegMode::OneLaunch)
+                .unwrap();
+            assert_eq!(got, data, "{op}");
+        }
     }
 
     #[test]

@@ -1,0 +1,277 @@
+//! Shared group-into-CSR machinery for keyed (group-by) reductions.
+//!
+//! Both keyed front doors — the engine's
+//! [`crate::engine::Engine::reduce_by_key`] and the coordinator's
+//! fused keyed batch (`coordinator::service`) — need the same step:
+//! turn a key column into ascending distinct keys, CSR offsets, and a
+//! gather permutation that brings the value column into grouped
+//! order. This module is that single implementation, with two
+//! strategies behind one contract:
+//!
+//! * **sorted** — an already-ascending key column needs no
+//!   permutation at all: offsets come from one boundary scan;
+//! * **radix** — integer keys spanning a *narrow* range
+//!   ([`GroupKey::radix`], width ≤ [`radix_budget`]) bucket in O(n):
+//!   one counting pass, a prefix sum, and a stable scatter — the
+//!   counting-sort analogue of the paper's "replace the general
+//!   mechanism with an algebraic one when the shape allows it"
+//!   argument, replacing the comparison sort's O(n log n);
+//! * **sort** — the general fallback: a stable argsort by key.
+//!
+//! The contract (pinned by the radix-vs-sort equivalence proptest in
+//! `tests/proptests.rs`): the produced grouping — keys, offsets, and
+//! permutation — is **identical** whichever strategy ran, because the
+//! radix scatter is stable in input order exactly like the stable
+//! sort. Within a group, values therefore always combine in input
+//! order, which is what makes float keyed sums deterministic.
+
+/// Key types the grouping machinery accepts. `radix` exposes an
+/// integer view for bucket grouping; keys without one (or outside the
+/// `i64` range) simply fall back to the stable sort.
+pub trait GroupKey: Copy + Ord + std::fmt::Debug {
+    /// The integer view used for radix bucketing, or `None` when this
+    /// key cannot be bucketed. Must be monotone in the key's `Ord`
+    /// (equal keys → equal radix, `a < b` → `radix(a) < radix(b)`), so
+    /// bucket order equals sort order.
+    fn radix(self) -> Option<i64>;
+}
+
+macro_rules! group_key_int {
+    ($($t:ty),*) => {$(
+        impl GroupKey for $t {
+            fn radix(self) -> Option<i64> {
+                Some(self as i64)
+            }
+        }
+    )*};
+}
+group_key_int!(i8, i16, i32, i64, u8, u16, u32);
+
+impl GroupKey for u64 {
+    fn radix(self) -> Option<i64> {
+        i64::try_from(self).ok()
+    }
+}
+
+impl GroupKey for usize {
+    fn radix(self) -> Option<i64> {
+        i64::try_from(self).ok()
+    }
+}
+
+/// How [`group_into_csr`] produced its grouping.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GroupStrategy {
+    /// Input was already ascending: no permutation needed.
+    Sorted,
+    /// Counting pass + stable bucket scatter over a narrow integer
+    /// key range.
+    Radix,
+    /// Stable comparison argsort (general fallback).
+    Sort,
+}
+
+/// The grouping of one key column: ascending distinct keys, CSR
+/// offsets over the *grouped* order, and the permutation that brings
+/// the value column into that order.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Grouping<K> {
+    /// Distinct keys, ascending.
+    pub keys: Vec<K>,
+    /// CSR offsets into grouped order: group `g` spans
+    /// `offsets[g]..offsets[g + 1]`; `offsets.len() == keys.len() + 1`
+    /// and the last entry is the input length.
+    pub offsets: Vec<usize>,
+    /// `perm[r]` = input index of the `r`-th element in grouped order
+    /// (stable: input order preserved within a group). `None` when the
+    /// input was already sorted — gather nothing.
+    pub perm: Option<Vec<usize>>,
+    /// Which strategy ran.
+    pub strategy: GroupStrategy,
+}
+
+/// The widest key range (`max − min + 1` of the radix view) the
+/// counting pass will allocate buckets for: linear in `n` so the
+/// count array stays proportional to the work, floored so small
+/// columns with moderate ranges still bucket, and hard-capped so an
+/// adversarial pair of far-apart keys can never allocate gigabytes.
+pub fn radix_budget(n: usize) -> u64 {
+    (4 * n.max(1024) as u64).min(1 << 22)
+}
+
+/// Group a key column into [`Grouping`] form. Empty input yields the
+/// empty grouping (no keys, offsets `[0]`).
+pub fn group_into_csr<K: GroupKey>(keys: &[K]) -> Grouping<K> {
+    let n = keys.len();
+    if n == 0 {
+        return Grouping {
+            keys: Vec::new(),
+            offsets: vec![0],
+            perm: None,
+            strategy: GroupStrategy::Sorted,
+        };
+    }
+    if keys.windows(2).all(|w| w[0] <= w[1]) {
+        let mut group_keys = vec![keys[0]];
+        let mut offsets = vec![0usize];
+        for i in 1..n {
+            if keys[i] != keys[i - 1] {
+                offsets.push(i);
+                group_keys.push(keys[i]);
+            }
+        }
+        offsets.push(n);
+        return Grouping {
+            keys: group_keys,
+            offsets,
+            perm: None,
+            strategy: GroupStrategy::Sorted,
+        };
+    }
+
+    let (perm, strategy) = match radix_perm(keys) {
+        Some(perm) => (perm, GroupStrategy::Radix),
+        None => {
+            let mut idx: Vec<usize> = (0..n).collect();
+            idx.sort_by_key(|&i| keys[i]); // stable
+            (idx, GroupStrategy::Sort)
+        }
+    };
+
+    let mut group_keys = vec![keys[perm[0]]];
+    let mut offsets = vec![0usize];
+    for r in 1..n {
+        if keys[perm[r]] != keys[perm[r - 1]] {
+            offsets.push(r);
+            group_keys.push(keys[perm[r]]);
+        }
+    }
+    offsets.push(n);
+    Grouping { keys: group_keys, offsets, perm: Some(perm), strategy }
+}
+
+/// The stable radix permutation, or `None` when the column is not
+/// radixable (a key without an integer view, or a range wider than
+/// [`radix_budget`]).
+fn radix_perm<K: GroupKey>(keys: &[K]) -> Option<Vec<usize>> {
+    let n = keys.len();
+    let mut lo = i64::MAX;
+    let mut hi = i64::MIN;
+    for &k in keys {
+        let r = k.radix()?;
+        lo = lo.min(r);
+        hi = hi.max(r);
+    }
+    let width = (hi as i128 - lo as i128 + 1) as u128;
+    if width > radix_budget(n) as u128 {
+        return None;
+    }
+    let width = width as usize;
+    // Counting pass, prefix sum to bucket starts, then a stable
+    // scatter: ascending input index within each bucket reproduces
+    // the stable sort's order exactly.
+    let mut counts = vec![0usize; width];
+    for &k in keys {
+        counts[(k.radix().unwrap() - lo) as usize] += 1;
+    }
+    let mut cursor = counts;
+    let mut start = 0usize;
+    for c in cursor.iter_mut() {
+        let count = *c;
+        *c = start;
+        start += count;
+    }
+    let mut perm = vec![0usize; n];
+    for (i, &k) in keys.iter().enumerate() {
+        let b = (k.radix().unwrap() - lo) as usize;
+        perm[cursor[b]] = i;
+        cursor[b] += 1;
+    }
+    Some(perm)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn oracle<K: GroupKey>(keys: &[K]) -> (Vec<K>, Vec<usize>, Vec<usize>) {
+        let mut idx: Vec<usize> = (0..keys.len()).collect();
+        idx.sort_by_key(|&i| keys[i]);
+        let mut gk = Vec::new();
+        let mut offsets = vec![0usize];
+        for (r, &i) in idx.iter().enumerate() {
+            if r == 0 || keys[i] != keys[idx[r - 1]] {
+                if r > 0 {
+                    offsets.push(r);
+                }
+                gk.push(keys[i]);
+            }
+        }
+        offsets.push(keys.len());
+        (gk, offsets, idx)
+    }
+
+    #[test]
+    fn sorted_input_skips_the_permutation() {
+        let keys = [1i32, 1, 3, 3, 3, 7];
+        let g = group_into_csr(&keys);
+        assert_eq!(g.strategy, GroupStrategy::Sorted);
+        assert_eq!(g.keys, vec![1, 3, 7]);
+        assert_eq!(g.offsets, vec![0, 2, 5, 6]);
+        assert_eq!(g.perm, None);
+    }
+
+    #[test]
+    fn radix_matches_the_stable_sort_exactly() {
+        // Narrow range, unsorted, with duplicates: must bucket, and
+        // the permutation must be bit-identical to the stable sort.
+        let keys = [5i64, 2, 5, -3, 2, 5, -3, 9, 2];
+        let g = group_into_csr(&keys);
+        assert_eq!(g.strategy, GroupStrategy::Radix);
+        let (gk, offs, perm) = oracle(&keys);
+        assert_eq!(g.keys, gk);
+        assert_eq!(g.offsets, offs);
+        assert_eq!(g.perm, Some(perm));
+    }
+
+    #[test]
+    fn wide_ranges_fall_back_to_sort() {
+        // Two far-apart keys: the bucket array would be enormous, so
+        // the stable sort runs instead — same grouping.
+        let keys = [i64::MAX - 1, 0, i64::MAX - 1, 0, 42];
+        let g = group_into_csr(&keys);
+        assert_eq!(g.strategy, GroupStrategy::Sort);
+        let (gk, offs, perm) = oracle(&keys);
+        assert_eq!(g.keys, gk);
+        assert_eq!(g.offsets, offs);
+        assert_eq!(g.perm, Some(perm));
+    }
+
+    #[test]
+    fn u64_past_i64_range_falls_back_to_sort() {
+        let keys = [u64::MAX, 3, u64::MAX, 1];
+        let g = group_into_csr(&keys);
+        assert_eq!(g.strategy, GroupStrategy::Sort);
+        assert_eq!(g.keys, vec![1, 3, u64::MAX]);
+        assert_eq!(g.offsets, vec![0, 1, 2, 4]);
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let g = group_into_csr::<i32>(&[]);
+        assert!(g.keys.is_empty());
+        assert_eq!(g.offsets, vec![0]);
+        assert_eq!(g.perm, None);
+        let g = group_into_csr(&[9u8]);
+        assert_eq!(g.keys, vec![9]);
+        assert_eq!(g.offsets, vec![0, 1]);
+    }
+
+    #[test]
+    fn budget_scales_with_n_and_caps() {
+        assert_eq!(radix_budget(0), 4096);
+        assert_eq!(radix_budget(100), 4096);
+        assert_eq!(radix_budget(1 << 20), 1 << 22);
+        assert_eq!(radix_budget(1 << 30), 1 << 22);
+    }
+}

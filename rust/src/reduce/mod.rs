@@ -6,8 +6,9 @@
 //! compensated summation ([`kahan`]), a spawn-once persistent-threads
 //! runtime mirroring the paper's §2.5 on CPU cores ([`persistent`],
 //! fronted by the [`threaded`] compatibility shims), an
-//! unrolled/auto-vectorizable hot loop ([`simd`]) and a size-based
-//! strategy planner ([`plan`]).
+//! unrolled/auto-vectorizable hot loop ([`simd`]), a size-based
+//! strategy planner ([`plan`]), and the shared group-into-CSR step
+//! behind every keyed reduction ([`group`]).
 //!
 //! These serve three roles:
 //! 1. baselines for the benchmark harness (the paper compares GPU
@@ -18,6 +19,7 @@
 //!    request has no matching AOT artifact.
 
 pub mod combiner;
+pub mod group;
 pub mod kahan;
 pub mod op;
 pub mod persistent;
@@ -26,6 +28,7 @@ pub mod scalar;
 pub mod simd;
 pub mod threaded;
 
+pub use group::{group_into_csr, GroupKey, GroupStrategy, Grouping};
 pub use op::{Element, Op, TypedElement};
 
 /// Convenience re-export: sequential reduction (the semantic oracle).

@@ -43,7 +43,7 @@ pub mod model;
 pub use audit::{AuditEntry, AuditTrail, FleetEvent, FleetEventKind, MISPREDICT_REL_ERR};
 pub use feedback::FleetFeedback;
 pub use health::{DeviceHealth, HealthConfig, HealthState, HealthTracker, HealthTransition};
-pub use model::{Backend, BackendProfile, ThroughputModel};
+pub use model::{Backend, BackendProfile, SegOverheads, ThroughputModel};
 
 /// The placement decision — the single ladder `Strategy` (planner
 /// view) and `Route` (router view) project from.
@@ -67,10 +67,14 @@ pub enum SegmentedDecision {
     /// Per-segment placement on the host ladder: small segments fuse
     /// into one persistent pass, large ones run full-width.
     PerSegment,
-    /// **One** fleet pass over every segment
-    /// ([`crate::pool::DevicePool::reduce_segments_elems`],
-    /// `ExecPath::SegmentedPool`).
+    /// **One** fleet wave with one steal-queue task per segment piece
+    /// ([`crate::pool::SegMode::Tasks`], `ExecPath::SegmentedPool`).
     FleetPass { devices: usize },
+    /// One **persistent launch** per device run covering every segment
+    /// in its range ([`crate::pool::SegMode::OneLaunch`], the
+    /// [`crate::kernels::jradi_segmented`] kernel) — launch overhead
+    /// paid per device instead of per segment.
+    FleetKernel { devices: usize },
 }
 
 /// Below this many segments the one-pass fleet rung is never chosen
@@ -108,6 +112,9 @@ pub struct Explain {
     pub quarantined: Vec<usize>,
     /// Devices in full service (equals the fleet width when healthy).
     pub healthy_devices: usize,
+    /// Learned per-task / per-launch overheads of the segmented fleet
+    /// rungs (priors until segmented passes are observed).
+    pub seg_overheads: SegOverheads,
 }
 
 impl std::fmt::Display for Explain {
@@ -133,6 +140,17 @@ impl std::fmt::Display for Explain {
         for &(backend, cost_s) in &self.candidates {
             writeln!(f, "  candidate {backend}: {:.3} ms modeled", cost_s * 1e3)?;
         }
+        fn provenance(obs: u64) -> String {
+            if obs == 0 { "prior".to_string() } else { format!("learned, {obs} obs") }
+        }
+        writeln!(
+            f,
+            "  segmented overheads: per-task {:.2} us ({}), per-launch {:.2} us ({})",
+            self.seg_overheads.per_task_s * 1e6,
+            provenance(self.seg_overheads.task_obs),
+            self.seg_overheads.per_launch_s * 1e6,
+            provenance(self.seg_overheads.launch_obs)
+        )?;
         if !self.quarantined.is_empty() {
             writeln!(
                 f,
@@ -341,8 +359,23 @@ impl Scheduler {
     }
 
     /// The segmented rung: whether a CSR workload of `total` elements
-    /// in `segments` segments runs as **one** fleet pass or stays on
-    /// the host ladder per segment.
+    /// in `segments` segments stays on the host ladder per segment,
+    /// runs as one per-task fleet wave, or runs as the one-launch
+    /// segmented kernel — a real three-rung ladder chosen from
+    /// *learned* costs ([`SegOverheads`], refined by
+    /// [`Scheduler::observe_segmented`]):
+    ///
+    /// * **host loop** — `segments × full-width overhead + bytes /
+    ///   host throughput`;
+    /// * **per-task wave** — `pool overhead + segments × per_task_s /
+    ///   devices + bytes / pool throughput`
+    ///   ([`crate::pool::SegMode::Tasks`]): fine-grained stealing, one
+    ///   launch per segment piece;
+    /// * **one-launch kernel** — `pool overhead + per_launch_s +
+    ///   bytes / pool throughput` ([`crate::pool::SegMode::OneLaunch`],
+    ///   one persistent launch per device run): the per-launch term
+    ///   does not multiply with the segment count, which is what wins
+    ///   the many-small-segments regime.
     ///
     /// Two arms take the fleet:
     ///
@@ -354,25 +387,23 @@ impl Scheduler {
     ///   used to skip the pool knee check and could land one rung
     ///   lower);
     /// * **numerous segments** — below the knee, a many-small-segments
-    ///   workload (the RedFuser shape) where the modeled cost of one
-    ///   fleet wave (`pool overhead + tasks × SEG_TASK_OVERHEAD_S /
-    ///   devices + bytes / pool throughput`) undercuts the per-segment
-    ///   host loop (`segments × full-width overhead + bytes / host
-    ///   throughput`), gated at [`SEG_FLEET_MIN_SEGMENTS`] so ordinary
-    ///   small batches keep the fused host pass.
+    ///   workload (the RedFuser shape) where the cheaper fleet rung
+    ///   undercuts the per-segment host loop, gated at
+    ///   [`SEG_FLEET_MIN_SEGMENTS`] so ordinary small batches keep the
+    ///   fused host pass.
+    ///
+    /// On either fleet arm the wave-vs-kernel choice is the learned
+    /// cost compare above; with the cold priors the wave keeps
+    /// few-segment workloads (its per-task term only overtakes the
+    /// kernel's per-launch term past ~16 segments on a 4-wide fleet),
+    /// and `benches/segmented.rs` pins the kernel's ≥3× modeled win on
+    /// the 10k-small-segments shape.
     ///
     /// The host alternative on the second arm is deliberately the
-    /// per-segment *loop*, not the engine's fused persistent pass —
-    /// which, wall-clock for wall-clock, is cheaper still for
-    /// all-small segments (one overhead instead of thousands). The
-    /// rung's job at that shape is *offload*: moving the
+    /// per-segment *loop*, not the engine's fused persistent pass: the
+    /// rung's job at that shape is *offload* — moving the
     /// many-small-reductions workload onto the devices frees the host
-    /// runtime for request handling, and the wave is the cheapest
-    /// device-side execution available today (its per-task launch
-    /// cost is the price of reusing the flat kernel; a segmented
-    /// kernel amortizing launches across segments is the ROADMAP
-    /// follow-up, and `benches/segmented.rs` pins the wave's ≥2×
-    /// modeled win over the loop it replaces).
+    /// runtime for request handling.
     ///
     /// [`Op::Prod`] never takes the fleet (same pin as
     /// [`Scheduler::cutoffs`]: the pool's f64 embedding cannot
@@ -389,25 +420,80 @@ impl Scheduler {
             return SegmentedDecision::PerSegment;
         }
         let c = self.cutoffs(op, dtype);
-        if total >= c.pool {
-            return SegmentedDecision::FleetPass { devices };
-        }
-        if segments >= SEG_FLEET_MIN_SEGMENTS {
-            let bytes = (total * dtype.size_bytes()) as f64;
+        let bytes = (total * dtype.size_bytes()) as f64;
+        let (full, pool, seg) = {
             let m = self.model();
-            let full = m.profile(Backend::ThreadedFull, op, dtype);
-            let pool = m.profile(Backend::Pool, op, dtype);
-            if full.bytes_per_s > 0.0 && pool.bytes_per_s > 0.0 {
-                let host_loop_s = segments as f64 * full.overhead_s + bytes / full.bytes_per_s;
-                let fleet_s = pool.overhead_s
-                    + segments as f64 * model::SEG_TASK_OVERHEAD_S / devices as f64
-                    + bytes / pool.bytes_per_s;
-                if fleet_s < host_loop_s {
-                    return SegmentedDecision::FleetPass { devices };
-                }
+            (
+                m.profile(Backend::ThreadedFull, op, dtype),
+                m.profile(Backend::Pool, op, dtype),
+                m.seg_overheads(),
+            )
+        };
+        let fleet_stream_s = if pool.bytes_per_s > 0.0 { bytes / pool.bytes_per_s } else { 0.0 };
+        let wave_s =
+            pool.overhead_s + segments as f64 * seg.per_task_s / devices as f64 + fleet_stream_s;
+        // One merged run (one launch) per device under a contiguous
+        // proportional plan; runs execute concurrently, so the launch
+        // term is paid once on the modeled wall.
+        let kernel_s = pool.overhead_s + seg.per_launch_s + fleet_stream_s;
+        let fleet = if kernel_s < wave_s {
+            SegmentedDecision::FleetKernel { devices }
+        } else {
+            SegmentedDecision::FleetPass { devices }
+        };
+        if total >= c.pool {
+            return fleet;
+        }
+        if segments >= SEG_FLEET_MIN_SEGMENTS && full.bytes_per_s > 0.0 {
+            let host_loop_s = segments as f64 * full.overhead_s + bytes / full.bytes_per_s;
+            if wave_s.min(kernel_s) < host_loop_s {
+                return fleet;
             }
         }
         SegmentedDecision::PerSegment
+    }
+
+    /// Record the per-unit overhead of the segmented rung that ran —
+    /// `units` is steal-queue tasks for the wave
+    /// ([`crate::pool::SegMode::Tasks`]) or persistent launches for
+    /// the kernel rung (`one_launch`), and the overhead solves the
+    /// rung's own cost model for its per-unit term: `(modeled wall −
+    /// bytes / pool throughput) × devices / units`.
+    ///
+    /// This records the overhead **only**. Throughput, busy, and
+    /// liveness stay on the caller's existing skew-gated
+    /// [`Scheduler::observe_pool`] / [`Scheduler::observe_busy`]
+    /// feeds — folding them in here too would double-count the pass
+    /// and bypass the engine's straggler gate.
+    ///
+    /// Unlike the throughput EWMA this records **unconditionally**
+    /// (adaptive or not): modeled wall seconds are deterministic
+    /// outputs of the simulated fleet, not noisy host measurements, so
+    /// folding them in is bookkeeping — the same standing the audit
+    /// trail has. This is what lets a non-adaptive engine still
+    /// *learn* the per-task/per-launch costs its
+    /// [`Scheduler::decide_segments`] ladder runs on.
+    pub fn observe_segmented(
+        &self,
+        op: Op,
+        dtype: Dtype,
+        elements: usize,
+        units: usize,
+        one_launch: bool,
+        outcome: &PoolOutcome,
+    ) {
+        if units == 0 || elements == 0 {
+            return;
+        }
+        let devices = self.pool_devices().max(1) as f64;
+        let bytes = (elements * dtype.size_bytes()) as f64;
+        let bps = self.model().profile(Backend::Pool, op, dtype).bytes_per_s;
+        let stream_s = if bps > 0.0 { bytes / bps } else { 0.0 };
+        let per_unit = (outcome.modeled_wall_s - stream_s) * devices / units as f64;
+        // Clamp instead of dropping: a wall under the modeled stream
+        // time means overhead is unresolvable this pass, but the
+        // observation still says it is tiny.
+        self.model().record_seg_overhead(one_launch, per_unit.max(1e-9));
     }
 
     /// Record one observed execution. The audit trail always records
@@ -504,7 +590,14 @@ impl Scheduler {
             candidates: self.candidate_costs(op, dtype, n),
             quarantined: self.health().masked(devices),
             healthy_devices: self.healthy_devices(),
+            seg_overheads: self.model().seg_overheads(),
         }
+    }
+
+    /// The segmented overheads currently in force (priors until
+    /// segmented passes are observed).
+    pub fn seg_overheads(&self) -> SegOverheads {
+        self.model().seg_overheads()
     }
 
     /// Record a fleet outcome: pool throughput EWMA (over *modeled*
@@ -629,6 +722,15 @@ impl Scheduler {
                 loaded += 1;
             }
         }
+        if let Some(so) = doc.opt_field("seg_overheads") {
+            let seg = SegOverheads {
+                per_task_s: so.field("per_task_s")?.as_f64()?,
+                per_launch_s: so.field("per_launch_s")?.as_f64()?,
+                task_obs: so.field("task_obs")?.as_usize()? as u64,
+                launch_obs: so.field("launch_obs")?.as_usize()? as u64,
+            };
+            self.model().set_seg_overheads(seg);
+        }
         if let Some(fleet) = doc.opt_field("fleet") {
             if let Some(factors) = fleet.opt_field("factors") {
                 let factors: Vec<f64> = factors
@@ -693,6 +795,14 @@ impl Scheduler {
             }
         }
         root.insert("profiles".to_string(), Json::Arr(profiles));
+
+        let seg = self.model().seg_overheads();
+        let mut so = BTreeMap::new();
+        so.insert("per_task_s".to_string(), Json::Num(seg.per_task_s));
+        so.insert("per_launch_s".to_string(), Json::Num(seg.per_launch_s));
+        so.insert("task_obs".to_string(), Json::Num(seg.task_obs as f64));
+        so.insert("launch_obs".to_string(), Json::Num(seg.launch_obs as f64));
+        root.insert("seg_overheads".to_string(), Json::Obj(so));
 
         let devices = self.pool_devices();
         let mut fleet = BTreeMap::new();
@@ -867,13 +977,15 @@ mod tests {
         let s = pooled(false, None);
         let c = s.cutoffs(Op::Sum, Dtype::F32);
         // 10k segments of ~100 elements: total sits below the pool
-        // knee, but one fleet wave undercuts 10k per-segment host
-        // passes in the cost model.
+        // knee, but a fleet rung undercuts 10k per-segment host passes
+        // in the cost model — and at that segment count the one-launch
+        // kernel's fixed per-launch term beats the wave's 10k per-task
+        // launches.
         let total = 10_000 * 100;
         assert!(total < c.pool, "workload must sit below the knee for this test");
         assert_eq!(
             s.decide_segments(Op::Sum, Dtype::F32, total, 10_000),
-            SegmentedDecision::FleetPass { devices: 4 }
+            SegmentedDecision::FleetKernel { devices: 4 }
         );
         // A handful of segments of the same total stays on the host
         // ladder (the gate, then the knee, keep it there).
@@ -895,6 +1007,70 @@ mod tests {
         assert_eq!(
             s.decide_segments(Op::Sum, Dtype::F32, 0, 0),
             SegmentedDecision::PerSegment
+        );
+    }
+
+    #[test]
+    fn segmented_rung_follows_learned_overheads() {
+        // Cold priors: many small segments pick the kernel, a single
+        // fleet-sized segment picks the wave (per-task term beats the
+        // fixed per-launch term below ~16 segments).
+        let s = pooled(false, None);
+        assert_eq!(
+            s.decide_segments(Op::Sum, Dtype::F32, 1 << 22, 1),
+            SegmentedDecision::FleetPass { devices: 4 }
+        );
+        let total = 10_000 * 100;
+        assert_eq!(
+            s.decide_segments(Op::Sum, Dtype::F32, total, 10_000),
+            SegmentedDecision::FleetKernel { devices: 4 }
+        );
+
+        // Observe one-launch passes whose wall implies a per-launch
+        // cost far above 10k per-task launches: the ladder must flip
+        // back to the wave — from learned, not configured, numbers.
+        // Even non-adaptive: seg overheads record unconditionally.
+        let out = |wall: f64| PoolOutcome {
+            value: 0.0,
+            shards: 4,
+            steals: 0,
+            modeled_wall_s: wall,
+            per_worker_busy_s: vec![wall; 4],
+            reexecuted: 0,
+            faults_per_worker: vec![0; 4],
+            dead_workers: vec![false; 4],
+        };
+        for _ in 0..32 {
+            // 4 launches, ~80 ms of pure overhead on the wall: per
+            // launch ≈ 80 ms — worse than 10k tasks × 5 µs / 4.
+            s.observe_segmented(Op::Sum, Dtype::F32, total, 4, true, &out(8e-2));
+        }
+        let seg = s.seg_overheads();
+        assert!(seg.launch_obs >= 32);
+        assert!(seg.per_launch_s > 1e-2, "learned per-launch {} s", seg.per_launch_s);
+        assert_eq!(
+            s.decide_segments(Op::Sum, Dtype::F32, total, 10_000),
+            SegmentedDecision::FleetPass { devices: 4 }
+        );
+
+        // The learned overheads surface in explain and survive a
+        // snapshot round-trip.
+        let ex = s.explain(Op::Sum, Dtype::F32, total);
+        assert!(format!("{ex}").contains("per-launch"), "{ex}");
+        assert!(format!("{ex}").contains("learned, "), "{ex}");
+        let snap = s.snapshot_json();
+        let fresh = pooled(false, None);
+        assert_eq!(
+            fresh.decide_segments(Op::Sum, Dtype::F32, total, 10_000),
+            SegmentedDecision::FleetKernel { devices: 4 }
+        );
+        fresh.load_snapshot_json(&snap).expect("snapshot must load");
+        let restored = fresh.seg_overheads();
+        assert_eq!(restored.per_launch_s, seg.per_launch_s);
+        assert_eq!(restored.launch_obs, seg.launch_obs);
+        assert_eq!(
+            fresh.decide_segments(Op::Sum, Dtype::F32, total, 10_000),
+            SegmentedDecision::FleetPass { devices: 4 }
         );
     }
 

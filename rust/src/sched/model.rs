@@ -9,9 +9,13 @@
 //! with `benches/sched.rs`, chosen so the cold-start cutoffs land on
 //! the constants the planner/router used to hardcode) and is refined
 //! by an EWMA of what executions actually achieved; the overhead term
-//! stays configured (it is a property of the dispatch path, not of
-//! the payload, and learning it would need per-size sweeps the
-//! serving path cannot afford).
+//! stays configured for the flat ladder (it is a property of the
+//! dispatch path, not of the payload, and learning it would need
+//! per-size sweeps the serving path cannot afford). The segmented
+//! fleet rungs are the exception: every segmented pass reports its
+//! unit count (steal-queue tasks or persistent launches) alongside
+//! modeled wall seconds, so their per-unit overheads *are* learnable
+//! from single observations and live in [`SegOverheads`].
 //!
 //! Host backends observe wall-clock seconds; the [`Backend::Pool`]
 //! backend observes *modeled* device seconds
@@ -90,13 +94,50 @@ pub const FULL_OVERHEAD_S: f64 = 6.5e-6;
 /// the host→pool crossover at ~2^20 elements, matching the serving
 /// default that used to be hardcoded.
 pub const POOL_OVERHEAD_S: f64 = 1.5e-4;
-/// Modeled per-task cost of the one-pass segmented fleet rung: each
-/// segment piece is one (mostly single-launch) kernel run, so a pass
-/// over `k` segments pays roughly `k × this / devices` on top of the
-/// dispatch overhead — the term that keeps few-segment workloads off
-/// the fleet below the pool knee. Matches the devices' ~5 µs modeled
-/// launch overhead ([`crate::gpusim::DeviceConfig::launch_overhead_us`]).
-pub const SEG_TASK_OVERHEAD_S: f64 = 5.0e-6;
+/// Cold-start prior for the per-task cost of the per-segment-task
+/// fleet wave: each segment piece is one (mostly single-launch) kernel
+/// run, so a wave over `k` segments pays roughly `k × this / devices`
+/// on top of the dispatch overhead. Matches the devices' ~5 µs modeled
+/// launch overhead ([`crate::gpusim::DeviceConfig::launch_overhead_us`]);
+/// refined from observed segmented passes ([`SegOverheads`]).
+pub const SEG_TASK_OVERHEAD_PRIOR_S: f64 = 5.0e-6;
+/// Cold-start prior for the per-launch cost of the one-launch
+/// segmented kernel rung ([`crate::kernels::jradi_segmented`]): one
+/// persistent launch per device run, so its overhead term is paid per
+/// *launch*, not per segment. Covers the launch itself plus the
+/// kernel's per-block CSR binary search; refined from observed passes
+/// ([`SegOverheads`]).
+pub const SEG_LAUNCH_OVERHEAD_PRIOR_S: f64 = 2.0e-5;
+
+/// Learned overhead state of the two segmented fleet rungs — the EWMA
+/// analogue of [`BackendProfile::bytes_per_s`] for the per-task /
+/// per-launch cost terms of [`crate::sched::Scheduler::decide_segments`].
+/// Unlike the flat ladder's configured `overhead_s`, these *are*
+/// learnable without per-size sweeps: every segmented pass reports its
+/// unit count (tasks or launches) alongside modeled wall seconds, so
+/// one observation pins the per-unit cost directly.
+#[derive(Debug, Clone, Copy)]
+pub struct SegOverheads {
+    /// Per steal-queue task, seconds (per-segment wave rung).
+    pub per_task_s: f64,
+    /// Per persistent launch, seconds (one-launch kernel rung).
+    pub per_launch_s: f64,
+    /// Observations folded into `per_task_s`.
+    pub task_obs: u64,
+    /// Observations folded into `per_launch_s`.
+    pub launch_obs: u64,
+}
+
+impl Default for SegOverheads {
+    fn default() -> Self {
+        SegOverheads {
+            per_task_s: SEG_TASK_OVERHEAD_PRIOR_S,
+            per_launch_s: SEG_LAUNCH_OVERHEAD_PRIOR_S,
+            task_obs: 0,
+            launch_obs: 0,
+        }
+    }
+}
 
 /// EWMA of observed bytes/s per `(backend, op, dtype)`, with
 /// per-backend priors.
@@ -109,6 +150,9 @@ pub struct ThroughputModel {
     /// when no pool is attached (the pool rung then never wins).
     pool_prior: Option<(f64, f64)>,
     observed: HashMap<(Backend, Op, Dtype), BackendProfile>,
+    /// Learned per-task / per-launch overheads of the segmented fleet
+    /// rungs (starts at the priors).
+    seg: SegOverheads,
 }
 
 impl ThroughputModel {
@@ -117,6 +161,7 @@ impl ThroughputModel {
             alpha: alpha.clamp(0.01, 1.0),
             pool_prior,
             observed: HashMap::new(),
+            seg: SegOverheads::default(),
         }
     }
 
@@ -162,6 +207,48 @@ impl ThroughputModel {
             (1.0 - alpha) * e.bytes_per_s + alpha * obs
         };
         e.observations += 1;
+    }
+
+    /// The learned segmented-rung overheads currently in force.
+    pub fn seg_overheads(&self) -> SegOverheads {
+        self.seg
+    }
+
+    /// Fold one observed per-unit overhead of a segmented fleet pass
+    /// into the matching EWMA: `per_launch` selects the one-launch
+    /// kernel's per-launch term, otherwise the wave's per-task term.
+    /// Same first-observation seeding as [`ThroughputModel::record`];
+    /// degenerate observations are ignored.
+    pub fn record_seg_overhead(&mut self, per_launch: bool, overhead_s: f64) {
+        if !overhead_s.is_finite() || overhead_s <= 0.0 {
+            return;
+        }
+        let alpha = self.alpha;
+        let (est, obs) = if per_launch {
+            (&mut self.seg.per_launch_s, &mut self.seg.launch_obs)
+        } else {
+            (&mut self.seg.per_task_s, &mut self.seg.task_obs)
+        };
+        *est = if *obs == 0 {
+            0.5 * *est + 0.5 * overhead_s
+        } else {
+            (1.0 - alpha) * *est + alpha * overhead_s
+        };
+        *obs += 1;
+    }
+
+    /// Install segmented overheads wholesale — the snapshot **load**
+    /// path, mirroring [`ThroughputModel::set_profile`]. Degenerate
+    /// values are ignored.
+    pub fn set_seg_overheads(&mut self, seg: SegOverheads) {
+        if !seg.per_task_s.is_finite()
+            || seg.per_task_s <= 0.0
+            || !seg.per_launch_s.is_finite()
+            || seg.per_launch_s <= 0.0
+        {
+            return;
+        }
+        self.seg = seg;
     }
 
     /// The smallest `n` (elements of `elem_bytes` each) at which `to`
@@ -305,6 +392,36 @@ mod tests {
         assert_eq!(after.observations, 16);
         // Other keys keep the prior.
         assert_eq!(m.profile(Backend::Pool, Op::Max, Dtype::F32).observations, 0);
+    }
+
+    #[test]
+    fn seg_overheads_learn_from_observations() {
+        let mut m = model();
+        let cold = m.seg_overheads();
+        assert_eq!(cold.per_task_s, SEG_TASK_OVERHEAD_PRIOR_S);
+        assert_eq!(cold.per_launch_s, SEG_LAUNCH_OVERHEAD_PRIOR_S);
+        assert_eq!((cold.task_obs, cold.launch_obs), (0, 0));
+        // A fleet whose per-task cost is 3x the prior pulls the EWMA
+        // up; the launch term is untouched.
+        for _ in 0..16 {
+            m.record_seg_overhead(false, 3.0 * SEG_TASK_OVERHEAD_PRIOR_S);
+        }
+        let warm = m.seg_overheads();
+        assert!(warm.per_task_s > 2.0 * SEG_TASK_OVERHEAD_PRIOR_S);
+        assert_eq!(warm.task_obs, 16);
+        assert_eq!(warm.per_launch_s, SEG_LAUNCH_OVERHEAD_PRIOR_S);
+        assert_eq!(warm.launch_obs, 0);
+        // Degenerate observations are dropped.
+        m.record_seg_overhead(true, 0.0);
+        m.record_seg_overhead(true, f64::NAN);
+        m.record_seg_overhead(true, -1.0);
+        assert_eq!(m.seg_overheads().launch_obs, 0);
+        // Snapshot install round-trips; degenerate installs are ignored.
+        let mut fresh = model();
+        fresh.set_seg_overheads(warm);
+        assert_eq!(fresh.seg_overheads().per_task_s, warm.per_task_s);
+        fresh.set_seg_overheads(SegOverheads { per_task_s: f64::NAN, ..warm });
+        assert_eq!(fresh.seg_overheads().per_task_s, warm.per_task_s);
     }
 
     #[test]

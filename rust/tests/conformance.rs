@@ -252,6 +252,73 @@ fn keyed_rails_match_the_grouped_oracle() {
     }
 }
 
+#[test]
+fn one_launch_rung_matches_task_rung_and_oracle_on_boundary_shapes() {
+    use parred::pool::{DevicePool, PoolConfig, SegMode};
+    let pool = DevicePool::new(PoolConfig::homogeneous(DeviceConfig::tesla_c2075(), 3))
+        .expect("3-device pool");
+
+    // The one-launch kernel's boundary shapes: uniformly tiny
+    // segments, a ragged mix, a segment boundary at every element,
+    // empty segments everywhere, and one segment spanning the whole
+    // buffer. Each is driven through BOTH fleet modes explicitly and
+    // pinned to the scalar oracle (Prod stays off the fleet by the
+    // engine's ladder, so the pool modes cover Sum/Min/Max).
+    let mut shapes: Vec<(String, usize, Vec<usize>)> = Vec::new();
+    let n_small = 256 * 16;
+    shapes.push(("all-small".into(), n_small, (0..=256).map(|s| s * 16).collect()));
+    let n_mixed = 40_000;
+    shapes.push(("mixed".into(), n_mixed, ragged_offsets(n_mixed, 8_100)));
+    let n_every = 2_048;
+    shapes.push(("boundary-at-every-element".into(), n_every, (0..=n_every).collect()));
+    let n_empty = 3_000;
+    let mut offs = vec![0usize];
+    for s in 0..50 {
+        // Every other segment is empty (repeated boundary).
+        let last = *offs.last().unwrap();
+        offs.push(last + if s % 2 == 0 { 0 } else { n_empty / 25 });
+    }
+    debug_assert_eq!(*offs.last().unwrap(), n_empty);
+    shapes.push(("empty-segments".into(), n_empty, offs));
+    let n_span = 30_000;
+    shapes.push(("whole-buffer-span".into(), n_span, vec![0, n_span]));
+
+    for (shape, n, offsets) in &shapes {
+        let plan = pool.plan(*n);
+        // i32: bit-identical across both modes and the oracle.
+        let data = Rng::new(8_200).i32_vec(*n, -500, 500);
+        for op in [Op::Sum, Op::Min, Op::Max] {
+            let ctx = format!("i32 {op} {shape}");
+            let oracle: Vec<i32> =
+                offsets.windows(2).map(|w| scalar::reduce(&data[w[0]..w[1]], op)).collect();
+            let (one, _) = pool
+                .reduce_segments_elems_mode(&data, offsets, op, &plan, SegMode::OneLaunch)
+                .unwrap();
+            assert_eq!(one, oracle, "{ctx}: one-launch");
+            let (tasks, _) = pool
+                .reduce_segments_elems_mode(&data, offsets, op, &plan, SegMode::Tasks)
+                .unwrap();
+            assert_eq!(tasks, oracle, "{ctx}: task wave");
+        }
+        // f32 sums: each mode within 1e-5 of per-segment Neumaier.
+        let fdata = Rng::new(8_300).f32_vec(*n, -1.0, 1.0);
+        let (one, _) = pool
+            .reduce_segments_elems_mode(&fdata, offsets, Op::Sum, &plan, SegMode::OneLaunch)
+            .unwrap();
+        let (tasks, _) = pool
+            .reduce_segments_elems_mode(&fdata, offsets, Op::Sum, &plan, SegMode::Tasks)
+            .unwrap();
+        for (s, w) in offsets.windows(2).enumerate() {
+            let seg = &fdata[w[0]..w[1]];
+            let want = kahan::sum_f64(seg);
+            let l1: f64 = seg.iter().map(|&x| x.abs() as f64).sum();
+            let ctx = format!("f32 sum {shape} segment {s}");
+            assert_close(one[s], want, l1, &format!("{ctx}: one-launch"));
+            assert_close(tasks[s], want, l1, &format!("{ctx}: task wave"));
+        }
+    }
+}
+
 // ---------------------------------------------------------------
 // Committed regression corpus: shrink-friendly boundary cases
 // replayed through the same rails.

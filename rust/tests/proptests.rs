@@ -718,6 +718,149 @@ fn prop_segmented_fleet_rung_matches_per_segment_oracle() {
 }
 
 #[test]
+fn prop_grouping_radix_equals_stable_sort() {
+    use parred::reduce::{group_into_csr, GroupStrategy};
+
+    // The radix bucket path must be indistinguishable from the stable
+    // argsort: identical group keys, identical CSR offsets, identical
+    // permutation — for ANY key column. Narrow ranges should actually
+    // take the radix path (so this doesn't vacuously compare sort to
+    // itself); wide ranges and presorted inputs exercise the other
+    // strategies against the same oracle.
+    check(
+        "group_into_csr: radix == stable argsort",
+        32,
+        |rng| {
+            let n = parred::util::prop::sizes(rng, 20_000); // zero allowed
+            let shape = rng.below(4);
+            let keys: Vec<i64> = match shape {
+                // Narrow range (radix territory), duplicate-heavy.
+                0 => (0..n).map(|_| rng.range(0, 40) as i64 - 20).collect(),
+                // Wide range (sort fallback).
+                1 => (0..n).map(|_| rng.next_u64() as i64).collect(),
+                // Presorted (no-permutation path).
+                2 => {
+                    let mut k: Vec<i64> = (0..n).map(|_| rng.range(0, 500) as i64).collect();
+                    k.sort_unstable();
+                    k
+                }
+                // Narrow but offset far from zero (rebase must hold).
+                _ => (0..n).map(|_| 1_000_000_000 + rng.range(0, 1000) as i64).collect(),
+            };
+            (keys, shape)
+        },
+        |(keys, shape)| {
+            let g = group_into_csr(keys);
+            // Oracle: stable argsort grouping.
+            let mut idx: Vec<usize> = (0..keys.len()).collect();
+            idx.sort_by_key(|&i| keys[i]);
+            let mut want_keys: Vec<i64> = Vec::new();
+            let mut want_offsets = vec![0usize];
+            for (r, &i) in idx.iter().enumerate() {
+                if r == 0 || keys[i] != keys[idx[r - 1]] {
+                    if r > 0 {
+                        want_offsets.push(r);
+                    }
+                    want_keys.push(keys[i]);
+                }
+            }
+            want_offsets.push(keys.len());
+            if g.keys != want_keys {
+                return Err(format!("group keys diverge ({:?})", g.strategy));
+            }
+            if g.offsets != want_offsets {
+                return Err(format!("offsets diverge ({:?})", g.strategy));
+            }
+            if let Some(perm) = &g.perm {
+                if *perm != idx {
+                    return Err(format!("permutation not stable ({:?})", g.strategy));
+                }
+            }
+            // Unsorted narrow-range columns must actually bucket.
+            if *shape == 0
+                && !keys.is_empty()
+                && !keys.windows(2).all(|w| w[0] <= w[1])
+                && g.strategy != GroupStrategy::Radix
+            {
+                return Err(format!("narrow range fell back to {:?}", g.strategy));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_one_launch_mode_matches_task_mode_and_oracle() {
+    use parred::pool::{DevicePool, PoolConfig, SegMode};
+
+    // The one-launch segmented kernel against the per-task wave and
+    // the scalar oracle, over random fleets and boundary-biased
+    // ragged shapes: i32 bit-identical on both modes, f32 sums within
+    // the per-segment Neumaier tolerance.
+    check(
+        "one-launch segmented mode == task mode == oracle",
+        10,
+        |rng| {
+            let devices = rng.range(1, 4);
+            let tasks = rng.range(1, 3);
+            let segs = rng.range(0, 24);
+            let lens: Vec<usize> = (0..segs)
+                .map(|_| match rng.below(5) {
+                    0 => 0,
+                    1 => 1,
+                    2 => rng.range(2, 64),
+                    _ => rng.range(64, 4_000),
+                })
+                .collect();
+            let n: usize = lens.iter().sum();
+            (rng.i32_vec(n, -500, 500), rng.f32_vec(n, -1.0, 1.0), lens, devices, tasks)
+        },
+        |(ints, floats, lens, devices, tasks)| {
+            let mut offsets = vec![0usize];
+            for l in lens {
+                offsets.push(offsets.last().unwrap() + l);
+            }
+            let pool = DevicePool::new(PoolConfig {
+                devices: vec![DeviceConfig::tesla_c2075(); *devices],
+                tasks_per_device: *tasks,
+                ..PoolConfig::default()
+            })
+            .map_err(|e| format!("{e:#}"))?;
+            let plan = pool.plan(ints.len());
+            for op in [Op::Sum, Op::Min, Op::Max] {
+                let (one, _) = pool
+                    .reduce_segments_elems_mode(ints, &offsets, op, &plan, SegMode::OneLaunch)
+                    .map_err(|e| format!("{e:#}"))?;
+                let (tasks_v, _) = pool
+                    .reduce_segments_elems_mode(ints, &offsets, op, &plan, SegMode::Tasks)
+                    .map_err(|e| format!("{e:#}"))?;
+                for (s, w) in offsets.windows(2).enumerate() {
+                    let want = scalar::reduce(&ints[w[0]..w[1]], op);
+                    if one[s] != want {
+                        return Err(format!("{op}: one-launch segment {s}: {} != {want}", one[s]));
+                    }
+                    if tasks_v[s] != want {
+                        return Err(format!("{op}: task wave segment {s}: {} != {want}", tasks_v[s]));
+                    }
+                }
+            }
+            let (one, _) = pool
+                .reduce_segments_elems_mode(floats, &offsets, Op::Sum, &plan, SegMode::OneLaunch)
+                .map_err(|e| format!("{e:#}"))?;
+            for (s, w) in offsets.windows(2).enumerate() {
+                let seg = &floats[w[0]..w[1]];
+                let want = kahan::sum_f64(seg);
+                let l1: f64 = seg.iter().map(|&x| x.abs() as f64).sum();
+                if (one[s] as f64 - want).abs() > 1e-5 * l1.max(1.0) {
+                    return Err(format!("segment {s}: one-launch {} vs Neumaier {want}", one[s]));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_gate_never_exceeds_limit() {
     use parred::coordinator::backpressure::Gate;
     check(
