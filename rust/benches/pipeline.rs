@@ -1,0 +1,154 @@
+//! `cargo bench --bench pipeline` — the fused cascaded-reduction
+//! pipeline vs its constituent reductions run separately, at
+//! 2^16..2^24 elements (`PARRED_BENCH_FAST=1` stops at 2^18 for CI
+//! smoke).
+//!
+//! The comparison the fusion argument lives or dies on: `mean` +
+//! `variance` through `engine.pipeline()` is ONE `(n, Σx, M2)` pass
+//! over the payload, where running the constituents separately costs
+//! three passes (mean's sum, variance's mean, variance's Σ(x−μ)²).
+//! Both sides are priced with the scheduler's own backend model via
+//! the audit trail's `StagePlacement` rows — the unfused alternative
+//! is the same placement paid once per pass — and both sides are also
+//! executed for a measured host wall.
+//!
+//! Acceptance gates: the fused mean+variance pipeline plans strictly
+//! fewer passes than the unfused constituents (1 vs 3) and models
+//! ≥ 1.6× faster at every size; the full four-stage cascade (mean,
+//! variance, argmax, softmax normalizer) fuses 4 stages into 3
+//! passes with the softmax exp-sum reusing the max pass's placement.
+//! Results land machine-readably in `BENCH_pipeline.json` (path
+//! override: `PARRED_PIPE_JSON`) for the CI artifact.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use parred::reduce::Op;
+use parred::util::bench::fmt_time;
+use parred::util::json::Json;
+use parred::util::rng::Rng;
+use parred::{Engine, ExecPath};
+
+fn main() {
+    let fast = std::env::var("PARRED_BENCH_FAST").as_deref() == Ok("1");
+    let sizes: &[usize] =
+        if fast { &[1 << 16, 1 << 18] } else { &[1 << 16, 1 << 20, 1 << 24] };
+    let workers = std::thread::available_parallelism().map_or(4, |x| x.get());
+    let engine = Engine::builder().host_workers(workers).build().expect("host engine");
+
+    let mut rows: Vec<Json> = Vec::new();
+    println!("pipeline fusion: fused mean+variance vs constituents run separately");
+    for &n in sizes {
+        let data = Rng::new(9_000).f32_vec(n, -1.0, 1.0);
+
+        // --- fused: one (n, Σx, M2) pass serves both stages ---
+        let placed_before = engine.scheduler().stage_placements().len();
+        let t0 = Instant::now();
+        let fused = engine.pipeline(&data).mean().variance().run().expect("fused pipeline");
+        let fused_wall = t0.elapsed().as_secs_f64();
+        assert_eq!(
+            fused.path,
+            ExecPath::Pipeline { stages: 2, passes: 1 },
+            "mean+variance must fuse into one pass"
+        );
+        let placements = engine.scheduler().stage_placements();
+        let placed = &placements[placed_before..];
+        assert_eq!(placed.len(), 1, "one pass, one placement row");
+        let pass_modeled = placed[0].modeled_s;
+        let fused_passes = fused.passes.len();
+        let fused_modeled = fused_passes as f64 * pass_modeled;
+
+        // --- unfused: the constituents as separate requests ---
+        // mean = a sum pass; variance = a mean pass again, then a
+        // Σ(x−μ)² pass over the materialized deviations. Three reads
+        // of n elements, each priced at the same placement the fused
+        // pass got (same op band, same n, same backend).
+        let unfused_passes = 3usize;
+        let unfused_modeled = unfused_passes as f64 * pass_modeled;
+        let t0 = Instant::now();
+        let sum = engine.reduce(&data).op(Op::Sum).run().expect("sum pass").value as f64;
+        let mean = sum / n as f64;
+        let sum2 = engine.reduce(&data).op(Op::Sum).run().expect("mean pass").value as f64;
+        let sqdev: Vec<f32> = data.iter().map(|&x| (x as f64 - mean).powi(2) as f32).collect();
+        let var =
+            engine.reduce(&sqdev).op(Op::Sum).run().expect("sqdev pass").value as f64 / n as f64;
+        let unfused_wall = t0.elapsed().as_secs_f64();
+        assert_eq!(sum, sum2);
+
+        // Same answers, fewer passes.
+        let got_mean = fused.scalar("mean").unwrap();
+        let got_var = fused.scalar("variance").unwrap();
+        assert!(
+            (got_mean - mean).abs() <= 1e-5 * mean.abs().max(1.0),
+            "fused mean {got_mean} vs unfused {mean}"
+        );
+        assert!(
+            (got_var - var).abs() <= 1e-4 * var.max(1.0),
+            "fused variance {got_var} vs unfused {var}"
+        );
+        assert!(fused_passes < unfused_passes, "fusion must save passes");
+        let speedup = unfused_modeled / fused_modeled;
+        println!(
+            "  n=2^{:2}: fused {fused_passes} pass ({} on {}) vs unfused {unfused_passes} \
+             passes ({}): {speedup:.2}x modeled  [walls: fused {} vs unfused {}]",
+            n.trailing_zeros(),
+            fmt_time(fused_modeled),
+            placed[0].backend,
+            fmt_time(unfused_modeled),
+            fmt_time(fused_wall),
+            fmt_time(unfused_wall),
+        );
+        assert!(
+            speedup >= 1.6,
+            "fused mean+variance must model >= 1.6x over the separate \
+             constituents at n={n}, got {speedup:.2}x"
+        );
+
+        let mut row = BTreeMap::new();
+        row.insert("n".to_string(), Json::Num(n as f64));
+        row.insert("fused_passes".to_string(), Json::Num(fused_passes as f64));
+        row.insert("unfused_passes".to_string(), Json::Num(unfused_passes as f64));
+        row.insert("fused_modeled_s".to_string(), Json::Num(fused_modeled));
+        row.insert("unfused_modeled_s".to_string(), Json::Num(unfused_modeled));
+        row.insert("fused_wall_s".to_string(), Json::Num(fused_wall));
+        row.insert("unfused_wall_s".to_string(), Json::Num(unfused_wall));
+        row.insert("speedup_modeled".to_string(), Json::Num(speedup));
+        row.insert("backend".to_string(), Json::Str(format!("{}", placed[0].backend)));
+        rows.push(Json::Obj(row));
+    }
+
+    // --- the full cascade: 4 stages, 3 passes, one reused placement ---
+    let n = sizes[0];
+    let data = Rng::new(9_100).f32_vec(n, -1.0, 1.0);
+    let full = engine
+        .pipeline(&data)
+        .mean()
+        .variance()
+        .argmax()
+        .softmax_denom()
+        .run()
+        .expect("full cascade");
+    assert_eq!(full.path, ExecPath::Pipeline { stages: 4, passes: 3 });
+    let reused = full.passes.iter().filter(|p| p.reused_placement).count();
+    assert_eq!(reused, 1, "the softmax exp-sum pass must reuse the max pass's placement");
+    println!(
+        "  full cascade at n=2^{}: 4 stages -> {} passes, {} reused placement, exec steals {}",
+        n.trailing_zeros(),
+        full.passes.len(),
+        reused,
+        full.exec_steals
+    );
+
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str("pipeline".to_string()));
+    root.insert("rows".to_string(), Json::Arr(rows));
+    root.insert("cascade_stages".to_string(), Json::Num(4.0));
+    root.insert("cascade_passes".to_string(), Json::Num(full.passes.len() as f64));
+    root.insert("cascade_reused_placements".to_string(), Json::Num(reused as f64));
+    let path =
+        std::env::var("PARRED_PIPE_JSON").unwrap_or_else(|_| "BENCH_pipeline.json".to_string());
+    match std::fs::write(&path, format!("{}\n", Json::Obj(root))) {
+        Ok(()) => eprintln!("(wrote {path})"),
+        Err(e) => eprintln!("(could not write {path}: {e})"),
+    }
+}

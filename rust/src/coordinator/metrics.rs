@@ -28,6 +28,15 @@ pub struct Metrics {
     /// Segmented host executions (`ExecPath::Segmented`) — split out
     /// from the plain host bucket so the ragged rung is visible.
     pub lat_segmented: Histogram,
+    /// Cascaded-pipeline executions (`ExecPath::Pipeline`) — split out
+    /// from the host bucket the same way: a multi-pass DAG's latency
+    /// band is not comparable to one scalar reduction's.
+    pub lat_pipeline: Histogram,
+    /// Pipeline requests served, and the stage/pass fan they carried
+    /// (passes < stages is fusion paying off).
+    pub pipeline_requests: u64,
+    pub pipeline_stages: u64,
+    pub pipeline_passes: u64,
     /// Rows executed vs rows carrying real requests (padding waste).
     pub rows_executed: u64,
     pub rows_useful: u64,
@@ -81,6 +90,10 @@ impl Default for Metrics {
             lat_pool_fused: Histogram::new(),
             lat_keyed: Histogram::new(),
             lat_segmented: Histogram::new(),
+            lat_pipeline: Histogram::new(),
+            pipeline_requests: 0,
+            pipeline_stages: 0,
+            pipeline_passes: 0,
             rows_executed: 0,
             rows_useful: 0,
             batches: 0,
@@ -138,6 +151,14 @@ impl Metrics {
             ExecPath::Keyed { .. } => {
                 self.keyed_requests += 1;
                 self.lat_keyed.record(latency_s);
+            }
+            // Pipelines get their own bucket (same split as segmented):
+            // the request also accounts its stage/pass fan.
+            ExecPath::Pipeline { stages, passes } => {
+                self.pipeline_requests += 1;
+                self.pipeline_stages += stages as u64;
+                self.pipeline_passes += passes as u64;
+                self.lat_pipeline.record(latency_s);
             }
             ExecPath::Host => self.lat_host.record(latency_s),
         }
@@ -263,6 +284,15 @@ impl Metrics {
                 self.keyed_fused_groups
             ));
         }
+        if self.pipeline_requests > 0 {
+            s.push_str(&format!(
+                "pipeline: requests={} stages={} passes={} fusion={:.2}x\n",
+                self.pipeline_requests,
+                self.pipeline_stages,
+                self.pipeline_passes,
+                self.pipeline_stages as f64 / self.pipeline_passes.max(1) as f64
+            ));
+        }
         if self.sharded_requests > 0 || self.pool_tasks > 0 {
             s.push_str(&format!(
                 "pool: sharded_requests={} tasks={} steals={} peak_depth={}\n",
@@ -285,6 +315,7 @@ impl Metrics {
         s.push_str(&format!("latency (host fused):   {}\n", self.lat_host_fused.summary()));
         s.push_str(&format!("latency (keyed):        {}\n", self.lat_keyed.summary()));
         s.push_str(&format!("latency (segmented):    {}\n", self.lat_segmented.summary()));
+        s.push_str(&format!("latency (pipeline):     {}\n", self.lat_pipeline.summary()));
         s.push_str(&format!("latency (host):         {}\n", self.lat_host.summary()));
         s
     }
@@ -319,6 +350,9 @@ impl Metrics {
         );
         reg.set_counter("parred_keyed_fused_groups_total", &[], self.keyed_fused_groups);
         reg.set_counter("parred_keyed_requests_total", &[], self.keyed_requests);
+        reg.set_counter("parred_pipeline_requests_total", &[], self.pipeline_requests);
+        reg.set_counter("parred_pipeline_stages_total", &[], self.pipeline_stages);
+        reg.set_counter("parred_pipeline_passes_total", &[], self.pipeline_passes);
         reg.set_counter("parred_sharded_requests_total", &[], self.sharded_requests);
         reg.set_counter("parred_pool_tasks_total", &[], self.pool_tasks);
         reg.set_counter("parred_pool_steals_total", &[], self.pool_steals);
@@ -337,6 +371,7 @@ impl Metrics {
             ("host_fused", &self.lat_host_fused),
             ("keyed", &self.lat_keyed),
             ("segmented", &self.lat_segmented),
+            ("pipeline", &self.lat_pipeline),
             ("host", &self.lat_host),
         ] {
             reg.set_histogram("parred_latency_seconds", &[("path", path)], h.clone());
@@ -359,8 +394,9 @@ mod tests {
         m.record(ExecPath::SegmentedPool { segments: 10, devices: 4 }, 7e-4, true, 100);
         m.record(ExecPath::Segmented { segments: 5 }, 9e-4, true, 100);
         m.record(ExecPath::Keyed { groups: 3 }, 8e-4, true, 100);
+        m.record(ExecPath::Pipeline { stages: 4, passes: 2 }, 6e-4, true, 100);
         m.record(ExecPath::Host, 5e-4, false, 100);
-        assert_eq!(m.completed, 8);
+        assert_eq!(m.completed, 9);
         assert_eq!(m.failed, 1);
         assert_eq!(m.lat_full.count(), 1);
         assert_eq!(m.lat_batched.count(), 1);
@@ -369,14 +405,35 @@ mod tests {
         assert_eq!(m.lat_pool_fused.count(), 1);
         assert_eq!(m.lat_keyed.count(), 1);
         assert_eq!(m.lat_segmented.count(), 1, "segmented host runs get their own bucket");
-        assert_eq!(m.lat_host.count(), 1, "the host bucket no longer pools segmented runs");
+        assert_eq!(m.lat_pipeline.count(), 1, "pipeline runs get their own bucket");
+        assert_eq!(m.lat_host.count(), 1, "the host bucket pools neither segmented nor pipeline runs");
         assert_eq!(
             m.sharded_requests,
             3,
             "direct, pool-fused and segmented-pool requests all count"
         );
         assert_eq!(m.keyed_requests, 1);
-        assert_eq!(m.elements_reduced, 900);
+        assert_eq!(m.pipeline_requests, 1);
+        assert_eq!(m.pipeline_stages, 4);
+        assert_eq!(m.pipeline_passes, 2);
+        assert_eq!(m.elements_reduced, 1000);
+    }
+
+    #[test]
+    fn pipeline_split_renders_and_exports() {
+        let mut m = Metrics::default();
+        m.record(ExecPath::Pipeline { stages: 5, passes: 2 }, 1e-3, true, 100);
+        m.record(ExecPath::Pipeline { stages: 3, passes: 3 }, 2e-3, true, 100);
+        let r = m.report();
+        assert!(r.contains("latency (pipeline):"), "{r}");
+        assert!(r.contains("pipeline: requests=2 stages=8 passes=5 fusion=1.60x"), "{r}");
+        let reg = crate::telemetry::Registry::new();
+        m.export_to(&reg);
+        assert_eq!(reg.counter("parred_pipeline_requests_total", &[]), 2);
+        assert_eq!(reg.counter("parred_pipeline_stages_total", &[]), 8);
+        assert_eq!(reg.counter("parred_pipeline_passes_total", &[]), 5);
+        let h = reg.histogram("parred_latency_seconds", &[("path", "pipeline")]).unwrap();
+        assert_eq!(h.count(), 2);
     }
 
     #[test]
@@ -500,5 +557,6 @@ mod tests {
         assert!(r.contains("throughput"));
         assert!(r.contains("latency"));
         assert!(r.contains("latency (segmented):"), "{r}");
+        assert!(r.contains("latency (pipeline):"), "{r}");
     }
 }

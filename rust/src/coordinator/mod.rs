@@ -18,7 +18,11 @@
 //! [`service::Service::submit_by_key`] and fuse per `(op, dtype)`
 //! into one segmented pass ([`batcher::KeyedBatcher`], by-key
 //! fusion), which the scheduler's segmented decision places on the
-//! host or as one fleet wave.
+//! host or as one fleet wave. Cascaded-reduction pipelines (mean /
+//! variance / argmax / softmax normalizer over one payload) enter via
+//! [`service::Service::submit_pipeline`] and execute as a fused
+//! reduction DAG through [`crate::engine::Engine::pipeline`], landing
+//! in their own latency band ([`metrics`]'s pipeline split).
 //!
 //! The front door is failure-typed: admission control sheds with
 //! [`request::ServeError::Shed`], a request's
@@ -36,7 +40,8 @@ pub mod router;
 pub mod service;
 
 pub use request::{
-    ExecPath, KeyedRequest, KeyedResponse, Request, Response, ServeError, SubmitOpts,
+    ExecPath, KeyedRequest, KeyedResponse, PipelineRequest, PipelineResponse, PipelineStage,
+    Request, Response, ServeError, SubmitOpts,
 };
 pub use router::{Route, Router};
 pub use service::{PoolServeConfig, Service, ServiceConfig};

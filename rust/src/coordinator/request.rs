@@ -4,6 +4,7 @@
 
 use std::time::{Duration, Instant};
 
+use crate::pipeline::StageValue;
 use crate::reduce::op::{Dtype, Op};
 use crate::reduce::plan::ShapeKey;
 use crate::runtime::literal::{HostScalar, HostVec};
@@ -191,6 +192,87 @@ pub struct SegmentedResponse {
     pub latency_s: f64,
 }
 
+/// One stage of a cascaded-reduction pipeline request — the serving
+/// lane's closed stage vocabulary, mirroring the sugar methods of
+/// [`crate::pipeline::PipelineBuilder`]. The executor replays these
+/// onto a builder in declaration order, so fusion (mean + variance in
+/// one pass, the softmax exp-sum reusing the max pass's placement)
+/// happens exactly as it would in-process.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PipelineStage {
+    Mean,
+    Variance,
+    ArgMax,
+    ArgMin,
+    SoftmaxDenom,
+}
+
+impl PipelineStage {
+    /// The stage name under which [`PipelineResponse::stages`] (and
+    /// [`crate::pipeline::PipelineOutcome`]) report this stage's value.
+    pub fn name(self) -> &'static str {
+        match self {
+            PipelineStage::Mean => "mean",
+            PipelineStage::Variance => "variance",
+            PipelineStage::ArgMax => "argmax",
+            PipelineStage::ArgMin => "argmin",
+            PipelineStage::SoftmaxDenom => "softmax_denom",
+        }
+    }
+
+    /// Parse a CLI-style stage name. Accepts the reported names plus
+    /// the `softmax-denom` spelling the `parred reduce --op` flag uses.
+    pub fn parse(s: &str) -> Option<PipelineStage> {
+        match s {
+            "mean" => Some(PipelineStage::Mean),
+            "variance" | "var" => Some(PipelineStage::Variance),
+            "argmax" => Some(PipelineStage::ArgMax),
+            "argmin" => Some(PipelineStage::ArgMin),
+            "softmax-denom" | "softmax_denom" => Some(PipelineStage::SoftmaxDenom),
+            _ => None,
+        }
+    }
+}
+
+/// A cascaded-reduction pipeline request entering the coordinator:
+/// a stage list over one payload, executed as a fused reduction DAG
+/// (served through [`crate::engine::Engine::pipeline`]).
+#[derive(Debug)]
+pub struct PipelineRequest {
+    pub id: RequestId,
+    /// Stages in declaration order (validated non-empty and
+    /// duplicate-free at submit time).
+    pub stages: Vec<PipelineStage>,
+    pub payload: HostVec,
+    /// Enqueue timestamp (latency accounting).
+    pub t_enqueue: Instant,
+    /// Absolute deadline (see [`Request::deadline`]).
+    pub deadline: Option<Instant>,
+    /// Where to deliver the response.
+    pub reply: std::sync::mpsc::Sender<PipelineResponse>,
+}
+
+impl PipelineRequest {
+    pub fn dtype(&self) -> Dtype {
+        self.payload.dtype()
+    }
+}
+
+/// The coordinator's answer to a pipeline request.
+#[derive(Debug, Clone)]
+pub struct PipelineResponse {
+    pub id: RequestId,
+    /// `(stage name, value)` in declaration order — or the error.
+    /// Argmin/argmax stages carry their index
+    /// ([`StageValue::Indexed`]).
+    pub stages: Result<Vec<(String, StageValue)>, ServeError>,
+    /// Always [`ExecPath::Pipeline`] (passes 0 when execution failed
+    /// before a plan ran).
+    pub path: ExecPath,
+    /// Queue + execute latency, seconds.
+    pub latency_s: f64,
+}
+
 /// The coordinator's answer to a keyed request.
 #[derive(Debug, Clone)]
 pub struct KeyedResponse {
@@ -242,6 +324,18 @@ mod tests {
         assert_eq!(r.flush_by(window), t + Duration::from_millis(3), "tight deadline wins");
         r.deadline = Some(t + Duration::from_millis(30));
         assert_eq!(r.flush_by(window), t + window, "loose deadline never delays the flush");
+    }
+
+    #[test]
+    fn pipeline_stage_names_round_trip() {
+        use PipelineStage::*;
+        for s in [Mean, Variance, ArgMax, ArgMin, SoftmaxDenom] {
+            assert_eq!(PipelineStage::parse(s.name()), Some(s), "{}", s.name());
+        }
+        // The CLI spelling of the softmax normalizer maps to the same
+        // stage the response reports as `softmax_denom`.
+        assert_eq!(PipelineStage::parse("softmax-denom"), Some(SoftmaxDenom));
+        assert_eq!(PipelineStage::parse("sum"), None, "reduce ops are not pipeline stages");
     }
 
     #[test]

@@ -22,6 +22,7 @@ use anyhow::{anyhow, Context, Result};
 
 use crate::engine::{resolve_device, Engine};
 use crate::gpusim::{DeviceConfig, FaultPlan};
+use crate::pipeline::StageValue;
 use crate::reduce::op::{Dtype, Element, Op, TypedElement};
 use crate::reduce::persistent;
 use crate::reduce::plan::ShapeKey;
@@ -35,8 +36,8 @@ use super::backpressure::Gate;
 use super::batcher::{BatchKind, Batcher, FlushedBatch, FlushedKeyedBatch, KeyPolicy, KeyedBatcher};
 use super::metrics::Metrics;
 use super::request::{
-    ExecPath, KeyedRequest, KeyedResponse, Request, Response, SegmentedRequest, SegmentedResponse,
-    ServeError, SubmitOpts,
+    ExecPath, KeyedRequest, KeyedResponse, PipelineRequest, PipelineResponse, PipelineStage,
+    Request, Response, SegmentedRequest, SegmentedResponse, ServeError, SubmitOpts,
 };
 use super::router::{Route, Router};
 
@@ -147,6 +148,7 @@ enum Msg {
     Req(Request),
     Keyed(KeyedRequest),
     Segmented(SegmentedRequest),
+    Pipeline(PipelineRequest),
     Shutdown,
 }
 
@@ -325,6 +327,67 @@ impl Service {
         };
         self.tx
             .send(Msg::Segmented(req))
+            .map_err(|_| ServeError::Failed("service stopped".into()))?;
+        permit.transfer();
+        Ok(reply_rx)
+    }
+
+    /// Submit a cascaded-reduction pipeline: `stages` in declaration
+    /// order over one payload, executed as a fused reduction DAG
+    /// through the engine's pipeline front door (mean + variance fuse
+    /// into one `(n, Σx, M2)` pass; the softmax normalizer's exp-sum
+    /// pass reuses the max pass's placement). The response carries one
+    /// `(stage name, value)` per requested stage. Returns the response
+    /// channel, or a typed [`ServeError`] on an empty/duplicate stage
+    /// list, an empty payload, shed, or a stopped service.
+    pub fn submit_pipeline(
+        &self,
+        stages: Vec<PipelineStage>,
+        payload: HostVec,
+    ) -> Result<Receiver<PipelineResponse>, ServeError> {
+        self.submit_pipeline_with(stages, payload, SubmitOpts::default())
+    }
+
+    /// [`Self::submit_pipeline`] with a deadline and/or bounded
+    /// admission retry (see [`Self::submit_with`]).
+    pub fn submit_pipeline_with(
+        &self,
+        stages: Vec<PipelineStage>,
+        payload: HostVec,
+        opts: SubmitOpts,
+    ) -> Result<Receiver<PipelineResponse>, ServeError> {
+        // Reject malformed cascades at the front door, like segmented
+        // CSR validation: the executor should never spend a queue slot
+        // discovering a shape error.
+        if stages.is_empty() {
+            return Err(ServeError::Failed("pipeline needs at least one stage".into()));
+        }
+        for (i, s) in stages.iter().enumerate() {
+            if stages[..i].contains(s) {
+                return Err(ServeError::Failed(format!(
+                    "duplicate pipeline stage {:?}",
+                    s.name()
+                )));
+            }
+        }
+        if payload.is_empty() {
+            return Err(ServeError::Failed(
+                "pipeline needs a non-empty payload (mean/variance are undefined on n=0)".into(),
+            ));
+        }
+        let t_enqueue = Instant::now();
+        let permit = self.admit(t_enqueue, &opts)?;
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let req = PipelineRequest {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            stages,
+            payload,
+            t_enqueue,
+            deadline: opts.deadline.map(|d| t_enqueue + d),
+            reply: reply_tx,
+        };
+        self.tx
+            .send(Msg::Pipeline(req))
             .map_err(|_| ServeError::Failed("service stopped".into()))?;
         permit.transfer();
         Ok(reply_rx)
@@ -617,6 +680,12 @@ fn executor_loop(
                         Msg::Segmented(req) => {
                             exec_engine_segmented(&engine, &gate, req, &mut metrics)
                         }
+                        // Pipeline requests plan their own fusion (the
+                        // whole cascade is one DAG); they execute
+                        // directly.
+                        Msg::Pipeline(req) => {
+                            exec_engine_pipeline(&engine, &gate, req, &mut metrics)
+                        }
                         Msg::Shutdown => {
                             running = false;
                             break;
@@ -852,6 +921,123 @@ fn exec_engine_segmented(
                 req,
                 Err(ServeError::Failed(format!("{e:#}"))),
                 ExecPath::Segmented { segments },
+                metrics,
+            );
+        }
+    }
+}
+
+fn respond_pipeline(
+    gate: &Gate,
+    req: PipelineRequest,
+    stages: Result<Vec<(String, StageValue)>, ServeError>,
+    path: ExecPath,
+    metrics: &mut Metrics,
+) {
+    let latency = req.t_enqueue.elapsed().as_secs_f64();
+    let ok = stages.is_ok();
+    let elements = req.payload.len();
+    let _ = req.reply.send(PipelineResponse { id: req.id, stages, path, latency_s: latency });
+    gate.release_transferred();
+    metrics.record(path, latency, ok, elements);
+}
+
+/// Pipeline twin of [`take_live`]. An expired cascade reports its
+/// stage count with zero passes: nothing was planned or executed.
+fn take_live_pipeline(
+    gate: &Gate,
+    req: PipelineRequest,
+    now: Instant,
+    metrics: &mut Metrics,
+) -> Option<PipelineRequest> {
+    match req.deadline {
+        Some(d) if now >= d => {
+            crate::telemetry::warn("serve.deadline.expired");
+            let waited_ms = now.saturating_duration_since(req.t_enqueue).as_millis() as u64;
+            let stages = req.stages.len();
+            respond_pipeline(
+                gate,
+                req,
+                Err(ServeError::Timeout { waited_ms }),
+                ExecPath::Pipeline { stages, passes: 0 },
+                metrics,
+            );
+            None
+        }
+        _ => Some(req),
+    }
+}
+
+/// Replay the request's stage list onto one [`Engine::pipeline`]
+/// builder and run it, returning the named stage values in declaration
+/// order plus the pipeline's own `ExecPath` (stage and pass counts).
+fn run_pipeline_stages<T: TypedElement>(
+    engine: &Engine,
+    data: &[T],
+    stages: &[PipelineStage],
+) -> Result<(Vec<(String, StageValue)>, ExecPath)> {
+    let mut p = engine.pipeline(data);
+    for s in stages {
+        p = match s {
+            PipelineStage::Mean => p.mean(),
+            PipelineStage::Variance => p.variance(),
+            PipelineStage::ArgMax => p.argmax(),
+            PipelineStage::ArgMin => p.argmin(),
+            PipelineStage::SoftmaxDenom => p.softmax_denom(),
+        };
+    }
+    let out = p.run()?;
+    let path = out.path;
+    Ok((out.stages.into_iter().map(|(name, r)| (name, r.value)).collect(), path))
+}
+
+/// Execute one pipeline request through the engine's pipeline front
+/// door. The `serve.request` span opened here is the thread's
+/// innermost open span, so the pipeline's own tree (`engine.pipeline`
+/// root, one `pipeline.pass` per fused pass) nests under it
+/// automatically; after the run, one `serve.stage` child span per
+/// named stage records the cascade's shape and values in the trace.
+/// [`Metrics::record`] routes the response's `ExecPath::Pipeline`
+/// into the pipeline latency band and fusion counters.
+fn exec_engine_pipeline(
+    engine: &Engine,
+    gate: &Gate,
+    req: PipelineRequest,
+    metrics: &mut Metrics,
+) {
+    let Some(req) = take_live_pipeline(gate, req, Instant::now(), metrics) else { return };
+    let mut span = engine.trace().span("serve.request");
+    if span.active() {
+        span.attr_u64("id", req.id);
+        span.attr_str("kind", "pipeline");
+        span.attr_u64("n", req.payload.len() as u64);
+        span.attr_u64("stages", req.stages.len() as u64);
+    }
+    let result: Result<(Vec<(String, StageValue)>, ExecPath)> = match &req.payload {
+        HostVec::F32(v) => run_pipeline_stages(engine, v, &req.stages),
+        HostVec::I32(v) => run_pipeline_stages(engine, v, &req.stages),
+    };
+    match result {
+        Ok((stages, path)) => {
+            if span.active() {
+                for (name, value) in &stages {
+                    let mut ss = engine.trace().span("serve.stage");
+                    ss.attr_str("stage", name.clone());
+                    ss.attr_f64("value", value.scalar());
+                    if let Some(i) = value.index() {
+                        ss.attr_u64("index", i);
+                    }
+                }
+            }
+            respond_pipeline(gate, req, Ok(stages), path, metrics);
+        }
+        Err(e) => {
+            let stages = req.stages.len();
+            respond_pipeline(
+                gate,
+                req,
+                Err(ServeError::Failed(format!("{e:#}"))),
+                ExecPath::Pipeline { stages, passes: 0 },
                 metrics,
             );
         }

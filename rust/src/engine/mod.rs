@@ -377,6 +377,19 @@ impl Engine {
     /// groups fuse into one persistent host pass, large or numerous
     /// groups run as one fleet pass. `.run_with_sizes()` additionally
     /// returns each group's element count.
+    /// A cascaded-reduction pipeline over one payload:
+    /// `engine.pipeline(&data).mean().variance().argmax().run()`
+    /// composes named DAG stages, fuses compatible ones into single
+    /// passes (mean **and** variance ride one `(n, Σx, M2)` pass), and
+    /// runs independent passes concurrently — each placed on its own
+    /// rung of the ladder. See [`crate::pipeline`].
+    pub fn pipeline<'e, 'd, T: TypedElement>(
+        &'e self,
+        data: &'d [T],
+    ) -> crate::pipeline::PipelineBuilder<'e, 'd, T> {
+        crate::pipeline::PipelineBuilder::new(self, data)
+    }
+
     pub fn reduce_by_key<'e, 'd, K, T>(
         &'e self,
         keys: &'d [K],

@@ -42,6 +42,10 @@ pub enum ExecPath {
     /// the [`Reduced`] outcome tell whether the groups ran as one
     /// fleet pass or on the host.
     Keyed { groups: usize },
+    /// A cascaded-reduction pipeline ([`crate::engine::Engine::pipeline`]):
+    /// `stages` user-visible DAG stages fused into `passes` reads of
+    /// the payload, each pass placed on its own rung.
+    Pipeline { stages: usize, passes: usize },
     /// Host (threaded/sequential) fallback.
     Host,
 }

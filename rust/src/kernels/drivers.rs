@@ -11,7 +11,9 @@ use super::{catanzaro, jradi, jradi_segmented, luitjens};
 use crate::gpusim::ir::CombOp;
 use crate::gpusim::trace::RunStats;
 use crate::gpusim::{Gpu, LaunchConfig};
+use crate::reduce::accum::{self, AccumKind, AccumValue};
 use crate::reduce::kahan;
+use crate::reduce::Op;
 
 /// Result of a full device-side reduction.
 #[derive(Debug, Clone)]
@@ -246,6 +248,70 @@ pub fn jradi_reduce_segments(
     Ok(SegmentsOutcome { values, run })
 }
 
+/// Result of a fused accumulator pass on one device: the carrier
+/// partial plus the metering launch's statistics.
+#[derive(Debug, Clone)]
+pub struct AccumOutcome {
+    pub value: AccumValue,
+    pub run: RunStats,
+}
+
+/// Fused accumulator-carrier pass over one shard ([`crate::pipeline`]'s
+/// fleet leg): produce the whole carrier — count/sum/M2 triple, arg
+/// pair, or `Σ exp(x − shift)` — from **one** read of the shard.
+///
+/// The simulator's IR has scalar f64 registers only, so the carrier
+/// fold itself runs host-side ([`accum::fold_slice`], in element
+/// order); the *cost* of the pass is metered by launching the matching
+/// scalar jradi kernel over the same bytes (`Add` for Stats/SumExp
+/// carriers, `Max`/`Min` for arg carriers). That is the honest model:
+/// the paper's kernels are bandwidth-bound, and a fused carrier pass
+/// reads each element exactly once — the same traffic as one scalar
+/// pass, which is the entire point of fusing (RedFuser's argument).
+/// Mirrors the pool worker's launch-shape choice: one launch when the
+/// shard fits a single persistent block's unrolled stride, two-stage
+/// otherwise.
+///
+/// For arg carriers the metering kernel's scalar extremum doubles as a
+/// cross-check: max/min are order-independent, so the kernel value
+/// must equal the carrier's value bit-for-bit.
+///
+/// `base` is the global index of `data[0]` (arg carriers report global
+/// indices). Empty shards return the identity without launching.
+pub fn jradi_reduce_accum(
+    gpu: &mut Gpu,
+    data: &[f64],
+    kind: AccumKind,
+    base: u64,
+    f: u32,
+    block: u32,
+) -> Result<AccumOutcome> {
+    if data.is_empty() {
+        return Ok(AccumOutcome { value: kind.identity(), run: RunStats::default() });
+    }
+    let op = match kind.meter_op() {
+        Op::Sum => CombOp::Add,
+        Op::Prod => CombOp::Mul,
+        Op::Max => CombOp::Max,
+        Op::Min => CombOp::Min,
+    };
+    let single_launch_max = block as usize * f.max(1) as usize;
+    let metered = if data.len() <= single_launch_max {
+        jradi_reduce_single(gpu, data, op, f, block)?
+    } else {
+        jradi_reduce(gpu, data, op, f, block)?
+    };
+    let value = accum::fold_slice(kind, data, base);
+    if let (AccumKind::ArgMax | AccumKind::ArgMin, Some((v, _))) = (kind, value.arg()) {
+        debug_assert_eq!(
+            metered.value, v,
+            "metering kernel and carrier fold disagree on the {} extremum",
+            kind.name()
+        );
+    }
+    Ok(AccumOutcome { value, run: metered.run })
+}
+
 /// Luitjens' shuffle reduction (extension kernel, ablation bench).
 pub fn luitjens_reduce(gpu: &mut Gpu, data: &[f64], op: CombOp, block: u32) -> Result<Outcome> {
     let ws = gpu.cfg().warp_size;
@@ -365,6 +431,40 @@ mod tests {
             let rel_c = ((got_c - want) / want).abs();
             assert!(rel_c < 1e-12, "cat {op:?}: {got_c} vs {want}");
         }
+    }
+
+    #[test]
+    fn accum_driver_matches_host_fold_and_meters_one_pass() {
+        let mut gpu = Gpu::new(DeviceConfig::tesla_c2075());
+        for n in [1usize, 200, 2_048, 100_003] {
+            let d = data(n);
+            for kind in [
+                AccumKind::Stats,
+                AccumKind::ArgMax,
+                AccumKind::ArgMin,
+                AccumKind::SumExp { shift: 1000.0 },
+            ] {
+                let out = jradi_reduce_accum(&mut gpu, &d, kind, 77, 8, 256).unwrap();
+                assert_eq!(out.value, accum::fold_slice(kind, &d, 77), "n={n} {kind:?}");
+                // Metered like the matching scalar pass: one launch for
+                // shards within a single block's stride, two beyond.
+                let want_launches = if n <= 256 * 8 { 1 } else { 2 };
+                assert_eq!(out.run.launches.len(), want_launches, "n={n} {kind:?}");
+                assert!(out.run.total_time_s() > 0.0);
+            }
+        }
+        // Arg indices are global: base offsets them.
+        let out = jradi_reduce_accum(&mut gpu, &[5.0, 9.0, 9.0], AccumKind::ArgMax, 40, 8, 64)
+            .unwrap();
+        assert_eq!(out.value.arg(), Some((9.0, 41)));
+    }
+
+    #[test]
+    fn accum_driver_empty_shard_is_identity_no_launch() {
+        let mut gpu = Gpu::new(DeviceConfig::g80());
+        let out = jradi_reduce_accum(&mut gpu, &[], AccumKind::Stats, 0, 8, 128).unwrap();
+        assert_eq!(out.value, AccumKind::Stats.identity());
+        assert!(out.run.launches.is_empty());
     }
 
     #[test]

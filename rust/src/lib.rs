@@ -33,7 +33,12 @@
 //!   ([`Engine`]): a typed facade placing every request — scalar,
 //!   rows, ragged segments, keyed group-bys — on the scheduler's
 //!   ladder, segmented workloads past the knee (or numerous small
-//!   segments) executing as **one** fleet pass; [`telemetry`] is the
+//!   segments) executing as **one** fleet pass; [`pipeline`] composes
+//!   cascaded-reduction DAGs over one payload (mean, variance, argmax,
+//!   the softmax normalizer) with compatible stages **fused** into
+//!   single passes — one `(n, Σx, M2)` pass serves mean and variance
+//!   together — and independent passes run concurrently by a
+//!   work-stealing pass executor; [`telemetry`] is the
 //!   zero-dependency observability layer — span traces threaded from
 //!   engine entry through scheduler decision, shard plan, per-worker
 //!   task and combine (JSON-lines / Chrome `trace_event` export), a
@@ -74,6 +79,18 @@
 //! let groups = engine.reduce_by_key(&keys, &data).op(Op::Sum).run()?;
 //! assert_eq!(groups.value.len(), 4);
 //! assert_eq!(groups.value[0].0, 0);
+//!
+//! // A cascaded pipeline: mean AND variance fused into one pass over
+//! // the payload (Chan's parallel (n, Σx, M2) carrier), argmax in a
+//! // second — the DAG's cost is its pass count, not its stage count.
+//! let stats = engine.pipeline(&data).mean().variance().argmax().run()?;
+//! println!(
+//!     "mean {:.2}, variance {:.2}, max at index {}",
+//!     stats.scalar("mean").unwrap(),
+//!     stats.scalar("variance").unwrap(),
+//!     stats.arg("argmax").unwrap().1,
+//! );
+//! assert_eq!(stats.passes.len(), 2);
 //! # Ok::<(), anyhow::Error>(())
 //! ```
 //!
@@ -108,6 +125,7 @@ pub mod engine;
 pub mod gpusim;
 pub mod harness;
 pub mod kernels;
+pub mod pipeline;
 pub mod pool;
 pub mod reduce;
 pub mod runtime;
@@ -116,6 +134,7 @@ pub mod telemetry;
 pub mod util;
 
 pub use engine::{Engine, EngineBuilder, ExecPath, Reduced};
+pub use pipeline::{PipelineBuilder, PipelineOutcome};
 
 /// Crate-wide result type.
 pub type Result<T> = anyhow::Result<T>;

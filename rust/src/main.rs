@@ -10,7 +10,10 @@
 //!   reduce --n N [--op OP] [--dtype f32|i32] [--backend engine|host|pool|pjrt]
 //!       [--pool --pool-devices SPEC] [--segments K | --by-key K]
 //!                                reduce a generated workload through
-//!                                the Engine facade (or raw PJRT)
+//!                                the Engine facade (or raw PJRT);
+//!                                cascade ops (mean, variance, argmax,
+//!                                argmin, softmax-denom) run as fused
+//!                                pipelines (engine.pipeline)
 //!   serve [--requests N] [--batch-window-us U] [--payload N]
 //!                                end-to-end serving driver (PJRT)
 //!
@@ -90,6 +93,13 @@ USAGE: parred <info|tables|sim|reduce|serve> [options]
          --backend pool pins the segmented/keyed pass to the one-pass
          fleet rung (implies a pool); --backend pjrt runs the raw
          compiled-artifact path instead.
+         --op mean|variance|argmax|argmin|softmax-denom routes through
+         the cascaded-reduction pipeline subsystem instead: the op
+         becomes a pipeline stage, the planner fuses its hidden
+         dependency stages into data passes (engine.pipeline), and the
+         output reports every stage value plus the per-pass fusion
+         report. --explain dumps the scheduler's audited per-pass
+         placements after the run.
   serve [--requests 200] [--batch-window-us 200] [--payload 65536]
         [--artifacts DIR] [--pool=1 --pool-devices SPEC [--pool-cutoff N]]
         [--adaptive] [--sched-snapshot PATH]
@@ -392,6 +402,12 @@ where
 
 fn reduce(args: &Args) -> Result<()> {
     let n = args.get_usize("n", 1 << 20)?;
+    // Cascade ops (mean, variance, argmax, argmin, softmax-denom) are
+    // pipeline stages, not reduce Ops: they route through the fused
+    // reduction-DAG subsystem before the Op parser can reject them.
+    if let Some(stage) = parred::coordinator::PipelineStage::parse(args.get_or("op", "sum")) {
+        return reduce_pipeline(args, n, stage);
+    }
     let op: Op = parse_op(args)?;
     let dtype = Dtype::parse(args.get_or("dtype", "f32")).ok_or_else(|| anyhow!("bad dtype"))?;
     let backend = args.get_or("backend", "engine");
@@ -490,6 +506,106 @@ fn reduce(args: &Args) -> Result<()> {
             );
         }
         (b, _) => bail!("unknown backend {b:?} (engine|host|pool|pjrt)"),
+    }
+    Ok(())
+}
+
+/// `parred reduce --op mean|variance|argmax|argmin|softmax-denom`:
+/// the requested cascade op becomes a one-stage pipeline through
+/// [`parred::Engine::pipeline`] — the planner fuses its hidden
+/// dependency stages into passes (variance rides the same
+/// `(n, Σx, M2)` pass as mean; the softmax normalizer is a max pass
+/// plus an exp-sum pass reusing the max pass's placement) and the
+/// output reports every stage value plus the per-pass fusion report.
+fn reduce_pipeline(args: &Args, n: usize, stage: parred::coordinator::PipelineStage) -> Result<()> {
+    use parred::coordinator::PipelineStage as S;
+    use parred::pipeline::StageValue;
+    let dtype = Dtype::parse(args.get_or("dtype", "f32")).ok_or_else(|| anyhow!("bad dtype"))?;
+    let backend = args.get_or("backend", "engine");
+    if !matches!(backend, "engine" | "host") {
+        bail!("cascade ops run through the engine facade (--backend engine; --pool attaches a fleet)");
+    }
+    let seed = args.get_usize("seed", 42)? as u64;
+    let mut rng = Rng::new(seed);
+    let mut builder = parred::Engine::builder()
+        .host_workers(args.get_usize("workers", 0)?)
+        .adaptive(truthy(args, "adaptive"));
+    if truthy(args, "pool") {
+        let custom = match args.get("device-file") {
+            Some(path) => vec![DeviceConfig::from_json(&std::fs::read_to_string(path)?)?],
+            None => Vec::new(),
+        };
+        let devices =
+            parred::engine::fleet_from_spec(args.get_or("pool-devices", "4"), &custom)?;
+        builder = builder.fleet(devices).pool_cutoff(opt_usize(args, "pool-cutoff", 1 << 20)?);
+    }
+    let engine = builder.build()?;
+    fn run_stage<T: parred::reduce::TypedElement>(
+        engine: &parred::Engine,
+        data: Vec<T>,
+        stage: parred::coordinator::PipelineStage,
+    ) -> Result<parred::PipelineOutcome> {
+        use parred::coordinator::PipelineStage as S;
+        let p = engine.pipeline(&data);
+        let p = match stage {
+            S::Mean => p.mean(),
+            S::Variance => p.variance(),
+            S::ArgMax => p.argmax(),
+            S::ArgMin => p.argmin(),
+            S::SoftmaxDenom => p.softmax_denom(),
+        };
+        Ok(p.run()?)
+    }
+    let out = match dtype {
+        Dtype::F32 => run_stage(&engine, rng.f32_vec(n, -1.0, 1.0), stage)?,
+        Dtype::I32 => run_stage(&engine, rng.i32_vec(n, -100, 100), stage)?,
+    };
+    let name = match stage {
+        S::SoftmaxDenom => "softmax-denom",
+        s => s.name(),
+    };
+    println!(
+        "pipeline {name} over {n} {dtype}: path={:?} ({:.3} ms, shards={} steals={})",
+        out.path,
+        out.elapsed_s * 1e3,
+        out.shards,
+        out.steals
+    );
+    for (stage_name, r) in &out.stages {
+        match r.value {
+            StageValue::Scalar(v) => println!("  {stage_name} = {v}"),
+            StageValue::Indexed { value, index } => {
+                println!("  {stage_name} = {value} at index {index}")
+            }
+        }
+    }
+    for p in &out.passes {
+        println!(
+            "  pass {}: {} stage(s) fused, n={} on {}{} ({:.3} ms)",
+            p.label,
+            p.stages_fused,
+            p.n,
+            p.backend,
+            if p.reused_placement { " (placement reused)" } else { "" },
+            p.elapsed_s * 1e3,
+        );
+    }
+    // `--explain` dumps the scheduler's audited per-pass placements
+    // (the same rows Scheduler::stage_placements exposes to tests).
+    if truthy(args, "explain") {
+        for row in engine.scheduler().stage_placements() {
+            println!(
+                "  placed #{}: {} ({} {} n={}, {} fused) -> {} modeled {:.3} ms",
+                row.seq,
+                row.label,
+                row.op,
+                row.dtype,
+                row.n,
+                row.stages_fused,
+                row.backend,
+                row.modeled_s * 1e3,
+            );
+        }
     }
     Ok(())
 }

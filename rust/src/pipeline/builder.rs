@@ -1,0 +1,149 @@
+//! The pipeline's declarative stage IR and its builder.
+//!
+//! Stages are a *closed* vocabulary, not closures: the planner can
+//! only fuse what it can see, so every map-then-reduce shape it knows
+//! how to fuse is an enum variant. Sugar methods (`.mean()`,
+//! `.variance()`, ...) lower to the same IR a hand-built
+//! `.stage(name, ..)` call produces — hidden helper stages get
+//! `__`-prefixed names and are excluded from the outcome.
+
+use crate::engine::Engine;
+use crate::reduce::op::{Op, TypedElement};
+
+use super::{executor, planner, PipelineOutcome};
+
+/// One declarative stage of a reduction DAG.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Stage {
+    /// Reduce the source payload with a scalar combiner.
+    Reduce(Op),
+    /// Elementwise-map the source, then reduce the mapped stream; the
+    /// map kinds are the closed set the planner knows how to fuse.
+    Map(MapReduce),
+    /// Scalar arithmetic over two prior stages' outputs — costs no
+    /// pass; referenced stages must be declared earlier.
+    Combine(Combine),
+}
+
+/// The fusable map-then-reduce shapes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum MapReduce {
+    /// The element count `n` (fuses into the Stats pass).
+    Count,
+    /// `Σ (x − mean(x))²` — the source's own squared deviations, which
+    /// is exactly the Chan/Welford `M2` the fused Stats pass carries;
+    /// costs no pass beyond that one.
+    SqDevSum,
+    /// `Σ exp(x − max(x))` — the softmax normalizer. Plans as a max
+    /// pass plus a dependent shifted-exp-sum pass that reuses the max
+    /// pass's placement.
+    ExpSubSum,
+    /// Index of the maximum (smallest index on ties).
+    ArgMax,
+    /// Index of the minimum (smallest index on ties).
+    ArgMin,
+}
+
+/// Scalar combines over prior stage outputs (an indexed operand
+/// contributes its value component).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Combine {
+    /// `num / den`.
+    Div { num: String, den: String },
+    /// `lhs − rhs`.
+    Sub { lhs: String, rhs: String },
+}
+
+/// One named stage declaration (hidden = sugar-inserted helper).
+#[derive(Debug, Clone)]
+pub(crate) struct StageDecl {
+    pub name: String,
+    pub stage: Stage,
+    pub hidden: bool,
+}
+
+/// A reduction-DAG request over one payload (from
+/// [`Engine::pipeline`]). See the [module docs](crate::pipeline).
+#[derive(Debug)]
+pub struct PipelineBuilder<'e, 'd, T: TypedElement> {
+    engine: &'e Engine,
+    data: &'d [T],
+    stages: Vec<StageDecl>,
+}
+
+impl<'e, 'd, T: TypedElement> PipelineBuilder<'e, 'd, T> {
+    pub(crate) fn new(engine: &'e Engine, data: &'d [T]) -> Self {
+        PipelineBuilder { engine, data, stages: Vec::new() }
+    }
+
+    /// Declare a named stage. Names must be unique; `Combine` stages
+    /// may only reference stages declared before them.
+    pub fn stage(mut self, name: impl Into<String>, stage: Stage) -> Self {
+        self.stages.push(StageDecl { name: name.into(), stage, hidden: false });
+        self
+    }
+
+    /// Add a hidden helper stage unless one with this name exists.
+    fn ensure(&mut self, name: &str, stage: Stage) {
+        if !self.stages.iter().any(|s| s.name == name) {
+            self.stages.push(StageDecl { name: name.to_string(), stage, hidden: true });
+        }
+    }
+
+    /// A named scalar reduction stage (`Reduce(op)`).
+    pub fn reduce(self, name: impl Into<String>, op: Op) -> Self {
+        self.stage(name, Stage::Reduce(op))
+    }
+
+    /// Stage `"mean"`: `Σx / n`, both operands fused into one Stats
+    /// pass — one read of the payload.
+    pub fn mean(mut self) -> Self {
+        self.ensure("__sum", Stage::Reduce(Op::Sum));
+        self.ensure("__n", Stage::Map(MapReduce::Count));
+        self.stage(
+            "mean",
+            Stage::Combine(Combine::Div { num: "__sum".into(), den: "__n".into() }),
+        )
+    }
+
+    /// Stage `"variance"` (population): `Σ(x − mean)² / n` via the
+    /// Stats pass's Chan/Welford `M2` — one pass, no separate mean
+    /// pass, robust to catastrophic cancellation.
+    pub fn variance(mut self) -> Self {
+        self.ensure("__sqdev", Stage::Map(MapReduce::SqDevSum));
+        self.ensure("__n", Stage::Map(MapReduce::Count));
+        self.stage(
+            "variance",
+            Stage::Combine(Combine::Div { num: "__sqdev".into(), den: "__n".into() }),
+        )
+    }
+
+    /// Stage `"argmax"`: the max value and the smallest index
+    /// attaining it, in one index-carrying pass.
+    pub fn argmax(self) -> Self {
+        self.stage("argmax", Stage::Map(MapReduce::ArgMax))
+    }
+
+    /// Stage `"argmin"`: the min value and the smallest index
+    /// attaining it.
+    pub fn argmin(self) -> Self {
+        self.stage("argmin", Stage::Map(MapReduce::ArgMin))
+    }
+
+    /// Stage `"softmax_denom"`: the softmax normalizer
+    /// `Σ exp(x − max(x))` — two passes (max, then shifted exp-sum on
+    /// the same placement), never one, for overflow safety.
+    pub fn softmax_denom(self) -> Self {
+        self.stage("softmax_denom", Stage::Map(MapReduce::ExpSubSum))
+    }
+
+    /// Plan, place, and execute the DAG. Fails on an empty payload,
+    /// duplicate stage names, or a `Combine` referencing an undeclared
+    /// or later stage; execution itself degrades (fleet → host) rather
+    /// than failing.
+    pub fn run(self) -> crate::Result<PipelineOutcome> {
+        let PipelineBuilder { engine, data, stages } = self;
+        let plan = planner::plan(&stages)?;
+        executor::execute(engine, data, &stages, &plan)
+    }
+}

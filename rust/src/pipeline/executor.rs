@@ -1,0 +1,593 @@
+//! The pipeline executor: independent fused passes run concurrently
+//! over a global ready queue plus per-worker local deques with
+//! stealing (the databend executor shape, SNIPPETS.md §3), each pass
+//! placed on the scheduler's ladder.
+//!
+//! Execution shape:
+//!
+//! * the payload embeds to `f64` **once** (one parallel map over the
+//!   persistent runtime) and is shared by every carrier pass;
+//! * passes with no dependency seed the global ready queue; a worker
+//!   drains its own deque first, then the global queue, then steals
+//!   from the back of a sibling's deque;
+//! * finishing a pass enqueues its dependents on the *finisher's*
+//!   deque (the softmax exp-sum runs right where its max finished,
+//!   warm in cache);
+//! * each pass is placed by
+//!   [`Scheduler::decide_pass`](crate::sched::Scheduler::decide_pass)
+//!   — sequential fold, persistent host runtime, or one sharded fleet
+//!   wave — except the softmax exp-sum, which **reuses** its max
+//!   pass's placement ([`Scheduler::record_pass_placement`]
+//!   (crate::sched::Scheduler::record_pass_placement) keeps the audit
+//!   trail complete); a fleet pass that fails outright degrades to the
+//!   full-width host rung, warned and fed back to the health tracker,
+//!   exactly like `engine.reduce`.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Instant;
+
+use anyhow::bail;
+
+use crate::engine::{Engine, ExecPath, Reduced};
+use crate::reduce::accum::{self, AccumKind, AccumValue};
+use crate::reduce::op::{Element, TypedElement};
+use crate::reduce::{persistent, simd};
+use crate::sched::{Backend, Decision};
+
+use super::builder::StageDecl;
+use super::planner::{Binding, Extract, PassClass, PassNode, Plan};
+use super::{PipelineOutcome, StageValue};
+
+/// Poison-tolerant lock (a panicking pass must not wedge its
+/// siblings; panics surface through the scope join).
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// One fused pass's execution report (surfaced on
+/// [`PipelineOutcome::passes`]).
+#[derive(Debug, Clone)]
+pub struct PassReport {
+    /// Pass label ("stats", "argmax", "argmin", "sumexp", "prod").
+    pub label: &'static str,
+    /// Logical stages fused into this one pass.
+    pub stages_fused: usize,
+    /// Elements read (every pass reads the payload exactly once).
+    pub n: usize,
+    /// Backend that actually ran ("pool-fallback-host" when a fleet
+    /// pass degraded to the host).
+    pub backend: &'static str,
+    /// Whether this pass reused another pass's placement (the softmax
+    /// exp-sum on its max pass).
+    pub reused_placement: bool,
+    /// Wall clock of this pass, seconds.
+    pub elapsed_s: f64,
+    /// Fleet shards executed (0 on host rungs).
+    pub shards: usize,
+    /// Fleet-level shard steals.
+    pub steals: u64,
+    /// Modeled fleet wall clock, seconds (0 on host rungs).
+    pub modeled_wall_s: f64,
+}
+
+/// A pass's computed value.
+#[derive(Debug, Clone, Copy)]
+enum PassValue {
+    Accum(AccumValue),
+    Typed(f64),
+}
+
+/// A finished pass: value + the decision it ran under + its report.
+#[derive(Debug, Clone)]
+struct PassResult {
+    value: PassValue,
+    decision: Decision,
+    report: PassReport,
+}
+
+/// Execute one fused pass on the rung `decision` names, with the
+/// fleet → host degradation the engine's scalar path uses.
+fn run_accum_pass(
+    engine: &Engine,
+    payload: &Arc<Vec<f64>>,
+    kind: AccumKind,
+    dtype: crate::reduce::op::Dtype,
+    decision: Decision,
+) -> (AccumValue, &'static str, usize, u64, f64) {
+    let sched = engine.scheduler();
+    let op = kind.meter_op();
+    let n = payload.len();
+    let t0 = Instant::now();
+    match decision {
+        Decision::Sequential => {
+            let v = accum::fold_slice(kind, payload, 0);
+            sched.observe(Backend::Sequential, op, dtype, n, t0.elapsed().as_secs_f64());
+            (v, Backend::Sequential.name(), 0, 0, 0.0)
+        }
+        Decision::Threaded { workers } => {
+            let v = persistent::global().fold_accum_width(payload, kind, workers);
+            let backend =
+                if workers <= 2 { Backend::ThreadedNarrow } else { Backend::ThreadedFull };
+            sched.observe(backend, op, dtype, n, t0.elapsed().as_secs_f64());
+            (v, backend.name(), 0, 0, 0.0)
+        }
+        // Pipelines never request artifact dispatch (decide_pass calls
+        // decide with has_exact_artifact = false).
+        Decision::Artifact => unreachable!("decide(.., false) never picks Artifact"),
+        Decision::Sharded { .. } => match engine.pool() {
+            Some(pool) => {
+                let plan = sched.plan_shards(pool.devices(), n, pool.tasks_per_device());
+                match pool.fold_accum_shared(payload.clone(), kind, &plan) {
+                    Ok((v, out)) => {
+                        sched.observe_pool(op, dtype, n, &out);
+                        (v, Backend::Pool.name(), out.shards, out.steals, out.modeled_wall_s)
+                    }
+                    Err(e) => {
+                        crate::telemetry::warn("engine.fleet.fallback");
+                        sched.observe_fleet_liveness(&pool.live_workers());
+                        let mut f = engine.trace().span("exec.fleet_fallback");
+                        f.attr_str("error", e.to_string());
+                        let v =
+                            persistent::global().fold_accum_width(payload, kind, engine.workers());
+                        (v, "pool-fallback-host", 0, 0, 0.0)
+                    }
+                }
+            }
+            None => {
+                let v = persistent::global().fold_accum_width(payload, kind, engine.workers());
+                (v, Backend::ThreadedFull.name(), 0, 0, 0.0)
+            }
+        },
+    }
+}
+
+/// Execute one pass node (placement + execution + span + report).
+fn run_pass<T: TypedElement>(
+    engine: &Engine,
+    payload: &Arc<Vec<f64>>,
+    data: &[T],
+    node: &PassNode,
+    dep: Option<&PassResult>,
+    root_id: u64,
+) -> PassResult {
+    let t0 = Instant::now();
+    let sched = engine.scheduler();
+    let n = data.len();
+    let mut span = engine.trace().span_with_parent("pipeline.pass", root_id);
+    if span.active() {
+        span.attr_str("pass", node.label);
+        span.attr_u64("stages_fused", node.stages_fused as u64);
+        span.attr_u64("n", n as u64);
+    }
+    let (value, decision, backend, reused, shards, steals, modeled) = match node.class {
+        PassClass::Accum(kind) => {
+            // The softmax exp-sum substitutes its max pass's extremum
+            // for the placeholder shift and reuses that pass's
+            // placement — recorded on the audit trail all the same.
+            let (kind, decision, reused) = match (kind, dep) {
+                (AccumKind::SumExp { .. }, Some(d)) => {
+                    let shift = match d.value {
+                        PassValue::Accum(AccumValue::Arg { value, .. }) => value,
+                        _ => unreachable!("sumexp depends on an arg pass"),
+                    };
+                    let op = AccumKind::SumExp { shift }.meter_op();
+                    sched.record_pass_placement(
+                        node.label,
+                        op,
+                        T::DTYPE,
+                        n,
+                        node.stages_fused,
+                        d.decision,
+                    );
+                    (AccumKind::SumExp { shift }, d.decision, true)
+                }
+                _ => (
+                    kind,
+                    sched.decide_pass(node.label, kind.meter_op(), T::DTYPE, n, node.stages_fused),
+                    false,
+                ),
+            };
+            let (v, backend, shards, steals, modeled) =
+                run_accum_pass(engine, payload, kind, T::DTYPE, decision);
+            (PassValue::Accum(v), decision, backend, reused, shards, steals, modeled)
+        }
+        // Typed passes (products) stay on the host: the f64 embedding
+        // cannot reproduce i32 wrapping products, and the scheduler's
+        // ladder never shards products anyway.
+        PassClass::Typed(op) => {
+            let decision = sched.decide_pass(node.label, op, T::DTYPE, n, node.stages_fused);
+            let v = match decision {
+                Decision::Sequential => simd::reduce(data, op),
+                Decision::Threaded { workers } => {
+                    persistent::global().reduce_width(data, op, workers)
+                }
+                _ => persistent::global().reduce_width(data, op, engine.workers()),
+            };
+            let backend = match decision {
+                Decision::Sequential => Backend::Sequential.name(),
+                Decision::Threaded { workers } if workers <= 2 => Backend::ThreadedNarrow.name(),
+                _ => Backend::ThreadedFull.name(),
+            };
+            (PassValue::Typed(v.to_f64()), decision, backend, false, 0, 0, 0.0)
+        }
+    };
+    if span.active() {
+        span.attr_str("backend", backend);
+        span.attr_str("decision", format!("{decision:?}"));
+        if reused {
+            span.attr_str("placement", "reused");
+        }
+    }
+    PassResult {
+        value,
+        decision,
+        report: PassReport {
+            label: node.label,
+            stages_fused: node.stages_fused,
+            n,
+            backend,
+            reused_placement: reused,
+            elapsed_s: t0.elapsed().as_secs_f64(),
+            shards,
+            steals,
+            modeled_wall_s: modeled,
+        },
+    }
+}
+
+/// Drain the pass DAG: global ready queue + per-worker deques with
+/// back-stealing; a finished pass enqueues its dependents on the
+/// finisher's own deque. Returns the results in pass order plus the
+/// executor-level steal count.
+fn run_passes<T: TypedElement>(
+    engine: &Engine,
+    payload: &Arc<Vec<f64>>,
+    data: &[T],
+    plan: &Plan,
+    root_id: u64,
+) -> (Vec<PassResult>, u64) {
+    let passes = &plan.passes;
+    let count = passes.len();
+    let workers = count.min(engine.workers()).max(1);
+
+    let slots: Vec<Mutex<Option<PassResult>>> = (0..count).map(|_| Mutex::new(None)).collect();
+    let pending: Vec<AtomicUsize> =
+        passes.iter().map(|p| AtomicUsize::new(p.dep.is_some() as usize)).collect();
+    let mut children: Vec<Vec<usize>> = vec![Vec::new(); count];
+    for (i, p) in passes.iter().enumerate() {
+        if let Some(d) = p.dep {
+            children[d].push(i);
+        }
+    }
+    let injector: Mutex<VecDeque<usize>> =
+        Mutex::new((0..count).filter(|&i| passes[i].dep.is_none()).collect());
+    let locals: Vec<Mutex<VecDeque<usize>>> =
+        (0..workers).map(|_| Mutex::new(VecDeque::new())).collect();
+    let remaining = AtomicUsize::new(count);
+    let exec_steals = AtomicU64::new(0);
+
+    // Run node `i` on worker `w`: dependency results are complete by
+    // construction (a node only becomes ready when its dep's slot is
+    // filled), and dependents go to the finisher's deque.
+    let run_node = |w: usize, i: usize| {
+        let dep = passes[i].dep.map(|d| lock(&slots[d]).clone().expect("dep finished first"));
+        let r = run_pass(engine, payload, data, &passes[i], dep.as_ref(), root_id);
+        *lock(&slots[i]) = Some(r);
+        for &c in &children[i] {
+            if pending[c].fetch_sub(1, Ordering::AcqRel) == 1 {
+                lock(&locals[w]).push_back(c);
+            }
+        }
+        remaining.fetch_sub(1, Ordering::AcqRel);
+    };
+
+    if workers <= 1 {
+        while remaining.load(Ordering::Acquire) > 0 {
+            let next =
+                lock(&locals[0]).pop_front().or_else(|| lock(&injector).pop_front());
+            match next {
+                Some(i) => run_node(0, i),
+                None => unreachable!("acyclic pass DAG always has a ready node"),
+            }
+        }
+    } else {
+        let (injector, locals) = (&injector, &locals);
+        let (remaining, exec_steals) = (&remaining, &exec_steals);
+        let run_node = &run_node;
+        std::thread::scope(|scope| {
+            for w in 0..workers {
+                scope.spawn(move || loop {
+                    let next = lock(&locals[w])
+                        .pop_front()
+                        .or_else(|| lock(injector).pop_front())
+                        .or_else(|| {
+                            (0..locals.len()).filter(|&o| o != w).find_map(|o| {
+                                let t = lock(&locals[o]).pop_back();
+                                if t.is_some() {
+                                    exec_steals.fetch_add(1, Ordering::Relaxed);
+                                }
+                                t
+                            })
+                        });
+                    match next {
+                        Some(i) => run_node(w, i),
+                        None if remaining.load(Ordering::Acquire) == 0 => break,
+                        None => std::thread::yield_now(),
+                    }
+                });
+            }
+        });
+    }
+
+    let results =
+        slots.into_iter().map(|s| lock(&s).take().expect("every pass ran")).collect();
+    (results, exec_steals.into_inner())
+}
+
+/// Read one stage's value out of its pass result.
+fn extract_value(result: &PassResult, extract: Extract) -> StageValue {
+    match (extract, &result.value) {
+        (Extract::Total, PassValue::Accum(v)) => {
+            StageValue::Scalar(v.stats().expect("stats carrier").total())
+        }
+        (Extract::Count, PassValue::Accum(v)) => {
+            StageValue::Scalar(v.stats().expect("stats carrier").n as f64)
+        }
+        (Extract::M2, PassValue::Accum(v)) => {
+            StageValue::Scalar(v.stats().expect("stats carrier").m2)
+        }
+        (Extract::ArgPair, PassValue::Accum(v)) => {
+            let (value, index) = v.arg().expect("non-empty payload");
+            StageValue::Indexed { value, index }
+        }
+        (Extract::Extremum, PassValue::Accum(v)) => {
+            StageValue::Scalar(v.arg().expect("non-empty payload").0)
+        }
+        (Extract::Typed, PassValue::Typed(v)) => StageValue::Scalar(*v),
+        _ => unreachable!("planner binds extracts to matching pass classes"),
+    }
+}
+
+/// Execute a planned pipeline end to end (from
+/// [`PipelineBuilder::run`](super::PipelineBuilder::run)).
+pub(crate) fn execute<T: TypedElement>(
+    engine: &Engine,
+    data: &[T],
+    stages: &[StageDecl],
+    plan: &Plan,
+) -> crate::Result<PipelineOutcome> {
+    let t0 = Instant::now();
+    if data.is_empty() {
+        bail!("pipeline needs a non-empty payload (mean/variance/argmax are undefined on it)");
+    }
+    let user_stages = stages.iter().filter(|s| !s.hidden).count();
+    let trace = engine.trace();
+    let mut root = trace.span("engine.pipeline");
+    if root.active() {
+        root.attr_str("dtype", T::DTYPE.name());
+        root.attr_u64("n", data.len() as u64);
+        root.attr_u64("stages", user_stages as u64);
+        root.attr_u64("passes", plan.passes.len() as u64);
+    }
+    let root_id = root.id();
+
+    // One shared f64 embedding feeds every carrier pass; typed passes
+    // read the original slice.
+    let payload: Arc<Vec<f64>> = Arc::new(persistent::global().map_f64(data));
+    let (results, exec_steals) = run_passes(engine, &payload, data, plan, root_id);
+
+    // Scalar finishing: bindings evaluate in declaration order, so
+    // combine operands are always already computed.
+    let mut values: Vec<StageValue> = Vec::with_capacity(plan.bindings.len());
+    // Each stage's *primary* pass — the pass whose statistics its
+    // outcome reports (a combine inherits its first operand's).
+    let mut primary: Vec<Option<usize>> = Vec::with_capacity(plan.bindings.len());
+    {
+        let mut combine = trace.span_with_parent("pipeline.combine", root_id);
+        combine.attr_u64("stages", plan.bindings.len() as u64);
+        for b in &plan.bindings {
+            let (v, p) = match *b {
+                Binding::Pass { pass, extract } => {
+                    (extract_value(&results[pass], extract), Some(pass))
+                }
+                Binding::Div { num, den } => (
+                    StageValue::Scalar(values[num].scalar() / values[den].scalar()),
+                    primary[num].or(primary[den]),
+                ),
+                Binding::Sub { lhs, rhs } => (
+                    StageValue::Scalar(values[lhs].scalar() - values[rhs].scalar()),
+                    primary[lhs].or(primary[rhs]),
+                ),
+            };
+            values.push(v);
+            primary.push(p);
+        }
+    }
+
+    let path = ExecPath::Pipeline { stages: user_stages, passes: plan.passes.len() };
+    let outcome_stages: Vec<(String, Reduced<StageValue>)> = stages
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| !s.hidden)
+        .map(|(i, s)| {
+            let r = primary[i].map(|p| &results[p].report);
+            (
+                s.name.clone(),
+                Reduced {
+                    value: values[i],
+                    path,
+                    elapsed_s: r.map_or(0.0, |r| r.elapsed_s),
+                    shards: r.map_or(0, |r| r.shards),
+                    steals: r.map_or(0, |r| r.steals),
+                    modeled_wall_s: r.map_or(0.0, |r| r.modeled_wall_s),
+                },
+            )
+        })
+        .collect();
+    let reports: Vec<PassReport> = results.into_iter().map(|r| r.report).collect();
+    Ok(PipelineOutcome {
+        stages: outcome_stages,
+        path,
+        elapsed_s: t0.elapsed().as_secs_f64(),
+        shards: reports.iter().map(|r| r.shards).sum(),
+        steals: reports.iter().map(|r| r.steals).sum(),
+        exec_steals,
+        modeled_wall_s: reports.iter().map(|r| r.modeled_wall_s).sum(),
+        passes: reports,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::DeviceConfig;
+    use crate::reduce::op::Op;
+    use crate::util::rng::Rng;
+
+    fn host_engine() -> Engine {
+        Engine::builder().host_workers(4).build().unwrap()
+    }
+
+    /// Two-pass scalar oracle over the f64 embedding.
+    fn oracle(data: &[f64]) -> (f64, f64, f64, (f64, u64)) {
+        let n = data.len() as f64;
+        let mean = data.iter().sum::<f64>() / n;
+        let var = data.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+        let (mut best, mut at) = (f64::NEG_INFINITY, 0u64);
+        for (i, &x) in data.iter().enumerate() {
+            if x > best {
+                best = x;
+                at = i as u64;
+            }
+        }
+        let denom = data.iter().map(|&x| (x - best).exp()).sum::<f64>();
+        (mean, var, denom, (best, at))
+    }
+
+    #[test]
+    fn full_cascade_matches_two_pass_oracle_on_host() {
+        let e = host_engine();
+        for n in [1usize, 100, 50_000] {
+            let data = Rng::new(n as u64 + 3).f32_vec(n, -4.0, 4.0);
+            let out = e
+                .pipeline(&data)
+                .mean()
+                .variance()
+                .argmax()
+                .softmax_denom()
+                .run()
+                .unwrap();
+            let f64s: Vec<f64> = data.iter().map(|&x| x as f64).collect();
+            let (mean, var, denom, (best, at)) = oracle(&f64s);
+            let m = out.scalar("mean").unwrap();
+            let v = out.scalar("variance").unwrap();
+            let d = out.scalar("softmax_denom").unwrap();
+            assert!((m - mean).abs() <= 1e-9 * mean.abs().max(1.0), "n={n}: {m} vs {mean}");
+            assert!((v - var).abs() <= 1e-9 * var.max(1e-12), "n={n}: {v} vs {var}");
+            assert!((d - denom).abs() <= 1e-9 * denom, "n={n}: {d} vs {denom}");
+            assert_eq!(out.arg("argmax").unwrap(), (best, at), "n={n}");
+            // mean+variance+argmax fuse to 2 passes; softmax adds one.
+            assert_eq!(out.path, ExecPath::Pipeline { stages: 4, passes: 3 });
+            assert_eq!(out.passes.len(), 3);
+        }
+    }
+
+    #[test]
+    fn mean_and_variance_are_one_pass() {
+        let e = host_engine();
+        let data = Rng::new(11).i32_vec(30_000, -500, 500);
+        let out = e.pipeline(&data).mean().variance().run().unwrap();
+        assert_eq!(out.path, ExecPath::Pipeline { stages: 2, passes: 1 });
+        assert_eq!(out.passes[0].label, "stats");
+        assert_eq!(out.passes[0].stages_fused, 3, "sum + count + sqdev");
+        // i32 sums embed exactly in f64: the mean is bit-identical to
+        // the scalar oracle's f64 arithmetic.
+        let sum: f64 = data.iter().map(|&x| x as f64).sum();
+        assert_eq!(out.scalar("mean").unwrap(), sum / data.len() as f64);
+    }
+
+    #[test]
+    fn softmax_reuses_the_max_placement() {
+        let e = host_engine();
+        let data = Rng::new(23).f32_vec(40_000, -6.0, 6.0);
+        let out = e.pipeline(&data).softmax_denom().run().unwrap();
+        assert_eq!(out.passes.len(), 2);
+        let max_pass = out.passes.iter().find(|p| p.label == "argmax").unwrap();
+        let exp_pass = out.passes.iter().find(|p| p.label == "sumexp").unwrap();
+        assert!(exp_pass.reused_placement, "exp-sum must reuse the max placement");
+        assert!(!max_pass.reused_placement);
+        assert_eq!(exp_pass.backend, max_pass.backend);
+        // Both passes land on the audit trail.
+        let placements = e.scheduler().stage_placements();
+        assert_eq!(placements.len(), 2);
+        assert_eq!(placements[1].label, "sumexp");
+    }
+
+    #[test]
+    fn fleet_pipeline_matches_host_and_shards() {
+        let cutoff = 1 << 14;
+        let e = Engine::builder()
+            .host_workers(4)
+            .fleet(vec![DeviceConfig::tesla_c2075(); 3])
+            .pool_cutoff(Some(cutoff))
+            .build()
+            .unwrap();
+        let n = 1 << 16;
+        let data = Rng::new(41).f32_vec(n, -3.0, 3.0);
+        let out = e.pipeline(&data).mean().variance().argmax().softmax_denom().run().unwrap();
+        assert!(out.shards > 0, "past the knee the passes must shard");
+        let f64s: Vec<f64> = data.iter().map(|&x| x as f64).collect();
+        let (mean, var, denom, (best, at)) = oracle(&f64s);
+        assert!((out.scalar("mean").unwrap() - mean).abs() <= 1e-9 * mean.abs().max(1.0));
+        assert!((out.scalar("variance").unwrap() - var).abs() <= 1e-9 * var.max(1e-12));
+        assert!((out.scalar("softmax_denom").unwrap() - denom).abs() <= 1e-9 * denom);
+        assert_eq!(out.arg("argmax").unwrap(), (best, at));
+        // Per-stage outcomes carry the producing pass's fleet stats.
+        assert!(out.get("mean").unwrap().shards > 0);
+        assert_eq!(out.get("mean").unwrap().path, out.path);
+    }
+
+    #[test]
+    fn prod_rides_a_typed_host_pass() {
+        let e = host_engine();
+        let data: Vec<i32> = vec![3; 21]; // 3^21 wraps i32
+        let out = e.pipeline(&data).reduce("p", Op::Prod).mean().run().unwrap();
+        let want = data.iter().copied().fold(1i32, i32::wrapping_mul);
+        assert_eq!(out.scalar("p").unwrap(), want as f64, "wrapping product preserved");
+        assert_eq!(out.passes.len(), 2);
+        assert!(out.passes.iter().any(|p| p.label == "prod"));
+    }
+
+    #[test]
+    fn empty_payload_and_bad_dags_error() {
+        let e = host_engine();
+        let empty: [f32; 0] = [];
+        assert!(e.pipeline(&empty).mean().run().is_err());
+        let data = [1.0f32, 2.0];
+        // No stages at all.
+        assert!(e.pipeline(&data).run().is_err());
+        // Duplicate stage name.
+        assert!(e
+            .pipeline(&data)
+            .reduce("x", Op::Sum)
+            .reduce("x", Op::Max)
+            .run()
+            .is_err());
+    }
+
+    #[test]
+    fn hidden_stages_stay_hidden() {
+        let e = host_engine();
+        let data = Rng::new(7).f32_vec(1000, -1.0, 1.0);
+        let out = e.pipeline(&data).mean().variance().run().unwrap();
+        let names: Vec<&str> = out.stage_names().collect();
+        assert_eq!(names, ["mean", "variance"]);
+        assert!(out.get("__sum").is_none());
+        // But explicit stages over the same carriers are visible.
+        let out = e.pipeline(&data).reduce("total", Op::Sum).mean().run().unwrap();
+        assert!(out.get("total").is_some());
+        assert_eq!(out.passes.len(), 1, "explicit sum fuses into the same Stats pass");
+    }
+}

@@ -1,0 +1,138 @@
+//! `pipeline` — cascaded-reduction DAGs with fused passes.
+//!
+//! The paper's generic-combiner claim (one reduction skeleton, any
+//! associative operator) extends past scalar combiners: a *cascade* of
+//! reductions over one payload — mean, variance, argmax, the softmax
+//! normalizer — is still a small set of associative reductions, and
+//! most of its stages can share a single read of the data. RedFuser
+//! (PAPERS.md) makes the fusion argument for GPU reduction DAGs; this
+//! module is that argument as a subsystem:
+//!
+//! * [`PipelineBuilder`] (from [`crate::Engine::pipeline`]) composes
+//!   named [`Stage`]s — `Reduce(op)` over the source, `Map(..)`
+//!   map-then-reduce stages from a closed set the planner understands,
+//!   and `Combine(..)` scalar arithmetic over prior stages — plus
+//!   sugar for the common cascades (`.mean()`, `.variance()`,
+//!   `.argmax()`, `.softmax_denom()`).
+//! * The [planner](planner) fuses compatible stages into single
+//!   *passes*: every sum/count/squared-deviation stage rides one
+//!   [`Stats`](crate::reduce::accum::Stats) pass (Chan's parallel
+//!   `(n, Σx, M2)` merge — one-pass mean **and** variance), max/argmax
+//!   share one index-carrying pass, and the softmax normalizer plans
+//!   as max → `Σ exp(x − max)` where the second pass *reuses the
+//!   first's placement*. A pipeline's cost is its pass count, not its
+//!   stage count.
+//! * The [executor](executor) runs independent passes concurrently —
+//!   a global ready queue plus per-worker local deques with stealing
+//!   (the databend executor shape, SNIPPETS.md §3) — and places each
+//!   pass on the scheduler's ladder
+//!   ([`Scheduler::decide_pass`](crate::sched::Scheduler::decide_pass)):
+//!   serial fold, persistent host runtime
+//!   ([`fold_accum_width`](crate::reduce::persistent::PersistentPool::fold_accum_width)),
+//!   or one sharded fleet wave
+//!   ([`fold_accum_shared`](crate::pool::DevicePool::fold_accum_shared))
+//!   with shard-order Neumaier/Chan combines.
+//!
+//! ```no_run
+//! use parred::Engine;
+//!
+//! let engine = Engine::builder().host_workers(8).build()?;
+//! let data: Vec<f32> = (0..1_000_000).map(|i| (i % 1000) as f32).collect();
+//! let out = engine.pipeline(&data).mean().variance().argmax().run()?;
+//! println!(
+//!     "mean {:.3} var {:.3} argmax at {} ({} stages in {} passes)",
+//!     out.scalar("mean").unwrap(),
+//!     out.scalar("variance").unwrap(),
+//!     out.arg("argmax").unwrap().1,
+//!     out.stage_names().count(),
+//!     out.passes.len(),
+//! );
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+
+use crate::engine::{ExecPath, Reduced};
+
+pub mod builder;
+pub(crate) mod executor;
+pub(crate) mod planner;
+
+pub use builder::{Combine, MapReduce, PipelineBuilder, Stage};
+pub use executor::PassReport;
+
+/// One stage's value: a scalar, or a `(value, index)` pair for
+/// argmin/argmax stages.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum StageValue {
+    Scalar(f64),
+    /// Extremum value and the smallest global index attaining it.
+    Indexed { value: f64, index: u64 },
+}
+
+impl StageValue {
+    /// The scalar representative (the value component of an indexed
+    /// stage) — what [`Combine`] stages read from their operands.
+    pub fn scalar(self) -> f64 {
+        match self {
+            StageValue::Scalar(v) => v,
+            StageValue::Indexed { value, .. } => value,
+        }
+    }
+
+    /// The carried index, for argmin/argmax stages.
+    pub fn index(self) -> Option<u64> {
+        match self {
+            StageValue::Scalar(_) => None,
+            StageValue::Indexed { index, .. } => Some(index),
+        }
+    }
+}
+
+/// The outcome of one pipeline run: every named (user) stage's value
+/// as a [`Reduced`] — tagged with the pass statistics that produced it
+/// — plus the per-pass reports and the aggregate fleet statistics.
+#[derive(Debug, Clone)]
+pub struct PipelineOutcome {
+    /// `(stage name, outcome)` in declaration order; hidden stages the
+    /// sugar inserted (`__sum`, `__n`, ...) are not listed.
+    pub stages: Vec<(String, Reduced<StageValue>)>,
+    /// Always [`ExecPath::Pipeline`] with the stage and pass counts.
+    pub path: ExecPath,
+    /// Wall clock of the whole pipeline, seconds.
+    pub elapsed_s: f64,
+    /// One report per fused pass, in plan order.
+    pub passes: Vec<PassReport>,
+    /// Fleet shards executed across all passes (0 host-only).
+    pub shards: usize,
+    /// Fleet-level shard steals across all passes.
+    pub steals: u64,
+    /// Executor-level pass steals (a worker running a pass that was
+    /// queued on another worker's deque).
+    pub exec_steals: u64,
+    /// Summed modeled fleet wall clock across passes, seconds.
+    pub modeled_wall_s: f64,
+}
+
+impl PipelineOutcome {
+    /// A named stage's full outcome.
+    pub fn get(&self, name: &str) -> Option<&Reduced<StageValue>> {
+        self.stages.iter().find(|(n, _)| n == name).map(|(_, r)| r)
+    }
+
+    /// A named stage's scalar value.
+    pub fn scalar(&self, name: &str) -> Option<f64> {
+        self.get(name).map(|r| r.value.scalar())
+    }
+
+    /// A named argmin/argmax stage's `(value, index)` pair.
+    pub fn arg(&self, name: &str) -> Option<(f64, u64)> {
+        match self.get(name)?.value {
+            StageValue::Indexed { value, index } => Some((value, index)),
+            StageValue::Scalar(_) => None,
+        }
+    }
+
+    /// The user stage names, in declaration order.
+    pub fn stage_names(&self) -> impl Iterator<Item = &str> {
+        self.stages.iter().map(|(n, _)| n.as_str())
+    }
+}

@@ -1,0 +1,275 @@
+//! The fusion planner: stage DAG → fused pass plan.
+//!
+//! Fusion rules (the RedFuser argument, PAPERS.md — a reduction DAG's
+//! cost is its *pass* count, each pass one read of the payload):
+//!
+//! * every `Reduce(Sum)`, `Count`, and `SqDevSum` stage fuses into
+//!   **one** [`AccumKind::Stats`] pass — the `(n, Σx, M2)` carrier
+//!   serves sum, count, mean, and variance together;
+//! * `Reduce(Max)` / `ArgMax` share one index-carrying pass (the
+//!   extremum is the arg carrier's value component); likewise min;
+//! * `ExpSubSum` (the softmax normalizer) plans as a max pass plus a
+//!   *dependent* shifted exp-sum pass — the only inter-pass edge —
+//!   which reuses the max pass's placement;
+//! * `Reduce(Prod)` stays a typed host pass: the fleet's f64 embedding
+//!   cannot reproduce i32 wrapping products, so products never fuse
+//!   into a carrier pass;
+//! * `Combine` stages cost no pass at all — they are scalar arithmetic
+//!   over pass outputs, evaluated after the passes drain.
+
+use anyhow::{anyhow, Result};
+
+use crate::reduce::accum::AccumKind;
+use crate::reduce::op::Op;
+
+use super::builder::{Combine, MapReduce, Stage, StageDecl};
+
+/// What one fused pass computes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub(crate) enum PassClass {
+    /// An accumulator-carrier pass. For `SumExp` the shift is a
+    /// placeholder (0.0) until the dependency's extremum is known.
+    Accum(AccumKind),
+    /// A typed host reduction over the original element type.
+    Typed(Op),
+}
+
+/// One fused pass: what it computes, the single pass it depends on
+/// (the softmax edge), and how many stages fused into it.
+#[derive(Debug, Clone, PartialEq)]
+pub(crate) struct PassNode {
+    pub class: PassClass,
+    /// Pass index this one must wait for (`SumExp` → its max pass).
+    pub dep: Option<usize>,
+    /// Stage declarations bound to this pass (hidden ones included) —
+    /// what the audit trail reports as the fused-stage count.
+    pub stages_fused: usize,
+    /// Audit/span label ("stats", "argmax", "argmin", "sumexp",
+    /// "prod").
+    pub label: &'static str,
+}
+
+/// Which component of a pass result a stage reads.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub(crate) enum Extract {
+    /// The Stats carrier's compensated total (sum and exp-sum stages).
+    Total,
+    /// The Stats carrier's element count.
+    Count,
+    /// The Stats carrier's `M2` (Σ squared deviations).
+    M2,
+    /// The arg carrier's `(value, index)` pair.
+    ArgPair,
+    /// The arg carrier's value component (`Reduce(Max/Min)`).
+    Extremum,
+    /// The typed pass's scalar.
+    Typed,
+}
+
+/// How a stage's value is produced.
+#[derive(Debug, Clone, PartialEq)]
+pub(crate) enum Binding {
+    /// Read a component of pass `pass`'s result.
+    Pass { pass: usize, extract: Extract },
+    /// Scalar arithmetic over two earlier stages (by stage index).
+    Div { num: usize, den: usize },
+    /// `lhs − rhs` over two earlier stages.
+    Sub { lhs: usize, rhs: usize },
+}
+
+/// The executable plan: fused passes plus one binding per declared
+/// stage (aligned with the declaration list).
+#[derive(Debug, Clone, PartialEq)]
+pub(crate) struct Plan {
+    pub passes: Vec<PassNode>,
+    pub bindings: Vec<Binding>,
+}
+
+/// Dedup-or-create one pass of `class` and count a fused stage on it.
+fn bind_pass(passes: &mut Vec<PassNode>, class: PassClass, label: &'static str) -> usize {
+    if let Some(i) = passes.iter().position(|p| p.class == class) {
+        passes[i].stages_fused += 1;
+        return i;
+    }
+    passes.push(PassNode { class, dep: None, stages_fused: 1, label });
+    passes.len() - 1
+}
+
+/// Resolve a `Combine` operand: must name a stage declared earlier.
+fn operand(stages: &[StageDecl], upto: usize, name: &str) -> Result<usize> {
+    stages[..upto].iter().position(|s| s.name == name).ok_or_else(|| {
+        anyhow!("pipeline stage {:?} combines over undeclared stage {name:?}", stages[upto].name)
+    })
+}
+
+/// Fuse a stage list into a pass plan. Validates names (unique,
+/// non-empty) and combine references (declared earlier).
+pub(crate) fn plan(stages: &[StageDecl]) -> Result<Plan> {
+    if stages.is_empty() {
+        return Err(anyhow!("pipeline has no stages (add .mean(), .reduce(..), ...)"));
+    }
+    for (i, s) in stages.iter().enumerate() {
+        if s.name.is_empty() {
+            return Err(anyhow!("pipeline stage {i} has an empty name"));
+        }
+        if stages[..i].iter().any(|p| p.name == s.name) {
+            return Err(anyhow!("duplicate pipeline stage name {:?}", s.name));
+        }
+    }
+
+    let mut passes: Vec<PassNode> = Vec::new();
+    let mut bindings: Vec<Binding> = Vec::with_capacity(stages.len());
+    for (i, decl) in stages.iter().enumerate() {
+        let binding = match &decl.stage {
+            Stage::Reduce(Op::Sum) => Binding::Pass {
+                pass: bind_pass(&mut passes, PassClass::Accum(AccumKind::Stats), "stats"),
+                extract: Extract::Total,
+            },
+            Stage::Reduce(Op::Max) => Binding::Pass {
+                pass: bind_pass(&mut passes, PassClass::Accum(AccumKind::ArgMax), "argmax"),
+                extract: Extract::Extremum,
+            },
+            Stage::Reduce(Op::Min) => Binding::Pass {
+                pass: bind_pass(&mut passes, PassClass::Accum(AccumKind::ArgMin), "argmin"),
+                extract: Extract::Extremum,
+            },
+            Stage::Reduce(op @ Op::Prod) => Binding::Pass {
+                pass: bind_pass(&mut passes, PassClass::Typed(*op), "prod"),
+                extract: Extract::Typed,
+            },
+            Stage::Map(MapReduce::Count) => Binding::Pass {
+                pass: bind_pass(&mut passes, PassClass::Accum(AccumKind::Stats), "stats"),
+                extract: Extract::Count,
+            },
+            Stage::Map(MapReduce::SqDevSum) => Binding::Pass {
+                pass: bind_pass(&mut passes, PassClass::Accum(AccumKind::Stats), "stats"),
+                extract: Extract::M2,
+            },
+            Stage::Map(MapReduce::ArgMax) => Binding::Pass {
+                pass: bind_pass(&mut passes, PassClass::Accum(AccumKind::ArgMax), "argmax"),
+                extract: Extract::ArgPair,
+            },
+            Stage::Map(MapReduce::ArgMin) => Binding::Pass {
+                pass: bind_pass(&mut passes, PassClass::Accum(AccumKind::ArgMin), "argmin"),
+                extract: Extract::ArgPair,
+            },
+            Stage::Map(MapReduce::ExpSubSum) => {
+                // Two passes: the max (shared with any argmax stage),
+                // then the shifted exp-sum depending on it. The shift
+                // is a placeholder; the executor substitutes the max
+                // pass's extremum and reuses its placement.
+                let max_pass =
+                    bind_pass(&mut passes, PassClass::Accum(AccumKind::ArgMax), "argmax");
+                let pass = bind_pass(
+                    &mut passes,
+                    PassClass::Accum(AccumKind::SumExp { shift: 0.0 }),
+                    "sumexp",
+                );
+                passes[pass].dep = Some(max_pass);
+                Binding::Pass { pass, extract: Extract::Total }
+            }
+            Stage::Combine(Combine::Div { num, den }) => Binding::Div {
+                num: operand(stages, i, num)?,
+                den: operand(stages, i, den)?,
+            },
+            Stage::Combine(Combine::Sub { lhs, rhs }) => Binding::Sub {
+                lhs: operand(stages, i, lhs)?,
+                rhs: operand(stages, i, rhs)?,
+            },
+        };
+        bindings.push(binding);
+    }
+    Ok(Plan { passes, bindings })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn decl(name: &str, stage: Stage) -> StageDecl {
+        StageDecl { name: name.into(), stage, hidden: false }
+    }
+
+    #[test]
+    fn mean_and_variance_fuse_into_one_stats_pass() {
+        // The .mean().variance() lowering: 5 stages, ONE pass.
+        let stages = [
+            decl("__sum", Stage::Reduce(Op::Sum)),
+            decl("__n", Stage::Map(MapReduce::Count)),
+            decl("mean", Stage::Combine(Combine::Div { num: "__sum".into(), den: "__n".into() })),
+            decl("__sqdev", Stage::Map(MapReduce::SqDevSum)),
+            decl(
+                "variance",
+                Stage::Combine(Combine::Div { num: "__sqdev".into(), den: "__n".into() }),
+            ),
+        ];
+        let p = plan(&stages).unwrap();
+        assert_eq!(p.passes.len(), 1, "sum+count+sqdev must share one Stats pass");
+        assert_eq!(p.passes[0].class, PassClass::Accum(AccumKind::Stats));
+        assert_eq!(p.passes[0].stages_fused, 3);
+        assert_eq!(p.bindings[0], Binding::Pass { pass: 0, extract: Extract::Total });
+        assert_eq!(p.bindings[1], Binding::Pass { pass: 0, extract: Extract::Count });
+        assert_eq!(p.bindings[2], Binding::Div { num: 0, den: 1 });
+        assert_eq!(p.bindings[3], Binding::Pass { pass: 0, extract: Extract::M2 });
+    }
+
+    #[test]
+    fn max_and_argmax_share_the_arg_pass() {
+        let stages =
+            [decl("max", Stage::Reduce(Op::Max)), decl("argmax", Stage::Map(MapReduce::ArgMax))];
+        let p = plan(&stages).unwrap();
+        assert_eq!(p.passes.len(), 1);
+        assert_eq!(p.passes[0].class, PassClass::Accum(AccumKind::ArgMax));
+        assert_eq!(p.passes[0].stages_fused, 2);
+        assert_eq!(p.bindings[0], Binding::Pass { pass: 0, extract: Extract::Extremum });
+        assert_eq!(p.bindings[1], Binding::Pass { pass: 0, extract: Extract::ArgPair });
+    }
+
+    #[test]
+    fn softmax_denom_is_two_passes_with_an_edge() {
+        let stages = [decl("softmax_denom", Stage::Map(MapReduce::ExpSubSum))];
+        let p = plan(&stages).unwrap();
+        assert_eq!(p.passes.len(), 2);
+        assert_eq!(p.passes[0].class, PassClass::Accum(AccumKind::ArgMax));
+        assert_eq!(p.passes[1].class, PassClass::Accum(AccumKind::SumExp { shift: 0.0 }));
+        assert_eq!(p.passes[1].dep, Some(0), "exp-sum waits for the max");
+        assert_eq!(p.bindings[0], Binding::Pass { pass: 1, extract: Extract::Total });
+        // An explicit argmax alongside shares the max pass.
+        let stages = [
+            decl("argmax", Stage::Map(MapReduce::ArgMax)),
+            decl("softmax_denom", Stage::Map(MapReduce::ExpSubSum)),
+        ];
+        let p = plan(&stages).unwrap();
+        assert_eq!(p.passes.len(), 2);
+        assert_eq!(p.passes[0].stages_fused, 2);
+    }
+
+    #[test]
+    fn prod_stays_a_typed_pass() {
+        let stages =
+            [decl("prod", Stage::Reduce(Op::Prod)), decl("sum", Stage::Reduce(Op::Sum))];
+        let p = plan(&stages).unwrap();
+        assert_eq!(p.passes.len(), 2);
+        assert_eq!(p.passes[0].class, PassClass::Typed(Op::Prod));
+        assert_eq!(p.bindings[0], Binding::Pass { pass: 0, extract: Extract::Typed });
+    }
+
+    #[test]
+    fn validation_catches_bad_dags() {
+        // Empty pipeline.
+        assert!(plan(&[]).is_err());
+        // Duplicate names.
+        let stages = [decl("x", Stage::Reduce(Op::Sum)), decl("x", Stage::Reduce(Op::Max))];
+        assert!(plan(&stages).unwrap_err().to_string().contains("duplicate"));
+        // Combine over an undeclared stage.
+        let stages =
+            [decl("r", Stage::Combine(Combine::Div { num: "a".into(), den: "b".into() }))];
+        assert!(plan(&stages).unwrap_err().to_string().contains("undeclared"));
+        // Combine may not reference a *later* stage.
+        let stages = [
+            decl("r", Stage::Combine(Combine::Sub { lhs: "s".into(), rhs: "s".into() })),
+            decl("s", Stage::Reduce(Op::Sum)),
+        ];
+        assert!(plan(&stages).is_err());
+    }
+}

@@ -46,6 +46,7 @@ use anyhow::{bail, Context, Result};
 use crate::gpusim::ir::CombOp;
 use crate::gpusim::{DeviceConfig, FaultError, Gpu};
 use crate::kernels::drivers;
+use crate::reduce::accum::{AccumKind, AccumValue};
 use crate::reduce::kahan;
 use crate::reduce::op::{Element, Op};
 use crate::telemetry::Trace;
@@ -129,6 +130,11 @@ enum TaskKind {
     /// slice-local CSR (first 0, last == slice length); the output
     /// carries one partial per local segment.
     Segments { offsets: Arc<Vec<usize>> },
+    /// Fused accumulator pass over the slice
+    /// ([`drivers::jradi_reduce_accum`]): one read produces the whole
+    /// carrier (count/sum/M2, arg pair, Σ exp(x − shift)); the shard's
+    /// start offset is the arg carrier's global index base.
+    Accum { kind: AccumKind },
 }
 
 /// A task blueprint: where the slice lives and how to reduce it. The
@@ -148,13 +154,14 @@ fn flat_specs(shards: impl IntoIterator<Item = Shard>) -> Vec<TaskSpec> {
 enum TaskOutput {
     Scalar(f64),
     Segments(Vec<f64>),
+    Accum(AccumValue),
 }
 
 impl TaskOutput {
     fn scalar(&self) -> f64 {
         match self {
             TaskOutput::Scalar(v) => *v,
-            TaskOutput::Segments(_) => {
+            TaskOutput::Segments(_) | TaskOutput::Accum(_) => {
                 unreachable!("flat waves only ever carry scalar outputs")
             }
         }
@@ -452,6 +459,75 @@ impl DevicePool {
             combine(op, &wave.scalar_partials())
         };
         Ok(wave.into_outcome(value, plan.shards.len()))
+    }
+
+    /// Fused accumulator pass across the fleet — the sharded leg of a
+    /// [`crate::pipeline`] stage. Every shard folds its slice into the
+    /// carrier on its device ([`drivers::jradi_reduce_accum`]), and the
+    /// per-shard partials merge host-side **in shard order**: Chan's
+    /// parallel combine over Neumaier-compensated sums for Stats
+    /// carriers, smallest-global-index tie-break for arg carriers — so
+    /// results are deterministic regardless of stealing, retries, or
+    /// which worker ran what.
+    ///
+    /// The plan must tile `[0, payload.len())` contiguously with
+    /// non-empty shards on known devices (same contract as
+    /// [`Self::reduce_shared`]). Returns the merged carrier plus the
+    /// usual pass outcome; the outcome's scalar `value` is the
+    /// carrier's representative (compensated total for Stats/SumExp,
+    /// extremum for arg carriers).
+    pub fn fold_accum_shared(
+        &self,
+        payload: Arc<Vec<f64>>,
+        kind: AccumKind,
+        plan: &ShardPlan,
+    ) -> Result<(AccumValue, PoolOutcome)> {
+        let n = payload.len();
+        let workers = self.num_devices();
+        let mut cursor = 0usize;
+        for s in &plan.shards {
+            if s.start != cursor || s.end <= s.start || s.end > n || s.device >= workers {
+                bail!(
+                    "accum plan must tile [0, {n}) contiguously with non-empty shards on \
+                     known devices; found {s:?} at offset {cursor}"
+                );
+            }
+            cursor = s.end;
+        }
+        if cursor != n {
+            bail!("accum plan covers {cursor} of {n} elements");
+        }
+        let cop = CombOp::from(kind.meter_op());
+        if n == 0 {
+            return Ok((kind.identity(), PoolOutcome::empty(cop, workers)));
+        }
+
+        let mut pass = self.cfg.trace.span("pool.pass");
+        pass.attr_u64("tasks", plan.shards.len() as u64);
+        pass.attr_u64("devices", workers as u64);
+        pass.attr_str("accum", kind.name());
+        let specs: Vec<TaskSpec> = plan
+            .shards
+            .iter()
+            .map(|&shard| TaskSpec { shard, kind: TaskKind::Accum { kind } })
+            .collect();
+        let wave = self.execute_wave(payload, cop, &specs, &mut pass)?;
+
+        let merged = {
+            let _combine = self.cfg.trace.span("pool.combine");
+            wave.outputs
+                .iter()
+                .map(|o| match o {
+                    TaskOutput::Accum(v) => *v,
+                    _ => unreachable!("accum waves only ever carry accum outputs"),
+                })
+                .fold(kind.identity(), AccumValue::merge)
+        };
+        let scalar = match merged {
+            AccumValue::Stats(s) => s.total(),
+            AccumValue::Arg { value, .. } => value,
+        };
+        Ok((merged, wave.into_outcome(scalar, plan.shards.len())))
     }
 
     /// Run one wave of shard tasks through the steal queues, with the
@@ -990,6 +1066,15 @@ fn worker_loop(
                     drivers::jradi_reduce_segments(&mut gpu, slice, offsets, task.op, block)
                         .map(|o| (TaskOutput::Segments(o.values), o.run.total_time_s()))
                 }
+                TaskKind::Accum { kind } => drivers::jradi_reduce_accum(
+                    &mut gpu,
+                    slice,
+                    *kind,
+                    task.shard.start as u64,
+                    unroll,
+                    block,
+                )
+                .map(|o| (TaskOutput::Accum(o.value), o.run.total_time_s())),
             }
         }));
         let mut retire = false;
@@ -1402,6 +1487,77 @@ mod tests {
             .unwrap();
         assert_eq!(vals, vec![i32::MAX; 2]);
         assert_eq!(out.shards, 0);
+    }
+
+    #[test]
+    fn accum_wave_matches_serial_fold_across_kinds() {
+        let pool = DevicePool::new(PoolConfig::homogeneous(DeviceConfig::tesla_c2075(), 3))
+            .unwrap();
+        let n = 120_001;
+        let data: Vec<f64> = ints(n, 61).iter().map(|&x| x as f64).collect();
+        let payload = Arc::new(data.clone());
+        let plan = pool.plan(n);
+        for kind in [
+            AccumKind::Stats,
+            AccumKind::ArgMax,
+            AccumKind::ArgMin,
+            AccumKind::SumExp { shift: 500.0 },
+        ] {
+            let (got, out) = pool.fold_accum_shared(payload.clone(), kind, &plan).unwrap();
+            let want = crate::reduce::accum::fold_slice(kind, &data, 0);
+            match (got, want) {
+                (AccumValue::Stats(g), AccumValue::Stats(s)) => {
+                    assert_eq!(g.n, s.n, "{kind:?}");
+                    let tol = 1e-9 * s.total().abs().max(1.0);
+                    assert!((g.total() - s.total()).abs() <= tol, "{kind:?} total");
+                    let vtol = 1e-9 * s.variance().max(1e-12);
+                    assert!((g.variance() - s.variance()).abs() <= vtol, "{kind:?} variance");
+                }
+                // Arg carriers are exact: same extremum, same first
+                // global index, any sharding.
+                (g, s) => assert_eq!(g, s, "{kind:?}"),
+            }
+            assert_eq!(out.shards, plan.shards.len(), "{kind:?}");
+            assert!(out.modeled_wall_s > 0.0, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn accum_wave_exact_under_transient_faults() {
+        use crate::gpusim::FaultPlan;
+        let mut flaky = DeviceConfig::tesla_c2075();
+        flaky.fault = FaultPlan::parse("fail@0.5,seed=13").unwrap();
+        let pool = DevicePool::new(PoolConfig {
+            devices: vec![flaky, DeviceConfig::tesla_c2075()],
+            tasks_per_device: 6,
+            ..PoolConfig::default()
+        })
+        .unwrap();
+        let data: Vec<f64> = ints(90_007, 67).iter().map(|&x| x as f64).collect();
+        let payload = Arc::new(data.clone());
+        let plan = pool.plan(data.len());
+        // Arg carriers must stay bit-exact through retries and steals;
+        // the Stats count is exact too.
+        let (arg, out) = pool.fold_accum_shared(payload.clone(), AccumKind::ArgMax, &plan).unwrap();
+        assert_eq!(arg, crate::reduce::accum::fold_slice(AccumKind::ArgMax, &data, 0));
+        assert_eq!(out.dead_workers, vec![false, false]);
+        let (st, _) = pool.fold_accum_shared(payload, AccumKind::Stats, &plan).unwrap();
+        assert_eq!(st.stats().unwrap().n, data.len() as u64);
+    }
+
+    #[test]
+    fn accum_wave_empty_and_bad_plans() {
+        let pool = DevicePool::new(PoolConfig::homogeneous(DeviceConfig::tesla_c2075(), 2))
+            .unwrap();
+        let (v, out) =
+            pool.fold_accum_shared(Arc::new(Vec::new()), AccumKind::Stats, &pool.plan(0)).unwrap();
+        assert_eq!(v, AccumKind::Stats.identity());
+        assert_eq!(out.shards, 0);
+        // A plan that does not tile the payload is rejected up front.
+        let wrong = pool.plan(99);
+        assert!(pool
+            .fold_accum_shared(Arc::new(vec![0.0; 100]), AccumKind::ArgMin, &wrong)
+            .is_err());
     }
 
     #[test]

@@ -1,0 +1,389 @@
+//! Accumulator-typed reductions — the carrier generalization of the
+//! paper's generic combiner.
+//!
+//! The paper's argument (§1.1) is that one reduction skeleton serves
+//! any associative combiner. Cascaded reductions (RedFuser, PAPERS.md)
+//! push that one step further: the *carrier* of the reduction need not
+//! be the element type. A fused mean/variance pass carries the triple
+//! `(n, mean, M2)` and merges partials with Chan's parallel update; a
+//! fused argmin/argmax carries `(value, index)`; the softmax
+//! normalizer's second pass carries a compensated `Σ exp(x − max)`.
+//! All of them are still associative reductions, so they run on every
+//! ExecPath the scalar ops run on — serial fold, persistent host pool,
+//! and the sharded device fleet — with partials merged in shard order.
+//!
+//! Numerics:
+//! * the running sum inside [`Stats`] is Neumaier-compensated
+//!   (`sum` + `comp`), matching the crate's float contract
+//!   ([`crate::reduce::kahan`]);
+//! * `M2` merges with Chan's update
+//!   `M2 = M2_a + M2_b + δ²·n_a·n_b/(n_a+n_b)` where
+//!   `δ = mean_b − mean_a` — the parallel form of Welford's recurrence
+//!   (pushing one element is exactly the `n_b = 1` case);
+//! * argmin/argmax tie-break on the *smallest index*, so the result is
+//!   independent of how the input was chunked or sharded.
+
+use super::op::Op;
+
+/// Streaming count/sum/M2 triple with a Neumaier-compensated sum.
+///
+/// `mean() = (sum + comp) / n`, `variance() = m2 / n` (population).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Stats {
+    /// Number of elements folded in.
+    pub n: u64,
+    /// Running (uncompensated) sum of the folded values.
+    pub sum: f64,
+    /// Neumaier compensation term for `sum`.
+    pub comp: f64,
+    /// Sum of squared deviations from the mean (Chan/Welford M2).
+    pub m2: f64,
+}
+
+impl Stats {
+    /// The empty accumulator (identity of [`Stats::merge`]).
+    pub const IDENTITY: Stats = Stats { n: 0, sum: 0.0, comp: 0.0, m2: 0.0 };
+
+    /// A single-element accumulator.
+    #[inline]
+    pub fn singleton(x: f64) -> Stats {
+        Stats { n: 1, sum: x, comp: 0.0, m2: 0.0 }
+    }
+
+    /// Compensated total.
+    #[inline]
+    pub fn total(&self) -> f64 {
+        self.sum + self.comp
+    }
+
+    /// Mean of the folded values (NaN when empty).
+    #[inline]
+    pub fn mean(&self) -> f64 {
+        self.total() / self.n as f64
+    }
+
+    /// Population variance `M2 / n` (NaN when empty).
+    #[inline]
+    pub fn variance(&self) -> f64 {
+        self.m2 / self.n as f64
+    }
+
+    /// Neumaier-add `x` to the compensated sum.
+    #[inline]
+    fn neum_add(&mut self, x: f64) {
+        let t = self.sum + x;
+        if self.sum.abs() >= x.abs() {
+            self.comp += (self.sum - t) + x;
+        } else {
+            self.comp += (x - t) + self.sum;
+        }
+        self.sum = t;
+    }
+
+    /// Fold one value in (Welford's recurrence = Chan with `n_b = 1`).
+    #[inline]
+    pub fn push(&mut self, x: f64) {
+        if self.n == 0 {
+            *self = Stats::singleton(x);
+            return;
+        }
+        let delta = x - self.mean();
+        let na = self.n as f64;
+        self.n += 1;
+        self.neum_add(x);
+        // δ²·n_a·1/(n_a+1), with the δ against the *old* mean —
+        // algebraically identical to Welford's δ·(x − mean_new).
+        self.m2 += delta * delta * na / self.n as f64;
+    }
+
+    /// Chan's parallel combine of two partial accumulators.
+    ///
+    /// Associative up to float rounding; exact on the `n`/integer-sum
+    /// components. Callers that care about determinism merge partials
+    /// in chunk/shard order.
+    #[inline]
+    pub fn merge(self, other: Stats) -> Stats {
+        if self.n == 0 {
+            return other;
+        }
+        if other.n == 0 {
+            return self;
+        }
+        let delta = other.mean() - self.mean();
+        let na = self.n as f64;
+        let nb = other.n as f64;
+        let mut out = self;
+        out.n += other.n;
+        out.neum_add(other.sum);
+        out.neum_add(other.comp);
+        out.m2 = self.m2 + other.m2 + delta * delta * (na * nb) / (na + nb);
+        out
+    }
+}
+
+/// Which accumulator a fused pass carries.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AccumKind {
+    /// Count + compensated sum + M2 — one pass serves sum, count,
+    /// mean, and variance.
+    Stats,
+    /// Max value with the smallest index attaining it.
+    ArgMax,
+    /// Min value with the smallest index attaining it.
+    ArgMin,
+    /// `Σ exp(x − shift)` carried in a [`Stats`] sum — the softmax
+    /// normalizer's second pass (`shift` is the first pass's max).
+    SumExp { shift: f64 },
+}
+
+impl AccumKind {
+    /// The scalar op whose memory traffic this pass matches — a fused
+    /// accumulator pass reads each element exactly once, so its
+    /// modeled/metered cost is one pass of this op (the paper's
+    /// bandwidth-bound claim).
+    pub fn meter_op(self) -> Op {
+        match self {
+            AccumKind::Stats | AccumKind::SumExp { .. } => Op::Sum,
+            AccumKind::ArgMax => Op::Max,
+            AccumKind::ArgMin => Op::Min,
+        }
+    }
+
+    /// The identity value of this accumulator.
+    pub fn identity(self) -> AccumValue {
+        match self {
+            AccumKind::Stats | AccumKind::SumExp { .. } => AccumValue::Stats(Stats::IDENTITY),
+            AccumKind::ArgMax => {
+                AccumValue::Arg { value: f64::NEG_INFINITY, index: u64::MAX, max: true }
+            }
+            AccumKind::ArgMin => {
+                AccumValue::Arg { value: f64::INFINITY, index: u64::MAX, max: false }
+            }
+        }
+    }
+
+    /// Short name for spans, audit rows, and bench JSON.
+    pub fn name(self) -> &'static str {
+        match self {
+            AccumKind::Stats => "stats",
+            AccumKind::ArgMax => "argmax",
+            AccumKind::ArgMin => "argmin",
+            AccumKind::SumExp { .. } => "sumexp",
+        }
+    }
+}
+
+/// A partial result of an accumulator pass — what crosses thread and
+/// fleet boundaries in place of a scalar partial.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AccumValue {
+    Stats(Stats),
+    /// Best value seen and the smallest global index attaining it
+    /// (`u64::MAX` = none yet). `max` records the direction so merge
+    /// needs no out-of-band kind.
+    Arg { value: f64, index: u64, max: bool },
+}
+
+impl AccumValue {
+    /// Merge two partials of the same kind. Merging mismatched kinds
+    /// is a caller bug (the planner never mixes them) and panics.
+    pub fn merge(self, other: AccumValue) -> AccumValue {
+        match (self, other) {
+            (AccumValue::Stats(a), AccumValue::Stats(b)) => AccumValue::Stats(a.merge(b)),
+            (
+                AccumValue::Arg { value: va, index: ia, max },
+                AccumValue::Arg { value: vb, index: ib, max: mb },
+            ) => {
+                assert_eq!(max, mb, "cannot merge argmax with argmin partials");
+                let a_wins = if va == vb {
+                    ia <= ib
+                } else if max {
+                    va > vb
+                } else {
+                    va < vb
+                };
+                if a_wins {
+                    self
+                } else {
+                    other
+                }
+            }
+            _ => panic!("cannot merge Stats with Arg partials"),
+        }
+    }
+
+    /// The Stats carrier, if this is one.
+    pub fn stats(&self) -> Option<Stats> {
+        match self {
+            AccumValue::Stats(s) => Some(*s),
+            AccumValue::Arg { .. } => None,
+        }
+    }
+
+    /// The `(value, index)` pair, if this is an Arg carrier with at
+    /// least one element folded in.
+    pub fn arg(&self) -> Option<(f64, u64)> {
+        match self {
+            AccumValue::Arg { value, index, .. } if *index != u64::MAX => Some((*value, *index)),
+            _ => None,
+        }
+    }
+}
+
+/// In-order fold of a slice into an accumulator. `base` is the global
+/// index of `data[0]`, so chunked and sharded folds report the same
+/// argmin/argmax indices as a serial fold of the whole buffer.
+///
+/// This is the scalar oracle every parallel path is checked against,
+/// and the per-chunk / per-shard kernel body on the host and fleet
+/// paths (the simulator's IR has no struct registers, so the carrier
+/// fold runs host-side while the launch is metered on the matching
+/// scalar kernel — see `kernels::drivers::jradi_reduce_accum`).
+pub fn fold_slice(kind: AccumKind, data: &[f64], base: u64) -> AccumValue {
+    match kind {
+        AccumKind::Stats => {
+            let mut s = Stats::IDENTITY;
+            for &x in data {
+                s.push(x);
+            }
+            AccumValue::Stats(s)
+        }
+        AccumKind::SumExp { shift } => {
+            let mut s = Stats::IDENTITY;
+            for &x in data {
+                s.push((x - shift).exp());
+            }
+            AccumValue::Stats(s)
+        }
+        AccumKind::ArgMax => {
+            let mut best = f64::NEG_INFINITY;
+            let mut at = u64::MAX;
+            for (i, &x) in data.iter().enumerate() {
+                if x > best || at == u64::MAX {
+                    best = x;
+                    at = base + i as u64;
+                }
+            }
+            AccumValue::Arg { value: best, index: at, max: true }
+        }
+        AccumKind::ArgMin => {
+            let mut best = f64::INFINITY;
+            let mut at = u64::MAX;
+            for (i, &x) in data.iter().enumerate() {
+                if x < best || at == u64::MAX {
+                    best = x;
+                    at = base + i as u64;
+                }
+            }
+            AccumValue::Arg { value: best, index: at, max: false }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_pass(data: &[f64]) -> (f64, f64) {
+        let mean = data.iter().sum::<f64>() / data.len() as f64;
+        let var = data.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / data.len() as f64;
+        (mean, var)
+    }
+
+    #[test]
+    fn welford_matches_two_pass() {
+        let data: Vec<f64> = (0..10_000).map(|i| ((i * 37) % 1000) as f64 * 0.25 - 100.0).collect();
+        let AccumValue::Stats(s) = fold_slice(AccumKind::Stats, &data, 0) else { unreachable!() };
+        let (mean, var) = two_pass(&data);
+        assert!((s.mean() - mean).abs() < 1e-12 * mean.abs().max(1.0));
+        assert!((s.variance() - var).abs() < 1e-9 * var.max(1.0));
+        assert_eq!(s.n, data.len() as u64);
+    }
+
+    #[test]
+    fn chan_merge_matches_serial_fold() {
+        let data: Vec<f64> = (0..5_000).map(|i| ((i * 61) % 997) as f64 * 0.5 - 250.0).collect();
+        let serial = fold_slice(AccumKind::Stats, &data, 0);
+        for split in [1usize, 7, 2_500, 4_999] {
+            let a = fold_slice(AccumKind::Stats, &data[..split], 0);
+            let b = fold_slice(AccumKind::Stats, &data[split..], split as u64);
+            let merged = a.merge(b);
+            let (s, m) = (serial.stats().unwrap(), merged.stats().unwrap());
+            assert_eq!(s.n, m.n);
+            assert!((s.mean() - m.mean()).abs() < 1e-12 * s.mean().abs().max(1.0));
+            assert!((s.variance() - m.variance()).abs() < 1e-9 * s.variance().max(1e-12));
+        }
+    }
+
+    #[test]
+    fn chan_survives_catastrophic_cancellation() {
+        // Large offset + tiny variance: the sum-of-squares shortcut
+        // E[x²] − E[x]² loses everything here; Chan/Welford must not.
+        let offset = 1.0e9;
+        let data: Vec<f64> = (0..4_096).map(|i| offset + ((i % 7) as f64 - 3.0) * 1e-3).collect();
+        let (mean, var) = two_pass(&data);
+        let AccumValue::Stats(s) = fold_slice(AccumKind::Stats, &data, 0) else { unreachable!() };
+        assert!((s.mean() - mean).abs() <= 1e-9 * mean.abs());
+        assert!((s.variance() - var).abs() <= 1e-6 * var, "{} vs {var}", s.variance());
+        // The naive shortcut really does fail (guards the test's teeth).
+        let sumsq: f64 = data.iter().map(|x| x * x).sum();
+        let naive = sumsq / data.len() as f64 - mean * mean;
+        assert!((naive - var).abs() > 1e-2 * var, "naive shortcut unexpectedly fine: {naive}");
+    }
+
+    #[test]
+    fn merge_identity_both_sides() {
+        for kind in
+            [AccumKind::Stats, AccumKind::ArgMax, AccumKind::ArgMin, AccumKind::SumExp { shift: 2.0 }]
+        {
+            let v = fold_slice(kind, &[3.0, -1.0, 3.0], 10);
+            assert_eq!(kind.identity().merge(v), v, "{kind:?} left identity");
+            assert_eq!(v.merge(kind.identity()), v, "{kind:?} right identity");
+        }
+    }
+
+    #[test]
+    fn arg_ties_break_to_first_index() {
+        let data = [1.0, 5.0, -2.0, 5.0, 1.0];
+        let amax = fold_slice(AccumKind::ArgMax, &data, 0);
+        assert_eq!(amax.arg(), Some((5.0, 1)));
+        // Merge order must not matter: the later chunk holds an equal
+        // max but a larger index.
+        let a = fold_slice(AccumKind::ArgMax, &data[..2], 0);
+        let b = fold_slice(AccumKind::ArgMax, &data[2..], 2);
+        assert_eq!(a.merge(b).arg(), Some((5.0, 1)));
+        assert_eq!(b.merge(a).arg(), Some((5.0, 1)));
+        let amin = fold_slice(AccumKind::ArgMin, &[4.0, -2.0, -2.0], 7);
+        assert_eq!(amin.arg(), Some((-2.0, 8)));
+    }
+
+    #[test]
+    fn arg_base_offsets_indices() {
+        let v = fold_slice(AccumKind::ArgMax, &[9.0], 123);
+        assert_eq!(v.arg(), Some((9.0, 123)));
+        assert_eq!(fold_slice(AccumKind::ArgMax, &[], 5).arg(), None);
+    }
+
+    #[test]
+    fn sumexp_is_shifted() {
+        let data = [0.0, 1.0, 2.0];
+        let v = fold_slice(AccumKind::SumExp { shift: 2.0 }, &data, 0);
+        let want: f64 = data.iter().map(|x| (x - 2.0f64).exp()).sum();
+        assert!((v.stats().unwrap().total() - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn meter_ops() {
+        assert_eq!(AccumKind::Stats.meter_op(), Op::Sum);
+        assert_eq!(AccumKind::SumExp { shift: 0.0 }.meter_op(), Op::Sum);
+        assert_eq!(AccumKind::ArgMax.meter_op(), Op::Max);
+        assert_eq!(AccumKind::ArgMin.meter_op(), Op::Min);
+    }
+
+    #[test]
+    fn single_element_variance_zero() {
+        let AccumValue::Stats(s) = fold_slice(AccumKind::Stats, &[42.0], 0) else { unreachable!() };
+        assert_eq!(s.variance(), 0.0);
+        assert_eq!(s.mean(), 42.0);
+    }
+}

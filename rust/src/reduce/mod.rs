@@ -7,8 +7,9 @@
 //! runtime mirroring the paper's §2.5 on CPU cores ([`persistent`],
 //! fronted by the [`threaded`] compatibility shims), an
 //! unrolled/auto-vectorizable hot loop ([`simd`]), a size-based
-//! strategy planner ([`plan`]), and the shared group-into-CSR step
-//! behind every keyed reduction ([`group`]).
+//! strategy planner ([`plan`]), the shared group-into-CSR step
+//! behind every keyed reduction ([`group`]), and the accumulator
+//! carriers behind fused cascaded reductions ([`accum`]).
 //!
 //! These serve three roles:
 //! 1. baselines for the benchmark harness (the paper compares GPU
@@ -18,6 +19,7 @@
 //! 3. the fallback execution path of the [`crate::coordinator`] when a
 //!    request has no matching AOT artifact.
 
+pub mod accum;
 pub mod combiner;
 pub mod group;
 pub mod kahan;

@@ -52,6 +52,7 @@ use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock, PoisonError};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
+use super::accum::{self, AccumKind, AccumValue};
 use super::op::{Element, Op};
 use super::simd;
 
@@ -312,6 +313,40 @@ impl PersistentPool {
         });
         let vals: Vec<T> = partials.iter().map(|m| *lock_ignore_poison(m)).collect();
         simd::reduce(&vals, op)
+    }
+
+    /// Accumulator-typed fold of `data` with at most `width` parallel
+    /// participants — the host leg of a fused cascaded-reduction pass
+    /// ([`crate::pipeline`]): one read of the payload produces the
+    /// whole carrier (count/sum/M2, arg pair, or Σ exp(x − shift)).
+    ///
+    /// Deterministic like [`Self::reduce_width`]: chunk boundaries are
+    /// fixed by `(n, width)`, each chunk folds in order with the chunk
+    /// start as the global index base, and partials merge in chunk
+    /// order (Chan's combine for Stats carriers, smallest-index
+    /// tie-break for arg carriers).
+    pub fn fold_accum_width(&self, data: &[f64], kind: AccumKind, width: usize) -> AccumValue {
+        let width = width.clamp(1, self.width());
+        if width == 1 || data.len() < SEQ_FALLBACK {
+            return accum::fold_slice(kind, data, 0);
+        }
+        let chunks = Self::chunk_count(data.len(), width);
+        if chunks == 1 {
+            return accum::fold_slice(kind, data, 0);
+        }
+        let chunk_len = data.len().div_ceil(chunks);
+        let partials: Vec<Mutex<AccumValue>> =
+            (0..chunks).map(|_| Mutex::new(kind.identity())).collect();
+        self.run_width(chunks, width, &|i| {
+            let start = (i * chunk_len).min(data.len());
+            let end = (start + chunk_len).min(data.len());
+            let v = accum::fold_slice(kind, &data[start..end], start as u64);
+            *lock_ignore_poison(&partials[i]) = v;
+        });
+        partials
+            .iter()
+            .map(|m| *lock_ignore_poison(m))
+            .fold(kind.identity(), AccumValue::merge)
     }
 
     /// Row-wise reduction of a `rows × cols` matrix (flat, row-major)
@@ -715,6 +750,47 @@ mod tests {
             assert_eq!(got.len(), n);
             for (i, (&x, &y)) in d.iter().zip(&got).enumerate() {
                 assert_eq!(y, x as f64, "index {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn fold_accum_matches_serial_fold() {
+        let pool = PersistentPool::new(3);
+        for n in [0usize, 1, 7, 16_383, 16_384, 100_003] {
+            let d: Vec<f64> = data(n).iter().map(|&x| x as f64).collect();
+            for kind in [
+                AccumKind::Stats,
+                AccumKind::ArgMax,
+                AccumKind::ArgMin,
+                AccumKind::SumExp { shift: 400.0 },
+            ] {
+                let serial = accum::fold_slice(kind, &d, 0);
+                for width in [1usize, 2, 4, 16] {
+                    let got = pool.fold_accum_width(&d, kind, width);
+                    match (got, serial) {
+                        (AccumValue::Stats(g), AccumValue::Stats(s)) => {
+                            assert_eq!(g.n, s.n, "n={n} width={width} {kind:?}");
+                            let tol = 1e-12 * s.total().abs().max(1.0);
+                            assert!(
+                                (g.total() - s.total()).abs() <= tol,
+                                "n={n} width={width} {kind:?}: {} vs {}",
+                                g.total(),
+                                s.total()
+                            );
+                            if s.n > 0 {
+                                let vtol = 1e-9 * s.variance().max(1e-12);
+                                assert!(
+                                    (g.variance() - s.variance()).abs() <= vtol,
+                                    "n={n} width={width} {kind:?} variance"
+                                );
+                            }
+                        }
+                        // Arg carriers are exact: same value, same
+                        // first index, any chunking.
+                        (g, s) => assert_eq!(g, s, "n={n} width={width} {kind:?}"),
+                    }
+                }
             }
         }
     }

@@ -65,11 +65,55 @@ impl std::fmt::Display for FleetEvent {
     }
 }
 
+/// One fused-stage placement on the audit trail: which backend a
+/// pipeline pass landed on, how many logical stages the planner fused
+/// into it, and the modeled cost of the **one** fused pass — the
+/// fusion ledger. Without it the trail would only show the pass's
+/// metering op (a lone `sum` row for a mean+variance stage) and
+/// silently under-report what was actually placed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StagePlacement {
+    /// Order the placement was recorded in (0-based).
+    pub seq: u64,
+    /// Pass label (the accumulator carrier, e.g. "stats", "argmax").
+    pub label: String,
+    /// The scalar op the fused pass is metered as.
+    pub op: Op,
+    pub dtype: Dtype,
+    pub n: usize,
+    /// Logical pipeline stages fused into this one pass.
+    pub stages_fused: usize,
+    /// Chosen backend.
+    pub backend: Backend,
+    /// Modeled cost of one fused pass on that backend (not ×stages —
+    /// that is the point of fusing).
+    pub modeled_s: f64,
+}
+
+impl std::fmt::Display for StagePlacement {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "#{} pass {} ({}/{} n={}): {} stage{} fused -> {} ({:.3} ms one pass)",
+            self.seq,
+            self.label,
+            self.op,
+            self.dtype.name(),
+            self.n,
+            self.stages_fused,
+            if self.stages_fused == 1 { "" } else { "s" },
+            self.backend,
+            self.modeled_s * 1e3
+        )
+    }
+}
+
 /// The audit accumulator (lives behind a mutex on the scheduler).
 #[derive(Debug, Default)]
 pub struct AuditTrail {
     cells: HashMap<(Backend, Op, Dtype), Cell>,
     fleet_events: Vec<FleetEvent>,
+    stage_placements: Vec<StagePlacement>,
 }
 
 impl AuditTrail {
@@ -123,6 +167,36 @@ impl AuditTrail {
     /// The fleet health events recorded so far, in order.
     pub fn fleet_events(&self) -> Vec<FleetEvent> {
         self.fleet_events.clone()
+    }
+
+    /// Append one fused-stage placement (sequence number assigned
+    /// here).
+    pub fn record_stage_placement(
+        &mut self,
+        label: &str,
+        op: Op,
+        dtype: Dtype,
+        n: usize,
+        stages_fused: usize,
+        backend: Backend,
+        modeled_s: f64,
+    ) {
+        let seq = self.stage_placements.len() as u64;
+        self.stage_placements.push(StagePlacement {
+            seq,
+            label: label.to_string(),
+            op,
+            dtype,
+            n,
+            stages_fused,
+            backend,
+            modeled_s,
+        });
+    }
+
+    /// The fused-stage placements recorded so far, in order.
+    pub fn stage_placements(&self) -> Vec<StagePlacement> {
+        self.stage_placements.clone()
     }
 }
 
@@ -226,6 +300,23 @@ mod tests {
         assert_eq!(ev[1], FleetEvent { seq: 1, device: 1, kind: FleetEventKind::Died });
         assert_eq!(ev[2].kind, FleetEventKind::Readmitted);
         assert_eq!(format!("{}", ev[0]), "#0 device 2 quarantined");
+    }
+
+    #[test]
+    fn stage_placements_keep_order_and_render() {
+        let mut a = AuditTrail::default();
+        a.record_stage_placement("stats", Op::Sum, Dtype::F32, 1 << 20, 3, Backend::Pool, 2.5e-4);
+        a.record_stage_placement("argmax", Op::Max, Dtype::I32, 100, 1, Backend::Sequential, 1e-7);
+        let ps = a.stage_placements();
+        assert_eq!(ps.len(), 2);
+        assert_eq!(ps[0].seq, 0);
+        assert_eq!(ps[0].stages_fused, 3);
+        assert_eq!(ps[1].backend, Backend::Sequential);
+        let line = format!("{}", ps[0]);
+        assert!(line.contains("3 stages fused"), "{line}");
+        assert!(line.contains("pool"), "{line}");
+        let line1 = format!("{}", ps[1]);
+        assert!(line1.contains("1 stage fused"), "{line1}");
     }
 
     #[test]

@@ -40,7 +40,9 @@ pub mod feedback;
 pub mod health;
 pub mod model;
 
-pub use audit::{AuditEntry, AuditTrail, FleetEvent, FleetEventKind, MISPREDICT_REL_ERR};
+pub use audit::{
+    AuditEntry, AuditTrail, FleetEvent, FleetEventKind, StagePlacement, MISPREDICT_REL_ERR,
+};
 pub use feedback::FleetFeedback;
 pub use health::{DeviceHealth, HealthConfig, HealthState, HealthTracker, HealthTransition};
 pub use model::{Backend, BackendProfile, SegOverheads, ThroughputModel};
@@ -156,6 +158,49 @@ impl std::fmt::Display for Explain {
                 f,
                 "  fleet health: {} healthy, withheld {:?}",
                 self.healthy_devices, self.quarantined
+            )?;
+        }
+        Ok(())
+    }
+}
+
+/// One explained *fused-pass* placement ([`Scheduler::explain_pass`]):
+/// the stage count the planner fused into the pass and the modeled
+/// cost of the **one** fused pass per candidate backend — what `parred
+/// reduce --op mean --explain` prints. A plain [`Explain`] of the
+/// pass's metering op would silently show a lone `sum` decision and
+/// hide the fusion.
+#[derive(Debug, Clone)]
+pub struct PassExplain {
+    /// Pass label (the accumulator carrier, e.g. "stats", "argmax").
+    pub label: String,
+    /// Logical pipeline stages fused into this one pass.
+    pub stages_fused: usize,
+    /// The underlying placement of the fused pass (one read of the
+    /// payload, metered as `explain.op`).
+    pub explain: Explain,
+}
+
+impl std::fmt::Display for PassExplain {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "fused pass {} ({} stage{} -> one {}/{} pass, n={}): {:?}",
+            self.label,
+            self.stages_fused,
+            if self.stages_fused == 1 { "" } else { "s" },
+            self.explain.op,
+            self.explain.dtype.name(),
+            self.explain.n,
+            self.explain.decision
+        )?;
+        for &(backend, cost_s) in &self.explain.candidates {
+            writeln!(
+                f,
+                "  candidate {backend}: {:.3} ms one fused pass ({:.3} ms unfused x{})",
+                cost_s * 1e3,
+                cost_s * self.stages_fused as f64 * 1e3,
+                self.stages_fused
             )?;
         }
         Ok(())
@@ -537,12 +582,19 @@ impl Scheduler {
     pub fn audit_report(&self) -> String {
         let rows = self.audit();
         let events = self.fleet_events();
-        if rows.is_empty() && events.is_empty() {
+        let placements = self.stage_placements();
+        if rows.is_empty() && events.is_empty() && placements.is_empty() {
             return "scheduler audit: no observations\n".to_string();
         }
         let mut out = String::from("=== scheduler audit: modeled vs observed ===\n");
         for r in rows {
             out.push_str(&format!("{r}\n"));
+        }
+        if !placements.is_empty() {
+            out.push_str("--- fused stage placements ---\n");
+            for p in placements {
+                out.push_str(&format!("{p}\n"));
+            }
         }
         if !events.is_empty() {
             out.push_str("--- fleet health events ---\n");
@@ -598,6 +650,90 @@ impl Scheduler {
     /// segmented passes are observed).
     pub fn seg_overheads(&self) -> SegOverheads {
         self.model().seg_overheads()
+    }
+
+    /// Place one *fused pass* of a cascaded-reduction pipeline: the
+    /// planner fused `stages_fused` logical stages into a single read
+    /// of the payload metered as `op`, so the pass costs one pass —
+    /// not `stages_fused` — on every candidate backend. Records a
+    /// [`StagePlacement`] on the audit trail (the fusion-aware
+    /// counterpart of the per-reduction audit rows) and returns the
+    /// placement decision.
+    pub fn decide_pass(
+        &self,
+        label: &str,
+        op: Op,
+        dtype: Dtype,
+        n: usize,
+        stages_fused: usize,
+    ) -> Decision {
+        let decision = self.decide(op, dtype, n, false);
+        self.record_pass_placement(label, op, dtype, n, stages_fused, decision);
+        decision
+    }
+
+    /// Put a fused-pass placement on the audit trail without deciding
+    /// it — for passes that *reuse* another pass's decision (the
+    /// softmax normalizer's `Σ exp(x − max)` pass runs wherever its max
+    /// pass ran), so the trail still shows every pass that touched the
+    /// payload.
+    pub fn record_pass_placement(
+        &self,
+        label: &str,
+        op: Op,
+        dtype: Dtype,
+        n: usize,
+        stages_fused: usize,
+        decision: Decision,
+    ) {
+        let backend = match decision {
+            Decision::Sequential => Backend::Sequential,
+            Decision::Threaded { workers } if workers <= 2 => Backend::ThreadedNarrow,
+            Decision::Threaded { .. } => Backend::ThreadedFull,
+            Decision::Sharded { .. } => Backend::Pool,
+            // `decide(.., false)` never yields Artifact; a hand-fed
+            // artifact decision is billed at the host baseline.
+            Decision::Artifact => Backend::Sequential,
+        };
+        let modeled_s = {
+            let p = self.model().profile(backend, op, dtype);
+            let bytes = (n * dtype.size_bytes()) as f64;
+            if p.bytes_per_s > 0.0 { p.overhead_s + bytes / p.bytes_per_s } else { p.overhead_s }
+        };
+        self.audit_trail().record_stage_placement(
+            label,
+            op,
+            dtype,
+            n,
+            stages_fused,
+            backend,
+            modeled_s,
+        );
+    }
+
+    /// Explain one fused-pass placement: the stage count the planner
+    /// fused plus the one-pass [`Explain`] underneath — what `parred
+    /// reduce --op mean --explain` prints so fusion is visible instead
+    /// of a lone first-stage decision.
+    pub fn explain_pass(
+        &self,
+        label: &str,
+        op: Op,
+        dtype: Dtype,
+        n: usize,
+        stages_fused: usize,
+    ) -> PassExplain {
+        PassExplain {
+            label: label.to_string(),
+            stages_fused,
+            explain: self.explain(op, dtype, n),
+        }
+    }
+
+    /// Every fused-stage placement recorded by [`Scheduler::decide_pass`],
+    /// in placement order.
+    pub fn stage_placements(&self) -> Vec<StagePlacement> {
+        self.audit_trail().stage_placements()
     }
 
     /// Record a fleet outcome: pool throughput EWMA (over *modeled*
@@ -882,6 +1018,48 @@ mod tests {
             s.decide(Op::Sum, Dtype::F32, c.pool, false),
             Decision::Sharded { devices: 4 }
         );
+    }
+
+    #[test]
+    fn decide_pass_records_fusion_aware_placements() {
+        let s = pooled(false, None);
+        let c = s.cutoffs(Op::Sum, Dtype::F32);
+        // A 3-stage fused stats pass big enough to shard, then a
+        // single-stage argmax pass small enough to stay sequential.
+        let d = s.decide_pass("stats", Op::Sum, Dtype::F32, c.pool, 3);
+        assert_eq!(d, Decision::Sharded { devices: 4 });
+        let d = s.decide_pass("argmax", Op::Max, Dtype::F32, 64, 1);
+        assert_eq!(d, Decision::Sequential);
+
+        let ps = s.stage_placements();
+        assert_eq!(ps.len(), 2);
+        assert_eq!(ps[0].label, "stats");
+        assert_eq!(ps[0].stages_fused, 3);
+        assert_eq!(ps[0].backend, Backend::Pool);
+        assert!(ps[0].modeled_s > 0.0);
+        assert_eq!(ps[1].label, "argmax");
+        assert_eq!(ps[1].backend, Backend::Sequential);
+        assert!(ps[0].seq < ps[1].seq, "placements keep order");
+
+        // The audit report surfaces them in their own section.
+        let report = s.audit_report();
+        assert!(report.contains("--- fused stage placements ---"), "{report}");
+        assert!(report.contains("3 stages fused"), "{report}");
+        assert!(report.contains("1 stage fused"), "{report}");
+    }
+
+    #[test]
+    fn explain_pass_shows_stage_count_and_one_pass_costs() {
+        let s = pooled(false, None);
+        let px = s.explain_pass("stats", Op::Sum, Dtype::F32, 1 << 20, 3);
+        assert_eq!(px.stages_fused, 3);
+        assert_eq!(px.explain.n, 1 << 20);
+        let text = format!("{px}");
+        assert!(text.contains("3 stages -> one sum/f32 pass"), "{text}");
+        // Every candidate line shows both the fused one-pass cost and
+        // what the constituent stages would cost run separately.
+        assert!(text.contains("one fused pass"), "{text}");
+        assert!(text.contains("unfused x3"), "{text}");
     }
 
     #[test]

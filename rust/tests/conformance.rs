@@ -6,8 +6,12 @@
 //! reduction's L1 mass) of the Neumaier reference. This table-driven
 //! harness is the single place the cross-path numerics contract
 //! lives; per-path suites keep their behavioural tests but defer the
-//! oracle pinning here. A committed regression corpus
-//! (`tests/fixtures/segmented_corpus.json`) replays shrink-friendly
+//! oracle pinning here. The cascaded-pipeline rails (mean, variance,
+//! argmax, softmax normalizer over [`Engine::pipeline`]) are pinned
+//! the same way, against scalar *two-pass* oracles the fused passes
+//! must reproduce. Committed regression corpora
+//! (`tests/fixtures/segmented_corpus.json`,
+//! `tests/fixtures/pipeline_corpus.json`) replay shrink-friendly
 //! boundary cases through the same rails.
 
 use std::collections::BTreeMap;
@@ -252,6 +256,147 @@ fn keyed_rails_match_the_grouped_oracle() {
     }
 }
 
+// ---------------------------------------------------------------
+// Pipeline rails: the cascaded-reduction DAG (mean, variance,
+// argmax, softmax normalizer) pinned to scalar two-pass oracles on
+// the host and fleet engines.
+// ---------------------------------------------------------------
+
+/// Neumaier fold over f64 terms — the summation every pipeline
+/// oracle uses.
+fn neumaier(terms: impl Iterator<Item = f64>) -> f64 {
+    let (mut sum, mut comp) = (0.0f64, 0.0f64);
+    for x in terms {
+        let t = sum + x;
+        comp += if sum.abs() >= x.abs() { (sum - t) + x } else { (x - t) + sum };
+        sum = t;
+    }
+    sum + comp
+}
+
+/// The scalar two-pass oracles over an f64 view of the payload:
+/// `(mean, population variance, (max value, first argmax index),
+/// softmax denominator Σ exp(x − max))`. Two passes by construction —
+/// variance and the softmax shift read the first pass's result — which
+/// is exactly what the fused pipeline must reproduce in fewer reads.
+fn pipeline_oracle(xs: &[f64]) -> (f64, f64, (f64, u64), f64) {
+    let n = xs.len() as f64;
+    let mean = neumaier(xs.iter().copied()) / n;
+    let var = neumaier(xs.iter().map(|&x| (x - mean) * (x - mean))) / n;
+    let (mut max_i, mut max_v) = (0u64, xs[0]);
+    for (i, &x) in xs.iter().enumerate() {
+        if x > max_v {
+            (max_i, max_v) = (i as u64, x);
+        }
+    }
+    let denom = neumaier(xs.iter().map(|&x| (x - max_v).exp()));
+    (mean, var, (max_v, max_i), denom)
+}
+
+/// f32-band closeness: within 1e-5 of the oracle, relative to the
+/// stage's own magnitude scale (clamped at 1 so near-zero stages get
+/// an absolute band).
+fn close_f64(got: f64, want: f64, scale: f64, ctx: &str) {
+    assert!(
+        (got - want).abs() <= 1e-5 * scale.max(1.0),
+        "{ctx}: got {got}, oracle {want} (scale {scale:.3e})"
+    );
+}
+
+/// i32-band closeness: the payload is integer-exact in f64, so only
+/// division/merge rounding separates the fused result from the
+/// two-pass oracle — 1e-9 relative.
+fn close_tight(got: f64, want: f64, ctx: &str) {
+    assert!(
+        (got - want).abs() <= 1e-9 * want.abs().max(1.0),
+        "{ctx}: got {got}, oracle {want}"
+    );
+}
+
+/// Run the full cascade and pin every stage to the oracle tuple.
+/// `tight` selects the i32 tolerance band.
+fn check_pipeline<T: parred::reduce::TypedElement>(
+    engine: &Engine,
+    data: &[T],
+    oracle: (f64, f64, (f64, u64), f64),
+    tight: bool,
+    ctx: &str,
+) -> parred::PipelineOutcome {
+    let (mean, var, (max_v, max_i), denom) = oracle;
+    let out = engine
+        .pipeline(data)
+        .mean()
+        .variance()
+        .argmax()
+        .softmax_denom()
+        .run()
+        .unwrap();
+    // 4 user stages; 3 passes (stats, argmax, Σexp) — argmax and the
+    // softmax shift share one pass.
+    assert_eq!(out.path, ExecPath::Pipeline { stages: 4, passes: 3 }, "{ctx}");
+    let got_var = out.scalar("variance").unwrap();
+    let got_denom = out.scalar("softmax_denom").unwrap();
+    if tight {
+        assert_eq!(
+            out.scalar("mean").unwrap(),
+            mean,
+            "{ctx}: integer sums stay exact in f64 — fused mean is bit-identical"
+        );
+        close_tight(got_var, var, &format!("{ctx}: variance"));
+        close_tight(got_denom, denom, &format!("{ctx}: softmax denom"));
+    } else {
+        close_f64(out.scalar("mean").unwrap(), mean, mean.abs(), &format!("{ctx}: mean"));
+        close_f64(got_var, var, var, &format!("{ctx}: variance"));
+        close_f64(got_denom, denom, denom, &format!("{ctx}: softmax denom"));
+    }
+    // The extremum is a unique exact value and the smallest index
+    // attaining it — exact on every rung.
+    assert_eq!(out.arg("argmax").unwrap(), (max_v, max_i), "{ctx}: argmax");
+    out
+}
+
+#[test]
+fn pipeline_rails_i32_across_sizes_and_paths() {
+    let host = host_engine();
+    let pooled = pooled_engine();
+    for (ci, &n) in SIZES.iter().enumerate() {
+        if n == 0 {
+            continue;
+        }
+        let data = Rng::new(9_000 + ci as u64).i32_vec(n, -500, 500);
+        let xs: Vec<f64> = data.iter().map(|&x| x as f64).collect();
+        let oracle = pipeline_oracle(&xs);
+        check_pipeline(&host, &data, oracle, true, &format!("i32 pipeline n={n} host"));
+        let out =
+            check_pipeline(&pooled, &data, oracle, true, &format!("i32 pipeline n={n} fleet"));
+        if n >= CUTOFF {
+            assert!(out.shards > 0, "i32 pipeline n={n}: fleet engine must shard past the knee");
+        }
+    }
+}
+
+#[test]
+fn pipeline_rails_f32_across_sizes_and_paths() {
+    let host = host_engine();
+    let pooled = pooled_engine();
+    // Empty payloads are an error, not a NaN factory.
+    assert!(host.pipeline(&Vec::<f32>::new()).mean().run().is_err());
+    for (ci, &n) in SIZES.iter().enumerate() {
+        if n == 0 {
+            continue;
+        }
+        let data = Rng::new(9_500 + ci as u64).f32_vec(n, -1.0, 1.0);
+        let xs: Vec<f64> = data.iter().map(|&x| x as f64).collect();
+        let oracle = pipeline_oracle(&xs);
+        check_pipeline(&host, &data, oracle, false, &format!("f32 pipeline n={n} host"));
+        let out =
+            check_pipeline(&pooled, &data, oracle, false, &format!("f32 pipeline n={n} fleet"));
+        if n >= CUTOFF {
+            assert!(out.shards > 0, "f32 pipeline n={n}: fleet engine must shard past the knee");
+        }
+    }
+}
+
 #[test]
 fn one_launch_rung_matches_task_rung_and_oracle_on_boundary_shapes() {
     use parred::pool::{DevicePool, PoolConfig, SegMode};
@@ -384,5 +529,39 @@ fn corpus_replays_identically_on_every_rung() {
         assert_eq!(r.value, want, "corpus {name}: host");
         let r = pooled.reduce_by_key(&keys, &values).op(op).via_fleet().run().unwrap();
         assert_eq!(r.value, want, "corpus {name}: fleet-pinned");
+    }
+}
+
+#[test]
+fn pipeline_corpus_replays_identically_on_both_engines() {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/fixtures/pipeline_corpus.json");
+    let text = std::fs::read_to_string(path).expect("reading pipeline_corpus.json");
+    let doc = Json::parse(&text).expect("parsing pipeline_corpus.json");
+    let host = host_engine();
+    let pooled = pooled_engine();
+
+    for case in doc.field("pipeline_i32").unwrap().as_arr().unwrap() {
+        let name = case.field("name").unwrap().as_str().unwrap();
+        let values = as_i32_vec(case.field("values").unwrap());
+        let xs: Vec<f64> = values.iter().map(|&x| x as f64).collect();
+        let oracle = pipeline_oracle(&xs);
+        check_pipeline(&host, &values, oracle, true, &format!("corpus {name}: host"));
+        check_pipeline(&pooled, &values, oracle, true, &format!("corpus {name}: fleet"));
+    }
+
+    for case in doc.field("pipeline_f32").unwrap().as_arr().unwrap() {
+        let name = case.field("name").unwrap().as_str().unwrap();
+        let values: Vec<f32> = case
+            .field("values")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().expect("corpus number") as f32)
+            .collect();
+        let xs: Vec<f64> = values.iter().map(|&x| x as f64).collect();
+        let oracle = pipeline_oracle(&xs);
+        check_pipeline(&host, &values, oracle, false, &format!("corpus {name}: host"));
+        check_pipeline(&pooled, &values, oracle, false, &format!("corpus {name}: fleet"));
     }
 }

@@ -305,3 +305,161 @@ fn serve_trace_out_writes_one_span_tree_per_request() {
         let _ = std::fs::remove_file(p);
     }
 }
+
+/// Satellite: the pipeline serving lane. Every `submit_pipeline`
+/// cascade must come back as **one** `serve.request` span (kind
+/// `pipeline`) with one `serve.stage` child per named stage and the
+/// engine's own pipeline tree (`engine.pipeline` root, one
+/// `pipeline.pass` per fused pass) nested beneath it — and the
+/// response must carry every stage value on the fused
+/// `ExecPath::Pipeline` with its own metrics bucket.
+#[test]
+fn pipeline_requests_trace_one_tree_with_stage_children() {
+    use parred::coordinator::PipelineStage;
+    use parred::pipeline::StageValue;
+    let tmp = std::env::temp_dir();
+    let trace_path = tmp.join(format!("parred_pipe_trace_{}.jsonl", std::process::id()));
+    let chrome_path =
+        tmp.join(format!("parred_pipe_trace_{}.jsonl.chrome.json", std::process::id()));
+    let metrics_path = tmp.join(format!("parred_pipe_metrics_{}.txt", std::process::id()));
+    let cfg = ServiceConfig {
+        artifacts_dir: concat!(env!("CARGO_MANIFEST_DIR"), "/tests/fixtures/empty_artifacts")
+            .to_string(),
+        batch_window: Duration::from_millis(5),
+        max_queue: 1000,
+        workers: 4,
+        warmup: false,
+        trace_out: Some(trace_path.to_string_lossy().into_owned()),
+        metrics_out: Some(metrics_path.to_string_lossy().into_owned()),
+        ..ServiceConfig::default()
+    };
+    let svc = Service::start(cfg).unwrap();
+    let cascade = vec![
+        PipelineStage::Mean,
+        PipelineStage::Variance,
+        PipelineStage::ArgMax,
+        PipelineStage::SoftmaxDenom,
+    ];
+
+    // Malformed cascades are refused at the front door, without
+    // spending a queue slot.
+    assert!(svc.submit_pipeline(vec![], HostVec::F32(vec![1.0])).is_err(), "empty stage list");
+    assert!(svc.submit_pipeline(cascade.clone(), HostVec::F32(vec![])).is_err(), "empty payload");
+    assert!(
+        svc.submit_pipeline(
+            vec![PipelineStage::Mean, PipelineStage::Mean],
+            HostVec::F32(vec![1.0])
+        )
+        .is_err(),
+        "duplicate stage"
+    );
+    assert_eq!(svc.in_flight(), 0, "rejected submissions must not hold gate slots");
+
+    let mut rng = Rng::new(23);
+    let mut expect_ids: HashSet<u64> = HashSet::new();
+    let mut pending = Vec::new();
+    for _ in 0..3 {
+        let data = rng.f32_vec(10_000, -1.0, 1.0);
+        let want_mean = data.iter().map(|&x| f64::from(x)).sum::<f64>() / data.len() as f64;
+        let (want_idx, want_max) = data
+            .iter()
+            .copied()
+            .enumerate()
+            .fold((0usize, f32::NEG_INFINITY), |b, (i, x)| if x > b.1 { (i, x) } else { b });
+        let rx = svc.submit_pipeline(cascade.clone(), HostVec::F32(data)).unwrap();
+        pending.push((rx, want_mean, want_max, want_idx));
+    }
+    for (rx, want_mean, want_max, want_idx) in pending {
+        let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert_eq!(resp.path, parred::ExecPath::Pipeline { stages: 4, passes: 3 });
+        let stages = resp.stages.unwrap();
+        assert_eq!(
+            stages.iter().map(|(n, _)| n.as_str()).collect::<Vec<_>>(),
+            ["mean", "variance", "argmax", "softmax_denom"],
+            "stage values come back named, in declaration order"
+        );
+        assert!(
+            (stages[0].1.scalar() - want_mean).abs() <= 1e-6,
+            "mean {} vs oracle {want_mean}",
+            stages[0].1.scalar()
+        );
+        match stages[2].1 {
+            StageValue::Indexed { value, index } => {
+                assert_eq!(value as f32, want_max);
+                assert_eq!(index, want_idx as u64);
+            }
+            other => panic!("argmax must carry its index, got {other:?}"),
+        }
+        expect_ids.insert(resp.id);
+    }
+    let live = svc.metrics_text();
+    assert!(live.contains("parred_pipeline_requests_total"), "{live}");
+    svc.shutdown();
+
+    // One pipeline serve.request span per submitted id; four
+    // serve.stage children each; the engine's pipeline tree (one
+    // engine.pipeline root, three pipeline.pass spans) underneath.
+    let text = std::fs::read_to_string(&trace_path).unwrap();
+    let mut pipe_spans: HashMap<u64, u64> = HashMap::new(); // span id -> request id
+    let mut stage_children: HashMap<u64, Vec<String>> = HashMap::new(); // parent -> stage names
+    let mut engine_roots: Vec<(u64, u64)> = Vec::new(); // (span id, parent)
+    let mut pass_parents: Vec<u64> = Vec::new();
+    for line in text.lines() {
+        let rec = Json::parse(line).expect("JSONL line parses");
+        let id = rec.field("id").unwrap().as_usize().unwrap() as u64;
+        let parent = rec.field("parent").unwrap().as_usize().unwrap() as u64;
+        let args = rec.field("args").unwrap();
+        match rec.field("name").unwrap().as_str().unwrap() {
+            "serve.request" => {
+                if args.field("kind").and_then(|k| k.as_str()) == Some("pipeline") {
+                    assert_eq!(args.field("stages").unwrap().as_usize().unwrap(), 4);
+                    pipe_spans.insert(id, args.field("id").unwrap().as_usize().unwrap() as u64);
+                }
+            }
+            "serve.stage" => stage_children
+                .entry(parent)
+                .or_default()
+                .push(args.field("stage").unwrap().as_str().unwrap().to_string()),
+            "engine.pipeline" => engine_roots.push((id, parent)),
+            "pipeline.pass" => pass_parents.push(parent),
+            _ => {}
+        }
+    }
+    let got_ids: HashSet<u64> = pipe_spans.values().copied().collect();
+    assert_eq!(got_ids, expect_ids, "one pipeline serve.request span per submitted request");
+    assert_eq!(pipe_spans.len(), expect_ids.len(), "no duplicated request spans");
+    for span_id in pipe_spans.keys() {
+        let names = stage_children
+            .get(span_id)
+            .unwrap_or_else(|| panic!("serve.request {span_id} has no serve.stage children"));
+        assert_eq!(
+            names,
+            &["mean", "variance", "argmax", "softmax_denom"],
+            "one child span per stage, in declaration order"
+        );
+        assert_eq!(
+            engine_roots.iter().filter(|(_, p)| p == span_id).count(),
+            1,
+            "the engine's pipeline tree nests under the request span"
+        );
+    }
+    let engine_ids: HashSet<u64> = engine_roots
+        .iter()
+        .filter(|(_, p)| pipe_spans.contains_key(p))
+        .map(|(i, _)| *i)
+        .collect();
+    assert_eq!(
+        pass_parents.iter().filter(|p| engine_ids.contains(p)).count(),
+        9,
+        "three fused passes per four-stage cascade, parented under each pipeline root"
+    );
+
+    // The pipeline lane lands in its own metrics bucket.
+    let metrics = std::fs::read_to_string(&metrics_path).unwrap();
+    assert!(metrics.contains("parred_pipeline_requests_total 3"), "{metrics}");
+    assert!(metrics.contains("parred_pipeline_stages_total 12"), "{metrics}");
+    assert!(metrics.contains("parred_pipeline_passes_total 9"), "{metrics}");
+    for p in [&trace_path, &chrome_path, &metrics_path] {
+        let _ = std::fs::remove_file(p);
+    }
+}

@@ -861,6 +861,73 @@ fn prop_one_launch_mode_matches_task_mode_and_oracle() {
 }
 
 #[test]
+fn prop_fused_variance_matches_two_pass_oracle() {
+    use parred::{Engine, ExecPath};
+
+    // The fused one-pass (n, Σx, M2) variance against the scalar
+    // two-pass oracle under catastrophic-cancellation payloads: a huge
+    // common offset with a tiny spread, where the textbook one-pass
+    // E[x²] − E[x]² formulation loses every significant digit. The
+    // Welford/Chan carriers must stay within the conditioning-aware
+    // band n·ε·(1 + κ), κ = |mean|/σ — orders of magnitude tighter
+    // than the naive formulation's n·ε·κ² — across worker counts and
+    // host/fleet placements. Mean and variance must also ride ONE
+    // fused pass, never two.
+    check(
+        "fused variance == two-pass oracle under cancellation",
+        10,
+        |rng| {
+            let n = parred::util::prop::sizes_nonzero(rng, 60_000);
+            let offset = [0.0, 1.0, 1e6, -1e6, 1e7][rng.below(5)];
+            let spread = [1.0, 0.25, 1e-2][rng.below(3)];
+            let data: Vec<f32> = (0..n)
+                .map(|_| (offset + (rng.f64() * 2.0 - 1.0) * spread) as f32)
+                .collect();
+            let pooled = rng.below(2) == 0;
+            let workers = rng.range(1, 6);
+            (data, pooled, workers)
+        },
+        |(data, pooled, workers)| {
+            let mut b = Engine::builder().host_workers(*workers);
+            if *pooled {
+                b = b
+                    .fleet(vec![DeviceConfig::tesla_c2075(); 2])
+                    .pool_cutoff(Some(16_384));
+            }
+            let engine = b.build().map_err(|e| format!("{e:#}"))?;
+            let out = engine
+                .pipeline(data)
+                .mean()
+                .variance()
+                .run()
+                .map_err(|e| format!("{e:#}"))?;
+            if out.path != (ExecPath::Pipeline { stages: 2, passes: 1 }) {
+                return Err(format!("mean+variance did not fuse: {:?}", out.path));
+            }
+            // Two-pass oracle in f64 over the exact f32 payload.
+            let n = data.len() as f64;
+            let xs: Vec<f64> = data.iter().map(|&x| x as f64).collect();
+            let mean = kahan::sum_neumaier_f64(&xs) / n;
+            let sqdev: Vec<f64> = xs.iter().map(|&x| (x - mean) * (x - mean)).collect();
+            let var = kahan::sum_neumaier_f64(&sqdev) / n;
+            let got_mean = out.scalar("mean").unwrap();
+            let got_var = out.scalar("variance").unwrap();
+            if (got_mean - mean).abs() > 1e-10 * mean.abs().max(1.0) {
+                return Err(format!("mean: fused {got_mean} vs two-pass {mean}"));
+            }
+            let kappa = mean.abs() / var.sqrt().max(1e-300);
+            let tol = var * (1e-9 + n * 2.3e-16 * (1.0 + kappa)) + 1e-300;
+            if (got_var - var).abs() > tol {
+                return Err(format!(
+                    "variance: fused {got_var} vs two-pass {var} (κ {kappa:.3e}, tol {tol:.3e})"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_gate_never_exceeds_limit() {
     use parred::coordinator::backpressure::Gate;
     check(
