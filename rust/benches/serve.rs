@@ -1,0 +1,76 @@
+//! `cargo bench --bench serve` — the executor-pool acceptance
+//! experiment: the same closed-loop load against one executor and
+//! against a four-executor pool. Asserts the pool actually overlaps
+//! reduction passes (peak in-flight > 1) and beats the
+//! single-executor p50, then emits `BENCH_serve.json` (path
+//! override: `PARRED_SERVE_JSON`) so CI can track serving latency
+//! and concurrency across PRs alongside the other BENCH artifacts.
+
+use std::collections::BTreeMap;
+
+use parred::harness::serve_load::{self, ServeLoadConfig, ServeLoadOutcome};
+use parred::util::json::Json;
+
+fn insert_run(root: &mut BTreeMap<String, Json>, prefix: &str, out: &ServeLoadOutcome) {
+    root.insert(format!("{prefix}_executors"), Json::Num(out.executors as f64));
+    root.insert(format!("{prefix}_completed"), Json::Num(out.completed as f64));
+    root.insert(format!("{prefix}_shed"), Json::Num(out.shed as f64));
+    root.insert(format!("{prefix}_timeouts"), Json::Num(out.timeouts as f64));
+    root.insert(format!("{prefix}_failed"), Json::Num(out.failed as f64));
+    root.insert(format!("{prefix}_oracle_failures"), Json::Num(out.oracle_failures as f64));
+    root.insert(format!("{prefix}_p50_ms"), Json::Num(out.p50_ms));
+    root.insert(format!("{prefix}_p95_ms"), Json::Num(out.p95_ms));
+    root.insert(format!("{prefix}_p99_ms"), Json::Num(out.p99_ms));
+    root.insert(format!("{prefix}_throughput_rps"), Json::Num(out.throughput_rps));
+    root.insert(format!("{prefix}_wall_s"), Json::Num(out.wall_s));
+    root.insert(format!("{prefix}_peak_passes"), Json::Num(out.peak_passes as f64));
+}
+
+fn main() {
+    let fast = std::env::var("PARRED_BENCH_FAST").as_deref() == Ok("1");
+    let cfg = ServeLoadConfig {
+        requests: if fast { 48 } else { 128 },
+        payload_n: if fast { 1 << 19 } else { 1 << 21 },
+        executors: 4,
+        clients: 4,
+        ..ServeLoadConfig::default()
+    };
+    let (single, pooled) = serve_load::compare(&cfg).expect("serve load runs");
+    println!("{}", single.report());
+    println!("{}", pooled.report());
+
+    assert_eq!(single.completed, cfg.requests, "single-executor run must complete everything");
+    assert_eq!(pooled.completed, cfg.requests, "pooled run must complete everything");
+    assert_eq!(single.oracle_failures + pooled.oracle_failures, 0, "values must match oracle");
+    assert!(
+        pooled.peak_passes > 1,
+        "a {}-executor pool under {} clients must overlap passes (peak {})",
+        cfg.executors,
+        cfg.clients,
+        pooled.peak_passes
+    );
+    assert!(
+        pooled.p50_ms < single.p50_ms,
+        "pooled p50 {:.2} ms must beat single-executor p50 {:.2} ms",
+        pooled.p50_ms,
+        single.p50_ms
+    );
+
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str("serve".to_string()));
+    root.insert("requests".to_string(), Json::Num(cfg.requests as f64));
+    root.insert("payload_n".to_string(), Json::Num(cfg.payload_n as f64));
+    root.insert("clients".to_string(), Json::Num(cfg.clients as f64));
+    root.insert(
+        "p50_speedup".to_string(),
+        Json::Num(single.p50_ms / pooled.p50_ms.max(1e-9)),
+    );
+    insert_run(&mut root, "single", &single);
+    insert_run(&mut root, "pooled", &pooled);
+    let path =
+        std::env::var("PARRED_SERVE_JSON").unwrap_or_else(|_| "BENCH_serve.json".to_string());
+    match std::fs::write(&path, format!("{}\n", Json::Obj(root))) {
+        Ok(()) => eprintln!("(wrote {path})"),
+        Err(e) => eprintln!("(could not write {path}: {e})"),
+    }
+}

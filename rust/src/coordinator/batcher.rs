@@ -371,7 +371,7 @@ mod tests {
         Request {
             id,
             op: Op::Sum,
-            payload: HostVec::F32(vec![1.0; n]),
+            payload: HostVec::F32(vec![1.0; n]).into(),
             t_enqueue: t,
             deadline: None,
             reply: tx,
@@ -587,7 +587,7 @@ mod tests {
             id,
             op,
             keys: (0..n as i64).map(|i| i % 3).collect(),
-            values: HostVec::F32(vec![1.0; n]),
+            values: HostVec::F32(vec![1.0; n]).into(),
             t_enqueue: t,
             deadline: None,
             reply: tx,

@@ -1,0 +1,271 @@
+//! Thin line protocol over TCP: the network face of the executor
+//! pool (`parred serve --listen ADDR`).
+//!
+//! One text line per request, one text line per reply — greppable
+//! with `nc`, no framing library, no serialization dependency. The
+//! accept loop hands each connection its own thread; every
+//! connection submits straight into the shared [`ServicePool`], so
+//! concurrent clients exercise the pool's true request concurrency
+//! rather than a per-connection service instance.
+//!
+//! Commands (case-sensitive, space-separated):
+//!
+//! | request                    | reply                             |
+//! |----------------------------|-----------------------------------|
+//! | `ping`                     | `pong`                            |
+//! | `reduce OP v1,v2,...`      | `ok VALUE path=PATH` or `err MSG` |
+//! | `stats`                    | `ok in_flight=... rejected=...`   |
+//! | `quit`                     | (connection closes)               |
+//!
+//! `OP` is one of `sum|prod|max|min`; values are `f32`. Malformed
+//! lines answer `err ...` and keep the connection open — a bad
+//! request never costs the client its session.
+
+use std::io::{BufRead, BufReader, ErrorKind, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::pool_front::ServicePool;
+use super::request::SubmitOpts;
+use crate::reduce::Op;
+
+/// How long a connection thread waits on a submitted reduction
+/// before answering `err` — generous, since the pool's own deadline
+/// machinery (not the wire protocol) is the real timeout surface.
+const REPLY_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// A running TCP front: owns the acceptor thread and the stop flag.
+pub struct LineServer {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl LineServer {
+    /// The bound address (useful with `--listen 127.0.0.1:0`).
+    pub fn local_addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting connections and join the acceptor thread.
+    /// Already-open connections finish on their own threads.
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for LineServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Bind `listen` and serve the line protocol over `pool` until
+/// [`LineServer::stop`]. The listener is non-blocking so the
+/// acceptor can observe the stop flag; accepted connections switch
+/// back to blocking reads.
+pub fn serve(pool: Arc<ServicePool>, listen: &str) -> Result<LineServer> {
+    let listener =
+        TcpListener::bind(listen).with_context(|| format!("binding line protocol on {listen}"))?;
+    let addr = listener.local_addr().context("resolving bound address")?;
+    listener.set_nonblocking(true).context("setting listener non-blocking")?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop_flag = Arc::clone(&stop);
+    let handle = std::thread::Builder::new()
+        .name("parred-lineproto".into())
+        .spawn(move || {
+            let mut conn_id = 0u64;
+            while !stop_flag.load(Ordering::SeqCst) {
+                match listener.accept() {
+                    Ok((stream, _peer)) => {
+                        conn_id += 1;
+                        let pool = Arc::clone(&pool);
+                        let spawned = std::thread::Builder::new()
+                            .name(format!("parred-lineproto-conn-{conn_id}"))
+                            .spawn(move || {
+                                if handle_conn(stream, &pool).is_err() {
+                                    crate::telemetry::warn("serve.lineproto.conn");
+                                }
+                            });
+                        if spawned.is_err() {
+                            crate::telemetry::warn("serve.lineproto.conn");
+                        }
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(20));
+                    }
+                    Err(_) => {
+                        std::thread::sleep(Duration::from_millis(20));
+                    }
+                }
+            }
+        })
+        .context("spawning line-protocol acceptor")?;
+    Ok(LineServer { addr, stop, handle: Some(handle) })
+}
+
+/// Serve one connection: read lines, answer lines, until EOF or
+/// `quit`.
+fn handle_conn(stream: TcpStream, pool: &ServicePool) -> Result<()> {
+    stream.set_nonblocking(false).context("setting connection blocking")?;
+    let mut reader = BufReader::new(stream.try_clone().context("cloning connection stream")?);
+    let mut writer = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        let n = reader.read_line(&mut line).context("reading request line")?;
+        if n == 0 {
+            return Ok(()); // EOF: client closed.
+        }
+        let cmd = line.trim();
+        if cmd.is_empty() {
+            continue;
+        }
+        match respond(cmd, pool) {
+            Some(reply) => {
+                writer
+                    .write_all(format!("{reply}\n").as_bytes())
+                    .context("writing reply line")?;
+                writer.flush().context("flushing reply")?;
+            }
+            None => return Ok(()), // `quit`
+        }
+    }
+}
+
+/// One command in, one reply line out; `None` means close the
+/// connection (`quit`).
+fn respond(cmd: &str, pool: &ServicePool) -> Option<String> {
+    let mut parts = cmd.splitn(3, ' ');
+    let verb = parts.next().unwrap_or("");
+    match verb {
+        "ping" => Some("pong".into()),
+        "quit" => None,
+        "stats" => Some(format!(
+            "ok in_flight={} rejected={} executors={} peak_passes={}",
+            pool.in_flight(),
+            pool.rejected(),
+            pool.executors(),
+            pool.peak_passes(),
+        )),
+        "reduce" => Some(reduce_reply(parts.next(), parts.next(), pool)),
+        other => Some(format!("err unknown command {other:?} (ping|reduce|stats|quit)")),
+    }
+}
+
+/// Parse and run a `reduce OP v1,v2,...` command.
+fn reduce_reply(op: Option<&str>, values: Option<&str>, pool: &ServicePool) -> String {
+    let Some(op) = op.and_then(Op::parse) else {
+        return "err usage: reduce OP v1,v2,... with OP one of sum|prod|max|min".into();
+    };
+    let Some(values) = values else {
+        return "err reduce needs a comma-separated value list".into();
+    };
+    let mut payload: Vec<f32> = Vec::new();
+    for tok in values.split(',') {
+        let tok = tok.trim();
+        if tok.is_empty() {
+            continue;
+        }
+        match tok.parse::<f32>() {
+            Ok(v) => payload.push(v),
+            Err(_) => return format!("err bad f32 value {tok:?}"),
+        }
+    }
+    if payload.is_empty() {
+        return "err reduce needs at least one value".into();
+    }
+    let rx = match pool.submit_shared(op, payload.into(), SubmitOpts::default()) {
+        Ok(rx) => rx,
+        Err(e) => return format!("err {e}"),
+    };
+    match rx.recv_timeout(REPLY_TIMEOUT) {
+        Ok(resp) => match resp.value {
+            Ok(v) => format!("ok {} path={:?}", v, resp.path),
+            Err(e) => format!("err {e}"),
+        },
+        Err(_) => "err reply channel timed out".into(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::service::ServiceConfig;
+
+    fn empty_artifacts() -> String {
+        concat!(env!("CARGO_MANIFEST_DIR"), "/tests/fixtures/empty_artifacts").to_string()
+    }
+
+    #[test]
+    fn lineproto_serves_ping_reduce_stats_quit() {
+        let pool = Arc::new(
+            ServicePool::start(ServiceConfig {
+                artifacts_dir: empty_artifacts(),
+                warmup: false,
+                workers: 2,
+                executors: 2,
+                ..ServiceConfig::default()
+            })
+            .expect("pool starts"),
+        );
+        let server = serve(Arc::clone(&pool), "127.0.0.1:0").expect("server binds");
+        let addr = server.local_addr();
+
+        let stream = TcpStream::connect(addr).expect("client connects");
+        stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut writer = stream;
+        let mut ask = |req: &str| -> String {
+            writer.write_all(format!("{req}\n").as_bytes()).unwrap();
+            writer.flush().unwrap();
+            let mut reply = String::new();
+            reader.read_line(&mut reply).unwrap();
+            reply.trim().to_string()
+        };
+
+        assert_eq!(ask("ping"), "pong");
+        let reply = ask("reduce sum 1,2,3,4");
+        assert!(reply.starts_with("ok 10"), "unexpected reduce reply: {reply}");
+        assert!(reply.contains("path="), "reply should carry the exec path: {reply}");
+        let reply = ask("reduce bogus 1,2");
+        assert!(reply.starts_with("err"), "bad op must err: {reply}");
+        let reply = ask("stats");
+        assert!(reply.starts_with("ok in_flight="), "unexpected stats reply: {reply}");
+
+        writer.write_all(b"quit\n").unwrap();
+        writer.flush().unwrap();
+        let mut reply = String::new();
+        assert_eq!(reader.read_line(&mut reply).unwrap(), 0, "quit should close");
+
+        server.stop();
+        // The connection thread drops its `Arc` clone just after the
+        // client observes EOF; give it a bounded moment.
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        let mut pool = pool;
+        let pool = loop {
+            match Arc::try_unwrap(pool) {
+                Ok(p) => break p,
+                Err(shared) => {
+                    assert!(
+                        std::time::Instant::now() < deadline,
+                        "connection threads should release the pool"
+                    );
+                    pool = shared;
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+            }
+        };
+        pool.shutdown().expect("clean shutdown");
+    }
+}

@@ -8,8 +8,9 @@ use crate::util::stats::Histogram;
 use super::request::ExecPath;
 
 /// Aggregated serving metrics (owned by the executor thread; snapshot
-/// rendered into the trace report).
-#[derive(Debug)]
+/// rendered into the trace report). `Clone` so executor-pool members
+/// can hand periodic snapshots to the merge slot ([`Metrics::merge`]).
+#[derive(Debug, Clone)]
 pub struct Metrics {
     pub started: Instant,
     /// When the first request completed (None until then): the
@@ -209,6 +210,54 @@ impl Metrics {
         self.host_pool_jobs = c.jobs;
         self.host_pool_chunks = c.chunks;
         self.host_pool_peak_chunks = c.peak_chunks;
+    }
+
+    /// Fold another executor's metrics into this one (the executor
+    /// pool's pool-wide view). Throughput counters add, latency
+    /// histograms merge, epochs take the earliest, and the
+    /// whole-process snapshots (device pool, persistent host pool)
+    /// take the max — each executor snapshots the same shared pools,
+    /// so adding them would double-count.
+    pub fn merge(&mut self, other: &Metrics) {
+        self.started = self.started.min(other.started);
+        self.first_request = match (self.first_request, other.first_request) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        };
+        self.completed += other.completed;
+        self.failed += other.failed;
+        self.lat_full.merge(&other.lat_full);
+        self.lat_batched.merge(&other.lat_batched);
+        self.lat_sharded.merge(&other.lat_sharded);
+        self.lat_host.merge(&other.lat_host);
+        self.lat_host_fused.merge(&other.lat_host_fused);
+        self.lat_pool_fused.merge(&other.lat_pool_fused);
+        self.lat_keyed.merge(&other.lat_keyed);
+        self.lat_segmented.merge(&other.lat_segmented);
+        self.lat_pipeline.merge(&other.lat_pipeline);
+        self.pipeline_requests += other.pipeline_requests;
+        self.pipeline_stages += other.pipeline_stages;
+        self.pipeline_passes += other.pipeline_passes;
+        self.rows_executed += other.rows_executed;
+        self.rows_useful += other.rows_useful;
+        self.batches += other.batches;
+        self.elements_reduced += other.elements_reduced;
+        self.fused_batches += other.fused_batches;
+        self.fused_rows += other.fused_rows;
+        self.pool_fused_batches += other.pool_fused_batches;
+        self.pool_fused_rows += other.pool_fused_rows;
+        self.keyed_requests += other.keyed_requests;
+        self.keyed_fused_batches += other.keyed_fused_batches;
+        self.keyed_fused_requests += other.keyed_fused_requests;
+        self.keyed_fused_groups += other.keyed_fused_groups;
+        self.sharded_requests += other.sharded_requests;
+        self.pool_tasks = self.pool_tasks.max(other.pool_tasks);
+        self.pool_steals = self.pool_steals.max(other.pool_steals);
+        self.pool_peak_depth = self.pool_peak_depth.max(other.pool_peak_depth);
+        self.host_pool_workers = self.host_pool_workers.max(other.host_pool_workers);
+        self.host_pool_jobs = self.host_pool_jobs.max(other.host_pool_jobs);
+        self.host_pool_chunks = self.host_pool_chunks.max(other.host_pool_chunks);
+        self.host_pool_peak_chunks = self.host_pool_peak_chunks.max(other.host_pool_peak_chunks);
     }
 
     /// Completed requests per second, measured from the **first
@@ -538,6 +587,28 @@ mod tests {
         let r = m.report();
         assert!(r.contains("steals=3"), "{r}");
         assert!(r.contains("peak_depth=9"), "{r}");
+    }
+
+    #[test]
+    fn merge_adds_work_and_maxes_shared_snapshots() {
+        let mut a = Metrics::default();
+        a.record(ExecPath::Host, 1e-3, true, 10);
+        a.record_pool(10, 2, 5);
+        let mut b = Metrics::default();
+        b.record(ExecPath::Host, 2e-3, true, 20);
+        b.record(ExecPath::PjrtFull, 3e-3, false, 30);
+        b.record_pool(10, 2, 7);
+        a.merge(&b);
+        assert_eq!(a.completed, 2);
+        assert_eq!(a.failed, 1);
+        assert_eq!(a.elements_reduced, 60);
+        assert_eq!(a.lat_host.count(), 2, "histograms merge");
+        assert_eq!(a.lat_full.count(), 1);
+        // The device pool is shared: both executors snapshot the same
+        // counters, so the merge takes the max instead of the sum.
+        assert_eq!(a.pool_tasks, 10);
+        assert_eq!(a.pool_peak_depth, 7);
+        assert!(a.first_request.is_some());
     }
 
     #[test]

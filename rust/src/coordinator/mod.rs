@@ -31,14 +31,25 @@
 //! blow a member's deadline), and execution failures surface as
 //! [`request::ServeError::Failed`] — faults cost latency or
 //! availability, never a hung client or a wrong answer.
+//!
+//! Since the pool-front PR, [`service::Service`] is a facade over
+//! [`pool_front::ServicePool`]: `executors` threads (each owning its
+//! own PJRT runtime, router and batchers) share one engine, one gate
+//! and one telemetry surface behind round-robin-dispatched bounded
+//! mailboxes — true request concurrency behind one front door. A
+//! thin line protocol over TCP ([`lineproto`]) exposes the pool as a
+//! network service (`parred serve --listen ADDR`).
 
 pub mod backpressure;
 pub mod batcher;
+pub mod lineproto;
 pub mod metrics;
+pub mod pool_front;
 pub mod request;
 pub mod router;
 pub mod service;
 
+pub use pool_front::{PassGauge, ServicePool};
 pub use request::{
     ExecPath, KeyedRequest, KeyedResponse, PipelineRequest, PipelineResponse, PipelineStage,
     Request, Response, ServeError, SubmitOpts,

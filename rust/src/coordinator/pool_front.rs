@@ -1,0 +1,791 @@
+//! The executor-pool front door: N executor threads behind one
+//! admission gate, one shared [`Engine`] and one telemetry surface.
+//!
+//! The paper's GPU argument is persistent workers fed by a grid-stride
+//! front door; this is the serving-layer analogue. PJRT runtimes are
+//! `Rc`-based and not `Send`, so each executor thread owns its own
+//! runtime (and router and batchers) — but the engine, its scheduler
+//! and its device fleet are built **once** on the caller's thread and
+//! shared via `Arc`, so every executor decides from the same ladder
+//! and feeds the same fleet.
+//!
+//! Dispatch is round-robin with a shallow-queue preference over
+//! bounded per-executor mailboxes: the rotor picks a starting
+//! executor, the message lands in the first mailbox that accepts it
+//! without blocking, and only when every mailbox is full does the
+//! front door block (the shared [`Gate`] still bounds total in-flight
+//! work; mailbox bounds only cap per-executor skew). With the
+//! scheduler's sequential floor pinned (`cfg.seq_floor =
+//! Some(usize::MAX)`) every host reduction runs inline on its
+//! executor thread, so distinct requests make progress concurrently —
+//! true request concurrency, measured by [`PassGauge`].
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, SendError, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError, TryLockError};
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::engine::Engine;
+use crate::reduce::op::Op;
+use crate::reduce::persistent::{self, PersistentCounters};
+use crate::runtime::literal::{HostVec, SharedVec};
+use crate::telemetry::{Registry, Trace};
+
+use super::backpressure::{Gate, Permit};
+use super::metrics::Metrics;
+use super::request::{
+    KeyedRequest, KeyedResponse, PipelineRequest, PipelineResponse, PipelineStage, Request,
+    Response, SegmentedRequest, SegmentedResponse, ServeError, SubmitOpts,
+};
+use super::service::{executor_loop, fleet_devices, Msg, ServiceConfig};
+
+/// Lock a mutex, ignoring poison: the guarded values (senders, metric
+/// snapshots) stay coherent even if a holder panicked mid-critical
+/// section, and the serving path must keep answering either way.
+fn lock_ignore_poison<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Concurrent-execution gauge: every executing pass holds a
+/// [`PassGuard`]; `peak()` is the high-water mark of simultaneously
+/// executing passes — the pool's "did requests actually overlap"
+/// witness (`> 1` iff two executors were mid-pass at the same time).
+#[derive(Debug, Default)]
+pub struct PassGauge {
+    cur: AtomicUsize,
+    peak: AtomicUsize,
+}
+
+impl PassGauge {
+    /// Enter a pass; the returned guard exits it on drop.
+    #[must_use = "the pass ends when the guard drops"]
+    pub fn enter(&self) -> PassGuard<'_> {
+        let now = self.cur.fetch_add(1, Ordering::SeqCst) + 1;
+        self.peak.fetch_max(now, Ordering::SeqCst);
+        PassGuard(self)
+    }
+
+    /// Passes executing right now.
+    pub fn current(&self) -> usize {
+        self.cur.load(Ordering::SeqCst)
+    }
+
+    /// High-water mark of simultaneously executing passes.
+    pub fn peak(&self) -> usize {
+        self.peak.load(Ordering::SeqCst)
+    }
+}
+
+/// RAII witness of one executing pass (see [`PassGauge::enter`]).
+pub struct PassGuard<'a>(&'a PassGauge);
+
+impl Drop for PassGuard<'_> {
+    fn drop(&mut self) {
+        self.0.cur.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Everything the executor threads share: config, gate, telemetry,
+/// the one engine, the pass gauge and per-executor metric snapshot
+/// slots (executor 0 merges the slots onto the registry on its ~1 s
+/// tick; the pool merges the joined finals at shutdown).
+pub(crate) struct ExecutorShared {
+    pub(crate) cfg: ServiceConfig,
+    pub(crate) gate: Gate,
+    pub(crate) trace: Arc<Trace>,
+    pub(crate) registry: Arc<Registry>,
+    pub(crate) engine: Arc<Engine>,
+    pub(crate) passes: PassGauge,
+    /// The persistent host pool is process-wide; this snapshot lets
+    /// the shutdown report attribute only this pool's work.
+    pub(crate) host_pool_start: PersistentCounters,
+    slots: Vec<Mutex<Metrics>>,
+}
+
+impl ExecutorShared {
+    /// Publish one executor's current counters into its slot.
+    pub(crate) fn store_slot(&self, idx: usize, metrics: &Metrics) {
+        *lock_ignore_poison(&self.slots[idx]) = metrics.clone();
+    }
+
+    /// Merge every executor's last published snapshot.
+    pub(crate) fn merged_slots(&self) -> Metrics {
+        let mut merged = Metrics::default();
+        for slot in &self.slots {
+            merged.merge(&lock_ignore_poison(slot));
+        }
+        merged
+    }
+
+    /// Sync everything observable onto the unified registry: serving
+    /// metrics, gate state, live pool + persistent-pool counters,
+    /// scheduler-audit rows and counted warning events. Absolute
+    /// writes, so re-running it on every tick is idempotent.
+    pub(crate) fn sync_registry(&self, metrics: &Metrics) {
+        metrics.export_to(&self.registry);
+        self.registry.set_gauge("parred_gate_in_flight", &[], self.gate.in_flight() as f64);
+        self.registry.set_gauge("parred_gate_limit", &[], self.gate.limit() as f64);
+        self.registry.set_counter("parred_gate_admitted_total", &[], self.gate.admitted() as u64);
+        self.registry.set_counter("parred_gate_rejected_total", &[], self.gate.rejected() as u64);
+        if let Some(p) = self.engine.pool() {
+            let c = p.counters();
+            self.registry.set_counter("parred_pool_tasks_total", &[], c.tasks_executed);
+            self.registry.set_counter("parred_pool_steals_total", &[], c.steals);
+            self.registry.set_gauge("parred_pool_peak_depth", &[], c.peak_depth as f64);
+        }
+        if let Some(c) = persistent::global_counters() {
+            self.registry.set_gauge("parred_host_pool_workers", &[], c.workers as f64);
+            self.registry.set_counter(
+                "parred_host_pool_jobs_total",
+                &[],
+                c.jobs.saturating_sub(self.host_pool_start.jobs),
+            );
+            self.registry.set_counter(
+                "parred_host_pool_chunks_total",
+                &[],
+                c.chunks.saturating_sub(self.host_pool_start.chunks),
+            );
+            self.registry.set_gauge("parred_host_pool_peak_chunks", &[], c.peak_chunks as f64);
+        }
+        for e in self.engine.scheduler().audit() {
+            let labels =
+                [("backend", e.backend.name()), ("op", e.op.name()), ("dtype", e.dtype.name())];
+            self.registry.set_counter("parred_sched_observations_total", &labels, e.observations);
+            self.registry.set_counter("parred_sched_mispredicts_total", &labels, e.mispredicts);
+            self.registry.set_gauge("parred_sched_cost_err_p95", &labels, e.err_p95);
+        }
+        for (event, count) in crate::telemetry::warning_counts() {
+            self.registry.set_counter("parred_warnings_total", &[("event", event)], count);
+        }
+    }
+
+    /// Rewrite the metrics file (when configured).
+    pub(crate) fn write_metrics(&self, reason: &str) {
+        if let Some(path) = &self.cfg.metrics_out {
+            if let Err(e) = std::fs::write(path, self.registry.prometheus_text()) {
+                eprintln!("(could not write metrics {path} at {reason}: {e})");
+            }
+        }
+    }
+}
+
+/// The executor pool behind [`super::Service`] — usable directly when
+/// the caller wants pool-level introspection (mailbox depths, peak
+/// concurrent passes) or `Arc`-shared payload submission. Share
+/// across client threads via `Arc`.
+pub struct ServicePool {
+    shared: Arc<ExecutorShared>,
+    txs: Vec<Mutex<SyncSender<Msg>>>,
+    /// Queued-message count per mailbox (sender increments before
+    /// sending, the executor decrements at every receive).
+    depths: Vec<Arc<AtomicUsize>>,
+    /// High-water mark of each mailbox's depth.
+    peaks: Vec<AtomicUsize>,
+    /// Messages each executor has been handed.
+    dispatched: Vec<AtomicUsize>,
+    /// Round-robin rotor.
+    next: AtomicUsize,
+    next_id: AtomicU64,
+    handles: Vec<std::thread::JoinHandle<Metrics>>,
+}
+
+const _: fn() = || {
+    fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<ServicePool>();
+};
+
+impl ServicePool {
+    /// Spawn `cfg.executors` executor threads over one shared engine
+    /// and wait for every runtime to load. Any executor failing to
+    /// start stops the whole pool and surfaces the error.
+    pub fn start(cfg: ServiceConfig) -> Result<ServicePool> {
+        let executors = cfg.executors.max(1);
+        let mailbox_depth = cfg.mailbox_depth.max(1);
+        let gate = Gate::new(cfg.max_queue);
+        // Tracing is on iff an output path asked for it; the registry
+        // always syncs (it is just counters).
+        let trace = Arc::new(Trace::new(cfg.trace_out.is_some()));
+        let registry = Arc::new(Registry::new());
+        // One engine for the whole pool, built on the caller's thread
+        // so a bad fleet config (or a corrupt scheduler snapshot)
+        // fails `start` loudly rather than failing requests later.
+        // The engine owns the device fleet and the scheduler; every
+        // executor's router shares that scheduler, so routing and
+        // execution decide from the same ladder.
+        let mut builder = Engine::builder()
+            .host_workers(cfg.workers)
+            .artifacts_available(true)
+            .adaptive(cfg.adaptive)
+            .seq_floor(cfg.seq_floor)
+            .trace(trace.clone());
+        if let Some(pc) = &cfg.pool {
+            let devices = fleet_devices(pc).context("resolving pool devices")?;
+            builder = builder
+                .fleet(devices)
+                .fleet_fault(pc.fault.clone())
+                .tasks_per_device(pc.tasks_per_device.max(1))
+                .pool_cutoff(pc.cutoff);
+        }
+        if let Some(path) = &cfg.sched_snapshot {
+            // Warm-start the throughput model from the previous run's
+            // snapshot (skipped when the file does not exist yet).
+            builder = builder.sched_snapshot(path);
+        }
+        let engine = Arc::new(builder.build().context("building engine")?);
+        let host_pool_start = persistent::global_counters().unwrap_or_default();
+        let shared = Arc::new(ExecutorShared {
+            cfg,
+            gate,
+            trace,
+            registry,
+            engine,
+            passes: PassGauge::default(),
+            host_pool_start,
+            slots: (0..executors).map(|_| Mutex::new(Metrics::default())).collect(),
+        });
+        // Populate the registry before serving so `metrics_text`
+        // never reads an empty store.
+        shared.sync_registry(&Metrics::default());
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<String, String>>();
+        let mut txs = Vec::with_capacity(executors);
+        let mut depths = Vec::with_capacity(executors);
+        let mut handles = Vec::with_capacity(executors);
+        for idx in 0..executors {
+            let (tx, rx) = mpsc::sync_channel::<Msg>(mailbox_depth);
+            let depth = Arc::new(AtomicUsize::new(0));
+            let handle = std::thread::Builder::new()
+                .name(format!("parred-executor-{idx}"))
+                .spawn({
+                    let shared = shared.clone();
+                    let depth = depth.clone();
+                    let ready = ready_tx.clone();
+                    move || executor_loop(shared, idx, rx, depth, ready)
+                })
+                .context("spawning executor thread")?;
+            txs.push(Mutex::new(tx));
+            depths.push(depth);
+            handles.push(handle);
+        }
+        drop(ready_tx);
+        let mut failures: Vec<String> = Vec::new();
+        for _ in 0..executors {
+            match ready_rx.recv() {
+                Ok(Ok(_platform)) => {}
+                Ok(Err(e)) => failures.push(e),
+                Err(_) => failures.push("executor thread died during startup".into()),
+            }
+        }
+        if !failures.is_empty() {
+            // Stop the survivors before reporting: a half-started pool
+            // must not leak executor threads.
+            for tx in &txs {
+                let _ = lock_ignore_poison(tx).send(Msg::Shutdown);
+            }
+            for h in handles {
+                let _ = h.join();
+            }
+            return Err(anyhow!("executor failed to start: {}", failures.join("; ")));
+        }
+        Ok(ServicePool {
+            shared,
+            txs,
+            depths,
+            peaks: (0..executors).map(|_| AtomicUsize::new(0)).collect(),
+            dispatched: (0..executors).map(|_| AtomicUsize::new(0)).collect(),
+            next: AtomicUsize::new(0),
+            next_id: AtomicU64::new(1),
+            handles,
+        })
+    }
+
+    /// Round-robin dispatch with a shallow-queue preference. The
+    /// rotor picks a starting executor; the message lands in the
+    /// first mailbox (from there) that accepts it without blocking.
+    /// Only when every mailbox refuses does the front door block, on
+    /// the first still-connected mailbox — the gate bounds total
+    /// in-flight work, so a full mailbox drains as soon as its
+    /// executor finishes a pass.
+    fn dispatch(&self, msg: Msg) -> Result<(), ServeError> {
+        let n = self.txs.len();
+        let start = self.next.fetch_add(1, Ordering::Relaxed) % n;
+        let mut msg = msg;
+        for probe in 0..n {
+            let i = (start + probe) % n;
+            // `try_lock`: never queue behind another dispatcher (or a
+            // blocked sender) during the scan — skip to the next
+            // mailbox instead.
+            let tx = match self.txs[i].try_lock() {
+                Ok(guard) => guard,
+                Err(TryLockError::Poisoned(p)) => p.into_inner(),
+                Err(TryLockError::WouldBlock) => continue,
+            };
+            // Increment before sending so the count can never go
+            // transiently negative (the executor decrements at
+            // receive, which can race an increment-after-send).
+            let depth = self.depths[i].fetch_add(1, Ordering::Relaxed) + 1;
+            match tx.try_send(msg) {
+                Ok(()) => {
+                    self.peaks[i].fetch_max(depth, Ordering::Relaxed);
+                    self.dispatched[i].fetch_add(1, Ordering::Relaxed);
+                    return Ok(());
+                }
+                Err(TrySendError::Full(m)) | Err(TrySendError::Disconnected(m)) => {
+                    self.depths[i].fetch_sub(1, Ordering::Relaxed);
+                    msg = m;
+                }
+            }
+        }
+        // Every mailbox is full or contended: block on the first
+        // still-connected one, starting at the rotor's own target.
+        for probe in 0..n {
+            let i = (start + probe) % n;
+            let tx = lock_ignore_poison(&self.txs[i]);
+            let depth = self.depths[i].fetch_add(1, Ordering::Relaxed) + 1;
+            match tx.send(msg) {
+                Ok(()) => {
+                    self.peaks[i].fetch_max(depth, Ordering::Relaxed);
+                    self.dispatched[i].fetch_add(1, Ordering::Relaxed);
+                    return Ok(());
+                }
+                Err(SendError(m)) => {
+                    self.depths[i].fetch_sub(1, Ordering::Relaxed);
+                    msg = m;
+                }
+            }
+        }
+        drop(msg);
+        Err(ServeError::Failed("service stopped".into()))
+    }
+
+    /// Submit a reduction with default options (no deadline, no
+    /// admission retries). Returns the response channel, or a typed
+    /// [`ServeError`] when the gate sheds or the service stopped.
+    ///
+    /// The admission slot is held until an executor responds (it
+    /// releases the gate after delivering each response).
+    pub fn submit(&self, op: Op, payload: HostVec) -> Result<Receiver<Response>, ServeError> {
+        self.submit_with(op, payload, SubmitOpts::default())
+    }
+
+    /// Submit a reduction with a deadline and/or bounded admission
+    /// retry ([`SubmitOpts`]). A full gate sheds with
+    /// [`ServeError::Shed`] after the configured retries (doubling
+    /// backoff between attempts); a deadline that expires while
+    /// retrying returns [`ServeError::Timeout`] instead. An admitted
+    /// request whose deadline expires before execution is answered
+    /// `Timeout` on its response channel.
+    pub fn submit_with(
+        &self,
+        op: Op,
+        payload: HostVec,
+        opts: SubmitOpts,
+    ) -> Result<Receiver<Response>, ServeError> {
+        self.submit_shared(op, payload.into(), opts)
+    }
+
+    /// [`Self::submit_with`] over an `Arc`-backed [`SharedVec`]: the
+    /// front door refcounts the payload instead of copying it, so one
+    /// buffer can feed many concurrent requests (the load harness's
+    /// closed-loop clients all submit clones of one payload).
+    pub fn submit_shared(
+        &self,
+        op: Op,
+        payload: SharedVec,
+        opts: SubmitOpts,
+    ) -> Result<Receiver<Response>, ServeError> {
+        let t_enqueue = Instant::now();
+        let permit = self.admit(t_enqueue, &opts)?;
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let req = Request {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            op,
+            payload,
+            t_enqueue,
+            deadline: opts.deadline.map(|d| t_enqueue + d),
+            reply: reply_tx,
+        };
+        self.dispatch(Msg::Req(req))?;
+        // Ownership of the slot transfers to the executor, which
+        // releases it via `Gate::release_transferred` in `respond`.
+        permit.transfer();
+        Ok(reply_rx)
+    }
+
+    /// Submit a keyed (group-by) reduction: one key per value, one
+    /// reduced value per distinct key. Concurrent same-`(op, dtype)`
+    /// keyed requests on the same executor fuse into one segmented
+    /// pass at flush time (by-key fusion). Returns the response
+    /// channel, or a typed [`ServeError`] on a key/value length
+    /// mismatch, shed, or a stopped service.
+    pub fn submit_by_key(
+        &self,
+        op: Op,
+        keys: Vec<i64>,
+        values: HostVec,
+    ) -> Result<Receiver<KeyedResponse>, ServeError> {
+        self.submit_by_key_with(op, keys, values, SubmitOpts::default())
+    }
+
+    /// [`Self::submit_by_key`] with a deadline and/or bounded
+    /// admission retry (see [`Self::submit_with`]).
+    pub fn submit_by_key_with(
+        &self,
+        op: Op,
+        keys: Vec<i64>,
+        values: HostVec,
+        opts: SubmitOpts,
+    ) -> Result<Receiver<KeyedResponse>, ServeError> {
+        if keys.len() != values.len() {
+            return Err(ServeError::Failed(format!(
+                "reduce_by_key needs one key per value ({} keys, {} values)",
+                keys.len(),
+                values.len()
+            )));
+        }
+        let t_enqueue = Instant::now();
+        let permit = self.admit(t_enqueue, &opts)?;
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let req = KeyedRequest {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            op,
+            keys,
+            values: values.into(),
+            t_enqueue,
+            deadline: opts.deadline.map(|d| t_enqueue + d),
+            reply: reply_tx,
+        };
+        self.dispatch(Msg::Keyed(req))?;
+        permit.transfer();
+        Ok(reply_rx)
+    }
+
+    /// Submit a segmented (ragged) reduction: CSR `offsets` over the
+    /// payload, one reduced value per segment. The request executes as
+    /// one pass on whatever segmented rung the scheduler picks (fused
+    /// host, per-task fleet wave, or the one-launch segmented kernel).
+    /// Returns the response channel, or a typed [`ServeError`] on
+    /// malformed offsets, shed, or a stopped service.
+    pub fn submit_segments(
+        &self,
+        op: Op,
+        payload: HostVec,
+        offsets: Vec<usize>,
+    ) -> Result<Receiver<SegmentedResponse>, ServeError> {
+        self.submit_segments_with(op, payload, offsets, SubmitOpts::default())
+    }
+
+    /// [`Self::submit_segments`] with a deadline and/or bounded
+    /// admission retry (see [`Self::submit_with`]).
+    pub fn submit_segments_with(
+        &self,
+        op: Op,
+        payload: HostVec,
+        offsets: Vec<usize>,
+        opts: SubmitOpts,
+    ) -> Result<Receiver<SegmentedResponse>, ServeError> {
+        // Reject malformed CSR at the front door — the executor should
+        // never spend a queue slot discovering a shape error.
+        if let Err(e) = crate::pool::validate_csr_offsets(&offsets, payload.len()) {
+            return Err(ServeError::Failed(format!("{e:#}")));
+        }
+        let t_enqueue = Instant::now();
+        let permit = self.admit(t_enqueue, &opts)?;
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let req = SegmentedRequest {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            op,
+            payload: payload.into(),
+            offsets,
+            t_enqueue,
+            deadline: opts.deadline.map(|d| t_enqueue + d),
+            reply: reply_tx,
+        };
+        self.dispatch(Msg::Segmented(req))?;
+        permit.transfer();
+        Ok(reply_rx)
+    }
+
+    /// Submit a cascaded-reduction pipeline: `stages` in declaration
+    /// order over one payload, executed as a fused reduction DAG
+    /// through the engine's pipeline front door (mean + variance fuse
+    /// into one `(n, Σx, M2)` pass; the softmax normalizer's exp-sum
+    /// pass reuses the max pass's placement). The response carries one
+    /// `(stage name, value)` per requested stage. Returns the response
+    /// channel, or a typed [`ServeError`] on an empty/duplicate stage
+    /// list, an empty payload, shed, or a stopped service.
+    pub fn submit_pipeline(
+        &self,
+        stages: Vec<PipelineStage>,
+        payload: HostVec,
+    ) -> Result<Receiver<PipelineResponse>, ServeError> {
+        self.submit_pipeline_with(stages, payload, SubmitOpts::default())
+    }
+
+    /// [`Self::submit_pipeline`] with a deadline and/or bounded
+    /// admission retry (see [`Self::submit_with`]).
+    pub fn submit_pipeline_with(
+        &self,
+        stages: Vec<PipelineStage>,
+        payload: HostVec,
+        opts: SubmitOpts,
+    ) -> Result<Receiver<PipelineResponse>, ServeError> {
+        // Reject malformed cascades at the front door, like segmented
+        // CSR validation: the executor should never spend a queue slot
+        // discovering a shape error.
+        if stages.is_empty() {
+            return Err(ServeError::Failed("pipeline needs at least one stage".into()));
+        }
+        for (i, s) in stages.iter().enumerate() {
+            if stages[..i].contains(s) {
+                return Err(ServeError::Failed(format!(
+                    "duplicate pipeline stage {:?}",
+                    s.name()
+                )));
+            }
+        }
+        if payload.is_empty() {
+            return Err(ServeError::Failed(
+                "pipeline needs a non-empty payload (mean/variance are undefined on n=0)".into(),
+            ));
+        }
+        let t_enqueue = Instant::now();
+        let permit = self.admit(t_enqueue, &opts)?;
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let req = PipelineRequest {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            stages,
+            payload: payload.into(),
+            t_enqueue,
+            deadline: opts.deadline.map(|d| t_enqueue + d),
+            reply: reply_tx,
+        };
+        self.dispatch(Msg::Pipeline(req))?;
+        permit.transfer();
+        Ok(reply_rx)
+    }
+
+    /// Acquire an admission slot, retrying a shedding gate
+    /// `opts.retries` times with doubling backoff (1, 2, 4 ... ms,
+    /// capped at 32 ms). A deadline that expires mid-retry wins over
+    /// the shed: the caller asked for bounded waiting, not bounded
+    /// rejection.
+    fn admit(&self, t_enqueue: Instant, opts: &SubmitOpts) -> Result<Permit, ServeError> {
+        let gate = &self.shared.gate;
+        let mut attempt = 0u32;
+        loop {
+            if let Some(p) = gate.try_acquire() {
+                return Ok(p);
+            }
+            if opts.deadline.is_some_and(|d| t_enqueue.elapsed() >= d) {
+                crate::telemetry::warn("serve.deadline.expired");
+                return Err(ServeError::Timeout {
+                    waited_ms: t_enqueue.elapsed().as_millis() as u64,
+                });
+            }
+            if attempt >= opts.retries {
+                crate::telemetry::warn("serve.shed");
+                return Err(ServeError::Shed {
+                    in_flight: gate.in_flight(),
+                    limit: gate.limit(),
+                });
+            }
+            attempt += 1;
+            crate::telemetry::warn("serve.submit.retry");
+            std::thread::sleep(std::time::Duration::from_millis(1u64 << (attempt - 1).min(5)));
+        }
+    }
+
+    /// Deliver a shutdown message to every mailbox **without**
+    /// joining, so a test can queue requests behind the shutdown and
+    /// exercise the executors' drain path deterministically. Normal
+    /// callers use [`Self::shutdown`], which does both.
+    #[doc(hidden)]
+    pub fn begin_shutdown(&self) {
+        for (tx, depth) in self.txs.iter().zip(&self.depths) {
+            let tx = lock_ignore_poison(tx);
+            depth.fetch_add(1, Ordering::Relaxed);
+            if tx.send(Msg::Shutdown).is_err() {
+                depth.fetch_sub(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Stop the pool: deliver a shutdown to every executor, join them
+    /// all, merge their final metrics, and write the shutdown-time
+    /// artifacts (scheduler snapshot, final registry sync + metrics
+    /// file, trace exports).
+    ///
+    /// A panicked executor is counted (one
+    /// `serve.executor.panicked` warning each) and surfaces as
+    /// `Err(ServeError::Failed(..))` **after** the artifacts are
+    /// written — best-effort metrics instead of a propagated panic.
+    pub fn shutdown(mut self) -> Result<Metrics, ServeError> {
+        self.begin_shutdown();
+        let mut merged = Metrics::default();
+        let mut panicked = 0usize;
+        for h in self.handles.drain(..) {
+            match h.join() {
+                Ok(m) => merged.merge(&m),
+                Err(_) => {
+                    crate::telemetry::warn("serve.executor.panicked");
+                    panicked += 1;
+                }
+            }
+        }
+        let shared = &self.shared;
+        if let Some(p) = shared.engine.pool() {
+            let c = p.counters();
+            merged.record_pool(c.tasks_executed, c.steals, c.peak_depth);
+        }
+        if let Some(c) = persistent::global_counters() {
+            merged.record_host_pool(PersistentCounters {
+                workers: c.workers,
+                jobs: c.jobs.saturating_sub(shared.host_pool_start.jobs),
+                chunks: c.chunks.saturating_sub(shared.host_pool_start.chunks),
+                peak_chunks: c.peak_chunks,
+            });
+        }
+        if let Some(path) = &shared.cfg.sched_snapshot {
+            if let Err(e) = std::fs::write(path, shared.engine.scheduler().snapshot_json()) {
+                eprintln!("(could not write scheduler snapshot {path}: {e})");
+            }
+        }
+        // Final registry sync + telemetry artifacts.
+        shared.sync_registry(&merged);
+        shared.write_metrics("shutdown");
+        if let Some(path) = &shared.cfg.trace_out {
+            if let Err(e) = std::fs::write(path, shared.trace.export_jsonl()) {
+                eprintln!("(could not write trace {path}: {e})");
+            }
+            let chrome = format!("{path}.chrome.json");
+            if let Err(e) = std::fs::write(&chrome, shared.trace.export_chrome()) {
+                eprintln!("(could not write trace {chrome}: {e})");
+            }
+        }
+        if panicked > 0 {
+            return Err(ServeError::Failed(format!(
+                "{panicked} executor thread(s) panicked"
+            )));
+        }
+        // Every executor exited cleanly and drained its mailbox, so
+        // every transferred admission slot must be back.
+        debug_assert_eq!(
+            shared.gate.in_flight(),
+            0,
+            "shutdown-drain contract: a transferred admission slot leaked"
+        );
+        Ok(merged)
+    }
+
+    /// Current in-flight count (admission gate view).
+    pub fn in_flight(&self) -> usize {
+        self.shared.gate.in_flight()
+    }
+
+    /// Requests rejected at admission.
+    pub fn rejected(&self) -> usize {
+        self.shared.gate.rejected()
+    }
+
+    /// The shared admission gate.
+    pub fn gate(&self) -> &Gate {
+        &self.shared.gate
+    }
+
+    /// Executor thread count.
+    pub fn executors(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// High-water mark of simultaneously executing passes — `> 1`
+    /// proves two requests actually overlapped.
+    pub fn peak_passes(&self) -> usize {
+        self.shared.passes.peak()
+    }
+
+    /// Passes executing right now.
+    pub fn concurrent_passes(&self) -> usize {
+        self.shared.passes.current()
+    }
+
+    /// Current queued-message count per mailbox.
+    pub fn mailbox_depths(&self) -> Vec<usize> {
+        self.depths.iter().map(|d| d.load(Ordering::Relaxed)).collect()
+    }
+
+    /// High-water mark of each mailbox's queued-message count.
+    pub fn mailbox_peaks(&self) -> Vec<usize> {
+        self.peaks.iter().map(|p| p.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Messages handed to each executor.
+    pub fn dispatched(&self) -> Vec<usize> {
+        self.dispatched.iter().map(|d| d.load(Ordering::Relaxed)).collect()
+    }
+
+    /// The request span trace (recording iff `trace_out` was set).
+    pub fn trace(&self) -> &Arc<Trace> {
+        &self.shared.trace
+    }
+
+    /// The unified metrics registry behind [`Self::metrics_text`].
+    pub fn registry(&self) -> &Arc<Registry> {
+        &self.shared.registry
+    }
+
+    /// Prometheus-style exposition of the unified registry.
+    pub fn metrics_text(&self) -> String {
+        self.shared.registry.prometheus_text()
+    }
+}
+
+impl Drop for ServicePool {
+    fn drop(&mut self) {
+        if self.handles.is_empty() {
+            return; // `shutdown` already ran
+        }
+        // Best-effort stop without the shutdown report: deliver a
+        // shutdown everywhere and swallow panics (a `Drop` must never
+        // re-panic), still counting them like `shutdown` does.
+        for (tx, depth) in self.txs.iter().zip(&self.depths) {
+            let tx = lock_ignore_poison(tx);
+            depth.fetch_add(1, Ordering::Relaxed);
+            if tx.send(Msg::Shutdown).is_err() {
+                depth.fetch_sub(1, Ordering::Relaxed);
+            }
+        }
+        for h in self.handles.drain(..) {
+            if h.join().is_err() {
+                crate::telemetry::warn("serve.executor.panicked");
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pass_gauge_tracks_current_and_peak() {
+        let g = PassGauge::default();
+        assert_eq!(g.current(), 0);
+        assert_eq!(g.peak(), 0);
+        let a = g.enter();
+        let b = g.enter();
+        assert_eq!(g.current(), 2);
+        assert_eq!(g.peak(), 2);
+        drop(a);
+        assert_eq!(g.current(), 1);
+        let c = g.enter();
+        // Peak is a high-water mark: re-entering at depth 2 doesn't
+        // lower it.
+        assert_eq!(g.peak(), 2);
+        drop(b);
+        drop(c);
+        assert_eq!(g.current(), 0);
+        assert_eq!(g.peak(), 2);
+    }
+}

@@ -7,7 +7,7 @@ use std::time::{Duration, Instant};
 use crate::pipeline::StageValue;
 use crate::reduce::op::{Dtype, Op};
 use crate::reduce::plan::ShapeKey;
-use crate::runtime::literal::{HostScalar, HostVec};
+use crate::runtime::literal::{HostScalar, SharedVec};
 
 /// Monotonically increasing request identifier.
 pub type RequestId = u64;
@@ -63,12 +63,14 @@ impl SubmitOpts {
     }
 }
 
-/// A reduction request entering the coordinator.
+/// A reduction request entering the coordinator. The payload is a
+/// shared buffer ([`SharedVec`]): executors clone it by refcount, so
+/// concurrent passes over the same data never copy it.
 #[derive(Debug)]
 pub struct Request {
     pub id: RequestId,
     pub op: Op,
-    pub payload: HostVec,
+    pub payload: SharedVec,
     /// Enqueue timestamp (latency accounting).
     pub t_enqueue: Instant,
     /// Absolute deadline (from [`SubmitOpts::deadline`]); past it the
@@ -126,7 +128,7 @@ pub struct KeyedRequest {
     /// The key column (`keys.len() == values.len()`; validated at
     /// submit time).
     pub keys: Vec<i64>,
-    pub values: HostVec,
+    pub values: SharedVec,
     /// Enqueue timestamp (latency accounting).
     pub t_enqueue: Instant,
     /// Absolute deadline (see [`Request::deadline`]).
@@ -159,7 +161,7 @@ impl KeyedRequest {
 pub struct SegmentedRequest {
     pub id: RequestId,
     pub op: Op,
-    pub payload: HostVec,
+    pub payload: SharedVec,
     /// CSR segment boundaries (validated at submit time).
     pub offsets: Vec<usize>,
     /// Enqueue timestamp (latency accounting).
@@ -243,7 +245,7 @@ pub struct PipelineRequest {
     /// Stages in declaration order (validated non-empty and
     /// duplicate-free at submit time).
     pub stages: Vec<PipelineStage>,
-    pub payload: HostVec,
+    pub payload: SharedVec,
     /// Enqueue timestamp (latency accounting).
     pub t_enqueue: Instant,
     /// Absolute deadline (see [`Request::deadline`]).
@@ -295,7 +297,7 @@ mod tests {
         let r = Request {
             id: 1,
             op: Op::Sum,
-            payload: HostVec::F32(vec![0.0; 10]),
+            payload: vec![0.0f32; 10].into(),
             t_enqueue: Instant::now(),
             deadline: None,
             reply: tx,
@@ -313,7 +315,7 @@ mod tests {
         let mut r = Request {
             id: 1,
             op: Op::Sum,
-            payload: HostVec::F32(vec![0.0; 4]),
+            payload: vec![0.0f32; 4].into(),
             t_enqueue: t,
             deadline: None,
             reply: tx,

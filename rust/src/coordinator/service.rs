@@ -1,32 +1,38 @@
-//! The serving surface: a dedicated executor thread owns the PJRT
-//! runtime (it is `Rc`-based and not `Send`) and drains an mpsc queue
-//! fed by any number of client threads; requests are routed
-//! ([`super::router`]), dynamically batched ([`super::batcher`]) and
-//! executed, with admission control ([`super::backpressure`]) and
-//! latency metrics ([`super::metrics`]).
+//! The serving surface: executor threads own PJRT runtimes (they are
+//! `Rc`-based and not `Send`) and drain bounded mailboxes fed by any
+//! number of client threads; requests are routed ([`super::router`]),
+//! dynamically batched ([`super::batcher`]) and executed, with
+//! admission control ([`super::backpressure`]) and latency metrics
+//! ([`super::metrics`]).
 //!
-//! Since the engine-facade PR the executor constructs one
-//! [`crate::engine::Engine`] and routes **all** host and fleet
-//! execution through it: direct requests via `engine.reduce(..)`,
-//! fused batches (host- or fleet-side) via `engine.reduce_rows(..)`.
-//! Only artifact dispatch (the PJRT runtime the executor owns) stays
-//! local. The engine's scheduler is shared with the router, so
-//! routing and execution decide from the same ladder by construction.
+//! Since the engine-facade PR the executor routes **all** host and
+//! fleet execution through one [`crate::engine::Engine`]: direct
+//! requests via `engine.reduce(..)`, fused batches (host- or
+//! fleet-side) via `engine.reduce_rows(..)`. Only artifact dispatch
+//! (the PJRT runtime each executor owns) stays local. The engine's
+//! scheduler is shared with the router, so routing and execution
+//! decide from the same ladder by construction.
+//!
+//! Since the pool-front PR ([`super::pool_front`]) the engine is
+//! built once and shared (`Arc<Engine>`) across `cfg.executors`
+//! threads, each running `executor_loop` over its own bounded
+//! mailbox. [`Service`] stays as a thin facade over a
+//! [`ServicePool`]; `executors = 1` reproduces the classic dedicated
+//! executor thread exactly.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, Result};
 
 use crate::engine::{resolve_device, Engine};
 use crate::gpusim::{DeviceConfig, FaultPlan};
 use crate::pipeline::StageValue;
 use crate::reduce::op::{Dtype, Element, Op, TypedElement};
-use crate::reduce::persistent;
 use crate::reduce::plan::ShapeKey;
-use crate::runtime::literal::{HostScalar, HostVec};
+use crate::runtime::literal::{HostScalar, HostVec, SharedVec};
 use crate::runtime::Runtime;
 use crate::telemetry::{Registry, Trace};
 use crate::util::rng::Rng;
@@ -35,6 +41,7 @@ use crate::util::stats::Histogram;
 use super::backpressure::Gate;
 use super::batcher::{BatchKind, Batcher, FlushedBatch, FlushedKeyedBatch, KeyPolicy, KeyedBatcher};
 use super::metrics::Metrics;
+use super::pool_front::{ExecutorShared, ServicePool};
 use super::request::{
     ExecPath, KeyedRequest, KeyedResponse, PipelineRequest, PipelineResponse, PipelineStage,
     Request, Response, SegmentedRequest, SegmentedResponse, ServeError, SubmitOpts,
@@ -125,6 +132,27 @@ pub struct ServiceConfig {
     /// ~1 s sync tick and at shutdown ([`Service::metrics_text`] reads
     /// the same registry live).
     pub metrics_out: Option<String>,
+    /// Executor threads sharing the one engine (the pool front door).
+    /// Each executor owns its own PJRT runtime, router and batchers;
+    /// `1` reproduces the classic single-executor service exactly.
+    pub executors: usize,
+    /// Bound on each executor's mailbox (queued messages). The front
+    /// door prefers the shallowest available mailbox and only blocks
+    /// once every mailbox is full; total in-flight work is still
+    /// bounded by the shared gate (`max_queue`) — this bound caps
+    /// per-executor skew, not admission.
+    pub mailbox_depth: usize,
+    /// Override for the scheduler's sequential floor.
+    /// `Some(usize::MAX)` pins every host reduction inline on its
+    /// executor thread — the pool's true-concurrency mode, since the
+    /// process-wide persistent host pool serializes job submission.
+    /// `None` keeps the scheduler's calibrated floor.
+    pub seq_floor: Option<usize>,
+    /// Test hook: the executor panics on its first direct request, so
+    /// the pool's panic accounting is exercisable without `unsafe`.
+    /// Never set outside tests.
+    #[doc(hidden)]
+    pub debug_panic_on_request: bool,
 }
 
 impl Default for ServiceConfig {
@@ -140,11 +168,15 @@ impl Default for ServiceConfig {
             sched_snapshot: None,
             trace_out: None,
             metrics_out: None,
+            executors: 1,
+            mailbox_depth: 1024,
+            seq_floor: None,
+            debug_panic_on_request: false,
         }
     }
 }
 
-enum Msg {
+pub(crate) enum Msg {
     Req(Request),
     Keyed(KeyedRequest),
     Segmented(SegmentedRequest),
@@ -153,104 +185,67 @@ enum Msg {
 }
 
 /// Handle to a running service (share across threads via `Arc`).
+///
+/// A thin facade over [`ServicePool`]: `cfg.executors` threads share
+/// one engine, one gate and one telemetry surface behind per-executor
+/// bounded mailboxes. Use [`Self::pool_front`] for pool-level
+/// introspection (mailbox depths, peak concurrent passes).
 pub struct Service {
-    tx: Sender<Msg>,
-    gate: Gate,
-    next_id: AtomicU64,
-    handle: Option<std::thread::JoinHandle<Metrics>>,
-    trace: Arc<Trace>,
-    registry: Arc<Registry>,
+    pool: ServicePool,
 }
 
 impl Service {
-    /// Spawn the executor thread and wait for the runtime to load.
+    /// Spawn the executor pool and wait for every runtime to load.
     pub fn start(cfg: ServiceConfig) -> Result<Service> {
-        let (tx, rx) = mpsc::channel::<Msg>();
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<String, String>>();
-        let gate = Gate::new(cfg.max_queue);
-        let gate2 = gate.clone();
-        // Tracing is on iff an output path asked for it; the registry
-        // always syncs (it is just counters).
-        let trace = Arc::new(Trace::new(cfg.trace_out.is_some()));
-        let registry = Arc::new(Registry::new());
-        let trace2 = trace.clone();
-        let registry2 = registry.clone();
-        let cfg2 = cfg.clone();
-        let handle = std::thread::Builder::new()
-            .name("parred-executor".into())
-            .spawn(move || executor_loop(cfg2, gate2, trace2, registry2, rx, ready_tx))
-            .context("spawning executor thread")?;
-        match ready_rx.recv() {
-            Ok(Ok(_platform)) => {}
-            Ok(Err(e)) => {
-                let _ = handle.join();
-                return Err(anyhow!("executor failed to start: {e}"));
-            }
-            Err(_) => return Err(anyhow!("executor thread died during startup")),
-        }
-        Ok(Service { tx, gate, next_id: AtomicU64::new(1), handle: Some(handle), trace, registry })
+        Ok(Service { pool: ServicePool::start(cfg)? })
+    }
+
+    /// The executor-pool front door behind this facade.
+    pub fn pool_front(&self) -> &ServicePool {
+        &self.pool
     }
 
     /// Submit a reduction with default options (no deadline, no
-    /// admission retries). Returns the response channel, or a typed
-    /// [`ServeError`] when the gate sheds or the service stopped.
-    ///
-    /// The admission slot is held until the executor responds (it
-    /// releases the gate after delivering each response).
+    /// admission retries). See [`ServicePool::submit`].
     pub fn submit(&self, op: Op, payload: HostVec) -> Result<Receiver<Response>, ServeError> {
-        self.submit_with(op, payload, SubmitOpts::default())
+        self.pool.submit(op, payload)
     }
 
     /// Submit a reduction with a deadline and/or bounded admission
-    /// retry ([`SubmitOpts`]). A full gate sheds with
-    /// [`ServeError::Shed`] after the configured retries (doubling
-    /// backoff between attempts); a deadline that expires while
-    /// retrying returns [`ServeError::Timeout`] instead. An admitted
-    /// request whose deadline expires before execution is answered
-    /// `Timeout` on its response channel.
+    /// retry. See [`ServicePool::submit_with`].
     pub fn submit_with(
         &self,
         op: Op,
         payload: HostVec,
         opts: SubmitOpts,
     ) -> Result<Receiver<Response>, ServeError> {
-        let t_enqueue = Instant::now();
-        let permit = self.admit(t_enqueue, &opts)?;
-        let (reply_tx, reply_rx) = mpsc::channel();
-        let req = Request {
-            id: self.next_id.fetch_add(1, Ordering::Relaxed),
-            op,
-            payload,
-            t_enqueue,
-            deadline: opts.deadline.map(|d| t_enqueue + d),
-            reply: reply_tx,
-        };
-        self.tx
-            .send(Msg::Req(req))
-            .map_err(|_| ServeError::Failed("service stopped".into()))?;
-        // Ownership of the slot transfers to the executor, which
-        // releases it via `Gate::release_transferred` in `respond`.
-        permit.transfer();
-        Ok(reply_rx)
+        self.pool.submit_with(op, payload, opts)
     }
 
-    /// Submit a keyed (group-by) reduction: one key per value, one
-    /// reduced value per distinct key. Concurrent same-`(op, dtype)`
-    /// keyed requests fuse into one segmented pass at flush time
-    /// (by-key fusion). Returns the response channel, or a typed
-    /// [`ServeError`] on a key/value length mismatch, shed, or a
-    /// stopped service.
+    /// Submit a reduction over an `Arc`-backed shared payload (no
+    /// copy at the front door). See [`ServicePool::submit_shared`].
+    pub fn submit_shared(
+        &self,
+        op: Op,
+        payload: SharedVec,
+        opts: SubmitOpts,
+    ) -> Result<Receiver<Response>, ServeError> {
+        self.pool.submit_shared(op, payload, opts)
+    }
+
+    /// Submit a keyed (group-by) reduction. See
+    /// [`ServicePool::submit_by_key`].
     pub fn submit_by_key(
         &self,
         op: Op,
         keys: Vec<i64>,
         values: HostVec,
     ) -> Result<Receiver<KeyedResponse>, ServeError> {
-        self.submit_by_key_with(op, keys, values, SubmitOpts::default())
+        self.pool.submit_by_key(op, keys, values)
     }
 
     /// [`Self::submit_by_key`] with a deadline and/or bounded
-    /// admission retry (see [`Self::submit_with`]).
+    /// admission retry. See [`ServicePool::submit_by_key_with`].
     pub fn submit_by_key_with(
         &self,
         op: Op,
@@ -258,49 +253,22 @@ impl Service {
         values: HostVec,
         opts: SubmitOpts,
     ) -> Result<Receiver<KeyedResponse>, ServeError> {
-        if keys.len() != values.len() {
-            return Err(ServeError::Failed(format!(
-                "reduce_by_key needs one key per value ({} keys, {} values)",
-                keys.len(),
-                values.len()
-            )));
-        }
-        let t_enqueue = Instant::now();
-        let permit = self.admit(t_enqueue, &opts)?;
-        let (reply_tx, reply_rx) = mpsc::channel();
-        let req = KeyedRequest {
-            id: self.next_id.fetch_add(1, Ordering::Relaxed),
-            op,
-            keys,
-            values,
-            t_enqueue,
-            deadline: opts.deadline.map(|d| t_enqueue + d),
-            reply: reply_tx,
-        };
-        self.tx
-            .send(Msg::Keyed(req))
-            .map_err(|_| ServeError::Failed("service stopped".into()))?;
-        permit.transfer();
-        Ok(reply_rx)
+        self.pool.submit_by_key_with(op, keys, values, opts)
     }
 
-    /// Submit a segmented (ragged) reduction: CSR `offsets` over the
-    /// payload, one reduced value per segment. The request executes as
-    /// one pass on whatever segmented rung the scheduler picks (fused
-    /// host, per-task fleet wave, or the one-launch segmented kernel).
-    /// Returns the response channel, or a typed [`ServeError`] on
-    /// malformed offsets, shed, or a stopped service.
+    /// Submit a segmented (ragged) reduction. See
+    /// [`ServicePool::submit_segments`].
     pub fn submit_segments(
         &self,
         op: Op,
         payload: HostVec,
         offsets: Vec<usize>,
     ) -> Result<Receiver<SegmentedResponse>, ServeError> {
-        self.submit_segments_with(op, payload, offsets, SubmitOpts::default())
+        self.pool.submit_segments(op, payload, offsets)
     }
 
     /// [`Self::submit_segments`] with a deadline and/or bounded
-    /// admission retry (see [`Self::submit_with`]).
+    /// admission retry. See [`ServicePool::submit_segments_with`].
     pub fn submit_segments_with(
         &self,
         op: Op,
@@ -308,181 +276,92 @@ impl Service {
         offsets: Vec<usize>,
         opts: SubmitOpts,
     ) -> Result<Receiver<SegmentedResponse>, ServeError> {
-        // Reject malformed CSR at the front door — the executor should
-        // never spend a queue slot discovering a shape error.
-        if let Err(e) = crate::pool::validate_csr_offsets(&offsets, payload.len()) {
-            return Err(ServeError::Failed(format!("{e:#}")));
-        }
-        let t_enqueue = Instant::now();
-        let permit = self.admit(t_enqueue, &opts)?;
-        let (reply_tx, reply_rx) = mpsc::channel();
-        let req = SegmentedRequest {
-            id: self.next_id.fetch_add(1, Ordering::Relaxed),
-            op,
-            payload,
-            offsets,
-            t_enqueue,
-            deadline: opts.deadline.map(|d| t_enqueue + d),
-            reply: reply_tx,
-        };
-        self.tx
-            .send(Msg::Segmented(req))
-            .map_err(|_| ServeError::Failed("service stopped".into()))?;
-        permit.transfer();
-        Ok(reply_rx)
+        self.pool.submit_segments_with(op, payload, offsets, opts)
     }
 
-    /// Submit a cascaded-reduction pipeline: `stages` in declaration
-    /// order over one payload, executed as a fused reduction DAG
-    /// through the engine's pipeline front door (mean + variance fuse
-    /// into one `(n, Σx, M2)` pass; the softmax normalizer's exp-sum
-    /// pass reuses the max pass's placement). The response carries one
-    /// `(stage name, value)` per requested stage. Returns the response
-    /// channel, or a typed [`ServeError`] on an empty/duplicate stage
-    /// list, an empty payload, shed, or a stopped service.
+    /// Submit a cascaded-reduction pipeline. See
+    /// [`ServicePool::submit_pipeline`].
     pub fn submit_pipeline(
         &self,
         stages: Vec<PipelineStage>,
         payload: HostVec,
     ) -> Result<Receiver<PipelineResponse>, ServeError> {
-        self.submit_pipeline_with(stages, payload, SubmitOpts::default())
+        self.pool.submit_pipeline(stages, payload)
     }
 
     /// [`Self::submit_pipeline`] with a deadline and/or bounded
-    /// admission retry (see [`Self::submit_with`]).
+    /// admission retry. See [`ServicePool::submit_pipeline_with`].
     pub fn submit_pipeline_with(
         &self,
         stages: Vec<PipelineStage>,
         payload: HostVec,
         opts: SubmitOpts,
     ) -> Result<Receiver<PipelineResponse>, ServeError> {
-        // Reject malformed cascades at the front door, like segmented
-        // CSR validation: the executor should never spend a queue slot
-        // discovering a shape error.
-        if stages.is_empty() {
-            return Err(ServeError::Failed("pipeline needs at least one stage".into()));
-        }
-        for (i, s) in stages.iter().enumerate() {
-            if stages[..i].contains(s) {
-                return Err(ServeError::Failed(format!(
-                    "duplicate pipeline stage {:?}",
-                    s.name()
-                )));
-            }
-        }
-        if payload.is_empty() {
-            return Err(ServeError::Failed(
-                "pipeline needs a non-empty payload (mean/variance are undefined on n=0)".into(),
-            ));
-        }
-        let t_enqueue = Instant::now();
-        let permit = self.admit(t_enqueue, &opts)?;
-        let (reply_tx, reply_rx) = mpsc::channel();
-        let req = PipelineRequest {
-            id: self.next_id.fetch_add(1, Ordering::Relaxed),
-            stages,
-            payload,
-            t_enqueue,
-            deadline: opts.deadline.map(|d| t_enqueue + d),
-            reply: reply_tx,
-        };
-        self.tx
-            .send(Msg::Pipeline(req))
-            .map_err(|_| ServeError::Failed("service stopped".into()))?;
-        permit.transfer();
-        Ok(reply_rx)
-    }
-
-    /// Acquire an admission slot, retrying a shedding gate
-    /// `opts.retries` times with doubling backoff (1, 2, 4 ... ms,
-    /// capped at 32 ms). A deadline that expires mid-retry wins over
-    /// the shed: the caller asked for bounded waiting, not bounded
-    /// rejection.
-    fn admit(
-        &self,
-        t_enqueue: Instant,
-        opts: &SubmitOpts,
-    ) -> Result<super::backpressure::Permit, ServeError> {
-        let mut attempt = 0u32;
-        loop {
-            if let Some(p) = self.gate.try_acquire() {
-                return Ok(p);
-            }
-            if opts.deadline.is_some_and(|d| t_enqueue.elapsed() >= d) {
-                crate::telemetry::warn("serve.deadline.expired");
-                return Err(ServeError::Timeout {
-                    waited_ms: t_enqueue.elapsed().as_millis() as u64,
-                });
-            }
-            if attempt >= opts.retries {
-                crate::telemetry::warn("serve.shed");
-                return Err(ServeError::Shed {
-                    in_flight: self.gate.in_flight(),
-                    limit: self.gate.limit(),
-                });
-            }
-            attempt += 1;
-            crate::telemetry::warn("serve.submit.retry");
-            std::thread::sleep(Duration::from_millis(1u64 << (attempt - 1).min(5)));
-        }
+        self.pool.submit_pipeline_with(stages, payload, opts)
     }
 
     /// Current in-flight count (admission gate view).
     pub fn in_flight(&self) -> usize {
-        self.gate.in_flight()
+        self.pool.in_flight()
     }
 
     /// The request span trace (recording iff `trace_out` was set).
     /// Keep a clone of the `Arc` to inspect spans after `shutdown`.
     pub fn trace(&self) -> &Arc<Trace> {
-        &self.trace
+        self.pool.trace()
     }
 
     /// The unified metrics registry behind [`Self::metrics_text`].
     pub fn registry(&self) -> &Arc<Registry> {
-        &self.registry
+        self.pool.registry()
     }
 
     /// Prometheus-style exposition of the unified registry. The
-    /// executor syncs serving metrics, pool counters, persistent-pool
+    /// executors sync serving metrics, pool counters, persistent-pool
     /// counters, scheduler-audit rows and warning events onto it about
     /// once a second (and at shutdown).
     pub fn metrics_text(&self) -> String {
-        self.registry.prometheus_text()
+        self.pool.metrics_text()
     }
 
     pub fn rejected(&self) -> usize {
-        self.gate.rejected()
+        self.pool.rejected()
     }
 
-    /// Stop the service and return final metrics.
-    pub fn shutdown(mut self) -> Metrics {
-        let _ = self.tx.send(Msg::Shutdown);
-        self.handle
-            .take()
-            .expect("shutdown called once")
-            .join()
-            .expect("executor panicked")
-    }
-}
-
-impl Drop for Service {
-    fn drop(&mut self) {
-        if let Some(h) = self.handle.take() {
-            let _ = self.tx.send(Msg::Shutdown);
-            let _ = h.join();
-        }
+    /// Stop the service and return final metrics (merged across
+    /// executors). An executor that panicked surfaces as
+    /// `Err(ServeError::Failed(..))` — it no longer propagates the
+    /// panic into the caller — after every surviving executor drained
+    /// its mailbox and the final telemetry artifacts were written.
+    pub fn shutdown(self) -> Result<Metrics, ServeError> {
+        self.pool.shutdown()
     }
 }
 
-fn executor_loop(
-    cfg: ServiceConfig,
-    gate: Gate,
-    trace: Arc<Trace>,
-    registry: Arc<Registry>,
+/// One executor thread's serving loop. Every executor owns its own
+/// PJRT [`Runtime`] (it is `Rc`-based and not `Send`), router and
+/// batchers, and drains its own bounded mailbox; all host and fleet
+/// execution goes through the pool-shared [`Engine`].
+///
+/// `depth` mirrors the mailbox's queued-message count — the front
+/// door increments before sending, this loop decrements at every
+/// receive — so dispatch can prefer the shallowest mailbox.
+///
+/// The shutdown-drain contract: after the loop stops, everything
+/// still queued in the mailbox is answered with a typed
+/// [`ServeError::Failed`] and its transferred admission slot is
+/// released — a silently dropped reply channel and a leaked gate slot
+/// are both bugs this drain exists to prevent.
+pub(crate) fn executor_loop(
+    shared: Arc<ExecutorShared>,
+    idx: usize,
     rx: Receiver<Msg>,
+    depth: Arc<AtomicUsize>,
     ready: Sender<Result<String, String>>,
 ) -> Metrics {
+    let cfg = &shared.cfg;
+    let gate = &shared.gate;
+    let engine: &Engine = &shared.engine;
     let mut metrics = Metrics::default();
     let runtime = match Runtime::load(&cfg.artifacts_dir) {
         Ok(rt) => rt,
@@ -505,102 +384,14 @@ fn executor_loop(
             return metrics;
         }
     }
-    // The engine: one front door for every host/fleet execution. Built
-    // before `ready` so a bad fleet config (or a corrupt scheduler
-    // snapshot) fails startup loudly rather than failing requests
-    // later. The engine owns the device pool and the scheduler; the
-    // router shares that scheduler, so routing and execution decide
-    // from the same ladder.
-    let mut builder = Engine::builder()
-        .host_workers(cfg.workers)
-        .artifacts_available(true)
-        .adaptive(cfg.adaptive)
-        .trace(trace.clone());
-    if let Some(pc) = &cfg.pool {
-        let devices = match fleet_devices(pc) {
-            Ok(d) => d,
-            Err(e) => {
-                let _ = ready.send(Err(format!("resolving pool devices: {e:#}")));
-                return metrics;
-            }
-        };
-        builder = builder
-            .fleet(devices)
-            .fleet_fault(pc.fault.clone())
-            .tasks_per_device(pc.tasks_per_device.max(1))
-            .pool_cutoff(pc.cutoff);
-    }
-    if let Some(path) = &cfg.sched_snapshot {
-        // Warm-start the throughput model from the previous run's
-        // snapshot (skipped when the file does not exist yet).
-        builder = builder.sched_snapshot(path);
-    }
-    let engine = match builder.build() {
-        Ok(e) => e,
-        Err(e) => {
-            let _ = ready.send(Err(format!("building engine: {e:#}")));
-            return metrics;
-        }
-    };
     let _ = ready.send(Ok(runtime.platform()));
     metrics.started = Instant::now(); // exclude load+warmup from throughput
-    // The persistent host pool is process-wide; snapshot its counters
-    // now so the shutdown report attributes only this service's work
-    // (the engine's device-pool counters are per-instance already).
-    let host_pool_start = persistent::global_counters().unwrap_or_default();
-    let sched = engine.scheduler().clone();
-    // Sync everything observable onto the unified registry: serving
-    // metrics, live pool + persistent-pool counters, scheduler-audit
-    // rows and counted warning events. Absolute writes, so the ~1 s
-    // tick below re-running it is idempotent.
-    let sync_registry = |metrics: &Metrics, engine: &Engine| {
-        metrics.export_to(&registry);
-        registry.set_gauge("parred_gate_in_flight", &[], gate.in_flight() as f64);
-        registry.set_gauge("parred_gate_limit", &[], gate.limit() as f64);
-        registry.set_counter("parred_gate_admitted_total", &[], gate.admitted() as u64);
-        registry.set_counter("parred_gate_rejected_total", &[], gate.rejected() as u64);
-        if let Some(p) = engine.pool() {
-            let c = p.counters();
-            registry.set_counter("parred_pool_tasks_total", &[], c.tasks_executed);
-            registry.set_counter("parred_pool_steals_total", &[], c.steals);
-            registry.set_gauge("parred_pool_peak_depth", &[], c.peak_depth as f64);
-        }
-        if let Some(c) = persistent::global_counters() {
-            registry.set_gauge("parred_host_pool_workers", &[], c.workers as f64);
-            registry.set_counter(
-                "parred_host_pool_jobs_total",
-                &[],
-                c.jobs.saturating_sub(host_pool_start.jobs),
-            );
-            registry.set_counter(
-                "parred_host_pool_chunks_total",
-                &[],
-                c.chunks.saturating_sub(host_pool_start.chunks),
-            );
-            registry.set_gauge("parred_host_pool_peak_chunks", &[], c.peak_chunks as f64);
-        }
-        for e in engine.scheduler().audit() {
-            let labels =
-                [("backend", e.backend.name()), ("op", e.op.name()), ("dtype", e.dtype.name())];
-            registry.set_counter("parred_sched_observations_total", &labels, e.observations);
-            registry.set_counter("parred_sched_mispredicts_total", &labels, e.mispredicts);
-            registry.set_gauge("parred_sched_cost_err_p95", &labels, e.err_p95);
-        }
-        for (event, count) in crate::telemetry::warning_counts() {
-            registry.set_counter("parred_warnings_total", &[("event", event)], count);
-        }
-    };
-    let write_metrics = |reason: &str| {
-        if let Some(path) = &cfg.metrics_out {
-            if let Err(e) = std::fs::write(path, registry.prometheus_text()) {
-                eprintln!("(could not write metrics {path} at {reason}: {e})");
-            }
-        }
-    };
-    // Populate the registry before serving so `Service::metrics_text`
-    // never reads an empty store.
-    sync_registry(&metrics, &engine);
-    let router = Router::with_scheduler(runtime.catalog().clone(), sched.clone());
+    // The router shares the engine's scheduler, so routing and
+    // execution decide from the same ladder.
+    let router = Router::with_scheduler(runtime.catalog().clone(), engine.scheduler().clone());
+    // Test hook: a deliberate panic on the first direct request, so
+    // the pool's join-error accounting is exercisable without unsafe.
+    let mut panic_armed = cfg.debug_panic_on_request;
     let mut batcher = Batcher::new(cfg.batch_window);
     // Keyed requests queue separately (by-key fusion: same-(op, dtype)
     // keyed requests fuse into one segmented pass on the same window).
@@ -609,7 +400,10 @@ fn executor_loop(
     let handle_req = |req: Request, batcher: &mut Batcher, metrics: &mut Metrics| {
         match router.route(req.shape_key()) {
             Route::Batched { .. } => batcher.push(req),
-            Route::Full { artifact } => exec_full(&trace, &runtime, &gate, &artifact, req, metrics),
+            Route::Full { artifact } => {
+                let _pass = shared.passes.enter();
+                exec_full(&shared.trace, &runtime, gate, &artifact, req, metrics)
+            }
             // Fleet-bound keys batch too: concurrent same-key requests
             // stack into one fleet rows pass at flush time (pool-aware
             // dynamic batching). Empty payloads run directly.
@@ -617,7 +411,8 @@ fn executor_loop(
                 if engine.pool().is_some() && !req.payload.is_empty() {
                     batcher.push(req)
                 } else {
-                    exec_engine(&engine, &gate, req, metrics)
+                    let _pass = shared.passes.enter();
+                    exec_engine(engine, gate, req, metrics)
                 }
             }
             // Artifact-less keys still batch: same-key requests fuse
@@ -629,7 +424,8 @@ fn executor_loop(
                 if n > 0 && n <= HOST_FUSE_MAX_N {
                     batcher.push(req)
                 } else {
-                    exec_engine(&engine, &gate, req, metrics)
+                    let _pass = shared.passes.enter();
+                    exec_engine(engine, gate, req, metrics)
                 }
             }
         }
@@ -665,33 +461,47 @@ fn executor_loop(
             .map(|d| d.saturating_duration_since(Instant::now()))
             .unwrap_or(Duration::from_millis(50));
         match rx.recv_timeout(timeout) {
-            Ok(Msg::Shutdown) => running = false,
             Ok(first) => {
+                depth.fetch_sub(1, Ordering::Relaxed);
                 // Process the first message, then opportunistically
                 // drain queued ones before flushing, so bursts batch
                 // well.
                 let mut pending = Some(first);
                 while let Some(msg) = pending.take() {
                     match msg {
-                        Msg::Req(req) => handle_req(req, &mut batcher, &mut metrics),
+                        Msg::Req(req) => {
+                            if panic_armed {
+                                panic_armed = false;
+                                panic!("debug_panic_on_request: deliberate test panic");
+                            }
+                            handle_req(req, &mut batcher, &mut metrics)
+                        }
                         Msg::Keyed(req) => keyed.push(req),
                         // Segmented requests are already one fused
                         // pass by shape; they execute directly.
                         Msg::Segmented(req) => {
-                            exec_engine_segmented(&engine, &gate, req, &mut metrics)
+                            let _pass = shared.passes.enter();
+                            exec_engine_segmented(engine, gate, req, &mut metrics)
                         }
                         // Pipeline requests plan their own fusion (the
                         // whole cascade is one DAG); they execute
                         // directly.
                         Msg::Pipeline(req) => {
-                            exec_engine_pipeline(&engine, &gate, req, &mut metrics)
+                            let _pass = shared.passes.enter();
+                            exec_engine_pipeline(engine, gate, req, &mut metrics)
                         }
                         Msg::Shutdown => {
                             running = false;
                             break;
                         }
                     }
-                    pending = rx.try_recv().ok();
+                    pending = match rx.try_recv() {
+                        Ok(m) => {
+                            depth.fetch_sub(1, Ordering::Relaxed);
+                            Some(m)
+                        }
+                        Err(_) => None,
+                    };
                 }
             }
             Err(RecvTimeoutError::Timeout) => {}
@@ -699,83 +509,116 @@ fn executor_loop(
         }
         let now = Instant::now();
         for batch in batcher.flush_ready(now, &policy) {
+            let _pass = shared.passes.enter();
             match batch.kind {
-                BatchKind::Rows => exec_batch(&trace, &runtime, &gate, &router, batch, &mut metrics),
+                BatchKind::Rows => {
+                    exec_batch(&shared.trace, &runtime, gate, &router, batch, &mut metrics)
+                }
                 // The engine decides host-fused vs fleet-fused from
                 // the same ladder that routed the key; a FusedPool
                 // batch on a pool-less engine degrades per-request.
-                BatchKind::FusedHost => exec_engine_fused(&engine, &gate, batch, &mut metrics),
+                BatchKind::FusedHost => exec_engine_fused(engine, gate, batch, &mut metrics),
                 BatchKind::FusedPool => {
                     if engine.pool().is_some() {
-                        exec_engine_fused(&engine, &gate, batch, &mut metrics)
+                        exec_engine_fused(engine, gate, batch, &mut metrics)
                     } else {
                         for req in batch.requests {
-                            exec_engine(&engine, &gate, req, &mut metrics);
+                            exec_engine(engine, gate, req, &mut metrics);
                         }
                     }
                 }
             }
         }
         for batch in keyed.flush_ready(now) {
-            exec_engine_keyed_fused(&engine, &gate, batch, &mut metrics);
+            let _pass = shared.passes.enter();
+            exec_engine_keyed_fused(engine, gate, batch, &mut metrics);
         }
-        // The SIGUSR1-equivalent tick: re-sync the registry and rewrite
-        // the metrics file about once a second, so a long-running serve
-        // exposes fresh numbers without waiting for shutdown.
+        // The SIGUSR1-equivalent tick: publish this executor's
+        // counters; executor 0 additionally merges every slot onto the
+        // registry and rewrites the metrics file about once a second,
+        // so a long-running serve exposes fresh numbers without
+        // waiting for shutdown.
         if last_sync.elapsed() >= Duration::from_secs(1) {
             last_sync = Instant::now();
-            sync_registry(&metrics, &engine);
-            write_metrics("tick");
+            shared.store_slot(idx, &metrics);
+            if idx == 0 {
+                shared.sync_registry(&shared.merged_slots());
+                shared.write_metrics("tick");
+            }
         }
     }
 
-    // Drain: everything still queued executes unbatched.
+    // Drain: everything still queued in the batchers executes
+    // unbatched.
     for req in batcher.drain_all() {
+        let _pass = shared.passes.enter();
         match router.route(req.shape_key()) {
             Route::Full { artifact } => {
-                exec_full(&trace, &runtime, &gate, &artifact, req, &mut metrics)
+                exec_full(&shared.trace, &runtime, gate, &artifact, req, &mut metrics)
             }
-            _ => exec_engine(&engine, &gate, req, &mut metrics),
+            _ => exec_engine(engine, gate, req, &mut metrics),
         }
     }
     for req in keyed.drain_all() {
-        exec_engine_keyed(&engine, &gate, req, &mut metrics);
+        let _pass = shared.passes.enter();
+        exec_engine_keyed(engine, gate, req, &mut metrics);
     }
-    if let Some(path) = &cfg.sched_snapshot {
-        if let Err(e) = std::fs::write(path, sched.snapshot_json()) {
-            eprintln!("(could not write scheduler snapshot {path}: {e})");
-        }
+    // The shutdown-drain contract: requests that were queued behind
+    // the shutdown message get a typed answer and their transferred
+    // admission slots back. Without this drain the channel drop would
+    // close every queued reply channel silently and leak the gate
+    // slots those requests transferred at submit time.
+    while let Ok(msg) = rx.try_recv() {
+        depth.fetch_sub(1, Ordering::Relaxed);
+        fail_stopped(gate, msg, &mut metrics);
     }
-    if let Some(p) = engine.pool() {
-        let c = p.counters();
-        metrics.record_pool(c.tasks_executed, c.steals, c.peak_depth);
-    }
-    if let Some(c) = persistent::global_counters() {
-        metrics.record_host_pool(crate::reduce::persistent::PersistentCounters {
-            workers: c.workers,
-            jobs: c.jobs - host_pool_start.jobs,
-            chunks: c.chunks - host_pool_start.chunks,
-            peak_chunks: c.peak_chunks,
-        });
-    }
-    // Final registry sync + telemetry artifacts.
-    sync_registry(&metrics, &engine);
-    write_metrics("shutdown");
-    if let Some(path) = &cfg.trace_out {
-        if let Err(e) = std::fs::write(path, trace.export_jsonl()) {
-            eprintln!("(could not write trace {path}: {e})");
-        }
-        let chrome = format!("{path}.chrome.json");
-        if let Err(e) = std::fs::write(&chrome, trace.export_chrome()) {
-            eprintln!("(could not write trace {chrome}: {e})");
-        }
-    }
+    // Final artifacts (scheduler snapshot, trace export, metrics
+    // file) are written once by the pool after it joins every
+    // executor; this thread just publishes its final counters.
+    shared.store_slot(idx, &metrics);
     metrics
+}
+
+/// Answer a drained message with a typed failure: the service stopped
+/// before this request could execute. Routing through the respond
+/// path releases the transferred admission slot and records the
+/// failure in the metrics like any other terminal outcome.
+fn fail_stopped(gate: &Gate, msg: Msg, metrics: &mut Metrics) {
+    fn stopped() -> ServeError {
+        ServeError::Failed("service stopped".into())
+    }
+    match msg {
+        Msg::Req(req) => respond(gate, req, Err(stopped()), ExecPath::Host, metrics),
+        Msg::Keyed(req) => {
+            respond_keyed(gate, req, Err(stopped()), ExecPath::Keyed { groups: 0 }, metrics)
+        }
+        Msg::Segmented(req) => {
+            let segments = req.segments();
+            respond_segmented(
+                gate,
+                req,
+                Err(stopped()),
+                ExecPath::Segmented { segments },
+                metrics,
+            )
+        }
+        Msg::Pipeline(req) => {
+            let stages = req.stages.len();
+            respond_pipeline(
+                gate,
+                req,
+                Err(stopped()),
+                ExecPath::Pipeline { stages, passes: 0 },
+                metrics,
+            )
+        }
+        Msg::Shutdown => {}
+    }
 }
 
 /// Resolve a serve config's device names (custom models first, then
 /// presets) to the fleet the engine will own.
-fn fleet_devices(pc: &PoolServeConfig) -> Result<Vec<DeviceConfig>> {
+pub(crate) fn fleet_devices(pc: &PoolServeConfig) -> Result<Vec<DeviceConfig>> {
     pc.devices.iter().map(|name| resolve_device(name, &pc.custom)).collect()
 }
 
@@ -901,12 +744,12 @@ fn exec_engine_segmented(
         span.attr_u64("segments", req.segments() as u64);
     }
     let result: Result<(Vec<HostScalar>, ExecPath)> = match &req.payload {
-        HostVec::F32(v) => engine
+        SharedVec::F32(v) => engine
             .reduce_segments(v, &req.offsets)
             .op(req.op)
             .run()
             .map(|r| (r.value.into_iter().map(HostScalar::F32).collect(), r.path)),
-        HostVec::I32(v) => engine
+        SharedVec::I32(v) => engine
             .reduce_segments(v, &req.offsets)
             .op(req.op)
             .run()
@@ -1014,8 +857,8 @@ fn exec_engine_pipeline(
         span.attr_u64("stages", req.stages.len() as u64);
     }
     let result: Result<(Vec<(String, StageValue)>, ExecPath)> = match &req.payload {
-        HostVec::F32(v) => run_pipeline_stages(engine, v, &req.stages),
-        HostVec::I32(v) => run_pipeline_stages(engine, v, &req.stages),
+        SharedVec::F32(v) => run_pipeline_stages(engine, v, &req.stages),
+        SharedVec::I32(v) => run_pipeline_stages(engine, v, &req.stages),
     };
     match result {
         Ok((stages, path)) => {
@@ -1065,7 +908,7 @@ fn exec_full(
         .get(artifact)
         .cloned()
         .ok_or_else(|| anyhow!("artifact vanished"))
-        .and_then(|meta| runtime.reduce_full(&meta, &req.payload));
+        .and_then(|meta| runtime.reduce_full_shared(&meta, &req.payload));
     respond(
         gate,
         req,
@@ -1087,12 +930,12 @@ fn exec_engine(engine: &Engine, gate: &Gate, req: Request, metrics: &mut Metrics
         span.attr_u64("n", req.payload.len() as u64);
     }
     let result: Result<(HostScalar, ExecPath)> = match &req.payload {
-        HostVec::F32(v) => engine
+        SharedVec::F32(v) => engine
             .reduce(v)
             .op(req.op)
             .run()
             .map(|r| (HostScalar::F32(r.value), r.path)),
-        HostVec::I32(v) => engine
+        SharedVec::I32(v) => engine
             .reduce(v)
             .op(req.op)
             .run()
@@ -1147,7 +990,7 @@ fn exec_engine_fused(engine: &Engine, gate: &Gate, batch: FlushedBatch, metrics:
         Dtype::F32 => {
             let mut stacked: Vec<f32> = Vec::with_capacity(rows * key.n);
             for req in &requests {
-                let HostVec::F32(v) = &req.payload else {
+                let SharedVec::F32(v) = &req.payload else {
                     unreachable!("shape key guarantees f32 payloads")
                 };
                 stacked.extend_from_slice(v);
@@ -1162,7 +1005,7 @@ fn exec_engine_fused(engine: &Engine, gate: &Gate, batch: FlushedBatch, metrics:
         Dtype::I32 => {
             let mut stacked: Vec<i32> = Vec::with_capacity(rows * key.n);
             for req in &requests {
-                let HostVec::I32(v) = &req.payload else {
+                let SharedVec::I32(v) = &req.payload else {
                     unreachable!("shape key guarantees i32 payloads")
                 };
                 stacked.extend_from_slice(v);
@@ -1233,12 +1076,12 @@ fn exec_engine_keyed(engine: &Engine, gate: &Gate, req: KeyedRequest, metrics: &
         span.attr_u64("n", req.values.len() as u64);
     }
     let result: Result<(Vec<(i64, HostScalar)>, ExecPath)> = match &req.values {
-        HostVec::F32(v) => engine
+        SharedVec::F32(v) => engine
             .reduce_by_key(&req.keys, v)
             .op(req.op)
             .run()
             .map(|r| (r.value.into_iter().map(|(k, x)| (k, HostScalar::F32(x))).collect(), r.path)),
-        HostVec::I32(v) => engine
+        SharedVec::I32(v) => engine
             .reduce_by_key(&req.keys, v)
             .op(req.op)
             .run()
@@ -1281,16 +1124,16 @@ fn exec_engine_keyed_fused(
         let req = requests.into_iter().next().expect("one request");
         return exec_engine_keyed(engine, gate, req, metrics);
     }
-    fn f32_slice(p: &HostVec) -> &[f32] {
+    fn f32_slice(p: &SharedVec) -> &[f32] {
         match p {
-            HostVec::F32(v) => v,
-            HostVec::I32(_) => unreachable!("fusion key guarantees f32 payloads"),
+            SharedVec::F32(v) => v,
+            SharedVec::I32(_) => unreachable!("fusion key guarantees f32 payloads"),
         }
     }
-    fn i32_slice(p: &HostVec) -> &[i32] {
+    fn i32_slice(p: &SharedVec) -> &[i32] {
         match p {
-            HostVec::I32(v) => v,
-            HostVec::F32(_) => unreachable!("fusion key guarantees i32 payloads"),
+            SharedVec::I32(v) => v,
+            SharedVec::F32(_) => unreachable!("fusion key guarantees i32 payloads"),
         }
     }
     match batch.key.dtype {
@@ -1320,7 +1163,7 @@ fn exec_keyed_fused_typed<T: TypedElement>(
     gate: &Gate,
     op: Op,
     requests: Vec<KeyedRequest>,
-    extract: fn(&HostVec) -> &[T],
+    extract: fn(&SharedVec) -> &[T],
     wrap: fn(T) -> HostScalar,
     metrics: &mut Metrics,
 ) {
@@ -1429,7 +1272,7 @@ fn exec_batch(
     // Stack payloads (+ identity padding up to exec_rows).
     let mut stacked = identity_payload(key.op, key.dtype, 0);
     for req in &requests {
-        let _ = stacked.extend(&req.payload);
+        let _ = stacked.extend_shared(&req.payload);
     }
     for _ in useful..exec_rows {
         let _ = stacked.extend(&identity_payload(key.op, key.dtype, key.n));
@@ -1545,7 +1388,7 @@ pub fn run_trace(cfg: ServiceConfig, trace: TraceConfig) -> Result<String> {
     }
     let wall = t0.elapsed().as_secs_f64();
 
-    let metrics = svc.shutdown();
+    let metrics = svc.shutdown().map_err(|e| anyhow!("service shutdown: {e}"))?;
     let mut report = String::new();
     report.push_str(&format!(
         "=== serve trace: {} requests x {} f32, window {:?} ===\n",

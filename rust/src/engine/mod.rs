@@ -132,6 +132,7 @@ pub struct EngineBuilder {
     fault: FaultPlan,
     tasks_per_device: usize,
     pool_cutoff: Option<usize>,
+    seq_floor: Option<usize>,
     adaptive: bool,
     artifacts_available: bool,
     snapshot: Option<String>,
@@ -189,6 +190,18 @@ impl EngineBuilder {
     /// scheduler's throughput model.
     pub fn pool_cutoff(mut self, cutoff: Option<usize>) -> Self {
         self.pool_cutoff = cutoff;
+        self
+    }
+
+    /// Pin the scheduler's sequential floor (see
+    /// [`SchedConfig::seq_floor`]): payloads below it always run
+    /// sequentially on the calling thread. `Some(usize::MAX)` forces
+    /// *every* host reduction inline — what an executor pool wants when
+    /// the executors themselves are the parallelism and the shared
+    /// persistent host pool (one process-wide submit lock) would
+    /// serialize them. `None` (the default) keeps the stack default.
+    pub fn seq_floor(mut self, floor: Option<usize>) -> Self {
+        self.seq_floor = floor;
         self
     }
 
@@ -258,12 +271,14 @@ impl EngineBuilder {
                 ..PoolConfig::default()
             })?)
         };
+        let defaults = SchedConfig::default();
         let sched = Arc::new(Scheduler::new(SchedConfig {
             workers,
             artifacts_available: self.artifacts_available,
             adaptive: self.adaptive,
             pool: pool.as_ref().map(|p| PoolPrior::for_fleet(p.devices(), self.pool_cutoff)),
-            ..SchedConfig::default()
+            seq_floor: self.seq_floor.unwrap_or(defaults.seq_floor),
+            ..defaults
         }));
         if let Some(path) = &self.snapshot {
             if std::path::Path::new(path).exists() {
@@ -288,6 +303,13 @@ pub struct Engine {
     pool: Option<DevicePool>,
     trace: Arc<Trace>,
 }
+
+// The executor pool shares one `Arc<Engine>` across N executor
+// threads; keep that contract checked at compile time.
+const _: fn() = || {
+    fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<Engine>();
+};
 
 impl Engine {
     /// Start building an engine.
@@ -575,6 +597,25 @@ mod tests {
         assert!(e.pool().unwrap().devices()[0].fault.is_none());
         // Bad fault clauses fail loudly.
         assert!(Engine::builder().chaos_spec("G80:bogus@1").is_err());
+    }
+
+    #[test]
+    fn seq_floor_pin_forces_inline_execution() {
+        // The executor-pool configuration: no fleet, sequential floor
+        // pinned to MAX — every host reduction runs inline on the
+        // calling (executor) thread, so pool members never contend on
+        // the process-wide persistent host pool.
+        let e = Engine::builder().host_workers(4).seq_floor(Some(usize::MAX)).build().unwrap();
+        assert!(matches!(
+            e.scheduler().decide(Op::Sum, Dtype::F32, 1 << 26, false),
+            Decision::Sequential
+        ));
+        // Unset keeps the stack default: large payloads still thread.
+        let e = Engine::builder().host_workers(4).build().unwrap();
+        assert!(matches!(
+            e.scheduler().decide(Op::Sum, Dtype::F32, 1 << 26, false),
+            Decision::Threaded { .. }
+        ));
     }
 
     #[test]

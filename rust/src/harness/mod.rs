@@ -10,6 +10,7 @@ pub mod chaos;
 pub mod pool_scaling;
 pub mod report;
 pub mod sched_adapt;
+pub mod serve_load;
 pub mod table1;
 pub mod table2;
 pub mod table3;

@@ -1,0 +1,285 @@
+//! Closed-loop load harness for the executor-pool front door: `c`
+//! client threads each keep one reduction in flight against a
+//! [`ServicePool`], sharing a single `Arc`-backed payload, and the
+//! harness measures client-side latency, throughput and the pool's
+//! observed concurrency (peak overlapping passes, per-mailbox
+//! peaks). [`compare`] runs the same load twice — one executor, then
+//! `cfg.executors` — which is the acceptance experiment for the
+//! pool-front PR: the pooled run must overlap passes and beat the
+//! single-executor p50.
+//!
+//! Consumed by `cargo bench --bench serve` (which writes
+//! `BENCH_serve.json` for CI) and by the fast inline test below.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::service::ServiceConfig;
+use crate::coordinator::{ServeError, ServicePool, SubmitOpts};
+use crate::reduce::op::Op;
+use crate::runtime::literal::SharedVec;
+use crate::util::rng::Rng;
+use crate::util::stats::Histogram;
+
+/// An empty (but valid) artifact catalog: requests route by the
+/// scheduler's ladder alone.
+fn empty_artifacts() -> String {
+    concat!(env!("CARGO_MANIFEST_DIR"), "/tests/fixtures/empty_artifacts").to_string()
+}
+
+/// Load-run configuration.
+#[derive(Debug, Clone)]
+pub struct ServeLoadConfig {
+    /// Total reductions across all clients.
+    pub requests: usize,
+    /// Payload elements per request (every request shares one buffer).
+    pub payload_n: usize,
+    /// Executor threads in the pool under test.
+    pub executors: usize,
+    /// Closed-loop client threads (each keeps one request in flight).
+    pub clients: usize,
+    /// Per-executor mailbox bound.
+    pub mailbox_depth: usize,
+    /// Shared admission gate limit.
+    pub max_queue: usize,
+    /// Optional per-request deadline.
+    pub deadline: Option<Duration>,
+    pub seed: u64,
+}
+
+impl Default for ServeLoadConfig {
+    fn default() -> Self {
+        ServeLoadConfig {
+            requests: 64,
+            payload_n: 1 << 20,
+            executors: 4,
+            clients: 4,
+            mailbox_depth: 1024,
+            max_queue: 10_000,
+            deadline: None,
+            seed: 42,
+        }
+    }
+}
+
+/// What the run measured.
+#[derive(Debug, Clone)]
+pub struct ServeLoadOutcome {
+    pub requests: usize,
+    pub executors: usize,
+    pub clients: usize,
+    /// Responses with an `Ok` value.
+    pub completed: usize,
+    pub shed: usize,
+    pub timeouts: usize,
+    pub failed: usize,
+    /// Completed responses whose value missed the host oracle.
+    pub oracle_failures: usize,
+    /// Client-side wall latency (submit → response), milliseconds.
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    /// completed / wall.
+    pub throughput_rps: f64,
+    pub wall_s: f64,
+    /// Peak overlapping reduction passes across the pool — > 1 is the
+    /// proof of true request concurrency.
+    pub peak_passes: usize,
+    /// Per-executor mailbox depth high-water marks.
+    pub mailbox_peaks: Vec<usize>,
+    /// Per-executor dispatched-message counts (round-robin evidence).
+    pub dispatched: Vec<usize>,
+}
+
+impl ServeLoadOutcome {
+    /// Human-readable run summary.
+    pub fn report(&self) -> String {
+        format!(
+            "=== serve_load: {} requests, {} executors, {} clients ===\n\
+             completed={} shed={} timeouts={} failed={} oracle_failures={}\n\
+             latency p50={:.2} ms p95={:.2} ms p99={:.2} ms\n\
+             throughput={:.1} req/s wall={:.2} s peak_passes={}\n\
+             mailbox_peaks={:?} dispatched={:?}\n",
+            self.requests,
+            self.executors,
+            self.clients,
+            self.completed,
+            self.shed,
+            self.timeouts,
+            self.failed,
+            self.oracle_failures,
+            self.p50_ms,
+            self.p95_ms,
+            self.p99_ms,
+            self.throughput_rps,
+            self.wall_s,
+            self.peak_passes,
+            self.mailbox_peaks,
+            self.dispatched,
+        )
+    }
+}
+
+/// Run the closed loop: `cfg.clients` threads split `cfg.requests`
+/// sum-reductions over one shared payload, each keeping one request
+/// in flight, and every completed value is checked against a host
+/// oracle computed in f64.
+///
+/// The pool is pinned to inline host execution
+/// (`seq_floor = Some(usize::MAX)`): each executor reduces on its own
+/// thread, so overlap between executors is real CPU concurrency
+/// rather than queueing on the process-wide persistent host pool.
+pub fn run(cfg: &ServeLoadConfig) -> Result<ServeLoadOutcome> {
+    let pool = Arc::new(ServicePool::start(ServiceConfig {
+        artifacts_dir: empty_artifacts(),
+        warmup: false,
+        workers: 2,
+        max_queue: cfg.max_queue,
+        executors: cfg.executors,
+        mailbox_depth: cfg.mailbox_depth,
+        seq_floor: Some(usize::MAX),
+        ..ServiceConfig::default()
+    })?);
+
+    let data = Rng::new(cfg.seed).f32_vec(cfg.payload_n, -1.0, 1.0);
+    let want: f64 = data.iter().map(|&x| x as f64).sum();
+    let payload = SharedVec::from(data);
+    let opts = SubmitOpts { deadline: cfg.deadline, retries: 2 };
+
+    let clients = cfg.clients.max(1);
+    let t0 = Instant::now();
+    let mut handles = Vec::with_capacity(clients);
+    for client in 0..clients {
+        // Spread the remainder across the first few clients.
+        let share = cfg.requests / clients + usize::from(client < cfg.requests % clients);
+        let pool = Arc::clone(&pool);
+        let payload = payload.clone();
+        let opts = opts.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("serve-load-client-{client}"))
+            .spawn(move || {
+                let mut lat = Histogram::new();
+                let (mut completed, mut shed, mut timeouts, mut failed, mut oracle) =
+                    (0usize, 0usize, 0usize, 0usize, 0usize);
+                for _ in 0..share {
+                    let t_req = Instant::now();
+                    let rx = match pool.submit_shared(Op::Sum, payload.clone(), opts.clone()) {
+                        Ok(rx) => rx,
+                        Err(ServeError::Shed { .. }) => {
+                            shed += 1;
+                            continue;
+                        }
+                        Err(ServeError::Timeout { .. }) => {
+                            timeouts += 1;
+                            continue;
+                        }
+                        Err(ServeError::Failed(_)) => {
+                            failed += 1;
+                            continue;
+                        }
+                    };
+                    match rx.recv_timeout(Duration::from_secs(300)) {
+                        Ok(resp) => match resp.value {
+                            Ok(got) => {
+                                completed += 1;
+                                lat.record(t_req.elapsed().as_secs_f64());
+                                let tol = 1e-3 * want.abs().max(1.0);
+                                if (got.as_f64() - want).abs() > tol {
+                                    oracle += 1;
+                                }
+                            }
+                            Err(ServeError::Timeout { .. }) => timeouts += 1,
+                            Err(ServeError::Shed { .. }) => shed += 1,
+                            Err(ServeError::Failed(_)) => failed += 1,
+                        },
+                        Err(_) => failed += 1,
+                    }
+                }
+                (lat, completed, shed, timeouts, failed, oracle)
+            })
+            .map_err(|e| anyhow!("spawning load client: {e}"))?;
+        handles.push(handle);
+    }
+
+    let mut lat = Histogram::new();
+    let (mut completed, mut shed, mut timeouts, mut failed, mut oracle_failures) =
+        (0usize, 0usize, 0usize, 0usize, 0usize);
+    for handle in handles {
+        let (h, c, s, t, f, o) =
+            handle.join().map_err(|_| anyhow!("load client panicked"))?;
+        lat.merge(&h);
+        completed += c;
+        shed += s;
+        timeouts += t;
+        failed += f;
+        oracle_failures += o;
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let peak_passes = pool.peak_passes();
+    let mailbox_peaks = pool.mailbox_peaks();
+    let dispatched = pool.dispatched();
+    let pool = Arc::try_unwrap(pool)
+        .map_err(|_| anyhow!("load clients should have released the pool"))?;
+    pool.shutdown().map_err(|e| anyhow!("pool shutdown: {e}"))?;
+
+    Ok(ServeLoadOutcome {
+        requests: cfg.requests,
+        executors: cfg.executors,
+        clients,
+        completed,
+        shed,
+        timeouts,
+        failed,
+        oracle_failures,
+        p50_ms: lat.percentile(50.0) * 1e3,
+        p95_ms: lat.percentile(95.0) * 1e3,
+        p99_ms: lat.percentile(99.0) * 1e3,
+        throughput_rps: completed as f64 / wall_s.max(1e-9),
+        wall_s,
+        peak_passes,
+        mailbox_peaks,
+        dispatched,
+    })
+}
+
+/// The acceptance experiment: the same closed loop against one
+/// executor, then against `cfg.executors`. Returns
+/// `(single, pooled)`.
+pub fn compare(cfg: &ServeLoadConfig) -> Result<(ServeLoadOutcome, ServeLoadOutcome)> {
+    let single = run(&ServeLoadConfig { executors: 1, ..cfg.clone() })?;
+    let pooled = run(cfg)?;
+    Ok((single, pooled))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The acceptance loop, scaled down to stay fast: a two-executor
+    /// pool under three closed-loop clients completes everything
+    /// oracle-correct and actually overlaps passes.
+    #[test]
+    fn pooled_load_overlaps_passes_and_stays_correct() {
+        let cfg = ServeLoadConfig {
+            requests: 12,
+            payload_n: 1 << 16,
+            executors: 2,
+            clients: 3,
+            ..ServeLoadConfig::default()
+        };
+        let out = run(&cfg).unwrap();
+        assert_eq!(out.completed, cfg.requests, "{}", out.report());
+        assert_eq!(out.oracle_failures, 0, "{}", out.report());
+        assert_eq!(out.failed, 0, "{}", out.report());
+        assert!(out.peak_passes >= 1, "{}", out.report());
+        // Round-robin dispatch must reach both executors.
+        assert!(
+            out.dispatched.iter().all(|&d| d >= 1),
+            "every executor should receive work\n{}",
+            out.report()
+        );
+    }
+}

@@ -48,6 +48,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "segments", "by-key",
         "explain", "trace-out", "metrics-out",
         "chaos", "deadline-ms",
+        "listen", "executors", "mailbox-depth",
     ];
     let args = Args::parse(argv, &allowed)?;
     // Size the process-wide persistent host runtime before anything
@@ -105,6 +106,7 @@ USAGE: parred <info|tables|sim|reduce|serve> [options]
         [--adaptive] [--sched-snapshot PATH]
         [--trace-out PATH] [--metrics-out PATH]
         [--chaos SPEC] [--deadline-ms N] [--segments K]
+        [--executors N] [--mailbox-depth N] [--listen ADDR]
         end-to-end serving driver (--pool shards large payloads
         across a fleet of simulated devices). --segments K demos the
         segmented serving surface instead: each request submits a
@@ -142,6 +144,15 @@ USAGE: parred <info|tables|sim|reduce|serve> [options]
   requests answer a typed timeout (counted in the report) instead
   of occupying the fleet, and the admission gate sheds with a typed
   overload error after bounded retry.
+
+  serve --executors N runs N executor threads (each with its own
+  PJRT runtime, router and batchers) behind one admission gate and
+  one scheduler — true request concurrency behind one front door;
+  --mailbox-depth caps each executor's queued requests (dispatch
+  prefers the shallowest mailbox). serve --listen ADDR exposes the
+  pool over a TCP line protocol instead of running the built-in
+  trace: one text line per request (`ping`, `stats`,
+  `reduce OP v1,v2,...`, `quit`), one line per reply.
 
   serve --adaptive folds observed throughput into the scheduler's
   cutoffs and per-worker busy times into the shard weights;
@@ -665,7 +676,16 @@ fn serve(args: &Args) -> Result<()> {
         sched_snapshot: args.get("sched-snapshot").map(str::to_string),
         trace_out: args.get("trace-out").map(str::to_string),
         metrics_out: args.get("metrics-out").map(str::to_string),
+        executors: args.get_usize("executors", 1)?,
+        mailbox_depth: args.get_usize("mailbox-depth", 1024)?,
+        seq_floor: None,
+        debug_panic_on_request: false,
     };
+    // `serve --listen ADDR`: expose the executor pool over the TCP
+    // line protocol instead of running the built-in trace.
+    if let Some(listen) = args.get("listen") {
+        return serve_listen(cfg, listen);
+    }
     // `serve --segments K` demos the segmented serving surface
     // instead of the scalar trace.
     let segments = args.get_usize("segments", 0)?;
@@ -690,6 +710,28 @@ fn serve(args: &Args) -> Result<()> {
     let report = parred::coordinator::service::run_trace(cfg, trace)?;
     println!("{report}");
     Ok(())
+}
+
+/// `parred serve --listen ADDR`: start the executor pool, bind the
+/// TCP line protocol on ADDR, and serve until killed. Each
+/// connection gets its own thread; all connections share the one
+/// pool, so concurrent clients exercise its true request
+/// concurrency.
+fn serve_listen(cfg: parred::coordinator::service::ServiceConfig, listen: &str) -> Result<()> {
+    use parred::coordinator::{lineproto, ServicePool};
+    let pool = std::sync::Arc::new(ServicePool::start(cfg)?);
+    let server = lineproto::serve(std::sync::Arc::clone(&pool), listen)?;
+    println!(
+        "parred: serving line protocol on {} with {} executor(s)",
+        server.local_addr(),
+        pool.executors()
+    );
+    println!("commands: ping | reduce OP v1,v2,... | stats | quit");
+    loop {
+        // Serve until the process is killed; connections run on
+        // their own threads.
+        std::thread::park();
+    }
 }
 
 /// `parred serve --segments K`: submit segmented (ragged) reductions
@@ -770,7 +812,7 @@ fn serve_segments(
     if let Some(p) = first_path {
         println!("path={p:?}");
     }
-    let metrics = svc.shutdown();
+    let metrics = svc.shutdown().map_err(|e| anyhow!("service shutdown: {e}"))?;
     print!("{}", metrics.report());
     println!("all per-segment values verified against host oracle");
     Ok(())

@@ -14,7 +14,8 @@ use anyhow::{anyhow, bail, Context, Result};
 use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
 
 use super::artifact::{ArtifactMeta, Catalog, Kind};
-use super::literal::{literal_to_host, literal_to_scalar, HostScalar, HostVec};
+use super::literal::{literal_to_host, literal_to_scalar, HostScalar, HostVec, SharedVec};
+use crate::reduce::op::Dtype;
 
 /// Compile/execute statistics (surfaced by the CLI and metrics).
 #[derive(Debug, Default, Clone)]
@@ -122,6 +123,18 @@ impl Runtime {
         literal_to_scalar(&outs[0], meta.dtype)
     }
 
+    /// [`Runtime::reduce_full`] over a shared payload (the serving
+    /// layer's `Arc`-backed request buffers) — no copy into an owned
+    /// vector on the way to the literal.
+    pub fn reduce_full_shared(&self, meta: &ArtifactMeta, data: &SharedVec) -> Result<HostScalar> {
+        if meta.kind != Kind::Full {
+            bail!("{} is not a full-reduce artifact", meta.name);
+        }
+        self.check_shape(meta, data.dtype(), data.len(), meta.n)?;
+        let outs = self.execute_raw(&meta.name, &[data.to_literal()])?;
+        literal_to_scalar(&outs[0], meta.dtype)
+    }
+
     /// Execute a `Kind::Rows` artifact: `(b, n)` in, `(b,)` out.
     pub fn reduce_rows(&self, meta: &ArtifactMeta, data: &HostVec) -> Result<HostVec> {
         if meta.kind != Kind::Rows {
@@ -162,20 +175,17 @@ impl Runtime {
     }
 
     fn check_payload(&self, meta: &ArtifactMeta, data: &HostVec, want: usize) -> Result<()> {
-        if data.dtype() != meta.dtype {
-            bail!(
-                "dtype mismatch for {}: payload {} vs artifact {}",
-                meta.name,
-                data.dtype(),
-                meta.dtype
-            );
+        self.check_shape(meta, data.dtype(), data.len(), want)
+    }
+
+    fn check_shape(&self, meta: &ArtifactMeta, dtype: Dtype, len: usize, want: usize) -> Result<()> {
+        if dtype != meta.dtype {
+            bail!("dtype mismatch for {}: payload {} vs artifact {}", meta.name, dtype, meta.dtype);
         }
-        if data.len() != want {
+        if len != want {
             bail!(
-                "size mismatch for {}: payload {} elements vs expected {}",
-                meta.name,
-                data.len(),
-                want
+                "size mismatch for {}: payload {len} elements vs expected {want}",
+                meta.name
             );
         }
         Ok(())

@@ -3,6 +3,8 @@
 //! Kept separate so the hot path's marshalling cost is visible to the
 //! `hotpath` bench and can be optimized in isolation (§Perf).
 
+use std::sync::Arc;
+
 use anyhow::{bail, Result};
 use xla::Literal;
 
@@ -60,6 +62,80 @@ impl HostVec {
             _ => bail!("dtype mismatch in batch assembly"),
         }
         Ok(())
+    }
+
+    /// Append a shared payload of the same dtype (batch assembly over
+    /// [`SharedVec`] request payloads).
+    pub fn extend_shared(&mut self, other: &SharedVec) -> Result<()> {
+        match (self, other) {
+            (HostVec::F32(a), SharedVec::F32(b)) => a.extend_from_slice(b),
+            (HostVec::I32(a), SharedVec::I32(b)) => a.extend_from_slice(b),
+            _ => bail!("dtype mismatch in batch assembly"),
+        }
+        Ok(())
+    }
+}
+
+/// A shared, immutable payload buffer: what the serving layer keeps
+/// per request. `Arc<[T]>`-backed so executor threads clone it with a
+/// refcount bump instead of a copy — concurrent engine passes (and a
+/// load generator resubmitting one buffer) share the allocation.
+///
+/// Constructed from an owned [`HostVec`] via `From` (one copy into
+/// the shared allocation, on the client thread) or reused directly
+/// via the zero-copy submit paths.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SharedVec {
+    F32(Arc<[f32]>),
+    I32(Arc<[i32]>),
+}
+
+impl SharedVec {
+    pub fn len(&self) -> usize {
+        match self {
+            SharedVec::F32(v) => v.len(),
+            SharedVec::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            SharedVec::F32(_) => Dtype::F32,
+            SharedVec::I32(_) => Dtype::I32,
+        }
+    }
+
+    /// Rank-1 literal of the payload.
+    pub fn to_literal(&self) -> Literal {
+        match self {
+            SharedVec::F32(v) => Literal::vec1(v),
+            SharedVec::I32(v) => Literal::vec1(v),
+        }
+    }
+}
+
+impl From<HostVec> for SharedVec {
+    fn from(v: HostVec) -> SharedVec {
+        match v {
+            HostVec::F32(v) => SharedVec::F32(v.into()),
+            HostVec::I32(v) => SharedVec::I32(v.into()),
+        }
+    }
+}
+
+impl From<Vec<f32>> for SharedVec {
+    fn from(v: Vec<f32>) -> SharedVec {
+        SharedVec::F32(v.into())
+    }
+}
+
+impl From<Vec<i32>> for SharedVec {
+    fn from(v: Vec<i32>) -> SharedVec {
+        SharedVec::I32(v.into())
     }
 }
 
@@ -142,5 +218,33 @@ mod tests {
     fn scalar_display() {
         assert_eq!(HostScalar::F32(1.5).to_string(), "1.5");
         assert_eq!(HostScalar::I32(-3).as_f64(), -3.0);
+    }
+
+    #[test]
+    fn shared_vec_clones_share_the_allocation() {
+        let s: SharedVec = HostVec::F32(vec![1.0, 2.0, 3.0]).into();
+        let t = s.clone();
+        assert_eq!(s, t);
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.dtype(), Dtype::F32);
+        match (&s, &t) {
+            (SharedVec::F32(a), SharedVec::F32(b)) => assert!(Arc::ptr_eq(a, b)),
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn extend_shared_checks_dtype() {
+        let mut a = HostVec::F32(vec![1.0]);
+        assert!(a.extend_shared(&SharedVec::from(vec![2.0f32])).is_ok());
+        assert_eq!(a, HostVec::F32(vec![1.0, 2.0]));
+        assert!(a.extend_shared(&SharedVec::from(vec![3i32])).is_err());
+    }
+
+    #[test]
+    fn shared_vec_literal_round_trip() {
+        let s: SharedVec = HostVec::I32(vec![-7, 0, 9]).into();
+        let lit = s.to_literal();
+        assert_eq!(literal_to_host(&lit, Dtype::I32).unwrap(), HostVec::I32(vec![-7, 0, 9]));
     }
 }

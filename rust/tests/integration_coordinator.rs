@@ -57,7 +57,7 @@ fn batched_path_round_trip() {
             resp.path
         );
     }
-    let m = svc.shutdown();
+    let m = svc.shutdown().expect("clean shutdown");
     assert_eq!(m.completed, 8);
     assert!(m.batches >= 1);
 }
@@ -76,7 +76,7 @@ fn full_artifact_path() {
     let HostScalar::F32(v) = resp.value.unwrap() else { panic!("dtype") };
     let want: f64 = data.iter().map(|&x| x as f64).sum();
     assert!((v as f64 - want).abs() < 1e-2);
-    svc.shutdown();
+    svc.shutdown().expect("clean shutdown");
 }
 
 #[test]
@@ -92,7 +92,7 @@ fn host_fallback_for_odd_sizes() {
     let HostScalar::F32(v) = resp.value.unwrap() else { panic!("dtype") };
     let want = data.iter().cloned().fold(f32::INFINITY, f32::min);
     assert_eq!(v, want);
-    svc.shutdown();
+    svc.shutdown().expect("clean shutdown");
 }
 
 #[test]
@@ -113,7 +113,7 @@ fn i32_batched_is_exact() {
         let want: i32 = payloads[i].iter().sum();
         assert_eq!(v, want, "req {i}");
     }
-    svc.shutdown();
+    svc.shutdown().expect("clean shutdown");
 }
 
 #[test]
@@ -140,7 +140,7 @@ fn backpressure_rejects_when_full() {
     for rx in rxs {
         let _ = rx.recv_timeout(Duration::from_secs(120));
     }
-    svc.shutdown();
+    svc.shutdown().expect("clean shutdown");
 }
 
 #[test]
@@ -201,7 +201,7 @@ fn host_fusion_end_to_end_without_artifacts() {
     let HostScalar::F32(v) = resp.value.unwrap() else { panic!("dtype") };
     assert_eq!(v, data.iter().cloned().fold(f32::INFINITY, f32::min));
 
-    let m = svc.shutdown();
+    let m = svc.shutdown().expect("clean shutdown");
     assert!(m.fused_batches >= 1, "metrics must count fused batches");
     assert!(m.fused_rows >= 2, "fused rows must be counted");
     assert!(m.host_pool_jobs > 0, "persistent pool counters must be snapshotted");
@@ -263,7 +263,7 @@ fn keyed_requests_fuse_end_to_end_without_artifacts() {
     }
     // A length mismatch is rejected at submit time.
     assert!(svc.submit_by_key(Op::Sum, vec![1, 2], HostVec::I32(vec![1])).is_err());
-    let m = svc.shutdown();
+    let m = svc.shutdown().expect("clean shutdown");
     assert_eq!(m.keyed_requests, 5);
     assert!(m.keyed_fused_batches >= 1, "a burst must fuse at least once");
     assert!(m.keyed_fused_groups >= 6, "fused batches carry the groups");
@@ -322,7 +322,7 @@ fn sharded_path_round_trip() {
     let HostScalar::F32(v) = resp.value.unwrap() else { panic!("dtype") };
     let want: f64 = data.iter().map(|&x| x as f64).sum();
     assert!((v as f64 - want).abs() <= 1e-3 * want.abs().max(1.0), "{v} vs {want}");
-    let m = svc.shutdown();
+    let m = svc.shutdown().expect("clean shutdown");
     assert_eq!(m.sharded_requests, 1);
     assert!(m.pool_tasks >= 4, "pool executed {} tasks", m.pool_tasks);
 }

@@ -209,7 +209,7 @@ fn pool_fusion_end_to_end_through_the_service() {
             ..Default::default()
         }),
         adaptive: true,
-        sched_snapshot: None,
+        ..ServiceConfig::default()
     };
     let svc = Service::start(cfg).unwrap();
     let payloads: Vec<Vec<f32>> =
@@ -235,7 +235,7 @@ fn pool_fusion_end_to_end_through_the_service() {
         }
     }
     assert!(fused >= 2, "expected fused fleet responses, got {fused}");
-    let m = svc.shutdown();
+    let m = svc.shutdown().expect("clean shutdown");
     assert!(m.pool_fused_batches >= 1, "metrics must count fused fleet batches");
     assert!(m.pool_fused_rows >= 2, "fused fleet rows must be counted");
     assert!(m.pool_tasks > 0, "pool counters snapshotted");

@@ -1,0 +1,181 @@
+//! Executor-pool front door, end to end: shutdown-drain and panic
+//! regression tests plus the pool's concurrency and round-robin
+//! contracts. Everything runs against the empty artifact catalog
+//! (routing by the scheduler's ladder alone) with the sequential
+//! floor pinned to `usize::MAX`, so reductions run inline on their
+//! executor thread — concurrency between executors is real.
+
+use std::time::{Duration, Instant};
+
+use parred::coordinator::service::{Service, ServiceConfig};
+use parred::coordinator::{ServeError, ServicePool, SubmitOpts};
+use parred::reduce::Op;
+use parred::runtime::literal::SharedVec;
+
+fn empty_artifacts() -> String {
+    concat!(env!("CARGO_MANIFEST_DIR"), "/tests/fixtures/empty_artifacts").to_string()
+}
+
+fn config(executors: usize) -> ServiceConfig {
+    ServiceConfig {
+        artifacts_dir: empty_artifacts(),
+        warmup: false,
+        workers: 2,
+        executors,
+        seq_floor: Some(usize::MAX),
+        ..ServiceConfig::default()
+    }
+}
+
+fn payload(n: usize, seed: u64) -> SharedVec {
+    SharedVec::from(parred::util::rng::Rng::new(seed).f32_vec(n, -1.0, 1.0))
+}
+
+/// Regression (shutdown drain): requests still queued behind the
+/// Shutdown message must each get a typed "service stopped" answer —
+/// not a dropped reply channel — and every transferred admission
+/// slot must be released, leaving the gate at zero.
+#[test]
+fn shutdown_drains_queued_requests_with_typed_errors() {
+    let svc = Service::start(config(1)).unwrap();
+    let gate = svc.pool_front().gate().clone();
+    // Slow enough that the single executor is still working through
+    // these when the Shutdown message lands behind them.
+    let slow = payload(1 << 21, 1);
+    let early: Vec<_> = (0..3)
+        .map(|_| svc.submit_shared(Op::Sum, slow.clone(), SubmitOpts::default()).unwrap())
+        .collect();
+    svc.pool_front().begin_shutdown();
+    // These queue *behind* Shutdown: the old loop dropped them
+    // (hanging the client); the drain must answer each one.
+    let late: Vec<_> = (0..4)
+        .map(|_| svc.submit_shared(Op::Sum, slow.clone(), SubmitOpts::default()).unwrap())
+        .collect();
+    svc.shutdown().expect("clean shutdown");
+
+    for (i, rx) in early.into_iter().enumerate() {
+        let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        assert!(resp.value.is_ok(), "pre-shutdown request {i}: {:?}", resp.value);
+    }
+    for (i, rx) in late.into_iter().enumerate() {
+        let resp = rx
+            .recv_timeout(Duration::from_secs(60))
+            .unwrap_or_else(|_| panic!("post-shutdown request {i} must still be answered"));
+        match resp.value {
+            Err(ServeError::Failed(msg)) => {
+                assert!(msg.contains("service stopped"), "request {i}: {msg}")
+            }
+            other => panic!("post-shutdown request {i}: expected Failed, got {other:?}"),
+        }
+    }
+    assert_eq!(gate.in_flight(), 0, "a transferred admission slot leaked through shutdown");
+}
+
+/// Regression (panic propagation): a panicking executor must surface
+/// as a typed shutdown error and a telemetry event, not take the
+/// caller down with `.join().expect(...)`.
+#[test]
+fn executor_panic_surfaces_as_typed_shutdown_error() {
+    let panicked0 = parred::telemetry::warning_count("serve.executor.panicked");
+    let svc = Service::start(ServiceConfig {
+        debug_panic_on_request: true,
+        ..config(1)
+    })
+    .unwrap();
+    let rx = svc.submit_shared(Op::Sum, payload(1 << 10, 2), SubmitOpts::default()).unwrap();
+    // The executor dies mid-request: the reply channel closes
+    // without an answer, which is exactly what the shutdown error
+    // below must make diagnosable.
+    assert!(rx.recv_timeout(Duration::from_secs(60)).is_err());
+    match svc.shutdown() {
+        Err(ServeError::Failed(msg)) => assert!(msg.contains("panicked"), "{msg}"),
+        other => panic!("shutdown over a panicked executor must fail, got {other:?}"),
+    }
+    assert!(
+        parred::telemetry::warning_count("serve.executor.panicked") > panicked0,
+        "the panic must be counted"
+    );
+}
+
+/// Dropping a pool without calling `shutdown` must not hang or
+/// propagate a panic (panic-safe Drop).
+#[test]
+fn drop_without_shutdown_is_safe() {
+    let pool = ServicePool::start(config(2)).unwrap();
+    let rx = pool.submit_shared(Op::Sum, payload(1 << 12, 3), SubmitOpts::default()).unwrap();
+    drop(pool);
+    // The in-flight request was either answered or its channel
+    // closed; either way the client is not left hanging.
+    let _ = rx.recv_timeout(Duration::from_secs(60));
+}
+
+/// The tentpole claim: two executors run two reduction passes at the
+/// same time. Peak in-flight passes must exceed one, and the
+/// concurrent pair must finish faster than the sum of two solo runs.
+#[test]
+fn two_executors_overlap_reduction_passes() {
+    let pool = ServicePool::start(config(2)).unwrap();
+    let big = payload(1 << 23, 4);
+
+    // Two solo passes, strictly sequential.
+    let mut solo_sum = 0.0f64;
+    for _ in 0..2 {
+        let t0 = Instant::now();
+        let rx = pool.submit_shared(Op::Sum, big.clone(), SubmitOpts::default()).unwrap();
+        rx.recv_timeout(Duration::from_secs(120)).unwrap().value.unwrap();
+        solo_sum += t0.elapsed().as_secs_f64();
+    }
+
+    // The same two passes, submitted back to back.
+    let t0 = Instant::now();
+    let rx_a = pool.submit_shared(Op::Sum, big.clone(), SubmitOpts::default()).unwrap();
+    let rx_b = pool.submit_shared(Op::Sum, big.clone(), SubmitOpts::default()).unwrap();
+    rx_a.recv_timeout(Duration::from_secs(120)).unwrap().value.unwrap();
+    rx_b.recv_timeout(Duration::from_secs(120)).unwrap().value.unwrap();
+    let pair_wall = t0.elapsed().as_secs_f64();
+
+    assert!(
+        pool.peak_passes() >= 2,
+        "two executors under two concurrent requests must overlap passes (peak {})",
+        pool.peak_passes()
+    );
+    assert!(
+        pair_wall < solo_sum,
+        "concurrent pair ({pair_wall:.3} s) must beat sequential singles ({solo_sum:.3} s)"
+    );
+    pool.shutdown().expect("clean shutdown");
+}
+
+/// Round-robin dispatch over bounded mailboxes: a burst bigger than
+/// any one mailbox reaches every executor, and no mailbox's
+/// high-water mark exceeds its bound (+1 for the dispatcher's
+/// transient pre-send increment).
+#[test]
+fn round_robin_respects_mailbox_bounds() {
+    let depth = 4usize;
+    let pool = ServicePool::start(ServiceConfig {
+        mailbox_depth: depth,
+        ..config(2)
+    })
+    .unwrap();
+    let mid = payload(1 << 20, 5);
+    let rxs: Vec<_> = (0..12)
+        .map(|_| pool.submit_shared(Op::Sum, mid.clone(), SubmitOpts::default()).unwrap())
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+        assert!(resp.value.is_ok(), "request {i}: {:?}", resp.value);
+    }
+    let peaks = pool.mailbox_peaks();
+    let dispatched = pool.dispatched();
+    assert!(
+        peaks.iter().all(|&p| p <= depth + 1),
+        "mailbox peaks {peaks:?} must respect the bound {depth}"
+    );
+    assert!(
+        dispatched.iter().all(|&d| d >= 1),
+        "round-robin must reach every executor: {dispatched:?}"
+    );
+    assert_eq!(dispatched.iter().sum::<usize>(), 12, "every request dispatched exactly once");
+    pool.shutdown().expect("clean shutdown");
+}

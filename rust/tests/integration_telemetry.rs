@@ -264,7 +264,7 @@ fn serve_trace_out_writes_one_span_tree_per_request() {
     }
     let live_metrics = svc.metrics_text();
     assert!(live_metrics.contains("parred_requests_total"), "{live_metrics}");
-    svc.shutdown();
+    svc.shutdown().expect("clean shutdown");
 
     // One serve.request span per submitted id, every parent resolved.
     let text = std::fs::read_to_string(&trace_path).unwrap();
@@ -394,7 +394,7 @@ fn pipeline_requests_trace_one_tree_with_stage_children() {
     }
     let live = svc.metrics_text();
     assert!(live.contains("parred_pipeline_requests_total"), "{live}");
-    svc.shutdown();
+    svc.shutdown().expect("clean shutdown");
 
     // One pipeline serve.request span per submitted id; four
     // serve.stage children each; the engine's pipeline tree (one
